@@ -1,0 +1,45 @@
+//! Shared helpers for the paper-reproduction bench targets.
+
+use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+
+/// Build a trainer for a benchmark preset with a scaled-down dense tower
+/// (rust engine geometry; steps/batch set by the caller).
+pub fn trainer_for(
+    preset: &BenchPreset,
+    mode: TrainMode,
+    nn_workers: usize,
+    steps: usize,
+    seed: u64,
+) -> Trainer {
+    let model = preset.model("tiny");
+    let emb_cfg = preset.embedding(&model, 65536);
+    let cluster = ClusterConfig {
+        n_nn_workers: nn_workers,
+        n_emb_workers: 2,
+        net: NetModelConfig::paper_like(),
+    };
+    let train = TrainConfig {
+        mode,
+        batch_size: 64,
+        lr: 0.1,
+        staleness_bound: if mode == TrainMode::FullAsync { 16 } else { 4 },
+        steps,
+        eval_every: 0,
+        seed,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset =
+        SyntheticDataset::new(&model, emb_cfg.rows_per_group, preset.zipf_exponent, seed);
+    Trainer::new(model, emb_cfg, cluster, train, dataset)
+}
+
+/// Standard bench banner.
+pub fn banner(what: &str, paper_ref: &str) {
+    println!("\n================================================================");
+    println!("  {what}");
+    println!("  reproduces: {paper_ref}");
+    println!("================================================================");
+}

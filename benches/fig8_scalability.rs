@@ -1,0 +1,104 @@
+//! Figure 8 — training-sample throughput vs number of NN workers per mode.
+//!
+//! Two columns per mode:
+//! * **measured** — real wallclock of the in-process run. On this host all
+//!   "GPU workers" share the same CPU cores, so contention flattens the
+//!   curve beyond the core count (documented limitation).
+//! * **dedicated** — the paper-comparable number: per-step compute time
+//!   calibrated from a real k=1 run (real measurement), composed with the
+//!   k-dependent AllReduce/transfer costs of the network model — i.e. each
+//!   logical worker owns its device, as in the paper's cluster.
+//!
+//! Reproduced shape (dedicated columns): near-linear scaling for hybrid,
+//! sync lagging, async on top.
+
+mod common;
+
+use persia::config::{BenchPreset, NetModelConfig, TrainMode};
+use persia::sim::{project_throughput, Calibration, ClusterSpec};
+use persia::util::csv::CsvWriter;
+
+fn main() {
+    common::banner("Fig. 8: throughput vs #NN workers per mode", "Persia (KDD'22) Figure 8");
+    let preset = BenchPreset::by_name("taobao").unwrap();
+
+    // Calibrate per-step compute from a real single-worker run.
+    let trainer = common::trainer_for(&preset, TrainMode::Hybrid, 1, 60, 11);
+    let out = trainer.run_rust().expect("calibration run");
+    let t_train = out.tracker.phase("train").map(|h| h.mean() / 1e9).unwrap_or(2e-3);
+    println!("\ncalibrated t_train (k=1, real measurement): {:.3} ms/step", t_train * 1e3);
+    let cal = Calibration { t_train, ..Calibration::default() };
+    let model = preset.model("tiny");
+
+    let workers = [1usize, 2, 4, 8];
+    let mut csv = CsvWriter::create(
+        "results/fig8_scalability.csv",
+        &["workers", "sync", "hybrid_raw", "hybrid", "async", "measured_hybrid"],
+    )
+    .unwrap();
+
+    println!(
+        "\n{:<8} {:>12} {:>12} {:>12} {:>12} {:>18}",
+        "workers", "sync", "hybrid-raw", "hybrid", "async", "measured(hybrid)"
+    );
+    let mut hybrid_thpt = Vec::new();
+    for &k in &workers {
+        // The paper scales CPU-side resources with the GPU fleet (its cloud
+        // run: 64 GPUs, 100 emb workers, 30 PS nodes) — keep the ratio fixed.
+        // Intra-node NVLink/GPUDirect latency (the paper's NN workers are
+        // 8-GPU machines; Bagua's hierarchical + fused buckets keep the
+        // per-step latency in the microsecond range, not the Ethernet 50us).
+        let net = NetModelConfig { latency_s: 5e-6, ..NetModelConfig::paper_like() };
+        let spec = ClusterSpec {
+            n_nn_workers: k,
+            n_emb_workers: 2 * k,
+            n_ps_nodes: 4 * k,
+            net,
+        };
+        let proj: Vec<f64> = [
+            TrainMode::FullSync,
+            TrainMode::HybridRaw,
+            TrainMode::Hybrid,
+            TrainMode::FullAsync,
+        ]
+        .iter()
+        .map(|&m| project_throughput(&model, &spec, &cal, m, 64))
+        .collect();
+        // Real contended measurement for the hybrid column.
+        let trainer = common::trainer_for(&preset, TrainMode::Hybrid, k, 80, 11);
+        let measured = trainer.run_rust().expect("run").report.samples_per_sec;
+        println!(
+            "{:<8} {:>12.0} {:>12.0} {:>12.0} {:>12.0} {:>18.0}",
+            k, proj[0], proj[1], proj[2], proj[3], measured
+        );
+        csv.row(&[
+            k.to_string(),
+            format!("{:.0}", proj[0]),
+            format!("{:.0}", proj[1]),
+            format!("{:.0}", proj[2]),
+            format!("{:.0}", proj[3]),
+            format!("{measured:.0}"),
+        ])
+        .unwrap();
+        hybrid_thpt.push(proj[2]);
+    }
+    csv.flush().unwrap();
+
+    let scaling = hybrid_thpt.last().unwrap() / hybrid_thpt[0];
+    println!("\nhybrid dedicated-device scaling 1 -> 8 workers: {scaling:.2}x (paper: near-linear)");
+    assert!(scaling > 4.0, "hybrid should scale near-linearly, got {scaling:.2}x");
+    // Sync must scale worse than hybrid at k=8.
+    let spec8 = ClusterSpec {
+        n_nn_workers: 8,
+        n_emb_workers: 16,
+        n_ps_nodes: 32,
+        net: NetModelConfig { latency_s: 5e-6, ..NetModelConfig::paper_like() },
+    };
+    let sync8 = project_throughput(&model, &spec8, &cal, TrainMode::FullSync, 64);
+    assert!(
+        hybrid_thpt.last().unwrap() > &sync8,
+        "hybrid must beat sync at scale"
+    );
+    println!("wrote results/fig8_scalability.csv");
+    println!("fig8_scalability OK");
+}

@@ -1,0 +1,96 @@
+//! Figure 9 — capacity: (left) throughput vs virtual model scale
+//! 6.25T → 100T parameters; (right) mode comparison at 100T.
+//!
+//! Reproduced shape: the throughput curve is FLAT across virtual scales
+//! (hash + LRU materialization cost is scale-independent), and at 100T the
+//! hybrid mode beats full sync by a multiple (paper: 2.6x) while async adds
+//! a further ~1.2x.
+
+mod common;
+
+use persia::config::{BenchPreset, TrainMode};
+use persia::sim::{project_throughput, Calibration, ClusterSpec};
+use persia::util::csv::CsvWriter;
+
+fn main() {
+    common::banner("Fig. 9: capacity up to 100T params", "Persia (KDD'22) Figure 9");
+
+    // Left: measured throughput vs virtual scale (hybrid mode).
+    let mut csv = CsvWriter::create(
+        "results/fig9_capacity.csv",
+        &["preset", "sparse_params", "samples_per_sec"],
+    )
+    .unwrap();
+    println!("\n(left) throughput vs model scale, hybrid mode:");
+    println!("{:<14} {:>20} {:>14}", "preset", "sparse params", "samples/s");
+    let mut thpts = Vec::new();
+    for preset in BenchPreset::capacity_sweep() {
+        // Median of 3 runs — host scheduling noise otherwise dominates the
+        // (structurally flat) curve.
+        let mut runs: Vec<f64> = (0..3)
+            .map(|i| {
+                let trainer = common::trainer_for(&preset, TrainMode::Hybrid, 2, 100, 7 + i);
+                trainer.run_rust().expect("run").report.samples_per_sec
+            })
+            .collect();
+        runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thpt = runs[1];
+        println!("{:<14} {:>20} {:>14.0}", preset.name, preset.sparse_params, thpt);
+        csv.row(&[
+            preset.name.to_string(),
+            preset.sparse_params.to_string(),
+            format!("{thpt:.0}"),
+        ])
+        .unwrap();
+        thpts.push(thpt);
+    }
+    csv.flush().unwrap();
+    let flatness = thpts.iter().fold(f64::MIN, |a, &b| a.max(b))
+        / thpts.iter().fold(f64::MAX, |a, &b| a.min(b));
+    println!("flatness (max/min) across 16x scale growth: {flatness:.2} (paper: ~flat)");
+    assert!(flatness < 2.0, "capacity curve should be flat, got {flatness:.2}");
+
+    // Right: mode comparison at the 100T point. The dedicated-device number
+    // (real k=1 per-step compute calibration + the k-dependent network
+    // model, as in fig8) carries the paper-comparable ordering; raw wall
+    // numbers on this shared-core host are printed for transparency only.
+    println!("\n(right) mode comparison at 100T:");
+    let preset = BenchPreset::by_name("criteo-syn5").unwrap();
+    let calib = common::trainer_for(&preset, TrainMode::Hybrid, 1, 60, 7)
+        .run_rust()
+        .expect("calibration");
+    let t_train = calib.tracker.phase("train").map(|h| h.mean() / 1e9).unwrap_or(2e-3);
+    let cal = Calibration { t_train, ..Calibration::default() };
+    let model_tiny = preset.model("tiny");
+    let spec = ClusterSpec {
+        n_nn_workers: 4,
+        n_emb_workers: 8,
+        n_ps_nodes: 16,
+        net: persia::config::NetModelConfig::paper_like(),
+    };
+    let mut rates = std::collections::HashMap::new();
+    println!("  {:<12} {:>14} {:>22}", "mode", "dedicated/s", "measured (contended)");
+    for mode in [TrainMode::FullSync, TrainMode::HybridRaw, TrainMode::Hybrid, TrainMode::FullAsync]
+    {
+        let dedicated = project_throughput(&model_tiny, &spec, &cal, mode, 64);
+        let trainer = common::trainer_for(&preset, mode, 4, 80, 7);
+        let measured = trainer.run_rust().expect("run").report.samples_per_sec;
+        println!("  {:<12} {:>14.0} {:>22.0}", mode.name(), dedicated, measured);
+        rates.insert(mode.name(), dedicated);
+    }
+    let hybrid_x = rates["hybrid"] / rates["sync"];
+    let async_x = rates["async"] / rates["hybrid"];
+    println!("  hybrid/sync = {hybrid_x:.2}x (paper: 2.6x); async/hybrid = {async_x:.2}x (paper: 1.2x)");
+    assert!(hybrid_x > 1.5, "hybrid must beat sync at 100T, got {hybrid_x:.2}");
+    assert!((1.0..2.5).contains(&async_x), "async/hybrid out of shape: {async_x:.2}");
+
+    // Projection onto the paper's cloud geometry (30 PS x 12TB, 64 A100).
+    println!("\nprojection onto the paper's Google-cloud cluster:");
+    let model = preset.model("paper");
+    let spec = ClusterSpec::paper_cloud();
+    for mode in [TrainMode::FullSync, TrainMode::Hybrid, TrainMode::FullAsync] {
+        let t = project_throughput(&model, &spec, &cal, mode, 256);
+        println!("  {:<12} {:>12.0} samples/s (projected)", mode.name(), t);
+    }
+    println!("fig9_capacity OK");
+}

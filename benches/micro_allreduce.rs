@@ -1,0 +1,89 @@
+//! Dense-sync micro-benchmarks: ring AllReduce vs the central-PS baseline
+//! (why Persia uses the AllReduce paradigm for w_nn, §4.1/§4.2.3) and the
+//! bucket-size ablation of the Bagua-style flattening.
+
+mod common;
+
+use std::sync::Arc;
+
+use persia::allreduce::{central_reduce, FlatBuckets, RingGroup};
+use persia::comm::NetSim;
+use persia::config::NetModelConfig;
+use persia::tensor::Tensor;
+use persia::util::{Bench, Rng};
+
+fn ring_once(k: usize, n: usize) -> f64 {
+    let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+    let members = RingGroup::new(k, net);
+    let handles: Vec<_> = members
+        .into_iter()
+        .map(|m| {
+            std::thread::spawn(move || {
+                let mut buf = vec![1.0f32; n];
+                m.all_reduce_mean(&mut buf)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).fold(0.0, f64::max)
+}
+
+fn main() {
+    common::banner(
+        "micro: ring AllReduce vs central PS reduce; bucketing ablation",
+        "Persia (KDD'22) §4.1 AllReduce paradigm + Bagua bucketing",
+    );
+    let bench = Bench::new(2, 8);
+    let mut rows = Vec::new();
+    let n = 1_200_000; // ~1.2M dense params ("small" tower scale)
+
+    for k in [2usize, 4, 8] {
+        let r = bench.run(&format!("ring_allreduce k={k} n={n}"), Some(n as f64), || {
+            std::hint::black_box(ring_once(k, n));
+        });
+        rows.push(r);
+        // Simulated wire time comparison.
+        let ring_sim = ring_once(k, n);
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| vec![1.0f32; n]).collect();
+        let (_, central_sim) = central_reduce(&grads, &net);
+        println!(
+            "  k={k}: simulated wire time ring {ring_sim:.5}s vs central {central_sim:.5}s ({:.1}x)",
+            central_sim / ring_sim.max(1e-12)
+        );
+    }
+
+    // Bucketing/flattening ablation: reduce cost of many small tensors vs
+    // one flat buffer.
+    {
+        let mut rng = Rng::new(3);
+        let shapes: Vec<Vec<usize>> = (0..64).map(|_| vec![1024, 16]).collect();
+        let tensors: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::from_vec(s, rng.normal_vec(s.iter().product())))
+            .collect();
+        let total: usize = tensors.iter().map(|t| t.len()).sum();
+        rows.push(bench.run("flatten 64 tensors (1MB)", Some(total as f64), || {
+            std::hint::black_box(FlatBuckets::flatten(&tensors, 1 << 16).total_elems());
+        }));
+        for bucket in [1 << 10, 1 << 14, 1 << 18] {
+            let fb = FlatBuckets::flatten(&tensors, bucket);
+            rows.push(bench.run(
+                &format!("reduce via buckets of {bucket}"),
+                Some(total as f64),
+                || {
+                    let mut fb2 = FlatBuckets::flatten(&tensors, bucket);
+                    for i in 0..fb2.n_buckets() {
+                        for x in fb2.bucket_mut(i) {
+                            *x *= 0.5;
+                        }
+                    }
+                    std::hint::black_box(fb2.total_elems());
+                },
+            ));
+            std::hint::black_box(fb.n_buckets());
+        }
+    }
+
+    persia::util::bench::print_table("micro_allreduce", &rows);
+    println!("micro_allreduce OK");
+}

@@ -1,0 +1,138 @@
+//! §4.2.3 micro-benchmarks — communication substrate:
+//! zero-copy wire encode/decode bandwidth, lossless uint16 index compression
+//! ratio under skew, lossy fp16 value compression ratio + error, and RPC
+//! round-trip latency over the in-proc and TCP transports.
+
+mod common;
+
+use persia::comm::compress::{CompressedValues, IndexMap};
+use persia::comm::rpc::{RpcClient, RpcServer};
+use persia::comm::transport::{ChannelTransport, TcpTransport};
+use persia::comm::wire::{WireReader, WireWriter};
+use persia::config::{ModelConfig, Pooling};
+use persia::data::SyntheticDataset;
+use persia::util::{Bench, Rng};
+
+fn main() {
+    common::banner(
+        "micro: zero-copy wire + compression + RPC",
+        "Persia (KDD'22) §4.2.3 (RPC, lossless + lossy compression)",
+    );
+    let bench = Bench::new(3, 10);
+    let mut rows = Vec::new();
+
+    // Wire format bandwidth on a 4096x128 f32 tensor (one activation batch).
+    {
+        let mut rng = Rng::new(1);
+        let data = rng.normal_vec(4096 * 128);
+        let bytes = (data.len() * 4) as f64;
+        rows.push(bench.run("wire encode 2MB f32", Some(bytes), || {
+            let mut w = WireWriter::new(1);
+            w.put_f32(&data);
+            std::hint::black_box(w.finish());
+        }));
+        let mut w = WireWriter::new(1);
+        w.put_f32(&data);
+        let msg = w.finish();
+        rows.push(bench.run("wire decode 2MB f32 (zero-copy)", Some(bytes), || {
+            let r = WireReader::parse(&msg).unwrap();
+            std::hint::black_box(r.f32_borrowed(0).unwrap().len());
+        }));
+    }
+
+    // Lossless index compression on a skewed batch.
+    {
+        let model = ModelConfig {
+            artifact_preset: "small".into(),
+            n_groups: 8,
+            emb_dim_per_group: 16,
+            nid_dim: 16,
+            hidden: vec![64],
+            ids_per_group: 8,
+            pooling: Pooling::Sum,
+        };
+        let ds = SyntheticDataset::new(&model, 100_000, 1.2, 3);
+        let batch = ds.batch(&mut ds.train_rng(0), 4096);
+        let m = IndexMap::from_batch(&batch);
+        println!(
+            "  index compression: naive {} B -> {} B (ratio {:.2}x), {} unique of {} ids",
+            m.naive_bytes(),
+            m.wire_bytes(),
+            m.ratio(),
+            m.keys.len(),
+            m.rows.len()
+        );
+        rows.push(bench.run("index compress 4096-batch", Some(4096.0), || {
+            std::hint::black_box(IndexMap::from_batch(&batch).wire_bytes());
+        }));
+        assert!(m.ratio() > 1.5, "skewed traffic must compress");
+    }
+
+    // Lossy value compression.
+    {
+        let mut rng = Rng::new(2);
+        let vals = rng.normal_vec(4096 * 128);
+        let bytes = (vals.len() * 4) as f64;
+        rows.push(bench.run("fp16 value compress 2MB", Some(bytes), || {
+            std::hint::black_box(CompressedValues::compress(&vals, 128).wire_bytes());
+        }));
+        let c = CompressedValues::compress(&vals, 128);
+        let mut out = vec![0.0f32; vals.len()];
+        rows.push(bench.run("fp16 value decompress 2MB", Some(bytes), || {
+            c.decompress_into(&mut out);
+            std::hint::black_box(out[0]);
+        }));
+        let max_err = vals
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "  value compression: {} B -> {} B ({:.2}x), max abs err {:.2e}",
+            c.uncompressed_bytes(),
+            c.wire_bytes(),
+            c.uncompressed_bytes() as f64 / c.wire_bytes() as f64,
+            max_err
+        );
+    }
+
+    // RPC round-trip latency: in-proc channel vs TCP loopback.
+    {
+        let (server_t, client_t) = ChannelTransport::pair();
+        let mut server = RpcServer::new();
+        server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+        let h = std::thread::spawn(move || server.serve(&server_t));
+        let client = RpcClient::new(client_t);
+        let mut w = WireWriter::new(1);
+        w.put_f32(&vec![0.0; 256]);
+        let msg = w.finish();
+        rows.push(bench.run("rpc roundtrip in-proc 1KB x100", Some(100.0), || {
+            for _ in 0..100 {
+                std::hint::black_box(client.call(&msg).unwrap().len());
+            }
+        }));
+        drop(client);
+        h.join().unwrap().ok();
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let t = TcpTransport::new(s);
+            let mut server = RpcServer::new();
+            server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+            server.serve(&t).ok();
+        });
+        let client = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        rows.push(bench.run("rpc roundtrip tcp 1KB x100", Some(100.0), || {
+            for _ in 0..100 {
+                std::hint::black_box(client.call(&msg).unwrap().len());
+            }
+        }));
+        drop(client);
+        h.join().unwrap();
+    }
+
+    persia::util::bench::print_table("micro_comm", &rows);
+    println!("micro_comm OK");
+}

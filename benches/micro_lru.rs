@@ -1,0 +1,95 @@
+//! §4.2.2 micro-benchmarks — the array-list LRU:
+//! get/put throughput under Zipf traffic, comparison against a plain
+//! HashMap-of-Vec baseline (the allocation-heavy design the paper rejects),
+//! and flat-memcpy snapshot bandwidth (the paper's checkpointing argument).
+
+mod common;
+
+use persia::embedding::LruStore;
+use persia::util::{Bench, Rng, Zipf};
+
+fn main() {
+    common::banner(
+        "micro: array-list LRU (get/put, eviction, snapshot bandwidth)",
+        "Persia (KDD'22) §4.2.2 (Fig. 5 design)",
+    );
+    let bench = Bench::new(2, 8);
+    let dim = 16usize; // embedding + adagrad state
+    let capacity = 200_000;
+    let ops = 500_000u64;
+    let zipf = Zipf::new(2_000_000, 1.05);
+    let mut rows = Vec::new();
+
+    // Array-list LRU under Zipf access.
+    {
+        let mut lru = LruStore::new(capacity, dim);
+        let mut rng = Rng::new(1);
+        rows.push(bench.run("array_lru_get_or_insert (zipf)", Some(ops as f64), || {
+            for _ in 0..ops {
+                let k = zipf.sample(&mut rng);
+                let (row, _) = lru.get_or_insert_with(k, |r| r.fill(0.5));
+                row[0] += 1.0;
+            }
+        }));
+        println!(
+            "  occupancy {}/{capacity}, evictions {}",
+            lru.len(),
+            lru.evictions()
+        );
+    }
+
+    // Baseline: HashMap<u64, Vec<f32>> with manual recency vector (what a
+    // pointer-based design costs, approximated).
+    {
+        use std::collections::HashMap;
+        let mut map: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut order: Vec<u64> = Vec::new();
+        let mut rng = Rng::new(1);
+        rows.push(bench.run("hashmap_vec baseline (zipf)", Some(ops as f64), || {
+            for _ in 0..ops {
+                let k = zipf.sample(&mut rng);
+                let row = map.entry(k).or_insert_with(|| {
+                    order.push(k);
+                    vec![0.5; dim]
+                });
+                row[0] += 1.0;
+                if map.len() > capacity {
+                    // Evict oldest-inserted (no true recency — cheaper than
+                    // a linked list, still slower end-to-end).
+                    if let Some(old) = order.first().copied() {
+                        order.remove(0);
+                        map.remove(&old);
+                    }
+                }
+            }
+        }));
+    }
+
+    // Snapshot bandwidth (flat memcpy serialization).
+    {
+        let mut lru = LruStore::new(capacity, dim);
+        let mut rng = Rng::new(2);
+        for _ in 0..capacity {
+            lru.get_or_insert_with(rng.next_u64(), |r| r.fill(1.0));
+        }
+        let bytes = lru.to_bytes().len() as f64;
+        let r = bench.run("snapshot to_bytes", Some(bytes), || {
+            let b = lru.to_bytes();
+            std::hint::black_box(&b);
+        });
+        println!(
+            "  snapshot {} MB at {:.1} GB/s",
+            (bytes / 1e6) as u64,
+            r.throughput.unwrap() / 1e9
+        );
+        rows.push(r);
+        let snap = lru.to_bytes();
+        rows.push(bench.run("snapshot from_bytes (restore)", Some(bytes), || {
+            let s = LruStore::from_bytes(&snap).unwrap();
+            std::hint::black_box(s.len());
+        }));
+    }
+
+    persia::util::bench::print_table("micro_lru", &rows);
+    println!("micro_lru OK");
+}

@@ -1,0 +1,30 @@
+//! Table 1 — model scales for every benchmark, plus verification that the
+//! virtualized embedding geometry reconstructs the paper's parameter counts.
+
+mod common;
+
+use persia::config::BenchPreset;
+
+fn main() {
+    common::banner("Table 1: benchmark model scales", "Persia (KDD'22) Table 1");
+    println!(
+        "{:<14} {:>20} {:>14} {:>18} {:>12}",
+        "benchmark", "sparse params", "dense params", "virtual rows/grp", "zipf"
+    );
+    for p in BenchPreset::all() {
+        let model = p.model("paper");
+        let emb = p.embedding(&model, 1);
+        println!(
+            "{:<14} {:>20} {:>14} {:>18} {:>12.2}",
+            p.name, p.sparse_params, p.dense_params_paper, emb.rows_per_group, p.zipf_exponent
+        );
+        // The virtual geometry must reconstruct the advertised sparse scale.
+        let virt = emb.virtual_params(&model);
+        let denom = (model.n_groups * model.emb_dim_per_group) as u128;
+        assert!(p.sparse_params.abs_diff(virt) < denom * 2, "{}: {virt}", p.name);
+    }
+    let paper_dense = BenchPreset::by_name("criteo").unwrap().model("paper").dense_param_count();
+    println!("\n'paper' dense tower: {paper_dense} params (paper: ~12M, hidden 4096/2048/1024/512/256)");
+    assert!((11_000_000..13_000_000).contains(&paper_dense));
+    println!("table1_scales OK");
+}

@@ -1,0 +1,49 @@
+//! Table 2 — final test AUC per benchmark per mode.
+//!
+//! Reproduced shape: hybrid within ~0.1% (absolute) of sync on every
+//! benchmark; async measurably below both.
+
+mod common;
+
+use persia::config::{BenchPreset, TrainMode};
+
+fn main() {
+    common::banner("Table 2: final test AUC per mode", "Persia (KDD'22) Table 2");
+    println!(
+        "{:<12} {:>14} {:>12} {:>12} {:>16}",
+        "benchmark", "persia-hybrid", "sync", "async", "hybrid-sync gap"
+    );
+    for preset in BenchPreset::convergence_set() {
+        let steps = if preset.name == "kwai" { 300 } else { 400 };
+        let mut res = std::collections::HashMap::new();
+        for mode in [TrainMode::Hybrid, TrainMode::FullSync, TrainMode::FullAsync] {
+            let mut total = 0.0;
+            for seed in [3u64, 17, 29] {
+                let mut trainer = common::trainer_for(&preset, mode, 4, steps, seed);
+                trainer.train.eval_every = steps;
+                trainer.eval_rows = 2048;
+                let out = trainer.run_rust().expect("run");
+                total += out.report.final_auc.unwrap();
+            }
+            res.insert(mode.name(), total / 3.0);
+        }
+        let hybrid = res["hybrid"];
+        let sync = res["sync"];
+        let asynch = res["async"];
+        println!(
+            "{:<12} {:>14.4} {:>12.4} {:>12.4} {:>16.4}",
+            preset.name,
+            hybrid,
+            sync,
+            asynch,
+            hybrid - sync
+        );
+        assert!((hybrid - sync).abs() < 0.02, "{}: hybrid deviates from sync", preset.name);
+        assert!(
+            asynch <= hybrid + 0.01,
+            "{}: async should not beat hybrid ({asynch} vs {hybrid})",
+            preset.name
+        );
+    }
+    println!("table2_auc OK");
+}

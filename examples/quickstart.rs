@@ -1,0 +1,73 @@
+//! Quickstart: train a small recommender with the hybrid algorithm in ~30 s.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the AOT-compiled PJRT artifacts when `artifacts/` exists, else the
+//! pure-Rust dense tower.
+
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::{PjrtEngineFactory, Trainer};
+use persia::runtime::ArtifactManifest;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a Table-1 benchmark preset and a dense-tower size.
+    let preset = BenchPreset::by_name("taobao").unwrap();
+    let model = preset.model("tiny");
+    let emb_cfg = preset.embedding(&model, 65536);
+
+    // 2. Cluster geometry: 2 NN workers, 2 embedding workers, paper-like
+    //    network cost model.
+    let cluster =
+        ClusterConfig { n_nn_workers: 2, n_emb_workers: 2, net: NetModelConfig::paper_like() };
+
+    // 3. Training config: the hybrid algorithm with bounded staleness τ=4.
+    let artifacts = ArtifactManifest::default_dir();
+    let use_pjrt = artifacts.join("manifest.txt").exists();
+    let batch =
+        if use_pjrt { ArtifactManifest::load(&artifacts)?.preset("tiny")?.batch } else { 64 };
+    let train = TrainConfig {
+        mode: TrainMode::Hybrid,
+        batch_size: batch,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps: 300,
+        eval_every: 100,
+        seed: 42,
+        use_pjrt,
+        compress: true,
+    };
+
+    // 4. Synthetic CTR stream with the preset's scale + skew.
+    let dataset =
+        SyntheticDataset::new(&model, emb_cfg.rows_per_group, preset.zipf_exponent, train.seed);
+
+    println!(
+        "quickstart: {} sparse rows/group x {} groups (virtual {} params), dense {} params, engine={}",
+        emb_cfg.rows_per_group,
+        model.n_groups,
+        preset.sparse_params,
+        model.dense_param_count(),
+        if use_pjrt { "pjrt" } else { "rust" },
+    );
+
+    // 5. Run.
+    let trainer = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    let out = if use_pjrt {
+        trainer.run(&PjrtEngineFactory { artifacts_dir: artifacts, preset: "tiny".into() })?
+    } else {
+        trainer.run_rust()?
+    };
+
+    println!("\nloss curve (every 30 steps):");
+    for (step, loss) in out.tracker.losses.iter().step_by(30) {
+        println!("  step {step:>4}  loss {loss:.4}");
+    }
+    println!("\nAUC evals: {:?}", out.tracker.aucs);
+    out.report.print_row();
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel pair: non-uniform fp32 -> fp16 value compression.
+
+Paper §4.2.3 ("Lossy compression"): a uniform fp32->fp16 cast harms statistic
+efficiency, so each vector block v is first scaled by kappa/||v||_inf (kappa a
+large constant near the fp16 max) and only then cast; the decompressor undoes
+the scale. This keeps the mantissa bits where the signal is regardless of the
+block's dynamic range.
+
+The production hot path runs the same transform in Rust (`comm::compress`);
+this kernel is the TPU-side counterpart (e.g. compressing embedding-gradient
+traffic on-device before it leaves the NN worker) and doubles as the
+executable specification the Rust implementation is property-tested against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Close to (but safely under) the fp16 max of 65504.
+KAPPA = 60000.0
+
+BLOCK_ROWS = 256
+
+
+def _compress_kernel(v_ref, out_ref, scale_ref):
+    v = v_ref[...]
+    norm = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    # Avoid 0/0 for all-zero rows; their values compress to exact zeros.
+    safe = jnp.where(norm > 0, norm, 1.0)
+    out_ref[...] = (v * (KAPPA / safe)).astype(jnp.float16)
+    # Stored per-row factor for the decompressor: ||v||_inf / kappa.
+    scale_ref[...] = norm / KAPPA
+
+
+def _decompress_kernel(c_ref, scale_ref, out_ref):
+    out_ref[...] = c_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def compress(v, block_rows: int = BLOCK_ROWS):
+    """Compress ``v: [R, D]`` f32 -> (``[R, D]`` f16 values, ``[R, 1]`` f32 scales)."""
+    if v.ndim != 2:
+        raise ValueError(f"expected [R, D], got {v.shape}")
+    r, d = v.shape
+    br = min(block_rows, max(1, r))
+    pr = (-r) % br
+    vp = jnp.pad(v, ((0, pr), (0, 0)))
+    rp = vp.shape[0]
+
+    vals, scales = pl.pallas_call(
+        _compress_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, d), jnp.float16),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(vp)
+    return vals[:r], scales[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def decompress(vals, scales, block_rows: int = BLOCK_ROWS):
+    """Inverse of :func:`compress`."""
+    if vals.ndim != 2 or scales.ndim != 2:
+        raise ValueError(f"bad ranks: vals{vals.shape} scales{scales.shape}")
+    r, d = vals.shape
+    br = min(block_rows, max(1, r))
+    pr = (-r) % br
+    vp = jnp.pad(vals, ((0, pr), (0, 0)))
+    sp = jnp.pad(scales, ((0, pr), (0, 0)))
+    rp = vp.shape[0]
+
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(vp, sp)
+    return out[:r]

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: embedding-bag pooling ``[B, L, D] -> [B, D]``.
+
+Persia's embedding workers aggregate the per-sample list of looked-up
+embedding rows into one pooled vector per feature group (paper §4.1 step 4,
+"the embedding worker performs some potential aggregation of original
+embedding vectors"). On the CPU workers this is a segment-sum; the TPU-idiom
+version keeps a [block_b, L, D] slab VMEM-resident and reduces over the bag
+axis — no gather/scatter, the (already gathered) rows stream in via the
+BlockSpec schedule.
+
+Supports sum and mean pooling. interpret=True as everywhere (see fused_mlp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 64
+
+
+def _bag_kernel(x_ref, o_ref, *, l_steps: int, mode: str, bag_len: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...].astype(o_ref.dtype), axis=1)
+
+    if mode == "mean":
+
+        @pl.when(pl.program_id(1) == l_steps - 1)
+        def _finalize():
+            o_ref[...] = o_ref[...] / bag_len
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b", "block_l"))
+def embedding_bag(x, mode: str = "sum", block_b: int = BLOCK_B, block_l: int = 0):
+    """Pool the bag axis of ``x: [B, L, D]`` to ``[B, D]`` (sum or mean)."""
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"unknown mode: {mode}")
+    if x.ndim != 3:
+        raise ValueError(f"expected [B, L, D], got {x.shape}")
+    b, l, d = x.shape
+    bb = min(block_b, max(1, b))
+    bl = l if block_l <= 0 else min(block_l, l)
+
+    # Pad B up to the block grid; L up to a multiple of bl. Padding rows are
+    # zero so they do not perturb the sum; mean divides by the true bag_len.
+    pb = (-b) % bb
+    plen = (-l) % bl
+    xp = jnp.pad(x, ((0, pb), (0, plen), (0, 0)))
+    bp, lp, _ = xp.shape
+    l_steps = lp // bl
+    grid = (bp // bb, l_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, l_steps=l_steps, mode=mode, bag_len=l),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, bl, d), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:b]

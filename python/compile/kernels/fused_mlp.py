@@ -1,0 +1,180 @@
+"""L1 Pallas kernel: fused tiled ``act(x @ W + b)``.
+
+This is the compute hot-spot of the dense tower (paper Fig. 2: the NN side is
+computation-intensive, 50+ TFLOP per step at production scale). On GPU the
+paper delegates these GEMMs to cuBLAS; our TPU-idiom rethink expresses the
+HBM<->VMEM schedule explicitly with a ``BlockSpec`` grid over (M, N, K) tiles
+sized for the MXU systolic array (128-multiples where the preset dims allow)
+and accumulates in the output block (f32), applying bias + activation once on
+the final K step.
+
+Lowered with ``interpret=True`` so the resulting HLO runs on any PJRT backend
+(real-TPU Mosaic lowering cannot execute on the CPU plugin; see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes. For small presets the wrapper clamps these
+# to the (padded) problem size so a tile never exceeds the array.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _apply_activation(y, activation: str):
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, activation: str):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]; finalize on last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finalize():
+        o_ref[...] = _apply_activation(o_ref[...] + b_ref[...], activation)
+
+
+def _pad_to(x, multiple: int, axis: int):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _fused_linear_pallas(x, w, b, activation, block_m, block_n, block_k):
+    """Raw tiled Pallas ``act(x @ w + b)`` (no autodiff rule)."""
+    m, k = x.shape
+    n = w.shape[1]
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = _pad_to(b.reshape(1, -1), bn, 1)
+
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_linear_kernel, k_steps=k_steps, activation=activation
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _act_grad_from_output(out, activation: str):
+    """d act(y)/dy expressed from the *output* act(y) (what the fwd saved)."""
+    if activation == "relu":
+        return (out > 0).astype(out.dtype)
+    if activation == "sigmoid":
+        return out * (1.0 - out)
+    if activation == "none":
+        return jnp.ones_like(out)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_linear_vjp(x, w, b, activation, block_m, block_n, block_k):
+    return _fused_linear_pallas(x, w, b, activation, block_m, block_n, block_k)
+
+
+def _fused_linear_fwd(x, w, b, activation, block_m, block_n, block_k):
+    out = _fused_linear_pallas(x, w, b, activation, block_m, block_n, block_k)
+    return out, (x, w, out)
+
+
+def _fused_linear_bwd(activation, block_m, block_n, block_k, res, g):
+    # The backward matmuls reuse the same tiled Pallas kernel (zero bias,
+    # identity activation) so L1 is on the fwd AND bwd hot paths of the
+    # exported train_step HLO.
+    x, w, out = res
+    dy = (g * _act_grad_from_output(out, activation)).astype(jnp.float32)
+    zx = jnp.zeros((x.shape[1],), jnp.float32)
+    zw = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = _fused_linear_pallas(dy, w.T.astype(jnp.float32), zx, "none", block_m, block_n, block_k)
+    dw = _fused_linear_pallas(x.T.astype(jnp.float32), dy, zw, "none", block_m, block_n, block_k)
+    db = jnp.sum(dy, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(jnp.float32)
+
+
+_fused_linear_vjp.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def fused_linear(
+    x,
+    w,
+    b,
+    activation: str = "relu",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel (differentiable).
+
+    x: [M, K], w: [K, N], b: [N]. Arbitrary shapes are padded up to the tile
+    grid and the result sliced back, so callers never need tile-aligned dims.
+    Accumulation is always f32 (``preferred_element_type``); inputs may be
+    f32 or bf16. Gradients flow through a custom VJP whose matmuls are the
+    same Pallas kernel.
+    """
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError(f"bad ranks: x{x.shape} w{w.shape} b{b.shape}")
+    if x.shape[1] != w.shape[0] or b.shape[0] != w.shape[1]:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    return _fused_linear_vjp(x, w, b, activation, block_m, block_n, block_k)
+
+
+def vmem_footprint_bytes(
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    in_dtype_bytes: int = 4,
+) -> int:
+    """Estimated resident VMEM per grid step (x, w, b blocks + f32 out block).
+
+    Used by the §Perf analysis in EXPERIMENTS.md — interpret-mode wallclock is
+    not a TPU proxy, so we budget structurally: the working set must fit the
+    ~16 MiB VMEM of a TPU core with room for double-buffering (×2).
+    """
+    x_blk = block_m * block_k * in_dtype_bytes
+    w_blk = block_k * block_n * in_dtype_bytes
+    b_blk = block_n * in_dtype_bytes
+    o_blk = block_m * block_n * 4
+    return 2 * (x_blk + w_blk + b_blk) + o_blk

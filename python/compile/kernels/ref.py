@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package is
+asserted allclose against its oracle by ``python/tests`` (hypothesis sweeps
+over shapes and dtypes) before anything is AOT-exported for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .compress import KAPPA
+
+
+def fused_linear_ref(x, w, b, activation: str = "relu"):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(
+        jnp.float32
+    )
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def embedding_bag_ref(x, mode: str = "sum"):
+    s = jnp.sum(x.astype(jnp.float32), axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / x.shape[1]
+    raise ValueError(f"unknown mode: {mode}")
+
+
+def compress_ref(v):
+    norm = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    vals = (v * (KAPPA / safe)).astype(jnp.float16)
+    scales = norm / KAPPA
+    return vals, scales
+
+
+def decompress_ref(vals, scales):
+    return vals.astype(jnp.float32) * scales

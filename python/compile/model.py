@@ -1,0 +1,132 @@
+"""L2: the Persia dense recommender tower (JAX, build-time only).
+
+The paper's model (§2.1, Fig. 2): ID-type features pass through the huge
+embedding layer (owned by the Rust embedding PS at runtime), get pooled per
+feature group on the embedding workers, and the concatenated pooled
+embeddings + Non-ID dense features feed a fully-connected tower — the paper's
+benchmarks use an FFNN with hidden dims 4096/2048/1024/512/256 predicting CTR
+with a binary cross-entropy loss.
+
+This module defines exactly the dense part: given the pooled embedding
+activations (``emb``), the dense features (``nid``) and labels, it computes
+the loss and the gradients w.r.t. the dense parameters *and w.r.t. the
+embedding activations* — the latter are shipped back to the embedding workers
+(Algorithm 1's backward task). The Rust NN workers drive the AOT-compiled
+``train_step`` of this module via PJRT; Python never runs at training time.
+
+Every hidden layer is the L1 Pallas ``fused_linear`` kernel so the kernels
+lower into the same HLO module (interpret=True; see kernels/fused_mlp.py).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_linear
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def layer_dims(emb_dim: int, nid_dim: int, hidden: Sequence[int]) -> List[int]:
+    """Full list of layer widths: input, hidden..., 1 logit."""
+    return [emb_dim + nid_dim, *hidden, 1]
+
+
+def init_params(key, dims: Sequence[int]) -> Params:
+    """He-initialised weights, zero biases, one (W, b) per layer."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        fan_in = dims[i]
+        w = jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def param_count(dims: Sequence[int]) -> int:
+    return sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+
+
+def tower_logits(params: Params, emb, nid, use_pallas: bool = True):
+    """Forward pass: concat(pooled embeddings, dense features) -> logit [B]."""
+    x = jnp.concatenate([emb, nid], axis=1)
+    for i, (w, b) in enumerate(params):
+        last = i == len(params) - 1
+        act = "none" if last else "relu"
+        if use_pallas:
+            x = fused_linear(x, w, b, activation=act)
+        else:
+            y = x @ w + b
+            x = y if last else jnp.maximum(y, 0.0)
+    return x[:, 0]
+
+
+def bce_loss(logits, y):
+    """Mean binary cross-entropy with logits (numerically stable form)."""
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def loss_fn(params: Params, emb, nid, y, use_pallas: bool = True):
+    return bce_loss(tower_logits(params, emb, nid, use_pallas=use_pallas), y)
+
+
+def train_step(params: Params, emb, nid, y, use_pallas: bool = True):
+    """One SGD step's compute: (loss, dense grads, grad wrt emb activations).
+
+    A single value_and_grad graph — no recomputation of the tower between the
+    loss and the gradients (L2 §Perf requirement).
+    """
+    (loss, _), grads = jax.value_and_grad(
+        lambda p, e: (loss_fn(p, e, nid, y, use_pallas=use_pallas), 0.0),
+        argnums=(0, 1),
+        has_aux=True,
+    )(params, emb)
+    gparams, gemb = grads
+    return loss, gparams, gemb
+
+
+def forward(params: Params, emb, nid, use_pallas: bool = True):
+    """Eval graph: predicted CTR probabilities [B]."""
+    return jax.nn.sigmoid(tower_logits(params, emb, nid, use_pallas=use_pallas))
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers: the AOT interchange with Rust uses a fixed
+# positional convention (w0, b0, ..., wk, bk, emb, nid, y) so the Rust side
+# never needs a pytree library.
+# ---------------------------------------------------------------------------
+
+
+def _unflatten(args, n_layers: int) -> Tuple[Params, tuple]:
+    params = [(args[2 * i], args[2 * i + 1]) for i in range(n_layers)]
+    return params, args[2 * n_layers :]
+
+
+def train_step_flat(n_layers: int, use_pallas: bool = True):
+    """Returns f(w0, b0, ..., emb, nid, y) -> (loss, gw0, gb0, ..., gemb)."""
+
+    def f(*args):
+        params, (emb, nid, y) = _unflatten(args, n_layers)
+        loss, gparams, gemb = train_step(params, emb, nid, y, use_pallas=use_pallas)
+        flat = [loss]
+        for gw, gb in gparams:
+            flat.extend([gw, gb])
+        flat.append(gemb)
+        return tuple(flat)
+
+    return f
+
+
+def forward_flat(n_layers: int, use_pallas: bool = True):
+    """Returns f(w0, b0, ..., emb, nid) -> (probs,)."""
+
+    def f(*args):
+        params, (emb, nid) = _unflatten(args, n_layers)
+        return (forward(params, emb, nid, use_pallas=use_pallas),)
+
+    return f

@@ -1,0 +1,152 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel is swept over shapes and dtypes with hypothesis and
+asserted allclose against the pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.compress import KAPPA, compress, decompress
+from compile.kernels.embedding_bag import embedding_bag
+from compile.kernels.fused_mlp import fused_linear, vmem_footprint_bytes
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32) * 3.0
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    activation=st.sampled_from(["relu", "none", "sigmoid"]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, activation, dtype, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(kx, (m, k), dtype)
+    w = _rand(kw, (k, n), dtype)
+    b = _rand(kb, (n,), dtype)
+    got = fused_linear(x, w, b, activation=activation, block_m=32, block_n=32, block_k=32)
+    want = ref.fused_linear_ref(x, w, b, activation=activation)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_fused_linear_tile_aligned_exact():
+    # A shape that exactly matches the tile grid (no padding path).
+    key = jax.random.PRNGKey(0)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = _rand(kx, (64, 96), jnp.float32)
+    w = _rand(kw, (96, 32), jnp.float32)
+    b = _rand(kb, (32,), jnp.float32)
+    got = fused_linear(x, w, b, block_m=32, block_n=32, block_k=32)
+    np.testing.assert_allclose(got, ref.fused_linear_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    b = jnp.zeros((7,))
+    with pytest.raises(ValueError):
+        fused_linear(x, w, b)
+
+
+def test_fused_linear_relu_clamps_negative():
+    x = -jnp.ones((4, 4))
+    w = jnp.eye(4)
+    b = jnp.zeros((4,))
+    out = fused_linear(x, w, b, activation="relu")
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_vmem_footprint_within_budget():
+    # Default MXU blocks must fit a 16 MiB VMEM with double-buffering room.
+    assert vmem_footprint_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------- bag
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 40),
+    l=st.integers(1, 20),
+    d=st.integers(1, 40),
+    mode=st.sampled_from(["sum", "mean"]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_embedding_bag_matches_ref(b, l, d, mode, dtype, seed):
+    x = _rand(jax.random.PRNGKey(seed), (b, l, d), dtype)
+    got = embedding_bag(x, mode=mode, block_b=8)
+    want = ref.embedding_bag_ref(x, mode=mode)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_embedding_bag_blocked_l_accumulation():
+    x = jnp.arange(2 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 3)
+    got = embedding_bag(x, mode="sum", block_b=2, block_l=2)
+    np.testing.assert_allclose(got, ref.embedding_bag_ref(x), rtol=1e-6)
+
+
+def test_embedding_bag_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        embedding_bag(jnp.zeros((3, 4)))
+
+
+# ----------------------------------------------------------------- compress
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 60),
+    d=st.integers(1, 40),
+    scale=st.floats(1e-6, 1e6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compress_roundtrip_error_bound(r, d, scale, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (r, d), jnp.float32) * scale
+    vals, scales = compress(v, block_rows=16)
+    back = decompress(vals, scales, block_rows=16)
+    # Relative error per row bounded by fp16 resolution of the scaled block:
+    # |v - back| <= ||v||_inf / KAPPA * (KAPPA * eps16) ~ ||v||_inf * 2^-10.
+    norms = np.max(np.abs(np.asarray(v)), axis=-1, keepdims=True)
+    bound = norms * 2.0**-10 + 1e-30
+    assert np.all(np.abs(np.asarray(back) - np.asarray(v)) <= bound)
+
+
+@settings(**SETTINGS)
+@given(r=st.integers(1, 40), d=st.integers(1, 30), seed=st.integers(0, 2**31 - 1))
+def test_compress_matches_ref(r, d, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (r, d), jnp.float32)
+    vals, scales = compress(v, block_rows=8)
+    rvals, rscales = ref.compress_ref(v)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_allclose(scales, rscales, rtol=1e-6)
+
+
+def test_compress_zero_rows_exact():
+    v = jnp.zeros((5, 7))
+    vals, scales = compress(v)
+    back = decompress(vals, scales)
+    np.testing.assert_array_equal(np.asarray(back), np.zeros((5, 7), np.float32))
+
+
+def test_compress_survives_fp16_overflow_range():
+    # Values far above fp16 max must round-trip thanks to the scaling.
+    v = jnp.array([[1e8, -3e7, 5e6]], jnp.float32)
+    back = decompress(*compress(v))
+    np.testing.assert_allclose(back, v, rtol=2e-3)
+
+
+def test_kappa_under_fp16_max():
+    assert KAPPA < 65504.0

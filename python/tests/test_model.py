@@ -1,0 +1,120 @@
+"""L2 model correctness: shapes, gradients (vs numerical diff), pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _setup(batch=8, emb_dim=12, nid_dim=4, hidden=(16, 8), seed=0):
+    dims = model.layer_dims(emb_dim, nid_dim, hidden)
+    key = jax.random.PRNGKey(seed)
+    kp, ke, kn, ky = jax.random.split(key, 4)
+    params = model.init_params(kp, dims)
+    emb = jax.random.normal(ke, (batch, emb_dim))
+    nid = jax.random.normal(kn, (batch, nid_dim))
+    y = (jax.random.uniform(ky, (batch,)) > 0.5).astype(jnp.float32)
+    return params, emb, nid, y, dims
+
+
+def test_layer_dims_and_param_count():
+    dims = model.layer_dims(128, 16, (256, 128, 64))
+    assert dims == [144, 256, 128, 64, 1]
+    assert model.param_count(dims) == (
+        144 * 256 + 256 + 256 * 128 + 128 + 128 * 64 + 64 + 64 * 1 + 1
+    )
+
+
+def test_forward_shapes_and_range():
+    params, emb, nid, _, _ = _setup()
+    probs = model.forward(params, emb, nid, use_pallas=False)
+    assert probs.shape == (8,)
+    assert np.all((np.asarray(probs) > 0) & (np.asarray(probs) < 1))
+
+
+def test_pallas_tower_matches_plain_jnp():
+    params, emb, nid, y, _ = _setup(batch=16, emb_dim=24, nid_dim=8, hidden=(32, 16))
+    lp = model.loss_fn(params, emb, nid, y, use_pallas=True)
+    lj = model.loss_fn(params, emb, nid, y, use_pallas=False)
+    np.testing.assert_allclose(lp, lj, rtol=1e-5, atol=1e-6)
+    pp = model.forward(params, emb, nid, use_pallas=True)
+    pj = model.forward(params, emb, nid, use_pallas=False)
+    np.testing.assert_allclose(pp, pj, rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_outputs():
+    params, emb, nid, y, _ = _setup()
+    loss, gparams, gemb = model.train_step(params, emb, nid, y, use_pallas=False)
+    assert loss.shape == ()
+    assert gemb.shape == emb.shape
+    assert len(gparams) == len(params)
+    for (gw, gb), (w, b) in zip(gparams, params):
+        assert gw.shape == w.shape and gb.shape == b.shape
+
+
+def test_gradients_match_numerical():
+    params, emb, nid, y, _ = _setup(batch=4, emb_dim=6, nid_dim=3, hidden=(8,))
+    _, gparams, gemb = model.train_step(params, emb, nid, y, use_pallas=False)
+
+    def loss_at(e):
+        return float(model.loss_fn(params, e, nid, y, use_pallas=False))
+
+    eps = 1e-3
+    e_np = np.asarray(emb)
+    for idx in [(0, 0), (1, 3), (3, 5)]:
+        ep = e_np.copy()
+        ep[idx] += eps
+        em = e_np.copy()
+        em[idx] -= eps
+        num = (loss_at(jnp.asarray(ep)) - loss_at(jnp.asarray(em))) / (2 * eps)
+        np.testing.assert_allclose(np.asarray(gemb)[idx], num, rtol=2e-2, atol=1e-4)
+
+    # One dense weight too.
+    w0 = np.asarray(params[0][0])
+
+    def loss_w(wnew):
+        p2 = [(jnp.asarray(wnew), params[0][1])] + params[1:]
+        return float(model.loss_fn(p2, emb, nid, y, use_pallas=False))
+
+    wp = w0.copy()
+    wp[0, 0] += eps
+    wm = w0.copy()
+    wm[0, 0] -= eps
+    num = (loss_w(wp) - loss_w(wm)) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(gparams[0][0])[0, 0], num, rtol=2e-2, atol=1e-4)
+
+
+def test_pallas_gradients_match_plain():
+    params, emb, nid, y, _ = _setup(batch=8, emb_dim=8, nid_dim=4, hidden=(16,))
+    _, gp_p, ge_p = model.train_step(params, emb, nid, y, use_pallas=True)
+    _, gp_j, ge_j = model.train_step(params, emb, nid, y, use_pallas=False)
+    np.testing.assert_allclose(ge_p, ge_j, rtol=1e-4, atol=1e-5)
+    for (a, ab), (b, bb) in zip(gp_p, gp_j):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(ab, bb, rtol=1e-4, atol=1e-5)
+
+
+def test_bce_loss_matches_manual():
+    logits = jnp.array([0.5, -1.0, 2.0])
+    y = jnp.array([1.0, 0.0, 1.0])
+    want = -np.mean(
+        np.asarray(y) * np.log(1 / (1 + np.exp(-np.asarray(logits))))
+        + (1 - np.asarray(y)) * np.log(1 - 1 / (1 + np.exp(-np.asarray(logits))))
+    )
+    np.testing.assert_allclose(model.bce_loss(logits, y), want, rtol=1e-6)
+
+
+def test_loss_decreases_under_sgd():
+    params, emb, nid, y, _ = _setup(batch=32, emb_dim=8, nid_dim=4, hidden=(16, 8), seed=3)
+    lr = 0.5
+    losses = []
+    for _ in range(20):
+        loss, gparams, gemb = model.train_step(params, emb, nid, y, use_pallas=False)
+        losses.append(float(loss))
+        params = [
+            (w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, gparams)
+        ]
+        emb = emb - lr * gemb
+    assert losses[-1] < losses[0] * 0.7, losses

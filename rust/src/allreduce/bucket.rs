@@ -1,0 +1,164 @@
+//! Tensor bucketing + memory flattening (Bagua's optimization, used here for
+//! the dense-gradient AllReduce).
+//!
+//! Many small per-layer gradient tensors are copied into one (or a few)
+//! contiguous flat buffers so the AllReduce runs over large chunks —
+//! amortizing per-message latency — and so the reduce loop is a straight
+//! SIMD-friendly f32 sweep.
+
+use crate::tensor::Tensor;
+
+/// Flattened view of a list of tensors, split into fixed-size buckets.
+pub struct FlatBuckets {
+    /// Contiguous storage of all elements in declaration order.
+    flat: Vec<f32>,
+    /// (offset, len) per original tensor.
+    spans: Vec<(usize, usize)>,
+    /// Bucket boundaries as (offset, len) into `flat`.
+    buckets: Vec<(usize, usize)>,
+}
+
+impl FlatBuckets {
+    /// Flatten `tensors` with the given bucket size in elements.
+    pub fn flatten(tensors: &[Tensor], bucket_elems: usize) -> Self {
+        assert!(bucket_elems > 0);
+        let total: usize = tensors.iter().map(|t| t.len()).sum();
+        let mut flat = Vec::with_capacity(total);
+        let mut spans = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            spans.push((flat.len(), t.len()));
+            flat.extend_from_slice(t.data());
+        }
+        let mut buckets = Vec::new();
+        let mut off = 0;
+        while off < total {
+            let len = bucket_elems.min(total - off);
+            buckets.push((off, len));
+            off += len;
+        }
+        Self { flat, spans, buckets }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.flat
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.flat
+    }
+
+    /// Mutable view of bucket `i`.
+    pub fn bucket_mut(&mut self, i: usize) -> &mut [f32] {
+        let (off, len) = self.buckets[i];
+        &mut self.flat[off..off + len]
+    }
+
+    /// Copy the (possibly reduced) flat data back into tensors with the
+    /// original shapes.
+    pub fn unflatten_into(&self, tensors: &mut [Tensor]) {
+        assert_eq!(tensors.len(), self.spans.len());
+        for (t, &(off, len)) in tensors.iter_mut().zip(&self.spans) {
+            assert_eq!(t.len(), len);
+            t.data_mut().copy_from_slice(&self.flat[off..off + len]);
+        }
+    }
+
+    /// Allocate fresh tensors with the given shapes from the flat data.
+    pub fn unflatten(&self, shapes: &[Vec<usize>]) -> Vec<Tensor> {
+        assert_eq!(shapes.len(), self.spans.len());
+        shapes
+            .iter()
+            .zip(&self.spans)
+            .map(|(shape, &(off, len))| {
+                assert_eq!(shape.iter().product::<usize>(), len);
+                Tensor::from_vec(shape, self.flat[off..off + len].to_vec())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use crate::util::Rng;
+
+    fn tensors(rng: &mut Rng, shapes: &[Vec<usize>]) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|s| Tensor::from_vec(s, rng.normal_vec(s.iter().product())))
+            .collect()
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let shapes = vec![vec![3, 4], vec![7], vec![2, 2, 2]];
+        let mut rng = Rng::new(1);
+        let ts = tensors(&mut rng, &shapes);
+        let fb = FlatBuckets::flatten(&ts, 5);
+        assert_eq!(fb.total_elems(), 12 + 7 + 8);
+        assert_eq!(fb.n_buckets(), (27 + 4) / 5);
+        let back = fb.unflatten(&shapes);
+        assert_eq!(back, ts);
+    }
+
+    #[test]
+    fn buckets_cover_exactly_once() {
+        let mut rng = Rng::new(2);
+        let ts = tensors(&mut rng, &[vec![10], vec![13]]);
+        let mut fb = FlatBuckets::flatten(&ts, 4);
+        // Zero each bucket once; everything must be zero after.
+        for i in 0..fb.n_buckets() {
+            for x in fb.bucket_mut(i) {
+                *x = 0.0;
+            }
+        }
+        assert!(fb.flat().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn unflatten_into_reuses_storage() {
+        let shapes = vec![vec![4], vec![6]];
+        let mut rng = Rng::new(3);
+        let ts = tensors(&mut rng, &shapes);
+        let mut fb = FlatBuckets::flatten(&ts, 100);
+        for x in fb.flat_mut() {
+            *x *= 2.0;
+        }
+        let mut out = vec![Tensor::zeros(&[4]), Tensor::zeros(&[6])];
+        fb.unflatten_into(&mut out);
+        for (o, t) in out.iter().zip(&ts) {
+            for (a, b) in o.data().iter().zip(t.data()) {
+                assert_eq!(*a, b * 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn property_flatten_preserves_all_elements() {
+        forall(
+            41,
+            100,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 5) as usize;
+                (0..n).map(|_| rng.range(1, 40) as usize).collect::<Vec<usize>>()
+            },
+            |lens| {
+                let mut rng = Rng::new(lens.iter().sum::<usize>() as u64);
+                let shapes: Vec<Vec<usize>> = lens.iter().map(|&l| vec![l]).collect();
+                let ts = tensors(&mut rng, &shapes);
+                let fb = FlatBuckets::flatten(&ts, 7);
+                let want: Vec<f32> = ts.iter().flat_map(|t| t.data().to_vec()).collect();
+                fb.flat() == want.as_slice() && fb.unflatten(&shapes) == ts
+            },
+        );
+    }
+}

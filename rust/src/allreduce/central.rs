@@ -1,0 +1,75 @@
+//! Naive central-PS gradient reduction — the baseline the ring AllReduce is
+//! benched against (classic parameter-server dense sync, what the paper's
+//! "straightforward utilization of the PS paradigm" §4.1 does for w_nn).
+//!
+//! Every worker ships its full gradient to rank 0, which reduces and
+//! broadcasts back: each non-root pays `2N` elements, the root pays `2N(K-1)`
+//! — the centralization bottleneck the ring removes.
+
+use std::sync::Arc;
+
+use crate::comm::netsim::{Link, NetSim};
+
+/// Reduce `grads` (one full-length vector per worker) to their mean, and
+/// account the simulated transfer cost of the star topology. Returns
+/// (mean gradient, simulated seconds on the critical path).
+pub fn central_reduce(grads: &[Vec<f32>], net: &Arc<NetSim>) -> (Vec<f32>, f64) {
+    assert!(!grads.is_empty());
+    let n = grads[0].len();
+    let k = grads.len();
+    let mut mean = vec![0.0f32; n];
+    for g in grads {
+        assert_eq!(g.len(), n, "ragged gradients");
+        for (m, x) in mean.iter_mut().zip(g) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    // Critical path: root receives K-1 gradients serially on its link, then
+    // broadcasts K-1 copies (uploads + downloads serialize at the root NIC).
+    let mut secs = 0.0;
+    for _ in 0..k.saturating_sub(1) {
+        secs += net.record(Link::GpuGpu, n * 4); // upload to root
+    }
+    for _ in 0..k.saturating_sub(1) {
+        secs += net.record(Link::GpuGpu, n * 4); // broadcast back
+    }
+    (mean, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetModelConfig;
+
+    #[test]
+    fn mean_is_exact() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let grads = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let (mean, secs) = central_reduce(&grads, &net);
+        assert_eq!(mean, vec![3.0, 4.0]);
+        assert_eq!(secs, 0.0);
+    }
+
+    #[test]
+    fn critical_path_scales_linearly_with_workers() {
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let n = 1 << 16;
+        let g2: Vec<Vec<f32>> = (0..2).map(|_| vec![1.0; n]).collect();
+        let g8: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0; n]).collect();
+        let (_, s2) = central_reduce(&g2, &net);
+        let (_, s8) = central_reduce(&g8, &net);
+        // (8-1)/(2-1) = 7x the transfers.
+        assert!((s8 / s2 - 7.0).abs() < 0.2, "ratio={}", s8 / s2);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_inputs_rejected() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        central_reduce(&[vec![1.0], vec![1.0, 2.0]], &net);
+    }
+}

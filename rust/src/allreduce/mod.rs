@@ -1,0 +1,15 @@
+//! Dense-gradient synchronization (paper §4.2.3, "Optimized communication
+//! among NN workers").
+//!
+//! Persia delegates this to Bagua; offline we implement the same primitives:
+//! tensor bucketing + memory flattening ([`bucket`]), ring AllReduce
+//! ([`ring`]), and a naive central-PS reduce baseline ([`central`]) for the
+//! ablation bench.
+
+pub mod bucket;
+pub mod central;
+pub mod ring;
+
+pub use bucket::FlatBuckets;
+pub use central::central_reduce;
+pub use ring::RingGroup;

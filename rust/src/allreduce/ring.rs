@@ -1,0 +1,219 @@
+//! Ring AllReduce across in-process participants (one per NN-worker thread).
+//!
+//! Standard two-phase ring: K-1 reduce-scatter steps then K-1 all-gather
+//! steps over K chunks; each participant sends `2*(K-1)/K * N` elements per
+//! reduction — the bandwidth-optimal schedule. Simulated GPU-GPU wire time is
+//! accounted against [`NetSim`] per step so the Gantt/throughput experiments
+//! see realistic AllReduce costs.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::comm::netsim::{Link, NetSim};
+
+/// One participant's handle into a ring group.
+pub struct RingMember {
+    rank: usize,
+    k: usize,
+    /// Send to successor rank.
+    tx: Sender<Vec<f32>>,
+    /// Receive from predecessor rank.
+    rx: Receiver<Vec<f32>>,
+    net: Arc<NetSim>,
+}
+
+/// Factory for a K-member ring.
+pub struct RingGroup;
+
+impl RingGroup {
+    /// Create `k` connected members (rank i sends to rank (i+1) % k).
+    pub fn new(k: usize, net: Arc<NetSim>) -> Vec<RingMember> {
+        assert!(k >= 1);
+        let mut txs = Vec::with_capacity(k);
+        let mut rxs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        // Member i receives from channel i (its predecessor writes there) and
+        // sends into channel (i+1) % k.
+        let mut members: Vec<RingMember> = Vec::with_capacity(k);
+        rxs.reverse();
+        for (i, _) in txs.iter().enumerate() {
+            members.push(RingMember {
+                rank: i,
+                k,
+                tx: txs[(i + 1) % k].clone(),
+                rx: rxs.pop().unwrap(),
+                net: net.clone(),
+            });
+        }
+        members
+    }
+}
+
+impl RingMember {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.k
+    }
+
+    /// In-place AllReduce (mean) over all members' `buf` (equal lengths).
+    /// Returns the simulated communication seconds spent by this member.
+    pub fn all_reduce_mean(&self, buf: &mut [f32]) -> f64 {
+        let sim = self.all_reduce_sum(buf);
+        let inv = 1.0 / self.k as f32;
+        for x in buf.iter_mut() {
+            *x *= inv;
+        }
+        sim
+    }
+
+    /// In-place AllReduce (sum). Returns simulated comm seconds.
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) -> f64 {
+        let k = self.k;
+        if k == 1 {
+            return 0.0;
+        }
+        let n = buf.len();
+        let chunk = |c: usize| -> std::ops::Range<usize> {
+            let base = n / k;
+            let rem = n % k;
+            let start = c * base + c.min(rem);
+            let len = base + usize::from(c < rem);
+            start..start + len
+        };
+        let mut sim_secs = 0.0;
+
+        // Phase 1: reduce-scatter. After step s, each member owns the full
+        // sum of chunk (rank - s) (mod k)... standard schedule:
+        for s in 0..k - 1 {
+            let send_c = (self.rank + k - s) % k;
+            let recv_c = (self.rank + k - s - 1) % k;
+            let payload = buf[chunk(send_c)].to_vec();
+            sim_secs += self.net.record(Link::GpuGpu, payload.len() * 4);
+            self.tx.send(payload).expect("ring peer alive");
+            let incoming = self.rx.recv().expect("ring peer alive");
+            let r = chunk(recv_c);
+            debug_assert_eq!(incoming.len(), r.len());
+            for (a, b) in buf[r].iter_mut().zip(&incoming) {
+                *a += b;
+            }
+        }
+        // Phase 2: all-gather the reduced chunks around the ring.
+        for s in 0..k - 1 {
+            let send_c = (self.rank + 1 + k - s) % k;
+            let recv_c = (self.rank + k - s) % k;
+            let payload = buf[chunk(send_c)].to_vec();
+            sim_secs += self.net.record(Link::GpuGpu, payload.len() * 4);
+            self.tx.send(payload).expect("ring peer alive");
+            let incoming = self.rx.recv().expect("ring peer alive");
+            let r = chunk(recv_c);
+            buf[r].copy_from_slice(&incoming);
+        }
+        sim_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetModelConfig;
+    use crate::util::Rng;
+
+    fn run_ring(k: usize, n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let members = RingGroup::new(k, net);
+        let mut rng = Rng::new(seed);
+        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n)).collect();
+        let mut want = vec![0.0f32; n];
+        for input in &inputs {
+            for (w, x) in want.iter_mut().zip(input) {
+                *w += x;
+            }
+        }
+        for w in want.iter_mut() {
+            *w /= k as f32;
+        }
+        let handles: Vec<_> = members
+            .into_iter()
+            .zip(inputs.clone())
+            .map(|(m, mut buf)| {
+                std::thread::spawn(move || {
+                    m.all_reduce_mean(&mut buf);
+                    buf
+                })
+            })
+            .collect();
+        let outputs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (outputs, want)
+    }
+
+    #[test]
+    fn allreduce_mean_matches_direct_mean() {
+        for k in [1usize, 2, 3, 4, 7] {
+            for n in [1usize, 5, 64, 257] {
+                if n < k {
+                    continue;
+                }
+                let (outputs, want) = run_ring(k, n, (k * 1000 + n) as u64);
+                for out in &outputs {
+                    for (a, b) in out.iter().zip(&want) {
+                        assert!((a - b).abs() < 1e-4, "k={k} n={n}: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_chunks_handled() {
+        // n not divisible by k exercises the remainder chunks.
+        let (outputs, want) = run_ring(3, 10, 9);
+        for out in &outputs {
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_is_identity() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let members = RingGroup::new(1, net);
+        let mut buf = vec![1.0, 2.0, 3.0];
+        let secs = members[0].all_reduce_mean(&mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        assert_eq!(secs, 0.0);
+    }
+
+    #[test]
+    fn simulated_bytes_are_bandwidth_optimal() {
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let k = 4;
+        let n = 4096;
+        let members = RingGroup::new(k, net.clone());
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|m| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; 4096];
+                    m.all_reduce_sum(&mut buf);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Each member sends 2*(k-1)/k * n floats.
+        let per_member = 2 * (k - 1) * n / k * 4;
+        let want_total = (per_member * k) as u64;
+        let got = net.total_bytes();
+        let tolerance = (k * k * 4) as u64; // remainder-chunk rounding
+        assert!(got.abs_diff(want_total) <= tolerance, "got={got} want={want_total}");
+    }
+}

@@ -1,0 +1,272 @@
+//! Embedding-traffic compression (paper §4.2.3, "Communication compression").
+//!
+//! * **Lossless index compression**: a batch's ID component is sent as a map
+//!   `unique id -> uint16 sample indices` instead of per-sample int64 lists.
+//!   Since batch size <= 65535, indices fit u16 with no information loss; hot
+//!   ids that repeat across a batch are transmitted once.
+//! * **Lossy value compression**: non-uniform fp32 -> fp16. A uniform cast
+//!   loses accuracy, so each vector block `v` is scaled by `kappa/||v||_inf`
+//!   before the cast, and rescaled after — keeping the mantissa where the
+//!   signal lives regardless of dynamic range. This mirrors the L1 Pallas
+//!   `compress` kernel bit-for-bit (same kappa), which serves as its
+//!   executable specification.
+
+use crate::data::Batch;
+use crate::tensor::{f16_to_f32, f32_to_f16};
+
+/// Must match python/compile/kernels/compress.py.
+pub const KAPPA: f32 = 60000.0;
+
+/// Lossless batch index map: `(group, id) -> sample rows`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexMap {
+    /// Sorted unique (group, id) keys.
+    pub keys: Vec<(u32, u64)>,
+    /// Concatenated u16 row indices.
+    pub rows: Vec<u16>,
+    /// Offsets into `rows` per key (len = keys.len() + 1).
+    pub offsets: Vec<u32>,
+    /// Original batch size.
+    pub batch: u16,
+    /// Number of feature groups.
+    pub n_groups: u32,
+}
+
+impl IndexMap {
+    /// Build the compressed representation of a batch's ID component.
+    pub fn from_batch(batch: &Batch) -> Self {
+        assert!(batch.len() <= u16::MAX as usize, "batch too large for u16 indices");
+        let uniq = batch.unique_ids();
+        let mut keys = Vec::with_capacity(uniq.len());
+        let mut rows = Vec::new();
+        let mut offsets = Vec::with_capacity(uniq.len() + 1);
+        offsets.push(0u32);
+        for ((g, id), rs) in uniq {
+            keys.push((g as u32, id));
+            rows.extend_from_slice(&rs);
+            offsets.push(rows.len() as u32);
+        }
+        let n_groups = batch.ids.first().map(|f| f.groups.len()).unwrap_or(0) as u32;
+        Self { keys, rows, offsets, batch: batch.len() as u16, n_groups }
+    }
+
+    /// Reconstruct the per-sample id lists (inverse transform; proves
+    /// losslessness). Returns `ids[sample][group] -> Vec<id>`.
+    pub fn decompress(&self) -> Vec<Vec<Vec<u64>>> {
+        let mut out = vec![vec![Vec::new(); self.n_groups as usize]; self.batch as usize];
+        for (k, &(g, id)) in self.keys.iter().enumerate() {
+            let lo = self.offsets[k] as usize;
+            let hi = self.offsets[k + 1] as usize;
+            for &row in &self.rows[lo..hi] {
+                out[row as usize][g as usize].push(id);
+            }
+        }
+        out
+    }
+
+    /// Wire size in bytes of the compressed form.
+    pub fn wire_bytes(&self) -> usize {
+        self.keys.len() * 12 + self.rows.len() * 2 + self.offsets.len() * 4 + 8
+    }
+
+    /// Wire size of the naive per-sample int64 representation.
+    pub fn naive_bytes(&self) -> usize {
+        self.rows.len() * 8
+    }
+
+    /// Compression ratio vs naive int64 lists ( > 1 means smaller ).
+    pub fn ratio(&self) -> f64 {
+        self.naive_bytes() as f64 / self.wire_bytes().max(1) as f64
+    }
+}
+
+/// Lossy-compressed value block: per-row fp16 payload + per-row scale.
+#[derive(Clone, Debug)]
+pub struct CompressedValues {
+    /// fp16 bit patterns, row-major `[rows, dim]`.
+    pub vals: Vec<u16>,
+    /// Per-row decompression factor `||v||_inf / kappa`.
+    pub scales: Vec<f32>,
+    pub dim: usize,
+}
+
+impl CompressedValues {
+    /// Compress `rows x dim` f32 values (rows = vector blocks).
+    pub fn compress(values: &[f32], dim: usize) -> Self {
+        assert!(dim > 0 && values.len() % dim == 0);
+        let rows = values.len() / dim;
+        let mut vals = Vec::with_capacity(values.len());
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let v = &values[r * dim..(r + 1) * dim];
+            let norm = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let safe = if norm > 0.0 { norm } else { 1.0 };
+            let s = KAPPA / safe;
+            for &x in v {
+                vals.push(f32_to_f16(x * s));
+            }
+            scales.push(norm / KAPPA);
+        }
+        Self { vals, scales, dim }
+    }
+
+    /// Decompress back to f32.
+    pub fn decompress(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.vals.len());
+        for (r, &scale) in self.scales.iter().enumerate() {
+            for &h in &self.vals[r * self.dim..(r + 1) * self.dim] {
+                out.push(f16_to_f32(h) * scale);
+            }
+        }
+        out
+    }
+
+    /// Decompress into a caller-provided buffer (hot path, no allocation).
+    pub fn decompress_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.vals.len());
+        for (r, &scale) in self.scales.iter().enumerate() {
+            let dst = &mut out[r * self.dim..(r + 1) * self.dim];
+            let src = &self.vals[r * self.dim..(r + 1) * self.dim];
+            for (o, &h) in dst.iter_mut().zip(src) {
+                *o = f16_to_f32(h) * scale;
+            }
+        }
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        self.vals.len() * 2 + self.scales.len() * 4
+    }
+
+    pub fn uncompressed_bytes(&self) -> usize {
+        self.vals.len() * 4
+    }
+}
+
+/// Worst-case absolute round-trip error of one row: `||v||_inf * 2^-10`
+/// (fp16 resolution at the scaled magnitude, plus rounding guard).
+pub fn lossy_error_bound(inf_norm: f32) -> f32 {
+    inf_norm * 2.0f32.powi(-10) + 1e-30
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{IdFeatures, Sample};
+    use crate::util::quickcheck::forall;
+    use crate::util::Rng;
+
+    fn batch_with(ids: Vec<Vec<Vec<u64>>>) -> Batch {
+        let mut b = Batch::default();
+        for groups in ids {
+            b.push(Sample { ids: IdFeatures { groups }, nid: vec![0.0], label: 0.0 });
+        }
+        b
+    }
+
+    #[test]
+    fn index_map_roundtrips() {
+        let ids = vec![
+            vec![vec![5, 7], vec![100]],
+            vec![vec![5], vec![100, 200]],
+            vec![vec![9], vec![]],
+        ];
+        let b = batch_with(ids.clone());
+        let m = IndexMap::from_batch(&b);
+        // Decompressed lists contain the same multiset per (sample, group).
+        let back = m.decompress();
+        for (s, groups) in ids.iter().enumerate() {
+            for (g, want) in groups.iter().enumerate() {
+                let mut got = back[s][g].clone();
+                let mut want = want.clone();
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want, "sample {s} group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_map_shrinks_skewed_batches() {
+        // One hot id repeated in every sample: 8-byte int64 each naive,
+        // 2-byte u16 each compressed.
+        let ids: Vec<_> = (0..256).map(|_| vec![vec![42u64]]).collect();
+        let m = IndexMap::from_batch(&batch_with(ids));
+        assert_eq!(m.keys.len(), 1);
+        assert!(m.ratio() > 3.0, "ratio={}", m.ratio());
+    }
+
+    #[test]
+    fn property_index_map_lossless() {
+        forall(
+            31,
+            100,
+            |rng: &mut Rng| {
+                let b = rng.range(1, 20) as usize;
+                (0..b)
+                    .map(|_| {
+                        (0..2)
+                            .map(|_| {
+                                (0..rng.below(4)).map(|_| rng.below(50)).collect::<Vec<u64>>()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ids| {
+                let m = IndexMap::from_batch(&batch_with(ids.clone()));
+                let back = m.decompress();
+                ids.iter().enumerate().all(|(s, groups)| {
+                    groups.iter().enumerate().all(|(g, want)| {
+                        let mut got = back[s][g].clone();
+                        let mut want = want.clone();
+                        got.sort_unstable();
+                        want.sort_unstable();
+                        got == want
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn values_roundtrip_within_bound() {
+        let mut rng = Rng::new(5);
+        for scale in [1e-6f32, 1.0, 1e4, 1e8] {
+            let dim = 16;
+            let vals: Vec<f32> = (0..dim * 8).map(|_| rng.normal() * scale).collect();
+            let c = CompressedValues::compress(&vals, dim);
+            let back = c.decompress();
+            for r in 0..8 {
+                let row = &vals[r * dim..(r + 1) * dim];
+                let norm = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let bound = lossy_error_bound(norm);
+                for (a, b) in row.iter().zip(&back[r * dim..(r + 1) * dim]) {
+                    assert!((a - b).abs() <= bound, "{a} vs {b} bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_zero_rows_exact() {
+        let c = CompressedValues::compress(&[0.0; 12], 4);
+        assert_eq!(c.decompress(), vec![0.0; 12]);
+    }
+
+    #[test]
+    fn values_halve_wire_size() {
+        let c = CompressedValues::compress(&vec![1.0f32; 128 * 16], 16);
+        let ratio = c.uncompressed_bytes() as f64 / c.wire_bytes() as f64;
+        assert!(ratio > 1.7, "ratio={ratio}");
+    }
+
+    #[test]
+    fn decompress_into_matches_alloc_version() {
+        let mut rng = Rng::new(6);
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let c = CompressedValues::compress(&vals, 8);
+        let mut buf = vec![0.0f32; 64];
+        c.decompress_into(&mut buf);
+        assert_eq!(buf, c.decompress());
+    }
+}

@@ -1,0 +1,14 @@
+//! Communication substrate: zero-copy wire format, compression, transports,
+//! RPC, and the simulated network cost model.
+
+pub mod compress;
+pub mod netsim;
+pub mod rpc;
+pub mod transport;
+pub mod wire;
+
+pub use compress::{CompressedValues, IndexMap};
+pub use netsim::NetSim;
+pub use rpc::{RpcClient, RpcServer};
+pub use transport::{ChannelTransport, Transport};
+pub use wire::{WireReader, WireWriter};

@@ -1,0 +1,172 @@
+//! Request/response RPC over any [`Transport`].
+//!
+//! The paper's point-to-point traffic (NN worker <-> embedding worker,
+//! embedding worker <-> embedding PS) is RPC over the zero-copy wire format
+//! — not protobuf (§4.2.3). A server registers one handler per message kind;
+//! requests carry a correlation id so a client can pipeline.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::transport::Transport;
+
+/// Frame layout: `[corr_id u64][wire message bytes]`.
+fn frame(corr_id: u64, msg: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + msg.len());
+    out.extend_from_slice(&corr_id.to_le_bytes());
+    out.extend_from_slice(msg);
+    out
+}
+
+fn unframe(frame: &[u8]) -> anyhow::Result<(u64, &[u8])> {
+    anyhow::ensure!(frame.len() >= 8, "short rpc frame");
+    let corr = u64::from_le_bytes(frame[..8].try_into().unwrap());
+    Ok((corr, &frame[8..]))
+}
+
+/// Handler: raw wire-message bytes in, raw wire-message bytes out.
+pub type Handler = Box<dyn Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync>;
+
+/// RPC server: dispatches by the wire message's `kind` field.
+pub struct RpcServer {
+    handlers: HashMap<u32, Handler>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Default for RpcServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RpcServer {
+    pub fn new() -> Self {
+        Self { handlers: HashMap::new(), stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    pub fn register(&mut self, kind: u32, handler: Handler) -> &mut Self {
+        self.handlers.insert(kind, handler);
+        self
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve one connection until the peer disconnects or `stop` is set.
+    pub fn serve<T: Transport>(&self, transport: &T) -> anyhow::Result<()> {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let req = match transport.recv() {
+                Ok(f) => f,
+                Err(_) => return Ok(()), // disconnect = normal shutdown
+            };
+            let (corr, msg) = unframe(&req)?;
+            let kind = if msg.len() >= 8 {
+                u32::from_le_bytes(msg[4..8].try_into().unwrap())
+            } else {
+                anyhow::bail!("short wire message");
+            };
+            let resp = match self.handlers.get(&kind) {
+                Some(h) => h(msg)?,
+                None => anyhow::bail!("no handler for kind {kind}"),
+            };
+            transport.send(frame(corr, &resp))?;
+        }
+    }
+}
+
+/// RPC client over a transport (single outstanding request per call;
+/// the trainer pipelines by using one client per in-flight stream).
+pub struct RpcClient<T: Transport> {
+    transport: T,
+    next_corr: AtomicU64,
+}
+
+impl<T: Transport> RpcClient<T> {
+    pub fn new(transport: T) -> Self {
+        Self { transport, next_corr: AtomicU64::new(1) }
+    }
+
+    /// Send a wire message; block for the matching response.
+    pub fn call(&self, msg: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        self.transport.send(frame(corr, msg))?;
+        loop {
+            let resp = self.transport.recv()?;
+            let (rcorr, body) = unframe(&resp)?;
+            if rcorr == corr {
+                return Ok(body.to_vec());
+            }
+            // Out-of-order response for a different stream: ignore (callers
+            // serialize per-client, so this only happens after errors).
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::ChannelTransport;
+    use crate::comm::wire::{WireReader, WireWriter};
+
+    #[test]
+    fn echo_rpc_roundtrip() {
+        let (server_t, client_t) = ChannelTransport::pair();
+        let mut server = RpcServer::new();
+        server.register(
+            5,
+            Box::new(|msg| {
+                let r = WireReader::parse(msg)?;
+                let xs = r.f32(0)?;
+                let doubled: Vec<f32> = xs.iter().map(|x| x * 2.0).collect();
+                let mut w = WireWriter::new(5);
+                w.put_f32(&doubled);
+                Ok(w.finish())
+            }),
+        );
+        let handle = std::thread::spawn(move || server.serve(&server_t).unwrap());
+
+        let client = RpcClient::new(client_t);
+        let mut w = WireWriter::new(5);
+        w.put_f32(&[1.0, 2.0]);
+        let resp = client.call(&w.finish()).unwrap();
+        let r = WireReader::parse(&resp).unwrap();
+        assert_eq!(r.f32(0).unwrap(), vec![2.0, 4.0]);
+        drop(client);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_kind_errors_server_side() {
+        let (server_t, client_t) = ChannelTransport::pair();
+        let server = RpcServer::new();
+        let handle = std::thread::spawn(move || server.serve(&server_t));
+        let client = RpcClient::new(client_t);
+        let w = WireWriter::new(99);
+        // Server errors out and drops the connection; the call fails.
+        assert!(client.call(&w.finish()).is_err());
+        assert!(handle.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn sequential_calls_share_connection() {
+        let (server_t, client_t) = ChannelTransport::pair();
+        let mut server = RpcServer::new();
+        server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+        let handle = std::thread::spawn(move || server.serve(&server_t).unwrap());
+        let client = RpcClient::new(client_t);
+        for i in 0..10u64 {
+            let mut w = WireWriter::new(1);
+            w.put_u64(&[i]);
+            let resp = client.call(&w.finish()).unwrap();
+            let r = WireReader::parse(&resp).unwrap();
+            assert_eq!(r.u64(0).unwrap(), vec![i]);
+        }
+        drop(client);
+        handle.join().unwrap();
+    }
+}

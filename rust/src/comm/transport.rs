@@ -1,0 +1,145 @@
+//! Message transports: in-process channels (default) and TCP framing.
+//!
+//! Both carry opaque byte frames produced by [`super::wire`]. The in-process
+//! transport is the default for the simulated cluster (one OS thread per
+//! logical node); the TCP transport backs the true multi-process mode
+//! (`persia ps-server` / `persia worker`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// A bidirectional frame pipe.
+pub trait Transport: Send {
+    fn send(&self, frame: Vec<u8>) -> anyhow::Result<()>;
+    fn recv(&self) -> anyhow::Result<Vec<u8>>;
+    fn try_recv(&self) -> anyhow::Result<Option<Vec<u8>>>;
+}
+
+/// In-process transport endpoint (mpsc-backed).
+pub struct ChannelTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Mutex<Receiver<Vec<u8>>>,
+}
+
+impl ChannelTransport {
+    /// Create a connected pair of endpoints.
+    pub fn pair() -> (ChannelTransport, ChannelTransport) {
+        let (tx_a, rx_b) = channel();
+        let (tx_b, rx_a) = channel();
+        (
+            ChannelTransport { tx: tx_a, rx: Mutex::new(rx_a) },
+            ChannelTransport { tx: tx_b, rx: Mutex::new(rx_b) },
+        )
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&self, frame: Vec<u8>) -> anyhow::Result<()> {
+        self.tx.send(frame).map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    fn recv(&self) -> anyhow::Result<Vec<u8>> {
+        self.rx
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    fn try_recv(&self) -> anyhow::Result<Option<Vec<u8>>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.rx.lock().unwrap().try_recv() {
+            Ok(f) => Ok(Some(f)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => anyhow::bail!("peer disconnected"),
+        }
+    }
+}
+
+/// Length-prefixed frames over a TCP stream (u32 LE length + payload).
+pub struct TcpTransport {
+    stream: Mutex<TcpStream>,
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        Self { stream: Mutex::new(stream) }
+    }
+
+    pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        Ok(Self::new(TcpStream::connect(addr)?))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, frame: Vec<u8>) -> anyhow::Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        s.write_all(&(frame.len() as u32).to_le_bytes())?;
+        s.write_all(&frame)?;
+        Ok(())
+    }
+
+    fn recv(&self) -> anyhow::Result<Vec<u8>> {
+        let mut s = self.stream.lock().unwrap();
+        let mut len_buf = [0u8; 4];
+        s.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        anyhow::ensure!(len < 1 << 30, "oversized frame {len}");
+        let mut buf = vec![0u8; len];
+        s.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn try_recv(&self) -> anyhow::Result<Option<Vec<u8>>> {
+        // Blocking recv is fine for the TCP service loops.
+        self.recv().map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_pair_roundtrip() {
+        let (a, b) = ChannelTransport::pair();
+        a.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![1, 2, 3]);
+        b.send(vec![9]).unwrap();
+        assert_eq!(a.recv().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn channel_try_recv_nonblocking() {
+        let (a, b) = ChannelTransport::pair();
+        assert!(b.try_recv().unwrap().is_none());
+        a.send(vec![7]).unwrap();
+        assert_eq!(b.try_recv().unwrap(), Some(vec![7]));
+    }
+
+    #[test]
+    fn channel_disconnect_is_error() {
+        let (a, b) = ChannelTransport::pair();
+        drop(b);
+        assert!(a.send(vec![0]).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::new(stream);
+            let frame = t.recv().unwrap();
+            t.send(frame.iter().rev().cloned().collect()).unwrap();
+        });
+        let client = TcpTransport::connect(&addr.to_string()).unwrap();
+        client.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(client.recv().unwrap(), vec![3, 2, 1]);
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,349 @@
+//! Zero-copy tensor wire format (paper §4.2.3, "Optimized remote procedure
+//! call").
+//!
+//! Persia abandons protobuf-style serialization because the payloads are
+//! tensors in large contiguous buffers: the wire format here is a flat header
+//! (tag + section lengths) followed by the raw little-endian bytes of each
+//! section, so encoding f32/u64/u16 slices is a single `memcpy` each —
+//! no per-element branching, no intermediate objects. Decoding returns
+//! borrowed slices wherever alignment permits.
+
+/// Section type tags (purely diagnostic; layout is positional).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SectionTag {
+    F32 = 1,
+    U64 = 2,
+    U16 = 3,
+    U8 = 4,
+    F16 = 5,
+}
+
+impl SectionTag {
+    fn from_u8(x: u8) -> Option<Self> {
+        Some(match x {
+            1 => SectionTag::F32,
+            2 => SectionTag::U64,
+            3 => SectionTag::U16,
+            4 => SectionTag::U8,
+            5 => SectionTag::F16,
+            _ => return None,
+        })
+    }
+
+    fn elem_size(self) -> usize {
+        match self {
+            SectionTag::F32 => 4,
+            SectionTag::U64 => 8,
+            SectionTag::U16 | SectionTag::F16 => 2,
+            SectionTag::U8 => 1,
+        }
+    }
+}
+
+/// Message writer: appends typed sections into one contiguous buffer.
+///
+/// Layout: `[magic u32][msg_kind u32][n_sections u32]` then per section
+/// `[tag u8][pad 3][len_elems u64]`, then all payloads back to back, each
+/// 8-byte aligned.
+pub struct WireWriter {
+    buf: Vec<u8>,
+    sections: Vec<(SectionTag, usize, usize)>, // tag, offset, elems
+    kind: u32,
+}
+
+const MAGIC: u32 = 0x5045_5253; // "PERS"
+
+impl WireWriter {
+    pub fn new(kind: u32) -> Self {
+        Self { buf: Vec::new(), sections: Vec::new(), kind }
+    }
+
+    /// Reuse an allocation from a previous message (hot-path, alloc-free).
+    pub fn reset(&mut self, kind: u32) {
+        self.buf.clear();
+        self.sections.clear();
+        self.kind = kind;
+    }
+
+    fn align8(&mut self) {
+        while self.buf.len() % 8 != 0 {
+            self.buf.push(0);
+        }
+    }
+
+    fn push_raw(&mut self, tag: SectionTag, bytes: &[u8], elems: usize) {
+        self.align8();
+        let off = self.buf.len();
+        self.buf.extend_from_slice(bytes);
+        self.sections.push((tag, off, elems));
+    }
+
+    pub fn put_f32(&mut self, xs: &[f32]) -> &mut Self {
+        // SAFETY: f32 -> bytes reinterpret; little-endian on all targets here.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+        };
+        self.push_raw(SectionTag::F32, bytes, xs.len());
+        self
+    }
+
+    pub fn put_u64(&mut self, xs: &[u64]) -> &mut Self {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8)
+        };
+        self.push_raw(SectionTag::U64, bytes, xs.len());
+        self
+    }
+
+    pub fn put_u16(&mut self, xs: &[u16]) -> &mut Self {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2)
+        };
+        self.push_raw(SectionTag::U16, bytes, xs.len());
+        self
+    }
+
+    pub fn put_f16(&mut self, xs: &[u16]) -> &mut Self {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 2)
+        };
+        self.push_raw(SectionTag::F16, bytes, xs.len());
+        self
+    }
+
+    pub fn put_u8(&mut self, xs: &[u8]) -> &mut Self {
+        self.push_raw(SectionTag::U8, xs, xs.len());
+        self
+    }
+
+    /// Assemble the final message bytes.
+    pub fn finish(&self) -> Vec<u8> {
+        let header_len = 12 + self.sections.len() * 12;
+        let payload_base = (header_len + 7) / 8 * 8;
+        let mut out = Vec::with_capacity(payload_base + self.buf.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&self.kind.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for &(tag, off, elems) in &self.sections {
+            out.push(tag as u8);
+            out.extend_from_slice(&[0u8; 3]);
+            out.extend_from_slice(&((payload_base + off) as u32).to_le_bytes());
+            out.extend_from_slice(&(elems as u32).to_le_bytes());
+        }
+        while out.len() < payload_base {
+            out.push(0);
+        }
+        out.extend_from_slice(&self.buf);
+        out
+    }
+}
+
+/// Message reader over a received byte buffer.
+pub struct WireReader<'a> {
+    data: &'a [u8],
+    sections: Vec<(SectionTag, usize, usize)>, // tag, byte offset, elems
+    kind: u32,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn parse(data: &'a [u8]) -> anyhow::Result<Self> {
+        use anyhow::bail;
+        if data.len() < 12 {
+            bail!("short message ({} bytes)", data.len());
+        }
+        let magic = u32::from_le_bytes(data[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let kind = u32::from_le_bytes(data[4..8].try_into().unwrap());
+        let n = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        let mut sections = Vec::with_capacity(n);
+        let mut p = 12;
+        for _ in 0..n {
+            if p + 12 > data.len() {
+                bail!("truncated section table");
+            }
+            let tag = SectionTag::from_u8(data[p]).ok_or_else(|| anyhow::anyhow!("bad tag"))?;
+            let off = u32::from_le_bytes(data[p + 4..p + 8].try_into().unwrap()) as usize;
+            let elems = u32::from_le_bytes(data[p + 8..p + 12].try_into().unwrap()) as usize;
+            if off + elems * tag.elem_size() > data.len() {
+                bail!("section out of bounds");
+            }
+            sections.push((tag, off, elems));
+            p += 12;
+        }
+        Ok(Self { data, sections, kind })
+    }
+
+    pub fn kind(&self) -> u32 {
+        self.kind
+    }
+
+    pub fn n_sections(&self) -> usize {
+        self.sections.len()
+    }
+
+    fn section(&self, i: usize, want: SectionTag) -> anyhow::Result<(usize, usize)> {
+        let &(tag, off, elems) = self
+            .sections
+            .get(i)
+            .ok_or_else(|| anyhow::anyhow!("no section {i}"))?;
+        if tag != want {
+            anyhow::bail!("section {i}: expected {want:?}, got {tag:?}");
+        }
+        Ok((off, elems))
+    }
+
+    /// Borrow section `i` as f32s (zero-copy when aligned, else copies).
+    pub fn f32(&self, i: usize) -> anyhow::Result<Vec<f32>> {
+        let (off, elems) = self.section(i, SectionTag::F32)?;
+        let bytes = &self.data[off..off + elems * 4];
+        let mut out = vec![0f32; elems];
+        // SAFETY: lengths match; copy handles any alignment.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        Ok(out)
+    }
+
+    /// Zero-copy borrow of section `i` as f32 slice; requires 4-alignment
+    /// (guaranteed by WireWriter's 8-byte section alignment).
+    pub fn f32_borrowed(&self, i: usize) -> anyhow::Result<&'a [f32]> {
+        let (off, elems) = self.section(i, SectionTag::F32)?;
+        let ptr = self.data[off..].as_ptr();
+        anyhow::ensure!(ptr as usize % 4 == 0, "unaligned f32 section");
+        Ok(unsafe { std::slice::from_raw_parts(ptr as *const f32, elems) })
+    }
+
+    pub fn u64(&self, i: usize) -> anyhow::Result<Vec<u64>> {
+        let (off, elems) = self.section(i, SectionTag::U64)?;
+        let mut out = vec![0u64; elems];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data[off..].as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                elems * 8,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn u16(&self, i: usize) -> anyhow::Result<Vec<u16>> {
+        let (off, elems) = self.section(i, SectionTag::U16)?;
+        let mut out = vec![0u16; elems];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data[off..].as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                elems * 2,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn f16(&self, i: usize) -> anyhow::Result<Vec<u16>> {
+        let (off, elems) = self.section(i, SectionTag::F16)?;
+        let mut out = vec![0u16; elems];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data[off..].as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                elems * 2,
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn u8(&self, i: usize) -> anyhow::Result<&'a [u8]> {
+        let (off, elems) = self.section(i, SectionTag::U8)?;
+        Ok(&self.data[off..off + elems])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, gen_f32_vec};
+
+    #[test]
+    fn roundtrip_mixed_sections() {
+        let mut w = WireWriter::new(7);
+        w.put_f32(&[1.5, -2.5, 3.25])
+            .put_u64(&[42, u64::MAX])
+            .put_u16(&[1, 2, 3])
+            .put_u8(b"hello");
+        let msg = w.finish();
+        let r = WireReader::parse(&msg).unwrap();
+        assert_eq!(r.kind(), 7);
+        assert_eq!(r.n_sections(), 4);
+        assert_eq!(r.f32(0).unwrap(), vec![1.5, -2.5, 3.25]);
+        assert_eq!(r.u64(1).unwrap(), vec![42, u64::MAX]);
+        assert_eq!(r.u16(2).unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.u8(3).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn zero_copy_borrow_works() {
+        let mut w = WireWriter::new(1);
+        w.put_f32(&[9.0, 8.0, 7.0]);
+        let msg = w.finish();
+        let r = WireReader::parse(&msg).unwrap();
+        assert_eq!(r.f32_borrowed(0).unwrap(), &[9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn wrong_tag_rejected() {
+        let mut w = WireWriter::new(1);
+        w.put_f32(&[1.0]);
+        let msg = w.finish();
+        let r = WireReader::parse(&msg).unwrap();
+        assert!(r.u64(0).is_err());
+        assert!(r.f32(1).is_err());
+    }
+
+    #[test]
+    fn corrupt_messages_rejected_not_panicking() {
+        assert!(WireReader::parse(&[]).is_err());
+        assert!(WireReader::parse(&[0u8; 11]).is_err());
+        let mut w = WireWriter::new(1);
+        w.put_f32(&[1.0, 2.0]);
+        let mut msg = w.finish();
+        msg[0] ^= 0xff; // break magic
+        assert!(WireReader::parse(&msg).is_err());
+        let mut w = WireWriter::new(1);
+        w.put_f32(&[1.0, 2.0]);
+        let mut msg2 = w.finish();
+        let len = msg2.len();
+        msg2.truncate(len - 4); // truncate payload
+        assert!(WireReader::parse(&msg2).is_err());
+    }
+
+    #[test]
+    fn property_f32_roundtrip_bit_exact() {
+        forall(21, 200, gen_f32_vec(256, 1e6), |xs| {
+            let mut w = WireWriter::new(0);
+            w.put_f32(xs);
+            let msg = w.finish();
+            let r = WireReader::parse(&msg).unwrap();
+            r.f32(0).unwrap() == *xs
+        });
+    }
+
+    #[test]
+    fn writer_reset_reuses_allocation() {
+        let mut w = WireWriter::new(1);
+        w.put_f32(&vec![1.0; 1024]);
+        let _ = w.finish();
+        w.reset(2);
+        w.put_u64(&[5]);
+        let msg = w.finish();
+        let r = WireReader::parse(&msg).unwrap();
+        assert_eq!(r.kind(), 2);
+        assert_eq!(r.u64(0).unwrap(), vec![5]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Typed configuration + the paper's Table-1 benchmark presets.
+
+pub mod parse;
+pub mod presets;
+pub mod types;
+
+pub use parse::IniDoc;
+pub use presets::{BenchPreset, PRESET_NAMES};
+pub use types::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, TrainConfig, TrainMode,
+};

@@ -1,0 +1,192 @@
+//! Minimal INI/TOML-subset parser (serde/toml unavailable offline).
+//!
+//! Grammar: `[section]` headers, `key = value` pairs, `#` comments. Values
+//! are accessed typed (`get_u64`, `get_f64`, `get_str`, `get_usize_list`).
+//! Used for the AOT artifact manifest and for user config files.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed document: section -> key -> raw string value.
+#[derive(Clone, Debug, Default)]
+pub struct IniDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl IniDoc {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = IniDoc::default();
+        let mut current = String::new(); // "" = top-level section
+        doc.sections.insert(String::new(), BTreeMap::new());
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            doc.sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(doc)
+    }
+
+    /// Parse a file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<&str> {
+        self.sections
+            .get(section)
+            .and_then(|kv| kv.get(key))
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing [{section}] {key}"))
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<u64> {
+        let s = self.get_str(section, key)?;
+        s.replace('_', "").parse().with_context(|| format!("[{section}] {key} = {s}: not a u64"))
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<usize> {
+        Ok(self.get_u64(section, key)? as usize)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<f64> {
+        let s = self.get_str(section, key)?;
+        s.parse().with_context(|| format!("[{section}] {key} = {s}: not a f64"))
+    }
+
+    /// Comma-separated usize list (e.g. `dims = 40,32,16,1`).
+    pub fn get_usize_list(&self, section: &str, key: &str) -> Result<Vec<usize>> {
+        let s = self.get_str(section, key)?;
+        s.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("[{section}] {key}: bad element {t:?}"))
+            })
+            .collect()
+    }
+
+    /// Optional string lookup.
+    pub fn get_opt(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|kv| kv.get(key)).map(|s| s.as_str())
+    }
+
+    /// Set a value (used by tests and config synthesis).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    /// Serialize back to text.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (name, kv) in &self.sections {
+            if kv.is_empty() && name.is_empty() {
+                continue;
+            }
+            if !name.is_empty() {
+                out.push_str(&format!("[{name}]\n"));
+            }
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Validate that a string is a known artifact preset name.
+pub fn validate_preset_name(name: &str) -> Result<()> {
+    match name {
+        "tiny" | "small" | "paper" => Ok(()),
+        _ => bail!("unknown artifact preset {name:?} (tiny|small|paper)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# comment
+top = 1
+
+[model]
+name = "tiny"
+dims = 40, 32, 16, 1
+lr = 0.05
+big = 781_250_000_000
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = IniDoc::parse(DOC).unwrap();
+        assert_eq!(doc.get_u64("", "top").unwrap(), 1);
+        assert_eq!(doc.get_str("model", "name").unwrap(), "tiny");
+        assert_eq!(doc.get_usize_list("model", "dims").unwrap(), vec![40, 32, 16, 1]);
+        assert!((doc.get_f64("model", "lr").unwrap() - 0.05).abs() < 1e-12);
+        assert_eq!(doc.get_u64("model", "big").unwrap(), 781_250_000_000);
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        let doc = IniDoc::parse(DOC).unwrap();
+        assert!(doc.get_str("model", "nope").is_err());
+        assert!(doc.get_str("nosection", "x").is_err());
+        assert!(doc.get_opt("model", "nope").is_none());
+    }
+
+    #[test]
+    fn bad_syntax_errors() {
+        assert!(IniDoc::parse("[unterminated").is_err());
+        assert!(IniDoc::parse("no equals sign here").is_err());
+    }
+
+    #[test]
+    fn roundtrip_text() {
+        let mut doc = IniDoc::default();
+        doc.set("a", "x", "1");
+        doc.set("a", "y", "2");
+        let text = doc.to_text();
+        let doc2 = IniDoc::parse(&text).unwrap();
+        assert_eq!(doc2.get_u64("a", "x").unwrap(), 1);
+        assert_eq!(doc2.get_u64("a", "y").unwrap(), 2);
+    }
+
+    #[test]
+    fn preset_name_validation() {
+        assert!(validate_preset_name("tiny").is_ok());
+        assert!(validate_preset_name("huge").is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Benchmark presets mirroring the paper's Table 1 model scales.
+//!
+//! | benchmark   | sparse params | dense params |
+//! |-------------|---------------|--------------|
+//! | Taobao-Ad   | 29 M          | 12 M         |
+//! | Avazu-Ad    | 134 M         | 12 M         |
+//! | Criteo-Ad   | 540 M         | 12 M         |
+//! | Kwai-Video  | 2 T           | 34 M         |
+//! | Criteo-Syn1 | 6.25 T        | 12 M         |
+//! | Criteo-Syn2 | 12.5 T        | 12 M         |
+//! | Criteo-Syn3 | 25 T          | 12 M         |
+//! | Criteo-Syn4 | 50 T          | 12 M         |
+//! | Criteo-Syn5 | 100 T         | 12 M         |
+//!
+//! The sparse side is *virtual* (rows materialize on first access — see
+//! DESIGN.md substitutions); the dense side runs the `small` artifact by
+//! default for wallclock reasons and the `paper` (~12 M dense) artifact when
+//! `--dense paper` is requested.
+
+use super::types::*;
+
+/// One Table-1 row plus the workload knobs the experiments need.
+#[derive(Clone, Debug)]
+pub struct BenchPreset {
+    pub name: &'static str,
+    /// Paper-reported sparse (embedding) parameter count.
+    pub sparse_params: u128,
+    /// Paper-reported dense parameter count.
+    pub dense_params_paper: u64,
+    /// Records in the real dataset (drives synthetic stream length ratios).
+    pub records: u64,
+    /// Zipf skew of the synthetic ID traffic.
+    pub zipf_exponent: f64,
+    /// Target test AUC for time-to-AUC runs (paper Fig. 6 / Table 2 scale).
+    pub target_auc: f64,
+}
+
+pub const PRESET_NAMES: [&str; 9] = [
+    "taobao", "avazu", "criteo", "kwai", "criteo-syn1", "criteo-syn2", "criteo-syn3",
+    "criteo-syn4", "criteo-syn5",
+];
+
+impl BenchPreset {
+    /// Look up a preset by name.
+    pub fn by_name(name: &str) -> Option<BenchPreset> {
+        let p = |name, sparse, dense, records, zipf, auc| BenchPreset {
+            name,
+            sparse_params: sparse,
+            dense_params_paper: dense,
+            records,
+            zipf_exponent: zipf,
+            target_auc: auc,
+        };
+        Some(match name {
+            "taobao" => p("taobao", 29_000_000, 12_000_000, 26_000_000, 1.05, 0.63),
+            "avazu" => p("avazu", 134_000_000, 12_000_000, 32_000_000, 1.05, 0.62),
+            "criteo" => p("criteo", 540_000_000, 12_000_000, 44_000_000, 1.05, 0.66),
+            "kwai" => p("kwai", 2_000_000_000_000, 34_000_000, 3_000_000_000, 1.1, 0.66),
+            "criteo-syn1" => p("criteo-syn1", 6_250_000_000_000, 12_000_000, 44_000_000, 1.05, 0.0),
+            "criteo-syn2" => p("criteo-syn2", 12_500_000_000_000, 12_000_000, 44_000_000, 1.05, 0.0),
+            "criteo-syn3" => p("criteo-syn3", 25_000_000_000_000, 12_000_000, 44_000_000, 1.05, 0.0),
+            "criteo-syn4" => p("criteo-syn4", 50_000_000_000_000, 12_000_000, 44_000_000, 1.05, 0.0),
+            "criteo-syn5" => p("criteo-syn5", 100_000_000_000_000, 12_000_000, 44_000_000, 1.05, 0.0),
+            _ => return None,
+        })
+    }
+
+    /// All presets in Table-1 order.
+    pub fn all() -> Vec<BenchPreset> {
+        PRESET_NAMES.iter().map(|n| Self::by_name(n).unwrap()).collect()
+    }
+
+    /// The capacity-sweep subset (Fig. 9): criteo-syn1..5.
+    pub fn capacity_sweep() -> Vec<BenchPreset> {
+        PRESET_NAMES[4..].iter().map(|n| Self::by_name(n).unwrap()).collect()
+    }
+
+    /// The convergence subset (Fig. 6/7, Table 2): the four real benchmarks.
+    pub fn convergence_set() -> Vec<BenchPreset> {
+        PRESET_NAMES[..4].iter().map(|n| Self::by_name(n).unwrap()).collect()
+    }
+
+    /// Runnable model geometry. `dense`: "tiny" | "small" | "paper"
+    /// (must match an AOT artifact preset).
+    pub fn model(&self, dense: &str) -> ModelConfig {
+        let (n_groups, dim, nid, hidden, ids) = match dense {
+            "tiny" => (4, 8, 8, vec![32, 16], 4),
+            "small" => (8, 16, 16, vec![256, 128, 64], 8),
+            // ~12M dense params: hidden 4096/2048/1024/512/256 (paper FFNN).
+            "paper" => (8, 16, 64, vec![4096, 2048, 1024, 512, 256], 8),
+            other => panic!("unknown dense preset {other:?}"),
+        };
+        ModelConfig {
+            artifact_preset: dense.to_string(),
+            n_groups,
+            emb_dim_per_group: dim,
+            nid_dim: nid,
+            hidden,
+            ids_per_group: ids,
+            pooling: Pooling::Sum,
+        }
+    }
+
+    /// Embedding storage config: virtual rows sized so that
+    /// `rows_per_group * n_groups * dim == sparse_params` of this preset.
+    pub fn embedding(&self, model: &ModelConfig, shard_capacity: usize) -> EmbeddingConfig {
+        let denom = (model.n_groups * model.emb_dim_per_group) as u128;
+        let rows = (self.sparse_params / denom).max(1) as u64;
+        EmbeddingConfig {
+            rows_per_group: rows,
+            shard_capacity,
+            n_nodes: 4,
+            shards_per_node: 4,
+            optimizer: OptimizerKind::Adagrad,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_resolves() {
+        for name in PRESET_NAMES {
+            let p = BenchPreset::by_name(name).unwrap();
+            assert_eq!(p.name, name);
+        }
+        assert!(BenchPreset::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn table1_scales_match_paper() {
+        assert_eq!(BenchPreset::by_name("taobao").unwrap().sparse_params, 29_000_000);
+        assert_eq!(BenchPreset::by_name("kwai").unwrap().sparse_params, 2_000_000_000_000);
+        assert_eq!(
+            BenchPreset::by_name("criteo-syn5").unwrap().sparse_params,
+            100_000_000_000_000
+        );
+        assert_eq!(BenchPreset::by_name("kwai").unwrap().dense_params_paper, 34_000_000);
+    }
+
+    #[test]
+    fn virtual_rows_reconstruct_sparse_params() {
+        for p in BenchPreset::all() {
+            let m = p.model("small");
+            let e = p.embedding(&m, 1000);
+            let virt = e.virtual_params(&m);
+            // Integer division loses < one row's worth per group.
+            let err = p.sparse_params.abs_diff(virt);
+            assert!(err < (m.n_groups * m.emb_dim_per_group) as u128 * 2);
+        }
+    }
+
+    #[test]
+    fn paper_dense_preset_is_about_12m() {
+        let m = BenchPreset::by_name("criteo").unwrap().model("paper");
+        let n = m.dense_param_count();
+        assert!(n > 11_000_000 && n < 13_000_000, "{n}");
+    }
+
+    #[test]
+    fn sweep_subsets() {
+        assert_eq!(BenchPreset::capacity_sweep().len(), 5);
+        assert_eq!(BenchPreset::convergence_set().len(), 4);
+    }
+}

@@ -1,0 +1,324 @@
+//! Configuration types for model, embedding storage, cluster and training.
+
+use anyhow::{bail, Result};
+
+/// Pooling applied by embedding workers per feature group (paper §4.1 (4)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pooling {
+    Sum,
+    Mean,
+}
+
+/// Row-wise optimizer for the embedding PS (paper Alg. 1's Ω^emb).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adagrad,
+    Adam,
+}
+
+/// How embedding rows are placed across PS nodes (paper §4.2.3,
+/// "Workload balance of embedding PS").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Naive: each feature group owned by a sub-group of PS nodes. Congests
+    /// under skewed traffic — kept as the ablation baseline.
+    FeatureGroup,
+    /// Persia's fix: ids shuffled (hashed) uniformly across all PS nodes.
+    ShuffledUniform,
+}
+
+/// Training synchronization mode (paper Fig. 3 right, 4 Gantt rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// Fully synchronous (XDL-sync-like): all five stages sequential.
+    FullSync,
+    /// Fully asynchronous (XDL-async-like): no barriers, unbounded staleness,
+    /// dense updates drift across workers too.
+    FullAsync,
+    /// Persia: async embeddings (bounded staleness) + sync dense AllReduce,
+    /// without overlap of the dense sync with backward ("raw hybrid").
+    HybridRaw,
+    /// Persia + overlapping dense AllReduce with backward computation
+    /// ("optimized hybrid", the shipping configuration).
+    Hybrid,
+}
+
+impl TrainMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sync" | "full-sync" => TrainMode::FullSync,
+            "async" | "full-async" => TrainMode::FullAsync,
+            "hybrid-raw" => TrainMode::HybridRaw,
+            "hybrid" => TrainMode::Hybrid,
+            _ => bail!("unknown train mode: {s} (sync|async|hybrid-raw|hybrid)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainMode::FullSync => "sync",
+            TrainMode::FullAsync => "async",
+            TrainMode::HybridRaw => "hybrid-raw",
+            TrainMode::Hybrid => "hybrid",
+        }
+    }
+
+    pub const ALL: [TrainMode; 4] =
+        [TrainMode::FullSync, TrainMode::FullAsync, TrainMode::HybridRaw, TrainMode::Hybrid];
+}
+
+/// Dense-tower + feature geometry. Must agree with an AOT artifact preset
+/// (artifacts/manifest.txt) when the PJRT path is used.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Name of the AOT preset this maps to ("tiny" | "small" | "paper").
+    pub artifact_preset: String,
+    /// Number of ID feature groups (VideoIDs, LocIDs, ... in §2.1).
+    pub n_groups: usize,
+    /// Embedding dimension per group.
+    pub emb_dim_per_group: usize,
+    /// Non-ID dense feature dimension.
+    pub nid_dim: usize,
+    /// Hidden layer widths of the FFNN tower.
+    pub hidden: Vec<usize>,
+    /// IDs per feature group per sample (bag size before pooling).
+    pub ids_per_group: usize,
+    pub pooling: Pooling,
+}
+
+impl ModelConfig {
+    pub fn emb_dim(&self) -> usize {
+        self.n_groups * self.emb_dim_per_group
+    }
+
+    /// Layer dims including input and output: [in, hidden..., 1].
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.emb_dim() + self.nid_dim];
+        d.extend_from_slice(&self.hidden);
+        d.push(1);
+        d
+    }
+
+    pub fn dense_param_count(&self) -> usize {
+        let d = self.dims();
+        (0..d.len() - 1).map(|i| d[i] * d[i + 1] + d[i + 1]).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_groups == 0 || self.emb_dim_per_group == 0 {
+            bail!("embedding geometry must be non-zero");
+        }
+        if self.hidden.is_empty() {
+            bail!("need at least one hidden layer");
+        }
+        if self.ids_per_group == 0 {
+            bail!("ids_per_group must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Embedding-PS storage geometry.
+#[derive(Clone, Debug)]
+pub struct EmbeddingConfig {
+    /// Virtual rows per feature group (can be in the trillions; rows are
+    /// materialized on first access — the 100T capacity substitution).
+    pub rows_per_group: u64,
+    /// Physical LRU capacity (rows) per shard; beyond this, LRU eviction.
+    pub shard_capacity: usize,
+    /// PS node count.
+    pub n_nodes: usize,
+    /// Lock-striped sub-shards per node (paper: one thread per sub-map).
+    pub shards_per_node: usize,
+    pub optimizer: OptimizerKind,
+    pub partition: PartitionPolicy,
+    /// Row-wise learning rate for the embedding optimizer.
+    pub lr: f32,
+}
+
+impl EmbeddingConfig {
+    /// Total virtual sparse parameter count for a model config.
+    pub fn virtual_params(&self, model: &ModelConfig) -> u128 {
+        self.rows_per_group as u128
+            * model.n_groups as u128
+            * model.emb_dim_per_group as u128
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_nodes == 0 || self.shards_per_node == 0 {
+            bail!("need >=1 PS node and shard");
+        }
+        if self.shard_capacity == 0 {
+            bail!("shard_capacity must be positive");
+        }
+        if self.rows_per_group == 0 {
+            bail!("rows_per_group must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Simulated network cost model (see DESIGN.md substitutions). All zero =
+/// no injected costs (pure in-process speed).
+#[derive(Clone, Copy, Debug)]
+pub struct NetModelConfig {
+    /// GPU<->GPU AllReduce bandwidth (bytes/s) — GPUDirect-class links.
+    pub gpu_gpu_bw: f64,
+    /// CPU<->GPU link bandwidth (bytes/s) — PCIe/Ethernet-class (paper: 10x slower).
+    pub cpu_gpu_bw: f64,
+    /// Per-message latency (seconds).
+    pub latency_s: f64,
+}
+
+impl NetModelConfig {
+    pub fn disabled() -> Self {
+        Self { gpu_gpu_bw: 0.0, cpu_gpu_bw: 0.0, latency_s: 0.0 }
+    }
+
+    /// Defaults mirroring the paper's production cluster ratios
+    /// (100 Gbps fabric; GPU-GPU 10x the CPU-GPU effective bandwidth),
+    /// scaled down so simulated time structure is visible at laptop scale.
+    pub fn paper_like() -> Self {
+        Self { gpu_gpu_bw: 12.5e9, cpu_gpu_bw: 1.25e9, latency_s: 50e-6 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.gpu_gpu_bw > 0.0 || self.cpu_gpu_bw > 0.0 || self.latency_s > 0.0
+    }
+}
+
+/// Cluster geometry: how many logical nodes of each role.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub n_nn_workers: usize,
+    pub n_emb_workers: usize,
+    pub net: NetModelConfig,
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.n_nn_workers == 0 || self.n_emb_workers == 0 {
+            bail!("need >=1 NN worker and >=1 embedding worker");
+        }
+        Ok(())
+    }
+}
+
+/// Training loop parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub mode: TrainMode,
+    pub batch_size: usize,
+    /// Dense-side learning rate.
+    pub lr: f32,
+    /// Bounded staleness τ for the hybrid mode (papers says τ < 5 typical).
+    pub staleness_bound: usize,
+    pub steps: usize,
+    /// Evaluate test AUC every this many steps (0 = never).
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Use the PJRT artifact for dense compute (else pure-Rust tower).
+    pub use_pjrt: bool,
+    /// Compress embedding/gradient traffic (paper §4.2.3).
+    pub compress: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            mode: TrainMode::Hybrid,
+            batch_size: 32,
+            lr: 0.05,
+            staleness_bound: 4,
+            steps: 200,
+            eval_every: 0,
+            seed: 42,
+            use_pjrt: false,
+            compress: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 || self.steps == 0 {
+            bail!("batch_size and steps must be positive");
+        }
+        // Paper §4.2.3: uint16 sample indices require batch <= 65535.
+        if self.batch_size > 65535 {
+            bail!("batch_size must be <= 65535 (uint16 index compression)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelConfig {
+        ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 4,
+            emb_dim_per_group: 8,
+            nid_dim: 8,
+            hidden: vec![32, 16],
+            ids_per_group: 4,
+            pooling: Pooling::Sum,
+        }
+    }
+
+    #[test]
+    fn dims_and_param_count() {
+        let m = model();
+        assert_eq!(m.emb_dim(), 32);
+        assert_eq!(m.dims(), vec![40, 32, 16, 1]);
+        assert_eq!(m.dense_param_count(), 40 * 32 + 32 + 32 * 16 + 16 + 16 + 1);
+    }
+
+    #[test]
+    fn virtual_params_hits_100t() {
+        let m = ModelConfig { n_groups: 8, emb_dim_per_group: 16, ..model() };
+        // 100T total => rows_per_group = 100e12 / (8*16)
+        let e = EmbeddingConfig {
+            rows_per_group: 781_250_000_000,
+            shard_capacity: 1000,
+            n_nodes: 30,
+            shards_per_node: 8,
+            optimizer: OptimizerKind::Adagrad,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.05,
+        };
+        assert_eq!(e.virtual_params(&m), 100_000_000_000_000u128);
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in TrainMode::ALL {
+            assert_eq!(TrainMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(TrainMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut m = model();
+        m.hidden.clear();
+        assert!(m.validate().is_err());
+        let mut t = TrainConfig::default();
+        t.batch_size = 70_000;
+        assert!(t.validate().is_err());
+        let c = ClusterConfig { n_nn_workers: 0, n_emb_workers: 1, net: NetModelConfig::disabled() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn netmodel_flags() {
+        assert!(!NetModelConfig::disabled().enabled());
+        assert!(NetModelConfig::paper_like().enabled());
+        // Paper: GPU-GPU links ~10x CPU-GPU.
+        let n = NetModelConfig::paper_like();
+        assert!((n.gpu_gpu_bw / n.cpu_gpu_bw - 10.0).abs() < 1e-6);
+    }
+}

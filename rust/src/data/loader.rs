@@ -1,0 +1,134 @@
+//! Streaming data loader (paper Fig. 4's "data loader" component).
+//!
+//! A background thread generates the online sample stream and feeds a bounded
+//! channel — the backpressure boundary between ingestion and the workers. In
+//! the paper the loader fronts Hadoop/Kafka; here it fronts the synthetic
+//! generator (same interface, DESIGN.md substitutions). Fault tolerance per
+//! §4.2.4: the loader has no recovery state of its own — restarting it simply
+//! resumes the stream.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use super::sample::Batch;
+use super::synthetic::SyntheticDataset;
+
+/// Handle to a running loader thread delivering batches.
+pub struct StreamLoader {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+    stop: SyncSender<()>,
+}
+
+impl StreamLoader {
+    /// Spawn a loader producing `batch_size`-sized batches; `depth` bounds
+    /// the in-flight queue (backpressure). `worker_stream` decorrelates
+    /// multiple loaders.
+    pub fn spawn(
+        dataset: SyntheticDataset,
+        batch_size: usize,
+        depth: usize,
+        worker_stream: u64,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<Batch>(depth);
+        let (stop_tx, stop_rx) = sync_channel::<()>(1);
+        let handle = std::thread::Builder::new()
+            .name(format!("data-loader-{worker_stream}"))
+            .spawn(move || {
+                let mut rng = dataset.train_rng(worker_stream);
+                loop {
+                    if stop_rx.try_recv().is_ok() {
+                        return;
+                    }
+                    let batch = dataset.batch(&mut rng, batch_size);
+                    // Block while downstream is full (backpressure), but keep
+                    // polling the stop signal so shutdown is prompt.
+                    let mut pending = batch;
+                    loop {
+                        match tx.try_send(pending) {
+                            Ok(()) => break,
+                            Err(TrySendError::Full(b)) => {
+                                pending = b;
+                                if stop_rx.try_recv().is_ok() {
+                                    return;
+                                }
+                                std::thread::sleep(std::time::Duration::from_micros(50));
+                            }
+                            Err(TrySendError::Disconnected(_)) => return,
+                        }
+                    }
+                }
+            })
+            .expect("spawn data loader");
+        Self { rx, handle: Some(handle), stop: stop_tx }
+    }
+
+    /// Blocking fetch of the next batch.
+    pub fn next_batch(&self) -> Batch {
+        self.rx.recv().expect("loader thread alive")
+    }
+
+    /// Non-blocking fetch.
+    pub fn try_next(&self) -> Option<Batch> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl Drop for StreamLoader {
+    fn drop(&mut self) {
+        let _ = self.stop.try_send(());
+        // Drain so a blocked sender can observe the stop signal.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, Pooling};
+
+    fn dataset() -> SyntheticDataset {
+        let m = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        SyntheticDataset::new(&m, 1000, 1.05, 11)
+    }
+
+    #[test]
+    fn delivers_batches_of_requested_size() {
+        let loader = StreamLoader::spawn(dataset(), 16, 4, 0);
+        for _ in 0..5 {
+            let b = loader.next_batch();
+            assert_eq!(b.len(), 16);
+            assert_eq!(b.nid_dim, 4);
+        }
+    }
+
+    #[test]
+    fn stream_matches_direct_generation() {
+        let ds = dataset();
+        let loader = StreamLoader::spawn(ds.clone(), 8, 2, 3);
+        let got = loader.next_batch();
+        let want = ds.batch(&mut ds.train_rng(3), 8);
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.ids, want.ids);
+    }
+
+    #[test]
+    fn shutdown_is_prompt() {
+        let loader = StreamLoader::spawn(dataset(), 1024, 1, 0);
+        let _ = loader.next_batch();
+        let t0 = std::time::Instant::now();
+        drop(loader);
+        assert!(t0.elapsed().as_secs_f64() < 2.0);
+    }
+}

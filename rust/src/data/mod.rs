@@ -1,0 +1,9 @@
+//! Training data: sample types, synthetic CTR generation, streaming loader.
+
+pub mod loader;
+pub mod sample;
+pub mod synthetic;
+
+pub use loader::StreamLoader;
+pub use sample::{Batch, IdFeatures, Sample, SampleId};
+pub use synthetic::SyntheticDataset;

@@ -1,0 +1,136 @@
+//! Sample and batch types (paper §2.1: [x_ID, x_NID, y]).
+
+/// Unique sample id minted by an embedding worker. Per the paper's footnote 3
+/// the top byte encodes the rank of the embedding worker that generated it,
+/// so any component can route a gradient back to the right buffer.
+pub type SampleId = u64;
+
+/// Pack a worker rank + a locally unique counter into a [`SampleId`].
+#[inline]
+pub fn make_sample_id(worker_rank: u8, counter: u64) -> SampleId {
+    ((worker_rank as u64) << 56) | (counter & 0x00ff_ffff_ffff_ffff)
+}
+
+/// Extract the embedding-worker rank from a [`SampleId`].
+#[inline]
+pub fn sample_id_rank(id: SampleId) -> u8 {
+    (id >> 56) as u8
+}
+
+/// ID-type features: one id list per feature group
+/// (`x_ID = [<VideoIDs>, <LocIDs>, ...]` in §2.1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IdFeatures {
+    /// `groups[g]` = the ids of feature group `g` present in this sample.
+    pub groups: Vec<Vec<u64>>,
+}
+
+impl IdFeatures {
+    pub fn n_ids(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// One complete training sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub ids: IdFeatures,
+    /// Non-ID dense features.
+    pub nid: Vec<f32>,
+    /// Binary label (CTR click).
+    pub label: f32,
+}
+
+/// A mini-batch in struct-of-arrays layout (what the NN worker assembles).
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub ids: Vec<IdFeatures>,
+    /// Flattened `[B, nid_dim]` row-major.
+    pub nid: Vec<f32>,
+    pub labels: Vec<f32>,
+    pub nid_dim: usize,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        debug_assert!(self.nid_dim == 0 || s.nid.len() == self.nid_dim);
+        self.nid_dim = s.nid.len();
+        self.ids.push(s.ids);
+        self.nid.extend_from_slice(&s.nid);
+        self.labels.push(s.label);
+    }
+
+    /// Every distinct (group, id) pair in the batch, with the sample indices
+    /// that reference it — the paper's lossless index compression layout
+    /// (§4.2.3): key = unique id, value = uint16 sample indices.
+    pub fn unique_ids(&self) -> Vec<((usize, u64), Vec<u16>)> {
+        let mut map: std::collections::HashMap<(usize, u64), Vec<u16>> =
+            std::collections::HashMap::new();
+        for (row, ids) in self.ids.iter().enumerate() {
+            for (g, group) in ids.groups.iter().enumerate() {
+                for &id in group {
+                    map.entry((g, id)).or_default().push(row as u16);
+                }
+            }
+        }
+        let mut out: Vec<_> = map.into_iter().collect();
+        out.sort_unstable_by_key(|(k, _)| *k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_id_packs_rank() {
+        for rank in [0u8, 1, 17, 255] {
+            for counter in [0u64, 1, 123_456_789, 0x00ff_ffff_ffff_ffff] {
+                let id = make_sample_id(rank, counter);
+                assert_eq!(sample_id_rank(id), rank);
+                assert_eq!(id & 0x00ff_ffff_ffff_ffff, counter);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_accumulates_rows() {
+        let mut b = Batch::default();
+        for i in 0..3 {
+            b.push(Sample {
+                ids: IdFeatures { groups: vec![vec![i], vec![10 + i]] },
+                nid: vec![i as f32, 0.0],
+                label: (i % 2) as f32,
+            });
+        }
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.nid_dim, 2);
+        assert_eq!(b.nid.len(), 6);
+    }
+
+    #[test]
+    fn unique_ids_dedup_and_index() {
+        let mut b = Batch::default();
+        b.push(Sample { ids: IdFeatures { groups: vec![vec![5, 7]] }, nid: vec![], label: 0.0 });
+        b.push(Sample { ids: IdFeatures { groups: vec![vec![5]] }, nid: vec![], label: 1.0 });
+        let uniq = b.unique_ids();
+        assert_eq!(uniq.len(), 2);
+        assert_eq!(uniq[0], ((0, 5), vec![0u16, 1u16]));
+        assert_eq!(uniq[1], ((0, 7), vec![0u16]));
+    }
+
+    #[test]
+    fn n_ids_counts_all_groups() {
+        let f = IdFeatures { groups: vec![vec![1, 2], vec![], vec![3]] };
+        assert_eq!(f.n_ids(), 3);
+    }
+}

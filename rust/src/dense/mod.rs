@@ -1,0 +1,13 @@
+//! Pure-Rust dense tower (reference + fallback for the PJRT artifact).
+//!
+//! Implements exactly the L2 JAX model (`python/compile/model.py`): an FFNN
+//! with ReLU hidden layers, a linear logit head and mean BCE-with-logits
+//! loss. Used (a) as the numeric cross-check of the AOT artifact in the
+//! integration tests, (b) as the dense engine when artifacts are not built,
+//! and (c) to host the dense optimizer the NN workers run after AllReduce.
+
+pub mod model;
+pub mod optimizer;
+
+pub use model::{DenseGrads, DenseModel};
+pub use optimizer::{DenseOptimizer, DenseOptimizerKind};

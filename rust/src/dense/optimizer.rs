@@ -1,0 +1,124 @@
+//! Dense-side optimizer over the flattened parameter vector (Alg. 2's Ω^nn).
+//!
+//! Runs on each NN worker after the gradient AllReduce; since all workers see
+//! the identical mean gradient and share the init, their parameter copies
+//! stay bit-identical without further synchronization.
+
+/// Dense optimizer flavors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DenseOptimizerKind {
+    Sgd,
+    /// SGD + classical momentum.
+    Momentum,
+    Adam,
+}
+
+/// Optimizer with state sized to the flat parameter vector.
+#[derive(Clone)]
+pub struct DenseOptimizer {
+    kind: DenseOptimizerKind,
+    lr: f32,
+    momentum: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl DenseOptimizer {
+    pub fn new(kind: DenseOptimizerKind, lr: f32, n_params: usize) -> Self {
+        let state = match kind {
+            DenseOptimizerKind::Sgd => 0,
+            DenseOptimizerKind::Momentum => n_params,
+            DenseOptimizerKind::Adam => n_params,
+        };
+        Self {
+            kind,
+            lr,
+            momentum: 0.9,
+            m: vec![0.0; state],
+            v: if kind == DenseOptimizerKind::Adam { vec![0.0; n_params] } else { Vec::new() },
+            t: 0,
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// `params -= update(grad)` in place.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        match self.kind {
+            DenseOptimizerKind::Sgd => {
+                for (p, g) in params.iter_mut().zip(grad) {
+                    *p -= self.lr * g;
+                }
+            }
+            DenseOptimizerKind::Momentum => {
+                for ((p, g), m) in params.iter_mut().zip(grad).zip(self.m.iter_mut()) {
+                    *m = self.momentum * *m + g;
+                    *p -= self.lr * *m;
+                }
+            }
+            DenseOptimizerKind::Adam => {
+                const B1: f32 = 0.9;
+                const B2: f32 = 0.999;
+                let bc1 = 1.0 - B1.powi(self.t as i32);
+                let bc2 = 1.0 - B2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    self.m[i] = B1 * self.m[i] + (1.0 - B1) * grad[i];
+                    self.v[i] = B2 * self.v[i] + (1.0 - B2) * grad[i] * grad[i];
+                    params[i] -=
+                        self.lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + 1e-8);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimize(kind: DenseOptimizerKind, lr: f32, steps: usize) -> f32 {
+        // f(p) = sum (p_i - i)^2 over 4 coords.
+        let mut opt = DenseOptimizer::new(kind, lr, 4);
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..steps {
+            let g: Vec<f32> = p.iter().enumerate().map(|(i, &x)| 2.0 * (x - i as f32)).collect();
+            opt.step(&mut p, &g);
+        }
+        p.iter().enumerate().map(|(i, &x)| (x - i as f32).powi(2)).sum()
+    }
+
+    #[test]
+    fn all_kinds_minimize_quadratic() {
+        assert!(minimize(DenseOptimizerKind::Sgd, 0.1, 100) < 1e-3);
+        assert!(minimize(DenseOptimizerKind::Momentum, 0.02, 100) < 1e-3);
+        assert!(minimize(DenseOptimizerKind::Adam, 0.3, 300) < 1e-2);
+    }
+
+    #[test]
+    fn sgd_step_is_exact() {
+        let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, 0.5, 2);
+        let mut p = vec![1.0, -1.0];
+        opt.step(&mut p, &[2.0, -4.0]);
+        assert_eq!(p, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn identical_inputs_keep_replicas_identical() {
+        // The hybrid trainer's invariant: same grads => same params.
+        let mut a = DenseOptimizer::new(DenseOptimizerKind::Momentum, 0.1, 3);
+        let mut b = DenseOptimizer::new(DenseOptimizerKind::Momentum, 0.1, 3);
+        let mut pa = vec![0.5, 0.5, 0.5];
+        let mut pb = pa.clone();
+        for i in 0..50 {
+            let g = vec![(i as f32).sin(), 0.2, -0.1];
+            a.step(&mut pa, &g);
+            b.step(&mut pb, &g);
+        }
+        assert_eq!(pa, pb);
+    }
+}

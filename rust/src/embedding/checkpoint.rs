@@ -1,0 +1,200 @@
+//! Periodic checkpointing of the embedding PS (paper §4.2.4).
+//!
+//! "embedding PS nodes will periodically save the in-memory copy of the
+//! embedding parameter shard; with the advance of our LRU implementation,
+//! check-pointing is very efficient" — a shard snapshot is `LruStore`'s flat
+//! memory copy. Files carry a CRC32 so torn writes are detected on load.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use super::ps::EmbeddingPs;
+
+/// CRC-32 (IEEE) — small table-driven implementation.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xffff_ffffu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Write one framed, checksummed blob.
+fn write_blob(w: &mut impl Write, bytes: &[u8]) -> Result<()> {
+    w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    w.write_all(&crc32(bytes).to_le_bytes())?;
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+/// Read one framed blob, verifying the checksum.
+fn read_blob(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 8];
+    r.read_exact(&mut len_buf)?;
+    let len = u64::from_le_bytes(len_buf) as usize;
+    ensure!(len < 1 << 34, "implausible blob size {len}");
+    let mut crc_buf = [0u8; 4];
+    r.read_exact(&mut crc_buf)?;
+    let want = u32::from_le_bytes(crc_buf);
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    ensure!(crc32(&bytes) == want, "checkpoint CRC mismatch (torn write?)");
+    Ok(bytes)
+}
+
+/// Checkpoint manager for a PS: one file per node under `dir`.
+pub struct CheckpointManager {
+    dir: PathBuf,
+}
+
+impl CheckpointManager {
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn node_path(&self, node: usize) -> PathBuf {
+        self.dir.join(format!("ps_node_{node}.ckpt"))
+    }
+
+    /// Save every node of the PS (atomic per node: write temp then rename).
+    pub fn save(&self, ps: &EmbeddingPs) -> Result<()> {
+        for node in 0..ps.n_nodes() {
+            self.save_node(ps, node)?;
+        }
+        Ok(())
+    }
+
+    /// Save one node's shards.
+    pub fn save_node(&self, ps: &EmbeddingPs, node: usize) -> Result<()> {
+        let tmp = self.node_path(node).with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            let shards = ps.snapshot_node(node);
+            f.write_all(&(shards.len() as u64).to_le_bytes())?;
+            for s in &shards {
+                write_blob(&mut f, s)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, self.node_path(node))?;
+        Ok(())
+    }
+
+    /// Restore one node from disk.
+    pub fn restore_node(&self, ps: &EmbeddingPs, node: usize) -> Result<()> {
+        let path = self.node_path(node);
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut n_buf = [0u8; 8];
+        f.read_exact(&mut n_buf)?;
+        let n = u64::from_le_bytes(n_buf) as usize;
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(read_blob(&mut f)?);
+        }
+        ps.restore_node(node, &shards)
+    }
+
+    /// Restore every node.
+    pub fn restore(&self, ps: &EmbeddingPs) -> Result<()> {
+        for node in 0..ps.n_nodes() {
+            self.restore_node(ps, node)?;
+        }
+        Ok(())
+    }
+
+    pub fn exists(&self, node: usize) -> bool {
+        self.node_path(node).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, OptimizerKind, PartitionPolicy};
+
+    fn ps() -> EmbeddingPs {
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1 << 30,
+            shard_capacity: 64,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Adagrad,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        EmbeddingPs::new(&cfg, 4, 9)
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        assert_eq!(crc32(b"123456789"), 0xcbf43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn save_restore_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("persia_ckpt_{}", std::process::id()));
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        let keys: Vec<(u32, u64)> = (0..30).map(|i| (0, i)).collect();
+        let mut buf = vec![0.0; 120];
+        ps.get_many(&keys, &mut buf);
+        ps.put_grads(&keys, &vec![0.5; 120]);
+        let mut want = vec![0.0; 120];
+        ps.get_many(&keys, &mut want);
+
+        mgr.save(&ps).unwrap();
+        ps.wipe_node(0);
+        ps.wipe_node(1);
+        mgr.restore(&ps).unwrap();
+
+        let mut got = vec![0.0; 120];
+        ps.get_many(&keys, &mut got);
+        assert_eq!(got, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_checkpoint_detected() {
+        let dir = std::env::temp_dir().join(format!("persia_ckpt_c_{}", std::process::id()));
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        ps.get(0, 1, &mut [0.0; 4]);
+        mgr.save(&ps).unwrap();
+        // Flip a byte in the middle of node 0's file.
+        let path = dir.join("ps_node_0.ckpt");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(mgr.restore_node(&ps, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_checkpoint_is_error_not_panic() {
+        let dir = std::env::temp_dir().join(format!("persia_ckpt_m_{}", std::process::id()));
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        assert!(!mgr.exists(0));
+        assert!(mgr.restore_node(&ps, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,464 @@
+//! Array-list LRU cache — the paper's §4.2.2 design, exactly:
+//!
+//! > "Instead of a doubly linked list where the pointer stores a memory
+//! > address, we adopt an array-list design where the pointer stores the
+//! > index of the pre- or post- entrance in the array; similarly, the
+//! > hash-map's value also stores the corresponding embedding parameter's
+//! > index in the array instead of the memory address."
+//!
+//! Two advantages the paper calls out, both realized here:
+//! 1. no per-entry allocation/deallocation — all rows live in one flat
+//!    `Vec<f32>` sized at construction (billions of entries would otherwise
+//!    fragment the allocator);
+//! 2. serialization/deserialization is a straight memory copy, because no
+//!    machine pointers exist in the data — the basis of cheap checkpointing
+//!    (`to_bytes`/`from_bytes`, used by [`super::checkpoint`]).
+//!
+//! Each row stores `embedding dim + optimizer state` f32s side by side, so a
+//! get+update touches one cache-resident stripe.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+const NIL: u32 = u32::MAX;
+
+/// Fast 64-bit hasher for the id keyspace (std's SipHash costs ~10x more
+/// per lookup than the whole rest of a cache hit; ids are already
+/// high-entropy after the router's splitmix, so a single mix is plenty).
+#[derive(Default)]
+pub struct IdHasher(u64);
+
+impl Hasher for IdHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        // splitmix64 finalizer
+        let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        self.0 = z ^ (z >> 31);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type IdMap = HashMap<u64, u32, BuildHasherDefault<IdHasher>>;
+
+/// Linkage + key of one slot (flat, pointer-free).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+struct Slot {
+    key: u64,
+    prev: u32,
+    next: u32,
+    occupied: u32,
+    _pad: u32,
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Slot { key: 0, prev: NIL, next: NIL, occupied: 0, _pad: 0 }
+    }
+}
+
+/// Fixed-capacity LRU keyed by u64, each entry one `row_width`-float row.
+pub struct LruStore {
+    slots: Vec<Slot>,
+    /// Flat row storage: slot i owns `values[i*row_width .. (i+1)*row_width]`.
+    values: Vec<f32>,
+    map: IdMap,
+    head: u32, // MRU
+    tail: u32, // LRU
+    free: Vec<u32>,
+    row_width: usize,
+    evictions: u64,
+}
+
+impl LruStore {
+    pub fn new(capacity: usize, row_width: usize) -> Self {
+        assert!(capacity > 0 && capacity < NIL as usize);
+        assert!(row_width > 0);
+        Self {
+            slots: vec![Slot::empty(); capacity],
+            values: vec![0.0; capacity * row_width],
+            map: IdMap::with_capacity_and_hasher(capacity, Default::default()),
+            head: NIL,
+            tail: NIL,
+            free: (0..capacity as u32).rev().collect(),
+            row_width,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn row_width(&self) -> usize {
+        self.row_width
+    }
+
+    /// Total evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    #[inline]
+    fn detach(&mut self, idx: u32) {
+        let (prev, next) = {
+            let s = &self.slots[idx as usize];
+            (s.prev, s.next)
+        };
+        if prev != NIL {
+            self.slots[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    #[inline]
+    fn push_front(&mut self, idx: u32) {
+        let old_head = self.head;
+        {
+            let s = &mut self.slots[idx as usize];
+            s.prev = NIL;
+            s.next = old_head;
+        }
+        if old_head != NIL {
+            self.slots[old_head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Look up `key`, marking it most-recently-used. Returns the row.
+    pub fn get(&mut self, key: u64) -> Option<&mut [f32]> {
+        let idx = *self.map.get(&key)?;
+        if self.head != idx {
+            self.detach(idx);
+            self.push_front(idx);
+        }
+        let w = self.row_width;
+        Some(&mut self.values[idx as usize * w..(idx as usize + 1) * w])
+    }
+
+    /// Peek without touching recency (used by checkpointing/tests).
+    pub fn peek(&self, key: u64) -> Option<&[f32]> {
+        let idx = *self.map.get(&key)? as usize;
+        Some(&self.values[idx * self.row_width..(idx + 1) * self.row_width])
+    }
+
+    /// Get or materialize a row; `init` fills a fresh row (paper: rows of the
+    /// virtual 100T table come into existence on first touch). Returns
+    /// (row, evicted_key_if_any).
+    pub fn get_or_insert_with<F: FnOnce(&mut [f32])>(
+        &mut self,
+        key: u64,
+        init: F,
+    ) -> (&mut [f32], Option<u64>) {
+        let w = self.row_width;
+        if let Some(&idx) = self.map.get(&key) {
+            if self.head != idx {
+                self.detach(idx);
+                self.push_front(idx);
+            }
+            return (
+                &mut self.values[idx as usize * w..(idx as usize + 1) * w],
+                None,
+            );
+        }
+        let mut evicted = None;
+        let idx = if let Some(idx) = self.free.pop() {
+            idx
+        } else {
+            // Evict the LRU tail.
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL, "capacity>0 but no tail");
+            let old_key = self.slots[victim as usize].key;
+            self.detach(victim);
+            self.map.remove(&old_key);
+            self.evictions += 1;
+            evicted = Some(old_key);
+            victim
+        };
+        {
+            let s = &mut self.slots[idx as usize];
+            s.key = key;
+            s.occupied = 1;
+        }
+        self.map.insert(key, idx);
+        self.push_front(idx);
+        let row = &mut self.values[idx as usize * w..(idx as usize + 1) * w];
+        init(row);
+        (row, evicted)
+    }
+
+    /// Remove a key (used by failure injection). Returns true if present.
+    pub fn remove(&mut self, key: u64) -> bool {
+        if let Some(idx) = self.map.remove(&key) {
+            self.detach(idx);
+            self.slots[idx as usize] = Slot::empty();
+            self.free.push(idx);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Keys from MRU to LRU (test/diagnostic; O(len)).
+    pub fn keys_mru_order(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut cur = self.head;
+        while cur != NIL {
+            out.push(self.slots[cur as usize].key);
+            cur = self.slots[cur as usize].next;
+        }
+        out
+    }
+
+    /// Verify structural invariants (tests + post-restore validation).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        let forward = self.keys_mru_order();
+        ensure!(forward.len() == self.map.len(), "list len != map len");
+        // Backward walk must mirror forward walk.
+        let mut backward = Vec::with_capacity(forward.len());
+        let mut cur = self.tail;
+        while cur != NIL {
+            backward.push(self.slots[cur as usize].key);
+            cur = self.slots[cur as usize].prev;
+        }
+        backward.reverse();
+        ensure!(forward == backward, "prev/next links disagree");
+        for key in &forward {
+            ensure!(self.map.contains_key(key), "listed key missing from map");
+        }
+        ensure!(self.map.len() + self.free.len() == self.slots.len(), "slot leak");
+        Ok(())
+    }
+
+    // --- flat serialization (paper: "a straightforward memory copy") ---
+
+    /// Serialize to bytes: header + raw slot array + raw value array.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let slot_bytes = std::mem::size_of::<Slot>() * self.slots.len();
+        let val_bytes = 4 * self.values.len();
+        let mut out = Vec::with_capacity(40 + slot_bytes + val_bytes);
+        out.extend_from_slice(b"PLRU0001");
+        out.extend_from_slice(&(self.slots.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.row_width as u64).to_le_bytes());
+        out.extend_from_slice(&(self.head as u64).to_le_bytes());
+        out.extend_from_slice(&(self.tail as u64).to_le_bytes());
+        // SAFETY: Slot is repr(C) POD; values are f32.
+        unsafe {
+            out.extend_from_slice(std::slice::from_raw_parts(
+                self.slots.as_ptr() as *const u8,
+                slot_bytes,
+            ));
+            out.extend_from_slice(std::slice::from_raw_parts(
+                self.values.as_ptr() as *const u8,
+                val_bytes,
+            ));
+        }
+        out
+    }
+
+    /// Restore from [`Self::to_bytes`] output. The hash-map (the only
+    /// non-flat structure) is rebuilt from the slot array.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        use anyhow::ensure;
+        ensure!(bytes.len() >= 40 && &bytes[..8] == b"PLRU0001", "bad LRU snapshot header");
+        let rd_u64 = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        let capacity = rd_u64(8) as usize;
+        let row_width = rd_u64(16) as usize;
+        let head = rd_u64(24) as u32;
+        let tail = rd_u64(32) as u32;
+        let slot_bytes = std::mem::size_of::<Slot>() * capacity;
+        let val_bytes = 4 * capacity * row_width;
+        ensure!(bytes.len() == 40 + slot_bytes + val_bytes, "snapshot size mismatch");
+
+        let mut slots = vec![Slot::empty(); capacity];
+        let mut values = vec![0.0f32; capacity * row_width];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes[40..].as_ptr(),
+                slots.as_mut_ptr() as *mut u8,
+                slot_bytes,
+            );
+            std::ptr::copy_nonoverlapping(
+                bytes[40 + slot_bytes..].as_ptr(),
+                values.as_mut_ptr() as *mut u8,
+                val_bytes,
+            );
+        }
+        let mut map = IdMap::with_capacity_and_hasher(capacity, Default::default());
+        let mut free = Vec::new();
+        for (i, s) in slots.iter().enumerate() {
+            if s.occupied == 1 {
+                map.insert(s.key, i as u32);
+            } else {
+                free.push(i as u32);
+            }
+        }
+        free.reverse();
+        let store =
+            Self { slots, values, map, head, tail, free, row_width, evictions: 0 };
+        store.check_invariants()?;
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use crate::util::Rng;
+
+    fn init_row(v: f32) -> impl FnOnce(&mut [f32]) {
+        move |row| row.fill(v)
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut lru = LruStore::new(4, 3);
+        lru.get_or_insert_with(10, init_row(1.0));
+        lru.get_or_insert_with(20, init_row(2.0));
+        assert_eq!(lru.get(10).unwrap(), &[1.0, 1.0, 1.0]);
+        assert_eq!(lru.get(20).unwrap(), &[2.0, 2.0, 2.0]);
+        assert!(lru.get(30).is_none());
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn eviction_is_lru_order() {
+        let mut lru = LruStore::new(3, 1);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        lru.get_or_insert_with(3, init_row(3.0));
+        // Touch 1 so 2 becomes LRU.
+        lru.get(1);
+        let (_, evicted) = lru.get_or_insert_with(4, init_row(4.0));
+        assert_eq!(evicted, Some(2));
+        assert!(lru.get(2).is_none());
+        assert_eq!(lru.keys_mru_order(), vec![4, 1, 3]);
+        assert_eq!(lru.evictions(), 1);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut lru = LruStore::new(8, 2);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let k = rng.below(100);
+            lru.get_or_insert_with(k, init_row(k as f32));
+            assert!(lru.len() <= 8);
+        }
+        lru.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn updates_persist_across_touches() {
+        let mut lru = LruStore::new(4, 2);
+        lru.get_or_insert_with(5, init_row(0.0));
+        lru.get(5).unwrap()[0] = 42.0;
+        lru.get_or_insert_with(6, init_row(0.0));
+        assert_eq!(lru.get(5).unwrap()[0], 42.0);
+    }
+
+    #[test]
+    fn remove_frees_slot() {
+        let mut lru = LruStore::new(2, 1);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        assert!(lru.remove(1));
+        assert!(!lru.remove(1));
+        // Slot is reusable without eviction.
+        let (_, ev) = lru.get_or_insert_with(3, init_row(3.0));
+        assert!(ev.is_none());
+        lru.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_everything() {
+        let mut lru = LruStore::new(16, 4);
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let k = rng.below(40);
+            let (row, _) = lru.get_or_insert_with(k, init_row(0.0));
+            row[0] += 1.0;
+        }
+        let order_before = lru.keys_mru_order();
+        let bytes = lru.to_bytes();
+        let mut back = LruStore::from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), lru.len());
+        assert_eq!(back.keys_mru_order(), order_before);
+        for &k in &order_before {
+            assert_eq!(back.get(k).map(|r| r.to_vec()), lru.get(k).map(|r| r.to_vec()));
+        }
+        back.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption() {
+        let mut lru = LruStore::new(4, 2);
+        lru.get_or_insert_with(1, init_row(1.0));
+        let mut bytes = lru.to_bytes();
+        bytes[0] ^= 0xff;
+        assert!(LruStore::from_bytes(&bytes).is_err());
+        let mut bytes2 = lru.to_bytes();
+        bytes2.truncate(bytes2.len() - 1);
+        assert!(LruStore::from_bytes(&bytes2).is_err());
+    }
+
+    #[test]
+    fn property_matches_reference_lru_model() {
+        // Reference model: Vec-based LRU with explicit recency ordering.
+        forall(
+            51,
+            60,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 120) as usize;
+                (0..n).map(|_| rng.below(30)).collect::<Vec<u64>>()
+            },
+            |ops| {
+                let cap = 8;
+                let mut lru = LruStore::new(cap, 1);
+                let mut model: Vec<u64> = Vec::new(); // front = MRU
+                for &k in ops {
+                    lru.get_or_insert_with(k, init_row(k as f32));
+                    if let Some(pos) = model.iter().position(|&x| x == k) {
+                        model.remove(pos);
+                    }
+                    model.insert(0, k);
+                    model.truncate(cap);
+                }
+                lru.check_invariants().unwrap();
+                lru.keys_mru_order() == model
+            },
+        );
+    }
+}

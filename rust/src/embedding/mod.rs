@@ -1,0 +1,20 @@
+//! The embedding parameter server (paper §4.2.2) and its storage substrate.
+//!
+//! * [`lru`] — the array-list LRU cache: hash-map + index-linked array,
+//!   entries hold the embedding vector ⊕ optimizer state, serialization is a
+//!   flat memory copy.
+//! * [`optimizer`] — row-wise SGD / Adagrad / Adam (Alg. 1's Ω^emb).
+//! * [`shard`] — one locked LRU per shard (the paper's thread-per-sub-map).
+//! * [`ps`] — the sharded PS: global hash placement, feature-group vs
+//!   shuffled-uniform partitioning, get/put API, checkpointing.
+
+pub mod checkpoint;
+pub mod lru;
+pub mod optimizer;
+pub mod ps;
+pub mod shard;
+
+pub use lru::LruStore;
+pub use optimizer::RowOptimizer;
+pub use ps::EmbeddingPs;
+pub use shard::Shard;

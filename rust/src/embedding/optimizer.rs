@@ -1,0 +1,159 @@
+//! Row-wise embedding optimizers (Algorithm 1's Ω^emb).
+//!
+//! The optimizer state lives *inside the LRU row* next to the embedding
+//! vector (paper §4.2.2: "each item in the array also includes two fields:
+//! the embedding vector and the optimizer states"), so one row fetch serves
+//! both the forward lookup and the backward update.
+
+use crate::config::OptimizerKind;
+
+/// Stateless descriptor; all state is in the row's tail floats.
+#[derive(Clone, Copy, Debug)]
+pub struct RowOptimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    pub dim: usize,
+}
+
+impl RowOptimizer {
+    pub fn new(kind: OptimizerKind, lr: f32, dim: usize) -> Self {
+        Self { kind, lr, dim }
+    }
+
+    /// Extra floats stored per row after the embedding vector.
+    pub fn state_width(&self) -> usize {
+        match self.kind {
+            OptimizerKind::Sgd => 0,
+            OptimizerKind::Adagrad => self.dim,
+            // Adam: m, v per element + one shared step counter.
+            OptimizerKind::Adam => 2 * self.dim + 1,
+        }
+    }
+
+    /// Total row width (embedding + state).
+    pub fn row_width(&self) -> usize {
+        self.dim + self.state_width()
+    }
+
+    /// Initialize a fresh row in place: embedding ~ N(0, 0.01), zero state.
+    pub fn init_row(&self, row: &mut [f32], rng: &mut crate::util::Rng) {
+        debug_assert_eq!(row.len(), self.row_width());
+        for x in row[..self.dim].iter_mut() {
+            *x = rng.normal() * 0.1;
+        }
+        for x in row[self.dim..].iter_mut() {
+            *x = 0.0;
+        }
+    }
+
+    /// Apply one gradient to a row in place.
+    pub fn apply(&self, row: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(row.len(), self.row_width());
+        debug_assert_eq!(grad.len(), self.dim);
+        let (emb, state) = row.split_at_mut(self.dim);
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for (w, g) in emb.iter_mut().zip(grad) {
+                    *w -= self.lr * g;
+                }
+            }
+            OptimizerKind::Adagrad => {
+                for ((w, acc), g) in emb.iter_mut().zip(state.iter_mut()).zip(grad) {
+                    *acc += g * g;
+                    *w -= self.lr * g / (acc.sqrt() + 1e-8);
+                }
+            }
+            OptimizerKind::Adam => {
+                const B1: f32 = 0.9;
+                const B2: f32 = 0.999;
+                let (mv, t_slot) = state.split_at_mut(2 * self.dim);
+                let (m, v) = mv.split_at_mut(self.dim);
+                t_slot[0] += 1.0;
+                let t = t_slot[0];
+                let bc1 = 1.0 - B1.powf(t);
+                let bc2 = 1.0 - B2.powf(t);
+                for i in 0..self.dim {
+                    m[i] = B1 * m[i] + (1.0 - B1) * grad[i];
+                    v[i] = B2 * v[i] + (1.0 - B2) * grad[i] * grad[i];
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    emb[i] -= self.lr * mhat / (vhat.sqrt() + 1e-8);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn widths() {
+        assert_eq!(RowOptimizer::new(OptimizerKind::Sgd, 0.1, 8).row_width(), 8);
+        assert_eq!(RowOptimizer::new(OptimizerKind::Adagrad, 0.1, 8).row_width(), 16);
+        assert_eq!(RowOptimizer::new(OptimizerKind::Adam, 0.1, 8).row_width(), 25);
+    }
+
+    #[test]
+    fn sgd_step_exact() {
+        let opt = RowOptimizer::new(OptimizerKind::Sgd, 0.5, 3);
+        let mut row = vec![1.0, 2.0, 3.0];
+        opt.apply(&mut row, &[1.0, -2.0, 0.0]);
+        assert_eq!(row, vec![0.5, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr() {
+        let opt = RowOptimizer::new(OptimizerKind::Adagrad, 1.0, 1);
+        let mut row = vec![0.0, 0.0];
+        opt.apply(&mut row, &[1.0]);
+        let first_step = -row[0];
+        let before = row[0];
+        opt.apply(&mut row, &[1.0]);
+        let second_step = before - row[0];
+        assert!(second_step < first_step, "{second_step} !< {first_step}");
+        assert!((row[1] - 2.0).abs() < 1e-6); // accumulated g^2
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // Minimize (w - 3)^2 with gradient 2(w-3).
+        let opt = RowOptimizer::new(OptimizerKind::Adam, 0.1, 1);
+        let mut row = vec![0.0; opt.row_width()];
+        for _ in 0..500 {
+            let g = 2.0 * (row[0] - 3.0);
+            opt.apply(&mut row, &[g]);
+        }
+        assert!((row[0] - 3.0).abs() < 0.05, "w={}", row[0]);
+    }
+
+    #[test]
+    fn all_kinds_descend_on_quadratic() {
+        for kind in [OptimizerKind::Sgd, OptimizerKind::Adagrad, OptimizerKind::Adam] {
+            let opt = RowOptimizer::new(kind, 0.05, 4);
+            let mut rng = Rng::new(3);
+            let mut row = vec![0.0; opt.row_width()];
+            opt.init_row(&mut row, &mut rng);
+            let loss = |w: &[f32]| -> f32 { w.iter().map(|x| (x - 1.0) * (x - 1.0)).sum() };
+            let l0 = loss(&row[..4]);
+            for _ in 0..200 {
+                let g: Vec<f32> = row[..4].iter().map(|x| 2.0 * (x - 1.0)).collect();
+                opt.apply(&mut row, &g);
+            }
+            let l1 = loss(&row[..4]);
+            assert!(l1 < l0 * 0.1, "{kind:?}: {l0} -> {l1}");
+        }
+    }
+
+    #[test]
+    fn init_row_zeroes_state() {
+        let opt = RowOptimizer::new(OptimizerKind::Adam, 0.1, 4);
+        let mut rng = Rng::new(1);
+        let mut row = vec![9.0; opt.row_width()];
+        opt.init_row(&mut row, &mut rng);
+        assert!(row[4..].iter().all(|&x| x == 0.0));
+        assert!(row[..4].iter().any(|&x| x != 0.0));
+    }
+}

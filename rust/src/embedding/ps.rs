@@ -1,0 +1,310 @@
+//! The sharded embedding parameter server (paper Fig. 4/5).
+//!
+//! Keys are `(feature group, id)` pairs packed into a u64. An embedding
+//! worker "first runs an identical global hashing function to locate the
+//! embedding PS node that stores the parameters" (§4.2.2); within a node the
+//! key selects a lock-striped shard.
+//!
+//! Two placement policies (§4.2.3 "Workload balance of embedding PS"):
+//! * `FeatureGroup` — nodes own whole semantic groups; congests when traffic
+//!   leans toward one group (the ablation baseline);
+//! * `ShuffledUniform` — ids hashed uniformly over all nodes (Persia's fix).
+
+use crate::config::{EmbeddingConfig, PartitionPolicy};
+
+use super::optimizer::RowOptimizer;
+use super::shard::Shard;
+
+#[inline]
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Pack (group, id) into the PS key space. Ids up to 2^48 (281T rows/group).
+#[inline]
+pub fn pack_key(group: u32, id: u64) -> u64 {
+    debug_assert!(id < (1u64 << 48), "id {id} exceeds 48-bit key space");
+    ((group as u64) << 48) | id
+}
+
+/// Unpack a PS key.
+#[inline]
+pub fn unpack_key(key: u64) -> (u32, u64) {
+    ((key >> 48) as u32, key & 0x0000_ffff_ffff_ffff)
+}
+
+/// The embedding PS: `n_nodes x shards_per_node` locked shards.
+pub struct EmbeddingPs {
+    nodes: Vec<Vec<Shard>>,
+    policy: PartitionPolicy,
+    dim: usize,
+}
+
+impl EmbeddingPs {
+    pub fn new(cfg: &EmbeddingConfig, dim: usize, seed: u64) -> Self {
+        let opt = RowOptimizer::new(cfg.optimizer, cfg.lr, dim);
+        let nodes = (0..cfg.n_nodes)
+            .map(|n| {
+                (0..cfg.shards_per_node)
+                    .map(|s| Shard::new(cfg.shard_capacity, opt, seed ^ ((n as u64) << 32) ^ s as u64))
+                    .collect()
+            })
+            .collect();
+        Self { nodes, policy: cfg.partition, dim }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn shards_per_node(&self) -> usize {
+        self.nodes[0].len()
+    }
+
+    /// The global hash placement: key -> (node, shard).
+    #[inline]
+    pub fn route(&self, key: u64) -> (usize, usize) {
+        let (group, id) = unpack_key(key);
+        let n_nodes = self.nodes.len();
+        let n_shards = self.nodes[0].len();
+        match self.policy {
+            PartitionPolicy::ShuffledUniform => {
+                let h = splitmix64(key);
+                ((h % n_nodes as u64) as usize, ((h >> 32) % n_shards as u64) as usize)
+            }
+            PartitionPolicy::FeatureGroup => {
+                let node = group as usize % n_nodes;
+                let h = splitmix64(id);
+                (node, (h % n_shards as u64) as usize)
+            }
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &Shard {
+        let (n, s) = self.route(key);
+        &self.nodes[n][s]
+    }
+
+    /// Fetch one embedding row into `out`.
+    pub fn get(&self, group: u32, id: u64, out: &mut [f32]) {
+        self.shard(pack_key(group, id)).get(pack_key(group, id), out);
+    }
+
+    /// Batched lookup: rows for `keys`, flattened `[len, dim]` into `out`.
+    pub fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) {
+        assert_eq!(out.len(), keys.len() * self.dim);
+        for (i, &(g, id)) in keys.iter().enumerate() {
+            let key = pack_key(g, id);
+            self.shard(key).get(key, &mut out[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+
+    /// Apply one gradient row.
+    pub fn put_grad(&self, group: u32, id: u64, grad: &[f32]) {
+        let key = pack_key(group, id);
+        self.shard(key).put_grad(key, grad);
+    }
+
+    /// Batched gradient put, rows flattened like [`Self::get_many`].
+    pub fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) {
+        assert_eq!(grads.len(), keys.len() * self.dim);
+        for (i, &(g, id)) in keys.iter().enumerate() {
+            self.put_grad(g, id, &grads[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+
+    /// Materialized rows in total.
+    pub fn total_rows(&self) -> usize {
+        self.nodes.iter().flatten().map(|s| s.len()).sum()
+    }
+
+    pub fn total_evictions(&self) -> u64 {
+        self.nodes.iter().flatten().map(|s| s.evictions()).sum()
+    }
+
+    /// Per-node traffic (gets+puts) — the load-balance ablation metric.
+    pub fn node_traffic(&self) -> Vec<u64> {
+        self.nodes
+            .iter()
+            .map(|shards| shards.iter().map(|s| {
+                let (g, p) = s.traffic();
+                g + p
+            }).sum())
+            .collect()
+    }
+
+    /// Max/mean traffic imbalance across nodes (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let t = self.node_traffic();
+        let max = *t.iter().max().unwrap_or(&0) as f64;
+        let mean = t.iter().sum::<u64>() as f64 / t.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Snapshot one node (all its shards) — periodic checkpointing (§4.2.4).
+    pub fn snapshot_node(&self, node: usize) -> Vec<Vec<u8>> {
+        self.nodes[node].iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Restore one node from a snapshot.
+    pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> anyhow::Result<()> {
+        anyhow::ensure!(shards.len() == self.nodes[node].len(), "shard count mismatch");
+        for (shard, bytes) in self.nodes[node].iter().zip(shards) {
+            shard.restore(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Simulate a node crash that loses in-memory state (used by fault tests
+    /// to contrast with the shared-memory + checkpoint recovery path).
+    pub fn wipe_node(&self, node: usize) {
+        for s in &self.nodes[node] {
+            s.wipe();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, OptimizerKind};
+    use crate::util::quickcheck::forall;
+    use crate::util::{Rng, Zipf};
+
+    fn cfg(policy: PartitionPolicy) -> EmbeddingConfig {
+        EmbeddingConfig {
+            rows_per_group: 1 << 40,
+            shard_capacity: 512,
+            n_nodes: 4,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: policy,
+            lr: 0.5,
+        }
+    }
+
+    #[test]
+    fn key_packing_roundtrip() {
+        forall(
+            61,
+            500,
+            |rng: &mut Rng| (rng.below(256), rng.below(1 << 48)),
+            |&(g, id)| unpack_key(pack_key(g as u32, id)) == (g as u32, id),
+        );
+    }
+
+    impl crate::util::quickcheck::Shrink for (u64, u64) {}
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let key = pack_key(rng.below(8) as u32, rng.below(1 << 40));
+            let (n, s) = ps.route(key);
+            assert_eq!((n, s), ps.route(key));
+            assert!(n < 4 && s < 2);
+        }
+    }
+
+    #[test]
+    fn get_put_roundtrip_through_routing() {
+        let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);
+        let mut before = vec![0.0; 4];
+        ps.get(3, 12345, &mut before);
+        ps.put_grad(3, 12345, &[1.0; 4]);
+        let mut after = vec![0.0; 4];
+        ps.get(3, 12345, &mut after);
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - 0.5 - a).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn get_many_matches_singles() {
+        let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);
+        let keys: Vec<(u32, u64)> = (0..10).map(|i| (i % 3, i as u64 * 17)).collect();
+        let mut batch = vec![0.0; 40];
+        ps.get_many(&keys, &mut batch);
+        for (i, &(g, id)) in keys.iter().enumerate() {
+            let mut single = vec![0.0; 4];
+            ps.get(g, id, &mut single);
+            assert_eq!(&batch[i * 4..(i + 1) * 4], single.as_slice());
+        }
+    }
+
+    #[test]
+    fn shuffled_uniform_balances_skewed_traffic() {
+        // Zipf traffic on one feature group: FeatureGroup placement sends
+        // everything to one node; ShuffledUniform spreads it.
+        let dim = 4;
+        let zipf = Zipf::new(100_000, 1.05);
+        for (policy, expect_balanced) in [
+            (PartitionPolicy::FeatureGroup, false),
+            (PartitionPolicy::ShuffledUniform, true),
+        ] {
+            let ps = EmbeddingPs::new(&cfg(policy), dim, 1);
+            let mut rng = Rng::new(3);
+            let mut buf = vec![0.0; dim];
+            for _ in 0..4000 {
+                ps.get(0, zipf.sample(&mut rng), &mut buf);
+            }
+            let imb = ps.imbalance();
+            if expect_balanced {
+                assert!(imb < 1.3, "{policy:?} imbalance={imb}");
+            } else {
+                assert!(imb > 3.0, "{policy:?} imbalance={imb}");
+            }
+        }
+    }
+
+    #[test]
+    fn node_snapshot_restore() {
+        let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);
+        let keys: Vec<(u32, u64)> = (0..50).map(|i| (0, i as u64)).collect();
+        let mut buf = vec![0.0; 200];
+        ps.get_many(&keys, &mut buf);
+        ps.put_grads(&keys, &vec![1.0; 200]);
+        let mut want = vec![0.0; 200];
+        ps.get_many(&keys, &mut want);
+
+        let snaps: Vec<_> = (0..4).map(|n| ps.snapshot_node(n)).collect();
+        for n in 0..4 {
+            ps.wipe_node(n);
+        }
+        assert_eq!(ps.total_rows(), 0);
+        for (n, snap) in snaps.iter().enumerate() {
+            ps.restore_node(n, snap).unwrap();
+        }
+        let mut got = vec![0.0; 200];
+        ps.get_many(&keys, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn virtual_capacity_bounded_by_lru() {
+        // Touch far more distinct ids than physical capacity; materialized
+        // rows stay bounded (the 100T substitution mechanism).
+        let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);
+        let mut rng = Rng::new(4);
+        let mut buf = vec![0.0; 4];
+        for _ in 0..20_000 {
+            ps.get(0, rng.below(1 << 40), &mut buf);
+        }
+        let max_physical = 4 * 2 * 512;
+        assert!(ps.total_rows() <= max_physical);
+        assert!(ps.total_evictions() > 0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Fault tolerance (paper §4.2.4): failure injection + per-component
+//! recovery policies.
+//!
+//! Paper policies implemented here and exercised by the integration tests
+//! and `examples/fault_tolerance.rs`:
+//! * **data loader** — stateless here (synthetic stream): restart resumes.
+//! * **embedding PS** — process-level failure re-attaches the shared-memory
+//!   LRU (modeled as an in-RAM snapshot) or reloads the periodic checkpoint;
+//!   a few lost `put`s are tolerated.
+//! * **embedding worker** — buffer abandoned, no recovery; the affected
+//!   in-flight samples are dropped (their gradient updates are lost, which
+//!   Theorem 1's bounded-staleness analysis tolerates).
+//! * **NN worker** — any drop of dense synchronization is fatal for
+//!   convergence, so all replicas reload the latest dense checkpoint.
+
+use std::sync::{Arc, Mutex};
+
+use crate::embedding::EmbeddingPs;
+
+/// What to break, when.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// (step, ps node) — process-level PS failure at that step.
+    pub kill_ps_node: Option<(usize, usize)>,
+    /// If true the PS failure also loses shared memory (forces checkpoint
+    /// restore instead of shared-memory re-attach).
+    pub lose_shared_memory: bool,
+    /// (step, worker idx) — embedding worker failure (buffer abandoned).
+    pub kill_emb_worker: Option<(usize, usize)>,
+    /// step — NN worker failure (dense params reload from checkpoint).
+    pub kill_nn_worker: Option<usize>,
+    /// Checkpoint cadence in steps (0 = never).
+    pub checkpoint_every: usize,
+}
+
+/// In-RAM stand-in for the PS's shared-memory segment + periodic checkpoint.
+pub struct PsBackup {
+    /// Last periodic checkpoint (per node, per shard).
+    checkpoints: Mutex<Vec<Option<Vec<Vec<u8>>>>>,
+    /// "Shared memory": survives process-level failures unless
+    /// `lose_shared_memory` is injected.
+    shared: Mutex<Vec<Option<Vec<Vec<u8>>>>>,
+}
+
+impl PsBackup {
+    pub fn new(n_nodes: usize) -> Self {
+        Self {
+            checkpoints: Mutex::new(vec![None; n_nodes]),
+            shared: Mutex::new(vec![None; n_nodes]),
+        }
+    }
+
+    /// Periodic checkpoint of every node (paper: "periodically save the
+    /// in-memory copy of the embedding parameter shard").
+    pub fn checkpoint(&self, ps: &EmbeddingPs) {
+        let mut cks = self.checkpoints.lock().unwrap();
+        for node in 0..ps.n_nodes() {
+            cks[node] = Some(ps.snapshot_node(node));
+        }
+    }
+
+    /// Continuously mirror a node into "shared memory" (called right before
+    /// a failure is injected — in a real deployment the LRU lives in shm at
+    /// all times, so the mirror is implicit).
+    pub fn mirror_shared(&self, ps: &EmbeddingPs, node: usize) {
+        self.shared.lock().unwrap()[node] = Some(ps.snapshot_node(node));
+    }
+
+    /// Recover a failed node: re-attach shared memory if available, else
+    /// fall back to the checkpoint. Returns which path was used.
+    pub fn recover(&self, ps: &EmbeddingPs, node: usize, shared_ok: bool) -> anyhow::Result<&'static str> {
+        if shared_ok {
+            if let Some(snap) = self.shared.lock().unwrap()[node].as_ref() {
+                ps.restore_node(node, snap)?;
+                return Ok("shared-memory");
+            }
+        }
+        if let Some(snap) = self.checkpoints.lock().unwrap()[node].as_ref() {
+            ps.restore_node(node, snap)?;
+            return Ok("checkpoint");
+        }
+        anyhow::bail!("no recovery source for PS node {node}")
+    }
+}
+
+/// Dense-parameter checkpoint slot shared by the NN workers.
+#[derive(Default)]
+pub struct DenseBackup {
+    params: Mutex<Option<(u64, Vec<f32>)>>,
+}
+
+impl DenseBackup {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn save(&self, step: u64, params: &[f32]) {
+        *self.params.lock().unwrap() = Some((step, params.to_vec()));
+    }
+
+    /// Latest (step, params) checkpoint.
+    pub fn load(&self) -> Option<(u64, Vec<f32>)> {
+        self.params.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, OptimizerKind, PartitionPolicy};
+
+    fn ps() -> EmbeddingPs {
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1 << 20,
+            shard_capacity: 128,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        EmbeddingPs::new(&cfg, 4, 3)
+    }
+
+    fn touch(ps: &EmbeddingPs, n: u64) -> Vec<f32> {
+        let keys: Vec<(u32, u64)> = (0..n).map(|i| (0, i)).collect();
+        let mut buf = vec![0.0; keys.len() * 4];
+        ps.get_many(&keys, &mut buf);
+        ps.put_grads(&keys, &vec![1.0; keys.len() * 4]);
+        let mut out = vec![0.0; keys.len() * 4];
+        ps.get_many(&keys, &mut out);
+        out
+    }
+
+    #[test]
+    fn shared_memory_recovery_is_lossless() {
+        let ps = ps();
+        let backup = PsBackup::new(2);
+        let want = touch(&ps, 40);
+        backup.mirror_shared(&ps, 0);
+        backup.mirror_shared(&ps, 1);
+        ps.wipe_node(0);
+        ps.wipe_node(1);
+        assert_eq!(backup.recover(&ps, 0, true).unwrap(), "shared-memory");
+        assert_eq!(backup.recover(&ps, 1, true).unwrap(), "shared-memory");
+        let keys: Vec<(u32, u64)> = (0..40).map(|i| (0, i)).collect();
+        let mut got = vec![0.0; 160];
+        ps.get_many(&keys, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn checkpoint_recovery_loses_post_checkpoint_updates_only() {
+        let ps = ps();
+        let backup = PsBackup::new(2);
+        let at_ckpt = touch(&ps, 20);
+        backup.checkpoint(&ps);
+        let _later = touch(&ps, 20); // extra updates after the checkpoint
+        ps.wipe_node(0);
+        ps.wipe_node(1);
+        assert_eq!(backup.recover(&ps, 0, false).unwrap(), "checkpoint");
+        assert_eq!(backup.recover(&ps, 1, false).unwrap(), "checkpoint");
+        let keys: Vec<(u32, u64)> = (0..20).map(|i| (0, i)).collect();
+        let mut got = vec![0.0; 80];
+        ps.get_many(&keys, &mut got);
+        assert_eq!(got, at_ckpt, "state rolls back to the checkpoint");
+    }
+
+    #[test]
+    fn recovery_without_sources_errors() {
+        let ps = ps();
+        let backup = PsBackup::new(2);
+        assert!(backup.recover(&ps, 0, true).is_err());
+    }
+
+    #[test]
+    fn dense_backup_roundtrip() {
+        let b = DenseBackup::new();
+        assert!(b.load().is_none());
+        b.save(10, &[1.0, 2.0]);
+        assert_eq!(b.load().unwrap(), (10, vec![1.0, 2.0]));
+        b.save(20, &[3.0]);
+        assert_eq!(b.load().unwrap().0, 20);
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-phase timeline recording (reproduces paper Fig. 3-right).
+//!
+//! The trainer computes, per step and mode, when each of the five stages
+//! (embedding preparation, forward, backward, dense sync, embedding update)
+//! starts and how long it runs on the *simulated* clock — including which
+//! stages overlap. The fig3 bench renders these as ASCII Gantt rows.
+
+/// One phase occurrence on the timeline.
+#[derive(Clone, Debug)]
+pub struct GanttEvent {
+    pub step: u64,
+    pub phase: &'static str,
+    /// Simulated start time (seconds from run start).
+    pub start: f64,
+    pub dur: f64,
+}
+
+/// Ordered event log for one run.
+#[derive(Clone, Debug, Default)]
+pub struct GanttTimeline {
+    pub events: Vec<GanttEvent>,
+}
+
+pub const PHASES: [&str; 5] = ["emb_prep", "forward", "backward", "dense_sync", "emb_update"];
+
+impl GanttTimeline {
+    pub fn push(&mut self, step: u64, phase: &'static str, start: f64, dur: f64) {
+        self.events.push(GanttEvent { step, phase, start, dur });
+    }
+
+    pub fn total_span(&self) -> f64 {
+        self.events.iter().map(|e| e.start + e.dur).fold(0.0, f64::max)
+    }
+
+    /// Render rows of `width` columns, one per phase, `[###]` = busy.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let span = self.total_span();
+        if span <= 0.0 || self.events.is_empty() {
+            return String::from("(empty timeline)\n");
+        }
+        let mut out = String::new();
+        for phase in PHASES {
+            let mut row = vec![b' '; width];
+            for e in self.events.iter().filter(|e| e.phase == phase) {
+                let a = ((e.start / span) * width as f64) as usize;
+                let b = (((e.start + e.dur) / span) * width as f64).ceil() as usize;
+                for c in row.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                    *c = b'#';
+                }
+            }
+            out.push_str(&format!("{:<11}|{}|\n", phase, String::from_utf8(row).unwrap()));
+        }
+        out.push_str(&format!("{:<11} 0 {:->width$.4}s\n", "", span, width = width - 2));
+        out
+    }
+
+    /// Fraction of the span during which >= 2 phases run concurrently —
+    /// the overlap the hybrid modes exist to create.
+    pub fn overlap_fraction(&self) -> f64 {
+        let span = self.total_span();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let n = 1000;
+        let mut overlapped = 0usize;
+        for i in 0..n {
+            let t = span * (i as f64 + 0.5) / n as f64;
+            let busy = self
+                .events
+                .iter()
+                .filter(|e| e.start <= t && t < e.start + e.dur)
+                .count();
+            if busy >= 2 {
+                overlapped += 1;
+            }
+        }
+        overlapped as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_and_render() {
+        let mut t = GanttTimeline::default();
+        t.push(0, "emb_prep", 0.0, 1.0);
+        t.push(0, "forward", 1.0, 2.0);
+        assert_eq!(t.total_span(), 3.0);
+        let art = t.render_ascii(30);
+        assert!(art.contains("emb_prep"));
+        assert!(art.contains('#'));
+    }
+
+    #[test]
+    fn overlap_fraction_detects_concurrency() {
+        let mut serial = GanttTimeline::default();
+        serial.push(0, "forward", 0.0, 1.0);
+        serial.push(0, "dense_sync", 1.0, 1.0);
+        assert!(serial.overlap_fraction() < 0.01);
+
+        let mut overlapped = GanttTimeline::default();
+        overlapped.push(0, "forward", 0.0, 2.0);
+        overlapped.push(0, "dense_sync", 0.0, 2.0);
+        assert!(overlapped.overlap_fraction() > 0.95);
+    }
+
+    #[test]
+    fn empty_timeline_renders() {
+        let t = GanttTimeline::default();
+        assert!(t.render_ascii(20).contains("empty"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The hybrid training algorithm (paper §3) and its orchestration (§4.1).
+//!
+//! [`Trainer`] wires loader → embedding workers → NN workers → embedding PS
+//! and runs any of the four modes of Fig. 3-right: fully synchronous, fully
+//! asynchronous, raw hybrid and optimized hybrid. [`gantt`] records the
+//! per-phase timeline that reproduces the figure.
+
+pub mod gantt;
+pub mod trainer;
+
+pub use gantt::{GanttEvent, GanttTimeline};
+pub use trainer::{EngineFactory, PjrtEngineFactory, RustEngineFactory, TrainOutput, Trainer};

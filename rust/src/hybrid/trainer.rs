@@ -1,0 +1,642 @@
+//! The end-to-end distributed trainer (paper §4.1's data-dispatching
+//! procedure, steps (1)-(7)) in all four synchronization modes.
+//!
+//! Topology (all in-process, one OS thread per logical node — see DESIGN.md
+//! substitutions; the TCP service mode lives in `service/`):
+//!
+//! ```text
+//!   loader(rank r) ──ids──▶ embedding worker ──get/put──▶ embedding PS
+//!        │                        ▲      │
+//!        └──nid,label──▶ NN worker│◀─emb─┘        NN worker ◀─ring─▶ peers
+//!                        (one thread per rank, Alg. 2 + AllReduce)
+//! ```
+//!
+//! Mode semantics (Fig. 3-right):
+//! * `FullSync` — all five stages sequential; embedding gradients applied
+//!   inline before the next pull (τ = 0).
+//! * `HybridRaw` — embedding get/put async with a prefetch pipeline bounded
+//!   by τ (`staleness_bound`); dense AllReduce still a separate barrier.
+//! * `Hybrid` — + dense AllReduce overlapped with backward (simulated-clock
+//!   overlap; the paper does this with Bagua's fused bucket schedule).
+//! * `FullAsync` — no dense barrier at all: each worker steps its own
+//!   replica and replicas are gossip-averaged only every `ASYNC_SYNC_EVERY`
+//!   steps; embedding staleness unbounded (2τ pipeline). Statistical
+//!   efficiency drops — exactly the paper's argument for hybrid.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::allreduce::RingGroup;
+use crate::comm::NetSim;
+use crate::config::{ClusterConfig, EmbeddingConfig, ModelConfig, TrainConfig, TrainMode};
+use crate::data::sample::SampleId;
+use crate::data::SyntheticDataset;
+use crate::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
+use crate::embedding::EmbeddingPs;
+use crate::metrics::{auc, RunReport, Tracker};
+use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
+use crate::util::Rng;
+use crate::worker::{EmbeddingWorker, NnWorker};
+
+use super::gantt::GanttTimeline;
+
+/// How often FullAsync gossip-averages the dense replicas.
+const ASYNC_SYNC_EVERY: u64 = 64;
+
+/// Per-worker dense-engine construction. PJRT executables are not `Send`
+/// (the `xla` crate wraps raw PJRT pointers), so every NN-worker thread
+/// builds and owns its engine — exactly the paper's topology, where each GPU
+/// worker holds its own compiled graph.
+pub trait EngineFactory: Sync {
+    fn create(&self, rank: usize) -> Result<DenseEngine>;
+}
+
+/// Factory for the pure-Rust reference tower.
+pub struct RustEngineFactory {
+    pub template: DenseModel,
+}
+
+impl EngineFactory for RustEngineFactory {
+    fn create(&self, _rank: usize) -> Result<DenseEngine> {
+        Ok(DenseEngine::rust(self.template.clone()))
+    }
+}
+
+/// Factory loading the AOT artifacts via a per-thread PJRT CPU client.
+pub struct PjrtEngineFactory {
+    pub artifacts_dir: std::path::PathBuf,
+    pub preset: String,
+}
+
+impl EngineFactory for PjrtEngineFactory {
+    fn create(&self, _rank: usize) -> Result<DenseEngine> {
+        let rt = PjRtRuntime::cpu()?;
+        let manifest = ArtifactManifest::load(&self.artifacts_dir)?;
+        DenseEngine::pjrt(&rt, &manifest, &self.preset)
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutput {
+    pub report: RunReport,
+    /// Worker-0 loss/AUC curves + phase histograms.
+    pub tracker: Tracker,
+    /// Worker-0 simulated-clock phase timeline (Fig. 3).
+    pub gantt: GanttTimeline,
+    /// PS imbalance statistic (load-balance ablation).
+    pub ps_imbalance: f64,
+    /// Worker-0's final dense parameters (flat artifact order).
+    pub final_params: Vec<f32>,
+}
+
+/// One prefetched, embedding-complete mini-batch.
+struct Prefetched {
+    ew: usize,
+    sids: Vec<SampleId>,
+    emb: Vec<f32>,
+    nid: Vec<f32>,
+    labels: Vec<f32>,
+    /// Simulated seconds spent preparing it (PS fetch + transfers).
+    sim_prep: f64,
+    /// Embedding staleness (pending unapplied grad batches at pull time).
+    staleness: u64,
+}
+
+/// Work item for the async gradient-applier threads.
+enum GradMsg {
+    Apply { ew: usize, sids: Vec<SampleId>, grads: Vec<f32> },
+    Stop,
+}
+
+/// The distributed trainer.
+pub struct Trainer {
+    pub model: ModelConfig,
+    pub emb_cfg: EmbeddingConfig,
+    pub cluster: ClusterConfig,
+    pub train: TrainConfig,
+    pub dataset: SyntheticDataset,
+    /// Evaluation batch rows for AUC.
+    pub eval_rows: usize,
+    /// Record a Gantt timeline on worker 0.
+    pub record_gantt: bool,
+}
+
+impl Trainer {
+    pub fn new(
+        model: ModelConfig,
+        emb_cfg: EmbeddingConfig,
+        cluster: ClusterConfig,
+        train: TrainConfig,
+        dataset: SyntheticDataset,
+    ) -> Self {
+        Self { model, emb_cfg, cluster, train, dataset, eval_rows: 2048, record_gantt: false }
+    }
+
+    /// Pipeline depth (bounded staleness τ) for the configured mode.
+    fn pipeline_depth(&self) -> usize {
+        match self.train.mode {
+            TrainMode::FullSync => 0,
+            TrainMode::HybridRaw | TrainMode::Hybrid => self.train.staleness_bound,
+            TrainMode::FullAsync => self.train.staleness_bound * 2,
+        }
+    }
+
+    /// Convenience: run with the pure-Rust engine (deterministic template
+    /// init derived from the train seed).
+    pub fn run_rust(&self) -> Result<TrainOutput> {
+        let mut rng = Rng::new(self.train.seed ^ 0xE17);
+        let template =
+            DenseModel::new(&self.model.dims(), self.model.emb_dim(), self.model.nid_dim, &mut rng);
+        self.run(&RustEngineFactory { template })
+    }
+
+    /// Run the configured training; `factory` builds each worker's dense
+    /// engine (PJRT artifacts or the pure-Rust tower).
+    pub fn run<F: EngineFactory>(&self, factory: &F) -> Result<TrainOutput> {
+        self.model.validate()?;
+        self.emb_cfg.validate()?;
+        self.cluster.validate()?;
+        self.train.validate()?;
+
+        let net = Arc::new(NetSim::new(self.cluster.net));
+        let ps = Arc::new(EmbeddingPs::new(&self.emb_cfg, self.model.emb_dim_per_group, self.train.seed));
+        let emb_workers: Vec<Arc<EmbeddingWorker>> = (0..self.cluster.n_emb_workers)
+            .map(|r| {
+                Arc::new(EmbeddingWorker::new(
+                    r as u8,
+                    ps.clone(),
+                    &self.model,
+                    net.clone(),
+                    self.train.compress,
+                ))
+            })
+            .collect();
+
+        // Async gradient appliers: one thread per embedding worker; the
+        // in-flight counter per worker is the measured staleness.
+        let inflight: Arc<Vec<AtomicI64>> =
+            Arc::new((0..emb_workers.len()).map(|_| AtomicI64::new(0)).collect());
+        let max_staleness = Arc::new(AtomicU64::new(0));
+        let appliers: Vec<Sender<GradMsg>> = emb_workers
+            .iter()
+            .map(|ew| {
+                let ew = ew.clone();
+                let inflight = inflight.clone();
+                let (tx, rx) = channel::<GradMsg>();
+                std::thread::Builder::new()
+                    .name(format!("grad-applier-{}", ew.rank()))
+                    .spawn(move || {
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                GradMsg::Apply { ew: idx, sids, grads } => {
+                                    // Losing a put on failure is tolerated
+                                    // (§4.2.4) — log-free ignore.
+                                    let _ = ew.push_grads(&sids, &grads);
+                                    inflight[idx].fetch_sub(1, Ordering::Relaxed);
+                                }
+                                GradMsg::Stop => return,
+                            }
+                        }
+                    })
+                    .expect("spawn applier");
+                tx
+            })
+            .collect();
+
+        // Identical dense init on every worker (paper: replicas start equal).
+        let mut init_rng = Rng::new(self.train.seed ^ 0xD15E);
+        let dims = self.model.dims();
+        let init_model =
+            DenseModel::new(&dims, self.model.emb_dim(), self.model.nid_dim, &mut init_rng);
+        let init_params = init_model.params_flat();
+
+        let k = self.cluster.n_nn_workers;
+        let ring = RingGroup::new(k, net.clone());
+        // FullAsync gossip: replicas post params to a shared slot array.
+        let gossip: Arc<Vec<Mutex<Vec<f32>>>> =
+            Arc::new((0..k).map(|_| Mutex::new(Vec::new())).collect());
+
+        let trackers: Vec<Mutex<Tracker>> = (0..k).map(|_| Mutex::new(Tracker::new())).collect();
+        let gantts: Vec<Mutex<GanttTimeline>> =
+            (0..k).map(|_| Mutex::new(GanttTimeline::default())).collect();
+        let sim_clocks: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+        let wall_start = std::time::Instant::now();
+        let final_params: Vec<Mutex<Vec<f32>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+
+        let out: Result<Vec<()>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, member) in ring.into_iter().enumerate() {
+                let emb_workers = &emb_workers;
+                // mpsc Senders are Send but not Sync: clone per thread.
+                let appliers: Vec<Sender<GradMsg>> = appliers.clone();
+                let inflight = inflight.clone();
+                let max_staleness = max_staleness.clone();
+                let init_params = init_params.clone();
+                let gossip = gossip.clone();
+                let trackers = &trackers;
+                let gantts = &gantts;
+                let sim_clocks = &sim_clocks;
+                let final_params = &final_params;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let engine = factory.create(rank)?;
+                    if let Some(eb) = engine.train_batch() {
+                        anyhow::ensure!(
+                            eb == self.train.batch_size,
+                            "engine batch {eb} != configured batch {}",
+                            self.train.batch_size
+                        );
+                    }
+                    self.worker_loop(
+                        rank,
+                        member,
+                        engine,
+                        emb_workers,
+                        &appliers,
+                        &inflight,
+                        &max_staleness,
+                        init_params,
+                        &gossip,
+                        &trackers[rank],
+                        &gantts[rank],
+                        &sim_clocks[rank],
+                        &final_params[rank],
+                    )
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        out?;
+
+        for tx in &appliers {
+            let _ = tx.send(GradMsg::Stop);
+        }
+
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+        let sim_extra = sim_clocks
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
+            .fold(0.0, f64::max);
+        let tracker = trackers[0].lock().unwrap();
+        let samples = (self.train.steps * self.train.batch_size * k) as u64;
+        // Simulated time = real compute wall time + injected network time
+        // (which threads did not actually sleep through).
+        let sim_secs = wall_secs + sim_extra;
+        let report = RunReport {
+            mode: self.train.mode.name().to_string(),
+            steps: self.train.steps as u64,
+            samples,
+            wall_secs,
+            sim_secs,
+            final_loss: tracker.recent_loss(20).unwrap_or(f32::NAN),
+            final_auc: tracker.final_auc(),
+            samples_per_sec: samples as f64 / sim_secs.max(1e-9),
+            max_staleness: max_staleness.load(Ordering::Relaxed),
+        };
+        drop(tracker);
+        let tracker = trackers[0].lock().unwrap().take_inner();
+        let gantt = gantts[0].lock().unwrap().clone();
+        let fp = std::mem::take(&mut *final_params[0].lock().unwrap());
+        Ok(TrainOutput { report, tracker, gantt, ps_imbalance: ps.imbalance(), final_params: fp })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn worker_loop(
+        &self,
+        rank: usize,
+        member: crate::allreduce::ring::RingMember,
+        engine: DenseEngine,
+        emb_workers: &[Arc<EmbeddingWorker>],
+        appliers: &[Sender<GradMsg>],
+        inflight: &[AtomicI64],
+        max_staleness: &AtomicU64,
+        mut params: Vec<f32>,
+        gossip: &[Mutex<Vec<f32>>],
+        tracker: &Mutex<Tracker>,
+        gantt: &Mutex<GanttTimeline>,
+        sim_clock: &AtomicU64,
+        final_params: &Mutex<Vec<f32>>,
+    ) -> Result<()> {
+        let mode = self.train.mode;
+        let b = self.train.batch_size;
+        let depth = self.pipeline_depth();
+        let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, self.train.lr, params.len());
+        let mut rng = self.dataset.train_rng(rank as u64);
+        let nn = NnWorker::new(rank, self.model.nid_dim);
+        let mut pipeline: VecDeque<Prefetched> = VecDeque::new();
+        let mut sim_t = 0.0f64; // this worker's simulated clock
+        let n_ew = emb_workers.len();
+
+        let prefetch = |rng: &mut Rng, step: usize| -> Result<Prefetched> {
+            let batch = self.dataset.batch(rng, b);
+            let ew_idx = (rank + step) % n_ew;
+            let ew = &emb_workers[ew_idx];
+            let t0 = std::time::Instant::now();
+            let sids = ew.register(batch.ids);
+            nn.receive_batch(&sids, &batch.nid, &batch.labels);
+            let staleness = inflight[ew_idx].load(Ordering::Relaxed).max(0) as u64;
+            let (emb, sim) = ew.pull(&sids)?;
+            let (nid, labels) = nn.take(&sids)?;
+            Ok(Prefetched {
+                ew: ew_idx,
+                sids,
+                emb,
+                nid,
+                labels,
+                sim_prep: sim + t0.elapsed().as_secs_f64(),
+                staleness,
+            })
+        };
+
+        for step in 0..self.train.steps {
+            // Keep the pipeline full (async prefetch stands in for the
+            // loader+embedding-worker threads running ahead of the GPU).
+            while pipeline.len() <= depth {
+                let pf = prefetch(&mut rng, step + pipeline.len())?;
+                max_staleness.fetch_max(pf.staleness, Ordering::Relaxed);
+                pipeline.push_back(pf);
+            }
+            let pf = pipeline.pop_front().unwrap();
+
+            // Forward + backward (the artifact computes both).
+            let t_train0 = std::time::Instant::now();
+            let out = engine
+                .train_step(&params, &pf.emb, &pf.nid, &pf.labels)
+                .context("dense train step")?;
+            let t_train = t_train0.elapsed().as_secs_f64();
+
+            // Dense synchronization.
+            let mut grad = out.grad_flat;
+            let t_ar = if mode == TrainMode::FullAsync {
+                0.0
+            } else {
+                let t0 = std::time::Instant::now();
+                let sim = member.all_reduce_mean(&mut grad);
+                t0.elapsed().as_secs_f64() + sim
+            };
+            opt.step(&mut params, &grad);
+
+            // FullAsync: replicas drift; gossip-average periodically.
+            if mode == TrainMode::FullAsync {
+                if step as u64 % ASYNC_SYNC_EVERY == ASYNC_SYNC_EVERY - 1 {
+                    *gossip[rank].lock().unwrap() = params.clone();
+                    // Best-effort average over whatever replicas have posted.
+                    let mut acc = params.clone();
+                    let mut n = 1.0f32;
+                    for (i, slot) in gossip.iter().enumerate() {
+                        if i == rank {
+                            continue;
+                        }
+                        let other = slot.lock().unwrap();
+                        if other.len() == acc.len() {
+                            for (a, o) in acc.iter_mut().zip(other.iter()) {
+                                *a += o;
+                            }
+                            n += 1.0;
+                        }
+                    }
+                    let inv = 1.0 / n;
+                    for a in acc.iter_mut() {
+                        *a *= inv;
+                    }
+                    params = acc;
+                }
+            }
+
+            // Embedding gradient return (Alg. 2 last line -> Alg. 1 backward).
+            let t_up = match mode {
+                TrainMode::FullSync => {
+                    let t0 = std::time::Instant::now();
+                    let sim = emb_workers[pf.ew].push_grads(&pf.sids, &out.grad_emb)?;
+                    t0.elapsed().as_secs_f64() + sim
+                }
+                _ => {
+                    inflight[pf.ew].fetch_add(1, Ordering::Relaxed);
+                    appliers[pf.ew]
+                        .send(GradMsg::Apply { ew: pf.ew, sids: pf.sids, grads: out.grad_emb })
+                        .ok();
+                    // Hidden from the critical path; cost accounted in sim
+                    // math below as overlap-able.
+                    0.0
+                }
+            };
+
+            // --- simulated step time per mode (Fig. 3's overlap algebra) ---
+            let t_prep = pf.sim_prep;
+            let step_sim = match mode {
+                TrainMode::FullSync => t_prep + t_train + t_ar + t_up,
+                TrainMode::HybridRaw => {
+                    // get/update hidden inside (train + allreduce) window.
+                    let hidden = t_prep;
+                    t_train + t_ar + (hidden - (t_train + t_ar)).max(0.0)
+                }
+                TrainMode::Hybrid => {
+                    // + allreduce overlapped with the backward 2/3 of train.
+                    let exposed_ar = (t_ar - t_train * (2.0 / 3.0)).max(0.0);
+                    let window = t_train + exposed_ar;
+                    window + (t_prep - window).max(0.0)
+                }
+                TrainMode::FullAsync => t_train,
+            };
+            let sim_net_extra = (step_sim - t_train).max(0.0);
+            sim_clock.fetch_add((sim_net_extra * 1e9) as u64, Ordering::Relaxed);
+
+            if rank == 0 && self.record_gantt {
+                let mut g = gantt.lock().unwrap();
+                let t_fwd = t_train / 3.0;
+                let t_bwd = t_train - t_fwd;
+                match mode {
+                    TrainMode::FullSync => {
+                        g.push(step as u64, "emb_prep", sim_t, t_prep);
+                        g.push(step as u64, "forward", sim_t + t_prep, t_fwd);
+                        g.push(step as u64, "backward", sim_t + t_prep + t_fwd, t_bwd);
+                        g.push(step as u64, "dense_sync", sim_t + t_prep + t_train, t_ar);
+                        g.push(step as u64, "emb_update", sim_t + t_prep + t_train + t_ar, t_up);
+                    }
+                    TrainMode::HybridRaw => {
+                        g.push(step as u64, "emb_prep", sim_t, t_prep);
+                        g.push(step as u64, "forward", sim_t, t_fwd);
+                        g.push(step as u64, "backward", sim_t + t_fwd, t_bwd);
+                        g.push(step as u64, "dense_sync", sim_t + t_train, t_ar);
+                        g.push(step as u64, "emb_update", sim_t + t_train * 0.5, t_prep * 0.5);
+                    }
+                    TrainMode::Hybrid => {
+                        g.push(step as u64, "emb_prep", sim_t, t_prep);
+                        g.push(step as u64, "forward", sim_t, t_fwd);
+                        g.push(step as u64, "backward", sim_t + t_fwd, t_bwd);
+                        g.push(step as u64, "dense_sync", sim_t + t_fwd, t_ar);
+                        g.push(step as u64, "emb_update", sim_t + t_fwd, t_prep * 0.5);
+                    }
+                    TrainMode::FullAsync => {
+                        g.push(step as u64, "emb_prep", sim_t, t_prep);
+                        g.push(step as u64, "forward", sim_t, t_fwd);
+                        g.push(step as u64, "backward", sim_t + t_fwd, t_bwd);
+                        g.push(step as u64, "emb_update", sim_t + t_fwd, t_prep * 0.5);
+                    }
+                }
+            }
+            sim_t += step_sim;
+
+            if rank == 0 {
+                let mut tr = tracker.lock().unwrap();
+                tr.record_loss(step as u64, out.loss);
+                tr.record_phase("emb_prep", (t_prep * 1e9) as u64);
+                tr.record_phase("train", (t_train * 1e9) as u64);
+                tr.record_phase("dense_sync", (t_ar * 1e9) as u64);
+                if self.train.eval_every > 0
+                    && (step + 1) % self.train.eval_every == 0
+                {
+                    let auc_v = self.evaluate(&engine, &params, &emb_workers[0])?;
+                    tr.record_auc(step as u64 + 1, auc_v);
+                }
+            }
+        }
+
+        // Final eval on worker 0.
+        if rank == 0 && self.train.eval_every > 0 {
+            let auc_v = self.evaluate(&engine, &params, &emb_workers[0])?;
+            tracker.lock().unwrap().record_auc(self.train.steps as u64, auc_v);
+        }
+        *final_params.lock().unwrap() = params;
+        Ok(())
+    }
+
+    /// Test AUC of the current dense params + live PS state.
+    pub fn evaluate(
+        &self,
+        engine: &DenseEngine,
+        params: &[f32],
+        ew: &EmbeddingWorker,
+    ) -> Result<f64> {
+        let batch = self.dataset.test_batch(self.eval_rows);
+        let (emb, _) = ew.lookup_direct(&batch);
+        let probs = engine.forward(params, &emb, &batch.nid, batch.len())?;
+        Ok(auc(&probs, &batch.labels))
+    }
+}
+
+impl Tracker {
+    /// Move the tracker out of a mutex slot (internal helper).
+    pub fn take_inner(&mut self) -> Tracker {
+        std::mem::take(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
+    };
+
+    fn small_setup(mode: TrainMode, steps: usize, k: usize) -> Trainer {
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 8,
+            nid_dim: 4,
+            hidden: vec![16, 8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        let emb_cfg = EmbeddingConfig {
+            rows_per_group: 500,
+            shard_capacity: 2048,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Adagrad,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let cluster = ClusterConfig {
+            n_nn_workers: k,
+            n_emb_workers: 2,
+            net: NetModelConfig::disabled(),
+        };
+        let train = TrainConfig {
+            mode,
+            batch_size: 64,
+            lr: 0.1,
+            staleness_bound: 4,
+            steps,
+            eval_every: 0,
+            seed: 7,
+            use_pjrt: false,
+            compress: true,
+        };
+        let dataset = SyntheticDataset::new(&model, 500, 1.05, 7);
+        Trainer::new(model, emb_cfg, cluster, train, dataset)
+    }
+
+    #[test]
+    fn all_modes_run_and_losses_drop() {
+        for mode in TrainMode::ALL {
+            let trainer = small_setup(mode, 120, 2);
+            let out = trainer.run_rust().unwrap();
+            let early: f32 = out.tracker.losses[..10].iter().map(|(_, l)| l).sum::<f32>() / 10.0;
+            let late = out.tracker.recent_loss(10).unwrap();
+            assert!(
+                late < early,
+                "{mode:?}: loss did not drop ({early} -> {late})"
+            );
+            assert_eq!(out.report.steps, 120);
+        }
+    }
+
+    #[test]
+    fn sync_mode_has_zero_staleness() {
+        let trainer = small_setup(TrainMode::FullSync, 40, 2);
+        let out = trainer.run_rust().unwrap();
+        assert_eq!(out.report.max_staleness, 0);
+    }
+
+    #[test]
+    fn hybrid_staleness_is_bounded_by_tau() {
+        let trainer = small_setup(TrainMode::Hybrid, 80, 2);
+        let tau = trainer.train.staleness_bound as u64;
+        let out = trainer.run_rust().unwrap();
+        assert!(
+            out.report.max_staleness <= tau + 1,
+            "staleness {} > tau {}",
+            out.report.max_staleness,
+            tau
+        );
+    }
+
+    #[test]
+    fn eval_produces_auc_above_chance() {
+        let mut trainer = small_setup(TrainMode::Hybrid, 300, 2);
+        trainer.train.eval_every = 100;
+        trainer.eval_rows = 1024;
+        let out = trainer.run_rust().unwrap();
+        let final_auc = out.report.final_auc.unwrap();
+        assert!(final_auc > 0.55, "auc={final_auc}");
+    }
+
+    #[test]
+    fn single_worker_runs() {
+        let trainer = small_setup(TrainMode::Hybrid, 30, 1);
+        let out = trainer.run_rust().unwrap();
+        assert_eq!(out.report.samples, 30 * 64);
+    }
+
+    #[test]
+    fn gantt_recording_captures_phases() {
+        let mut trainer = small_setup(TrainMode::FullSync, 5, 1);
+        trainer.record_gantt = true;
+        trainer.cluster.net = NetModelConfig::paper_like();
+        let out = trainer.run_rust().unwrap();
+        assert!(!out.gantt.events.is_empty());
+        assert!(out.gantt.total_span() > 0.0);
+    }
+
+    #[test]
+    fn zero_steps_rejected() {
+        let mut trainer = small_setup(TrainMode::Hybrid, 10, 1);
+        trainer.train.steps = 0;
+        assert!(trainer.run_rust().is_err());
+    }
+}

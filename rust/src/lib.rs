@@ -1,0 +1,34 @@
+//! # Persia — hybrid distributed training for 100-trillion-parameter recommenders
+//!
+//! From-scratch reproduction of *"Persia: An Open, Hybrid System Scaling Deep
+//! Learning-based Recommenders up to 100 Trillion Parameters"* (KDD 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: data loader,
+//!   embedding workers, sharded embedding parameter server with an array-list
+//!   LRU cache, NN workers, zero-copy tensor RPC, index/value compression,
+//!   bucketed ring AllReduce, and the sync/async/**hybrid** training
+//!   algorithms with bounded staleness.
+//! * **L2/L1 (build-time Python)** — the dense tower fwd/bwd (JAX) built on
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/` and executed
+//!   here via the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   training hot path.
+//!
+//! Entry points: [`hybrid::Trainer`] for end-to-end training,
+//! [`config::BenchPreset`] for the paper's Table-1 benchmark presets, and the
+//! `persia` binary / `examples/` for runnable drivers.
+
+pub mod allreduce;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod dense;
+pub mod embedding;
+pub mod fault;
+pub mod hybrid;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod worker;

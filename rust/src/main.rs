@@ -1,0 +1,195 @@
+//! `persia` — CLI launcher for the hybrid recommender training system.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   train     run a training job (preset, mode, workers, steps, ...)
+//!   gantt     print the Fig.-3 phase timelines for all four modes
+//!   table1    print the Table-1 model-scale presets
+//!   capacity  Fig.-9 style capacity sweep (virtualized tables)
+//!   modes     convergence comparison across modes (Fig. 7 / Table 2 style)
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::data::SyntheticDataset;
+use persia::hybrid::{PjrtEngineFactory, Trainer};
+use persia::runtime::ArtifactManifest;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
+    let preset_name = flag(flags, "preset", "taobao");
+    let preset = BenchPreset::by_name(preset_name)
+        .with_context(|| format!("unknown preset {preset_name}"))?;
+    let dense = flag(flags, "dense", "small");
+    let model = preset.model(dense);
+    let emb_cfg = preset.embedding(&model, flag(flags, "shard-capacity", "65536").parse()?);
+    let cluster = ClusterConfig {
+        n_nn_workers: flag(flags, "nn-workers", "4").parse()?,
+        n_emb_workers: flag(flags, "emb-workers", "2").parse()?,
+        net: if flag(flags, "netsim", "true") == "true" {
+            NetModelConfig::paper_like()
+        } else {
+            NetModelConfig::disabled()
+        },
+    };
+    // PJRT artifacts fix the batch per preset; read it from the manifest.
+    let use_pjrt = flag(flags, "engine", "pjrt") == "pjrt";
+    let batch: usize = if use_pjrt {
+        let manifest = ArtifactManifest::load(ArtifactManifest::default_dir())?;
+        manifest.preset(dense)?.batch
+    } else {
+        flag(flags, "batch", "64").parse()?
+    };
+    let train = TrainConfig {
+        mode: TrainMode::parse(flag(flags, "mode", "hybrid"))?,
+        batch_size: batch,
+        lr: flag(flags, "lr", "0.05").parse()?,
+        staleness_bound: flag(flags, "tau", "4").parse()?,
+        steps: flag(flags, "steps", "200").parse()?,
+        eval_every: flag(flags, "eval-every", "50").parse()?,
+        seed: flag(flags, "seed", "42").parse()?,
+        use_pjrt,
+        compress: flag(flags, "compress", "true") == "true",
+    };
+    let dataset = SyntheticDataset::new(
+        &model,
+        preset.embedding(&model, 1).rows_per_group,
+        preset.zipf_exponent,
+        train.seed,
+    );
+    Ok(Trainer::new(model, emb_cfg, cluster, train, dataset))
+}
+
+fn run_trainer(trainer: &Trainer, flags: &HashMap<String, String>) -> Result<()> {
+    let out = if trainer.train.use_pjrt {
+        let factory = PjrtEngineFactory {
+            artifacts_dir: ArtifactManifest::default_dir(),
+            preset: trainer.model.artifact_preset.clone(),
+        };
+        trainer.run(&factory)?
+    } else {
+        trainer.run_rust()?
+    };
+    out.report.print_row();
+    if flag(flags, "verbose", "false") == "true" {
+        for (name, hist) in out.tracker.phases() {
+            println!("  phase {name:<12} {}", hist.summary());
+        }
+        println!("  ps imbalance: {:.2}", out.ps_imbalance);
+    }
+    Ok(())
+}
+
+fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
+    let trainer = build_trainer(&flags)?;
+    println!(
+        "persia train: preset={} dense={} mode={} engine={} workers={} batch={} steps={}",
+        flag(&flags, "preset", "taobao"),
+        trainer.model.artifact_preset,
+        trainer.train.mode.name(),
+        if trainer.train.use_pjrt { "pjrt" } else { "rust" },
+        trainer.cluster.n_nn_workers,
+        trainer.train.batch_size,
+        trainer.train.steps,
+    );
+    run_trainer(&trainer, &flags)
+}
+
+fn cmd_gantt(flags: HashMap<String, String>) -> Result<()> {
+    for mode in TrainMode::ALL {
+        let mut f = flags.clone();
+        f.insert("mode".into(), mode.name().into());
+        f.insert("steps".into(), flag(&flags, "steps", "6").to_string());
+        f.insert("engine".into(), flag(&flags, "engine", "rust").to_string());
+        f.insert("eval-every".into(), "0".into());
+        let mut trainer = build_trainer(&f)?;
+        trainer.record_gantt = true;
+        let out = trainer.run_rust()?;
+        println!(
+            "\n### mode = {} (overlap fraction {:.2}) ###",
+            mode.name(),
+            out.gantt.overlap_fraction()
+        );
+        print!("{}", out.gantt.render_ascii(100));
+    }
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    println!("{:<14} {:>18} {:>14}", "benchmark", "sparse params", "dense params");
+    for p in BenchPreset::all() {
+        println!("{:<14} {:>18} {:>14}", p.name, p.sparse_params, p.dense_params_paper);
+    }
+    Ok(())
+}
+
+fn cmd_capacity(flags: HashMap<String, String>) -> Result<()> {
+    println!("capacity sweep (virtualized tables, LRU-bounded physical memory)");
+    for p in BenchPreset::capacity_sweep() {
+        let mut f = flags.clone();
+        f.insert("preset".into(), p.name.into());
+        f.insert("engine".into(), flag(&flags, "engine", "rust").to_string());
+        f.insert("steps".into(), flag(&flags, "steps", "60").to_string());
+        f.insert("eval-every".into(), "0".into());
+        let trainer = build_trainer(&f)?;
+        print!("{:<14} sparse={:>20} ", p.name, p.sparse_params);
+        run_trainer(&trainer, &f)?;
+    }
+    Ok(())
+}
+
+fn cmd_modes(flags: HashMap<String, String>) -> Result<()> {
+    for mode in TrainMode::ALL {
+        let mut f = flags.clone();
+        f.insert("mode".into(), mode.name().into());
+        f.insert("engine".into(), flag(&flags, "engine", "rust").to_string());
+        let trainer = build_trainer(&f)?;
+        run_trainer(&trainer, &f)?;
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: persia <train|gantt|table1|capacity|modes> [--preset taobao] [--mode hybrid] \
+         [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] [--emb-workers N] \
+         [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] [--verbose true]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(flags),
+        "gantt" => cmd_gantt(flags),
+        "table1" => cmd_table1(),
+        "capacity" => cmd_capacity(flags),
+        "modes" => cmd_modes(flags),
+        _ => usage(),
+    }
+}

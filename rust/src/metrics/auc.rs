@@ -1,0 +1,114 @@
+//! Exact ROC-AUC via rank statistics.
+//!
+//! AUC is the paper's convergence metric for every benchmark (Fig. 6/7,
+//! Table 2). Computed exactly: sort by score, Mann-Whitney U with midrank
+//! tie handling.
+
+/// Exact ROC-AUC of `scores` against binary `labels` (1.0 = positive).
+/// Returns 0.5 for degenerate inputs (single class or empty).
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+
+    // Sum of midranks of positives.
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        // Ranks i+1 ..= j+1 share midrank.
+        let midrank = (i + 1 + j + 1) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            if labels[k] > 0.5 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64) * (n_pos as f64 + 1.0) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn perfect_separation_is_one() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn inverted_is_zero() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn random_scores_near_half() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let labels: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc={a}");
+    }
+
+    #[test]
+    fn ties_get_midrank() {
+        // All scores equal -> AUC exactly 0.5.
+        let scores = [0.5; 10];
+        let labels = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert_eq!(auc(&scores, &labels), 0.5);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn matches_brute_force_pair_count() {
+        let mut rng = Rng::new(2);
+        let n = 200;
+        let scores: Vec<f32> = (0..n).map(|_| (rng.below(50) as f32) / 10.0).collect();
+        let labels: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+        // Brute force: P(score_pos > score_neg) + 0.5 P(==).
+        let mut wins = 0.0f64;
+        let mut total = 0.0f64;
+        for i in 0..n {
+            if labels[i] < 0.5 {
+                continue;
+            }
+            for j in 0..n {
+                if labels[j] > 0.5 {
+                    continue;
+                }
+                total += 1.0;
+                if scores[i] > scores[j] {
+                    wins += 1.0;
+                } else if scores[i] == scores[j] {
+                    wins += 0.5;
+                }
+            }
+        }
+        let brute = wins / total;
+        let fast = auc(&scores, &labels);
+        assert!((brute - fast).abs() < 1e-9, "brute={brute} fast={fast}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation + run metrics: AUC, loss tracking, throughput counters.
+
+pub mod auc;
+pub mod tracker;
+
+pub use auc::auc;
+pub use tracker::{RunReport, Throughput, Tracker};

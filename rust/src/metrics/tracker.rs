@@ -1,0 +1,175 @@
+//! Run-level metric tracking: loss EMA, throughput, phase timings.
+
+use std::time::Instant;
+
+use crate::util::Histogram;
+
+/// Samples/sec counter.
+pub struct Throughput {
+    start: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / secs
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Training-run tracker: losses per step, AUC evals, phase histograms.
+#[derive(Default)]
+pub struct Tracker {
+    pub losses: Vec<(u64, f32)>,
+    pub aucs: Vec<(u64, f64)>,
+    /// Nanosecond histograms per named phase (emb_get, fwd_bwd, allreduce...).
+    phases: Vec<(String, Histogram)>,
+}
+
+impl Tracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_loss(&mut self, step: u64, loss: f32) {
+        self.losses.push((step, loss));
+    }
+
+    pub fn record_auc(&mut self, step: u64, auc: f64) {
+        self.aucs.push((step, auc));
+    }
+
+    pub fn record_phase(&mut self, phase: &str, ns: u64) {
+        if let Some((_, h)) = self.phases.iter_mut().find(|(n, _)| n == phase) {
+            h.record(ns);
+        } else {
+            let mut h = Histogram::new();
+            h.record(ns);
+            self.phases.push((phase.to_string(), h));
+        }
+    }
+
+    pub fn phase(&self, name: &str) -> Option<&Histogram> {
+        self.phases.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn phases(&self) -> &[(String, Histogram)] {
+        &self.phases
+    }
+
+    /// Mean of the last `k` recorded losses.
+    pub fn recent_loss(&self, k: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(k)..];
+        Some(tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn final_auc(&self) -> Option<f64> {
+        self.aucs.last().map(|(_, a)| *a)
+    }
+
+    /// First step at which AUC reached `target` (for time-to-AUC, Fig. 6).
+    pub fn steps_to_auc(&self, target: f64) -> Option<u64> {
+        self.aucs.iter().find(|(_, a)| *a >= target).map(|(s, _)| *s)
+    }
+}
+
+/// Final report of a training run, consumed by benches and examples.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub mode: String,
+    pub steps: u64,
+    pub samples: u64,
+    pub wall_secs: f64,
+    /// Simulated seconds (wallclock + injected network model time).
+    pub sim_secs: f64,
+    pub final_loss: f32,
+    pub final_auc: Option<f64>,
+    pub samples_per_sec: f64,
+    /// Max observed embedding staleness (Theorem 1's τ).
+    pub max_staleness: u64,
+}
+
+impl RunReport {
+    pub fn print_row(&self) {
+        println!(
+            "{:<12} steps={:<6} samples={:<8} wall={:>7.2}s sim={:>8.2}s loss={:<8.4} auc={} thpt={:.0}/s tau={}",
+            self.mode,
+            self.steps,
+            self.samples,
+            self.wall_secs,
+            self.sim_secs,
+            self.final_loss,
+            self.final_auc.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
+            self.samples_per_sec,
+            self.max_staleness
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(100);
+        t.add(50);
+        assert_eq!(t.items(), 150);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn tracker_records_and_queries() {
+        let mut t = Tracker::new();
+        t.record_loss(1, 0.9);
+        t.record_loss(2, 0.7);
+        t.record_loss(3, 0.5);
+        t.record_auc(2, 0.55);
+        t.record_auc(3, 0.72);
+        assert_eq!(t.recent_loss(2), Some(0.6));
+        assert_eq!(t.final_auc(), Some(0.72));
+        assert_eq!(t.steps_to_auc(0.7), Some(3));
+        assert_eq!(t.steps_to_auc(0.9), None);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = Tracker::new();
+        t.record_phase("fwd", 100);
+        t.record_phase("fwd", 200);
+        t.record_phase("bwd", 300);
+        assert_eq!(t.phase("fwd").unwrap().count(), 2);
+        assert_eq!(t.phase("bwd").unwrap().count(), 1);
+        assert!(t.phase("nope").is_none());
+    }
+}

@@ -1,0 +1,159 @@
+//! Parse `artifacts/manifest.txt` emitted by `python -m compile.aot`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::IniDoc;
+
+/// One exported dense-tower preset.
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub name: String,
+    pub train_file: String,
+    pub fwd_file: String,
+    pub batch: usize,
+    pub n_groups: usize,
+    pub emb_dim_per_group: usize,
+    pub emb_dim: usize,
+    pub nid_dim: usize,
+    /// Layer dims including input and output 1.
+    pub dims: Vec<usize>,
+    pub dense_params: usize,
+}
+
+impl PresetInfo {
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub presets: Vec<PresetInfo>,
+}
+
+impl ArtifactManifest {
+    /// Load from an artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let doc = IniDoc::load(dir.join("manifest.txt"))
+            .context("artifacts/manifest.txt missing — run `make artifacts`")?;
+        ensure!(doc.get_u64("", "format_version")? == 1, "unsupported manifest version");
+        let mut presets = Vec::new();
+        for section in doc.sections() {
+            if section == "kernels" {
+                continue;
+            }
+            let dims = doc.get_usize_list(section, "dims")?;
+            ensure!(dims.len() >= 3 && *dims.last().unwrap() == 1, "bad dims in {section}");
+            presets.push(PresetInfo {
+                name: section.to_string(),
+                train_file: doc.get_str(section, "train_file")?.to_string(),
+                fwd_file: doc.get_str(section, "fwd_file")?.to_string(),
+                batch: doc.get_usize(section, "batch")?,
+                n_groups: doc.get_usize(section, "n_groups")?,
+                emb_dim_per_group: doc.get_usize(section, "emb_dim_per_group")?,
+                emb_dim: doc.get_usize(section, "emb_dim")?,
+                nid_dim: doc.get_usize(section, "nid_dim")?,
+                dims,
+                dense_params: doc.get_usize(section, "dense_params")?,
+            });
+        }
+        ensure!(!presets.is_empty(), "manifest lists no presets");
+        Ok(Self { dir, presets })
+    }
+
+    /// Default artifacts directory (repo-root/artifacts, overridable).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PERSIA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("preset {name:?} not in manifest"))
+    }
+
+    pub fn train_path(&self, preset: &PresetInfo) -> PathBuf {
+        self.dir.join(&preset.train_file)
+    }
+
+    pub fn fwd_path(&self, preset: &PresetInfo) -> PathBuf {
+        self.dir.join(&preset.fwd_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+format_version = 1
+
+[tiny]
+train_file = train_tiny.hlo.txt
+fwd_file = fwd_tiny.hlo.txt
+batch = 32
+n_groups = 4
+emb_dim_per_group = 8
+emb_dim = 32
+nid_dim = 8
+dims = 40,32,16,1
+dense_params = 1873
+
+[kernels]
+bag_file = bag.hlo.txt
+bag_shape = 256,32,16
+compress_file = compress.hlo.txt
+decompress_file = decompress.hlo.txt
+compress_shape = 1024,16
+"#;
+
+    fn write_sample() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("persia_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), SAMPLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_presets_and_skips_kernels() {
+        let dir = write_sample();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.presets.len(), 1);
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.batch, 32);
+        assert_eq!(p.dims, vec![40, 32, 16, 1]);
+        assert_eq!(p.n_layers(), 3);
+        assert!(m.preset("nope").is_err());
+        assert!(m.train_path(p).ends_with("train_tiny.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_context_error() {
+        let err = ArtifactManifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        // Opportunistic: only runs when `make artifacts` has been run.
+        let dir = ArtifactManifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            for name in ["tiny", "small", "paper"] {
+                let p = m.preset(name).unwrap();
+                assert_eq!(p.emb_dim, p.n_groups * p.emb_dim_per_group);
+                assert!(m.train_path(p).exists());
+                assert!(m.fwd_path(p).exists());
+            }
+        }
+    }
+}

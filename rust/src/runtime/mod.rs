@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot path.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute` — the exact path demonstrated by /opt/xla-example/load_hlo.
+//! HLO *text* is the interchange format (see python/compile/aot.py).
+
+pub mod manifest;
+pub mod pjrt;
+pub mod trainstep;
+
+pub use manifest::{ArtifactManifest, PresetInfo};
+pub use pjrt::{Executable, PjRtRuntime};
+pub use trainstep::{DenseEngine, ForwardExec, TrainStepExec, TrainStepOut};

@@ -1,0 +1,139 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client (compiling is per-executable).
+pub struct PjRtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjRtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Build an f32 literal from host data.
+    pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+            .map_err(anyhow_xla)
+    }
+
+    /// Read an f32 literal back to a Vec.
+    pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(anyhow_xla)
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// A compiled artifact. All our artifacts return a single tuple
+/// (lowered with `return_tuple=True`), which `run` decomposes.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args).map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        lit.to_tuple().map_err(anyhow_xla)
+    }
+
+    /// Execute and return raw output buffers (no host copy) — used when the
+    /// caller chains executions device-side.
+    pub fn run_buffers(&self, args: &[xla::Literal]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        self.exe.execute::<xla::Literal>(args).map_err(anyhow_xla)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ArtifactManifest;
+
+    fn artifacts() -> Option<ArtifactManifest> {
+        let dir = ArtifactManifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(ArtifactManifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = PjRtRuntime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    }
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let lit = PjRtRuntime::literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(PjRtRuntime::literal_to_f32(&lit).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn literal_f32_shape_mismatch_errors() {
+        assert!(PjRtRuntime::literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn tiny_forward_artifact_runs() {
+        let Some(m) = artifacts() else { return };
+        let rt = PjRtRuntime::cpu().unwrap();
+        let p = m.preset("tiny").unwrap();
+        let exe = rt.load_hlo_text(m.fwd_path(p)).unwrap();
+        // Zero params + zero inputs => logits 0 => probs 0.5.
+        let mut args = Vec::new();
+        for i in 0..p.n_layers() {
+            args.push(PjRtRuntime::literal_f32(
+                &[p.dims[i], p.dims[i + 1]],
+                &vec![0.0; p.dims[i] * p.dims[i + 1]],
+            )
+            .unwrap());
+            args.push(PjRtRuntime::literal_f32(&[p.dims[i + 1]], &vec![0.0; p.dims[i + 1]]).unwrap());
+        }
+        args.push(
+            PjRtRuntime::literal_f32(&[p.batch, p.emb_dim], &vec![0.0; p.batch * p.emb_dim])
+                .unwrap(),
+        );
+        args.push(
+            PjRtRuntime::literal_f32(&[p.batch, p.nid_dim], &vec![0.0; p.batch * p.nid_dim])
+                .unwrap(),
+        );
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.len(), 1);
+        let probs = PjRtRuntime::literal_to_f32(&out[0]).unwrap();
+        assert_eq!(probs.len(), p.batch);
+        assert!(probs.iter().all(|&x| (x - 0.5).abs() < 1e-6));
+    }
+}

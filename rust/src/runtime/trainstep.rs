@@ -1,0 +1,366 @@
+//! Typed wrappers over the train/forward artifacts + the engine abstraction.
+//!
+//! `DenseEngine` is what NN workers program against: either the AOT-compiled
+//! PJRT executables (production path — the L2/L1 stack) or the pure-Rust
+//! reference tower (fallback + cross-check). Both implement the same
+//! (params, emb, nid, y) -> (loss, dense grads, emb grads) contract in the
+//! flat artifact ordering.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::dense::DenseModel;
+
+use super::manifest::{ArtifactManifest, PresetInfo};
+use super::pjrt::{Executable, PjRtRuntime};
+
+/// One train-step's outputs.
+#[derive(Clone, Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    /// Dense gradients flattened in (w0, b0, w1, b1, ...) order.
+    pub grad_flat: Vec<f32>,
+    /// `[B, emb_dim]` gradient wrt the pooled embedding activations.
+    pub grad_emb: Vec<f32>,
+}
+
+/// Compiled `train_<preset>` artifact.
+///
+/// Param literals are cached and refilled in place each step
+/// (`copy_raw_from`) instead of re-allocated — the execute-boundary
+/// optimization recorded in EXPERIMENTS.md §Perf.
+pub struct TrainStepExec {
+    exe: Executable,
+    info: PresetInfo,
+    lit_cache: Mutex<Option<Vec<xla::Literal>>>,
+}
+
+impl TrainStepExec {
+    pub fn load(rt: &PjRtRuntime, manifest: &ArtifactManifest, preset: &str) -> Result<Self> {
+        let info = manifest.preset(preset)?.clone();
+        let exe = rt.load_hlo_text(manifest.train_path(&info))?;
+        Ok(Self { exe, info, lit_cache: Mutex::new(None) })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.info.batch
+    }
+
+    pub fn info(&self) -> &PresetInfo {
+        &self.info
+    }
+
+    fn param_literals(info: &PresetInfo, params_flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        let mut args = Vec::with_capacity(2 * info.n_layers() + 3);
+        let mut off = 0;
+        for i in 0..info.n_layers() {
+            let (di, dj) = (info.dims[i], info.dims[i + 1]);
+            args.push(PjRtRuntime::literal_f32(&[di, dj], &params_flat[off..off + di * dj])?);
+            off += di * dj;
+            args.push(PjRtRuntime::literal_f32(&[dj], &params_flat[off..off + dj])?);
+            off += dj;
+        }
+        ensure!(off == params_flat.len(), "params_flat length mismatch");
+        Ok(args)
+    }
+
+    /// Run one train step. `emb: [B*emb_dim]`, `nid: [B*nid_dim]`, `y: [B]`
+    /// with `B == self.batch()`.
+    pub fn run(
+        &self,
+        params_flat: &[f32],
+        emb: &[f32],
+        nid: &[f32],
+        labels: &[f32],
+    ) -> Result<TrainStepOut> {
+        let info = &self.info;
+        let b = info.batch;
+        ensure!(labels.len() == b, "batch mismatch: {} != {}", labels.len(), b);
+        ensure!(emb.len() == b * info.emb_dim && nid.len() == b * info.nid_dim);
+        // Reuse the literal set across steps: refill in place.
+        let mut cache = self.lit_cache.lock().unwrap();
+        if cache.is_none() {
+            let mut lits = Self::param_literals(info, params_flat)?;
+            lits.push(PjRtRuntime::literal_f32(&[b, info.emb_dim], emb)?);
+            lits.push(PjRtRuntime::literal_f32(&[b, info.nid_dim], nid)?);
+            lits.push(PjRtRuntime::literal_f32(&[b], labels)?);
+            *cache = Some(lits);
+        } else {
+            let lits = cache.as_mut().unwrap();
+            let mut off = 0;
+            let n_layers = info.n_layers();
+            for i in 0..n_layers {
+                let (di, dj) = (info.dims[i], info.dims[i + 1]);
+                lits[2 * i]
+                    .copy_raw_from(&params_flat[off..off + di * dj])
+                    .map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+                off += di * dj;
+                lits[2 * i + 1]
+                    .copy_raw_from(&params_flat[off..off + dj])
+                    .map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+                off += dj;
+            }
+            ensure!(off == params_flat.len(), "params_flat length mismatch");
+            lits[2 * n_layers].copy_raw_from(emb).map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+            lits[2 * n_layers + 1].copy_raw_from(nid).map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+            lits[2 * n_layers + 2].copy_raw_from(labels).map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+        }
+        let args = cache.as_ref().unwrap();
+
+        let out = self.exe.run(args)?;
+        ensure!(out.len() == 2 * info.n_layers() + 2, "unexpected output arity {}", out.len());
+        let loss = out[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("xla: {e}"))?;
+        let mut grad_flat = Vec::with_capacity(params_flat.len());
+        for i in 0..info.n_layers() {
+            grad_flat.extend(PjRtRuntime::literal_to_f32(&out[1 + 2 * i])?);
+            grad_flat.extend(PjRtRuntime::literal_to_f32(&out[2 + 2 * i])?);
+        }
+        let grad_emb = PjRtRuntime::literal_to_f32(&out[1 + 2 * info.n_layers()])?;
+        ensure!(grad_emb.len() == b * info.emb_dim);
+        Ok(TrainStepOut { loss, grad_flat, grad_emb })
+    }
+}
+
+/// Compiled `fwd_<preset>` artifact (eval path).
+pub struct ForwardExec {
+    exe: Executable,
+    info: PresetInfo,
+}
+
+impl ForwardExec {
+    pub fn load(rt: &PjRtRuntime, manifest: &ArtifactManifest, preset: &str) -> Result<Self> {
+        let info = manifest.preset(preset)?.clone();
+        let exe = rt.load_hlo_text(manifest.fwd_path(&info))?;
+        Ok(Self { exe, info })
+    }
+
+    /// Predict probabilities for exactly one artifact batch.
+    fn run_one(&self, params_flat: &[f32], emb: &[f32], nid: &[f32]) -> Result<Vec<f32>> {
+        let info = &self.info;
+        let mut args = TrainStepExec::param_literals(info, params_flat)?;
+        args.push(PjRtRuntime::literal_f32(&[info.batch, info.emb_dim], emb)?);
+        args.push(PjRtRuntime::literal_f32(&[info.batch, info.nid_dim], nid)?);
+        let out = self.exe.run(&args)?;
+        PjRtRuntime::literal_to_f32(&out[0])
+    }
+
+    /// Predict for any number of rows (pads the trailing chunk).
+    pub fn run(&self, params_flat: &[f32], emb: &[f32], nid: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let info = &self.info;
+        ensure!(emb.len() == rows * info.emb_dim && nid.len() == rows * info.nid_dim);
+        let b = info.batch;
+        let mut probs = Vec::with_capacity(rows);
+        let mut r = 0;
+        while r < rows {
+            let take = b.min(rows - r);
+            let mut e = emb[r * info.emb_dim..(r + take) * info.emb_dim].to_vec();
+            let mut n = nid[r * info.nid_dim..(r + take) * info.nid_dim].to_vec();
+            e.resize(b * info.emb_dim, 0.0);
+            n.resize(b * info.nid_dim, 0.0);
+            let chunk = self.run_one(params_flat, &e, &n)?;
+            probs.extend_from_slice(&chunk[..take]);
+            r += take;
+        }
+        Ok(probs)
+    }
+}
+
+/// The dense compute engine NN workers drive.
+pub enum DenseEngine {
+    /// AOT artifacts via PJRT (L2/L1 on the hot path).
+    Pjrt { train: TrainStepExec, fwd: ForwardExec },
+    /// Pure-Rust reference tower.
+    Rust { model: Mutex<DenseModel> },
+}
+
+impl DenseEngine {
+    /// Load the PJRT engine for an artifact preset.
+    pub fn pjrt(rt: &PjRtRuntime, manifest: &ArtifactManifest, preset: &str) -> Result<Self> {
+        Ok(DenseEngine::Pjrt {
+            train: TrainStepExec::load(rt, manifest, preset)?,
+            fwd: ForwardExec::load(rt, manifest, preset)?,
+        })
+    }
+
+    /// Pure-Rust engine over a template model (its params are overwritten by
+    /// `params_flat` on every call).
+    pub fn rust(model: DenseModel) -> Self {
+        DenseEngine::Rust { model: Mutex::new(model) }
+    }
+
+    /// Fixed train batch of the engine (None = any).
+    pub fn train_batch(&self) -> Option<usize> {
+        match self {
+            DenseEngine::Pjrt { train, .. } => Some(train.batch()),
+            DenseEngine::Rust { .. } => None,
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, DenseEngine::Pjrt { .. })
+    }
+
+    /// One train step over a batch of `rows` samples.
+    pub fn train_step(
+        &self,
+        params_flat: &[f32],
+        emb: &[f32],
+        nid: &[f32],
+        labels: &[f32],
+    ) -> Result<TrainStepOut> {
+        match self {
+            DenseEngine::Pjrt { train, .. } => train.run(params_flat, emb, nid, labels),
+            DenseEngine::Rust { model } => {
+                let mut m = model.lock().unwrap();
+                m.set_params_flat(params_flat);
+                let b = labels.len();
+                let (loss, grads) = m.train_step(emb, nid, labels, b);
+                let mut grad_flat = Vec::with_capacity(params_flat.len());
+                for (gw, gb) in grads.weights.iter().zip(&grads.biases) {
+                    grad_flat.extend_from_slice(gw.data());
+                    grad_flat.extend_from_slice(gb.data());
+                }
+                Ok(TrainStepOut { loss, grad_flat, grad_emb: grads.emb.into_vec() })
+            }
+        }
+    }
+
+    /// Predict probabilities.
+    pub fn forward(
+        &self,
+        params_flat: &[f32],
+        emb: &[f32],
+        nid: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        match self {
+            DenseEngine::Pjrt { fwd, .. } => fwd.run(params_flat, emb, nid, rows),
+            DenseEngine::Rust { model } => {
+                let mut m = model.lock().unwrap();
+                m.set_params_flat(params_flat);
+                Ok(m.forward(emb, nid, rows))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn artifacts() -> Option<ArtifactManifest> {
+        let dir = ArtifactManifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(ArtifactManifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    /// The central L2-vs-L3 numeric cross-check: the AOT artifact and the
+    /// pure-Rust tower must agree on loss and every gradient.
+    #[test]
+    fn pjrt_and_rust_engines_agree() {
+        let Some(m) = artifacts() else { return };
+        let rt = PjRtRuntime::cpu().unwrap();
+        let info = m.preset("tiny").unwrap().clone();
+        let pjrt = DenseEngine::pjrt(&rt, &m, "tiny").unwrap();
+
+        let mut rng = Rng::new(11);
+        let model = DenseModel::new(&info.dims, info.emb_dim, info.nid_dim, &mut rng);
+        let params = model.params_flat();
+        let rust = DenseEngine::rust(model);
+
+        let b = info.batch;
+        let emb = rng.normal_vec(b * info.emb_dim);
+        let nid = rng.normal_vec(b * info.nid_dim);
+        let labels: Vec<f32> =
+            (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+
+        let a = pjrt.train_step(&params, &emb, &nid, &labels).unwrap();
+        let r = rust.train_step(&params, &emb, &nid, &labels).unwrap();
+        assert!((a.loss - r.loss).abs() < 1e-4, "loss {} vs {}", a.loss, r.loss);
+        assert_eq!(a.grad_flat.len(), r.grad_flat.len());
+        for (x, y) in a.grad_flat.iter().zip(&r.grad_flat) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        for (x, y) in a.grad_emb.iter().zip(&r.grad_emb) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+
+        let pa = pjrt.forward(&params, &emb, &nid, b).unwrap();
+        let pr = rust.forward(&params, &emb, &nid, b).unwrap();
+        for (x, y) in pa.iter().zip(&pr) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn literal_cache_refill_path_is_correct() {
+        // Two successive steps with different params must match the Rust
+        // engine on both (exercises the copy_raw_from refill branch).
+        let Some(m) = artifacts() else { return };
+        let rt = PjRtRuntime::cpu().unwrap();
+        let info = m.preset("tiny").unwrap().clone();
+        let pjrt = DenseEngine::pjrt(&rt, &m, "tiny").unwrap();
+        let mut rng = Rng::new(21);
+        let model = DenseModel::new(&info.dims, info.emb_dim, info.nid_dim, &mut rng);
+        let rust = DenseEngine::rust(model.clone());
+        let b = info.batch;
+        let emb = rng.normal_vec(b * info.emb_dim);
+        let nid = rng.normal_vec(b * info.nid_dim);
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let mut params = model.params_flat();
+        for step in 0..3 {
+            let a = pjrt.train_step(&params, &emb, &nid, &y).unwrap();
+            let r = rust.train_step(&params, &emb, &nid, &y).unwrap();
+            assert!((a.loss - r.loss).abs() < 1e-4, "step {step}: {} vs {}", a.loss, r.loss);
+            for (x, yv) in a.grad_flat.iter().zip(&r.grad_flat) {
+                assert!((x - yv).abs() < 1e-4);
+            }
+            // SGD update so the next step sees different params.
+            for (p, g) in params.iter_mut().zip(&a.grad_flat) {
+                *p -= 0.1 * g;
+            }
+        }
+    }
+
+    #[test]
+    fn forward_pads_partial_batches() {
+        let Some(m) = artifacts() else { return };
+        let rt = PjRtRuntime::cpu().unwrap();
+        let info = m.preset("tiny").unwrap().clone();
+        let pjrt = DenseEngine::pjrt(&rt, &m, "tiny").unwrap();
+        let mut rng = Rng::new(3);
+        let rows = info.batch + 7; // forces a padded second chunk
+        let emb = rng.normal_vec(rows * info.emb_dim);
+        let nid = rng.normal_vec(rows * info.nid_dim);
+        let params = {
+            let model = DenseModel::new(&info.dims, info.emb_dim, info.nid_dim, &mut rng);
+            model.params_flat()
+        };
+        let probs = pjrt.forward(&params, &emb, &nid, rows).unwrap();
+        assert_eq!(probs.len(), rows);
+        assert!(probs.iter().all(|&p| p > 0.0 && p < 1.0));
+    }
+
+    #[test]
+    fn batch_mismatch_is_error() {
+        let Some(m) = artifacts() else { return };
+        let rt = PjRtRuntime::cpu().unwrap();
+        let pjrt = DenseEngine::pjrt(&rt, &m, "tiny").unwrap();
+        let info = m.preset("tiny").unwrap();
+        let params = vec![0.0; info.dense_params];
+        // One row short.
+        let b = info.batch - 1;
+        let res = pjrt.train_step(
+            &params,
+            &vec![0.0; b * info.emb_dim],
+            &vec![0.0; b * info.nid_dim],
+            &vec![0.0; b],
+        );
+        assert!(res.is_err());
+    }
+}

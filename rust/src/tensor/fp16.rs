@@ -1,0 +1,177 @@
+//! IEEE 754 binary16 conversion (the `half` crate is unavailable offline).
+//!
+//! Used by `comm::compress` for the paper's lossy fp32→fp16 value compression
+//! (§4.2.3). Round-to-nearest-even, with correct subnormal, infinity and NaN
+//! handling; property-tested against the exact semantics in `comm` tests and
+//! against the L1 Pallas `compress` kernel via the AOT artifact.
+
+/// Convert one f32 to its binary16 bit pattern (round-to-nearest-even).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN: preserve NaN-ness with a quiet bit.
+        return if mant == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+
+    // Unbiased exponent, rebiased for f16 (bias 15 vs 127).
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range. 13 mantissa bits are dropped.
+        let mant16 = (mant >> 13) as u16;
+        let halfexp = ((unbiased + 15) as u16) << 10;
+        let mut out = sign | halfexp | mant16;
+        // Round to nearest even on the dropped bits.
+        let round_bits = mant & 0x1fff;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: still correct
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let full_mant = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mant16 = (full_mant >> shift) as u16;
+        let mut out = sign | mant16;
+        let dropped = full_mant & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if dropped > half || (dropped == half && (mant16 & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert one binary16 bit pattern to f32.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+
+    let bits = if exp == 0x1f {
+        // Inf / NaN
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // zero
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize with s left shifts
+            // until bit 10 is set; the f32 biased exponent is then 113 - s.
+            let mut s = 0u32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                s += 1;
+            }
+            m &= 0x3ff;
+            sign | ((113 - s) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Largest finite f16 value.
+pub const F16_MAX: f32 = 65504.0;
+
+/// Convert a slice, appending to `out` (hot path helper, no allocation).
+pub fn compress_slice(src: &[f32], out: &mut Vec<u16>) {
+    out.reserve(src.len());
+    for &x in src {
+        out.push(f32_to_f16(x));
+    }
+}
+
+/// Convert a u16 slice back to f32, appending to `out`.
+pub fn decompress_slice(src: &[u16], out: &mut Vec<f32>) {
+    out.reserve(src.len());
+    for &h in src {
+        out.push(f16_to_f32(h));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+        assert_eq!(f32_to_f16(1e9), 0x7c00); // inf
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // smallest subnormal
+    }
+
+    #[test]
+    fn roundtrip_is_exact_for_f16_representable() {
+        // Every f16 bit pattern (finite) must round-trip bit-exactly.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled separately
+            }
+            let f = f16_to_f32(h);
+            assert_eq!(f32_to_f16(f), h, "h={h:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        forall(
+            11,
+            3000,
+            |rng| {
+                // Log-uniform magnitude over the f16 normal range.
+                let e = rng.range(0, 29) as i32 - 14;
+                let m = 1.0 + rng.f32();
+                let sign = if rng.bernoulli(0.5) { -1.0 } else { 1.0 };
+                sign * m * 2.0f32.powi(e)
+            },
+            |&x| {
+                let back = f16_to_f32(f32_to_f16(x));
+                let rel = ((back - x) / x).abs();
+                rel <= 2.0f32.powi(-11) + 1e-7
+            },
+        );
+    }
+
+    #[test]
+    fn rounding_is_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly between 1.0 and 1.0+2^-10: ties-to-even -> 1.0.
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(x), 0x3c00);
+        // Slightly above the midpoint rounds up.
+        let y = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-13);
+        assert_eq!(f32_to_f16(y), 0x3c01);
+    }
+
+    #[test]
+    fn slice_helpers_roundtrip() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let mut h = Vec::new();
+        compress_slice(&xs, &mut h);
+        let mut back = Vec::new();
+        decompress_slice(&h, &mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 1e-3);
+        }
+    }
+}

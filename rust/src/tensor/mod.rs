@@ -1,0 +1,7 @@
+//! Host-side tensor primitives: dense f32 tensors and IEEE-754 half floats.
+
+pub mod fp16;
+pub mod tensor;
+
+pub use fp16::{f16_to_f32, f32_to_f16};
+pub use tensor::Tensor;

@@ -1,0 +1,213 @@
+//! Dense row-major f32 host tensor.
+//!
+//! Deliberately minimal: the heavy math runs inside the AOT-compiled XLA
+//! executables (L2/L1); the host side only needs shaping, elementwise update
+//! rules (optimizers), small matmuls for the pure-Rust reference tower, and
+//! flat access for the zero-copy wire format.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} el]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from existing data; panics on element-count mismatch.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// He-style random init (normal * sqrt(2/fan_in)), matching L2's init.
+    pub fn he_init(shape: &[usize], rng: &mut crate::util::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let fan_in = shape[0].max(1);
+        let scale = (2.0 / fan_in as f32).sqrt();
+        let data = (0..n).map(|_| rng.normal() * scale).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2D accessor (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols + j]
+    }
+
+    /// Row view of a 2D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// `self += alpha * other` (elementwise, shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale all elements.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Matrix multiply: `[m,k] x [k,n] -> [m,n]` (blocked ikj loop).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner-dim mismatch");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Transpose a 2D tensor.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn from_vec_validates() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::from_vec(&[5, 7], rng.normal_vec(35));
+        let b = Tensor::from_vec(&[7, 3], rng.normal_vec(21));
+        let c = a.matmul(&b);
+        for i in 0..5 {
+            for j in 0..3 {
+                let want: f32 = (0..7).map(|k| a.at2(i, k) * b.at2(k, j)).sum();
+                assert!((c.at2(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::from_vec(&[4, 6], rng.normal_vec(24));
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        a.axpy(-0.5, &b);
+        assert_eq!(a.data(), &[0.5, 1.5, 2.5]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::he_init(&[512, 16], &mut rng);
+        let var = t.sq_norm() / t.len() as f64;
+        assert!((var - 2.0 / 512.0).abs() < 1e-3, "var={var}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Mini bench harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` target uses `harness = false` and drives this:
+//! warmup, timed iterations, mean/p50/p95 reporting, and aligned table
+//! printing so every paper table/figure bench emits the same row format.
+
+use std::time::Instant;
+
+use super::hist::Histogram;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    /// Optional user-defined throughput metric (items/sec).
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Simple timed-loop bench runner.
+pub struct Bench {
+    warmup_iters: u64,
+    measure_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 3, measure_iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: u64, measure_iters: u64) -> Self {
+        Self { warmup_iters, measure_iters }
+    }
+
+    /// Time `f` (one call = one iteration). `items_per_iter` computes
+    /// a throughput column when `Some`.
+    pub fn run<F: FnMut()>(&self, name: &str, items_per_iter: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut hist = Histogram::new();
+        let mut total_ns = 0u64;
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            let ns = t0.elapsed().as_nanos() as u64;
+            hist.record(ns);
+            total_ns += ns;
+        }
+        let mean_ns = total_ns as f64 / self.measure_iters as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_ns,
+            p50_ns: hist.percentile(50.0),
+            p95_ns: hist.percentile(95.0),
+            throughput: items_per_iter.map(|items| items / (mean_ns / 1e9)),
+        }
+    }
+}
+
+/// Print an aligned table of results (used by every bench target).
+pub fn print_table(title: &str, rows: &[BenchResult]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>14}",
+        "case", "iters", "mean(ms)", "p95(ms)", "items/s"
+    );
+    for r in rows {
+        println!(
+            "{:<44} {:>10} {:>12.3} {:>12.3} {:>14}",
+            r.name,
+            r.iters,
+            r.mean_ns / 1e6,
+            r.p95_ns as f64 / 1e6,
+            r.throughput.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+/// Measure wall time of a single closure call in seconds.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_and_reports() {
+        let b = Bench::new(1, 5);
+        let mut counter = 0u64;
+        let r = b.run("spin", Some(100.0), || {
+            for _ in 0..10_000 {
+                counter = counter.wrapping_add(1);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput.unwrap() > 0.0);
+        assert!(counter > 0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

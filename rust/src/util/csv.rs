@@ -1,0 +1,68 @@
+//! Tiny CSV writer for experiment outputs (Fig-6/7/8/9 series).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create/truncate `path` and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, columns: header.len() })
+    }
+
+    /// Write one data row; panics if the arity differs from the header.
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row arity mismatch");
+        writeln!(self.out, "{}", values.join(","))
+    }
+
+    /// Convenience: format any Display values.
+    pub fn rowf(&mut self, values: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        let vs: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        self.row(&vs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = std::env::temp_dir().join("persia_csv_test.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.rowf(&[&1, &0.5]).unwrap();
+            w.rowf(&[&2, &0.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let path = std::env::temp_dir().join("persia_csv_test2.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Latency/size histogram with percentile queries.
+//!
+//! Log-bucketed (HdrHistogram-style, base-2 with 16 sub-buckets) so recording
+//! is allocation-free and O(1) — safe to call on the training hot path.
+
+/// Log-bucketed histogram of non-negative u64 values (e.g. nanoseconds).
+#[derive(Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+    min: u64,
+}
+
+const SUB: usize = 16;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB], count: 0, sum: 0, max: 0, min: u64::MAX }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros() as usize;
+        let mantissa = (v >> (exp.saturating_sub(4))) as usize & (SUB - 1);
+        ((exp - 3) * SUB + mantissa).min(64 * SUB - 1)
+    }
+
+    #[inline]
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let exp = idx / SUB + 3;
+        let mantissa = idx % SUB;
+        (1u64 << exp) | ((mantissa as u64) << (exp - 4))
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Approximate percentile (q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={} p95={} p99={} max={}",
+            self.count,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 3, 3, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10);
+        assert_eq!(h.percentile(50.0), 3);
+    }
+
+    #[test]
+    fn percentiles_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..10_000 {
+            h.record(rng.below(1_000_000));
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 <= h.max());
+        // Uniform: p50 about 500k within log-bucket error.
+        assert!((p50 as f64 - 500_000.0).abs() / 500_000.0 < 0.15, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut u = Histogram::new();
+        let mut rng = crate::util::Rng::new(8);
+        for i in 0..1000 {
+            let v = rng.below(10_000);
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+            u.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.percentile(90.0), u.percentile(90.0));
+        assert_eq!(a.max(), u.max());
+    }
+
+    #[test]
+    fn large_values_within_bucket_error() {
+        let mut h = Histogram::new();
+        h.record(1_000_000_000);
+        let p = h.percentile(50.0);
+        let err = (p as f64 - 1e9).abs() / 1e9;
+        assert!(err < 0.07, "p={p}");
+    }
+}

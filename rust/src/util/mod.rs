@@ -1,0 +1,18 @@
+//! Offline-friendly utilities: seeded RNG, Zipf sampling, property testing,
+//! histograms, CSV emission, and a tiny bench harness.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so the
+//! usual ecosystem crates (rand/proptest/criterion/serde) are unavailable;
+//! these modules provide the minimal equivalents the rest of the system needs.
+
+pub mod bench;
+pub mod csv;
+pub mod hist;
+pub mod quickcheck;
+pub mod rng;
+pub mod zipf;
+
+pub use bench::Bench;
+pub use hist::Histogram;
+pub use rng::Rng;
+pub use zipf::Zipf;

@@ -1,0 +1,142 @@
+//! Minimal property-based testing (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs from
+//! `gen`; on failure it reports the failing case index and re-derivable seed,
+//! and attempts simple size-based shrinking when the generator supports it
+//! via [`Shrink`].
+
+use super::rng::Rng;
+
+/// Types that can propose structurally smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        // Shrink one element.
+        for (i, alt) in self[0].shrink().into_iter().enumerate().take(2) {
+            let mut v = self.clone();
+            let idx = i.min(v.len() - 1);
+            v[idx] = alt;
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with diagnostics on the
+/// first failing input (after shrinking).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}); minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink + Clone + std::fmt::Debug, P: Fn(&T) -> bool>(start: T, prop: &P) -> T {
+    let mut current = start;
+    'outer: for _ in 0..64 {
+        for cand in current.shrink() {
+            if !prop(&cand) {
+                current = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    current
+}
+
+/// Convenience generator: vector of uniform f32 in [-scale, scale].
+pub fn gen_f32_vec(len_max: usize, scale: f32) -> impl FnMut(&mut Rng) -> Vec<f32> {
+    move |rng| {
+        let len = rng.below(len_max as u64 + 1) as usize;
+        (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, |rng| rng.below(1000), |x| *x < 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall(2, 2000, |rng| rng.below(1000), |x| *x < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: x < 500. Failing inputs are >= 500; shrinking halves
+        // toward the boundary — the minimal example must still fail.
+        let minimal = shrink_loop(997u64, &|x: &u64| *x < 500);
+        assert!(minimal >= 500 && minimal <= 997);
+        assert!(minimal < 997);
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let mut gen = gen_f32_vec(16, 2.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen(&mut rng);
+            assert!(v.len() <= 16);
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Zipf-distributed sampling over huge id spaces.
+//!
+//! Production recommender traffic is heavily skewed ("the access of training
+//! data can irregularly lean towards a particular embedding group", paper
+//! §4.2.3) — a Zipf law over item/user ids is the standard model. The skew
+//! exponent also controls the paper's α (max per-sample ID frequency) in the
+//! Theorem-1 staleness ablation.
+//!
+//! For the virtualized 100-trillion-parameter tables the id space is far too
+//! large to precompute a CDF, so we use the classic two-region rejection
+//! sampler (Devroye) that needs O(1) memory for any `n`.
+
+use super::rng::Rng;
+
+/// Zipf(α) sampler over `{0, 1, .., n-1}` (rank 1 = id 0 is the hottest).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    exponent: f64,
+    // Precomputed constants for the rejection sampler.
+    h_x1: f64,
+    h_n: f64,
+}
+
+impl Zipf {
+    /// `n`: id-space size; `exponent`: skew (0 = uniform, ~1.05 typical CTR).
+    pub fn new(n: u64, exponent: f64) -> Self {
+        assert!(n >= 1);
+        assert!(exponent >= 0.0);
+        let h = |x: f64| -> f64 {
+            if (exponent - 1.0).abs() < 1e-12 {
+                (x).ln()
+            } else {
+                (x.powf(1.0 - exponent) - 1.0) / (1.0 - exponent)
+            }
+        };
+        let h_x1 = h(1.5) - 1.0f64;
+        let h_n = h(n as f64 + 0.5);
+        Zipf { n, exponent, h_x1, h_n }
+    }
+
+    fn h_inv_static(exponent: f64, x: f64) -> f64 {
+        if (exponent - 1.0).abs() < 1e-12 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - exponent)).powf(1.0 / (1.0 - exponent))
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        Self::h_inv_static(self.exponent, x)
+    }
+
+    /// Draw one id in `[0, n)`.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.exponent < 1e-9 {
+            return rng.below(self.n);
+        }
+        loop {
+            let u = self.h_x1 + rng.f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            let h_k = if (self.exponent - 1.0).abs() < 1e-12 {
+                (k + 0.5).ln() - (k - 0.5).ln()
+            } else {
+                ((k + 0.5).powf(1.0 - self.exponent) - (k - 0.5).powf(1.0 - self.exponent))
+                    / (1.0 - self.exponent)
+            };
+            let ratio = h_k / k.powf(-self.exponent);
+            if rng.f64() * ratio <= 1.0 {
+                return k as u64 - 1;
+            }
+        }
+    }
+
+    /// Analytic probability that a sample hits rank-1 (the hottest id); an
+    /// estimate of the paper's α when each sample carries one id per group.
+    pub fn top_probability(&self) -> f64 {
+        // p(k) ∝ k^-e; approximate the normalizer with the integral.
+        let e = self.exponent;
+        if e < 1e-9 {
+            return 1.0 / self.n as f64;
+        }
+        let norm: f64 = (1..=self.n.min(10_000))
+            .map(|k| (k as f64).powf(-e))
+            .sum::<f64>()
+            + if self.n > 10_000 {
+                let a = 10_000f64;
+                let b = self.n as f64;
+                if (e - 1.0).abs() < 1e-12 {
+                    (b / a).ln()
+                } else {
+                    (b.powf(1.0 - e) - a.powf(1.0 - e)) / (1.0 - e)
+                }
+            } else {
+                0.0
+            };
+        1.0 / norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_when_exponent_zero() {
+        let z = Zipf::new(100, 0.0);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 100];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 1.6, "max={max} min={min}");
+    }
+
+    #[test]
+    fn skewed_prefers_low_ranks() {
+        let z = Zipf::new(1_000_000, 1.05);
+        let mut rng = Rng::new(2);
+        let hits_top100 = (0..20_000)
+            .filter(|_| z.sample(&mut rng) < 100)
+            .count();
+        // Under uniform this would be ~2; under Zipf(1.05) a large fraction.
+        assert!(hits_top100 > 2_000, "hits={hits_top100}");
+    }
+
+    #[test]
+    fn samples_within_range_even_for_huge_n() {
+        let n = 781_000_000_000u64; // 100T params / dim 128
+        let z = Zipf::new(n, 1.05);
+        let mut rng = Rng::new(3);
+        for _ in 0..2_000 {
+            assert!(z.sample(&mut rng) < n);
+        }
+    }
+
+    #[test]
+    fn empirical_frequency_matches_power_law() {
+        let z = Zipf::new(10_000, 1.2);
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let mut c1 = 0usize;
+        let mut c2 = 0usize;
+        for _ in 0..n {
+            match z.sample(&mut rng) {
+                0 => c1 += 1,
+                1 => c2 += 1,
+                _ => {}
+            }
+        }
+        let ratio = c1 as f64 / c2 as f64;
+        // p(1)/p(2) = 2^1.2 ≈ 2.3
+        assert!((ratio - 2.3).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn top_probability_decreases_with_n() {
+        let a = Zipf::new(1_000, 1.05).top_probability();
+        let b = Zipf::new(1_000_000, 1.05).top_probability();
+        assert!(a > b && b > 0.0);
+    }
+}

@@ -1,0 +1,393 @@
+//! Embedding worker (paper Algorithm 1 + §4.2.1 buffering).
+//!
+//! Forward task: receive ID-type features from the data loader, mint a
+//! sample ID (top byte = this worker's rank, footnote 3), buffer the features
+//! in the *ID type feature hash-map*, fetch rows from the embedding PS,
+//! pool per feature group, and ship the aggregated activation to the NN
+//! worker. Backward task: receive the activation's gradient keyed by sample
+//! ID, look up the buffered ID features, fan the gradient out to the rows and
+//! `put` it to the PS. Both tasks run lock-free with respect to each other
+//! (the buffer lock is per-operation, never held across PS calls).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::comm::compress::CompressedValues;
+use crate::comm::netsim::{Link, NetSim};
+use crate::config::{ModelConfig, Pooling};
+use crate::data::sample::{make_sample_id, Batch, IdFeatures, SampleId};
+use crate::embedding::EmbeddingPs;
+
+/// One embedding worker.
+pub struct EmbeddingWorker {
+    rank: u8,
+    ps: Arc<EmbeddingPs>,
+    n_groups: usize,
+    dim_per_group: usize,
+    pooling: Pooling,
+    buffer: Mutex<HashMap<SampleId, IdFeatures>>,
+    counter: AtomicU64,
+    net: Arc<NetSim>,
+    /// Apply the §4.2.3 lossy value compression to activation/grad traffic.
+    compress: bool,
+}
+
+impl EmbeddingWorker {
+    pub fn new(
+        rank: u8,
+        ps: Arc<EmbeddingPs>,
+        model: &ModelConfig,
+        net: Arc<NetSim>,
+        compress: bool,
+    ) -> Self {
+        assert_eq!(ps.dim(), model.emb_dim_per_group, "PS dim != model group dim");
+        Self {
+            rank,
+            ps,
+            n_groups: model.n_groups,
+            dim_per_group: model.emb_dim_per_group,
+            pooling: model.pooling,
+            buffer: Mutex::new(HashMap::new()),
+            counter: AtomicU64::new(0),
+            net,
+            compress,
+        }
+    }
+
+    pub fn rank(&self) -> u8 {
+        self.rank
+    }
+
+    pub fn emb_dim(&self) -> usize {
+        self.n_groups * self.dim_per_group
+    }
+
+    /// Step (1) of the training procedure: buffer ID features, mint sample
+    /// ids to hand back to the data loader.
+    pub fn register(&self, ids: Vec<IdFeatures>) -> Vec<SampleId> {
+        let mut buf = self.buffer.lock().unwrap();
+        ids.into_iter()
+            .map(|f| {
+                let sid = make_sample_id(self.rank, self.counter.fetch_add(1, Ordering::Relaxed));
+                buf.insert(sid, f);
+                sid
+            })
+            .collect()
+    }
+
+    /// Pool one sample's groups into `out[emb_dim]`, fetching rows from PS.
+    /// Allocation-free on the hot path: `row_buf` is a reusable scratch row
+    /// and pooling accumulates directly from the shard (`get_into_acc`).
+    fn pool_into(&self, feats: &IdFeatures, out: &mut [f32], row_buf: &mut Vec<f32>) -> usize {
+        let d = self.dim_per_group;
+        row_buf.resize(d, 0.0);
+        let mut rows_fetched = 0;
+        for (g, group) in feats.groups.iter().enumerate() {
+            let dst = &mut out[g * d..(g + 1) * d];
+            dst.fill(0.0);
+            if group.is_empty() {
+                continue;
+            }
+            for &id in group {
+                self.ps.get(g as u32, id, row_buf);
+                for (o, &x) in dst.iter_mut().zip(row_buf.iter()) {
+                    *o += x;
+                }
+            }
+            rows_fetched += group.len();
+            if self.pooling == Pooling::Mean {
+                let inv = 1.0 / group.len() as f32;
+                for o in dst.iter_mut() {
+                    *o *= inv;
+                }
+            }
+        }
+        rows_fetched
+    }
+
+    /// Steps (3)-(4): the NN worker's pull. Returns the pooled activations
+    /// (`[B, emb_dim]` flattened) and the simulated communication seconds
+    /// (PS->worker rows + worker->NN activation transfer).
+    pub fn pull(&self, sample_ids: &[SampleId]) -> Result<(Vec<f32>, f64)> {
+        let emb_dim = self.emb_dim();
+        let mut out = vec![0.0f32; sample_ids.len() * emb_dim];
+        let mut row_buf = Vec::new();
+        let mut rows_fetched = 0usize;
+        {
+            let buf = self.buffer.lock().unwrap();
+            for (i, sid) in sample_ids.iter().enumerate() {
+                let feats = buf
+                    .get(sid)
+                    .with_context(|| format!("sample {sid:#x} not buffered (worker {})", self.rank))?;
+                rows_fetched +=
+                    self.pool_into(feats, &mut out[i * emb_dim..(i + 1) * emb_dim], &mut row_buf);
+            }
+        }
+        // PS -> embedding worker: raw rows.
+        let mut sim = self.net.record(Link::CpuCpu, rows_fetched * self.dim_per_group * 4);
+        // embedding worker -> NN worker: pooled activations (fp16+scale when
+        // compression is on; we run the real round-trip so the numeric effect
+        // of the lossy path is part of training).
+        if self.compress {
+            let c = CompressedValues::compress(&out, emb_dim);
+            sim += self.net.record(Link::CpuGpu, c.wire_bytes());
+            c.decompress_into(&mut out);
+        } else {
+            sim += self.net.record(Link::CpuGpu, out.len() * 4);
+        }
+        Ok((out, sim))
+    }
+
+    /// Eval-path lookup straight from a batch (no sample-id buffering).
+    pub fn lookup_direct(&self, batch: &Batch) -> (Vec<f32>, f64) {
+        let emb_dim = self.emb_dim();
+        let mut out = vec![0.0f32; batch.len() * emb_dim];
+        let mut row_buf = Vec::new();
+        let mut rows = 0;
+        for (i, feats) in batch.ids.iter().enumerate() {
+            rows += self.pool_into(feats, &mut out[i * emb_dim..(i + 1) * emb_dim], &mut row_buf);
+        }
+        let sim = self.net.record(Link::CpuCpu, rows * self.dim_per_group * 4);
+        (out, sim)
+    }
+
+    /// Steps (6)-(7): receive activation gradients, fan out to rows, put to
+    /// the PS, and release the buffer entries. Returns simulated comm secs.
+    pub fn push_grads(&self, sample_ids: &[SampleId], grad_emb: &[f32]) -> Result<f64> {
+        let emb_dim = self.emb_dim();
+        anyhow::ensure!(grad_emb.len() == sample_ids.len() * emb_dim, "grad shape mismatch");
+        // NN -> embedding worker transfer of the gradients (possibly lossy).
+        let mut grads = grad_emb.to_vec();
+        let mut sim = if self.compress {
+            let c = CompressedValues::compress(&grads, emb_dim);
+            let s = self.net.record(Link::CpuGpu, c.wire_bytes());
+            c.decompress_into(&mut grads);
+            s
+        } else {
+            self.net.record(Link::CpuGpu, grads.len() * 4)
+        };
+
+        let d = self.dim_per_group;
+        let mut rows_put = 0usize;
+        let mut taken: Vec<(usize, IdFeatures)> = Vec::with_capacity(sample_ids.len());
+        {
+            let mut buf = self.buffer.lock().unwrap();
+            for (i, sid) in sample_ids.iter().enumerate() {
+                let feats = buf
+                    .remove(sid)
+                    .with_context(|| format!("sample {sid:#x} not buffered for backward"))?;
+                taken.push((i, feats));
+            }
+        }
+        let mut scaled = vec![0.0f32; d];
+        for (i, feats) in taken {
+            for (g, group) in feats.groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let gsl = &grads[i * emb_dim + g * d..i * emb_dim + (g + 1) * d];
+                let src: &[f32] = if self.pooling == Pooling::Mean {
+                    let inv = 1.0 / group.len() as f32;
+                    for (s, &x) in scaled.iter_mut().zip(gsl) {
+                        *s = x * inv;
+                    }
+                    &scaled
+                } else {
+                    gsl
+                };
+                for &id in group {
+                    self.ps.put_grad(g as u32, id, src);
+                    rows_put += 1;
+                }
+            }
+        }
+        sim += self.net.record(Link::CpuCpu, rows_put * d * 4);
+        Ok(sim)
+    }
+
+    /// Buffered (in-flight) samples.
+    pub fn buffered(&self) -> usize {
+        self.buffer.lock().unwrap().len()
+    }
+
+    /// §4.2.4: "The embedding worker has no fault recovery schema — once a
+    /// failure happens, the local buffer ... will be simply abandoned."
+    pub fn abandon_buffer(&self) {
+        self.buffer.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        EmbeddingConfig, NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
+    };
+    
+    use crate::data::SyntheticDataset;
+
+    fn setup(pooling: Pooling, compress: bool) -> (Arc<EmbeddingPs>, EmbeddingWorker, ModelConfig) {
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 3,
+            pooling,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 256,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        let ps = Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 1));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let w = EmbeddingWorker::new(3, ps.clone(), &model, net, compress);
+        (ps, w, model)
+    }
+
+    fn feats(a: &[u64], b: &[u64]) -> IdFeatures {
+        IdFeatures { groups: vec![a.to_vec(), b.to_vec()] }
+    }
+
+    #[test]
+    fn register_mints_ranked_ids() {
+        let (_, w, _) = setup(Pooling::Sum, false);
+        let ids = w.register(vec![feats(&[1], &[2]), feats(&[3], &[4])]);
+        assert_eq!(ids.len(), 2);
+        assert_ne!(ids[0], ids[1]);
+        assert!(ids.iter().all(|&sid| crate::data::sample::sample_id_rank(sid) == 3));
+        assert_eq!(w.buffered(), 2);
+    }
+
+    #[test]
+    fn pull_pools_sum_of_rows() {
+        let (ps, w, _) = setup(Pooling::Sum, false);
+        let sids = w.register(vec![feats(&[10, 11], &[20])]);
+        let (emb, _) = w.pull(&sids).unwrap();
+        assert_eq!(emb.len(), 8);
+        // Manual pooling.
+        let mut want = vec![0.0f32; 8];
+        let mut row = vec![0.0f32; 4];
+        for id in [10u64, 11] {
+            ps.get(0, id, &mut row);
+            for (o, &x) in want[..4].iter_mut().zip(&row) {
+                *o += x;
+            }
+        }
+        ps.get(1, 20, &mut row);
+        want[4..].copy_from_slice(&row);
+        for (a, b) in emb.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_pooling_divides() {
+        let (ps, w, _) = setup(Pooling::Mean, false);
+        let sids = w.register(vec![feats(&[5, 5], &[7])]);
+        let (emb, _) = w.pull(&sids).unwrap();
+        let mut row = vec![0.0f32; 4];
+        ps.get(0, 5, &mut row);
+        for (a, b) in emb[..4].iter().zip(&row) {
+            assert!((a - b).abs() < 1e-6, "mean of two equal rows is the row");
+        }
+    }
+
+    #[test]
+    fn push_grads_updates_ps_and_clears_buffer() {
+        let (ps, w, _) = setup(Pooling::Sum, false);
+        let sids = w.register(vec![feats(&[42], &[43])]);
+        let mut before = vec![0.0f32; 4];
+        ps.get(0, 42, &mut before);
+        let grad = vec![1.0f32; 8];
+        w.push_grads(&sids, &grad).unwrap();
+        let mut after = vec![0.0f32; 4];
+        ps.get(0, 42, &mut after);
+        // SGD lr 0.5, grad 1 => delta -0.5.
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - 0.5 - a).abs() < 1e-6);
+        }
+        assert_eq!(w.buffered(), 0);
+        // Double-push is an error (buffer entry consumed).
+        assert!(w.push_grads(&sids, &grad).is_err());
+    }
+
+    #[test]
+    fn compressed_pull_is_close_to_exact() {
+        let (_, w_exact, _) = setup(Pooling::Sum, false);
+        let (_, w_comp, _) = setup(Pooling::Sum, true);
+        let f = vec![feats(&[1, 2, 3], &[4, 5, 6])];
+        let se = w_exact.register(f.clone());
+        let sc = w_comp.register(f);
+        let (a, _) = w_exact.pull(&se).unwrap();
+        let (b, _) = w_comp.pull(&sc).unwrap();
+        let norm = a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= norm * 2.0f32.powi(-10) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn lookup_direct_matches_pull() {
+        let (_, w, model) = setup(Pooling::Sum, false);
+        let ds = SyntheticDataset::new(&model, 1000, 1.0, 5);
+        let batch = ds.test_batch(6);
+        let (direct, _) = w.lookup_direct(&batch);
+        let sids = w.register(batch.ids.clone());
+        let (pulled, _) = w.pull(&sids).unwrap();
+        assert_eq!(direct, pulled);
+    }
+
+    #[test]
+    fn abandon_buffer_drops_state() {
+        let (_, w, _) = setup(Pooling::Sum, false);
+        let sids = w.register(vec![feats(&[1], &[2])]);
+        w.abandon_buffer();
+        assert_eq!(w.buffered(), 0);
+        assert!(w.pull(&sids).is_err());
+    }
+
+    #[test]
+    fn simulated_traffic_accounted() {
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 3,
+            pooling: Pooling::Sum,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 256,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        let ps = Arc::new(EmbeddingPs::new(&cfg, 4, 1));
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let w = EmbeddingWorker::new(0, ps, &model, net.clone(), false);
+        let sids = w.register(vec![feats(&[1, 2], &[3])]);
+        let (_, sim) = w.pull(&sids).unwrap();
+        assert!(sim > 0.0);
+        assert!(net.total_bytes() > 0);
+    }
+
+    #[test]
+    fn unknown_sample_id_is_error() {
+        let (_, w, _) = setup(Pooling::Sum, false);
+        assert!(w.pull(&[999]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The two worker roles of Fig. 4: embedding workers (CPU side of Alg. 1)
+//! and NN workers (GPU side of Alg. 2), with their sample-ID-keyed buffers
+//! (§4.2.1 "Fill the Async/Sync Gap").
+
+pub mod embedding_worker;
+pub mod nn_worker;
+
+pub use embedding_worker::EmbeddingWorker;
+pub use nn_worker::NnWorker;

@@ -1,0 +1,117 @@
+//! NN worker state (paper Algorithm 2 + §4.2.1's input sample hash-map).
+//!
+//! Holds the *input sample hash-map* keyed by sample ID, valued by the
+//! Non-ID features + label (what the data loader dispatches in step (2));
+//! when the pooled embedding arrives from an embedding worker the entry is
+//! popped and consumed into the mini-batch. The dense parameters always live
+//! in this worker's memory (paper: "the parameter of the NN always locates
+//! in the device RAM of the NN worker").
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::data::sample::SampleId;
+
+/// Buffered (nid, label) tuple.
+struct Pending {
+    nid: Vec<f32>,
+    label: f32,
+}
+
+/// The NN-worker-side sample buffer.
+pub struct NnWorker {
+    rank: usize,
+    buffer: Mutex<HashMap<SampleId, Pending>>,
+    nid_dim: usize,
+}
+
+impl NnWorker {
+    pub fn new(rank: usize, nid_dim: usize) -> Self {
+        Self { rank, buffer: Mutex::new(HashMap::new()), nid_dim }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Step (2): the loader dispatches the Non-ID features + label.
+    pub fn receive(&self, sid: SampleId, nid: Vec<f32>, label: f32) {
+        debug_assert_eq!(nid.len(), self.nid_dim);
+        self.buffer.lock().unwrap().insert(sid, Pending { nid, label });
+    }
+
+    /// Bulk receive for a whole dispatched batch.
+    pub fn receive_batch(&self, sids: &[SampleId], nid: &[f32], labels: &[f32]) {
+        assert_eq!(nid.len(), sids.len() * self.nid_dim);
+        assert_eq!(labels.len(), sids.len());
+        let mut buf = self.buffer.lock().unwrap();
+        for (i, &sid) in sids.iter().enumerate() {
+            buf.insert(
+                sid,
+                Pending {
+                    nid: nid[i * self.nid_dim..(i + 1) * self.nid_dim].to_vec(),
+                    label: labels[i],
+                },
+            );
+        }
+    }
+
+    /// Step (5): pop the buffered entries for an arrived embedding batch and
+    /// assemble the mini-batch tensors (flat nid + labels, loader order).
+    pub fn take(&self, sids: &[SampleId]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut buf = self.buffer.lock().unwrap();
+        let mut nid = Vec::with_capacity(sids.len() * self.nid_dim);
+        let mut labels = Vec::with_capacity(sids.len());
+        for sid in sids {
+            let p = buf
+                .remove(sid)
+                .with_context(|| format!("sample {sid:#x} missing from input hash-map"))?;
+            nid.extend_from_slice(&p.nid);
+            labels.push(p.label);
+        }
+        Ok((nid, labels))
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.lock().unwrap().len()
+    }
+
+    /// Fault path: drop all pending inputs (worker restart from checkpoint).
+    pub fn clear(&self) {
+        self.buffer.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receive_take_roundtrip_preserves_order() {
+        let w = NnWorker::new(0, 2);
+        w.receive_batch(&[10, 11, 12], &[1., 2., 3., 4., 5., 6.], &[1.0, 0.0, 1.0]);
+        assert_eq!(w.buffered(), 3);
+        // Take in a different order than insertion.
+        let (nid, labels) = w.take(&[12, 10]).unwrap();
+        assert_eq!(nid, vec![5., 6., 1., 2.]);
+        assert_eq!(labels, vec![1.0, 1.0]);
+        assert_eq!(w.buffered(), 1);
+    }
+
+    #[test]
+    fn take_missing_is_error() {
+        let w = NnWorker::new(0, 1);
+        w.receive(5, vec![0.5], 1.0);
+        assert!(w.take(&[5, 6]).is_err());
+    }
+
+    #[test]
+    fn clear_empties_buffer() {
+        let w = NnWorker::new(1, 1);
+        w.receive(1, vec![0.0], 0.0);
+        w.clear();
+        assert_eq!(w.buffered(), 0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Fault-tolerance integration (paper §4.2.4): inject failures into a live
+//! manual training loop and verify each component's recovery policy.
+
+use std::sync::Arc;
+
+use persia::comm::NetSim;
+use persia::config::{
+    EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
+};
+use persia::data::SyntheticDataset;
+use persia::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
+use persia::embedding::checkpoint::CheckpointManager;
+use persia::embedding::EmbeddingPs;
+use persia::fault::{DenseBackup, PsBackup};
+use persia::metrics::auc;
+use persia::runtime::DenseEngine;
+use persia::util::Rng;
+use persia::worker::EmbeddingWorker;
+
+fn setup() -> (ModelConfig, Arc<EmbeddingPs>, Arc<EmbeddingWorker>, SyntheticDataset, DenseEngine)
+{
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 4,
+        emb_dim_per_group: 8,
+        nid_dim: 8,
+        hidden: vec![32, 16],
+        ids_per_group: 4,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 2000,
+        shard_capacity: 8192,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let ps = Arc::new(EmbeddingPs::new(&emb_cfg, model.emb_dim_per_group, 9));
+    let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+    let ew = Arc::new(EmbeddingWorker::new(0, ps.clone(), &model, net, false));
+    let ds = SyntheticDataset::new(&model, 2000, 1.05, 9);
+    let mut rng = Rng::new(1);
+    let dm = DenseModel::new(&model.dims(), model.emb_dim(), model.nid_dim, &mut rng);
+    let engine = DenseEngine::rust(dm);
+    (model, ps, ew, ds, engine)
+}
+
+/// One manual hybrid training step; returns (loss, params updated in place).
+fn train_step(
+    ds: &SyntheticDataset,
+    rng: &mut Rng,
+    ew: &EmbeddingWorker,
+    engine: &DenseEngine,
+    params: &mut Vec<f32>,
+    opt: &mut DenseOptimizer,
+    batch: usize,
+) -> anyhow::Result<f32> {
+    let b = ds.batch(rng, batch);
+    let sids = ew.register(b.ids.clone());
+    let (emb, _) = ew.pull(&sids)?;
+    let out = engine.train_step(params, &emb, &b.nid, &b.labels)?;
+    opt.step(params, &out.grad_flat);
+    ew.push_grads(&sids, &out.grad_emb)?;
+    Ok(out.loss)
+}
+
+fn eval(ds: &SyntheticDataset, ew: &EmbeddingWorker, engine: &DenseEngine, params: &[f32]) -> f64 {
+    let tb = ds.test_batch(1536);
+    let (emb, _) = ew.lookup_direct(&tb);
+    let probs = engine.forward(params, &emb, &tb.nid, tb.len()).unwrap();
+    auc(&probs, &tb.labels)
+}
+
+#[test]
+fn ps_crash_with_shared_memory_recovers_losslessly_mid_training() {
+    let (model, ps, ew, ds, engine) = setup();
+    let mut rng = ds.train_rng(0);
+    let mut rngm = Rng::new(2);
+    let dm = DenseModel::new(&model.dims(), model.emb_dim(), model.nid_dim, &mut rngm);
+    let mut params = dm.params_flat();
+    let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, 0.1, params.len());
+    let backup = PsBackup::new(2);
+
+    for _ in 0..150 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+    }
+    let auc_before = eval(&ds, &ew, &engine, &params);
+
+    // Process-level PS failure on both nodes; shared memory survives.
+    backup.mirror_shared(&ps, 0);
+    backup.mirror_shared(&ps, 1);
+    ps.wipe_node(0);
+    ps.wipe_node(1);
+    assert_eq!(backup.recover(&ps, 0, true).unwrap(), "shared-memory");
+    assert_eq!(backup.recover(&ps, 1, true).unwrap(), "shared-memory");
+
+    let auc_after = eval(&ds, &ew, &engine, &params);
+    assert!((auc_before - auc_after).abs() < 1e-9, "{auc_before} vs {auc_after}");
+
+    // Training continues and keeps improving (or at least doesn't collapse).
+    for _ in 0..100 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+    }
+    let auc_final = eval(&ds, &ew, &engine, &params);
+    assert!(auc_final > auc_before - 0.02, "{auc_before} -> {auc_final}");
+}
+
+#[test]
+fn ps_crash_without_shared_memory_falls_back_to_disk_checkpoint() {
+    let (_model, ps, ew, ds, engine) = setup();
+    let mut rng = ds.train_rng(0);
+    let mut rngm = Rng::new(3);
+    let dm = DenseModel::new(
+        &[40, 32, 16, 1],
+        32,
+        8,
+        &mut rngm,
+    );
+    let mut params = dm.params_flat();
+    let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, 0.1, params.len());
+
+    for _ in 0..80 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+    }
+    let dir = std::env::temp_dir().join(format!("persia_it_ckpt_{}", std::process::id()));
+    let mgr = CheckpointManager::new(&dir).unwrap();
+    mgr.save(&ps).unwrap();
+    let auc_at_ckpt = eval(&ds, &ew, &engine, &params);
+
+    for _ in 0..40 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+    }
+    // Crash losing RAM; restore from disk (rolls back post-ckpt puts only).
+    ps.wipe_node(0);
+    ps.wipe_node(1);
+    mgr.restore(&ps).unwrap();
+    let auc_restored = eval(&ds, &ew, &engine, &params);
+    assert!(
+        (auc_restored - auc_at_ckpt).abs() < 0.03,
+        "restored AUC {auc_restored} far from checkpoint AUC {auc_at_ckpt}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn emb_worker_failure_drops_inflight_samples_but_training_continues() {
+    let (_m, _ps, ew, ds, engine) = setup();
+    let mut rng = ds.train_rng(0);
+    let mut rngm = Rng::new(4);
+    let dm = DenseModel::new(&[40, 32, 16, 1], 32, 8, &mut rngm);
+    let mut params = dm.params_flat();
+    let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, 0.1, params.len());
+
+    // In-flight batch registered but not yet trained on.
+    let b = ds.batch(&mut rng, 32);
+    let sids = ew.register(b.ids.clone());
+    assert_eq!(ew.buffered(), 32);
+
+    // Worker dies: buffer abandoned, no recovery (paper policy).
+    ew.abandon_buffer();
+    assert!(ew.pull(&sids).is_err(), "in-flight samples are lost");
+
+    // The pipeline simply re-dispatches fresh samples.
+    let mut losses = Vec::new();
+    for _ in 0..60 {
+        losses.push(
+            train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap(),
+        );
+    }
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn nn_worker_failure_reloads_dense_checkpoint() {
+    let (_m, _ps, ew, ds, engine) = setup();
+    let mut rng = ds.train_rng(0);
+    let mut rngm = Rng::new(5);
+    let dm = DenseModel::new(&[40, 32, 16, 1], 32, 8, &mut rngm);
+    let mut params = dm.params_flat();
+    let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, 0.1, params.len());
+    let backup = DenseBackup::new();
+
+    for step in 0..100u64 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+        if step % 25 == 24 {
+            backup.save(step, &params);
+        }
+    }
+    // GPU instance failure: local copy gone; all workers reload checkpoint.
+    let corrupted: Vec<f32> = params.iter().map(|_| 0.0).collect();
+    params = corrupted;
+    let (ckpt_step, ckpt_params) = backup.load().expect("checkpoint exists");
+    assert_eq!(ckpt_step, 99);
+    params = ckpt_params;
+
+    // Continue training from the checkpoint; AUC recovers above chance.
+    for _ in 0..60 {
+        train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
+    }
+    let a = eval(&ds, &ew, &engine, &params);
+    assert!(a > 0.55, "post-recovery AUC {a}");
+}

@@ -1,0 +1,135 @@
+//! Multi-process-shaped integration: the embedding PS served over TCP RPC
+//! using the zero-copy wire format — the paper's point-to-point protocol
+//! (§4.2.3) running over a real socket.
+
+use std::sync::Arc;
+
+use persia::comm::rpc::{RpcClient, RpcServer};
+use persia::comm::transport::TcpTransport;
+use persia::comm::wire::{WireReader, WireWriter};
+use persia::config::{EmbeddingConfig, OptimizerKind, PartitionPolicy};
+use persia::embedding::EmbeddingPs;
+
+/// Message kinds of the PS wire protocol.
+const KIND_GET: u32 = 1;
+const KIND_PUT: u32 = 2;
+
+fn ps() -> Arc<EmbeddingPs> {
+    let cfg = EmbeddingConfig {
+        rows_per_group: 1 << 20,
+        shard_capacity: 4096,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Sgd,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.5,
+    };
+    Arc::new(EmbeddingPs::new(&cfg, 8, 77))
+}
+
+/// Serve GET/PUT for one connection.
+fn serve(ps: Arc<EmbeddingPs>, listener: std::net::TcpListener) {
+    let (stream, _) = listener.accept().unwrap();
+    let transport = TcpTransport::new(stream);
+    let mut server = RpcServer::new();
+    let dim = ps.dim();
+    {
+        let ps = ps.clone();
+        server.register(
+            KIND_GET,
+            Box::new(move |msg| {
+                let r = WireReader::parse(msg)?;
+                let groups = r.u64(0)?;
+                let ids = r.u64(1)?;
+                let keys: Vec<(u32, u64)> =
+                    groups.iter().zip(&ids).map(|(&g, &id)| (g as u32, id)).collect();
+                let mut rows = vec![0.0f32; keys.len() * dim];
+                ps.get_many(&keys, &mut rows);
+                let mut w = WireWriter::new(KIND_GET);
+                w.put_f32(&rows);
+                Ok(w.finish())
+            }),
+        );
+    }
+    {
+        let ps = ps.clone();
+        server.register(
+            KIND_PUT,
+            Box::new(move |msg| {
+                let r = WireReader::parse(msg)?;
+                let groups = r.u64(0)?;
+                let ids = r.u64(1)?;
+                let grads = r.f32(2)?;
+                let keys: Vec<(u32, u64)> =
+                    groups.iter().zip(&ids).map(|(&g, &id)| (g as u32, id)).collect();
+                ps.put_grads(&keys, &grads);
+                let w = WireWriter::new(KIND_PUT);
+                Ok(w.finish())
+            }),
+        );
+    }
+    server.serve(&transport).unwrap();
+}
+
+#[test]
+fn embedding_ps_get_put_over_tcp_matches_local() {
+    let ps_remote = ps();
+    let ps_local = ps(); // same seed => identical materialization
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let ps_srv = ps_remote.clone();
+    let server = std::thread::spawn(move || serve(ps_srv, listener));
+
+    let client = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+    let dim = 8;
+    let keys: Vec<(u32, u64)> = (0..32).map(|i| (i % 4, (i * 37) as u64)).collect();
+    let groups: Vec<u64> = keys.iter().map(|&(g, _)| g as u64).collect();
+    let ids: Vec<u64> = keys.iter().map(|&(_, id)| id).collect();
+
+    // GET over TCP.
+    let mut w = WireWriter::new(KIND_GET);
+    w.put_u64(&groups).put_u64(&ids);
+    let resp = client.call(&w.finish()).unwrap();
+    let remote_rows = WireReader::parse(&resp).unwrap().f32(0).unwrap();
+
+    // Same GET locally.
+    let mut local_rows = vec![0.0f32; keys.len() * dim];
+    ps_local.get_many(&keys, &mut local_rows);
+    assert_eq!(remote_rows, local_rows, "remote PS must materialize identically");
+
+    // PUT over TCP, then re-GET and compare against a local put.
+    let grads = vec![1.0f32; keys.len() * dim];
+    let mut w = WireWriter::new(KIND_PUT);
+    w.put_u64(&groups).put_u64(&ids).put_f32(&grads);
+    client.call(&w.finish()).unwrap();
+    ps_local.put_grads(&keys, &grads);
+
+    let mut w = WireWriter::new(KIND_GET);
+    w.put_u64(&groups).put_u64(&ids);
+    let resp = client.call(&w.finish()).unwrap();
+    let remote_after = WireReader::parse(&resp).unwrap().f32(0).unwrap();
+    let mut local_after = vec![0.0f32; keys.len() * dim];
+    ps_local.get_many(&keys, &mut local_after);
+    assert_eq!(remote_after, local_after);
+
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn tcp_ps_sustains_many_roundtrips() {
+    let ps_remote = ps();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || serve(ps_remote, listener));
+    let client = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+    for round in 0..200u64 {
+        let mut w = WireWriter::new(KIND_GET);
+        w.put_u64(&[round % 4]).put_u64(&[round * 13]);
+        let resp = client.call(&w.finish()).unwrap();
+        let rows = WireReader::parse(&resp).unwrap().f32(0).unwrap();
+        assert_eq!(rows.len(), 8);
+    }
+    drop(client);
+    server.join().unwrap();
+}
