@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     let eval = |params: &[f32], engine: &DenseEngine, ew: &EmbeddingWorker| -> f64 {
         let tb = ds.test_batch(2048);
-        let (emb, _) = ew.lookup_direct(&tb);
+        let (emb, _) = ew.lookup_direct(&tb).unwrap();
         let probs = engine.forward(params, &emb, &tb.nid, tb.len()).unwrap();
         auc(&probs, &tb.labels)
     };

@@ -1,0 +1,110 @@
+//! TCP service mode demo: the embedding PS as a standalone server, a hybrid
+//! trainer talking to it over loopback, and an in-process control run that
+//! must match it exactly.
+//!
+//! ```bash
+//! cargo run --release --example remote_ps
+//! ```
+//!
+//! This is the single-process version of the two-process deployment
+//! (`persia serve-ps` + `persia train --remote-ps`); it spawns the server on
+//! an ephemeral port so it needs no free well-known port.
+
+use std::sync::Arc;
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, ServiceConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::Trainer;
+use persia::service::{PsBackend, PsServer, RemotePs};
+
+fn trainer() -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 1000,
+        shard_capacity: 4096,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster =
+        ClusterConfig { n_nn_workers: 1, n_emb_workers: 2, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::Hybrid,
+        batch_size: 64,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps: 200,
+        eval_every: 100,
+        seed: 17,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset = SyntheticDataset::new(&model, 1000, 1.05, 17);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    // Inline gradient application: bit-reproducible, so remote == local.
+    t.deterministic = true;
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let base = trainer();
+
+    // 1. Embedding PS as a TCP service on an ephemeral loopback port.
+    let ps =
+        Arc::new(EmbeddingPs::new(&base.emb_cfg, base.model.emb_dim_per_group, base.train.seed));
+    let server = PsServer::bind(ps, "127.0.0.1:0", &base.emb_cfg, base.train.seed)?;
+    let addr = server.local_addr()?;
+    let handle = server.spawn()?;
+    println!("embedding PS serving on {addr}");
+
+    // 2. Hybrid training against the remote PS.
+    let remote = Arc::new(RemotePs::connect(&ServiceConfig::at(addr.to_string()))?);
+    println!(
+        "connected: dim={} nodes={} shards/node={}",
+        PsBackend::dim(remote.as_ref()),
+        remote.n_nodes(),
+        remote.shards_per_node()
+    );
+    let mut remote_trainer = trainer();
+    remote_trainer.ps_backend = Some(remote.clone());
+    let remote_out = remote_trainer.run_rust()?;
+    print!("remote-PS  ");
+    remote_out.report.print_row();
+    let stats = PsBackend::stats(remote.as_ref())?;
+    println!(
+        "remote PS stats: rows={} evictions={} imbalance={:.2}",
+        stats.total_rows, stats.total_evictions, stats.imbalance
+    );
+
+    // 3. In-process control run with the same seed.
+    let local_out = trainer().run_rust()?;
+    print!("in-process ");
+    local_out.report.print_row();
+
+    let auc_gap =
+        (remote_out.report.final_auc.unwrap() - local_out.report.final_auc.unwrap()).abs();
+    println!("AUC gap remote vs in-process: {auc_gap:.2e}");
+    anyhow::ensure!(auc_gap < 1e-6, "remote PS diverged from in-process PS");
+
+    // 4. Graceful shutdown: drop the client pool, then drain the server.
+    drop(remote_trainer);
+    remote.shutdown_server()?;
+    drop(remote);
+    handle.shutdown()?;
+    println!("server drained and stopped; service mode OK");
+    Ok(())
+}

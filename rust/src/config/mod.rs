@@ -2,10 +2,12 @@
 
 pub mod parse;
 pub mod presets;
+pub mod service;
 pub mod types;
 
 pub use parse::IniDoc;
 pub use presets::{BenchPreset, PRESET_NAMES};
+pub use service::ServiceConfig;
 pub use types::{
     ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
     Pooling, TrainConfig, TrainMode,

@@ -1,0 +1,72 @@
+//! Configuration for the TCP service mode (`persia serve-ps` /
+//! `persia train --remote-ps`).
+
+use anyhow::{bail, Result};
+
+/// How a trainer process reaches (or a PS process exposes) the embedding
+/// parameter server over TCP.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Listen address for `serve-ps`, server address for clients
+    /// (`host:port`; port 0 picks an ephemeral port when binding).
+    pub addr: String,
+    /// TCP connections in the client pool. Each connection carries one
+    /// request at a time, so this bounds in-flight PS requests per process;
+    /// the trainer's NN-worker threads and gradient appliers share the pool.
+    pub client_conns: usize,
+    /// Apply the §4.2.3 lossy fp16 value compression to row/gradient
+    /// payloads on the PS wire (index compression — unique keys only — is
+    /// always on). Off by default so the remote PS is bit-identical to the
+    /// in-process one.
+    pub wire_compress: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7700".to_string(), client_conns: 4, wire_compress: false }
+    }
+}
+
+impl ServiceConfig {
+    /// A config pointing at `addr` with defaults otherwise.
+    pub fn at(addr: impl Into<String>) -> Self {
+        Self { addr: addr.into(), ..Self::default() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.addr.contains(':') {
+            bail!("service addr {:?} must be host:port", self.addr);
+        }
+        if self.client_conns == 0 {
+            bail!("client_conns must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        let cfg = ServiceConfig::default();
+        cfg.validate().unwrap();
+        assert!(!cfg.wire_compress);
+    }
+
+    #[test]
+    fn at_overrides_addr_only() {
+        let cfg = ServiceConfig::at("0.0.0.0:0");
+        assert_eq!(cfg.addr, "0.0.0.0:0");
+        assert_eq!(cfg.client_conns, ServiceConfig::default().client_conns);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        assert!(ServiceConfig::at("nocolon").validate().is_err());
+        let cfg = ServiceConfig { client_conns: 0, ..ServiceConfig::default() };
+        assert!(cfg.validate().is_err());
+    }
+}

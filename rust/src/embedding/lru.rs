@@ -435,6 +435,103 @@ mod tests {
     }
 
     #[test]
+    fn get_refreshes_recency() {
+        let mut lru = LruStore::new(3, 1);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        lru.get_or_insert_with(3, init_row(3.0));
+        assert_eq!(lru.keys_mru_order(), vec![3, 2, 1]);
+        // Touch the coldest entries; they must move to the front.
+        lru.get(1);
+        lru.get(2);
+        assert_eq!(lru.keys_mru_order(), vec![2, 1, 3]);
+        // Now 3 is the LRU and must be the eviction victim.
+        let (_, evicted) = lru.get_or_insert_with(4, init_row(4.0));
+        assert_eq!(evicted, Some(3));
+    }
+
+    #[test]
+    fn peek_does_not_refresh_recency() {
+        let mut lru = LruStore::new(2, 1);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        assert_eq!(lru.peek(1).unwrap(), &[1.0]);
+        // peek(1) must NOT have promoted 1: it is still the LRU victim.
+        let (_, evicted) = lru.get_or_insert_with(3, init_row(3.0));
+        assert_eq!(evicted, Some(1));
+        assert_eq!(lru.keys_mru_order(), vec![3, 2]);
+    }
+
+    #[test]
+    fn evicted_key_is_always_the_lru() {
+        // Exhaustively: under a random get/insert stream, every eviction
+        // victim equals the model's least-recently-used key at that moment.
+        let cap = 6;
+        let mut lru = LruStore::new(cap, 1);
+        let mut model: Vec<u64> = Vec::new(); // front = MRU
+        let mut rng = Rng::new(77);
+        for _ in 0..3000 {
+            let k = rng.below(24);
+            let touch_only = rng.below(2) == 0 && model.contains(&k);
+            if touch_only {
+                assert!(lru.get(k).is_some());
+            } else {
+                let (_, evicted) = lru.get_or_insert_with(k, init_row(k as f32));
+                if let Some(victim) = evicted {
+                    assert_eq!(victim, *model.last().unwrap(), "evicted non-LRU key");
+                    model.pop();
+                }
+            }
+            if let Some(pos) = model.iter().position(|&x| x == k) {
+                model.remove(pos);
+            }
+            model.insert(0, k);
+            assert!(lru.len() <= cap, "capacity exceeded");
+            assert_eq!(lru.keys_mru_order(), model);
+        }
+        lru.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn property_mixed_ops_with_removes_hold_invariants() {
+        // Insert/get/remove streams: capacity bound, map/list agreement and
+        // free-slot accounting all hold at every step.
+        forall(
+            53,
+            40,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 150) as usize;
+                (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+            },
+            |ops| {
+                let cap = 5;
+                let mut lru = LruStore::new(cap, 2);
+                for &op in ops {
+                    let k = (op >> 2) % 12;
+                    match op % 3 {
+                        0 => {
+                            lru.get_or_insert_with(k, init_row(k as f32));
+                        }
+                        1 => {
+                            lru.get(k);
+                        }
+                        _ => {
+                            lru.remove(k);
+                        }
+                    }
+                    if lru.len() > cap {
+                        return false;
+                    }
+                    if lru.check_invariants().is_err() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
     fn property_matches_reference_lru_model() {
         // Reference model: Vec-based LRU with explicit recency ordering.
         forall(

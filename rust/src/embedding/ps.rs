@@ -205,8 +205,6 @@ mod tests {
         );
     }
 
-    impl crate::util::quickcheck::Shrink for (u64, u64) {}
-
     #[test]
     fn routing_is_deterministic_and_in_range() {
         let ps = EmbeddingPs::new(&cfg(PartitionPolicy::ShuffledUniform), 4, 1);

@@ -1,8 +1,11 @@
 //! The end-to-end distributed trainer (paper §4.1's data-dispatching
 //! procedure, steps (1)-(7)) in all four synchronization modes.
 //!
-//! Topology (all in-process, one OS thread per logical node — see DESIGN.md
-//! substitutions; the TCP service mode lives in `service/`):
+//! Topology (one OS thread per logical node — see DESIGN.md substitutions).
+//! The embedding PS sits behind [`PsBackend`]: in-process by default, or a
+//! remote TCP server when [`Trainer::ps_backend`] is set to a
+//! [`crate::service::RemotePs`] (the TCP service mode in `service/`); all
+//! four modes run unchanged against either.
 //!
 //! ```text
 //!   loader(rank r) ──ids──▶ embedding worker ──get/put──▶ embedding PS
@@ -39,6 +42,7 @@ use crate::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
 use crate::embedding::EmbeddingPs;
 use crate::metrics::{auc, RunReport, Tracker};
 use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
+use crate::service::PsBackend;
 use crate::util::Rng;
 use crate::worker::{EmbeddingWorker, NnWorker};
 
@@ -123,6 +127,16 @@ pub struct Trainer {
     pub eval_rows: usize,
     /// Record a Gantt timeline on worker 0.
     pub record_gantt: bool,
+    /// PS backend override. `None` builds the in-process [`EmbeddingPs`]
+    /// from `emb_cfg`; `Some` (e.g. a [`crate::service::RemotePs`]) trains
+    /// against it — the TCP service mode.
+    pub ps_backend: Option<Arc<dyn PsBackend>>,
+    /// Apply embedding gradients inline (single-threaded per worker) instead
+    /// of via the async applier threads. The prefetch pipeline still runs τ
+    /// batches ahead, so bounded staleness is preserved, but the whole run
+    /// becomes bit-reproducible — the loopback service test relies on this
+    /// to assert exact in-process vs. remote parity.
+    pub deterministic: bool,
 }
 
 impl Trainer {
@@ -133,7 +147,17 @@ impl Trainer {
         train: TrainConfig,
         dataset: SyntheticDataset,
     ) -> Self {
-        Self { model, emb_cfg, cluster, train, dataset, eval_rows: 2048, record_gantt: false }
+        Self {
+            model,
+            emb_cfg,
+            cluster,
+            train,
+            dataset,
+            eval_rows: 2048,
+            record_gantt: false,
+            ps_backend: None,
+            deterministic: false,
+        }
     }
 
     /// Pipeline depth (bounded staleness τ) for the configured mode.
@@ -161,14 +185,37 @@ impl Trainer {
         self.emb_cfg.validate()?;
         self.cluster.validate()?;
         self.train.validate()?;
+        // Bit-reproducibility is only deliverable single-worker: with k > 1
+        // the NN-worker threads still race on the shared PS and AllReduce.
+        anyhow::ensure!(
+            !self.deterministic || self.cluster.n_nn_workers == 1,
+            "deterministic mode requires n_nn_workers == 1 (got {})",
+            self.cluster.n_nn_workers
+        );
 
         let net = Arc::new(NetSim::new(self.cluster.net));
-        let ps = Arc::new(EmbeddingPs::new(&self.emb_cfg, self.model.emb_dim_per_group, self.train.seed));
+        let backend: Arc<dyn PsBackend> = match &self.ps_backend {
+            Some(backend) => backend.clone(),
+            None => Arc::new(EmbeddingPs::new(
+                &self.emb_cfg,
+                self.model.emb_dim_per_group,
+                self.train.seed,
+            )),
+        };
+        anyhow::ensure!(
+            backend.dim() == self.model.emb_dim_per_group,
+            "PS backend dim {} != model group dim {}",
+            backend.dim(),
+            self.model.emb_dim_per_group
+        );
+        // A remote PS built from different flags than this trainer would
+        // silently train different numerics; fail the handshake instead.
+        backend.check_compat(&self.emb_cfg, self.train.seed)?;
         let emb_workers: Vec<Arc<EmbeddingWorker>> = (0..self.cluster.n_emb_workers)
             .map(|r| {
                 Arc::new(EmbeddingWorker::new(
                     r as u8,
-                    ps.clone(),
+                    backend.clone(),
                     &self.model,
                     net.clone(),
                     self.train.compress,
@@ -181,21 +228,31 @@ impl Trainer {
         let inflight: Arc<Vec<AtomicI64>> =
             Arc::new((0..emb_workers.len()).map(|_| AtomicI64::new(0)).collect());
         let max_staleness = Arc::new(AtomicU64::new(0));
+        let put_failures = Arc::new(AtomicU64::new(0));
+        let mut applier_handles = Vec::with_capacity(emb_workers.len());
         let appliers: Vec<Sender<GradMsg>> = emb_workers
             .iter()
             .map(|ew| {
                 let ew = ew.clone();
                 let inflight = inflight.clone();
+                let put_failures = put_failures.clone();
                 let (tx, rx) = channel::<GradMsg>();
-                std::thread::Builder::new()
+                let handle = std::thread::Builder::new()
                     .name(format!("grad-applier-{}", ew.rank()))
                     .spawn(move || {
                         while let Ok(msg) = rx.recv() {
                             match msg {
                                 GradMsg::Apply { ew: idx, sids, grads } => {
-                                    // Losing a put on failure is tolerated
-                                    // (§4.2.4) — log-free ignore.
-                                    let _ = ew.push_grads(&sids, &grads);
+                                    // Losing an occasional put is tolerated
+                                    // (§4.2.4), but never silently: count it
+                                    // and surface the first failure — against
+                                    // a remote PS this usually means the
+                                    // connection died.
+                                    if let Err(e) = ew.push_grads(&sids, &grads) {
+                                        if put_failures.fetch_add(1, Ordering::Relaxed) == 0 {
+                                            eprintln!("grad applier: put failed: {e:#}");
+                                        }
+                                    }
                                     inflight[idx].fetch_sub(1, Ordering::Relaxed);
                                 }
                                 GradMsg::Stop => return,
@@ -203,6 +260,7 @@ impl Trainer {
                         }
                     })
                     .expect("spawn applier");
+                applier_handles.push(handle);
                 tx
             })
             .collect();
@@ -271,8 +329,14 @@ impl Trainer {
         });
         out?;
 
+        // Drain the appliers (queued puts apply in order before Stop) so the
+        // failure count below is complete and no thread outlives the run.
         for tx in &appliers {
             let _ = tx.send(GradMsg::Stop);
+        }
+        drop(appliers);
+        for handle in applier_handles {
+            let _ = handle.join();
         }
 
         let wall_secs = wall_start.elapsed().as_secs_f64();
@@ -295,12 +359,14 @@ impl Trainer {
             final_auc: tracker.final_auc(),
             samples_per_sec: samples as f64 / sim_secs.max(1e-9),
             max_staleness: max_staleness.load(Ordering::Relaxed),
+            grad_put_failures: put_failures.load(Ordering::Relaxed),
         };
         drop(tracker);
         let tracker = trackers[0].lock().unwrap().take_inner();
         let gantt = gantts[0].lock().unwrap().clone();
         let fp = std::mem::take(&mut *final_params[0].lock().unwrap());
-        Ok(TrainOutput { report, tracker, gantt, ps_imbalance: ps.imbalance(), final_params: fp })
+        let ps_imbalance = backend.stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
+        Ok(TrainOutput { report, tracker, gantt, ps_imbalance, final_params: fp })
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -413,6 +479,15 @@ impl Trainer {
                     let sim = emb_workers[pf.ew].push_grads(&pf.sids, &out.grad_emb)?;
                     t0.elapsed().as_secs_f64() + sim
                 }
+                _ if self.deterministic => {
+                    // Bit-reproducible variant: apply inline. The pipeline
+                    // already pulled the next τ batches, so the staleness
+                    // the async appliers would produce is preserved, just
+                    // without thread-timing nondeterminism. Cost stays off
+                    // the critical path (same overlap accounting as async).
+                    emb_workers[pf.ew].push_grads(&pf.sids, &out.grad_emb)?;
+                    0.0
+                }
                 _ => {
                     inflight[pf.ew].fetch_add(1, Ordering::Relaxed);
                     appliers[pf.ew]
@@ -512,7 +587,7 @@ impl Trainer {
         ew: &EmbeddingWorker,
     ) -> Result<f64> {
         let batch = self.dataset.test_batch(self.eval_rows);
-        let (emb, _) = ew.lookup_direct(&batch);
+        let (emb, _) = ew.lookup_direct(&batch)?;
         let probs = engine.forward(params, &emb, &batch.nid, batch.len())?;
         Ok(auc(&probs, &batch.labels))
     }
@@ -638,5 +713,46 @@ mod tests {
         let mut trainer = small_setup(TrainMode::Hybrid, 10, 1);
         trainer.train.steps = 0;
         assert!(trainer.run_rust().is_err());
+    }
+
+    #[test]
+    fn deterministic_mode_is_bit_reproducible() {
+        // Two deterministic hybrid runs with one NN worker must agree on
+        // every recorded loss and the final parameters exactly — the
+        // property the remote-PS loopback parity test builds on.
+        let run = || {
+            let mut t = small_setup(TrainMode::Hybrid, 60, 1);
+            t.deterministic = true;
+            t.train.eval_every = 30;
+            t.run_rust().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.tracker.losses, b.tracker.losses);
+        assert_eq!(a.tracker.aucs, b.tracker.aucs);
+        assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn explicit_in_process_backend_matches_default() {
+        // Passing the in-process PS through the ps_backend override must be
+        // identical to letting the trainer build it.
+        let steps = 40;
+        let make = || {
+            let mut t = small_setup(TrainMode::FullSync, steps, 1);
+            t.train.eval_every = steps;
+            t
+        };
+        let default_run = make().run_rust().unwrap();
+        let mut t = make();
+        let ps: Arc<dyn PsBackend> = Arc::new(crate::embedding::EmbeddingPs::new(
+            &t.emb_cfg,
+            t.model.emb_dim_per_group,
+            t.train.seed,
+        ));
+        t.ps_backend = Some(ps);
+        let explicit_run = t.run_rust().unwrap();
+        assert_eq!(default_run.tracker.losses, explicit_run.tracker.losses);
+        assert_eq!(default_run.tracker.aucs, explicit_run.tracker.aucs);
     }
 }

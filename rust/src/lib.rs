@@ -14,6 +14,18 @@
 //!   here via the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   training hot path.
 //!
+//! # Service mode (deployed topology)
+//!
+//! Besides the in-process simulated cluster, the embedding PS runs as a
+//! standalone TCP server ([`service`]): embedding workers reach it through
+//! the [`service::PsBackend`] trait, either in-process
+//! ([`embedding::EmbeddingPs`]) or over the wire ([`service::RemotePs`] →
+//! [`service::PsServer`]), with batched deduplicated get/put and the §4.2.3
+//! index/value compression on the wire. `persia serve-ps` starts a server,
+//! `persia train --remote-ps <addr>` trains against it, and the loopback
+//! test matrix (`rust/tests/integration_service.rs`) proves remote training
+//! is numerically identical to in-process training in every mode.
+//!
 //! Entry points: [`hybrid::Trainer`] for end-to-end training,
 //! [`config::BenchPreset`] for the paper's Table-1 benchmark presets, and the
 //! `persia` binary / `examples/` for runnable drivers.
@@ -28,6 +40,7 @@ pub mod fault;
 pub mod hybrid;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -1,20 +1,27 @@
 //! `persia` — CLI launcher for the hybrid recommender training system.
 //!
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
-//!   train     run a training job (preset, mode, workers, steps, ...)
+//!   train     run a training job (preset, mode, workers, steps, ...);
+//!             add --remote-ps host:port to use a TCP embedding PS
+//!   serve-ps  run the embedding PS as a standalone TCP server
 //!   gantt     print the Fig.-3 phase timelines for all four modes
 //!   table1    print the Table-1 model-scale presets
 //!   capacity  Fig.-9 style capacity sweep (virtualized tables)
 //!   modes     convergence comparison across modes (Fig. 7 / Table 2 style)
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, ServiceConfig, TrainConfig, TrainMode,
+};
 use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
 use persia::hybrid::{PjrtEngineFactory, Trainer};
 use persia::runtime::ArtifactManifest;
+use persia::service::{PsBackend, PsServer, RemotePs};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -38,13 +45,29 @@ fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> 
     flags.get(key).map(|s| s.as_str()).unwrap_or(default)
 }
 
-fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
+/// The preset-derived pieces `train` and `serve-ps` must agree on for a
+/// remote PS to be interchangeable with the in-process one: same model
+/// geometry, same embedding storage config, same materialization seed.
+struct PresetSetup {
+    preset: BenchPreset,
+    model: persia::config::ModelConfig,
+    emb_cfg: persia::config::EmbeddingConfig,
+    seed: u64,
+}
+
+fn preset_setup(flags: &HashMap<String, String>) -> Result<PresetSetup> {
     let preset_name = flag(flags, "preset", "taobao");
     let preset = BenchPreset::by_name(preset_name)
         .with_context(|| format!("unknown preset {preset_name}"))?;
-    let dense = flag(flags, "dense", "small");
-    let model = preset.model(dense);
+    let model = preset.model(flag(flags, "dense", "small"));
     let emb_cfg = preset.embedding(&model, flag(flags, "shard-capacity", "65536").parse()?);
+    let seed = flag(flags, "seed", "42").parse()?;
+    Ok(PresetSetup { preset, model, emb_cfg, seed })
+}
+
+fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
+    let PresetSetup { preset, model, emb_cfg, seed } = preset_setup(flags)?;
+    let dense = flag(flags, "dense", "small");
     let cluster = ClusterConfig {
         n_nn_workers: flag(flags, "nn-workers", "4").parse()?,
         n_emb_workers: flag(flags, "emb-workers", "2").parse()?,
@@ -55,7 +78,13 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         },
     };
     // PJRT artifacts fix the batch per preset; read it from the manifest.
-    let use_pjrt = flag(flags, "engine", "pjrt") == "pjrt";
+    // Default "auto": PJRT when artifacts exist, pure-Rust tower otherwise
+    // (the offline build ships a stub xla crate with no executor).
+    let use_pjrt = match flag(flags, "engine", "auto") {
+        "pjrt" => true,
+        "rust" => false,
+        _ => ArtifactManifest::default_dir().join("manifest.txt").exists(),
+    };
     let batch: usize = if use_pjrt {
         let manifest = ArtifactManifest::load(ArtifactManifest::default_dir())?;
         manifest.preset(dense)?.batch
@@ -69,7 +98,7 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         staleness_bound: flag(flags, "tau", "4").parse()?,
         steps: flag(flags, "steps", "200").parse()?,
         eval_every: flag(flags, "eval-every", "50").parse()?,
-        seed: flag(flags, "seed", "42").parse()?,
+        seed,
         use_pjrt,
         compress: flag(flags, "compress", "true") == "true",
     };
@@ -79,7 +108,47 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         preset.zipf_exponent,
         train.seed,
     );
-    Ok(Trainer::new(model, emb_cfg, cluster, train, dataset))
+    let mut trainer = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    trainer.deterministic = flag(flags, "deterministic", "false") == "true";
+    if let Some(addr) = flags.get("remote-ps") {
+        let svc = ServiceConfig {
+            addr: addr.clone(),
+            client_conns: flag(flags, "ps-conns", "4").parse()?,
+            wire_compress: flag(flags, "ps-wire-compress", "false") == "true",
+        };
+        let remote = RemotePs::connect(&svc)
+            .with_context(|| format!("connecting to remote PS at {addr}"))?;
+        println!(
+            "remote PS at {addr}: dim={} nodes={} shards/node={}",
+            PsBackend::dim(&remote),
+            remote.n_nodes(),
+            remote.shards_per_node()
+        );
+        trainer.ps_backend = Some(Arc::new(remote));
+    }
+    Ok(trainer)
+}
+
+/// Build the PS exactly as `train` would for the same preset flags, then
+/// serve it over TCP until a SHUTDOWN RPC arrives.
+fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
+    let PresetSetup { preset, model, emb_cfg, seed } = preset_setup(&flags)?;
+    let svc = ServiceConfig::at(flag(&flags, "addr", "127.0.0.1:7700"));
+    svc.validate()?;
+
+    let ps = Arc::new(EmbeddingPs::new(&emb_cfg, model.emb_dim_per_group, seed));
+    let server = PsServer::bind(ps, &svc.addr, &emb_cfg, seed)?;
+    println!(
+        "persia serve-ps: preset={} dim={} nodes={} shards/node={} capacity={}/shard seed={}",
+        preset.name,
+        model.emb_dim_per_group,
+        emb_cfg.n_nodes,
+        emb_cfg.shards_per_node,
+        emb_cfg.shard_capacity,
+        seed,
+    );
+    println!("listening on {} (stop with a SHUTDOWN RPC)", server.local_addr()?);
+    server.serve_forever()
 }
 
 fn run_trainer(trainer: &Trainer, flags: &HashMap<String, String>) -> Result<()> {
@@ -173,9 +242,13 @@ fn cmd_modes(flags: HashMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: persia <train|gantt|table1|capacity|modes> [--preset taobao] [--mode hybrid] \
-         [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] [--emb-workers N] \
-         [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] [--verbose true]"
+        "usage: persia <train|serve-ps|gantt|table1|capacity|modes> [--preset taobao] \
+         [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
+         [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
+         [--verbose true] [--deterministic true]\n\
+         service mode: persia serve-ps [--addr 127.0.0.1:7700] then \
+         persia train --remote-ps 127.0.0.1:7700 [--ps-conns N] [--ps-wire-compress true] \
+         (same --preset/--dense/--shard-capacity/--seed on both sides)"
     );
     std::process::exit(2)
 }
@@ -186,6 +259,7 @@ fn main() -> Result<()> {
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
         "train" => cmd_train(flags),
+        "serve-ps" => cmd_serve_ps(flags),
         "gantt" => cmd_gantt(flags),
         "table1" => cmd_table1(),
         "capacity" => cmd_capacity(flags),

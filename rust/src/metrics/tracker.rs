@@ -116,12 +116,16 @@ pub struct RunReport {
     pub samples_per_sec: f64,
     /// Max observed embedding staleness (Theorem 1's τ).
     pub max_staleness: u64,
+    /// Embedding gradient puts that failed in the async appliers. Occasional
+    /// losses are tolerated (§4.2.4), but a nonzero count against a remote
+    /// PS usually means the connection died mid-run — check it.
+    pub grad_put_failures: u64,
 }
 
 impl RunReport {
     pub fn print_row(&self) {
         println!(
-            "{:<12} steps={:<6} samples={:<8} wall={:>7.2}s sim={:>8.2}s loss={:<8.4} auc={} thpt={:.0}/s tau={}",
+            "{:<12} steps={:<6} samples={:<8} wall={:>7.2}s sim={:>8.2}s loss={:<8.4} auc={} thpt={:.0}/s tau={}{}",
             self.mode,
             self.steps,
             self.samples,
@@ -130,7 +134,12 @@ impl RunReport {
             self.final_loss,
             self.final_auc.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into()),
             self.samples_per_sec,
-            self.max_staleness
+            self.max_staleness,
+            if self.grad_put_failures > 0 {
+                format!(" LOST-PUTS={}", self.grad_put_failures)
+            } else {
+                String::new()
+            }
         );
     }
 }

@@ -1,0 +1,125 @@
+//! The [`PsBackend`] abstraction: how an embedding worker reaches the
+//! embedding parameter server.
+//!
+//! Two implementations exist:
+//! * [`crate::embedding::EmbeddingPs`] — in-process (the simulated-cluster
+//!   default): calls go straight into the lock-striped shards;
+//! * [`super::RemotePs`] — the TCP client stub talking to a
+//!   [`super::PsServer`] over the zero-copy wire format.
+//!
+//! The trait is deliberately *batched*: workers dedup a batch's keys first
+//! (§4.2.3 index compression applied at the source) and issue one get/put
+//! per mini-batch, so the remote path costs one round-trip where the naive
+//! per-row API would cost thousands.
+
+use anyhow::Result;
+
+use crate::config::EmbeddingConfig;
+use crate::embedding::EmbeddingPs;
+
+/// Aggregate PS statistics surfaced through either backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PsStats {
+    /// Materialized rows across all nodes/shards.
+    pub total_rows: usize,
+    /// LRU evictions since start.
+    pub total_evictions: u64,
+    /// Max/mean per-node traffic ratio (1.0 = perfectly balanced).
+    pub imbalance: f64,
+}
+
+/// Batched get/put access to a (possibly remote) embedding PS.
+pub trait PsBackend: Send + Sync {
+    /// Embedding dimension per row.
+    fn dim(&self) -> usize;
+
+    /// Fetch rows for `keys` into `out` (`keys.len() * dim` floats),
+    /// materializing missing rows deterministically.
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()>;
+
+    /// Apply one gradient row per key (`keys.len() * dim` floats).
+    fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()>;
+
+    /// Aggregate statistics (row counts, evictions, load balance).
+    fn stats(&self) -> Result<PsStats>;
+
+    /// Error if this backend's PS was not built from exactly this config +
+    /// seed. In-process backends are compatible by construction (the
+    /// trainer built them from the config it is checking); the remote
+    /// backend compares against the server's INFO handshake so a
+    /// `serve-ps`/`train` flag mismatch fails loudly instead of silently
+    /// training against different numerics.
+    fn check_compat(&self, _cfg: &EmbeddingConfig, _seed: u64) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// In-process backend: direct calls into the sharded PS.
+impl PsBackend for EmbeddingPs {
+    fn dim(&self) -> usize {
+        EmbeddingPs::dim(self)
+    }
+
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
+        EmbeddingPs::get_many(self, keys, out);
+        Ok(())
+    }
+
+    fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
+        EmbeddingPs::put_grads(self, keys, grads);
+        Ok(())
+    }
+
+    fn stats(&self) -> Result<PsStats> {
+        Ok(PsStats {
+            total_rows: self.total_rows(),
+            total_evictions: self.total_evictions(),
+            imbalance: self.imbalance(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EmbeddingConfig, OptimizerKind, PartitionPolicy};
+    use std::sync::Arc;
+
+    fn ps() -> EmbeddingPs {
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1 << 20,
+            shard_capacity: 256,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        EmbeddingPs::new(&cfg, 4, 11)
+    }
+
+    #[test]
+    fn local_backend_delegates() {
+        let ps = ps();
+        let backend: &dyn PsBackend = &ps;
+        assert_eq!(backend.dim(), 4);
+        let keys = [(0u32, 1u64), (1, 2)];
+        let mut rows = vec![0.0; 8];
+        backend.get_many(&keys, &mut rows).unwrap();
+        backend.put_grads(&keys, &vec![1.0; 8]).unwrap();
+        let mut after = vec![0.0; 8];
+        backend.get_many(&keys, &mut after).unwrap();
+        for (b, a) in rows.iter().zip(&after) {
+            assert!((b - 0.5 - a).abs() < 1e-6, "SGD lr=0.5 step expected");
+        }
+        let stats = backend.stats().unwrap();
+        assert_eq!(stats.total_rows, 2);
+        assert!(stats.imbalance >= 1.0);
+    }
+
+    #[test]
+    fn arc_coerces_to_trait_object() {
+        let backend: Arc<dyn PsBackend> = Arc::new(ps());
+        assert_eq!(backend.dim(), 4);
+    }
+}

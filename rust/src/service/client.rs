@@ -1,0 +1,143 @@
+//! TCP client stub: [`RemotePs`] implements [`PsBackend`] against a
+//! [`super::PsServer`].
+//!
+//! A small pool of TCP connections (see
+//! [`ServiceConfig::client_conns`](crate::config::ServiceConfig)) is shared
+//! round-robin by all threads of the trainer process (NN workers pulling,
+//! gradient appliers putting); each connection carries one request at a
+//! time, guarded by a mutex, so responses always match their requests
+//! without relying on correlation-id reordering.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::rpc::RpcClient;
+use crate::comm::transport::TcpTransport;
+use crate::config::{EmbeddingConfig, ServiceConfig};
+use crate::embedding::ps::pack_key;
+
+use super::backend::{PsBackend, PsStats};
+use super::protocol;
+use super::protocol::PsInfo;
+
+/// Remote embedding-PS backend over TCP.
+pub struct RemotePs {
+    info: PsInfo,
+    wire_compress: bool,
+    clients: Vec<Mutex<RpcClient<TcpTransport>>>,
+    next: AtomicUsize,
+}
+
+impl RemotePs {
+    /// Connect a pool to `cfg.addr` and handshake the PS geometry + config.
+    pub fn connect(cfg: &ServiceConfig) -> Result<RemotePs> {
+        cfg.validate()?;
+        let mut clients = Vec::with_capacity(cfg.client_conns);
+        for i in 0..cfg.client_conns {
+            let transport = TcpTransport::connect(&cfg.addr)
+                .with_context(|| format!("connecting PS pool conn {i} to {}", cfg.addr))?;
+            clients.push(Mutex::new(RpcClient::new(transport)));
+        }
+        let resp = {
+            let client = clients[0].lock().unwrap();
+            client.call(&protocol::encode_info_request()).context("PS INFO handshake")?
+        };
+        let info = protocol::decode_info_response(&resp)?;
+        ensure!(info.dim > 0, "remote PS reports dim 0");
+        Ok(RemotePs { info, wire_compress: cfg.wire_compress, clients, next: AtomicUsize::new(0) })
+    }
+
+    /// The server's INFO handshake (geometry + config fingerprint).
+    pub fn info(&self) -> &PsInfo {
+        &self.info
+    }
+
+    /// PS node count reported by the server.
+    pub fn n_nodes(&self) -> usize {
+        self.info.n_nodes
+    }
+
+    /// Lock-striped shards per node reported by the server.
+    pub fn shards_per_node(&self) -> usize {
+        self.info.shards_per_node
+    }
+
+    fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
+        let client = self.clients[i].lock().unwrap();
+        client.call(msg)
+    }
+
+    /// Ask the server to shut down gracefully (stop accepting, drain
+    /// connections). The ack is received before the server exits its loop.
+    pub fn shutdown_server(&self) -> Result<()> {
+        self.call(&protocol::encode_shutdown_request()).context("PS shutdown request")?;
+        Ok(())
+    }
+}
+
+impl PsBackend for RemotePs {
+    fn dim(&self) -> usize {
+        self.info.dim
+    }
+
+    fn check_compat(&self, cfg: &EmbeddingConfig, seed: u64) -> Result<()> {
+        let want = (
+            cfg.n_nodes,
+            cfg.shards_per_node,
+            seed,
+            cfg.shard_capacity,
+            protocol::optimizer_code(cfg.optimizer),
+            protocol::partition_code(cfg.partition),
+            cfg.lr.to_bits(),
+        );
+        let got = (
+            self.info.n_nodes,
+            self.info.shards_per_node,
+            self.info.seed,
+            self.info.shard_capacity,
+            self.info.optimizer_code,
+            self.info.partition_code,
+            self.info.lr_bits,
+        );
+        ensure!(
+            want == got,
+            "remote PS config mismatch: trainer expects \
+             (nodes, shards, seed, capacity, opt, partition, lr_bits) = {want:?}, \
+             server reports {got:?} — start serve-ps and train with the same \
+             --preset/--dense/--shard-capacity/--seed flags"
+        );
+        Ok(())
+    }
+
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
+        ensure!(out.len() == keys.len() * self.info.dim, "GET output shape mismatch");
+        if keys.is_empty() {
+            return Ok(());
+        }
+        let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
+        let resp = self.call(&protocol::encode_get_request(&packed, self.wire_compress))?;
+        protocol::decode_get_response_into(&resp, self.info.dim, out)?;
+        Ok(())
+    }
+
+    fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
+        ensure!(grads.len() == keys.len() * self.info.dim, "PUT gradient shape mismatch");
+        if keys.is_empty() {
+            return Ok(());
+        }
+        let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
+        let msg = protocol::encode_put_request(&packed, grads, self.info.dim, self.wire_compress);
+        let resp = self.call(&msg)?;
+        let applied = protocol::decode_put_response(&resp)?;
+        ensure!(applied == keys.len(), "PS applied {applied} of {} rows", keys.len());
+        Ok(())
+    }
+
+    fn stats(&self) -> Result<PsStats> {
+        let resp = self.call(&protocol::encode_stats_request())?;
+        protocol::decode_stats_response(&resp)
+    }
+}

@@ -1,0 +1,29 @@
+//! The TCP service mode: run the embedding PS as a standalone server
+//! (paper §4.2.2/§4.2.3 deployed across processes instead of simulated
+//! in-process).
+//!
+//! * [`backend`] — the [`PsBackend`] trait embedding workers program
+//!   against; implemented by the in-process [`crate::embedding::EmbeddingPs`]
+//!   and by the TCP client stub.
+//! * [`protocol`] — message kinds + codecs over the zero-copy wire format,
+//!   with the paper's index compression (deduplicated packed keys) and
+//!   optional lossy fp16 value compression.
+//! * [`server`] — [`PsServer`]: accept loop, per-connection dispatch
+//!   threads, graceful sleep-free shutdown.
+//! * [`client`] — [`RemotePs`]: a mutex-guarded connection pool shared by
+//!   every trainer thread.
+//!
+//! Entry points: `persia serve-ps` starts a server;
+//! `persia train --remote-ps <addr>` (or setting
+//! [`crate::hybrid::Trainer::ps_backend`]) trains against it. The loopback
+//! integration test (`rust/tests/integration_service.rs`) proves the remote
+//! path is numerically identical to the in-process one.
+
+pub mod backend;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use backend::{PsBackend, PsStats};
+pub use client::RemotePs;
+pub use server::{PsServer, PsServerHandle};

@@ -1,0 +1,364 @@
+//! PS service wire protocol: message kinds + codecs over [`crate::comm::wire`].
+//!
+//! Requests/responses are zero-copy wire messages (§4.2.3 — no protobuf):
+//!
+//! | kind       | request sections            | response sections            |
+//! |------------|-----------------------------|------------------------------|
+//! | `INFO`     | –                           | u64 `[dim, nodes, shards]`   |
+//! | `GET`      | u64 keys, u8 flags          | u8 flags, values             |
+//! | `PUT`      | u64 keys, u8 flags, values  | u64 `[rows applied]`         |
+//! | `STATS`    | –                           | u64 `[rows, evic, imb bits]` |
+//! | `SHUTDOWN` | –                           | – (ack)                      |
+//!
+//! Keys are `pack_key(group, id)` u64s, already deduplicated by the sender —
+//! the paper's lossless index compression. `values` is either one raw f32
+//! section (bit-exact) or, when the compress flag is set, an fp16 section
+//! plus per-row scales — the paper's lossy value compression
+//! ([`CompressedValues`]), halving wire bytes at ~2^-10 relative error.
+
+use anyhow::{ensure, Result};
+
+use crate::comm::compress::CompressedValues;
+use crate::comm::wire::{WireReader, WireWriter};
+
+use super::backend::PsStats;
+
+/// Message kinds of the PS service (disjoint from ad-hoc test kinds).
+pub const KIND_INFO: u32 = 0x5001;
+pub const KIND_GET: u32 = 0x5002;
+pub const KIND_PUT: u32 = 0x5003;
+pub const KIND_STATS: u32 = 0x5004;
+pub const KIND_SHUTDOWN: u32 = 0x5005;
+
+/// Flag bit: value payload is fp16 + per-row scales.
+const FLAG_COMPRESS: u8 = 1;
+
+fn put_values(w: &mut WireWriter, values: &[f32], dim: usize, compress: bool) {
+    if compress {
+        let c = CompressedValues::compress(values, dim);
+        w.put_f16(&c.vals);
+        w.put_f32(&c.scales);
+    } else {
+        w.put_f32(values);
+    }
+}
+
+fn read_values(r: &WireReader, section: usize, dim: usize, compressed: bool) -> Result<Vec<f32>> {
+    if compressed {
+        let vals = r.f16(section)?;
+        let scales = r.f32(section + 1)?;
+        ensure!(vals.len() == scales.len() * dim, "compressed value shape mismatch");
+        Ok(CompressedValues { vals, scales, dim }.decompress())
+    } else {
+        r.f32(section)
+    }
+}
+
+// --- INFO ---
+
+/// Everything a client needs to know the server's PS is the one its
+/// trainer config describes. Geometry mismatches would corrupt shapes;
+/// the rest (seed, optimizer, lr, capacity, partition) would silently
+/// change numerics — so all of it rides in the handshake.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PsInfo {
+    pub dim: usize,
+    pub n_nodes: usize,
+    pub shards_per_node: usize,
+    pub seed: u64,
+    pub shard_capacity: usize,
+    /// [`OptimizerKind`](crate::config::OptimizerKind) as a stable code.
+    pub optimizer_code: u64,
+    /// [`PartitionPolicy`](crate::config::PartitionPolicy) as a stable code.
+    pub partition_code: u64,
+    /// Row-optimizer learning rate (f32 bits).
+    pub lr_bits: u32,
+}
+
+pub fn optimizer_code(kind: crate::config::OptimizerKind) -> u64 {
+    match kind {
+        crate::config::OptimizerKind::Sgd => 0,
+        crate::config::OptimizerKind::Adagrad => 1,
+        crate::config::OptimizerKind::Adam => 2,
+    }
+}
+
+pub fn partition_code(policy: crate::config::PartitionPolicy) -> u64 {
+    match policy {
+        crate::config::PartitionPolicy::FeatureGroup => 0,
+        crate::config::PartitionPolicy::ShuffledUniform => 1,
+    }
+}
+
+pub fn encode_info_request() -> Vec<u8> {
+    WireWriter::new(KIND_INFO).finish()
+}
+
+pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_INFO);
+    w.put_u64(&[
+        info.dim as u64,
+        info.n_nodes as u64,
+        info.shards_per_node as u64,
+        info.seed,
+        info.shard_capacity as u64,
+        info.optimizer_code,
+        info.partition_code,
+        info.lr_bits as u64,
+    ]);
+    w.finish()
+}
+
+pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_INFO, "expected INFO response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 8, "malformed INFO response ({} fields)", xs.len());
+    Ok(PsInfo {
+        dim: xs[0] as usize,
+        n_nodes: xs[1] as usize,
+        shards_per_node: xs[2] as usize,
+        seed: xs[3],
+        shard_capacity: xs[4] as usize,
+        optimizer_code: xs[5],
+        partition_code: xs[6],
+        lr_bits: xs[7] as u32,
+    })
+}
+
+// --- GET ---
+
+pub fn encode_get_request(keys: &[u64], compress: bool) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_GET);
+    w.put_u64(keys).put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
+    w.finish()
+}
+
+/// Returns `(packed keys, compress)`.
+pub fn decode_get_request(msg: &[u8]) -> Result<(Vec<u64>, bool)> {
+    let r = WireReader::parse(msg)?;
+    let keys = r.u64(0)?;
+    let flags = r.u8(1)?;
+    ensure!(flags.len() == 1, "malformed GET flags");
+    Ok((keys, flags[0] & FLAG_COMPRESS != 0))
+}
+
+pub fn encode_get_response(rows: &[f32], dim: usize, compress: bool) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_GET);
+    w.put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
+    put_values(&mut w, rows, dim, compress);
+    w.finish()
+}
+
+/// Decode a GET response straight into `out` (`n_rows * dim` floats) —
+/// the hot path: no intermediate allocation, zero-copy borrow of the raw
+/// f32 section where alignment permits.
+pub fn decode_get_response_into(msg: &[u8], dim: usize, out: &mut [f32]) -> Result<()> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_GET, "expected GET response, got kind {}", r.kind());
+    let flags = r.u8(0)?;
+    ensure!(flags.len() == 1, "malformed GET response flags");
+    if flags[0] & FLAG_COMPRESS != 0 {
+        let vals = r.f16(1)?;
+        let scales = r.f32(2)?;
+        ensure!(
+            vals.len() == out.len() && scales.len() * dim == vals.len(),
+            "GET returned {} compressed floats, want {}",
+            vals.len(),
+            out.len()
+        );
+        CompressedValues { vals, scales, dim }.decompress_into(out);
+    } else {
+        // Borrow in place when the buffer happens to be 4-aligned (the
+        // section offset always is); fall back to the copying reader.
+        match r.f32_borrowed(1) {
+            Ok(rows) => {
+                ensure!(
+                    rows.len() == out.len(),
+                    "GET returned {} floats, want {}",
+                    rows.len(),
+                    out.len()
+                );
+                out.copy_from_slice(rows);
+            }
+            Err(_) => {
+                let rows = r.f32(1)?;
+                ensure!(
+                    rows.len() == out.len(),
+                    "GET returned {} floats, want {}",
+                    rows.len(),
+                    out.len()
+                );
+                out.copy_from_slice(&rows);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode `n_rows * dim` floats from a GET response (allocating variant).
+pub fn decode_get_response(msg: &[u8], dim: usize, n_rows: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; n_rows * dim];
+    decode_get_response_into(msg, dim, &mut out)?;
+    Ok(out)
+}
+
+// --- PUT ---
+
+pub fn encode_put_request(keys: &[u64], grads: &[f32], dim: usize, compress: bool) -> Vec<u8> {
+    debug_assert_eq!(grads.len(), keys.len() * dim);
+    let mut w = WireWriter::new(KIND_PUT);
+    w.put_u64(keys).put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
+    put_values(&mut w, grads, dim, compress);
+    w.finish()
+}
+
+/// Returns `(packed keys, gradient rows)`.
+pub fn decode_put_request(msg: &[u8], dim: usize) -> Result<(Vec<u64>, Vec<f32>)> {
+    let r = WireReader::parse(msg)?;
+    let keys = r.u64(0)?;
+    let flags = r.u8(1)?;
+    ensure!(flags.len() == 1, "malformed PUT flags");
+    let grads = read_values(&r, 2, dim, flags[0] & FLAG_COMPRESS != 0)?;
+    ensure!(grads.len() == keys.len() * dim, "PUT shape mismatch");
+    Ok((keys, grads))
+}
+
+pub fn encode_put_response(rows_applied: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_PUT);
+    w.put_u64(&[rows_applied as u64]);
+    w.finish()
+}
+
+pub fn decode_put_response(msg: &[u8]) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_PUT, "expected PUT response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed PUT response");
+    Ok(xs[0] as usize)
+}
+
+// --- STATS ---
+
+pub fn encode_stats_request() -> Vec<u8> {
+    WireWriter::new(KIND_STATS).finish()
+}
+
+pub fn encode_stats_response(stats: &PsStats) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_STATS);
+    w.put_u64(&[stats.total_rows as u64, stats.total_evictions, stats.imbalance.to_bits()]);
+    w.finish()
+}
+
+pub fn decode_stats_response(msg: &[u8]) -> Result<PsStats> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_STATS, "expected STATS response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 3, "malformed STATS response");
+    Ok(PsStats {
+        total_rows: xs[0] as usize,
+        total_evictions: xs[1],
+        imbalance: f64::from_bits(xs[2]),
+    })
+}
+
+// --- SHUTDOWN ---
+
+pub fn encode_shutdown_request() -> Vec<u8> {
+    WireWriter::new(KIND_SHUTDOWN).finish()
+}
+
+pub fn encode_shutdown_response() -> Vec<u8> {
+    WireWriter::new(KIND_SHUTDOWN).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::compress::lossy_error_bound;
+
+    #[test]
+    fn get_roundtrip_raw_is_bit_exact() {
+        let keys = vec![1u64, 99, u64::MAX >> 1];
+        let msg = encode_get_request(&keys, false);
+        let (k2, comp) = decode_get_request(&msg).unwrap();
+        assert_eq!(k2, keys);
+        assert!(!comp);
+
+        let rows = vec![1.5f32, -2.25, 1e-20, 3e7, 0.0, -0.125];
+        let resp = encode_get_response(&rows, 2, false);
+        assert_eq!(decode_get_response(&resp, 2, 3).unwrap(), rows);
+    }
+
+    #[test]
+    fn get_roundtrip_compressed_within_bound() {
+        let rows = vec![100.0f32, -250.5, 0.01, 3.25, -9.75, 42.0];
+        let dim = 3;
+        let resp = encode_get_response(&rows, dim, true);
+        let back = decode_get_response(&resp, dim, 2).unwrap();
+        for r in 0..2 {
+            let row = &rows[r * dim..(r + 1) * dim];
+            let norm = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let bound = lossy_error_bound(norm);
+            for (a, b) in row.iter().zip(&back[r * dim..(r + 1) * dim]) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn put_roundtrip_and_shape_checks() {
+        let keys = vec![7u64, 8];
+        let grads = vec![0.5f32; 8];
+        let msg = encode_put_request(&keys, &grads, 4, false);
+        let (k2, g2) = decode_put_request(&msg, 4).unwrap();
+        assert_eq!(k2, keys);
+        assert_eq!(g2, grads);
+        // Wrong dim makes the shape check fail.
+        assert!(decode_put_request(&msg, 3).is_err());
+        assert_eq!(decode_put_response(&encode_put_response(2)).unwrap(), 2);
+    }
+
+    fn sample_info() -> PsInfo {
+        PsInfo {
+            dim: 8,
+            n_nodes: 4,
+            shards_per_node: 2,
+            seed: 42,
+            shard_capacity: 4096,
+            optimizer_code: optimizer_code(crate::config::OptimizerKind::Adagrad),
+            partition_code: partition_code(crate::config::PartitionPolicy::ShuffledUniform),
+            lr_bits: 0.1f32.to_bits(),
+        }
+    }
+
+    #[test]
+    fn info_and_stats_roundtrip() {
+        let info = sample_info();
+        let back = decode_info_response(&encode_info_response(&info)).unwrap();
+        assert_eq!(back, info);
+        assert_eq!(f32::from_bits(back.lr_bits), 0.1);
+
+        let stats = PsStats { total_rows: 123, total_evictions: 7, imbalance: 1.25 };
+        let back = decode_stats_response(&encode_stats_response(&stats)).unwrap();
+        assert_eq!(back.total_rows, 123);
+        assert_eq!(back.total_evictions, 7);
+        assert!((back.imbalance - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let msg = encode_info_response(&sample_info());
+        assert!(decode_stats_response(&msg).is_err());
+        assert!(decode_get_response(&msg, 1, 0).is_err());
+    }
+
+    #[test]
+    fn empty_batches_are_legal() {
+        let msg = encode_get_request(&[], true);
+        let (keys, comp) = decode_get_request(&msg).unwrap();
+        assert!(keys.is_empty() && comp);
+        let resp = encode_get_response(&[], 4, true);
+        assert_eq!(decode_get_response(&resp, 4, 0).unwrap(), Vec::<f32>::new());
+    }
+}

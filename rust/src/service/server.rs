@@ -1,0 +1,249 @@
+//! The embedding PS as a standalone TCP service.
+//!
+//! One [`PsServer`] wraps an [`EmbeddingPs`] and serves the
+//! [`super::protocol`] RPCs over length-prefixed TCP frames. Each accepted
+//! connection gets its own OS thread running the shared [`RpcServer`]
+//! dispatch loop — the paper's PS nodes likewise dedicate threads per
+//! connection and rely on shard-level lock striping (not connection-level
+//! serialization) for parallelism.
+//!
+//! Shutdown is graceful and sleep-free: the stop flag is observed between
+//! requests, a self-connect wakes the blocking `accept`, and parked
+//! connection readers are unblocked by closing only their read halves —
+//! in-flight requests (including the SHUTDOWN ack itself) always get their
+//! response before the connection threads are joined.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::comm::rpc::RpcServer;
+use crate::comm::transport::TcpTransport;
+use crate::config::EmbeddingConfig;
+use crate::embedding::EmbeddingPs;
+
+use super::backend::PsBackend;
+use super::protocol;
+use super::protocol::PsInfo;
+
+/// A bound-but-not-yet-serving PS service.
+pub struct PsServer {
+    listener: TcpListener,
+    rpc: Arc<RpcServer>,
+    stop: Arc<AtomicBool>,
+}
+
+impl PsServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and register the
+    /// protocol handlers over `ps`. `cfg`/`seed` must be the config the PS
+    /// was built from — they are served in the INFO handshake so clients
+    /// can hard-fail on a trainer/server config mismatch instead of
+    /// silently diverging.
+    pub fn bind(
+        ps: Arc<EmbeddingPs>,
+        addr: &str,
+        cfg: &EmbeddingConfig,
+        seed: u64,
+    ) -> Result<PsServer> {
+        anyhow::ensure!(
+            cfg.n_nodes == ps.n_nodes() && cfg.shards_per_node == ps.shards_per_node(),
+            "EmbeddingConfig does not describe this EmbeddingPs"
+        );
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding PS service on {addr}"))?;
+        let local = listener.local_addr()?;
+        let mut rpc = RpcServer::new();
+        let stop = rpc.stop_flag();
+
+        let dim = ps.dim();
+        let info = PsInfo {
+            dim,
+            n_nodes: ps.n_nodes(),
+            shards_per_node: ps.shards_per_node(),
+            seed,
+            shard_capacity: cfg.shard_capacity,
+            optimizer_code: protocol::optimizer_code(cfg.optimizer),
+            partition_code: protocol::partition_code(cfg.partition),
+            lr_bits: cfg.lr.to_bits(),
+        };
+        rpc.register(
+            protocol::KIND_INFO,
+            Box::new(move |_msg| Ok(protocol::encode_info_response(&info))),
+        );
+        {
+            let ps = ps.clone();
+            rpc.register(
+                protocol::KIND_GET,
+                Box::new(move |msg| {
+                    let (packed, compress) = protocol::decode_get_request(msg)?;
+                    let keys: Vec<(u32, u64)> =
+                        packed.iter().map(|&k| crate::embedding::ps::unpack_key(k)).collect();
+                    let mut rows = vec![0.0f32; keys.len() * dim];
+                    ps.get_many(&keys, &mut rows);
+                    Ok(protocol::encode_get_response(&rows, dim, compress))
+                }),
+            );
+        }
+        {
+            let ps = ps.clone();
+            rpc.register(
+                protocol::KIND_PUT,
+                Box::new(move |msg| {
+                    let (packed, grads) = protocol::decode_put_request(msg, dim)?;
+                    let keys: Vec<(u32, u64)> =
+                        packed.iter().map(|&k| crate::embedding::ps::unpack_key(k)).collect();
+                    ps.put_grads(&keys, &grads);
+                    Ok(protocol::encode_put_response(keys.len()))
+                }),
+            );
+        }
+        {
+            let ps = ps.clone();
+            rpc.register(
+                protocol::KIND_STATS,
+                Box::new(move |_msg| {
+                    Ok(protocol::encode_stats_response(&PsBackend::stats(ps.as_ref())?))
+                }),
+            );
+        }
+        {
+            let stop = stop.clone();
+            rpc.register(
+                protocol::KIND_SHUTDOWN,
+                Box::new(move |_msg| {
+                    stop.store(true, Ordering::SeqCst);
+                    // Wake the blocking accept so serve_forever/spawned
+                    // accept loops observe the flag without polling.
+                    let _ = TcpStream::connect(wake_addr(local));
+                    Ok(protocol::encode_shutdown_response())
+                }),
+            );
+        }
+
+        Ok(PsServer { listener, rpc: Arc::new(rpc), stop })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve on the calling thread until a SHUTDOWN RPC arrives.
+    pub fn serve_forever(self) -> Result<()> {
+        accept_loop(self.listener, self.rpc, self.stop);
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns a shutdown handle.
+    pub fn spawn(self) -> Result<PsServerHandle> {
+        let addr = self.local_addr()?;
+        let PsServer { listener, rpc, stop } = self;
+        let stop_for_loop = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("ps-accept".to_string())
+            .spawn(move || accept_loop(listener, rpc, stop_for_loop))
+            .context("spawning PS accept thread")?;
+        Ok(PsServerHandle { addr, stop, accept })
+    }
+}
+
+/// An address that provably reaches the listener from this host: wildcard
+/// binds (0.0.0.0 / ::) are not connectable targets everywhere, so rewrite
+/// them to the matching loopback.
+fn wake_addr(bound: SocketAddr) -> SocketAddr {
+    let mut addr = bound;
+    if addr.ip().is_unspecified() {
+        let loopback: std::net::IpAddr = if addr.is_ipv4() {
+            std::net::Ipv4Addr::LOCALHOST.into()
+        } else {
+            std::net::Ipv6Addr::LOCALHOST.into()
+        };
+        addr.set_ip(loopback);
+    }
+    addr
+}
+
+fn accept_loop(listener: TcpListener, rpc: Arc<RpcServer>, stop: Arc<AtomicBool>) {
+    // (thread, read-half handle for shutdown wakeup) per live connection.
+    let mut conns: Vec<(JoinHandle<()>, Option<TcpStream>)> = Vec::new();
+    let mut consecutive_errors = 0u32;
+    for (conn_id, stream) in listener.incoming().enumerate() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(stream) => {
+                consecutive_errors = 0;
+                stream
+            }
+            Err(e) => {
+                // Transient accept failures (ECONNABORTED, EMFILE bursts)
+                // must not kill a long-running PS; only a persistently
+                // broken listener ends the loop.
+                consecutive_errors += 1;
+                if consecutive_errors >= 64 {
+                    eprintln!("persia serve-ps: accept failing persistently ({e}); stopping");
+                    break;
+                }
+                continue;
+            }
+        };
+        // Reap finished connections so a long-running PS stays flat on
+        // memory (dropping a finished JoinHandle just detaches it).
+        conns.retain(|(h, _)| !h.is_finished());
+        let peer = stream.peer_addr().ok();
+        let wake_handle = stream.try_clone().ok();
+        let rpc = rpc.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ps-conn-{conn_id}"))
+            .spawn(move || {
+                let transport = TcpTransport::new(stream);
+                // Serve until the peer disconnects, stop is set, or the
+                // peer sends garbage (malformed frames drop the connection).
+                if let Err(e) = rpc.serve(&transport) {
+                    eprintln!("persia serve-ps: connection {peer:?} dropped: {e:#}");
+                }
+            })
+            .expect("spawn PS connection thread");
+        conns.push((handle, wake_handle));
+    }
+    // Unblock readers parked in recv() on idle connections so the joins
+    // below cannot hang on clients that never disconnect. Only the read
+    // half closes: in-flight responses (including the SHUTDOWN ack) still
+    // reach their peers.
+    for (_, wake_handle) in &conns {
+        if let Some(s) = wake_handle {
+            let _ = s.shutdown(std::net::Shutdown::Read);
+        }
+    }
+    for (handle, _) in conns {
+        let _ = handle.join();
+    }
+}
+
+/// Handle to a background PS service.
+pub struct PsServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: JoinHandle<()>,
+}
+
+impl PsServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, deliver in-flight responses, unblock idle
+    /// connections, and join every server thread. Clients still holding
+    /// [`super::RemotePs`] handles see their next call fail.
+    pub fn shutdown(self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept (the no-op connection is discarded by the
+        // stop check before it is served).
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        self.accept.join().map_err(|_| anyhow::anyhow!("PS accept thread panicked"))
+    }
+}

@@ -34,6 +34,53 @@ impl Shrink for usize {
     }
 }
 
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as u32).collect()
+    }
+}
+
+impl Shrink for u16 {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as u16).collect()
+    }
+}
+
+impl Shrink for u8 {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as u8).collect()
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b));
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1.clone(), self.2.clone()));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0.clone(), b, self.2.clone()));
+        }
+        for c in self.2.shrink() {
+            out.push((self.0.clone(), self.1.clone(), c));
+        }
+        out
+    }
+}
+
 impl Shrink for f32 {
     fn shrink(&self) -> Vec<Self> {
         if *self == 0.0 {
@@ -127,6 +174,18 @@ mod tests {
         let minimal = shrink_loop(997u64, &|x: &u64| *x < 500);
         assert!(minimal >= 500 && minimal <= 997);
         assert!(minimal < 997);
+    }
+
+    #[test]
+    fn tuple_shrinking_varies_one_component_at_a_time() {
+        let cands = (4u64, 6u64).shrink();
+        assert!(!cands.is_empty());
+        for (a, b) in &cands {
+            // Exactly one component shrank; the other is untouched.
+            assert!((*a == 4) != (*b == 6), "candidate ({a}, {b})");
+        }
+        let minimal = shrink_loop((997u64, 3u64), &|t: &(u64, u64)| t.0 < 500);
+        assert!(minimal.0 >= 500 && minimal.1 <= 3);
     }
 
     #[test]

@@ -6,8 +6,16 @@
 //! pool per feature group, and ship the aggregated activation to the NN
 //! worker. Backward task: receive the activation's gradient keyed by sample
 //! ID, look up the buffered ID features, fan the gradient out to the rows and
-//! `put` it to the PS. Both tasks run lock-free with respect to each other
-//! (the buffer lock is per-operation, never held across PS calls).
+//! `put` it to the PS. Both tasks run lock-free with respect to each other,
+//! and the buffer lock is never held across a PS call — the PS sits behind
+//! the [`PsBackend`] trait and may be a remote TCP server
+//! ([`crate::service::RemotePs`]).
+//!
+//! PS traffic is *batched and deduplicated*: one `get_many` per pulled batch
+//! and one `put_grads` per pushed batch, each carrying every unique
+//! `(group, id)` exactly once with gradients pre-aggregated — the paper's
+//! §4.2.3 index compression applied at the source, which is also what makes
+//! the remote path one round-trip instead of thousands.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,12 +27,12 @@ use crate::comm::compress::CompressedValues;
 use crate::comm::netsim::{Link, NetSim};
 use crate::config::{ModelConfig, Pooling};
 use crate::data::sample::{make_sample_id, Batch, IdFeatures, SampleId};
-use crate::embedding::EmbeddingPs;
+use crate::service::PsBackend;
 
 /// One embedding worker.
 pub struct EmbeddingWorker {
     rank: u8,
-    ps: Arc<EmbeddingPs>,
+    ps: Arc<dyn PsBackend>,
     n_groups: usize,
     dim_per_group: usize,
     pooling: Pooling,
@@ -38,7 +46,7 @@ pub struct EmbeddingWorker {
 impl EmbeddingWorker {
     pub fn new(
         rank: u8,
-        ps: Arc<EmbeddingPs>,
+        ps: Arc<dyn PsBackend>,
         model: &ModelConfig,
         net: Arc<NetSim>,
         compress: bool,
@@ -78,59 +86,86 @@ impl EmbeddingWorker {
             .collect()
     }
 
-    /// Pool one sample's groups into `out[emb_dim]`, fetching rows from PS.
-    /// Allocation-free on the hot path: `row_buf` is a reusable scratch row
-    /// and pooling accumulates directly from the shard (`get_into_acc`).
-    fn pool_into(&self, feats: &IdFeatures, out: &mut [f32], row_buf: &mut Vec<f32>) -> usize {
-        let d = self.dim_per_group;
-        row_buf.resize(d, 0.0);
-        let mut rows_fetched = 0;
-        for (g, group) in feats.groups.iter().enumerate() {
-            let dst = &mut out[g * d..(g + 1) * d];
-            dst.fill(0.0);
-            if group.is_empty() {
-                continue;
-            }
-            for &id in group {
-                self.ps.get(g as u32, id, row_buf);
-                for (o, &x) in dst.iter_mut().zip(row_buf.iter()) {
-                    *o += x;
-                }
-            }
-            rows_fetched += group.len();
-            if self.pooling == Pooling::Mean {
-                let inv = 1.0 / group.len() as f32;
-                for o in dst.iter_mut() {
-                    *o *= inv;
+    /// Every unique `(group, id)` across `feats` in first-occurrence order,
+    /// plus the key -> slot index (deterministic, no hash-order dependence).
+    fn unique_keys(
+        &self,
+        feats: &[IdFeatures],
+    ) -> (Vec<(u32, u64)>, HashMap<(u32, u64), usize>) {
+        let mut keys: Vec<(u32, u64)> = Vec::new();
+        let mut index: HashMap<(u32, u64), usize> = HashMap::new();
+        for f in feats {
+            for (g, group) in f.groups.iter().enumerate() {
+                for &id in group {
+                    let k = (g as u32, id);
+                    index.entry(k).or_insert_with(|| {
+                        keys.push(k);
+                        keys.len() - 1
+                    });
                 }
             }
         }
-        rows_fetched
+        (keys, index)
+    }
+
+    /// One batched PS fetch for `feats`, pooled per feature group into a
+    /// `[feats.len(), emb_dim]` activation. Returns the pooled activations
+    /// and the number of unique rows fetched (the wire traffic).
+    fn fetch_pooled(&self, feats: &[IdFeatures]) -> Result<(Vec<f32>, usize)> {
+        let d = self.dim_per_group;
+        let emb_dim = self.emb_dim();
+        let (keys, index) = self.unique_keys(feats);
+        let mut rows = vec![0.0f32; keys.len() * d];
+        self.ps.get_many(&keys, &mut rows).context("embedding PS get")?;
+
+        let mut out = vec![0.0f32; feats.len() * emb_dim];
+        for (i, f) in feats.iter().enumerate() {
+            for (g, group) in f.groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let dst = &mut out[i * emb_dim + g * d..i * emb_dim + (g + 1) * d];
+                for &id in group {
+                    let slot = index[&(g as u32, id)];
+                    for (o, &x) in dst.iter_mut().zip(&rows[slot * d..(slot + 1) * d]) {
+                        *o += x;
+                    }
+                }
+                if self.pooling == Pooling::Mean {
+                    let inv = 1.0 / group.len() as f32;
+                    for o in dst.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            }
+        }
+        Ok((out, keys.len()))
     }
 
     /// Steps (3)-(4): the NN worker's pull. Returns the pooled activations
     /// (`[B, emb_dim]` flattened) and the simulated communication seconds
     /// (PS->worker rows + worker->NN activation transfer).
     pub fn pull(&self, sample_ids: &[SampleId]) -> Result<(Vec<f32>, f64)> {
-        let emb_dim = self.emb_dim();
-        let mut out = vec![0.0f32; sample_ids.len() * emb_dim];
-        let mut row_buf = Vec::new();
-        let mut rows_fetched = 0usize;
-        {
+        // Snapshot the features under the lock; the PS round-trip (possibly
+        // a real network call) runs with the lock released.
+        let feats: Vec<IdFeatures> = {
             let buf = self.buffer.lock().unwrap();
-            for (i, sid) in sample_ids.iter().enumerate() {
-                let feats = buf
-                    .get(sid)
-                    .with_context(|| format!("sample {sid:#x} not buffered (worker {})", self.rank))?;
-                rows_fetched +=
-                    self.pool_into(feats, &mut out[i * emb_dim..(i + 1) * emb_dim], &mut row_buf);
-            }
-        }
-        // PS -> embedding worker: raw rows.
-        let mut sim = self.net.record(Link::CpuCpu, rows_fetched * self.dim_per_group * 4);
+            sample_ids
+                .iter()
+                .map(|sid| {
+                    buf.get(sid).cloned().with_context(|| {
+                        format!("sample {sid:#x} not buffered (worker {})", self.rank)
+                    })
+                })
+                .collect::<Result<_>>()?
+        };
+        let (mut out, unique_rows) = self.fetch_pooled(&feats)?;
+        // PS -> embedding worker: raw rows (unique keys only).
+        let mut sim = self.net.record(Link::CpuCpu, unique_rows * self.dim_per_group * 4);
         // embedding worker -> NN worker: pooled activations (fp16+scale when
         // compression is on; we run the real round-trip so the numeric effect
         // of the lossy path is part of training).
+        let emb_dim = self.emb_dim();
         if self.compress {
             let c = CompressedValues::compress(&out, emb_dim);
             sim += self.net.record(Link::CpuGpu, c.wire_bytes());
@@ -142,20 +177,15 @@ impl EmbeddingWorker {
     }
 
     /// Eval-path lookup straight from a batch (no sample-id buffering).
-    pub fn lookup_direct(&self, batch: &Batch) -> (Vec<f32>, f64) {
-        let emb_dim = self.emb_dim();
-        let mut out = vec![0.0f32; batch.len() * emb_dim];
-        let mut row_buf = Vec::new();
-        let mut rows = 0;
-        for (i, feats) in batch.ids.iter().enumerate() {
-            rows += self.pool_into(feats, &mut out[i * emb_dim..(i + 1) * emb_dim], &mut row_buf);
-        }
-        let sim = self.net.record(Link::CpuCpu, rows * self.dim_per_group * 4);
-        (out, sim)
+    pub fn lookup_direct(&self, batch: &Batch) -> Result<(Vec<f32>, f64)> {
+        let (out, unique_rows) = self.fetch_pooled(&batch.ids)?;
+        let sim = self.net.record(Link::CpuCpu, unique_rows * self.dim_per_group * 4);
+        Ok((out, sim))
     }
 
-    /// Steps (6)-(7): receive activation gradients, fan out to rows, put to
-    /// the PS, and release the buffer entries. Returns simulated comm secs.
+    /// Steps (6)-(7): receive activation gradients, aggregate per unique
+    /// row, put them to the PS in one batch, and release the buffer entries.
+    /// Returns simulated comm secs.
     pub fn push_grads(&self, sample_ids: &[SampleId], grad_emb: &[f32]) -> Result<f64> {
         let emb_dim = self.emb_dim();
         anyhow::ensure!(grad_emb.len() == sample_ids.len() * emb_dim, "grad shape mismatch");
@@ -171,20 +201,25 @@ impl EmbeddingWorker {
         };
 
         let d = self.dim_per_group;
-        let mut rows_put = 0usize;
-        let mut taken: Vec<(usize, IdFeatures)> = Vec::with_capacity(sample_ids.len());
-        {
+        let feats: Vec<IdFeatures> = {
             let mut buf = self.buffer.lock().unwrap();
-            for (i, sid) in sample_ids.iter().enumerate() {
-                let feats = buf
-                    .remove(sid)
-                    .with_context(|| format!("sample {sid:#x} not buffered for backward"))?;
-                taken.push((i, feats));
-            }
-        }
+            sample_ids
+                .iter()
+                .map(|sid| {
+                    buf.remove(sid)
+                        .with_context(|| format!("sample {sid:#x} not buffered for backward"))
+                })
+                .collect::<Result<_>>()?
+        };
+
+        // Aggregate gradients per unique key (first-occurrence order, same
+        // dedup as the forward fetch) so each row crosses the wire and hits
+        // its shard exactly once.
+        let (keys, index) = self.unique_keys(&feats);
+        let mut acc = vec![0.0f32; keys.len() * d];
         let mut scaled = vec![0.0f32; d];
-        for (i, feats) in taken {
-            for (g, group) in feats.groups.iter().enumerate() {
+        for (i, f) in feats.iter().enumerate() {
+            for (g, group) in f.groups.iter().enumerate() {
                 if group.is_empty() {
                     continue;
                 }
@@ -199,12 +234,15 @@ impl EmbeddingWorker {
                     gsl
                 };
                 for &id in group {
-                    self.ps.put_grad(g as u32, id, src);
-                    rows_put += 1;
+                    let slot = index[&(g as u32, id)];
+                    for (o, &x) in acc[slot * d..(slot + 1) * d].iter_mut().zip(src) {
+                        *o += x;
+                    }
                 }
             }
         }
-        sim += self.net.record(Link::CpuCpu, rows_put * d * 4);
+        self.ps.put_grads(&keys, &acc).context("embedding PS put")?;
+        sim += self.net.record(Link::CpuCpu, keys.len() * d * 4);
         Ok(sim)
     }
 
@@ -226,7 +264,8 @@ mod tests {
     use crate::config::{
         EmbeddingConfig, NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
     };
-    
+    use crate::embedding::EmbeddingPs;
+
     use crate::data::SyntheticDataset;
 
     fn setup(pooling: Pooling, compress: bool) -> (Arc<EmbeddingPs>, EmbeddingWorker, ModelConfig) {
@@ -322,6 +361,23 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_ids_aggregate_into_one_put() {
+        // A sample containing the same id twice sends ONE row whose gradient
+        // is the sum of both occurrences (index compression semantics).
+        let (ps, w, _) = setup(Pooling::Sum, false);
+        let sids = w.register(vec![feats(&[9, 9], &[8])]);
+        let mut before = vec![0.0f32; 4];
+        ps.get(0, 9, &mut before);
+        w.push_grads(&sids, &vec![1.0f32; 8]).unwrap();
+        let mut after = vec![0.0f32; 4];
+        ps.get(0, 9, &mut after);
+        // Two occurrences, SGD lr 0.5, grad 1 each => one put of grad 2.
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - 1.0 - a).abs() < 1e-6, "{b} vs {a}");
+        }
+    }
+
+    #[test]
     fn compressed_pull_is_close_to_exact() {
         let (_, w_exact, _) = setup(Pooling::Sum, false);
         let (_, w_comp, _) = setup(Pooling::Sum, true);
@@ -341,7 +397,7 @@ mod tests {
         let (_, w, model) = setup(Pooling::Sum, false);
         let ds = SyntheticDataset::new(&model, 1000, 1.0, 5);
         let batch = ds.test_batch(6);
-        let (direct, _) = w.lookup_direct(&batch);
+        let (direct, _) = w.lookup_direct(&batch).unwrap();
         let sids = w.register(batch.ids.clone());
         let (pulled, _) = w.pull(&sids).unwrap();
         assert_eq!(direct, pulled);

@@ -68,7 +68,7 @@ fn train_step(
 
 fn eval(ds: &SyntheticDataset, ew: &EmbeddingWorker, engine: &DenseEngine, params: &[f32]) -> f64 {
     let tb = ds.test_batch(1536);
-    let (emb, _) = ew.lookup_direct(&tb);
+    let (emb, _) = ew.lookup_direct(&tb).unwrap();
     let probs = engine.forward(params, &emb, &tb.nid, tb.len()).unwrap();
     auc(&probs, &tb.labels)
 }

@@ -1,0 +1,251 @@
+//! Loopback integration of the TCP service mode: an [`EmbeddingPs`] served
+//! over a real socket by [`PsServer`], trained against through the
+//! [`RemotePs`] backend, and compared with the in-process backend.
+//!
+//! No test here sleeps: ordering comes from blocking RPC calls, channel
+//! joins, and the deterministic trainer mode (inline gradient application
+//! with the prefetch pipeline intact).
+
+use std::sync::Arc;
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, ServiceConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::Trainer;
+use persia::service::{PsBackend, PsServer, PsServerHandle, RemotePs};
+
+fn base_trainer(mode: TrainMode, steps: usize, nn_workers: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 500,
+        shard_capacity: 4096,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster = ClusterConfig {
+        n_nn_workers: nn_workers,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode,
+        batch_size: 32,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: 23,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset = SyntheticDataset::new(&model, 500, 1.05, 23);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.eval_rows = 1024;
+    t
+}
+
+/// Spawn a PS server configured exactly like `t` would configure its
+/// in-process PS, on an ephemeral loopback port.
+fn spawn_ps_for(t: &Trainer) -> (PsServerHandle, String) {
+    let ps = Arc::new(EmbeddingPs::new(&t.emb_cfg, t.model.emb_dim_per_group, t.train.seed));
+    let server = PsServer::bind(ps, "127.0.0.1:0", &t.emb_cfg, t.train.seed).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    (server.spawn().unwrap(), addr)
+}
+
+fn connect(addr: &str, wire_compress: bool) -> Arc<RemotePs> {
+    let cfg = ServiceConfig { addr: addr.to_string(), client_conns: 2, wire_compress };
+    Arc::new(RemotePs::connect(&cfg).unwrap())
+}
+
+/// The acceptance test: hybrid (and fully synchronous) training through the
+/// remote backend reaches the same loss/AUC as the in-process backend within
+/// 1e-6 on the deterministic synthetic dataset.
+#[test]
+fn remote_ps_training_matches_in_process_within_1e6() {
+    for mode in [TrainMode::Hybrid, TrainMode::FullSync] {
+        let steps = 80;
+        // In-process reference run (deterministic: inline grad application).
+        let mut local_t = base_trainer(mode, steps, 1);
+        local_t.deterministic = true;
+        let local = local_t.run_rust().unwrap();
+
+        // Identical run against the PS over TCP.
+        let mut remote_t = base_trainer(mode, steps, 1);
+        remote_t.deterministic = true;
+        let (handle, addr) = spawn_ps_for(&remote_t);
+        let backend = connect(&addr, false);
+        remote_t.ps_backend = Some(backend.clone());
+        let remote = remote_t.run_rust().unwrap();
+
+        let auc_local = local.report.final_auc.unwrap();
+        let auc_remote = remote.report.final_auc.unwrap();
+        assert!(
+            (auc_local - auc_remote).abs() <= 1e-6,
+            "{mode:?}: AUC {auc_local} (local) vs {auc_remote} (remote)"
+        );
+        // The run is meaningful: the loss actually moved.
+        let early: f32 = local.tracker.losses[..10].iter().map(|(_, l)| l).sum::<f32>() / 10.0;
+        let late = local.tracker.recent_loss(10).unwrap();
+        assert!(late < early, "{mode:?}: reference run did not learn ({early} -> {late})");
+        assert_eq!(local.tracker.losses.len(), remote.tracker.losses.len());
+        for ((sa, la), (sb, lb)) in local.tracker.losses.iter().zip(&remote.tracker.losses) {
+            assert_eq!(sa, sb);
+            assert!((la - lb).abs() <= 1e-6, "{mode:?} step {sa}: loss {la} vs {lb}");
+        }
+
+        // Graceful teardown: drop clients, then drain the server.
+        drop(remote_t);
+        drop(backend);
+        handle.shutdown().unwrap();
+    }
+}
+
+/// All four synchronization modes run unchanged against a remote PS,
+/// including the concurrent paths (async appliers + multiple NN workers
+/// sharing the client pool).
+#[test]
+fn all_four_modes_train_against_remote_ps() {
+    for mode in TrainMode::ALL {
+        let steps = 60;
+        let mut t = base_trainer(mode, steps, 2);
+        t.train.eval_every = 0;
+        let (handle, addr) = spawn_ps_for(&t);
+        let backend = connect(&addr, false);
+        t.ps_backend = Some(backend.clone());
+        let out = t.run_rust().unwrap();
+        assert_eq!(out.report.steps, steps as u64);
+        let early: f32 = out.tracker.losses[..10].iter().map(|(_, l)| l).sum::<f32>() / 10.0;
+        let late = out.tracker.recent_loss(10).unwrap();
+        assert!(late < early, "{mode:?}: loss did not drop over remote PS ({early} -> {late})");
+
+        // The remote PS actually materialized and served rows.
+        let stats = backend.stats().unwrap();
+        assert!(stats.total_rows > 0, "{mode:?}: PS saw no traffic");
+        assert!(out.ps_imbalance.is_finite(), "{mode:?}: stats RPC failed");
+
+        drop(t);
+        drop(backend);
+        handle.shutdown().unwrap();
+    }
+}
+
+/// The lossy fp16 wire compression halves PS traffic but must not break
+/// convergence: AUC stays close to the exact-wire run.
+#[test]
+fn wire_compression_converges_close_to_exact() {
+    let steps = 120;
+    let run = |wire_compress: bool| {
+        let mut t = base_trainer(TrainMode::Hybrid, steps, 1);
+        t.deterministic = true;
+        let (handle, addr) = spawn_ps_for(&t);
+        let backend = connect(&addr, wire_compress);
+        t.ps_backend = Some(backend.clone());
+        let out = t.run_rust().unwrap();
+        drop(t);
+        drop(backend);
+        handle.shutdown().unwrap();
+        out.report.final_auc.unwrap()
+    };
+    let exact = run(false);
+    let lossy = run(true);
+    assert!(
+        (exact - lossy).abs() < 0.03,
+        "fp16 PS wire broke convergence: {exact} vs {lossy}"
+    );
+}
+
+/// Graceful shutdown semantics: a SHUTDOWN RPC is acked, in-flight clients
+/// finish, and the drained server stops accepting.
+#[test]
+fn shutdown_is_graceful_and_final() {
+    let t = base_trainer(TrainMode::FullSync, 1, 1);
+    let (handle, addr) = spawn_ps_for(&t);
+
+    let backend = connect(&addr, false);
+    // The server is live: geometry matches the config we gave it.
+    assert_eq!(backend.dim(), t.model.emb_dim_per_group);
+    assert_eq!(backend.n_nodes(), t.emb_cfg.n_nodes);
+    let keys: Vec<(u32, u64)> = (0..16).map(|i| (i % 2, i as u64)).collect();
+    let mut rows = vec![0.0f32; 16 * 8];
+    backend.get_many(&keys, &mut rows).unwrap();
+    backend.put_grads(&keys, &vec![0.5; 16 * 8]).unwrap();
+    assert_eq!(backend.stats().unwrap().total_rows, 16);
+
+    // Remote-initiated shutdown: ack arrives before the server stops.
+    backend.shutdown_server().unwrap();
+    drop(backend);
+    handle.shutdown().unwrap();
+
+    // The drained server no longer accepts connections.
+    let cfg = ServiceConfig { addr, client_conns: 1, wire_compress: false };
+    assert!(RemotePs::connect(&cfg).is_err(), "server still accepting after shutdown");
+}
+
+/// A trainer whose embedding config/seed doesn't match the server's fails
+/// the handshake loudly instead of silently training different numerics.
+#[test]
+fn mismatched_trainer_config_is_rejected() {
+    let server_side = base_trainer(TrainMode::Hybrid, 10, 1);
+    let (handle, addr) = spawn_ps_for(&server_side);
+
+    // Same geometry (dim/nodes/shards) but a different seed: rows would
+    // materialize differently server-side.
+    let mut t = base_trainer(TrainMode::Hybrid, 10, 1);
+    t.train.seed += 1;
+    t.dataset = SyntheticDataset::new(&t.model, 500, 1.05, t.train.seed);
+    let backend = connect(&addr, false);
+    t.ps_backend = Some(backend.clone());
+    let err = t.run_rust().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("config mismatch"),
+        "wrong error for seed mismatch: {err:#}"
+    );
+
+    // A matching trainer on the same server still passes the handshake.
+    let mut ok = base_trainer(TrainMode::Hybrid, 10, 1);
+    ok.ps_backend = Some(backend.clone());
+    ok.run_rust().unwrap();
+
+    drop(t);
+    drop(ok);
+    drop(backend);
+    handle.shutdown().unwrap();
+}
+
+/// A second client sharing the same server sees the first client's updates —
+/// the PS really is shared state across processes, not a per-connection copy.
+#[test]
+fn remote_ps_state_is_shared_across_clients() {
+    let t = base_trainer(TrainMode::FullSync, 1, 1);
+    let (handle, addr) = spawn_ps_for(&t);
+    let a = connect(&addr, false);
+    let b = connect(&addr, false);
+
+    let keys = [(0u32, 7u64)];
+    let mut before = vec![0.0f32; 8];
+    a.get_many(&keys, &mut before).unwrap();
+    a.put_grads(&keys, &vec![1.0; 8]).unwrap();
+
+    let mut seen_by_b = vec![0.0f32; 8];
+    b.get_many(&keys, &mut seen_by_b).unwrap();
+    assert_ne!(before, seen_by_b, "client B must observe client A's update");
+
+    drop(a);
+    drop(b);
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,135 @@
+//! Property tests (via `util::quickcheck`) for the two protocol-critical
+//! invariants the TCP service mode rests on:
+//!
+//! * `comm::wire` encode/decode is a lossless round-trip for arbitrary
+//!   multi-section messages, and rejects (never panics on) truncation;
+//! * `embedding::ps::{pack_key, unpack_key}` are mutually inverse and the
+//!   id component always stays inside the 48-bit key space.
+
+use persia::comm::wire::{WireReader, WireWriter};
+use persia::embedding::ps::{pack_key, unpack_key};
+use persia::util::quickcheck::forall;
+use persia::util::Rng;
+
+fn gen_f32s(rng: &mut Rng, max_len: u64) -> Vec<f32> {
+    (0..rng.below(max_len + 1)).map(|_| (rng.f32() * 2.0 - 1.0) * 1e6).collect()
+}
+
+fn gen_u64s(rng: &mut Rng, max_len: u64) -> Vec<u64> {
+    (0..rng.below(max_len + 1)).map(|_| rng.next_u64()).collect()
+}
+
+fn gen_u16s(rng: &mut Rng, max_len: u64) -> Vec<u16> {
+    (0..rng.below(max_len + 1)).map(|_| rng.below(1 << 16) as u16).collect()
+}
+
+#[test]
+fn property_mixed_section_roundtrip_is_lossless() {
+    forall(
+        101,
+        300,
+        |rng: &mut Rng| (gen_f32s(rng, 64), gen_u64s(rng, 64), gen_u16s(rng, 64)),
+        |(fs, us, hs)| {
+            let kind = (fs.len() + us.len() + hs.len()) as u32;
+            let mut w = WireWriter::new(kind);
+            w.put_f32(fs).put_u64(us).put_u16(hs).put_u8(b"tail");
+            let msg = w.finish();
+            let r = match WireReader::parse(&msg) {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            r.kind() == kind
+                && r.n_sections() == 4
+                && r.f32(0).map(|v| v == *fs).unwrap_or(false)
+                && r.u64(1).map(|v| v == *us).unwrap_or(false)
+                && r.u16(2).map(|v| v == *hs).unwrap_or(false)
+                && r.u8(3).map(|v| v == b"tail").unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn property_f16_sections_roundtrip_bit_patterns() {
+    forall(
+        103,
+        300,
+        |rng: &mut Rng| gen_u16s(rng, 128),
+        |hs| {
+            let mut w = WireWriter::new(9);
+            w.put_f16(hs);
+            let msg = w.finish();
+            WireReader::parse(&msg)
+                .and_then(|r| r.f16(0))
+                .map(|v| v == *hs)
+                .unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn property_truncated_messages_error_never_panic() {
+    forall(
+        107,
+        500,
+        |rng: &mut Rng| (gen_f32s(rng, 32), rng.below(1 << 16)),
+        |(fs, cut_seed)| {
+            let mut w = WireWriter::new(1);
+            w.put_f32(fs).put_u64(&[7]);
+            let msg = w.finish();
+            let cut = (*cut_seed as usize) % msg.len().max(1);
+            // Any strict prefix must parse to Err or to sections that fail
+            // typed reads — never panic, never read out of bounds.
+            match WireReader::parse(&msg[..cut]) {
+                Err(_) => true,
+                Ok(r) => r.f32(0).is_err() || r.u64(1).is_err() || cut == msg.len(),
+            }
+        },
+    );
+}
+
+#[test]
+fn property_pack_unpack_inverse_within_bounds() {
+    forall(
+        109,
+        1000,
+        |rng: &mut Rng| (rng.below(1 << 16), rng.below(1 << 48)),
+        |&(group, id)| {
+            let key = pack_key(group as u32, id);
+            unpack_key(key) == (group as u32, id)
+        },
+    );
+}
+
+#[test]
+fn property_unpack_id_always_fits_48_bits_and_repacks() {
+    // pack ∘ unpack is the identity on the full u64 key space, and the
+    // unpacked id can never escape the 48-bit row space.
+    forall(
+        113,
+        1000,
+        |rng: &mut Rng| rng.next_u64(),
+        |&key| {
+            let (group, id) = unpack_key(key);
+            id < (1u64 << 48) && pack_key(group, id) == key
+        },
+    );
+}
+
+#[test]
+fn property_distinct_keys_never_collide_across_groups() {
+    forall(
+        127,
+        1000,
+        |rng: &mut Rng| {
+            (
+                (rng.below(1 << 16), rng.below(1 << 48)),
+                (rng.below(1 << 16), rng.below(1 << 48)),
+            )
+        },
+        |&((g1, id1), (g2, id2))| {
+            let same_input = (g1, id1) == (g2, id2);
+            let same_key = pack_key(g1 as u32, id1) == pack_key(g2 as u32, id2);
+            same_input == same_key
+        },
+    );
+}

@@ -1,0 +1,195 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! the exact API surface the `persia` crate uses — `Error`, `Result`,
+//! `Context::{context, with_context}` on both `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with the same semantics:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * context wraps outermost-first, and `Display`/`Debug` render the whole
+//!   chain as `outer: inner: root`, so `format!("{err:#}")` contains every
+//!   layer (a superset of real anyhow's `{:#}` behaviour);
+//! * `Error` is `Send + Sync` and deliberately does **not** implement
+//!   `std::error::Error`, which is what makes the blanket `From` impl
+//!   coherent — the same trick real anyhow uses.
+//!
+//! Swapping back to crates.io anyhow is a one-line change in the workspace
+//! manifest; no call sites need to change.
+
+use std::fmt;
+
+/// Error type: an ordered context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Attach a context message to the error path.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily evaluated context message to the error path.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let err = io_fail().context("loading config").unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.starts_with("loading config: "), "{text}");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let err = x.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(err.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            ensure!(flag);
+            if !flag {
+                bail!("unreachable {}", 1);
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(true).unwrap(), 7);
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+    }
+}

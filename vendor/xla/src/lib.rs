@@ -1,0 +1,223 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build image used for CI has no XLA/PJRT shared library, so this crate
+//! provides the exact API surface `persia::runtime` compiles against:
+//!
+//! * [`Literal`] is **functional**: it is a plain host buffer with shape and
+//!   element-type checking, so literal construction/round-trip code (and its
+//!   tests) behave exactly like the real crate.
+//! * [`PjRtClient::cpu`] returns an error — there is no compiler/executor
+//!   behind it. Every downstream object (`PjRtLoadedExecutable`, …) is only
+//!   reachable through a client, so executable paths fail fast at the one
+//!   place the runtime already handles (`PjRtRuntime::cpu()?`), and the
+//!   PJRT-dependent tests skip themselves.
+//!
+//! Deploying against a real XLA build is a one-line swap of this path
+//! dependency for the real `xla` crate in the workspace manifest.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `xla::Error` usage (`Display`).
+pub struct Error(String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Error(format!("{what}: PJRT unavailable (offline xla stub; link the real xla crate)"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Element types the runtime constructs literals with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn elem_size(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Host element types a [`Literal`] can be viewed as.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+}
+
+/// A host tensor: shape + element type + raw little-endian bytes.
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if elems * ty.elem_size() != data.len() {
+            return Err(Error(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                elems * ty.elem_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Copy the buffer out as host elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(Error(format!("element type mismatch: literal is {:?}", self.ty)));
+        }
+        let n = self.element_count();
+        let mut out = Vec::with_capacity(n);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.bytes.len(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Refill the buffer in place from host elements (shape unchanged).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        if T::ELEMENT_TYPE != self.ty || src.len() != self.element_count() {
+            return Err(Error(format!(
+                "copy_raw_from: {} elements into literal of {}",
+                src.len(),
+                self.element_count()
+            )));
+        }
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr() as *const u8,
+                self.bytes.as_mut_ptr(),
+                self.bytes.len(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples; this is
+    /// only reachable through an executable, which the stub cannot produce.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// PJRT client. The stub cannot execute, so construction fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable (unreachable without a client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer (unreachable without a client).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape_check() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let mut lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        lit.copy_raw_from(&[5.0f32, 6.0, 7.0, 8.0]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![5.0, 6.0, 7.0, 8.0]);
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 4])
+            .is_err());
+        assert!(lit.copy_raw_from(&[1.0f32]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}
