@@ -1,0 +1,182 @@
+//! Multi-shard PS demo: the embedding PS split across THREE server
+//! instances (each owning a node range, exactly what three `persia serve-ps
+//! --node-range` processes would host), trained against through one
+//! [`ShardedRemotePs`], cross-checked against the in-process PS, and taken
+//! through the §4.2.4 recovery drill — kill a shard, restart it empty,
+//! restore it from its wire snapshot, keep training.
+//!
+//! ```bash
+//! cargo run --release --example sharded_ps
+//! ```
+//!
+//! The true multi-process version is:
+//!
+//! ```bash
+//! persia serve-ps --addr 127.0.0.1:7700 --node-range 0..2 &
+//! persia serve-ps --addr 127.0.0.1:7701 --node-range 2..3 &
+//! persia serve-ps --addr 127.0.0.1:7702 --node-range 3..4 &
+//! persia train --remote-ps 127.0.0.1:7700,127.0.0.1:7701,127.0.0.1:7702
+//! ```
+
+use std::sync::Arc;
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, ServiceConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::Trainer;
+use persia::service::{PsBackend, PsServer, PsServerHandle, ShardedRemotePs};
+
+const RANGES: [std::ops::Range<usize>; 3] = [0..2, 2..3, 3..4];
+
+fn trainer(steps: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 1000,
+        shard_capacity: 4096,
+        n_nodes: 4,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster =
+        ClusterConfig { n_nn_workers: 1, n_emb_workers: 2, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::Hybrid,
+        batch_size: 64,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: 17,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset = SyntheticDataset::new(&model, 1000, 1.05, 17);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    // Inline gradient application: bit-reproducible, so sharded == local.
+    t.deterministic = true;
+    t
+}
+
+fn spawn_shard(base: &Trainer, range: std::ops::Range<usize>, addr: &str) -> PsServerHandle {
+    // Retried: rebinding a just-released port (the restart leg of the
+    // drill) can race the previous socket's teardown.
+    let mut last_err = None;
+    for _ in 0..40 {
+        let ps = Arc::new(EmbeddingPs::new_range(
+            &base.emb_cfg,
+            base.model.emb_dim_per_group,
+            base.train.seed,
+            range.clone(),
+        ));
+        match PsServer::bind(ps, addr, &base.emb_cfg, base.train.seed) {
+            Ok(server) => return server.spawn().expect("spawn shard"),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
+    panic!("could not bind shard on {addr}: {:#}", last_err.unwrap());
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = 100;
+    let base = trainer(steps);
+
+    // 1. Three shard servers, each hosting its slice of the 4 PS nodes.
+    let mut handles: Vec<PsServerHandle> = RANGES
+        .iter()
+        .map(|r| spawn_shard(&base, r.clone(), "127.0.0.1:0"))
+        .collect();
+    let addrs: Vec<String> = handles.iter().map(|h| h.addr().to_string()).collect();
+    println!("3 PS shard processes: {}", addrs.join(", "));
+
+    // 2. One sharded backend over all of them; train phase 1.
+    let svc = ServiceConfig {
+        addr: addrs.join(","),
+        reconnect_attempts: 30,
+        reconnect_backoff_ms: 50,
+        ..ServiceConfig::default()
+    };
+    let backend = Arc::new(ShardedRemotePs::connect(&svc)?);
+    let mut t1 = trainer(steps);
+    t1.ps_backend = Some(backend.clone());
+    let out1 = t1.run_rust()?;
+    print!("sharded   phase-1 ");
+    out1.report.print_row();
+
+    // In-process reference for the same two phases.
+    let local_ps =
+        Arc::new(EmbeddingPs::new(&base.emb_cfg, base.model.emb_dim_per_group, base.train.seed));
+    let run_local = || -> anyhow::Result<_> {
+        let mut t = trainer(steps);
+        t.ps_backend = Some(local_ps.clone());
+        t.run_rust()
+    };
+    let _local1 = run_local()?;
+    let stats = PsBackend::stats(backend.as_ref())?;
+    anyhow::ensure!(
+        stats.total_rows == local_ps.total_rows(),
+        "sharded rows {} != in-process rows {}",
+        stats.total_rows,
+        local_ps.total_rows()
+    );
+    println!(
+        "merged shard stats: rows={} evictions={} imbalance={:.2} (in-process: {:.2})",
+        stats.total_rows,
+        stats.total_evictions,
+        stats.imbalance,
+        local_ps.imbalance()
+    );
+
+    // 3. Recovery drill: snapshot node 2 over the wire, kill its shard,
+    //    restart it empty on the same port, restore, and train phase 2.
+    let victim = 2;
+    let snap = backend.snapshot_node(victim)?;
+    let victim_addr = addrs[1].clone();
+    handles.remove(1).shutdown()?;
+    println!("killed shard {victim_addr} (node {victim}); restarting from snapshot...");
+    handles.insert(1, spawn_shard(&base, RANGES[1].clone(), &victim_addr));
+    backend.restore_node(victim, &snap)?;
+    anyhow::ensure!(
+        PsBackend::stats(backend.as_ref())?.total_rows == local_ps.total_rows(),
+        "rows lost across the kill/restore drill"
+    );
+
+    let mut t2 = trainer(steps);
+    t2.ps_backend = Some(backend.clone());
+    let out2 = t2.run_rust()?;
+    print!("sharded   phase-2 ");
+    out2.report.print_row();
+    let local2 = run_local()?;
+    print!("in-process phase-2 ");
+    local2.report.print_row();
+
+    let auc_gap = (out2.report.final_auc.unwrap() - local2.report.final_auc.unwrap()).abs();
+    println!("AUC gap sharded vs in-process after recovery: {auc_gap:.2e}");
+    anyhow::ensure!(auc_gap < 1e-6, "sharded PS diverged from in-process PS");
+
+    // 4. Graceful teardown.
+    drop(t1);
+    drop(t2);
+    backend.shutdown_all()?;
+    drop(backend);
+    for h in handles {
+        h.shutdown()?;
+    }
+    println!("all shards drained and stopped; sharded service mode OK");
+    Ok(())
+}

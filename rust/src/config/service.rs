@@ -1,29 +1,47 @@
 //! Configuration for the TCP service mode (`persia serve-ps` /
 //! `persia train --remote-ps`).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// How a trainer process reaches (or a PS process exposes) the embedding
 /// parameter server over TCP.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServiceConfig {
-    /// Listen address for `serve-ps`, server address for clients
-    /// (`host:port`; port 0 picks an ephemeral port when binding).
+    /// Listen address for `serve-ps` (`host:port`; port 0 picks an
+    /// ephemeral port when binding). For clients: one address, or a
+    /// comma-separated list of shard-process addresses
+    /// (`host:port,host:port,...`) that jointly cover the PS node space —
+    /// see [`ShardedRemotePs`](crate::service::ShardedRemotePs).
     pub addr: String,
-    /// TCP connections in the client pool. Each connection carries one
-    /// request at a time, so this bounds in-flight PS requests per process;
-    /// the trainer's NN-worker threads and gradient appliers share the pool.
+    /// TCP connections in the client pool *per shard process*. Each
+    /// connection carries one request at a time, so this bounds in-flight
+    /// PS requests per (process, shard) pair; the trainer's NN-worker
+    /// threads and gradient appliers share the pool.
     pub client_conns: usize,
     /// Apply the §4.2.3 lossy fp16 value compression to row/gradient
     /// payloads on the PS wire (index compression — unique keys only — is
     /// always on). Off by default so the remote PS is bit-identical to the
     /// in-process one.
     pub wire_compress: bool,
+    /// How many times a failed call re-dials its pooled connection before
+    /// giving up (0 = fail on first error). Each retry re-runs the INFO
+    /// handshake and insists the server's config fingerprint is unchanged —
+    /// this is what lets a PS shard process killed and restarted from its
+    /// snapshot rejoin a run mid-flight (§4.2.4).
+    pub reconnect_attempts: u32,
+    /// Constant delay between reconnect attempts, in milliseconds.
+    pub reconnect_backoff_ms: u64,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7700".to_string(), client_conns: 4, wire_compress: false }
+        Self {
+            addr: "127.0.0.1:7700".to_string(),
+            client_conns: 4,
+            wire_compress: false,
+            reconnect_attempts: 4,
+            reconnect_backoff_ms: 50,
+        }
     }
 }
 
@@ -33,15 +51,44 @@ impl ServiceConfig {
         Self { addr: addr.into(), ..Self::default() }
     }
 
+    /// The (one or more) shard-process addresses in `addr`.
+    pub fn shard_addrs(&self) -> Vec<String> {
+        self.addr
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
     pub fn validate(&self) -> Result<()> {
-        if !self.addr.contains(':') {
-            bail!("service addr {:?} must be host:port", self.addr);
+        let addrs = self.shard_addrs();
+        if addrs.is_empty() {
+            bail!("service addr list {:?} is empty", self.addr);
+        }
+        for addr in &addrs {
+            validate_addr(addr)?;
         }
         if self.client_conns == 0 {
             bail!("client_conns must be >= 1");
         }
         Ok(())
     }
+}
+
+/// Check one `host:port` address: non-empty host AND a port that actually
+/// parses as a u16 — `"host:"`, `":7700"`, and `"host:http"` are all
+/// config typos that used to slip through and fail much later with an
+/// unhelpful connect/bind error.
+fn validate_addr(addr: &str) -> Result<()> {
+    let Some((host, port)) = addr.rsplit_once(':') else {
+        bail!("service addr {addr:?} must be host:port");
+    };
+    if host.is_empty() {
+        bail!("service addr {addr:?} has an empty host");
+    }
+    port.parse::<u16>()
+        .with_context(|| format!("service addr {addr:?} has invalid port {port:?}"))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -53,6 +100,7 @@ mod tests {
         let cfg = ServiceConfig::default();
         cfg.validate().unwrap();
         assert!(!cfg.wire_compress);
+        assert_eq!(cfg.shard_addrs(), vec!["127.0.0.1:7700".to_string()]);
     }
 
     #[test]
@@ -66,7 +114,33 @@ mod tests {
     #[test]
     fn validation_catches_bad_values() {
         assert!(ServiceConfig::at("nocolon").validate().is_err());
+        // Malformed host/port halves that the old contains(':') check let
+        // through.
+        assert!(ServiceConfig::at("host:").validate().is_err());
+        assert!(ServiceConfig::at(":7700").validate().is_err());
+        assert!(ServiceConfig::at("host:http").validate().is_err());
+        assert!(ServiceConfig::at("host:70000").validate().is_err());
+        assert!(ServiceConfig::at("host:-1").validate().is_err());
+        assert!(ServiceConfig::at("").validate().is_err());
         let cfg = ServiceConfig { client_conns: 0, ..ServiceConfig::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn shard_lists_parse_and_validate() {
+        let cfg = ServiceConfig::at("127.0.0.1:7700, 127.0.0.1:7701,127.0.0.1:7702");
+        assert_eq!(
+            cfg.shard_addrs(),
+            vec!["127.0.0.1:7700", "127.0.0.1:7701", "127.0.0.1:7702"]
+        );
+        cfg.validate().unwrap();
+        // One bad entry poisons the whole list.
+        assert!(ServiceConfig::at("127.0.0.1:7700,host:").validate().is_err());
+        assert!(ServiceConfig::at(",").validate().is_err());
+    }
+
+    #[test]
+    fn port_zero_is_legal_for_ephemeral_binds() {
+        ServiceConfig::at("127.0.0.1:0").validate().unwrap();
     }
 }

@@ -71,9 +71,11 @@ impl CheckpointManager {
         self.dir.join(format!("ps_node_{node}.ckpt"))
     }
 
-    /// Save every node of the PS (atomic per node: write temp then rename).
+    /// Save every node this PS instance owns (atomic per node: write temp
+    /// then rename). A range-owning shard process saves only its own nodes,
+    /// so N processes sharing one directory produce one file per global node.
     pub fn save(&self, ps: &EmbeddingPs) -> Result<()> {
-        for node in 0..ps.n_nodes() {
+        for node in ps.node_range() {
             self.save_node(ps, node)?;
         }
         Ok(())
@@ -111,9 +113,9 @@ impl CheckpointManager {
         ps.restore_node(node, &shards)
     }
 
-    /// Restore every node.
+    /// Restore every node this PS instance owns.
     pub fn restore(&self, ps: &EmbeddingPs) -> Result<()> {
-        for node in 0..ps.n_nodes() {
+        for node in ps.node_range() {
             self.restore_node(ps, node)?;
         }
         Ok(())
@@ -168,6 +170,37 @@ mod tests {
         let mut got = vec![0.0; 120];
         ps.get_many(&keys, &mut got);
         assert_eq!(got, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn range_ps_checkpoints_only_owned_nodes() {
+        use crate::embedding::ps::pack_key;
+        let dir = std::env::temp_dir().join(format!("persia_ckpt_r_{}", std::process::id()));
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let cfg = crate::config::EmbeddingConfig {
+            rows_per_group: 1 << 30,
+            shard_capacity: 64,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Adagrad,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let part = EmbeddingPs::new_range(&cfg, 4, 9, 1..2);
+        let mut buf = [0.0; 4];
+        let owned: Vec<u64> =
+            (0..200).filter(|&i| part.owns_key(pack_key(0, i))).take(20).collect();
+        for &id in &owned {
+            part.get(0, id, &mut buf);
+        }
+        mgr.save(&part).unwrap();
+        assert!(mgr.exists(1), "owned node not saved");
+        assert!(!mgr.exists(0), "unowned node saved");
+        let before = part.snapshot_node(1);
+        part.wipe_node(1);
+        mgr.restore(&part).unwrap();
+        assert_eq!(part.snapshot_node(1), before);
         std::fs::remove_dir_all(&dir).ok();
     }
 

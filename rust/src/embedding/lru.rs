@@ -241,23 +241,53 @@ impl LruStore {
     }
 
     /// Verify structural invariants (tests + post-restore validation).
+    ///
+    /// Defensive by construction: snapshots restored via [`Self::from_bytes`]
+    /// may carry hostile `head`/`tail`/`prev`/`next` indices, so every slot
+    /// index is bounds-checked before it is dereferenced and both walks are
+    /// cycle-guarded — corruption yields `Err`, never a panic or a hang.
     pub fn check_invariants(&self) -> anyhow::Result<()> {
         use anyhow::ensure;
-        let forward = self.keys_mru_order();
+        let cap = self.slots.len();
+        let in_bounds = |idx: u32| (idx as usize) < cap;
+        ensure!(self.head == NIL || in_bounds(self.head), "head {} out of bounds", self.head);
+        ensure!(self.tail == NIL || in_bounds(self.tail), "tail {} out of bounds", self.tail);
+
+        // Forward (MRU -> LRU) walk: every visited index must be in bounds,
+        // occupied, mapped back to itself, and the walk must terminate.
+        let mut forward = Vec::with_capacity(self.map.len());
+        let mut cur = self.head;
+        while cur != NIL {
+            ensure!(in_bounds(cur), "next link {cur} out of bounds");
+            ensure!(forward.len() < cap, "cycle in next links");
+            let s = &self.slots[cur as usize];
+            ensure!(s.occupied == 1, "linked slot {cur} not occupied");
+            ensure!(
+                self.map.get(&s.key) == Some(&cur),
+                "slot {cur} key {:#x} not mapped back to it",
+                s.key
+            );
+            forward.push(s.key);
+            cur = s.next;
+        }
         ensure!(forward.len() == self.map.len(), "list len != map len");
-        // Backward walk must mirror forward walk.
+
+        // Backward walk must mirror the forward walk exactly.
         let mut backward = Vec::with_capacity(forward.len());
         let mut cur = self.tail;
         while cur != NIL {
+            ensure!(in_bounds(cur), "prev link {cur} out of bounds");
+            ensure!(backward.len() < cap, "cycle in prev links");
             backward.push(self.slots[cur as usize].key);
             cur = self.slots[cur as usize].prev;
         }
         backward.reverse();
         ensure!(forward == backward, "prev/next links disagree");
-        for key in &forward {
-            ensure!(self.map.contains_key(key), "listed key missing from map");
+
+        for &idx in &self.free {
+            ensure!(in_bounds(idx), "free-list index {idx} out of bounds");
         }
-        ensure!(self.map.len() + self.free.len() == self.slots.len(), "slot leak");
+        ensure!(self.map.len() + self.free.len() == cap, "slot leak");
         Ok(())
     }
 
@@ -289,17 +319,54 @@ impl LruStore {
 
     /// Restore from [`Self::to_bytes`] output. The hash-map (the only
     /// non-flat structure) is rebuilt from the slot array.
+    ///
+    /// Every header field is validated before any index derived from it is
+    /// used: arbitrary (corrupt, truncated, or hostile) bytes yield `Err`,
+    /// never a panic — checkpoint restore is a failure-recovery path and must
+    /// not take the process down with it.
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
         use anyhow::ensure;
         ensure!(bytes.len() >= 40 && &bytes[..8] == b"PLRU0001", "bad LRU snapshot header");
         let rd_u64 = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
-        let capacity = rd_u64(8) as usize;
-        let row_width = rd_u64(16) as usize;
-        let head = rd_u64(24) as u32;
-        let tail = rd_u64(32) as u32;
-        let slot_bytes = std::mem::size_of::<Slot>() * capacity;
-        let val_bytes = 4 * capacity * row_width;
-        ensure!(bytes.len() == 40 + slot_bytes + val_bytes, "snapshot size mismatch");
+        let capacity_raw = rd_u64(8);
+        let row_width_raw = rd_u64(16);
+        // The constructor's own bounds: 0 < capacity < NIL, row_width > 0.
+        ensure!(
+            capacity_raw > 0 && capacity_raw < NIL as u64,
+            "snapshot capacity {capacity_raw} out of range"
+        );
+        ensure!(row_width_raw > 0, "snapshot row_width 0");
+        let capacity = capacity_raw as usize;
+        let row_width = usize::try_from(row_width_raw)
+            .map_err(|_| anyhow::anyhow!("snapshot row_width {row_width_raw} out of range"))?;
+        // Overflow-safe size accounting: a corrupt header must not wrap the
+        // expected length into something the real buffer happens to satisfy.
+        let slot_bytes = capacity
+            .checked_mul(std::mem::size_of::<Slot>())
+            .ok_or_else(|| anyhow::anyhow!("snapshot slot size overflow"))?;
+        let val_bytes = capacity
+            .checked_mul(row_width)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("snapshot value size overflow"))?;
+        let total = 40usize
+            .checked_add(slot_bytes)
+            .and_then(|n| n.checked_add(val_bytes))
+            .ok_or_else(|| anyhow::anyhow!("snapshot size overflow"))?;
+        ensure!(bytes.len() == total, "snapshot size mismatch");
+        // head/tail travel as u64; reject anything that would truncate when
+        // narrowed back to a slot index instead of silently wrapping.
+        let head_raw = rd_u64(24);
+        let tail_raw = rd_u64(32);
+        ensure!(
+            head_raw == NIL as u64 || head_raw < capacity_raw,
+            "snapshot head {head_raw} out of bounds"
+        );
+        ensure!(
+            tail_raw == NIL as u64 || tail_raw < capacity_raw,
+            "snapshot tail {tail_raw} out of bounds"
+        );
+        let head = head_raw as u32;
+        let tail = tail_raw as u32;
 
         let mut slots = vec![Slot::empty(); capacity];
         let mut values = vec![0.0f32; capacity * row_width];
@@ -319,7 +386,11 @@ impl LruStore {
         let mut free = Vec::new();
         for (i, s) in slots.iter().enumerate() {
             if s.occupied == 1 {
-                map.insert(s.key, i as u32);
+                ensure!(
+                    map.insert(s.key, i as u32).is_none(),
+                    "snapshot has duplicate key {:#x}",
+                    s.key
+                );
             } else {
                 free.push(i as u32);
             }
@@ -327,6 +398,7 @@ impl LruStore {
         free.reverse();
         let store =
             Self { slots, values, map, head, tail, free, row_width, evictions: 0 };
+        // The bounds/cycle-hardened walk rejects corrupt prev/next links.
         store.check_invariants()?;
         Ok(store)
     }
@@ -432,6 +504,64 @@ mod tests {
         let mut bytes2 = lru.to_bytes();
         bytes2.truncate(bytes2.len() - 1);
         assert!(LruStore::from_bytes(&bytes2).is_err());
+    }
+
+    #[test]
+    fn corrupt_indices_error_instead_of_panicking() {
+        // Fill a store so head/tail/links are all live, snapshot it, then
+        // corrupt each index field in turn: restore must return Err (it used
+        // to index out of bounds and panic).
+        let mut lru = LruStore::new(4, 2);
+        for k in 0..4u64 {
+            lru.get_or_insert_with(k, init_row(k as f32));
+        }
+        let good = lru.to_bytes();
+        let patch_u64 = |bytes: &mut [u8], off: usize, v: u64| {
+            bytes[off..off + 8].copy_from_slice(&v.to_le_bytes());
+        };
+        let patch_u32 = |bytes: &mut [u8], off: usize, v: u32| {
+            bytes[off..off + 4].copy_from_slice(&v.to_le_bytes());
+        };
+
+        // head / tail out of bounds (both u32-range and u64-truncating).
+        for off in [24usize, 32] {
+            for v in [4u64, 1 << 20, (1u64 << 32) + 1] {
+                let mut b = good.clone();
+                patch_u64(&mut b, off, v);
+                assert!(LruStore::from_bytes(&b).is_err(), "off={off} v={v}");
+            }
+        }
+        // prev/next of slot 0 out of bounds (slot layout: key 8, prev 4,
+        // next 4, occupied 4, pad 4 = 24 bytes starting at byte 40).
+        for field_off in [48usize, 52] {
+            let mut b = good.clone();
+            patch_u32(&mut b, field_off, 999);
+            assert!(LruStore::from_bytes(&b).is_err(), "field_off={field_off}");
+        }
+        // A next link forming a cycle (slot 0 points at itself).
+        let mut b = good.clone();
+        patch_u32(&mut b, 52, 0);
+        assert!(LruStore::from_bytes(&b).is_err(), "self-cycle accepted");
+        // Implausible capacity that would overflow size arithmetic.
+        let mut b = good.clone();
+        patch_u64(&mut b, 8, u64::MAX / 2);
+        assert!(LruStore::from_bytes(&b).is_err(), "overflow capacity accepted");
+        // Zero row width.
+        let mut b = good;
+        patch_u64(&mut b, 16, 0);
+        assert!(LruStore::from_bytes(&b).is_err(), "zero row_width accepted");
+    }
+
+    #[test]
+    fn duplicate_snapshot_keys_rejected() {
+        let mut lru = LruStore::new(2, 1);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        let mut bytes = lru.to_bytes();
+        // Overwrite slot 1's key with slot 0's key (key field at slot start).
+        let k0 = u64::from_le_bytes(bytes[40..48].try_into().unwrap());
+        bytes[64..72].copy_from_slice(&k0.to_le_bytes());
+        assert!(LruStore::from_bytes(&bytes).is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod optimizer;
 pub mod ps;
 pub mod shard;
 
+pub use checkpoint::CheckpointManager;
 pub use lru::LruStore;
 pub use optimizer::RowOptimizer;
 pub use ps::EmbeddingPs;

@@ -36,66 +36,203 @@ pub fn unpack_key(key: u64) -> (u32, u64) {
     ((key >> 48) as u32, key & 0x0000_ffff_ffff_ffff)
 }
 
+/// The global hash placement: key -> (node, shard).
+///
+/// This is *the* function every participant of a deployment must agree on:
+/// the in-process PS, each `serve-ps` shard process, and the
+/// [`ShardedRemotePs`](crate::service::ShardedRemotePs) client all call this
+/// one implementation, so a key provably routes to the same logical node on
+/// both sides of the wire (§4.2.2: "an identical global hashing function").
+#[inline]
+pub fn route(
+    policy: PartitionPolicy,
+    n_nodes: usize,
+    shards_per_node: usize,
+    key: u64,
+) -> (usize, usize) {
+    let (group, id) = unpack_key(key);
+    match policy {
+        PartitionPolicy::ShuffledUniform => {
+            let h = splitmix64(key);
+            ((h % n_nodes as u64) as usize, ((h >> 32) % shards_per_node as u64) as usize)
+        }
+        PartitionPolicy::FeatureGroup => {
+            let node = group as usize % n_nodes;
+            let h = splitmix64(id);
+            (node, (h % shards_per_node as u64) as usize)
+        }
+    }
+}
+
+/// Max/mean traffic imbalance over a per-node traffic vector (1.0 =
+/// perfectly balanced; 1.0 for an idle PS). Like [`route`], this is shared
+/// by the in-process PS and the sharded client (which feeds it the
+/// element-wise sum of every shard process's traffic vector), so "merged
+/// imbalance equals in-process imbalance" holds by construction.
+pub fn imbalance_of(traffic: &[u64]) -> f64 {
+    let max = *traffic.iter().max().unwrap_or(&0) as f64;
+    let mean = traffic.iter().sum::<u64>() as f64 / traffic.len().max(1) as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
 /// The embedding PS: `n_nodes x shards_per_node` locked shards.
+///
+/// A PS instance may *own* only a contiguous range of the logical nodes
+/// (`new_range`) while still routing over the full global geometry — that is
+/// how one `serve-ps` process hosts its slice of a multi-process deployment
+/// without allocating the other processes' shards.
 pub struct EmbeddingPs {
+    /// Shards of the owned nodes only: `nodes[i]` is global node
+    /// `node_start + i`.
     nodes: Vec<Vec<Shard>>,
+    /// First owned global node index.
+    node_start: usize,
+    /// Global node count (the routing modulus; >= nodes.len()).
+    n_nodes_global: usize,
     policy: PartitionPolicy,
     dim: usize,
 }
 
 impl EmbeddingPs {
+    /// A PS owning every logical node (the in-process default).
     pub fn new(cfg: &EmbeddingConfig, dim: usize, seed: u64) -> Self {
+        Self::new_range(cfg, dim, seed, 0..cfg.n_nodes)
+    }
+
+    /// A PS owning only global nodes `range` out of `cfg.n_nodes`. Shard
+    /// seeds are derived from the *global* node index, so a node's rows
+    /// materialize identically whether it lives in a full in-process PS or
+    /// in the shard process that owns it.
+    pub fn new_range(
+        cfg: &EmbeddingConfig,
+        dim: usize,
+        seed: u64,
+        range: std::ops::Range<usize>,
+    ) -> Self {
+        assert!(
+            range.start < range.end && range.end <= cfg.n_nodes,
+            "node range {range:?} invalid for {} nodes",
+            cfg.n_nodes
+        );
         let opt = RowOptimizer::new(cfg.optimizer, cfg.lr, dim);
-        let nodes = (0..cfg.n_nodes)
+        let nodes = range
+            .clone()
             .map(|n| {
                 (0..cfg.shards_per_node)
-                    .map(|s| Shard::new(cfg.shard_capacity, opt, seed ^ ((n as u64) << 32) ^ s as u64))
+                    .map(|s| {
+                        let shard_seed = seed ^ ((n as u64) << 32) ^ s as u64;
+                        Shard::new(cfg.shard_capacity, opt, shard_seed)
+                    })
                     .collect()
             })
             .collect();
-        Self { nodes, policy: cfg.partition, dim }
+        Self {
+            nodes,
+            node_start: range.start,
+            n_nodes_global: cfg.n_nodes,
+            policy: cfg.partition,
+            dim,
+        }
     }
 
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Global node count (the routing modulus), not the owned count.
     pub fn n_nodes(&self) -> usize {
-        self.nodes.len()
+        self.n_nodes_global
     }
 
     pub fn shards_per_node(&self) -> usize {
         self.nodes[0].len()
     }
 
+    /// The contiguous range of global node indices this instance owns.
+    pub fn node_range(&self) -> std::ops::Range<usize> {
+        self.node_start..self.node_start + self.nodes.len()
+    }
+
+    pub fn partition_policy(&self) -> PartitionPolicy {
+        self.policy
+    }
+
     /// The global hash placement: key -> (node, shard).
     #[inline]
     pub fn route(&self, key: u64) -> (usize, usize) {
-        let (group, id) = unpack_key(key);
-        let n_nodes = self.nodes.len();
-        let n_shards = self.nodes[0].len();
-        match self.policy {
-            PartitionPolicy::ShuffledUniform => {
-                let h = splitmix64(key);
-                ((h % n_nodes as u64) as usize, ((h >> 32) % n_shards as u64) as usize)
-            }
-            PartitionPolicy::FeatureGroup => {
-                let node = group as usize % n_nodes;
-                let h = splitmix64(id);
-                (node, (h % n_shards as u64) as usize)
-            }
-        }
+        route(self.policy, self.n_nodes_global, self.nodes[0].len(), key)
+    }
+
+    /// Whether `key` routes to a node this instance owns.
+    #[inline]
+    pub fn owns_key(&self, key: u64) -> bool {
+        let (n, _) = self.route(key);
+        n >= self.node_start && n < self.node_start + self.nodes.len()
     }
 
     #[inline]
     fn shard(&self, key: u64) -> &Shard {
         let (n, s) = self.route(key);
-        &self.nodes[n][s]
+        assert!(
+            n >= self.node_start && n < self.node_start + self.nodes.len(),
+            "key {key:#x} routes to node {n}, outside owned range {:?}",
+            self.node_range()
+        );
+        &self.nodes[n - self.node_start][s]
+    }
+
+    /// Like [`Self::shard`] but fallible: an unowned key is an `Err`, not a
+    /// panic — the PS service handles hostile/misrouted traffic through
+    /// this, routing each key exactly once.
+    #[inline]
+    fn shard_checked(&self, key: u64) -> anyhow::Result<&Shard> {
+        let (n, s) = self.route(key);
+        // Keys below node_start wrap to a huge index and fail the `get`.
+        self.nodes
+            .get(n.wrapping_sub(self.node_start))
+            .map(|shards| &shards[s])
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "key {key:#x} routes to node {n}, outside owned range {:?}",
+                    self.node_range()
+                )
+            })
+    }
+
+    /// Batched lookup of already-packed keys into `out`, routing each key
+    /// once and rejecting (all-or-nothing, before any row materializes)
+    /// keys this instance does not own. The PS service's GET entry point.
+    pub fn get_packed_into(&self, packed: &[u64], out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(out.len() == packed.len() * self.dim, "GET output shape mismatch");
+        let shards: Vec<&Shard> =
+            packed.iter().map(|&k| self.shard_checked(k)).collect::<anyhow::Result<_>>()?;
+        for (i, (shard, &key)) in shards.iter().zip(packed).enumerate() {
+            shard.get(key, &mut out[i * self.dim..(i + 1) * self.dim]);
+        }
+        Ok(())
+    }
+
+    /// Batched gradient put of already-packed keys, routing each key once
+    /// and rejecting unowned keys before any gradient is applied. The PS
+    /// service's PUT entry point.
+    pub fn put_grads_packed(&self, packed: &[u64], grads: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(grads.len() == packed.len() * self.dim, "PUT gradient shape mismatch");
+        let shards: Vec<&Shard> =
+            packed.iter().map(|&k| self.shard_checked(k)).collect::<anyhow::Result<_>>()?;
+        for (i, (shard, &key)) in shards.iter().zip(packed).enumerate() {
+            shard.put_grad(key, &grads[i * self.dim..(i + 1) * self.dim]);
+        }
+        Ok(())
     }
 
     /// Fetch one embedding row into `out`.
     pub fn get(&self, group: u32, id: u64, out: &mut [f32]) {
-        self.shard(pack_key(group, id)).get(pack_key(group, id), out);
+        let key = pack_key(group, id);
+        self.shard(key).get(key, out);
     }
 
     /// Batched lookup: rows for `keys`, flattened `[len, dim]` into `out`.
@@ -131,37 +268,54 @@ impl EmbeddingPs {
     }
 
     /// Per-node traffic (gets+puts) — the load-balance ablation metric.
+    ///
+    /// Always global-length: unowned nodes report 0, so a sharded deployment
+    /// can element-wise sum the vectors from every shard process and get the
+    /// true global per-node traffic (the merged-imbalance input).
     pub fn node_traffic(&self) -> Vec<u64> {
-        self.nodes
-            .iter()
-            .map(|shards| shards.iter().map(|s| {
-                let (g, p) = s.traffic();
-                g + p
-            }).sum())
-            .collect()
+        let mut out = vec![0u64; self.n_nodes_global];
+        for (i, shards) in self.nodes.iter().enumerate() {
+            out[self.node_start + i] = shards
+                .iter()
+                .map(|s| {
+                    let (g, p) = s.traffic();
+                    g + p
+                })
+                .sum();
+        }
+        out
     }
 
     /// Max/mean traffic imbalance across nodes (1.0 = perfectly balanced).
     pub fn imbalance(&self) -> f64 {
-        let t = self.node_traffic();
-        let max = *t.iter().max().unwrap_or(&0) as f64;
-        let mean = t.iter().sum::<u64>() as f64 / t.len().max(1) as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
+        imbalance_of(&self.node_traffic())
+    }
+
+    #[inline]
+    fn owned_node(&self, node: usize) -> anyhow::Result<&[Shard]> {
+        anyhow::ensure!(
+            node >= self.node_start && node < self.node_start + self.nodes.len(),
+            "node {node} outside owned range {:?}",
+            self.node_range()
+        );
+        Ok(&self.nodes[node - self.node_start])
     }
 
     /// Snapshot one node (all its shards) — periodic checkpointing (§4.2.4).
+    /// `node` is a *global* index and must be owned by this instance.
     pub fn snapshot_node(&self, node: usize) -> Vec<Vec<u8>> {
-        self.nodes[node].iter().map(|s| s.snapshot()).collect()
+        self.owned_node(node)
+            .expect("snapshot of unowned node")
+            .iter()
+            .map(|s| s.snapshot())
+            .collect()
     }
 
-    /// Restore one node from a snapshot.
+    /// Restore one (owned, global-indexed) node from a snapshot.
     pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> anyhow::Result<()> {
-        anyhow::ensure!(shards.len() == self.nodes[node].len(), "shard count mismatch");
-        for (shard, bytes) in self.nodes[node].iter().zip(shards) {
+        let owned = self.owned_node(node)?;
+        anyhow::ensure!(shards.len() == owned.len(), "shard count mismatch");
+        for (shard, bytes) in owned.iter().zip(shards) {
             shard.restore(bytes)?;
         }
         Ok(())
@@ -170,7 +324,7 @@ impl EmbeddingPs {
     /// Simulate a node crash that loses in-memory state (used by fault tests
     /// to contrast with the shared-memory + checkpoint recovery path).
     pub fn wipe_node(&self, node: usize) {
-        for s in &self.nodes[node] {
+        for s in self.owned_node(node).expect("wipe of unowned node") {
             s.wipe();
         }
     }
@@ -289,6 +443,116 @@ mod tests {
         let mut got = vec![0.0; 200];
         ps.get_many(&keys, &mut got);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn range_ps_matches_full_ps_on_owned_keys() {
+        // Split the 4 nodes across three "processes" (0..2, 2..3, 3..4):
+        // every key must route identically everywhere, materialize the same
+        // row as the full PS, and apply gradients to the same effect.
+        let c = cfg(PartitionPolicy::ShuffledUniform);
+        let full = EmbeddingPs::new(&c, 4, 1);
+        let parts = [
+            EmbeddingPs::new_range(&c, 4, 1, 0..2),
+            EmbeddingPs::new_range(&c, 4, 1, 2..3),
+            EmbeddingPs::new_range(&c, 4, 1, 3..4),
+        ];
+        assert_eq!(parts[0].node_range(), 0..2);
+        assert_eq!(parts[1].n_nodes(), 4);
+
+        let mut rng = Rng::new(9);
+        for _ in 0..500 {
+            let (g, id) = (rng.below(8) as u32, rng.below(1 << 40));
+            let key = pack_key(g, id);
+            let (node, shard) = full.route(key);
+            let owner = parts.iter().find(|p| p.owns_key(key)).expect("uncovered key");
+            assert_eq!(owner.route(key), (node, shard), "route disagrees");
+            assert_eq!(
+                route(c.partition, c.n_nodes, c.shards_per_node, key),
+                (node, shard),
+                "free route() disagrees with method"
+            );
+            let mut a = vec![0.0; 4];
+            let mut b = vec![0.0; 4];
+            full.get(g, id, &mut a);
+            owner.get(g, id, &mut b);
+            assert_eq!(a, b, "materialization differs for ({g},{id})");
+            full.put_grad(g, id, &[1.0; 4]);
+            owner.put_grad(g, id, &[1.0; 4]);
+            full.get(g, id, &mut a);
+            owner.get(g, id, &mut b);
+            assert_eq!(a, b, "post-gradient rows differ for ({g},{id})");
+        }
+        // Summed partial row counts equal the full PS's.
+        let part_rows: usize = parts.iter().map(|p| p.total_rows()).sum();
+        assert_eq!(part_rows, full.total_rows());
+        // Traffic vectors are global-length, zero outside the owned range,
+        // and sum to the full PS's vector.
+        let mut summed = vec![0u64; 4];
+        for p in &parts {
+            let t = p.node_traffic();
+            assert_eq!(t.len(), 4);
+            for n in 0..4 {
+                if !p.node_range().contains(&n) {
+                    assert_eq!(t[n], 0, "unowned node {n} reported traffic");
+                }
+                summed[n] += t[n];
+            }
+        }
+        assert_eq!(summed, full.node_traffic());
+    }
+
+    #[test]
+    fn packed_entry_points_match_unpacked_and_reject_unowned() {
+        let c = cfg(PartitionPolicy::ShuffledUniform);
+        let full = EmbeddingPs::new(&c, 4, 1);
+        let part = EmbeddingPs::new_range(&c, 4, 1, 0..1);
+        let keys: Vec<(u32, u64)> = (0..40).map(|i| (i % 3, i as u64 * 31)).collect();
+        let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
+
+        let mut via_packed = vec![0.0; 160];
+        full.get_packed_into(&packed, &mut via_packed).unwrap();
+        let mut via_pairs = vec![0.0; 160];
+        full.get_many(&keys, &mut via_pairs);
+        assert_eq!(via_packed, via_pairs);
+        full.put_grads_packed(&packed, &vec![1.0; 160]).unwrap();
+
+        // A batch containing any unowned key is rejected whole, before any
+        // row materializes or any gradient lands.
+        let pool: Vec<u64> = (0..200).map(|i| pack_key(0, i * 7)).collect();
+        let owned: Vec<u64> = pool.iter().copied().filter(|&k| part.owns_key(k)).take(8).collect();
+        let stray = pool.iter().copied().find(|&k| !part.owns_key(k)).unwrap();
+        let mixed: Vec<u64> = owned.iter().copied().chain([stray]).collect();
+        assert!(mixed.len() > 1, "need both owned and unowned keys");
+        let rows_before = part.total_rows();
+        let mut buf = vec![0.0; mixed.len() * 4];
+        assert!(part.get_packed_into(&mixed, &mut buf).is_err());
+        assert!(part.put_grads_packed(&mixed, &vec![1.0; mixed.len() * 4]).is_err());
+        assert_eq!(part.total_rows(), rows_before, "rejected batch touched state");
+    }
+
+    #[test]
+    fn range_ps_snapshot_uses_global_node_indices() {
+        let c = cfg(PartitionPolicy::ShuffledUniform);
+        let full = EmbeddingPs::new(&c, 4, 1);
+        let part = EmbeddingPs::new_range(&c, 4, 1, 2..4);
+        let mut buf = vec![0.0; 4];
+        for id in 0..200u64 {
+            let key = pack_key(0, id);
+            if part.owns_key(key) {
+                full.get(0, id, &mut buf);
+                part.get(0, id, &mut buf);
+            }
+        }
+        // Node 3 snapshots must agree between the full PS and the part.
+        assert_eq!(part.snapshot_node(3), full.snapshot_node(3));
+        // Restore through the global index roundtrips.
+        let snap = part.snapshot_node(2);
+        part.wipe_node(2);
+        part.restore_node(2, &snap).unwrap();
+        assert_eq!(part.snapshot_node(2), snap);
+        // Unowned nodes are a loud error, not silent corruption.
+        assert!(part.restore_node(0, &snap).is_err());
     }
 
     #[test]

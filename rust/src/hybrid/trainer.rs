@@ -51,6 +51,12 @@ use super::gantt::GanttTimeline;
 /// How often FullAsync gossip-averages the dense replicas.
 const ASYNC_SYNC_EVERY: u64 = 64;
 
+/// Total tries an async gradient applier gives one put. A failed
+/// `push_grads` re-buffers its samples, so each retry replays the exact
+/// same batch; combined with the remote backend's own reconnect-with-retry
+/// this rides out a PS shard process being killed and restarted (§4.2.4).
+const PUT_ATTEMPTS: usize = 3;
+
 /// Per-worker dense-engine construction. PJRT executables are not `Send`
 /// (the `xla` crate wraps raw PJRT pointers), so every NN-worker thread
 /// builds and owns its engine — exactly the paper's topology, where each GPU
@@ -128,8 +134,9 @@ pub struct Trainer {
     /// Record a Gantt timeline on worker 0.
     pub record_gantt: bool,
     /// PS backend override. `None` builds the in-process [`EmbeddingPs`]
-    /// from `emb_cfg`; `Some` (e.g. a [`crate::service::RemotePs`]) trains
-    /// against it — the TCP service mode.
+    /// from `emb_cfg`; `Some` (a [`crate::service::RemotePs`] or a
+    /// multi-process [`crate::service::ShardedRemotePs`]) trains against
+    /// it — the TCP service mode.
     pub ps_backend: Option<Arc<dyn PsBackend>>,
     /// Apply embedding gradients inline (single-threaded per worker) instead
     /// of via the async applier threads. The prefetch pipeline still runs τ
@@ -243,14 +250,32 @@ impl Trainer {
                         while let Ok(msg) = rx.recv() {
                             match msg {
                                 GradMsg::Apply { ew: idx, sids, grads } => {
-                                    // Losing an occasional put is tolerated
+                                    // A failed push re-buffers its samples,
+                                    // so the same batch can be replayed —
+                                    // retry a bounded number of times (a
+                                    // killed PS shard may be restarting).
+                                    // Losing a put after that is tolerated
                                     // (§4.2.4), but never silently: count it
-                                    // and surface the first failure — against
-                                    // a remote PS this usually means the
-                                    // connection died.
-                                    if let Err(e) = ew.push_grads(&sids, &grads) {
+                                    // and surface the first failure.
+                                    let mut res = ew.push_grads(&sids, &grads);
+                                    for _ in 1..PUT_ATTEMPTS {
+                                        if res.is_ok() {
+                                            break;
+                                        }
+                                        res = ew.push_grads(&sids, &grads);
+                                    }
+                                    if let Err(e) = res {
+                                        // Give the batch up for good: drop
+                                        // the re-buffered samples so a dead
+                                        // shard doesn't grow the buffer
+                                        // without bound (§4.2.4 tolerates
+                                        // the lost update, not the leak).
+                                        ew.discard(&sids);
                                         if put_failures.fetch_add(1, Ordering::Relaxed) == 0 {
-                                            eprintln!("grad applier: put failed: {e:#}");
+                                            eprintln!(
+                                                "grad applier: put failed \
+                                                 ({PUT_ATTEMPTS} attempts): {e:#}"
+                                            );
                                         }
                                     }
                                     inflight[idx].fetch_sub(1, Ordering::Relaxed);

@@ -16,15 +16,20 @@
 //!
 //! # Service mode (deployed topology)
 //!
-//! Besides the in-process simulated cluster, the embedding PS runs as a
-//! standalone TCP server ([`service`]): embedding workers reach it through
-//! the [`service::PsBackend`] trait, either in-process
-//! ([`embedding::EmbeddingPs`]) or over the wire ([`service::RemotePs`] →
-//! [`service::PsServer`]), with batched deduplicated get/put and the §4.2.3
-//! index/value compression on the wire. `persia serve-ps` starts a server,
-//! `persia train --remote-ps <addr>` trains against it, and the loopback
-//! test matrix (`rust/tests/integration_service.rs`) proves remote training
-//! is numerically identical to in-process training in every mode.
+//! Besides the in-process simulated cluster, the embedding PS runs as one
+//! or many standalone TCP server processes ([`service`]): embedding workers
+//! reach it through the [`service::PsBackend`] trait — in-process
+//! ([`embedding::EmbeddingPs`]), one server ([`service::RemotePs`] →
+//! [`service::PsServer`]), or N shard processes each owning a node range
+//! ([`service::ShardedRemotePs`], scatter-gathered with the servers' own
+//! global hash) — with batched deduplicated get/put and the §4.2.3
+//! index/value compression on the wire. `persia serve-ps [--node-range]`
+//! starts a (slice of a) server, `persia train --remote-ps <addr,...>`
+//! trains against the fleet, wire-level SNAPSHOT/RESTORE plus client
+//! reconnect implement the §4.2.4 kill/restore recovery drill, and the
+//! loopback test matrix (`rust/tests/integration_service.rs`,
+//! `rust/tests/integration_sharded.rs`) proves remote training is
+//! numerically identical to in-process training in every mode.
 //!
 //! Entry points: [`hybrid::Trainer`] for end-to-end training,
 //! [`config::BenchPreset`] for the paper's Table-1 benchmark presets, and the

@@ -2,8 +2,10 @@
 //!
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!   train     run a training job (preset, mode, workers, steps, ...);
-//!             add --remote-ps host:port to use a TCP embedding PS
-//!   serve-ps  run the embedding PS as a standalone TCP server
+//!             add --remote-ps host:port[,host:port...] to train against
+//!             one or many TCP embedding-PS shard processes
+//!   serve-ps  run the embedding PS (or one --node-range slice of it) as a
+//!             standalone TCP server
 //!   gantt     print the Fig.-3 phase timelines for all four modes
 //!   table1    print the Table-1 model-scale presets
 //!   capacity  Fig.-9 style capacity sweep (virtualized tables)
@@ -18,10 +20,10 @@ use persia::config::{
     BenchPreset, ClusterConfig, NetModelConfig, ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::data::SyntheticDataset;
-use persia::embedding::EmbeddingPs;
+use persia::embedding::{CheckpointManager, EmbeddingPs};
 use persia::hybrid::{PjrtEngineFactory, Trainer};
 use persia::runtime::ArtifactManifest;
-use persia::service::{PsBackend, PsServer, RemotePs};
+use persia::service::{PsBackend, PsServer, ShardedRemotePs};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -115,11 +117,17 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
             addr: addr.clone(),
             client_conns: flag(flags, "ps-conns", "4").parse()?,
             wire_compress: flag(flags, "ps-wire-compress", "false") == "true",
+            reconnect_attempts: flag(flags, "ps-retries", "4").parse()?,
+            reconnect_backoff_ms: flag(flags, "ps-retry-ms", "50").parse()?,
         };
-        let remote = RemotePs::connect(&svc)
-            .with_context(|| format!("connecting to remote PS at {addr}"))?;
+        // One client regardless of shard count: a single full-range
+        // serve-ps is just the 1-shard case. Connect-time validation proves
+        // the shard processes agree with each other and cover every node.
+        let remote = ShardedRemotePs::connect(&svc)
+            .with_context(|| format!("connecting to remote PS shard(s) at {addr}"))?;
         println!(
-            "remote PS at {addr}: dim={} nodes={} shards/node={}",
+            "remote PS: {} shard process(es), dim={} nodes={} shards/node={}",
+            remote.n_shard_processes(),
             PsBackend::dim(&remote),
             remote.n_nodes(),
             remote.shards_per_node()
@@ -129,26 +137,81 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
     Ok(trainer)
 }
 
-/// Build the PS exactly as `train` would for the same preset flags, then
-/// serve it over TCP until a SHUTDOWN RPC arrives.
+/// Parse `--node-range START..END` (end-exclusive, like Rust ranges).
+fn parse_node_range(s: &str, n_nodes: usize) -> Result<std::ops::Range<usize>> {
+    let parsed = match s.split_once("..") {
+        Some((a, b)) => match (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+            (Ok(start), Ok(end)) => Some(start..end),
+            _ => None,
+        },
+        None => None,
+    };
+    let range = parsed.with_context(|| format!("--node-range {s:?} must be START..END"))?;
+    anyhow::ensure!(
+        range.start < range.end && range.end <= n_nodes,
+        "--node-range {s} invalid for a {n_nodes}-node PS"
+    );
+    Ok(range)
+}
+
+/// Build the PS exactly as `train` would for the same preset flags — or one
+/// `--node-range` slice of it — then serve it over TCP until a SHUTDOWN RPC
+/// arrives. With `--checkpoint-dir`, owned nodes are restored from existing
+/// checkpoint files at startup (the §4.2.4 process-restart recovery path)
+/// and saved again on graceful shutdown.
 fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
     let PresetSetup { preset, model, emb_cfg, seed } = preset_setup(&flags)?;
     let svc = ServiceConfig::at(flag(&flags, "addr", "127.0.0.1:7700"));
     svc.validate()?;
+    anyhow::ensure!(
+        svc.shard_addrs().len() == 1,
+        "serve-ps takes a single --addr; run one process per shard"
+    );
+    let range = match flags.get("node-range") {
+        Some(s) => parse_node_range(s, emb_cfg.n_nodes)?,
+        None => 0..emb_cfg.n_nodes,
+    };
 
-    let ps = Arc::new(EmbeddingPs::new(&emb_cfg, model.emb_dim_per_group, seed));
-    let server = PsServer::bind(ps, &svc.addr, &emb_cfg, seed)?;
+    let ps =
+        Arc::new(EmbeddingPs::new_range(&emb_cfg, model.emb_dim_per_group, seed, range.clone()));
+    let ckpt = match flags.get("checkpoint-dir") {
+        Some(dir) => {
+            let mgr = CheckpointManager::new(dir)?;
+            for node in ps.node_range() {
+                if mgr.exists(node) {
+                    mgr.restore_node(&ps, node)
+                        .with_context(|| format!("restoring node {node} from {dir}"))?;
+                    println!("restored node {node} from checkpoint");
+                }
+            }
+            Some(mgr)
+        }
+        None => None,
+    };
+    let server = PsServer::bind(ps.clone(), &svc.addr, &emb_cfg, seed)?;
     println!(
-        "persia serve-ps: preset={} dim={} nodes={} shards/node={} capacity={}/shard seed={}",
+        "persia serve-ps: preset={} dim={} nodes={} (serving {}..{}) shards/node={} \
+         capacity={}/shard seed={}",
         preset.name,
         model.emb_dim_per_group,
         emb_cfg.n_nodes,
+        range.start,
+        range.end,
         emb_cfg.shards_per_node,
         emb_cfg.shard_capacity,
         seed,
     );
     println!("listening on {} (stop with a SHUTDOWN RPC)", server.local_addr()?);
-    server.serve_forever()
+    // Orchestrators (and the multi-process integration test) read the
+    // listening line through a pipe, where stdout is block-buffered.
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.serve_forever()?;
+    if let Some(mgr) = ckpt {
+        mgr.save(&ps)?;
+        println!("checkpointed nodes {:?} on shutdown", ps.node_range());
+    }
+    Ok(())
 }
 
 fn run_trainer(trainer: &Trainer, flags: &HashMap<String, String>) -> Result<()> {
@@ -246,9 +309,12 @@ fn usage() -> ! {
          [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
          [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
          [--verbose true] [--deterministic true]\n\
-         service mode: persia serve-ps [--addr 127.0.0.1:7700] then \
-         persia train --remote-ps 127.0.0.1:7700 [--ps-conns N] [--ps-wire-compress true] \
-         (same --preset/--dense/--shard-capacity/--seed on both sides)"
+         service mode: persia serve-ps [--addr 127.0.0.1:7700] [--node-range A..B] \
+         [--checkpoint-dir DIR] — one process per shard — then \
+         persia train --remote-ps addr1[,addr2,...] [--ps-conns N] [--ps-wire-compress true] \
+         [--ps-retries N] [--ps-retry-ms MS] \
+         (same --preset/--dense/--shard-capacity/--seed on every process; \
+         the --node-range slices must partition the PS nodes exactly)"
     );
     std::process::exit(2)
 }

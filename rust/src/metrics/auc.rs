@@ -6,8 +6,17 @@
 
 /// Exact ROC-AUC of `scores` against binary `labels` (1.0 = positive).
 /// Returns 0.5 for degenerate inputs (single class or empty).
+///
+/// Returns `f64::NAN` if any score is NaN: ranking against NaN is
+/// undefined, and the previous `partial_cmp().unwrap_or(Equal)` fallback
+/// silently produced an arbitrary (sort-order-dependent) AUC instead — a
+/// diverged model would report a plausible-looking number. NaN propagates
+/// visibly to the report, where it belongs.
 pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
     assert_eq!(scores.len(), labels.len());
+    if scores.iter().any(|s| s.is_nan()) {
+        return f64::NAN;
+    }
     let n = scores.len();
     let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
     let n_neg = n - n_pos;
@@ -16,7 +25,9 @@ pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
     }
 
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // total_cmp is a real total order; NaN was excluded above, so this is
+    // the plain float order (and the `==` tie grouping below is sound).
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
 
     // Sum of midranks of positives.
     let mut rank_sum_pos = 0.0f64;
@@ -80,6 +91,19 @@ mod tests {
     fn degenerate_single_class() {
         assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
         assert_eq!(auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn nan_scores_yield_nan_not_garbage() {
+        // A NaN anywhere makes ranking undefined: report NaN, don't pick an
+        // ordering-dependent answer.
+        assert!(auc(&[0.1, f32::NAN, 0.9], &[0.0, 1.0, 1.0]).is_nan());
+        assert!(auc(&[f32::NAN], &[1.0]).is_nan());
+        // NaN wins over the degenerate-input fallback too.
+        assert!(auc(&[f32::NAN, f32::NAN], &[1.0, 1.0]).is_nan());
+        // Infinities are orderable and fine.
+        let a = auc(&[f32::NEG_INFINITY, 0.0, f32::INFINITY], &[0.0, 0.0, 1.0]);
+        assert_eq!(a, 1.0);
     }
 
     #[test]

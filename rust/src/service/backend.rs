@@ -1,11 +1,13 @@
 //! The [`PsBackend`] abstraction: how an embedding worker reaches the
 //! embedding parameter server.
 //!
-//! Two implementations exist:
+//! Three implementations exist:
 //! * [`crate::embedding::EmbeddingPs`] — in-process (the simulated-cluster
 //!   default): calls go straight into the lock-striped shards;
-//! * [`super::RemotePs`] — the TCP client stub talking to a
-//!   [`super::PsServer`] over the zero-copy wire format.
+//! * [`super::RemotePs`] — the TCP client stub talking to one
+//!   [`super::PsServer`] over the zero-copy wire format;
+//! * [`super::ShardedRemotePs`] — the multi-process deployment: N shard
+//!   processes, each owning a node range, scatter-gathered per batch.
 //!
 //! The trait is deliberately *batched*: workers dedup a batch's keys first
 //! (§4.2.3 index compression applied at the source) and issue one get/put

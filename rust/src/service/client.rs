@@ -7,9 +7,19 @@
 //! gradient appliers putting); each connection carries one request at a
 //! time, guarded by a mutex, so responses always match their requests
 //! without relying on correlation-id reordering.
+//!
+//! Connections heal themselves: when a call fails, the pooled connection is
+//! dropped and re-dialed up to
+//! [`ServiceConfig::reconnect_attempts`](crate::config::ServiceConfig) times
+//! (constant backoff), re-running the INFO handshake and insisting the
+//! server's fingerprint is unchanged. That is what lets a PS shard process
+//! that was killed and restarted from its snapshot rejoin a training run
+//! mid-flight (§4.2.4, cross-process): the trainer's next get/put simply
+//! reconnects and proceeds.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
@@ -22,36 +32,71 @@ use super::backend::{PsBackend, PsStats};
 use super::protocol;
 use super::protocol::PsInfo;
 
-/// Remote embedding-PS backend over TCP.
+/// Remote embedding-PS backend over TCP (one server process).
 pub struct RemotePs {
+    addr: String,
     info: PsInfo,
     wire_compress: bool,
-    clients: Vec<Mutex<RpcClient<TcpTransport>>>,
+    reconnect_attempts: u32,
+    reconnect_backoff: Duration,
+    /// `None` marks a connection that died and awaits re-dialing.
+    clients: Vec<Mutex<Option<RpcClient<TcpTransport>>>>,
     next: AtomicUsize,
 }
 
 impl RemotePs {
-    /// Connect a pool to `cfg.addr` and handshake the PS geometry + config.
+    /// Connect a pool to the single address in `cfg` and handshake the PS
+    /// geometry + config. For a comma-separated shard list use
+    /// [`super::ShardedRemotePs`].
     pub fn connect(cfg: &ServiceConfig) -> Result<RemotePs> {
         cfg.validate()?;
+        let addrs = cfg.shard_addrs();
+        ensure!(
+            addrs.len() == 1,
+            "RemotePs takes exactly one address (got {:?}); use ShardedRemotePs \
+             for a shard list",
+            cfg.addr
+        );
+        Self::connect_addr(cfg, &addrs[0])
+    }
+
+    /// Connect a pool to one specific `addr`, taking every other knob
+    /// (pool size, compression, retry policy) from `cfg`.
+    pub(super) fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemotePs> {
         let mut clients = Vec::with_capacity(cfg.client_conns);
         for i in 0..cfg.client_conns {
-            let transport = TcpTransport::connect(&cfg.addr)
-                .with_context(|| format!("connecting PS pool conn {i} to {}", cfg.addr))?;
-            clients.push(Mutex::new(RpcClient::new(transport)));
+            let transport = TcpTransport::connect(addr)
+                .with_context(|| format!("connecting PS pool conn {i} to {addr}"))?;
+            clients.push(Mutex::new(Some(RpcClient::new(transport))));
         }
         let resp = {
-            let client = clients[0].lock().unwrap();
-            client.call(&protocol::encode_info_request()).context("PS INFO handshake")?
+            let slot = clients[0].lock().unwrap();
+            slot.as_ref()
+                .expect("fresh pool connection")
+                .call(&protocol::encode_info_request())
+                .context("PS INFO handshake")?
         };
         let info = protocol::decode_info_response(&resp)?;
         ensure!(info.dim > 0, "remote PS reports dim 0");
-        Ok(RemotePs { info, wire_compress: cfg.wire_compress, clients, next: AtomicUsize::new(0) })
+        Ok(RemotePs {
+            addr: addr.to_string(),
+            info,
+            wire_compress: cfg.wire_compress,
+            reconnect_attempts: cfg.reconnect_attempts,
+            reconnect_backoff: Duration::from_millis(cfg.reconnect_backoff_ms),
+            clients,
+            next: AtomicUsize::new(0),
+        })
     }
 
     /// The server's INFO handshake (geometry + config fingerprint).
     pub fn info(&self) -> &PsInfo {
         &self.info
+    }
+
+    /// The address this client dials (and re-dials).
+    pub fn addr(&self) -> &str {
+        &self.addr
     }
 
     /// PS node count reported by the server.
@@ -64,16 +109,131 @@ impl RemotePs {
         self.info.shards_per_node
     }
 
+    /// Global node indices owned by this server.
+    pub fn node_range(&self) -> std::ops::Range<usize> {
+        self.info.node_start..self.info.node_end
+    }
+
+    /// Dial a fresh connection and verify the server is (still) the PS we
+    /// originally handshook — a shard restarted with different flags must
+    /// not be allowed to silently rejoin with different numerics.
+    fn redial(&self) -> Result<RpcClient<TcpTransport>> {
+        let transport = TcpTransport::connect(&self.addr)
+            .with_context(|| format!("reconnecting to PS at {}", self.addr))?;
+        let client = RpcClient::new(transport);
+        let resp = client.call(&protocol::encode_info_request()).context("PS INFO re-handshake")?;
+        let info = protocol::decode_info_response(&resp)?;
+        ensure!(
+            info == self.info,
+            "PS at {} came back with a different config: {info:?} != {:?}",
+            self.addr,
+            self.info
+        );
+        Ok(client)
+    }
+
+    /// One RPC over the pool, transparently re-dialing a dead connection.
+    ///
+    /// Note on retries: GET/STATS/SNAPSHOT are idempotent. A retried PUT or
+    /// RESTORE whose first attempt died *after* the server applied it is
+    /// applied twice — the paper's §4.2.4 stance is that occasional gradient
+    /// anomalies during recovery are tolerated, and RESTORE is idempotent in
+    /// effect (same bytes, same state).
     fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
-        let client = self.clients[i].lock().unwrap();
-        client.call(msg)
+        let slot = &self.clients[i];
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.reconnect_attempts {
+            if attempt > 0 {
+                // Backoff with the slot lock RELEASED: during an outage every
+                // thread waiting on this slot sleeps in parallel instead of
+                // queueing behind one holder's full retry schedule. (Redial
+                // itself stays under the lock — connecting to a live server
+                // is fast, and a dead one refuses immediately on loopback.)
+                std::thread::sleep(self.reconnect_backoff);
+            }
+            let mut guard = slot.lock().unwrap();
+            if guard.is_none() {
+                match self.redial() {
+                    Ok(client) => *guard = Some(client),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match guard.as_ref().expect("connection present").call(msg) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // Connection is toast (peer died, frame torn): drop it so
+                    // the next attempt re-dials instead of reusing it.
+                    *guard = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "PS at {} unreachable after {} reconnect attempt(s)",
+                self.addr, self.reconnect_attempts
+            )
+        })
     }
 
     /// Ask the server to shut down gracefully (stop accepting, drain
     /// connections). The ack is received before the server exits its loop.
     pub fn shutdown_server(&self) -> Result<()> {
         self.call(&protocol::encode_shutdown_request()).context("PS shutdown request")?;
+        Ok(())
+    }
+
+    /// Batched GET of already-packed keys (the sharded client routes packed
+    /// keys, so this skips a pointless unpack/repack).
+    pub(super) fn get_packed(&self, packed: &[u64], out: &mut [f32]) -> Result<()> {
+        ensure!(out.len() == packed.len() * self.info.dim, "GET output shape mismatch");
+        if packed.is_empty() {
+            return Ok(());
+        }
+        let resp = self.call(&protocol::encode_get_request(packed, self.wire_compress))?;
+        protocol::decode_get_response_into(&resp, self.info.dim, out)?;
+        Ok(())
+    }
+
+    /// Batched gradient PUT of already-packed keys.
+    pub(super) fn put_packed(&self, packed: &[u64], grads: &[f32]) -> Result<()> {
+        ensure!(grads.len() == packed.len() * self.info.dim, "PUT gradient shape mismatch");
+        if packed.is_empty() {
+            return Ok(());
+        }
+        let msg = protocol::encode_put_request(packed, grads, self.info.dim, self.wire_compress);
+        let resp = self.call(&msg)?;
+        let applied = protocol::decode_put_response(&resp)?;
+        ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
+        Ok(())
+    }
+
+    /// STATS including the server's global-length per-node traffic vector.
+    pub(super) fn stats_full(&self) -> Result<(PsStats, Vec<u64>)> {
+        let resp = self.call(&protocol::encode_stats_request())?;
+        protocol::decode_stats_full(&resp)
+    }
+
+    /// Fetch the flat per-shard snapshots of one (server-owned, globally
+    /// indexed) node over the wire — §4.2.4 checkpointing, cross-process.
+    pub fn snapshot_node(&self, node: usize) -> Result<Vec<Vec<u8>>> {
+        let resp = self
+            .call(&protocol::encode_snapshot_request(node))
+            .with_context(|| format!("SNAPSHOT of node {node}"))?;
+        protocol::decode_snapshot_response(&resp)
+    }
+
+    /// Replace one node's shards from snapshots over the wire.
+    pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> Result<()> {
+        let resp = self
+            .call(&protocol::encode_restore_request(node, shards))
+            .with_context(|| format!("RESTORE of node {node}"))?;
+        let restored = protocol::decode_restore_response(&resp)?;
+        ensure!(restored == shards.len(), "PS restored {restored} of {} shards", shards.len());
         Ok(())
     }
 }
@@ -84,60 +244,32 @@ impl PsBackend for RemotePs {
     }
 
     fn check_compat(&self, cfg: &EmbeddingConfig, seed: u64) -> Result<()> {
-        let want = (
-            cfg.n_nodes,
-            cfg.shards_per_node,
-            seed,
-            cfg.shard_capacity,
-            protocol::optimizer_code(cfg.optimizer),
-            protocol::partition_code(cfg.partition),
-            cfg.lr.to_bits(),
-        );
-        let got = (
-            self.info.n_nodes,
-            self.info.shards_per_node,
-            self.info.seed,
-            self.info.shard_capacity,
-            self.info.optimizer_code,
-            self.info.partition_code,
-            self.info.lr_bits,
-        );
+        protocol::check_fingerprint(&self.info, cfg, seed)?;
+        // A single-server backend must own every node, or keys would route
+        // into ranges nobody serves.
         ensure!(
-            want == got,
-            "remote PS config mismatch: trainer expects \
-             (nodes, shards, seed, capacity, opt, partition, lr_bits) = {want:?}, \
-             server reports {got:?} — start serve-ps and train with the same \
-             --preset/--dense/--shard-capacity/--seed flags"
+            self.info.node_start == 0 && self.info.node_end == self.info.n_nodes,
+            "server at {} owns nodes {}..{} of {}; a partial shard needs \
+             ShardedRemotePs with the full shard list",
+            self.addr,
+            self.info.node_start,
+            self.info.node_end,
+            self.info.n_nodes
         );
         Ok(())
     }
 
     fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
-        ensure!(out.len() == keys.len() * self.info.dim, "GET output shape mismatch");
-        if keys.is_empty() {
-            return Ok(());
-        }
         let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
-        let resp = self.call(&protocol::encode_get_request(&packed, self.wire_compress))?;
-        protocol::decode_get_response_into(&resp, self.info.dim, out)?;
-        Ok(())
+        self.get_packed(&packed, out)
     }
 
     fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
-        ensure!(grads.len() == keys.len() * self.info.dim, "PUT gradient shape mismatch");
-        if keys.is_empty() {
-            return Ok(());
-        }
         let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
-        let msg = protocol::encode_put_request(&packed, grads, self.info.dim, self.wire_compress);
-        let resp = self.call(&msg)?;
-        let applied = protocol::decode_put_response(&resp)?;
-        ensure!(applied == keys.len(), "PS applied {applied} of {} rows", keys.len());
-        Ok(())
+        self.put_packed(&packed, grads)
     }
 
     fn stats(&self) -> Result<PsStats> {
-        let resp = self.call(&protocol::encode_stats_request())?;
-        protocol::decode_stats_response(&resp)
+        Ok(self.stats_full()?.0)
     }
 }

@@ -9,21 +9,29 @@
 //!   with the paper's index compression (deduplicated packed keys) and
 //!   optional lossy fp16 value compression.
 //! * [`server`] — [`PsServer`]: accept loop, per-connection dispatch
-//!   threads, graceful sleep-free shutdown.
+//!   threads, graceful sleep-free shutdown; serves a full PS or one
+//!   process's `--node-range` slice, including SNAPSHOT/RESTORE RPCs.
 //! * [`client`] — [`RemotePs`]: a mutex-guarded connection pool shared by
-//!   every trainer thread.
+//!   every trainer thread, with transparent reconnect-with-retry.
+//! * [`sharded`] — [`ShardedRemotePs`]: one backend over N shard processes,
+//!   routing with the servers' own global hash and scatter-gathering
+//!   batches concurrently.
 //!
-//! Entry points: `persia serve-ps` starts a server;
-//! `persia train --remote-ps <addr>` (or setting
+//! Entry points: `persia serve-ps [--node-range a..b]` starts a (slice of
+//! a) server; `persia train --remote-ps <addr>[,<addr>...]` (or setting
 //! [`crate::hybrid::Trainer::ps_backend`]) trains against it. The loopback
-//! integration test (`rust/tests/integration_service.rs`) proves the remote
-//! path is numerically identical to the in-process one.
+//! integration tests (`rust/tests/integration_service.rs`,
+//! `rust/tests/integration_sharded.rs`) prove the remote paths are
+//! numerically identical to the in-process PS and survive the §4.2.4
+//! kill/restore recovery drill.
 
 pub mod backend;
 pub mod client;
 pub mod protocol;
 pub mod server;
+pub mod sharded;
 
 pub use backend::{PsBackend, PsStats};
 pub use client::RemotePs;
 pub use server::{PsServer, PsServerHandle};
+pub use sharded::ShardedRemotePs;

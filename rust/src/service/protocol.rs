@@ -2,24 +2,35 @@
 //!
 //! Requests/responses are zero-copy wire messages (§4.2.3 — no protobuf):
 //!
-//! | kind       | request sections            | response sections            |
-//! |------------|-----------------------------|------------------------------|
-//! | `INFO`     | –                           | u64 `[dim, nodes, shards]`   |
-//! | `GET`      | u64 keys, u8 flags          | u8 flags, values             |
-//! | `PUT`      | u64 keys, u8 flags, values  | u64 `[rows applied]`         |
-//! | `STATS`    | –                           | u64 `[rows, evic, imb bits]` |
-//! | `SHUTDOWN` | –                           | – (ack)                      |
+//! | kind       | request sections              | response sections              |
+//! |------------|-------------------------------|--------------------------------|
+//! | `INFO`     | –                             | u64 fingerprint + node range   |
+//! | `GET`      | u64 keys, u8 flags            | u8 flags, values               |
+//! | `PUT`      | u64 keys, u8 flags, values    | u64 `[rows applied]`           |
+//! | `STATS`    | –                             | u64 `[rows, evic, imb bits]`, u64 per-node traffic |
+//! | `SHUTDOWN` | –                             | – (ack)                        |
+//! | `SNAPSHOT` | u64 `[node]`                  | u64 shard lens, u8 shard bytes |
+//! | `RESTORE`  | u64 `[node]`, u64 lens, u8 bytes | u64 `[shards restored]`     |
 //!
 //! Keys are `pack_key(group, id)` u64s, already deduplicated by the sender —
 //! the paper's lossless index compression. `values` is either one raw f32
 //! section (bit-exact) or, when the compress flag is set, an fp16 section
 //! plus per-row scales — the paper's lossy value compression
 //! ([`CompressedValues`]), halving wire bytes at ~2^-10 relative error.
+//!
+//! `SNAPSHOT`/`RESTORE` move whole-node LRU snapshots (flat byte blobs, one
+//! per shard) over the wire, so the §4.2.4 recovery drill — kill a PS
+//! process, restart it, restore its slice — works across process boundaries.
+//! The STATS per-node traffic vector is global-length (unowned nodes report
+//! 0), letting a sharded client sum vectors across shard processes and
+//! compute the *correct* global imbalance instead of averaging per-process
+//! ratios.
 
 use anyhow::{ensure, Result};
 
 use crate::comm::compress::CompressedValues;
 use crate::comm::wire::{WireReader, WireWriter};
+use crate::config::EmbeddingConfig;
 
 use super::backend::PsStats;
 
@@ -29,6 +40,8 @@ pub const KIND_GET: u32 = 0x5002;
 pub const KIND_PUT: u32 = 0x5003;
 pub const KIND_STATS: u32 = 0x5004;
 pub const KIND_SHUTDOWN: u32 = 0x5005;
+pub const KIND_SNAPSHOT: u32 = 0x5006;
+pub const KIND_RESTORE: u32 = 0x5007;
 
 /// Flag bit: value payload is fp16 + per-row scales.
 const FLAG_COMPRESS: u8 = 1;
@@ -73,6 +86,10 @@ pub struct PsInfo {
     pub partition_code: u64,
     /// Row-optimizer learning rate (f32 bits).
     pub lr_bits: u32,
+    /// First global node this server owns.
+    pub node_start: usize,
+    /// One past the last global node this server owns.
+    pub node_end: usize,
 }
 
 pub fn optimizer_code(kind: crate::config::OptimizerKind) -> u64 {
@@ -90,6 +107,50 @@ pub fn partition_code(policy: crate::config::PartitionPolicy) -> u64 {
     }
 }
 
+/// Inverse of [`partition_code`] (clients need the policy to route).
+pub fn partition_from_code(code: u64) -> Option<crate::config::PartitionPolicy> {
+    Some(match code {
+        0 => crate::config::PartitionPolicy::FeatureGroup,
+        1 => crate::config::PartitionPolicy::ShuffledUniform,
+        _ => return None,
+    })
+}
+
+/// Shared trainer-side check that a server's INFO fingerprint describes the
+/// PS this trainer's config would build. Used by both the single-address
+/// [`RemotePs`](super::RemotePs) and the multi-process
+/// [`ShardedRemotePs`](super::ShardedRemotePs), so client and servers cannot
+/// drift apart on what "compatible" means. Node-range fields are deployment
+/// topology, not numerics, and are deliberately not part of the fingerprint.
+pub fn check_fingerprint(info: &PsInfo, cfg: &EmbeddingConfig, seed: u64) -> Result<()> {
+    let want = (
+        cfg.n_nodes,
+        cfg.shards_per_node,
+        seed,
+        cfg.shard_capacity,
+        optimizer_code(cfg.optimizer),
+        partition_code(cfg.partition),
+        cfg.lr.to_bits(),
+    );
+    let got = (
+        info.n_nodes,
+        info.shards_per_node,
+        info.seed,
+        info.shard_capacity,
+        info.optimizer_code,
+        info.partition_code,
+        info.lr_bits,
+    );
+    ensure!(
+        want == got,
+        "remote PS config mismatch: trainer expects \
+         (nodes, shards, seed, capacity, opt, partition, lr_bits) = {want:?}, \
+         server reports {got:?} — start serve-ps and train with the same \
+         --preset/--dense/--shard-capacity/--seed flags"
+    );
+    Ok(())
+}
+
 pub fn encode_info_request() -> Vec<u8> {
     WireWriter::new(KIND_INFO).finish()
 }
@@ -105,6 +166,8 @@ pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
         info.optimizer_code,
         info.partition_code,
         info.lr_bits as u64,
+        info.node_start as u64,
+        info.node_end as u64,
     ]);
     w.finish()
 }
@@ -113,8 +176,8 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_INFO, "expected INFO response, got kind {}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 8, "malformed INFO response ({} fields)", xs.len());
-    Ok(PsInfo {
+    ensure!(xs.len() == 10, "malformed INFO response ({} fields)", xs.len());
+    let info = PsInfo {
         dim: xs[0] as usize,
         n_nodes: xs[1] as usize,
         shards_per_node: xs[2] as usize,
@@ -123,7 +186,17 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
         optimizer_code: xs[5],
         partition_code: xs[6],
         lr_bits: xs[7] as u32,
-    })
+        node_start: xs[8] as usize,
+        node_end: xs[9] as usize,
+    };
+    ensure!(
+        info.node_start < info.node_end && info.node_end <= info.n_nodes,
+        "INFO node range {}..{} invalid for {} nodes",
+        info.node_start,
+        info.node_end,
+        info.n_nodes
+    );
+    Ok(info)
 }
 
 // --- GET ---
@@ -244,22 +317,124 @@ pub fn encode_stats_request() -> Vec<u8> {
     WireWriter::new(KIND_STATS).finish()
 }
 
-pub fn encode_stats_response(stats: &PsStats) -> Vec<u8> {
+/// `node_traffic` is the server PS's global-length per-node traffic vector
+/// (zeros for nodes it doesn't own) — the mergeable raw data behind
+/// `stats.imbalance`.
+pub fn encode_stats_response(stats: &PsStats, node_traffic: &[u64]) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_STATS);
     w.put_u64(&[stats.total_rows as u64, stats.total_evictions, stats.imbalance.to_bits()]);
+    w.put_u64(node_traffic);
     w.finish()
 }
 
 pub fn decode_stats_response(msg: &[u8]) -> Result<PsStats> {
+    Ok(decode_stats_full(msg)?.0)
+}
+
+/// Decode a STATS response including the per-node traffic vector.
+pub fn decode_stats_full(msg: &[u8]) -> Result<(PsStats, Vec<u64>)> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_STATS, "expected STATS response, got kind {}", r.kind());
     let xs = r.u64(0)?;
     ensure!(xs.len() == 3, "malformed STATS response");
-    Ok(PsStats {
-        total_rows: xs[0] as usize,
-        total_evictions: xs[1],
-        imbalance: f64::from_bits(xs[2]),
-    })
+    let traffic = r.u64(1)?;
+    Ok((
+        PsStats {
+            total_rows: xs[0] as usize,
+            total_evictions: xs[1],
+            imbalance: f64::from_bits(xs[2]),
+        },
+        traffic,
+    ))
+}
+
+// --- SNAPSHOT / RESTORE ---
+//
+// Shard snapshots are opaque byte blobs ([`LruStore::to_bytes`] output), one
+// per lock-striped shard of the node. They ride as one concatenated u8
+// section plus a u64 length-per-shard section; the split is reconstructed on
+// the other side with an overflow-checked prefix sum.
+
+pub fn encode_snapshot_request(node: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_SNAPSHOT);
+    w.put_u64(&[node as u64]);
+    w.finish()
+}
+
+pub fn decode_snapshot_request(msg: &[u8]) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_SNAPSHOT, "expected SNAPSHOT, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed SNAPSHOT request");
+    Ok(xs[0] as usize)
+}
+
+fn put_shard_blobs(w: &mut WireWriter, shards: &[Vec<u8>]) {
+    let lens: Vec<u64> = shards.iter().map(|s| s.len() as u64).collect();
+    let mut bytes = Vec::with_capacity(lens.iter().sum::<u64>() as usize);
+    for s in shards {
+        bytes.extend_from_slice(s);
+    }
+    w.put_u64(&lens);
+    w.put_u8(&bytes);
+}
+
+fn read_shard_blobs(r: &WireReader, section: usize) -> Result<Vec<Vec<u8>>> {
+    let lens = r.u64(section)?;
+    let bytes = r.u8(section + 1)?;
+    let mut out = Vec::with_capacity(lens.len());
+    let mut off = 0usize;
+    for &len in &lens {
+        let len = usize::try_from(len).map_err(|_| anyhow::anyhow!("shard blob too large"))?;
+        let end = off.checked_add(len).ok_or_else(|| anyhow::anyhow!("shard lens overflow"))?;
+        ensure!(end <= bytes.len(), "shard lens exceed payload");
+        out.push(bytes[off..end].to_vec());
+        off = end;
+    }
+    ensure!(off == bytes.len(), "trailing bytes after shard blobs");
+    Ok(out)
+}
+
+pub fn encode_snapshot_response(shards: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_SNAPSHOT);
+    put_shard_blobs(&mut w, shards);
+    w.finish()
+}
+
+pub fn decode_snapshot_response(msg: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_SNAPSHOT, "expected SNAPSHOT response, got kind {}", r.kind());
+    read_shard_blobs(&r, 0)
+}
+
+pub fn encode_restore_request(node: usize, shards: &[Vec<u8>]) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_RESTORE);
+    w.put_u64(&[node as u64]);
+    put_shard_blobs(&mut w, shards);
+    w.finish()
+}
+
+/// Returns `(node, shard snapshots)`.
+pub fn decode_restore_request(msg: &[u8]) -> Result<(usize, Vec<Vec<u8>>)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_RESTORE, "expected RESTORE, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed RESTORE request");
+    Ok((xs[0] as usize, read_shard_blobs(&r, 1)?))
+}
+
+pub fn encode_restore_response(shards_restored: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_RESTORE);
+    w.put_u64(&[shards_restored as u64]);
+    w.finish()
+}
+
+pub fn decode_restore_response(msg: &[u8]) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_RESTORE, "expected RESTORE response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed RESTORE response");
+    Ok(xs[0] as usize)
 }
 
 // --- SHUTDOWN ---
@@ -329,6 +504,8 @@ mod tests {
             optimizer_code: optimizer_code(crate::config::OptimizerKind::Adagrad),
             partition_code: partition_code(crate::config::PartitionPolicy::ShuffledUniform),
             lr_bits: 0.1f32.to_bits(),
+            node_start: 1,
+            node_end: 3,
         }
     }
 
@@ -340,10 +517,76 @@ mod tests {
         assert_eq!(f32::from_bits(back.lr_bits), 0.1);
 
         let stats = PsStats { total_rows: 123, total_evictions: 7, imbalance: 1.25 };
-        let back = decode_stats_response(&encode_stats_response(&stats)).unwrap();
+        let traffic = vec![10u64, 0, 5, 0];
+        let msg = encode_stats_response(&stats, &traffic);
+        let back = decode_stats_response(&msg).unwrap();
         assert_eq!(back.total_rows, 123);
         assert_eq!(back.total_evictions, 7);
         assert!((back.imbalance - 1.25).abs() < 1e-12);
+        let (full, t2) = decode_stats_full(&msg).unwrap();
+        assert_eq!(full.total_rows, 123);
+        assert_eq!(t2, traffic);
+    }
+
+    #[test]
+    fn bad_info_node_range_rejected() {
+        let mut info = sample_info();
+        info.node_start = 3;
+        info.node_end = 3; // empty range
+        assert!(decode_info_response(&encode_info_response(&info)).is_err());
+        info.node_start = 0;
+        info.node_end = 5; // beyond n_nodes
+        assert!(decode_info_response(&encode_info_response(&info)).is_err());
+    }
+
+    #[test]
+    fn fingerprint_ignores_node_range() {
+        let cfg = crate::config::EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 4096,
+            n_nodes: 4,
+            shards_per_node: 2,
+            optimizer: crate::config::OptimizerKind::Adagrad,
+            partition: crate::config::PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let mut info = sample_info();
+        check_fingerprint(&info, &cfg, 42).unwrap();
+        // Topology (which slice a server owns) is not numerics.
+        info.node_start = 0;
+        info.node_end = 4;
+        check_fingerprint(&info, &cfg, 42).unwrap();
+        // Numerics mismatches fail.
+        assert!(check_fingerprint(&info, &cfg, 43).is_err());
+        info.shard_capacity = 1;
+        assert!(check_fingerprint(&info, &cfg, 42).is_err());
+    }
+
+    #[test]
+    fn partition_code_roundtrip() {
+        for p in [
+            crate::config::PartitionPolicy::FeatureGroup,
+            crate::config::PartitionPolicy::ShuffledUniform,
+        ] {
+            assert_eq!(partition_from_code(partition_code(p)), Some(p));
+        }
+        assert_eq!(partition_from_code(99), None);
+    }
+
+    #[test]
+    fn snapshot_restore_codec_roundtrip() {
+        let shards = vec![vec![1u8, 2, 3], vec![], vec![0xff; 70]];
+        assert_eq!(decode_snapshot_request(&encode_snapshot_request(3)).unwrap(), 3);
+        let back = decode_snapshot_response(&encode_snapshot_response(&shards)).unwrap();
+        assert_eq!(back, shards);
+        let (node, back) = decode_restore_request(&encode_restore_request(2, &shards)).unwrap();
+        assert_eq!(node, 2);
+        assert_eq!(back, shards);
+        assert_eq!(decode_restore_response(&encode_restore_response(4)).unwrap(), 4);
+        // Lens that overflow the payload are rejected.
+        let mut w = crate::comm::wire::WireWriter::new(KIND_SNAPSHOT);
+        w.put_u64(&[100]).put_u8(&[1, 2, 3]);
+        assert!(decode_snapshot_response(&w.finish()).is_err());
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! The embedding PS as a standalone TCP service.
 //!
-//! One [`PsServer`] wraps an [`EmbeddingPs`] and serves the
-//! [`super::protocol`] RPCs over length-prefixed TCP frames. Each accepted
+//! One [`PsServer`] wraps an [`EmbeddingPs`] — the full key space, or just
+//! the node range a multi-process deployment assigned to this process
+//! (`EmbeddingPs::new_range`, `persia serve-ps --node-range`) — and serves
+//! the [`super::protocol`] RPCs over length-prefixed TCP frames, including
+//! whole-node SNAPSHOT/RESTORE for the cross-process §4.2.4 recovery drill.
+//! Keys that route outside the owned range are rejected loudly. Each accepted
 //! connection gets its own OS thread running the shared [`RpcServer`]
 //! dispatch loop — the paper's PS nodes likewise dedicate threads per
 //! connection and rely on shard-level lock striping (not connection-level
@@ -59,6 +63,7 @@ impl PsServer {
         let stop = rpc.stop_flag();
 
         let dim = ps.dim();
+        let range = ps.node_range();
         let info = PsInfo {
             dim,
             n_nodes: ps.n_nodes(),
@@ -68,21 +73,27 @@ impl PsServer {
             optimizer_code: protocol::optimizer_code(cfg.optimizer),
             partition_code: protocol::partition_code(cfg.partition),
             lr_bits: cfg.lr.to_bits(),
+            node_start: range.start,
+            node_end: range.end,
         };
         rpc.register(
             protocol::KIND_INFO,
             Box::new(move |_msg| Ok(protocol::encode_info_response(&info))),
         );
+        // GET/PUT go through the packed-key entry points: each key is routed
+        // exactly once, and a key outside this server's node range fails the
+        // whole request loudly (all-or-nothing, before any row materializes)
+        // — a misrouted key means client and server disagree on the global
+        // hash, and silently serving it would create a row the rest of the
+        // deployment never sees.
         {
             let ps = ps.clone();
             rpc.register(
                 protocol::KIND_GET,
                 Box::new(move |msg| {
                     let (packed, compress) = protocol::decode_get_request(msg)?;
-                    let keys: Vec<(u32, u64)> =
-                        packed.iter().map(|&k| crate::embedding::ps::unpack_key(k)).collect();
-                    let mut rows = vec![0.0f32; keys.len() * dim];
-                    ps.get_many(&keys, &mut rows);
+                    let mut rows = vec![0.0f32; packed.len() * dim];
+                    ps.get_packed_into(&packed, &mut rows)?;
                     Ok(protocol::encode_get_response(&rows, dim, compress))
                 }),
             );
@@ -93,10 +104,8 @@ impl PsServer {
                 protocol::KIND_PUT,
                 Box::new(move |msg| {
                     let (packed, grads) = protocol::decode_put_request(msg, dim)?;
-                    let keys: Vec<(u32, u64)> =
-                        packed.iter().map(|&k| crate::embedding::ps::unpack_key(k)).collect();
-                    ps.put_grads(&keys, &grads);
-                    Ok(protocol::encode_put_response(keys.len()))
+                    ps.put_grads_packed(&packed, &grads)?;
+                    Ok(protocol::encode_put_response(packed.len()))
                 }),
             );
         }
@@ -105,7 +114,40 @@ impl PsServer {
             rpc.register(
                 protocol::KIND_STATS,
                 Box::new(move |_msg| {
-                    Ok(protocol::encode_stats_response(&PsBackend::stats(ps.as_ref())?))
+                    Ok(protocol::encode_stats_response(
+                        &PsBackend::stats(ps.as_ref())?,
+                        &ps.node_traffic(),
+                    ))
+                }),
+            );
+        }
+        {
+            let ps = ps.clone();
+            rpc.register(
+                protocol::KIND_SNAPSHOT,
+                Box::new(move |msg| {
+                    let node = protocol::decode_snapshot_request(msg)?;
+                    anyhow::ensure!(
+                        ps.node_range().contains(&node),
+                        "SNAPSHOT of node {node} outside this server's range {:?}",
+                        ps.node_range()
+                    );
+                    Ok(protocol::encode_snapshot_response(&ps.snapshot_node(node)))
+                }),
+            );
+        }
+        {
+            let ps = ps.clone();
+            rpc.register(
+                protocol::KIND_RESTORE,
+                Box::new(move |msg| {
+                    let (node, shards) = protocol::decode_restore_request(msg)?;
+                    // restore_node re-checks ownership and shard count, and
+                    // the hardened LruStore::from_bytes rejects corrupt blobs
+                    // without panicking — a bad RESTORE leaves state intact
+                    // up to the first failing shard.
+                    ps.restore_node(node, &shards)?;
+                    Ok(protocol::encode_restore_response(shards.len()))
                 }),
             );
         }

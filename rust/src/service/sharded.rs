@@ -1,0 +1,297 @@
+//! [`ShardedRemotePs`]: one [`PsBackend`] over N independent PS processes.
+//!
+//! The paper's capacity story (§4.2.2–§4.2.4) requires *many* embedding PS
+//! processes, each owning a slice of the key space via the global hash. This
+//! client takes the full list of shard addresses, routes every packed key
+//! with the **same** [`route`](crate::embedding::ps::route) function the
+//! servers use (factored out of `EmbeddingPs` precisely so both sides
+//! provably agree), and scatter-gathers batched get/put traffic:
+//!
+//! * each shard process gets its own [`RemotePs`] connection pool;
+//! * per-shard sub-batches are issued concurrently (scoped threads), so a
+//!   mini-batch costs one round-trip to the *slowest* shard, not the sum;
+//! * responses are reassembled into the caller's slot order, so workers are
+//!   oblivious to the sharding;
+//! * per-shard [`PsStats`] are merged from the raw per-node traffic vectors
+//!   (summed element-wise), which yields the *correct* global max/mean
+//!   imbalance — averaging per-process imbalance ratios would not.
+//!
+//! Connect-time validation: every shard must report the same config
+//! fingerprint, and the shards' node ranges must partition `0..n_nodes`
+//! exactly (full coverage, no overlap). A killed-and-restarted shard rejoins
+//! transparently via [`RemotePs`]'s reconnect-with-retry, and
+//! [`ShardedRemotePs::snapshot_node`]/[`ShardedRemotePs::restore_node`]
+//! drive the §4.2.4 recovery drill over the wire.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{EmbeddingConfig, PartitionPolicy, ServiceConfig};
+use crate::embedding::ps::{imbalance_of, pack_key, route};
+
+use super::backend::{PsBackend, PsStats};
+use super::client::RemotePs;
+use super::protocol;
+
+/// A sharded remote embedding PS: the union of N `serve-ps` processes.
+pub struct ShardedRemotePs {
+    shards: Vec<RemotePs>,
+    /// Global node index -> index into `shards`.
+    node_owner: Vec<usize>,
+    policy: PartitionPolicy,
+    dim: usize,
+    n_nodes: usize,
+    shards_per_node: usize,
+}
+
+impl ShardedRemotePs {
+    /// Connect to every address in `cfg.addr` (comma-separated) and verify
+    /// the processes jointly form one coherent PS.
+    pub fn connect(cfg: &ServiceConfig) -> Result<ShardedRemotePs> {
+        cfg.validate()?;
+        let addrs = cfg.shard_addrs();
+        let shards: Vec<RemotePs> = addrs
+            .iter()
+            .map(|addr| RemotePs::connect_addr(cfg, addr))
+            .collect::<Result<_>>()?;
+
+        // Every shard must describe the same global PS (same numerics
+        // fingerprint and geometry); only the owned node range may differ.
+        let first = *shards[0].info();
+        for s in &shards[1..] {
+            let info = s.info();
+            let strip = |i: &protocol::PsInfo| {
+                let mut i = *i;
+                i.node_start = 0;
+                i.node_end = i.n_nodes;
+                i
+            };
+            ensure!(
+                strip(info) == strip(&first),
+                "shard {} disagrees with shard {} on the PS config: {info:?} vs {first:?}",
+                s.addr(),
+                shards[0].addr()
+            );
+        }
+        let policy = protocol::partition_from_code(first.partition_code)
+            .ok_or_else(|| anyhow::anyhow!("unknown partition code {}", first.partition_code))?;
+
+        // The node ranges must partition 0..n_nodes exactly.
+        let mut node_owner = vec![usize::MAX; first.n_nodes];
+        for (si, s) in shards.iter().enumerate() {
+            for node in s.node_range() {
+                ensure!(
+                    node_owner[node] == usize::MAX,
+                    "node {node} owned by both {} and {}",
+                    shards[node_owner[node]].addr(),
+                    s.addr()
+                );
+                node_owner[node] = si;
+            }
+        }
+        if let Some(orphan) = node_owner.iter().position(|&o| o == usize::MAX) {
+            bail!(
+                "node {orphan} of {} is not served by any of the {} shard(s); \
+                 pass the complete --node-range partition",
+                first.n_nodes,
+                shards.len()
+            );
+        }
+
+        Ok(ShardedRemotePs {
+            shards,
+            node_owner,
+            policy,
+            dim: first.dim,
+            n_nodes: first.n_nodes,
+            shards_per_node: first.shards_per_node,
+        })
+    }
+
+    /// Number of shard processes behind this backend.
+    pub fn n_shard_processes(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard process client serving global `node`.
+    pub fn shard_for_node(&self, node: usize) -> &RemotePs {
+        &self.shards[self.node_owner[node]]
+    }
+
+    /// Global node count.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Lock-striped shards per node (uniform across the deployment).
+    pub fn shards_per_node(&self) -> usize {
+        self.shards_per_node
+    }
+
+    /// The shard-process index a packed key routes to.
+    #[inline]
+    fn owner_of(&self, packed: u64) -> usize {
+        let (node, _) = route(self.policy, self.n_nodes, self.shards_per_node, packed);
+        self.node_owner[node]
+    }
+
+    /// Split `packed` keys per owning shard process, remembering each key's
+    /// slot in the caller's batch so responses reassemble in order.
+    fn partition_keys(&self, packed: &[u64]) -> Vec<(Vec<usize>, Vec<u64>)> {
+        let mut per: Vec<(Vec<usize>, Vec<u64>)> =
+            (0..self.shards.len()).map(|_| (Vec::new(), Vec::new())).collect();
+        for (slot, &key) in packed.iter().enumerate() {
+            let s = self.owner_of(key);
+            per[s].0.push(slot);
+            per[s].1.push(key);
+        }
+        per
+    }
+
+    /// Run `f(shard_index)` for every shard listed in `active`, concurrently
+    /// when there is more than one. Returns results in `active` order.
+    fn scatter<T: Send, F>(&self, active: &[usize], f: F) -> Vec<Result<T>>
+    where
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if active.len() == 1 {
+            // Common fast path (single shard deployment / skewed batch):
+            // no thread spawn.
+            return vec![f(active[0])];
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = active.iter().map(|&si| scope.spawn(move || f(si))).collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(_) => Err(anyhow::anyhow!("shard request thread panicked")),
+                })
+                .collect()
+        })
+    }
+
+    /// Snapshot one global node via the shard process that owns it.
+    pub fn snapshot_node(&self, node: usize) -> Result<Vec<Vec<u8>>> {
+        ensure!(node < self.n_nodes, "node {node} out of range");
+        self.shard_for_node(node).snapshot_node(node)
+    }
+
+    /// Restore one global node via the shard process that owns it.
+    pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> Result<()> {
+        ensure!(node < self.n_nodes, "node {node} out of range");
+        self.shard_for_node(node).restore_node(node, shards)
+    }
+
+    /// Gracefully shut down every shard process (best-effort: all are
+    /// attempted, the first error is reported).
+    pub fn shutdown_all(&self) -> Result<()> {
+        let mut first_err = None;
+        for s in &self.shards {
+            if let Err(e) = s.shutdown_server() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+impl PsBackend for ShardedRemotePs {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn check_compat(&self, cfg: &EmbeddingConfig, seed: u64) -> Result<()> {
+        // All shards already proved mutually identical at connect time, so
+        // checking the first against the trainer covers the fleet. Coverage
+        // of 0..n_nodes was also proved at connect time.
+        protocol::check_fingerprint(self.shards[0].info(), cfg, seed)
+    }
+
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
+        ensure!(out.len() == keys.len() * self.dim, "GET output shape mismatch");
+        if keys.is_empty() {
+            return Ok(());
+        }
+        let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
+        let per = self.partition_keys(&packed);
+        let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
+        let dim = self.dim;
+        let results = self.scatter(&active, |si| {
+            let (_, shard_keys) = &per[si];
+            let mut rows = vec![0.0f32; shard_keys.len() * dim];
+            self.shards[si]
+                .get_packed(shard_keys, &mut rows)
+                .with_context(|| format!("GET from shard {}", self.shards[si].addr()))?;
+            Ok(rows)
+        });
+        // Reassemble into the caller's slot order.
+        for (&si, rows) in active.iter().zip(results) {
+            let rows = rows?;
+            for (i, &slot) in per[si].0.iter().enumerate() {
+                out[slot * dim..(slot + 1) * dim].copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+            }
+        }
+        Ok(())
+    }
+
+    fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
+        ensure!(grads.len() == keys.len() * self.dim, "PUT gradient shape mismatch");
+        if keys.is_empty() {
+            return Ok(());
+        }
+        let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
+        let per = self.partition_keys(&packed);
+        let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
+        let dim = self.dim;
+        // Gather each shard's gradient rows contiguously before sending
+        // (indexed by shard process; inactive shards stay empty).
+        let payloads: Vec<Vec<f32>> = per
+            .iter()
+            .map(|(slots, _)| {
+                let mut rows = Vec::with_capacity(slots.len() * dim);
+                for &slot in slots {
+                    rows.extend_from_slice(&grads[slot * dim..(slot + 1) * dim]);
+                }
+                rows
+            })
+            .collect();
+        let results = self.scatter(&active, |si| {
+            self.shards[si]
+                .put_packed(&per[si].1, &payloads[si])
+                .with_context(|| format!("PUT to shard {}", self.shards[si].addr()))
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> Result<PsStats> {
+        let all: Vec<usize> = (0..self.shards.len()).collect();
+        let results = self.scatter(&all, |si| self.shards[si].stats_full());
+        let mut total_rows = 0usize;
+        let mut total_evictions = 0u64;
+        let mut traffic = vec![0u64; self.n_nodes];
+        for r in results {
+            let (stats, node_traffic) = r?;
+            total_rows += stats.total_rows;
+            total_evictions += stats.total_evictions;
+            ensure!(
+                node_traffic.len() == self.n_nodes,
+                "shard reported {} traffic entries, want {}",
+                node_traffic.len(),
+                self.n_nodes
+            );
+            for (acc, t) in traffic.iter_mut().zip(&node_traffic) {
+                *acc += t;
+            }
+        }
+        // Global imbalance from the summed per-node traffic — the same
+        // shared formula the in-process EmbeddingPs uses.
+        Ok(PsStats { total_rows, total_evictions, imbalance: imbalance_of(&traffic) })
+    }
+}

@@ -201,15 +201,25 @@ impl EmbeddingWorker {
         };
 
         let d = self.dim_per_group;
+        // Take the batch out of the buffer all-or-nothing: if any sid is
+        // missing, the entries already removed go straight back, so a
+        // partially-resolvable batch stays retryable instead of losing the
+        // samples that happened to precede the missing one.
         let feats: Vec<IdFeatures> = {
             let mut buf = self.buffer.lock().unwrap();
-            sample_ids
-                .iter()
-                .map(|sid| {
-                    buf.remove(sid)
-                        .with_context(|| format!("sample {sid:#x} not buffered for backward"))
-                })
-                .collect::<Result<_>>()?
+            let mut taken: Vec<IdFeatures> = Vec::with_capacity(sample_ids.len());
+            for sid in sample_ids {
+                match buf.remove(sid) {
+                    Some(f) => taken.push(f),
+                    None => {
+                        for (&s, f) in sample_ids.iter().zip(taken.drain(..)) {
+                            buf.insert(s, f);
+                        }
+                        anyhow::bail!("sample {sid:#x} not buffered for backward");
+                    }
+                }
+            }
+            taken
         };
 
         // Aggregate gradients per unique key (first-occurrence order, same
@@ -241,9 +251,32 @@ impl EmbeddingWorker {
                 }
             }
         }
-        self.ps.put_grads(&keys, &acc).context("embedding PS put")?;
+        // A failed remote put must not lose the batch: the samples were
+        // already removed from the buffer above, so put them back before
+        // surfacing the error. The caller (or the trainer's gradient
+        // applier) can then retry the exact same push — without this, one
+        // dropped TCP connection permanently discarded the samples and the
+        // batch became unretryable.
+        if let Err(e) = self.ps.put_grads(&keys, &acc) {
+            let mut buf = self.buffer.lock().unwrap();
+            for (&sid, f) in sample_ids.iter().zip(feats) {
+                buf.insert(sid, f);
+            }
+            return Err(e).context("embedding PS put (samples re-buffered for retry)");
+        }
         sim += self.net.record(Link::CpuCpu, keys.len() * d * 4);
         Ok(sim)
+    }
+
+    /// Drop specific buffered samples (a gradient applier that has given up
+    /// on a batch calls this so the entries `push_grads` re-buffered for
+    /// retry don't accumulate forever — §4.2.4 tolerates the lost update,
+    /// but the buffer must stay bounded).
+    pub fn discard(&self, sample_ids: &[SampleId]) {
+        let mut buf = self.buffer.lock().unwrap();
+        for sid in sample_ids {
+            buf.remove(sid);
+        }
     }
 
     /// Buffered (in-flight) samples.
@@ -374,6 +407,80 @@ mod tests {
         // Two occurrences, SGD lr 0.5, grad 1 each => one put of grad 2.
         for (b, a) in before.iter().zip(&after) {
             assert!((b - 1.0 - a).abs() < 1e-6, "{b} vs {a}");
+        }
+    }
+
+    #[test]
+    fn failed_put_rebuffers_samples_so_push_can_be_retried() {
+        use crate::service::{PsBackend, PsStats};
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        /// A PS whose puts can be switched to fail — a dropped TCP
+        /// connection, in miniature.
+        struct FlakyPs {
+            inner: Arc<EmbeddingPs>,
+            fail_puts: AtomicBool,
+        }
+        impl PsBackend for FlakyPs {
+            fn dim(&self) -> usize {
+                PsBackend::dim(self.inner.as_ref())
+            }
+            fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> anyhow::Result<()> {
+                self.inner.get_many(keys, out);
+                Ok(())
+            }
+            fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> anyhow::Result<()> {
+                anyhow::ensure!(!self.fail_puts.load(Ordering::SeqCst), "injected put failure");
+                self.inner.put_grads(keys, grads);
+                Ok(())
+            }
+            fn stats(&self) -> anyhow::Result<PsStats> {
+                PsBackend::stats(self.inner.as_ref())
+            }
+        }
+
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 3,
+            pooling: Pooling::Sum,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 256,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        let inner = Arc::new(EmbeddingPs::new(&cfg, 4, 1));
+        let flaky =
+            Arc::new(FlakyPs { inner: inner.clone(), fail_puts: AtomicBool::new(true) });
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let w = EmbeddingWorker::new(0, flaky.clone(), &model, net, false);
+
+        let sids = w.register(vec![feats(&[42], &[43])]);
+        let mut before = vec![0.0f32; 4];
+        inner.get(0, 42, &mut before);
+        let grad = vec![1.0f32; 8];
+
+        // Failing put: error surfaces AND the samples are back in the
+        // buffer (they used to be gone for good).
+        assert!(w.push_grads(&sids, &grad).is_err());
+        assert_eq!(w.buffered(), 1, "failed put must re-buffer its samples");
+
+        // The PS heals; the identical retry succeeds and applies once.
+        flaky.fail_puts.store(false, Ordering::SeqCst);
+        w.push_grads(&sids, &grad).unwrap();
+        assert_eq!(w.buffered(), 0);
+        let mut after = vec![0.0f32; 4];
+        inner.get(0, 42, &mut after);
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - 0.5 - a).abs() < 1e-6, "exactly one SGD step expected");
         }
     }
 

@@ -68,7 +68,12 @@ fn spawn_ps_for(t: &Trainer) -> (PsServerHandle, String) {
 }
 
 fn connect(addr: &str, wire_compress: bool) -> Arc<RemotePs> {
-    let cfg = ServiceConfig { addr: addr.to_string(), client_conns: 2, wire_compress };
+    let cfg = ServiceConfig {
+        addr: addr.to_string(),
+        client_conns: 2,
+        wire_compress,
+        ..ServiceConfig::default()
+    };
     Arc::new(RemotePs::connect(&cfg).unwrap())
 }
 
@@ -192,7 +197,7 @@ fn shutdown_is_graceful_and_final() {
     handle.shutdown().unwrap();
 
     // The drained server no longer accepts connections.
-    let cfg = ServiceConfig { addr, client_conns: 1, wire_compress: false };
+    let cfg = ServiceConfig { addr, client_conns: 1, ..ServiceConfig::default() };
     assert!(RemotePs::connect(&cfg).is_err(), "server still accepting after shutdown");
 }
 

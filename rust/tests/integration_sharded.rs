@@ -1,0 +1,538 @@
+//! Multi-process sharded PS integration: N [`PsServer`]s each owning a
+//! `--node-range` slice, driven through one [`ShardedRemotePs`] backend.
+//!
+//! Covers the ISSUE-2 acceptance drill end to end:
+//! * a 3-shard loopback run matches the in-process PS within 1e-6 AUC/loss;
+//! * killing one shard, restarting it, and restoring it from its snapshot
+//!   lets training finish with all rows intact (both with in-process server
+//!   instances and with real `persia serve-ps` child processes);
+//! * merged stats (rows/evictions/imbalance) equal the in-process PS's;
+//! * malformed deployments (overlap, gaps, config drift) are rejected at
+//!   connect time.
+
+use std::sync::Arc;
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, ServiceConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::Trainer;
+use persia::service::{PsBackend, PsServer, PsServerHandle, ShardedRemotePs};
+
+/// 4 PS nodes so they can be split across 3 shard processes (2 + 1 + 1).
+const RANGES: [std::ops::Range<usize>; 3] = [0..2, 2..3, 3..4];
+
+fn base_trainer(mode: TrainMode, steps: usize, nn_workers: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 500,
+        shard_capacity: 4096,
+        n_nodes: 4,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster = ClusterConfig {
+        n_nn_workers: nn_workers,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode,
+        batch_size: 32,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: 31,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset = SyntheticDataset::new(&model, 500, 1.05, 31);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.eval_rows = 1024;
+    t
+}
+
+/// One in-process shard server owning `range`, on an ephemeral port (or a
+/// specific `addr` when restarting on a known port — retried briefly, since
+/// rebinding a just-released port can race the old socket's teardown).
+fn spawn_shard(t: &Trainer, range: std::ops::Range<usize>, addr: &str) -> (PsServerHandle, String) {
+    let mut last_err = None;
+    for _ in 0..40 {
+        let ps = Arc::new(EmbeddingPs::new_range(
+            &t.emb_cfg,
+            t.model.emb_dim_per_group,
+            t.train.seed,
+            range.clone(),
+        ));
+        match PsServer::bind(ps, addr, &t.emb_cfg, t.train.seed) {
+            Ok(server) => {
+                let addr = server.local_addr().unwrap().to_string();
+                return (server.spawn().unwrap(), addr);
+            }
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    }
+    panic!("could not bind shard server on {addr}: {:#}", last_err.unwrap());
+}
+
+fn spawn_three_shards(t: &Trainer) -> (Vec<PsServerHandle>, Vec<String>) {
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for range in RANGES {
+        let (h, a) = spawn_shard(t, range, "127.0.0.1:0");
+        handles.push(h);
+        addrs.push(a);
+    }
+    (handles, addrs)
+}
+
+fn connect_sharded(addrs: &[String], reconnect_attempts: u32) -> Arc<ShardedRemotePs> {
+    let cfg = ServiceConfig {
+        addr: addrs.join(","),
+        client_conns: 2,
+        wire_compress: false,
+        reconnect_attempts,
+        reconnect_backoff_ms: 50,
+    };
+    Arc::new(ShardedRemotePs::connect(&cfg).unwrap())
+}
+
+/// The tentpole acceptance: a 3-shard-process loopback run is numerically
+/// identical (≤ 1e-6 on AUC and every loss) to the in-process PS.
+#[test]
+fn three_shard_training_matches_in_process_within_1e6() {
+    for mode in [TrainMode::Hybrid, TrainMode::FullSync] {
+        let steps = 60;
+        let mut local_t = base_trainer(mode, steps, 1);
+        local_t.deterministic = true;
+        let local = local_t.run_rust().unwrap();
+
+        let mut remote_t = base_trainer(mode, steps, 1);
+        remote_t.deterministic = true;
+        let (handles, addrs) = spawn_three_shards(&remote_t);
+        let backend = connect_sharded(&addrs, 1);
+        assert_eq!(backend.n_shard_processes(), 3);
+        remote_t.ps_backend = Some(backend.clone());
+        let remote = remote_t.run_rust().unwrap();
+
+        let auc_local = local.report.final_auc.unwrap();
+        let auc_remote = remote.report.final_auc.unwrap();
+        assert!(
+            (auc_local - auc_remote).abs() <= 1e-6,
+            "{mode:?}: AUC {auc_local} (local) vs {auc_remote} (3-shard)"
+        );
+        assert_eq!(local.tracker.losses.len(), remote.tracker.losses.len());
+        for ((sa, la), (sb, lb)) in local.tracker.losses.iter().zip(&remote.tracker.losses) {
+            assert_eq!(sa, sb);
+            assert!((la - lb).abs() <= 1e-6, "{mode:?} step {sa}: loss {la} vs {lb}");
+        }
+        // The run meaningfully trained.
+        let early: f32 = local.tracker.losses[..10].iter().map(|(_, l)| l).sum::<f32>() / 10.0;
+        assert!(local.tracker.recent_loss(10).unwrap() < early, "{mode:?} did not learn");
+
+        drop(remote_t);
+        drop(backend);
+        for h in handles {
+            h.shutdown().unwrap();
+        }
+    }
+}
+
+/// Concurrent paths (async appliers, 2 NN workers) drive the scatter-gather
+/// client without deadlock or data mixups.
+#[test]
+fn concurrent_training_over_three_shards() {
+    let steps = 50;
+    let mut t = base_trainer(TrainMode::Hybrid, steps, 2);
+    t.train.eval_every = 0;
+    let (handles, addrs) = spawn_three_shards(&t);
+    let backend = connect_sharded(&addrs, 1);
+    t.ps_backend = Some(backend.clone());
+    let out = t.run_rust().unwrap();
+    assert_eq!(out.report.steps, steps as u64);
+    let early: f32 = out.tracker.losses[..10].iter().map(|(_, l)| l).sum::<f32>() / 10.0;
+    assert!(out.tracker.recent_loss(10).unwrap() < early, "loss did not drop over 3 shards");
+    assert_eq!(out.report.grad_put_failures, 0, "puts failed against healthy shards");
+    drop(t);
+    drop(backend);
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+/// Merged stats equal the in-process PS fed the exact same traffic — row and
+/// eviction counts sum, and the imbalance is computed over the *summed*
+/// per-node traffic, not averaged per process.
+#[test]
+fn sharded_stats_merge_to_in_process_values() {
+    let t = base_trainer(TrainMode::FullSync, 1, 1);
+    let mirror = EmbeddingPs::new(&t.emb_cfg, t.model.emb_dim_per_group, t.train.seed);
+    let (handles, addrs) = spawn_three_shards(&t);
+    let backend = connect_sharded(&addrs, 1);
+
+    let keys: Vec<(u32, u64)> = (0..300).map(|i| (i as u32 % 2, (i * 13) as u64)).collect();
+    let mut rows = vec![0.0f32; keys.len() * 8];
+    backend.get_many(&keys, &mut rows).unwrap();
+    let mut mirror_rows = vec![0.0f32; keys.len() * 8];
+    mirror.get_many(&keys, &mut mirror_rows);
+    assert_eq!(rows, mirror_rows, "3-shard rows differ from in-process rows");
+    backend.put_grads(&keys, &vec![0.5; keys.len() * 8]).unwrap();
+    mirror.put_grads(&keys, &vec![0.5; keys.len() * 8]);
+
+    let merged = backend.stats().unwrap();
+    assert_eq!(merged.total_rows, mirror.total_rows());
+    assert_eq!(merged.total_evictions, mirror.total_evictions());
+    assert!(
+        (merged.imbalance - mirror.imbalance()).abs() < 1e-12,
+        "merged imbalance {} != in-process {}",
+        merged.imbalance,
+        mirror.imbalance()
+    );
+
+    drop(backend);
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+/// The §4.2.4 recovery drill, cross-process: snapshot a shard's nodes over
+/// the wire, kill the shard, restart it empty on the same port, restore it
+/// from the snapshot, and finish training — all rows intact and the final
+/// numbers identical to an uninterrupted in-process run.
+#[test]
+fn kill_one_shard_restore_from_snapshot_training_continues() {
+    let phase = 30;
+
+    // Uninterrupted reference: two training phases against one PS.
+    let local_ps = {
+        let t = base_trainer(TrainMode::Hybrid, phase, 1);
+        Arc::new(EmbeddingPs::new(&t.emb_cfg, t.model.emb_dim_per_group, t.train.seed))
+    };
+    let run_local = || {
+        let mut t = base_trainer(TrainMode::Hybrid, phase, 1);
+        t.deterministic = true;
+        t.ps_backend = Some(local_ps.clone());
+        t.run_rust().unwrap()
+    };
+    let _local1 = run_local();
+    let rows_after_phase1 = local_ps.total_rows();
+    let local2 = run_local();
+
+    // Sharded run, phase 1.
+    let template = base_trainer(TrainMode::Hybrid, phase, 1);
+    let (mut handles, addrs) = spawn_three_shards(&template);
+    // Generous retry budget: phase 2 must ride out the restarted shard.
+    let backend = connect_sharded(&addrs, 20);
+    let mut t1 = base_trainer(TrainMode::Hybrid, phase, 1);
+    t1.deterministic = true;
+    t1.ps_backend = Some(backend.clone());
+    t1.run_rust().unwrap();
+    assert_eq!(
+        backend.stats().unwrap().total_rows,
+        rows_after_phase1,
+        "sharded phase-1 state diverged from reference"
+    );
+
+    // Snapshot the victim shard's node over the wire, then kill the shard.
+    let victim_node = 2; // RANGES[1] owns exactly node 2
+    let snap = backend.snapshot_node(victim_node).unwrap();
+    assert_eq!(snap.len(), template.emb_cfg.shards_per_node);
+    handles.remove(1).shutdown().unwrap();
+
+    // Restart it on the same port — fresh process, empty state — and
+    // restore its node from the snapshot (client reconnects transparently).
+    let (new_handle, new_addr) = spawn_shard(&template, RANGES[1].clone(), &addrs[1]);
+    assert_eq!(new_addr, addrs[1]);
+    handles.insert(1, new_handle);
+    backend.restore_node(victim_node, &snap).unwrap();
+    assert_eq!(
+        backend.stats().unwrap().total_rows,
+        rows_after_phase1,
+        "rows lost across kill/restore"
+    );
+
+    // Phase 2 trains to the exact same numbers as the uninterrupted run.
+    let mut t2 = base_trainer(TrainMode::Hybrid, phase, 1);
+    t2.deterministic = true;
+    t2.ps_backend = Some(backend.clone());
+    let remote2 = t2.run_rust().unwrap();
+    let auc_local = local2.report.final_auc.unwrap();
+    let auc_remote = remote2.report.final_auc.unwrap();
+    assert!(
+        (auc_local - auc_remote).abs() <= 1e-6,
+        "post-recovery AUC {auc_remote} != uninterrupted {auc_local}"
+    );
+    for ((sa, la), (sb, lb)) in local2.tracker.losses.iter().zip(&remote2.tracker.losses) {
+        assert_eq!(sa, sb);
+        assert!((la - lb).abs() <= 1e-6, "step {sa}: loss {la} vs {lb} after recovery");
+    }
+
+    drop(t1);
+    drop(t2);
+    drop(backend);
+    for h in handles {
+        h.shutdown().unwrap();
+    }
+}
+
+/// Deployment mistakes fail loudly at connect time: node-range overlap,
+/// uncovered nodes, and config drift between shard processes.
+#[test]
+fn malformed_shard_deployments_rejected_at_connect() {
+    let t = base_trainer(TrainMode::Hybrid, 1, 1);
+    let connect_err = |addrs: &[String]| {
+        let cfg = ServiceConfig {
+            addr: addrs.join(","),
+            client_conns: 1,
+            wire_compress: false,
+            reconnect_attempts: 0,
+            reconnect_backoff_ms: 1,
+        };
+        match ShardedRemotePs::connect(&cfg) {
+            Ok(_) => panic!("malformed deployment {addrs:?} accepted"),
+            Err(e) => format!("{e:#}"),
+        }
+    };
+
+    // Overlap: two full-range servers.
+    let (h1, a1) = spawn_shard(&t, 0..4, "127.0.0.1:0");
+    let (h2, a2) = spawn_shard(&t, 0..4, "127.0.0.1:0");
+    let err = connect_err(&[a1.clone(), a2]);
+    assert!(err.contains("owned by both"), "wrong overlap error: {err}");
+    h2.shutdown().unwrap();
+
+    // Gap: a partial shard alone leaves nodes unserved.
+    let (h3, a3) = spawn_shard(&t, 0..2, "127.0.0.1:0");
+    let err = connect_err(&[a3.clone()]);
+    assert!(err.contains("not served by any"), "wrong gap error: {err}");
+
+    // Drift: same topology, different seed => different numerics.
+    let mut t_drift = base_trainer(TrainMode::Hybrid, 1, 1);
+    t_drift.train.seed += 1;
+    let (h4, a4) = spawn_shard(&t_drift, 2..4, "127.0.0.1:0");
+    let err = connect_err(&[a3, a4]);
+    assert!(err.contains("disagrees"), "wrong drift error: {err}");
+
+    h1.shutdown().unwrap();
+    h3.shutdown().unwrap();
+    h4.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// True multi-process drill: real `persia serve-ps` child processes.
+// ---------------------------------------------------------------------------
+
+mod multiprocess {
+    use super::*;
+    use persia::config::BenchPreset;
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+    use std::time::Duration;
+
+    const PRESET: &str = "taobao";
+    const DENSE: &str = "tiny";
+    const CAPACITY: &str = "2048";
+    const SEED: u64 = 42;
+
+    /// A serve-ps child plus the concrete address it reported.
+    struct ShardProc {
+        child: Child,
+        addr: String,
+    }
+
+    impl Drop for ShardProc {
+        fn drop(&mut self) {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+
+    /// Spawn `persia serve-ps` and wait for its "listening on ADDR" line.
+    /// Retries the spawn: restarting on a just-released port can race the
+    /// old socket's teardown.
+    fn spawn_ps_process(addr: &str, node_range: &str) -> ShardProc {
+        let exe = env!("CARGO_BIN_EXE_persia");
+        for attempt in 0..20u64 {
+            let mut child = Command::new(exe)
+                .args([
+                    "serve-ps",
+                    "--preset",
+                    PRESET,
+                    "--dense",
+                    DENSE,
+                    "--shard-capacity",
+                    CAPACITY,
+                    "--seed",
+                    &SEED.to_string(),
+                    "--addr",
+                    addr,
+                    "--node-range",
+                    node_range,
+                ])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .expect("spawn persia serve-ps");
+            let stdout = child.stdout.take().expect("child stdout piped");
+            let mut reader = std::io::BufReader::new(stdout);
+            let mut listening = None;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break, // EOF: child died (port race?)
+                    Ok(_) => {
+                        if let Some(rest) = line.strip_prefix("listening on ") {
+                            let a = rest.split_whitespace().next().unwrap_or("").to_string();
+                            if !a.is_empty() {
+                                listening = Some(a);
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+            match listening {
+                Some(a) => return ShardProc { child, addr: a },
+                None => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    std::thread::sleep(Duration::from_millis(100 + 50 * attempt));
+                }
+            }
+        }
+        panic!("persia serve-ps would not start on {addr} ({node_range})");
+    }
+
+    /// A trainer built from the *same preset pipeline* `serve-ps` uses, so
+    /// the config fingerprints provably agree with the child processes.
+    fn preset_trainer(steps: usize) -> Trainer {
+        let preset = BenchPreset::by_name(PRESET).unwrap();
+        let model = preset.model(DENSE);
+        let emb_cfg = preset.embedding(&model, CAPACITY.parse().unwrap());
+        let rows = preset.embedding(&model, 1).rows_per_group;
+        let cluster = ClusterConfig {
+            n_nn_workers: 1,
+            n_emb_workers: 2,
+            net: NetModelConfig::disabled(),
+        };
+        let train = TrainConfig {
+            mode: TrainMode::Hybrid,
+            batch_size: 32,
+            lr: 0.05,
+            staleness_bound: 4,
+            steps,
+            eval_every: steps,
+            seed: SEED,
+            use_pjrt: false,
+            compress: false,
+        };
+        let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED);
+        let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+        t.eval_rows = 512;
+        t.deterministic = true;
+        t
+    }
+
+    /// The acceptance drill against *real processes*: 3 `serve-ps` children,
+    /// parity with in-process, kill one child mid-sequence, restart it from
+    /// nothing, restore its node slice from a wire snapshot, finish.
+    #[test]
+    fn three_process_drill_with_kill_and_restore() {
+        let phase = 20;
+
+        // Reference: two uninterrupted phases in-process.
+        let t0 = preset_trainer(phase);
+        let local_ps =
+            Arc::new(EmbeddingPs::new(&t0.emb_cfg, t0.model.emb_dim_per_group, t0.train.seed));
+        let run_local = || {
+            let mut t = preset_trainer(phase);
+            t.ps_backend = Some(local_ps.clone());
+            t.run_rust().unwrap()
+        };
+        let _local1 = run_local();
+        let rows_after_phase1 = local_ps.total_rows();
+        let local2 = run_local();
+
+        // 3 real shard processes over the preset's 4 nodes.
+        let mut procs = vec![
+            spawn_ps_process("127.0.0.1:0", "0..2"),
+            spawn_ps_process("127.0.0.1:0", "2..3"),
+            spawn_ps_process("127.0.0.1:0", "3..4"),
+        ];
+        let addrs: Vec<String> = procs.iter().map(|p| p.addr.clone()).collect();
+        let cfg = ServiceConfig {
+            addr: addrs.join(","),
+            client_conns: 2,
+            wire_compress: false,
+            reconnect_attempts: 30,
+            reconnect_backoff_ms: 100,
+        };
+        let backend = Arc::new(ShardedRemotePs::connect(&cfg).unwrap());
+
+        // Phase 1 against the processes.
+        let mut t1 = preset_trainer(phase);
+        t1.ps_backend = Some(backend.clone());
+        t1.run_rust().unwrap();
+        assert_eq!(
+            backend.stats().unwrap().total_rows,
+            rows_after_phase1,
+            "process-sharded phase 1 diverged from in-process reference"
+        );
+
+        // Snapshot node 2 over the wire, then SIGKILL its owner process.
+        let snap = backend.snapshot_node(2).unwrap();
+        let dead_addr = procs[1].addr.clone();
+        procs[1].child.kill().expect("kill shard process");
+        let _ = procs[1].child.wait();
+
+        // Restart the same slice on the same port, then restore its node.
+        procs[1] = spawn_ps_process(&dead_addr, "2..3");
+        assert_eq!(procs[1].addr, dead_addr, "restarted shard moved ports");
+        backend.restore_node(2, &snap).unwrap();
+        assert_eq!(
+            backend.stats().unwrap().total_rows,
+            rows_after_phase1,
+            "rows lost across process kill/restore"
+        );
+
+        // Phase 2 finishes and matches the uninterrupted reference exactly.
+        let mut t2 = preset_trainer(phase);
+        t2.ps_backend = Some(backend.clone());
+        let remote2 = t2.run_rust().unwrap();
+        let auc_local = local2.report.final_auc.unwrap();
+        let auc_remote = remote2.report.final_auc.unwrap();
+        assert!(
+            (auc_local - auc_remote).abs() <= 1e-6,
+            "post-recovery AUC {auc_remote} != uninterrupted {auc_local}"
+        );
+        for ((sa, la), (sb, lb)) in local2.tracker.losses.iter().zip(&remote2.tracker.losses) {
+            assert_eq!(sa, sb);
+            assert!((la - lb).abs() <= 1e-6, "step {sa}: loss {la} vs {lb}");
+        }
+
+        // Graceful teardown; Drop kills any survivor regardless.
+        drop(t1);
+        drop(t2);
+        backend.shutdown_all().unwrap();
+        for p in &mut procs {
+            let _ = p.child.wait();
+        }
+    }
+}
