@@ -2,14 +2,20 @@
 //! among NN workers").
 //!
 //! Persia delegates this to Bagua; offline we implement the same primitives:
-//! tensor bucketing + memory flattening ([`bucket`]), ring AllReduce
-//! ([`ring`]), and a naive central-PS reduce baseline ([`central`]) for the
-//! ablation bench.
+//! tensor bucketing + memory flattening ([`bucket`]), ring AllReduce across
+//! in-process threads ([`ring`]) and across real OS processes over TCP
+//! ([`tcp_ring`], with a rank-0 rendezvous and config-fingerprint
+//! handshake), and a naive central-PS reduce baseline ([`central`]) for the
+//! ablation bench. The thread and TCP rings share one schedule
+//! ([`ring::chunk_range`]) and are bit-identical; [`ring::reference_sum`]
+//! replays that deterministic reduction order serially.
 
 pub mod bucket;
 pub mod central;
 pub mod ring;
+pub mod tcp_ring;
 
 pub use bucket::FlatBuckets;
 pub use central::central_reduce;
 pub use ring::RingGroup;
+pub use tcp_ring::{RingRendezvous, TcpRingMember};

@@ -11,6 +11,60 @@ use std::sync::Arc;
 
 use crate::comm::netsim::{Link, NetSim};
 
+/// The element range of chunk `c` when `n` elements are split into `k`
+/// near-equal chunks (the first `n % k` chunks get one extra element).
+///
+/// Shared by the in-process [`RingMember`], the TCP
+/// [`TcpRingMember`](super::tcp_ring::TcpRingMember), and
+/// [`reference_sum`], so every ring implementation provably runs the same
+/// schedule — which is what makes them bit-identical to each other.
+pub fn chunk_range(n: usize, k: usize, c: usize) -> std::ops::Range<usize> {
+    let base = n / k;
+    let rem = n % k;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    start..start + len
+}
+
+/// Serial replay of the ring's deterministic reduction order: chunk `c` is
+/// accumulated left-associated in ring order starting at rank `c`
+/// (`((x_c + x_{c+1}) + x_{c+2}) + ...`, wrapping mod `k`) — exactly the
+/// association the reduce-scatter phase produces. Every ring member (thread
+/// or TCP, any rank) returns this value bit-for-bit when summing.
+pub fn reference_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let k = inputs.len();
+    assert!(k >= 1);
+    let n = inputs[0].len();
+    let mut out = inputs[0].clone();
+    if k == 1 {
+        return out;
+    }
+    for c in 0..k {
+        let r = chunk_range(n, k, c);
+        out[r.clone()].copy_from_slice(&inputs[c][r.clone()]);
+        for hop in 1..k {
+            let j = (c + hop) % k;
+            assert_eq!(inputs[j].len(), n, "ragged ring inputs");
+            for (a, &b) in out[r.clone()].iter_mut().zip(&inputs[j][r.clone()]) {
+                // Mirrors `buf[own] += incoming` at each hop; IEEE addition
+                // is commutative, so the bits match either way.
+                *a = b + *a;
+            }
+        }
+    }
+    out
+}
+
+/// [`reference_sum`] followed by the same `* (1/k)` the members apply.
+pub fn reference_mean(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = reference_sum(inputs);
+    let inv = 1.0 / inputs.len() as f32;
+    for x in out.iter_mut() {
+        *x *= inv;
+    }
+    out
+}
+
 /// One participant's handle into a ring group.
 pub struct RingMember {
     rank: usize,
@@ -62,6 +116,36 @@ impl RingMember {
         self.k
     }
 
+    /// Pass the ordering token to the successor rank. Tokens ride the same
+    /// FIFO links as AllReduce chunks (as a zero-length payload), so a
+    /// strictly phased caller — everyone alternates token sections and
+    /// AllReduces in the same program order — never confuses the two.
+    pub fn send_token(&self) -> anyhow::Result<()> {
+        if self.k == 1 {
+            return Ok(());
+        }
+        self.tx
+            .send(Vec::new())
+            .map_err(|_| anyhow::anyhow!("ring successor disconnected"))
+    }
+
+    /// Receive the ordering token from the predecessor rank.
+    pub fn recv_token(&self) -> anyhow::Result<()> {
+        if self.k == 1 {
+            return Ok(());
+        }
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("ring predecessor disconnected"))?;
+        anyhow::ensure!(
+            frame.is_empty(),
+            "ring desynchronized: expected an ordering token, got a {}-element chunk",
+            frame.len()
+        );
+        Ok(())
+    }
+
     /// In-place AllReduce (mean) over all members' `buf` (equal lengths).
     /// Returns the simulated communication seconds spent by this member.
     pub fn all_reduce_mean(&self, buf: &mut [f32]) -> f64 {
@@ -80,13 +164,7 @@ impl RingMember {
             return 0.0;
         }
         let n = buf.len();
-        let chunk = |c: usize| -> std::ops::Range<usize> {
-            let base = n / k;
-            let rem = n % k;
-            let start = c * base + c.min(rem);
-            let len = base + usize::from(c < rem);
-            start..start + len
-        };
+        let chunk = |c: usize| chunk_range(n, k, c);
         let mut sim_secs = 0.0;
 
         // Phase 1: reduce-scatter. After step s, each member owns the full
@@ -189,6 +267,71 @@ mod tests {
         let secs = members[0].all_reduce_mean(&mut buf);
         assert_eq!(buf, vec![1.0, 2.0, 3.0]);
         assert_eq!(secs, 0.0);
+    }
+
+    #[test]
+    fn reference_replays_ring_reduction_bit_exactly() {
+        for k in [1usize, 2, 3, 5, 8] {
+            for n in [1usize, 4, 63, 200] {
+                let seed = (k * 31 + n) as u64;
+                let (outputs, _) = run_ring(k, n, seed);
+                // Regenerate the exact inputs run_ring fed the members.
+                let mut rng = Rng::new(seed);
+                let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n)).collect();
+                let want = reference_mean(&inputs);
+                for out in &outputs {
+                    assert_eq!(out, &want, "k={k} n={n}: ring != reference replay");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for k in 1..9usize {
+            for n in [0usize, 1, 3, 8, 17, 100] {
+                let mut covered = 0;
+                for c in 0..k {
+                    let r = chunk_range(n, k, c);
+                    assert_eq!(r.start, covered, "k={k} n={n} c={c}");
+                    covered = r.end;
+                }
+                assert_eq!(covered, n, "k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn token_cycle_orders_ranks() {
+        // Tokens serialize a critical section in rank order: rank 0 runs,
+        // passes the token, each rank appends, and rank 0 absorbs the
+        // fully-cycled token — the deterministic-mode PS ordering.
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let k = 4;
+        let members = RingGroup::new(k, net);
+        let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|m| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    for _round in 0..3 {
+                        if m.rank() > 0 {
+                            m.recv_token().unwrap();
+                        }
+                        log.lock().unwrap().push(m.rank());
+                        m.send_token().unwrap();
+                        if m.rank() == 0 {
+                            m.recv_token().unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3]);
     }
 
     #[test]

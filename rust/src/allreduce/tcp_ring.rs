@@ -1,0 +1,992 @@
+//! Ring AllReduce over real TCP sockets — the multi-process deployment of
+//! §4.2.3's "Optimized communication among NN workers".
+//!
+//! Each NN-worker **process** holds one [`TcpRingMember`]: a socket to its
+//! successor rank and one from its predecessor, wired up by a tiny
+//! rendezvous ([`RingRendezvous`]): rank 0 listens, every other rank dials
+//! it, presents `(rank, world, config fingerprint)` — the same policy as
+//! the PS INFO handshake — and receives the full ring address table back.
+//! A world-size or fingerprint mismatch is rejected at connect time (both
+//! sides fail loudly) instead of desynchronizing mid-step.
+//!
+//! The AllReduce itself runs the *identical* two-phase schedule as the
+//! in-process [`RingMember`](super::ring::RingMember) — same
+//! [`chunk_range`] splits, same `own += incoming` accumulation — so with
+//! compression off the TCP ring is bit-for-bit equal to the threaded ring
+//! (and to [`reference_sum`](super::ring::reference_sum)). Chunks travel as
+//! [`crate::comm::wire`] frames — one contiguous f32 (or fp16 + scale,
+//! `compress: true`) section each, one length-prefixed write per bucket —
+//! streamed as bounded `SEG_ELEMS` segments with send/receive
+//! interleaved, so arbitrarily large gradients can never wedge two peers
+//! in simultaneous blocking writes; per-layer gradients flatten into the
+//! contiguous buffer via [`FlatBuckets`](super::bucket::FlatBuckets)
+//! ([`TcpRingMember::all_reduce_mean_tensors`]).
+//!
+//! Every frame carries a sequence number, and receives are bounded by the
+//! configured timeout, so a killed peer or a schedule desync surfaces as a
+//! clean error within the timeout — never a hang. [`NetSim`] is charged the
+//! GpuGpu bytes *actually sent* (frame length, compressed or not).
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::compress::CompressedValues;
+use crate::comm::netsim::{Link, NetSim};
+use crate::comm::transport::{TcpTransport, Transport};
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::config::RingConfig;
+use crate::tensor::Tensor;
+
+use super::bucket::FlatBuckets;
+use super::ring::chunk_range;
+
+/// Wire message kinds of the NN-worker ring (disjoint from the PS service's
+/// 0x5xxx range).
+pub const KIND_RDZV_HELLO: u32 = 0x6001;
+pub const KIND_RDZV_WELCOME: u32 = 0x6002;
+pub const KIND_RDZV_REJECT: u32 = 0x6003;
+pub const KIND_RING_HELLO: u32 = 0x6004;
+pub const KIND_RING_DATA: u32 = 0x6005;
+pub const KIND_RING_TOKEN: u32 = 0x6006;
+
+/// Largest f32 payload per DATA frame (16 KiB). Every rank alternates
+/// "send one segment, receive one segment", and a pending 16 KiB write
+/// always fits the peer's socket buffers — so two peers blocking in
+/// `write_all` on each other (the classic big-tensor TCP deadlock, which
+/// the unbounded in-process channels can never hit) is impossible no
+/// matter how large the gradient is.
+const SEG_ELEMS: usize = 4096;
+
+fn remaining(deadline: Instant) -> Duration {
+    deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(1))
+}
+
+fn encode_hello(kind: u32, rank: usize, world: usize, fingerprint: u64, addr: &str) -> Vec<u8> {
+    let mut w = WireWriter::new(kind);
+    w.put_u64(&[rank as u64, world as u64, fingerprint]);
+    w.put_u8(addr.as_bytes());
+    w.finish()
+}
+
+/// Returns `(rank, world, fingerprint, ring address)`.
+fn decode_hello(msg: &[u8], want_kind: u32) -> Result<(usize, usize, u64, String)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == want_kind, "expected hello kind {want_kind:#x}, got {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 3, "malformed ring hello ({} fields)", xs.len());
+    let addr = String::from_utf8(r.u8(1)?.to_vec()).context("ring hello address")?;
+    Ok((xs[0] as usize, xs[1] as usize, xs[2], addr))
+}
+
+fn encode_reject(reason: &str) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_RDZV_REJECT);
+    w.put_u8(reason.as_bytes());
+    w.finish()
+}
+
+fn encode_welcome(table: &[String]) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_RDZV_WELCOME);
+    w.put_u8(table.join(",").as_bytes());
+    w.finish()
+}
+
+/// Prepare the accepted/dialed socket for the rendezvous phase.
+fn configure(stream: &TcpStream, deadline: Instant) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(remaining(deadline)))?;
+    stream.set_write_timeout(Some(remaining(deadline)))?;
+    Ok(())
+}
+
+/// Dial `addr`, retrying until `deadline` (the target may not be bound yet).
+fn dial_retry(addr: &str, deadline: Instant, what: &str) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("dialing {what} at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Accept one connection before `deadline` from a listener (made
+/// non-blocking so the wait is bounded).
+fn accept_deadline(listener: &TcpListener, deadline: Instant, what: &str) -> Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => return Ok(stream),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("timed out waiting for {what}");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
+        }
+    }
+}
+
+/// A bound-but-not-yet-connected ring endpoint. Binding is split from
+/// connecting so rank 0 can print its (possibly ephemeral) rendezvous
+/// address for orchestrators *before* blocking on peers.
+pub struct RingRendezvous {
+    cfg: RingConfig,
+    ring_listener: TcpListener,
+    ring_addr: String,
+    /// Rank 0 only.
+    rdzv_listener: Option<TcpListener>,
+}
+
+impl RingRendezvous {
+    /// Bind this rank's ring-inbound listener (ephemeral port on
+    /// `cfg.bind_host`) and, on rank 0, the rendezvous listener.
+    pub fn bind(cfg: &RingConfig) -> Result<RingRendezvous> {
+        cfg.validate()?;
+        let ring_listener = TcpListener::bind((cfg.bind_host.as_str(), 0))
+            .with_context(|| format!("binding ring listener on {}", cfg.bind_host))?;
+        let ring_addr = ring_listener.local_addr()?.to_string();
+        let rdzv_listener = if cfg.rank == 0 && cfg.world > 1 {
+            Some(
+                TcpListener::bind(&cfg.rendezvous)
+                    .with_context(|| format!("binding rendezvous on {}", cfg.rendezvous))?,
+            )
+        } else {
+            None
+        };
+        Ok(RingRendezvous { cfg: cfg.clone(), ring_listener, ring_addr, rdzv_listener })
+    }
+
+    /// The rendezvous address peers must dial (rank 0 only; resolves an
+    /// ephemeral port 0 to the concrete one).
+    pub fn rendezvous_addr(&self) -> Result<SocketAddr> {
+        match &self.rdzv_listener {
+            Some(l) => Ok(l.local_addr()?),
+            None => bail!("only rank 0 of a world > 1 ring owns the rendezvous listener"),
+        }
+    }
+
+    /// Run the rendezvous + ring handshake and return the connected member.
+    /// `fingerprint` must summarize every config knob that changes the run's
+    /// numerics; peers whose fingerprint (or world size) differs are
+    /// rejected here, on both sides of the connection.
+    pub fn connect(mut self, fingerprint: u64, net: Arc<NetSim>) -> Result<TcpRingMember> {
+        let cfg = self.cfg.clone();
+        if cfg.world == 1 {
+            return Ok(TcpRingMember {
+                rank: 0,
+                world: 1,
+                send: None,
+                recv: None,
+                net,
+                compress: cfg.compress,
+                seq_out: 0,
+                seq_in: 0,
+            });
+        }
+        let deadline = Instant::now() + Duration::from_millis(cfg.timeout_ms);
+        let table = match self.rdzv_listener.take() {
+            Some(listener) => collect_peers(listener, &cfg, fingerprint, &self.ring_addr, deadline),
+            None => join_rendezvous(&cfg, fingerprint, &self.ring_addr, deadline),
+        }?;
+
+        // Dial the successor first (its listener is already bound), then
+        // accept the predecessor; both sides validate a RING_HELLO so a
+        // mis-wired table cannot silently cross-connect rings.
+        let succ = (cfg.rank + 1) % cfg.world;
+        let pred = (cfg.rank + cfg.world - 1) % cfg.world;
+        let send_stream = dial_retry(&table[succ], deadline, "ring successor")?;
+        configure(&send_stream, deadline)?;
+        let send = TcpTransport::new(send_stream);
+        send.send(encode_hello(KIND_RING_HELLO, cfg.rank, cfg.world, fingerprint, &self.ring_addr))
+            .context("sending ring hello to successor")?;
+
+        let recv_stream = accept_deadline(&self.ring_listener, deadline, "ring predecessor")?;
+        configure(&recv_stream, deadline)?;
+        let recv = TcpTransport::new(recv_stream);
+        let hello = recv.recv().context("waiting for ring predecessor hello")?;
+        let (p_rank, p_world, p_fp, _) = decode_hello(&hello, KIND_RING_HELLO)?;
+        ensure!(
+            p_rank == pred && p_world == cfg.world && p_fp == fingerprint,
+            "ring handshake mismatch: predecessor claims rank {p_rank}/{p_world} \
+             fingerprint {p_fp:#x}, expected rank {pred}/{} fingerprint {fingerprint:#x}",
+            cfg.world
+        );
+
+        // Switch both links to the steady-state per-receive timeout so a
+        // peer dying mid-run surfaces as an error within `timeout_ms`.
+        let op = Duration::from_millis(cfg.timeout_ms);
+        send.set_timeouts(Some(op))?;
+        recv.set_timeouts(Some(op))?;
+
+        Ok(TcpRingMember {
+            rank: cfg.rank,
+            world: cfg.world,
+            send: Some(send),
+            recv: Some(recv),
+            net,
+            compress: cfg.compress,
+            seq_out: 0,
+            seq_in: 0,
+        })
+    }
+}
+
+/// Rank 0: collect one HELLO per peer rank, reject mismatches (telling the
+/// peer why), then broadcast the ring address table.
+fn collect_peers(
+    listener: TcpListener,
+    cfg: &RingConfig,
+    fingerprint: u64,
+    my_ring_addr: &str,
+    deadline: Instant,
+) -> Result<Vec<String>> {
+    listener.set_nonblocking(true)?;
+    // Slot r-1 holds peer rank r's (connection, ring address).
+    let mut peers: Vec<Option<(TcpTransport, String)>> = Vec::new();
+    peers.resize_with(cfg.world - 1, || None);
+    let mut got = 0usize;
+    while got < cfg.world - 1 {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "rendezvous timed out: {got} of {} peers joined within {}ms",
+                        cfg.world - 1,
+                        cfg.timeout_ms
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(e) => return Err(e).context("rendezvous accept"),
+        };
+        configure(&stream, deadline)?;
+        // Peers send their HELLO immediately after dialing, so cap this
+        // connection's read wait well below the full deadline: a stray
+        // dialer that connects and goes silent (a port probe holding the
+        // socket open) then costs at most the grace period instead of
+        // starving the single-threaded rendezvous for its whole budget.
+        let grace = remaining(deadline).min(Duration::from_secs(2));
+        stream.set_read_timeout(Some(grace)).ok();
+        let t = TcpTransport::new(stream);
+        let hello = match t.recv().and_then(|msg| decode_hello(&msg, KIND_RDZV_HELLO)) {
+            Ok(h) => h,
+            // A stray dialer (port scan, orchestrator probe) must not kill
+            // the rendezvous; drop the connection and keep listening.
+            Err(_) => continue,
+        };
+        let (rank, world, fp, addr) = hello;
+        let reject = |t: &TcpTransport, reason: String| -> Result<Vec<String>> {
+            let _ = t.send(encode_reject(&reason));
+            bail!("rendezvous rejected a worker: {reason}");
+        };
+        if world != cfg.world {
+            return reject(
+                &t,
+                format!("world size mismatch: worker says {world}, rank 0 expects {}", cfg.world),
+            );
+        }
+        if fp != fingerprint {
+            return reject(
+                &t,
+                format!(
+                    "config fingerprint mismatch: worker {fp:#x} != rank 0 {fingerprint:#x} — \
+                     start every train-worker with the same flags"
+                ),
+            );
+        }
+        if rank == 0 || rank >= cfg.world {
+            return reject(&t, format!("rank {rank} out of range for world {}", cfg.world));
+        }
+        if peers[rank - 1].is_some() {
+            return reject(&t, format!("duplicate rank {rank} joined the rendezvous"));
+        }
+        peers[rank - 1] = Some((t, addr));
+        got += 1;
+    }
+    let mut table = Vec::with_capacity(cfg.world);
+    table.push(my_ring_addr.to_string());
+    for slot in &peers {
+        table.push(slot.as_ref().expect("all peers collected").1.clone());
+    }
+    let welcome = encode_welcome(&table);
+    for slot in &peers {
+        slot.as_ref()
+            .expect("all peers collected")
+            .0
+            .send(welcome.clone())
+            .context("sending rendezvous welcome")?;
+    }
+    Ok(table)
+}
+
+/// Ranks 1..world: dial rank 0, present the handshake, receive the table.
+fn join_rendezvous(
+    cfg: &RingConfig,
+    fingerprint: u64,
+    my_ring_addr: &str,
+    deadline: Instant,
+) -> Result<Vec<String>> {
+    let stream = dial_retry(&cfg.rendezvous, deadline, "rendezvous (rank 0)")?;
+    configure(&stream, deadline)?;
+    let t = TcpTransport::new(stream);
+    t.send(encode_hello(KIND_RDZV_HELLO, cfg.rank, cfg.world, fingerprint, my_ring_addr))
+        .context("sending rendezvous hello")?;
+    let resp = t.recv().context("waiting for rendezvous welcome")?;
+    let r = WireReader::parse(&resp)?;
+    match r.kind() {
+        KIND_RDZV_WELCOME => {
+            let table: Vec<String> = String::from_utf8(r.u8(0)?.to_vec())
+                .context("rendezvous table")?
+                .split(',')
+                .map(|s| s.to_string())
+                .collect();
+            ensure!(
+                table.len() == cfg.world,
+                "rendezvous table has {} entries for world {}",
+                table.len(),
+                cfg.world
+            );
+            ensure!(
+                table[cfg.rank] == my_ring_addr,
+                "rendezvous table slot {} is {}, not this worker's {}",
+                cfg.rank,
+                table[cfg.rank],
+                my_ring_addr
+            );
+            Ok(table)
+        }
+        KIND_RDZV_REJECT => {
+            let reason = String::from_utf8_lossy(r.u8(0)?).to_string();
+            bail!("rendezvous rejected this worker: {reason}")
+        }
+        k => bail!("unexpected rendezvous response kind {k:#x}"),
+    }
+}
+
+/// One process's member of a TCP ring AllReduce group.
+pub struct TcpRingMember {
+    rank: usize,
+    world: usize,
+    /// To the successor rank (`None` iff world == 1).
+    send: Option<TcpTransport>,
+    /// From the predecessor rank (`None` iff world == 1).
+    recv: Option<TcpTransport>,
+    net: Arc<NetSim>,
+    compress: bool,
+    /// Frames sent/received, matched against the peer's counters on every
+    /// frame so a schedule desync errors instead of corrupting gradients.
+    seq_out: u64,
+    seq_in: u64,
+}
+
+impl TcpRingMember {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send_link(&self) -> &TcpTransport {
+        self.send.as_ref().expect("ring links exist for world > 1")
+    }
+
+    fn recv_link(&self) -> &TcpTransport {
+        self.recv.as_ref().expect("ring links exist for world > 1")
+    }
+
+    /// Encode + send one chunk as a single wire frame; charges [`NetSim`]
+    /// the bytes actually written. Returns the simulated transfer seconds.
+    fn send_chunk(&mut self, chunk: &[f32]) -> Result<f64> {
+        let mut w = WireWriter::new(KIND_RING_DATA);
+        w.put_u64(&[self.seq_out]);
+        if self.compress && !chunk.is_empty() {
+            let c = CompressedValues::compress(chunk, chunk.len());
+            w.put_f16(&c.vals);
+            w.put_f32(&c.scales);
+        } else {
+            w.put_f32(chunk);
+        }
+        let msg = w.finish();
+        let sim = self.net.record(Link::GpuGpu, msg.len());
+        self.seq_out += 1;
+        self.send_link().send(msg).context("ring send to successor")?;
+        Ok(sim)
+    }
+
+    /// Receive one chunk (self-describing raw-f32 or fp16+scale payload) and
+    /// validate its sequence number and length.
+    fn recv_chunk(&mut self, want_len: usize) -> Result<Vec<f32>> {
+        let msg = self.recv_link().recv().context(
+            "ring recv from predecessor (peer dead, or slower than the ring timeout)",
+        )?;
+        let r = WireReader::parse(&msg)?;
+        ensure!(
+            r.kind() == KIND_RING_DATA,
+            "ring desynchronized: expected a DATA frame, got kind {:#x}",
+            r.kind()
+        );
+        let seq = r.u64(0)?;
+        ensure!(
+            seq.len() == 1 && seq[0] == self.seq_in,
+            "ring desynchronized: frame seq {seq:?}, expected {}",
+            self.seq_in
+        );
+        self.seq_in += 1;
+        let vals: Vec<f32> = match r.f32(1) {
+            Ok(raw) => raw,
+            Err(_) => {
+                let vals = r.f16(1)?;
+                let scales = r.f32(2)?;
+                let dim = if vals.is_empty() {
+                    1
+                } else {
+                    ensure!(!scales.is_empty(), "corrupt compressed ring frame: no scales");
+                    vals.len() / scales.len()
+                };
+                ensure!(
+                    scales.len() * dim == vals.len(),
+                    "corrupt compressed ring frame: {} values / {} scales",
+                    vals.len(),
+                    scales.len()
+                );
+                CompressedValues { vals, scales, dim }.decompress()
+            }
+        };
+        ensure!(
+            vals.len() == want_len,
+            "ring desynchronized: chunk of {} elements, expected {want_len}",
+            vals.len()
+        );
+        Ok(vals)
+    }
+
+    /// One ring step: stream chunk `send_c` to the successor while
+    /// receiving chunk `recv_c` from the predecessor, segment by segment
+    /// (both sides compute the identical segmentation from the chunk
+    /// lengths, so the frames pair up FIFO per link). `reduce` accumulates
+    /// the incoming data (`+=`, reduce-scatter); otherwise it overwrites
+    /// (all-gather).
+    fn ring_step(
+        &mut self,
+        buf: &mut [f32],
+        send_c: std::ops::Range<usize>,
+        recv_c: std::ops::Range<usize>,
+        reduce: bool,
+    ) -> Result<f64> {
+        let mut sim = 0.0;
+        let send_len = send_c.len();
+        let recv_len = recv_c.len();
+        let segs = |len: usize| (len + SEG_ELEMS - 1) / SEG_ELEMS;
+        for i in 0..segs(send_len).max(segs(recv_len)) {
+            if i * SEG_ELEMS < send_len {
+                let lo = send_c.start + i * SEG_ELEMS;
+                let hi = (lo + SEG_ELEMS).min(send_c.end);
+                sim += self.send_chunk(&buf[lo..hi])?;
+            }
+            if i * SEG_ELEMS < recv_len {
+                let lo = recv_c.start + i * SEG_ELEMS;
+                let hi = (lo + SEG_ELEMS).min(recv_c.end);
+                let incoming = self.recv_chunk(hi - lo)?;
+                if reduce {
+                    for (a, &b) in buf[lo..hi].iter_mut().zip(&incoming) {
+                        *a += b;
+                    }
+                } else {
+                    buf[lo..hi].copy_from_slice(&incoming);
+                }
+            }
+        }
+        Ok(sim)
+    }
+
+    /// In-place AllReduce (sum) across all ranks' `buf` (equal lengths).
+    /// Identical schedule and accumulation order as the in-process
+    /// [`RingMember`](super::ring::RingMember). Returns simulated seconds.
+    pub fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<f64> {
+        let k = self.world;
+        if k == 1 {
+            return Ok(0.0);
+        }
+        let n = buf.len();
+        let mut sim = 0.0;
+        // Phase 1: reduce-scatter.
+        for s in 0..k - 1 {
+            let send_c = (self.rank + k - s) % k;
+            let recv_c = (self.rank + k - s - 1) % k;
+            sim += self.ring_step(
+                buf,
+                chunk_range(n, k, send_c),
+                chunk_range(n, k, recv_c),
+                true,
+            )?;
+        }
+        // Phase 2: all-gather.
+        for s in 0..k - 1 {
+            let send_c = (self.rank + 1 + k - s) % k;
+            let recv_c = (self.rank + k - s) % k;
+            sim += self.ring_step(
+                buf,
+                chunk_range(n, k, send_c),
+                chunk_range(n, k, recv_c),
+                false,
+            )?;
+        }
+        Ok(sim)
+    }
+
+    /// In-place AllReduce (mean). Returns simulated seconds.
+    pub fn all_reduce_mean(&mut self, buf: &mut [f32]) -> Result<f64> {
+        let sim = self.all_reduce_sum(buf)?;
+        let inv = 1.0 / self.world as f32;
+        for x in buf.iter_mut() {
+            *x *= inv;
+        }
+        Ok(sim)
+    }
+
+    /// AllReduce-mean a list of per-layer tensors by flattening them into
+    /// one contiguous buffer ([`FlatBuckets`]) first — Bagua's bucketed
+    /// send path: large fused chunks on the wire instead of one message per
+    /// small tensor.
+    pub fn all_reduce_mean_tensors(
+        &mut self,
+        tensors: &mut [Tensor],
+        bucket_elems: usize,
+    ) -> Result<f64> {
+        let mut fb = FlatBuckets::flatten(tensors, bucket_elems);
+        let sim = self.all_reduce_mean(fb.flat_mut())?;
+        fb.unflatten_into(tensors);
+        Ok(sim)
+    }
+
+    /// Pass the deterministic-ordering token to the successor rank.
+    pub fn send_token(&mut self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let mut w = WireWriter::new(KIND_RING_TOKEN);
+        w.put_u64(&[self.seq_out]);
+        self.seq_out += 1;
+        self.send_link().send(w.finish()).context("ring token send")
+    }
+
+    /// Receive the deterministic-ordering token from the predecessor rank.
+    pub fn recv_token(&mut self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let msg = self.recv_link().recv().context("ring token recv")?;
+        let r = WireReader::parse(&msg)?;
+        ensure!(
+            r.kind() == KIND_RING_TOKEN,
+            "ring desynchronized: expected an ordering token, got kind {:#x}",
+            r.kind()
+        );
+        let seq = r.u64(0)?;
+        ensure!(
+            seq.len() == 1 && seq[0] == self.seq_in,
+            "ring desynchronized: token seq {seq:?}, expected {}",
+            self.seq_in
+        );
+        self.seq_in += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::ring::{reference_mean, RingGroup};
+    use crate::config::NetModelConfig;
+    use crate::util::Rng;
+
+    fn cfg(rank: usize, world: usize, rendezvous: &str, compress: bool) -> RingConfig {
+        RingConfig {
+            rendezvous: rendezvous.to_string(),
+            rank,
+            world,
+            bind_host: "127.0.0.1".to_string(),
+            timeout_ms: 10_000,
+            compress,
+        }
+    }
+
+    /// Wire up a full ring on loopback, every member charging `net`;
+    /// returns one member per rank.
+    fn connect_ring_on(
+        world: usize,
+        compress: bool,
+        fingerprint: u64,
+        net: Arc<NetSim>,
+    ) -> Vec<TcpRingMember> {
+        let rz0 = RingRendezvous::bind(&cfg(0, world, "127.0.0.1:0", compress)).unwrap();
+        let addr = if world > 1 {
+            rz0.rendezvous_addr().unwrap().to_string()
+        } else {
+            "127.0.0.1:0".to_string()
+        };
+        let mut handles = Vec::new();
+        {
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || rz0.connect(fingerprint, net).unwrap()));
+        }
+        for r in 1..world {
+            let c = cfg(r, world, &addr, compress);
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || {
+                RingRendezvous::bind(&c).unwrap().connect(fingerprint, net).unwrap()
+            }));
+        }
+        let mut members: Vec<TcpRingMember> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        members.sort_by_key(|m| m.rank());
+        members
+    }
+
+    /// [`connect_ring_on`] with a throwaway cost model.
+    fn connect_ring(world: usize, compress: bool, fingerprint: u64) -> Vec<TcpRingMember> {
+        connect_ring_on(
+            world,
+            compress,
+            fingerprint,
+            Arc::new(NetSim::new(NetModelConfig::disabled())),
+        )
+    }
+
+    fn threaded_ring_outputs(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let k = inputs.len();
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let members = RingGroup::new(k, net);
+        let handles: Vec<_> = members
+            .into_iter()
+            .zip(inputs.to_vec())
+            .map(|(m, mut buf)| {
+                std::thread::spawn(move || {
+                    m.all_reduce_mean(&mut buf);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn tcp_ring_outputs(members: Vec<TcpRingMember>, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let handles: Vec<_> = members
+            .into_iter()
+            .zip(inputs.to_vec())
+            .map(|(mut m, mut buf)| {
+                std::thread::spawn(move || {
+                    m.all_reduce_mean(&mut buf).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn tcp_ring_is_bit_identical_to_threaded_ring() {
+        for k in [1usize, 2, 3, 4] {
+            for n in [1usize, 7, 64, 255] {
+                let mut rng = Rng::new((k * 100 + n) as u64);
+                let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n)).collect();
+                let threaded = threaded_ring_outputs(&inputs);
+                let members = connect_ring(k, false, 0xFEED);
+                let tcp = tcp_ring_outputs(members, &inputs);
+                let want = reference_mean(&inputs);
+                for (rank, (a, b)) in threaded.iter().zip(&tcp).enumerate() {
+                    assert_eq!(a, b, "k={k} n={n} rank={rank}: threaded != tcp");
+                    assert_eq!(b, &want, "k={k} n={n} rank={rank}: tcp != reference");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_buffers_stream_without_deadlock() {
+        // 600 KB per ring direction — far beyond loopback socket buffers.
+        // Whole-chunk blocking writes would wedge both peers; the segmented
+        // interleave must complete (and still be exact for integer data).
+        let members = connect_ring(2, false, 21);
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|mut m| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![(m.rank() + 1) as f32; 300_000];
+                    m.all_reduce_sum(&mut buf).unwrap();
+                    assert!(buf.iter().all(|&x| x == 3.0), "bad sum");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn repeated_reductions_reuse_the_ring() {
+        let members = connect_ring(3, false, 1);
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|mut m| {
+                std::thread::spawn(move || {
+                    for round in 0..5u32 {
+                        let mut buf = vec![(m.rank() + 1) as f32 + round as f32; 10];
+                        m.all_reduce_sum(&mut buf).unwrap();
+                        let want = (1 + 2 + 3) as f32 + 3.0 * round as f32;
+                        assert!(buf.iter().all(|&x| x == want), "round {round}: {buf:?}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tokens_serialize_ranks_over_tcp() {
+        let members = connect_ring(3, false, 2);
+        let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|mut m| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    for _round in 0..3 {
+                        if m.rank() > 0 {
+                            m.recv_token().unwrap();
+                        }
+                        log.lock().unwrap().push(m.rank());
+                        m.send_token().unwrap();
+                        if m.rank() == 0 {
+                            m.recv_token().unwrap();
+                        }
+                        // Tokens and data interleave cleanly.
+                        let mut buf = vec![1.0f32; 4];
+                        m.all_reduce_sum(&mut buf).unwrap();
+                        assert!(buf.iter().all(|&x| x == 3.0));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn tensor_allreduce_flattens_through_flatbuckets() {
+        let members = connect_ring(2, false, 11);
+        let shapes = vec![vec![3usize, 2], vec![5usize]];
+        let handles: Vec<_> = members
+            .into_iter()
+            .map(|mut m| {
+                let shapes = shapes.clone();
+                std::thread::spawn(move || {
+                    let v = (m.rank() + 1) as f32;
+                    let mut ts: Vec<Tensor> = shapes
+                        .iter()
+                        .map(|s| Tensor::from_vec(s, vec![v; s.iter().product()]))
+                        .collect();
+                    m.all_reduce_mean_tensors(&mut ts, 4).unwrap();
+                    ts
+                })
+            })
+            .collect();
+        for h in handles {
+            let ts = h.join().unwrap();
+            for t in &ts {
+                // mean(1, 2) = 1.5, exactly, in every original shape.
+                assert!(t.data().iter().all(|&x| x == 1.5), "{:?}", t.data());
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejected_on_both_sides() {
+        let rz0 = RingRendezvous::bind(&cfg(0, 2, "127.0.0.1:0", false)).unwrap();
+        let addr = rz0.rendezvous_addr().unwrap().to_string();
+        let net0 = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let h0 = std::thread::spawn(move || rz0.connect(0xAAAA, net0));
+        let c1 = cfg(1, 2, &addr, false);
+        let h1 = std::thread::spawn(move || {
+            let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+            RingRendezvous::bind(&c1).unwrap().connect(0xBBBB, net)
+        });
+        let e0 = h0.join().unwrap().err().expect("rank 0 must reject");
+        let e1 = h1.join().unwrap().err().expect("rank 1 must be rejected");
+        assert!(format!("{e0:#}").contains("fingerprint"), "rank 0 error: {e0:#}");
+        assert!(format!("{e1:#}").contains("fingerprint"), "rank 1 error: {e1:#}");
+    }
+
+    #[test]
+    fn world_size_mismatch_rejected_at_connect() {
+        let rz0 = RingRendezvous::bind(&cfg(0, 2, "127.0.0.1:0", false)).unwrap();
+        let addr = rz0.rendezvous_addr().unwrap().to_string();
+        let net0 = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let h0 = std::thread::spawn(move || rz0.connect(7, net0));
+        let c1 = cfg(1, 3, &addr, false); // claims a 3-rank world
+        let h1 = std::thread::spawn(move || {
+            let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+            RingRendezvous::bind(&c1).unwrap().connect(7, net)
+        });
+        let e0 = h0.join().unwrap().err().expect("rank 0 must reject");
+        let e1 = h1.join().unwrap().err().expect("peer must be rejected");
+        assert!(format!("{e0:#}").contains("world size mismatch"), "rank 0 error: {e0:#}");
+        assert!(format!("{e1:#}").contains("world size mismatch"), "rank 1 error: {e1:#}");
+    }
+
+    #[test]
+    fn silent_stray_connection_does_not_starve_rendezvous() {
+        // A probe that connects to the rendezvous and says nothing (an
+        // orchestrator's wait-for-port pattern) costs at most the hello
+        // grace period — the real peer still joins and the ring forms.
+        let rz0 = RingRendezvous::bind(&cfg(0, 2, "127.0.0.1:0", false)).unwrap();
+        let addr = rz0.rendezvous_addr().unwrap().to_string();
+        let stray = std::net::TcpStream::connect(addr.as_str()).unwrap();
+        let net0 = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let h0 = std::thread::spawn(move || rz0.connect(13, net0).unwrap());
+        let c1 = cfg(1, 2, &addr, false);
+        let h1 = std::thread::spawn(move || {
+            let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+            RingRendezvous::bind(&c1).unwrap().connect(13, net).unwrap()
+        });
+        let m0 = h0.join().unwrap();
+        let m1 = h1.join().unwrap();
+        let handles = [
+            std::thread::spawn(move || {
+                let mut m0 = m0;
+                let mut buf = vec![1.0f32; 4];
+                m0.all_reduce_sum(&mut buf).unwrap();
+                buf
+            }),
+            std::thread::spawn(move || {
+                let mut m1 = m1;
+                let mut buf = vec![2.0f32; 4];
+                m1.all_reduce_sum(&mut buf).unwrap();
+                buf
+            }),
+        ];
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![3.0; 4]);
+        }
+        drop(stray);
+    }
+
+    #[test]
+    fn missing_peer_times_out_instead_of_hanging() {
+        let mut c = cfg(0, 2, "127.0.0.1:0", false);
+        c.timeout_ms = 300;
+        let rz = RingRendezvous::bind(&c).unwrap();
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let t0 = Instant::now();
+        let err = rz.connect(1, net).err().expect("must time out");
+        assert!(format!("{err:#}").contains("timed out"), "error: {err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_error_not_hang() {
+        let members = connect_ring(2, false, 3);
+        let mut it = members.into_iter();
+        let mut m0 = it.next().unwrap();
+        let m1 = it.next().unwrap();
+        drop(m1); // rank 1 "dies": its sockets close
+        let mut buf = vec![1.0f32; 8];
+        let err = m0.all_reduce_sum(&mut buf).err().expect("must error");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("ring") || msg.contains("peer"),
+            "unexpected error: {msg}"
+        );
+    }
+
+    #[test]
+    fn gpu_bytes_follow_the_bandwidth_optimal_schedule() {
+        // Each rank sends 2(k-1)/k * n floats (+ a fixed frame header per
+        // chunk); NetSim's GpuGpu accounting must reflect the bytes
+        // actually sent, and nothing may leak onto the CPU links.
+        for k in [2usize, 4] {
+            let n = 4096usize;
+            let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+            let members = connect_ring_on(k, false, 9, net.clone());
+            let workers: Vec<_> = members
+                .into_iter()
+                .map(|mut m| {
+                    std::thread::spawn(move || {
+                        let mut buf = vec![1.0f32; 4096];
+                        m.all_reduce_sum(&mut buf).unwrap();
+                    })
+                })
+                .collect();
+            for w in workers {
+                w.join().unwrap();
+            }
+            let payload = (k * (2 * (k - 1) * n / k) * 4) as u64;
+            let frames = (k * 2 * (k - 1)) as u64;
+            let got = net.link_bytes(Link::GpuGpu);
+            assert!(
+                got >= payload && got <= payload + frames * 96 + (k * k * 4) as u64,
+                "k={k}: gpu bytes {got} vs payload {payload} (+{frames} frame headers)"
+            );
+            assert_eq!(net.link_bytes(Link::CpuGpu), 0, "dense swap leaked onto CpuGpu");
+            assert_eq!(net.link_bytes(Link::CpuCpu), 0, "dense swap leaked onto CpuCpu");
+            // Simulated ns are exactly latency-per-frame + bytes/bandwidth.
+            let m = NetModelConfig::paper_like();
+            let want_secs = frames as f64 * m.latency_s + got as f64 / m.gpu_gpu_bw;
+            let got_secs = net.link_ns(Link::GpuGpu) as f64 / 1e9;
+            assert!(
+                (got_secs - want_secs).abs() < 1e-6,
+                "k={k}: simulated {got_secs}s vs expected {want_secs}s"
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_ring_halves_wire_bytes_within_error_bound() {
+        let k = 2;
+        let n = 2048usize;
+        let mut rng = Rng::new(77);
+        let inputs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n)).collect();
+        let exact = reference_mean(&inputs);
+
+        let run = |compress: bool| -> (Vec<Vec<f32>>, u64) {
+            let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+            let members = connect_ring_on(k, compress, 5, net.clone());
+            let outs = tcp_ring_outputs(members, &inputs);
+            (outs, net.link_bytes(Link::GpuGpu))
+        };
+        let (_, raw_bytes) = run(false);
+        let (outs, comp_bytes) = run(true);
+        assert!(
+            (comp_bytes as f64) < raw_bytes as f64 * 0.7,
+            "compression saved nothing: {comp_bytes} vs {raw_bytes}"
+        );
+        // Lossy, but within a few fp16 quantization steps of the exact mean.
+        let norm = exact.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let bound = norm * 2.0f32.powi(-6) + 1e-3;
+        for out in &outs {
+            for (a, b) in out.iter().zip(&exact) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+}

@@ -30,6 +30,12 @@ pub struct NetSim {
     gpu_gpu_ns: AtomicU64,
     cpu_gpu_ns: AtomicU64,
     cpu_cpu_ns: AtomicU64,
+    /// Bytes actually recorded per link class — for GpuGpu this is what the
+    /// dense AllReduce transport really put on the wire (frame bytes, halved
+    /// payloads under fp16 compression), not a nominal payload size.
+    gpu_gpu_bytes: AtomicU64,
+    cpu_gpu_bytes: AtomicU64,
+    cpu_cpu_bytes: AtomicU64,
     bytes_total: AtomicU64,
 }
 
@@ -40,6 +46,9 @@ impl NetSim {
             gpu_gpu_ns: AtomicU64::new(0),
             cpu_gpu_ns: AtomicU64::new(0),
             cpu_cpu_ns: AtomicU64::new(0),
+            gpu_gpu_bytes: AtomicU64::new(0),
+            cpu_gpu_bytes: AtomicU64::new(0),
+            cpu_cpu_bytes: AtomicU64::new(0),
             bytes_total: AtomicU64::new(0),
         }
     }
@@ -66,9 +75,18 @@ impl NetSim {
         let secs = self.transfer_secs(link, bytes);
         let ns = (secs * 1e9) as u64;
         match link {
-            Link::GpuGpu => self.gpu_gpu_ns.fetch_add(ns, Ordering::Relaxed),
-            Link::CpuGpu => self.cpu_gpu_ns.fetch_add(ns, Ordering::Relaxed),
-            Link::CpuCpu => self.cpu_cpu_ns.fetch_add(ns, Ordering::Relaxed),
+            Link::GpuGpu => {
+                self.gpu_gpu_ns.fetch_add(ns, Ordering::Relaxed);
+                self.gpu_gpu_bytes.fetch_add(bytes as u64, Ordering::Relaxed)
+            }
+            Link::CpuGpu => {
+                self.cpu_gpu_ns.fetch_add(ns, Ordering::Relaxed);
+                self.cpu_gpu_bytes.fetch_add(bytes as u64, Ordering::Relaxed)
+            }
+            Link::CpuCpu => {
+                self.cpu_cpu_ns.fetch_add(ns, Ordering::Relaxed);
+                self.cpu_cpu_bytes.fetch_add(bytes as u64, Ordering::Relaxed)
+            }
         };
         self.bytes_total.fetch_add(bytes as u64, Ordering::Relaxed);
         secs
@@ -76,6 +94,24 @@ impl NetSim {
 
     pub fn total_bytes(&self) -> u64 {
         self.bytes_total.load(Ordering::Relaxed)
+    }
+
+    /// Bytes recorded against one link class.
+    pub fn link_bytes(&self, link: Link) -> u64 {
+        match link {
+            Link::GpuGpu => self.gpu_gpu_bytes.load(Ordering::Relaxed),
+            Link::CpuGpu => self.cpu_gpu_bytes.load(Ordering::Relaxed),
+            Link::CpuCpu => self.cpu_cpu_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Simulated nanoseconds recorded against one link class.
+    pub fn link_ns(&self, link: Link) -> u64 {
+        match link {
+            Link::GpuGpu => self.gpu_gpu_ns.load(Ordering::Relaxed),
+            Link::CpuGpu => self.cpu_gpu_ns.load(Ordering::Relaxed),
+            Link::CpuCpu => self.cpu_cpu_ns.load(Ordering::Relaxed),
+        }
     }
 
     /// Accumulated simulated seconds per class: (gpu_gpu, cpu_gpu, cpu_cpu).
@@ -119,6 +155,47 @@ mod tests {
         assert!(g > 0.0 && cc > 0.0);
         assert_eq!(c, 0.0);
         assert_eq!(sim.total_bytes(), (2 << 20) + (1 << 10));
+    }
+
+    #[test]
+    fn per_link_bytes_and_ns_are_isolated() {
+        // The dense-transport swap must only ever show up on the GpuGpu
+        // link: recording AllReduce traffic leaves CpuGpu/CpuCpu untouched.
+        let sim = NetSim::new(NetModelConfig::paper_like());
+        sim.record(Link::GpuGpu, 1 << 20);
+        sim.record(Link::GpuGpu, 1 << 20);
+        assert_eq!(sim.link_bytes(Link::GpuGpu), 2 << 20);
+        assert_eq!(sim.link_bytes(Link::CpuGpu), 0);
+        assert_eq!(sim.link_bytes(Link::CpuCpu), 0);
+        assert!(sim.link_ns(Link::GpuGpu) > 0);
+        assert_eq!(sim.link_ns(Link::CpuGpu), 0);
+        assert_eq!(sim.link_ns(Link::CpuCpu), 0);
+    }
+
+    #[test]
+    fn gpu_gpu_ns_scale_linearly_with_bytes() {
+        // Beyond the fixed per-message latency, simulated GpuGpu time is
+        // strictly proportional to bytes: doubling the payload doubles the
+        // serialization term.
+        let sim = NetSim::new(NetModelConfig::paper_like());
+        let lat = NetModelConfig::paper_like().latency_s;
+        let b = 1 << 22;
+        let t1 = sim.transfer_secs(Link::GpuGpu, b) - lat;
+        let t2 = sim.transfer_secs(Link::GpuGpu, 2 * b) - lat;
+        let t8 = sim.transfer_secs(Link::GpuGpu, 8 * b) - lat;
+        assert!((t2 / t1 - 2.0).abs() < 1e-9, "t2/t1={}", t2 / t1);
+        assert!((t8 / t1 - 8.0).abs() < 1e-9, "t8/t1={}", t8 / t1);
+    }
+
+    #[test]
+    fn recorded_ns_match_transfer_secs() {
+        let sim = NetSim::new(NetModelConfig::paper_like());
+        let b = 123_456;
+        let want = sim.transfer_secs(Link::GpuGpu, b);
+        let got = sim.record(Link::GpuGpu, b);
+        assert_eq!(want, got);
+        // Accumulator truncates to whole nanoseconds.
+        assert!((sim.link_ns(Link::GpuGpu) as f64 / 1e9 - want).abs() < 2e-9);
     }
 
     #[test]

@@ -72,6 +72,16 @@ impl TcpTransport {
     pub fn connect(addr: &str) -> anyhow::Result<Self> {
         Ok(Self::new(TcpStream::connect(addr)?))
     }
+
+    /// Bound every subsequent read/write on the underlying socket (`None`
+    /// restores blocking forever). The NN-worker ring uses this so a dead
+    /// peer surfaces as an error within the ring timeout instead of a hang.
+    pub fn set_timeouts(&self, dur: Option<std::time::Duration>) -> anyhow::Result<()> {
+        let s = self.stream.lock().unwrap();
+        s.set_read_timeout(dur)?;
+        s.set_write_timeout(dur)?;
+        Ok(())
+    }
 }
 
 impl Transport for TcpTransport {

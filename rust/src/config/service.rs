@@ -1,5 +1,6 @@
 //! Configuration for the TCP service mode (`persia serve-ps` /
-//! `persia train --remote-ps`).
+//! `persia train --remote-ps`) and the multi-process NN-worker ring
+//! (`persia train-worker`).
 
 use anyhow::{bail, Context, Result};
 
@@ -75,6 +76,72 @@ impl ServiceConfig {
     }
 }
 
+/// How one `persia train-worker` process joins the dense AllReduce ring
+/// (paper §4.2.3, "Optimized communication among NN workers", deployed as
+/// one OS process per NN-worker rank).
+///
+/// Rank 0 listens on `rendezvous`; every other rank dials it, presents its
+/// `(rank, world, config fingerprint)` — exactly the PS INFO handshake
+/// policy — and receives the full ring address table back. Mismatched
+/// world sizes or fingerprints are rejected at connect time, before any
+/// AllReduce step can desynchronize.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RingConfig {
+    /// Rank 0's rendezvous listen/dial address (`host:port`; port 0 lets
+    /// rank 0 pick an ephemeral port, printed for orchestrators).
+    pub rendezvous: String,
+    /// This process's rank in `0..world`.
+    pub rank: usize,
+    /// Total NN-worker processes in the ring.
+    pub world: usize,
+    /// Host this process binds its ring-inbound listener on (the address
+    /// advertised to its ring predecessor).
+    pub bind_host: String,
+    /// Rendezvous deadline AND per-receive timeout on the established ring,
+    /// so a dead peer surfaces as an error instead of a hang. This bounds
+    /// how long any rank may stall without touching the ring — set it above
+    /// the worst-case PS recovery window (`--ps-retries` ×
+    /// `--ps-retry-ms`) or a peer riding out a PS shard restart will be
+    /// declared dead mid-drill (`train-worker` warns about this coupling).
+    pub timeout_ms: u64,
+    /// Apply the §4.2.3 lossy fp16 value compression to AllReduce chunks.
+    /// Off by default: the TCP ring is then bit-identical to the
+    /// in-process threaded ring.
+    pub compress: bool,
+}
+
+impl Default for RingConfig {
+    fn default() -> Self {
+        Self {
+            rendezvous: "127.0.0.1:7800".to_string(),
+            rank: 0,
+            world: 1,
+            bind_host: "127.0.0.1".to_string(),
+            timeout_ms: 30_000,
+            compress: false,
+        }
+    }
+}
+
+impl RingConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.world == 0 {
+            bail!("ring world size must be >= 1");
+        }
+        if self.rank >= self.world {
+            bail!("ring rank {} out of range for world {}", self.rank, self.world);
+        }
+        if self.bind_host.is_empty() {
+            bail!("ring bind host must be non-empty");
+        }
+        if self.timeout_ms == 0 {
+            bail!("ring timeout must be positive");
+        }
+        validate_addr(&self.rendezvous)?;
+        Ok(())
+    }
+}
+
 /// Check one `host:port` address: non-empty host AND a port that actually
 /// parses as a u16 — `"host:"`, `":7700"`, and `"host:http"` are all
 /// config typos that used to slip through and fail much later with an
@@ -142,5 +209,21 @@ mod tests {
     #[test]
     fn port_zero_is_legal_for_ephemeral_binds() {
         ServiceConfig::at("127.0.0.1:0").validate().unwrap();
+    }
+
+    #[test]
+    fn ring_config_validation() {
+        RingConfig::default().validate().unwrap();
+        let ok = RingConfig { rank: 2, world: 3, ..RingConfig::default() };
+        ok.validate().unwrap();
+        assert!(RingConfig { world: 0, ..RingConfig::default() }.validate().is_err());
+        assert!(RingConfig { rank: 2, world: 2, ..RingConfig::default() }.validate().is_err());
+        assert!(RingConfig { timeout_ms: 0, ..RingConfig::default() }.validate().is_err());
+        assert!(RingConfig { bind_host: String::new(), ..RingConfig::default() }
+            .validate()
+            .is_err());
+        assert!(RingConfig { rendezvous: "nocolon".into(), ..RingConfig::default() }
+            .validate()
+            .is_err());
     }
 }

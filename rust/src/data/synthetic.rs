@@ -67,6 +67,28 @@ impl SyntheticDataset {
         }
     }
 
+    /// Digest of every knob that shapes the sampled distribution (feature
+    /// geometry, id-space size, Zipf skew, label sharpness, stream seed).
+    /// Folded into `Trainer::config_fingerprint` so two `train-worker`
+    /// processes sampling different data are rejected at the rendezvous
+    /// instead of silently diverging mid-run.
+    pub fn numeric_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for x in [
+            self.n_groups as u64,
+            self.ids_per_group as u64,
+            self.nid_dim as u64,
+            self.rows_per_group,
+            self.zipf.exponent().to_bits(),
+            u64::from(self.signal_scale.to_bits()),
+            self.seed,
+        ] {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     /// Ground-truth logit of a sample (used by tests + the oracle AUC bound).
     pub fn true_logit(&self, ids: &IdFeatures, nid: &[f32]) -> f32 {
         let mut logit = 0.0f32;

@@ -1,0 +1,227 @@
+//! The dense-synchronization seam: how an NN worker talks to its peers.
+//!
+//! §4.2.3's "Optimized communication among NN workers" has two deployments
+//! in this reproduction — the simulated cluster (one OS thread per worker,
+//! mpsc-backed ring) and the real multi-process one (`persia train-worker`,
+//! TCP ring). [`DenseComm`] is the seam between them: the trainer's worker
+//! loop programs against it, so all four train modes run unchanged whether
+//! the ranks share an address space or only a network.
+//!
+//! Implementations:
+//! * [`ThreadRing`] — wraps the in-process
+//!   [`RingMember`](crate::allreduce::ring::RingMember) plus the shared
+//!   gossip slots FullAsync uses for best-effort replica averaging.
+//! * [`TcpRingMember`](crate::allreduce::tcp_ring::TcpRingMember) — the
+//!   real-socket ring; its `replica_average` is a true ring AllReduce (the
+//!   only cross-process averaging primitive available), which is strictly
+//!   stronger than the threads' best-effort gossip.
+//!
+//! Both expose the ring **ordering token**, which [`ordered`] uses to
+//! serialize PS access in rank order — the piece that makes a deterministic
+//! FullSync run bit-reproducible across `k` workers, threads or processes.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::allreduce::ring::RingMember;
+use crate::allreduce::tcp_ring::TcpRingMember;
+use crate::allreduce::RingGroup;
+use crate::comm::NetSim;
+
+/// The dense AllReduce fabric one NN-worker rank holds.
+pub trait DenseComm: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+
+    /// In-place AllReduce (mean) of `buf` across all ranks; returns the
+    /// simulated communication seconds this rank spent.
+    fn all_reduce_mean(&mut self, buf: &mut [f32]) -> Result<f64>;
+
+    /// Pass the deterministic-ordering token to the successor rank.
+    fn token_send(&mut self) -> Result<()>;
+
+    /// Receive the deterministic-ordering token from the predecessor rank.
+    fn token_recv(&mut self) -> Result<()>;
+
+    /// FullAsync's periodic replica averaging. In-process: best-effort
+    /// gossip over shared slots. Cross-process: a ring AllReduce mean.
+    /// Returns simulated communication seconds.
+    fn replica_average(&mut self, params: &mut [f32]) -> Result<f64>;
+}
+
+/// Run `f` serialized in rank order 0, 1, ..., k-1: each rank waits for the
+/// token from its predecessor, runs `f`, and passes the token on; rank 0
+/// starts the cycle and absorbs the fully-cycled token, so when rank 0
+/// returns, **every** rank has finished its section. Used by deterministic
+/// FullSync to impose one global order on embedding-PS reads and writes.
+pub fn ordered<T>(comm: &mut dyn DenseComm, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    if comm.world() == 1 {
+        return f();
+    }
+    if comm.rank() > 0 {
+        comm.token_recv()?;
+    }
+    let out = f()?;
+    comm.token_send()?;
+    if comm.rank() == 0 {
+        comm.token_recv()?;
+    }
+    Ok(out)
+}
+
+/// In-process dense fabric: one mpsc ring member per worker thread plus the
+/// FullAsync gossip slot array.
+pub struct ThreadRing {
+    member: RingMember,
+    gossip: Arc<Vec<Mutex<Vec<f32>>>>,
+}
+
+impl ThreadRing {
+    /// Create the `k` connected members of a simulated cluster.
+    pub fn group(k: usize, net: Arc<NetSim>) -> Vec<ThreadRing> {
+        let gossip: Arc<Vec<Mutex<Vec<f32>>>> =
+            Arc::new((0..k).map(|_| Mutex::new(Vec::new())).collect());
+        RingGroup::new(k, net)
+            .into_iter()
+            .map(|member| ThreadRing { member, gossip: gossip.clone() })
+            .collect()
+    }
+}
+
+impl DenseComm for ThreadRing {
+    fn rank(&self) -> usize {
+        self.member.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.member.world()
+    }
+
+    fn all_reduce_mean(&mut self, buf: &mut [f32]) -> Result<f64> {
+        Ok(self.member.all_reduce_mean(buf))
+    }
+
+    fn token_send(&mut self) -> Result<()> {
+        self.member.send_token()
+    }
+
+    fn token_recv(&mut self) -> Result<()> {
+        self.member.recv_token()
+    }
+
+    fn replica_average(&mut self, params: &mut [f32]) -> Result<f64> {
+        // Best-effort gossip: post this replica, average whatever the other
+        // replicas have posted so far (paper: FullAsync replicas drift and
+        // are only loosely re-centered).
+        let rank = self.member.rank();
+        *self.gossip[rank].lock().unwrap() = params.to_vec();
+        let mut acc = params.to_vec();
+        let mut n = 1.0f32;
+        for (i, slot) in self.gossip.iter().enumerate() {
+            if i == rank {
+                continue;
+            }
+            let other = slot.lock().unwrap();
+            if other.len() == acc.len() {
+                for (a, o) in acc.iter_mut().zip(other.iter()) {
+                    *a += o;
+                }
+                n += 1.0;
+            }
+        }
+        let inv = 1.0 / n;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        params.copy_from_slice(&acc);
+        Ok(0.0)
+    }
+}
+
+impl DenseComm for TcpRingMember {
+    fn rank(&self) -> usize {
+        TcpRingMember::rank(self)
+    }
+
+    fn world(&self) -> usize {
+        TcpRingMember::world(self)
+    }
+
+    fn all_reduce_mean(&mut self, buf: &mut [f32]) -> Result<f64> {
+        TcpRingMember::all_reduce_mean(self, buf)
+    }
+
+    fn token_send(&mut self) -> Result<()> {
+        TcpRingMember::send_token(self)
+    }
+
+    fn token_recv(&mut self) -> Result<()> {
+        TcpRingMember::recv_token(self)
+    }
+
+    fn replica_average(&mut self, params: &mut [f32]) -> Result<f64> {
+        // No shared memory across processes: re-center replicas with a real
+        // ring AllReduce (a barrier — stronger than the threads' gossip,
+        // same statistical intent).
+        TcpRingMember::all_reduce_mean(self, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetModelConfig;
+
+    #[test]
+    fn ordered_serializes_thread_ring_ranks() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let comms = ThreadRing::group(3, net);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                let log = log.clone();
+                std::thread::spawn(move || {
+                    let rank = c.rank();
+                    for _ in 0..4 {
+                        ordered(&mut c, || {
+                            log.lock().unwrap().push(rank);
+                            Ok(())
+                        })
+                        .unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = log.lock().unwrap().clone();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn ordered_is_a_plain_call_for_world_one() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let mut comm = ThreadRing::group(1, net).pop().unwrap();
+        let out = ordered(&mut comm, || Ok(42)).unwrap();
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn thread_ring_replica_average_matches_manual_mean() {
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let comms = ThreadRing::group(2, net);
+        // Pre-post rank 1's params so rank 0's average sees them.
+        let mut it = comms.into_iter();
+        let mut c0 = it.next().unwrap();
+        let mut c1 = it.next().unwrap();
+        let mut p1 = vec![3.0f32, 5.0];
+        c1.replica_average(&mut p1).unwrap(); // posts [3, 5]; averages alone
+        assert_eq!(p1, vec![3.0, 5.0]);
+        let mut p0 = vec![1.0f32, 1.0];
+        c0.replica_average(&mut p0).unwrap();
+        assert_eq!(p0, vec![2.0, 3.0]);
+    }
+}

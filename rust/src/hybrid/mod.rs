@@ -5,8 +5,10 @@
 //! asynchronous, raw hybrid and optimized hybrid. [`gantt`] records the
 //! per-phase timeline that reproduces the figure.
 
+pub mod dense_comm;
 pub mod gantt;
 pub mod trainer;
 
+pub use dense_comm::{DenseComm, ThreadRing};
 pub use gantt::{GanttEvent, GanttTimeline};
 pub use trainer::{EngineFactory, PjrtEngineFactory, RustEngineFactory, TrainOutput, Trainer};

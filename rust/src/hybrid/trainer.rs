@@ -5,7 +5,12 @@
 //! The embedding PS sits behind [`PsBackend`]: in-process by default, or a
 //! remote TCP server when [`Trainer::ps_backend`] is set to a
 //! [`crate::service::RemotePs`] (the TCP service mode in `service/`); all
-//! four modes run unchanged against either.
+//! four modes run unchanged against either. The dense AllReduce fabric
+//! likewise sits behind [`DenseComm`]: [`Trainer::run`] wires the simulated
+//! cluster (one thread per rank, mpsc ring), while [`Trainer::run_rank`]
+//! runs a single rank whose ring peers are other OS **processes**
+//! (`persia train-worker`, TCP ring) — the fully multi-process hybrid
+//! deployment: data loaders + NN workers × PS shards.
 //!
 //! ```text
 //!   loader(rank r) ──ids──▶ embedding worker ──get/put──▶ embedding PS
@@ -33,9 +38,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::allreduce::RingGroup;
 use crate::comm::NetSim;
-use crate::config::{ClusterConfig, EmbeddingConfig, ModelConfig, TrainConfig, TrainMode};
+use crate::config::{ClusterConfig, EmbeddingConfig, ModelConfig, Pooling, TrainConfig, TrainMode};
 use crate::data::sample::SampleId;
 use crate::data::SyntheticDataset;
 use crate::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
@@ -46,6 +50,7 @@ use crate::service::PsBackend;
 use crate::util::Rng;
 use crate::worker::{EmbeddingWorker, NnWorker};
 
+use super::dense_comm::{ordered, DenseComm, ThreadRing};
 use super::gantt::GanttTimeline;
 
 /// How often FullAsync gossip-averages the dense replicas.
@@ -122,6 +127,26 @@ enum GradMsg {
     Stop,
 }
 
+/// What one rank's worker loop leaves behind:
+/// `(tracker, gantt, final params, wall secs, simulated extra secs)`.
+type RankRun = (Tracker, GanttTimeline, Vec<f32>, f64, f64);
+
+/// Everything one training process builds besides its NN-worker rank(s):
+/// the PS backend, embedding workers, and gradient-applier threads. Shared
+/// by the all-threads deployment ([`Trainer::run`]) and the one-rank-per-
+/// process deployment ([`Trainer::run_rank`]).
+struct RunCtx {
+    net: Arc<NetSim>,
+    backend: Arc<dyn PsBackend>,
+    emb_workers: Vec<Arc<EmbeddingWorker>>,
+    appliers: Vec<Sender<GradMsg>>,
+    applier_handles: Vec<std::thread::JoinHandle<()>>,
+    inflight: Arc<Vec<AtomicI64>>,
+    max_staleness: Arc<AtomicU64>,
+    put_failures: Arc<AtomicU64>,
+    init_params: Vec<f32>,
+}
+
 /// The distributed trainer.
 pub struct Trainer {
     pub model: ModelConfig,
@@ -142,7 +167,12 @@ pub struct Trainer {
     /// of via the async applier threads. The prefetch pipeline still runs τ
     /// batches ahead, so bounded staleness is preserved, but the whole run
     /// becomes bit-reproducible — the loopback service test relies on this
-    /// to assert exact in-process vs. remote parity.
+    /// to assert exact in-process vs. remote parity. With more than one NN
+    /// worker this requires `FullSync` mode: the ring's ordering token then
+    /// serializes every PS read/write in rank order (see
+    /// [`super::dense_comm::ordered`]), which is what lets a multi-process
+    /// `train-worker` deployment be proven numerically identical to the
+    /// threaded run.
     pub deterministic: bool,
 }
 
@@ -176,30 +206,101 @@ impl Trainer {
         }
     }
 
-    /// Convenience: run with the pure-Rust engine (deterministic template
-    /// init derived from the train seed).
-    pub fn run_rust(&self) -> Result<TrainOutput> {
+    /// The pure-Rust engine factory (deterministic template init derived
+    /// from the train seed) — public so multi-process entry points can pair
+    /// it with [`Trainer::run_rank`].
+    pub fn rust_engine_factory(&self) -> RustEngineFactory {
         let mut rng = Rng::new(self.train.seed ^ 0xE17);
         let template =
             DenseModel::new(&self.model.dims(), self.model.emb_dim(), self.model.nid_dim, &mut rng);
-        self.run(&RustEngineFactory { template })
+        RustEngineFactory { template }
     }
 
-    /// Run the configured training; `factory` builds each worker's dense
-    /// engine (PJRT artifacts or the pure-Rust tower).
-    pub fn run<F: EngineFactory>(&self, factory: &F) -> Result<TrainOutput> {
+    /// Convenience: run with the pure-Rust engine.
+    pub fn run_rust(&self) -> Result<TrainOutput> {
+        self.run(&self.rust_engine_factory())
+    }
+
+    /// FNV-1a digest of every configuration knob that changes this run's
+    /// numerics (model/embedding geometry, optimizer setup, train loop
+    /// shape, seeds, world size). The `train-worker` rendezvous exchanges
+    /// it exactly like the PS INFO fingerprint: ranks whose configs differ
+    /// are rejected at connect time instead of silently training different
+    /// models that can never be bit-compared.
+    pub fn config_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut put = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        put(self.model.n_groups as u64);
+        put(self.model.emb_dim_per_group as u64);
+        put(self.model.nid_dim as u64);
+        put(self.model.hidden.len() as u64);
+        for &w in &self.model.hidden {
+            put(w as u64);
+        }
+        put(self.model.ids_per_group as u64);
+        put(match self.model.pooling {
+            Pooling::Sum => 0,
+            Pooling::Mean => 1,
+        });
+        put(self.emb_cfg.rows_per_group);
+        put(self.emb_cfg.shard_capacity as u64);
+        put(self.emb_cfg.n_nodes as u64);
+        put(self.emb_cfg.shards_per_node as u64);
+        put(crate::service::protocol::optimizer_code(self.emb_cfg.optimizer));
+        put(crate::service::protocol::partition_code(self.emb_cfg.partition));
+        put(u64::from(self.emb_cfg.lr.to_bits()));
+        put(self.cluster.n_nn_workers as u64);
+        put(self.cluster.n_emb_workers as u64);
+        put(match self.train.mode {
+            TrainMode::FullSync => 0,
+            TrainMode::FullAsync => 1,
+            TrainMode::HybridRaw => 2,
+            TrainMode::Hybrid => 3,
+        });
+        put(self.train.batch_size as u64);
+        put(u64::from(self.train.lr.to_bits()));
+        put(self.train.staleness_bound as u64);
+        put(self.train.steps as u64);
+        put(self.train.eval_every as u64);
+        put(self.train.seed);
+        put(u64::from(self.train.use_pjrt));
+        put(u64::from(self.train.compress));
+        put(self.dataset.numeric_fingerprint());
+        put(self.eval_rows as u64);
+        put(u64::from(self.deterministic));
+        drop(put);
+        h
+    }
+
+    /// Shared config validation for [`Trainer::run`] and
+    /// [`Trainer::run_rank`].
+    fn validate_cfg(&self) -> Result<()> {
         self.model.validate()?;
         self.emb_cfg.validate()?;
         self.cluster.validate()?;
         self.train.validate()?;
-        // Bit-reproducibility is only deliverable single-worker: with k > 1
-        // the NN-worker threads still race on the shared PS and AllReduce.
+        // Bit-reproducibility with k > 1 needs a global order on the shared
+        // PS; only FullSync's per-step barrier structure lets the ring
+        // token impose one. The async modes stay single-worker.
         anyhow::ensure!(
-            !self.deterministic || self.cluster.n_nn_workers == 1,
-            "deterministic mode requires n_nn_workers == 1 (got {})",
-            self.cluster.n_nn_workers
+            !self.deterministic
+                || self.cluster.n_nn_workers == 1
+                || self.train.mode == TrainMode::FullSync,
+            "deterministic mode requires n_nn_workers == 1 or --mode sync \
+             (got {} workers, mode {})",
+            self.cluster.n_nn_workers,
+            self.train.mode.name()
         );
+        Ok(())
+    }
 
+    /// Build everything one training process needs besides its NN-worker
+    /// rank(s): the PS backend (validated against this config), the
+    /// embedding workers, and the async gradient-applier threads.
+    fn setup(&self) -> Result<RunCtx> {
         let net = Arc::new(NetSim::new(self.cluster.net));
         let backend: Arc<dyn PsBackend> = match &self.ps_backend {
             Some(backend) => backend.clone(),
@@ -297,79 +398,47 @@ impl Trainer {
             DenseModel::new(&dims, self.model.emb_dim(), self.model.nid_dim, &mut init_rng);
         let init_params = init_model.params_flat();
 
-        let k = self.cluster.n_nn_workers;
-        let ring = RingGroup::new(k, net.clone());
-        // FullAsync gossip: replicas post params to a shared slot array.
-        let gossip: Arc<Vec<Mutex<Vec<f32>>>> =
-            Arc::new((0..k).map(|_| Mutex::new(Vec::new())).collect());
+        Ok(RunCtx {
+            net,
+            backend,
+            emb_workers,
+            appliers,
+            applier_handles,
+            inflight,
+            max_staleness,
+            put_failures,
+            init_params,
+        })
+    }
 
-        let trackers: Vec<Mutex<Tracker>> = (0..k).map(|_| Mutex::new(Tracker::new())).collect();
-        let gantts: Vec<Mutex<GanttTimeline>> =
-            (0..k).map(|_| Mutex::new(GanttTimeline::default())).collect();
-        let sim_clocks: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
-        let wall_start = std::time::Instant::now();
-        let final_params: Vec<Mutex<Vec<f32>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
-
-        let out: Result<Vec<()>> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (rank, member) in ring.into_iter().enumerate() {
-                let emb_workers = &emb_workers;
-                // mpsc Senders are Send but not Sync: clone per thread.
-                let appliers: Vec<Sender<GradMsg>> = appliers.clone();
-                let inflight = inflight.clone();
-                let max_staleness = max_staleness.clone();
-                let init_params = init_params.clone();
-                let gossip = gossip.clone();
-                let trackers = &trackers;
-                let gantts = &gantts;
-                let sim_clocks = &sim_clocks;
-                let final_params = &final_params;
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let engine = factory.create(rank)?;
-                    if let Some(eb) = engine.train_batch() {
-                        anyhow::ensure!(
-                            eb == self.train.batch_size,
-                            "engine batch {eb} != configured batch {}",
-                            self.train.batch_size
-                        );
-                    }
-                    self.worker_loop(
-                        rank,
-                        member,
-                        engine,
-                        emb_workers,
-                        &appliers,
-                        &inflight,
-                        &max_staleness,
-                        init_params,
-                        &gossip,
-                        &trackers[rank],
-                        &gantts[rank],
-                        &sim_clocks[rank],
-                        &final_params[rank],
-                    )
-                }));
-            }
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-        });
-        out?;
-
-        // Drain the appliers (queued puts apply in order before Stop) so the
-        // failure count below is complete and no thread outlives the run.
+    /// Drain the appliers (queued puts apply in order before Stop) so the
+    /// failure count is complete and no thread outlives the run.
+    fn stop_appliers(
+        appliers: Vec<Sender<GradMsg>>,
+        handles: Vec<std::thread::JoinHandle<()>>,
+    ) {
         for tx in &appliers {
             let _ = tx.send(GradMsg::Stop);
         }
         drop(appliers);
-        for handle in applier_handles {
+        for handle in handles {
             let _ = handle.join();
         }
+    }
 
-        let wall_secs = wall_start.elapsed().as_secs_f64();
-        let sim_extra = sim_clocks
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
-            .fold(0.0, f64::max);
-        let tracker = trackers[0].lock().unwrap();
+    #[allow(clippy::too_many_arguments)]
+    fn build_output(
+        &self,
+        backend: &Arc<dyn PsBackend>,
+        tracker: Tracker,
+        gantt: GanttTimeline,
+        final_params: Vec<f32>,
+        wall_secs: f64,
+        sim_extra: f64,
+        max_staleness: u64,
+        grad_put_failures: u64,
+    ) -> TrainOutput {
+        let k = self.cluster.n_nn_workers;
         let samples = (self.train.steps * self.train.batch_size * k) as u64;
         // Simulated time = real compute wall time + injected network time
         // (which threads did not actually sleep through).
@@ -383,29 +452,194 @@ impl Trainer {
             final_loss: tracker.recent_loss(20).unwrap_or(f32::NAN),
             final_auc: tracker.final_auc(),
             samples_per_sec: samples as f64 / sim_secs.max(1e-9),
-            max_staleness: max_staleness.load(Ordering::Relaxed),
-            grad_put_failures: put_failures.load(Ordering::Relaxed),
+            max_staleness,
+            grad_put_failures,
         };
-        drop(tracker);
+        let ps_imbalance = backend.stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
+        TrainOutput { report, tracker, gantt, ps_imbalance, final_params }
+    }
+
+    /// Run the configured training; `factory` builds each worker's dense
+    /// engine (PJRT artifacts or the pure-Rust tower). This is the
+    /// simulated-cluster deployment: every NN-worker rank is a thread of
+    /// this process, connected by the in-process [`ThreadRing`].
+    pub fn run<F: EngineFactory>(&self, factory: &F) -> Result<TrainOutput> {
+        self.validate_cfg()?;
+        let ctx = self.setup()?;
+        let k = self.cluster.n_nn_workers;
+        let comms = ThreadRing::group(k, ctx.net.clone());
+
+        let trackers: Vec<Mutex<Tracker>> = (0..k).map(|_| Mutex::new(Tracker::new())).collect();
+        let gantts: Vec<Mutex<GanttTimeline>> =
+            (0..k).map(|_| Mutex::new(GanttTimeline::default())).collect();
+        let sim_clocks: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+        let wall_start = std::time::Instant::now();
+        let final_params: Vec<Mutex<Vec<f32>>> = (0..k).map(|_| Mutex::new(Vec::new())).collect();
+
+        let out: Result<Vec<()>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (rank, comm) in comms.into_iter().enumerate() {
+                let emb_workers = &ctx.emb_workers;
+                // mpsc Senders are Send but not Sync: clone per thread.
+                let appliers: Vec<Sender<GradMsg>> = ctx.appliers.clone();
+                let inflight = ctx.inflight.clone();
+                let max_staleness = ctx.max_staleness.clone();
+                let init_params = ctx.init_params.clone();
+                let trackers = &trackers;
+                let gantts = &gantts;
+                let sim_clocks = &sim_clocks;
+                let final_params = &final_params;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let mut comm = comm;
+                    let engine = factory.create(rank)?;
+                    if let Some(eb) = engine.train_batch() {
+                        anyhow::ensure!(
+                            eb == self.train.batch_size,
+                            "engine batch {eb} != configured batch {}",
+                            self.train.batch_size
+                        );
+                    }
+                    self.worker_loop(
+                        rank,
+                        &mut comm,
+                        engine,
+                        emb_workers,
+                        &appliers,
+                        &inflight,
+                        &max_staleness,
+                        init_params,
+                        &trackers[rank],
+                        &gantts[rank],
+                        &sim_clocks[rank],
+                        &final_params[rank],
+                    )
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        out?;
+
+        Self::stop_appliers(ctx.appliers, ctx.applier_handles);
+
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+        let sim_extra = sim_clocks
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
+            .fold(0.0, f64::max);
         let tracker = trackers[0].lock().unwrap().take_inner();
         let gantt = gantts[0].lock().unwrap().clone();
         let fp = std::mem::take(&mut *final_params[0].lock().unwrap());
-        let ps_imbalance = backend.stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
-        Ok(TrainOutput { report, tracker, gantt, ps_imbalance, final_params: fp })
+        Ok(self.build_output(
+            &ctx.backend,
+            tracker,
+            gantt,
+            fp,
+            wall_secs,
+            sim_extra,
+            ctx.max_staleness.load(Ordering::Relaxed),
+            ctx.put_failures.load(Ordering::Relaxed),
+        ))
+    }
+
+    /// Run exactly ONE NN-worker rank of a multi-process deployment on the
+    /// calling thread. `make_comm` receives this run's [`NetSim`] and
+    /// returns the connected dense fabric — in `persia train-worker` that
+    /// is a [`crate::allreduce::TcpRingMember`] whose ring peers live in
+    /// other OS processes; `cluster.n_nn_workers` is the GLOBAL world size
+    /// and must match the comm's. The returned output carries loss/AUC
+    /// curves only on rank 0 (the ranks share nothing but the wire).
+    pub fn run_rank<F: EngineFactory>(
+        &self,
+        factory: &F,
+        make_comm: impl FnOnce(Arc<NetSim>) -> Result<Box<dyn DenseComm>>,
+    ) -> Result<TrainOutput> {
+        self.validate_cfg()?;
+        let ctx = self.setup()?;
+        let run_res = self.run_rank_inner(&ctx, factory, make_comm);
+
+        // Stop the applier threads even when the loop errored (a ring peer
+        // died, the PS vanished) so the worker process exits cleanly
+        // instead of leaking blocked threads.
+        Self::stop_appliers(ctx.appliers, ctx.applier_handles);
+        let (tracker, gantt, fp, wall_secs, sim_extra) = run_res?;
+        Ok(self.build_output(
+            &ctx.backend,
+            tracker,
+            gantt,
+            fp,
+            wall_secs,
+            sim_extra,
+            ctx.max_staleness.load(Ordering::Relaxed),
+            ctx.put_failures.load(Ordering::Relaxed),
+        ))
+    }
+
+    /// The fallible part of [`Trainer::run_rank`], split out so the caller
+    /// can stop the applier threads on every exit path.
+    fn run_rank_inner<F: EngineFactory>(
+        &self,
+        ctx: &RunCtx,
+        factory: &F,
+        make_comm: impl FnOnce(Arc<NetSim>) -> Result<Box<dyn DenseComm>>,
+    ) -> Result<RankRun> {
+        let mut comm = make_comm(ctx.net.clone())?;
+        anyhow::ensure!(
+            comm.world() == self.cluster.n_nn_workers,
+            "dense comm world {} != configured n_nn_workers {} — pass the same \
+             --world to every train-worker and use it as the worker count",
+            comm.world(),
+            self.cluster.n_nn_workers
+        );
+        let rank = comm.rank();
+        let tracker = Mutex::new(Tracker::new());
+        let gantt = Mutex::new(GanttTimeline::default());
+        let sim_clock = AtomicU64::new(0);
+        let final_params = Mutex::new(Vec::new());
+        let wall_start = std::time::Instant::now();
+        let engine = factory.create(rank)?;
+        if let Some(eb) = engine.train_batch() {
+            anyhow::ensure!(
+                eb == self.train.batch_size,
+                "engine batch {eb} != configured batch {}",
+                self.train.batch_size
+            );
+        }
+        self.worker_loop(
+            rank,
+            comm.as_mut(),
+            engine,
+            &ctx.emb_workers,
+            &ctx.appliers,
+            &ctx.inflight,
+            &ctx.max_staleness,
+            ctx.init_params.clone(),
+            &tracker,
+            &gantt,
+            &sim_clock,
+            &final_params,
+        )?;
+        let wall_secs = wall_start.elapsed().as_secs_f64();
+        let sim_extra = sim_clock.load(Ordering::Relaxed) as f64 / 1e9;
+        Ok((
+            tracker.into_inner().unwrap(),
+            gantt.into_inner().unwrap(),
+            final_params.into_inner().unwrap(),
+            wall_secs,
+            sim_extra,
+        ))
     }
 
     #[allow(clippy::too_many_arguments)]
     fn worker_loop(
         &self,
         rank: usize,
-        member: crate::allreduce::ring::RingMember,
+        comm: &mut dyn DenseComm,
         engine: DenseEngine,
         emb_workers: &[Arc<EmbeddingWorker>],
         appliers: &[Sender<GradMsg>],
         inflight: &[AtomicI64],
         max_staleness: &AtomicU64,
         mut params: Vec<f32>,
-        gossip: &[Mutex<Vec<f32>>],
         tracker: &Mutex<Tracker>,
         gantt: &Mutex<GanttTimeline>,
         sim_clock: &AtomicU64,
@@ -420,6 +654,11 @@ impl Trainer {
         let mut pipeline: VecDeque<Prefetched> = VecDeque::new();
         let mut sim_t = 0.0f64; // this worker's simulated clock
         let n_ew = emb_workers.len();
+        // Deterministic multi-worker FullSync: serialize every PS touch in
+        // rank order via the ring token (see `dense_comm::ordered`), so the
+        // run is bit-reproducible and provably identical across thread and
+        // process deployments.
+        let order_ps = self.deterministic && comm.world() > 1;
 
         let prefetch = |rng: &mut Rng, step: usize| -> Result<Prefetched> {
             let batch = self.dataset.batch(rng, b);
@@ -446,7 +685,12 @@ impl Trainer {
             // Keep the pipeline full (async prefetch stands in for the
             // loader+embedding-worker threads running ahead of the GPU).
             while pipeline.len() <= depth {
-                let pf = prefetch(&mut rng, step + pipeline.len())?;
+                let step_ahead = step + pipeline.len();
+                let pf = if order_ps {
+                    ordered(comm, || prefetch(&mut rng, step_ahead))?
+                } else {
+                    prefetch(&mut rng, step_ahead)?
+                };
                 max_staleness.fetch_max(pf.staleness, Ordering::Relaxed);
                 pipeline.push_back(pf);
             }
@@ -459,49 +703,36 @@ impl Trainer {
                 .context("dense train step")?;
             let t_train = t_train0.elapsed().as_secs_f64();
 
-            // Dense synchronization.
+            // Dense synchronization through the DenseComm seam (in-process
+            // mpsc ring or cross-process TCP ring — identical schedule).
             let mut grad = out.grad_flat;
             let t_ar = if mode == TrainMode::FullAsync {
                 0.0
             } else {
                 let t0 = std::time::Instant::now();
-                let sim = member.all_reduce_mean(&mut grad);
+                let sim = comm.all_reduce_mean(&mut grad)?;
                 t0.elapsed().as_secs_f64() + sim
             };
             opt.step(&mut params, &grad);
 
-            // FullAsync: replicas drift; gossip-average periodically.
-            if mode == TrainMode::FullAsync {
-                if step as u64 % ASYNC_SYNC_EVERY == ASYNC_SYNC_EVERY - 1 {
-                    *gossip[rank].lock().unwrap() = params.clone();
-                    // Best-effort average over whatever replicas have posted.
-                    let mut acc = params.clone();
-                    let mut n = 1.0f32;
-                    for (i, slot) in gossip.iter().enumerate() {
-                        if i == rank {
-                            continue;
-                        }
-                        let other = slot.lock().unwrap();
-                        if other.len() == acc.len() {
-                            for (a, o) in acc.iter_mut().zip(other.iter()) {
-                                *a += o;
-                            }
-                            n += 1.0;
-                        }
-                    }
-                    let inv = 1.0 / n;
-                    for a in acc.iter_mut() {
-                        *a *= inv;
-                    }
-                    params = acc;
-                }
+            // FullAsync: replicas drift; re-center periodically (gossip
+            // in-process, a ring AllReduce across processes).
+            if mode == TrainMode::FullAsync
+                && step as u64 % ASYNC_SYNC_EVERY == ASYNC_SYNC_EVERY - 1
+            {
+                comm.replica_average(&mut params)?;
             }
 
             // Embedding gradient return (Alg. 2 last line -> Alg. 1 backward).
             let t_up = match mode {
                 TrainMode::FullSync => {
                     let t0 = std::time::Instant::now();
-                    let sim = emb_workers[pf.ew].push_grads(&pf.sids, &out.grad_emb)?;
+                    let ew = &emb_workers[pf.ew];
+                    let sim = if order_ps {
+                        ordered(comm, || ew.push_grads(&pf.sids, &out.grad_emb))?
+                    } else {
+                        ew.push_grads(&pf.sids, &out.grad_emb)?
+                    };
                     t0.elapsed().as_secs_f64() + sim
                 }
                 _ if self.deterministic => {
@@ -756,6 +987,94 @@ mod tests {
         assert_eq!(a.tracker.losses, b.tracker.losses);
         assert_eq!(a.tracker.aucs, b.tracker.aucs);
         assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn deterministic_sync_multiworker_is_bit_reproducible() {
+        // With k > 1 the ring token serializes all PS access in rank order,
+        // so even a multi-worker FullSync run is exactly reproducible — the
+        // property the multi-process train-worker parity test builds on.
+        let run = || {
+            let mut t = small_setup(TrainMode::FullSync, 40, 2);
+            t.deterministic = true;
+            t.train.eval_every = 20;
+            t.run_rust().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.tracker.losses, b.tracker.losses);
+        assert_eq!(a.tracker.aucs, b.tracker.aucs);
+        assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn deterministic_multiworker_rejected_for_async_modes() {
+        for mode in [TrainMode::Hybrid, TrainMode::HybridRaw, TrainMode::FullAsync] {
+            let mut t = small_setup(mode, 10, 2);
+            t.deterministic = true;
+            assert!(t.run_rust().is_err(), "{mode:?} must reject deterministic k>1");
+        }
+    }
+
+    #[test]
+    fn run_rank_world_one_matches_run() {
+        let make = || {
+            let mut t = small_setup(TrainMode::Hybrid, 40, 1);
+            t.deterministic = true;
+            t.train.eval_every = 40;
+            t
+        };
+        let a = make().run_rust().unwrap();
+        let t = make();
+        let factory = t.rust_engine_factory();
+        let b = t
+            .run_rank(&factory, |net| {
+                Ok(Box::new(ThreadRing::group(1, net).pop().unwrap()) as Box<dyn DenseComm>)
+            })
+            .unwrap();
+        assert_eq!(a.tracker.losses, b.tracker.losses);
+        assert_eq!(a.tracker.aucs, b.tracker.aucs);
+        assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn run_rank_rejects_world_mismatch() {
+        let t = small_setup(TrainMode::FullSync, 5, 2); // configured for 2 workers
+        let factory = t.rust_engine_factory();
+        let err = t
+            .run_rank(&factory, |net| {
+                Ok(Box::new(ThreadRing::group(1, net).pop().unwrap()) as Box<dyn DenseComm>)
+            })
+            .err()
+            .expect("world 1 comm vs 2-worker config must fail");
+        assert!(format!("{err:#}").contains("world"), "{err:#}");
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_numeric_knobs() {
+        let base = small_setup(TrainMode::Hybrid, 10, 2).config_fingerprint();
+        assert_eq!(base, small_setup(TrainMode::Hybrid, 10, 2).config_fingerprint());
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.train.seed += 1;
+        assert_ne!(base, t.config_fingerprint());
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.train.steps = 11;
+        assert_ne!(base, t.config_fingerprint());
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.cluster.n_nn_workers = 3;
+        assert_ne!(base, t.config_fingerprint());
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.emb_cfg.lr *= 2.0;
+        assert_ne!(base, t.config_fingerprint());
+        // Dataset distribution knobs are numerics too: a different Zipf
+        // skew or label sharpness must change the fingerprint.
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.dataset = SyntheticDataset::new(&t.model, 500, 1.2, 7);
+        assert_ne!(base, t.config_fingerprint());
+        let mut t = small_setup(TrainMode::Hybrid, 10, 2);
+        t.dataset.signal_scale *= 2.0;
+        assert_ne!(base, t.config_fingerprint());
+        assert_ne!(base, small_setup(TrainMode::FullSync, 10, 2).config_fingerprint());
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //! `rust/tests/integration_sharded.rs`) proves remote training is
 //! numerically identical to in-process training in every mode.
 //!
+//! The NN workers deploy as processes too: `persia train-worker --rank R
+//! --world N` runs one dense rank per process, joined by a rank-0 TCP
+//! rendezvous with a config-fingerprint handshake, and the §4.2.3 ring
+//! AllReduce crosses real sockets ([`allreduce::tcp_ring`]) behind the
+//! [`hybrid::DenseComm`] seam — with deterministic FullSync proven
+//! equivalent to the threaded run (`rust/tests/integration_multiproc.rs`).
+//!
 //! Entry points: [`hybrid::Trainer`] for end-to-end training,
 //! [`config::BenchPreset`] for the paper's Table-1 benchmark presets, and the
 //! `persia` binary / `examples/` for runnable drivers.

@@ -1,27 +1,33 @@
 //! `persia` — CLI launcher for the hybrid recommender training system.
 //!
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
-//!   train     run a training job (preset, mode, workers, steps, ...);
-//!             add --remote-ps host:port[,host:port...] to train against
-//!             one or many TCP embedding-PS shard processes
-//!   serve-ps  run the embedding PS (or one --node-range slice of it) as a
-//!             standalone TCP server
-//!   gantt     print the Fig.-3 phase timelines for all four modes
-//!   table1    print the Table-1 model-scale presets
-//!   capacity  Fig.-9 style capacity sweep (virtualized tables)
-//!   modes     convergence comparison across modes (Fig. 7 / Table 2 style)
+//!   train        run a training job (preset, mode, workers, steps, ...);
+//!                add --remote-ps host:port[,host:port...] to train against
+//!                one or many TCP embedding-PS shard processes
+//!   train-worker run ONE NN-worker rank as its own OS process: rank 0
+//!                hosts the ring rendezvous, peers dial it, and the dense
+//!                AllReduce runs over loopback/network TCP instead of
+//!                in-process channels (requires --remote-ps for world > 1)
+//!   serve-ps     run the embedding PS (or one --node-range slice of it) as
+//!                a standalone TCP server
+//!   gantt        print the Fig.-3 phase timelines for all four modes
+//!   table1       print the Table-1 model-scale presets
+//!   capacity     Fig.-9 style capacity sweep (virtualized tables)
+//!   modes        convergence comparison across modes (Fig. 7 / Table 2)
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use persia::allreduce::RingRendezvous;
 use persia::config::{
-    BenchPreset, ClusterConfig, NetModelConfig, ServiceConfig, TrainConfig, TrainMode,
+    BenchPreset, ClusterConfig, NetModelConfig, RingConfig, ServiceConfig, TrainConfig, TrainMode,
 };
+use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
 use persia::embedding::{CheckpointManager, EmbeddingPs};
-use persia::hybrid::{PjrtEngineFactory, Trainer};
+use persia::hybrid::{DenseComm, PjrtEngineFactory, Trainer};
 use persia::runtime::ArtifactManifest;
 use persia::service::{PsBackend, PsServer, ShardedRemotePs};
 
@@ -249,6 +255,112 @@ fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
     run_trainer(&trainer, &flags)
 }
 
+/// One NN-worker rank as its own OS process (paper §4.1: every role is a
+/// process). Builds the exact trainer `train` would, joins the TCP ring
+/// through the rank-0 rendezvous — which rejects world-size or
+/// config-fingerprint mismatches at connect time — and runs only this
+/// rank's worker loop; the dense AllReduce crosses real sockets.
+fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
+    use std::io::Write as _;
+    let rank: usize = flag(&flags, "rank", "0").parse().context("--rank")?;
+    let world: usize = flag(&flags, "world", "1").parse().context("--world")?;
+    let ring_cfg = RingConfig {
+        rendezvous: flag(&flags, "rendezvous", "127.0.0.1:7800").to_string(),
+        rank,
+        world,
+        bind_host: flag(&flags, "listen-host", "127.0.0.1").to_string(),
+        timeout_ms: flag(&flags, "ring-timeout-ms", "30000")
+            .parse()
+            .context("--ring-timeout-ms")?,
+        compress: flag(&flags, "ring-compress", "false") == "true",
+    };
+    ring_cfg.validate()?;
+    anyhow::ensure!(
+        world == 1 || flags.contains_key("remote-ps"),
+        "train-worker with --world > 1 needs --remote-ps: separate worker processes \
+         must share one PS deployment (start serve-ps first)"
+    );
+    // A rank riding out a PS shard restart (reconnect-with-retry) stalls
+    // for up to retries × backoff without touching the ring; peers would
+    // declare it dead once the ring timeout elapses. Warn about the
+    // coupling instead of letting the §4.2.4 recovery drill abort the ring.
+    let ps_outage_ms: u64 = flag(&flags, "ps-retries", "4").parse::<u64>().unwrap_or(4)
+        * flag(&flags, "ps-retry-ms", "50").parse::<u64>().unwrap_or(50);
+    if world > 1 && ring_cfg.timeout_ms <= ps_outage_ms {
+        eprintln!(
+            "warning: --ring-timeout-ms {} is not above the worst-case PS recovery \
+             window of {}ms (--ps-retries x --ps-retry-ms); a peer riding out a PS \
+             shard restart may be declared dead by the ring",
+            ring_cfg.timeout_ms, ps_outage_ms
+        );
+    }
+
+    // Bind before the (potentially retried) PS connect so orchestrators can
+    // read the rendezvous address immediately; peer HELLOs queue in the
+    // listener backlog until this worker is ready to run.
+    let rz = RingRendezvous::bind(&ring_cfg)?;
+    if rank == 0 && world > 1 {
+        println!("rendezvous listening on {}", rz.rendezvous_addr()?);
+        std::io::stdout().flush().ok();
+    }
+
+    let mut trainer = build_trainer(&flags)?;
+    // The ring IS the worker cluster: the world size replaces --nn-workers.
+    trainer.cluster.n_nn_workers = world;
+    println!(
+        "persia train-worker: rank {rank}/{world} preset={} mode={} engine={} batch={} steps={}",
+        flag(&flags, "preset", "taobao"),
+        trainer.train.mode.name(),
+        if trainer.train.use_pjrt { "pjrt" } else { "rust" },
+        trainer.train.batch_size,
+        trainer.train.steps,
+    );
+    std::io::stdout().flush().ok();
+
+    // --ring-compress and --ps-wire-compress live outside the Trainer
+    // config but change numerics (lossy fp16 on AllReduce chunks / PS
+    // traffic): fold both into the rendezvous fingerprint so a mismatch is
+    // rejected at connect time like every other numeric knob.
+    let ps_wire_compress = flag(&flags, "ps-wire-compress", "false") == "true";
+    let fingerprint = (trainer.config_fingerprint()
+        ^ u64::from(ring_cfg.compress)
+        ^ (u64::from(ps_wire_compress) << 1))
+        .wrapping_mul(0x0000_0100_0000_01b3);
+    let make_comm = move |net: Arc<NetSim>| -> Result<Box<dyn DenseComm>> {
+        let member = rz.connect(fingerprint, net)?;
+        println!("ring connected: rank {rank}/{world}");
+        std::io::stdout().flush().ok();
+        Ok(Box::new(member) as Box<dyn DenseComm>)
+    };
+    let out = if trainer.train.use_pjrt {
+        let factory = PjrtEngineFactory {
+            artifacts_dir: ArtifactManifest::default_dir(),
+            preset: trainer.model.artifact_preset.clone(),
+        };
+        trainer.run_rank(&factory, make_comm)?
+    } else {
+        trainer.run_rank(&trainer.rust_engine_factory(), make_comm)?
+    };
+    if rank == 0 {
+        out.report.print_row();
+        // Machine-readable lines for the parity harness (tests + example).
+        let losses: Vec<String> =
+            out.tracker.losses.iter().map(|(s, l)| format!("{s}:{l:.9e}")).collect();
+        println!("LOSSES {}", losses.join(","));
+        println!(
+            "PARITY final_loss={:.9e} final_auc={}",
+            out.report.final_loss,
+            out.report
+                .final_auc
+                .map(|a| format!("{a:.12e}"))
+                .unwrap_or_else(|| "nan".to_string()),
+        );
+    } else {
+        println!("rank {rank}/{world} finished {} steps", out.report.steps);
+    }
+    Ok(())
+}
+
 fn cmd_gantt(flags: HashMap<String, String>) -> Result<()> {
     for mode in TrainMode::ALL {
         let mut f = flags.clone();
@@ -305,7 +417,8 @@ fn cmd_modes(flags: HashMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: persia <train|serve-ps|gantt|table1|capacity|modes> [--preset taobao] \
+        "usage: persia <train|train-worker|serve-ps|gantt|table1|capacity|modes> \
+         [--preset taobao] \
          [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
          [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
          [--verbose true] [--deterministic true]\n\
@@ -314,7 +427,12 @@ fn usage() -> ! {
          persia train --remote-ps addr1[,addr2,...] [--ps-conns N] [--ps-wire-compress true] \
          [--ps-retries N] [--ps-retry-ms MS] \
          (same --preset/--dense/--shard-capacity/--seed on every process; \
-         the --node-range slices must partition the PS nodes exactly)"
+         the --node-range slices must partition the PS nodes exactly)\n\
+         multi-process NN workers: persia train-worker --rank R --world N \
+         [--rendezvous 127.0.0.1:7800] [--listen-host HOST] [--ring-timeout-ms MS] \
+         [--ring-compress true] --remote-ps addr1[,addr2,...] — one process per rank, \
+         identical flags everywhere (the rendezvous rejects config mismatches); \
+         rank 0 prints 'rendezvous listening on ADDR' for orchestrators"
     );
     std::process::exit(2)
 }
@@ -325,6 +443,7 @@ fn main() -> Result<()> {
     let flags = parse_flags(&args[1..]);
     match cmd.as_str() {
         "train" => cmd_train(flags),
+        "train-worker" => cmd_train_worker(flags),
         "serve-ps" => cmd_serve_ps(flags),
         "gantt" => cmd_gantt(flags),
         "table1" => cmd_table1(),

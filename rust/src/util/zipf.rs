@@ -39,6 +39,11 @@ impl Zipf {
         Zipf { n, exponent, h_x1, h_n }
     }
 
+    /// The skew exponent this distribution was built with.
+    pub fn exponent(&self) -> f64 {
+        self.exponent
+    }
+
     fn h_inv_static(exponent: f64, x: f64) -> f64 {
         if (exponent - 1.0).abs() < 1e-12 {
             x.exp()

@@ -6,6 +6,13 @@
 //! popped and consumed into the mini-batch. The dense parameters always live
 //! in this worker's memory (paper: "the parameter of the NN always locates
 //! in the device RAM of the NN worker").
+//!
+//! `rank` is the worker's **global** ring rank: in the simulated cluster one
+//! `NnWorker` exists per thread, while in the multi-process deployment
+//! (`persia train-worker --rank R --world N`) each process owns exactly one,
+//! carrying its `--rank`. The buffer is process-local either way — sample
+//! IDs never cross the process boundary, only dense gradients do (via the
+//! ring AllReduce) and embedding rows/gradients (via the shared PS).
 
 use std::collections::HashMap;
 use std::sync::Mutex;

@@ -1,0 +1,510 @@
+//! Multi-process NN workers: the ISSUE-3 acceptance drill.
+//!
+//! * In-process cross-check: two `Trainer::run_rank` threads joined by a
+//!   real loopback TCP ring match the threaded `Trainer::run` bit-for-bit
+//!   (asserted ≤ 1e-6, observed exact) in deterministic FullSync.
+//! * Real processes: two `persia train-worker` children (rank 0 hosting the
+//!   rendezvous on an ephemeral port) against two `persia serve-ps` shard
+//!   children reproduce the single-process threaded run's loss curve and
+//!   AUC within 1e-6.
+//! * SIGKILL one rank mid-ring: the survivors error out cleanly within the
+//!   ring timeout (no hang) and every child is reaped.
+//! * A worker started with different flags is rejected at the rendezvous
+//!   (config-fingerprint policy), and both sides exit nonzero.
+
+use std::io::BufRead;
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use persia::allreduce::RingRendezvous;
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, RingConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::{DenseComm, Trainer};
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: usize = 2048;
+const SEED: u64 = 42;
+const BATCH: usize = 32;
+
+/// A trainer built through the same preset pipeline the CLI uses, so its
+/// config fingerprint provably matches `train-worker` children started with
+/// the matching flags.
+fn preset_trainer(steps: usize, world: usize) -> Trainer {
+    let preset = BenchPreset::by_name(PRESET).unwrap();
+    let model = preset.model(DENSE);
+    let emb_cfg = preset.embedding(&model, CAPACITY);
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster = ClusterConfig {
+        n_nn_workers: world,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: BATCH,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: SEED,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    t
+}
+
+fn ring_cfg(rank: usize, world: usize, rendezvous: &str) -> RingConfig {
+    RingConfig {
+        rendezvous: rendezvous.to_string(),
+        rank,
+        world,
+        bind_host: "127.0.0.1".to_string(),
+        timeout_ms: 30_000,
+        compress: false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process cross-check: run_rank × TCP ring vs run × thread ring.
+// ---------------------------------------------------------------------------
+
+/// Two `run_rank` calls in one test process, joined by a genuine loopback
+/// TCP ring and sharing one in-process PS — the exact structure of a
+/// 2-process deployment, minus the process boundary — must reproduce the
+/// all-threads `run` numbers.
+#[test]
+fn tcp_ring_run_rank_matches_threaded_run() {
+    let steps = 30;
+    let baseline = preset_trainer(steps, 2).run_rust().unwrap();
+
+    let template = preset_trainer(steps, 2);
+    let shared_ps = Arc::new(EmbeddingPs::new(
+        &template.emb_cfg,
+        template.model.emb_dim_per_group,
+        template.train.seed,
+    ));
+    let rz0 = RingRendezvous::bind(&ring_cfg(0, 2, "127.0.0.1:0")).unwrap();
+    let rendezvous = rz0.rendezvous_addr().unwrap().to_string();
+
+    let spawn_rank = |rank: usize, rz: Option<RingRendezvous>, rendezvous: String| {
+        let shared_ps = shared_ps.clone();
+        std::thread::spawn(move || {
+            let mut t = preset_trainer(steps, 2);
+            t.ps_backend = Some(shared_ps);
+            let fp = t.config_fingerprint();
+            let factory = t.rust_engine_factory();
+            t.run_rank(&factory, move |net| {
+                let rz = match rz {
+                    Some(rz) => rz,
+                    None => RingRendezvous::bind(&ring_cfg(rank, 2, &rendezvous))?,
+                };
+                Ok(Box::new(rz.connect(fp, net)?) as Box<dyn DenseComm>)
+            })
+            .unwrap()
+        })
+    };
+    let h0 = spawn_rank(0, Some(rz0), String::new());
+    let h1 = spawn_rank(1, None, rendezvous);
+    let out0 = h0.join().unwrap();
+    let out1 = h1.join().unwrap();
+
+    // Rank 0 carries the curves; both ranks end with identical dense params
+    // (the ring is synchronous).
+    assert_eq!(baseline.tracker.losses.len(), out0.tracker.losses.len());
+    for ((sa, la), (sb, lb)) in baseline.tracker.losses.iter().zip(&out0.tracker.losses) {
+        assert_eq!(sa, sb);
+        assert!((la - lb).abs() <= 1e-6, "step {sa}: loss {la} (threads) vs {lb} (tcp)");
+    }
+    let auc_a = baseline.report.final_auc.unwrap();
+    let auc_b = out0.report.final_auc.unwrap();
+    assert!((auc_a - auc_b).abs() <= 1e-6, "AUC {auc_a} (threads) vs {auc_b} (tcp)");
+    assert_eq!(baseline.final_params.len(), out0.final_params.len());
+    for (a, b) in baseline.final_params.iter().zip(&out0.final_params) {
+        assert!((a - b).abs() <= 1e-6, "final params diverged: {a} vs {b}");
+    }
+    for (a, b) in out0.final_params.iter().zip(&out1.final_params) {
+        assert_eq!(a, b, "ranks disagree on synchronized dense params");
+    }
+    // The run meaningfully trained.
+    let early: f32 =
+        baseline.tracker.losses[..5].iter().map(|(_, l)| l).sum::<f32>() / 5.0;
+    assert!(baseline.tracker.recent_loss(5).unwrap() < early, "did not learn");
+}
+
+// ---------------------------------------------------------------------------
+// Real child processes.
+// ---------------------------------------------------------------------------
+
+/// A spawned `persia` child with its stdout+stderr streamed into a line
+/// buffer (so pipes never fill) and kill-on-drop reaping.
+struct Proc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl Proc {
+    fn spawn(args: &[String]) -> Proc {
+        let exe = env!("CARGO_BIN_EXE_persia");
+        let mut child = Command::new(exe)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn persia child");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let mut readers = Vec::new();
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stderr = child.stderr.take().expect("stderr piped");
+        for reader in [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)] {
+            let lines = lines.clone();
+            readers.push(std::thread::spawn(move || {
+                let buf = std::io::BufReader::new(reader);
+                for line in buf.lines() {
+                    match line {
+                        Ok(l) => lines.lock().unwrap().push(l),
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Proc { child, lines, readers }
+    }
+
+    /// First buffered line containing `pat`, waiting up to `timeout`.
+    fn wait_for_line(&mut self, pat: &str, timeout: Duration) -> Option<String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(l) =
+                self.lines.lock().unwrap().iter().find(|l| l.contains(pat)).cloned()
+            {
+                return Some(l);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            if let Ok(Some(_)) = self.child.try_wait() {
+                // Child exited; drain whatever the readers still push.
+                std::thread::sleep(Duration::from_millis(100));
+                return self
+                    .lines
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .find(|l| l.contains(pat))
+                    .cloned();
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Wait for exit up to `timeout`.
+    fn wait_timeout(&mut self, timeout: Duration) -> Option<ExitStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.child.try_wait().expect("try_wait") {
+                Some(status) => return Some(status),
+                None if Instant::now() >= deadline => return None,
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    fn output_snapshot(&self) -> String {
+        self.lines.lock().unwrap().join("\n")
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.kill();
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Spawn one `persia serve-ps` shard and wait for its listening line.
+fn spawn_ps(node_range: Option<&str>) -> Proc {
+    let mut args: Vec<String> = [
+        "serve-ps",
+        "--preset",
+        PRESET,
+        "--dense",
+        DENSE,
+        "--addr",
+        "127.0.0.1:0",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    args.extend(["--shard-capacity".to_string(), CAPACITY.to_string()]);
+    args.extend(["--seed".to_string(), SEED.to_string()]);
+    if let Some(r) = node_range {
+        args.extend(["--node-range".to_string(), r.to_string()]);
+    }
+    let mut p = Proc::spawn(&args);
+    let line = p
+        .wait_for_line("listening on ", Duration::from_secs(30))
+        .unwrap_or_else(|| panic!("serve-ps never listened:\n{}", p.output_snapshot()));
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .expect("address in listening line")
+        .to_string();
+    p.lines.lock().unwrap().push(format!("ADDR {addr}"));
+    p
+}
+
+fn ps_addr(p: &Proc) -> String {
+    p.lines
+        .lock()
+        .unwrap()
+        .iter()
+        .find_map(|l| l.strip_prefix("ADDR ").map(|s| s.to_string()))
+        .expect("ps addr recorded")
+}
+
+/// Common `train-worker` argv. `steps` is separate so the fingerprint
+/// mismatch test can vary it per rank.
+fn worker_args(
+    rank: usize,
+    world: usize,
+    rendezvous: &str,
+    steps: usize,
+    remote_ps: &str,
+    ring_timeout_ms: u64,
+) -> Vec<String> {
+    [
+        "train-worker",
+        "--rank",
+        &rank.to_string(),
+        "--world",
+        &world.to_string(),
+        "--rendezvous",
+        rendezvous,
+        "--ring-timeout-ms",
+        &ring_timeout_ms.to_string(),
+        "--preset",
+        PRESET,
+        "--dense",
+        DENSE,
+        "--engine",
+        "rust",
+        "--mode",
+        "sync",
+        "--deterministic",
+        "true",
+        "--shard-capacity",
+        &CAPACITY.to_string(),
+        "--seed",
+        &SEED.to_string(),
+        "--batch",
+        &BATCH.to_string(),
+        "--lr",
+        "0.05",
+        "--tau",
+        "4",
+        "--steps",
+        &steps.to_string(),
+        "--eval-every",
+        &steps.to_string(),
+        "--emb-workers",
+        "2",
+        "--netsim",
+        "false",
+        "--compress",
+        "false",
+        "--remote-ps",
+        remote_ps,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Spawn rank 0 with an ephemeral rendezvous port and read the concrete
+/// address it prints for the other ranks.
+fn spawn_rank0(args_for: impl Fn(&str) -> Vec<String>) -> (Proc, String) {
+    let mut p = Proc::spawn(&args_for("127.0.0.1:0"));
+    let line = p
+        .wait_for_line("rendezvous listening on ", Duration::from_secs(30))
+        .unwrap_or_else(|| panic!("rank 0 never printed rendezvous:\n{}", p.output_snapshot()));
+    let addr = line
+        .split("rendezvous listening on ")
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .expect("rendezvous address")
+        .to_string();
+    (p, addr)
+}
+
+fn parse_losses(output: &str) -> Vec<(u64, f32)> {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("LOSSES "))
+        .unwrap_or_else(|| panic!("no LOSSES line in:\n{output}"));
+    line["LOSSES ".len()..]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|pair| {
+            let (s, l) = pair.split_once(':').expect("step:loss pair");
+            (s.parse().unwrap(), l.parse().unwrap())
+        })
+        .collect()
+}
+
+fn parse_parity(output: &str) -> (f32, f64) {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("PARITY "))
+        .unwrap_or_else(|| panic!("no PARITY line in:\n{output}"));
+    let mut loss = f32::NAN;
+    let mut auc = f64::NAN;
+    for field in line["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            loss = v.parse().unwrap();
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            auc = v.parse().unwrap_or(f64::NAN);
+        }
+    }
+    (loss, auc)
+}
+
+/// The acceptance criterion: a 2-process `train-worker` deployment over
+/// loopback TCP (against 2 PS shard processes) reproduces the
+/// single-process threaded run's losses and AUC within 1e-6.
+#[test]
+fn two_process_train_workers_match_threaded_run() {
+    let steps = 40;
+    let baseline = preset_trainer(steps, 2).run_rust().unwrap();
+    let base_auc = baseline.report.final_auc.unwrap();
+
+    let ps0 = spawn_ps(Some("0..2"));
+    let ps1 = spawn_ps(Some("2..4"));
+    let remote = format!("{},{}", ps_addr(&ps0), ps_addr(&ps1));
+
+    let (mut w0, rendezvous) =
+        spawn_rank0(|rdzv| worker_args(0, 2, rdzv, steps, &remote, 60_000));
+    let mut w1 = Proc::spawn(&worker_args(1, 2, &rendezvous, steps, &remote, 60_000));
+
+    let s0 = w0
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("rank 0 hung:\n{}", w0.output_snapshot()));
+    let s1 = w1
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("rank 1 hung:\n{}", w1.output_snapshot()));
+    // Let the reader threads drain the last lines.
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(s0.success(), "rank 0 failed:\n{}", w0.output_snapshot());
+    assert!(s1.success(), "rank 1 failed:\n{}", w1.output_snapshot());
+
+    let out0 = w0.output_snapshot();
+    let losses = parse_losses(&out0);
+    assert_eq!(losses.len(), baseline.tracker.losses.len());
+    for ((sa, la), (sb, lb)) in baseline.tracker.losses.iter().zip(&losses) {
+        assert_eq!(sa, sb);
+        assert!(
+            (la - lb).abs() <= 1e-6,
+            "step {sa}: loss {la} (threads) vs {lb} (2 processes)"
+        );
+    }
+    let (final_loss, final_auc) = parse_parity(&out0);
+    assert!(
+        (baseline.report.final_loss - final_loss).abs() <= 1e-6,
+        "final loss {} (threads) vs {final_loss} (2 processes)",
+        baseline.report.final_loss
+    );
+    assert!(
+        (base_auc - final_auc).abs() <= 1e-6,
+        "AUC {base_auc} (threads) vs {final_auc} (2 processes)"
+    );
+}
+
+/// SIGKILL one rank mid-ring: the survivors must exit nonzero within the
+/// ring timeout — no hang — and the test reaps every child.
+#[test]
+fn sigkill_one_rank_survivors_error_out_cleanly() {
+    let ps = spawn_ps(None);
+    let remote = ps_addr(&ps);
+    // Steps chosen far beyond what can finish before the kill.
+    let steps = 1_000_000;
+    let (mut w0, rendezvous) =
+        spawn_rank0(|rdzv| worker_args(0, 3, rdzv, steps, &remote, 8_000));
+    let mut w1 = Proc::spawn(&worker_args(1, 3, &rendezvous, steps, &remote, 8_000));
+    let mut w2 = Proc::spawn(&worker_args(2, 3, &rendezvous, steps, &remote, 8_000));
+
+    // Wait until the ring is actually established and training has begun.
+    w0.wait_for_line("ring connected: rank 0/3", Duration::from_secs(60))
+        .unwrap_or_else(|| panic!("ring never formed:\n{}", w0.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(500));
+
+    // SIGKILL rank 1 mid-ring.
+    w1.kill();
+
+    // Survivors notice (socket error or ring timeout) and exit nonzero
+    // well within the timeout budget.
+    let s0 = w0
+        .wait_timeout(Duration::from_secs(30))
+        .unwrap_or_else(|| panic!("rank 0 hung after peer SIGKILL:\n{}", w0.output_snapshot()));
+    let s2 = w2
+        .wait_timeout(Duration::from_secs(30))
+        .unwrap_or_else(|| panic!("rank 2 hung after peer SIGKILL:\n{}", w2.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(!s0.success(), "rank 0 must fail when a ring peer dies");
+    assert!(!s2.success(), "rank 2 must fail when a ring peer dies");
+    let combined = format!("{}\n{}", w0.output_snapshot(), w2.output_snapshot());
+    assert!(
+        combined.contains("ring"),
+        "survivor errors should mention the ring:\n{combined}"
+    );
+    // Drop reaps w0/w2 handles and the PS child; w1 was already reaped.
+}
+
+/// A worker whose flags differ (here: a different --steps) is rejected at
+/// the rendezvous by the config-fingerprint handshake; both sides fail.
+#[test]
+fn mismatched_worker_rejected_at_rendezvous() {
+    let ps = spawn_ps(None);
+    let remote = ps_addr(&ps);
+    let (mut w0, rendezvous) =
+        spawn_rank0(|rdzv| worker_args(0, 2, rdzv, 40, &remote, 60_000));
+    // Same PS flags (so the PS handshake passes), different train length.
+    let mut w1 = Proc::spawn(&worker_args(1, 2, &rendezvous, 41, &remote, 60_000));
+
+    let s0 = w0
+        .wait_timeout(Duration::from_secs(120))
+        .unwrap_or_else(|| panic!("rank 0 hung on mismatch:\n{}", w0.output_snapshot()));
+    let s1 = w1
+        .wait_timeout(Duration::from_secs(120))
+        .unwrap_or_else(|| panic!("rank 1 hung on mismatch:\n{}", w1.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(!s0.success(), "rank 0 must reject the mismatched worker");
+    assert!(!s1.success(), "the mismatched worker must fail");
+    assert!(
+        w0.output_snapshot().contains("fingerprint"),
+        "rank 0 error should cite the fingerprint:\n{}",
+        w0.output_snapshot()
+    );
+    assert!(
+        w1.output_snapshot().contains("rejected"),
+        "rank 1 should report the rejection:\n{}",
+        w1.output_snapshot()
+    );
+}

@@ -1,0 +1,297 @@
+//! Property tests for the dense-gradient AllReduce stack (§4.2.3):
+//! ring AllReduce (threaded and TCP) vs the central-PS reduce vs a serial
+//! sum, plus `FlatBuckets` flatten/unflatten roundtrips.
+//!
+//! Float addition is commutative but not associative, so "ring == serial"
+//! splits into two exact statements:
+//! * On inputs whose sums are exactly representable (small dyadic
+//!   rationals), EVERY reduction order gives the same bits — ring, central
+//!   and serial must agree to 0 ULP.
+//! * On arbitrary floats, the ring's deterministic reduction order is
+//!   replayed by `ring::reference_sum`; every ring member (any rank, thread
+//!   or TCP transport) must match it to 0 ULP, and central == serial to
+//!   0 ULP (both accumulate in rank order).
+
+use std::sync::Arc;
+
+use persia::allreduce::ring::{chunk_range, reference_mean, reference_sum};
+use persia::allreduce::{central_reduce, FlatBuckets, RingGroup};
+use persia::comm::NetSim;
+use persia::config::NetModelConfig;
+use persia::tensor::Tensor;
+use persia::util::quickcheck::forall;
+use persia::util::Rng;
+
+/// Run the threaded ring over `inputs`; returns each rank's result (mean).
+fn ring_mean_outputs(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let k = inputs.len();
+    let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+    let members = RingGroup::new(k, net);
+    let handles: Vec<_> = members
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(m, mut buf)| {
+            std::thread::spawn(move || {
+                m.all_reduce_mean(&mut buf);
+                buf
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Serial sum in rank order 0..k (the same association `central_reduce`
+/// uses), then the same `* (1/k)` scaling every implementation applies.
+fn serial_mean(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let n = inputs[0].len();
+    let mut out = vec![0.0f32; n];
+    for input in inputs {
+        for (o, &x) in out.iter_mut().zip(input) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / inputs.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Inputs whose elements are dyadic rationals small enough that any sum of
+/// up to 8 of them is exactly representable in f32 — every reduction order
+/// then yields identical bits.
+fn gen_exact_inputs(rng: &mut Rng) -> (usize, Vec<Vec<f32>>) {
+    let k = rng.range(1, 9) as usize; // worker counts 1..=8
+    let n = rng.range(1, 120) as usize; // arbitrary tensor sizes, incl. n < k
+    let inputs = (0..k)
+        .map(|_| {
+            (0..n)
+                .map(|_| (rng.range(0, 2049) as f32 - 1024.0) / 32.0)
+                .collect::<Vec<f32>>()
+        })
+        .collect();
+    (k, inputs)
+}
+
+/// The quickcheck shrinker mutates structure freely; reject degenerate or
+/// ragged shrink candidates instead of panicking inside the property.
+fn well_formed(inputs: &[Vec<f32>]) -> bool {
+    !inputs.is_empty()
+        && !inputs[0].is_empty()
+        && inputs.iter().all(|v| v.len() == inputs[0].len())
+}
+
+#[test]
+fn property_ring_central_serial_identical_on_exact_inputs() {
+    forall(
+        0xA11,
+        60,
+        |rng: &mut Rng| gen_exact_inputs(rng).1,
+        |inputs| {
+            if !well_formed(inputs) {
+                return false;
+            }
+            let serial = serial_mean(inputs);
+            let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+            let (central, _) = central_reduce(inputs, &net);
+            let ring = ring_mean_outputs(inputs);
+            let reference = reference_mean(inputs);
+            central == serial
+                && reference == serial
+                && ring.iter().all(|out| *out == serial)
+        },
+    );
+}
+
+#[test]
+fn property_ring_matches_reference_replay_on_arbitrary_floats() {
+    forall(
+        0xB22,
+        60,
+        |rng: &mut Rng| {
+            let (_, mut inputs) = gen_exact_inputs(rng);
+            for input in inputs.iter_mut() {
+                for x in input.iter_mut() {
+                    *x = rng.normal() * 10.0f32.powi(rng.range(0, 6) as i32 - 3);
+                }
+            }
+            inputs
+        },
+        |inputs| {
+            if !well_formed(inputs) {
+                return false;
+            }
+            // Every rank's ring output replays the documented deterministic
+            // reduction order bit-for-bit...
+            let reference = reference_mean(inputs);
+            let ring = ring_mean_outputs(inputs);
+            if !ring.iter().all(|out| *out == reference) {
+                return false;
+            }
+            // ...and central == serial exactly (identical rank-order sums).
+            let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+            let (central, _) = central_reduce(inputs, &net);
+            if central != serial_mean(inputs) {
+                return false;
+            }
+            // Ring vs serial: different associativity. Bound the gap by the
+            // total input magnitude per element (robust to cancellation).
+            let n = inputs[0].len();
+            (0..n).all(|i| {
+                let mag: f32 = inputs.iter().map(|v| v[i].abs()).sum();
+                (central[i] - reference[i]).abs() <= mag * 1e-5 + 1e-30
+            })
+        },
+    );
+}
+
+#[test]
+fn property_reference_sum_agrees_with_chunkwise_definition() {
+    // reference_sum's chunk c accumulates ranks c, c+1, ... left-associated;
+    // recompute it directly from chunk_range to pin the contract.
+    forall(
+        0xC33,
+        80,
+        |rng: &mut Rng| gen_exact_inputs(rng),
+        |(k, inputs)| {
+            if !well_formed(inputs) || *k != inputs.len() {
+                return false;
+            }
+            let n = inputs[0].len();
+            let got = reference_sum(inputs);
+            for c in 0..*k {
+                let r = chunk_range(n, *k, c);
+                let mut want = inputs[c % *k][r.clone()].to_vec();
+                for hop in 1..*k {
+                    let j = (c + hop) % *k;
+                    for (a, &b) in want.iter_mut().zip(&inputs[j][r.clone()]) {
+                        *a = b + *a;
+                    }
+                }
+                if got[r.clone()] != want[..] {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// FlatBuckets: flatten/unflatten on arbitrary parameter layouts.
+// ---------------------------------------------------------------------------
+
+fn gen_shapes(rng: &mut Rng) -> Vec<Vec<usize>> {
+    let n_tensors = rng.range(1, 7) as usize;
+    (0..n_tensors)
+        .map(|_| {
+            let dims = rng.range(1, 4) as usize;
+            (0..dims).map(|_| rng.range(1, 7) as usize).collect()
+        })
+        .collect()
+}
+
+fn tensors_for(shapes: &[Vec<usize>], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    shapes
+        .iter()
+        .map(|s| Tensor::from_vec(s, rng.normal_vec(s.iter().product())))
+        .collect()
+}
+
+#[test]
+fn property_flatbuckets_roundtrip_arbitrary_layouts_and_bucket_sizes() {
+    forall(
+        0xD44,
+        100,
+        |rng: &mut Rng| (gen_shapes(rng), rng.range(1, 40) as usize, rng.next_u64()),
+        |(shapes, bucket_elems, seed)| {
+            // Reject degenerate shrink candidates (empty shapes, zero dims,
+            // zero bucket size) rather than panicking mid-shrink.
+            if shapes.is_empty()
+                || *bucket_elems == 0
+                || shapes.iter().any(|s| s.is_empty() || s.iter().any(|&d| d == 0))
+            {
+                return false;
+            }
+            let ts = tensors_for(shapes, *seed);
+            let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+            let fb = FlatBuckets::flatten(&ts, *bucket_elems);
+            // Flat data is the concatenation in declaration order.
+            let want: Vec<f32> = ts.iter().flat_map(|t| t.data().to_vec()).collect();
+            if fb.flat() != want.as_slice() || fb.total_elems() != total {
+                return false;
+            }
+            // Bucket count is the ceiling division.
+            if fb.n_buckets() != (total + *bucket_elems - 1) / *bucket_elems {
+                return false;
+            }
+            // Roundtrips: fresh allocation and into existing storage.
+            if fb.unflatten(shapes) != ts {
+                return false;
+            }
+            let mut out: Vec<Tensor> =
+                shapes.iter().map(|s| Tensor::zeros(s)).collect();
+            fb.unflatten_into(&mut out);
+            out == ts
+        },
+    );
+}
+
+#[test]
+fn property_flat_allreduce_equals_per_tensor_reduce_on_exact_inputs() {
+    // Reducing the flattened concatenation then unflattening must equal
+    // reducing each tensor separately — on exactly-summable inputs, to the
+    // bit, regardless of how chunk boundaries fall across tensors.
+    forall(
+        0xE55,
+        40,
+        |rng: &mut Rng| {
+            let k = rng.range(2, 6) as usize;
+            let shapes = gen_shapes(rng);
+            let per_worker: Vec<Vec<Vec<f32>>> = (0..k)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            (0..s.iter().product::<usize>())
+                                .map(|_| (rng.range(0, 2049) as f32 - 1024.0) / 32.0)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            (shapes, per_worker)
+        },
+        |(shapes, per_worker)| {
+            let k = per_worker.len();
+            // Reject degenerate/ragged shrink candidates.
+            if k == 0
+                || shapes.is_empty()
+                || shapes.iter().any(|s| s.is_empty() || s.iter().any(|&d| d == 0))
+                || per_worker.iter().any(|ts| {
+                    ts.len() != shapes.len()
+                        || ts.iter().zip(shapes.iter()).any(|(t, s)| {
+                            t.len() != s.iter().product::<usize>()
+                        })
+                })
+            {
+                return false;
+            }
+            // Flat path: concatenate each worker's tensors, ring-reduce.
+            let flat_inputs: Vec<Vec<f32>> = per_worker
+                .iter()
+                .map(|ts| ts.iter().flat_map(|t| t.clone()).collect())
+                .collect();
+            let flat_out = ring_mean_outputs(&flat_inputs);
+            // Per-tensor path: serial mean of each tensor independently.
+            let mut want = Vec::new();
+            for ti in 0..shapes.len() {
+                let inputs: Vec<Vec<f32>> =
+                    (0..k).map(|w| per_worker[w][ti].clone()).collect();
+                want.extend(serial_mean(&inputs));
+            }
+            flat_out.iter().all(|out| *out == want)
+        },
+    );
+}
