@@ -1,0 +1,290 @@
+//! The paper's FULL three-tier topology, every role its own OS process on
+//! loopback: 2 `persia serve-ps` embedding-PS shards × 1
+//! `persia serve-embedding-worker` (the pipelined middle tier) × 2
+//! `persia train-worker` NN ranks joined by the rank-0 TCP ring rendezvous
+//! — cross-checked against the in-process threaded run (≤ 1e-6 parity).
+//!
+//! ```bash
+//! cargo build --release            # builds the `persia` binary it spawns
+//! cargo run --release --example three_tier_train
+//! ```
+//!
+//! The by-hand equivalent:
+//!
+//! ```bash
+//! persia serve-ps --preset taobao --dense tiny --shard-capacity 2048 \
+//!     --seed 42 --addr 127.0.0.1:7700 --node-range 0..2 &
+//! persia serve-ps --preset taobao --dense tiny --shard-capacity 2048 \
+//!     --seed 42 --addr 127.0.0.1:7701 --node-range 2..4 &
+//! persia serve-embedding-worker --addr 127.0.0.1:7900 \
+//!     --remote-ps 127.0.0.1:7700,127.0.0.1:7701 <train flags> &
+//! persia train-worker --rank 0 --world 2 --rendezvous 127.0.0.1:7800 \
+//!     --embedding-workers 127.0.0.1:7900 <train flags> &
+//! persia train-worker --rank 1 --world 2 --rendezvous 127.0.0.1:7800 \
+//!     --embedding-workers 127.0.0.1:7900 <train flags>
+//! ```
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::channel;
+
+use anyhow::{Context, Result};
+
+use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: &str = "2048";
+const SEED: &str = "42";
+const STEPS: usize = 40;
+const BATCH: usize = 32;
+
+/// The `persia` binary next to this example's executable
+/// (`target/<profile>/examples/three_tier_train` → `target/<profile>/persia`).
+fn persia_bin() -> Result<PathBuf> {
+    let exe = std::env::current_exe().context("current_exe")?;
+    let dir = exe
+        .parent()
+        .and_then(|p| p.parent())
+        .context("example executable has no target dir")?;
+    let bin = dir.join(format!("persia{}", std::env::consts::EXE_SUFFIX));
+    anyhow::ensure!(
+        bin.exists(),
+        "persia binary not found at {} — run `cargo build --release` first",
+        bin.display()
+    );
+    Ok(bin)
+}
+
+/// A child whose stdout is streamed to our stdout (prefixed) while scanning
+/// for marker lines; killed on drop so a failure never leaks processes.
+struct Proc {
+    child: Child,
+    reader: Option<std::thread::JoinHandle<Vec<String>>>,
+}
+
+impl Proc {
+    /// Spawn and return a channel yielding every stdout line as it arrives.
+    fn spawn(
+        tag: &'static str,
+        args: &[String],
+    ) -> Result<(Proc, std::sync::mpsc::Receiver<String>)> {
+        let mut child = Command::new(persia_bin()?)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning {tag}"))?;
+        let stdout = child.stdout.take().context("stdout piped")?;
+        let (tx, rx) = channel();
+        let reader = std::thread::spawn(move || {
+            let mut all = Vec::new();
+            for line in std::io::BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                println!("[{tag}] {line}");
+                all.push(line.clone());
+                let _ = tx.send(line);
+            }
+            all
+        });
+        Ok((Proc { child, reader: Some(reader) }, rx))
+    }
+
+    fn wait_success(&mut self, tag: &str) -> Result<Vec<String>> {
+        let status = self.child.wait().with_context(|| format!("waiting for {tag}"))?;
+        let lines = self
+            .reader
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default();
+        anyhow::ensure!(status.success(), "{tag} failed with {status}");
+        Ok(lines)
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Wait (bounded) for the first line containing `pat`; returns the suffix
+/// after `pat`'s first whitespace-delimited token.
+fn await_addr(rx: &std::sync::mpsc::Receiver<String>, pat: &str, what: &str) -> Result<String> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        anyhow::ensure!(!remaining.is_zero(), "timed out waiting for {what}");
+        match rx.recv_timeout(remaining) {
+            Ok(line) if line.contains(pat) => {
+                return line
+                    .split(pat)
+                    .nth(1)
+                    .and_then(|r| r.split_whitespace().next())
+                    .map(|s| s.to_string())
+                    .with_context(|| format!("no address in {what} line"));
+            }
+            Ok(_) => continue,
+            Err(_) => anyhow::bail!("stream ended before {what}"),
+        }
+    }
+}
+
+/// The train-loop flags every process of the deployment shares verbatim.
+fn shared_flags() -> Vec<String> {
+    [
+        "--preset", PRESET, "--dense", DENSE, "--engine", "rust", "--mode", "sync",
+        "--deterministic", "true", "--shard-capacity", CAPACITY, "--seed", SEED, "--lr",
+        "0.05", "--tau", "4", "--emb-workers", "1", "--netsim", "false", "--compress",
+        "false",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--batch".to_string(),
+        BATCH.to_string(),
+        "--steps".to_string(),
+        STEPS.to_string(),
+        "--eval-every".to_string(),
+        STEPS.to_string(),
+    ])
+    .collect()
+}
+
+fn serve_ps_args(node_range: &str) -> Vec<String> {
+    let mut args = vec!["serve-ps".to_string()];
+    args.extend(shared_flags());
+    args.extend([
+        "--addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--node-range".to_string(),
+        node_range.to_string(),
+    ]);
+    args
+}
+
+fn serve_ew_args(remote_ps: &str) -> Vec<String> {
+    let mut args = vec!["serve-embedding-worker".to_string()];
+    args.extend(shared_flags());
+    args.extend([
+        "--addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--world".to_string(),
+        "2".to_string(),
+        "--remote-ps".to_string(),
+        remote_ps.to_string(),
+    ]);
+    args
+}
+
+fn worker_args(rank: usize, rendezvous: &str, embedding_workers: &str) -> Vec<String> {
+    let mut args = vec![
+        "train-worker".to_string(),
+        "--rank".to_string(),
+        rank.to_string(),
+        "--world".to_string(),
+        "2".to_string(),
+        "--rendezvous".to_string(),
+        rendezvous.to_string(),
+    ];
+    args.extend(shared_flags());
+    args.extend(["--embedding-workers".to_string(), embedding_workers.to_string()]);
+    args
+}
+
+/// The threaded single-process reference with the exact same preset knobs.
+fn threaded_reference() -> Result<(f32, f64)> {
+    let preset = BenchPreset::by_name(PRESET).context("preset")?;
+    let model = preset.model(DENSE);
+    let emb_cfg = preset.embedding(&model, CAPACITY.parse()?);
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster =
+        ClusterConfig { n_nn_workers: 2, n_emb_workers: 1, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: BATCH,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps: STEPS,
+        eval_every: STEPS,
+        seed: SEED.parse()?,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED.parse()?);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    let out = t.run_rust()?;
+    Ok((out.report.final_loss, out.report.final_auc.context("reference AUC")?))
+}
+
+fn main() -> Result<()> {
+    // 1. Two PS shard processes, each owning half the PS nodes.
+    let (ps0, ps0_rx) = Proc::spawn("ps0", &serve_ps_args("0..2"))?;
+    let (ps1, ps1_rx) = Proc::spawn("ps1", &serve_ps_args("2..4"))?;
+    let addr0 = await_addr(&ps0_rx, "listening on ", "ps0 address")?;
+    let addr1 = await_addr(&ps1_rx, "listening on ", "ps1 address")?;
+    let remote_ps = format!("{addr0},{addr1}");
+    println!("== tier 1 up: 2 PS shard processes at {remote_ps}");
+
+    // 2. The embedding-worker tier: one pipelined prefetcher process
+    //    between the PS shards and the NN ring.
+    let (ew, ew_rx) = Proc::spawn("ew0", &serve_ew_args(&remote_ps))?;
+    let ew_addr = await_addr(&ew_rx, "embedding worker listening on ", "embedding worker")?;
+    println!("== tier 2 up: embedding worker at {ew_addr}");
+
+    // 3. Two NN-worker rank processes; rank 0 hosts the ring rendezvous.
+    let (mut w0, w0_rx) = Proc::spawn("rank0", &worker_args(0, "127.0.0.1:0", &ew_addr))?;
+    let rendezvous = await_addr(&w0_rx, "rendezvous listening on ", "rendezvous address")?;
+    let (mut w1, _w1_rx) = Proc::spawn("rank1", &worker_args(1, &rendezvous, &ew_addr))?;
+    println!("== tier 3 up: 2 train-worker ranks (rendezvous {rendezvous})");
+
+    // 4. Both ranks finish; rank 0 prints the machine-readable parity line.
+    let w0_lines = w0.wait_success("rank 0")?;
+    w1.wait_success("rank 1")?;
+    let parity = w0_lines
+        .iter()
+        .find(|l| l.starts_with("PARITY "))
+        .context("rank 0 printed no PARITY line")?;
+    let mut final_loss = f32::NAN;
+    let mut final_auc = f64::NAN;
+    for field in parity["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            final_loss = v.parse()?;
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            final_auc = v.parse()?;
+        }
+    }
+
+    // 5. Cross-check against the single-process threaded run.
+    let (ref_loss, ref_auc) = threaded_reference()?;
+    let loss_gap = (ref_loss - final_loss).abs();
+    let auc_gap = (ref_auc - final_auc).abs();
+    println!(
+        "== parity: loss {final_loss:.6} vs threaded {ref_loss:.6} (gap {loss_gap:.2e}), \
+         AUC {final_auc:.6} vs {ref_auc:.6} (gap {auc_gap:.2e})"
+    );
+    anyhow::ensure!(loss_gap <= 1e-6, "loss diverged across the three-tier deployment");
+    anyhow::ensure!(auc_gap <= 1e-6, "AUC diverged across the three-tier deployment");
+
+    // 6. Teardown: all three tiers are killed by Drop (state is ephemeral).
+    drop(ps0_rx);
+    drop(ps1_rx);
+    drop(ew_rx);
+    drop(ew);
+    drop(ps0);
+    drop(ps1);
+    println!(
+        "== three-tier deployment OK: 2 serve-ps × 1 serve-embedding-worker × \
+         2 train-worker, parity ≤ 1e-6"
+    );
+    Ok(())
+}

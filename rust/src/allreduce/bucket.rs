@@ -39,18 +39,22 @@ impl FlatBuckets {
         Self { flat, spans, buckets }
     }
 
+    /// Number of fixed-size buckets covering the flat buffer.
     pub fn n_buckets(&self) -> usize {
         self.buckets.len()
     }
 
+    /// Total f32 elements across every fused tensor.
     pub fn total_elems(&self) -> usize {
         self.flat.len()
     }
 
+    /// The fused flat buffer (tensors back to back).
     pub fn flat(&self) -> &[f32] {
         &self.flat
     }
 
+    /// Mutable view of the fused flat buffer.
     pub fn flat_mut(&mut self) -> &mut [f32] {
         &mut self.flat
     }

@@ -108,10 +108,12 @@ impl RingGroup {
 }
 
 impl RingMember {
+    /// This member's rank in `0..world`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Number of ring members.
     pub fn world(&self) -> usize {
         self.k
     }

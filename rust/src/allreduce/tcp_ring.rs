@@ -47,10 +47,15 @@ use super::ring::chunk_range;
 /// Wire message kinds of the NN-worker ring (disjoint from the PS service's
 /// 0x5xxx range).
 pub const KIND_RDZV_HELLO: u32 = 0x6001;
+/// Rendezvous acceptance: carries the full ring address table.
 pub const KIND_RDZV_WELCOME: u32 = 0x6002;
+/// Rendezvous rejection (world/fingerprint mismatch, duplicate rank).
 pub const KIND_RDZV_REJECT: u32 = 0x6003;
+/// Ring-neighbour introduction after the rendezvous.
 pub const KIND_RING_HELLO: u32 = 0x6004;
+/// One AllReduce chunk segment (seq-numbered).
 pub const KIND_RING_DATA: u32 = 0x6005;
+/// The deterministic-ordering token (zero-length payload).
 pub const KIND_RING_TOKEN: u32 = 0x6006;
 
 /// Largest f32 payload per DATA frame (16 KiB). Every rank alternates
@@ -394,10 +399,12 @@ pub struct TcpRingMember {
 }
 
 impl TcpRingMember {
+    /// This process's rank in `0..world`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Total ranks in the ring.
     pub fn world(&self) -> usize {
         self.world
     }

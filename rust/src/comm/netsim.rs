@@ -13,6 +13,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::config::NetModelConfig;
 
 /// Link classes in the Persia topology.
+///
+/// The three-tier deployment names its links after the roles they join; the
+/// [`Link::PS_EW`] / [`Link::EW_NN`] associated constants map those names
+/// onto the two hardware classes so every tier charges the same accountant:
+///
+/// ```text
+///   embedding PS ──PS_EW (CpuCpu)──▶ embedding worker ──EW_NN (CpuGpu)──▶ NN worker
+///                                                         NN worker ◀─GpuGpu─▶ NN worker
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Link {
     /// NN worker <-> NN worker (AllReduce fabric).
@@ -21,6 +30,19 @@ pub enum Link {
     CpuGpu,
     /// embedding worker <-> embedding PS (CPU fabric; same class as CpuGpu).
     CpuCpu,
+}
+
+impl Link {
+    /// The embedding-PS ↔ embedding-worker link (row fetches and gradient
+    /// puts; CPU-fabric class). Charged by [`crate::worker::EmbeddingWorker`]
+    /// for the deduplicated rows it actually moves — in-process and in the
+    /// `serve-embedding-worker` tier alike.
+    pub const PS_EW: Link = Link::CpuCpu;
+    /// The embedding-worker ↔ NN-worker link (pooled activations forward,
+    /// activation gradients backward; PCIe/Ethernet class). In-process the
+    /// transfer is simulated; across the `serve-embedding-worker` wire it is
+    /// charged with the frame bytes actually sent.
+    pub const EW_NN: Link = Link::CpuGpu;
 }
 
 /// Thread-safe accumulator of simulated transfer time.
@@ -196,6 +218,20 @@ mod tests {
         assert_eq!(want, got);
         // Accumulator truncates to whole nanoseconds.
         assert!((sim.link_ns(Link::GpuGpu) as f64 / 1e9 - want).abs() < 2e-9);
+    }
+
+    #[test]
+    fn tier_link_aliases_share_their_hardware_class_accounting() {
+        // PS↔EW and EW↔NN are names for the Cpu links: bytes recorded under
+        // the alias land on the aliased class (one accountant per class).
+        let sim = NetSim::new(NetModelConfig::paper_like());
+        sim.record(Link::PS_EW, 100);
+        sim.record(Link::EW_NN, 200);
+        assert_eq!(sim.link_bytes(Link::CpuCpu), 100);
+        assert_eq!(sim.link_bytes(Link::CpuGpu), 200);
+        assert_eq!(sim.link_bytes(Link::GpuGpu), 0);
+        assert_eq!(Link::PS_EW, Link::CpuCpu);
+        assert_eq!(Link::EW_NN, Link::CpuGpu);
     }
 
     #[test]

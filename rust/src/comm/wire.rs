@@ -46,6 +46,17 @@ impl SectionTag {
 /// Layout: `[magic u32][msg_kind u32][n_sections u32]` then per section
 /// `[tag u8][pad 3][len_elems u64]`, then all payloads back to back, each
 /// 8-byte aligned.
+///
+/// ```
+/// use persia::comm::wire::{WireReader, WireWriter};
+/// let mut w = WireWriter::new(7);
+/// w.put_u64(&[1, 2, 3]).put_f32(&[0.5, -2.0]);
+/// let msg = w.finish();
+/// let r = WireReader::parse(&msg).unwrap();
+/// assert_eq!(r.kind(), 7);
+/// assert_eq!(r.u64(0).unwrap(), vec![1, 2, 3]);
+/// assert_eq!(r.f32(1).unwrap(), vec![0.5, -2.0]);
+/// ```
 pub struct WireWriter {
     buf: Vec<u8>,
     sections: Vec<(SectionTag, usize, usize)>, // tag, offset, elems

@@ -1,5 +1,6 @@
-//! Configuration for the TCP service mode (`persia serve-ps` /
-//! `persia train --remote-ps`) and the multi-process NN-worker ring
+//! Configuration for the TCP service mode (`persia serve-ps`,
+//! `persia serve-embedding-worker`, `persia train --remote-ps` /
+//! `--embedding-workers`) and the multi-process NN-worker ring
 //! (`persia train-worker`).
 
 use anyhow::{bail, Context, Result};
@@ -48,6 +49,13 @@ impl Default for ServiceConfig {
 
 impl ServiceConfig {
     /// A config pointing at `addr` with defaults otherwise.
+    ///
+    /// ```
+    /// use persia::config::ServiceConfig;
+    /// let cfg = ServiceConfig::at("127.0.0.1:7700, 127.0.0.1:7701");
+    /// cfg.validate().unwrap();
+    /// assert_eq!(cfg.shard_addrs(), vec!["127.0.0.1:7700", "127.0.0.1:7701"]);
+    /// ```
     pub fn at(addr: impl Into<String>) -> Self {
         Self { addr: addr.into(), ..Self::default() }
     }
@@ -71,6 +79,45 @@ impl ServiceConfig {
         }
         if self.client_conns == 0 {
             bail!("client_conns must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// How one `persia serve-embedding-worker` process presents itself: where
+/// it listens and how deep its prefetch pipeline runs. The client-side
+/// knobs (pool size, retry policy) reuse [`ServiceConfig`], with the
+/// comma-separated `--embedding-workers` list riding in
+/// [`ServiceConfig::addr`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EmbWorkerConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port, printed
+    /// for orchestrators).
+    pub addr: String,
+    /// This process's embedding-worker rank (top byte of the sample ids it
+    /// mints; purely an identifier, not numerics).
+    pub ew_rank: u8,
+    /// In-flight batches per NN rank across the draw/assemble/serve stages.
+    /// `None` = auto: 1 in deterministic mode (bitwise parity needs
+    /// on-demand lookups with ordered puts), else the train mode's own
+    /// pipeline depth — on-demand for FullSync (zero staleness is its
+    /// contract), τ for the hybrid modes, 2τ for FullAsync — so PS latency
+    /// hides behind dense compute exactly where the mode allows staleness.
+    pub pipeline_depth: Option<usize>,
+}
+
+impl Default for EmbWorkerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7900".to_string(), ew_rank: 0, pipeline_depth: None }
+    }
+}
+
+impl EmbWorkerConfig {
+    /// Error on malformed listen addresses or a zero pipeline depth.
+    pub fn validate(&self) -> Result<()> {
+        validate_addr(&self.addr)?;
+        if self.pipeline_depth == Some(0) {
+            bail!("--pipeline-depth must be >= 1 (1 = on-demand, no readahead)");
         }
         Ok(())
     }
@@ -209,6 +256,23 @@ mod tests {
     #[test]
     fn port_zero_is_legal_for_ephemeral_binds() {
         ServiceConfig::at("127.0.0.1:0").validate().unwrap();
+    }
+
+    #[test]
+    fn emb_worker_config_validation() {
+        EmbWorkerConfig::default().validate().unwrap();
+        let ok = EmbWorkerConfig {
+            addr: "0.0.0.0:0".into(),
+            ew_rank: 3,
+            pipeline_depth: Some(4),
+        };
+        ok.validate().unwrap();
+        assert!(EmbWorkerConfig { pipeline_depth: Some(0), ..EmbWorkerConfig::default() }
+            .validate()
+            .is_err());
+        assert!(EmbWorkerConfig { addr: "nocolon".into(), ..EmbWorkerConfig::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub struct CheckpointManager {
 }
 
 impl CheckpointManager {
+    /// Create a manager rooted at `dir` (created if missing).
     pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
         std::fs::create_dir_all(&dir)?;
         Ok(Self { dir: dir.as_ref().to_path_buf() })
@@ -121,6 +122,7 @@ impl CheckpointManager {
         Ok(())
     }
 
+    /// Whether a checkpoint file for `node` exists under the root.
     pub fn exists(&self, node: usize) -> bool {
         self.node_path(node).exists()
     }

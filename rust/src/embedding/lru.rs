@@ -84,6 +84,7 @@ pub struct LruStore {
 }
 
 impl LruStore {
+    /// An empty store holding up to `capacity` rows of `row_width` floats.
     pub fn new(capacity: usize, row_width: usize) -> Self {
         assert!(capacity > 0 && capacity < NIL as usize);
         assert!(row_width > 0);
@@ -99,18 +100,22 @@ impl LruStore {
         }
     }
 
+    /// Materialized rows currently resident.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no rows are resident.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Maximum resident rows before LRU eviction kicks in.
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
 
+    /// Floats per row (embedding vector ⊕ optimizer state).
     pub fn row_width(&self) -> usize {
         self.row_width
     }

@@ -10,12 +10,16 @@ use crate::config::OptimizerKind;
 /// Stateless descriptor; all state is in the row's tail floats.
 #[derive(Clone, Copy, Debug)]
 pub struct RowOptimizer {
+    /// Which update rule the row's tail state encodes.
     pub kind: OptimizerKind,
+    /// Row-wise learning rate.
     pub lr: f32,
+    /// Embedding vector width (state floats live after it).
     pub dim: usize,
 }
 
 impl RowOptimizer {
+    /// Descriptor for `dim`-wide rows under `kind` with learning rate `lr`.
     pub fn new(kind: OptimizerKind, lr: f32, dim: usize) -> Self {
         Self { kind, lr, dim }
     }

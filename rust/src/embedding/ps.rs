@@ -139,6 +139,7 @@ impl EmbeddingPs {
         }
     }
 
+    /// Embedding vector width per row.
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -148,6 +149,7 @@ impl EmbeddingPs {
         self.n_nodes_global
     }
 
+    /// Lock-striped sub-shards per node.
     pub fn shards_per_node(&self) -> usize {
         self.nodes[0].len()
     }
@@ -157,6 +159,7 @@ impl EmbeddingPs {
         self.node_start..self.node_start + self.nodes.len()
     }
 
+    /// The row-placement policy this PS routes with.
     pub fn partition_policy(&self) -> PartitionPolicy {
         self.policy
     }
@@ -263,6 +266,7 @@ impl EmbeddingPs {
         self.nodes.iter().flatten().map(|s| s.len()).sum()
     }
 
+    /// LRU evictions across all owned shards.
     pub fn total_evictions(&self) -> u64 {
         self.nodes.iter().flatten().map(|s| s.evictions()).sum()
     }

@@ -33,6 +33,8 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// One locked LRU of `capacity` rows under `opt`, materializing rows
+    /// deterministically from `seed`.
     pub fn new(capacity: usize, opt: RowOptimizer, seed: u64) -> Self {
         Self {
             lru: Mutex::new(LruStore::new(capacity, opt.row_width())),
@@ -43,6 +45,7 @@ impl Shard {
         }
     }
 
+    /// Embedding vector width served by this shard.
     pub fn dim(&self) -> usize {
         self.opt.dim
     }
@@ -83,10 +86,12 @@ impl Shard {
         self.lru.lock().unwrap().len()
     }
 
+    /// True when no rows have materialized yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// LRU evictions since construction.
     pub fn evictions(&self) -> u64 {
         self.lru.lock().unwrap().evictions()
     }

@@ -31,7 +31,9 @@ use crate::comm::NetSim;
 
 /// The dense AllReduce fabric one NN-worker rank holds.
 pub trait DenseComm: Send {
+    /// This rank's position in `0..world`.
     fn rank(&self) -> usize;
+    /// Total ranks in the fabric.
     fn world(&self) -> usize;
 
     /// In-place AllReduce (mean) of `buf` across all ranks; returns the

@@ -8,26 +8,33 @@
 /// One phase occurrence on the timeline.
 #[derive(Clone, Debug)]
 pub struct GanttEvent {
+    /// Training step the phase belongs to.
     pub step: u64,
+    /// Phase name (one of [`PHASES`]).
     pub phase: &'static str,
     /// Simulated start time (seconds from run start).
     pub start: f64,
+    /// Simulated duration in seconds.
     pub dur: f64,
 }
 
 /// Ordered event log for one run.
 #[derive(Clone, Debug, Default)]
 pub struct GanttTimeline {
+    /// Every recorded phase occurrence, in push order.
     pub events: Vec<GanttEvent>,
 }
 
+/// The five pipeline stages of one training step (Fig. 3 row order).
 pub const PHASES: [&str; 5] = ["emb_prep", "forward", "backward", "dense_sync", "emb_update"];
 
 impl GanttTimeline {
+    /// Record one phase occurrence.
     pub fn push(&mut self, step: u64, phase: &'static str, start: f64, dur: f64) {
         self.events.push(GanttEvent { step, phase, start, dur });
     }
 
+    /// Simulated end time of the latest-finishing event.
     pub fn total_span(&self) -> f64 {
         self.events.iter().map(|e| e.start + e.dur).fold(0.0, f64::max)
     }

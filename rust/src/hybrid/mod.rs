@@ -2,8 +2,13 @@
 //!
 //! [`Trainer`] wires loader → embedding workers → NN workers → embedding PS
 //! and runs any of the four modes of Fig. 3-right: fully synchronous, fully
-//! asynchronous, raw hybrid and optimized hybrid. [`gantt`] records the
-//! per-phase timeline that reproduces the figure.
+//! asynchronous, raw hybrid and optimized hybrid. The worker loop programs
+//! against two deployment seams — [`dense_comm::DenseComm`] for the
+//! AllReduce fabric (threads or TCP ring) and
+//! [`crate::worker::EmbComm`] for the embedding tier (in-process workers or
+//! `serve-embedding-worker` processes) — so one loop serves every topology
+//! from a single process up to the full three-tier deployment. [`gantt`]
+//! records the per-phase timeline that reproduces the figure.
 
 pub mod dense_comm;
 pub mod gantt;

@@ -48,7 +48,7 @@ use crate::metrics::{auc, RunReport, Tracker};
 use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
 use crate::service::PsBackend;
 use crate::util::Rng;
-use crate::worker::{EmbeddingWorker, NnWorker};
+use crate::worker::{EmbComm, LocalEmbTier};
 
 use super::dense_comm::{ordered, DenseComm, ThreadRing};
 use super::gantt::GanttTimeline;
@@ -67,11 +67,13 @@ const PUT_ATTEMPTS: usize = 3;
 /// builds and owns its engine — exactly the paper's topology, where each GPU
 /// worker holds its own compiled graph.
 pub trait EngineFactory: Sync {
+    /// Build the dense engine rank `rank` will own.
     fn create(&self, rank: usize) -> Result<DenseEngine>;
 }
 
 /// Factory for the pure-Rust reference tower.
 pub struct RustEngineFactory {
+    /// Identically-initialized model every rank clones (replicas start equal).
     pub template: DenseModel,
 }
 
@@ -83,7 +85,9 @@ impl EngineFactory for RustEngineFactory {
 
 /// Factory loading the AOT artifacts via a per-thread PJRT CPU client.
 pub struct PjrtEngineFactory {
+    /// Directory holding the AOT artifact manifest + HLO files.
     pub artifacts_dir: std::path::PathBuf,
+    /// Artifact preset name ("tiny" | "small" | "paper").
     pub preset: String,
 }
 
@@ -97,6 +101,7 @@ impl EngineFactory for PjrtEngineFactory {
 
 /// Result of a training run.
 pub struct TrainOutput {
+    /// Aggregate run metrics (loss/AUC/throughput/staleness).
     pub report: RunReport,
     /// Worker-0 loss/AUC curves + phase histograms.
     pub tracker: Tracker,
@@ -108,7 +113,9 @@ pub struct TrainOutput {
     pub final_params: Vec<f32>,
 }
 
-/// One prefetched, embedding-complete mini-batch.
+/// One prefetched, embedding-complete mini-batch (a
+/// [`PreparedBatch`](crate::worker::PreparedBatch) from the embedding tier
+/// plus the staleness observed at pull time).
 struct Prefetched {
     ew: usize,
     sids: Vec<SampleId>,
@@ -132,13 +139,13 @@ enum GradMsg {
 type RankRun = (Tracker, GanttTimeline, Vec<f32>, f64, f64);
 
 /// Everything one training process builds besides its NN-worker rank(s):
-/// the PS backend, embedding workers, and gradient-applier threads. Shared
-/// by the all-threads deployment ([`Trainer::run`]) and the one-rank-per-
-/// process deployment ([`Trainer::run_rank`]).
+/// the embedding tier (in-process workers over a PS backend, or a remote
+/// [`crate::service::RemoteEmbTier`]) and the gradient-applier threads.
+/// Shared by the all-threads deployment ([`Trainer::run`]) and the
+/// one-rank-per-process deployment ([`Trainer::run_rank`]).
 struct RunCtx {
     net: Arc<NetSim>,
-    backend: Arc<dyn PsBackend>,
-    emb_workers: Vec<Arc<EmbeddingWorker>>,
+    tier: Arc<dyn EmbComm>,
     appliers: Vec<Sender<GradMsg>>,
     applier_handles: Vec<std::thread::JoinHandle<()>>,
     inflight: Arc<Vec<AtomicI64>>,
@@ -149,10 +156,15 @@ struct RunCtx {
 
 /// The distributed trainer.
 pub struct Trainer {
+    /// Dense-tower + feature geometry.
     pub model: ModelConfig,
+    /// Embedding-PS storage geometry.
     pub emb_cfg: EmbeddingConfig,
+    /// Cluster shape: NN workers, embedding workers, network model.
     pub cluster: ClusterConfig,
+    /// Train-loop parameters (mode, batch, steps, seeds, ...).
     pub train: TrainConfig,
+    /// The synthetic CTR stream every rank draws from.
     pub dataset: SyntheticDataset,
     /// Evaluation batch rows for AUC.
     pub eval_rows: usize,
@@ -161,8 +173,16 @@ pub struct Trainer {
     /// PS backend override. `None` builds the in-process [`EmbeddingPs`]
     /// from `emb_cfg`; `Some` (a [`crate::service::RemotePs`] or a
     /// multi-process [`crate::service::ShardedRemotePs`]) trains against
-    /// it — the TCP service mode.
+    /// it — the TCP service mode. Ignored when [`Trainer::emb_comm`] is set
+    /// (the remote embedding workers own the PS connection then).
     pub ps_backend: Option<Arc<dyn PsBackend>>,
+    /// Embedding-tier override. `None` builds the in-process
+    /// [`LocalEmbTier`] (workers as plain structs over `ps_backend`);
+    /// `Some` (a [`crate::service::RemoteEmbTier`]) trains against
+    /// out-of-process `serve-embedding-worker` processes — the paper's full
+    /// three-tier topology. Validated against
+    /// [`Trainer::config_fingerprint`] at run start.
+    pub emb_comm: Option<Arc<dyn EmbComm>>,
     /// Apply embedding gradients inline (single-threaded per worker) instead
     /// of via the async applier threads. The prefetch pipeline still runs τ
     /// batches ahead, so bounded staleness is preserved, but the whole run
@@ -177,6 +197,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// A trainer with default eval size and no deployment overrides.
     pub fn new(
         model: ModelConfig,
         emb_cfg: EmbeddingConfig,
@@ -193,12 +214,15 @@ impl Trainer {
             eval_rows: 2048,
             record_gantt: false,
             ps_backend: None,
+            emb_comm: None,
             deterministic: false,
         }
     }
 
-    /// Pipeline depth (bounded staleness τ) for the configured mode.
-    fn pipeline_depth(&self) -> usize {
+    /// Pipeline depth (bounded staleness τ) for the configured mode — how
+    /// many batches each rank's lookahead keeps in flight beyond the one
+    /// being trained on.
+    pub fn pipeline_depth(&self) -> usize {
         match self.train.mode {
             TrainMode::FullSync => 0,
             TrainMode::HybridRaw | TrainMode::Hybrid => self.train.staleness_bound,
@@ -298,55 +322,73 @@ impl Trainer {
     }
 
     /// Build everything one training process needs besides its NN-worker
-    /// rank(s): the PS backend (validated against this config), the
-    /// embedding workers, and the async gradient-applier threads.
+    /// rank(s): the embedding tier (validated against this config) and the
+    /// async gradient-applier threads.
     fn setup(&self) -> Result<RunCtx> {
         let net = Arc::new(NetSim::new(self.cluster.net));
-        let backend: Arc<dyn PsBackend> = match &self.ps_backend {
-            Some(backend) => backend.clone(),
-            None => Arc::new(EmbeddingPs::new(
-                &self.emb_cfg,
-                self.model.emb_dim_per_group,
-                self.train.seed,
-            )),
-        };
-        anyhow::ensure!(
-            backend.dim() == self.model.emb_dim_per_group,
-            "PS backend dim {} != model group dim {}",
-            backend.dim(),
-            self.model.emb_dim_per_group
-        );
-        // A remote PS built from different flags than this trainer would
-        // silently train different numerics; fail the handshake instead.
-        backend.check_compat(&self.emb_cfg, self.train.seed)?;
-        let emb_workers: Vec<Arc<EmbeddingWorker>> = (0..self.cluster.n_emb_workers)
-            .map(|r| {
-                Arc::new(EmbeddingWorker::new(
-                    r as u8,
-                    backend.clone(),
+        let tier: Arc<dyn EmbComm> = match &self.emb_comm {
+            Some(tier) => {
+                // Remote embedding workers built from different flags than
+                // this trainer would silently train different numerics;
+                // fail like the PS handshake instead.
+                tier.check_compat(self.config_fingerprint())?;
+                anyhow::ensure!(
+                    tier.n_workers() == self.cluster.n_emb_workers,
+                    "embedding tier has {} worker(s), cluster config says {} — \
+                     n_emb_workers must equal the tier's process count",
+                    tier.n_workers(),
+                    self.cluster.n_emb_workers
+                );
+                tier.clone()
+            }
+            None => {
+                let backend: Arc<dyn PsBackend> = match &self.ps_backend {
+                    Some(backend) => backend.clone(),
+                    None => Arc::new(EmbeddingPs::new(
+                        &self.emb_cfg,
+                        self.model.emb_dim_per_group,
+                        self.train.seed,
+                    )),
+                };
+                anyhow::ensure!(
+                    backend.dim() == self.model.emb_dim_per_group,
+                    "PS backend dim {} != model group dim {}",
+                    backend.dim(),
+                    self.model.emb_dim_per_group
+                );
+                // A remote PS built from different flags than this trainer
+                // would silently train different numerics; fail the
+                // handshake instead.
+                backend.check_compat(&self.emb_cfg, self.train.seed)?;
+                Arc::new(LocalEmbTier::new(
+                    self.dataset.clone(),
                     &self.model,
+                    backend,
                     net.clone(),
                     self.train.compress,
+                    self.cluster.n_emb_workers,
+                    self.cluster.n_nn_workers,
+                    self.train.batch_size,
                 ))
-            })
-            .collect();
+            }
+        };
 
         // Async gradient appliers: one thread per embedding worker; the
         // in-flight counter per worker is the measured staleness.
+        let n_ew = tier.n_workers();
         let inflight: Arc<Vec<AtomicI64>> =
-            Arc::new((0..emb_workers.len()).map(|_| AtomicI64::new(0)).collect());
+            Arc::new((0..n_ew).map(|_| AtomicI64::new(0)).collect());
         let max_staleness = Arc::new(AtomicU64::new(0));
         let put_failures = Arc::new(AtomicU64::new(0));
-        let mut applier_handles = Vec::with_capacity(emb_workers.len());
-        let appliers: Vec<Sender<GradMsg>> = emb_workers
-            .iter()
-            .map(|ew| {
-                let ew = ew.clone();
+        let mut applier_handles = Vec::with_capacity(n_ew);
+        let appliers: Vec<Sender<GradMsg>> = (0..n_ew)
+            .map(|applier_idx| {
+                let tier = tier.clone();
                 let inflight = inflight.clone();
                 let put_failures = put_failures.clone();
                 let (tx, rx) = channel::<GradMsg>();
                 let handle = std::thread::Builder::new()
-                    .name(format!("grad-applier-{}", ew.rank()))
+                    .name(format!("grad-applier-{applier_idx}"))
                     .spawn(move || {
                         while let Ok(msg) = rx.recv() {
                             match msg {
@@ -358,12 +400,12 @@ impl Trainer {
                                     // Losing a put after that is tolerated
                                     // (§4.2.4), but never silently: count it
                                     // and surface the first failure.
-                                    let mut res = ew.push_grads(&sids, &grads);
+                                    let mut res = tier.push_grads(idx, &sids, &grads);
                                     for _ in 1..PUT_ATTEMPTS {
                                         if res.is_ok() {
                                             break;
                                         }
-                                        res = ew.push_grads(&sids, &grads);
+                                        res = tier.push_grads(idx, &sids, &grads);
                                     }
                                     if let Err(e) = res {
                                         // Give the batch up for good: drop
@@ -371,7 +413,7 @@ impl Trainer {
                                         // shard doesn't grow the buffer
                                         // without bound (§4.2.4 tolerates
                                         // the lost update, not the leak).
-                                        ew.discard(&sids);
+                                        tier.discard(idx, &sids);
                                         if put_failures.fetch_add(1, Ordering::Relaxed) == 0 {
                                             eprintln!(
                                                 "grad applier: put failed \
@@ -400,8 +442,7 @@ impl Trainer {
 
         Ok(RunCtx {
             net,
-            backend,
-            emb_workers,
+            tier,
             appliers,
             applier_handles,
             inflight,
@@ -429,7 +470,7 @@ impl Trainer {
     #[allow(clippy::too_many_arguments)]
     fn build_output(
         &self,
-        backend: &Arc<dyn PsBackend>,
+        tier: &Arc<dyn EmbComm>,
         tracker: Tracker,
         gantt: GanttTimeline,
         final_params: Vec<f32>,
@@ -455,7 +496,7 @@ impl Trainer {
             max_staleness,
             grad_put_failures,
         };
-        let ps_imbalance = backend.stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
+        let ps_imbalance = tier.ps_stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
         TrainOutput { report, tracker, gantt, ps_imbalance, final_params }
     }
 
@@ -479,7 +520,7 @@ impl Trainer {
         let out: Result<Vec<()>> = std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (rank, comm) in comms.into_iter().enumerate() {
-                let emb_workers = &ctx.emb_workers;
+                let tier = ctx.tier.clone();
                 // mpsc Senders are Send but not Sync: clone per thread.
                 let appliers: Vec<Sender<GradMsg>> = ctx.appliers.clone();
                 let inflight = ctx.inflight.clone();
@@ -503,7 +544,7 @@ impl Trainer {
                         rank,
                         &mut comm,
                         engine,
-                        emb_workers,
+                        &tier,
                         &appliers,
                         &inflight,
                         &max_staleness,
@@ -530,7 +571,7 @@ impl Trainer {
         let gantt = gantts[0].lock().unwrap().clone();
         let fp = std::mem::take(&mut *final_params[0].lock().unwrap());
         Ok(self.build_output(
-            &ctx.backend,
+            &ctx.tier,
             tracker,
             gantt,
             fp,
@@ -563,7 +604,7 @@ impl Trainer {
         Self::stop_appliers(ctx.appliers, ctx.applier_handles);
         let (tracker, gantt, fp, wall_secs, sim_extra) = run_res?;
         Ok(self.build_output(
-            &ctx.backend,
+            &ctx.tier,
             tracker,
             gantt,
             fp,
@@ -608,7 +649,7 @@ impl Trainer {
             rank,
             comm.as_mut(),
             engine,
-            &ctx.emb_workers,
+            &ctx.tier,
             &ctx.appliers,
             &ctx.inflight,
             &ctx.max_staleness,
@@ -635,7 +676,7 @@ impl Trainer {
         rank: usize,
         comm: &mut dyn DenseComm,
         engine: DenseEngine,
-        emb_workers: &[Arc<EmbeddingWorker>],
+        tier: &Arc<dyn EmbComm>,
         appliers: &[Sender<GradMsg>],
         inflight: &[AtomicI64],
         max_staleness: &AtomicU64,
@@ -646,37 +687,32 @@ impl Trainer {
         final_params: &Mutex<Vec<f32>>,
     ) -> Result<()> {
         let mode = self.train.mode;
-        let b = self.train.batch_size;
         let depth = self.pipeline_depth();
         let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, self.train.lr, params.len());
-        let mut rng = self.dataset.train_rng(rank as u64);
-        let nn = NnWorker::new(rank, self.model.nid_dim);
         let mut pipeline: VecDeque<Prefetched> = VecDeque::new();
         let mut sim_t = 0.0f64; // this worker's simulated clock
-        let n_ew = emb_workers.len();
         // Deterministic multi-worker FullSync: serialize every PS touch in
         // rank order via the ring token (see `dense_comm::ordered`), so the
         // run is bit-reproducible and provably identical across thread and
         // process deployments.
         let order_ps = self.deterministic && comm.world() > 1;
 
-        let prefetch = |rng: &mut Rng, step: usize| -> Result<Prefetched> {
-            let batch = self.dataset.batch(rng, b);
-            let ew_idx = (rank + step) % n_ew;
-            let ew = &emb_workers[ew_idx];
-            let t0 = std::time::Instant::now();
-            let sids = ew.register(batch.ids);
-            nn.receive_batch(&sids, &batch.nid, &batch.labels);
+        // Pull the next embedding-complete batch through the tier seam: the
+        // in-process tier draws from the loader and scatter-gathers the PS
+        // here; the remote tier issues one NEXT_BATCH RPC to this rank's
+        // embedding-worker process, which prefetched it already.
+        let prefetch = |step: usize| -> Result<Prefetched> {
+            let ew_idx = tier.assign(rank, step);
             let staleness = inflight[ew_idx].load(Ordering::Relaxed).max(0) as u64;
-            let (emb, sim) = ew.pull(&sids)?;
-            let (nid, labels) = nn.take(&sids)?;
+            let pb = tier.next_batch(rank, step)?;
+            debug_assert_eq!(pb.ew, ew_idx, "tier served a batch from an unassigned worker");
             Ok(Prefetched {
-                ew: ew_idx,
-                sids,
-                emb,
-                nid,
-                labels,
-                sim_prep: sim + t0.elapsed().as_secs_f64(),
+                ew: pb.ew,
+                sids: pb.sids,
+                emb: pb.emb,
+                nid: pb.nid,
+                labels: pb.labels,
+                sim_prep: pb.sim_prep,
                 staleness,
             })
         };
@@ -687,9 +723,9 @@ impl Trainer {
             while pipeline.len() <= depth {
                 let step_ahead = step + pipeline.len();
                 let pf = if order_ps {
-                    ordered(comm, || prefetch(&mut rng, step_ahead))?
+                    ordered(comm, || prefetch(step_ahead))?
                 } else {
-                    prefetch(&mut rng, step_ahead)?
+                    prefetch(step_ahead)?
                 };
                 max_staleness.fetch_max(pf.staleness, Ordering::Relaxed);
                 pipeline.push_back(pf);
@@ -727,11 +763,10 @@ impl Trainer {
             let t_up = match mode {
                 TrainMode::FullSync => {
                     let t0 = std::time::Instant::now();
-                    let ew = &emb_workers[pf.ew];
                     let sim = if order_ps {
-                        ordered(comm, || ew.push_grads(&pf.sids, &out.grad_emb))?
+                        ordered(comm, || tier.push_grads(pf.ew, &pf.sids, &out.grad_emb))?
                     } else {
-                        ew.push_grads(&pf.sids, &out.grad_emb)?
+                        tier.push_grads(pf.ew, &pf.sids, &out.grad_emb)?
                     };
                     t0.elapsed().as_secs_f64() + sim
                 }
@@ -741,7 +776,7 @@ impl Trainer {
                     // the async appliers would produce is preserved, just
                     // without thread-timing nondeterminism. Cost stays off
                     // the critical path (same overlap accounting as async).
-                    emb_workers[pf.ew].push_grads(&pf.sids, &out.grad_emb)?;
+                    tier.push_grads(pf.ew, &pf.sids, &out.grad_emb)?;
                     0.0
                 }
                 _ => {
@@ -820,7 +855,7 @@ impl Trainer {
                 if self.train.eval_every > 0
                     && (step + 1) % self.train.eval_every == 0
                 {
-                    let auc_v = self.evaluate(&engine, &params, &emb_workers[0])?;
+                    let auc_v = self.evaluate(&engine, &params, tier.as_ref())?;
                     tr.record_auc(step as u64 + 1, auc_v);
                 }
             }
@@ -828,22 +863,31 @@ impl Trainer {
 
         // Final eval on worker 0.
         if rank == 0 && self.train.eval_every > 0 {
-            let auc_v = self.evaluate(&engine, &params, &emb_workers[0])?;
+            let auc_v = self.evaluate(&engine, &params, tier.as_ref())?;
             tracker.lock().unwrap().record_auc(self.train.steps as u64, auc_v);
         }
         *final_params.lock().unwrap() = params;
         Ok(())
     }
 
-    /// Test AUC of the current dense params + live PS state.
+    /// Test AUC of the current dense params + live PS state. The pooled
+    /// activations come through the embedding tier (worker 0 — in-process
+    /// struct or remote process alike); the test batch's NID features and
+    /// labels are rebuilt locally from the deterministic held-out stream.
     pub fn evaluate(
         &self,
         engine: &DenseEngine,
         params: &[f32],
-        ew: &EmbeddingWorker,
+        tier: &dyn EmbComm,
     ) -> Result<f64> {
         let batch = self.dataset.test_batch(self.eval_rows);
-        let (emb, _) = ew.lookup_direct(&batch)?;
+        let (emb, _) = tier.eval_lookup(self.eval_rows)?;
+        anyhow::ensure!(
+            emb.len() == batch.len() * self.model.emb_dim(),
+            "eval lookup returned {} floats for {} samples",
+            emb.len(),
+            batch.len()
+        );
         let probs = engine.forward(params, &emb, &batch.nid, batch.len())?;
         Ok(auc(&probs, &batch.labels))
     }
@@ -1075,6 +1119,66 @@ mod tests {
         t.dataset.signal_scale *= 2.0;
         assert_ne!(base, t.config_fingerprint());
         assert_ne!(base, small_setup(TrainMode::FullSync, 10, 2).config_fingerprint());
+    }
+
+    #[test]
+    fn explicit_local_tier_matches_default() {
+        // Passing a hand-built in-process tier through the emb_comm seam
+        // must be identical to letting the trainer build it.
+        let steps = 40;
+        let make = || {
+            let mut t = small_setup(TrainMode::FullSync, steps, 1);
+            t.train.eval_every = steps;
+            t
+        };
+        let default_run = make().run_rust().unwrap();
+        let mut t = make();
+        let net = Arc::new(NetSim::new(t.cluster.net));
+        let ps: Arc<dyn PsBackend> = Arc::new(crate::embedding::EmbeddingPs::new(
+            &t.emb_cfg,
+            t.model.emb_dim_per_group,
+            t.train.seed,
+        ));
+        let tier = Arc::new(LocalEmbTier::new(
+            t.dataset.clone(),
+            &t.model,
+            ps,
+            net,
+            t.train.compress,
+            t.cluster.n_emb_workers,
+            t.cluster.n_nn_workers,
+            t.train.batch_size,
+        ));
+        t.emb_comm = Some(tier);
+        let tier_run = t.run_rust().unwrap();
+        assert_eq!(default_run.tracker.losses, tier_run.tracker.losses);
+        assert_eq!(default_run.tracker.aucs, tier_run.tracker.aucs);
+        assert_eq!(default_run.final_params, tier_run.final_params);
+    }
+
+    #[test]
+    fn tier_worker_count_mismatch_rejected() {
+        let mut t = small_setup(TrainMode::FullSync, 5, 1);
+        let net = Arc::new(NetSim::new(t.cluster.net));
+        let ps: Arc<dyn PsBackend> = Arc::new(crate::embedding::EmbeddingPs::new(
+            &t.emb_cfg,
+            t.model.emb_dim_per_group,
+            t.train.seed,
+        ));
+        // A 1-worker tier against a cluster config that promises 2.
+        let tier = Arc::new(LocalEmbTier::new(
+            t.dataset.clone(),
+            &t.model,
+            ps,
+            net,
+            t.train.compress,
+            1,
+            t.cluster.n_nn_workers,
+            t.train.batch_size,
+        ));
+        t.emb_comm = Some(tier);
+        let err = t.run_rust().err().expect("worker-count mismatch must fail");
+        assert!(format!("{err:#}").contains("n_emb_workers"), "{err:#}");
     }
 
     #[test]

@@ -14,46 +14,71 @@
 //!   here via the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   training hot path.
 //!
-//! # Service mode (deployed topology)
+//! # Deployed topology (the three service tiers)
 //!
-//! Besides the in-process simulated cluster, the embedding PS runs as one
-//! or many standalone TCP server processes ([`service`]): embedding workers
-//! reach it through the [`service::PsBackend`] trait — in-process
-//! ([`embedding::EmbeddingPs`]), one server ([`service::RemotePs`] →
-//! [`service::PsServer`]), or N shard processes each owning a node range
-//! ([`service::ShardedRemotePs`], scatter-gathered with the servers' own
-//! global hash) — with batched deduplicated get/put and the §4.2.3
-//! index/value compression on the wire. `persia serve-ps [--node-range]`
-//! starts a (slice of a) server, `persia train --remote-ps <addr,...>`
-//! trains against the fleet, wire-level SNAPSHOT/RESTORE plus client
-//! reconnect implement the §4.2.4 kill/restore recovery drill, and the
-//! loopback test matrix (`rust/tests/integration_service.rs`,
-//! `rust/tests/integration_sharded.rs`) proves remote training is
-//! numerically identical to in-process training in every mode.
+//! Every stateful role of the paper's Fig. 2 runs either in-process (the
+//! simulated cluster) or as its own OS process, with numerical parity
+//! between the two proven by the loopback test matrix:
 //!
-//! The NN workers deploy as processes too: `persia train-worker --rank R
-//! --world N` runs one dense rank per process, joined by a rank-0 TCP
-//! rendezvous with a config-fingerprint handshake, and the §4.2.3 ring
-//! AllReduce crosses real sockets ([`allreduce::tcp_ring`]) behind the
-//! [`hybrid::DenseComm`] seam — with deterministic FullSync proven
-//! equivalent to the threaded run (`rust/tests/integration_multiproc.rs`).
+//! ```text
+//!   persia serve-ps (×N)  ◀──GET/PUT──  persia serve-embedding-worker (×M)
+//!   node-range shards,                  data-loader streams + pipelined
+//!   SNAPSHOT/RESTORE                    prefetcher (NEXT_BATCH/PUSH_GRADS)
+//!                                            ▲
+//!                                            │ round-robin rank % M
+//!   persia train-worker (×K)  ◀──ring──▶  … peers
+//!   one dense rank per process, TCP ring AllReduce
+//! ```
+//!
+//! * **Embedding PS tier** — `persia serve-ps [--node-range]` serves a
+//!   (slice of a) PS over the [`service`] wire protocol; trainers and
+//!   embedding workers reach it through the [`service::PsBackend`] trait
+//!   (in-process [`embedding::EmbeddingPs`], single-server
+//!   [`service::RemotePs`], or scatter-gathered
+//!   [`service::ShardedRemotePs`]), with the §4.2.3 index/value compression
+//!   on the wire and the §4.2.4 SNAPSHOT/RESTORE + reconnect recovery
+//!   drill.
+//! * **Embedding-worker tier** — `persia serve-embedding-worker` promotes
+//!   the [`worker`] middle tier to its own process: it owns the data-loader
+//!   streams of its NN ranks and runs the pipelined prefetcher
+//!   ([`worker::PrefetchPipeline`]) so PS latency hides behind dense
+//!   compute. Trainers reach it via `--embedding-workers` through the
+//!   [`worker::EmbComm`] seam ([`service::RemoteEmbTier`]).
+//! * **NN-worker tier** — `persia train-worker --rank R --world K` runs one
+//!   dense rank per process, joined by a rank-0 TCP rendezvous, with the
+//!   §4.2.3 ring AllReduce over real sockets ([`allreduce::tcp_ring`])
+//!   behind the [`hybrid::DenseComm`] seam.
+//!
+//! Every cross-process handshake (PS INFO, embedding-worker INFO, ring
+//! rendezvous) carries a config fingerprint, so a process started with
+//! different numeric flags is rejected at connect time instead of silently
+//! diverging. Deterministic mode makes multi-process deployments
+//! bit-reproducible (`rust/tests/integration_service.rs`,
+//! `integration_sharded.rs`, `integration_multiproc.rs`,
+//! `integration_embedding_worker.rs`).
 //!
 //! Entry points: [`hybrid::Trainer`] for end-to-end training,
 //! [`config::BenchPreset`] for the paper's Table-1 benchmark presets, and the
-//! `persia` binary / `examples/` for runnable drivers.
+//! `persia` binary / `examples/` for runnable drivers. See `ARCHITECTURE.md`
+//! for the full paper-component → module/binary map.
 
+#[warn(missing_docs)]
 pub mod allreduce;
 pub mod comm;
 pub mod config;
 pub mod data;
 pub mod dense;
+#[warn(missing_docs)]
 pub mod embedding;
 pub mod fault;
+#[warn(missing_docs)]
 pub mod hybrid;
 pub mod metrics;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+#[warn(missing_docs)]
 pub mod worker;

@@ -3,13 +3,21 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!   train        run a training job (preset, mode, workers, steps, ...);
 //!                add --remote-ps host:port[,host:port...] to train against
-//!                one or many TCP embedding-PS shard processes
+//!                TCP embedding-PS shard processes, or --embedding-workers
+//!                host:port[,...] to train through an out-of-process
+//!                embedding-worker tier (the full three-tier topology)
 //!   train-worker run ONE NN-worker rank as its own OS process: rank 0
 //!                hosts the ring rendezvous, peers dial it, and the dense
 //!                AllReduce runs over loopback/network TCP instead of
-//!                in-process channels (requires --remote-ps for world > 1)
+//!                in-process channels (world > 1 requires --remote-ps or
+//!                --embedding-workers)
 //!   serve-ps     run the embedding PS (or one --node-range slice of it) as
 //!                a standalone TCP server
+//!   serve-embedding-worker
+//!                run ONE embedding worker as its own OS process: it owns
+//!                the data-loader streams of the NN ranks assigned to it,
+//!                prefetches batches against the PS (--remote-ps list, or a
+//!                private in-process PS), and serves them over TCP
 //!   gantt        print the Fig.-3 phase timelines for all four modes
 //!   table1       print the Table-1 model-scale presets
 //!   capacity     Fig.-9 style capacity sweep (virtualized tables)
@@ -22,14 +30,17 @@ use anyhow::{Context, Result};
 
 use persia::allreduce::RingRendezvous;
 use persia::config::{
-    BenchPreset, ClusterConfig, NetModelConfig, RingConfig, ServiceConfig, TrainConfig, TrainMode,
+    BenchPreset, ClusterConfig, EmbWorkerConfig, NetModelConfig, RingConfig, ServiceConfig,
+    TrainConfig, TrainMode,
 };
 use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
 use persia::embedding::{CheckpointManager, EmbeddingPs};
 use persia::hybrid::{DenseComm, PjrtEngineFactory, Trainer};
 use persia::runtime::ArtifactManifest;
-use persia::service::{PsBackend, PsServer, ShardedRemotePs};
+use persia::service::{
+    EmbeddingWorkerServer, EwExpect, PsBackend, PsServer, RemoteEmbTier, ShardedRemotePs,
+};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -140,6 +151,41 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         );
         trainer.ps_backend = Some(Arc::new(remote));
     }
+    if let Some(addrs) = flags.get("embedding-workers") {
+        anyhow::ensure!(
+            !flags.contains_key("remote-ps"),
+            "--embedding-workers and --remote-ps are mutually exclusive: with an \
+             embedding-worker tier only the workers talk to the PS — give the \
+             --remote-ps list to serve-embedding-worker instead"
+        );
+        let svc = ServiceConfig {
+            addr: addrs.clone(),
+            client_conns: flag(flags, "ew-conns", "2").parse()?,
+            wire_compress: false,
+            reconnect_attempts: flag(flags, "ew-retries", "4").parse()?,
+            reconnect_backoff_ms: flag(flags, "ew-retry-ms", "50").parse()?,
+        };
+        svc.validate()?;
+        // The tier IS the embedding-worker cluster: its process count
+        // replaces --emb-workers (and rides in the fingerprint, so every
+        // process must agree on it).
+        trainer.cluster.n_emb_workers = svc.shard_addrs().len();
+        let expect = EwExpect {
+            fingerprint: trainer.config_fingerprint(),
+            emb_dim: trainer.model.emb_dim(),
+            nid_dim: trainer.model.nid_dim,
+            batch_size: trainer.train.batch_size,
+        };
+        let net = Arc::new(NetSim::new(trainer.cluster.net));
+        let tier = RemoteEmbTier::connect(&svc, expect, trainer.train.compress, net)
+            .with_context(|| format!("connecting to embedding worker(s) at {addrs}"))?;
+        println!(
+            "embedding-worker tier: {} process(es), pipeline depth {}",
+            tier.n_processes(),
+            tier.pipeline_depth()
+        );
+        trainer.emb_comm = Some(Arc::new(tier));
+    }
     Ok(trainer)
 }
 
@@ -231,6 +277,21 @@ fn run_trainer(trainer: &Trainer, flags: &HashMap<String, String>) -> Result<()>
         trainer.run_rust()?
     };
     out.report.print_row();
+    if flag(flags, "parity-lines", "false") == "true" {
+        // Machine-readable lines for the parity harnesses (integration
+        // tests + examples) — same format train-worker rank 0 prints.
+        let losses: Vec<String> =
+            out.tracker.losses.iter().map(|(s, l)| format!("{s}:{l:.9e}")).collect();
+        println!("LOSSES {}", losses.join(","));
+        println!(
+            "PARITY final_loss={:.9e} final_auc={}",
+            out.report.final_loss,
+            out.report
+                .final_auc
+                .map(|a| format!("{a:.12e}"))
+                .unwrap_or_else(|| "nan".to_string()),
+        );
+    }
     if flag(flags, "verbose", "false") == "true" {
         for (name, hist) in out.tracker.phases() {
             println!("  phase {name:<12} {}", hist.summary());
@@ -238,6 +299,72 @@ fn run_trainer(trainer: &Trainer, flags: &HashMap<String, String>) -> Result<()>
         println!("  ps imbalance: {:.2}", out.ps_imbalance);
     }
     Ok(())
+}
+
+/// One embedding worker as its own OS process (the paper's middle tier).
+/// Builds the exact trainer the NN ranks build — the fingerprint served in
+/// the INFO handshake is how mismatched trainers get rejected — then runs
+/// the pipelined prefetcher between the PS (the --remote-ps fleet, or a
+/// private in-process PS) and the NN ranks until a SHUTDOWN RPC arrives.
+///
+/// Flags must be IDENTICAL to the trainers' (same preset/train knobs, with
+/// --emb-workers = the tier's process count and --nn-workers / --world = the
+/// NN world size); --ew-rank gives this process its sample-id byte,
+/// --pipeline-depth bounds the in-flight batches per rank (deterministic
+/// mode forces 1).
+fn cmd_serve_embedding_worker(flags: HashMap<String, String>) -> Result<()> {
+    anyhow::ensure!(
+        !flags.contains_key("embedding-workers"),
+        "serve-embedding-worker IS the embedding-worker tier; point it at the \
+         PS with --remote-ps instead"
+    );
+    let ew_cfg = EmbWorkerConfig {
+        addr: flag(&flags, "addr", "127.0.0.1:7900").to_string(),
+        ew_rank: flag(&flags, "ew-rank", "0").parse().context("--ew-rank")?,
+        pipeline_depth: match flags.get("pipeline-depth") {
+            Some(s) => Some(s.parse().context("--pipeline-depth")?),
+            None => None,
+        },
+    };
+    ew_cfg.validate()?;
+    // Accept --world as an alias for --nn-workers so three-tier train-worker
+    // deployments can reuse one flag set verbatim.
+    let mut flags = flags;
+    if let Some(world) = flags.get("world").cloned() {
+        flags.insert("nn-workers".to_string(), world);
+    }
+    let trainer = build_trainer(&flags)?;
+    let ps_deployment = flags.get("remote-ps").map(|s| s.as_str());
+    let ps_wire_compress = flag(&flags, "ps-wire-compress", "false") == "true";
+    let server = EmbeddingWorkerServer::for_trainer(
+        &trainer,
+        ew_cfg.ew_rank,
+        ew_cfg.pipeline_depth,
+        ps_deployment,
+        ps_wire_compress,
+        &ew_cfg.addr,
+    )?;
+    println!(
+        "persia serve-embedding-worker: rank {} preset={} mode={} batch={} ranks={} \
+         emb-workers={} deterministic={} ps={}",
+        ew_cfg.ew_rank,
+        flag(&flags, "preset", "taobao"),
+        trainer.train.mode.name(),
+        trainer.train.batch_size,
+        trainer.cluster.n_nn_workers,
+        trainer.cluster.n_emb_workers,
+        trainer.deterministic,
+        ps_deployment.unwrap_or("in-process"),
+    );
+    println!(
+        "embedding worker listening on {} (stop with a SHUTDOWN RPC)",
+        server.local_addr()?
+    );
+    // Orchestrators (and the integration test) read the listening line
+    // through a pipe, where stdout is block-buffered.
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.serve_forever()
 }
 
 fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
@@ -276,10 +403,17 @@ fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
     };
     ring_cfg.validate()?;
     anyhow::ensure!(
-        world == 1 || flags.contains_key("remote-ps"),
-        "train-worker with --world > 1 needs --remote-ps: separate worker processes \
-         must share one PS deployment (start serve-ps first)"
+        world == 1 || flags.contains_key("remote-ps") || flags.contains_key("embedding-workers"),
+        "train-worker with --world > 1 needs --remote-ps or --embedding-workers: \
+         separate worker processes must share one embedding deployment \
+         (start serve-ps / serve-embedding-worker first)"
     );
+    // The ring IS the worker cluster: fold --world into --nn-workers before
+    // the trainer (and its config fingerprint) is built, so connect-time
+    // handshakes — the embedding-worker tier's INFO, the ring rendezvous —
+    // all see the real world size.
+    let mut flags = flags;
+    flags.insert("nn-workers".to_string(), world.to_string());
     // A rank riding out a PS shard restart (reconnect-with-retry) stalls
     // for up to retries × backoff without touching the ring; peers would
     // declare it dead once the ring timeout elapses. Warn about the
@@ -304,9 +438,8 @@ fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
         std::io::stdout().flush().ok();
     }
 
-    let mut trainer = build_trainer(&flags)?;
-    // The ring IS the worker cluster: the world size replaces --nn-workers.
-    trainer.cluster.n_nn_workers = world;
+    let trainer = build_trainer(&flags)?;
+    debug_assert_eq!(trainer.cluster.n_nn_workers, world);
     println!(
         "persia train-worker: rank {rank}/{world} preset={} mode={} engine={} batch={} steps={}",
         flag(&flags, "preset", "taobao"),
@@ -417,22 +550,29 @@ fn cmd_modes(flags: HashMap<String, String>) -> Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: persia <train|train-worker|serve-ps|gantt|table1|capacity|modes> \
+        "usage: persia <train|train-worker|serve-ps|serve-embedding-worker|gantt|table1|\
+         capacity|modes> \
          [--preset taobao] \
          [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
          [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
          [--verbose true] [--deterministic true]\n\
-         service mode: persia serve-ps [--addr 127.0.0.1:7700] [--node-range A..B] \
+         sharded PS: persia serve-ps [--addr 127.0.0.1:7700] [--node-range A..B] \
          [--checkpoint-dir DIR] — one process per shard — then \
          persia train --remote-ps addr1[,addr2,...] [--ps-conns N] [--ps-wire-compress true] \
          [--ps-retries N] [--ps-retry-ms MS] \
          (same --preset/--dense/--shard-capacity/--seed on every process; \
          the --node-range slices must partition the PS nodes exactly)\n\
+         embedding-worker tier: persia serve-embedding-worker [--addr 127.0.0.1:7900] \
+         [--ew-rank R] [--pipeline-depth D] --remote-ps addr1[,addr2,...] — one process per \
+         worker, identical train flags (--emb-workers = worker-process count, \
+         --nn-workers/--world = NN world size) — then \
+         persia train --embedding-workers addr1[,addr2,...] [--ew-conns N] [--ew-retries N] \
+         [--ew-retry-ms MS] (NN ranks are assigned round-robin, rank mod M)\n\
          multi-process NN workers: persia train-worker --rank R --world N \
          [--rendezvous 127.0.0.1:7800] [--listen-host HOST] [--ring-timeout-ms MS] \
-         [--ring-compress true] --remote-ps addr1[,addr2,...] — one process per rank, \
-         identical flags everywhere (the rendezvous rejects config mismatches); \
-         rank 0 prints 'rendezvous listening on ADDR' for orchestrators"
+         [--ring-compress true] --remote-ps|--embedding-workers addr1[,addr2,...] — one \
+         process per rank, identical flags everywhere (the rendezvous rejects config \
+         mismatches); rank 0 prints 'rendezvous listening on ADDR' for orchestrators"
     );
     std::process::exit(2)
 }
@@ -445,6 +585,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(flags),
         "train-worker" => cmd_train_worker(flags),
         "serve-ps" => cmd_serve_ps(flags),
+        "serve-embedding-worker" => cmd_serve_embedding_worker(flags),
         "gantt" => cmd_gantt(flags),
         "table1" => cmd_table1(),
         "capacity" => cmd_capacity(flags),

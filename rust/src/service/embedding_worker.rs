@@ -1,0 +1,1380 @@
+//! The embedding-worker tier as a standalone TCP service (paper §4.1's
+//! middle tier, deployed as its own OS process).
+//!
+//! `persia serve-embedding-worker` runs ONE embedding worker per process:
+//! it owns the data-loader streams of the NN ranks assigned to it, runs the
+//! [`PrefetchPipeline`](crate::worker::PrefetchPipeline) (stage 1 draws
+//! samples, stage 2 scatter-gathers deduplicated lookups against the —
+//! possibly sharded — embedding PS and assembles activation tensors), and
+//! serves assembled batches to NN ranks over TCP, so PS latency hides
+//! behind the ranks' dense compute. Gradients flow back asynchronously with
+//! the same re-buffer-on-failure semantics
+//! [`EmbeddingWorker::push_grads`](crate::worker::EmbeddingWorker::push_grads)
+//! has in-process.
+//!
+//! # Wire protocol
+//!
+//! Requests/responses are zero-copy wire messages over the shared
+//! [`crate::comm::wire`] frames (kinds `0x70xx`, disjoint from the PS's
+//! `0x50xx` and the ring's `0x60xx`):
+//!
+//! | kind         | request sections                  | response sections                        |
+//! |--------------|-----------------------------------|------------------------------------------|
+//! | `INFO`       | –                                 | u64 fingerprint/geometry/PS deployment   |
+//! | `NEXT_BATCH` | u64 `[rank, step]`                | u64 `[step, sim]`, u64 sids, f32 nid, f32 labels, u8 flags, activations |
+//! | `PUSH_GRADS` | u64 sids, u8 flags, gradients     | u64 `[sim]`                              |
+//! | `EVAL`       | u64 `[rows]`                      | u64 `[sim]`, f32 activations             |
+//! | `STATS`      | –                                 | u64 worker counters, u64 PS stats        |
+//! | `SHUTDOWN`   | –                                 | – (ack)                                  |
+//!
+//! `activations`/`gradients` are one raw f32 section, or — when the flags
+//! byte carries the compress bit — an fp16 section plus per-sample scales
+//! (§4.2.3 lossy value compression with `dim = emb_dim`, numerically
+//! identical to the in-process simulated round-trip, now saving real wire
+//! bytes). The `PUSH_GRADS` flags byte also carries a *discard* bit: same
+//! sids, no gradient payload — the applier's give-up path
+//! ([`EmbComm::discard`]).
+//!
+//! The INFO handshake carries the server's full
+//! [`Trainer::config_fingerprint`](crate::hybrid::Trainer::config_fingerprint)
+//! plus a digest of its PS deployment, and trainers whose config differs are
+//! rejected at connect time — exactly the PS INFO / ring-rendezvous policy.
+//! `NEXT_BATCH` must be called strictly in step order per rank; the server
+//! keeps a one-deep replay cache per rank so a retried request for the
+//! *last served* step (a reconnect that lost the response) is answered from
+//! cache, while any other out-of-order step is a loud desync error.
+//! Successful `PUSH_GRADS` acks are likewise cached (keyed by the batch's
+//! never-reused sample ids), so a push retried after a lost ack is answered
+//! idempotently instead of failing on its already-released buffer entries.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::compress::CompressedValues;
+use crate::comm::netsim::Link;
+use crate::comm::rpc::{RpcClient, RpcServer};
+use crate::comm::transport::TcpTransport;
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::comm::NetSim;
+use crate::config::ServiceConfig;
+use crate::data::sample::SampleId;
+use crate::embedding::EmbeddingPs;
+use crate::hybrid::Trainer;
+use crate::worker::{
+    AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline, PreparedBatch,
+    WorkerStats,
+};
+
+use super::backend::{PsBackend, PsStats};
+use super::server::{accept_loop, wake_addr};
+
+/// INFO handshake of the embedding-worker service.
+pub const KIND_EW_INFO: u32 = 0x7001;
+/// Pull the next prepared batch for `(rank, step)`.
+pub const KIND_EW_NEXT: u32 = 0x7002;
+/// Push (or discard) a served batch's activation gradients.
+pub const KIND_EW_PUSH: u32 = 0x7003;
+/// Eval-path pooled lookup of the shared held-out test batch.
+pub const KIND_EW_EVAL: u32 = 0x7004;
+/// Worker + PS statistics.
+pub const KIND_EW_STATS: u32 = 0x7005;
+/// Graceful shutdown (acked before the server stops accepting).
+pub const KIND_EW_SHUTDOWN: u32 = 0x7006;
+
+/// Flag bit: value payload is fp16 + per-sample scales.
+const FLAG_COMPRESS: u8 = 1;
+/// Flag bit (PUSH only): discard the sids' buffer entries, no gradients.
+const FLAG_DISCARD: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// INFO
+// ---------------------------------------------------------------------------
+
+/// Everything a trainer needs to verify an embedding-worker process serves
+/// *its* run: the server's trainer-config fingerprint (every numeric knob),
+/// the batch geometry it will ship, and which PS deployment it talks to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EwInfo {
+    /// [`Trainer::config_fingerprint`] of the flags the server was started
+    /// with — rank-independent, so it must equal the trainer's own.
+    pub fingerprint: u64,
+    /// This worker's rank (top byte of the sample ids it mints).
+    pub ew_rank: u8,
+    /// Full activation width (`n_groups * emb_dim_per_group`).
+    pub emb_dim: usize,
+    /// Non-ID feature width of served batches.
+    pub nid_dim: usize,
+    /// Samples per served batch.
+    pub batch_size: usize,
+    /// In-flight batches per rank (1 = on-demand; forced in deterministic
+    /// mode).
+    pub pipeline_depth: usize,
+    /// PS shard processes behind this worker (0 = worker-private in-process
+    /// PS, only sound for single-worker deployments).
+    pub ps_processes: usize,
+    /// Order-independent digest of the PS shard address list; every worker
+    /// of one tier must report the same value or they are not looking up
+    /// the same parameters.
+    pub ps_sig: u64,
+    /// Whether the worker applies lossy fp16 compression on its own PS wire
+    /// (changes numerics; parity runs keep it off).
+    pub ps_wire_compress: bool,
+}
+
+/// Digest of a PS deployment: `(shard process count, order-independent
+/// address hash)`. `None`/empty means a worker-private in-process PS.
+pub fn ps_deployment_sig(remote_ps: Option<&str>) -> (usize, u64) {
+    let Some(list) = remote_ps else { return (0, 0) };
+    let mut addrs: Vec<&str> =
+        list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+    addrs.sort_unstable();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for a in &addrs {
+        for &b in a.as_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (addrs.len(), h)
+}
+
+/// Encode an INFO request (empty body).
+pub fn encode_ew_info_request() -> Vec<u8> {
+    WireWriter::new(KIND_EW_INFO).finish()
+}
+
+/// Encode an INFO response.
+pub fn encode_ew_info_response(info: &EwInfo) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_INFO);
+    w.put_u64(&[
+        info.fingerprint,
+        u64::from(info.ew_rank),
+        info.emb_dim as u64,
+        info.nid_dim as u64,
+        info.batch_size as u64,
+        info.pipeline_depth as u64,
+        info.ps_processes as u64,
+        info.ps_sig,
+        u64::from(info.ps_wire_compress),
+    ]);
+    w.finish()
+}
+
+/// Decode an INFO response.
+pub fn decode_ew_info_response(msg: &[u8]) -> Result<EwInfo> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_INFO, "expected EW INFO response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 9, "malformed EW INFO response ({} fields)", xs.len());
+    let info = EwInfo {
+        fingerprint: xs[0],
+        ew_rank: xs[1] as u8,
+        emb_dim: xs[2] as usize,
+        nid_dim: xs[3] as usize,
+        batch_size: xs[4] as usize,
+        pipeline_depth: xs[5] as usize,
+        ps_processes: xs[6] as usize,
+        ps_sig: xs[7],
+        ps_wire_compress: xs[8] != 0,
+    };
+    ensure!(
+        info.emb_dim > 0 && info.batch_size > 0 && info.pipeline_depth > 0,
+        "EW INFO reports degenerate geometry: {info:?}"
+    );
+    Ok(info)
+}
+
+// ---------------------------------------------------------------------------
+// NEXT_BATCH
+// ---------------------------------------------------------------------------
+
+/// Encode a NEXT_BATCH request for `(rank, step)`.
+pub fn encode_next_request(rank: usize, step: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_NEXT);
+    w.put_u64(&[rank as u64, step as u64]);
+    w.finish()
+}
+
+/// Decode a NEXT_BATCH request into `(rank, step)`.
+pub fn decode_next_request(msg: &[u8]) -> Result<(usize, usize)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_NEXT, "expected NEXT_BATCH, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 2, "malformed NEXT_BATCH request");
+    Ok((xs[0] as usize, xs[1] as usize))
+}
+
+/// Encode a prepared batch. `emb_dim` is the per-sample activation width
+/// (the lossy compression's block size); `compress` selects fp16+scales.
+pub fn encode_next_response(pb: &PreparedBatch, emb_dim: usize, compress: bool) -> Vec<u8> {
+    debug_assert_eq!(pb.emb.len(), pb.sids.len() * emb_dim);
+    let mut w = WireWriter::new(KIND_EW_NEXT);
+    w.put_u64(&[pb.step as u64, pb.sim_prep.to_bits()]);
+    w.put_u64(&pb.sids);
+    w.put_f32(&pb.nid);
+    w.put_f32(&pb.labels);
+    w.put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
+    if compress {
+        let c = CompressedValues::compress(&pb.emb, emb_dim);
+        w.put_f16(&c.vals);
+        w.put_f32(&c.scales);
+    } else {
+        w.put_f32(&pb.emb);
+    }
+    w.finish()
+}
+
+/// Decode a served batch (the `ew` field is filled by the caller, which
+/// knows which worker process it asked).
+pub fn decode_next_response(msg: &[u8], emb_dim: usize, nid_dim: usize) -> Result<PreparedBatch> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_NEXT, "expected NEXT_BATCH response, got kind {}", r.kind());
+    let head = r.u64(0)?;
+    ensure!(head.len() == 2, "malformed NEXT_BATCH response header");
+    let sids = r.u64(1)?;
+    let nid = r.f32(2)?;
+    let labels = r.f32(3)?;
+    let flags = r.u8(4)?;
+    ensure!(flags.len() == 1, "malformed NEXT_BATCH flags");
+    let emb = if flags[0] & FLAG_COMPRESS != 0 {
+        let vals = r.f16(5)?;
+        let scales = r.f32(6)?;
+        ensure!(
+            vals.len() == scales.len() * emb_dim,
+            "compressed activation shape mismatch"
+        );
+        CompressedValues { vals, scales, dim: emb_dim }.decompress()
+    } else {
+        r.f32(5)?
+    };
+    ensure!(
+        emb.len() == sids.len() * emb_dim
+            && nid.len() == sids.len() * nid_dim
+            && labels.len() == sids.len(),
+        "NEXT_BATCH shape mismatch: {} sids, {} emb, {} nid, {} labels",
+        sids.len(),
+        emb.len(),
+        nid.len(),
+        labels.len()
+    );
+    Ok(PreparedBatch {
+        step: head[0] as usize,
+        ew: 0,
+        sids,
+        emb,
+        nid,
+        labels,
+        sim_prep: f64::from_bits(head[1]),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PUSH_GRADS
+// ---------------------------------------------------------------------------
+
+/// Encode a gradient push. `grads` must be `sids.len() * emb_dim` floats.
+pub fn encode_push_request(
+    sids: &[SampleId],
+    grads: &[f32],
+    emb_dim: usize,
+    compress: bool,
+) -> Vec<u8> {
+    debug_assert_eq!(grads.len(), sids.len() * emb_dim);
+    let mut w = WireWriter::new(KIND_EW_PUSH);
+    w.put_u64(sids);
+    w.put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
+    if compress {
+        let c = CompressedValues::compress(grads, emb_dim);
+        w.put_f16(&c.vals);
+        w.put_f32(&c.scales);
+    } else {
+        w.put_f32(grads);
+    }
+    w.finish()
+}
+
+/// Encode a discard: the applier gave up on these sids (no gradients).
+pub fn encode_discard_request(sids: &[SampleId]) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_PUSH);
+    w.put_u64(sids);
+    w.put_u8(&[FLAG_DISCARD]);
+    w.put_f32(&[]);
+    w.finish()
+}
+
+/// Decode a push request: `(sids, Some(gradients))`, or `(sids, None)` for
+/// a discard.
+pub fn decode_push_request(
+    msg: &[u8],
+    emb_dim: usize,
+) -> Result<(Vec<SampleId>, Option<Vec<f32>>)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_PUSH, "expected PUSH_GRADS, got kind {}", r.kind());
+    let sids = r.u64(0)?;
+    let flags = r.u8(1)?;
+    ensure!(flags.len() == 1, "malformed PUSH_GRADS flags");
+    if flags[0] & FLAG_DISCARD != 0 {
+        return Ok((sids, None));
+    }
+    let grads = if flags[0] & FLAG_COMPRESS != 0 {
+        let vals = r.f16(2)?;
+        let scales = r.f32(3)?;
+        ensure!(vals.len() == scales.len() * emb_dim, "compressed gradient shape mismatch");
+        CompressedValues { vals, scales, dim: emb_dim }.decompress()
+    } else {
+        r.f32(2)?
+    };
+    ensure!(grads.len() == sids.len() * emb_dim, "PUSH_GRADS shape mismatch");
+    Ok((sids, Some(grads)))
+}
+
+/// Encode the push ack (simulated seconds of the worker→PS leg).
+pub fn encode_push_response(sim: f64) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_PUSH);
+    w.put_u64(&[sim.to_bits()]);
+    w.finish()
+}
+
+/// Decode the push ack.
+pub fn decode_push_response(msg: &[u8]) -> Result<f64> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_PUSH, "expected PUSH_GRADS response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed PUSH_GRADS response");
+    Ok(f64::from_bits(xs[0]))
+}
+
+// ---------------------------------------------------------------------------
+// EVAL
+// ---------------------------------------------------------------------------
+
+/// Encode an eval-lookup request for the first `rows` test samples.
+pub fn encode_eval_request(rows: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_EVAL);
+    w.put_u64(&[rows as u64]);
+    w.finish()
+}
+
+/// Decode an eval-lookup request.
+pub fn decode_eval_request(msg: &[u8]) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_EVAL, "expected EVAL, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed EVAL request");
+    Ok(xs[0] as usize)
+}
+
+/// Encode the eval activations (always raw f32 — the in-process eval path
+/// never applies the lossy leg either).
+pub fn encode_eval_response(emb: &[f32], sim: f64) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_EVAL);
+    w.put_u64(&[sim.to_bits()]);
+    w.put_f32(emb);
+    w.finish()
+}
+
+/// Decode the eval activations.
+pub fn decode_eval_response(msg: &[u8]) -> Result<(Vec<f32>, f64)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_EVAL, "expected EVAL response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed EVAL response");
+    Ok((r.f32(1)?, f64::from_bits(xs[0])))
+}
+
+// ---------------------------------------------------------------------------
+// STATS / SHUTDOWN
+// ---------------------------------------------------------------------------
+
+/// Encode a STATS request (empty body).
+pub fn encode_ew_stats_request() -> Vec<u8> {
+    WireWriter::new(KIND_EW_STATS).finish()
+}
+
+/// Encode the worker's counters + its PS backend's statistics.
+pub fn encode_ew_stats_response(buffered: usize, w: &WorkerStats, ps: &PsStats) -> Vec<u8> {
+    let mut msg = WireWriter::new(KIND_EW_STATS);
+    msg.put_u64(&[
+        buffered as u64,
+        w.samples_registered,
+        w.batches_fetched,
+        w.ids_looked_up,
+        w.rows_fetched,
+        w.batches_flushed,
+        w.samples_flushed,
+        w.grad_ids,
+        w.rows_put,
+        w.put_failures,
+        w.rebuffered_samples,
+    ]);
+    msg.put_u64(&[ps.total_rows as u64, ps.total_evictions, ps.imbalance.to_bits()]);
+    msg.finish()
+}
+
+/// Decode a STATS response into `(buffered, worker stats, PS stats)`.
+pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsStats)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_STATS, "expected EW STATS response, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 11, "malformed EW STATS response");
+    let ps = r.u64(1)?;
+    ensure!(ps.len() == 3, "malformed EW STATS PS section");
+    Ok((
+        xs[0] as usize,
+        WorkerStats {
+            samples_registered: xs[1],
+            batches_fetched: xs[2],
+            ids_looked_up: xs[3],
+            rows_fetched: xs[4],
+            batches_flushed: xs[5],
+            samples_flushed: xs[6],
+            grad_ids: xs[7],
+            rows_put: xs[8],
+            put_failures: xs[9],
+            rebuffered_samples: xs[10],
+        },
+        PsStats {
+            total_rows: ps[0] as usize,
+            total_evictions: ps[1],
+            imbalance: f64::from_bits(ps[2]),
+        },
+    ))
+}
+
+/// Encode a SHUTDOWN request (empty body).
+pub fn encode_ew_shutdown_request() -> Vec<u8> {
+    WireWriter::new(KIND_EW_SHUTDOWN).finish()
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Deployment identity of one `serve-embedding-worker` process (everything
+/// the INFO handshake advertises beyond the worker's own geometry).
+#[derive(Clone, Copy, Debug)]
+pub struct EwServerConfig {
+    /// The server's trainer-config fingerprint.
+    pub fingerprint: u64,
+    /// This process's embedding-worker rank.
+    pub ew_rank: u8,
+    /// PS shard processes behind this worker (0 = in-process PS).
+    pub ps_processes: usize,
+    /// Digest of the PS shard address list (see [`ps_deployment_sig`]).
+    pub ps_sig: u64,
+    /// Lossy compression on the worker's own PS wire.
+    pub ps_wire_compress: bool,
+    /// Lossy compression on served activations / received gradients
+    /// (`train --compress`; part of the fingerprint, so both sides agree).
+    pub compress: bool,
+}
+
+/// A bound-but-not-yet-serving embedding-worker service.
+pub struct EmbeddingWorkerServer {
+    listener: TcpListener,
+    rpc: Arc<RpcServer>,
+    stop: Arc<AtomicBool>,
+}
+
+impl EmbeddingWorkerServer {
+    /// Bind `addr` and register the protocol handlers over `pipeline` (whose
+    /// [`BatchPrep`] holds the resident worker and data source) and
+    /// `backend` (the worker's PS, for STATS relay).
+    pub fn bind(
+        pipeline: Arc<PrefetchPipeline>,
+        backend: Arc<dyn PsBackend>,
+        cfg: EwServerConfig,
+        addr: &str,
+    ) -> Result<EmbeddingWorkerServer> {
+        ensure!(
+            pipeline.prep().n_workers() == 1,
+            "serve-embedding-worker hosts exactly one resident worker"
+        );
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding embedding-worker service on {addr}"))?;
+        let local = listener.local_addr()?;
+        let mut rpc = RpcServer::new();
+        let stop = rpc.stop_flag();
+
+        let prep = pipeline.prep().clone();
+        let emb_dim = prep.worker(0).emb_dim();
+        let info = EwInfo {
+            fingerprint: cfg.fingerprint,
+            ew_rank: cfg.ew_rank,
+            emb_dim,
+            nid_dim: prep.nid_dim(),
+            batch_size: prep.batch_size(),
+            pipeline_depth: pipeline.depth(),
+            ps_processes: cfg.ps_processes,
+            ps_sig: cfg.ps_sig,
+            ps_wire_compress: cfg.ps_wire_compress,
+        };
+        rpc.register(
+            KIND_EW_INFO,
+            Box::new(move |_msg| Ok(encode_ew_info_response(&info))),
+        );
+        {
+            // NEXT_BATCH: serve from the pipeline, with a one-deep replay
+            // cache per rank so a reconnect that lost the response can
+            // re-ask for the same step (any other out-of-order step is a
+            // desync and fails loudly inside the pipeline).
+            type ReplaySlot = Arc<Mutex<Option<(usize, Vec<u8>)>>>;
+            let replay: Arc<Mutex<HashMap<usize, ReplaySlot>>> =
+                Arc::new(Mutex::new(HashMap::new()));
+            let pipeline = pipeline.clone();
+            let compress = cfg.compress;
+            rpc.register(
+                KIND_EW_NEXT,
+                Box::new(move |msg| {
+                    let (rank, step) = decode_next_request(msg)?;
+                    let slot: ReplaySlot = replay
+                        .lock()
+                        .unwrap()
+                        .entry(rank)
+                        .or_default()
+                        .clone();
+                    // Per-rank lock: concurrent ranks proceed in parallel,
+                    // retries of one rank serialize.
+                    let mut slot = slot.lock().unwrap();
+                    if let Some((s, bytes)) = slot.as_ref() {
+                        if *s == step {
+                            return Ok(bytes.clone());
+                        }
+                    }
+                    let pb = pipeline.next(rank, step)?;
+                    let resp = encode_next_response(&pb, emb_dim, compress);
+                    *slot = Some((step, resp.clone()));
+                    Ok(resp)
+                }),
+            );
+        }
+        {
+            // PUSH replay cache: a retried push whose first attempt APPLIED
+            // but whose ack was lost on the wire must be answered
+            // idempotently — the samples are no longer buffered, so
+            // replaying it through push_grads_raw would abort the run on a
+            // transient blip whose update actually landed. Acks of the last
+            // few successful pushes are kept keyed by the batch's first
+            // sample id (sids are minted monotonically by this worker and
+            // never reused, so an exact sids match IS the same batch).
+            // Failed pushes cache nothing: their samples re-buffered, and
+            // the retry must really re-apply.
+            const PUSH_REPLAY_DEPTH: usize = 16;
+            struct PushReplay {
+                order: VecDeque<SampleId>,
+                acks: HashMap<SampleId, (Vec<SampleId>, Vec<u8>)>,
+            }
+            let replay = Arc::new(Mutex::new(PushReplay {
+                order: VecDeque::new(),
+                acks: HashMap::new(),
+            }));
+            let prep = prep.clone();
+            rpc.register(
+                KIND_EW_PUSH,
+                Box::new(move |msg| {
+                    let (sids, grads) = decode_push_request(msg, emb_dim)?;
+                    // The NN→worker leg already happened on the real wire;
+                    // apply the raw (buffer take + dedup + PS put) half. A
+                    // failed put re-buffers server-side and the error tears
+                    // down this connection — the client's retried RPC
+                    // replays the identical batch.
+                    let Some(grads) = grads else {
+                        prep.worker(0).discard(&sids);
+                        return Ok(encode_push_response(0.0));
+                    };
+                    let key = sids.first().copied().unwrap_or(0);
+                    {
+                        let cache = replay.lock().unwrap();
+                        if let Some((cached_sids, ack)) = cache.acks.get(&key) {
+                            if *cached_sids == sids {
+                                return Ok(ack.clone());
+                            }
+                        }
+                    }
+                    let sim = prep.worker(0).push_grads_raw(&sids, &grads)?;
+                    let ack = encode_push_response(sim);
+                    let mut cache = replay.lock().unwrap();
+                    if !cache.acks.contains_key(&key) {
+                        cache.order.push_back(key);
+                        if cache.order.len() > PUSH_REPLAY_DEPTH {
+                            if let Some(old) = cache.order.pop_front() {
+                                cache.acks.remove(&old);
+                            }
+                        }
+                    }
+                    cache.acks.insert(key, (sids, ack.clone()));
+                    Ok(ack)
+                }),
+            );
+        }
+        {
+            let prep = prep.clone();
+            rpc.register(
+                KIND_EW_EVAL,
+                Box::new(move |msg| {
+                    let rows = decode_eval_request(msg)?;
+                    let batch = prep.dataset().test_batch(rows);
+                    let (emb, sim) = prep.worker(0).lookup_direct(&batch)?;
+                    Ok(encode_eval_response(&emb, sim))
+                }),
+            );
+        }
+        {
+            let prep = prep.clone();
+            let backend = backend.clone();
+            rpc.register(
+                KIND_EW_STATS,
+                Box::new(move |_msg| {
+                    Ok(encode_ew_stats_response(
+                        prep.worker(0).buffered(),
+                        &prep.worker(0).stats(),
+                        &backend.stats()?,
+                    ))
+                }),
+            );
+        }
+        {
+            let stop = stop.clone();
+            rpc.register(
+                KIND_EW_SHUTDOWN,
+                Box::new(move |_msg| {
+                    stop.store(true, Ordering::SeqCst);
+                    let _ = TcpStream::connect(wake_addr(local));
+                    Ok(WireWriter::new(KIND_EW_SHUTDOWN).finish())
+                }),
+            );
+        }
+
+        Ok(EmbeddingWorkerServer { listener, rpc: Arc::new(rpc), stop })
+    }
+
+    /// Build the full server for one trainer config: the PS backend (the
+    /// trainer's override, e.g. a [`super::ShardedRemotePs`], or a private
+    /// in-process [`EmbeddingPs`]), the resident worker, the per-rank batch
+    /// streams, and the prefetch pipeline. `depth` of `None` picks the
+    /// mode's own pipeline depth
+    /// ([`Trainer::pipeline_depth`](crate::hybrid::Trainer::pipeline_depth),
+    /// floored at 1): FullSync serves on demand — zero staleness is that
+    /// mode's contract — while the async modes prefetch up to τ (2τ for
+    /// FullAsync) batches ahead. Deterministic mode always forces 1
+    /// (bitwise parity needs on-demand lookups with ordered puts).
+    pub fn for_trainer(
+        trainer: &Trainer,
+        ew_rank: u8,
+        depth: Option<usize>,
+        ps_deployment: Option<&str>,
+        ps_wire_compress: bool,
+        addr: &str,
+    ) -> Result<EmbeddingWorkerServer> {
+        let backend: Arc<dyn PsBackend> = match &trainer.ps_backend {
+            Some(b) => b.clone(),
+            None => Arc::new(EmbeddingPs::new(
+                &trainer.emb_cfg,
+                trainer.model.emb_dim_per_group,
+                trainer.train.seed,
+            )),
+        };
+        ensure!(
+            backend.dim() == trainer.model.emb_dim_per_group,
+            "PS backend dim {} != model group dim {}",
+            backend.dim(),
+            trainer.model.emb_dim_per_group
+        );
+        backend.check_compat(&trainer.emb_cfg, trainer.train.seed)?;
+        let net = Arc::new(NetSim::new(trainer.cluster.net));
+        let worker = Arc::new(EmbeddingWorker::new(
+            ew_rank,
+            backend.clone(),
+            &trainer.model,
+            net,
+            trainer.train.compress,
+        ));
+        let prep = Arc::new(BatchPrep::new(
+            trainer.dataset.clone(),
+            vec![worker],
+            trainer.train.batch_size,
+            trainer.model.nid_dim,
+            trainer.cluster.n_nn_workers,
+            AssignMode::Fixed(0),
+            true,
+        ));
+        let depth = if trainer.deterministic {
+            1
+        } else {
+            depth.unwrap_or_else(|| trainer.pipeline_depth().max(1))
+        };
+        let pipeline = Arc::new(PrefetchPipeline::new(prep, depth));
+        let (ps_processes, ps_sig) = ps_deployment_sig(ps_deployment);
+        let cfg = EwServerConfig {
+            fingerprint: trainer.config_fingerprint(),
+            ew_rank,
+            ps_processes,
+            ps_sig,
+            ps_wire_compress,
+            compress: trainer.train.compress,
+        };
+        Self::bind(pipeline, backend, cfg, addr)
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve on the calling thread until a SHUTDOWN RPC arrives.
+    pub fn serve_forever(self) -> Result<()> {
+        accept_loop(self.listener, self.rpc, self.stop, "serve-embedding-worker");
+        Ok(())
+    }
+
+    /// Serve on a background thread; returns a shutdown handle.
+    pub fn spawn(self) -> Result<EwServerHandle> {
+        let addr = self.local_addr()?;
+        let EmbeddingWorkerServer { listener, rpc, stop } = self;
+        let stop_for_loop = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("ew-accept".to_string())
+            .spawn(move || accept_loop(listener, rpc, stop_for_loop, "serve-embedding-worker"))
+            .context("spawning embedding-worker accept thread")?;
+        Ok(EwServerHandle { addr, stop, accept })
+    }
+}
+
+/// Handle to a background embedding-worker service.
+pub struct EwServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: std::thread::JoinHandle<()>,
+}
+
+impl EwServerHandle {
+    /// The service's bound address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, deliver in-flight responses, and join every server
+    /// thread (same protocol as [`super::PsServerHandle::shutdown`]).
+    pub fn shutdown(self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(wake_addr(self.addr));
+        self.accept
+            .join()
+            .map_err(|_| anyhow::anyhow!("embedding-worker accept thread panicked"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// TCP client for one `serve-embedding-worker` process: a mutex-guarded
+/// connection pool shared by the NN-rank thread and the gradient appliers,
+/// healing itself exactly like [`super::RemotePs`] — a failed call drops its
+/// pooled connection and re-dials with backoff, re-running the INFO
+/// handshake and insisting the server's identity is unchanged.
+///
+/// Retry semantics: `PUSH_GRADS` is replay-safe both ways — a failed put
+/// re-buffers server-side so the retry re-applies, and a put whose ack was
+/// lost after applying is answered idempotently from the server's push
+/// replay cache (same sids ⇒ same cached ack, no double apply). A retried
+/// `NEXT_BATCH` for the last served step is answered from the per-rank
+/// replay cache; any other desync fails loudly.
+pub struct RemoteEmbeddingWorker {
+    addr: String,
+    info: EwInfo,
+    reconnect_attempts: u32,
+    reconnect_backoff: Duration,
+    /// `None` marks a connection that died and awaits re-dialing.
+    clients: Vec<Mutex<Option<RpcClient<TcpTransport>>>>,
+    next: AtomicUsize,
+}
+
+impl RemoteEmbeddingWorker {
+    /// Connect a pool to one worker address, taking pool size and retry
+    /// policy from `cfg`.
+    pub fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemoteEmbeddingWorker> {
+        let mut clients = Vec::with_capacity(cfg.client_conns);
+        for i in 0..cfg.client_conns {
+            let transport = TcpTransport::connect(addr).with_context(|| {
+                format!("connecting embedding-worker pool conn {i} to {addr}")
+            })?;
+            clients.push(Mutex::new(Some(RpcClient::new(transport))));
+        }
+        let resp = {
+            let slot = clients[0].lock().unwrap();
+            slot.as_ref()
+                .expect("fresh pool connection")
+                .call(&encode_ew_info_request())
+                .context("embedding-worker INFO handshake")?
+        };
+        let info = decode_ew_info_response(&resp)?;
+        Ok(RemoteEmbeddingWorker {
+            addr: addr.to_string(),
+            info,
+            reconnect_attempts: cfg.reconnect_attempts,
+            reconnect_backoff: Duration::from_millis(cfg.reconnect_backoff_ms),
+            clients,
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    /// The server's INFO handshake.
+    pub fn info(&self) -> &EwInfo {
+        &self.info
+    }
+
+    /// The address this client dials (and re-dials).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Dial a fresh connection and verify the server is (still) the worker
+    /// we originally handshook.
+    fn redial(&self) -> Result<RpcClient<TcpTransport>> {
+        let transport = TcpTransport::connect(&self.addr)
+            .with_context(|| format!("reconnecting to embedding worker at {}", self.addr))?;
+        let client = RpcClient::new(transport);
+        let resp = client
+            .call(&encode_ew_info_request())
+            .context("embedding-worker INFO re-handshake")?;
+        let info = decode_ew_info_response(&resp)?;
+        ensure!(
+            info == self.info,
+            "embedding worker at {} came back with a different config: {info:?} != {:?}",
+            self.addr,
+            self.info
+        );
+        Ok(client)
+    }
+
+    /// One RPC over the pool, transparently re-dialing a dead connection.
+    fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
+        let slot = &self.clients[i];
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.reconnect_attempts {
+            if attempt > 0 {
+                // Backoff with the slot lock released (see RemotePs::call).
+                std::thread::sleep(self.reconnect_backoff);
+            }
+            let mut guard = slot.lock().unwrap();
+            if guard.is_none() {
+                match self.redial() {
+                    Ok(client) => *guard = Some(client),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match guard.as_ref().expect("connection present").call(msg) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    *guard = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "embedding worker at {} unreachable after {} reconnect attempt(s)",
+                self.addr, self.reconnect_attempts
+            )
+        })
+    }
+
+    /// Pull the prepared batch for `(rank, step)`. Returns the batch (with
+    /// `ew` left 0 for the caller to fill) and the response wire bytes (the
+    /// worker→NN transfer, for [`Link::EW_NN`] accounting).
+    pub fn next_batch(&self, rank: usize, step: usize) -> Result<(PreparedBatch, usize)> {
+        let resp = self
+            .call(&encode_next_request(rank, step))
+            .with_context(|| format!("NEXT_BATCH rank {rank} step {step}"))?;
+        let pb = decode_next_response(&resp, self.info.emb_dim, self.info.nid_dim)?;
+        Ok((pb, resp.len()))
+    }
+
+    /// Push a served batch's gradients back. Returns the server-side
+    /// simulated seconds and the request wire bytes (the NN→worker
+    /// transfer).
+    pub fn push_grads(
+        &self,
+        sids: &[SampleId],
+        grads: &[f32],
+        compress: bool,
+    ) -> Result<(f64, usize)> {
+        ensure!(
+            grads.len() == sids.len() * self.info.emb_dim,
+            "PUSH_GRADS gradient shape mismatch"
+        );
+        let msg = encode_push_request(sids, grads, self.info.emb_dim, compress);
+        let bytes = msg.len();
+        let resp = self.call(&msg).context("PUSH_GRADS")?;
+        Ok((decode_push_response(&resp)?, bytes))
+    }
+
+    /// Drop the sids' buffered features (applier give-up path).
+    pub fn discard(&self, sids: &[SampleId]) -> Result<()> {
+        let resp = self.call(&encode_discard_request(sids)).context("PUSH_GRADS discard")?;
+        decode_push_response(&resp)?;
+        Ok(())
+    }
+
+    /// Eval-path pooled lookup of the first `rows` test samples.
+    pub fn eval(&self, rows: usize) -> Result<(Vec<f32>, f64)> {
+        let resp = self.call(&encode_eval_request(rows)).context("EVAL lookup")?;
+        let (emb, sim) = decode_eval_response(&resp)?;
+        ensure!(emb.len() == rows * self.info.emb_dim, "EVAL shape mismatch");
+        Ok((emb, sim))
+    }
+
+    /// Worker counters + relayed PS statistics.
+    pub fn stats(&self) -> Result<(usize, WorkerStats, PsStats)> {
+        let resp = self.call(&encode_ew_stats_request()).context("EW STATS")?;
+        decode_ew_stats_response(&resp)
+    }
+
+    /// Ask the server to shut down gracefully.
+    pub fn shutdown_server(&self) -> Result<()> {
+        self.call(&encode_ew_shutdown_request()).context("EW shutdown request")?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The remote tier
+// ---------------------------------------------------------------------------
+
+/// What a trainer expects every embedding-worker process to advertise.
+#[derive(Clone, Copy, Debug)]
+pub struct EwExpect {
+    /// The trainer's own [`Trainer::config_fingerprint`].
+    pub fingerprint: u64,
+    /// Full activation width the dense tower consumes.
+    pub emb_dim: usize,
+    /// Non-ID feature width.
+    pub nid_dim: usize,
+    /// Samples per batch.
+    pub batch_size: usize,
+}
+
+/// [`EmbComm`] over M `serve-embedding-worker` processes: NN ranks are
+/// assigned round-robin (`rank % M`), so each rank's whole sample stream
+/// lives in one worker process; the worker→NN activation/gradient transfers
+/// are charged on [`Link::EW_NN`] with the frame bytes actually sent.
+pub struct RemoteEmbTier {
+    workers: Vec<RemoteEmbeddingWorker>,
+    net: Arc<NetSim>,
+    /// Lossy fp16 on the activation/gradient wire (`train --compress`).
+    compress: bool,
+    expect: EwExpect,
+}
+
+impl RemoteEmbTier {
+    /// Connect to every address in `cfg.addr` (comma-separated) and verify
+    /// the processes jointly form one coherent embedding-worker tier for
+    /// exactly this trainer config.
+    pub fn connect(
+        cfg: &ServiceConfig,
+        expect: EwExpect,
+        compress: bool,
+        net: Arc<NetSim>,
+    ) -> Result<RemoteEmbTier> {
+        cfg.validate()?;
+        let addrs = cfg.shard_addrs();
+        let workers: Vec<RemoteEmbeddingWorker> = addrs
+            .iter()
+            .map(|addr| RemoteEmbeddingWorker::connect_addr(cfg, addr))
+            .collect::<Result<_>>()?;
+        for w in &workers {
+            let info = w.info();
+            ensure!(
+                info.fingerprint == expect.fingerprint,
+                "embedding worker at {} was started with a different config \
+                 (fingerprint {:#x} != trainer's {:#x}) — start serve-embedding-worker \
+                 and the trainer with identical preset/train flags",
+                w.addr(),
+                info.fingerprint,
+                expect.fingerprint
+            );
+            ensure!(
+                info.emb_dim == expect.emb_dim
+                    && info.nid_dim == expect.nid_dim
+                    && info.batch_size == expect.batch_size,
+                "embedding worker at {} serves geometry (emb {}, nid {}, batch {}), \
+                 trainer expects (emb {}, nid {}, batch {})",
+                w.addr(),
+                info.emb_dim,
+                info.nid_dim,
+                info.batch_size,
+                expect.emb_dim,
+                expect.nid_dim,
+                expect.batch_size
+            );
+        }
+        // All workers must front the SAME PS deployment, or the tier is
+        // several disjoint models wearing one name.
+        let first = workers[0].info();
+        for w in &workers[1..] {
+            let info = w.info();
+            ensure!(
+                (info.ps_processes, info.ps_sig, info.ps_wire_compress)
+                    == (first.ps_processes, first.ps_sig, first.ps_wire_compress),
+                "embedding workers at {} and {} front different PS deployments",
+                workers[0].addr(),
+                w.addr()
+            );
+        }
+        ensure!(
+            workers.len() == 1 || first.ps_processes >= 1,
+            "multiple embedding workers need a shared --remote-ps PS deployment \
+             (each process currently owns a private in-process PS)"
+        );
+        Ok(RemoteEmbTier { workers, net, compress, expect })
+    }
+
+    /// Number of worker processes behind this tier.
+    pub fn n_processes(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The `i`-th worker-process client.
+    pub fn worker(&self, i: usize) -> &RemoteEmbeddingWorker {
+        &self.workers[i]
+    }
+
+    /// The tier's prefetch depth (uniform across workers by fingerprint).
+    pub fn pipeline_depth(&self) -> usize {
+        self.workers[0].info().pipeline_depth
+    }
+
+    /// Gracefully stop every worker process.
+    pub fn shutdown_all(&self) -> Result<()> {
+        for w in &self.workers {
+            w.shutdown_server()?;
+        }
+        Ok(())
+    }
+}
+
+impl EmbComm for RemoteEmbTier {
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn assign(&self, rank: usize, _step: usize) -> usize {
+        rank % self.workers.len()
+    }
+
+    fn next_batch(&self, rank: usize, step: usize) -> Result<PreparedBatch> {
+        let idx = self.assign(rank, step);
+        let t0 = std::time::Instant::now();
+        let (mut pb, wire_bytes) = self.workers[idx].next_batch(rank, step)?;
+        pb.ew = idx;
+        // The worker→NN leg, now real: charge the frame bytes actually sent
+        // and fold the transfer + RPC wall time into the prep cost.
+        pb.sim_prep += self.net.record(Link::EW_NN, wire_bytes);
+        pb.sim_prep += t0.elapsed().as_secs_f64();
+        Ok(pb)
+    }
+
+    fn push_grads(&self, ew: usize, sids: &[SampleId], grads: &[f32]) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let (sim, wire_bytes) = self.workers[ew].push_grads(sids, grads, self.compress)?;
+        Ok(sim + self.net.record(Link::EW_NN, wire_bytes) + t0.elapsed().as_secs_f64())
+    }
+
+    fn discard(&self, ew: usize, sids: &[SampleId]) {
+        // Best-effort: the worker may already be gone, which also discards.
+        let _ = self.workers[ew].discard(sids);
+    }
+
+    fn eval_lookup(&self, rows: usize) -> Result<(Vec<f32>, f64)> {
+        self.workers[0].eval(rows)
+    }
+
+    fn ps_stats(&self) -> Result<PsStats> {
+        Ok(self.workers[0].stats()?.2)
+    }
+
+    fn check_compat(&self, fingerprint: u64) -> Result<()> {
+        ensure!(
+            fingerprint == self.expect.fingerprint,
+            "embedding-worker tier was connected for fingerprint {:#x}, trainer now \
+             reports {fingerprint:#x} — the trainer config changed after connect",
+            self.expect.fingerprint
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind,
+        PartitionPolicy, Pooling, TrainConfig, TrainMode,
+    };
+    use crate::data::SyntheticDataset;
+
+    fn small_trainer(compress: bool, deterministic: bool) -> Trainer {
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        let emb_cfg = EmbeddingConfig {
+            rows_per_group: 500,
+            shard_capacity: 2048,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let cluster = ClusterConfig {
+            n_nn_workers: 1,
+            n_emb_workers: 1,
+            net: NetModelConfig::disabled(),
+        };
+        let train = TrainConfig {
+            mode: TrainMode::Hybrid,
+            batch_size: 8,
+            lr: 0.1,
+            staleness_bound: 2,
+            steps: 4,
+            eval_every: 0,
+            seed: 11,
+            use_pjrt: false,
+            compress,
+        };
+        let dataset = SyntheticDataset::new(&model, 500, 1.05, 11);
+        let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+        t.deterministic = deterministic;
+        t
+    }
+
+    fn expect_of(t: &Trainer) -> EwExpect {
+        EwExpect {
+            fingerprint: t.config_fingerprint(),
+            emb_dim: t.model.emb_dim(),
+            nid_dim: t.model.nid_dim,
+            batch_size: t.train.batch_size,
+        }
+    }
+
+    #[test]
+    fn info_codec_roundtrip() {
+        let info = EwInfo {
+            fingerprint: 0xdead_beef,
+            ew_rank: 3,
+            emb_dim: 8,
+            nid_dim: 4,
+            batch_size: 32,
+            pipeline_depth: 4,
+            ps_processes: 2,
+            ps_sig: 42,
+            ps_wire_compress: true,
+        };
+        let back = decode_ew_info_response(&encode_ew_info_response(&info)).unwrap();
+        assert_eq!(back, info);
+    }
+
+    #[test]
+    fn next_codec_roundtrip_raw_and_compressed() {
+        let pb = PreparedBatch {
+            step: 7,
+            ew: 0,
+            sids: vec![1, 2, 3],
+            emb: vec![0.5f32; 3 * 8],
+            nid: vec![1.0f32; 3 * 4],
+            labels: vec![1.0, 0.0, 1.0],
+            sim_prep: 0.25,
+        };
+        let raw = decode_next_response(&encode_next_response(&pb, 8, false), 8, 4).unwrap();
+        assert_eq!(raw.step, 7);
+        assert_eq!(raw.sids, pb.sids);
+        assert_eq!(raw.emb, pb.emb);
+        assert_eq!(raw.nid, pb.nid);
+        assert_eq!(raw.labels, pb.labels);
+        assert!((raw.sim_prep - 0.25).abs() < 1e-12);
+        let comp = decode_next_response(&encode_next_response(&pb, 8, true), 8, 4).unwrap();
+        for (a, b) in pb.emb.iter().zip(&comp.emb) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        // Wrong geometry fails the shape check.
+        assert!(decode_next_response(&encode_next_response(&pb, 8, false), 4, 4).is_err());
+    }
+
+    #[test]
+    fn push_and_discard_codec_roundtrip() {
+        let sids = vec![9u64, 10];
+        let grads = vec![0.25f32; 2 * 8];
+        let (s2, g2) = decode_push_request(&encode_push_request(&sids, &grads, 8, false), 8)
+            .unwrap();
+        assert_eq!(s2, sids);
+        assert_eq!(g2.unwrap(), grads);
+        let (s3, g3) = decode_push_request(&encode_discard_request(&sids), 8).unwrap();
+        assert_eq!(s3, sids);
+        assert!(g3.is_none());
+        let sim = decode_push_response(&encode_push_response(1.5)).unwrap();
+        assert!((sim - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_and_stats_codec_roundtrip() {
+        let emb = vec![1.0f32, 2.0, 3.0, 4.0];
+        let (back, sim) = decode_eval_response(&encode_eval_response(&emb, 0.5)).unwrap();
+        assert_eq!(back, emb);
+        assert!((sim - 0.5).abs() < 1e-12);
+
+        let w = WorkerStats {
+            samples_registered: 1,
+            batches_fetched: 2,
+            ids_looked_up: 3,
+            rows_fetched: 4,
+            batches_flushed: 5,
+            samples_flushed: 6,
+            grad_ids: 7,
+            rows_put: 8,
+            put_failures: 9,
+            rebuffered_samples: 10,
+        };
+        let ps = PsStats { total_rows: 11, total_evictions: 12, imbalance: 1.5 };
+        let (buffered, w2, ps2) =
+            decode_ew_stats_response(&encode_ew_stats_response(13, &w, &ps)).unwrap();
+        assert_eq!(buffered, 13);
+        assert_eq!(w2, w);
+        assert_eq!(ps2.total_rows, 11);
+        assert!((ps2.imbalance - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_deployment_sig_is_order_independent() {
+        let a = ps_deployment_sig(Some("h1:1,h2:2"));
+        let b = ps_deployment_sig(Some("h2:2, h1:1"));
+        assert_eq!(a, b);
+        assert_eq!(a.0, 2);
+        assert_ne!(a, ps_deployment_sig(Some("h1:1,h3:3")));
+        assert_eq!(ps_deployment_sig(None), (0, 0));
+    }
+
+    #[test]
+    fn loopback_serve_and_train_cycle() {
+        let trainer = small_trainer(false, false);
+        let server = EmbeddingWorkerServer::for_trainer(
+            &trainer,
+            0,
+            None,
+            None,
+            false,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let handle = server.spawn().unwrap();
+        let svc = ServiceConfig::at(handle.addr().to_string());
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let tier =
+            RemoteEmbTier::connect(&svc, expect_of(&trainer), false, net.clone()).unwrap();
+        assert_eq!(tier.n_workers(), 1);
+        assert_eq!(tier.pipeline_depth(), 2);
+
+        // Batch parity with the local stream draw.
+        let mut rng = trainer.dataset.train_rng(0);
+        let want = trainer.dataset.batch(&mut rng, 8);
+        let pb = tier.next_batch(0, 0).unwrap();
+        assert_eq!(pb.step, 0);
+        assert_eq!(pb.labels, want.labels);
+        assert_eq!(pb.nid, want.nid);
+        assert_eq!(pb.emb.len(), 8 * trainer.model.emb_dim());
+        assert!(net.link_bytes(Link::EW_NN) > 0, "NEXT must charge the EW↔NN link");
+
+        // Gradient push-back clears the remote buffer.
+        let grads = vec![0.1f32; pb.sids.len() * trainer.model.emb_dim()];
+        tier.push_grads(pb.ew, &pb.sids, &grads).unwrap();
+        let (buffered, wstats, pstats) = tier.worker(0).stats().unwrap();
+        assert_eq!(buffered, 0);
+        assert_eq!(wstats.samples_flushed, 8);
+        assert!(pstats.total_rows > 0);
+
+        // A push retried after a lost ack (same sids, buffer already
+        // released) is answered idempotently from the replay cache: no
+        // error, and the gradient is NOT applied a second time.
+        tier.push_grads(pb.ew, &pb.sids, &grads)
+            .expect("replayed push must be answered idempotently");
+        let (_, wstats2, _) = tier.worker(0).stats().unwrap();
+        assert_eq!(wstats2.batches_flushed, 1, "replay must not re-apply");
+        assert_eq!(wstats2.samples_flushed, 8);
+
+        // Eval matches an in-process worker over an equally-trained PS? At
+        // minimum: correct shape and finite values against live state.
+        let (emb, _) = tier.eval_lookup(16).unwrap();
+        assert_eq!(emb.len(), 16 * trainer.model.emb_dim());
+        assert!(emb.iter().all(|x| x.is_finite()));
+
+        // Replay cache: retrying the last served step returns the identical
+        // payload instead of desyncing.
+        let pb1 = tier.next_batch(0, 1).unwrap();
+        let pb1_again = tier.next_batch(0, 1).unwrap();
+        assert_eq!(pb1.sids, pb1_again.sids);
+        assert_eq!(pb1.emb, pb1_again.emb);
+
+        tier.shutdown_all().unwrap();
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejected_at_connect() {
+        let trainer = small_trainer(false, true);
+        let server = EmbeddingWorkerServer::for_trainer(
+            &trainer,
+            0,
+            None,
+            None,
+            false,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let handle = server.spawn().unwrap();
+        let svc = ServiceConfig::at(handle.addr().to_string());
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let mut expect = expect_of(&trainer);
+        expect.fingerprint ^= 1;
+        let err = RemoteEmbTier::connect(&svc, expect, false, net).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deterministic_mode_forces_depth_one() {
+        let trainer = small_trainer(false, true);
+        let server = EmbeddingWorkerServer::for_trainer(
+            &trainer,
+            0,
+            Some(8),
+            None,
+            false,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let handle = server.spawn().unwrap();
+        let svc = ServiceConfig::at(handle.addr().to_string());
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let tier = RemoteEmbTier::connect(&svc, expect_of(&trainer), false, net).unwrap();
+        assert_eq!(tier.pipeline_depth(), 1, "deterministic mode must pin depth to 1");
+        tier.shutdown_all().unwrap();
+        handle.shutdown().unwrap();
+    }
+}

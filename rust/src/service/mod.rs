@@ -1,7 +1,11 @@
-//! The TCP service mode: run the embedding PS as a standalone server
-//! (paper §4.2.2/§4.2.3 deployed across processes instead of simulated
-//! in-process).
+//! The TCP service mode: Persia's stateful tiers as standalone server
+//! processes (paper §4.1/§4.2 deployed across processes instead of
+//! simulated in-process).
 //!
+//! Two services live here, sharing the zero-copy wire format, the
+//! thread-per-connection accept loop, and the fingerprint-handshake policy:
+//!
+//! **The embedding PS** (`persia serve-ps`):
 //! * [`backend`] — the [`PsBackend`] trait embedding workers program
 //!   against; implemented by the in-process [`crate::embedding::EmbeddingPs`]
 //!   and by the TCP client stub.
@@ -17,21 +21,38 @@
 //!   routing with the servers' own global hash and scatter-gathering
 //!   batches concurrently.
 //!
+//! **The embedding-worker tier** (`persia serve-embedding-worker`):
+//! * [`embedding_worker`] — the paper's middle tier as its own process:
+//!   [`EmbeddingWorkerServer`] runs the pipelined prefetcher
+//!   ([`crate::worker::PrefetchPipeline`]) between the PS shards and the NN
+//!   ring and serves NEXT_BATCH / PUSH_GRADS / EVAL / STATS / SHUTDOWN;
+//!   [`RemoteEmbeddingWorker`] is the pooled client, and [`RemoteEmbTier`]
+//!   implements the trainer's [`crate::worker::EmbComm`] seam over M worker
+//!   processes with round-robin rank assignment.
+//!
 //! Entry points: `persia serve-ps [--node-range a..b]` starts a (slice of
-//! a) server; `persia train --remote-ps <addr>[,<addr>...]` (or setting
-//! [`crate::hybrid::Trainer::ps_backend`]) trains against it. The loopback
-//! integration tests (`rust/tests/integration_service.rs`,
-//! `rust/tests/integration_sharded.rs`) prove the remote paths are
-//! numerically identical to the in-process PS and survive the §4.2.4
-//! kill/restore recovery drill.
+//! a) PS; `persia serve-embedding-worker --remote-ps <addr,...>` starts an
+//! embedding worker over the PS fleet; `persia train` reaches them with
+//! `--remote-ps` (two-tier) or `--embedding-workers` (three-tier), or via
+//! [`crate::hybrid::Trainer::ps_backend`] /
+//! [`crate::hybrid::Trainer::emb_comm`]. The loopback integration tests
+//! (`rust/tests/integration_service.rs`, `rust/tests/integration_sharded.rs`,
+//! `rust/tests/integration_embedding_worker.rs`) prove the remote paths are
+//! numerically identical to the in-process ones and survive the §4.2.4
+//! kill/restore recovery drills.
 
 pub mod backend;
 pub mod client;
+pub mod embedding_worker;
 pub mod protocol;
 pub mod server;
 pub mod sharded;
 
 pub use backend::{PsBackend, PsStats};
 pub use client::RemotePs;
+pub use embedding_worker::{
+    EmbeddingWorkerServer, EwExpect, EwInfo, EwServerHandle, RemoteEmbTier,
+    RemoteEmbeddingWorker,
+};
 pub use server::{PsServer, PsServerHandle};
 pub use sharded::ShardedRemotePs;

@@ -34,13 +34,21 @@ use crate::config::EmbeddingConfig;
 
 use super::backend::PsStats;
 
-/// Message kinds of the PS service (disjoint from ad-hoc test kinds).
+/// Handshake: geometry + config fingerprint + owned node range.
+/// (PS message kinds are 0x50xx, disjoint from the ring's 0x60xx and the
+/// embedding-worker tier's 0x70xx.)
 pub const KIND_INFO: u32 = 0x5001;
+/// Batched row fetch of deduplicated packed keys.
 pub const KIND_GET: u32 = 0x5002;
+/// Batched gradient put of deduplicated packed keys.
 pub const KIND_PUT: u32 = 0x5003;
+/// Aggregate statistics + the global-length per-node traffic vector.
 pub const KIND_STATS: u32 = 0x5004;
+/// Graceful shutdown (acked before the server stops accepting).
 pub const KIND_SHUTDOWN: u32 = 0x5005;
+/// Whole-node LRU snapshot fetch (§4.2.4 recovery).
 pub const KIND_SNAPSHOT: u32 = 0x5006;
+/// Whole-node LRU snapshot restore (§4.2.4 recovery).
 pub const KIND_RESTORE: u32 = 0x5007;
 
 /// Flag bit: value payload is fp16 + per-row scales.
@@ -75,10 +83,15 @@ fn read_values(r: &WireReader, section: usize, dim: usize, compressed: bool) -> 
 /// change numerics — so all of it rides in the handshake.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PsInfo {
+    /// Embedding vector width per row.
     pub dim: usize,
+    /// Global PS node count (the routing modulus).
     pub n_nodes: usize,
+    /// Lock-striped sub-shards per node.
     pub shards_per_node: usize,
+    /// Row-materialization seed.
     pub seed: u64,
+    /// LRU capacity per shard.
     pub shard_capacity: usize,
     /// [`OptimizerKind`](crate::config::OptimizerKind) as a stable code.
     pub optimizer_code: u64,
@@ -92,6 +105,7 @@ pub struct PsInfo {
     pub node_end: usize,
 }
 
+/// [`OptimizerKind`](crate::config::OptimizerKind) as a stable wire code.
 pub fn optimizer_code(kind: crate::config::OptimizerKind) -> u64 {
     match kind {
         crate::config::OptimizerKind::Sgd => 0,
@@ -100,6 +114,7 @@ pub fn optimizer_code(kind: crate::config::OptimizerKind) -> u64 {
     }
 }
 
+/// [`PartitionPolicy`](crate::config::PartitionPolicy) as a stable wire code.
 pub fn partition_code(policy: crate::config::PartitionPolicy) -> u64 {
     match policy {
         crate::config::PartitionPolicy::FeatureGroup => 0,
@@ -151,10 +166,12 @@ pub fn check_fingerprint(info: &PsInfo, cfg: &EmbeddingConfig, seed: u64) -> Res
     Ok(())
 }
 
+/// Encode an INFO request (empty body).
 pub fn encode_info_request() -> Vec<u8> {
     WireWriter::new(KIND_INFO).finish()
 }
 
+/// Encode an INFO response.
 pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_INFO);
     w.put_u64(&[
@@ -172,6 +189,7 @@ pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
     w.finish()
 }
 
+/// Decode an INFO response (validating the node range).
 pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_INFO, "expected INFO response, got kind {}", r.kind());
@@ -201,6 +219,7 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
 
 // --- GET ---
 
+/// Encode a GET of already-deduplicated packed keys.
 pub fn encode_get_request(keys: &[u64], compress: bool) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_GET);
     w.put_u64(keys).put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
@@ -216,6 +235,7 @@ pub fn decode_get_request(msg: &[u8]) -> Result<(Vec<u64>, bool)> {
     Ok((keys, flags[0] & FLAG_COMPRESS != 0))
 }
 
+/// Encode the fetched rows (raw f32, or fp16+scales when `compress`).
 pub fn encode_get_response(rows: &[f32], dim: usize, compress: bool) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_GET);
     w.put_u8(&[if compress { FLAG_COMPRESS } else { 0 }]);
@@ -278,6 +298,7 @@ pub fn decode_get_response(msg: &[u8], dim: usize, n_rows: usize) -> Result<Vec<
 
 // --- PUT ---
 
+/// Encode a gradient PUT (`keys.len() * dim` floats).
 pub fn encode_put_request(keys: &[u64], grads: &[f32], dim: usize, compress: bool) -> Vec<u8> {
     debug_assert_eq!(grads.len(), keys.len() * dim);
     let mut w = WireWriter::new(KIND_PUT);
@@ -297,12 +318,14 @@ pub fn decode_put_request(msg: &[u8], dim: usize) -> Result<(Vec<u64>, Vec<f32>)
     Ok((keys, grads))
 }
 
+/// Encode the PUT ack (rows applied).
 pub fn encode_put_response(rows_applied: usize) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_PUT);
     w.put_u64(&[rows_applied as u64]);
     w.finish()
 }
 
+/// Decode the PUT ack.
 pub fn decode_put_response(msg: &[u8]) -> Result<usize> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_PUT, "expected PUT response, got kind {}", r.kind());
@@ -313,6 +336,7 @@ pub fn decode_put_response(msg: &[u8]) -> Result<usize> {
 
 // --- STATS ---
 
+/// Encode a STATS request (empty body).
 pub fn encode_stats_request() -> Vec<u8> {
     WireWriter::new(KIND_STATS).finish()
 }
@@ -327,6 +351,7 @@ pub fn encode_stats_response(stats: &PsStats, node_traffic: &[u64]) -> Vec<u8> {
     w.finish()
 }
 
+/// Decode a STATS response (aggregate stats only).
 pub fn decode_stats_response(msg: &[u8]) -> Result<PsStats> {
     Ok(decode_stats_full(msg)?.0)
 }
@@ -355,12 +380,14 @@ pub fn decode_stats_full(msg: &[u8]) -> Result<(PsStats, Vec<u64>)> {
 // section plus a u64 length-per-shard section; the split is reconstructed on
 // the other side with an overflow-checked prefix sum.
 
+/// Encode a SNAPSHOT request for one global node.
 pub fn encode_snapshot_request(node: usize) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_SNAPSHOT);
     w.put_u64(&[node as u64]);
     w.finish()
 }
 
+/// Decode a SNAPSHOT request.
 pub fn decode_snapshot_request(msg: &[u8]) -> Result<usize> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_SNAPSHOT, "expected SNAPSHOT, got kind {}", r.kind());
@@ -395,18 +422,21 @@ fn read_shard_blobs(r: &WireReader, section: usize) -> Result<Vec<Vec<u8>>> {
     Ok(out)
 }
 
+/// Encode a node's per-shard snapshot blobs.
 pub fn encode_snapshot_response(shards: &[Vec<u8>]) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_SNAPSHOT);
     put_shard_blobs(&mut w, shards);
     w.finish()
 }
 
+/// Decode a node's per-shard snapshot blobs.
 pub fn decode_snapshot_response(msg: &[u8]) -> Result<Vec<Vec<u8>>> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_SNAPSHOT, "expected SNAPSHOT response, got kind {}", r.kind());
     read_shard_blobs(&r, 0)
 }
 
+/// Encode a RESTORE of one node from its snapshot blobs.
 pub fn encode_restore_request(node: usize, shards: &[Vec<u8>]) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_RESTORE);
     w.put_u64(&[node as u64]);
@@ -423,12 +453,14 @@ pub fn decode_restore_request(msg: &[u8]) -> Result<(usize, Vec<Vec<u8>>)> {
     Ok((xs[0] as usize, read_shard_blobs(&r, 1)?))
 }
 
+/// Encode the RESTORE ack (shards restored).
 pub fn encode_restore_response(shards_restored: usize) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_RESTORE);
     w.put_u64(&[shards_restored as u64]);
     w.finish()
 }
 
+/// Decode the RESTORE ack.
 pub fn decode_restore_response(msg: &[u8]) -> Result<usize> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_RESTORE, "expected RESTORE response, got kind {}", r.kind());
@@ -439,10 +471,12 @@ pub fn decode_restore_response(msg: &[u8]) -> Result<usize> {
 
 // --- SHUTDOWN ---
 
+/// Encode a SHUTDOWN request (empty body).
 pub fn encode_shutdown_request() -> Vec<u8> {
     WireWriter::new(KIND_SHUTDOWN).finish()
 }
 
+/// Encode the SHUTDOWN ack.
 pub fn encode_shutdown_response() -> Vec<u8> {
     WireWriter::new(KIND_SHUTDOWN).finish()
 }

@@ -175,7 +175,7 @@ impl PsServer {
 
     /// Serve on the calling thread until a SHUTDOWN RPC arrives.
     pub fn serve_forever(self) -> Result<()> {
-        accept_loop(self.listener, self.rpc, self.stop);
+        accept_loop(self.listener, self.rpc, self.stop, "serve-ps");
         Ok(())
     }
 
@@ -186,7 +186,7 @@ impl PsServer {
         let stop_for_loop = stop.clone();
         let accept = std::thread::Builder::new()
             .name("ps-accept".to_string())
-            .spawn(move || accept_loop(listener, rpc, stop_for_loop))
+            .spawn(move || accept_loop(listener, rpc, stop_for_loop, "serve-ps"))
             .context("spawning PS accept thread")?;
         Ok(PsServerHandle { addr, stop, accept })
     }
@@ -195,7 +195,7 @@ impl PsServer {
 /// An address that provably reaches the listener from this host: wildcard
 /// binds (0.0.0.0 / ::) are not connectable targets everywhere, so rewrite
 /// them to the matching loopback.
-fn wake_addr(bound: SocketAddr) -> SocketAddr {
+pub(super) fn wake_addr(bound: SocketAddr) -> SocketAddr {
     let mut addr = bound;
     if addr.ip().is_unspecified() {
         let loopback: std::net::IpAddr = if addr.is_ipv4() {
@@ -208,7 +208,18 @@ fn wake_addr(bound: SocketAddr) -> SocketAddr {
     addr
 }
 
-fn accept_loop(listener: TcpListener, rpc: Arc<RpcServer>, stop: Arc<AtomicBool>) {
+/// The shared thread-per-connection accept loop of every `persia` service
+/// ([`PsServer`] and the embedding-worker tier's
+/// [`EmbeddingWorkerServer`](super::embedding_worker::EmbeddingWorkerServer)):
+/// transient-accept-error tolerance, finished-connection reaping, and the
+/// sleep-free graceful-shutdown protocol described in the module docs.
+/// `label` names the service in diagnostics.
+pub(super) fn accept_loop(
+    listener: TcpListener,
+    rpc: Arc<RpcServer>,
+    stop: Arc<AtomicBool>,
+    label: &'static str,
+) {
     // (thread, read-half handle for shutdown wakeup) per live connection.
     let mut conns: Vec<(JoinHandle<()>, Option<TcpStream>)> = Vec::new();
     let mut consecutive_errors = 0u32;
@@ -227,7 +238,7 @@ fn accept_loop(listener: TcpListener, rpc: Arc<RpcServer>, stop: Arc<AtomicBool>
                 // broken listener ends the loop.
                 consecutive_errors += 1;
                 if consecutive_errors >= 64 {
-                    eprintln!("persia serve-ps: accept failing persistently ({e}); stopping");
+                    eprintln!("persia {label}: accept failing persistently ({e}); stopping");
                     break;
                 }
                 continue;
@@ -246,7 +257,7 @@ fn accept_loop(listener: TcpListener, rpc: Arc<RpcServer>, stop: Arc<AtomicBool>
                 // Serve until the peer disconnects, stop is set, or the
                 // peer sends garbage (malformed frames drop the connection).
                 if let Err(e) = rpc.serve(&transport) {
-                    eprintln!("persia serve-ps: connection {peer:?} dropped: {e:#}");
+                    eprintln!("persia {label}: connection {peer:?} dropped: {e:#}");
                 }
             })
             .expect("spawn PS connection thread");
@@ -274,6 +285,7 @@ pub struct PsServerHandle {
 }
 
 impl PsServerHandle {
+    /// The service's bound address.
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }

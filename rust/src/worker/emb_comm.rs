@@ -1,0 +1,228 @@
+//! The embedding-tier seam: how an NN worker reaches its embedding workers.
+//!
+//! Mirrors [`DenseComm`](crate::hybrid::dense_comm::DenseComm), the seam for
+//! the dense AllReduce fabric. The trainer's worker loop programs against
+//! [`EmbComm`] for everything embedding-shaped — next prepared batch,
+//! gradient push-back, eval lookup, PS statistics — so all four train modes
+//! run unchanged whether the embedding workers live in this process
+//! ([`LocalEmbTier`]) or as their own OS processes
+//! (`persia serve-embedding-worker`, reached through
+//! [`RemoteEmbTier`](crate::service::embedding_worker::RemoteEmbTier)).
+//!
+//! The assignment policy is part of the seam: the in-process tier spreads a
+//! rank's batches over every worker per step, while the remote tier pins
+//! each NN rank to one worker process round-robin (`rank % M`) — the rank's
+//! whole sample stream then lives in a single process. Neither choice
+//! affects numerics (the workers share one PS and run identical dedup and
+//! pooling), which is what the remote-vs-inline parity suite proves.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::comm::NetSim;
+use crate::config::ModelConfig;
+use crate::data::sample::SampleId;
+use crate::data::SyntheticDataset;
+use crate::service::{PsBackend, PsStats};
+
+use super::embedding_worker::EmbeddingWorker;
+use super::pipeline::{AssignMode, BatchPrep, PreparedBatch};
+
+/// Batched access to the embedding-worker tier of one deployment.
+///
+/// Implementations are shared by every NN-worker thread of a process plus
+/// its gradient-applier threads, hence `&self` methods and `Send + Sync`.
+pub trait EmbComm: Send + Sync {
+    /// Number of embedding workers in the tier.
+    fn n_workers(&self) -> usize;
+
+    /// Which worker serves batch `step` of NN rank `rank`.
+    fn assign(&self, rank: usize, step: usize) -> usize;
+
+    /// The embedding-complete batch for `(rank, step)`. Steps must be
+    /// requested strictly in order per rank.
+    fn next_batch(&self, rank: usize, step: usize) -> Result<PreparedBatch>;
+
+    /// Push a batch's activation gradients back to worker `ew` (which holds
+    /// the samples' ID-feature buffer). Returns simulated comm seconds. On
+    /// failure the samples are re-buffered worker-side, so the identical
+    /// call can be retried.
+    fn push_grads(&self, ew: usize, sids: &[SampleId], grads: &[f32]) -> Result<f64>;
+
+    /// Drop buffered samples on worker `ew` — a gradient applier that gave
+    /// up on a batch calls this so re-buffered entries don't leak (§4.2.4
+    /// tolerates the lost update, not the leak). Best-effort.
+    fn discard(&self, ew: usize, sids: &[SampleId]);
+
+    /// Pooled activations of the deterministic held-out test batch
+    /// (`rows` samples) against the live PS state, plus simulated seconds.
+    fn eval_lookup(&self, rows: usize) -> Result<(Vec<f32>, f64)>;
+
+    /// Statistics of the embedding PS behind this tier.
+    fn ps_stats(&self) -> Result<PsStats>;
+
+    /// Error unless the tier was built for exactly this trainer config
+    /// (compared via
+    /// [`config_fingerprint`](crate::hybrid::Trainer::config_fingerprint)).
+    /// In-process tiers are compatible by construction; the remote tier
+    /// compares against each server's INFO handshake.
+    fn check_compat(&self, _fingerprint: u64) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// In-process embedding-worker tier: the simulated-cluster default, where
+/// the workers are plain structs sharing the trainer's address space and the
+/// worker→NN transfer is simulated on [`NetSim`].
+pub struct LocalEmbTier {
+    prep: BatchPrep,
+    backend: Arc<dyn PsBackend>,
+}
+
+impl LocalEmbTier {
+    /// Build `n_emb_workers` in-process workers over `backend` and the
+    /// per-rank batch streams for `n_ranks` NN workers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dataset: SyntheticDataset,
+        model: &ModelConfig,
+        backend: Arc<dyn PsBackend>,
+        net: Arc<NetSim>,
+        compress: bool,
+        n_emb_workers: usize,
+        n_ranks: usize,
+        batch_size: usize,
+    ) -> Self {
+        let workers = (0..n_emb_workers)
+            .map(|r| {
+                Arc::new(EmbeddingWorker::new(
+                    r as u8,
+                    backend.clone(),
+                    model,
+                    net.clone(),
+                    compress,
+                ))
+            })
+            .collect();
+        let prep = BatchPrep::new(
+            dataset,
+            workers,
+            batch_size,
+            model.nid_dim,
+            n_ranks,
+            AssignMode::PerStepRoundRobin,
+            false,
+        );
+        Self { prep, backend }
+    }
+
+    /// The resident workers (tests inspect their buffers/stats).
+    pub fn worker(&self, i: usize) -> &Arc<EmbeddingWorker> {
+        self.prep.worker(i)
+    }
+}
+
+impl EmbComm for LocalEmbTier {
+    fn n_workers(&self) -> usize {
+        self.prep.n_workers()
+    }
+
+    fn assign(&self, rank: usize, step: usize) -> usize {
+        self.prep.assign(rank, step)
+    }
+
+    fn next_batch(&self, rank: usize, step: usize) -> Result<PreparedBatch> {
+        let pb = self.prep.prepare(rank)?;
+        anyhow::ensure!(
+            pb.step == step,
+            "local embedding tier out of sync for rank {rank}: asked for step {step}, \
+             stream is at step {}",
+            pb.step
+        );
+        Ok(pb)
+    }
+
+    fn push_grads(&self, ew: usize, sids: &[SampleId], grads: &[f32]) -> Result<f64> {
+        self.prep.worker(ew).push_grads(sids, grads)
+    }
+
+    fn discard(&self, ew: usize, sids: &[SampleId]) {
+        self.prep.worker(ew).discard(sids);
+    }
+
+    fn eval_lookup(&self, rows: usize) -> Result<(Vec<f32>, f64)> {
+        let batch = self.prep.dataset().test_batch(rows);
+        self.prep.worker(0).lookup_direct(&batch)
+    }
+
+    fn ps_stats(&self) -> Result<PsStats> {
+        self.backend.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetSim;
+    use crate::config::{
+        EmbeddingConfig, NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
+    };
+    use crate::embedding::EmbeddingPs;
+
+    fn tier(n_ew: usize, n_ranks: usize) -> LocalEmbTier {
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 500,
+            shard_capacity: 2048,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let ps: Arc<dyn PsBackend> =
+            Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 3));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let dataset = SyntheticDataset::new(&model, 500, 1.05, 3);
+        LocalEmbTier::new(dataset, &model, ps, net, false, n_ew, n_ranks, 8)
+    }
+
+    #[test]
+    fn full_cycle_next_push_eval() {
+        let t = tier(2, 1);
+        assert_eq!(t.n_workers(), 2);
+        let pb = t.next_batch(0, 0).unwrap();
+        assert_eq!(pb.ew, t.assign(0, 0));
+        let grads = vec![0.1f32; pb.sids.len() * 8];
+        t.push_grads(pb.ew, &pb.sids, &grads).unwrap();
+        assert_eq!(t.worker(pb.ew).buffered(), 0);
+        let (emb, _) = t.eval_lookup(16).unwrap();
+        assert_eq!(emb.len(), 16 * 8);
+        assert!(t.ps_stats().unwrap().total_rows > 0);
+    }
+
+    #[test]
+    fn out_of_order_next_batch_is_rejected() {
+        let t = tier(1, 1);
+        t.next_batch(0, 0).unwrap();
+        assert!(t.next_batch(0, 2).is_err());
+    }
+
+    #[test]
+    fn discard_releases_buffered_samples() {
+        let t = tier(1, 1);
+        let pb = t.next_batch(0, 0).unwrap();
+        assert_eq!(t.worker(0).buffered(), pb.sids.len());
+        t.discard(0, &pb.sids);
+        assert_eq!(t.worker(0).buffered(), 0);
+    }
+}

@@ -29,6 +29,68 @@ use crate::config::{ModelConfig, Pooling};
 use crate::data::sample::{make_sample_id, Batch, IdFeatures, SampleId};
 use crate::service::PsBackend;
 
+/// Monotonic traffic/dedup counters of one [`EmbeddingWorker`].
+///
+/// The flush-side counters (`samples_flushed`, `rows_put`, `grad_ids`) are
+/// incremented only once the PS put **succeeds**: a batch whose put failed is
+/// re-buffered for retry, and counting it per attempt would over-report both
+/// the flush volume and — because the retry replays the identical dedup —
+/// under-report the dedup ratio. Each sample therefore counts exactly once
+/// per successful flush, no matter how many retries it took.
+#[derive(Default)]
+struct WorkerCounters {
+    samples_registered: AtomicU64,
+    batches_fetched: AtomicU64,
+    ids_looked_up: AtomicU64,
+    rows_fetched: AtomicU64,
+    batches_flushed: AtomicU64,
+    samples_flushed: AtomicU64,
+    grad_ids: AtomicU64,
+    rows_put: AtomicU64,
+    put_failures: AtomicU64,
+    rebuffered_samples: AtomicU64,
+}
+
+/// Point-in-time snapshot of an embedding worker's traffic statistics
+/// (see [`EmbeddingWorker::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Samples ever buffered by [`EmbeddingWorker::register`].
+    pub samples_registered: u64,
+    /// Forward batches fetched from the PS.
+    pub batches_fetched: u64,
+    /// Total `(group, id)` occurrences across fetched batches (pre-dedup).
+    pub ids_looked_up: u64,
+    /// Unique rows actually requested from the PS (post-dedup).
+    pub rows_fetched: u64,
+    /// Gradient batches whose PS put succeeded.
+    pub batches_flushed: u64,
+    /// Samples released by a successful flush — counted once per successful
+    /// flush, however many re-buffered retries preceded it.
+    pub samples_flushed: u64,
+    /// Total gradient id occurrences flushed (pre-dedup, success only).
+    pub grad_ids: u64,
+    /// Unique gradient rows put to the PS (post-dedup, success only).
+    pub rows_put: u64,
+    /// Failed PS puts (each one re-buffered its samples for retry).
+    pub put_failures: u64,
+    /// Samples returned to the buffer by failed puts (counts retries).
+    pub rebuffered_samples: u64,
+}
+
+impl WorkerStats {
+    /// Row fetches the §4.2.3 index compression avoided on the forward path
+    /// (duplicate ids served from the deduplicated batch lookup).
+    pub fn dedup_hits_forward(&self) -> u64 {
+        self.ids_looked_up.saturating_sub(self.rows_fetched)
+    }
+
+    /// Gradient rows the pre-aggregation avoided on the backward path.
+    pub fn dedup_hits_backward(&self) -> u64 {
+        self.grad_ids.saturating_sub(self.rows_put)
+    }
+}
+
 /// One embedding worker.
 pub struct EmbeddingWorker {
     rank: u8,
@@ -38,12 +100,15 @@ pub struct EmbeddingWorker {
     pooling: Pooling,
     buffer: Mutex<HashMap<SampleId, IdFeatures>>,
     counter: AtomicU64,
+    counters: WorkerCounters,
     net: Arc<NetSim>,
     /// Apply the §4.2.3 lossy value compression to activation/grad traffic.
     compress: bool,
 }
 
 impl EmbeddingWorker {
+    /// A worker of rank `rank` over `ps`, simulating its transfers on `net`
+    /// (`compress` = §4.2.3 lossy value compression on the worker↔NN legs).
     pub fn new(
         rank: u8,
         ps: Arc<dyn PsBackend>,
@@ -60,22 +125,44 @@ impl EmbeddingWorker {
             pooling: model.pooling,
             buffer: Mutex::new(HashMap::new()),
             counter: AtomicU64::new(0),
+            counters: WorkerCounters::default(),
             net,
             compress,
         }
     }
 
+    /// This worker's rank (the top byte of every sample id it mints).
     pub fn rank(&self) -> u8 {
         self.rank
     }
 
+    /// Full activation width: `n_groups * dim_per_group`.
     pub fn emb_dim(&self) -> usize {
         self.n_groups * self.dim_per_group
+    }
+
+    /// Snapshot of the traffic/dedup counters.
+    pub fn stats(&self) -> WorkerStats {
+        let c = &self.counters;
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        WorkerStats {
+            samples_registered: load(&c.samples_registered),
+            batches_fetched: load(&c.batches_fetched),
+            ids_looked_up: load(&c.ids_looked_up),
+            rows_fetched: load(&c.rows_fetched),
+            batches_flushed: load(&c.batches_flushed),
+            samples_flushed: load(&c.samples_flushed),
+            grad_ids: load(&c.grad_ids),
+            rows_put: load(&c.rows_put),
+            put_failures: load(&c.put_failures),
+            rebuffered_samples: load(&c.rebuffered_samples),
+        }
     }
 
     /// Step (1) of the training procedure: buffer ID features, mint sample
     /// ids to hand back to the data loader.
     pub fn register(&self, ids: Vec<IdFeatures>) -> Vec<SampleId> {
+        self.counters.samples_registered.fetch_add(ids.len() as u64, Ordering::Relaxed);
         let mut buf = self.buffer.lock().unwrap();
         ids.into_iter()
             .map(|f| {
@@ -142,10 +229,14 @@ impl EmbeddingWorker {
         Ok((out, keys.len()))
     }
 
-    /// Steps (3)-(4): the NN worker's pull. Returns the pooled activations
-    /// (`[B, emb_dim]` flattened) and the simulated communication seconds
-    /// (PS->worker rows + worker->NN activation transfer).
-    pub fn pull(&self, sample_ids: &[SampleId]) -> Result<(Vec<f32>, f64)> {
+    /// Steps (3)-(4) up to (but excluding) the worker→NN transfer: fetch and
+    /// pool the buffered samples' rows. Returns the **raw** pooled
+    /// activations (`[B, emb_dim]` flattened) and the simulated seconds of
+    /// the PS→worker leg only. This is the half an out-of-process embedding
+    /// worker runs locally — the worker→NN leg then happens for real on the
+    /// wire (see [`crate::service::embedding_worker`]) instead of being
+    /// simulated here.
+    pub fn pull_rows(&self, sample_ids: &[SampleId]) -> Result<(Vec<f32>, f64)> {
         // Snapshot the features under the lock; the PS round-trip (possibly
         // a real network call) runs with the lock released.
         let feats: Vec<IdFeatures> = {
@@ -159,19 +250,31 @@ impl EmbeddingWorker {
                 })
                 .collect::<Result<_>>()?
         };
-        let (mut out, unique_rows) = self.fetch_pooled(&feats)?;
+        let total_ids: usize = feats.iter().map(|f| f.n_ids()).sum();
+        let (out, unique_rows) = self.fetch_pooled(&feats)?;
+        self.counters.batches_fetched.fetch_add(1, Ordering::Relaxed);
+        self.counters.ids_looked_up.fetch_add(total_ids as u64, Ordering::Relaxed);
+        self.counters.rows_fetched.fetch_add(unique_rows as u64, Ordering::Relaxed);
         // PS -> embedding worker: raw rows (unique keys only).
-        let mut sim = self.net.record(Link::CpuCpu, unique_rows * self.dim_per_group * 4);
+        let sim = self.net.record(Link::PS_EW, unique_rows * self.dim_per_group * 4);
+        Ok((out, sim))
+    }
+
+    /// Steps (3)-(4): the NN worker's pull. Returns the pooled activations
+    /// (`[B, emb_dim]` flattened) and the simulated communication seconds
+    /// (PS->worker rows + worker->NN activation transfer).
+    pub fn pull(&self, sample_ids: &[SampleId]) -> Result<(Vec<f32>, f64)> {
+        let (mut out, mut sim) = self.pull_rows(sample_ids)?;
         // embedding worker -> NN worker: pooled activations (fp16+scale when
         // compression is on; we run the real round-trip so the numeric effect
         // of the lossy path is part of training).
         let emb_dim = self.emb_dim();
         if self.compress {
             let c = CompressedValues::compress(&out, emb_dim);
-            sim += self.net.record(Link::CpuGpu, c.wire_bytes());
+            sim += self.net.record(Link::EW_NN, c.wire_bytes());
             c.decompress_into(&mut out);
         } else {
-            sim += self.net.record(Link::CpuGpu, out.len() * 4);
+            sim += self.net.record(Link::EW_NN, out.len() * 4);
         }
         Ok((out, sim))
     }
@@ -179,7 +282,7 @@ impl EmbeddingWorker {
     /// Eval-path lookup straight from a batch (no sample-id buffering).
     pub fn lookup_direct(&self, batch: &Batch) -> Result<(Vec<f32>, f64)> {
         let (out, unique_rows) = self.fetch_pooled(&batch.ids)?;
-        let sim = self.net.record(Link::CpuCpu, unique_rows * self.dim_per_group * 4);
+        let sim = self.net.record(Link::PS_EW, unique_rows * self.dim_per_group * 4);
         Ok((out, sim))
     }
 
@@ -193,13 +296,25 @@ impl EmbeddingWorker {
         let mut grads = grad_emb.to_vec();
         let mut sim = if self.compress {
             let c = CompressedValues::compress(&grads, emb_dim);
-            let s = self.net.record(Link::CpuGpu, c.wire_bytes());
+            let s = self.net.record(Link::EW_NN, c.wire_bytes());
             c.decompress_into(&mut grads);
             s
         } else {
-            self.net.record(Link::CpuGpu, grads.len() * 4)
+            self.net.record(Link::EW_NN, grads.len() * 4)
         };
+        sim += self.push_grads_raw(sample_ids, &grads)?;
+        Ok(sim)
+    }
 
+    /// Steps (6)-(7) minus the NN→worker transfer: the gradients are already
+    /// resident at the worker (an out-of-process deployment received them
+    /// over the wire). Aggregates per unique row, puts one batch to the PS,
+    /// and releases the buffer entries; returns the simulated seconds of the
+    /// worker→PS leg. Re-buffers the samples on a failed put so the exact
+    /// same push can be retried (§4.2.4 recovery).
+    pub fn push_grads_raw(&self, sample_ids: &[SampleId], grads: &[f32]) -> Result<f64> {
+        let emb_dim = self.emb_dim();
+        anyhow::ensure!(grads.len() == sample_ids.len() * emb_dim, "grad shape mismatch");
         let d = self.dim_per_group;
         // Take the batch out of the buffer all-or-nothing: if any sid is
         // missing, the entries already removed go straight back, so a
@@ -258,14 +373,25 @@ impl EmbeddingWorker {
         // dropped TCP connection permanently discarded the samples and the
         // batch became unretryable.
         if let Err(e) = self.ps.put_grads(&keys, &acc) {
+            self.counters.put_failures.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .rebuffered_samples
+                .fetch_add(sample_ids.len() as u64, Ordering::Relaxed);
             let mut buf = self.buffer.lock().unwrap();
             for (&sid, f) in sample_ids.iter().zip(feats) {
                 buf.insert(sid, f);
             }
             return Err(e).context("embedding PS put (samples re-buffered for retry)");
         }
-        sim += self.net.record(Link::CpuCpu, keys.len() * d * 4);
-        Ok(sim)
+        // Flush statistics only count on success: a re-buffered batch will
+        // come back through here, and counting it per attempt would tally
+        // the same samples (and the same dedup savings) twice.
+        let total_ids: usize = feats.iter().map(|f| f.n_ids()).sum();
+        self.counters.batches_flushed.fetch_add(1, Ordering::Relaxed);
+        self.counters.samples_flushed.fetch_add(sample_ids.len() as u64, Ordering::Relaxed);
+        self.counters.grad_ids.fetch_add(total_ids as u64, Ordering::Relaxed);
+        self.counters.rows_put.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        Ok(self.net.record(Link::PS_EW, keys.len() * d * 4))
     }
 
     /// Drop specific buffered samples (a gradient applier that has given up
@@ -472,6 +598,11 @@ mod tests {
         // buffer (they used to be gone for good).
         assert!(w.push_grads(&sids, &grad).is_err());
         assert_eq!(w.buffered(), 1, "failed put must re-buffer its samples");
+        let s = w.stats();
+        assert_eq!(s.put_failures, 1);
+        assert_eq!(s.rebuffered_samples, 1);
+        assert_eq!(s.samples_flushed, 0, "a failed flush must not count");
+        assert_eq!(s.rows_put, 0);
 
         // The PS heals; the identical retry succeeds and applies once.
         flaky.fail_puts.store(false, Ordering::SeqCst);
@@ -482,6 +613,72 @@ mod tests {
         for (b, a) in before.iter().zip(&after) {
             assert!((b - 0.5 - a).abs() < 1e-6, "exactly one SGD step expected");
         }
+        // The retried batch counts exactly once: one flush, one sample, and
+        // the dedup tallies reflect a single replay of the batch — not one
+        // per attempt.
+        let s = w.stats();
+        assert_eq!(s.batches_flushed, 1);
+        assert_eq!(s.samples_flushed, 1, "each sample counts once per successful flush");
+        assert_eq!(s.grad_ids, 2, "one occurrence per group, counted once");
+        assert_eq!(s.rows_put, 2);
+        assert_eq!(s.put_failures, 1);
+    }
+
+    #[test]
+    fn stats_count_dedup_hits_once_per_flush() {
+        let (_, w, _) = setup(Pooling::Sum, false);
+        // 4 id occurrences in group 0 but only 2 unique rows; 2 unique in
+        // group 1.
+        let sids = w.register(vec![feats(&[9, 9], &[8]), feats(&[9, 7], &[6])]);
+        assert_eq!(w.stats().samples_registered, 2);
+        let (_, _) = w.pull(&sids).unwrap();
+        let s = w.stats();
+        assert_eq!(s.batches_fetched, 1);
+        assert_eq!(s.ids_looked_up, 6);
+        assert_eq!(s.rows_fetched, 4, "9 appears three times but is fetched once");
+        assert_eq!(s.dedup_hits_forward(), 2);
+
+        w.push_grads(&sids, &vec![1.0f32; 16]).unwrap();
+        let s = w.stats();
+        assert_eq!(s.samples_flushed, 2);
+        assert_eq!(s.grad_ids, 6);
+        assert_eq!(s.rows_put, 4);
+        assert_eq!(s.dedup_hits_backward(), 2);
+    }
+
+    #[test]
+    fn pull_rows_is_pull_without_the_nn_leg() {
+        // With compression off the two entry points agree exactly; the raw
+        // variant must not charge the EW→NN link (that leg happens on a real
+        // wire in the out-of-process deployment).
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 3,
+            pooling: Pooling::Sum,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 256,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.5,
+        };
+        let ps = Arc::new(EmbeddingPs::new(&cfg, 4, 1));
+        let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
+        let w = EmbeddingWorker::new(0, ps, &model, net.clone(), false);
+        let sids = w.register(vec![feats(&[1, 2], &[3])]);
+        let (raw, _) = w.pull_rows(&sids).unwrap();
+        assert_eq!(net.link_bytes(Link::EW_NN), 0, "raw pull must not charge EW→NN");
+        assert!(net.link_bytes(Link::PS_EW) > 0);
+        let (full, _) = w.pull(&sids).unwrap();
+        assert_eq!(raw, full);
+        assert!(net.link_bytes(Link::EW_NN) > 0, "full pull charges EW→NN");
     }
 
     #[test]

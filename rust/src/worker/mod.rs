@@ -1,9 +1,24 @@
 //! The two worker roles of Fig. 4: embedding workers (CPU side of Alg. 1)
 //! and NN workers (GPU side of Alg. 2), with their sample-ID-keyed buffers
 //! (§4.2.1 "Fill the Async/Sync Gap").
+//!
+//! * [`embedding_worker`] — the buffering/dedup/pooling core, deployable
+//!   in-process or behind `persia serve-embedding-worker`.
+//! * [`nn_worker`] — the input sample hash-map of one dense rank.
+//! * [`pipeline`] — stages 1–2 of the embedding pipeline ([`BatchPrep`])
+//!   plus the bounded prefetcher ([`PrefetchPipeline`]) the out-of-process
+//!   tier runs so PS latency hides behind dense compute.
+//! * [`emb_comm`] — the [`EmbComm`] seam the trainer programs against
+//!   (mirroring [`DenseComm`](crate::hybrid::dense_comm::DenseComm)), with
+//!   the in-process [`LocalEmbTier`] implementation; the remote tier lives
+//!   in [`crate::service::embedding_worker`].
 
+pub mod emb_comm;
 pub mod embedding_worker;
 pub mod nn_worker;
+pub mod pipeline;
 
-pub use embedding_worker::EmbeddingWorker;
+pub use emb_comm::{EmbComm, LocalEmbTier};
+pub use embedding_worker::{EmbeddingWorker, WorkerStats};
 pub use nn_worker::NnWorker;
+pub use pipeline::{AssignMode, BatchPrep, PrefetchPipeline, PreparedBatch};

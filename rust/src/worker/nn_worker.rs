@@ -35,10 +35,12 @@ pub struct NnWorker {
 }
 
 impl NnWorker {
+    /// An empty input buffer for dense rank `rank` (`nid_dim`-wide rows).
     pub fn new(rank: usize, nid_dim: usize) -> Self {
         Self { rank, buffer: Mutex::new(HashMap::new()), nid_dim }
     }
 
+    /// This worker's global ring rank.
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -81,6 +83,7 @@ impl NnWorker {
         Ok((nid, labels))
     }
 
+    /// Pending (dispatched, not yet consumed) samples.
     pub fn buffered(&self) -> usize {
         self.buffer.lock().unwrap().len()
     }

@@ -1,0 +1,433 @@
+//! The embedding-side batch pipeline (paper §4.1 steps (1)-(5), run as a
+//! prefetcher so PS latency hides behind dense compute).
+//!
+//! Both embedding-worker deployments share one implementation of "turn the
+//! sample stream into embedding-complete batches":
+//!
+//! * **Stage 1** ([`BatchPrep::draw`]) pulls the next mini-batch of one NN
+//!   rank's arrival stream from the data source.
+//! * **Stage 2** ([`BatchPrep::assemble`]) buffers the ID features, runs the
+//!   deduplicated scatter-gather lookup against the (possibly sharded,
+//!   possibly remote) embedding PS, pools per feature group, and assembles
+//!   the activation/NID/label tensors.
+//! * **Stage 3** serves the assembled [`PreparedBatch`]es to NN ranks — the
+//!   in-process trainer keeps its own τ-deep lookahead and calls the fused
+//!   [`BatchPrep::prepare`] on demand, while the `serve-embedding-worker`
+//!   process runs stages 1 and 2 on their own threads behind a bounded queue
+//!   ([`PrefetchPipeline`]) so the *next* batches' PS round-trips overlap
+//!   with the NN ranks' dense compute — the paper's hybrid-pipeline claim,
+//!   measured by `benches/ew_pipeline.rs`.
+//!
+//! Determinism: batches are drawn from a per-rank RNG in strict step order,
+//! so a pipeline of any depth produces the *same batch sequence*; depth only
+//! changes *when* the PS reads happen relative to gradient writes. Bitwise
+//! parity with the inline path therefore requires depth 1 (lookups happen on
+//! demand, after all earlier puts), which is what deterministic mode forces.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::data::sample::{Batch, SampleId};
+use crate::data::SyntheticDataset;
+use crate::util::Rng;
+
+use super::embedding_worker::EmbeddingWorker;
+use super::nn_worker::NnWorker;
+
+/// One embedding-complete mini-batch, ready for a dense train step.
+#[derive(Clone, Debug)]
+pub struct PreparedBatch {
+    /// Position in the owning rank's stream (strictly sequential from 0).
+    pub step: usize,
+    /// Index of the embedding worker that prepared it (gradients must be
+    /// pushed back to the same worker — it holds the sample buffer).
+    pub ew: usize,
+    /// Sample ids minted by the embedding worker, batch order.
+    pub sids: Vec<SampleId>,
+    /// Pooled activations, `[batch, emb_dim]` flattened.
+    pub emb: Vec<f32>,
+    /// Non-ID features, `[batch, nid_dim]` flattened.
+    pub nid: Vec<f32>,
+    /// Binary labels, batch order.
+    pub labels: Vec<f32>,
+    /// Simulated + real seconds spent preparing it (PS fetch, pooling, and —
+    /// for the in-process deployment — the simulated worker→NN transfer).
+    pub sim_prep: f64,
+}
+
+/// How NN ranks map onto the embedding workers of one deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignMode {
+    /// In-process cluster: batch `step` of rank `r` goes to worker
+    /// `(r + step) % n_workers` (spreads every rank over every worker, the
+    /// historical simulated-cluster policy).
+    PerStepRoundRobin,
+    /// One `serve-embedding-worker` process: every batch this process
+    /// prepares uses its single resident worker.
+    Fixed(usize),
+}
+
+/// Per-rank stream state: the arrival-order RNG plus the next step index.
+struct RankStream {
+    rng: Rng,
+    next_step: usize,
+}
+
+/// Stages 1–2 of the embedding pipeline, shared by the in-process tier and
+/// the `serve-embedding-worker` process (the trait-seam analogue of
+/// [`DenseComm`](crate::hybrid::dense_comm::DenseComm)'s two ring
+/// implementations sharing one schedule).
+pub struct BatchPrep {
+    dataset: SyntheticDataset,
+    workers: Vec<Arc<EmbeddingWorker>>,
+    batch_size: usize,
+    nid_dim: usize,
+    assign: AssignMode,
+    /// Serve raw (pre worker→NN leg) activations: the out-of-process server
+    /// sets this so the worker→NN transfer happens on the real wire instead
+    /// of being simulated by [`EmbeddingWorker::pull`].
+    serve_raw: bool,
+    ranks: Vec<Mutex<RankStream>>,
+}
+
+impl BatchPrep {
+    /// Build the preparation state for `n_ranks` NN ranks over `workers`.
+    /// Rank `r`'s stream is `dataset.train_rng(r)` in strict arrival order —
+    /// identical across deployments, which is what makes remote-vs-inline
+    /// parity possible at all.
+    pub fn new(
+        dataset: SyntheticDataset,
+        workers: Vec<Arc<EmbeddingWorker>>,
+        batch_size: usize,
+        nid_dim: usize,
+        n_ranks: usize,
+        assign: AssignMode,
+        serve_raw: bool,
+    ) -> Self {
+        assert!(!workers.is_empty(), "need at least one embedding worker");
+        let ranks = (0..n_ranks)
+            .map(|r| {
+                Mutex::new(RankStream { rng: dataset.train_rng(r as u64), next_step: 0 })
+            })
+            .collect();
+        Self { dataset, workers, batch_size, nid_dim, assign, serve_raw, ranks }
+    }
+
+    /// Number of embedding workers behind this preparation state.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The `i`-th resident embedding worker.
+    pub fn worker(&self, i: usize) -> &Arc<EmbeddingWorker> {
+        &self.workers[i]
+    }
+
+    /// The data source (eval paths build their test batches from it).
+    pub fn dataset(&self) -> &SyntheticDataset {
+        &self.dataset
+    }
+
+    /// Samples per drawn batch.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Non-ID feature width of assembled batches.
+    pub fn nid_dim(&self) -> usize {
+        self.nid_dim
+    }
+
+    /// Which worker prepares batch `step` of `rank` under this deployment's
+    /// assignment policy.
+    pub fn assign(&self, rank: usize, step: usize) -> usize {
+        match self.assign {
+            AssignMode::PerStepRoundRobin => (rank + step) % self.workers.len(),
+            AssignMode::Fixed(i) => i,
+        }
+    }
+
+    /// Stage 1: draw the next mini-batch of `rank`'s arrival stream.
+    /// Returns the step index the batch belongs to.
+    pub fn draw(&self, rank: usize) -> Result<(usize, Batch)> {
+        let slot = self
+            .ranks
+            .get(rank)
+            .with_context(|| format!("rank {rank} out of range ({} ranks)", self.ranks.len()))?;
+        let mut s = slot.lock().unwrap();
+        let step = s.next_step;
+        s.next_step += 1;
+        let batch = self.dataset.batch(&mut s.rng, self.batch_size);
+        Ok((step, batch))
+    }
+
+    /// Stage 2: buffer the ID features with the assigned embedding worker,
+    /// run the deduplicated PS lookup, and assemble the batch tensors.
+    pub fn assemble(&self, rank: usize, step: usize, batch: Batch) -> Result<PreparedBatch> {
+        let ew_idx = self.assign(rank, step);
+        let ew = &self.workers[ew_idx];
+        let t0 = std::time::Instant::now();
+        let sids = ew.register(batch.ids);
+        // Round-trip through the NN worker's input sample hash-map (paper
+        // steps (2) and (5)) so both deployments exercise the same flow.
+        let nn = NnWorker::new(rank, self.nid_dim);
+        nn.receive_batch(&sids, &batch.nid, &batch.labels);
+        let (emb, sim) =
+            if self.serve_raw { ew.pull_rows(&sids)? } else { ew.pull(&sids)? };
+        let (nid, labels) = nn.take(&sids)?;
+        // In-process, the assemble wall time is the rank's visible prep cost
+        // and is folded in here. When serving raw (out-of-process), the
+        // consumer measures its own RPC wall time — which already contains
+        // this assemble when the pipeline runs on demand — so only the
+        // *simulated* seconds ride along, never counted twice.
+        let wall = if self.serve_raw { 0.0 } else { t0.elapsed().as_secs_f64() };
+        Ok(PreparedBatch {
+            step,
+            ew: ew_idx,
+            sids,
+            emb,
+            nid,
+            labels,
+            sim_prep: sim + wall,
+        })
+    }
+
+    /// Stages 1+2 fused: the inline (pipeline-depth-1) path.
+    pub fn prepare(&self, rank: usize) -> Result<PreparedBatch> {
+        let (step, batch) = self.draw(rank)?;
+        self.assemble(rank, step, batch)
+    }
+}
+
+/// One NN rank's two-stage prefetcher: draw and assemble threads joined by
+/// bounded channels, consumed by stage 3 (the RPC handler).
+struct RankPipe {
+    /// Assembled batches, in step order. `Receiver` is not `Sync`, so stage
+    /// 3 consumers serialize on this inner lock (per rank, not globally).
+    rx: Mutex<Receiver<Result<PreparedBatch>>>,
+    /// Kept so the stage threads carry names in debuggers; dropping the
+    /// handles detaches the threads, which exit on their own once the
+    /// channels close.
+    _stages: Vec<JoinHandle<()>>,
+}
+
+/// The bounded prefetcher of one `serve-embedding-worker` process: up to
+/// `depth` batches per rank in flight across stages 1–3.
+///
+/// Depth 1 degenerates to on-demand preparation (no threads, no readahead) —
+/// the configuration deterministic mode forces, because readahead reorders
+/// PS reads relative to gradient writes and breaks bitwise parity. Depth ≥ 2
+/// is where the tier earns its keep: while an NN rank crunches batch `s`,
+/// this process is already scatter-gathering batches `s+1..s+depth` from the
+/// PS shards.
+pub struct PrefetchPipeline {
+    prep: Arc<BatchPrep>,
+    depth: usize,
+    ranks: Mutex<HashMap<usize, Arc<RankPipe>>>,
+}
+
+impl PrefetchPipeline {
+    /// Wrap `prep` in a prefetcher with `depth` in-flight batches per rank.
+    pub fn new(prep: Arc<BatchPrep>, depth: usize) -> Self {
+        assert!(depth >= 1, "pipeline depth must be >= 1");
+        Self { prep, depth, ranks: Mutex::new(HashMap::new()) }
+    }
+
+    /// The configured in-flight bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The shared stage-1/2 implementation.
+    pub fn prep(&self) -> &Arc<BatchPrep> {
+        &self.prep
+    }
+
+    /// Get or lazily create rank `r`'s stage threads + queues.
+    fn pipe_for(&self, rank: usize) -> Result<Arc<RankPipe>> {
+        let mut map = self.ranks.lock().unwrap();
+        if let Some(pipe) = map.get(&rank) {
+            return Ok(pipe.clone());
+        }
+        let (raw_tx, raw_rx) = sync_channel::<Result<(usize, Batch)>>(self.depth);
+        let (out_tx, out_rx) = sync_channel::<Result<PreparedBatch>>(self.depth);
+        let prep = self.prep.clone();
+        let stage1 = std::thread::Builder::new()
+            .name(format!("ew-draw-r{rank}"))
+            .spawn(move || loop {
+                let item = prep.draw(rank);
+                let stop = item.is_err();
+                // A closed channel (pipeline dropped) or a drawn error both
+                // end the stream; the error is forwarded first.
+                if raw_tx.send(item).is_err() || stop {
+                    return;
+                }
+            })
+            .context("spawning prefetch draw stage")?;
+        let prep = self.prep.clone();
+        let stage2 = std::thread::Builder::new()
+            .name(format!("ew-assemble-r{rank}"))
+            .spawn(move || {
+                while let Ok(item) = raw_rx.recv() {
+                    let out = match item {
+                        Ok((step, batch)) => prep.assemble(rank, step, batch),
+                        Err(e) => Err(e),
+                    };
+                    let stop = out.is_err();
+                    if out_tx.send(out).is_err() || stop {
+                        return;
+                    }
+                }
+            })
+            .context("spawning prefetch assemble stage")?;
+        let pipe =
+            Arc::new(RankPipe { rx: Mutex::new(out_rx), _stages: vec![stage1, stage2] });
+        map.insert(rank, pipe.clone());
+        Ok(pipe)
+    }
+
+    /// Stage 3: the next prepared batch of `rank`, which must be `step`.
+    /// Requests must be strictly sequential per rank — a skipped or repeated
+    /// step means client and server desynchronized (e.g. a NEXT_BATCH
+    /// response was lost), and the mismatch is surfaced loudly instead of
+    /// silently training on the wrong data.
+    pub fn next(&self, rank: usize, step: usize) -> Result<PreparedBatch> {
+        let pb = if self.depth <= 1 {
+            self.prep.prepare(rank)?
+        } else {
+            let pipe = self.pipe_for(rank)?;
+            let rx = pipe.rx.lock().unwrap();
+            rx.recv()
+                .map_err(|_| {
+                    anyhow::anyhow!("prefetch pipeline for rank {rank} ended (earlier error)")
+                })??
+        };
+        anyhow::ensure!(
+            pb.step == step,
+            "embedding prefetch out of sync for rank {rank}: asked for step {step}, \
+             pipeline is at step {} — NEXT_BATCH must be called strictly in step order",
+            pb.step
+        );
+        Ok(pb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetSim;
+    use crate::config::{
+        EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy, Pooling,
+    };
+    use crate::embedding::EmbeddingPs;
+
+    fn model() -> ModelConfig {
+        ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 3,
+            pooling: Pooling::Sum,
+        }
+    }
+
+    fn prep(n_workers: usize, n_ranks: usize, assign: AssignMode, serve_raw: bool) -> BatchPrep {
+        let model = model();
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 4096,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let ps = Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 7));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let workers = (0..n_workers)
+            .map(|r| {
+                Arc::new(EmbeddingWorker::new(r as u8, ps.clone(), &model, net.clone(), false))
+            })
+            .collect();
+        let dataset = SyntheticDataset::new(&model, 1000, 1.05, 7);
+        BatchPrep::new(dataset, workers, 8, model().nid_dim, n_ranks, assign, serve_raw)
+    }
+
+    #[test]
+    fn prepare_yields_sequential_steps_with_batch_shapes() {
+        let p = prep(2, 1, AssignMode::PerStepRoundRobin, false);
+        for want in 0..3 {
+            let pb = p.prepare(0).unwrap();
+            assert_eq!(pb.step, want);
+            assert_eq!(pb.ew, want % 2);
+            assert_eq!(pb.sids.len(), 8);
+            assert_eq!(pb.emb.len(), 8 * 8);
+            assert_eq!(pb.nid.len(), 8 * 4);
+            assert_eq!(pb.labels.len(), 8);
+        }
+    }
+
+    #[test]
+    fn fixed_assignment_always_uses_the_resident_worker() {
+        let p = prep(1, 2, AssignMode::Fixed(0), true);
+        for rank in 0..2 {
+            for _ in 0..2 {
+                assert_eq!(p.prepare(rank).unwrap().ew, 0);
+            }
+        }
+        assert_eq!(p.assign(1, 17), 0);
+    }
+
+    #[test]
+    fn streams_match_the_trainer_reference_draw() {
+        // The batch content for (rank, step) must equal drawing the same
+        // dataset stream by hand — the property every parity test rests on.
+        let p = prep(1, 2, AssignMode::Fixed(0), false);
+        let ds = SyntheticDataset::new(&model(), 1000, 1.05, 7);
+        for rank in 0..2u64 {
+            let mut rng = ds.train_rng(rank);
+            for _ in 0..3 {
+                let want = ds.batch(&mut rng, 8);
+                let got = p.prepare(rank as usize).unwrap();
+                assert_eq!(got.labels, want.labels);
+                assert_eq!(got.nid, want.nid);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_and_inline_serve_identical_streams() {
+        // Same PS seed on both sides and no writes in between: any depth
+        // must serve byte-identical batches in the same order.
+        let inline = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 1);
+        let deep = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 3);
+        for step in 0..5 {
+            let a = inline.next(0, step).unwrap();
+            let b = deep.next(0, step).unwrap();
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.emb, b.emb);
+            assert_eq!(a.nid, b.nid);
+            assert_eq!(a.labels, b.labels);
+        }
+    }
+
+    #[test]
+    fn out_of_order_step_is_rejected() {
+        let pipe = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 2);
+        pipe.next(0, 0).unwrap();
+        let err = pipe.next(0, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("out of sync"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_rank_is_an_error_not_a_panic() {
+        let pipe = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 1);
+        assert!(pipe.next(7, 0).is_err());
+    }
+}

@@ -1,0 +1,536 @@
+//! The embedding-worker tier acceptance drill (ISSUE 4).
+//!
+//! * In-process parity: for every one of the 4 sync modes, a trainer going
+//!   through a real loopback `EmbeddingWorkerServer` (which itself
+//!   scatter-gathers a 2-shard `ShardedRemotePs`) reproduces the inline
+//!   run's loss curve and AUC within 1e-6 (deterministic mode, observed
+//!   exact — the raw-f32 wire is a memcpy).
+//! * Real processes: `persia serve-embedding-worker` children (via
+//!   `CARGO_BIN_EXE`) between 2 `serve-ps` shard children and a
+//!   `persia train --embedding-workers` trainer match the inline run.
+//! * SIGKILL one embedding-worker process mid-run: the NN ranks fail
+//!   cleanly within their timeouts (no hang), every child is reaped.
+//! * An embedding worker started with different flags is rejected at the
+//!   INFO handshake (config-fingerprint policy).
+
+use std::io::BufRead;
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use persia::comm::NetSim;
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, ServiceConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::EmbeddingPs;
+use persia::hybrid::Trainer;
+use persia::service::{
+    EmbeddingWorkerServer, EwExpect, PsServer, RemoteEmbTier, ShardedRemotePs,
+};
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: usize = 2048;
+const SEED: u64 = 42;
+const BATCH: usize = 32;
+
+/// A trainer built through the same preset pipeline the CLI uses, so its
+/// config fingerprint provably matches `serve-embedding-worker` children
+/// started with the matching flags.
+fn preset_trainer(mode: TrainMode, steps: usize, k: usize, m: usize) -> Trainer {
+    let preset = BenchPreset::by_name(PRESET).unwrap();
+    let model = preset.model(DENSE);
+    let emb_cfg = preset.embedding(&model, CAPACITY);
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster =
+        ClusterConfig { n_nn_workers: k, n_emb_workers: m, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode,
+        batch_size: BATCH,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: SEED,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    t
+}
+
+fn expect_of(t: &Trainer) -> EwExpect {
+    EwExpect {
+        fingerprint: t.config_fingerprint(),
+        emb_dim: t.model.emb_dim(),
+        nid_dim: t.model.nid_dim,
+        batch_size: t.train.batch_size,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process parity: all 4 modes, against 2 PS shards.
+// ---------------------------------------------------------------------------
+
+/// The acceptance criterion: for every sync mode, training through a real
+/// loopback embedding-worker service (fronting a 2-shard PS) reproduces the
+/// inline run's losses and AUC within 1e-6.
+#[test]
+fn remote_tier_matches_inline_in_all_modes_against_two_ps_shards() {
+    for mode in TrainMode::ALL {
+        let steps = 24;
+        let baseline = preset_trainer(mode, steps, 1, 1).run_rust().unwrap();
+
+        // Two in-process PS shard servers over the preset's 4 PS nodes.
+        let template = preset_trainer(mode, steps, 1, 1);
+        let dim = template.model.emb_dim_per_group;
+        let ps_a =
+            Arc::new(EmbeddingPs::new_range(&template.emb_cfg, dim, SEED, 0..2));
+        let ps_b =
+            Arc::new(EmbeddingPs::new_range(&template.emb_cfg, dim, SEED, 2..4));
+        let srv_a = PsServer::bind(ps_a, "127.0.0.1:0", &template.emb_cfg, SEED)
+            .unwrap()
+            .spawn()
+            .unwrap();
+        let srv_b = PsServer::bind(ps_b, "127.0.0.1:0", &template.emb_cfg, SEED)
+            .unwrap()
+            .spawn()
+            .unwrap();
+        let shard_addrs = format!("{},{}", srv_a.addr(), srv_b.addr());
+
+        // The embedding-worker service, exactly as the standalone process
+        // builds it: a ShardedRemotePs over both shards behind one worker.
+        let mut ew_trainer = preset_trainer(mode, steps, 1, 1);
+        let sharded =
+            ShardedRemotePs::connect(&ServiceConfig::at(shard_addrs.clone())).unwrap();
+        ew_trainer.ps_backend = Some(Arc::new(sharded));
+        let ew_srv = EmbeddingWorkerServer::for_trainer(
+            &ew_trainer,
+            0,
+            None,
+            Some(&shard_addrs),
+            false,
+            "127.0.0.1:0",
+        )
+        .unwrap()
+        .spawn()
+        .unwrap();
+
+        // The trainer, reaching embeddings only through the tier.
+        let mut t = preset_trainer(mode, steps, 1, 1);
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let tier = RemoteEmbTier::connect(
+            &ServiceConfig::at(ew_srv.addr().to_string()),
+            expect_of(&t),
+            t.train.compress,
+            net,
+        )
+        .unwrap();
+        t.emb_comm = Some(Arc::new(tier));
+        let remote = t.run_rust().unwrap();
+
+        assert_eq!(
+            baseline.tracker.losses.len(),
+            remote.tracker.losses.len(),
+            "{mode:?}"
+        );
+        for ((sa, la), (sb, lb)) in
+            baseline.tracker.losses.iter().zip(&remote.tracker.losses)
+        {
+            assert_eq!(sa, sb, "{mode:?}");
+            assert!(
+                (la - lb).abs() <= 1e-6,
+                "{mode:?} step {sa}: loss {la} (inline) vs {lb} (remote tier)"
+            );
+        }
+        let auc_a = baseline.report.final_auc.unwrap();
+        let auc_b = remote.report.final_auc.unwrap();
+        assert!(
+            (auc_a - auc_b).abs() <= 1e-6,
+            "{mode:?}: AUC {auc_a} (inline) vs {auc_b} (remote tier)"
+        );
+        for (a, b) in baseline.final_params.iter().zip(&remote.final_params) {
+            assert!((a - b).abs() <= 1e-6, "{mode:?}: final params diverged: {a} vs {b}");
+        }
+
+        ew_srv.shutdown().unwrap();
+        srv_a.shutdown().unwrap();
+        srv_b.shutdown().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real child processes.
+// ---------------------------------------------------------------------------
+
+/// A spawned `persia` child with its stdout+stderr streamed into a line
+/// buffer (so pipes never fill) and kill-on-drop reaping.
+struct Proc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl Proc {
+    fn spawn(args: &[String]) -> Proc {
+        let exe = env!("CARGO_BIN_EXE_persia");
+        let mut child = Command::new(exe)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn persia child");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let mut readers = Vec::new();
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stderr = child.stderr.take().expect("stderr piped");
+        for reader in [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)] {
+            let lines = lines.clone();
+            readers.push(std::thread::spawn(move || {
+                let buf = std::io::BufReader::new(reader);
+                for line in buf.lines() {
+                    match line {
+                        Ok(l) => lines.lock().unwrap().push(l),
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Proc { child, lines, readers }
+    }
+
+    /// First buffered line containing `pat`, waiting up to `timeout`.
+    fn wait_for_line(&mut self, pat: &str, timeout: Duration) -> Option<String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(l) =
+                self.lines.lock().unwrap().iter().find(|l| l.contains(pat)).cloned()
+            {
+                return Some(l);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            if let Ok(Some(_)) = self.child.try_wait() {
+                // Child exited; drain whatever the readers still push.
+                std::thread::sleep(Duration::from_millis(100));
+                return self
+                    .lines
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .find(|l| l.contains(pat))
+                    .cloned();
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Wait for exit up to `timeout`.
+    fn wait_timeout(&mut self, timeout: Duration) -> Option<ExitStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.child.try_wait().expect("try_wait") {
+                Some(status) => return Some(status),
+                None if Instant::now() >= deadline => return None,
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    fn output_snapshot(&self) -> String {
+        self.lines.lock().unwrap().join("\n")
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.kill();
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Extract the address from a `... listening on ADDR ...` line.
+fn addr_from(line: &str) -> String {
+    line.split("listening on ")
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .expect("address in listening line")
+        .to_string()
+}
+
+/// Spawn one `persia serve-ps` shard and wait for its listening line.
+fn spawn_ps(node_range: Option<&str>) -> (Proc, String) {
+    let mut args: Vec<String> =
+        ["serve-ps", "--preset", PRESET, "--dense", DENSE, "--addr", "127.0.0.1:0"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    args.extend(["--shard-capacity".to_string(), CAPACITY.to_string()]);
+    args.extend(["--seed".to_string(), SEED.to_string()]);
+    if let Some(r) = node_range {
+        args.extend(["--node-range".to_string(), r.to_string()]);
+    }
+    let mut p = Proc::spawn(&args);
+    let line = p
+        .wait_for_line("listening on ", Duration::from_secs(30))
+        .unwrap_or_else(|| panic!("serve-ps never listened:\n{}", p.output_snapshot()));
+    let addr = addr_from(&line);
+    (p, addr)
+}
+
+/// The train-loop flags every process of one deployment must share.
+fn shared_flags(steps: usize, nn_workers: usize, emb_workers: usize) -> Vec<String> {
+    [
+        "--preset",
+        PRESET,
+        "--dense",
+        DENSE,
+        "--engine",
+        "rust",
+        "--mode",
+        "sync",
+        "--deterministic",
+        "true",
+        "--netsim",
+        "false",
+        "--compress",
+        "false",
+        "--lr",
+        "0.05",
+        "--tau",
+        "4",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--shard-capacity".to_string(),
+        CAPACITY.to_string(),
+        "--seed".to_string(),
+        SEED.to_string(),
+        "--batch".to_string(),
+        BATCH.to_string(),
+        "--steps".to_string(),
+        steps.to_string(),
+        "--eval-every".to_string(),
+        steps.to_string(),
+        "--nn-workers".to_string(),
+        nn_workers.to_string(),
+        "--emb-workers".to_string(),
+        emb_workers.to_string(),
+    ])
+    .collect()
+}
+
+/// Spawn one `persia serve-embedding-worker` and wait for its address.
+fn spawn_ew(
+    steps: usize,
+    nn_workers: usize,
+    emb_workers: usize,
+    ew_rank: usize,
+    remote_ps: &str,
+) -> (Proc, String) {
+    let mut args = vec!["serve-embedding-worker".to_string()];
+    args.extend(shared_flags(steps, nn_workers, emb_workers));
+    args.extend([
+        "--addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--ew-rank".to_string(),
+        ew_rank.to_string(),
+        "--remote-ps".to_string(),
+        remote_ps.to_string(),
+    ]);
+    let mut p = Proc::spawn(&args);
+    let line = p
+        .wait_for_line("embedding worker listening on ", Duration::from_secs(30))
+        .unwrap_or_else(|| {
+            panic!("serve-embedding-worker never listened:\n{}", p.output_snapshot())
+        });
+    let addr = addr_from(&line);
+    (p, addr)
+}
+
+fn parse_losses(output: &str) -> Vec<(u64, f32)> {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("LOSSES "))
+        .unwrap_or_else(|| panic!("no LOSSES line in:\n{output}"));
+    line["LOSSES ".len()..]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|pair| {
+            let (s, l) = pair.split_once(':').expect("step:loss pair");
+            (s.parse().unwrap(), l.parse().unwrap())
+        })
+        .collect()
+}
+
+fn parse_parity(output: &str) -> (f32, f64) {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("PARITY "))
+        .unwrap_or_else(|| panic!("no PARITY line in:\n{output}"));
+    let mut loss = f32::NAN;
+    let mut auc = f64::NAN;
+    for field in line["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            loss = v.parse().unwrap();
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            auc = v.parse().unwrap_or(f64::NAN);
+        }
+    }
+    (loss, auc)
+}
+
+/// Full three-tier deployment with real child processes: 2 `serve-ps`
+/// shards × 1 `serve-embedding-worker` × 1 `persia train` — losses and AUC
+/// within 1e-6 of the inline single-process run.
+#[test]
+fn three_tier_child_processes_match_inline() {
+    let steps = 30;
+    let baseline = preset_trainer(TrainMode::FullSync, steps, 1, 1).run_rust().unwrap();
+    let base_auc = baseline.report.final_auc.unwrap();
+
+    let (_ps0, addr0) = spawn_ps(Some("0..2"));
+    let (_ps1, addr1) = spawn_ps(Some("2..4"));
+    let remote = format!("{addr0},{addr1}");
+    let (_ew, ew_addr) = spawn_ew(steps, 1, 1, 0, &remote);
+
+    let mut args = vec!["train".to_string()];
+    args.extend(shared_flags(steps, 1, 1));
+    args.extend([
+        "--embedding-workers".to_string(),
+        ew_addr,
+        "--parity-lines".to_string(),
+        "true".to_string(),
+    ]);
+    let mut train = Proc::spawn(&args);
+    let status = train
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("train hung:\n{}", train.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(status.success(), "train failed:\n{}", train.output_snapshot());
+
+    let out = train.output_snapshot();
+    let losses = parse_losses(&out);
+    assert_eq!(losses.len(), baseline.tracker.losses.len());
+    for ((sa, la), (sb, lb)) in baseline.tracker.losses.iter().zip(&losses) {
+        assert_eq!(sa, sb);
+        assert!(
+            (la - lb).abs() <= 1e-6,
+            "step {sa}: loss {la} (inline) vs {lb} (three-tier processes)"
+        );
+    }
+    let (final_loss, final_auc) = parse_parity(&out);
+    assert!(
+        (baseline.report.final_loss - final_loss).abs() <= 1e-6,
+        "final loss {} (inline) vs {final_loss} (three-tier)",
+        baseline.report.final_loss
+    );
+    assert!(
+        (base_auc - final_auc).abs() <= 1e-6,
+        "AUC {base_auc} (inline) vs {final_auc} (three-tier)"
+    );
+}
+
+/// SIGKILL one embedding-worker process mid-run: both `train-worker` ranks
+/// of a full three-tier deployment fail cleanly within their timeouts — no
+/// hang — and every child is reaped.
+#[test]
+fn sigkill_embedding_worker_fails_ranks_cleanly() {
+    let steps = 1_000_000;
+    let (_ps, ps_addr) = spawn_ps(None);
+    let (_ew0, ew0_addr) = spawn_ew(steps, 2, 2, 0, &ps_addr);
+    let (mut ew1, ew1_addr) = spawn_ew(steps, 2, 2, 1, &ps_addr);
+    let ew_list = format!("{ew0_addr},{ew1_addr}");
+
+    let worker_args = |rank: usize, rendezvous: &str| -> Vec<String> {
+        let mut args = vec![
+            "train-worker".to_string(),
+            "--rank".to_string(),
+            rank.to_string(),
+            "--world".to_string(),
+            "2".to_string(),
+            "--rendezvous".to_string(),
+            rendezvous.to_string(),
+            "--ring-timeout-ms".to_string(),
+            "8000".to_string(),
+        ];
+        args.extend(shared_flags(steps, 2, 2));
+        args.extend(["--embedding-workers".to_string(), ew_list.clone()]);
+        args
+    };
+
+    let mut w0 = Proc::spawn(&worker_args(0, "127.0.0.1:0"));
+    let rdzv_line = w0
+        .wait_for_line("rendezvous listening on ", Duration::from_secs(60))
+        .unwrap_or_else(|| panic!("rank 0 never printed rendezvous:\n{}", w0.output_snapshot()));
+    let rendezvous = rdzv_line
+        .split("rendezvous listening on ")
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .expect("rendezvous address")
+        .to_string();
+    let mut w1 = Proc::spawn(&worker_args(1, &rendezvous));
+
+    w0.wait_for_line("ring connected: rank 0/2", Duration::from_secs(60))
+        .unwrap_or_else(|| panic!("ring never formed:\n{}", w0.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(500));
+
+    // SIGKILL embedding worker 1 (serving rank 1).
+    ew1.kill();
+
+    let s0 = w0.wait_timeout(Duration::from_secs(60)).unwrap_or_else(|| {
+        panic!("rank 0 hung after embedding-worker SIGKILL:\n{}", w0.output_snapshot())
+    });
+    let s1 = w1.wait_timeout(Duration::from_secs(60)).unwrap_or_else(|| {
+        panic!("rank 1 hung after embedding-worker SIGKILL:\n{}", w1.output_snapshot())
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(!s0.success(), "rank 0 must fail when the tier loses a worker");
+    assert!(!s1.success(), "rank 1 must fail when its embedding worker dies");
+    assert!(
+        w1.output_snapshot().contains("embedding worker"),
+        "rank 1's error should cite the embedding worker:\n{}",
+        w1.output_snapshot()
+    );
+    // Drop reaps every remaining child.
+}
+
+/// An embedding worker started with different flags (here: --steps 41) is
+/// rejected at the INFO handshake by the config-fingerprint policy.
+#[test]
+fn mismatched_embedding_worker_rejected_at_handshake() {
+    let steps = 40;
+    let (_ps, ps_addr) = spawn_ps(None);
+    // Same PS flags (so the worker's own PS handshake passes), different
+    // train length.
+    let (_ew, ew_addr) = spawn_ew(41, 1, 1, 0, &ps_addr);
+
+    let mut args = vec!["train".to_string()];
+    args.extend(shared_flags(steps, 1, 1));
+    args.extend(["--embedding-workers".to_string(), ew_addr]);
+    let mut train = Proc::spawn(&args);
+    let status = train
+        .wait_timeout(Duration::from_secs(120))
+        .unwrap_or_else(|| panic!("train hung on mismatch:\n{}", train.output_snapshot()));
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(!status.success(), "mismatched tier must be rejected");
+    assert!(
+        train.output_snapshot().contains("fingerprint"),
+        "rejection should cite the fingerprint:\n{}",
+        train.output_snapshot()
+    );
+}
