@@ -1,0 +1,99 @@
+//! Checkpoint-epoch overhead: training throughput with coordinated epochs
+//! off vs. at several cadences (the §4.2.4 "check-pointing is very
+//! efficient" claim, now measurable end to end).
+//!
+//! Each case trains the same deterministic FullSync run; the checkpointed
+//! cases additionally drive the two-phase PREPARE/COMMIT + global-manifest
+//! write every N steps. The delta is the full epoch cost: LRU flat-copy
+//! snapshots, atomic (fsync) file writes, and the manifest. Emits
+//! `BENCH_ckpt_overhead.json` when `BENCH_JSON_DIR` is set — CI uploads it
+//! to seed the perf trajectory.
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+use persia::recovery::EpochConfig;
+use persia::util::Bench;
+
+mod common;
+
+fn trainer(steps: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 4,
+        emb_dim_per_group: 16,
+        nid_dim: 8,
+        hidden: vec![64, 32],
+        ids_per_group: 4,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 100_000,
+        shard_capacity: 1 << 16,
+        n_nodes: 4,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster = ClusterConfig {
+        n_nn_workers: 1,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: 64,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps,
+        eval_every: 0,
+        seed: 9,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, 100_000, 1.05, 9);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    t
+}
+
+fn main() {
+    common::banner(
+        "checkpoint-epoch overhead: throughput with epochs off vs every N steps",
+        "Persia (KDD'22) §4.2.4 (fault tolerance / efficient checkpointing)",
+    );
+    let steps = 60usize;
+    let samples = (steps * 64) as f64;
+    let bench = Bench::new(1, 5);
+    let mut rows = Vec::new();
+
+    rows.push(bench.run("train_no_checkpoints", Some(samples), || {
+        trainer(steps).run_rust().unwrap();
+    }));
+    let baseline_mean = rows[0].mean_ns;
+
+    for every in [20usize, 5, 1] {
+        let dir = std::env::temp_dir().join(format!(
+            "persia_ckpt_bench_{}_{every}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        rows.push(bench.run(&format!("train_checkpoint_every_{every}"), Some(samples), || {
+            let mut t = trainer(steps);
+            t.checkpoint = Some(EpochConfig { dir: dir.clone(), every });
+            t.run_rust().unwrap();
+        }));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    persia::util::bench::print_and_emit("ckpt_overhead", "ckpt_overhead", &rows);
+    println!("\nepoch overhead vs no-checkpoint baseline:");
+    for r in &rows[1..] {
+        let overhead = (r.mean_ns / baseline_mean - 1.0) * 100.0;
+        println!("  {:<32} {overhead:>+7.1}%", r.name);
+    }
+}

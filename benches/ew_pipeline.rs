@@ -123,14 +123,26 @@ fn main() {
         "{:<28} {:>14} {:>12}",
         "pipeline depth", "batches/sec", "vs inline"
     );
+    let mut json_rows = Vec::new();
+    let record = |tput: f64, name: &str| persia::util::bench::BenchResult {
+        name: name.to_string(),
+        iters: n_batches as u64,
+        mean_ns: 1e9 / tput.max(1e-9),
+        p50_ns: (1e9 / tput.max(1e-9)) as u64,
+        p95_ns: (1e9 / tput.max(1e-9)) as u64,
+        throughput: Some(tput),
+    };
     let inline = run_depth(1, n_batches, ps_latency, compute);
     println!("{:<28} {:>14.1} {:>11.2}x", "1 (inline, on-demand)", inline, 1.0);
+    json_rows.push(record(inline, "depth_1_inline"));
     let mut best = inline;
     for depth in [2usize, 4, 8] {
         let tput = run_depth(depth, n_batches, ps_latency, compute);
         best = best.max(tput);
         println!("{:<28} {:>14.1} {:>11.2}x", format!("{depth}"), tput, tput / inline);
+        json_rows.push(record(tput, &format!("depth_{depth}")));
     }
+    persia::util::bench::emit_json("ew_pipeline", &json_rows);
     let ceiling = 1.0 / compute.as_secs_f64();
     let serial = 1.0 / (compute + ps_latency).as_secs_f64();
     println!(

@@ -84,6 +84,6 @@ fn main() {
         }
     }
 
-    persia::util::bench::print_table("micro_allreduce", &rows);
+    persia::util::bench::print_and_emit("micro_allreduce", "micro_allreduce", &rows);
     println!("micro_allreduce OK");
 }

@@ -133,6 +133,6 @@ fn main() {
         h.join().unwrap();
     }
 
-    persia::util::bench::print_table("micro_comm", &rows);
+    persia::util::bench::print_and_emit("micro_comm", "micro_comm", &rows);
     println!("micro_comm OK");
 }

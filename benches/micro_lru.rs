@@ -90,6 +90,6 @@ fn main() {
         }));
     }
 
-    persia::util::bench::print_table("micro_lru", &rows);
+    persia::util::bench::print_and_emit("micro_lru", "micro_lru", &rows);
     println!("micro_lru OK");
 }

@@ -1,0 +1,115 @@
+//! Resumable training end to end, in one process (the §4.2.4 recovery
+//! story at library level; see `rust/tests/integration_recovery.rs` for the
+//! same drill with real SIGKILLed child processes):
+//!
+//! 1. run A trains 30 steps straight through — the reference;
+//! 2. run B trains the identical config while cutting a coordinated
+//!    checkpoint epoch every 10 steps (PS snapshot + global manifest);
+//! 3. run C starts FRESH, restores epoch 20 (dense + optimizer from the
+//!    manifest, embedding PS from the epoch files, loader streams by
+//!    fast-forward) and trains only steps 20..30.
+//!
+//! C must finish **bit-identical** to A: resuming from a committed epoch is
+//! indistinguishable from never having died.
+
+use anyhow::Result;
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::{ResumeState, Trainer};
+use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
+
+fn trainer(steps: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 1000,
+        shard_capacity: 8192,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster = ClusterConfig {
+        n_nn_workers: 1,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: 32,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: 5,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, 1000, 1.05, 5);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.eval_rows = 1024;
+    // Deterministic FullSync: the configuration under which resume is
+    // provably EXACT, not just statistically equivalent.
+    t.deterministic = true;
+    t
+}
+
+fn main() -> Result<()> {
+    let steps = 30;
+    let dir = std::env::temp_dir().join(format!("persia_resume_demo_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("== run A: 30 steps, no checkpoints (reference) ==");
+    let a = trainer(steps).run_rust()?;
+    a.report.print_row();
+
+    println!("\n== run B: 30 steps, checkpoint epoch every 10 ==");
+    let mut b = trainer(steps);
+    b.checkpoint = Some(EpochConfig { dir: dir.clone(), every: 10 });
+    let b = b.run_rust()?;
+    b.report.print_row();
+    anyhow::ensure!(
+        a.final_params == b.final_params,
+        "checkpointing must be pure observation"
+    );
+    let newest = latest_epoch(&dir);
+    println!("committed epochs present; newest = {newest:?}");
+    anyhow::ensure!(newest == Some(30), "expected epoch 30 committed");
+
+    println!("\n== run C: fresh process, --resume-from epoch 20 ==");
+    let manifest = load_manifest(&dir, 20)?;
+    let mut c = trainer(steps);
+    c.start_step = manifest.step as usize;
+    c.resume = Some(ResumeState::from_manifest(&manifest, Some(dir.clone())));
+    let c = c.run_rust()?;
+    c.report.print_row();
+
+    anyhow::ensure!(
+        c.final_params == a.final_params,
+        "resumed run diverged from the uninterrupted reference"
+    );
+    anyhow::ensure!(
+        c.tracker.aucs == a.tracker.aucs,
+        "resumed AUC trajectory diverged: {:?} vs {:?}",
+        c.tracker.aucs,
+        a.tracker.aucs
+    );
+    let suffix: Vec<(u64, f32)> =
+        a.tracker.losses.iter().filter(|(s, _)| *s >= 20).cloned().collect();
+    anyhow::ensure!(c.tracker.losses == suffix, "resumed loss curve != reference suffix");
+    println!("\nPARITY OK: resume from epoch 20 is bit-identical to the uninterrupted run");
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use persia::config::{
     ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
-    Pooling, ServiceConfig, TrainConfig, TrainMode,
+    Pooling, RecoveryConfig, ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::data::SyntheticDataset;
 use persia::embedding::EmbeddingPs;
@@ -107,8 +107,7 @@ fn main() -> anyhow::Result<()> {
     // 2. One sharded backend over all of them; train phase 1.
     let svc = ServiceConfig {
         addr: addrs.join(","),
-        reconnect_attempts: 30,
-        reconnect_backoff_ms: 50,
+        recovery: RecoveryConfig { attempts: 30, backoff_ms: 50, ..RecoveryConfig::default() },
         ..ServiceConfig::default()
     };
     let backend = Arc::new(ShardedRemotePs::connect(&svc)?);

@@ -39,6 +39,7 @@ use crate::comm::netsim::{Link, NetSim};
 use crate::comm::transport::{TcpTransport, Transport};
 use crate::comm::wire::{WireReader, WireWriter};
 use crate::config::RingConfig;
+use crate::recovery::{dial_retry, remaining};
 use crate::tensor::Tensor;
 
 use super::bucket::FlatBuckets;
@@ -65,12 +66,6 @@ pub const KIND_RING_TOKEN: u32 = 0x6006;
 /// the unbounded in-process channels can never hit) is impossible no
 /// matter how large the gradient is.
 const SEG_ELEMS: usize = 4096;
-
-fn remaining(deadline: Instant) -> Duration {
-    deadline
-        .saturating_duration_since(Instant::now())
-        .max(Duration::from_millis(1))
-}
 
 fn encode_hello(kind: u32, rank: usize, world: usize, fingerprint: u64, addr: &str) -> Vec<u8> {
     let mut w = WireWriter::new(kind);
@@ -108,21 +103,6 @@ fn configure(stream: &TcpStream, deadline: Instant) -> Result<()> {
     stream.set_read_timeout(Some(remaining(deadline)))?;
     stream.set_write_timeout(Some(remaining(deadline)))?;
     Ok(())
-}
-
-/// Dial `addr`, retrying until `deadline` (the target may not be bound yet).
-fn dial_retry(addr: &str, deadline: Instant, what: &str) -> Result<TcpStream> {
-    loop {
-        match TcpStream::connect(addr) {
-            Ok(s) => return Ok(s),
-            Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(e).with_context(|| format!("dialing {what} at {addr}"));
-                }
-                std::thread::sleep(Duration::from_millis(20));
-            }
-        }
-    }
 }
 
 /// Accept one connection before `deadline` from a listener (made

@@ -5,6 +5,59 @@
 
 use anyhow::{bail, Context, Result};
 
+/// The one failure-handling policy every wire client shares (paper §4.2.4,
+/// deployed by `rust/src/recovery/`): how hard a pooled connection tries to
+/// come back, and whether the client keeps a gradient-put replay log so a
+/// PS shard restarted from an older checkpoint epoch can be brought back to
+/// the exact pre-crash state.
+///
+/// One struct, one meaning, three wire clients: the PS pool
+/// ([`RemotePs`](crate::service::RemotePs) /
+/// [`ShardedRemotePs`](crate::service::ShardedRemotePs)), the
+/// embedding-worker pool
+/// ([`RemoteEmbeddingWorker`](crate::service::RemoteEmbeddingWorker)), and
+/// the grad appliers' bounded put retry all build their
+/// [`RetryPolicy`](crate::recovery::RetryPolicy) from here.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecoveryConfig {
+    /// How many times a failed call re-dials its pooled connection before
+    /// giving up (0 = fail on first error). Each retry re-runs the INFO
+    /// handshake and insists the server's config fingerprint is unchanged —
+    /// this is what lets a PS shard process killed and restarted from its
+    /// checkpoint epoch rejoin a run mid-flight (§4.2.4).
+    pub attempts: u32,
+    /// Constant delay between reconnect attempts, in milliseconds.
+    pub backoff_ms: u64,
+    /// Keep a per-shard log of successfully applied gradient puts since the
+    /// last committed checkpoint epoch, and replay it into a shard that
+    /// comes back restored from that epoch (detected via the INFO boot
+    /// nonce). Off by default: the log costs memory proportional to the
+    /// checkpoint cadence, and exact-replay semantics assume a single
+    /// process owns all puts to the PS (an embedding-worker process, or a
+    /// one-rank trainer). See `recovery::PutReplayLog`.
+    pub replay_puts: bool,
+    /// Maximum put batches retained in the replay log. When the cap is
+    /// exceeded the oldest entries are dropped and a later replay is
+    /// best-effort (it warns about the lost prefix instead of failing).
+    pub replay_cap: usize,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        Self { attempts: 4, backoff_ms: 50, replay_puts: false, replay_cap: 4096 }
+    }
+}
+
+impl RecoveryConfig {
+    /// Error on a configuration that cannot work.
+    pub fn validate(&self) -> Result<()> {
+        if self.replay_puts && self.replay_cap == 0 {
+            bail!("recovery replay_cap must be >= 1 when replay_puts is on");
+        }
+        Ok(())
+    }
+}
+
 /// How a trainer process reaches (or a PS process exposes) the embedding
 /// parameter server over TCP.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -25,14 +78,9 @@ pub struct ServiceConfig {
     /// always on). Off by default so the remote PS is bit-identical to the
     /// in-process one.
     pub wire_compress: bool,
-    /// How many times a failed call re-dials its pooled connection before
-    /// giving up (0 = fail on first error). Each retry re-runs the INFO
-    /// handshake and insists the server's config fingerprint is unchanged —
-    /// this is what lets a PS shard process killed and restarted from its
-    /// snapshot rejoin a run mid-flight (§4.2.4).
-    pub reconnect_attempts: u32,
-    /// Constant delay between reconnect attempts, in milliseconds.
-    pub reconnect_backoff_ms: u64,
+    /// Reconnect/retry/replay policy of this client's connection pools —
+    /// the shared `recovery` layer's configuration.
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for ServiceConfig {
@@ -41,8 +89,7 @@ impl Default for ServiceConfig {
             addr: "127.0.0.1:7700".to_string(),
             client_conns: 4,
             wire_compress: false,
-            reconnect_attempts: 4,
-            reconnect_backoff_ms: 50,
+            recovery: RecoveryConfig::default(),
         }
     }
 }
@@ -80,6 +127,7 @@ impl ServiceConfig {
         if self.client_conns == 0 {
             bail!("client_conns must be >= 1");
         }
+        self.recovery.validate()?;
         Ok(())
     }
 }
@@ -104,20 +152,41 @@ pub struct EmbWorkerConfig {
     /// contract), τ for the hybrid modes, 2τ for FullAsync — so PS latency
     /// hides behind dense compute exactly where the mode allows staleness.
     pub pipeline_depth: Option<usize>,
+    /// Depth of the per-rank NEXT_BATCH response replay ring (`--replay-depth`).
+    /// A reconnecting NN rank may re-ask for any of the last `replay_depth`
+    /// served steps and get the cached response; deeper rings survive longer
+    /// bursts of lost responses (the PR-4 one-deep cache desynced after two
+    /// in a row). The PUSH_GRADS ack cache is sized `4 × replay_depth`.
+    pub replay_depth: usize,
+    /// First step index of every rank's stream (`--start-step`). A resumed
+    /// three-tier run (`train --resume-from`) starts its NN ranks at the
+    /// checkpoint epoch's step; the worker must fast-forward its loader
+    /// streams to the same point or the strictly-sequential NEXT_BATCH
+    /// protocol rejects the first request.
+    pub start_step: usize,
 }
 
 impl Default for EmbWorkerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7900".to_string(), ew_rank: 0, pipeline_depth: None }
+        Self {
+            addr: "127.0.0.1:7900".to_string(),
+            ew_rank: 0,
+            pipeline_depth: None,
+            replay_depth: 4,
+            start_step: 0,
+        }
     }
 }
 
 impl EmbWorkerConfig {
-    /// Error on malformed listen addresses or a zero pipeline depth.
+    /// Error on malformed listen addresses or a zero pipeline/replay depth.
     pub fn validate(&self) -> Result<()> {
         validate_addr(&self.addr)?;
         if self.pipeline_depth == Some(0) {
             bail!("--pipeline-depth must be >= 1 (1 = on-demand, no readahead)");
+        }
+        if self.replay_depth == 0 {
+            bail!("--replay-depth must be >= 1 (1 = the PR-4 one-deep cache)");
         }
         Ok(())
     }
@@ -265,14 +334,36 @@ mod tests {
             addr: "0.0.0.0:0".into(),
             ew_rank: 3,
             pipeline_depth: Some(4),
+            replay_depth: 2,
+            start_step: 10,
         };
         ok.validate().unwrap();
         assert!(EmbWorkerConfig { pipeline_depth: Some(0), ..EmbWorkerConfig::default() }
             .validate()
             .is_err());
+        assert!(EmbWorkerConfig { replay_depth: 0, ..EmbWorkerConfig::default() }
+            .validate()
+            .is_err());
         assert!(EmbWorkerConfig { addr: "nocolon".into(), ..EmbWorkerConfig::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn recovery_config_validation() {
+        RecoveryConfig::default().validate().unwrap();
+        // Replay needs at least one retained entry.
+        let bad = RecoveryConfig { replay_puts: true, replay_cap: 0, ..RecoveryConfig::default() };
+        assert!(bad.validate().is_err());
+        // A zero-cap log is fine while replay is off.
+        let ok = RecoveryConfig { replay_cap: 0, ..RecoveryConfig::default() };
+        ok.validate().unwrap();
+        // A bad recovery block poisons the owning ServiceConfig.
+        let svc = ServiceConfig {
+            recovery: RecoveryConfig { replay_puts: true, replay_cap: 0, ..Default::default() },
+            ..ServiceConfig::default()
+        };
+        assert!(svc.validate().is_err());
     }
 
     #[test]

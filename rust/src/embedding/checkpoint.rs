@@ -1,14 +1,34 @@
-//! Periodic checkpointing of the embedding PS (paper §4.2.4).
+//! Checkpointing of the embedding PS (paper §4.2.4), in two flavors.
 //!
 //! "embedding PS nodes will periodically save the in-memory copy of the
 //! embedding parameter shard; with the advance of our LRU implementation,
 //! check-pointing is very efficient" — a shard snapshot is `LruStore`'s flat
-//! memory copy. Files carry a CRC32 so torn writes are detected on load.
+//! memory copy. Files carry a CRC32 so torn or bit-flipped content is
+//! detected on load, and **every** write goes through the crash-safe
+//! [`atomic_write`](crate::recovery::atomic_write) (temp + fsync + rename),
+//! so a crash mid-save can never leave a file that `from_bytes` rejects on
+//! restore — the old file simply survives.
+//!
+//! * **Legacy flat files** (`dir/ps_node_N.ckpt`) — one file per node,
+//!   saved on graceful shutdown; uncoordinated across shards.
+//! * **Checkpoint epochs** (`dir/step-S/…`) — the coordinated two-phase
+//!   flavor driven by the trainer's PREPARE_CKPT/COMMIT_CKPT RPCs (see
+//!   [`crate::recovery::coordinator`]). PREPARE stages every owned node as
+//!   `ps_node_N.ckpt.prep`; COMMIT renames the stages into place and then
+//!   atomically writes this shard's manifest (`shard_A_B.manifest`), whose
+//!   *existence* is the commit marker. A restarting `serve-ps` restores the
+//!   newest epoch whose shard manifest is valid
+//!   ([`CheckpointManager::latest_committed_epoch`]) — it can never pick a
+//!   half-written epoch, because the manifest lands only after the node
+//!   files are durable.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
+
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::recovery::atomic_write;
 
 use super::ps::EmbeddingPs;
 
@@ -56,7 +76,70 @@ fn read_blob(r: &mut impl Read) -> Result<Vec<u8>> {
     Ok(bytes)
 }
 
-/// Checkpoint manager for a PS: one file per node under `dir`.
+/// Serialize one node's per-shard snapshots into the node-file layout
+/// (shard count, then framed checksummed blobs).
+fn encode_node_snapshot(shards: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(shards.len() as u64).to_le_bytes());
+    for s in shards {
+        write_blob(&mut out, s).expect("Vec<u8> writes are infallible");
+    }
+    out
+}
+
+/// Parse a node file back into per-shard snapshots, rejecting (never
+/// panicking on) torn or corrupt content.
+fn decode_node_snapshot(bytes: &[u8]) -> Result<Vec<Vec<u8>>> {
+    let mut r: &[u8] = bytes;
+    let mut n_buf = [0u8; 8];
+    r.read_exact(&mut n_buf).context("node file shard count")?;
+    let n = u64::from_le_bytes(n_buf) as usize;
+    ensure!(n < 1 << 20, "implausible shard count {n}");
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        shards.push(read_blob(&mut r)?);
+    }
+    ensure!(r.is_empty(), "trailing bytes after node snapshot");
+    Ok(shards)
+}
+
+/// Leading magic of a serialized shard epoch manifest.
+const SHARD_MANIFEST_MAGIC: &[u8; 8] = b"PRSASM01";
+/// Wire-message kind of the shard manifest body (file-local).
+const KIND_SHARD_MANIFEST: u32 = 0x7F02;
+
+/// Serialize a shard's epoch commit marker: the epoch step and the node
+/// range whose files this shard just committed.
+pub fn encode_shard_manifest(step: u64, range: &std::ops::Range<usize>) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_SHARD_MANIFEST);
+    w.put_u64(&[step, range.start as u64, range.end as u64]);
+    let body = w.finish();
+    let mut out = Vec::with_capacity(12 + body.len());
+    out.extend_from_slice(SHARD_MANIFEST_MAGIC);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Parse + validate a shard epoch manifest into `(step, node range)`.
+/// Arbitrary, truncated, or bit-flipped bytes return `Err`, never panic.
+pub fn decode_shard_manifest(bytes: &[u8]) -> Result<(u64, std::ops::Range<usize>)> {
+    ensure!(bytes.len() >= 12, "shard manifest too short");
+    ensure!(&bytes[..8] == SHARD_MANIFEST_MAGIC, "shard manifest magic mismatch");
+    let want = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    let body = &bytes[12..];
+    ensure!(crc32(body) == want, "shard manifest CRC mismatch");
+    let r = WireReader::parse(body)?;
+    ensure!(r.kind() == KIND_SHARD_MANIFEST, "shard manifest kind {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 3, "shard manifest has {} fields", xs.len());
+    let (start, end) = (xs[1] as usize, xs[2] as usize);
+    ensure!(start < end && end < 1 << 32, "shard manifest range {start}..{end} invalid");
+    Ok((xs[0], start..end))
+}
+
+/// Checkpoint manager for a PS: legacy per-node files plus committed
+/// checkpoint epochs, all under `dir`.
 pub struct CheckpointManager {
     dir: PathBuf,
 }
@@ -72,9 +155,23 @@ impl CheckpointManager {
         self.dir.join(format!("ps_node_{node}.ckpt"))
     }
 
-    /// Save every node this PS instance owns (atomic per node: write temp
-    /// then rename). A range-owning shard process saves only its own nodes,
-    /// so N processes sharing one directory produce one file per global node.
+    fn epoch_dir(&self, step: u64) -> PathBuf {
+        // The one epoch-layout definition, shared with the coordinator's
+        // global manifests (same `step-N/` directories).
+        crate::recovery::epoch_dir(&self.dir, step)
+    }
+
+    fn epoch_node_path(&self, step: u64, node: usize) -> PathBuf {
+        self.epoch_dir(step).join(format!("ps_node_{node}.ckpt"))
+    }
+
+    fn shard_manifest_path(&self, step: u64, range: &std::ops::Range<usize>) -> PathBuf {
+        self.epoch_dir(step).join(format!("shard_{}_{}.manifest", range.start, range.end))
+    }
+
+    /// Save every node this PS instance owns (atomically, one file per
+    /// node). A range-owning shard process saves only its own nodes, so N
+    /// processes sharing one directory produce one file per global node.
     pub fn save(&self, ps: &EmbeddingPs) -> Result<()> {
         for node in ps.node_range() {
             self.save_node(ps, node)?;
@@ -82,39 +179,23 @@ impl CheckpointManager {
         Ok(())
     }
 
-    /// Save one node's shards.
+    /// Save one node's shards (write temp + fsync + rename — a crash
+    /// mid-save leaves the previous file intact, never a torn one).
     pub fn save_node(&self, ps: &EmbeddingPs, node: usize) -> Result<()> {
-        let tmp = self.node_path(node).with_extension("tmp");
-        {
-            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            let shards = ps.snapshot_node(node);
-            f.write_all(&(shards.len() as u64).to_le_bytes())?;
-            for s in &shards {
-                write_blob(&mut f, s)?;
-            }
-            f.flush()?;
-        }
-        std::fs::rename(&tmp, self.node_path(node))?;
-        Ok(())
+        let bytes = encode_node_snapshot(&ps.snapshot_node(node));
+        atomic_write(&self.node_path(node), &bytes)
+            .with_context(|| format!("saving node {node} checkpoint"))
     }
 
-    /// Restore one node from disk.
+    /// Restore one node from its legacy flat file.
     pub fn restore_node(&self, ps: &EmbeddingPs, node: usize) -> Result<()> {
         let path = self.node_path(node);
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(&path).with_context(|| format!("open {}", path.display()))?,
-        );
-        let mut n_buf = [0u8; 8];
-        f.read_exact(&mut n_buf)?;
-        let n = u64::from_le_bytes(n_buf) as usize;
-        let mut shards = Vec::with_capacity(n);
-        for _ in 0..n {
-            shards.push(read_blob(&mut f)?);
-        }
-        ps.restore_node(node, &shards)
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("open {}", path.display()))?;
+        ps.restore_node(node, &decode_node_snapshot(&bytes)?)
     }
 
-    /// Restore every node this PS instance owns.
+    /// Restore every node this PS instance owns from legacy flat files.
     pub fn restore(&self, ps: &EmbeddingPs) -> Result<()> {
         for node in ps.node_range() {
             self.restore_node(ps, node)?;
@@ -122,9 +203,120 @@ impl CheckpointManager {
         Ok(())
     }
 
-    /// Whether a checkpoint file for `node` exists under the root.
+    /// Whether a legacy checkpoint file for `node` exists under the root.
     pub fn exists(&self, node: usize) -> bool {
         self.node_path(node).exists()
+    }
+
+    /// Epoch phase 1 (PREPARE_CKPT): stage every owned node's snapshot as
+    /// `step-S/ps_node_N.ckpt.prep`. Staged files are invisible to restore
+    /// until [`CheckpointManager::commit_epoch`] renames them; an epoch that
+    /// never commits leaves only ignorable `.prep` garbage.
+    pub fn prepare_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<()> {
+        let edir = self.epoch_dir(step);
+        std::fs::create_dir_all(&edir)
+            .with_context(|| format!("creating epoch dir {}", edir.display()))?;
+        for node in ps.node_range() {
+            let bytes = encode_node_snapshot(&ps.snapshot_node(node));
+            let staged = self.epoch_node_path(step, node).with_extension("ckpt.prep");
+            atomic_write(&staged, &bytes)
+                .with_context(|| format!("staging node {node} for epoch {step}"))?;
+        }
+        Ok(())
+    }
+
+    /// Epoch phase 2 (COMMIT_CKPT): rename every staged node file into
+    /// place, then atomically write this shard's manifest — the commit
+    /// marker [`CheckpointManager::latest_committed_epoch`] looks for.
+    /// Returns the number of nodes committed.
+    ///
+    /// Idempotent per node: a COMMIT retried after a lost ack (the wire
+    /// died mid-RPC, §4.2.4's bread and butter) finds the file already
+    /// renamed and just rewrites the manifest. Only a commit with *neither*
+    /// a staged nor a committed file — no PREPARE ever ran — errors.
+    pub fn commit_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<usize> {
+        let range = ps.node_range();
+        for node in range.clone() {
+            let staged = self.epoch_node_path(step, node).with_extension("ckpt.prep");
+            let committed = self.epoch_node_path(step, node);
+            if staged.exists() {
+                std::fs::rename(&staged, &committed)
+                    .with_context(|| format!("committing node {node} of epoch {step}"))?;
+            } else {
+                ensure!(
+                    committed.exists(),
+                    "COMMIT_CKPT for epoch {step} without a PREPARE_CKPT \
+                     (node {node} not staged)"
+                );
+            }
+        }
+        atomic_write(
+            &self.shard_manifest_path(step, &range),
+            &encode_shard_manifest(step, &range),
+        )
+        .with_context(|| format!("writing shard manifest for epoch {step}"))?;
+        Ok(range.len())
+    }
+
+    /// The newest epoch this shard (identified by its node `range`) fully
+    /// committed: its shard manifest must parse, agree with the directory
+    /// name, and every node file of the range must be present AND decode
+    /// (CRC-clean) — a bit-flipped node file un-commits the epoch here, so
+    /// an auto-restoring restart falls back to the previous committed epoch
+    /// instead of hard-failing on it. Corrupt or half-written epochs are
+    /// skipped, never errors — this is the restart path of a process that
+    /// just crashed.
+    pub fn latest_committed_epoch(&self, range: &std::ops::Range<usize>) -> Option<u64> {
+        let entries = std::fs::read_dir(&self.dir).ok()?;
+        let mut best: Option<u64> = None;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(step) = name.to_str().and_then(crate::recovery::parse_epoch_dir_name)
+            else {
+                continue;
+            };
+            if matches!(best, Some(b) if step <= b) {
+                continue;
+            }
+            let Ok(bytes) = std::fs::read(self.shard_manifest_path(step, range)) else {
+                continue;
+            };
+            let Ok((mstep, mrange)) = decode_shard_manifest(&bytes) else { continue };
+            if mstep != step || mrange != *range {
+                continue;
+            }
+            let nodes_valid = range.clone().all(|node| {
+                std::fs::read(self.epoch_node_path(step, node))
+                    .ok()
+                    .and_then(|bytes| decode_node_snapshot(&bytes).ok())
+                    .is_some()
+            });
+            if nodes_valid {
+                best = Some(step);
+            }
+        }
+        best
+    }
+
+    /// Restore every owned node from committed epoch `step`.
+    pub fn restore_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<()> {
+        let range = ps.node_range();
+        let bytes = std::fs::read(self.shard_manifest_path(step, &range))
+            .with_context(|| format!("epoch {step} was never committed by shard {range:?}"))?;
+        let (mstep, mrange) = decode_shard_manifest(&bytes)?;
+        ensure!(
+            mstep == step && mrange == range,
+            "shard manifest records (step {mstep}, nodes {mrange:?}), expected \
+             (step {step}, nodes {range:?})"
+        );
+        for node in range {
+            let path = self.epoch_node_path(step, node);
+            let bytes =
+                std::fs::read(&path).with_context(|| format!("open {}", path.display()))?;
+            ps.restore_node(node, &decode_node_snapshot(&bytes)?)
+                .with_context(|| format!("restoring node {node} from epoch {step}"))?;
+        }
+        Ok(())
     }
 }
 
@@ -146,6 +338,12 @@ mod tests {
         EmbeddingPs::new(&cfg, 4, 9)
     }
 
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("persia_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
     #[test]
     fn crc32_known_vector() {
         assert_eq!(crc32(b"123456789"), 0xcbf43926);
@@ -154,7 +352,7 @@ mod tests {
 
     #[test]
     fn save_restore_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("persia_ckpt_{}", std::process::id()));
+        let dir = tmp("flat");
         let mgr = CheckpointManager::new(&dir).unwrap();
         let ps = ps();
         let keys: Vec<(u32, u64)> = (0..30).map(|i| (0, i)).collect();
@@ -178,7 +376,7 @@ mod tests {
     #[test]
     fn range_ps_checkpoints_only_owned_nodes() {
         use crate::embedding::ps::pack_key;
-        let dir = std::env::temp_dir().join(format!("persia_ckpt_r_{}", std::process::id()));
+        let dir = tmp("range");
         let mgr = CheckpointManager::new(&dir).unwrap();
         let cfg = crate::config::EmbeddingConfig {
             rows_per_group: 1 << 30,
@@ -208,7 +406,7 @@ mod tests {
 
     #[test]
     fn corrupted_checkpoint_detected() {
-        let dir = std::env::temp_dir().join(format!("persia_ckpt_c_{}", std::process::id()));
+        let dir = tmp("corrupt");
         let mgr = CheckpointManager::new(&dir).unwrap();
         let ps = ps();
         ps.get(0, 1, &mut [0.0; 4]);
@@ -225,11 +423,122 @@ mod tests {
 
     #[test]
     fn missing_checkpoint_is_error_not_panic() {
-        let dir = std::env::temp_dir().join(format!("persia_ckpt_m_{}", std::process::id()));
+        let dir = tmp("missing");
         let mgr = CheckpointManager::new(&dir).unwrap();
         let ps = ps();
         assert!(!mgr.exists(0));
         assert!(mgr.restore_node(&ps, 0).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn epoch_prepare_commit_restore_cycle() {
+        let dir = tmp("epoch");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        let keys: Vec<(u32, u64)> = (0..20).map(|i| (0, i)).collect();
+        let mut buf = vec![0.0; 80];
+        ps.get_many(&keys, &mut buf);
+        ps.put_grads(&keys, &vec![0.25; 80]);
+        let snapshot_state = ps.snapshot_node(0);
+
+        // PREPARE alone is not a committed epoch.
+        mgr.prepare_epoch(&ps, 4).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), None);
+        // COMMIT makes it visible.
+        assert_eq!(mgr.commit_epoch(&ps, 4).unwrap(), 2);
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(4));
+
+        // Later updates + a second epoch.
+        ps.put_grads(&keys, &vec![0.25; 80]);
+        mgr.prepare_epoch(&ps, 8).unwrap();
+        mgr.commit_epoch(&ps, 8).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(8));
+
+        // Restoring epoch 4 reproduces the exact state at its boundary.
+        ps.wipe_node(0);
+        ps.wipe_node(1);
+        mgr.restore_epoch(&ps, 4).unwrap();
+        assert_eq!(ps.snapshot_node(0), snapshot_state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn commit_without_prepare_is_rejected() {
+        let dir = tmp("noprep");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        let err = mgr.commit_epoch(&ps, 3).unwrap_err();
+        assert!(format!("{err:#}").contains("PREPARE"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retried_commit_is_idempotent() {
+        let dir = tmp("recommit");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        ps.get(0, 1, &mut [0.0; 4]);
+        mgr.prepare_epoch(&ps, 7).unwrap();
+        assert_eq!(mgr.commit_epoch(&ps, 7).unwrap(), 2);
+        // A retry after a lost ack must succeed without a fresh PREPARE.
+        assert_eq!(mgr.commit_epoch(&ps, 7).unwrap(), 2);
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_manifest_uncommits_the_epoch() {
+        let dir = tmp("badmanifest");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        ps.get(0, 1, &mut [0.0; 4]);
+        mgr.prepare_epoch(&ps, 6).unwrap();
+        mgr.commit_epoch(&ps, 6).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(6));
+        let mpath = dir.join("step-6").join("shard_0_2.manifest");
+        let mut bytes = std::fs::read(&mpath).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&mpath, &bytes).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), None);
+        assert!(mgr.restore_epoch(&ps, 6).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_node_file_uncommits_the_epoch_and_falls_back() {
+        let dir = tmp("badnode");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        ps.get(0, 1, &mut [0.0; 4]);
+        mgr.prepare_epoch(&ps, 4).unwrap();
+        mgr.commit_epoch(&ps, 4).unwrap();
+        ps.put_grads(&[(0, 1)], &[0.5; 4]);
+        mgr.prepare_epoch(&ps, 8).unwrap();
+        mgr.commit_epoch(&ps, 8).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(8));
+        // Flip a bit in one of epoch 8's NODE files (manifest stays valid):
+        // the restart path must fall back to epoch 4 instead of choosing 8
+        // and then hard-failing its restore.
+        let npath = dir.join("step-8").join("ps_node_0.ckpt");
+        let mut bytes = std::fs::read(&npath).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x04;
+        std::fs::write(&npath, &bytes).unwrap();
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(4));
+        mgr.restore_epoch(&ps, 4).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_manifest_codec_rejects_garbage() {
+        let good = encode_shard_manifest(12, &(1..3));
+        assert_eq!(decode_shard_manifest(&good).unwrap(), (12, 1..3));
+        assert!(decode_shard_manifest(&[]).is_err());
+        assert!(decode_shard_manifest(&good[..good.len() - 1]).is_err());
+        let mut bad = good.clone();
+        bad[13] ^= 0x01;
+        assert!(decode_shard_manifest(&bad).is_err());
     }
 }

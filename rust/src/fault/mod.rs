@@ -1,5 +1,12 @@
 //! Fault tolerance (paper §4.2.4): failure injection + per-component
-//! recovery policies.
+//! recovery policies for the *simulated* cluster.
+//!
+//! This module models §4.2.4 inside one process (in-RAM "shared memory" and
+//! checkpoint stand-ins, exercised by `examples/fault_tolerance.rs`). The
+//! production-shaped machinery — the reconnect pool, gradient-put replay,
+//! coordinated checkpoint epochs, and `--resume-from` — lives in
+//! [`crate::recovery`] and is drilled cross-process by
+//! `rust/tests/integration_recovery.rs`.
 //!
 //! Paper policies implemented here and exercised by the integration tests
 //! and `examples/fault_tolerance.rs`:

@@ -16,4 +16,6 @@ pub mod trainer;
 
 pub use dense_comm::{DenseComm, ThreadRing};
 pub use gantt::{GanttEvent, GanttTimeline};
-pub use trainer::{EngineFactory, PjrtEngineFactory, RustEngineFactory, TrainOutput, Trainer};
+pub use trainer::{
+    EngineFactory, PjrtEngineFactory, ResumeState, RustEngineFactory, TrainOutput, Trainer,
+};

@@ -43,8 +43,9 @@ use crate::config::{ClusterConfig, EmbeddingConfig, ModelConfig, Pooling, TrainC
 use crate::data::sample::SampleId;
 use crate::data::SyntheticDataset;
 use crate::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
-use crate::embedding::EmbeddingPs;
+use crate::embedding::{CheckpointManager, EmbeddingPs};
 use crate::metrics::{auc, RunReport, Tracker};
+use crate::recovery::{run_epoch, EpochConfig, GlobalManifest, RetryPolicy};
 use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
 use crate::service::PsBackend;
 use crate::util::Rng;
@@ -59,8 +60,9 @@ const ASYNC_SYNC_EVERY: u64 = 64;
 /// Total tries an async gradient applier gives one put. A failed
 /// `push_grads` re-buffers its samples, so each retry replays the exact
 /// same batch; combined with the remote backend's own reconnect-with-retry
-/// this rides out a PS shard process being killed and restarted (§4.2.4).
-const PUT_ATTEMPTS: usize = 3;
+/// (the shared `recovery` pool) this rides out a PS shard process being
+/// killed and restarted (§4.2.4).
+const PUT_ATTEMPTS: u32 = 3;
 
 /// Per-worker dense-engine construction. PJRT executables are not `Send`
 /// (the `xla` crate wraps raw PJRT pointers), so every NN-worker thread
@@ -96,6 +98,45 @@ impl EngineFactory for PjrtEngineFactory {
         let rt = PjRtRuntime::cpu()?;
         let manifest = ArtifactManifest::load(&self.artifacts_dir)?;
         DenseEngine::pjrt(&rt, &manifest, &self.preset)
+    }
+}
+
+/// Dense-side state a resumed run restores before its first step — decoded
+/// from a committed [`GlobalManifest`] by the caller (`persia train
+/// --resume-from`), or built by tests. PS state is restored separately:
+/// in-process via `ps_restore`, remote shards by their own
+/// `--checkpoint-dir` at startup.
+#[derive(Clone, Debug)]
+pub struct ResumeState {
+    /// Dense optimizer kind code recorded at the epoch (must match the
+    /// run's configured optimizer).
+    pub opt_kind: u64,
+    /// Dense optimizer step counter at the epoch.
+    pub opt_t: u64,
+    /// Dense parameters at the epoch boundary.
+    pub params: Vec<f32>,
+    /// Optimizer first moments (empty for SGD).
+    pub opt_m: Vec<f32>,
+    /// Optimizer second moments (empty for SGD/momentum).
+    pub opt_v: Vec<f32>,
+    /// When `Some`, the in-process PS restores from this checkpoint root's
+    /// epoch [`Trainer::start_step`] before training; `None` means a remote
+    /// deployment already restored itself.
+    pub ps_restore: Option<std::path::PathBuf>,
+}
+
+impl ResumeState {
+    /// Build from a committed global manifest (plus where the in-process PS
+    /// should restore from, if anywhere).
+    pub fn from_manifest(m: &GlobalManifest, ps_restore: Option<std::path::PathBuf>) -> Self {
+        Self {
+            opt_kind: m.opt_kind,
+            opt_t: m.opt_t,
+            params: m.params.clone(),
+            opt_m: m.opt_m.clone(),
+            opt_v: m.opt_v.clone(),
+            ps_restore,
+        }
     }
 }
 
@@ -194,6 +235,20 @@ pub struct Trainer {
     /// `train-worker` deployment be proven numerically identical to the
     /// threaded run.
     pub deterministic: bool,
+    /// Cut coordinated checkpoint epochs (`--checkpoint-dir` +
+    /// `--checkpoint-every`): rank 0 drives the two-phase PREPARE/COMMIT
+    /// across the PS deployment at every `every`-step boundary and writes
+    /// the global manifest — see [`crate::recovery::coordinator`]. In
+    /// ordered deterministic mode the drive is a collective ordered
+    /// section, so the snapshot is the *exact* boundary state.
+    pub checkpoint: Option<EpochConfig>,
+    /// First step index to train (`--resume-from`): the run behaves as if
+    /// steps `0..start_step` already happened — loader streams fast-forward
+    /// and the loop starts here. 0 for a fresh run.
+    pub start_step: usize,
+    /// Dense/optimizer state restored before the first step (a resumed
+    /// run); `None` starts from the seed-derived init.
+    pub resume: Option<ResumeState>,
 }
 
 impl Trainer {
@@ -216,6 +271,9 @@ impl Trainer {
             ps_backend: None,
             emb_comm: None,
             deterministic: false,
+            checkpoint: None,
+            start_step: 0,
+            resume: None,
         }
     }
 
@@ -318,6 +376,23 @@ impl Trainer {
             self.cluster.n_nn_workers,
             self.train.mode.name()
         );
+        anyhow::ensure!(
+            self.start_step < self.train.steps,
+            "resume start step {} is not before the configured {} total steps — \
+             the checkpointed run already finished",
+            self.start_step,
+            self.train.steps
+        );
+        if let Some(ck) = &self.checkpoint {
+            ck.validate()?;
+        }
+        if let Some(r) = &self.resume {
+            anyhow::ensure!(
+                r.opt_kind == 0,
+                "resume manifest records dense optimizer code {}, this trainer runs SGD (0)",
+                r.opt_kind
+            );
+        }
         Ok(())
     }
 
@@ -344,11 +419,31 @@ impl Trainer {
             None => {
                 let backend: Arc<dyn PsBackend> = match &self.ps_backend {
                     Some(backend) => backend.clone(),
-                    None => Arc::new(EmbeddingPs::new(
-                        &self.emb_cfg,
-                        self.model.emb_dim_per_group,
-                        self.train.seed,
-                    )),
+                    None => {
+                        let local = Arc::new(EmbeddingPs::new(
+                            &self.emb_cfg,
+                            self.model.emb_dim_per_group,
+                            self.train.seed,
+                        ));
+                        // A resumed in-process run restores its PS from the
+                        // committed epoch it is resuming at (remote shards
+                        // restore themselves at process start instead).
+                        if let Some(dir) =
+                            self.resume.as_ref().and_then(|r| r.ps_restore.as_ref())
+                        {
+                            let mgr = CheckpointManager::new(dir)?;
+                            mgr.restore_epoch(&local, self.start_step as u64).with_context(
+                                || {
+                                    format!(
+                                        "restoring in-process PS from epoch {} under {}",
+                                        self.start_step,
+                                        dir.display()
+                                    )
+                                },
+                            )?;
+                        }
+                        local
+                    }
                 };
                 anyhow::ensure!(
                     backend.dim() == self.model.emb_dim_per_group,
@@ -373,6 +468,18 @@ impl Trainer {
             }
         };
 
+        // A resumed run: every rank's loader stream must already stand at
+        // the resume boundary before the first NEXT_BATCH (the remote tier
+        // fast-forwards in its own processes via --start-step; its no-op
+        // here is backstopped by the strict sequential step check).
+        if self.start_step > 0 {
+            for r in 0..self.cluster.n_nn_workers {
+                tier.fast_forward(r, self.start_step).with_context(|| {
+                    format!("fast-forwarding rank {r} to resume step {}", self.start_step)
+                })?;
+            }
+        }
+
         // Async gradient appliers: one thread per embedding worker; the
         // in-flight counter per worker is the measured staleness.
         let n_ew = tier.n_workers();
@@ -390,23 +497,23 @@ impl Trainer {
                 let handle = std::thread::Builder::new()
                     .name(format!("grad-applier-{applier_idx}"))
                     .spawn(move || {
+                        // The shared recovery policy: a failed push
+                        // re-buffers its samples, so each retry replays the
+                        // exact same batch (a killed PS shard may be
+                        // restarting under it). Backoff lives in the wire
+                        // client's own reconnect loop, so none is added
+                        // here.
+                        let retry = RetryPolicy::new(PUT_ATTEMPTS - 1, 0);
                         while let Ok(msg) = rx.recv() {
                             match msg {
                                 GradMsg::Apply { ew: idx, sids, grads } => {
-                                    // A failed push re-buffers its samples,
-                                    // so the same batch can be replayed —
-                                    // retry a bounded number of times (a
-                                    // killed PS shard may be restarting).
-                                    // Losing a put after that is tolerated
-                                    // (§4.2.4), but never silently: count it
-                                    // and surface the first failure.
-                                    let mut res = tier.push_grads(idx, &sids, &grads);
-                                    for _ in 1..PUT_ATTEMPTS {
-                                        if res.is_ok() {
-                                            break;
-                                        }
-                                        res = tier.push_grads(idx, &sids, &grads);
-                                    }
+                                    // Losing a put after the retry budget is
+                                    // tolerated (§4.2.4), but never
+                                    // silently: count it and surface the
+                                    // first failure.
+                                    let res = retry.run("async gradient put", || {
+                                        tier.push_grads(idx, &sids, &grads)
+                                    });
                                     if let Err(e) = res {
                                         // Give the batch up for good: drop
                                         // the re-buffered samples so a dead
@@ -480,7 +587,9 @@ impl Trainer {
         grad_put_failures: u64,
     ) -> TrainOutput {
         let k = self.cluster.n_nn_workers;
-        let samples = (self.train.steps * self.train.batch_size * k) as u64;
+        // Samples actually trained by THIS run (a resumed run re-trains
+        // only the steps after its checkpoint epoch).
+        let samples = ((self.train.steps - self.start_step) * self.train.batch_size * k) as u64;
         // Simulated time = real compute wall time + injected network time
         // (which threads did not actually sleep through).
         let sim_secs = wall_secs + sim_extra;
@@ -689,6 +798,19 @@ impl Trainer {
         let mode = self.train.mode;
         let depth = self.pipeline_depth();
         let mut opt = DenseOptimizer::new(DenseOptimizerKind::Sgd, self.train.lr, params.len());
+        // A resumed run starts from the committed epoch's dense state, not
+        // the seed-derived init (identical on every rank, like the init).
+        if let Some(r) = &self.resume {
+            anyhow::ensure!(
+                r.params.len() == params.len(),
+                "resume manifest has {} dense params, this model needs {}",
+                r.params.len(),
+                params.len()
+            );
+            params.copy_from_slice(&r.params);
+            opt.restore_state(r.opt_t, &r.opt_m, &r.opt_v)
+                .context("restoring dense optimizer state from the resume manifest")?;
+        }
         let mut pipeline: VecDeque<Prefetched> = VecDeque::new();
         let mut sim_t = 0.0f64; // this worker's simulated clock
         // Deterministic multi-worker FullSync: serialize every PS touch in
@@ -717,7 +839,7 @@ impl Trainer {
             })
         };
 
-        for step in 0..self.train.steps {
+        for step in self.start_step..self.train.steps {
             // Keep the pipeline full (async prefetch stands in for the
             // loader+embedding-worker threads running ahead of the GPU).
             while pipeline.len() <= depth {
@@ -857,6 +979,53 @@ impl Trainer {
                 {
                     let auc_v = self.evaluate(&engine, &params, tier.as_ref())?;
                     tr.record_auc(step as u64 + 1, auc_v);
+                }
+            }
+
+            // --- coordinated checkpoint epoch at the step boundary ---
+            // Rank 0 is the coordinator (recovery::run_epoch: two-phase PS
+            // snapshot, global manifest, LATEST). In ordered deterministic
+            // mode the drive is one more COLLECTIVE ordered section: by the
+            // time rank 0 holds the token here, every rank's step-`step`
+            // put has completed and no rank's next PS touch can start — the
+            // epoch is the exact boundary state, which is what makes
+            // restore+replay bitwise. In the async modes only rank 0 acts
+            // and the boundary is as fuzzy as the modes themselves.
+            if let Some(ck) = &self.checkpoint {
+                if (step + 1) % ck.every == 0 {
+                    let drive = || -> Result<()> {
+                        if rank != 0 {
+                            return Ok(());
+                        }
+                        let boundary = (step + 1) as u64;
+                        let (opt_t, opt_m, opt_v) = opt.state();
+                        let manifest = GlobalManifest {
+                            step: boundary,
+                            fingerprint: self.config_fingerprint(),
+                            world: self.cluster.n_nn_workers,
+                            loader_cursors: vec![boundary; self.cluster.n_nn_workers],
+                            opt_kind: opt.kind_code(),
+                            opt_t,
+                            params: params.clone(),
+                            opt_m: opt_m.to_vec(),
+                            opt_v: opt_v.to_vec(),
+                        };
+                        run_epoch(&ck.dir, boundary, tier.as_ref(), &manifest)
+                            .with_context(|| {
+                                format!("checkpoint epoch at step boundary {boundary}")
+                            })?;
+                        // Orchestrators and the kill drills read this line
+                        // through pipes to time their SIGKILLs.
+                        println!("CKPT epoch {boundary} committed");
+                        use std::io::Write as _;
+                        std::io::stdout().flush().ok();
+                        Ok(())
+                    };
+                    if order_ps {
+                        ordered(comm, drive)?;
+                    } else if rank == 0 {
+                        drive()?;
+                    }
                 }
             }
         }

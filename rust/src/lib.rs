@@ -74,6 +74,8 @@ pub mod fault;
 #[warn(missing_docs)]
 pub mod hybrid;
 pub mod metrics;
+#[warn(missing_docs)]
+pub mod recovery;
 pub mod runtime;
 #[warn(missing_docs)]
 pub mod service;

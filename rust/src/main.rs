@@ -30,13 +30,14 @@ use anyhow::{Context, Result};
 
 use persia::allreduce::RingRendezvous;
 use persia::config::{
-    BenchPreset, ClusterConfig, EmbWorkerConfig, NetModelConfig, RingConfig, ServiceConfig,
-    TrainConfig, TrainMode,
+    BenchPreset, ClusterConfig, EmbWorkerConfig, NetModelConfig, RecoveryConfig, RingConfig,
+    ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
 use persia::embedding::{CheckpointManager, EmbeddingPs};
-use persia::hybrid::{DenseComm, PjrtEngineFactory, Trainer};
+use persia::hybrid::{DenseComm, PjrtEngineFactory, ResumeState, Trainer};
+use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
 use persia::runtime::ArtifactManifest;
 use persia::service::{
     EmbeddingWorkerServer, EwExpect, PsBackend, PsServer, RemoteEmbTier, ShardedRemotePs,
@@ -129,27 +130,37 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
     );
     let mut trainer = Trainer::new(model, emb_cfg, cluster, train, dataset);
     trainer.deterministic = flag(flags, "deterministic", "false") == "true";
+    // Kept past the connect so --resume-from can interrogate the shards'
+    // restored epochs.
+    let mut remote_ps: Option<Arc<ShardedRemotePs>> = None;
     if let Some(addr) = flags.get("remote-ps") {
         let svc = ServiceConfig {
             addr: addr.clone(),
             client_conns: flag(flags, "ps-conns", "4").parse()?,
             wire_compress: flag(flags, "ps-wire-compress", "false") == "true",
-            reconnect_attempts: flag(flags, "ps-retries", "4").parse()?,
-            reconnect_backoff_ms: flag(flags, "ps-retry-ms", "50").parse()?,
+            recovery: RecoveryConfig {
+                attempts: flag(flags, "ps-retries", "4").parse()?,
+                backoff_ms: flag(flags, "ps-retry-ms", "50").parse()?,
+                replay_puts: flag(flags, "ps-replay", "false") == "true",
+                replay_cap: flag(flags, "ps-replay-cap", "4096").parse()?,
+            },
         };
         // One client regardless of shard count: a single full-range
         // serve-ps is just the 1-shard case. Connect-time validation proves
         // the shard processes agree with each other and cover every node.
-        let remote = ShardedRemotePs::connect(&svc)
-            .with_context(|| format!("connecting to remote PS shard(s) at {addr}"))?;
+        let remote = Arc::new(
+            ShardedRemotePs::connect(&svc)
+                .with_context(|| format!("connecting to remote PS shard(s) at {addr}"))?,
+        );
         println!(
             "remote PS: {} shard process(es), dim={} nodes={} shards/node={}",
             remote.n_shard_processes(),
-            PsBackend::dim(&remote),
+            PsBackend::dim(remote.as_ref()),
             remote.n_nodes(),
             remote.shards_per_node()
         );
-        trainer.ps_backend = Some(Arc::new(remote));
+        trainer.ps_backend = Some(remote.clone());
+        remote_ps = Some(remote);
     }
     if let Some(addrs) = flags.get("embedding-workers") {
         anyhow::ensure!(
@@ -162,8 +173,11 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
             addr: addrs.clone(),
             client_conns: flag(flags, "ew-conns", "2").parse()?,
             wire_compress: false,
-            reconnect_attempts: flag(flags, "ew-retries", "4").parse()?,
-            reconnect_backoff_ms: flag(flags, "ew-retry-ms", "50").parse()?,
+            recovery: RecoveryConfig {
+                attempts: flag(flags, "ew-retries", "4").parse()?,
+                backoff_ms: flag(flags, "ew-retry-ms", "50").parse()?,
+                ..RecoveryConfig::default()
+            },
         };
         svc.validate()?;
         // The tier IS the embedding-worker cluster: its process count
@@ -185,6 +199,65 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
             tier.pipeline_depth()
         );
         trainer.emb_comm = Some(Arc::new(tier));
+    }
+
+    // --- the recovery layer's CLI: coordinated epochs + resume ---
+    if let Some(dir) = flags.get("checkpoint-dir") {
+        let every: usize =
+            flag(flags, "checkpoint-every", "0").parse().context("--checkpoint-every")?;
+        if every > 0 {
+            trainer.checkpoint =
+                Some(EpochConfig { dir: std::path::PathBuf::from(dir), every });
+        }
+    }
+    if let Some(dir) = flags.get("resume-from") {
+        let root = std::path::Path::new(dir.as_str());
+        let step = match flags.get("resume-step") {
+            Some(s) => s.parse::<u64>().context("--resume-step")?,
+            None => latest_epoch(root)
+                .with_context(|| format!("no committed checkpoint epoch under {dir}"))?,
+        };
+        let manifest = load_manifest(root, step)
+            .with_context(|| format!("loading epoch {step} manifest from {dir}"))?;
+        anyhow::ensure!(
+            manifest.fingerprint == trainer.config_fingerprint(),
+            "--resume-from epoch {step} was written by a run with different numeric \
+             flags (fingerprint {:#x} != this trainer's {:#x}) — resume with the \
+             exact flags of the checkpointed run",
+            manifest.fingerprint,
+            trainer.config_fingerprint()
+        );
+        anyhow::ensure!(
+            manifest.world == trainer.cluster.n_nn_workers,
+            "--resume-from epoch {step} recorded {} NN worker(s), this run has {}",
+            manifest.world,
+            trainer.cluster.n_nn_workers
+        );
+        // Where does the embedding state come from?
+        let ps_restore = if let Some(remote) = &remote_ps {
+            // The shards restored themselves at startup; every one must
+            // stand at exactly the resume epoch, or the run would splice
+            // embedding states from different steps (mixed-epoch).
+            let restored = remote.restored_steps();
+            anyhow::ensure!(
+                restored.iter().all(|&s| s == step),
+                "PS shards report restored epochs {restored:?}, resume needs every \
+                 shard at epoch {step} — restart each serve-ps with \
+                 --checkpoint-dir DIR --restore-epoch {step}"
+            );
+            None
+        } else if flags.contains_key("embedding-workers") {
+            // The embedding workers own the PS connections; their
+            // --start-step and the shards' --restore-epoch carry the
+            // restore (a mismatch fails loudly at the first NEXT_BATCH).
+            None
+        } else {
+            // In-process PS: the trainer restores it from the epoch files.
+            Some(std::path::PathBuf::from(dir))
+        };
+        trainer.start_step = step as usize;
+        trainer.resume = Some(ResumeState::from_manifest(&manifest, ps_restore));
+        println!("resuming from committed checkpoint epoch {step} under {dir}");
     }
     Ok(trainer)
 }
@@ -226,21 +299,50 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
 
     let ps =
         Arc::new(EmbeddingPs::new_range(&emb_cfg, model.emb_dim_per_group, seed, range.clone()));
+    let mut restored_step = 0u64;
     let ckpt = match flags.get("checkpoint-dir") {
         Some(dir) => {
-            let mgr = CheckpointManager::new(dir)?;
-            for node in ps.node_range() {
-                if mgr.exists(node) {
-                    mgr.restore_node(&ps, node)
-                        .with_context(|| format!("restoring node {node} from {dir}"))?;
-                    println!("restored node {node} from checkpoint");
+            let mgr = Arc::new(CheckpointManager::new(dir)?);
+            // Committed checkpoint epochs are the preferred restore source:
+            // they are coordinated step-boundary states, which both the
+            // resume semantics and the mid-run recovery replay require.
+            // --restore-epoch pins a specific epoch (resume orchestration);
+            // otherwise the newest fully committed one wins. Legacy flat
+            // per-node files remain the fallback.
+            let epoch = match flags.get("restore-epoch") {
+                Some(s) => Some(s.parse::<u64>().context("--restore-epoch")?),
+                None => mgr.latest_committed_epoch(&ps.node_range()),
+            };
+            match epoch {
+                Some(step) => {
+                    mgr.restore_epoch(&ps, step).with_context(|| {
+                        format!(
+                            "restoring nodes {:?} from epoch {step} in {dir}",
+                            ps.node_range()
+                        )
+                    })?;
+                    restored_step = step;
+                    println!(
+                        "restored nodes {:?} from committed epoch step-{step}",
+                        ps.node_range()
+                    );
+                }
+                None => {
+                    for node in ps.node_range() {
+                        if mgr.exists(node) {
+                            mgr.restore_node(&ps, node)
+                                .with_context(|| format!("restoring node {node} from {dir}"))?;
+                            println!("restored node {node} from checkpoint");
+                        }
+                    }
                 }
             }
             Some(mgr)
         }
         None => None,
     };
-    let server = PsServer::bind(ps.clone(), &svc.addr, &emb_cfg, seed)?;
+    let server =
+        PsServer::bind_with_epochs(ps.clone(), &svc.addr, &emb_cfg, seed, ckpt.clone(), restored_step)?;
     println!(
         "persia serve-ps: preset={} dim={} nodes={} (serving {}..{}) shards/node={} \
          capacity={}/shard seed={}",
@@ -318,15 +420,6 @@ fn cmd_serve_embedding_worker(flags: HashMap<String, String>) -> Result<()> {
         "serve-embedding-worker IS the embedding-worker tier; point it at the \
          PS with --remote-ps instead"
     );
-    let ew_cfg = EmbWorkerConfig {
-        addr: flag(&flags, "addr", "127.0.0.1:7900").to_string(),
-        ew_rank: flag(&flags, "ew-rank", "0").parse().context("--ew-rank")?,
-        pipeline_depth: match flags.get("pipeline-depth") {
-            Some(s) => Some(s.parse().context("--pipeline-depth")?),
-            None => None,
-        },
-    };
-    ew_cfg.validate()?;
     // Accept --world as an alias for --nn-workers so three-tier train-worker
     // deployments can reuse one flag set verbatim.
     let mut flags = flags;
@@ -334,15 +427,32 @@ fn cmd_serve_embedding_worker(flags: HashMap<String, String>) -> Result<()> {
         flags.insert("nn-workers".to_string(), world);
     }
     let trainer = build_trainer(&flags)?;
+    let ew_cfg = EmbWorkerConfig {
+        addr: flag(&flags, "addr", "127.0.0.1:7900").to_string(),
+        ew_rank: flag(&flags, "ew-rank", "0").parse().context("--ew-rank")?,
+        pipeline_depth: match flags.get("pipeline-depth") {
+            Some(s) => Some(s.parse().context("--pipeline-depth")?),
+            None => None,
+        },
+        replay_depth: flag(&flags, "replay-depth", "4").parse().context("--replay-depth")?,
+        // A resumed deployment (--resume-from on this process, or an
+        // explicit --start-step) serves its first batches at the epoch
+        // boundary the NN ranks will ask for.
+        start_step: match flags.get("start-step") {
+            Some(s) => s.parse().context("--start-step")?,
+            None => trainer.start_step,
+        },
+    };
+    ew_cfg.validate()?;
     let ps_deployment = flags.get("remote-ps").map(|s| s.as_str());
     let ps_wire_compress = flag(&flags, "ps-wire-compress", "false") == "true";
+    let ckpt_dir = flags.get("checkpoint-dir").map(|s| s.as_str());
     let server = EmbeddingWorkerServer::for_trainer(
         &trainer,
-        ew_cfg.ew_rank,
-        ew_cfg.pipeline_depth,
+        &ew_cfg,
         ps_deployment,
         ps_wire_compress,
-        &ew_cfg.addr,
+        ckpt_dir,
     )?;
     println!(
         "persia serve-embedding-worker: rank {} preset={} mode={} batch={} ranks={} \
@@ -453,11 +563,18 @@ fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
     // --ring-compress and --ps-wire-compress live outside the Trainer
     // config but change numerics (lossy fp16 on AllReduce chunks / PS
     // traffic): fold both into the rendezvous fingerprint so a mismatch is
-    // rejected at connect time like every other numeric knob.
+    // rejected at connect time like every other numeric knob. The
+    // checkpoint cadence and resume step are folded in too — in ordered
+    // deterministic mode the epoch drive is a collective ordered section,
+    // so ranks disagreeing on either would desynchronize the ring tokens.
     let ps_wire_compress = flag(&flags, "ps-wire-compress", "false") == "true";
+    let ckpt_every: u64 =
+        trainer.checkpoint.as_ref().map(|c| c.every as u64).unwrap_or(0);
     let fingerprint = (trainer.config_fingerprint()
         ^ u64::from(ring_cfg.compress)
-        ^ (u64::from(ps_wire_compress) << 1))
+        ^ (u64::from(ps_wire_compress) << 1)
+        ^ (ckpt_every << 2)
+        ^ ((trainer.start_step as u64) << 20))
         .wrapping_mul(0x0000_0100_0000_01b3);
     let make_comm = move |net: Arc<NetSim>| -> Result<Box<dyn DenseComm>> {
         let member = rz.connect(fingerprint, net)?;
@@ -572,7 +689,16 @@ fn usage() -> ! {
          [--rendezvous 127.0.0.1:7800] [--listen-host HOST] [--ring-timeout-ms MS] \
          [--ring-compress true] --remote-ps|--embedding-workers addr1[,addr2,...] — one \
          process per rank, identical flags everywhere (the rendezvous rejects config \
-         mismatches); rank 0 prints 'rendezvous listening on ADDR' for orchestrators"
+         mismatches); rank 0 prints 'rendezvous listening on ADDR' for orchestrators\n\
+         fault tolerance (recovery layer): train[-worker] --checkpoint-dir DIR \
+         --checkpoint-every N cuts committed checkpoint epochs (two-phase across all \
+         PS shards + a global manifest); --resume-from DIR [--resume-step N] restarts \
+         a killed run from the last committed epoch (serve-ps reloads with \
+         --checkpoint-dir DIR [--restore-epoch N], serve-embedding-worker with \
+         --start-step N); train/serve-embedding-worker --ps-replay true \
+         [--ps-replay-cap N] keeps a gradient replay log so a SIGKILLed shard \
+         rejoins mid-run with exact state; serve-embedding-worker [--replay-depth D] \
+         sizes the NEXT_BATCH/PUSH_GRADS response replay rings"
     );
     std::process::exit(2)
 }

@@ -1,0 +1,389 @@
+//! Coordinated checkpoint epochs: one committed, resumable snapshot of the
+//! *whole* three-tier run (paper §4.2.4, made global).
+//!
+//! Per-shard SNAPSHOT/RESTORE (PR 2) could save embedding state, but each
+//! shard saved on its own schedule — a restore could mix embedding states
+//! from different steps, and nothing at all saved the dense model, the
+//! optimizer, or the data-stream positions. An **epoch** fixes all of that
+//! with a two-phase protocol driven by the trainer (rank 0) at a step
+//! boundary:
+//!
+//! ```text
+//!   trainer rank 0                 every PS shard process
+//!   ──────────────                 ──────────────────────
+//!   PREPARE_CKPT(step) ──────────▶ write step-N/ps_node_X.ckpt.prep
+//!                      ◀────────── ack (all shards, or abort)
+//!   COMMIT_CKPT(step)  ──────────▶ rename *.prep → *.ckpt,
+//!                                  write shard manifest (atomic)
+//!                      ◀────────── ack (all shards)
+//!   write step-N/global.manifest   (dense params + optimizer + cursors)
+//!   write LATEST = N               (atomic pointer)
+//! ```
+//!
+//! Every file lands via [`atomic_write`] (temp + fsync + rename), and each
+//! guard is ordered so a crash at ANY point leaves only ignorable garbage:
+//! a `.prep` file without a commit is never read; a shard manifest exists
+//! only after its node files are in place; `global.manifest` exists only
+//! after every shard committed; `LATEST` only after the manifest. Resume
+//! ([`latest_epoch`] + [`load_manifest`]) therefore can never observe a
+//! mixed-epoch state — it either finds a fully committed epoch or none.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::embedding::checkpoint::crc32;
+use crate::worker::EmbComm;
+
+/// Leading magic of a serialized [`GlobalManifest`].
+const MANIFEST_MAGIC: &[u8; 8] = b"PRSAGM01";
+/// Wire-message kind of the manifest body (file-local, not a network kind).
+const KIND_MANIFEST: u32 = 0x7F01;
+
+/// When and where a trainer cuts checkpoint epochs.
+#[derive(Clone, Debug)]
+pub struct EpochConfig {
+    /// Root checkpoint directory shared by the run's global manifest and
+    /// (when co-located, as in the tests) the PS shards' epoch files.
+    pub dir: PathBuf,
+    /// Cut an epoch every this many steps (at step boundaries).
+    pub every: usize,
+}
+
+impl EpochConfig {
+    /// Error on a configuration that can never cut an epoch.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.every >= 1, "checkpoint cadence must be >= 1 step");
+        ensure!(!self.dir.as_os_str().is_empty(), "checkpoint dir must be non-empty");
+        Ok(())
+    }
+}
+
+/// Everything beyond the embedding PS that a resumable run must restore:
+/// the dense replica, its optimizer, and where every rank's loader stream
+/// stood at the boundary. (Loader RNGs are deterministic functions of the
+/// seed, so a cursor — batches drawn — IS the stream state.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalManifest {
+    /// The epoch's step boundary: training resumes at exactly this step.
+    pub step: u64,
+    /// [`Trainer::config_fingerprint`](crate::hybrid::Trainer::config_fingerprint)
+    /// of the run — a resume with different numeric flags is rejected.
+    pub fingerprint: u64,
+    /// NN-worker world size the cursors are indexed by.
+    pub world: usize,
+    /// Batches drawn per rank at the boundary (all equal `step` in the
+    /// lock-step trainer; recorded per rank for forward compatibility).
+    pub loader_cursors: Vec<u64>,
+    /// Dense optimizer kind code (0 = SGD, 1 = momentum, 2 = Adam).
+    pub opt_kind: u64,
+    /// Dense optimizer step counter (Adam bias correction).
+    pub opt_t: u64,
+    /// Dense parameters, flat artifact order (identical on every rank at a
+    /// FullSync/deterministic boundary).
+    pub params: Vec<f32>,
+    /// Optimizer first-moment state (empty for SGD).
+    pub opt_m: Vec<f32>,
+    /// Optimizer second-moment state (empty for SGD/momentum).
+    pub opt_v: Vec<f32>,
+}
+
+impl GlobalManifest {
+    /// Serialize: magic, CRC-32 of the body, then the wire-format body.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = WireWriter::new(KIND_MANIFEST);
+        w.put_u64(&[
+            self.step,
+            self.fingerprint,
+            self.world as u64,
+            self.opt_kind,
+            self.opt_t,
+        ]);
+        w.put_u64(&self.loader_cursors);
+        w.put_f32(&self.params);
+        w.put_f32(&self.opt_m);
+        w.put_f32(&self.opt_v);
+        let body = w.finish();
+        let mut out = Vec::with_capacity(12 + body.len());
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse + validate. Arbitrary, truncated, or bit-flipped bytes return
+    /// `Err` — never a panic, and never a structurally inconsistent
+    /// manifest (the resume property test pins this).
+    pub fn from_bytes(bytes: &[u8]) -> Result<GlobalManifest> {
+        ensure!(bytes.len() >= 12, "manifest too short ({} bytes)", bytes.len());
+        ensure!(&bytes[..8] == MANIFEST_MAGIC, "manifest magic mismatch");
+        let want = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        let body = &bytes[12..];
+        ensure!(crc32(body) == want, "manifest CRC mismatch (torn write?)");
+        let r = WireReader::parse(body)?;
+        ensure!(r.kind() == KIND_MANIFEST, "manifest body kind {:#x}", r.kind());
+        let head = r.u64(0)?;
+        ensure!(head.len() == 5, "manifest header has {} fields", head.len());
+        let m = GlobalManifest {
+            step: head[0],
+            fingerprint: head[1],
+            world: head[2] as usize,
+            opt_kind: head[3],
+            opt_t: head[4],
+            loader_cursors: r.u64(1)?,
+            params: r.f32(2)?,
+            opt_m: r.f32(3)?,
+            opt_v: r.f32(4)?,
+        };
+        ensure!(m.opt_kind <= 2, "unknown dense optimizer code {}", m.opt_kind);
+        ensure!(!m.params.is_empty(), "manifest carries no dense parameters");
+        ensure!(
+            m.world >= 1 && m.loader_cursors.len() == m.world,
+            "manifest has {} loader cursors for world {}",
+            m.loader_cursors.len(),
+            m.world
+        );
+        // A cursor disagreeing with the epoch step would splice two
+        // different moments of the run together — exactly the mixed-epoch
+        // state epochs exist to rule out.
+        ensure!(
+            m.loader_cursors.iter().all(|&c| c == m.step),
+            "manifest loader cursors {:?} disagree with epoch step {}",
+            m.loader_cursors,
+            m.step
+        );
+        ensure!(
+            m.opt_m.is_empty() || m.opt_m.len() == m.params.len(),
+            "optimizer m state length {} != params {}",
+            m.opt_m.len(),
+            m.params.len()
+        );
+        ensure!(
+            m.opt_v.is_empty() || m.opt_v.len() == m.params.len(),
+            "optimizer v state length {} != params {}",
+            m.opt_v.len(),
+            m.params.len()
+        );
+        Ok(m)
+    }
+}
+
+/// The directory of checkpoint epoch `step` under `root` (`root/step-N`).
+/// The single definition of the on-disk epoch layout — the coordinator's
+/// global manifests and the shards' node files
+/// ([`CheckpointManager`](crate::embedding::CheckpointManager)) both live
+/// under it.
+pub fn epoch_dir(root: &Path, step: u64) -> PathBuf {
+    root.join(format!("step-{step}"))
+}
+
+/// Inverse of [`epoch_dir`]'s naming: parse a `step-N` directory name back
+/// to its step (used by every committed-epoch discovery scan).
+pub fn parse_epoch_dir_name(name: &str) -> Option<u64> {
+    name.strip_prefix("step-").and_then(|s| s.parse().ok())
+}
+
+/// Crash-safe file write: temp file in the same directory, contents
+/// fsynced, then renamed over `path` (and the directory synced,
+/// best-effort). A reader can observe the old file or the new file, never
+/// a torn mix — the invariant every checkpoint file in the system now
+/// rides on.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("atomic_write target {} has no file name", path.display()))?;
+    let tmp = path.with_file_name(format!("{file_name}.tmp-{}", std::process::id()));
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        // Durable rename needs the directory synced too; not all platforms
+        // allow opening directories, so this half is best-effort.
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Drive one full checkpoint epoch at step boundary `step`: the two-phase
+/// PREPARE/COMMIT across every PS shard (through the embedding tier — local
+/// struct, remote shards, or remote embedding workers alike), then the
+/// global manifest, then the `LATEST` pointer. Ordering is the crash-safety
+/// argument: each artifact exists only once everything it depends on is
+/// durable.
+pub fn run_epoch(
+    root: &Path,
+    step: u64,
+    tier: &dyn EmbComm,
+    manifest: &GlobalManifest,
+) -> Result<()> {
+    ensure!(manifest.step == step, "manifest step {} != epoch step {step}", manifest.step);
+    tier.checkpoint_epoch(root, step)
+        .with_context(|| format!("PS checkpoint epoch at step {step}"))?;
+    let edir = epoch_dir(root, step);
+    std::fs::create_dir_all(&edir)
+        .with_context(|| format!("creating epoch dir {}", edir.display()))?;
+    atomic_write(&edir.join("global.manifest"), &manifest.to_bytes())?;
+    atomic_write(&root.join("LATEST"), step.to_string().as_bytes())?;
+    Ok(())
+}
+
+/// The newest fully committed epoch under `root`, if any: an epoch counts
+/// only when its `global.manifest` parses — which by write ordering implies
+/// every shard committed first. Follows the `LATEST` pointer when valid and
+/// falls back to scanning `step-*` directories, so a corrupt or missing
+/// pointer degrades to the newest *provably complete* epoch instead of an
+/// error.
+pub fn latest_epoch(root: &Path) -> Option<u64> {
+    if let Ok(s) = std::fs::read_to_string(root.join("LATEST")) {
+        if let Ok(step) = s.trim().parse::<u64>() {
+            if load_manifest(root, step).is_ok() {
+                return Some(step);
+            }
+        }
+    }
+    let mut best: Option<u64> = None;
+    let entries = std::fs::read_dir(root).ok()?;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(parse_epoch_dir_name) else {
+            continue;
+        };
+        let newer = match best {
+            Some(b) => step > b,
+            None => true,
+        };
+        if newer && load_manifest(root, step).is_ok() {
+            best = Some(step);
+        }
+    }
+    best
+}
+
+/// Load + validate the global manifest of epoch `step` under `root`.
+pub fn load_manifest(root: &Path, step: u64) -> Result<GlobalManifest> {
+    let path = epoch_dir(root, step).join("global.manifest");
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let m = GlobalManifest::from_bytes(&bytes)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    ensure!(m.step == step, "manifest in step-{step}/ records step {}", m.step);
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(step: u64) -> GlobalManifest {
+        GlobalManifest {
+            step,
+            fingerprint: 0xfeed_beef,
+            world: 2,
+            loader_cursors: vec![step, step],
+            opt_kind: 0,
+            opt_t: step,
+            params: vec![1.0, -2.5, 3.25],
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+        }
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("persia_coord_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let m = sample(40);
+        let back = GlobalManifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn manifest_rejects_corruption_without_panicking() {
+        let bytes = sample(8).to_bytes();
+        assert!(GlobalManifest::from_bytes(&[]).is_err());
+        assert!(GlobalManifest::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        for i in [0usize, 9, 13, bytes.len() - 1] {
+            let mut b = bytes.clone();
+            b[i] ^= 0xff;
+            assert!(GlobalManifest::from_bytes(&b).is_err(), "flip at {i} accepted");
+        }
+    }
+
+    #[test]
+    fn manifest_rejects_mixed_cursors() {
+        let mut m = sample(10);
+        m.loader_cursors = vec![10, 9];
+        assert!(GlobalManifest::from_bytes(&m.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn atomic_write_then_read_back() {
+        let root = tmp_root("aw");
+        let p = root.join("file.bin");
+        atomic_write(&p, b"hello").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"hello");
+        atomic_write(&p, b"world").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"world");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn latest_epoch_ignores_uncommitted_and_corrupt_epochs() {
+        let root = tmp_root("latest");
+        // Epoch 10: fully committed.
+        std::fs::create_dir_all(epoch_dir(&root, 10)).unwrap();
+        atomic_write(&epoch_dir(&root, 10).join("global.manifest"), &sample(10).to_bytes())
+            .unwrap();
+        atomic_write(&root.join("LATEST"), b"10").unwrap();
+        assert_eq!(latest_epoch(&root), Some(10));
+        // Epoch 20: directory exists, manifest missing (crash mid-commit).
+        std::fs::create_dir_all(epoch_dir(&root, 20)).unwrap();
+        atomic_write(&root.join("LATEST"), b"20").unwrap();
+        assert_eq!(latest_epoch(&root), Some(10), "uncommitted epoch must be ignored");
+        // Epoch 30: manifest bit-flipped.
+        std::fs::create_dir_all(epoch_dir(&root, 30)).unwrap();
+        let mut bytes = sample(30).to_bytes();
+        bytes[20] ^= 0x40;
+        atomic_write(&epoch_dir(&root, 30).join("global.manifest"), &bytes).unwrap();
+        atomic_write(&root.join("LATEST"), b"30").unwrap();
+        assert_eq!(latest_epoch(&root), Some(10), "corrupt epoch must be ignored");
+        // No epochs at all.
+        let empty = tmp_root("latest_empty");
+        assert_eq!(latest_epoch(&empty), None);
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn load_manifest_rejects_step_mismatch() {
+        let root = tmp_root("mismatch");
+        std::fs::create_dir_all(epoch_dir(&root, 5)).unwrap();
+        // A step-7 manifest parked in step-5/ must not pass for epoch 5.
+        atomic_write(&epoch_dir(&root, 5).join("global.manifest"), &sample(7).to_bytes())
+            .unwrap();
+        assert!(load_manifest(&root, 5).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn epoch_config_validation() {
+        EpochConfig { dir: "/tmp/x".into(), every: 1 }.validate().unwrap();
+        assert!(EpochConfig { dir: "/tmp/x".into(), every: 0 }.validate().is_err());
+        assert!(EpochConfig { dir: PathBuf::new(), every: 2 }.validate().is_err());
+    }
+}

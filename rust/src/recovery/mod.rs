@@ -1,0 +1,41 @@
+//! The one recovery layer every failure path goes through (paper §4.2.4 as
+//! a first-class subsystem).
+//!
+//! Before this module, recovery was scattered: `RemotePs`,
+//! `RemoteEmbeddingWorker`, the gradient appliers, and the ring rendezvous
+//! each hand-rolled reconnect/retry loops, shard snapshots were
+//! uncoordinated (a restore could mix embedding states from different
+//! steps), and a killed process still ended the run. Everything
+//! failure-shaped now lives here, configured by one
+//! [`RecoveryConfig`](crate::config::RecoveryConfig):
+//!
+//! * [`retry`] — [`RetryPolicy`]: bounded attempts + constant backoff, plus
+//!   the deadline-bounded [`dial_retry`] the ring rendezvous uses.
+//! * [`pool`] — [`ReconnectPool`]: the self-healing round-robin RPC
+//!   connection pool, with per-protocol dial/handshake behind [`Redial`].
+//! * [`replay`] — [`PutReplayLog`] (client-side gradient-put replay into a
+//!   shard restored from an older epoch) and [`ReplayRing`] (server-side
+//!   bounded response replay for reconnect retries).
+//! * [`coordinator`] — coordinated **checkpoint epochs**: the two-phase
+//!   PREPARE/COMMIT snapshot across all PS shards, the [`GlobalManifest`]
+//!   (dense model + optimizer + loader cursors), and the committed-epoch
+//!   discovery that `--resume-from` builds on.
+//!
+//! The failure matrix this buys (see ARCHITECTURE.md for the full table):
+//! SIGKILL of a single PS shard mid-run is *survived* — the pool
+//! re-handshakes the restarted process, the put log replays the delta since
+//! its restored epoch, re-buffered pushes drain — and a fully killed run is
+//! *resumable* from its last committed epoch.
+
+pub mod coordinator;
+pub mod pool;
+pub mod replay;
+pub mod retry;
+
+pub use coordinator::{
+    atomic_write, epoch_dir, latest_epoch, load_manifest, parse_epoch_dir_name, run_epoch,
+    EpochConfig, GlobalManifest,
+};
+pub use pool::{PooledConn, ReconnectPool, Redial};
+pub use replay::{PutReplayLog, ReplayRing};
+pub use retry::{dial_retry, remaining, RetryPolicy};

@@ -1,0 +1,232 @@
+//! The self-healing RPC connection pool every TCP client rides on.
+//!
+//! [`RemotePs`](crate::service::RemotePs) and
+//! [`RemoteEmbeddingWorker`](crate::service::RemoteEmbeddingWorker) used to
+//! carry two private copies of the same machinery: a vector of mutex-guarded
+//! connections handed out round-robin, a "drop the connection and re-dial
+//! with backoff" loop, and a re-handshake that insists the server is still
+//! the one originally connected. [`ReconnectPool`] is that machinery,
+//! extracted once; what differs per protocol — how to dial, handshake, and
+//! verify a fresh connection — lives behind the [`Redial`] trait.
+//!
+//! A redial is also where §4.2.4 recovery hooks in: the PS client's
+//! [`Redial`] impl notices (via the INFO boot nonce) that the server is a
+//! *new process* restored from a checkpoint epoch and replays its
+//! [`PutReplayLog`](super::PutReplayLog) over the fresh connection before
+//! the pool serves any other traffic on it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::rpc::RpcClient;
+use crate::comm::transport::TcpTransport;
+
+use super::retry::RetryPolicy;
+
+/// One pooled RPC connection.
+pub type PooledConn = RpcClient<TcpTransport>;
+
+/// Dial + handshake policy of one pooled endpoint.
+///
+/// `redial` is called both to fill the pool initially and to replace every
+/// connection that died, so it must be safe to run concurrently from
+/// multiple pool slots (protocol-level recovery state, like a replay log,
+/// guards itself).
+pub trait Redial: Send + Sync {
+    /// Dial a fresh connection, run the protocol handshake, and verify the
+    /// server is (still) the endpoint originally connected — a process
+    /// restarted with different flags must not silently rejoin.
+    fn redial(&self) -> Result<PooledConn>;
+
+    /// Human-readable endpoint description for error contexts
+    /// (e.g. `"PS at 127.0.0.1:7700"`).
+    fn describe(&self) -> String;
+}
+
+/// A fixed-size pool of mutex-guarded connections shared round-robin by all
+/// threads of a process; each connection carries one request at a time, so
+/// responses always match their requests without correlation-id reordering.
+pub struct ReconnectPool<R: Redial> {
+    redial: R,
+    policy: RetryPolicy,
+    /// `None` marks a connection that died and awaits re-dialing.
+    clients: Vec<Mutex<Option<PooledConn>>>,
+    next: AtomicUsize,
+}
+
+impl<R: Redial> ReconnectPool<R> {
+    /// Fill a pool of `conns` connections via `redial` (each one runs the
+    /// full handshake; a server that rejects any of them fails the connect).
+    pub fn connect(redial: R, conns: usize, policy: RetryPolicy) -> Result<ReconnectPool<R>> {
+        ensure!(conns >= 1, "connection pool needs at least one connection");
+        let mut clients = Vec::with_capacity(conns);
+        for i in 0..conns {
+            let conn = redial
+                .redial()
+                .with_context(|| format!("{} pool conn {i}", redial.describe()))?;
+            clients.push(Mutex::new(Some(conn)));
+        }
+        Ok(ReconnectPool { redial, policy, clients, next: AtomicUsize::new(0) })
+    }
+
+    /// The endpoint's dial/handshake policy (protocol clients keep their
+    /// recovery state — expected INFO, replay log — inside it).
+    pub fn redialer(&self) -> &R {
+        &self.redial
+    }
+
+    /// One RPC over the pool, transparently re-dialing a dead connection.
+    ///
+    /// Note on retries: idempotence is the *protocol's* job. GET/STATS/
+    /// SNAPSHOT are naturally idempotent; PUT retries are either absorbed by
+    /// a server-side replay cache, replay-logged, or tolerated per the
+    /// paper's §4.2.4 stance — see each client's docs.
+    pub fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
+        let slot = &self.clients[i];
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.policy.attempts {
+            if attempt > 0 {
+                // Backoff with the slot lock RELEASED: during an outage every
+                // thread waiting on this slot sleeps in parallel instead of
+                // queueing behind one holder's full retry schedule. (Redial
+                // itself stays under the lock — connecting to a live server
+                // is fast, and a dead one refuses immediately on loopback.)
+                std::thread::sleep(self.policy.backoff);
+            }
+            let mut guard = slot.lock().unwrap();
+            if guard.is_none() {
+                match self.redial.redial() {
+                    Ok(client) => *guard = Some(client),
+                    Err(e) => {
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match guard.as_ref().expect("connection present").call(msg) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // Connection is toast (peer died, frame torn): drop it so
+                    // the next attempt re-dials instead of reusing it.
+                    *guard = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran")).with_context(|| {
+            format!(
+                "{} unreachable after {} reconnect attempt(s)",
+                self.redial.describe(),
+                self.policy.attempts
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::rpc::RpcServer;
+    use crate::comm::wire::{WireReader, WireWriter};
+    use std::net::TcpListener;
+    use std::sync::atomic::AtomicU32;
+    use std::sync::Arc;
+
+    const KIND: u32 = 0x0901;
+
+    /// A tiny echo server on an ephemeral port; every accepted connection is
+    /// served on its own thread until the process's test ends.
+    fn echo_server() -> (String, Arc<AtomicU32>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let conns = Arc::new(AtomicU32::new(0));
+        let conns2 = conns.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                conns2.fetch_add(1, Ordering::Relaxed);
+                std::thread::spawn(move || {
+                    let mut rpc = RpcServer::new();
+                    rpc.register(KIND, Box::new(|msg| Ok(msg.to_vec())));
+                    let t = TcpTransport::new(stream);
+                    let _ = rpc.serve(&t);
+                });
+            }
+        });
+        (addr, conns)
+    }
+
+    struct EchoRedial {
+        addr: String,
+        handshakes: AtomicU32,
+    }
+
+    impl Redial for EchoRedial {
+        fn redial(&self) -> Result<PooledConn> {
+            self.handshakes.fetch_add(1, Ordering::Relaxed);
+            Ok(RpcClient::new(TcpTransport::connect(&self.addr)?))
+        }
+
+        fn describe(&self) -> String {
+            format!("echo at {}", self.addr)
+        }
+    }
+
+    fn msg(x: u64) -> Vec<u8> {
+        let mut w = WireWriter::new(KIND);
+        w.put_u64(&[x]);
+        w.finish()
+    }
+
+    #[test]
+    fn pool_round_robins_and_echoes() {
+        let (addr, conns) = echo_server();
+        let pool = ReconnectPool::connect(
+            EchoRedial { addr, handshakes: AtomicU32::new(0) },
+            2,
+            RetryPolicy::new(2, 10),
+        )
+        .unwrap();
+        for x in 0..6u64 {
+            let resp = pool.call(&msg(x)).unwrap();
+            let r = WireReader::parse(&resp).unwrap();
+            assert_eq!(r.u64(0).unwrap(), vec![x]);
+        }
+        assert_eq!(conns.load(Ordering::Relaxed), 2, "pool should open exactly 2 conns");
+        assert_eq!(pool.redialer().handshakes.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn dead_connection_is_redialed_transparently() {
+        let (addr, _) = echo_server();
+        let pool = ReconnectPool::connect(
+            EchoRedial { addr, handshakes: AtomicU32::new(0) },
+            1,
+            RetryPolicy::new(3, 10),
+        )
+        .unwrap();
+        pool.call(&msg(1)).unwrap();
+        // Mark the pooled connection dead (exactly what `call` does when a
+        // send fails); the next call must redial and still succeed.
+        *pool.clients[0].lock().unwrap() = None;
+        let resp = pool.call(&msg(2)).unwrap();
+        let r = WireReader::parse(&resp).unwrap();
+        assert_eq!(r.u64(0).unwrap(), vec![2]);
+        assert!(pool.redialer().handshakes.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn unreachable_endpoint_reports_description() {
+        let redial = EchoRedial { addr: "127.0.0.1:1".into(), handshakes: AtomicU32::new(0) };
+        let err = ReconnectPool::connect(redial, 1, RetryPolicy::new(0, 0)).unwrap_err();
+        assert!(format!("{err:#}").contains("echo at"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_connections_rejected() {
+        let redial = EchoRedial { addr: "127.0.0.1:1".into(), handshakes: AtomicU32::new(0) };
+        assert!(ReconnectPool::connect(redial, 0, RetryPolicy::new(0, 0)).is_err());
+    }
+}

@@ -1,0 +1,418 @@
+//! Replay state that turns "a process died" into "nothing happened".
+//!
+//! Two complementary caches live here:
+//!
+//! * [`PutReplayLog`] — **client-side**, per PS shard. Records every
+//!   successfully applied gradient-put batch since the last committed
+//!   checkpoint epoch. When the shard process is killed and comes back
+//!   restored from that epoch (a *new* boot nonce in its INFO handshake),
+//!   the log is replayed over the fresh connection in original apply order,
+//!   reconstructing the exact pre-crash state — in deterministic mode,
+//!   bitwise. Committing an epoch truncates the log, which bounds its
+//!   memory by the checkpoint cadence.
+//! * [`ReplayRing`] — **server-side**, a bounded response cache keyed by
+//!   request identity. A client that reconnects after losing a response
+//!   retries the identical request; answering from the ring keeps
+//!   non-idempotent RPCs (NEXT_BATCH's stream draw, PUSH_GRADS's buffer
+//!   take) idempotent across retries. Generalizes the embedding worker's
+//!   PR-4 one-deep cache to a configurable depth (`--replay-depth`), so a
+//!   burst of lost responses no longer desyncs a rank.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Per-shard log of applied gradient-put batches since the last committed
+/// checkpoint epoch (client side of the §4.2.4 exact-recovery path).
+///
+/// Correct exact replay assumes a single process owns all puts to the shard
+/// — an embedding-worker process, or a one-rank trainer — because entries
+/// are recorded in *this client's* completion order. That is also the
+/// topology the paper's middle tier gives every shard.
+pub struct PutReplayLog {
+    /// Maximum retained entries; 0 disables the log entirely (record and
+    /// replay become no-ops).
+    cap: usize,
+    inner: Mutex<LogInner>,
+}
+
+struct LogInner {
+    /// Applied put batches `(packed keys, gradient rows)` since the oldest
+    /// retained commit, in apply order.
+    entries: VecDeque<(Vec<u64>, Vec<f32>)>,
+    /// Absolute index of `entries[0]` in the all-time record sequence.
+    base: u64,
+    /// Committed checkpoint epochs as `(epoch step, absolute log index at
+    /// commit)`, ascending. Starts with the implicit epoch 0 at position 0
+    /// (a fresh server's state).
+    commits: Vec<(u64, u64)>,
+    /// Boot nonce of the server instance whose state already includes
+    /// everything recorded so far (replaying into it would double-apply).
+    synced_boot: u64,
+    /// Mid-replay progress `(boot nonce, next absolute index to send)`: a
+    /// replay that failed partway (transient wire error while the server
+    /// stayed up) resumes AFTER its last acknowledged batch instead of
+    /// re-sending — and double-applying — the prefix.
+    progress: Option<(u64, u64)>,
+}
+
+impl PutReplayLog {
+    /// A log retaining at most `cap` put batches.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            inner: Mutex::new(LogInner {
+                entries: VecDeque::new(),
+                base: 0,
+                commits: vec![(0, 0)],
+                synced_boot: 0,
+                progress: None,
+            }),
+        }
+    }
+
+    /// A disabled log: `record`/`replay_after_reconnect` are no-ops. Used
+    /// when `RecoveryConfig::replay_puts` is off, so the default path pays
+    /// nothing.
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    /// Whether this log records anything at all.
+    pub fn is_enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Declare `boot` the server instance whose state matches everything
+    /// recorded so far (called once after the initial INFO handshake).
+    pub fn sync_boot(&self, boot: u64) {
+        self.inner.lock().unwrap().synced_boot = boot;
+    }
+
+    /// Record one successfully applied put batch. Oldest entries beyond the
+    /// cap are dropped (a later replay across them becomes best-effort).
+    pub fn record(&self, keys: &[u64], grads: &[f32]) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.push_back((keys.to_vec(), grads.to_vec()));
+        while inner.entries.len() > self.cap {
+            inner.entries.pop_front();
+            inner.base += 1;
+        }
+    }
+
+    /// Number of currently retained entries (tests + diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Whether the log currently retains nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark checkpoint epoch `step` committed at the current log position:
+    /// entries recorded before the *previous* commit can never be needed
+    /// again (a server restores its newest committed epoch; one epoch of
+    /// slack is kept for a server forced onto the previous one) and are
+    /// pruned.
+    pub fn mark_committed(&self, step: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let pos = inner.base + inner.entries.len() as u64;
+        inner.commits.push((step, pos));
+        // Keep the last two commit positions reachable; drop entries before
+        // the second-newest commit.
+        if inner.commits.len() >= 2 {
+            let keep_from = inner.commits[inner.commits.len() - 2].1;
+            while inner.base < keep_from && !inner.entries.is_empty() {
+                inner.entries.pop_front();
+                inner.base += 1;
+            }
+        }
+        // The commit list itself stays tiny.
+        while inner.commits.len() > 8 {
+            inner.commits.remove(0);
+        }
+    }
+
+    /// Bring a reconnected server instance (`boot`, freshly restored from
+    /// checkpoint epoch `restored_step`) back to this client's state by
+    /// re-sending every logged put recorded after that epoch, in order,
+    /// through `send`. Idempotent per boot: the first pool slot to redial
+    /// performs the replay, later slots see the nonce already synced and do
+    /// nothing. On a `send` error the boot stays unsynced — the redial
+    /// fails and the next one resumes the replay — but progress is tracked
+    /// per acknowledged batch, so the already-applied prefix is never
+    /// re-sent into a still-alive server (re-applying gradients would
+    /// silently corrupt the optimizer state the replay exists to restore).
+    ///
+    /// Returns the number of batches replayed by this call.
+    pub fn replay_after_reconnect(
+        &self,
+        boot: u64,
+        restored_step: u64,
+        what: &str,
+        send: &mut dyn FnMut(&[u64], &[f32]) -> Result<()>,
+    ) -> Result<usize> {
+        if self.cap == 0 {
+            return Ok(0);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.synced_boot == boot {
+            return Ok(0);
+        }
+        let found = inner
+            .commits
+            .iter()
+            .rev()
+            .find(|(s, _)| *s == restored_step)
+            .map(|&(_, pos)| pos);
+        let newest = inner.commits.last().copied().unwrap_or((0, 0));
+        let start = match found {
+            Some(pos) => pos,
+            None if restored_step > newest.0 => {
+                // The server restored an epoch this client never saw commit
+                // (a crash between the shard's rename and the global mark):
+                // its state is AHEAD of every position we know, so replaying
+                // anything could double-apply. Resync and say so loudly.
+                eprintln!(
+                    "recovery: {what} restored epoch {restored_step}, newer than the newest \
+                     epoch this client recorded ({}); skipping replay — updates between the \
+                     two may be lost",
+                    newest.0
+                );
+                inner.synced_boot = boot;
+                inner.progress = None;
+                return Ok(0);
+            }
+            None => {
+                eprintln!(
+                    "recovery: {what} restored epoch {restored_step}, older than this \
+                     client's retained log; replaying the whole retained window"
+                );
+                inner.base
+            }
+        };
+        // Resume a partial replay into the SAME boot after its last
+        // acknowledged batch (a new boot starts over from the epoch).
+        let start = match inner.progress {
+            Some((b, next)) if b == boot => next.max(start),
+            _ => start,
+        };
+        if start < inner.base {
+            eprintln!(
+                "recovery: {what} replay is missing {} put batch(es) dropped beyond the \
+                 replay cap; recovered state may diverge",
+                inner.base - start
+            );
+        }
+        let mut idx = start.saturating_sub(inner.base) as usize;
+        let mut n = 0usize;
+        while idx < inner.entries.len() {
+            {
+                let (keys, grads) = &inner.entries[idx];
+                send(keys, grads)?;
+            }
+            idx += 1;
+            n += 1;
+            inner.progress = Some((boot, inner.base + idx as u64));
+        }
+        inner.synced_boot = boot;
+        inner.progress = None;
+        Ok(n)
+    }
+}
+
+/// Bounded response-replay cache: the last `depth` responses keyed by
+/// request identity, oldest evicted first. Not internally locked — callers
+/// wrap it in whatever granularity of mutex their concurrency needs (the
+/// embedding worker keeps one ring per NN rank so retries of one rank
+/// serialize while other ranks proceed).
+pub struct ReplayRing<K: Hash + Eq + Clone, V> {
+    depth: usize,
+    order: VecDeque<K>,
+    map: HashMap<K, V>,
+}
+
+impl<K: Hash + Eq + Clone, V> ReplayRing<K, V> {
+    /// A ring caching the last `depth` responses (`depth >= 1`).
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "replay ring depth must be >= 1");
+        Self { depth, order: VecDeque::new(), map: HashMap::new() }
+    }
+
+    /// The configured capacity.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The cached response for `key`, if still retained.
+    pub fn get(&self, key: &K) -> Option<&V> {
+        self.map.get(key)
+    }
+
+    /// Cache `value` under `key`, evicting the oldest entry beyond the
+    /// depth. Re-inserting an existing key replaces its value in place.
+    pub fn insert(&mut self, key: K, value: V) {
+        if self.map.insert(key.clone(), value).is_none() {
+            self.order.push_back(key);
+            if self.order.len() > self.depth {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect_replay(log: &PutReplayLog, boot: u64, restored: u64) -> Vec<Vec<u64>> {
+        let mut seen = Vec::new();
+        log.replay_after_reconnect(boot, restored, "test shard", &mut |keys, _grads| {
+            seen.push(keys.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        seen
+    }
+
+    #[test]
+    fn replays_everything_after_the_restored_epoch() {
+        let log = PutReplayLog::new(64);
+        log.sync_boot(1);
+        log.record(&[1], &[0.1]);
+        log.record(&[2], &[0.2]);
+        log.mark_committed(10);
+        log.record(&[3], &[0.3]);
+        log.record(&[4], &[0.4]);
+        // Same boot: nothing to do.
+        assert!(collect_replay(&log, 1, 10).is_empty());
+        // New boot restored from epoch 10: entries 3 and 4 replay, in order.
+        assert_eq!(collect_replay(&log, 2, 10), vec![vec![3], vec![4]]);
+        // Replay is idempotent per boot.
+        assert!(collect_replay(&log, 2, 10).is_empty());
+    }
+
+    #[test]
+    fn fresh_server_replays_from_epoch_zero() {
+        let log = PutReplayLog::new(64);
+        log.sync_boot(7);
+        log.record(&[1], &[0.0]);
+        log.record(&[2], &[0.0]);
+        assert_eq!(collect_replay(&log, 8, 0), vec![vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn commit_prunes_entries_before_the_previous_commit() {
+        let log = PutReplayLog::new(64);
+        log.record(&[1], &[0.0]);
+        log.mark_committed(4);
+        log.record(&[2], &[0.0]);
+        log.mark_committed(8);
+        // Entry 1 (before commit 4, the second-newest) is pruned; entry 2
+        // (between 4 and 8) is retained for a server forced onto epoch 4.
+        assert_eq!(log.len(), 1);
+        assert_eq!(collect_replay(&log, 9, 4), vec![vec![2]]);
+        let log2 = PutReplayLog::new(64);
+        log2.record(&[1], &[0.0]);
+        log2.mark_committed(4);
+        log2.record(&[2], &[0.0]);
+        log2.mark_committed(8);
+        assert!(collect_replay(&log2, 9, 8).is_empty());
+    }
+
+    #[test]
+    fn newer_epoch_than_recorded_skips_replay() {
+        let log = PutReplayLog::new(64);
+        log.record(&[1], &[0.0]);
+        log.mark_committed(4);
+        log.record(&[2], &[0.0]);
+        // Server claims epoch 12, which this client never saw commit.
+        assert!(collect_replay(&log, 3, 12).is_empty());
+    }
+
+    #[test]
+    fn cap_overflow_drops_oldest_and_still_replays_rest() {
+        let log = PutReplayLog::new(2);
+        log.record(&[1], &[0.0]);
+        log.record(&[2], &[0.0]);
+        log.record(&[3], &[0.0]);
+        assert_eq!(log.len(), 2);
+        // Epoch 0's position predates the retained window: best-effort.
+        assert_eq!(collect_replay(&log, 5, 0), vec![vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn failed_send_keeps_boot_unsynced_for_a_retry() {
+        let log = PutReplayLog::new(8);
+        log.record(&[1], &[0.0]);
+        let mut calls = 0;
+        let res = log.replay_after_reconnect(2, 0, "t", &mut |_k, _g| {
+            calls += 1;
+            anyhow::bail!("wire died mid-replay")
+        });
+        assert!(res.is_err());
+        assert_eq!(calls, 1);
+        // Nothing was acknowledged, so the retry replays from the top.
+        assert_eq!(collect_replay(&log, 2, 0), vec![vec![1]]);
+    }
+
+    #[test]
+    fn partial_replay_resumes_after_the_acknowledged_prefix() {
+        let log = PutReplayLog::new(8);
+        log.record(&[1], &[0.0]);
+        log.record(&[2], &[0.0]);
+        log.record(&[3], &[0.0]);
+        // First attempt applies batches 1 and 2, then the wire dies.
+        let mut sent = Vec::new();
+        let res = log.replay_after_reconnect(5, 0, "t", &mut |keys, _g| {
+            if sent.len() == 2 {
+                anyhow::bail!("wire died after two batches");
+            }
+            sent.push(keys.to_vec());
+            Ok(())
+        });
+        assert!(res.is_err());
+        assert_eq!(sent, vec![vec![1], vec![2]]);
+        // Same boot is still alive: the retry must NOT re-apply 1 and 2.
+        assert_eq!(collect_replay(&log, 5, 0), vec![vec![3]]);
+        // A *different* boot (the server died again, restored from the
+        // epoch) starts over from the epoch position.
+        assert_eq!(collect_replay(&log, 6, 0), vec![vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn disabled_log_is_free() {
+        let log = PutReplayLog::disabled();
+        assert!(!log.is_enabled());
+        log.record(&[1], &[0.0]);
+        assert!(log.is_empty());
+        assert!(collect_replay(&log, 2, 0).is_empty());
+    }
+
+    #[test]
+    fn replay_ring_keeps_last_depth_entries() {
+        let mut ring: ReplayRing<usize, Vec<u8>> = ReplayRing::new(2);
+        ring.insert(0, vec![0]);
+        ring.insert(1, vec![1]);
+        ring.insert(2, vec![2]);
+        assert!(ring.get(&0).is_none(), "oldest evicted");
+        assert_eq!(ring.get(&1), Some(&vec![1]));
+        assert_eq!(ring.get(&2), Some(&vec![2]));
+        // Replacing a live key must not grow the ring.
+        ring.insert(2, vec![9]);
+        assert_eq!(ring.get(&2), Some(&vec![9]));
+        assert_eq!(ring.get(&1), Some(&vec![1]));
+        assert_eq!(ring.depth(), 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Bounded retry with constant backoff — the one policy every failure path
+//! shares.
+//!
+//! Before this module existed, `RemotePs`, `RemoteEmbeddingWorker`, the
+//! gradient appliers, and the TCP ring rendezvous each hand-rolled their own
+//! attempt loop with slightly different off-by-ones and error wording. They
+//! now all build a [`RetryPolicy`] (usually from
+//! [`RecoveryConfig`](crate::config::RecoveryConfig)) so "how hard do we try"
+//! has exactly one meaning across the system.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::RecoveryConfig;
+
+/// How many times to retry a failed operation, and how long to wait between
+/// attempts. `attempts` counts *retries*: 0 means fail on the first error,
+/// N means up to N+1 total tries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first failure (total tries = `attempts + 1`).
+    pub attempts: u32,
+    /// Constant delay before each retry.
+    pub backoff: Duration,
+}
+
+impl RetryPolicy {
+    /// A policy with `attempts` retries spaced `backoff_ms` apart.
+    pub fn new(attempts: u32, backoff_ms: u64) -> Self {
+        Self { attempts, backoff: Duration::from_millis(backoff_ms) }
+    }
+
+    /// Run `f` until it succeeds or the retry budget is exhausted, sleeping
+    /// `backoff` before every retry. The final error carries `what` and the
+    /// total attempt count.
+    pub fn run<T>(&self, what: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.attempts {
+            if attempt > 0 && !self.backoff.is_zero() {
+                std::thread::sleep(self.backoff);
+            }
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one attempt ran"))
+            .with_context(|| format!("{what} failed after {} attempt(s)", self.attempts + 1))
+    }
+}
+
+impl From<&RecoveryConfig> for RetryPolicy {
+    fn from(cfg: &RecoveryConfig) -> Self {
+        Self::new(cfg.attempts, cfg.backoff_ms)
+    }
+}
+
+/// Time left until `deadline`, floored at 1ms so socket timeouts derived
+/// from it are never zero (zero would mean "no timeout" to the OS).
+pub fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1))
+}
+
+/// Dial `addr`, retrying until `deadline` — the target process may not have
+/// bound its listener yet (rendezvous joins, restarted shards). `what` names
+/// the target in the final error.
+pub fn dial_retry(addr: &str, deadline: Instant, what: &str) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("dialing {what} at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn succeeds_first_try_without_sleeping() {
+        let p = RetryPolicy::new(3, 1_000_000); // would sleep forever if retried
+        let t0 = Instant::now();
+        let v = p.run("noop", || Ok::<_, anyhow::Error>(7)).unwrap();
+        assert_eq!(v, 7);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn retries_until_success() {
+        let p = RetryPolicy::new(4, 0);
+        let mut calls = 0;
+        let v = p
+            .run("flaky", || {
+                calls += 1;
+                if calls < 3 {
+                    anyhow::bail!("not yet");
+                }
+                Ok(calls)
+            })
+            .unwrap();
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn exhausted_budget_reports_what_and_count() {
+        let p = RetryPolicy::new(2, 0);
+        let err = p.run("doomed op", || Err::<(), _>(anyhow::anyhow!("nope"))).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("doomed op") && msg.contains("3 attempt(s)"), "{msg}");
+    }
+
+    #[test]
+    fn zero_attempts_means_one_try() {
+        let p = RetryPolicy::new(0, 0);
+        let mut calls = 0;
+        let _ = p.run("once", || {
+            calls += 1;
+            Err::<(), _>(anyhow::anyhow!("x"))
+        });
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn from_recovery_config() {
+        let cfg = RecoveryConfig { attempts: 9, backoff_ms: 123, ..RecoveryConfig::default() };
+        let p = RetryPolicy::from(&cfg);
+        assert_eq!(p.attempts, 9);
+        assert_eq!(p.backoff, Duration::from_millis(123));
+    }
+
+    #[test]
+    fn dial_retry_times_out_on_dead_target() {
+        // Port 1 on loopback is almost surely closed; the deadline bounds
+        // the wait either way.
+        let deadline = Instant::now() + Duration::from_millis(200);
+        let err = dial_retry("127.0.0.1:1", deadline, "nothing").unwrap_err();
+        assert!(format!("{err:#}").contains("nothing"));
+    }
+}

@@ -14,10 +14,12 @@
 //! per mini-batch, so the remote path costs one round-trip where the naive
 //! per-row API would cost thousands.
 
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::config::EmbeddingConfig;
-use crate::embedding::EmbeddingPs;
+use crate::embedding::{CheckpointManager, EmbeddingPs};
 
 /// Aggregate PS statistics surfaced through either backend.
 #[derive(Clone, Copy, Debug, Default)]
@@ -54,6 +56,21 @@ pub trait PsBackend: Send + Sync {
     fn check_compat(&self, _cfg: &EmbeddingConfig, _seed: u64) -> Result<()> {
         Ok(())
     }
+
+    /// Cut checkpoint epoch `step` across every shard behind this backend:
+    /// the two-phase PREPARE/COMMIT of [`crate::recovery::coordinator`].
+    /// `dir` is the checkpoint root for backends that write locally (the
+    /// in-process PS); remote shards use the `--checkpoint-dir` they were
+    /// started with and ignore it. Backends without checkpoint support
+    /// error — the trainer surfaces that at the first epoch, not at a
+    /// failed restore.
+    fn checkpoint_epoch(&self, _dir: &Path, _step: u64) -> Result<()> {
+        anyhow::bail!("this PS backend does not support coordinated checkpoint epochs")
+    }
+
+    /// Notify this backend that epoch `step` is globally committed, so any
+    /// client-side put replay log can truncate. Default: nothing to mark.
+    fn mark_epoch_committed(&self, _step: u64) {}
 }
 
 /// In-process backend: direct calls into the sharded PS.
@@ -78,6 +95,19 @@ impl PsBackend for EmbeddingPs {
             total_evictions: self.total_evictions(),
             imbalance: self.imbalance(),
         })
+    }
+
+    /// In-process epochs degenerate to prepare+commit against the local
+    /// filesystem — same files, same atomicity, no RPC.
+    fn checkpoint_epoch(&self, dir: &Path, step: u64) -> Result<()> {
+        anyhow::ensure!(
+            !dir.as_os_str().is_empty(),
+            "checkpoint epochs need a checkpoint dir (--checkpoint-dir)"
+        );
+        let mgr = CheckpointManager::new(dir)?;
+        mgr.prepare_epoch(self, step)?;
+        mgr.commit_epoch(self, step)?;
+        Ok(())
     }
 }
 

@@ -1,25 +1,26 @@
 //! TCP client stub: [`RemotePs`] implements [`PsBackend`] against a
 //! [`super::PsServer`].
 //!
-//! A small pool of TCP connections (see
-//! [`ServiceConfig::client_conns`](crate::config::ServiceConfig)) is shared
-//! round-robin by all threads of the trainer process (NN workers pulling,
-//! gradient appliers putting); each connection carries one request at a
-//! time, guarded by a mutex, so responses always match their requests
-//! without relying on correlation-id reordering.
+//! All transport-level resilience lives in the shared recovery layer: the
+//! pool of mutex-guarded connections is a
+//! [`ReconnectPool`](crate::recovery::ReconnectPool) whose `PsRedial`
+//! policy re-dials a dead connection, re-runs the INFO handshake, and
+//! insists the server is still the deployment originally connected
+//! ([`PsInfo::same_deployment`]). That is what lets a PS shard process that
+//! was killed and restarted rejoin a training run mid-flight (§4.2.4): the
+//! trainer's next get/put simply reconnects and proceeds.
 //!
-//! Connections heal themselves: when a call fails, the pooled connection is
-//! dropped and re-dialed up to
-//! [`ServiceConfig::reconnect_attempts`](crate::config::ServiceConfig) times
-//! (constant backoff), re-running the INFO handshake and insisting the
-//! server's fingerprint is unchanged. That is what lets a PS shard process
-//! that was killed and restarted from its snapshot rejoin a training run
-//! mid-flight (§4.2.4, cross-process): the trainer's next get/put simply
-//! reconnects and proceeds.
+//! On top of reconnection, exact state recovery: when
+//! [`RecoveryConfig::replay_puts`](crate::config::RecoveryConfig) is on,
+//! every applied gradient put is recorded in a
+//! [`PutReplayLog`](crate::recovery::PutReplayLog). A redial that finds a
+//! *new* boot nonce (the shard was killed and restarted, restored from its
+//! newest committed checkpoint epoch) replays the recorded puts after that
+//! epoch over the fresh connection — in deterministic mode the shard is
+//! bitwise back to its pre-crash state before any other traffic reaches it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -27,21 +28,74 @@ use crate::comm::rpc::RpcClient;
 use crate::comm::transport::TcpTransport;
 use crate::config::{EmbeddingConfig, ServiceConfig};
 use crate::embedding::ps::pack_key;
+use crate::recovery::{PooledConn, PutReplayLog, ReconnectPool, Redial, RetryPolicy};
 
 use super::backend::{PsBackend, PsStats};
 use super::protocol;
 use super::protocol::PsInfo;
 
+/// Dial/handshake/replay policy for one PS shard endpoint.
+pub(super) struct PsRedial {
+    addr: String,
+    expect: PsInfo,
+    wire_compress: bool,
+    replay: Arc<PutReplayLog>,
+}
+
+impl Redial for PsRedial {
+    fn redial(&self) -> Result<PooledConn> {
+        let transport = TcpTransport::connect(&self.addr)
+            .with_context(|| format!("reconnecting to PS at {}", self.addr))?;
+        let client = RpcClient::new(transport);
+        let resp = client.call(&protocol::encode_info_request()).context("PS INFO re-handshake")?;
+        let info = protocol::decode_info_response(&resp)?;
+        // A shard restarted with different flags must not be allowed to
+        // silently rejoin with different numerics; a restarted instance of
+        // the SAME deployment (new boot nonce) is §4.2.4's recovery case.
+        ensure!(
+            info.same_deployment(&self.expect),
+            "PS at {} came back with a different config: {info:?} != {:?}",
+            self.addr,
+            self.expect
+        );
+        // New process: bring it back to this client's state by replaying
+        // the put log since its restored epoch, over this very connection,
+        // before the pool serves anything else on it. Idempotent per boot —
+        // concurrent pool slots replay once.
+        let dim = self.expect.dim;
+        let compress = self.wire_compress;
+        let replayed = self.replay.replay_after_reconnect(
+            info.boot_nonce,
+            info.restored_step,
+            &format!("PS at {}", self.addr),
+            &mut |keys, grads| {
+                let msg = protocol::encode_put_request(keys, grads, dim, compress);
+                let resp = client.call(&msg).context("replaying logged put")?;
+                let applied = protocol::decode_put_response(&resp)?;
+                ensure!(applied == keys.len(), "replay applied {applied} of {} rows", keys.len());
+                Ok(())
+            },
+        )?;
+        if replayed > 0 {
+            eprintln!(
+                "recovery: replayed {replayed} gradient put batch(es) into restarted PS at {} \
+                 (restored from epoch {})",
+                self.addr, info.restored_step
+            );
+        }
+        Ok(client)
+    }
+
+    fn describe(&self) -> String {
+        format!("PS at {}", self.addr)
+    }
+}
+
 /// Remote embedding-PS backend over TCP (one server process).
 pub struct RemotePs {
-    addr: String,
+    pool: ReconnectPool<PsRedial>,
     info: PsInfo,
     wire_compress: bool,
-    reconnect_attempts: u32,
-    reconnect_backoff: Duration,
-    /// `None` marks a connection that died and awaits re-dialing.
-    clients: Vec<Mutex<Option<RpcClient<TcpTransport>>>>,
-    next: AtomicUsize,
 }
 
 impl RemotePs {
@@ -61,32 +115,35 @@ impl RemotePs {
     }
 
     /// Connect a pool to one specific `addr`, taking every other knob
-    /// (pool size, compression, retry policy) from `cfg`.
+    /// (pool size, compression, recovery policy) from `cfg`.
     pub(super) fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemotePs> {
-        let mut clients = Vec::with_capacity(cfg.client_conns);
-        for i in 0..cfg.client_conns {
-            let transport = TcpTransport::connect(addr)
-                .with_context(|| format!("connecting PS pool conn {i} to {addr}"))?;
-            clients.push(Mutex::new(Some(RpcClient::new(transport))));
-        }
-        let resp = {
-            let slot = clients[0].lock().unwrap();
-            slot.as_ref()
-                .expect("fresh pool connection")
-                .call(&protocol::encode_info_request())
-                .context("PS INFO handshake")?
-        };
+        // Probe handshake first: the pool's redial policy needs to know the
+        // server's identity before it can verify anything.
+        let probe = TcpTransport::connect(addr)
+            .with_context(|| format!("connecting to PS at {addr}"))?;
+        let probe = RpcClient::new(probe);
+        let resp = probe.call(&protocol::encode_info_request()).context("PS INFO handshake")?;
         let info = protocol::decode_info_response(&resp)?;
         ensure!(info.dim > 0, "remote PS reports dim 0");
-        Ok(RemotePs {
+        drop(probe);
+
+        let replay = Arc::new(if cfg.recovery.replay_puts {
+            PutReplayLog::new(cfg.recovery.replay_cap)
+        } else {
+            PutReplayLog::disabled()
+        });
+        // The current boot's state trivially includes everything recorded
+        // so far (nothing): replay must only trigger on a *new* boot.
+        replay.sync_boot(info.boot_nonce);
+        let redial = PsRedial {
             addr: addr.to_string(),
-            info,
+            expect: info,
             wire_compress: cfg.wire_compress,
-            reconnect_attempts: cfg.reconnect_attempts,
-            reconnect_backoff: Duration::from_millis(cfg.reconnect_backoff_ms),
-            clients,
-            next: AtomicUsize::new(0),
-        })
+            replay,
+        };
+        let pool =
+            ReconnectPool::connect(redial, cfg.client_conns, RetryPolicy::from(&cfg.recovery))?;
+        Ok(RemotePs { pool, info, wire_compress: cfg.wire_compress })
     }
 
     /// The server's INFO handshake (geometry + config fingerprint).
@@ -96,7 +153,7 @@ impl RemotePs {
 
     /// The address this client dials (and re-dials).
     pub fn addr(&self) -> &str {
-        &self.addr
+        &self.pool.redialer().addr
     }
 
     /// PS node count reported by the server.
@@ -114,70 +171,11 @@ impl RemotePs {
         self.info.node_start..self.info.node_end
     }
 
-    /// Dial a fresh connection and verify the server is (still) the PS we
-    /// originally handshook — a shard restarted with different flags must
-    /// not be allowed to silently rejoin with different numerics.
-    fn redial(&self) -> Result<RpcClient<TcpTransport>> {
-        let transport = TcpTransport::connect(&self.addr)
-            .with_context(|| format!("reconnecting to PS at {}", self.addr))?;
-        let client = RpcClient::new(transport);
-        let resp = client.call(&protocol::encode_info_request()).context("PS INFO re-handshake")?;
-        let info = protocol::decode_info_response(&resp)?;
-        ensure!(
-            info == self.info,
-            "PS at {} came back with a different config: {info:?} != {:?}",
-            self.addr,
-            self.info
-        );
-        Ok(client)
-    }
-
-    /// One RPC over the pool, transparently re-dialing a dead connection.
-    ///
-    /// Note on retries: GET/STATS/SNAPSHOT are idempotent. A retried PUT or
-    /// RESTORE whose first attempt died *after* the server applied it is
-    /// applied twice — the paper's §4.2.4 stance is that occasional gradient
-    /// anomalies during recovery are tolerated, and RESTORE is idempotent in
-    /// effect (same bytes, same state).
+    /// One RPC over the recovery pool (see
+    /// [`ReconnectPool::call`](crate::recovery::ReconnectPool::call) for
+    /// the retry/idempotence contract).
     fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
-        let slot = &self.clients[i];
-        let mut last_err: Option<anyhow::Error> = None;
-        for attempt in 0..=self.reconnect_attempts {
-            if attempt > 0 {
-                // Backoff with the slot lock RELEASED: during an outage every
-                // thread waiting on this slot sleeps in parallel instead of
-                // queueing behind one holder's full retry schedule. (Redial
-                // itself stays under the lock — connecting to a live server
-                // is fast, and a dead one refuses immediately on loopback.)
-                std::thread::sleep(self.reconnect_backoff);
-            }
-            let mut guard = slot.lock().unwrap();
-            if guard.is_none() {
-                match self.redial() {
-                    Ok(client) => *guard = Some(client),
-                    Err(e) => {
-                        last_err = Some(e);
-                        continue;
-                    }
-                }
-            }
-            match guard.as_ref().expect("connection present").call(msg) {
-                Ok(resp) => return Ok(resp),
-                Err(e) => {
-                    // Connection is toast (peer died, frame torn): drop it so
-                    // the next attempt re-dials instead of reusing it.
-                    *guard = None;
-                    last_err = Some(e);
-                }
-            }
-        }
-        Err(last_err.expect("at least one attempt ran")).with_context(|| {
-            format!(
-                "PS at {} unreachable after {} reconnect attempt(s)",
-                self.addr, self.reconnect_attempts
-            )
-        })
+        self.pool.call(msg)
     }
 
     /// Ask the server to shut down gracefully (stop accepting, drain
@@ -199,7 +197,9 @@ impl RemotePs {
         Ok(())
     }
 
-    /// Batched gradient PUT of already-packed keys.
+    /// Batched gradient PUT of already-packed keys. Applied puts are
+    /// recorded in the replay log (when enabled), so a later shard restart
+    /// can be replayed back to this exact state.
     pub(super) fn put_packed(&self, packed: &[u64], grads: &[f32]) -> Result<()> {
         ensure!(grads.len() == packed.len() * self.info.dim, "PUT gradient shape mismatch");
         if packed.is_empty() {
@@ -209,6 +209,7 @@ impl RemotePs {
         let resp = self.call(&msg)?;
         let applied = protocol::decode_put_response(&resp)?;
         ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
+        self.pool.redialer().replay.record(packed, grads);
         Ok(())
     }
 
@@ -236,6 +237,28 @@ impl RemotePs {
         ensure!(restored == shards.len(), "PS restored {restored} of {} shards", shards.len());
         Ok(())
     }
+
+    /// Checkpoint-epoch phase 1: ask the server to stage its owned nodes.
+    pub fn prepare_ckpt(&self, step: u64) -> Result<usize> {
+        let resp = self
+            .call(&protocol::encode_ckpt_request(protocol::KIND_PREPARE_CKPT, step))
+            .with_context(|| format!("PREPARE_CKPT epoch {step}"))?;
+        protocol::decode_ckpt_response(&resp, protocol::KIND_PREPARE_CKPT)
+    }
+
+    /// Checkpoint-epoch phase 2: ask the server to commit the staged epoch.
+    pub fn commit_ckpt(&self, step: u64) -> Result<usize> {
+        let resp = self
+            .call(&protocol::encode_ckpt_request(protocol::KIND_COMMIT_CKPT, step))
+            .with_context(|| format!("COMMIT_CKPT epoch {step}"))?;
+        protocol::decode_ckpt_response(&resp, protocol::KIND_COMMIT_CKPT)
+    }
+
+    /// Truncate this client's put replay log at globally committed epoch
+    /// `step` (no-op when replay is disabled).
+    pub fn mark_committed(&self, step: u64) {
+        self.pool.redialer().replay.mark_committed(step);
+    }
 }
 
 impl PsBackend for RemotePs {
@@ -251,7 +274,7 @@ impl PsBackend for RemotePs {
             self.info.node_start == 0 && self.info.node_end == self.info.n_nodes,
             "server at {} owns nodes {}..{} of {}; a partial shard needs \
              ShardedRemotePs with the full shard list",
-            self.addr,
+            self.addr(),
             self.info.node_start,
             self.info.node_end,
             self.info.n_nodes
@@ -271,5 +294,16 @@ impl PsBackend for RemotePs {
 
     fn stats(&self) -> Result<PsStats> {
         Ok(self.stats_full()?.0)
+    }
+
+    fn checkpoint_epoch(&self, _dir: &Path, step: u64) -> Result<()> {
+        self.prepare_ckpt(step)?;
+        self.commit_ckpt(step)?;
+        self.mark_committed(step);
+        Ok(())
+    }
+
+    fn mark_epoch_committed(&self, step: u64) {
+        self.mark_committed(step);
     }
 }

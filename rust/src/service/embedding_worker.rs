@@ -40,18 +40,21 @@
 //! plus a digest of its PS deployment, and trainers whose config differs are
 //! rejected at connect time — exactly the PS INFO / ring-rendezvous policy.
 //! `NEXT_BATCH` must be called strictly in step order per rank; the server
-//! keeps a one-deep replay cache per rank so a retried request for the
-//! *last served* step (a reconnect that lost the response) is answered from
-//! cache, while any other out-of-order step is a loud desync error.
-//! Successful `PUSH_GRADS` acks are likewise cached (keyed by the batch's
-//! never-reused sample ids), so a push retried after a lost ack is answered
-//! idempotently instead of failing on its already-released buffer entries.
+//! keeps a per-rank [`crate::recovery::ReplayRing`] (`--replay-depth` deep,
+//! default 4) so a retried request for any of the last served steps (a
+//! reconnect that lost responses) is answered from cache, while a step
+//! outside the ring is a loud desync error. Successful `PUSH_GRADS` acks
+//! ride a `4 × replay-depth` ring (keyed by the batch's never-reused sample
+//! ids), so a push retried after a lost ack is answered idempotently
+//! instead of failing on its already-released buffer entries. `CKPT` relays
+//! the trainer-coordinated checkpoint epoch to the PS deployment this
+//! worker fronts (kinds table: `CKPT` = `0x7007`, u64 `[step, mode]`).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
@@ -61,10 +64,11 @@ use crate::comm::rpc::{RpcClient, RpcServer};
 use crate::comm::transport::TcpTransport;
 use crate::comm::wire::{WireReader, WireWriter};
 use crate::comm::NetSim;
-use crate::config::ServiceConfig;
+use crate::config::{EmbWorkerConfig, ServiceConfig};
 use crate::data::sample::SampleId;
 use crate::embedding::EmbeddingPs;
 use crate::hybrid::Trainer;
+use crate::recovery::{PooledConn, ReconnectPool, Redial, ReplayRing, RetryPolicy};
 use crate::worker::{
     AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline, PreparedBatch,
     WorkerStats,
@@ -85,6 +89,15 @@ pub const KIND_EW_EVAL: u32 = 0x7004;
 pub const KIND_EW_STATS: u32 = 0x7005;
 /// Graceful shutdown (acked before the server stops accepting).
 pub const KIND_EW_SHUTDOWN: u32 = 0x7006;
+/// Checkpoint-epoch relay: the trainer (coordinator) asks this worker to
+/// drive the two-phase epoch on its PS deployment (`mode` = full) or to
+/// just truncate its put replay log at a committed epoch (`mode` = mark).
+pub const KIND_EW_CKPT: u32 = 0x7007;
+
+/// CKPT mode: drive PREPARE/COMMIT across the PS shards, then mark.
+pub const EW_CKPT_FULL: u64 = 0;
+/// CKPT mode: only truncate this worker's put replay logs at the epoch.
+pub const EW_CKPT_MARK: u64 = 1;
 
 /// Flag bit: value payload is fp16 + per-sample scales.
 const FLAG_COMPRESS: u8 = 1;
@@ -454,12 +467,50 @@ pub fn encode_ew_shutdown_request() -> Vec<u8> {
 }
 
 // ---------------------------------------------------------------------------
+// CKPT
+// ---------------------------------------------------------------------------
+
+/// Encode a checkpoint-epoch relay request (`mode` is [`EW_CKPT_FULL`] or
+/// [`EW_CKPT_MARK`]).
+pub fn encode_ew_ckpt_request(step: u64, mode: u64) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_CKPT);
+    w.put_u64(&[step, mode]);
+    w.finish()
+}
+
+/// Decode a checkpoint-epoch relay request into `(step, mode)`.
+pub fn decode_ew_ckpt_request(msg: &[u8]) -> Result<(u64, u64)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_CKPT, "expected EW CKPT, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 2, "malformed EW CKPT request");
+    Ok((xs[0], xs[1]))
+}
+
+/// Encode the checkpoint-epoch relay ack.
+pub fn encode_ew_ckpt_response() -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_CKPT);
+    w.put_u64(&[1]);
+    w.finish()
+}
+
+/// Decode the checkpoint-epoch relay ack.
+pub fn decode_ew_ckpt_response(msg: &[u8]) -> Result<()> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_CKPT, "expected EW CKPT ack, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1 && xs[0] == 1, "malformed EW CKPT ack");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
 /// Deployment identity of one `serve-embedding-worker` process (everything
-/// the INFO handshake advertises beyond the worker's own geometry).
-#[derive(Clone, Copy, Debug)]
+/// the INFO handshake advertises beyond the worker's own geometry, plus its
+/// local recovery knobs).
+#[derive(Clone, Debug)]
 pub struct EwServerConfig {
     /// The server's trainer-config fingerprint.
     pub fingerprint: u64,
@@ -474,6 +525,12 @@ pub struct EwServerConfig {
     /// Lossy compression on served activations / received gradients
     /// (`train --compress`; part of the fingerprint, so both sides agree).
     pub compress: bool,
+    /// Per-rank NEXT_BATCH replay-ring depth (`--replay-depth`; the
+    /// PUSH_GRADS ack cache is sized `4 ×` this).
+    pub replay_depth: usize,
+    /// Checkpoint root for CKPT relays when the worker fronts an in-process
+    /// PS (remote shards use their own `--checkpoint-dir` and ignore it).
+    pub ckpt_dir: Option<PathBuf>,
 }
 
 /// A bound-but-not-yet-serving embedding-worker service.
@@ -521,36 +578,38 @@ impl EmbeddingWorkerServer {
             Box::new(move |_msg| Ok(encode_ew_info_response(&info))),
         );
         {
-            // NEXT_BATCH: serve from the pipeline, with a one-deep replay
-            // cache per rank so a reconnect that lost the response can
-            // re-ask for the same step (any other out-of-order step is a
-            // desync and fails loudly inside the pipeline).
-            type ReplaySlot = Arc<Mutex<Option<(usize, Vec<u8>)>>>;
-            let replay: Arc<Mutex<HashMap<usize, ReplaySlot>>> =
+            // NEXT_BATCH: serve from the pipeline, with a per-rank replay
+            // ring (`--replay-depth` deep, shared `recovery::ReplayRing`)
+            // so a reconnect that lost up to `replay_depth` responses can
+            // re-ask for any of the last served steps (any step outside the
+            // ring is a desync and fails loudly inside the pipeline — the
+            // PR-4 one-deep cache desynced after two lost responses in a
+            // row).
+            type RankRing = Arc<Mutex<ReplayRing<usize, Vec<u8>>>>;
+            let replay: Arc<Mutex<HashMap<usize, RankRing>>> =
                 Arc::new(Mutex::new(HashMap::new()));
             let pipeline = pipeline.clone();
             let compress = cfg.compress;
+            let depth = cfg.replay_depth.max(1);
             rpc.register(
                 KIND_EW_NEXT,
                 Box::new(move |msg| {
                     let (rank, step) = decode_next_request(msg)?;
-                    let slot: ReplaySlot = replay
+                    let ring: RankRing = replay
                         .lock()
                         .unwrap()
                         .entry(rank)
-                        .or_default()
+                        .or_insert_with(|| Arc::new(Mutex::new(ReplayRing::new(depth))))
                         .clone();
                     // Per-rank lock: concurrent ranks proceed in parallel,
                     // retries of one rank serialize.
-                    let mut slot = slot.lock().unwrap();
-                    if let Some((s, bytes)) = slot.as_ref() {
-                        if *s == step {
-                            return Ok(bytes.clone());
-                        }
+                    let mut ring = ring.lock().unwrap();
+                    if let Some(bytes) = ring.get(&step) {
+                        return Ok(bytes.clone());
                     }
                     let pb = pipeline.next(rank, step)?;
                     let resp = encode_next_response(&pb, emb_dim, compress);
-                    *slot = Some((step, resp.clone()));
+                    ring.insert(step, resp.clone());
                     Ok(resp)
                 }),
             );
@@ -561,20 +620,14 @@ impl EmbeddingWorkerServer {
             // idempotently — the samples are no longer buffered, so
             // replaying it through push_grads_raw would abort the run on a
             // transient blip whose update actually landed. Acks of the last
-            // few successful pushes are kept keyed by the batch's first
-            // sample id (sids are minted monotonically by this worker and
-            // never reused, so an exact sids match IS the same batch).
-            // Failed pushes cache nothing: their samples re-buffered, and
-            // the retry must really re-apply.
-            const PUSH_REPLAY_DEPTH: usize = 16;
-            struct PushReplay {
-                order: VecDeque<SampleId>,
-                acks: HashMap<SampleId, (Vec<SampleId>, Vec<u8>)>,
-            }
-            let replay = Arc::new(Mutex::new(PushReplay {
-                order: VecDeque::new(),
-                acks: HashMap::new(),
-            }));
+            // few successful pushes ride a `recovery::ReplayRing` keyed by
+            // the batch's first sample id (sids are minted monotonically by
+            // this worker and never reused, so an exact sids match IS the
+            // same batch). Failed pushes cache nothing: their samples
+            // re-buffered, and the retry must really re-apply.
+            type PushRing = Arc<Mutex<ReplayRing<SampleId, (Vec<SampleId>, Vec<u8>)>>>;
+            let push_depth = cfg.replay_depth.max(1) * 4;
+            let replay: PushRing = Arc::new(Mutex::new(ReplayRing::new(push_depth)));
             let prep = prep.clone();
             rpc.register(
                 KIND_EW_PUSH,
@@ -592,7 +645,7 @@ impl EmbeddingWorkerServer {
                     let key = sids.first().copied().unwrap_or(0);
                     {
                         let cache = replay.lock().unwrap();
-                        if let Some((cached_sids, ack)) = cache.acks.get(&key) {
+                        if let Some((cached_sids, ack)) = cache.get(&key) {
                             if *cached_sids == sids {
                                 return Ok(ack.clone());
                             }
@@ -600,16 +653,7 @@ impl EmbeddingWorkerServer {
                     }
                     let sim = prep.worker(0).push_grads_raw(&sids, &grads)?;
                     let ack = encode_push_response(sim);
-                    let mut cache = replay.lock().unwrap();
-                    if !cache.acks.contains_key(&key) {
-                        cache.order.push_back(key);
-                        if cache.order.len() > PUSH_REPLAY_DEPTH {
-                            if let Some(old) = cache.order.pop_front() {
-                                cache.acks.remove(&old);
-                            }
-                        }
-                    }
-                    cache.acks.insert(key, (sids, ack.clone()));
+                    replay.lock().unwrap().insert(key, (sids, ack.clone()));
                     Ok(ack)
                 }),
             );
@@ -641,6 +685,30 @@ impl EmbeddingWorkerServer {
             );
         }
         {
+            // CKPT relay: the trainer coordinates checkpoint epochs, but in
+            // the three-tier topology only this worker holds the PS
+            // connections (and the put replay logs that must truncate at a
+            // commit) — so the coordinator's PREPARE/COMMIT arrives here
+            // and is driven against the backend on the trainer's behalf.
+            let backend = backend.clone();
+            let ckpt_dir = cfg.ckpt_dir.clone();
+            rpc.register(
+                KIND_EW_CKPT,
+                Box::new(move |msg| {
+                    let (step, mode) = decode_ew_ckpt_request(msg)?;
+                    match mode {
+                        EW_CKPT_FULL => {
+                            let dir = ckpt_dir.clone().unwrap_or_default();
+                            backend.checkpoint_epoch(&dir, step)?;
+                        }
+                        EW_CKPT_MARK => backend.mark_epoch_committed(step),
+                        m => anyhow::bail!("unknown EW CKPT mode {m}"),
+                    }
+                    Ok(encode_ew_ckpt_response())
+                }),
+            );
+        }
+        {
             let stop = stop.clone();
             rpc.register(
                 KIND_EW_SHUTDOWN,
@@ -658,21 +726,26 @@ impl EmbeddingWorkerServer {
     /// Build the full server for one trainer config: the PS backend (the
     /// trainer's override, e.g. a [`super::ShardedRemotePs`], or a private
     /// in-process [`EmbeddingPs`]), the resident worker, the per-rank batch
-    /// streams, and the prefetch pipeline. `depth` of `None` picks the
-    /// mode's own pipeline depth
+    /// streams, and the prefetch pipeline. `ew.pipeline_depth` of `None`
+    /// picks the mode's own pipeline depth
     /// ([`Trainer::pipeline_depth`](crate::hybrid::Trainer::pipeline_depth),
     /// floored at 1): FullSync serves on demand — zero staleness is that
     /// mode's contract — while the async modes prefetch up to τ (2τ for
     /// FullAsync) batches ahead. Deterministic mode always forces 1
     /// (bitwise parity needs on-demand lookups with ordered puts).
+    ///
+    /// `ew.start_step > 0` fast-forwards every rank's loader stream to that
+    /// step — the resumed-run deployment, where NN ranks start asking at
+    /// the checkpoint epoch's boundary. `ckpt_dir` is only consulted when
+    /// the worker fronts an in-process PS (remote shards own their dirs).
     pub fn for_trainer(
         trainer: &Trainer,
-        ew_rank: u8,
-        depth: Option<usize>,
+        ew: &EmbWorkerConfig,
         ps_deployment: Option<&str>,
         ps_wire_compress: bool,
-        addr: &str,
+        ckpt_dir: Option<&str>,
     ) -> Result<EmbeddingWorkerServer> {
+        ew.validate()?;
         let backend: Arc<dyn PsBackend> = match &trainer.ps_backend {
             Some(b) => b.clone(),
             None => Arc::new(EmbeddingPs::new(
@@ -690,7 +763,7 @@ impl EmbeddingWorkerServer {
         backend.check_compat(&trainer.emb_cfg, trainer.train.seed)?;
         let net = Arc::new(NetSim::new(trainer.cluster.net));
         let worker = Arc::new(EmbeddingWorker::new(
-            ew_rank,
+            ew.ew_rank,
             backend.clone(),
             &trainer.model,
             net,
@@ -705,22 +778,32 @@ impl EmbeddingWorkerServer {
             AssignMode::Fixed(0),
             true,
         ));
+        if ew.start_step > 0 {
+            // A resumed run: every rank's first NEXT_BATCH will ask for
+            // `start_step`, so the strictly-sequential streams must already
+            // stand there (the draws are loader-RNG only — no PS traffic).
+            for rank in 0..trainer.cluster.n_nn_workers {
+                prep.skip_to(rank, ew.start_step)?;
+            }
+        }
         let depth = if trainer.deterministic {
             1
         } else {
-            depth.unwrap_or_else(|| trainer.pipeline_depth().max(1))
+            ew.pipeline_depth.unwrap_or_else(|| trainer.pipeline_depth().max(1))
         };
         let pipeline = Arc::new(PrefetchPipeline::new(prep, depth));
         let (ps_processes, ps_sig) = ps_deployment_sig(ps_deployment);
         let cfg = EwServerConfig {
             fingerprint: trainer.config_fingerprint(),
-            ew_rank,
+            ew_rank: ew.ew_rank,
             ps_processes,
             ps_sig,
             ps_wire_compress,
             compress: trainer.train.compress,
+            replay_depth: ew.replay_depth,
+            ckpt_dir: ckpt_dir.map(PathBuf::from),
         };
-        Self::bind(pipeline, backend, cfg, addr)
+        Self::bind(pipeline, backend, cfg, &ew.addr)
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -775,55 +858,74 @@ impl EwServerHandle {
 // Client
 // ---------------------------------------------------------------------------
 
-/// TCP client for one `serve-embedding-worker` process: a mutex-guarded
-/// connection pool shared by the NN-rank thread and the gradient appliers,
-/// healing itself exactly like [`super::RemotePs`] — a failed call drops its
-/// pooled connection and re-dials with backoff, re-running the INFO
-/// handshake and insisting the server's identity is unchanged.
+/// Dial/handshake policy for one embedding-worker endpoint: re-run the INFO
+/// handshake and insist the server's identity is unchanged. (Unlike the PS,
+/// a *restarted* embedding worker cannot transparently rejoin — its stream
+/// positions and sample buffers died with it — so full equality, including
+/// process-agnostic fields only, is the right bar.)
+struct EwRedial {
+    addr: String,
+    expect: EwInfo,
+}
+
+impl Redial for EwRedial {
+    fn redial(&self) -> Result<PooledConn> {
+        let transport = TcpTransport::connect(&self.addr)
+            .with_context(|| format!("reconnecting to embedding worker at {}", self.addr))?;
+        let client = RpcClient::new(transport);
+        let resp = client
+            .call(&encode_ew_info_request())
+            .context("embedding-worker INFO re-handshake")?;
+        let info = decode_ew_info_response(&resp)?;
+        ensure!(
+            info == self.expect,
+            "embedding worker at {} came back with a different config: {info:?} != {:?}",
+            self.addr,
+            self.expect
+        );
+        Ok(client)
+    }
+
+    fn describe(&self) -> String {
+        format!("embedding worker at {}", self.addr)
+    }
+}
+
+/// TCP client for one `serve-embedding-worker` process: a
+/// [`ReconnectPool`](crate::recovery::ReconnectPool) shared by the NN-rank
+/// thread and the gradient appliers, healing itself exactly like
+/// [`super::RemotePs`] — a failed call drops its pooled connection and
+/// re-dials with backoff through the shared recovery layer.
 ///
 /// Retry semantics: `PUSH_GRADS` is replay-safe both ways — a failed put
 /// re-buffers server-side so the retry re-applies, and a put whose ack was
 /// lost after applying is answered idempotently from the server's push
-/// replay cache (same sids ⇒ same cached ack, no double apply). A retried
-/// `NEXT_BATCH` for the last served step is answered from the per-rank
-/// replay cache; any other desync fails loudly.
+/// replay ring (same sids ⇒ same cached ack, no double apply). A retried
+/// `NEXT_BATCH` for any of the last `--replay-depth` served steps is
+/// answered from the per-rank replay ring; any other desync fails loudly.
 pub struct RemoteEmbeddingWorker {
-    addr: String,
+    pool: ReconnectPool<EwRedial>,
     info: EwInfo,
-    reconnect_attempts: u32,
-    reconnect_backoff: Duration,
-    /// `None` marks a connection that died and awaits re-dialing.
-    clients: Vec<Mutex<Option<RpcClient<TcpTransport>>>>,
-    next: AtomicUsize,
 }
 
 impl RemoteEmbeddingWorker {
-    /// Connect a pool to one worker address, taking pool size and retry
+    /// Connect a pool to one worker address, taking pool size and recovery
     /// policy from `cfg`.
     pub fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemoteEmbeddingWorker> {
-        let mut clients = Vec::with_capacity(cfg.client_conns);
-        for i in 0..cfg.client_conns {
-            let transport = TcpTransport::connect(addr).with_context(|| {
-                format!("connecting embedding-worker pool conn {i} to {addr}")
-            })?;
-            clients.push(Mutex::new(Some(RpcClient::new(transport))));
-        }
-        let resp = {
-            let slot = clients[0].lock().unwrap();
-            slot.as_ref()
-                .expect("fresh pool connection")
-                .call(&encode_ew_info_request())
-                .context("embedding-worker INFO handshake")?
-        };
+        let probe = TcpTransport::connect(addr)
+            .with_context(|| format!("connecting to embedding worker at {addr}"))?;
+        let probe = RpcClient::new(probe);
+        let resp = probe
+            .call(&encode_ew_info_request())
+            .context("embedding-worker INFO handshake")?;
         let info = decode_ew_info_response(&resp)?;
-        Ok(RemoteEmbeddingWorker {
-            addr: addr.to_string(),
-            info,
-            reconnect_attempts: cfg.reconnect_attempts,
-            reconnect_backoff: Duration::from_millis(cfg.reconnect_backoff_ms),
-            clients,
-            next: AtomicUsize::new(0),
-        })
+        drop(probe);
+        let pool = ReconnectPool::connect(
+            EwRedial { addr: addr.to_string(), expect: info },
+            cfg.client_conns,
+            RetryPolicy::from(&cfg.recovery),
+        )?;
+        Ok(RemoteEmbeddingWorker { pool, info })
     }
 
     /// The server's INFO handshake.
@@ -833,62 +935,12 @@ impl RemoteEmbeddingWorker {
 
     /// The address this client dials (and re-dials).
     pub fn addr(&self) -> &str {
-        &self.addr
+        &self.pool.redialer().addr
     }
 
-    /// Dial a fresh connection and verify the server is (still) the worker
-    /// we originally handshook.
-    fn redial(&self) -> Result<RpcClient<TcpTransport>> {
-        let transport = TcpTransport::connect(&self.addr)
-            .with_context(|| format!("reconnecting to embedding worker at {}", self.addr))?;
-        let client = RpcClient::new(transport);
-        let resp = client
-            .call(&encode_ew_info_request())
-            .context("embedding-worker INFO re-handshake")?;
-        let info = decode_ew_info_response(&resp)?;
-        ensure!(
-            info == self.info,
-            "embedding worker at {} came back with a different config: {info:?} != {:?}",
-            self.addr,
-            self.info
-        );
-        Ok(client)
-    }
-
-    /// One RPC over the pool, transparently re-dialing a dead connection.
+    /// One RPC over the recovery pool.
     fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
-        let slot = &self.clients[i];
-        let mut last_err: Option<anyhow::Error> = None;
-        for attempt in 0..=self.reconnect_attempts {
-            if attempt > 0 {
-                // Backoff with the slot lock released (see RemotePs::call).
-                std::thread::sleep(self.reconnect_backoff);
-            }
-            let mut guard = slot.lock().unwrap();
-            if guard.is_none() {
-                match self.redial() {
-                    Ok(client) => *guard = Some(client),
-                    Err(e) => {
-                        last_err = Some(e);
-                        continue;
-                    }
-                }
-            }
-            match guard.as_ref().expect("connection present").call(msg) {
-                Ok(resp) => return Ok(resp),
-                Err(e) => {
-                    *guard = None;
-                    last_err = Some(e);
-                }
-            }
-        }
-        Err(last_err.expect("at least one attempt ran")).with_context(|| {
-            format!(
-                "embedding worker at {} unreachable after {} reconnect attempt(s)",
-                self.addr, self.reconnect_attempts
-            )
-        })
+        self.pool.call(msg)
     }
 
     /// Pull the prepared batch for `(rank, step)`. Returns the batch (with
@@ -940,6 +992,15 @@ impl RemoteEmbeddingWorker {
     pub fn stats(&self) -> Result<(usize, WorkerStats, PsStats)> {
         let resp = self.call(&encode_ew_stats_request()).context("EW STATS")?;
         decode_ew_stats_response(&resp)
+    }
+
+    /// Relay one checkpoint-epoch operation (`mode` = [`EW_CKPT_FULL`] or
+    /// [`EW_CKPT_MARK`]) to this worker.
+    pub fn ckpt(&self, step: u64, mode: u64) -> Result<()> {
+        let resp = self
+            .call(&encode_ew_ckpt_request(step, mode))
+            .with_context(|| format!("EW CKPT epoch {step} (mode {mode})"))?;
+        decode_ew_ckpt_response(&resp)
     }
 
     /// Ask the server to shut down gracefully.
@@ -1114,6 +1175,22 @@ impl EmbComm for RemoteEmbTier {
         );
         Ok(())
     }
+
+    fn checkpoint_epoch(&self, _dir: &Path, step: u64) -> Result<()> {
+        // Worker 0 drives the full two-phase epoch on the (shared) PS
+        // deployment; every other worker only truncates its own put replay
+        // logs at the now-committed epoch. All workers front the same PS
+        // fleet (proved at connect time), so one PREPARE/COMMIT pass is the
+        // whole tier's epoch.
+        self.workers[0]
+            .ckpt(step, EW_CKPT_FULL)
+            .with_context(|| format!("checkpoint epoch via {}", self.workers[0].addr()))?;
+        for w in &self.workers[1..] {
+            w.ckpt(step, EW_CKPT_MARK)
+                .with_context(|| format!("epoch commit mark via {}", w.addr()))?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1274,15 +1351,9 @@ mod tests {
     #[test]
     fn loopback_serve_and_train_cycle() {
         let trainer = small_trainer(false, false);
-        let server = EmbeddingWorkerServer::for_trainer(
-            &trainer,
-            0,
-            None,
-            None,
-            false,
-            "127.0.0.1:0",
-        )
-        .unwrap();
+        let ew = EmbWorkerConfig { addr: "127.0.0.1:0".into(), ..EmbWorkerConfig::default() };
+        let server =
+            EmbeddingWorkerServer::for_trainer(&trainer, &ew, None, false, None).unwrap();
         let handle = server.spawn().unwrap();
         let svc = ServiceConfig::at(handle.addr().to_string());
         let net = Arc::new(NetSim::new(NetModelConfig::paper_like()));
@@ -1324,29 +1395,41 @@ mod tests {
         assert_eq!(emb.len(), 16 * trainer.model.emb_dim());
         assert!(emb.iter().all(|x| x.is_finite()));
 
-        // Replay cache: retrying the last served step returns the identical
-        // payload instead of desyncing.
+        // Replay ring: retrying the last served step returns the identical
+        // payload instead of desyncing — and with the default depth of 4, a
+        // step TWO behind the head still replays (the PR-4 one-deep cache
+        // desynced here).
         let pb1 = tier.next_batch(0, 1).unwrap();
         let pb1_again = tier.next_batch(0, 1).unwrap();
         assert_eq!(pb1.sids, pb1_again.sids);
         assert_eq!(pb1.emb, pb1_again.emb);
+        let pb2 = tier.next_batch(0, 2).unwrap();
+        let pb1_deep = tier.next_batch(0, 1).unwrap();
+        assert_eq!(pb1.sids, pb1_deep.sids);
+        assert_eq!(pb1.emb, pb1_deep.emb);
+        let pb2_again = tier.next_batch(0, 2).unwrap();
+        assert_eq!(pb2.sids, pb2_again.sids);
 
         tier.shutdown_all().unwrap();
         handle.shutdown().unwrap();
     }
 
     #[test]
+    fn ckpt_codec_roundtrip() {
+        let (step, mode) = decode_ew_ckpt_request(&encode_ew_ckpt_request(24, EW_CKPT_MARK))
+            .unwrap();
+        assert_eq!((step, mode), (24, EW_CKPT_MARK));
+        decode_ew_ckpt_response(&encode_ew_ckpt_response()).unwrap();
+        // Wrong kind is rejected.
+        assert!(decode_ew_ckpt_request(&encode_ew_info_request()).is_err());
+    }
+
+    #[test]
     fn fingerprint_mismatch_rejected_at_connect() {
         let trainer = small_trainer(false, true);
-        let server = EmbeddingWorkerServer::for_trainer(
-            &trainer,
-            0,
-            None,
-            None,
-            false,
-            "127.0.0.1:0",
-        )
-        .unwrap();
+        let ew = EmbWorkerConfig { addr: "127.0.0.1:0".into(), ..EmbWorkerConfig::default() };
+        let server =
+            EmbeddingWorkerServer::for_trainer(&trainer, &ew, None, false, None).unwrap();
         let handle = server.spawn().unwrap();
         let svc = ServiceConfig::at(handle.addr().to_string());
         let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
@@ -1360,15 +1443,13 @@ mod tests {
     #[test]
     fn deterministic_mode_forces_depth_one() {
         let trainer = small_trainer(false, true);
-        let server = EmbeddingWorkerServer::for_trainer(
-            &trainer,
-            0,
-            Some(8),
-            None,
-            false,
-            "127.0.0.1:0",
-        )
-        .unwrap();
+        let ew = EmbWorkerConfig {
+            addr: "127.0.0.1:0".into(),
+            pipeline_depth: Some(8),
+            ..EmbWorkerConfig::default()
+        };
+        let server =
+            EmbeddingWorkerServer::for_trainer(&trainer, &ew, None, false, None).unwrap();
         let handle = server.spawn().unwrap();
         let svc = ServiceConfig::at(handle.addr().to_string());
         let net = Arc::new(NetSim::new(NetModelConfig::disabled()));

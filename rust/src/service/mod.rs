@@ -15,8 +15,10 @@
 //! * [`server`] — [`PsServer`]: accept loop, per-connection dispatch
 //!   threads, graceful sleep-free shutdown; serves a full PS or one
 //!   process's `--node-range` slice, including SNAPSHOT/RESTORE RPCs.
-//! * [`client`] — [`RemotePs`]: a mutex-guarded connection pool shared by
-//!   every trainer thread, with transparent reconnect-with-retry.
+//! * [`client`] — [`RemotePs`]: a [`crate::recovery::ReconnectPool`] shared
+//!   by every trainer thread — transparent reconnect-with-retry plus the
+//!   put-replay that brings a restarted shard back to exact state. All
+//!   retry/backoff/replay policy lives in `recovery/`, not here.
 //! * [`sharded`] — [`ShardedRemotePs`]: one backend over N shard processes,
 //!   routing with the servers' own global hash and scatter-gathering
 //!   batches concurrently.

@@ -50,6 +50,12 @@ pub const KIND_SHUTDOWN: u32 = 0x5005;
 pub const KIND_SNAPSHOT: u32 = 0x5006;
 /// Whole-node LRU snapshot restore (§4.2.4 recovery).
 pub const KIND_RESTORE: u32 = 0x5007;
+/// Checkpoint-epoch phase 1: stage every owned node's snapshot for `step`
+/// (the coordinator commits only once every shard staged successfully).
+pub const KIND_PREPARE_CKPT: u32 = 0x5008;
+/// Checkpoint-epoch phase 2: rename the staged snapshots into place and
+/// write the shard's commit manifest.
+pub const KIND_COMMIT_CKPT: u32 = 0x5009;
 
 /// Flag bit: value payload is fp16 + per-row scales.
 const FLAG_COMPRESS: u8 = 1;
@@ -103,6 +109,32 @@ pub struct PsInfo {
     pub node_start: usize,
     /// One past the last global node this server owns.
     pub node_end: usize,
+    /// Random nonce minted at server start. A reconnecting client that sees
+    /// a *different* nonce knows it reached a new process (killed +
+    /// restarted) rather than a transient wire failure — the trigger for
+    /// the recovery layer's put-log replay.
+    pub boot_nonce: u64,
+    /// The checkpoint-epoch step this server restored at startup (0 = fresh
+    /// start or legacy flat-file restore). The replay log re-sends exactly
+    /// the puts recorded after this epoch.
+    pub restored_step: u64,
+}
+
+impl PsInfo {
+    /// Whether `other` describes the same PS deployment: every numeric and
+    /// geometric field must match, but the per-process boot nonce and the
+    /// restored epoch are *instance* identity, not deployment identity — a
+    /// shard killed and restarted from its checkpoint must still count as
+    /// "the same PS" so the client can rejoin it (§4.2.4).
+    pub fn same_deployment(&self, other: &PsInfo) -> bool {
+        let strip = |i: &PsInfo| {
+            let mut i = *i;
+            i.boot_nonce = 0;
+            i.restored_step = 0;
+            i
+        };
+        strip(self) == strip(other)
+    }
 }
 
 /// [`OptimizerKind`](crate::config::OptimizerKind) as a stable wire code.
@@ -185,6 +217,8 @@ pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
         info.lr_bits as u64,
         info.node_start as u64,
         info.node_end as u64,
+        info.boot_nonce,
+        info.restored_step,
     ]);
     w.finish()
 }
@@ -194,7 +228,7 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_INFO, "expected INFO response, got kind {}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 10, "malformed INFO response ({} fields)", xs.len());
+    ensure!(xs.len() == 12, "malformed INFO response ({} fields)", xs.len());
     let info = PsInfo {
         dim: xs[0] as usize,
         n_nodes: xs[1] as usize,
@@ -206,6 +240,8 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
         lr_bits: xs[7] as u32,
         node_start: xs[8] as usize,
         node_end: xs[9] as usize,
+        boot_nonce: xs[10],
+        restored_step: xs[11],
     };
     ensure!(
         info.node_start < info.node_end && info.node_end <= info.n_nodes,
@@ -469,6 +505,50 @@ pub fn decode_restore_response(msg: &[u8]) -> Result<usize> {
     Ok(xs[0] as usize)
 }
 
+// --- PREPARE_CKPT / COMMIT_CKPT ---
+//
+// The two-phase checkpoint-epoch protocol (§4.2.4, coordinated): the
+// trainer PREPAREs every shard — each stages its owned nodes' snapshots for
+// the given step — and only once every shard acked does it COMMIT, which
+// renames the staged files into place and writes the shard's commit
+// manifest. A crash between the phases leaves only ignorable staged files;
+// a restore can therefore never mix nodes from different steps.
+
+/// Encode a PREPARE_CKPT or COMMIT_CKPT request for epoch `step`.
+/// `kind` must be [`KIND_PREPARE_CKPT`] or [`KIND_COMMIT_CKPT`].
+pub fn encode_ckpt_request(kind: u32, step: u64) -> Vec<u8> {
+    debug_assert!(kind == KIND_PREPARE_CKPT || kind == KIND_COMMIT_CKPT);
+    let mut w = WireWriter::new(kind);
+    w.put_u64(&[step]);
+    w.finish()
+}
+
+/// Decode a checkpoint-phase request of the expected `kind` into its step.
+pub fn decode_ckpt_request(msg: &[u8], kind: u32) -> Result<u64> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == kind, "expected ckpt kind {kind:#x}, got {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed checkpoint request");
+    Ok(xs[0])
+}
+
+/// Encode a checkpoint-phase ack (nodes staged/committed by this shard).
+pub fn encode_ckpt_response(kind: u32, nodes: usize) -> Vec<u8> {
+    debug_assert!(kind == KIND_PREPARE_CKPT || kind == KIND_COMMIT_CKPT);
+    let mut w = WireWriter::new(kind);
+    w.put_u64(&[nodes as u64]);
+    w.finish()
+}
+
+/// Decode a checkpoint-phase ack of the expected `kind`.
+pub fn decode_ckpt_response(msg: &[u8], kind: u32) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == kind, "expected ckpt ack kind {kind:#x}, got {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed checkpoint ack");
+    Ok(xs[0] as usize)
+}
+
 // --- SHUTDOWN ---
 
 /// Encode a SHUTDOWN request (empty body).
@@ -540,7 +620,39 @@ mod tests {
             lr_bits: 0.1f32.to_bits(),
             node_start: 1,
             node_end: 3,
+            boot_nonce: 0x5eed_b007,
+            restored_step: 12,
         }
+    }
+
+    #[test]
+    fn same_deployment_ignores_instance_identity_only() {
+        let a = sample_info();
+        // A restarted process: new nonce, restored from some epoch.
+        let mut b = a;
+        b.boot_nonce ^= 0xffff;
+        b.restored_step = 0;
+        assert!(a.same_deployment(&b));
+        // Any numeric drift is a different deployment.
+        let mut c = a;
+        c.seed += 1;
+        assert!(!a.same_deployment(&c));
+        let mut d = a;
+        d.node_start = 0;
+        assert!(!a.same_deployment(&d), "node range IS deployment identity here");
+    }
+
+    #[test]
+    fn ckpt_codec_roundtrip_and_kind_checks() {
+        for kind in [KIND_PREPARE_CKPT, KIND_COMMIT_CKPT] {
+            let req = encode_ckpt_request(kind, 40);
+            assert_eq!(decode_ckpt_request(&req, kind).unwrap(), 40);
+            let ack = encode_ckpt_response(kind, 3);
+            assert_eq!(decode_ckpt_response(&ack, kind).unwrap(), 3);
+        }
+        // A PREPARE frame must not pass for a COMMIT (and vice versa).
+        let req = encode_ckpt_request(KIND_PREPARE_CKPT, 1);
+        assert!(decode_ckpt_request(&req, KIND_COMMIT_CKPT).is_err());
     }
 
     #[test]

@@ -27,11 +27,24 @@ use anyhow::{Context, Result};
 use crate::comm::rpc::RpcServer;
 use crate::comm::transport::TcpTransport;
 use crate::config::EmbeddingConfig;
-use crate::embedding::EmbeddingPs;
+use crate::embedding::{CheckpointManager, EmbeddingPs};
 
 use super::backend::PsBackend;
 use super::protocol;
 use super::protocol::PsInfo;
+
+/// A per-process random nonce: lets reconnecting clients distinguish "same
+/// server, transient wire failure" from "new process after a kill" — the
+/// trigger for the recovery layer's put-log replay. Mixes the clock, the
+/// pid, and an address so even rapid restart loops get distinct nonces.
+fn boot_nonce(salt: &TcpListener) -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let addr_entropy = salt as *const TcpListener as usize as u64;
+    (nanos ^ (u64::from(std::process::id()) << 32) ^ addr_entropy.rotate_left(17)) | 1
+}
 
 /// A bound-but-not-yet-serving PS service.
 pub struct PsServer {
@@ -45,12 +58,29 @@ impl PsServer {
     /// protocol handlers over `ps`. `cfg`/`seed` must be the config the PS
     /// was built from — they are served in the INFO handshake so clients
     /// can hard-fail on a trainer/server config mismatch instead of
-    /// silently diverging.
+    /// silently diverging. No checkpoint-epoch support; see
+    /// [`PsServer::bind_with_epochs`].
     pub fn bind(
         ps: Arc<EmbeddingPs>,
         addr: &str,
         cfg: &EmbeddingConfig,
         seed: u64,
+    ) -> Result<PsServer> {
+        Self::bind_with_epochs(ps, addr, cfg, seed, None, 0)
+    }
+
+    /// [`PsServer::bind`] plus coordinated-checkpoint support: with a
+    /// `ckpt` manager the PREPARE_CKPT/COMMIT_CKPT RPCs stage and commit
+    /// epoch snapshots of this shard's owned nodes; `restored_step` is the
+    /// epoch this process restored at startup (0 = fresh) and is advertised
+    /// in INFO so reconnecting clients replay exactly the delta.
+    pub fn bind_with_epochs(
+        ps: Arc<EmbeddingPs>,
+        addr: &str,
+        cfg: &EmbeddingConfig,
+        seed: u64,
+        ckpt: Option<Arc<CheckpointManager>>,
+        restored_step: u64,
     ) -> Result<PsServer> {
         anyhow::ensure!(
             cfg.n_nodes == ps.n_nodes() && cfg.shards_per_node == ps.shards_per_node(),
@@ -75,6 +105,8 @@ impl PsServer {
             lr_bits: cfg.lr.to_bits(),
             node_start: range.start,
             node_end: range.end,
+            boot_nonce: boot_nonce(&listener),
+            restored_step,
         };
         rpc.register(
             protocol::KIND_INFO,
@@ -148,6 +180,42 @@ impl PsServer {
                     // up to the first failing shard.
                     ps.restore_node(node, &shards)?;
                     Ok(protocol::encode_restore_response(shards.len()))
+                }),
+            );
+        }
+        {
+            // PREPARE_CKPT: stage this shard's owned nodes for the epoch.
+            let ps = ps.clone();
+            let ckpt_prep = ckpt.clone();
+            rpc.register(
+                protocol::KIND_PREPARE_CKPT,
+                Box::new(move |msg| {
+                    let step = protocol::decode_ckpt_request(msg, protocol::KIND_PREPARE_CKPT)?;
+                    let mgr = ckpt_prep.as_ref().with_context(|| {
+                        "PREPARE_CKPT on a PS started without --checkpoint-dir".to_string()
+                    })?;
+                    mgr.prepare_epoch(&ps, step)?;
+                    Ok(protocol::encode_ckpt_response(
+                        protocol::KIND_PREPARE_CKPT,
+                        ps.node_range().len(),
+                    ))
+                }),
+            );
+        }
+        {
+            // COMMIT_CKPT: rename the staged epoch into place + write the
+            // shard's commit manifest.
+            let ps = ps.clone();
+            let ckpt_commit = ckpt.clone();
+            rpc.register(
+                protocol::KIND_COMMIT_CKPT,
+                Box::new(move |msg| {
+                    let step = protocol::decode_ckpt_request(msg, protocol::KIND_COMMIT_CKPT)?;
+                    let mgr = ckpt_commit.as_ref().with_context(|| {
+                        "COMMIT_CKPT on a PS started without --checkpoint-dir".to_string()
+                    })?;
+                    let nodes = mgr.commit_epoch(&ps, step)?;
+                    Ok(protocol::encode_ckpt_response(protocol::KIND_COMMIT_CKPT, nodes))
                 }),
             );
         }

@@ -23,6 +23,8 @@
 //! [`ShardedRemotePs::snapshot_node`]/[`ShardedRemotePs::restore_node`]
 //! drive the §4.2.4 recovery drill over the wire.
 
+use std::path::Path;
+
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{EmbeddingConfig, PartitionPolicy, ServiceConfig};
@@ -55,7 +57,9 @@ impl ShardedRemotePs {
             .collect::<Result<_>>()?;
 
         // Every shard must describe the same global PS (same numerics
-        // fingerprint and geometry); only the owned node range may differ.
+        // fingerprint and geometry); only the owned node range — and the
+        // per-process instance identity (boot nonce, restored epoch) — may
+        // differ.
         let first = *shards[0].info();
         for s in &shards[1..] {
             let info = s.info();
@@ -63,6 +67,8 @@ impl ShardedRemotePs {
                 let mut i = *i;
                 i.node_start = 0;
                 i.node_end = i.n_nodes;
+                i.boot_nonce = 0;
+                i.restored_step = 0;
                 i
             };
             ensure!(
@@ -183,6 +189,14 @@ impl ShardedRemotePs {
         self.shard_for_node(node).restore_node(node, shards)
     }
 
+    /// The checkpoint-epoch step each shard process restored at startup
+    /// (`0` = fresh start), in shard order. A resuming trainer checks these
+    /// against the resume epoch so a shard that restored the wrong epoch —
+    /// mixed-epoch state — is rejected before any training step runs.
+    pub fn restored_steps(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.info().restored_step).collect()
+    }
+
     /// Gracefully shut down every shard process (best-effort: all are
     /// attempted, the first error is reported).
     pub fn shutdown_all(&self) -> Result<()> {
@@ -293,5 +307,35 @@ impl PsBackend for ShardedRemotePs {
         // Global imbalance from the summed per-node traffic — the same
         // shared formula the in-process EmbeddingPs uses.
         Ok(PsStats { total_rows, total_evictions, imbalance: imbalance_of(&traffic) })
+    }
+
+    /// The coordinated two-phase epoch (recovery::coordinator): PREPARE on
+    /// every shard concurrently, COMMIT only once *all* staged, then
+    /// truncate every shard's put replay log. An epoch that fails PREPARE
+    /// anywhere commits nowhere — a restore can never mix steps.
+    fn checkpoint_epoch(&self, _dir: &Path, step: u64) -> Result<()> {
+        let all: Vec<usize> = (0..self.shards.len()).collect();
+        for r in self.scatter(&all, |si| {
+            self.shards[si]
+                .prepare_ckpt(step)
+                .with_context(|| format!("PREPARE_CKPT on shard {}", self.shards[si].addr()))
+        }) {
+            r?;
+        }
+        for r in self.scatter(&all, |si| {
+            self.shards[si]
+                .commit_ckpt(step)
+                .with_context(|| format!("COMMIT_CKPT on shard {}", self.shards[si].addr()))
+        }) {
+            r?;
+        }
+        self.mark_epoch_committed(step);
+        Ok(())
+    }
+
+    fn mark_epoch_committed(&self, step: u64) {
+        for s in &self.shards {
+            s.mark_committed(step);
+        }
     }
 }

@@ -70,6 +70,73 @@ impl Bench {
     }
 }
 
+/// Escape a string for inclusion in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize bench results as machine-readable JSON (hand-rolled — serde is
+/// unavailable offline). Schema:
+/// `{"bench": NAME, "results": [{"name", "iters", "mean_ns", "p50_ns",
+/// "p95_ns", "throughput"}...]}` — the shape CI uploads to seed the perf
+/// trajectory.
+pub fn write_json(
+    path: &std::path::Path,
+    bench: &str,
+    rows: &[BenchResult],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let throughput = match r.throughput {
+            Some(t) if t.is_finite() => format!("{t:.3}"),
+            _ => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {}, \"p95_ns\": {}, \"throughput\": {}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            r.mean_ns,
+            r.p50_ns,
+            r.p95_ns,
+            throughput,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
+/// Emit `BENCH_<name>.json` into the directory named by the
+/// `BENCH_JSON_DIR` env var (no-op when unset) — how CI collects
+/// machine-readable bench output without changing local runs.
+pub fn emit_json(name: &str, rows: &[BenchResult]) {
+    let Ok(dir) = std::env::var("BENCH_JSON_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    match write_json(&path, name, rows) {
+        Ok(()) => println!("bench json: wrote {}", path.display()),
+        Err(e) => eprintln!("bench json: could not write {}: {e}", path.display()),
+    }
+}
+
+/// [`print_table`] + [`emit_json`] in one call — the standard tail of a
+/// bench target (`file_stem` names the JSON artifact).
+pub fn print_and_emit(title: &str, file_stem: &str, rows: &[BenchResult]) {
+    print_table(title, rows);
+    emit_json(file_stem, rows);
+}
+
 /// Print an aligned table of results (used by every bench target).
 pub fn print_table(title: &str, rows: &[BenchResult]) {
     println!("\n=== {title} ===");
@@ -113,6 +180,40 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.throughput.unwrap() > 0.0);
         assert!(counter > 0);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_shape() {
+        let rows = vec![
+            BenchResult {
+                name: "case \"a\"".into(),
+                iters: 3,
+                mean_ns: 1234.5,
+                p50_ns: 1200,
+                p95_ns: 1300,
+                throughput: Some(1e6),
+            },
+            BenchResult {
+                name: "case_b".into(),
+                iters: 3,
+                mean_ns: 10.0,
+                p50_ns: 10,
+                p95_ns: 10,
+                throughput: None,
+            },
+        ];
+        let path = std::env::temp_dir()
+            .join(format!("persia_bench_json_{}", std::process::id()))
+            .join("BENCH_test.json");
+        write_json(&path, "test", &rows).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\": \"test\""), "{body}");
+        assert!(body.contains("case \\\"a\\\""), "escaping broken: {body}");
+        assert!(body.contains("\"throughput\": null"), "{body}");
+        // Balanced braces/brackets — the cheap structural sanity check.
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert_eq!(body.matches('[').count(), body.matches(']').count());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

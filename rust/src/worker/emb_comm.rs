@@ -16,6 +16,7 @@
 //! affects numerics (the workers share one PS and run identical dedup and
 //! pooling), which is what the remote-vs-inline parity suite proves.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -68,6 +69,26 @@ pub trait EmbComm: Send + Sync {
     /// In-process tiers are compatible by construction; the remote tier
     /// compares against each server's INFO handshake.
     fn check_compat(&self, _fingerprint: u64) -> Result<()> {
+        Ok(())
+    }
+
+    /// Cut checkpoint epoch `step` on the embedding PS behind this tier
+    /// (the two-phase protocol of [`crate::recovery::coordinator`]). The
+    /// trainer's rank 0 drives this at step boundaries; `dir` is the
+    /// checkpoint root for tiers whose PS writes locally. Tiers without
+    /// checkpoint support error at the first epoch.
+    fn checkpoint_epoch(&self, _dir: &Path, _step: u64) -> Result<()> {
+        anyhow::bail!("this embedding tier does not support coordinated checkpoint epochs")
+    }
+
+    /// Fast-forward rank `rank`'s batch stream to `step` without touching
+    /// the PS — the resume path: a run restarting from a checkpoint epoch
+    /// asks for its first batch at the epoch's boundary, and the strictly
+    /// sequential streams must already stand there. The default is a no-op
+    /// because the *remote* tier's streams live in the worker processes,
+    /// which fast-forward themselves via `--start-step` (a mismatch is
+    /// caught loudly by the strict NEXT_BATCH step check).
+    fn fast_forward(&self, _rank: usize, _step: usize) -> Result<()> {
         Ok(())
     }
 }
@@ -158,6 +179,14 @@ impl EmbComm for LocalEmbTier {
 
     fn ps_stats(&self) -> Result<PsStats> {
         self.backend.stats()
+    }
+
+    fn checkpoint_epoch(&self, dir: &Path, step: u64) -> Result<()> {
+        self.backend.checkpoint_epoch(dir, step)
+    }
+
+    fn fast_forward(&self, rank: usize, step: usize) -> Result<()> {
+        self.prep.skip_to(rank, step)
     }
 }
 

@@ -151,6 +151,30 @@ impl BatchPrep {
         }
     }
 
+    /// Fast-forward `rank`'s stream to `step` by drawing and discarding
+    /// batches — pure loader-RNG advancement, no buffering, no PS traffic.
+    /// This is the resume path (`--resume-from` / `--start-step`): the
+    /// deterministic streams make "redraw and discard" exactly equivalent
+    /// to having trained through those steps, as far as the loader is
+    /// concerned. Errors if the stream already advanced past `step`.
+    pub fn skip_to(&self, rank: usize, step: usize) -> Result<()> {
+        let slot = self
+            .ranks
+            .get(rank)
+            .with_context(|| format!("rank {rank} out of range ({} ranks)", self.ranks.len()))?;
+        let mut s = slot.lock().unwrap();
+        anyhow::ensure!(
+            s.next_step <= step,
+            "cannot fast-forward rank {rank} to step {step}: stream already at {}",
+            s.next_step
+        );
+        while s.next_step < step {
+            let _ = self.dataset.batch(&mut s.rng, self.batch_size);
+            s.next_step += 1;
+        }
+        Ok(())
+    }
+
     /// Stage 1: draw the next mini-batch of `rank`'s arrival stream.
     /// Returns the step index the batch belongs to.
     pub fn draw(&self, rank: usize) -> Result<(usize, Batch)> {
@@ -415,6 +439,24 @@ mod tests {
             assert_eq!(a.nid, b.nid);
             assert_eq!(a.labels, b.labels);
         }
+    }
+
+    #[test]
+    fn skip_to_is_equivalent_to_drawing_and_discarding() {
+        let p = prep(1, 1, AssignMode::Fixed(0), true);
+        let q = prep(1, 1, AssignMode::Fixed(0), true);
+        for _ in 0..3 {
+            p.prepare(0).unwrap();
+        }
+        q.skip_to(0, 3).unwrap();
+        let a = p.prepare(0).unwrap();
+        let b = q.prepare(0).unwrap();
+        assert_eq!((a.step, b.step), (3, 3));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.nid, b.nid);
+        // Streams only move forward.
+        assert!(q.skip_to(0, 2).is_err());
+        assert!(q.skip_to(9, 5).is_err(), "unknown rank must error");
     }
 
     #[test]

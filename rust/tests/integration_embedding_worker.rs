@@ -21,7 +21,8 @@ use std::time::{Duration, Instant};
 
 use persia::comm::NetSim;
 use persia::config::{
-    BenchPreset, ClusterConfig, NetModelConfig, ServiceConfig, TrainConfig, TrainMode,
+    BenchPreset, ClusterConfig, EmbWorkerConfig, NetModelConfig, ServiceConfig, TrainConfig,
+    TrainMode,
 };
 use persia::data::SyntheticDataset;
 use persia::embedding::EmbeddingPs;
@@ -108,13 +109,13 @@ fn remote_tier_matches_inline_in_all_modes_against_two_ps_shards() {
         let sharded =
             ShardedRemotePs::connect(&ServiceConfig::at(shard_addrs.clone())).unwrap();
         ew_trainer.ps_backend = Some(Arc::new(sharded));
+        let ew = EmbWorkerConfig { addr: "127.0.0.1:0".into(), ..EmbWorkerConfig::default() };
         let ew_srv = EmbeddingWorkerServer::for_trainer(
             &ew_trainer,
-            0,
-            None,
+            &ew,
             Some(&shard_addrs),
             false,
-            "127.0.0.1:0",
+            None,
         )
         .unwrap()
         .spawn()

@@ -1,0 +1,622 @@
+//! The ISSUE-5 acceptance drills: coordinated checkpoint epochs, resumable
+//! training, and mid-run SIGKILL survival — in-process first (fast, exact),
+//! then against real `persia` child processes.
+//!
+//! * checkpoint epochs are pure observation: a run with `--checkpoint-every`
+//!   is bit-identical to one without;
+//! * `--resume-from` restarts a run from a committed epoch and finishes
+//!   bit-identically to the uninterrupted run (dense + optimizer + loader
+//!   cursors + PS state all restored);
+//! * a two-tier deployment (train × serve-ps ×2) SIGKILLed wholesale
+//!   resumes from its last committed epoch to ≤1e-6 parity;
+//! * the tentpole drill: in a 2 PS × 1 EW × 2 NN-rank three-tier run,
+//!   SIGKILL of a single PS shard mid-run is *survived* — the recovery
+//!   layer re-handshakes the restarted shard (restored from its committed
+//!   epoch), replays the gradient-put delta, and training completes within
+//!   1e-6 of the unkilled run.
+
+use std::path::PathBuf;
+
+use persia::config::{
+    BenchPreset, ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind,
+    PartitionPolicy, Pooling, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::{ResumeState, Trainer};
+use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d =
+        std::env::temp_dir().join(format!("persia_rec_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic FullSync single-worker trainer over the in-process PS —
+/// the exact-resume configuration (τ = 0, so the resume seam reorders no
+/// PS reads relative to writes).
+fn small_trainer(steps: usize) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 2,
+        emb_dim_per_group: 8,
+        nid_dim: 4,
+        hidden: vec![16, 8],
+        ids_per_group: 2,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 500,
+        shard_capacity: 4096,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster = ClusterConfig {
+        n_nn_workers: 1,
+        n_emb_workers: 2,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: 16,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: 21,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, 500, 1.05, 21);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.eval_rows = 512;
+    t.deterministic = true;
+    t
+}
+
+#[test]
+fn epoch_checkpointing_is_pure_observation() {
+    let base = small_trainer(40).run_rust().unwrap();
+    let dir = tmp_dir("observe");
+    let mut t = small_trainer(40);
+    t.checkpoint = Some(EpochConfig { dir: dir.clone(), every: 10 });
+    let ck = t.run_rust().unwrap();
+    // Cutting epochs must not change a single bit of the run.
+    assert_eq!(base.tracker.losses, ck.tracker.losses);
+    assert_eq!(base.tracker.aucs, ck.tracker.aucs);
+    assert_eq!(base.final_params, ck.final_params);
+    // ...and the epochs it cut are committed and well-formed.
+    assert_eq!(latest_epoch(&dir), Some(40));
+    let m = load_manifest(&dir, 20).unwrap();
+    assert_eq!(m.step, 20);
+    assert_eq!(m.world, 1);
+    assert_eq!(m.fingerprint, small_trainer(40).config_fingerprint());
+    assert!(!m.params.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_from_epoch_matches_uninterrupted_run_exactly() {
+    let dir = tmp_dir("resume");
+    let full = {
+        let mut t = small_trainer(40);
+        t.checkpoint = Some(EpochConfig { dir: dir.clone(), every: 10 });
+        t.run_rust().unwrap()
+    };
+    // Resume a FRESH trainer from the middle epoch: dense + optimizer from
+    // the manifest, PS from the epoch files, loader by fast-forward.
+    let manifest = load_manifest(&dir, 20).unwrap();
+    let mut resumed = small_trainer(40);
+    resumed.start_step = 20;
+    resumed.resume = Some(ResumeState::from_manifest(&manifest, Some(dir.clone())));
+    let out = resumed.run_rust().unwrap();
+
+    assert_eq!(out.final_params, full.final_params, "resume diverged from the full run");
+    let suffix: Vec<(u64, f32)> =
+        full.tracker.losses.iter().filter(|(s, _)| *s >= 20).cloned().collect();
+    assert_eq!(out.tracker.losses, suffix, "resumed loss curve != full run's suffix");
+    assert_eq!(out.tracker.aucs, full.tracker.aucs);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_resume_state_is_rejected_loudly() {
+    let dir = tmp_dir("badresume");
+    {
+        let mut t = small_trainer(20);
+        t.checkpoint = Some(EpochConfig { dir: dir.clone(), every: 10 });
+        t.run_rust().unwrap();
+    }
+    // Wrong parameter count (a manifest from a different model).
+    let mut m = load_manifest(&dir, 10).unwrap();
+    m.params.pop();
+    let mut t = small_trainer(20);
+    t.start_step = 10;
+    t.resume = Some(ResumeState::from_manifest(&m, Some(dir.clone())));
+    let err = t.run_rust().unwrap_err();
+    assert!(format!("{err:#}").contains("dense params"), "{err:#}");
+    // A start step at/after the configured total is rejected up front.
+    let mut t2 = small_trainer(20);
+    t2.start_step = 20;
+    assert!(t2.run_rust().is_err());
+    // A zero checkpoint cadence is rejected up front.
+    let mut t3 = small_trainer(20);
+    t3.checkpoint = Some(EpochConfig { dir: dir.clone(), every: 0 });
+    assert!(t3.run_rust().is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Real child processes: SIGKILL drills.
+// ---------------------------------------------------------------------------
+
+mod multiprocess {
+    use super::*;
+    use std::io::BufRead as _;
+    use std::process::{Child, Command, ExitStatus, Stdio};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    const PRESET: &str = "taobao";
+    const DENSE: &str = "tiny";
+    const CAPACITY: &str = "65536"; // ample: no LRU evictions, exact replay
+    const SEED: &str = "42";
+    const BATCH: &str = "16";
+
+    /// A spawned `persia` child with stdout+stderr streamed into a line
+    /// buffer (so pipes never fill) and kill-on-drop reaping.
+    struct Proc {
+        child: Child,
+        lines: Arc<Mutex<Vec<String>>>,
+        readers: Vec<JoinHandle<()>>,
+    }
+
+    impl Proc {
+        fn spawn(args: &[String]) -> Proc {
+            let exe = env!("CARGO_BIN_EXE_persia");
+            let mut child = Command::new(exe)
+                .args(args)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn persia child");
+            let lines = Arc::new(Mutex::new(Vec::new()));
+            let mut readers = Vec::new();
+            let stdout = child.stdout.take().expect("stdout piped");
+            let stderr = child.stderr.take().expect("stderr piped");
+            for reader in
+                [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)]
+            {
+                let lines = lines.clone();
+                readers.push(std::thread::spawn(move || {
+                    let buf = std::io::BufReader::new(reader);
+                    for line in buf.lines() {
+                        match line {
+                            Ok(l) => lines.lock().unwrap().push(l),
+                            Err(_) => break,
+                        }
+                    }
+                }));
+            }
+            Proc { child, lines, readers }
+        }
+
+        fn wait_for_line(&mut self, pat: &str, timeout: Duration) -> Option<String> {
+            let deadline = Instant::now() + timeout;
+            loop {
+                if let Some(l) =
+                    self.lines.lock().unwrap().iter().find(|l| l.contains(pat)).cloned()
+                {
+                    return Some(l);
+                }
+                if Instant::now() >= deadline {
+                    return None;
+                }
+                if let Ok(Some(_)) = self.child.try_wait() {
+                    std::thread::sleep(Duration::from_millis(100));
+                    return self
+                        .lines
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .find(|l| l.contains(pat))
+                        .cloned();
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+
+        fn wait_timeout(&mut self, timeout: Duration) -> Option<ExitStatus> {
+            let deadline = Instant::now() + timeout;
+            loop {
+                match self.child.try_wait().expect("try_wait") {
+                    Some(status) => return Some(status),
+                    None if Instant::now() >= deadline => return None,
+                    None => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+        }
+
+        fn output_snapshot(&self) -> String {
+            self.lines.lock().unwrap().join("\n")
+        }
+
+        fn kill(&mut self) {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+
+    impl Drop for Proc {
+        fn drop(&mut self) {
+            self.kill();
+            for r in self.readers.drain(..) {
+                let _ = r.join();
+            }
+        }
+    }
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// The numeric flags every process of a deployment shares (they ride in
+    /// the config fingerprint, so all processes must agree).
+    fn shared_flags(steps: usize, nn_workers: usize) -> Vec<String> {
+        strs(&[
+            "--preset", PRESET, "--dense", DENSE, "--engine", "rust", "--mode", "sync",
+            "--deterministic", "true", "--shard-capacity", CAPACITY, "--seed", SEED,
+            "--batch", BATCH, "--lr", "0.05", "--tau", "4", "--netsim", "false",
+            "--compress", "false", "--emb-workers", "1",
+        ])
+        .into_iter()
+        .chain([
+            "--steps".to_string(),
+            steps.to_string(),
+            "--eval-every".to_string(),
+            steps.to_string(),
+            "--nn-workers".to_string(),
+            nn_workers.to_string(),
+        ])
+        .collect()
+    }
+
+    /// Spawn `persia serve-ps` on `addr` and wait for its listening line,
+    /// retrying the spawn (rebinding a just-released port can race the old
+    /// socket's teardown — the restart half of the kill drills).
+    fn spawn_ps(
+        addr: &str,
+        node_range: &str,
+        steps: usize,
+        nn_workers: usize,
+        ckpt_dir: &std::path::Path,
+        restore_epoch: Option<u64>,
+    ) -> (Proc, String) {
+        for attempt in 0..40u64 {
+            let mut args = strs(&["serve-ps", "--addr"]);
+            args.push(addr.to_string());
+            args.extend(strs(&["--node-range"]));
+            args.push(node_range.to_string());
+            args.extend(shared_flags(steps, nn_workers));
+            args.push("--checkpoint-dir".to_string());
+            args.push(ckpt_dir.display().to_string());
+            if let Some(step) = restore_epoch {
+                args.push("--restore-epoch".to_string());
+                args.push(step.to_string());
+            }
+            let mut p = Proc::spawn(&args);
+            if let Some(line) = p.wait_for_line("listening on ", Duration::from_secs(30)) {
+                let got = line
+                    .split("listening on ")
+                    .nth(1)
+                    .and_then(|r| r.split_whitespace().next())
+                    .expect("address in listening line")
+                    .to_string();
+                return (p, got);
+            }
+            drop(p);
+            std::thread::sleep(Duration::from_millis(100 + 50 * attempt));
+        }
+        panic!("persia serve-ps would not start on {addr} ({node_range})");
+    }
+
+    fn parse_losses(output: &str) -> Vec<(u64, f32)> {
+        let line = output
+            .lines()
+            .find(|l| l.starts_with("LOSSES "))
+            .unwrap_or_else(|| panic!("no LOSSES line in:\n{output}"));
+        line["LOSSES ".len()..]
+            .split(',')
+            .filter(|f| !f.is_empty())
+            .map(|f| {
+                let (s, l) = f.split_once(':').expect("step:loss");
+                (s.parse().unwrap(), l.parse().unwrap())
+            })
+            .collect()
+    }
+
+    fn parse_parity(output: &str) -> (f32, f64) {
+        let line = output
+            .lines()
+            .find(|l| l.starts_with("PARITY "))
+            .unwrap_or_else(|| panic!("no PARITY line in:\n{output}"));
+        let mut loss = f32::NAN;
+        let mut auc = f64::NAN;
+        for field in line["PARITY ".len()..].split_whitespace() {
+            if let Some(v) = field.strip_prefix("final_loss=") {
+                loss = v.parse().unwrap();
+            }
+            if let Some(v) = field.strip_prefix("final_auc=") {
+                auc = v.parse().unwrap_or(f64::NAN);
+            }
+        }
+        (loss, auc)
+    }
+
+    /// Compare two loss curves on their overlapping steps.
+    fn assert_losses_match(got: &[(u64, f32)], want: &[(u64, f32)], what: &str) {
+        assert!(!got.is_empty(), "{what}: empty loss curve");
+        for (step, loss) in got {
+            let (_, ref_loss) = want
+                .iter()
+                .find(|(s, _)| s == step)
+                .unwrap_or_else(|| panic!("{what}: reference has no step {step}"));
+            assert!(
+                (loss - ref_loss).abs() <= 1e-6,
+                "{what}: step {step} loss {loss} vs reference {ref_loss}"
+            );
+        }
+    }
+
+    /// Kill→restart→resume, two-tier: `persia train` against 2 checkpointing
+    /// `serve-ps` shards is SIGKILLed wholesale after its first committed
+    /// epoch; the shards restart pinned to `LATEST`, `--resume-from`
+    /// finishes the run, and the result matches an unkilled deployment
+    /// within 1e-6.
+    #[test]
+    fn kill_everything_then_resume_from_last_committed_epoch() {
+        let steps = 40;
+        let dir = tmp_dir("drill_resume");
+
+        let train_args = |remote: &str, extra: &[String]| -> Vec<String> {
+            let mut args = strs(&["train", "--parity-lines", "true", "--remote-ps"]);
+            args.push(remote.to_string());
+            args.extend(shared_flags(steps, 1));
+            args.extend(extra.to_vec());
+            args
+        };
+
+        // --- the run that dies ---
+        let (ps_a, addr_a) = spawn_ps("127.0.0.1:0", "0..2", steps, 1, &dir, None);
+        let (ps_b, addr_b) = spawn_ps("127.0.0.1:0", "2..4", steps, 1, &dir, None);
+        let remote = format!("{addr_a},{addr_b}");
+        let mut doomed = Proc::spawn(&train_args(
+            &remote,
+            &[
+                "--checkpoint-dir".to_string(),
+                dir.display().to_string(),
+                "--checkpoint-every".to_string(),
+                "8".to_string(),
+            ],
+        ));
+        doomed
+            .wait_for_line("CKPT epoch ", Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("no epoch committed:\n{}", doomed.output_snapshot()));
+        // SIGKILL the whole deployment: trainer first (no more commits can
+        // start), then both shards.
+        doomed.kill();
+        let (mut ps_a, mut ps_b) = (ps_a, ps_b);
+        ps_a.kill();
+        ps_b.kill();
+
+        // --- resume from the last globally committed epoch ---
+        let epoch: u64 = std::fs::read_to_string(dir.join("LATEST"))
+            .expect("LATEST pointer written")
+            .trim()
+            .parse()
+            .expect("LATEST holds a step");
+        assert!(epoch >= 8 && epoch < steps as u64, "implausible epoch {epoch}");
+        let (ps_a2, addr_a2) = spawn_ps("127.0.0.1:0", "0..2", steps, 1, &dir, Some(epoch));
+        let (ps_b2, addr_b2) = spawn_ps("127.0.0.1:0", "2..4", steps, 1, &dir, Some(epoch));
+        assert!(
+            ps_a2.output_snapshot().contains("from committed epoch step-"),
+            "restarted shard did not restore an epoch:\n{}",
+            ps_a2.output_snapshot()
+        );
+        let mut resumed = Proc::spawn(&train_args(
+            &format!("{addr_a2},{addr_b2}"),
+            &["--resume-from".to_string(), dir.display().to_string()],
+        ));
+        let status = resumed
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("resumed run hung:\n{}", resumed.output_snapshot()));
+        assert!(status.success(), "resumed run failed:\n{}", resumed.output_snapshot());
+        let resumed_out = resumed.output_snapshot();
+        assert!(
+            resumed_out.contains(&format!("resuming from committed checkpoint epoch {epoch}")),
+            "{resumed_out}"
+        );
+        drop(ps_a2);
+        drop(ps_b2);
+
+        // --- the unkilled reference deployment (fresh dir, no checkpoints:
+        // epochs are pure observation) ---
+        let dir_ref = tmp_dir("drill_resume_ref");
+        let (ps_a3, addr_a3) = spawn_ps("127.0.0.1:0", "0..2", steps, 1, &dir_ref, None);
+        let (ps_b3, addr_b3) = spawn_ps("127.0.0.1:0", "2..4", steps, 1, &dir_ref, None);
+        let mut reference = Proc::spawn(&train_args(&format!("{addr_a3},{addr_b3}"), &[]));
+        let status = reference
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("reference run hung:\n{}", reference.output_snapshot()));
+        assert!(status.success(), "reference failed:\n{}", reference.output_snapshot());
+        let reference_out = reference.output_snapshot();
+        drop(ps_a3);
+        drop(ps_b3);
+
+        // The resumed segment reproduces the reference exactly (well within
+        // the 1e-6 acceptance tolerance).
+        let got = parse_losses(&resumed_out);
+        assert!(got.iter().all(|(s, _)| *s >= epoch), "resumed losses predate the epoch");
+        assert_losses_match(&got, &parse_losses(&reference_out), "resume drill");
+        let (loss, auc) = parse_parity(&resumed_out);
+        let (ref_loss, ref_auc) = parse_parity(&reference_out);
+        assert!((loss - ref_loss).abs() <= 1e-6, "final loss {loss} vs {ref_loss}");
+        assert!((auc - ref_auc).abs() <= 1e-6, "final AUC {auc} vs {ref_auc}");
+
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir_ref).ok();
+    }
+
+    /// Threaded in-process replica of the three-tier drill's config (the
+    /// same preset pipeline the children use), for the unkilled baseline —
+    /// PR 3/4 proved threads ≡ processes for exactly this setup.
+    fn baseline_trainer(steps: usize, nn_workers: usize) -> Trainer {
+        let preset = BenchPreset::by_name(PRESET).unwrap();
+        let model = preset.model(DENSE);
+        let emb_cfg = preset.embedding(&model, CAPACITY.parse().unwrap());
+        let rows = preset.embedding(&model, 1).rows_per_group;
+        let cluster = ClusterConfig {
+            n_nn_workers: nn_workers,
+            n_emb_workers: 1,
+            net: NetModelConfig::disabled(),
+        };
+        let train = TrainConfig {
+            mode: TrainMode::FullSync,
+            batch_size: BATCH.parse().unwrap(),
+            lr: 0.05,
+            staleness_bound: 4,
+            steps,
+            eval_every: steps,
+            seed: SEED.parse().unwrap(),
+            use_pjrt: false,
+            compress: false,
+        };
+        let dataset =
+            SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED.parse().unwrap());
+        let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+        t.deterministic = true;
+        t
+    }
+
+    /// THE tentpole acceptance drill: 2 PS shards × 1 embedding worker × 2
+    /// NN ranks; one shard is SIGKILLed mid-run and restarted from its
+    /// committed epoch; the unified recovery layer (reconnect pool +
+    /// put-replay log + re-buffered pushes) carries the run to completion
+    /// within 1e-6 of the unkilled baseline.
+    #[test]
+    fn sigkill_one_ps_shard_three_tier_run_survives_to_parity() {
+        let steps = 30;
+        let world = 2;
+        let dir = tmp_dir("drill_sigkill");
+
+        // Unkilled baseline (threaded — equivalence to the process
+        // deployment is the already-proven PR 3/4 property).
+        let baseline = baseline_trainer(steps, world).run_rust().unwrap();
+        let base_auc = baseline.report.final_auc.unwrap();
+
+        // --- PS tier (checkpoint-enabled) ---
+        let (ps_a, addr_a) = spawn_ps("127.0.0.1:0", "0..2", steps, world, &dir, None);
+        let (mut ps_b, addr_b) = spawn_ps("127.0.0.1:0", "2..4", steps, world, &dir, None);
+        let remote = format!("{addr_a},{addr_b}");
+
+        // --- embedding-worker tier: owns the PS pools, generous retries +
+        // the gradient replay log (the exact-recovery machinery) ---
+        let mut ew_args = strs(&["serve-embedding-worker", "--addr", "127.0.0.1:0"]);
+        ew_args.extend(shared_flags(steps, world));
+        ew_args.push("--remote-ps".to_string());
+        ew_args.push(remote);
+        ew_args.extend(strs(&[
+            "--ps-replay", "true", "--ps-retries", "200", "--ps-retry-ms", "100",
+        ]));
+        let mut ew = Proc::spawn(&ew_args);
+        let ew_line = ew
+            .wait_for_line("embedding worker listening on ", Duration::from_secs(60))
+            .unwrap_or_else(|| panic!("EW never listened:\n{}", ew.output_snapshot()));
+        let ew_addr = ew_line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|r| r.split_whitespace().next())
+            .expect("EW address")
+            .to_string();
+
+        // --- NN tier: 2 train-worker ranks, checkpointing every 5 steps ---
+        let worker_args = |rank: usize, rendezvous: &str| -> Vec<String> {
+            let mut args = strs(&["train-worker", "--rank"]);
+            args.push(rank.to_string());
+            args.push("--world".to_string());
+            args.push(world.to_string());
+            args.push("--rendezvous".to_string());
+            args.push(rendezvous.to_string());
+            args.extend(strs(&["--ring-timeout-ms", "180000", "--embedding-workers"]));
+            args.push(ew_addr.clone());
+            args.extend(strs(&["--ew-retries", "20", "--ew-retry-ms", "250"]));
+            args.extend(shared_flags(steps, world));
+            args.push("--checkpoint-dir".to_string());
+            args.push(dir.display().to_string());
+            args.extend(strs(&["--checkpoint-every", "5"]));
+            args
+        };
+        let mut w0 = Proc::spawn(&worker_args(0, "127.0.0.1:0"));
+        let rdzv_line = w0
+            .wait_for_line("rendezvous listening on ", Duration::from_secs(60))
+            .unwrap_or_else(|| panic!("rank 0 never printed rendezvous:\n{}", w0.output_snapshot()));
+        let rendezvous = rdzv_line
+            .split("rendezvous listening on ")
+            .nth(1)
+            .and_then(|r| r.split_whitespace().next())
+            .expect("rendezvous address")
+            .to_string();
+        let mut w1 = Proc::spawn(&worker_args(1, &rendezvous));
+
+        // Let the first epoch commit, then SIGKILL one shard mid-run.
+        w0.wait_for_line("CKPT epoch 5 committed", Duration::from_secs(180))
+            .unwrap_or_else(|| panic!("no epoch committed:\n{}", w0.output_snapshot()));
+        ps_b.kill();
+        // Let some traffic actually fail against the dead shard.
+        std::thread::sleep(Duration::from_millis(400));
+        // Restart the SAME address from its committed epoch (its own
+        // --checkpoint-dir picks the newest committed one).
+        let (ps_b2, addr_b2) = spawn_ps(&addr_b, "2..4", steps, world, &dir, None);
+        assert_eq!(addr_b2, addr_b, "victim must come back on its own address");
+        assert!(
+            ps_b2.output_snapshot().contains("from committed epoch step-"),
+            "restarted shard did not restore its epoch:\n{}",
+            ps_b2.output_snapshot()
+        );
+
+        // The run survives and completes...
+        let s0 = w0
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("rank 0 hung:\n{}", w0.output_snapshot()));
+        let s1 = w1
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("rank 1 hung:\n{}", w1.output_snapshot()));
+        assert!(s0.success(), "rank 0 failed:\n{}", w0.output_snapshot());
+        assert!(s1.success(), "rank 1 failed:\n{}", w1.output_snapshot());
+
+        // ...to parity with the unkilled baseline (≤ 1e-6 on every loss +
+        // the final loss/AUC — the ISSUE-5 acceptance bound).
+        let out0 = w0.output_snapshot();
+        let got = parse_losses(&out0);
+        let want: Vec<(u64, f32)> = baseline.tracker.losses.clone();
+        assert_eq!(got.len(), want.len(), "loss curve lengths differ");
+        assert_losses_match(&got, &want, "sigkill drill");
+        let (loss, auc) = parse_parity(&out0);
+        let base_loss = baseline.report.final_loss;
+        assert!(
+            (loss - base_loss).abs() <= 1e-6,
+            "final loss {loss} vs baseline {base_loss}"
+        );
+        assert!((auc - base_auc).abs() <= 1e-6, "final AUC {auc} vs baseline {base_auc}");
+
+        drop(ps_a);
+        drop(ps_b2);
+        drop(ew);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

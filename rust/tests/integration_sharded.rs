@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use persia::config::{
     ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
-    Pooling, ServiceConfig, TrainConfig, TrainMode,
+    Pooling, RecoveryConfig, ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::data::SyntheticDataset;
 use persia::embedding::EmbeddingPs;
@@ -107,8 +107,11 @@ fn connect_sharded(addrs: &[String], reconnect_attempts: u32) -> Arc<ShardedRemo
         addr: addrs.join(","),
         client_conns: 2,
         wire_compress: false,
-        reconnect_attempts,
-        reconnect_backoff_ms: 50,
+        recovery: RecoveryConfig {
+            attempts: reconnect_attempts,
+            backoff_ms: 50,
+            ..RecoveryConfig::default()
+        },
     };
     Arc::new(ShardedRemotePs::connect(&cfg).unwrap())
 }
@@ -301,8 +304,7 @@ fn malformed_shard_deployments_rejected_at_connect() {
             addr: addrs.join(","),
             client_conns: 1,
             wire_compress: false,
-            reconnect_attempts: 0,
-            reconnect_backoff_ms: 1,
+            recovery: RecoveryConfig { attempts: 0, backoff_ms: 1, ..RecoveryConfig::default() },
         };
         match ShardedRemotePs::connect(&cfg) {
             Ok(_) => panic!("malformed deployment {addrs:?} accepted"),
@@ -481,8 +483,11 @@ mod multiprocess {
             addr: addrs.join(","),
             client_conns: 2,
             wire_compress: false,
-            reconnect_attempts: 30,
-            reconnect_backoff_ms: 100,
+            recovery: RecoveryConfig {
+                attempts: 30,
+                backoff_ms: 100,
+                ..RecoveryConfig::default()
+            },
         };
         let backend = Arc::new(ShardedRemotePs::connect(&cfg).unwrap());
 
