@@ -6,7 +6,7 @@
 mod common;
 
 use persia::comm::compress::{CompressedValues, IndexMap};
-use persia::comm::rpc::{RpcClient, RpcServer};
+use persia::comm::rpc::{PipelinedClient, RpcClient, RpcServer};
 use persia::comm::transport::{ChannelTransport, TcpTransport};
 use persia::comm::wire::{WireReader, WireWriter};
 use persia::config::{ModelConfig, Pooling};
@@ -130,6 +130,62 @@ fn main() {
             }
         }));
         drop(client);
+        h.join().unwrap();
+    }
+
+    // Pipelined vs lock-step RPC against the production readiness-loop
+    // server (`serve_rpc` — the exact stack `serve-ps` runs). Self-baselined:
+    // both rows come from this same run on this same machine, and the
+    // speedup gate is asserted on their ratio, not on absolute numbers.
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut server = RpcServer::new();
+        server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+        let rpc = Arc::new(server);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || {
+            persia::service::serve_rpc(listener, rpc, stop2, "micro-comm-bench")
+        });
+
+        let client = PipelinedClient::connect(
+            &addr,
+            32,
+            Some(std::time::Duration::from_secs(30)),
+        )
+        .unwrap();
+        let mut w = WireWriter::new(1);
+        w.put_f32(&vec![0.0; 256]);
+        let msg = w.finish();
+        let lockstep =
+            bench.run("rpc lock-step event-loop 1KB x200", Some(200.0), || {
+                for _ in 0..200 {
+                    std::hint::black_box(client.call(&msg).unwrap().len());
+                }
+            });
+        let pipelined = bench.run("rpc pipelined w=32 1KB x200", Some(200.0), || {
+            let mut pending = Vec::with_capacity(200);
+            for _ in 0..200 {
+                pending.push(client.call_async(&msg).unwrap());
+            }
+            for p in pending {
+                std::hint::black_box(p.wait().unwrap().len());
+            }
+        });
+        let speedup = lockstep.p50_ns as f64 / pipelined.p50_ns.max(1) as f64;
+        println!("  pipelining speedup (p50, same run): {speedup:.2}x");
+        assert!(
+            speedup >= 2.0,
+            "pipelined RPC must be >= 2x lock-step on loopback (got {speedup:.2}x)"
+        );
+        rows.push(lockstep);
+        rows.push(pipelined);
+        drop(client);
+        stop.store(true, Ordering::SeqCst);
+        let _ = std::net::TcpStream::connect(&addr);
         h.join().unwrap();
     }
 

@@ -1,0 +1,460 @@
+//! Best-effort peer-to-peer replica gossip — the cross-process form of
+//! FullAsync's periodic re-centering (paper §4.2.2: asynchronous dense
+//! updates tolerate drift; the sync primitive must never serialize ranks).
+//!
+//! Before this module, a multi-process FullAsync run re-centered its dense
+//! replicas with a full ring AllReduce — a *barrier*: one slow or stalled
+//! rank held every other rank's step hostage, which is exactly the failure
+//! mode FullAsync exists to avoid. [`GossipFabric`] replaces the barrier
+//! with the same protocol the in-process deployment always had
+//! ([`ThreadRing`](crate::hybrid::dense_comm::ThreadRing)'s shared slots),
+//! over real sockets:
+//!
+//! * Every rank binds a gossip listener next to its ring listener; the
+//!   addresses travel through the ring rendezvous table, so the fabric
+//!   forms with zero extra configuration.
+//! * **Posting** a replica is fire-and-forget: the frame is handed to a
+//!   per-peer outbox thread through a bounded channel with
+//!   [`std::sync::mpsc::SyncSender::try_send`] — if the peer is slow, dead,
+//!   or still connecting, the post is *dropped*, never awaited.
+//! * **Averaging** folds in whatever each peer most recently posted
+//!   (by sequence number); a rank that has posted nothing yet simply does
+//!   not participate — identical to the thread deployment's empty slot.
+//!
+//! Deterministic runs use the acked variant
+//! ([`GossipFabric::post_acked_and_average`]): inside a token-ordered
+//! section the post *is* awaited (the receiver acknowledges after storing),
+//! so the set of replicas each rank averages is a pure function of rank —
+//! what makes a deterministic multi-process FullAsync run bit-identical to
+//! the threaded one.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::comm::netsim::{Link, NetSim};
+use crate::comm::transport::{TcpTransport, Transport};
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::util::lock_unpoisoned;
+
+/// One replica post: u64 `[rank, seq, want_ack]` + the f32 dense params.
+pub const KIND_GOSSIP: u32 = 0x6007;
+/// Acknowledgement of a stored post: u64 `[seq]` (acked variant only).
+pub const KIND_GOSSIP_ACK: u32 = 0x6008;
+
+/// How long a fire-and-forget outbox thread spends dialing a peer before
+/// dropping the post. Generous for loopback/datacenter RTTs, and off the
+/// training thread either way.
+const ASYNC_DIAL_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Accept-loop poll granularity (also bounds shutdown latency).
+const ACCEPT_POLL: Duration = Duration::from_millis(100);
+
+fn encode_post(rank: usize, seq: u64, want_ack: bool, params: &[f32]) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_GOSSIP);
+    w.put_u64(&[rank as u64, seq, u64::from(want_ack)]);
+    w.put_f32(params);
+    w.finish()
+}
+
+fn encode_ack(seq: u64) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_GOSSIP_ACK);
+    w.put_u64(&[seq]);
+    w.finish()
+}
+
+/// Block until `listener` has a pending connection or `dur` elapses —
+/// `poll(2)` on unix, a bounded sleep elsewhere.
+pub(crate) fn wait_incoming(listener: &TcpListener, dur: Duration) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        let _ = crate::comm::poll::poll_readable(listener.as_raw_fd(), dur);
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = listener;
+        std::thread::sleep(dur.min(Duration::from_millis(5)));
+    }
+}
+
+/// The latest replica a peer has posted.
+type Slot = Mutex<Option<(u64, Vec<f32>)>>;
+
+/// Fan-out links to one peer: the fire-and-forget outbox and the lazily
+/// dialed acked connection (deterministic variant only).
+struct PeerLink {
+    addr: String,
+    outbox: SyncSender<Vec<u8>>,
+    acked: Mutex<Option<TcpTransport>>,
+}
+
+/// One rank's membership in the gossip mesh: a receive side (accept thread
+/// + one reader thread per inbound connection, storing the latest post per
+/// peer rank) and a send side (one outbox thread per peer).
+///
+/// Dropping the fabric stops the accept loop and tears down the outboxes;
+/// reader threads exit when their peer closes.
+pub struct GossipFabric {
+    rank: usize,
+    world: usize,
+    seq: u64,
+    slots: Arc<Vec<Slot>>,
+    peers: Vec<Option<PeerLink>>,
+    timeout: Duration,
+    net: Arc<NetSim>,
+    stop: Arc<AtomicBool>,
+}
+
+impl GossipFabric {
+    /// Start the mesh for `rank` of `world`: `listener` is this rank's
+    /// pre-bound gossip listener (bound before the rendezvous so its
+    /// address could travel in the table), `peer_addrs[r]` is rank `r`'s
+    /// gossip address (the own-rank entry is ignored), and `timeout` bounds
+    /// the acked variant's waits. `net` is charged [`Link::GpuGpu`] for
+    /// every post actually sent.
+    pub fn start(
+        listener: TcpListener,
+        rank: usize,
+        world: usize,
+        peer_addrs: &[String],
+        timeout: Duration,
+        net: Arc<NetSim>,
+    ) -> Result<GossipFabric> {
+        ensure!(
+            peer_addrs.len() == world && rank < world,
+            "gossip fabric: {} peer addresses for rank {rank} of world {world}",
+            peer_addrs.len()
+        );
+        let slots: Arc<Vec<Slot>> = Arc::new((0..world).map(|_| Mutex::new(None)).collect());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        listener.set_nonblocking(true).context("gossip listener nonblocking")?;
+        {
+            let slots = slots.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name(format!("gossip-accept-{rank}"))
+                .spawn(move || accept_loop(listener, slots, stop))
+                .context("spawning gossip accept thread")?;
+        }
+
+        let mut peers = Vec::with_capacity(world);
+        for (r, addr) in peer_addrs.iter().enumerate() {
+            if r == rank {
+                peers.push(None);
+                continue;
+            }
+            // Capacity 1: a fresh post supersedes a queued one anyway, so
+            // the only queueing that matters is "the outbox thread is
+            // mid-send" — in that case `try_send` fails and the post drops.
+            let (tx, rx) = sync_channel::<Vec<u8>>(1);
+            let addr_owned = addr.clone();
+            std::thread::Builder::new()
+                .name(format!("gossip-out-{rank}-to-{r}"))
+                .spawn(move || outbox_loop(&addr_owned, rx))
+                .context("spawning gossip outbox thread")?;
+            peers.push(Some(PeerLink {
+                addr: addr.clone(),
+                outbox: tx,
+                acked: Mutex::new(None),
+            }));
+        }
+
+        Ok(GossipFabric { rank, world, seq: 0, slots, peers, timeout, net, stop })
+    }
+
+    /// Fire-and-forget: hand this replica to every peer's outbox (dropping
+    /// the post wherever the outbox is busy), then average in whatever the
+    /// peers most recently posted. Never blocks on any peer; returns the
+    /// simulated seconds of the posts actually sent.
+    pub fn post_and_average(&mut self, params: &mut [f32]) -> Result<f64> {
+        self.seq += 1;
+        let msg = encode_post(self.rank, self.seq, false, params);
+        let mut sim = 0.0;
+        for link in self.peers.iter().flatten() {
+            // A full outbox means the peer is slow or unreachable: drop the
+            // post (a fresher one is coming) rather than wait.
+            if link.outbox.try_send(msg.clone()).is_ok() {
+                sim += self.net.record(Link::GpuGpu, msg.len());
+            }
+        }
+        self.average_into(params);
+        Ok(sim)
+    }
+
+    /// Deterministic variant: post to every peer over a dedicated
+    /// connection and wait for each receiver's ack (bounded by the fabric
+    /// timeout) before averaging. Callers run this inside a token-ordered
+    /// section, so "everything posted before my section" is exactly ranks
+    /// `0..self_rank` of this round plus everyone's previous round — the
+    /// same visibility the in-process shared-slot gossip has under the
+    /// token, which is what the cross-deployment parity test asserts.
+    pub fn post_acked_and_average(&mut self, params: &mut [f32]) -> Result<f64> {
+        self.seq += 1;
+        let msg = encode_post(self.rank, self.seq, true, params);
+        let mut sim = 0.0;
+        for link in self.peers.iter().flatten() {
+            let mut conn = lock_unpoisoned(&link.acked);
+            if conn.is_none() {
+                *conn = Some(dial(&link.addr, self.timeout).with_context(|| {
+                    format!("dialing gossip peer at {} for an acked post", link.addr)
+                })?);
+            }
+            let t = conn.as_ref().expect("dialed above");
+            let sent = t.send(msg.clone()).and_then(|()| t.recv()).and_then(|ack| {
+                let r = WireReader::parse(&ack)?;
+                ensure!(r.kind() == KIND_GOSSIP_ACK, "expected a gossip ack, got {:#x}", r.kind());
+                let seq = r.u64(0)?;
+                ensure!(
+                    seq.first() == Some(&self.seq),
+                    "gossip ack for seq {seq:?}, expected {}",
+                    self.seq
+                );
+                Ok(())
+            });
+            if let Err(e) = sent {
+                // The connection state is unknown after a failed exchange;
+                // the next acked post re-dials.
+                *conn = None;
+                bail!("acked gossip post to {} failed: {e:#}", link.addr);
+            }
+            sim += self.net.record(Link::GpuGpu, msg.len());
+        }
+        self.average_into(params);
+        Ok(sim)
+    }
+
+    /// Average `params` with every peer's latest post (skipping peers that
+    /// have posted nothing, or a stale different-geometry post). Mirrors
+    /// the in-process shared-slot average exactly — own replica first, then
+    /// peers in rank order — so the two deployments sum in the same
+    /// floating-point order.
+    fn average_into(&self, params: &mut [f32]) {
+        let mut acc = params.to_vec();
+        let mut n = 1.0f32;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if i == self.rank {
+                continue;
+            }
+            let other = lock_unpoisoned(slot);
+            if let Some((_, p)) = other.as_ref() {
+                if p.len() == acc.len() {
+                    for (a, o) in acc.iter_mut().zip(p.iter()) {
+                        *a += o;
+                    }
+                    n += 1.0;
+                }
+            }
+        }
+        let inv = 1.0 / n;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        params.copy_from_slice(&acc);
+    }
+
+    /// Total ranks in the mesh.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+}
+
+impl Drop for GossipFabric {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn dial(addr: &str, timeout: Duration) -> Result<TcpTransport> {
+    let sa: SocketAddr = addr.parse().with_context(|| format!("bad gossip address {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)?;
+    let t = TcpTransport::new(stream);
+    t.set_timeouts(Some(timeout))?;
+    Ok(t)
+}
+
+/// Fire-and-forget sender to one peer: dial lazily, send what the bounded
+/// channel delivers, drop the connection (and the post) on any error. Ends
+/// when the fabric (the only `SyncSender`) is dropped.
+fn outbox_loop(addr: &str, rx: std::sync::mpsc::Receiver<Vec<u8>>) {
+    let mut conn: Option<TcpTransport> = None;
+    for msg in rx {
+        if conn.is_none() {
+            conn = dial(addr, ASYNC_DIAL_TIMEOUT).ok();
+        }
+        if let Some(c) = &conn {
+            if c.send(msg).is_err() {
+                conn = None;
+            }
+        }
+    }
+}
+
+/// Accept inbound gossip connections until the fabric stops; each gets its
+/// own reader thread (posts are tiny and per-peer, so one thread per
+/// inbound link stays small: at most `world - 1` async + `world - 1` acked
+/// connections).
+fn accept_loop(listener: TcpListener, slots: Arc<Vec<Slot>>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let slots = slots.clone();
+                let stop = stop.clone();
+                let _ = std::thread::Builder::new()
+                    .name("gossip-reader".to_string())
+                    .spawn(move || reader_loop(stream, &slots, &stop));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                wait_incoming(&listener, ACCEPT_POLL);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Store each arriving post into its rank's slot (newest sequence wins) and
+/// ack the ones that ask for it. Exits on any malformed frame or transport
+/// error — the peer just re-dials.
+fn reader_loop(stream: TcpStream, slots: &[Slot], stop: &AtomicBool) {
+    let t = TcpTransport::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(msg) = t.recv() else { return };
+        let Ok(r) = WireReader::parse(&msg) else { return };
+        if r.kind() != KIND_GOSSIP {
+            return;
+        }
+        let Ok(hdr) = r.u64(0) else { return };
+        let Ok(params) = r.f32(1) else { return };
+        if hdr.len() != 3 || hdr[0] as usize >= slots.len() {
+            return;
+        }
+        let (peer_rank, seq, want_ack) = (hdr[0] as usize, hdr[1], hdr[2] == 1);
+        {
+            let mut slot = lock_unpoisoned(&slots[peer_rank]);
+            let newer = match slot.as_ref() {
+                Some((have, _)) => *have < seq,
+                None => true,
+            };
+            if newer {
+                *slot = Some((seq, params));
+            }
+        }
+        if want_ack && t.send(encode_ack(seq)).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetModelConfig;
+
+    fn mesh(world: usize) -> Vec<GossipFabric> {
+        let listeners: Vec<TcpListener> =
+            (0..world).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        listeners
+            .into_iter()
+            .enumerate()
+            .map(|(r, l)| {
+                GossipFabric::start(
+                    l,
+                    r,
+                    world,
+                    &addrs,
+                    Duration::from_secs(5),
+                    net.clone(),
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn acked_posts_are_visible_immediately() {
+        let mut fabrics = mesh(2);
+        let mut f1 = fabrics.pop().unwrap();
+        let mut f0 = fabrics.pop().unwrap();
+        let mut p1 = vec![3.0f32, 5.0];
+        f1.post_acked_and_average(&mut p1).unwrap();
+        // Rank 1 averaged alone (rank 0 has posted nothing).
+        assert_eq!(p1, vec![3.0, 5.0]);
+        let mut p0 = vec![1.0f32, 1.0];
+        f0.post_acked_and_average(&mut p0).unwrap();
+        // Rank 0 sees rank 1's acked post: mean([1,1],[3,5]).
+        assert_eq!(p0, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn async_posts_arrive_eventually_and_never_block() {
+        let mut fabrics = mesh(2);
+        let mut f1 = fabrics.pop().unwrap();
+        let mut f0 = fabrics.pop().unwrap();
+        let mut p1 = vec![4.0f32; 8];
+        f1.post_and_average(&mut p1).unwrap();
+        // Poll until rank 1's post lands at rank 0 (fire-and-forget has no
+        // delivery guarantee at any instant, only eventually-on-a-live-link).
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let mut p0 = vec![2.0f32; 8];
+            f0.post_and_average(&mut p0).unwrap();
+            if p0 == vec![3.0f32; 8] {
+                break;
+            }
+            assert_eq!(p0, vec![2.0f32; 8], "average must use whole replicas or nothing");
+            assert!(std::time::Instant::now() < deadline, "post never arrived");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn dead_peer_drops_posts_instead_of_blocking() {
+        // Rank 1's address points at a bound-then-dropped listener: posts
+        // can never be delivered. The async path must stay fast anyway.
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            l0.local_addr().unwrap().to_string(),
+            dead.local_addr().unwrap().to_string(),
+        ];
+        drop(dead);
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let mut f0 =
+            GossipFabric::start(l0, 0, 2, &addrs, Duration::from_secs(5), net).unwrap();
+        let mut p = vec![1.0f32; 4];
+        let t0 = std::time::Instant::now();
+        for _ in 0..50 {
+            f0.post_and_average(&mut p).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "fire-and-forget posts blocked on a dead peer: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(p, vec![1.0f32; 4], "no peer ever posted, params must be unchanged");
+    }
+
+    #[test]
+    fn stale_or_mismatched_posts_are_ignored() {
+        let mut fabrics = mesh(2);
+        let mut f1 = fabrics.pop().unwrap();
+        let mut f0 = fabrics.pop().unwrap();
+        let mut long = vec![9.0f32; 4];
+        f1.post_acked_and_average(&mut long).unwrap();
+        // Rank 0 averages a DIFFERENT length: rank 1's post must be skipped.
+        let mut p0 = vec![1.0f32, 1.0];
+        f0.post_acked_and_average(&mut p0).unwrap();
+        assert_eq!(p0, vec![1.0, 1.0]);
+    }
+}

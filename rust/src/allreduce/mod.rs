@@ -8,14 +8,19 @@
 //! handshake), and a naive central-PS reduce baseline ([`central`]) for the
 //! ablation bench. The thread and TCP rings share one schedule
 //! ([`ring::chunk_range`]) and are bit-identical; [`ring::reference_sum`]
-//! replays that deterministic reduction order serially.
+//! replays that deterministic reduction order serially. FullAsync's
+//! periodic replica re-centering is NOT a ring collective: it rides the
+//! best-effort peer-to-peer [`gossip`] mesh, whose addresses travel in the
+//! same rendezvous table.
 
 pub mod bucket;
 pub mod central;
+pub mod gossip;
 pub mod ring;
 pub mod tcp_ring;
 
 pub use bucket::FlatBuckets;
 pub use central::central_reduce;
+pub use gossip::GossipFabric;
 pub use ring::RingGroup;
 pub use tcp_ring::{RingRendezvous, TcpRingMember};

@@ -43,6 +43,7 @@ use crate::recovery::{dial_retry, remaining};
 use crate::tensor::Tensor;
 
 use super::bucket::FlatBuckets;
+use super::gossip::{wait_incoming, GossipFabric};
 use super::ring::chunk_range;
 
 /// Wire message kinds of the NN-worker ring (disjoint from the PS service's
@@ -72,6 +73,15 @@ fn encode_hello(kind: u32, rank: usize, world: usize, fingerprint: u64, addr: &s
     w.put_u64(&[rank as u64, world as u64, fingerprint]);
     w.put_u8(addr.as_bytes());
     w.finish()
+}
+
+/// Split a rendezvous table entry into its `(ring, gossip)` addresses.
+/// Entries travel as `"ring_addr|gossip_addr"` since the gossip fabric
+/// rides the same rendezvous (see [`super::gossip`]).
+fn split_entry(entry: &str) -> Result<(&str, &str)> {
+    entry
+        .split_once('|')
+        .with_context(|| format!("malformed rendezvous entry {entry:?} (expected ring|gossip)"))
 }
 
 /// Returns `(rank, world, fingerprint, ring address)`.
@@ -116,7 +126,9 @@ fn accept_deadline(listener: &TcpListener, deadline: Instant, what: &str) -> Res
                 if Instant::now() >= deadline {
                     bail!("timed out waiting for {what}");
                 }
-                std::thread::sleep(Duration::from_millis(5));
+                // poll(2)-backed wait: wakes the moment a connection lands
+                // instead of on a sleep grid.
+                wait_incoming(listener, remaining(deadline).min(Duration::from_millis(50)));
             }
             Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
         }
@@ -130,18 +142,26 @@ pub struct RingRendezvous {
     cfg: RingConfig,
     ring_listener: TcpListener,
     ring_addr: String,
+    /// FullAsync gossip inbound listener, bound *before* the rendezvous so
+    /// its address can ride the table (`"ring|gossip"` entries).
+    gossip_listener: TcpListener,
+    gossip_addr: String,
     /// Rank 0 only.
     rdzv_listener: Option<TcpListener>,
 }
 
 impl RingRendezvous {
-    /// Bind this rank's ring-inbound listener (ephemeral port on
-    /// `cfg.bind_host`) and, on rank 0, the rendezvous listener.
+    /// Bind this rank's ring-inbound and gossip-inbound listeners
+    /// (ephemeral ports on `cfg.bind_host`) and, on rank 0, the rendezvous
+    /// listener.
     pub fn bind(cfg: &RingConfig) -> Result<RingRendezvous> {
         cfg.validate()?;
         let ring_listener = TcpListener::bind((cfg.bind_host.as_str(), 0))
             .with_context(|| format!("binding ring listener on {}", cfg.bind_host))?;
         let ring_addr = ring_listener.local_addr()?.to_string();
+        let gossip_listener = TcpListener::bind((cfg.bind_host.as_str(), 0))
+            .with_context(|| format!("binding gossip listener on {}", cfg.bind_host))?;
+        let gossip_addr = gossip_listener.local_addr()?.to_string();
         let rdzv_listener = if cfg.rank == 0 && cfg.world > 1 {
             Some(
                 TcpListener::bind(&cfg.rendezvous)
@@ -150,7 +170,14 @@ impl RingRendezvous {
         } else {
             None
         };
-        Ok(RingRendezvous { cfg: cfg.clone(), ring_listener, ring_addr, rdzv_listener })
+        Ok(RingRendezvous {
+            cfg: cfg.clone(),
+            ring_listener,
+            ring_addr,
+            gossip_listener,
+            gossip_addr,
+            rdzv_listener,
+        })
     }
 
     /// The rendezvous address peers must dial (rank 0 only; resolves an
@@ -178,12 +205,15 @@ impl RingRendezvous {
                 compress: cfg.compress,
                 seq_out: 0,
                 seq_in: 0,
+                gossip: None,
             });
         }
         let deadline = Instant::now() + Duration::from_millis(cfg.timeout_ms);
+        // Every table entry pairs the ring and gossip inbound addresses.
+        let my_entry = format!("{}|{}", self.ring_addr, self.gossip_addr);
         let table = match self.rdzv_listener.take() {
-            Some(listener) => collect_peers(listener, &cfg, fingerprint, &self.ring_addr, deadline),
-            None => join_rendezvous(&cfg, fingerprint, &self.ring_addr, deadline),
+            Some(listener) => collect_peers(listener, &cfg, fingerprint, &my_entry, deadline),
+            None => join_rendezvous(&cfg, fingerprint, &my_entry, deadline),
         }?;
 
         // Dial the successor first (its listener is already bound), then
@@ -191,10 +221,10 @@ impl RingRendezvous {
         // mis-wired table cannot silently cross-connect rings.
         let succ = (cfg.rank + 1) % cfg.world;
         let pred = (cfg.rank + cfg.world - 1) % cfg.world;
-        let send_stream = dial_retry(&table[succ], deadline, "ring successor")?;
+        let send_stream = dial_retry(split_entry(&table[succ])?.0, deadline, "ring successor")?;
         configure(&send_stream, deadline)?;
         let send = TcpTransport::new(send_stream);
-        send.send(encode_hello(KIND_RING_HELLO, cfg.rank, cfg.world, fingerprint, &self.ring_addr))
+        send.send(encode_hello(KIND_RING_HELLO, cfg.rank, cfg.world, fingerprint, &my_entry))
             .context("sending ring hello to successor")?;
 
         let recv_stream = accept_deadline(&self.ring_listener, deadline, "ring predecessor")?;
@@ -215,6 +245,21 @@ impl RingRendezvous {
         send.set_timeouts(Some(op))?;
         recv.set_timeouts(Some(op))?;
 
+        // Stand up the FullAsync gossip mesh from the table's gossip
+        // halves; its connections form lazily on first post.
+        let gossip_addrs = table
+            .iter()
+            .map(|e| Ok(split_entry(e)?.1.to_string()))
+            .collect::<Result<Vec<String>>>()?;
+        let gossip = GossipFabric::start(
+            self.gossip_listener,
+            cfg.rank,
+            cfg.world,
+            &gossip_addrs,
+            op,
+            net.clone(),
+        )?;
+
         Ok(TcpRingMember {
             rank: cfg.rank,
             world: cfg.world,
@@ -224,6 +269,7 @@ impl RingRendezvous {
             compress: cfg.compress,
             seq_out: 0,
             seq_in: 0,
+            gossip: Some(gossip),
         })
     }
 }
@@ -253,7 +299,7 @@ fn collect_peers(
                         cfg.timeout_ms
                     );
                 }
-                std::thread::sleep(Duration::from_millis(5));
+                wait_incoming(&listener, remaining(deadline).min(Duration::from_millis(50)));
                 continue;
             }
             Err(e) => return Err(e).context("rendezvous accept"),
@@ -376,6 +422,8 @@ pub struct TcpRingMember {
     /// frame so a schedule desync errors instead of corrupting gradients.
     seq_out: u64,
     seq_in: u64,
+    /// FullAsync best-effort replica gossip mesh (`None` iff world == 1).
+    gossip: Option<GossipFabric>,
 }
 
 impl TcpRingMember {
@@ -593,6 +641,28 @@ impl TcpRingMember {
         );
         self.seq_in += 1;
         Ok(())
+    }
+
+    /// Best-effort FullAsync replica averaging: post this rank's `params`
+    /// to every peer without waiting (posts to slow or dead peers are
+    /// dropped) and average in whatever the peers most recently posted.
+    /// Never blocks on any peer — see [`GossipFabric::post_and_average`].
+    pub fn gossip_average(&mut self, params: &mut [f32]) -> Result<f64> {
+        match &mut self.gossip {
+            Some(g) => g.post_and_average(params),
+            None => Ok(0.0),
+        }
+    }
+
+    /// Deterministic gossip: post with per-peer acknowledgement before
+    /// averaging, so replica visibility is a pure function of the caller's
+    /// position in the token order — see
+    /// [`GossipFabric::post_acked_and_average`].
+    pub fn gossip_average_acked(&mut self, params: &mut [f32]) -> Result<f64> {
+        match &mut self.gossip {
+            Some(g) => g.post_acked_and_average(params),
+            None => Ok(0.0),
+        }
     }
 }
 

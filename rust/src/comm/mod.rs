@@ -3,12 +3,14 @@
 
 pub mod compress;
 pub mod netsim;
+#[cfg(unix)]
+pub mod poll;
 pub mod rpc;
 pub mod transport;
 pub mod wire;
 
 pub use compress::{CompressedValues, IndexMap};
 pub use netsim::NetSim;
-pub use rpc::{RpcClient, RpcServer};
+pub use rpc::{PendingReply, PipelinedClient, RpcClient, RpcServer};
 pub use transport::{ChannelTransport, Transport};
 pub use wire::{WireReader, WireWriter};

@@ -1,0 +1,140 @@
+//! Thin safe wrapper over `poll(2)` — the readiness primitive behind the
+//! event-driven service core.
+//!
+//! The vendored dependency closure has no `libc`/`mio`, so the one syscall
+//! the readiness loop needs is declared here directly. Everything above
+//! this module works with [`PollFd`] slices and plain [`std::net`] sockets
+//! in non-blocking mode: the [`crate::service`] accept loop multiplexes its
+//! listener + connections through [`poll_fds`], and the ring rendezvous
+//! replaces its sleep-polling accept loops with [`poll_readable`].
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// One descriptor's interest set and readiness result (mirrors
+/// `struct pollfd`).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// The descriptor to watch (negative entries are ignored by the
+    /// kernel, which is how unused slots are skipped).
+    pub fd: RawFd,
+    /// Requested events ([`POLLIN`] | [`POLLOUT`]).
+    pub events: i16,
+    /// Kernel-reported readiness (includes error/hangup bits even when not
+    /// requested).
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// Interest entry for `fd` with `events`.
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Did the kernel report `fd` readable (or in an error/hangup state a
+    /// read will surface)?
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+
+    /// Did the kernel report `fd` writable (or errored, which a write will
+    /// surface)?
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+/// Readable-data event bit.
+pub const POLLIN: i16 = 0x001;
+/// Writable-without-blocking event bit.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// Invalid descriptor (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "macos")]
+type NfdsT = u32;
+#[cfg(not(target_os = "macos"))]
+type NfdsT = std::os::raw::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+}
+
+/// Wait up to `timeout` for readiness on any entry of `fds`; returns how
+/// many entries have non-zero `revents`. `None` blocks indefinitely.
+/// `EINTR` is retried internally.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Option<Duration>) -> io::Result<usize> {
+    let timeout_ms: i32 = match timeout {
+        None => -1,
+        // Round up so a non-zero timeout never becomes a busy-spin 0.
+        Some(d) => d.as_millis().min(i32::MAX as u128).max(u128::from(!d.is_zero())) as i32,
+    };
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Wait up to `timeout` for `fd` to become readable. Returns `false` on
+/// timeout — the caller decides whether that is an error.
+pub fn poll_readable(fd: RawFd, timeout: Duration) -> io::Result<bool> {
+    let mut fds = [PollFd::new(fd, POLLIN)];
+    Ok(poll_fds(&mut fds, Some(timeout))? > 0 && fds[0].readable())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn listener_becomes_readable_on_connect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        assert!(
+            !poll_readable(listener.as_raw_fd(), Duration::from_millis(10)).unwrap(),
+            "no pending connection yet"
+        );
+        let _client = TcpStream::connect(addr).unwrap();
+        assert!(
+            poll_readable(listener.as_raw_fd(), Duration::from_secs(5)).unwrap(),
+            "pending connection must mark the listener readable"
+        );
+    }
+
+    #[test]
+    fn stream_becomes_readable_on_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        assert!(!poll_readable(server.as_raw_fd(), Duration::from_millis(10)).unwrap());
+        client.write_all(b"x").unwrap();
+        assert!(poll_readable(server.as_raw_fd(), Duration::from_secs(5)).unwrap());
+    }
+
+    #[test]
+    fn poll_fds_reports_writable_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let mut fds = [PollFd::new(client.as_raw_fd(), POLLIN | POLLOUT)];
+        let n = poll_fds(&mut fds, Some(Duration::from_secs(5))).unwrap();
+        assert!(n > 0 && fds[0].writable(), "idle stream must be writable");
+        assert!(!fds[0].readable(), "nothing was sent, so not readable");
+    }
+}

@@ -2,12 +2,35 @@
 //!
 //! The paper's point-to-point traffic (NN worker <-> embedding worker,
 //! embedding worker <-> embedding PS) is RPC over the zero-copy wire format
-//! — not protobuf (§4.2.3). A server registers one handler per message kind;
-//! requests carry a correlation id so a client can pipeline.
+//! — not protobuf (§4.2.3). A server registers one handler per message
+//! kind; requests carry a correlation id so a client can pipeline.
+//!
+//! Two clients speak this protocol:
+//!
+//! * [`RpcClient`] — lock-step call/response over any [`Transport`]
+//!   (used by handshake probes and the in-proc channel transport).
+//! * [`PipelinedClient`] — TCP-only, `window` requests in flight on one
+//!   connection: sends are sequence-tagged, a background reader demuxes
+//!   responses into a completion map by correlation id, and callers block
+//!   only on *their* reply ([`PendingReply::wait`]). Every wait is bounded
+//!   by the client's I/O deadline, so a server that accepts and then wedges
+//!   trips the recovery layer instead of hanging the trainer.
+//!
+//! On the server side [`RpcServer::dispatch_frame`] is the transport-free
+//! core (unframe → handler → re-frame), shared by the blocking
+//! [`RpcServer::serve`] loop and the readiness-loop server in
+//! [`crate::service`].
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::lock_unpoisoned;
 
 use super::transport::Transport;
 
@@ -19,14 +42,14 @@ fn frame(corr_id: u64, msg: &[u8]) -> Vec<u8> {
     out
 }
 
-fn unframe(frame: &[u8]) -> anyhow::Result<(u64, &[u8])> {
-    anyhow::ensure!(frame.len() >= 8, "short rpc frame");
+fn unframe(frame: &[u8]) -> Result<(u64, &[u8])> {
+    ensure!(frame.len() >= 8, "short rpc frame");
     let corr = u64::from_le_bytes(frame[..8].try_into().unwrap());
     Ok((corr, &frame[8..]))
 }
 
 /// Handler: raw wire-message bytes in, raw wire-message bytes out.
-pub type Handler = Box<dyn Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync>;
+pub type Handler = Box<dyn Fn(&[u8]) -> Result<Vec<u8>> + Send + Sync>;
 
 /// RPC server: dispatches by the wire message's `kind` field.
 pub struct RpcServer {
@@ -54,8 +77,27 @@ impl RpcServer {
         self.stop.clone()
     }
 
+    /// Dispatch one wire message to its kind's handler. This is the
+    /// transport-free request core shared by [`Self::serve`] and the
+    /// readiness-loop server.
+    pub fn dispatch(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        ensure!(msg.len() >= 8, "short wire message");
+        let kind = u32::from_le_bytes(msg[4..8].try_into().unwrap());
+        match self.handlers.get(&kind) {
+            Some(h) => h(msg),
+            None => bail!("no handler for kind {kind}"),
+        }
+    }
+
+    /// Unframe a request, dispatch it, and re-frame the response under the
+    /// request's correlation id — one full request lifecycle, minus I/O.
+    pub fn dispatch_frame(&self, req: &[u8]) -> Result<Vec<u8>> {
+        let (corr, msg) = unframe(req)?;
+        Ok(frame(corr, &self.dispatch(msg)?))
+    }
+
     /// Serve one connection until the peer disconnects or `stop` is set.
-    pub fn serve<T: Transport>(&self, transport: &T) -> anyhow::Result<()> {
+    pub fn serve<T: Transport>(&self, transport: &T) -> Result<()> {
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 return Ok(());
@@ -64,17 +106,7 @@ impl RpcServer {
                 Ok(f) => f,
                 Err(_) => return Ok(()), // disconnect = normal shutdown
             };
-            let (corr, msg) = unframe(&req)?;
-            let kind = if msg.len() >= 8 {
-                u32::from_le_bytes(msg[4..8].try_into().unwrap())
-            } else {
-                anyhow::bail!("short wire message");
-            };
-            let resp = match self.handlers.get(&kind) {
-                Some(h) => h(msg)?,
-                None => anyhow::bail!("no handler for kind {kind}"),
-            };
-            transport.send(frame(corr, &resp))?;
+            transport.send(self.dispatch_frame(&req)?)?;
         }
     }
 }
@@ -92,7 +124,7 @@ impl<T: Transport> RpcClient<T> {
     }
 
     /// Send a wire message; block for the matching response.
-    pub fn call(&self, msg: &[u8]) -> anyhow::Result<Vec<u8>> {
+    pub fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
         let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
         self.transport.send(frame(corr, msg))?;
         loop {
@@ -107,11 +139,356 @@ impl<T: Transport> RpcClient<T> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pipelined TCP client
+// ---------------------------------------------------------------------------
+
+/// Frames larger than this are a protocol error (matches the transport
+/// layer's bound).
+const MAX_FRAME: usize = 1 << 30;
+
+/// How often the background reader re-checks the dead flag while idle.
+const READER_POLL: Duration = Duration::from_millis(200);
+
+/// Mutable completion state shared between callers and the reader thread.
+struct PipeState {
+    /// Demuxed responses, keyed by correlation id, awaiting their caller.
+    replies: HashMap<u64, Vec<u8>>,
+    /// Requests written whose replies have not yet arrived — the quantity
+    /// the window bounds. Freed by the *reader* on arrival (not by the
+    /// claiming waiter), so a caller can issue more async requests than
+    /// the window and drain them later without deadlocking itself.
+    inflight: usize,
+    /// Correlation ids whose waiter gave up before the reply arrived; the
+    /// reader drops these replies instead of leaking them into the map.
+    abandoned: std::collections::HashSet<u64>,
+    /// First fatal error; once set, every current and future call fails.
+    dead: Option<String>,
+}
+
+/// Handed to the reader thread separately from [`PipeInner`], so dropping
+/// the last client handle can shut the socket down and terminate the
+/// reader (which would otherwise keep the connection alive forever).
+struct PipeShared {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+impl PipeShared {
+    fn mark_dead(&self, why: &str) {
+        {
+            let mut st = lock_unpoisoned(&self.state);
+            if st.dead.is_none() {
+                st.dead = Some(why.to_string());
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+struct PipeInner {
+    writer: Mutex<TcpStream>,
+    shared: Arc<PipeShared>,
+    next_corr: AtomicU64,
+    window: usize,
+    io_timeout: Option<Duration>,
+}
+
+impl PipeInner {
+    /// Kill the connection: poison-free dead-marking plus a socket shutdown
+    /// so the reader thread and any blocked peer writes unwind promptly.
+    fn fail(&self, why: &str) {
+        self.shared.mark_dead(why);
+        let _ = lock_unpoisoned(&self.writer).shutdown(Shutdown::Both);
+    }
+
+    fn wait_locked<'a>(
+        &self,
+        st: MutexGuard<'a, PipeState>,
+        deadline: Option<Instant>,
+    ) -> Result<MutexGuard<'a, PipeState>> {
+        match deadline {
+            None => Ok(self
+                .shared
+                .cv
+                .wait(st)
+                .unwrap_or_else(|poisoned| poisoned.into_inner())),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    drop(st);
+                    let why = format!(
+                        "rpc deadline exceeded ({:?}) — peer accepted but never answered",
+                        self.io_timeout.unwrap_or_default()
+                    );
+                    self.fail(&why);
+                    bail!("{why}");
+                }
+                Ok(self
+                    .shared
+                    .cv
+                    .wait_timeout(st, d - now)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .0)
+            }
+        }
+    }
+
+    /// Claim the response for `corr`, blocking until it arrives, the
+    /// connection dies, or the I/O deadline passes.
+    fn wait(&self, corr: u64) -> Result<Vec<u8>> {
+        let deadline = self.io_timeout.map(|t| Instant::now() + t);
+        let mut st = lock_unpoisoned(&self.shared.state);
+        loop {
+            if let Some(resp) = st.replies.remove(&corr) {
+                return Ok(resp);
+            }
+            if let Some(why) = st.dead.clone() {
+                bail!("pipelined rpc connection is dead: {why}");
+            }
+            st = self.wait_locked(st, deadline)?;
+        }
+    }
+
+    /// Forget an abandoned request. An already-arrived reply is discarded
+    /// now; otherwise the reader discards it (and frees the window slot) on
+    /// arrival.
+    fn abandon(&self, corr: u64) {
+        let mut st = lock_unpoisoned(&self.shared.state);
+        if st.replies.remove(&corr).is_none() {
+            st.abandoned.insert(corr);
+        }
+    }
+}
+
+impl Drop for PipeInner {
+    fn drop(&mut self) {
+        // Terminates the reader thread: the dead flag is observed within
+        // `READER_POLL`, and the shutdown usually wakes it immediately.
+        self.fail("client dropped");
+    }
+}
+
+/// A response that has been requested but not yet claimed. Dropping it
+/// without [`wait`](Self::wait) abandons the request: the reader discards
+/// its reply on arrival instead of leaking it into the completion map.
+pub struct PendingReply {
+    inner: Arc<PipeInner>,
+    corr: Option<u64>,
+}
+
+impl PendingReply {
+    /// Block for this request's response (bounded by the client's I/O
+    /// deadline).
+    pub fn wait(mut self) -> Result<Vec<u8>> {
+        let corr = self.corr.take().expect("PendingReply waited twice");
+        self.inner.wait(corr)
+    }
+}
+
+impl Drop for PendingReply {
+    fn drop(&mut self) {
+        if let Some(corr) = self.corr.take() {
+            self.inner.abandon(corr);
+        }
+    }
+}
+
+/// Pipelined RPC client: up to `window` sequence-tagged requests in flight
+/// on one TCP connection, demuxed by a background reader into a completion
+/// map. Cheap to clone (all clones share the connection, window, and
+/// completion state); [`Self::same_as`] tells clones of the same
+/// connection apart from a redialed replacement.
+#[derive(Clone)]
+pub struct PipelinedClient {
+    inner: Arc<PipeInner>,
+}
+
+impl PipelinedClient {
+    /// Dial `addr` and start the reader. `window` bounds concurrent
+    /// in-flight requests; `io_timeout` bounds every socket write and every
+    /// response wait (`None` = wait forever, the pre-deadline behavior).
+    pub fn connect(
+        addr: &str,
+        window: usize,
+        io_timeout: Option<Duration>,
+    ) -> Result<PipelinedClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("dialing pipelined rpc endpoint {addr}"))?;
+        Self::from_stream(stream, window, io_timeout)
+    }
+
+    /// Wrap an already-connected stream (loopback tests, custom dialers).
+    pub fn from_stream(
+        stream: TcpStream,
+        window: usize,
+        io_timeout: Option<Duration>,
+    ) -> Result<PipelinedClient> {
+        ensure!(window >= 1, "pipeline window must be >= 1, got {window}");
+        stream.set_nodelay(true).ok();
+        // Bound writes at the socket; reads are bounded per-wait instead
+        // (a short socket read timeout would tear partial frames apart).
+        stream.set_write_timeout(io_timeout).context("setting rpc write timeout")?;
+        let reader_stream = stream.try_clone().context("cloning pipelined rpc stream")?;
+        reader_stream
+            .set_read_timeout(Some(READER_POLL))
+            .context("setting rpc reader poll interval")?;
+        let shared = Arc::new(PipeShared {
+            state: Mutex::new(PipeState {
+                replies: HashMap::new(),
+                inflight: 0,
+                abandoned: std::collections::HashSet::new(),
+                dead: None,
+            }),
+            cv: Condvar::new(),
+        });
+        let reader_shared = shared.clone();
+        std::thread::Builder::new()
+            .name("rpc-pipeline-reader".to_string())
+            .spawn(move || reader_loop(reader_stream, &reader_shared))
+            .context("spawning rpc pipeline reader")?;
+        Ok(PipelinedClient {
+            inner: Arc::new(PipeInner {
+                writer: Mutex::new(stream),
+                shared,
+                next_corr: AtomicU64::new(1),
+                window,
+                io_timeout,
+            }),
+        })
+    }
+
+    /// Do `self` and `other` share one underlying connection?
+    pub fn same_as(&self, other: &PipelinedClient) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// The configured in-flight window.
+    pub fn window(&self) -> usize {
+        self.inner.window
+    }
+
+    /// Acquire a window slot (blocking while `window` requests are in
+    /// flight) and write one framed request. Returns the correlation id.
+    fn send(&self, msg: &[u8]) -> Result<u64> {
+        let inner = &self.inner;
+        let deadline = inner.io_timeout.map(|t| Instant::now() + t);
+        {
+            let mut st = lock_unpoisoned(&inner.shared.state);
+            loop {
+                if let Some(why) = &st.dead {
+                    bail!("pipelined rpc connection is dead: {why}");
+                }
+                if st.inflight < inner.window {
+                    break;
+                }
+                st = inner.wait_locked(st, deadline)?;
+            }
+            st.inflight += 1;
+        }
+        let corr = inner.next_corr.fetch_add(1, Ordering::Relaxed);
+        let framed = frame(corr, msg);
+        let write = {
+            let mut w = lock_unpoisoned(&inner.writer);
+            w.write_all(&(framed.len() as u32).to_le_bytes())
+                .and_then(|()| w.write_all(&framed))
+        };
+        if let Err(e) = write {
+            inner.abandon(corr);
+            let why = format!("write failed: {e}");
+            inner.fail(&why);
+            bail!("pipelined rpc {why}");
+        }
+        Ok(corr)
+    }
+
+    /// Send a wire message; block for the matching response (bounded by the
+    /// I/O deadline). Clones of this client may call concurrently — their
+    /// requests interleave on the wire up to the window.
+    pub fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        let corr = self.send(msg)?;
+        self.inner.wait(corr)
+    }
+
+    /// Send a wire message and return immediately with a completion handle;
+    /// the response is claimed by [`PendingReply::wait`], in any order
+    /// relative to other in-flight requests.
+    pub fn call_async(&self, msg: &[u8]) -> Result<PendingReply> {
+        let corr = self.send(msg)?;
+        Ok(PendingReply { inner: self.inner.clone(), corr: Some(corr) })
+    }
+}
+
+/// The background demux loop: accumulate bytes (partial-read safe), peel
+/// complete `[len][corr][msg]` frames, file responses by correlation id.
+fn reader_loop(mut stream: TcpStream, shared: &PipeShared) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = vec![0u8; 64 * 1024];
+    loop {
+        if lock_unpoisoned(&shared.state).dead.is_some() {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                shared.mark_dead("connection closed by server");
+                return;
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if let Err(why) = drain_reply_frames(&mut buf, shared) {
+                    shared.mark_dead(&why);
+                    return;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => {
+                shared.mark_dead(&format!("read failed: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Peel every complete frame out of `buf` into the completion map.
+fn drain_reply_frames(buf: &mut Vec<u8>, shared: &PipeShared) -> std::result::Result<(), String> {
+    loop {
+        if buf.len() < 4 {
+            return Ok(());
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(format!("oversized rpc frame ({len} bytes)"));
+        }
+        if buf.len() < 4 + len {
+            return Ok(());
+        }
+        let (corr, body) = match unframe(&buf[4..4 + len]) {
+            Ok(x) => x,
+            Err(e) => return Err(format!("malformed rpc frame: {e}")),
+        };
+        {
+            let mut st = lock_unpoisoned(&shared.state);
+            // The reply is here, so the request no longer occupies the
+            // wire: free its window slot whether or not anyone still
+            // wants the payload.
+            st.inflight = st.inflight.saturating_sub(1);
+            if !st.abandoned.remove(&corr) {
+                st.replies.insert(corr, body.to_vec());
+            }
+        }
+        shared.cv.notify_all();
+        buf.drain(..4 + len);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::transport::ChannelTransport;
+    use crate::comm::transport::{ChannelTransport, TcpTransport};
     use crate::comm::wire::{WireReader, WireWriter};
+    use std::net::TcpListener;
 
     #[test]
     fn echo_rpc_roundtrip() {
@@ -168,5 +545,147 @@ mod tests {
         }
         drop(client);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn dispatch_frame_preserves_correlation_id() {
+        let mut server = RpcServer::new();
+        server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+        let mut w = WireWriter::new(1);
+        w.put_u64(&[9]);
+        let req = frame(1234, &w.finish());
+        let resp = server.dispatch_frame(&req).unwrap();
+        let (corr, body) = unframe(&resp).unwrap();
+        assert_eq!(corr, 1234);
+        let r = WireReader::parse(body).unwrap();
+        assert_eq!(r.u64(0).unwrap(), vec![9]);
+        // Unknown kind surfaces as a dispatch error.
+        assert!(server.dispatch_frame(&frame(1, &WireWriter::new(7).finish())).is_err());
+    }
+
+    /// An echo server over real TCP (thread-per-connection, good enough to
+    /// exercise the client side of pipelining).
+    fn tcp_echo_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            while let Ok((stream, _)) = listener.accept() {
+                std::thread::spawn(move || {
+                    let mut server = RpcServer::new();
+                    server.register(1, Box::new(|msg| Ok(msg.to_vec())));
+                    let _ = server.serve(&TcpTransport::new(stream));
+                });
+            }
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn pipelined_client_completes_out_of_order_waits() {
+        let (addr, _server) = tcp_echo_server();
+        let client =
+            PipelinedClient::connect(&addr.to_string(), 16, Some(Duration::from_secs(30)))
+                .unwrap();
+        let pending: Vec<PendingReply> = (0..10u64)
+            .map(|i| {
+                let mut w = WireWriter::new(1);
+                w.put_u64(&[i]);
+                client.call_async(&w.finish()).unwrap()
+            })
+            .collect();
+        // Claim completions in reverse — the completion map, not response
+        // order, routes each reply to its caller.
+        for (i, p) in pending.into_iter().enumerate().rev() {
+            let resp = p.wait().unwrap();
+            let r = WireReader::parse(&resp).unwrap();
+            assert_eq!(r.u64(0).unwrap(), vec![i as u64]);
+        }
+        // The window fully recycles: plain calls still work afterwards.
+        let mut w = WireWriter::new(1);
+        w.put_u64(&[77]);
+        let resp = client.call(&w.finish()).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![77]);
+    }
+
+    #[test]
+    fn pipelined_clones_share_window_and_connection() {
+        let (addr, _server) = tcp_echo_server();
+        let client =
+            PipelinedClient::connect(&addr.to_string(), 8, Some(Duration::from_secs(30)))
+                .unwrap();
+        let clone = client.clone();
+        assert!(client.same_as(&clone));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let c = clone.clone();
+                std::thread::spawn(move || {
+                    for i in 0..25u64 {
+                        let mut w = WireWriter::new(1);
+                        w.put_u64(&[t * 1000 + i]);
+                        let resp = c.call(&w.finish()).unwrap();
+                        let r = WireReader::parse(&resp).unwrap();
+                        assert_eq!(r.u64(0).unwrap(), vec![t * 1000 + i]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stalled_server_errors_within_deadline_instead_of_hanging() {
+        // A server that accepts and then never answers: the bug this layer
+        // fixes is the trainer hanging forever on exactly this peer.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stall = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_secs(10));
+            drop(stream);
+        });
+        let client = PipelinedClient::connect(
+            &addr.to_string(),
+            4,
+            Some(Duration::from_millis(300)),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let err = client.call(&WireWriter::new(1).finish()).unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(
+            format!("{err:#}").contains("deadline"),
+            "error must cite the deadline: {err:#}"
+        );
+        assert!(
+            elapsed >= Duration::from_millis(250) && elapsed < Duration::from_secs(5),
+            "expected ~300ms deadline, took {elapsed:?}"
+        );
+        // The connection is dead for every subsequent call, immediately.
+        assert!(client.call(&WireWriter::new(1).finish()).is_err());
+        drop(client);
+        stall.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_pending_reply_releases_its_window_slot() {
+        let (addr, _server) = tcp_echo_server();
+        let client =
+            PipelinedClient::connect(&addr.to_string(), 2, Some(Duration::from_secs(10)))
+                .unwrap();
+        for _ in 0..10 {
+            let mut w = WireWriter::new(1);
+            w.put_u64(&[1]);
+            // Window is 2: each iteration only proceeds because arriving
+            // echo replies free their slots even though every handle is
+            // dropped unclaimed — abandoned replies must be discarded, not
+            // leaked into the completion map or left occupying the window.
+            let _abandoned = client.call_async(&w.finish()).unwrap();
+        }
+        let mut w = WireWriter::new(1);
+        w.put_u64(&[5]);
+        let resp = client.call(&w.finish()).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![5]);
     }
 }

@@ -10,6 +10,8 @@ use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
+use crate::util::lock_unpoisoned;
+
 /// A bidirectional frame pipe.
 pub trait Transport: Send {
     fn send(&self, frame: Vec<u8>) -> anyhow::Result<()>;
@@ -77,7 +79,7 @@ impl TcpTransport {
     /// restores blocking forever). The NN-worker ring uses this so a dead
     /// peer surfaces as an error within the ring timeout instead of a hang.
     pub fn set_timeouts(&self, dur: Option<std::time::Duration>) -> anyhow::Result<()> {
-        let s = self.stream.lock().unwrap();
+        let s = lock_unpoisoned(&self.stream);
         s.set_read_timeout(dur)?;
         s.set_write_timeout(dur)?;
         Ok(())
@@ -86,14 +88,14 @@ impl TcpTransport {
 
 impl Transport for TcpTransport {
     fn send(&self, frame: Vec<u8>) -> anyhow::Result<()> {
-        let mut s = self.stream.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.stream);
         s.write_all(&(frame.len() as u32).to_le_bytes())?;
         s.write_all(&frame)?;
         Ok(())
     }
 
     fn recv(&self) -> anyhow::Result<Vec<u8>> {
-        let mut s = self.stream.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.stream);
         let mut len_buf = [0u8; 4];
         s.read_exact(&mut len_buf)?;
         let len = u32::from_le_bytes(len_buf) as usize;

@@ -26,8 +26,17 @@ pub struct RecoveryConfig {
     /// this is what lets a PS shard process killed and restarted from its
     /// checkpoint epoch rejoin a run mid-flight (§4.2.4).
     pub attempts: u32,
-    /// Constant delay between reconnect attempts, in milliseconds.
+    /// Base reconnect delay in milliseconds: retry `r` sleeps about
+    /// `backoff_ms · 2^(r-1)`, capped and deterministically jittered per
+    /// client (see [`RetryPolicy::delay`](crate::recovery::RetryPolicy::delay))
+    /// so a restarted shard is not hit by every client at once.
     pub backoff_ms: u64,
+    /// Per-call I/O deadline in milliseconds (`--io-timeout-ms`): bounds
+    /// every socket write and every response wait on the pooled
+    /// connections, so a server that accepts and then wedges trips the
+    /// retry path instead of hanging the trainer forever. 0 disables the
+    /// deadline (the pre-PR-6 wait-forever behavior).
+    pub io_timeout_ms: u64,
     /// Keep a per-shard log of successfully applied gradient puts since the
     /// last committed checkpoint epoch, and replay it into a shard that
     /// comes back restored from that epoch (detected via the INFO boot
@@ -44,7 +53,13 @@ pub struct RecoveryConfig {
 
 impl Default for RecoveryConfig {
     fn default() -> Self {
-        Self { attempts: 4, backoff_ms: 50, replay_puts: false, replay_cap: 4096 }
+        Self {
+            attempts: 4,
+            backoff_ms: 50,
+            io_timeout_ms: 30_000,
+            replay_puts: false,
+            replay_cap: 4096,
+        }
     }
 }
 
@@ -55,6 +70,12 @@ impl RecoveryConfig {
             bail!("recovery replay_cap must be >= 1 when replay_puts is on");
         }
         Ok(())
+    }
+
+    /// The per-call I/O deadline as a [`std::time::Duration`] (`None` when
+    /// disabled with 0) — the form the RPC clients consume.
+    pub fn io_timeout(&self) -> Option<std::time::Duration> {
+        (self.io_timeout_ms > 0).then(|| std::time::Duration::from_millis(self.io_timeout_ms))
     }
 }
 
@@ -68,11 +89,17 @@ pub struct ServiceConfig {
     /// (`host:port,host:port,...`) that jointly cover the PS node space —
     /// see [`ShardedRemotePs`](crate::service::ShardedRemotePs).
     pub addr: String,
-    /// TCP connections in the client pool *per shard process*. Each
-    /// connection carries one request at a time, so this bounds in-flight
-    /// PS requests per (process, shard) pair; the trainer's NN-worker
-    /// threads and gradient appliers share the pool.
+    /// TCP connections in the client pool *per shard process*. Connections
+    /// are pipelined (see `inflight_window`), so this is about spreading
+    /// load across sockets, not about concurrency alone; the trainer's
+    /// NN-worker threads and gradient appliers share the pool.
     pub client_conns: usize,
+    /// Requests in flight per pooled connection (`--inflight-window`):
+    /// sends are sequence-tagged and responses demuxed by correlation id,
+    /// so scatter-gather GET/PUT across shards overlaps on one socket
+    /// instead of paying a round-trip per request. 1 degrades to the old
+    /// lock-step call/response.
+    pub inflight_window: usize,
     /// Apply the §4.2.3 lossy fp16 value compression to row/gradient
     /// payloads on the PS wire (index compression — unique keys only — is
     /// always on). Off by default so the remote PS is bit-identical to the
@@ -88,6 +115,7 @@ impl Default for ServiceConfig {
         Self {
             addr: "127.0.0.1:7700".to_string(),
             client_conns: 4,
+            inflight_window: 32,
             wire_compress: false,
             recovery: RecoveryConfig::default(),
         }
@@ -126,6 +154,9 @@ impl ServiceConfig {
         }
         if self.client_conns == 0 {
             bail!("client_conns must be >= 1");
+        }
+        if self.inflight_window == 0 {
+            bail!("inflight_window must be >= 1 (1 = lock-step call/response)");
         }
         self.recovery.validate()?;
         Ok(())
@@ -307,6 +338,18 @@ mod tests {
         assert!(ServiceConfig::at("").validate().is_err());
         let cfg = ServiceConfig { client_conns: 0, ..ServiceConfig::default() };
         assert!(cfg.validate().is_err());
+        let cfg = ServiceConfig { inflight_window: 0, ..ServiceConfig::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn io_timeout_zero_means_disabled() {
+        let cfg = RecoveryConfig { io_timeout_ms: 0, ..RecoveryConfig::default() };
+        assert_eq!(cfg.io_timeout(), None);
+        let cfg = RecoveryConfig { io_timeout_ms: 1500, ..RecoveryConfig::default() };
+        assert_eq!(cfg.io_timeout(), Some(std::time::Duration::from_millis(1500)));
+        // The default deadline is on: hangs must be opt-in, not opt-out.
+        assert!(RecoveryConfig::default().io_timeout().is_some());
     }
 
     #[test]

@@ -12,13 +12,17 @@
 //!   [`RingMember`](crate::allreduce::ring::RingMember) plus the shared
 //!   gossip slots FullAsync uses for best-effort replica averaging.
 //! * [`TcpRingMember`](crate::allreduce::tcp_ring::TcpRingMember) — the
-//!   real-socket ring; its `replica_average` is a true ring AllReduce (the
-//!   only cross-process averaging primitive available), which is strictly
-//!   stronger than the threads' best-effort gossip.
+//!   real-socket ring; its `replica_average` is true peer-to-peer gossip
+//!   over the [`GossipFabric`](crate::allreduce::GossipFabric): each rank
+//!   posts its replica fire-and-forget and averages whatever arrived, so a
+//!   slow or stalled peer never holds up anyone's step (it used to be a
+//!   ring AllReduce — a barrier FullAsync exists to avoid).
 //!
 //! Both expose the ring **ordering token**, which [`ordered`] uses to
 //! serialize PS access in rank order — the piece that makes a deterministic
 //! FullSync run bit-reproducible across `k` workers, threads or processes.
+//! [`DenseComm::replica_average_ordered`] runs the gossip under the same
+//! token, extending that guarantee to deterministic FullAsync.
 
 use std::sync::{Arc, Mutex};
 
@@ -28,6 +32,7 @@ use crate::allreduce::ring::RingMember;
 use crate::allreduce::tcp_ring::TcpRingMember;
 use crate::allreduce::RingGroup;
 use crate::comm::NetSim;
+use crate::util::lock_unpoisoned;
 
 /// The dense AllReduce fabric one NN-worker rank holds.
 pub trait DenseComm: Send {
@@ -46,10 +51,31 @@ pub trait DenseComm: Send {
     /// Receive the deterministic-ordering token from the predecessor rank.
     fn token_recv(&mut self) -> Result<()>;
 
-    /// FullAsync's periodic replica averaging. In-process: best-effort
-    /// gossip over shared slots. Cross-process: a ring AllReduce mean.
-    /// Returns simulated communication seconds.
+    /// FullAsync's periodic replica averaging: best-effort gossip —
+    /// in-process over shared slots, cross-process over the peer-to-peer
+    /// gossip mesh. Never a barrier: a slow peer's replica is simply
+    /// missing from the average. Returns simulated communication seconds.
     fn replica_average(&mut self, params: &mut [f32]) -> Result<f64>;
+
+    /// [`DenseComm::replica_average`] run inside a token-ordered section
+    /// (same protocol as [`ordered`], inlined here because the section
+    /// needs `&mut self` for the averaging itself): ranks post+average
+    /// serialized in rank order, so each rank's view of its peers is a
+    /// pure function of rank — the deterministic FullAsync variant.
+    fn replica_average_ordered(&mut self, params: &mut [f32]) -> Result<f64> {
+        if self.world() == 1 {
+            return self.replica_average(params);
+        }
+        if self.rank() > 0 {
+            self.token_recv()?;
+        }
+        let sim = self.replica_average(params)?;
+        self.token_send()?;
+        if self.rank() == 0 {
+            self.token_recv()?;
+        }
+        Ok(sim)
+    }
 }
 
 /// Run `f` serialized in rank order 0, 1, ..., k-1: each rank waits for the
@@ -117,14 +143,14 @@ impl DenseComm for ThreadRing {
         // replicas have posted so far (paper: FullAsync replicas drift and
         // are only loosely re-centered).
         let rank = self.member.rank();
-        *self.gossip[rank].lock().unwrap() = params.to_vec();
+        *lock_unpoisoned(&self.gossip[rank]) = params.to_vec();
         let mut acc = params.to_vec();
         let mut n = 1.0f32;
         for (i, slot) in self.gossip.iter().enumerate() {
             if i == rank {
                 continue;
             }
-            let other = slot.lock().unwrap();
+            let other = lock_unpoisoned(slot);
             if other.len() == acc.len() {
                 for (a, o) in acc.iter_mut().zip(other.iter()) {
                     *a += o;
@@ -163,10 +189,29 @@ impl DenseComm for TcpRingMember {
     }
 
     fn replica_average(&mut self, params: &mut [f32]) -> Result<f64> {
-        // No shared memory across processes: re-center replicas with a real
-        // ring AllReduce (a barrier — stronger than the threads' gossip,
-        // same statistical intent).
-        TcpRingMember::all_reduce_mean(self, params)
+        // True cross-process gossip: post fire-and-forget, average what
+        // arrived. A stalled peer costs nothing — its replica is simply
+        // absent until it posts again.
+        TcpRingMember::gossip_average(self, params)
+    }
+
+    fn replica_average_ordered(&mut self, params: &mut [f32]) -> Result<f64> {
+        // Same token protocol as the default, but the post is acknowledged
+        // by every receiver before the token moves on — so rank r's average
+        // sees exactly ranks 0..r of this round plus everyone's previous
+        // round, matching the threaded shared-slot gossip bit-for-bit.
+        if TcpRingMember::world(self) == 1 {
+            return Ok(0.0);
+        }
+        if TcpRingMember::rank(self) > 0 {
+            self.recv_token()?;
+        }
+        let sim = TcpRingMember::gossip_average_acked(self, params)?;
+        self.send_token()?;
+        if TcpRingMember::rank(self) == 0 {
+            self.recv_token()?;
+        }
+        Ok(sim)
     }
 }
 
@@ -209,6 +254,28 @@ mod tests {
         let mut comm = ThreadRing::group(1, net).pop().unwrap();
         let out = ordered(&mut comm, || Ok(42)).unwrap();
         assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn poisoned_gossip_slot_does_not_cascade() {
+        // A worker thread that panics while holding a gossip slot must not
+        // take every later replica_average down with a PoisonError panic.
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let comms = ThreadRing::group(2, net);
+        let mut it = comms.into_iter();
+        let mut c0 = it.next().unwrap();
+        let c1 = it.next().unwrap();
+        let slots = c1.gossip.clone();
+        let h = std::thread::spawn(move || {
+            let _guard = slots[1].lock().unwrap();
+            panic!("die holding rank 1's gossip slot");
+        });
+        assert!(h.join().is_err(), "the poisoner must have panicked");
+        assert!(c1.gossip[1].is_poisoned(), "slot 1 must be poisoned");
+        let mut p0 = vec![1.0f32, 3.0];
+        c0.replica_average(&mut p0).unwrap();
+        // Slot 1 was still empty when poisoned, so rank 0 averages alone.
+        assert_eq!(p0, vec![1.0, 3.0]);
     }
 
     #[test]

@@ -27,9 +27,12 @@
 //! * `Hybrid` — + dense AllReduce overlapped with backward (simulated-clock
 //!   overlap; the paper does this with Bagua's fused bucket schedule).
 //! * `FullAsync` — no dense barrier at all: each worker steps its own
-//!   replica and replicas are gossip-averaged only every `ASYNC_SYNC_EVERY`
-//!   steps; embedding staleness unbounded (2τ pipeline). Statistical
-//!   efficiency drops — exactly the paper's argument for hybrid.
+//!   replica and replicas are gossip-averaged only every
+//!   [`Trainer::gossip_period`] steps (best-effort gossip in both
+//!   deployments — shared slots in-process, the peer-to-peer
+//!   [`GossipFabric`](crate::allreduce::GossipFabric) across processes);
+//!   embedding staleness unbounded (2τ pipeline). Statistical efficiency
+//!   drops — exactly the paper's argument for hybrid.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -54,8 +57,9 @@ use crate::worker::{EmbComm, LocalEmbTier};
 use super::dense_comm::{ordered, DenseComm, ThreadRing};
 use super::gantt::GanttTimeline;
 
-/// How often FullAsync gossip-averages the dense replicas.
-const ASYNC_SYNC_EVERY: u64 = 64;
+/// Default for [`Trainer::gossip_period`] — how often FullAsync
+/// gossip-averages the dense replicas.
+const DEFAULT_GOSSIP_PERIOD: u64 = 64;
 
 /// Total tries an async gradient applier gives one put. A failed
 /// `push_grads` re-buffers its samples, so each retry replays the exact
@@ -229,12 +233,16 @@ pub struct Trainer {
     /// batches ahead, so bounded staleness is preserved, but the whole run
     /// becomes bit-reproducible — the loopback service test relies on this
     /// to assert exact in-process vs. remote parity. With more than one NN
-    /// worker this requires `FullSync` mode: the ring's ordering token then
-    /// serializes every PS read/write in rank order (see
-    /// [`super::dense_comm::ordered`]), which is what lets a multi-process
-    /// `train-worker` deployment be proven numerically identical to the
-    /// threaded run.
+    /// worker this requires `FullSync` or `FullAsync` mode: the ring's
+    /// ordering token then serializes every PS read/write (and FullAsync's
+    /// replica gossip) in rank order (see [`super::dense_comm::ordered`]),
+    /// which is what lets a multi-process `train-worker` deployment be
+    /// proven numerically identical to the threaded run.
     pub deterministic: bool,
+    /// FullAsync re-centers the drifting dense replicas every this many
+    /// steps (`--gossip-period`; best-effort gossip, token-ordered acked
+    /// gossip when `deterministic`). Ignored by the other modes.
+    pub gossip_period: u64,
     /// Cut coordinated checkpoint epochs (`--checkpoint-dir` +
     /// `--checkpoint-every`): rank 0 drives the two-phase PREPARE/COMMIT
     /// across the PS deployment at every `every`-step boundary and writes
@@ -271,6 +279,7 @@ impl Trainer {
             ps_backend: None,
             emb_comm: None,
             deterministic: false,
+            gossip_period: DEFAULT_GOSSIP_PERIOD,
             checkpoint: None,
             start_step: 0,
             resume: None,
@@ -365,16 +374,24 @@ impl Trainer {
         self.cluster.validate()?;
         self.train.validate()?;
         // Bit-reproducibility with k > 1 needs a global order on the shared
-        // PS; only FullSync's per-step barrier structure lets the ring
-        // token impose one. The async modes stay single-worker.
+        // PS, which the ring token can impose on FullSync's per-step
+        // structure and on FullAsync (ordered prefetch + inline ordered
+        // push + token-ordered acked gossip). The hybrid modes' applier
+        // threads stay single-worker.
         anyhow::ensure!(
             !self.deterministic
                 || self.cluster.n_nn_workers == 1
-                || self.train.mode == TrainMode::FullSync,
-            "deterministic mode requires n_nn_workers == 1 or --mode sync \
+                || self.train.mode == TrainMode::FullSync
+                || self.train.mode == TrainMode::FullAsync,
+            "deterministic mode requires n_nn_workers == 1 or --mode sync/async \
              (got {} workers, mode {})",
             self.cluster.n_nn_workers,
             self.train.mode.name()
+        );
+        anyhow::ensure!(
+            self.gossip_period >= 1,
+            "--gossip-period must be >= 1 (got {})",
+            self.gossip_period
         );
         anyhow::ensure!(
             self.start_step < self.train.steps,
@@ -813,10 +830,10 @@ impl Trainer {
         }
         let mut pipeline: VecDeque<Prefetched> = VecDeque::new();
         let mut sim_t = 0.0f64; // this worker's simulated clock
-        // Deterministic multi-worker FullSync: serialize every PS touch in
-        // rank order via the ring token (see `dense_comm::ordered`), so the
-        // run is bit-reproducible and provably identical across thread and
-        // process deployments.
+        // Deterministic multi-worker FullSync/FullAsync: serialize every PS
+        // touch (and FullAsync's replica gossip) in rank order via the ring
+        // token (see `dense_comm::ordered`), so the run is bit-reproducible
+        // and provably identical across thread and process deployments.
         let order_ps = self.deterministic && comm.world() > 1;
 
         // Pull the next embedding-complete batch through the tier seam: the
@@ -873,12 +890,19 @@ impl Trainer {
             };
             opt.step(&mut params, &grad);
 
-            // FullAsync: replicas drift; re-center periodically (gossip
-            // in-process, a ring AllReduce across processes).
+            // FullAsync: replicas drift; re-center periodically with
+            // best-effort gossip (shared slots in-process, the peer-to-peer
+            // fabric across processes — never a barrier). Deterministic
+            // runs use the token-ordered acked variant so the averaging is
+            // reproducible and deployment-independent.
             if mode == TrainMode::FullAsync
-                && step as u64 % ASYNC_SYNC_EVERY == ASYNC_SYNC_EVERY - 1
+                && step as u64 % self.gossip_period == self.gossip_period - 1
             {
-                comm.replica_average(&mut params)?;
+                if order_ps {
+                    comm.replica_average_ordered(&mut params)?;
+                } else {
+                    comm.replica_average(&mut params)?;
+                }
             }
 
             // Embedding gradient return (Alg. 2 last line -> Alg. 1 backward).
@@ -898,7 +922,14 @@ impl Trainer {
                     // the async appliers would produce is preserved, just
                     // without thread-timing nondeterminism. Cost stays off
                     // the critical path (same overlap accounting as async).
-                    tier.push_grads(pf.ew, &pf.sids, &out.grad_emb)?;
+                    // Multi-worker (deterministic FullAsync): the push is
+                    // one more token-ordered section, so every PS write
+                    // lands in rank order like the prefetches.
+                    if order_ps {
+                        ordered(comm, || tier.push_grads(pf.ew, &pf.sids, &out.grad_emb))?;
+                    } else {
+                        tier.push_grads(pf.ew, &pf.sids, &out.grad_emb)?;
+                    }
                     0.0
                 }
                 _ => {
@@ -1221,12 +1252,40 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_multiworker_rejected_for_async_modes() {
-        for mode in [TrainMode::Hybrid, TrainMode::HybridRaw, TrainMode::FullAsync] {
+    fn deterministic_multiworker_rejected_for_hybrid_modes() {
+        // The hybrid modes' applier threads are inherently unordered;
+        // FullSync and FullAsync have token-ordered deterministic variants.
+        for mode in [TrainMode::Hybrid, TrainMode::HybridRaw] {
             let mut t = small_setup(mode, 10, 2);
             t.deterministic = true;
             assert!(t.run_rust().is_err(), "{mode:?} must reject deterministic k>1");
         }
+    }
+
+    #[test]
+    fn deterministic_async_multiworker_is_bit_reproducible() {
+        // Token-ordered prefetch, inline ordered push, and ordered acked
+        // gossip make even a k > 1 FullAsync run exactly reproducible — the
+        // property the cross-process gossip parity test builds on.
+        let run = || {
+            let mut t = small_setup(TrainMode::FullAsync, 40, 2);
+            t.deterministic = true;
+            t.gossip_period = 8;
+            t.train.eval_every = 20;
+            t.run_rust().unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.tracker.losses, b.tracker.losses);
+        assert_eq!(a.tracker.aucs, b.tracker.aucs);
+        assert_eq!(a.final_params, b.final_params);
+    }
+
+    #[test]
+    fn zero_gossip_period_rejected() {
+        let mut t = small_setup(TrainMode::FullAsync, 5, 1);
+        t.gossip_period = 0;
+        assert!(t.run_rust().is_err(), "gossip period 0 must be rejected");
     }
 
     #[test]

@@ -130,6 +130,8 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
     );
     let mut trainer = Trainer::new(model, emb_cfg, cluster, train, dataset);
     trainer.deterministic = flag(flags, "deterministic", "false") == "true";
+    trainer.gossip_period =
+        flag(flags, "gossip-period", "64").parse().context("--gossip-period")?;
     // Kept past the connect so --resume-from can interrogate the shards'
     // restored epochs.
     let mut remote_ps: Option<Arc<ShardedRemotePs>> = None;
@@ -137,10 +139,12 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         let svc = ServiceConfig {
             addr: addr.clone(),
             client_conns: flag(flags, "ps-conns", "4").parse()?,
+            inflight_window: flag(flags, "inflight-window", "32").parse()?,
             wire_compress: flag(flags, "ps-wire-compress", "false") == "true",
             recovery: RecoveryConfig {
                 attempts: flag(flags, "ps-retries", "4").parse()?,
                 backoff_ms: flag(flags, "ps-retry-ms", "50").parse()?,
+                io_timeout_ms: flag(flags, "io-timeout-ms", "30000").parse()?,
                 replay_puts: flag(flags, "ps-replay", "false") == "true",
                 replay_cap: flag(flags, "ps-replay-cap", "4096").parse()?,
             },
@@ -172,10 +176,12 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         let svc = ServiceConfig {
             addr: addrs.clone(),
             client_conns: flag(flags, "ew-conns", "2").parse()?,
+            inflight_window: flag(flags, "inflight-window", "32").parse()?,
             wire_compress: false,
             recovery: RecoveryConfig {
                 attempts: flag(flags, "ew-retries", "4").parse()?,
                 backoff_ms: flag(flags, "ew-retry-ms", "50").parse()?,
+                io_timeout_ms: flag(flags, "io-timeout-ms", "30000").parse()?,
                 ..RecoveryConfig::default()
             },
         };
@@ -574,7 +580,8 @@ fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
         ^ u64::from(ring_cfg.compress)
         ^ (u64::from(ps_wire_compress) << 1)
         ^ (ckpt_every << 2)
-        ^ ((trainer.start_step as u64) << 20))
+        ^ ((trainer.start_step as u64) << 20)
+        ^ trainer.gossip_period.rotate_left(44))
         .wrapping_mul(0x0000_0100_0000_01b3);
     let make_comm = move |net: Arc<NetSim>| -> Result<Box<dyn DenseComm>> {
         let member = rz.connect(fingerprint, net)?;
@@ -672,11 +679,11 @@ fn usage() -> ! {
          [--preset taobao] \
          [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
          [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
-         [--verbose true] [--deterministic true]\n\
+         [--verbose true] [--deterministic true] [--gossip-period N]\n\
          sharded PS: persia serve-ps [--addr 127.0.0.1:7700] [--node-range A..B] \
          [--checkpoint-dir DIR] — one process per shard — then \
          persia train --remote-ps addr1[,addr2,...] [--ps-conns N] [--ps-wire-compress true] \
-         [--ps-retries N] [--ps-retry-ms MS] \
+         [--ps-retries N] [--ps-retry-ms MS] [--inflight-window N] [--io-timeout-ms MS] \
          (same --preset/--dense/--shard-capacity/--seed on every process; \
          the --node-range slices must partition the PS nodes exactly)\n\
          embedding-worker tier: persia serve-embedding-worker [--addr 127.0.0.1:7900] \
@@ -684,7 +691,8 @@ fn usage() -> ! {
          worker, identical train flags (--emb-workers = worker-process count, \
          --nn-workers/--world = NN world size) — then \
          persia train --embedding-workers addr1[,addr2,...] [--ew-conns N] [--ew-retries N] \
-         [--ew-retry-ms MS] (NN ranks are assigned round-robin, rank mod M)\n\
+         [--ew-retry-ms MS] [--inflight-window N] [--io-timeout-ms MS] (NN ranks are \
+         assigned round-robin, rank mod M)\n\
          multi-process NN workers: persia train-worker --rank R --world N \
          [--rendezvous 127.0.0.1:7800] [--listen-host HOST] [--ring-timeout-ms MS] \
          [--ring-compress true] --remote-ps|--embedding-workers addr1[,addr2,...] — one \

@@ -9,10 +9,13 @@
 //! failure-shaped now lives here, configured by one
 //! [`RecoveryConfig`](crate::config::RecoveryConfig):
 //!
-//! * [`retry`] — [`RetryPolicy`]: bounded attempts + constant backoff, plus
-//!   the deadline-bounded [`dial_retry`] the ring rendezvous uses.
-//! * [`pool`] — [`ReconnectPool`]: the self-healing round-robin RPC
-//!   connection pool, with per-protocol dial/handshake behind [`Redial`].
+//! * [`retry`] — [`RetryPolicy`]: bounded attempts with capped-exponential,
+//!   deterministically-jittered backoff (no reconnect thundering herd),
+//!   plus the deadline-bounded [`dial_retry`] the ring rendezvous uses.
+//! * [`pool`] — [`ReconnectPool`]: the self-healing round-robin pool of
+//!   pipelined RPC connections (sync [`ReconnectPool::call`] and
+//!   scatter-friendly [`ReconnectPool::call_async`]), with per-protocol
+//!   dial/handshake behind [`Redial`].
 //! * [`replay`] — [`PutReplayLog`] (client-side gradient-put replay into a
 //!   shard restored from an older epoch) and [`ReplayRing`] (server-side
 //!   bounded response replay for reconnect retries).
@@ -36,6 +39,6 @@ pub use coordinator::{
     atomic_write, epoch_dir, latest_epoch, load_manifest, parse_epoch_dir_name, run_epoch,
     EpochConfig, GlobalManifest,
 };
-pub use pool::{PooledConn, ReconnectPool, Redial};
+pub use pool::{PoolAsyncCall, PooledConn, ReconnectPool, Redial};
 pub use replay::{PutReplayLog, ReplayRing};
 pub use retry::{dial_retry, remaining, RetryPolicy};

@@ -9,6 +9,15 @@
 //! extracted once; what differs per protocol — how to dial, handshake, and
 //! verify a fresh connection — lives behind the [`Redial`] trait.
 //!
+//! Each slot holds a [`PipelinedClient`]: many sequence-tagged requests in
+//! flight per connection, demuxed by correlation id. Callers clone the
+//! client *out* of the slot and do their I/O with the slot lock released,
+//! so one slow RPC never serializes the other threads sharing the slot —
+//! and [`ReconnectPool::call_async`] exposes the pipelining directly for
+//! scatter-gather clients. Slots recover from mutex poisoning
+//! ([`lock_unpoisoned`]): a thread that panics mid-pool must not take every
+//! other trainer thread down with it.
+//!
 //! A redial is also where §4.2.4 recovery hooks in: the PS client's
 //! [`Redial`] impl notices (via the INFO boot nonce) that the server is a
 //! *new process* restored from a checkpoint epoch and replays its
@@ -20,13 +29,14 @@ use std::sync::Mutex;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::comm::rpc::RpcClient;
-use crate::comm::transport::TcpTransport;
+use crate::comm::rpc::{PendingReply, PipelinedClient};
+use crate::util::lock_unpoisoned;
 
 use super::retry::RetryPolicy;
 
-/// One pooled RPC connection.
-pub type PooledConn = RpcClient<TcpTransport>;
+/// One pooled RPC connection: a pipelined client, cheap to clone out of
+/// its slot (clones share the connection, window, and completion map).
+pub type PooledConn = PipelinedClient;
 
 /// Dial + handshake policy of one pooled endpoint.
 ///
@@ -45,9 +55,10 @@ pub trait Redial: Send + Sync {
     fn describe(&self) -> String;
 }
 
-/// A fixed-size pool of mutex-guarded connections shared round-robin by all
-/// threads of a process; each connection carries one request at a time, so
-/// responses always match their requests without correlation-id reordering.
+/// A fixed-size pool of pipelined connections shared round-robin by all
+/// threads of a process. Requests are correlation-id tagged, so many can
+/// overlap per connection; a connection that fails is dropped from its
+/// slot and transparently re-dialed with the policy's jittered backoff.
 pub struct ReconnectPool<R: Redial> {
     redial: R,
     policy: RetryPolicy,
@@ -77,6 +88,29 @@ impl<R: Redial> ReconnectPool<R> {
         &self.redial
     }
 
+    /// Clone the slot's client out (re-dialing first if the slot is empty),
+    /// releasing the slot lock before any I/O happens on it.
+    fn client_at(&self, slot: usize) -> Result<PooledConn> {
+        let mut guard = lock_unpoisoned(&self.clients[slot]);
+        if let Some(c) = guard.as_ref() {
+            return Ok(c.clone());
+        }
+        let fresh = self.redial.redial()?;
+        *guard = Some(fresh.clone());
+        Ok(fresh)
+    }
+
+    /// Drop `failed` from its slot so the next caller re-dials — but only
+    /// if the slot still holds that exact connection (via
+    /// [`PipelinedClient::same_as`]); a replacement dialed by a faster
+    /// thread stays.
+    fn discard(&self, slot: usize, failed: &PooledConn) {
+        let mut guard = lock_unpoisoned(&self.clients[slot]);
+        if guard.as_ref().is_some_and(|c| c.same_as(failed)) {
+            *guard = None;
+        }
+    }
+
     /// One RPC over the pool, transparently re-dialing a dead connection.
     ///
     /// Note on retries: idempotence is the *protocol's* job. GET/STATS/
@@ -84,34 +118,31 @@ impl<R: Redial> ReconnectPool<R> {
     /// a server-side replay cache, replay-logged, or tolerated per the
     /// paper's §4.2.4 stance — see each client's docs.
     pub fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
-        let slot = &self.clients[i];
+        let slot = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.policy.attempts {
             if attempt > 0 {
-                // Backoff with the slot lock RELEASED: during an outage every
-                // thread waiting on this slot sleeps in parallel instead of
-                // queueing behind one holder's full retry schedule. (Redial
-                // itself stays under the lock — connecting to a live server
-                // is fast, and a dead one refuses immediately on loopback.)
-                std::thread::sleep(self.policy.backoff);
-            }
-            let mut guard = slot.lock().unwrap();
-            if guard.is_none() {
-                match self.redial.redial() {
-                    Ok(client) => *guard = Some(client),
-                    Err(e) => {
-                        last_err = Some(e);
-                        continue;
-                    }
+                // Backoff with the slot lock released, salted by the slot
+                // index: during an outage, threads on different slots
+                // spread their re-dials out instead of herding.
+                let d = self.policy.delay(attempt, slot as u64);
+                if !d.is_zero() {
+                    std::thread::sleep(d);
                 }
             }
-            match guard.as_ref().expect("connection present").call(msg) {
+            let client = match self.client_at(slot) {
+                Ok(c) => c,
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match client.call(msg) {
                 Ok(resp) => return Ok(resp),
                 Err(e) => {
-                    // Connection is toast (peer died, frame torn): drop it so
-                    // the next attempt re-dials instead of reusing it.
-                    *guard = None;
+                    // Connection is toast (peer died, frame torn, deadline
+                    // blown): drop it so the next attempt re-dials.
+                    self.discard(slot, &client);
                     last_err = Some(e);
                 }
             }
@@ -124,16 +155,65 @@ impl<R: Redial> ReconnectPool<R> {
             )
         })
     }
+
+    /// Start one RPC without blocking for its response: the request goes
+    /// out pipelined on the slot's connection, and the returned handle
+    /// claims the reply later — so a scatter over N shards overlaps all N
+    /// round-trips. If the fast path fails at any point (send or reply),
+    /// [`PoolAsyncCall::wait`] falls back to the fully-retrying
+    /// [`Self::call`], preserving the pool's recovery semantics.
+    pub fn call_async(&self, msg: &[u8]) -> PoolAsyncCall<'_, R> {
+        let slot = self.next.fetch_add(1, Ordering::Relaxed) % self.clients.len();
+        let fast = match self.client_at(slot) {
+            Ok(client) => match client.call_async(msg) {
+                Ok(pending) => Some((client, pending)),
+                Err(_) => {
+                    self.discard(slot, &client);
+                    None
+                }
+            },
+            Err(_) => None,
+        };
+        PoolAsyncCall { pool: self, msg: msg.to_vec(), slot, fast }
+    }
+}
+
+/// An in-flight pooled RPC started by [`ReconnectPool::call_async`].
+/// Dropping it without [`wait`](Self::wait) abandons the request.
+pub struct PoolAsyncCall<'a, R: Redial> {
+    pool: &'a ReconnectPool<R>,
+    /// Retained so a failed fast path can be retried from scratch.
+    msg: Vec<u8>,
+    slot: usize,
+    fast: Option<(PooledConn, PendingReply)>,
+}
+
+impl<R: Redial> PoolAsyncCall<'_, R> {
+    /// Block for the response. A pipelined fast-path failure discards the
+    /// broken connection and retries the request through the pool's normal
+    /// reconnect-with-backoff path (the same at-least-once semantics as
+    /// [`ReconnectPool::call`]).
+    pub fn wait(mut self) -> Result<Vec<u8>> {
+        if let Some((client, pending)) = self.fast.take() {
+            match pending.wait() {
+                Ok(resp) => return Ok(resp),
+                Err(_) => self.pool.discard(self.slot, &client),
+            }
+        }
+        self.pool.call(&self.msg)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::rpc::RpcServer;
+    use crate::comm::transport::TcpTransport;
     use crate::comm::wire::{WireReader, WireWriter};
     use std::net::TcpListener;
     use std::sync::atomic::AtomicU32;
     use std::sync::Arc;
+    use std::time::Duration;
 
     const KIND: u32 = 0x0901;
 
@@ -166,7 +246,7 @@ mod tests {
     impl Redial for EchoRedial {
         fn redial(&self) -> Result<PooledConn> {
             self.handshakes.fetch_add(1, Ordering::Relaxed);
-            Ok(RpcClient::new(TcpTransport::connect(&self.addr)?))
+            PipelinedClient::connect(&self.addr, 8, Some(Duration::from_secs(10)))
         }
 
         fn describe(&self) -> String {
@@ -215,6 +295,89 @@ mod tests {
         let r = WireReader::parse(&resp).unwrap();
         assert_eq!(r.u64(0).unwrap(), vec![2]);
         assert!(pool.redialer().handshakes.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn async_calls_overlap_and_complete_out_of_order() {
+        let (addr, conns) = echo_server();
+        let pool = ReconnectPool::connect(
+            EchoRedial { addr, handshakes: AtomicU32::new(0) },
+            2,
+            RetryPolicy::new(2, 10),
+        )
+        .unwrap();
+        // All twelve go out before any response is claimed, overlapping on
+        // the two pooled connections; waits happen in reverse.
+        let pending: Vec<_> = (0..12u64).map(|x| pool.call_async(&msg(x))).collect();
+        for (x, p) in pending.into_iter().enumerate().rev() {
+            let resp = p.wait().unwrap();
+            let r = WireReader::parse(&resp).unwrap();
+            assert_eq!(r.u64(0).unwrap(), vec![x as u64]);
+        }
+        assert_eq!(conns.load(Ordering::Relaxed), 2, "pipelining must not open extra conns");
+    }
+
+    /// An echo server that drops its FIRST connection without serving it,
+    /// then behaves normally — simulates a connection dying underneath a
+    /// pooled client.
+    fn flaky_echo_server() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for (i, stream) in listener.incoming().flatten().enumerate() {
+                if i == 0 {
+                    drop(stream); // the pool's first connection dies at birth
+                    continue;
+                }
+                std::thread::spawn(move || {
+                    let mut rpc = RpcServer::new();
+                    rpc.register(KIND, Box::new(|msg| Ok(msg.to_vec())));
+                    let _ = rpc.serve(&TcpTransport::new(stream));
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn async_call_falls_back_to_redial_on_dead_connection() {
+        let pool = ReconnectPool::connect(
+            EchoRedial { addr: flaky_echo_server(), handshakes: AtomicU32::new(0) },
+            1,
+            RetryPolicy::new(3, 10),
+        )
+        .unwrap();
+        // The pooled connection is already dead (the server dropped it):
+        // whether the async send fails up front or the reply wait does, the
+        // handle must recover through the pool's redial path.
+        let resp = pool.call_async(&msg(9)).wait().unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![9]);
+        assert!(pool.redialer().handshakes.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn poisoned_slot_is_survivable() {
+        let (addr, _) = echo_server();
+        let pool = Arc::new(
+            ReconnectPool::connect(
+                EchoRedial { addr, handshakes: AtomicU32::new(0) },
+                1,
+                RetryPolicy::new(2, 0),
+            )
+            .unwrap(),
+        );
+        // Panic while holding the slot lock — the poison-cascade bug this
+        // fixes: one crashed thread used to make every later lock().unwrap()
+        // panic too, taking the whole trainer down.
+        let p2 = pool.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = p2.clients[0].lock().unwrap();
+            panic!("poisoning the pool slot on purpose");
+        })
+        .join();
+        assert!(pool.clients[0].is_poisoned(), "slot must actually be poisoned");
+        let resp = pool.call(&msg(3)).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![3]);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Bounded retry with constant backoff — the one policy every failure path
-//! shares.
+//! Bounded retry with capped-exponential, deterministically-jittered
+//! backoff — the one policy every failure path shares.
 //!
 //! Before this module existed, `RemotePs`, `RemoteEmbeddingWorker`, the
 //! gradient appliers, and the TCP ring rendezvous each hand-rolled their own
@@ -7,6 +7,15 @@
 //! now all build a [`RetryPolicy`] (usually from
 //! [`RecoveryConfig`](crate::config::RecoveryConfig)) so "how hard do we try"
 //! has exactly one meaning across the system.
+//!
+//! The schedule ([`RetryPolicy::delay`]) fixes a thundering-herd bug: the
+//! original policy slept a *constant* `backoff_ms`, so when a PS shard died
+//! every trainer thread in the fleet re-dialed it in lock-step, again and
+//! again, exactly when the restarted shard was busiest. Retry `r` now
+//! sleeps `backoff · 2^(r-1)` (capped), jittered into `[d/2, d]` by a hash
+//! of a caller-supplied salt (rank, pool-slot index) — deterministic per
+//! client, so reproducible runs stay reproducible, but de-synchronized
+//! across clients.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -22,24 +31,59 @@ use crate::config::RecoveryConfig;
 pub struct RetryPolicy {
     /// Retries after the first failure (total tries = `attempts + 1`).
     pub attempts: u32,
-    /// Constant delay before each retry.
+    /// Base delay: retry `r` sleeps about `backoff · 2^(r-1)`, capped and
+    /// jittered (see [`Self::delay`]). Zero disables sleeping entirely.
     pub backoff: Duration,
 }
 
+/// The exponential envelope stops growing here; a fleet-wide outage must
+/// not turn into minute-long client stalls.
+pub const BACKOFF_CAP: Duration = Duration::from_secs(10);
+
 impl RetryPolicy {
-    /// A policy with `attempts` retries spaced `backoff_ms` apart.
+    /// A policy with `attempts` retries and a base delay of `backoff_ms`.
     pub fn new(attempts: u32, backoff_ms: u64) -> Self {
         Self { attempts, backoff: Duration::from_millis(backoff_ms) }
     }
 
+    /// The sleep before retry `attempt` (1-based): capped exponential with
+    /// deterministic jitter. The envelope is `backoff · 2^(attempt-1)`,
+    /// clamped to [`BACKOFF_CAP`]; the returned delay lands in
+    /// `[envelope/2, envelope]` at a point chosen by hashing
+    /// `(salt, attempt)` — so a given client retries on the exact same
+    /// schedule every run (no nondeterminism), while clients with distinct
+    /// salts (rank, pool-slot index) spread out instead of thundering onto
+    /// a freshly-restarted server in lock-step.
+    pub fn delay(&self, attempt: u32, salt: u64) -> Duration {
+        if self.backoff.is_zero() {
+            return Duration::ZERO;
+        }
+        let envelope = self
+            .backoff
+            .saturating_mul(1u32 << attempt.saturating_sub(1).min(5))
+            .min(BACKOFF_CAP);
+        // FNV-1a over (salt, attempt): cheap, deterministic, well-spread.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in salt.to_le_bytes().iter().chain(attempt.to_le_bytes().iter()) {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let half = envelope.as_nanos() as u64 / 2;
+        Duration::from_nanos(half + h % (half + 1))
+    }
+
     /// Run `f` until it succeeds or the retry budget is exhausted, sleeping
-    /// `backoff` before every retry. The final error carries `what` and the
-    /// total attempt count.
+    /// [`Self::delay`] before every retry (salt 0; callers that want
+    /// per-client jitter drive `delay` themselves, as the connection pool
+    /// does). The final error carries `what` and the total attempt count.
     pub fn run<T>(&self, what: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.attempts {
-            if attempt > 0 && !self.backoff.is_zero() {
-                std::thread::sleep(self.backoff);
+            if attempt > 0 {
+                let d = self.delay(attempt, 0);
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
             }
             match f() {
                 Ok(v) => return Ok(v),
@@ -126,6 +170,45 @@ mod tests {
             Err::<(), _>(anyhow::anyhow!("x"))
         });
         assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn delay_schedule_is_capped_exponential_with_jitter() {
+        let p = RetryPolicy::new(8, 100);
+        for attempt in 1..=8u32 {
+            let envelope = Duration::from_millis(100)
+                .saturating_mul(1 << attempt.saturating_sub(1).min(5))
+                .min(BACKOFF_CAP);
+            let d = p.delay(attempt, 42);
+            assert!(
+                d >= envelope / 2 && d <= envelope,
+                "attempt {attempt}: {d:?} outside [{:?}, {envelope:?}]",
+                envelope / 2
+            );
+            assert_eq!(d, p.delay(attempt, 42), "schedule must be deterministic");
+        }
+        // The envelope stops doubling at backoff << 5 (here 3.2s < the cap):
+        // late retries share it instead of growing without bound.
+        assert!(p.delay(30, 42) <= Duration::from_millis(3200));
+        // A huge base delay still respects the absolute cap.
+        assert!(RetryPolicy::new(8, 60_000).delay(4, 0) <= BACKOFF_CAP);
+    }
+
+    #[test]
+    fn delay_jitter_separates_clients() {
+        let p = RetryPolicy::new(4, 50);
+        assert!(
+            (1..=6u32).any(|a| p.delay(a, 0) != p.delay(a, 7)),
+            "distinct salts must de-synchronize the retry herd"
+        );
+    }
+
+    #[test]
+    fn zero_backoff_never_sleeps() {
+        let p = RetryPolicy::new(4, 0);
+        for attempt in 1..=4u32 {
+            assert_eq!(p.delay(attempt, 9), Duration::ZERO);
+        }
     }
 
     #[test]

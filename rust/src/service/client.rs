@@ -2,13 +2,16 @@
 //! [`super::PsServer`].
 //!
 //! All transport-level resilience lives in the shared recovery layer: the
-//! pool of mutex-guarded connections is a
+//! pool of pipelined connections is a
 //! [`ReconnectPool`](crate::recovery::ReconnectPool) whose `PsRedial`
 //! policy re-dials a dead connection, re-runs the INFO handshake, and
 //! insists the server is still the deployment originally connected
 //! ([`PsInfo::same_deployment`]). That is what lets a PS shard process that
 //! was killed and restarted rejoin a training run mid-flight (§4.2.4): the
-//! trainer's next get/put simply reconnects and proceeds.
+//! trainer's next get/put simply reconnects and proceeds. Every dialed
+//! connection carries the configured `--inflight-window` of overlapping
+//! requests and the `--io-timeout-ms` per-call deadline, so a wedged (not
+//! just dead) server also trips the retry path instead of hanging.
 //!
 //! On top of reconnection, exact state recovery: when
 //! [`RecoveryConfig::replay_puts`](crate::config::RecoveryConfig) is on,
@@ -24,11 +27,13 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::comm::rpc::RpcClient;
+use crate::comm::rpc::{PipelinedClient, RpcClient};
 use crate::comm::transport::TcpTransport;
 use crate::config::{EmbeddingConfig, ServiceConfig};
 use crate::embedding::ps::pack_key;
-use crate::recovery::{PooledConn, PutReplayLog, ReconnectPool, Redial, RetryPolicy};
+use crate::recovery::{
+    PoolAsyncCall, PooledConn, PutReplayLog, ReconnectPool, Redial, RetryPolicy,
+};
 
 use super::backend::{PsBackend, PsStats};
 use super::protocol;
@@ -39,14 +44,17 @@ pub(super) struct PsRedial {
     addr: String,
     expect: PsInfo,
     wire_compress: bool,
+    /// Pipelining window of each dialed connection (`--inflight-window`).
+    window: usize,
+    /// Per-call I/O deadline (`--io-timeout-ms`; `None` = wait forever).
+    io_timeout: Option<std::time::Duration>,
     replay: Arc<PutReplayLog>,
 }
 
 impl Redial for PsRedial {
     fn redial(&self) -> Result<PooledConn> {
-        let transport = TcpTransport::connect(&self.addr)
+        let client = PipelinedClient::connect(&self.addr, self.window, self.io_timeout)
             .with_context(|| format!("reconnecting to PS at {}", self.addr))?;
-        let client = RpcClient::new(transport);
         let resp = client.call(&protocol::encode_info_request()).context("PS INFO re-handshake")?;
         let info = protocol::decode_info_response(&resp)?;
         // A shard restarted with different flags must not be allowed to
@@ -118,9 +126,12 @@ impl RemotePs {
     /// (pool size, compression, recovery policy) from `cfg`.
     pub(super) fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemotePs> {
         // Probe handshake first: the pool's redial policy needs to know the
-        // server's identity before it can verify anything.
+        // server's identity before it can verify anything. The probe gets
+        // the same I/O deadline as the pool, so a wedged server fails the
+        // connect instead of hanging it.
         let probe = TcpTransport::connect(addr)
             .with_context(|| format!("connecting to PS at {addr}"))?;
+        probe.set_timeouts(cfg.recovery.io_timeout())?;
         let probe = RpcClient::new(probe);
         let resp = probe.call(&protocol::encode_info_request()).context("PS INFO handshake")?;
         let info = protocol::decode_info_response(&resp)?;
@@ -139,6 +150,8 @@ impl RemotePs {
             addr: addr.to_string(),
             expect: info,
             wire_compress: cfg.wire_compress,
+            window: cfg.inflight_window,
+            io_timeout: cfg.recovery.io_timeout(),
             replay,
         };
         let pool =
@@ -207,6 +220,44 @@ impl RemotePs {
         }
         let msg = protocol::encode_put_request(packed, grads, self.info.dim, self.wire_compress);
         let resp = self.call(&msg)?;
+        let applied = protocol::decode_put_response(&resp)?;
+        ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
+        self.pool.redialer().replay.record(packed, grads);
+        Ok(())
+    }
+
+    /// Start a pipelined GET without blocking for the response: the request
+    /// departs on a pooled connection and the handle claims it later, so a
+    /// scatter over N shards overlaps all N round-trips
+    /// ([`super::ShardedRemotePs`]'s hot path). `packed` must be non-empty.
+    pub(super) fn start_get(&self, packed: &[u64]) -> PoolAsyncCall<'_, PsRedial> {
+        self.pool.call_async(&protocol::encode_get_request(packed, self.wire_compress))
+    }
+
+    /// Claim a [`Self::start_get`] response into `out` (shaped
+    /// `packed.len() * dim`, same contract as [`Self::get_packed`]).
+    pub(super) fn finish_get(&self, call: PoolAsyncCall<'_, PsRedial>, out: &mut [f32]) -> Result<()> {
+        let resp = call.wait()?;
+        protocol::decode_get_response_into(&resp, self.info.dim, out)?;
+        Ok(())
+    }
+
+    /// Start a pipelined gradient PUT (non-empty `packed`; `grads` shaped
+    /// `packed.len() * dim`).
+    pub(super) fn start_put(&self, packed: &[u64], grads: &[f32]) -> PoolAsyncCall<'_, PsRedial> {
+        let msg = protocol::encode_put_request(packed, grads, self.info.dim, self.wire_compress);
+        self.pool.call_async(&msg)
+    }
+
+    /// Claim a [`Self::start_put`] ack; on success the put is recorded in
+    /// the replay log exactly as the synchronous path records it.
+    pub(super) fn finish_put(
+        &self,
+        call: PoolAsyncCall<'_, PsRedial>,
+        packed: &[u64],
+        grads: &[f32],
+    ) -> Result<()> {
+        let resp = call.wait()?;
         let applied = protocol::decode_put_response(&resp)?;
         ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
         self.pool.redialer().replay.record(packed, grads);

@@ -60,7 +60,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::comm::compress::CompressedValues;
 use crate::comm::netsim::Link;
-use crate::comm::rpc::{RpcClient, RpcServer};
+use crate::comm::rpc::{PipelinedClient, RpcClient, RpcServer};
 use crate::comm::transport::TcpTransport;
 use crate::comm::wire::{WireReader, WireWriter};
 use crate::comm::NetSim;
@@ -69,6 +69,7 @@ use crate::data::sample::SampleId;
 use crate::embedding::EmbeddingPs;
 use crate::hybrid::Trainer;
 use crate::recovery::{PooledConn, ReconnectPool, Redial, ReplayRing, RetryPolicy};
+use crate::util::lock_unpoisoned;
 use crate::worker::{
     AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline, PreparedBatch,
     WorkerStats,
@@ -595,15 +596,13 @@ impl EmbeddingWorkerServer {
                 KIND_EW_NEXT,
                 Box::new(move |msg| {
                     let (rank, step) = decode_next_request(msg)?;
-                    let ring: RankRing = replay
-                        .lock()
-                        .unwrap()
+                    let ring: RankRing = lock_unpoisoned(&replay)
                         .entry(rank)
                         .or_insert_with(|| Arc::new(Mutex::new(ReplayRing::new(depth))))
                         .clone();
                     // Per-rank lock: concurrent ranks proceed in parallel,
                     // retries of one rank serialize.
-                    let mut ring = ring.lock().unwrap();
+                    let mut ring = lock_unpoisoned(&ring);
                     if let Some(bytes) = ring.get(&step) {
                         return Ok(bytes.clone());
                     }
@@ -644,7 +643,7 @@ impl EmbeddingWorkerServer {
                     };
                     let key = sids.first().copied().unwrap_or(0);
                     {
-                        let cache = replay.lock().unwrap();
+                        let cache = lock_unpoisoned(&replay);
                         if let Some((cached_sids, ack)) = cache.get(&key) {
                             if *cached_sids == sids {
                                 return Ok(ack.clone());
@@ -653,7 +652,7 @@ impl EmbeddingWorkerServer {
                     }
                     let sim = prep.worker(0).push_grads_raw(&sids, &grads)?;
                     let ack = encode_push_response(sim);
-                    replay.lock().unwrap().insert(key, (sids, ack.clone()));
+                    lock_unpoisoned(&replay).insert(key, (sids, ack.clone()));
                     Ok(ack)
                 }),
             );
@@ -866,13 +865,14 @@ impl EwServerHandle {
 struct EwRedial {
     addr: String,
     expect: EwInfo,
+    window: usize,
+    io_timeout: Option<std::time::Duration>,
 }
 
 impl Redial for EwRedial {
     fn redial(&self) -> Result<PooledConn> {
-        let transport = TcpTransport::connect(&self.addr)
+        let client = PipelinedClient::connect(&self.addr, self.window, self.io_timeout)
             .with_context(|| format!("reconnecting to embedding worker at {}", self.addr))?;
-        let client = RpcClient::new(transport);
         let resp = client
             .call(&encode_ew_info_request())
             .context("embedding-worker INFO re-handshake")?;
@@ -914,6 +914,7 @@ impl RemoteEmbeddingWorker {
     pub fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemoteEmbeddingWorker> {
         let probe = TcpTransport::connect(addr)
             .with_context(|| format!("connecting to embedding worker at {addr}"))?;
+        probe.set_timeouts(cfg.recovery.io_timeout())?;
         let probe = RpcClient::new(probe);
         let resp = probe
             .call(&encode_ew_info_request())
@@ -921,7 +922,12 @@ impl RemoteEmbeddingWorker {
         let info = decode_ew_info_response(&resp)?;
         drop(probe);
         let pool = ReconnectPool::connect(
-            EwRedial { addr: addr.to_string(), expect: info },
+            EwRedial {
+                addr: addr.to_string(),
+                expect: info,
+                window: cfg.inflight_window,
+                io_timeout: cfg.recovery.io_timeout(),
+            },
             cfg.client_conns,
             RetryPolicy::from(&cfg.recovery),
         )?;

@@ -1,0 +1,504 @@
+//! The non-blocking readiness-loop core of every `persia` service.
+//!
+//! One poller thread multiplexes the listener and every live connection
+//! through [`poll_fds`](crate::comm::poll::poll_fds); requests are
+//! dispatched on a small bounded worker pool, and responses flow back
+//! through per-connection outboxes that the poller flushes with
+//! non-blocking writes. Replaces the PR-1 thread-per-connection model: a
+//! PS serving hundreds of pipelined trainer connections now costs a fixed
+//! number of threads, a slow client can no longer pin an OS thread, and
+//! requests from *one* connection execute concurrently — which is what
+//! makes client-side pipelining ([`crate::comm::PipelinedClient`]) pay off
+//! server-side.
+//!
+//! ```text
+//!              ┌─────────────── poller thread ───────────────┐
+//!   accept ──▶ │ poll([listener, wake, conn…])               │
+//!              │   readable conn → rbuf → peel frames ───────┼──▶ job queue
+//!              │   writable conn ← wbuf ← outbox ◀───────────┼─── workers
+//!              └───────────────▲─────────────────────────────┘    (dispatch)
+//!                              └── UDP self-wake (response ready)
+//! ```
+//!
+//! Per-connection state machine: `rbuf` accumulates partial reads until a
+//! complete `[len][corr][msg]` frame peels off; each frame becomes a job
+//! (`inflight` incremented) that dispatches through the shared
+//! [`RpcServer`] and pushes its framed response into the connection's
+//! `outbox`, then nudges the poller over a loopback UDP socket (push
+//! *before* wake, drain wake *before* flush — no lost-wakeup window).
+//! Responses may complete out of order; correlation ids route them
+//! client-side. A handler error drops the connection after flushing
+//! already-queued responses (same contract as the old per-connection
+//! `serve` loop).
+//!
+//! Graceful shutdown keeps the documented protocol: once the stop flag is
+//! observed the loop stops accepting and reading, flushes every outbox,
+//! waits for in-flight jobs (the SHUTDOWN ack included) to drain — bounded
+//! by a hard deadline so a peer that stops reading cannot wedge shutdown —
+//! then joins the workers.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, UdpSocket};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::poll::{poll_fds, PollFd, POLLIN, POLLOUT};
+use crate::comm::rpc::RpcServer;
+use crate::util::lock_unpoisoned;
+
+/// Largest accepted request frame (matches the transport layer's bound).
+const MAX_FRAME: usize = 1 << 30;
+
+/// Poll timeout: a pure safety net (every state change also wakes the
+/// poller), so it only bounds reaction time to external stop requests.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// How long shutdown waits for peers to drain queued responses before
+/// force-closing their connections.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Consecutive accept failures tolerated before the listener is declared
+/// broken (transient ECONNABORTED/EMFILE bursts must not kill a PS).
+const MAX_ACCEPT_ERRORS: u32 = 64;
+
+type Job = Box<dyn FnOnce() + Send>;
+
+/// State a connection shares with its in-flight dispatch jobs.
+struct ConnShared {
+    /// Completed responses (length-prefixed, ready for the wire), in
+    /// completion order.
+    outbox: Mutex<VecDeque<Vec<u8>>>,
+    /// Requests handed to the worker pool and not yet answered.
+    inflight: AtomicUsize,
+    /// Set by a handler error: stop reading, flush, then close.
+    dead: AtomicBool,
+}
+
+/// Poller-private per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    /// Accumulates partial reads until complete frames peel off.
+    rbuf: Vec<u8>,
+    /// The response currently being written, and how much already went out.
+    wbuf: Vec<u8>,
+    woff: usize,
+    /// Peer sent EOF (or the read half errored): no new requests.
+    read_closed: bool,
+    /// Unrecoverable socket error: close without waiting to drain.
+    broken: bool,
+}
+
+impl Conn {
+    fn write_idle(&self) -> bool {
+        self.woff >= self.wbuf.len()
+    }
+
+    /// Everything accepted has been answered and flushed.
+    fn drained(&self) -> bool {
+        self.shared.inflight.load(Ordering::SeqCst) == 0
+            && self.write_idle()
+            && lock_unpoisoned(&self.shared.outbox).is_empty()
+    }
+}
+
+/// Run the readiness loop until `stop` is set (and everything in flight
+/// drains) or the listener breaks persistently. Blocks the calling thread;
+/// `label` names the service in diagnostics.
+pub fn run(listener: TcpListener, rpc: Arc<RpcServer>, stop: Arc<AtomicBool>, label: &'static str) {
+    if let Err(e) = run_inner(&listener, &rpc, &stop, label) {
+        eprintln!("persia {label}: event loop failed: {e:#}");
+    }
+}
+
+fn run_inner(
+    listener: &TcpListener,
+    rpc: &Arc<RpcServer>,
+    stop: &Arc<AtomicBool>,
+    label: &'static str,
+) -> anyhow::Result<()> {
+    listener.set_nonblocking(true)?;
+    // Loopback UDP self-wake: workers nudge the poller out of poll() when a
+    // response is ready. Connected to itself so plain send() delivers.
+    let wake = UdpSocket::bind("127.0.0.1:0")?;
+    wake.connect(wake.local_addr()?)?;
+    wake.set_nonblocking(true)?;
+    let wake_tx = Arc::new(wake.try_clone()?);
+
+    let n_workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+    let (job_tx, job_rx): (Sender<Job>, Receiver<Job>) = channel();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let workers: Vec<_> = (0..n_workers)
+        .map(|i| {
+            let job_rx = job_rx.clone();
+            std::thread::Builder::new()
+                .name(format!("{label}-worker-{i}"))
+                .spawn(move || loop {
+                    // Holding the lock across recv() is the classic shared-
+                    // receiver pattern: idle workers queue on the mutex.
+                    let job = lock_unpoisoned(&job_rx).recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => return,
+                    }
+                })
+        })
+        .collect::<std::io::Result<_>>()?;
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn_id = 0u64;
+    let mut consecutive_errors = 0u32;
+    let mut listener_broken = false;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut chunk = vec![0u8; 64 * 1024];
+
+    loop {
+        let stopping = stop.load(Ordering::SeqCst) || listener_broken;
+        if stopping {
+            let deadline = *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_DEADLINE);
+            conns.retain(|_, c| !c.drained() && !c.broken);
+            if conns.is_empty() || Instant::now() >= deadline {
+                break;
+            }
+        }
+
+        // Interest sets: wake and (unless stopping) the listener are always
+        // read-watched; connections ask for POLLIN while accepting requests
+        // and POLLOUT while output is queued.
+        let mut fds = vec![PollFd::new(wake.as_raw_fd(), POLLIN)];
+        let conn_base = if stopping {
+            1
+        } else {
+            fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+            2
+        };
+        let mut conn_ids: Vec<u64> = Vec::with_capacity(conns.len());
+        for (&id, c) in &conns {
+            let mut events = 0i16;
+            if !stopping && !c.read_closed && !c.shared.dead.load(Ordering::SeqCst) {
+                events |= POLLIN;
+            }
+            if !c.write_idle() || !lock_unpoisoned(&c.shared.outbox).is_empty() {
+                events |= POLLOUT;
+            }
+            if events != 0 {
+                fds.push(PollFd::new(c.stream.as_raw_fd(), events));
+                conn_ids.push(id);
+            }
+        }
+        poll_fds(&mut fds, Some(POLL_TIMEOUT))?;
+
+        // Drain the wake socket FIRST: any wake sent after this point
+        // belongs to state this iteration might miss, and must survive to
+        // re-trigger the next poll.
+        let mut sink = [0u8; 64];
+        while wake.recv(&mut sink).is_ok() {}
+
+        // Accept every pending connection.
+        if !stopping && fds[1].readable() {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        consecutive_errors = 0;
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        stream.set_nodelay(true).ok();
+                        conns.insert(
+                            next_conn_id,
+                            Conn {
+                                stream,
+                                shared: Arc::new(ConnShared {
+                                    outbox: Mutex::new(VecDeque::new()),
+                                    inflight: AtomicUsize::new(0),
+                                    dead: AtomicBool::new(false),
+                                }),
+                                rbuf: Vec::new(),
+                                wbuf: Vec::new(),
+                                woff: 0,
+                                read_closed: false,
+                                broken: false,
+                            },
+                        );
+                        next_conn_id += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => {
+                        consecutive_errors += 1;
+                        if consecutive_errors >= MAX_ACCEPT_ERRORS {
+                            eprintln!(
+                                "persia {label}: accept failing persistently ({e}); stopping"
+                            );
+                            listener_broken = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Read phase: pull bytes off readable connections, peel complete
+        // frames, dispatch each as a worker-pool job.
+        for (i, &id) in conn_ids.iter().enumerate() {
+            if !fds[conn_base + i].readable() {
+                continue;
+            }
+            let Some(c) = conns.get_mut(&id) else { continue };
+            if c.read_closed || c.shared.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            loop {
+                match c.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        c.read_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.rbuf.extend_from_slice(&chunk[..n]);
+                        if n < chunk.len() {
+                            // Short read: the socket buffer is drained.
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        // Hard read error = disconnect (same as the old
+                        // recv-error path); deliver what is already queued.
+                        c.read_closed = true;
+                        break;
+                    }
+                }
+            }
+            // Peel complete frames.
+            loop {
+                if c.rbuf.len() < 4 {
+                    break;
+                }
+                let len = u32::from_le_bytes(c.rbuf[..4].try_into().unwrap()) as usize;
+                if len > MAX_FRAME {
+                    eprintln!("persia {label}: oversized frame ({len} bytes); dropping peer");
+                    c.shared.dead.store(true, Ordering::SeqCst);
+                    break;
+                }
+                if c.rbuf.len() < 4 + len {
+                    break;
+                }
+                let req: Vec<u8> = c.rbuf[4..4 + len].to_vec();
+                c.rbuf.drain(..4 + len);
+                c.shared.inflight.fetch_add(1, Ordering::SeqCst);
+                let rpc = rpc.clone();
+                let shared = c.shared.clone();
+                let wake_tx = wake_tx.clone();
+                let job: Job = Box::new(move || {
+                    match rpc.dispatch_frame(&req) {
+                        Ok(resp) => {
+                            let mut out = Vec::with_capacity(4 + resp.len());
+                            out.extend_from_slice(&(resp.len() as u32).to_le_bytes());
+                            out.extend_from_slice(&resp);
+                            lock_unpoisoned(&shared.outbox).push_back(out);
+                        }
+                        Err(e) => {
+                            eprintln!("persia {label}: connection dropped: {e:#}");
+                            shared.dead.store(true, Ordering::SeqCst);
+                        }
+                    }
+                    // Publish before waking; the poller drains the wake
+                    // socket before it re-reads this state.
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = wake_tx.send(&[1]);
+                });
+                if job_tx.send(job).is_err() {
+                    // Workers are gone (only during teardown).
+                    c.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    break;
+                }
+            }
+        }
+
+        // Write phase: flush outboxes with non-blocking writes. Attempted
+        // for every connection with queued output (not just POLLOUT hits) —
+        // a freshly completed response should not wait one extra poll round.
+        for c in conns.values_mut() {
+            loop {
+                if c.write_idle() {
+                    match lock_unpoisoned(&c.shared.outbox).pop_front() {
+                        Some(next) => {
+                            c.wbuf = next;
+                            c.woff = 0;
+                        }
+                        None => break,
+                    }
+                }
+                match c.stream.write(&c.wbuf[c.woff..]) {
+                    Ok(0) => {
+                        c.broken = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.woff += n;
+                        if c.write_idle() {
+                            c.wbuf = Vec::new();
+                            c.woff = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        c.broken = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Retire connections: broken sockets immediately; closed/errored
+        // peers once everything they asked for has been flushed.
+        conns.retain(|_, c| {
+            if c.broken {
+                return false;
+            }
+            let done = (c.read_closed || c.shared.dead.load(Ordering::SeqCst)) && c.drained();
+            !done
+        });
+    }
+
+    // Stop the workers: close the queue and join (pending jobs finish, but
+    // their connections are gone — their outbox pushes are no-ops).
+    drop(job_tx);
+    for w in workers {
+        let _ = w.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::rpc::{PendingReply, PipelinedClient, RpcClient};
+    use crate::comm::transport::TcpTransport;
+    use crate::comm::wire::{WireReader, WireWriter};
+    use std::net::SocketAddr;
+    use std::thread::JoinHandle;
+
+    /// Spawn the readiness loop serving a kind-1 echo handler.
+    fn spawn_echo() -> (SocketAddr, Arc<AtomicBool>, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut rpc = RpcServer::new();
+        rpc.register(1, Box::new(|msg| Ok(msg.to_vec())));
+        let rpc = Arc::new(rpc);
+        let stop = rpc.stop_flag();
+        let stop_for_loop = stop.clone();
+        let handle =
+            std::thread::spawn(move || run(listener, rpc, stop_for_loop, "event-loop-test"));
+        (addr, stop, handle)
+    }
+
+    fn stop_loop(addr: SocketAddr, stop: &Arc<AtomicBool>, handle: JoinHandle<()>) {
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr); // wake the poller
+        handle.join().unwrap();
+    }
+
+    fn echo_msg(x: u64) -> Vec<u8> {
+        let mut w = WireWriter::new(1);
+        w.put_u64(&[x]);
+        w.finish()
+    }
+
+    #[test]
+    fn serves_lockstep_and_pipelined_clients_concurrently() {
+        let (addr, stop, handle) = spawn_echo();
+        let lockstep = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        let pipelined =
+            PipelinedClient::connect(&addr.to_string(), 16, Some(Duration::from_secs(30)))
+                .unwrap();
+        // Fill the pipeline, then interleave a lock-step call on a second
+        // connection while those responses are still outstanding.
+        let pending: Vec<PendingReply> =
+            (0..32u64).map(|i| pipelined.call_async(&echo_msg(i)).unwrap()).collect();
+        let resp = lockstep.call(&echo_msg(999)).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![999]);
+        for (i, p) in pending.into_iter().enumerate().rev() {
+            let resp = p.wait().unwrap();
+            assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![i as u64]);
+        }
+        drop(lockstep);
+        drop(pipelined);
+        stop_loop(addr, &stop, handle);
+    }
+
+    #[test]
+    fn handler_error_drops_only_the_offending_connection() {
+        let (addr, stop, handle) = spawn_echo();
+        let bad = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        // Kind 99 has no handler: the server drops this connection.
+        assert!(bad.call(&WireWriter::new(99).finish()).is_err());
+        // A fresh connection is unaffected.
+        let good = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        let resp = good.call(&echo_msg(7)).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![7]);
+        drop(bad);
+        drop(good);
+        stop_loop(addr, &stop, handle);
+    }
+
+    #[test]
+    fn survives_mid_stream_disconnects_and_garbage() {
+        let (addr, stop, handle) = spawn_echo();
+        // Peer 1: connects and vanishes without sending anything.
+        drop(TcpStream::connect(addr).unwrap());
+        // Peer 2: sends half a frame header, then disconnects.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&[3, 0]).unwrap();
+        }
+        // Peer 3: announces an absurd frame length.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        }
+        // A well-behaved client still gets served.
+        let client = RpcClient::new(TcpTransport::connect(&addr.to_string()).unwrap());
+        let resp = client.call(&echo_msg(42)).unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![42]);
+        drop(client);
+        stop_loop(addr, &stop, handle);
+    }
+
+    #[test]
+    fn shutdown_flushes_inflight_responses() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut rpc = RpcServer::new();
+        // A deliberately slow handler: the stop flag flips while its
+        // response is still being computed.
+        rpc.register(
+            1,
+            Box::new(|msg| {
+                std::thread::sleep(Duration::from_millis(100));
+                Ok(msg.to_vec())
+            }),
+        );
+        let rpc = Arc::new(rpc);
+        let stop = rpc.stop_flag();
+        let stop_for_loop = stop.clone();
+        let handle =
+            std::thread::spawn(move || run(listener, rpc, stop_for_loop, "event-loop-test"));
+        let client =
+            PipelinedClient::connect(&addr.to_string(), 4, Some(Duration::from_secs(30)))
+                .unwrap();
+        let pending = client.call_async(&echo_msg(5)).unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // request is in flight
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+        // Shutdown drains: the in-flight response still arrives.
+        let resp = pending.wait().unwrap();
+        assert_eq!(WireReader::parse(&resp).unwrap().u64(0).unwrap(), vec![5]);
+        handle.join().unwrap();
+    }
+}

@@ -3,7 +3,8 @@
 //! simulated in-process).
 //!
 //! Two services live here, sharing the zero-copy wire format, the
-//! thread-per-connection accept loop, and the fingerprint-handshake policy:
+//! [`event_loop`] readiness-loop service core, and the
+//! fingerprint-handshake policy:
 //!
 //! **The embedding PS** (`persia serve-ps`):
 //! * [`backend`] — the [`PsBackend`] trait embedding workers program
@@ -12,9 +13,10 @@
 //! * [`protocol`] — message kinds + codecs over the zero-copy wire format,
 //!   with the paper's index compression (deduplicated packed keys) and
 //!   optional lossy fp16 value compression.
-//! * [`server`] — [`PsServer`]: accept loop, per-connection dispatch
-//!   threads, graceful sleep-free shutdown; serves a full PS or one
-//!   process's `--node-range` slice, including SNAPSHOT/RESTORE RPCs.
+//! * [`server`] — [`PsServer`]: the non-blocking readiness loop (one
+//!   poller + a bounded worker pool; see [`event_loop`]), graceful
+//!   sleep-free shutdown; serves a full PS or one process's `--node-range`
+//!   slice, including SNAPSHOT/RESTORE RPCs.
 //! * [`client`] — [`RemotePs`]: a [`crate::recovery::ReconnectPool`] shared
 //!   by every trainer thread — transparent reconnect-with-retry plus the
 //!   put-replay that brings a restarted shard back to exact state. All
@@ -46,6 +48,8 @@
 pub mod backend;
 pub mod client;
 pub mod embedding_worker;
+#[cfg(unix)]
+pub mod event_loop;
 pub mod protocol;
 pub mod server;
 pub mod sharded;
@@ -56,5 +60,5 @@ pub use embedding_worker::{
     EmbeddingWorkerServer, EwExpect, EwInfo, EwServerHandle, RemoteEmbTier,
     RemoteEmbeddingWorker,
 };
-pub use server::{PsServer, PsServerHandle};
+pub use server::{serve_rpc, PsServer, PsServerHandle};
 pub use sharded::ShardedRemotePs;

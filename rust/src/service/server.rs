@@ -5,17 +5,22 @@
 //! (`EmbeddingPs::new_range`, `persia serve-ps --node-range`) — and serves
 //! the [`super::protocol`] RPCs over length-prefixed TCP frames, including
 //! whole-node SNAPSHOT/RESTORE for the cross-process §4.2.4 recovery drill.
-//! Keys that route outside the owned range are rejected loudly. Each accepted
-//! connection gets its own OS thread running the shared [`RpcServer`]
-//! dispatch loop — the paper's PS nodes likewise dedicate threads per
-//! connection and rely on shard-level lock striping (not connection-level
-//! serialization) for parallelism.
+//! Keys that route outside the owned range are rejected loudly.
 //!
-//! Shutdown is graceful and sleep-free: the stop flag is observed between
-//! requests, a self-connect wakes the blocking `accept`, and parked
-//! connection readers are unblocked by closing only their read halves —
-//! in-flight requests (including the SHUTDOWN ack itself) always get their
-//! response before the connection threads are joined.
+//! Connections are served by the non-blocking readiness-loop core in
+//! [`super::event_loop`]: one poller thread multiplexes the listener and
+//! every live connection, and a small bounded worker pool runs the shared
+//! [`RpcServer`] dispatch — so a PS serving hundreds of pipelined trainer
+//! connections costs a fixed number of threads, and requests from one
+//! connection execute concurrently (shard-level lock striping, not
+//! connection-level serialization, provides the parallelism — as in the
+//! paper's PS nodes). On non-unix hosts a thread-per-connection fallback
+//! preserves the exact same RPC semantics.
+//!
+//! Shutdown is graceful and sleep-free: the SHUTDOWN handler sets the stop
+//! flag and self-connects to wake the poller; the loop then stops
+//! accepting and reading, flushes every queued response (the SHUTDOWN ack
+//! included), and joins its workers.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -25,6 +30,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::comm::rpc::RpcServer;
+#[cfg(not(unix))]
 use crate::comm::transport::TcpTransport;
 use crate::config::EmbeddingConfig;
 use crate::embedding::{CheckpointManager, EmbeddingPs};
@@ -276,13 +282,44 @@ pub(super) fn wake_addr(bound: SocketAddr) -> SocketAddr {
     addr
 }
 
-/// The shared thread-per-connection accept loop of every `persia` service
-/// ([`PsServer`] and the embedding-worker tier's
-/// [`EmbeddingWorkerServer`](super::embedding_worker::EmbeddingWorkerServer)):
-/// transient-accept-error tolerance, finished-connection reaping, and the
-/// sleep-free graceful-shutdown protocol described in the module docs.
-/// `label` names the service in diagnostics.
+/// Serve an arbitrary [`RpcServer`] on the shared service core (the
+/// readiness loop on unix, thread-per-connection elsewhere). Blocks the
+/// calling thread until `stop` is set (wake it with a no-op connect to the
+/// listener) or the listener breaks persistently; `label` names the
+/// service in diagnostics. This is the entry point benches and soak tests
+/// use to drive the exact server stack `serve-ps` runs in production.
+pub fn serve_rpc(
+    listener: TcpListener,
+    rpc: Arc<RpcServer>,
+    stop: Arc<AtomicBool>,
+    label: &'static str,
+) {
+    accept_loop(listener, rpc, stop, label)
+}
+
+/// The shared connection core of every `persia` service ([`PsServer`], the
+/// embedding-worker tier's
+/// [`EmbeddingWorkerServer`](super::embedding_worker::EmbeddingWorkerServer),
+/// and [`serve_rpc`]): transient-accept-error tolerance and the sleep-free
+/// graceful-shutdown protocol described in the module docs. On unix this
+/// delegates to the [`super::event_loop`] readiness loop; elsewhere it
+/// falls back to one thread per connection with identical RPC semantics.
 pub(super) fn accept_loop(
+    listener: TcpListener,
+    rpc: Arc<RpcServer>,
+    stop: Arc<AtomicBool>,
+    label: &'static str,
+) {
+    #[cfg(unix)]
+    super::event_loop::run(listener, rpc, stop, label);
+    #[cfg(not(unix))]
+    accept_loop_threaded(listener, rpc, stop, label);
+}
+
+/// The PR-1 thread-per-connection loop, kept as the portable fallback for
+/// hosts without `poll(2)`.
+#[cfg(not(unix))]
+fn accept_loop_threaded(
     listener: TcpListener,
     rpc: Arc<RpcServer>,
     stop: Arc<AtomicBool>,

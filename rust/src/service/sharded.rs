@@ -7,9 +7,13 @@
 //! servers use (factored out of `EmbeddingPs` precisely so both sides
 //! provably agree), and scatter-gathers batched get/put traffic:
 //!
-//! * each shard process gets its own [`RemotePs`] connection pool;
-//! * per-shard sub-batches are issued concurrently (scoped threads), so a
-//!   mini-batch costs one round-trip to the *slowest* shard, not the sum;
+//! * each shard process gets its own [`RemotePs`] pool of pipelined
+//!   connections;
+//! * hot-path GET/PUT sub-batches are issued as pipelined async requests —
+//!   every shard's request is on the wire before any response is claimed —
+//!   so a mini-batch costs one round-trip to the *slowest* shard, not the
+//!   sum, without spawning a thread per shard per batch (control-plane
+//!   calls — stats, checkpoint epochs — still use scoped-thread scatter);
 //! * responses are reassembled into the caller's slot order, so workers are
 //!   oblivious to the sharding;
 //! * per-shard [`PsStats`] are merged from the raw per-node traffic vectors
@@ -234,18 +238,17 @@ impl PsBackend for ShardedRemotePs {
         let per = self.partition_keys(&packed);
         let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
         let dim = self.dim;
-        let results = self.scatter(&active, |si| {
-            let (_, shard_keys) = &per[si];
+        // Every shard's GET departs before any response is claimed: the N
+        // round-trips overlap on the pipelined connections.
+        let calls: Vec<_> = active.iter().map(|&si| self.shards[si].start_get(&per[si].1)).collect();
+        // Claim and reassemble into the caller's slot order.
+        for (&si, call) in active.iter().zip(calls) {
+            let (slots, shard_keys) = &per[si];
             let mut rows = vec![0.0f32; shard_keys.len() * dim];
             self.shards[si]
-                .get_packed(shard_keys, &mut rows)
+                .finish_get(call, &mut rows)
                 .with_context(|| format!("GET from shard {}", self.shards[si].addr()))?;
-            Ok(rows)
-        });
-        // Reassemble into the caller's slot order.
-        for (&si, rows) in active.iter().zip(results) {
-            let rows = rows?;
-            for (i, &slot) in per[si].0.iter().enumerate() {
+            for (i, &slot) in slots.iter().enumerate() {
                 out[slot * dim..(slot + 1) * dim].copy_from_slice(&rows[i * dim..(i + 1) * dim]);
             }
         }
@@ -273,13 +276,15 @@ impl PsBackend for ShardedRemotePs {
                 rows
             })
             .collect();
-        let results = self.scatter(&active, |si| {
+        // Same overlap as get_many: all PUTs depart, then all acks claimed.
+        let calls: Vec<_> = active
+            .iter()
+            .map(|&si| self.shards[si].start_put(&per[si].1, &payloads[si]))
+            .collect();
+        for (&si, call) in active.iter().zip(calls) {
             self.shards[si]
-                .put_packed(&per[si].1, &payloads[si])
-                .with_context(|| format!("PUT to shard {}", self.shards[si].addr()))
-        });
-        for r in results {
-            r?;
+                .finish_put(call, &per[si].1, &payloads[si])
+                .with_context(|| format!("PUT to shard {}", self.shards[si].addr()))?;
         }
         Ok(())
     }

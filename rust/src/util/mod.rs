@@ -10,9 +10,11 @@ pub mod csv;
 pub mod hist;
 pub mod quickcheck;
 pub mod rng;
+pub mod sync;
 pub mod zipf;
 
 pub use bench::Bench;
 pub use hist::Histogram;
 pub use rng::Rng;
+pub use sync::lock_unpoisoned;
 pub use zipf::Zipf;

@@ -1,0 +1,45 @@
+//! Poison-tolerant locking.
+//!
+//! The service/recovery layer shares mutexes (connection-pool slots, gossip
+//! replica slots, replay rings) across many worker threads. A panic in one
+//! connection worker used to poison those mutexes, turning every later
+//! `lock().unwrap()` into a panic cascade — the exact opposite of the
+//! recovery layer's job. The shared state behind these locks is always left
+//! consistent at panic sites (plain `Vec`/`HashMap` writes with no
+//! multi-step invariants), so taking the inner guard is sound.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Use this instead of `lock().unwrap()` wherever one panicking thread must
+/// not take down every other user of the shared state (pool slots, gossip
+/// slots, replay caches).
+pub fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "the panic must have poisoned the mutex");
+        // A plain lock().unwrap() would panic here; the recovering lock
+        // hands back the guard and the state is still usable.
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+}

@@ -1,0 +1,164 @@
+//! Loopback soak of the event-driven service core: many pipelined clients
+//! hammering one `serve_rpc` readiness-loop server (the exact stack
+//! `serve-ps` and `serve-embedding-worker` run), with out-of-order
+//! completion claims, chaos connections throwing garbage mid-stream, and a
+//! clean sleep-free shutdown at the end.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use persia::comm::rpc::{PipelinedClient, RpcServer};
+use persia::comm::wire::{WireReader, WireWriter};
+use persia::service::serve_rpc;
+
+/// Echo-with-work message kind: request carries `[tag]` + payload floats,
+/// response carries the same tag and the payload doubled.
+const KIND_ECHO: u32 = 0x7001;
+
+fn echo_server() -> Arc<RpcServer> {
+    let mut server = RpcServer::new();
+    server.register(
+        KIND_ECHO,
+        Box::new(move |msg| {
+            let r = WireReader::parse(msg)?;
+            let tag = r.u64(0)?;
+            let payload = r.f32(1)?;
+            let doubled: Vec<f32> = payload.iter().map(|x| x * 2.0).collect();
+            let mut w = WireWriter::new(KIND_ECHO);
+            w.put_u64(&tag).put_f32(&doubled);
+            Ok(w.finish())
+        }),
+    );
+    Arc::new(server)
+}
+
+fn echo_request(tag: u64) -> Vec<u8> {
+    let payload: Vec<f32> = (0..16).map(|i| (tag as f32) + (i as f32) * 0.25).collect();
+    let mut w = WireWriter::new(KIND_ECHO);
+    w.put_u64(&[tag]).put_f32(&payload);
+    w.finish()
+}
+
+fn check_echo(tag: u64, resp: &[u8]) {
+    let r = WireReader::parse(resp).unwrap();
+    assert_eq!(r.kind(), KIND_ECHO);
+    assert_eq!(r.u64(0).unwrap(), vec![tag], "response for the wrong request");
+    let doubled = r.f32(1).unwrap();
+    assert_eq!(doubled.len(), 16);
+    for (i, d) in doubled.iter().enumerate() {
+        let want = ((tag as f32) + (i as f32) * 0.25) * 2.0;
+        assert_eq!(*d, want, "tag {tag} element {i}");
+    }
+}
+
+/// Start `serve_rpc` on its own thread; returns (addr, stop, join handle).
+fn start_server() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let rpc = echo_server();
+    let stop2 = stop.clone();
+    let h = std::thread::spawn(move || serve_rpc(listener, rpc, stop2, "soak-test"));
+    (addr, stop, h)
+}
+
+fn shutdown(addr: &str, stop: &AtomicBool, h: std::thread::JoinHandle<()>) {
+    stop.store(true, Ordering::SeqCst);
+    // The no-op connect wakes the accept loop so shutdown needs no sleeps.
+    let _ = TcpStream::connect(addr);
+    h.join().unwrap();
+}
+
+/// Many concurrent pipelined clients, each keeping a full in-flight window
+/// and claiming completions out of order, all against one readiness-loop
+/// server — every reply must match its request, and the server must shut
+/// down cleanly afterwards.
+#[test]
+fn pipelined_clients_soak_the_event_loop_server() {
+    const CLIENTS: usize = 8;
+    const REQUESTS: u64 = 150;
+    const WINDOW: usize = 16;
+    let (addr, stop, server) = start_server();
+
+    let workers: Vec<_> = (0..CLIENTS as u64)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let client =
+                    PipelinedClient::connect(&addr, WINDOW, Some(Duration::from_secs(30)))
+                        .unwrap();
+                let mut sent = 0u64;
+                while sent < REQUESTS {
+                    let batch = WINDOW.min((REQUESTS - sent) as usize) as u64;
+                    let mut pending = Vec::new();
+                    for i in 0..batch {
+                        let tag = c * 1_000_000 + sent + i;
+                        if i % 5 == 4 {
+                            // Interleave the synchronous path with the
+                            // window partially occupied by async requests.
+                            check_echo(tag, &client.call(&echo_request(tag)).unwrap());
+                        } else {
+                            pending.push((tag, client.call_async(&echo_request(tag)).unwrap()));
+                        }
+                    }
+                    // Claim completions in reverse issue order: the demux
+                    // map, not arrival order, must route each reply.
+                    while let Some((tag, reply)) = pending.pop() {
+                        check_echo(tag, &reply.wait().unwrap());
+                    }
+                    sent += batch;
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    shutdown(&addr, &stop, server);
+}
+
+/// Chaos connections — mid-stream disconnects, garbage bytes, oversized
+/// length prefixes — must cost only their own connection: a well-behaved
+/// pipelined client sharing the server keeps getting correct replies.
+#[test]
+fn garbage_connections_do_not_disturb_pipelined_clients() {
+    let (addr, stop, server) = start_server();
+    let client =
+        PipelinedClient::connect(&addr, 8, Some(Duration::from_secs(30))).unwrap();
+
+    for round in 0..40u64 {
+        match round % 4 {
+            0 => {
+                // Abrupt disconnect with a partial length prefix in flight.
+                let mut s = TcpStream::connect(&addr).unwrap();
+                s.write_all(&[7u8, 0]).unwrap();
+            }
+            1 => {
+                // An oversized frame announcement.
+                let mut s = TcpStream::connect(&addr).unwrap();
+                s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            }
+            2 => {
+                // A plausible length followed by garbage (bad corr + kind).
+                let mut s = TcpStream::connect(&addr).unwrap();
+                let junk = [0xABu8; 32];
+                s.write_all(&(junk.len() as u32).to_le_bytes()).unwrap();
+                s.write_all(&junk).unwrap();
+            }
+            _ => {
+                // Connect-and-vanish.
+                drop(TcpStream::connect(&addr).unwrap());
+            }
+        }
+        // The good client is unaffected, pipelined or not.
+        let a = client.call_async(&echo_request(round)).unwrap();
+        let b = client.call_async(&echo_request(round + 10_000)).unwrap();
+        check_echo(round + 10_000, &b.wait().unwrap());
+        check_echo(round, &a.wait().unwrap());
+    }
+    drop(client);
+    shutdown(&addr, &stop, server);
+}
