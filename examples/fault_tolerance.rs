@@ -74,13 +74,13 @@ fn main() -> anyhow::Result<()> {
     println!("  AUC after phase 1: {auc0:.4}");
 
     println!("\n== fault A: embedding PS node 0 process crash (shared memory survives) ==");
-    ps_backup.mirror_shared(&ps, 0);
-    ps.wipe_node(0);
+    ps_backup.mirror_shared(&ps, 0)?;
+    ps.wipe_node(0)?;
     let path = ps_backup.recover(&ps, 0, true)?;
     println!("  recovered via {path}; AUC now {:.4} (lossless)", eval(&params, &engine, &ew));
 
     println!("\n== fault B: embedding PS node 1 crash WITH memory loss (disk checkpoint) ==");
-    ps.wipe_node(1);
+    ps.wipe_node(1)?;
     ckpt.restore_node(&ps, 1)?;
     println!(
         "  recovered from periodic checkpoint; AUC {:.4} (post-checkpoint puts lost)",

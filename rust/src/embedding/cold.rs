@@ -1,0 +1,514 @@
+//! Disk-backed cold tier: one slotted, CRC-framed file per PS shard.
+//!
+//! This is the capacity floor under the hot LRU (ScaleFreeCTR's MixCache
+//! design): rows evicted from RAM are *demoted* here with their exact bytes
+//! (embedding vector ⊕ optimizer state) instead of being dropped, so the
+//! table can grow far past the hot budget without changing any numerics.
+//!
+//! ## File format
+//!
+//! ```text
+//! header  (24 B): magic "PCLD0001" | row_width u64 | reserved u64
+//! slot    (16 B + 4·row_width B), repeated:
+//!         key u64 | occupied u32 | crc u32 | row f32 × row_width
+//! ```
+//!
+//! The CRC covers `key bytes ‖ row bytes`, so a torn write, a bit flip, or
+//! a slot read against the wrong key is detected on every read — a row with
+//! a bad CRC is **never surfaced**; it is treated as absent (the caller
+//! re-materializes it deterministically, degrading exactly like a pre-tier
+//! eviction would have). The file is plain pread/pwrite I/O with no mmap
+//! and no new dependencies; per-write fsync is deliberately omitted because
+//! durability comes from the checkpoint epoch files (written through
+//! `recovery::atomic_write` under the two-phase PREPARE/COMMIT protocol),
+//! not from the live working file.
+//!
+//! An in-memory index (key → slot) is rebuilt by scanning the file on
+//! [`ColdStore::open`]; corrupt or free slots land on the free list and are
+//! reused by later writes. A trailing partial slot (torn final append) is
+//! ignored and overwritten by the next append.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::hash::BuildHasherDefault;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use super::checkpoint::crc32;
+use super::lru::IdHasher;
+
+const MAGIC: &[u8; 8] = b"PCLD0001";
+const HEADER_LEN: u64 = 24;
+/// Snapshot-blob magic ([`ColdStore::snapshot_bytes`]), distinct from the
+/// live-file magic so the two can never be confused.
+const SNAP_MAGIC: &[u8; 8] = b"PCSN0001";
+/// Sanity ceiling on row widths accepted from disk (a corrupt header must
+/// not drive a multi-gigabyte allocation).
+const MAX_ROW_WIDTH: u64 = 1 << 20;
+
+type SlotIndex = HashMap<u64, u64, BuildHasherDefault<IdHasher>>;
+
+/// Disk-backed row store for one shard's cold tier.
+pub struct ColdStore {
+    file: File,
+    path: PathBuf,
+    row_width: usize,
+    /// key → slot number (slot 0 starts right after the header).
+    index: SlotIndex,
+    free: Vec<u64>,
+    n_slots: u64,
+}
+
+impl ColdStore {
+    fn slot_size(row_width: usize) -> u64 {
+        16 + 4 * row_width as u64
+    }
+
+    fn slot_offset(&self, slot: u64) -> u64 {
+        HEADER_LEN + slot * Self::slot_size(self.row_width)
+    }
+
+    fn read_at(&self, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, off)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(off))?;
+            f.read_exact(buf)
+        }
+    }
+
+    fn write_at(&self, buf: &[u8], off: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.write_all_at(buf, off)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(off))?;
+            f.write_all(buf)
+        }
+    }
+
+    /// Open (or create) the cold file at `path` for `row_width`-float rows,
+    /// rebuilding the key index by scanning every slot. Corruption is
+    /// contained, never fatal to valid data: a slot with a bad CRC is
+    /// reclaimed as free space, and a trailing partial slot is ignored. A
+    /// file whose *header* is wrong (different magic or row width) is an
+    /// error — that is a misconfiguration, not bit rot.
+    pub fn open(path: &Path, row_width: usize) -> Result<Self> {
+        assert!(row_width > 0);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating cold dir {}", parent.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening cold store {}", path.display()))?;
+        let mut store = Self {
+            file,
+            path: path.to_path_buf(),
+            row_width,
+            index: SlotIndex::default(),
+            free: Vec::new(),
+            n_slots: 0,
+        };
+        let len = store.file.metadata()?.len();
+        if len == 0 {
+            let mut header = [0u8; HEADER_LEN as usize];
+            header[..8].copy_from_slice(MAGIC);
+            header[8..16].copy_from_slice(&(row_width as u64).to_le_bytes());
+            store.write_at(&header, 0)?;
+            return Ok(store);
+        }
+        ensure!(
+            len >= HEADER_LEN,
+            "cold store {} too short for a header ({len} bytes)",
+            path.display()
+        );
+        let mut header = [0u8; HEADER_LEN as usize];
+        store.read_at(&mut header, 0)?;
+        ensure!(&header[..8] == MAGIC, "cold store {} has bad magic", path.display());
+        let file_w = u64::from_le_bytes(header[8..16].try_into().expect("8 bytes"));
+        ensure!(
+            file_w == row_width as u64,
+            "cold store {} row width {file_w} != configured {row_width}",
+            path.display()
+        );
+        let slot_size = Self::slot_size(row_width);
+        store.n_slots = (len - HEADER_LEN) / slot_size; // trailing partial slot ignored
+        let mut buf = vec![0u8; slot_size as usize];
+        for slot in 0..store.n_slots {
+            store.read_at(&mut buf, store.slot_offset(slot))?;
+            let key = u64::from_le_bytes(buf[..8].try_into().expect("8 bytes"));
+            let occupied = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+            let crc = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes"));
+            let good = occupied == 1
+                && crc == Self::slot_crc(key, &buf[16..])
+                && !store.index.contains_key(&key);
+            if good {
+                store.index.insert(key, slot);
+            } else {
+                store.free.push(slot);
+            }
+        }
+        Ok(store)
+    }
+
+    fn slot_crc(key: u64, row_bytes: &[u8]) -> u32 {
+        let mut framed = Vec::with_capacity(8 + row_bytes.len());
+        framed.extend_from_slice(&key.to_le_bytes());
+        framed.extend_from_slice(row_bytes);
+        crc32(&framed)
+    }
+
+    /// Rows currently resident (with valid CRCs as of their last access).
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no rows are resident.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Floats per row.
+    pub fn row_width(&self) -> usize {
+        self.row_width
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Whether `key` is indexed (its CRC is only re-verified on read).
+    pub fn contains(&self, key: u64) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Read `key`'s row into `out`. Returns `Ok(false)` if absent — or if
+    /// the slot's CRC no longer matches (the row is dropped from the index
+    /// and never surfaced; bit rot degrades to a re-materialization, not a
+    /// wrong answer).
+    pub fn get_into(&mut self, key: u64, out: &mut [f32]) -> Result<bool> {
+        ensure!(out.len() == self.row_width, "output width {} != {}", out.len(), self.row_width);
+        let Some(&slot) = self.index.get(&key) else {
+            return Ok(false);
+        };
+        let mut buf = vec![0u8; Self::slot_size(self.row_width) as usize];
+        self.read_at(&mut buf, self.slot_offset(slot))
+            .with_context(|| format!("reading cold slot {slot} of {}", self.path.display()))?;
+        let disk_key = u64::from_le_bytes(buf[..8].try_into().expect("8 bytes"));
+        let occupied = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+        let crc = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes"));
+        if occupied != 1 || disk_key != key || crc != Self::slot_crc(key, &buf[16..]) {
+            self.index.remove(&key);
+            self.free.push(slot);
+            return Ok(false);
+        }
+        for (i, chunk) in buf[16..].chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+        }
+        Ok(true)
+    }
+
+    /// Write `key`'s row (insert or overwrite), reusing its slot, then a
+    /// free slot, then appending.
+    pub fn put(&mut self, key: u64, row: &[f32]) -> Result<()> {
+        ensure!(row.len() == self.row_width, "row width {} != {}", row.len(), self.row_width);
+        let slot = match self.index.get(&key) {
+            Some(&s) => s,
+            None => {
+                let s = self.free.pop().unwrap_or_else(|| {
+                    let s = self.n_slots;
+                    self.n_slots += 1;
+                    s
+                });
+                self.index.insert(key, s);
+                s
+            }
+        };
+        let mut buf = Vec::with_capacity(Self::slot_size(self.row_width) as usize);
+        buf.extend_from_slice(&key.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        let mut row_bytes = Vec::with_capacity(4 * row.len());
+        for &v in row {
+            row_bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&Self::slot_crc(key, &row_bytes).to_le_bytes());
+        buf.extend_from_slice(&row_bytes);
+        self.write_at(&buf, self.slot_offset(slot))
+            .with_context(|| format!("writing cold slot {slot} of {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Remove `key`, freeing its slot. Returns true if it was present.
+    pub fn remove(&mut self, key: u64) -> Result<bool> {
+        let Some(slot) = self.index.remove(&key) else {
+            return Ok(false);
+        };
+        // Zeroing the 16-byte slot header (key, occupied, crc) is enough:
+        // occupied=0 makes the open() scan skip it.
+        self.write_at(&[0u8; 16], self.slot_offset(slot))?;
+        self.free.push(slot);
+        Ok(true)
+    }
+
+    /// Resident keys in ascending order (snapshots must be deterministic:
+    /// equal contents ⇒ equal bytes, whatever the slot placement history).
+    pub fn keys_sorted(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self.index.keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Serialize all resident rows, sorted by key. Rows whose CRC fails
+    /// during the sweep are dropped (not surfaced), same as `get_into`.
+    pub fn snapshot_bytes(&mut self) -> Result<Vec<u8>> {
+        let keys = self.keys_sorted();
+        let mut rows = Vec::with_capacity(keys.len());
+        let mut row = vec![0.0f32; self.row_width];
+        for key in keys {
+            if self.get_into(key, &mut row)? {
+                rows.push((key, row.clone()));
+            }
+        }
+        let mut out = Vec::with_capacity(24 + rows.len() * (8 + 4 * self.row_width));
+        out.extend_from_slice(SNAP_MAGIC);
+        out.extend_from_slice(&(self.row_width as u64).to_le_bytes());
+        out.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+        for (key, row) in rows {
+            out.extend_from_slice(&key.to_le_bytes());
+            for v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a [`Self::snapshot_bytes`] blob into (row_width, rows).
+    /// Validates shape exactly; corrupt input is `Err`, never a panic.
+    pub fn decode_snapshot(bytes: &[u8]) -> Result<(usize, Vec<(u64, Vec<f32>)>)> {
+        ensure!(bytes.len() >= 24 && &bytes[..8] == SNAP_MAGIC, "bad cold snapshot header");
+        let row_width_raw = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes"));
+        let count = u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+        ensure!(
+            row_width_raw > 0 && row_width_raw <= MAX_ROW_WIDTH,
+            "cold snapshot row width {row_width_raw} out of range"
+        );
+        let row_width = row_width_raw as usize;
+        let entry = 8 + 4 * row_width;
+        let body = (bytes.len() - 24) as u64;
+        ensure!(
+            count.checked_mul(entry as u64) == Some(body),
+            "cold snapshot size mismatch: {count} rows of {entry} bytes vs {body} body bytes"
+        );
+        let mut rows = Vec::with_capacity(count as usize);
+        let mut prev: Option<u64> = None;
+        for chunk in bytes[24..].chunks_exact(entry) {
+            let key = u64::from_le_bytes(chunk[..8].try_into().expect("8 bytes"));
+            ensure!(prev.map_or(true, |p| p < key), "cold snapshot keys not strictly ascending");
+            prev = Some(key);
+            let row: Vec<f32> = chunk[8..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            rows.push((key, row));
+        }
+        Ok((row_width, rows))
+    }
+
+    /// Replace the store's contents from a [`Self::snapshot_bytes`] blob,
+    /// rewriting the live file.
+    pub fn restore_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let (row_width, rows) = Self::decode_snapshot(bytes)?;
+        ensure!(
+            row_width == self.row_width,
+            "cold snapshot row width {row_width} != store row width {}",
+            self.row_width
+        );
+        self.wipe()?;
+        for (key, row) in rows {
+            self.put(key, &row)?;
+        }
+        Ok(())
+    }
+
+    /// Drop every row and truncate the live file back to its header.
+    pub fn wipe(&mut self) -> Result<()> {
+        self.file.set_len(HEADER_LEN)?;
+        self.index.clear();
+        self.free.clear();
+        self.n_slots = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("persia_cold_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.join("shard.bin")
+    }
+
+    #[test]
+    fn put_get_remove_roundtrip() {
+        let path = tmp_file("roundtrip");
+        let mut cs = ColdStore::open(&path, 3).unwrap();
+        assert!(cs.is_empty());
+        cs.put(7, &[1.0, 2.0, 3.0]).unwrap();
+        cs.put(9, &[4.0, 5.0, 6.0]).unwrap();
+        cs.put(7, &[7.0, 8.0, 9.0]).unwrap(); // overwrite reuses the slot
+        assert_eq!(cs.len(), 2);
+        let mut row = [0.0f32; 3];
+        assert!(cs.get_into(7, &mut row).unwrap());
+        assert_eq!(row, [7.0, 8.0, 9.0]);
+        assert!(cs.get_into(9, &mut row).unwrap());
+        assert_eq!(row, [4.0, 5.0, 6.0]);
+        assert!(!cs.get_into(8, &mut row).unwrap());
+        assert!(cs.remove(7).unwrap());
+        assert!(!cs.remove(7).unwrap());
+        assert!(!cs.get_into(7, &mut row).unwrap());
+        // Freed slot is reused: file does not grow.
+        let len_before = std::fs::metadata(&path).unwrap().len();
+        cs.put(11, &[0.5; 3]).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), len_before);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn reopen_rebuilds_index_from_disk() {
+        let path = tmp_file("reopen");
+        {
+            let mut cs = ColdStore::open(&path, 2).unwrap();
+            for k in 0..10u64 {
+                cs.put(k, &[k as f32, -(k as f32)]).unwrap();
+            }
+            cs.remove(4).unwrap();
+        }
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        assert_eq!(cs.len(), 9);
+        let mut row = [0.0f32; 2];
+        for k in (0..10u64).filter(|&k| k != 4) {
+            assert!(cs.get_into(k, &mut row).unwrap(), "key {k} lost across reopen");
+            assert_eq!(row, [k as f32, -(k as f32)]);
+        }
+        assert!(!cs.get_into(4, &mut row).unwrap());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn reopen_with_wrong_row_width_errors() {
+        let path = tmp_file("width");
+        drop(ColdStore::open(&path, 2).unwrap());
+        assert!(ColdStore::open(&path, 3).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn corrupted_slot_is_never_surfaced() {
+        let path = tmp_file("corrupt");
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        cs.put(1, &[1.0, 1.0]).unwrap();
+        cs.put(2, &[2.0, 2.0]).unwrap();
+        // Flip one byte inside key 1's row region on disk.
+        let mut raw = std::fs::read(&path).unwrap();
+        let slot = 24 + 16; // header + slot 0 header → first row byte
+        raw[slot] ^= 0xff;
+        std::fs::write(&path, &raw).unwrap();
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        assert_eq!(cs.len(), 1, "corrupt slot must be reclaimed, not surfaced");
+        let mut row = [0.0f32; 2];
+        assert!(!cs.get_into(1, &mut row).unwrap());
+        assert!(cs.get_into(2, &mut row).unwrap());
+        assert_eq!(row, [2.0, 2.0]);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn trailing_partial_slot_is_ignored() {
+        let path = tmp_file("partial");
+        {
+            let mut cs = ColdStore::open(&path, 2).unwrap();
+            cs.put(1, &[1.0, 1.0]).unwrap();
+        }
+        // Simulate a torn append: half a slot of garbage at the tail.
+        use std::io::Write;
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0xabu8; 10]).unwrap();
+        drop(f);
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        assert_eq!(cs.len(), 1);
+        // The next append overwrites the torn region cleanly.
+        cs.put(2, &[2.0, 2.0]).unwrap();
+        let mut row = [0.0f32; 2];
+        assert!(cs.get_into(2, &mut row).unwrap());
+        assert_eq!(row, [2.0, 2.0]);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_and_determinism() {
+        let path = tmp_file("snap");
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        for k in [9u64, 3, 7, 1] {
+            cs.put(k, &[k as f32, 0.25]).unwrap();
+        }
+        let snap = cs.snapshot_bytes().unwrap();
+        // Same logical contents with different placement history ⇒ same bytes.
+        let path2 = tmp_file("snap2");
+        let mut cs2 = ColdStore::open(&path2, 2).unwrap();
+        for k in [1u64, 7, 3, 9, 100] {
+            cs2.put(k, &[k as f32, 0.25]).unwrap();
+        }
+        cs2.remove(100).unwrap();
+        assert_eq!(cs2.snapshot_bytes().unwrap(), snap);
+        // Restore into a wiped store.
+        cs2.wipe().unwrap();
+        assert!(cs2.is_empty());
+        cs2.restore_bytes(&snap).unwrap();
+        assert_eq!(cs2.snapshot_bytes().unwrap(), snap);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+        std::fs::remove_dir_all(path2.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn decode_snapshot_rejects_malformed_input() {
+        assert!(ColdStore::decode_snapshot(b"").is_err());
+        assert!(ColdStore::decode_snapshot(b"PCSN0001").is_err());
+        let path = tmp_file("badsnap");
+        let mut cs = ColdStore::open(&path, 2).unwrap();
+        cs.put(5, &[1.0, 2.0]).unwrap();
+        let good = cs.snapshot_bytes().unwrap();
+        // Truncation.
+        assert!(ColdStore::decode_snapshot(&good[..good.len() - 1]).is_err());
+        // Count larger than the body.
+        let mut b = good.clone();
+        b[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(ColdStore::decode_snapshot(&b).is_err());
+        // Implausible row width.
+        let mut b = good;
+        b[8..16].copy_from_slice(&(MAX_ROW_WIDTH + 1).to_le_bytes());
+        assert!(ColdStore::decode_snapshot(&b).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

@@ -81,6 +81,7 @@ pub struct LruStore {
     free: Vec<u32>,
     row_width: usize,
     evictions: u64,
+    hits: u64,
 }
 
 impl LruStore {
@@ -97,6 +98,7 @@ impl LruStore {
             free: (0..capacity as u32).rev().collect(),
             row_width,
             evictions: 0,
+            hits: 0,
         }
     }
 
@@ -123,6 +125,17 @@ impl LruStore {
     /// Total evictions since construction.
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Total resident-row hits since construction (like `evictions`, a
+    /// runtime counter — not serialized by [`Self::to_bytes`]).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Whether `key` is resident, without touching recency.
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
     }
 
     #[inline]
@@ -163,6 +176,7 @@ impl LruStore {
     /// Look up `key`, marking it most-recently-used. Returns the row.
     pub fn get(&mut self, key: u64) -> Option<&mut [f32]> {
         let idx = *self.map.get(&key)?;
+        self.hits += 1;
         if self.head != idx {
             self.detach(idx);
             self.push_front(idx);
@@ -187,6 +201,7 @@ impl LruStore {
     ) -> (&mut [f32], Option<u64>) {
         let w = self.row_width;
         if let Some(&idx) = self.map.get(&key) {
+            self.hits += 1;
             if self.head != idx {
                 self.detach(idx);
                 self.push_front(idx);
@@ -232,6 +247,28 @@ impl LruStore {
         } else {
             false
         }
+    }
+
+    /// Evict the LRU tail, returning its key and a copy of its row bytes.
+    ///
+    /// This is the demotion hook for tiered storage: unlike the implicit
+    /// eviction inside [`Self::get_or_insert_with`] (which reuses the
+    /// victim's slot in place and discards its contents), the caller gets
+    /// the exact row back so it can be persisted in a colder tier.
+    pub fn evict_lru(&mut self) -> Option<(u64, Vec<f32>)> {
+        let victim = self.tail;
+        if victim == NIL {
+            return None;
+        }
+        let key = self.slots[victim as usize].key;
+        let w = self.row_width;
+        let row = self.values[victim as usize * w..(victim as usize + 1) * w].to_vec();
+        self.detach(victim);
+        self.map.remove(&key);
+        self.slots[victim as usize] = Slot::empty();
+        self.free.push(victim);
+        self.evictions += 1;
+        Some((key, row))
     }
 
     /// Keys from MRU to LRU (test/diagnostic; O(len)).
@@ -331,10 +368,20 @@ impl LruStore {
     /// not take the process down with it.
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
         use anyhow::ensure;
-        ensure!(bytes.len() >= 40 && &bytes[..8] == b"PLRU0001", "bad LRU snapshot header");
-        let rd_u64 = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
-        let capacity_raw = rd_u64(8);
-        let row_width_raw = rd_u64(16);
+        ensure!(bytes.len() >= 8 && &bytes[..8] == b"PLRU0001", "bad LRU snapshot header");
+        // Every header read goes through one checked reader: a short buffer
+        // is an Err, never a slice-index panic.
+        let rd_u64 = |off: usize| -> anyhow::Result<u64> {
+            let end = off
+                .checked_add(8)
+                .ok_or_else(|| anyhow::anyhow!("snapshot header offset overflow"))?;
+            let raw = bytes
+                .get(off..end)
+                .ok_or_else(|| anyhow::anyhow!("snapshot truncated in header at byte {off}"))?;
+            Ok(u64::from_le_bytes(raw.try_into().expect("8-byte slice")))
+        };
+        let capacity_raw = rd_u64(8)?;
+        let row_width_raw = rd_u64(16)?;
         // The constructor's own bounds: 0 < capacity < NIL, row_width > 0.
         ensure!(
             capacity_raw > 0 && capacity_raw < NIL as u64,
@@ -360,8 +407,8 @@ impl LruStore {
         ensure!(bytes.len() == total, "snapshot size mismatch");
         // head/tail travel as u64; reject anything that would truncate when
         // narrowed back to a slot index instead of silently wrapping.
-        let head_raw = rd_u64(24);
-        let tail_raw = rd_u64(32);
+        let head_raw = rd_u64(24)?;
+        let tail_raw = rd_u64(32)?;
         ensure!(
             head_raw == NIL as u64 || head_raw < capacity_raw,
             "snapshot head {head_raw} out of bounds"
@@ -402,7 +449,7 @@ impl LruStore {
         }
         free.reverse();
         let store =
-            Self { slots, values, map, head, tail, free, row_width, evictions: 0 };
+            Self { slots, values, map, head, tail, free, row_width, evictions: 0, hits: 0 };
         // The bounds/cycle-hardened walk rejects corrupt prev/next links.
         store.check_invariants()?;
         Ok(store)
@@ -567,6 +614,38 @@ mod tests {
         let k0 = u64::from_le_bytes(bytes[40..48].try_into().unwrap());
         bytes[64..72].copy_from_slice(&k0.to_le_bytes());
         assert!(LruStore::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn evict_lru_returns_exact_row_bytes() {
+        let mut lru = LruStore::new(3, 2);
+        lru.get_or_insert_with(1, init_row(1.0));
+        lru.get_or_insert_with(2, init_row(2.0));
+        lru.get(1).unwrap()[1] = 9.0; // 2 becomes LRU; 1 carries an update
+        let (k, row) = lru.evict_lru().unwrap();
+        assert_eq!(k, 2);
+        assert_eq!(row, vec![2.0, 2.0]);
+        assert!(!lru.contains(2));
+        assert!(lru.contains(1));
+        assert_eq!(lru.evictions(), 1);
+        // The freed slot is reusable without a further eviction.
+        let (_, ev) = lru.get_or_insert_with(3, init_row(3.0));
+        assert!(ev.is_none());
+        assert_eq!(lru.get(1).unwrap(), &[1.0, 9.0]);
+        lru.check_invariants().unwrap();
+        let mut empty = LruStore::new(2, 1);
+        assert!(empty.evict_lru().is_none());
+    }
+
+    #[test]
+    fn hits_counter_tracks_resident_lookups() {
+        let mut lru = LruStore::new(2, 1);
+        assert_eq!(lru.hits(), 0);
+        lru.get_or_insert_with(1, init_row(1.0)); // miss
+        lru.get_or_insert_with(1, init_row(1.0)); // hit
+        lru.get(1); // hit
+        lru.get(99); // miss
+        assert_eq!(lru.hits(), 2);
     }
 
     #[test]

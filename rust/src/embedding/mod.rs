@@ -1,21 +1,35 @@
 //! The embedding parameter server (paper §4.2.2) and its storage substrate.
 //!
+//! * [`store`] — the pluggable storage-engine seam: the [`EmbeddingStore`]
+//!   trait every shard talks to, plus [`StoreConfig`] for selecting an
+//!   engine at construction time.
 //! * [`lru`] — the array-list LRU cache: hash-map + index-linked array,
 //!   entries hold the embedding vector ⊕ optimizer state, serialization is a
-//!   flat memory copy.
+//!   flat memory copy. The all-hot engine, and the hot tier of the tiered
+//!   one.
+//! * [`cold`] — the disk-backed cold tier: one slotted, CRC-framed file per
+//!   shard, pread/pwrite, no new deps.
+//! * [`tiered`] — hot LRU over cold store with Zipf-gated admission:
+//!   eviction demotes exact row bytes, cold hits promote back.
 //! * [`optimizer`] — row-wise SGD / Adagrad / Adam (Alg. 1's Ω^emb).
-//! * [`shard`] — one locked LRU per shard (the paper's thread-per-sub-map).
+//! * [`shard`] — one locked store per shard (the paper's thread-per-sub-map).
 //! * [`ps`] — the sharded PS: global hash placement, feature-group vs
 //!   shuffled-uniform partitioning, get/put API, checkpointing.
 
 pub mod checkpoint;
+pub mod cold;
 pub mod lru;
 pub mod optimizer;
 pub mod ps;
 pub mod shard;
+pub mod store;
+pub mod tiered;
 
 pub use checkpoint::CheckpointManager;
+pub use cold::ColdStore;
 pub use lru::LruStore;
 pub use optimizer::RowOptimizer;
 pub use ps::EmbeddingPs;
 pub use shard::Shard;
+pub use store::{EmbeddingStore, NodeSnapshot, StoreConfig, StoreCounters};
+pub use tiered::TieredStore;

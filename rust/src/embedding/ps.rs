@@ -14,6 +14,7 @@ use crate::config::{EmbeddingConfig, PartitionPolicy};
 
 use super::optimizer::RowOptimizer;
 use super::shard::Shard;
+use super::store::{NodeSnapshot, StoreConfig, StoreCounters};
 
 #[inline]
 fn splitmix64(mut x: u64) -> u64 {
@@ -103,6 +104,16 @@ impl EmbeddingPs {
         Self::new_range(cfg, dim, seed, 0..cfg.n_nodes)
     }
 
+    /// A PS owning every logical node, with an explicit storage engine.
+    pub fn new_with_store(
+        cfg: &EmbeddingConfig,
+        dim: usize,
+        seed: u64,
+        store: &StoreConfig,
+    ) -> anyhow::Result<Self> {
+        Self::new_range_with_store(cfg, dim, seed, 0..cfg.n_nodes, store)
+    }
+
     /// A PS owning only global nodes `range` out of `cfg.n_nodes`. Shard
     /// seeds are derived from the *global* node index, so a node's rows
     /// materialize identically whether it lives in a full in-process PS or
@@ -113,6 +124,21 @@ impl EmbeddingPs {
         seed: u64,
         range: std::ops::Range<usize>,
     ) -> Self {
+        Self::new_range_with_store(cfg, dim, seed, range, &StoreConfig::Hot)
+            .expect("all-hot store construction is infallible")
+    }
+
+    /// Like [`Self::new_range`] but constructing each shard's store through
+    /// `store` ([`StoreConfig::Tiered`] may fail on cold-file I/O). Cold
+    /// files are named by *global* node/shard indices, so a restarted
+    /// process reopens exactly the files its predecessor wrote.
+    pub fn new_range_with_store(
+        cfg: &EmbeddingConfig,
+        dim: usize,
+        seed: u64,
+        range: std::ops::Range<usize>,
+        store: &StoreConfig,
+    ) -> anyhow::Result<Self> {
         assert!(
             range.start < range.end && range.end <= cfg.n_nodes,
             "node range {range:?} invalid for {} nodes",
@@ -125,18 +151,19 @@ impl EmbeddingPs {
                 (0..cfg.shards_per_node)
                     .map(|s| {
                         let shard_seed = seed ^ ((n as u64) << 32) ^ s as u64;
-                        Shard::new(cfg.shard_capacity, opt, shard_seed)
+                        let engine = store.build(cfg.shard_capacity, opt.row_width(), n, s)?;
+                        Ok(Shard::with_store(engine, opt, shard_seed))
                     })
-                    .collect()
+                    .collect::<anyhow::Result<Vec<_>>>()
             })
-            .collect();
-        Self {
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
             nodes,
             node_start: range.start,
             n_nodes_global: cfg.n_nodes,
             policy: cfg.partition,
             dim,
-        }
+        })
     }
 
     /// Embedding vector width per row.
@@ -214,7 +241,7 @@ impl EmbeddingPs {
         let shards: Vec<&Shard> =
             packed.iter().map(|&k| self.shard_checked(k)).collect::<anyhow::Result<_>>()?;
         for (i, (shard, &key)) in shards.iter().zip(packed).enumerate() {
-            shard.get(key, &mut out[i * self.dim..(i + 1) * self.dim]);
+            shard.get(key, &mut out[i * self.dim..(i + 1) * self.dim])?;
         }
         Ok(())
     }
@@ -227,30 +254,42 @@ impl EmbeddingPs {
         let shards: Vec<&Shard> =
             packed.iter().map(|&k| self.shard_checked(k)).collect::<anyhow::Result<_>>()?;
         for (i, (shard, &key)) in shards.iter().zip(packed).enumerate() {
-            shard.put_grad(key, &grads[i * self.dim..(i + 1) * self.dim]);
+            shard.put_grad(key, &grads[i * self.dim..(i + 1) * self.dim])?;
         }
         Ok(())
     }
 
     /// Fetch one embedding row into `out`.
+    ///
+    /// # Panics
+    /// On unowned keys, and on cold-tier I/O failure (the fallible service
+    /// entry point is [`Self::get_packed_into`]).
     pub fn get(&self, group: u32, id: u64, out: &mut [f32]) {
         let key = pack_key(group, id);
-        self.shard(key).get(key, out);
+        self.shard(key).get(key, out).expect("embedding store I/O");
     }
 
     /// Batched lookup: rows for `keys`, flattened `[len, dim]` into `out`.
+    ///
+    /// # Panics
+    /// Like [`Self::get`].
     pub fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) {
         assert_eq!(out.len(), keys.len() * self.dim);
         for (i, &(g, id)) in keys.iter().enumerate() {
             let key = pack_key(g, id);
-            self.shard(key).get(key, &mut out[i * self.dim..(i + 1) * self.dim]);
+            self.shard(key)
+                .get(key, &mut out[i * self.dim..(i + 1) * self.dim])
+                .expect("embedding store I/O");
         }
     }
 
     /// Apply one gradient row.
+    ///
+    /// # Panics
+    /// Like [`Self::get`].
     pub fn put_grad(&self, group: u32, id: u64, grad: &[f32]) {
         let key = pack_key(group, id);
-        self.shard(key).put_grad(key, grad);
+        self.shard(key).put_grad(key, grad).expect("embedding store I/O");
     }
 
     /// Batched gradient put, rows flattened like [`Self::get_many`].
@@ -266,9 +305,29 @@ impl EmbeddingPs {
         self.nodes.iter().flatten().map(|s| s.len()).sum()
     }
 
-    /// LRU evictions across all owned shards.
+    /// Hot-tier evictions across all owned shards.
     pub fn total_evictions(&self) -> u64 {
         self.nodes.iter().flatten().map(|s| s.evictions()).sum()
+    }
+
+    /// Rows resident in cold tiers across all owned shards.
+    pub fn cold_rows(&self) -> usize {
+        self.nodes.iter().flatten().map(|s| s.cold_len()).sum()
+    }
+
+    /// Hit/movement counters summed over all owned shards.
+    pub fn tier_counters(&self) -> StoreCounters {
+        let mut total = StoreCounters::default();
+        for s in self.nodes.iter().flatten() {
+            total.add(&s.counters());
+        }
+        total
+    }
+
+    /// Whether this PS's shards have a cold tier (all shards share one
+    /// [`StoreConfig`], so the first shard answers for everyone).
+    pub fn has_cold_tier(&self) -> bool {
+        self.nodes[0][0].has_cold()
     }
 
     /// Per-node traffic (gets+puts) — the load-balance ablation metric.
@@ -305,17 +364,40 @@ impl EmbeddingPs {
         Ok(&self.nodes[node - self.node_start])
     }
 
-    /// Snapshot one node (all its shards) — periodic checkpointing (§4.2.4).
-    /// `node` is a *global* index and must be owned by this instance.
-    pub fn snapshot_node(&self, node: usize) -> Vec<Vec<u8>> {
-        self.owned_node(node)
-            .expect("snapshot of unowned node")
-            .iter()
-            .map(|s| s.snapshot())
-            .collect()
+    /// Snapshot one node's hot tiers (all its shards) — periodic
+    /// checkpointing (§4.2.4). `node` is a *global* index; an unowned node
+    /// is an `Err`, not a panic — the SNAPSHOT RPC handler reaches this
+    /// with remote-supplied indices and must survive hostile ones.
+    pub fn snapshot_node(&self, node: usize) -> anyhow::Result<Vec<Vec<u8>>> {
+        self.owned_node(node)?.iter().map(|s| s.snapshot()).collect()
     }
 
-    /// Restore one (owned, global-indexed) node from a snapshot.
+    /// Snapshot one node's cold tiers: `Some(blob per shard)` when the
+    /// stores are tiered, `None` when all-hot. A node with a mix of tiered
+    /// and all-hot shards is a construction-time impossibility and reports
+    /// as corruption here.
+    pub fn snapshot_node_cold(&self, node: usize) -> anyhow::Result<Option<Vec<Vec<u8>>>> {
+        let shards = self.owned_node(node)?;
+        let blobs: Vec<Option<Vec<u8>>> =
+            shards.iter().map(|s| s.snapshot_cold()).collect::<anyhow::Result<_>>()?;
+        let n_cold = blobs.iter().filter(|b| b.is_some()).count();
+        anyhow::ensure!(
+            n_cold == 0 || n_cold == shards.len(),
+            "node {node} mixes tiered and all-hot shards ({n_cold}/{})",
+            shards.len()
+        );
+        Ok(if n_cold == 0 { None } else { Some(blobs.into_iter().flatten().collect()) })
+    }
+
+    /// Snapshot one node across all tiers.
+    pub fn snapshot_node_full(&self, node: usize) -> anyhow::Result<NodeSnapshot> {
+        Ok(NodeSnapshot {
+            hot: self.snapshot_node(node)?,
+            cold: self.snapshot_node_cold(node)?,
+        })
+    }
+
+    /// Restore one (owned, global-indexed) node's hot tiers from a snapshot.
     pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> anyhow::Result<()> {
         let owned = self.owned_node(node)?;
         anyhow::ensure!(shards.len() == owned.len(), "shard count mismatch");
@@ -325,12 +407,45 @@ impl EmbeddingPs {
         Ok(())
     }
 
+    /// Restore one node's cold tiers. Errs if this PS has no cold tier.
+    pub fn restore_node_cold(&self, node: usize, shards: &[Vec<u8>]) -> anyhow::Result<()> {
+        let owned = self.owned_node(node)?;
+        anyhow::ensure!(shards.len() == owned.len(), "cold shard count mismatch");
+        for (shard, bytes) in owned.iter().zip(shards) {
+            shard.restore_cold(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Restore one node across tiers, enforcing that the snapshot's tier
+    /// shape matches this PS's (a tiered PS cannot accept an all-hot
+    /// snapshot without silently resurrecting stale cold rows, and vice
+    /// versa an all-hot PS would silently *drop* the snapshot's cold rows).
+    pub fn restore_node_full(&self, node: usize, snap: &NodeSnapshot) -> anyhow::Result<()> {
+        match (&snap.cold, self.has_cold_tier()) {
+            (Some(cold), true) => {
+                // Cold first: a failure here leaves the hot tier untouched.
+                self.restore_node_cold(node, cold)?;
+                self.restore_node(node, &snap.hot)
+            }
+            (None, false) => self.restore_node(node, &snap.hot),
+            (Some(_), false) => anyhow::bail!(
+                "snapshot has a cold tier but this PS is all-hot; restart with --cold-dir"
+            ),
+            (None, true) => anyhow::bail!(
+                "snapshot is all-hot but this PS has a cold tier; restart without --cold-dir"
+            ),
+        }
+    }
+
     /// Simulate a node crash that loses in-memory state (used by fault tests
     /// to contrast with the shared-memory + checkpoint recovery path).
-    pub fn wipe_node(&self, node: usize) {
-        for s in self.owned_node(node).expect("wipe of unowned node") {
-            s.wipe();
+    /// Unowned nodes are an `Err` like every other node-indexed entry point.
+    pub fn wipe_node(&self, node: usize) -> anyhow::Result<()> {
+        for s in self.owned_node(node)? {
+            s.wipe()?;
         }
+        Ok(())
     }
 }
 
@@ -436,9 +551,9 @@ mod tests {
         let mut want = vec![0.0; 200];
         ps.get_many(&keys, &mut want);
 
-        let snaps: Vec<_> = (0..4).map(|n| ps.snapshot_node(n)).collect();
+        let snaps: Vec<_> = (0..4).map(|n| ps.snapshot_node(n).unwrap()).collect();
         for n in 0..4 {
-            ps.wipe_node(n);
+            ps.wipe_node(n).unwrap();
         }
         assert_eq!(ps.total_rows(), 0);
         for (n, snap) in snaps.iter().enumerate() {
@@ -549,14 +664,66 @@ mod tests {
             }
         }
         // Node 3 snapshots must agree between the full PS and the part.
-        assert_eq!(part.snapshot_node(3), full.snapshot_node(3));
+        assert_eq!(part.snapshot_node(3).unwrap(), full.snapshot_node(3).unwrap());
         // Restore through the global index roundtrips.
-        let snap = part.snapshot_node(2);
-        part.wipe_node(2);
+        let snap = part.snapshot_node(2).unwrap();
+        part.wipe_node(2).unwrap();
         part.restore_node(2, &snap).unwrap();
-        assert_eq!(part.snapshot_node(2), snap);
-        // Unowned nodes are a loud error, not silent corruption.
+        assert_eq!(part.snapshot_node(2).unwrap(), snap);
+        // Unowned nodes are a loud error, not silent corruption — on every
+        // node-indexed entry point (snapshot/wipe used to panic here).
         assert!(part.restore_node(0, &snap).is_err());
+        assert!(part.snapshot_node(0).is_err());
+        assert!(part.snapshot_node_cold(0).is_err());
+        assert!(part.wipe_node(0).is_err());
+        // All-hot shards report no cold tier.
+        assert!(!part.has_cold_tier());
+        assert_eq!(part.snapshot_node_cold(2).unwrap(), None);
+        assert_eq!(part.cold_rows(), 0);
+    }
+
+    #[test]
+    fn tiered_ps_roundtrips_and_counts_both_tiers() {
+        let c = cfg(PartitionPolicy::ShuffledUniform);
+        let dir =
+            std::env::temp_dir().join(format!("persia_ps_tiered_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = StoreConfig::Tiered {
+            hot_capacity: 8,
+            cold_dir: dir.clone(),
+            admit_threshold: 1,
+        };
+        let ps = EmbeddingPs::new_with_store(&c, 4, 1, &store).unwrap();
+        assert!(ps.has_cold_tier());
+        let keys: Vec<(u32, u64)> = (0..400).map(|i| (0, i as u64)).collect();
+        let mut buf = vec![0.0; keys.len() * 4];
+        ps.get_many(&keys, &mut buf);
+        ps.put_grads(&keys, &vec![1.0; keys.len() * 4]);
+        // 400 keys over 8 shards of hot capacity 8: far past the hot budget,
+        // yet nothing is lost.
+        assert_eq!(ps.total_rows(), 400, "tiered PS dropped rows");
+        assert!(ps.cold_rows() > 0);
+        let tc = ps.tier_counters();
+        assert!(tc.demotions > 0);
+        assert_eq!(tc.demotions, tc.evictions);
+        let mut want = vec![0.0; keys.len() * 4];
+        ps.get_many(&keys, &mut want);
+        // Full-tier snapshot/restore roundtrip on every node.
+        let snaps: Vec<_> = (0..4).map(|n| ps.snapshot_node_full(n).unwrap()).collect();
+        for (n, s) in snaps.iter().enumerate() {
+            assert!(s.cold.is_some());
+            ps.wipe_node(n).unwrap();
+            ps.restore_node_full(n, s).unwrap();
+        }
+        let mut got = vec![0.0; keys.len() * 4];
+        ps.get_many(&keys, &mut got);
+        assert_eq!(got, want);
+        // Tier-shape mismatch is a loud error on restore.
+        let all_hot = EmbeddingPs::new(&c, 4, 1);
+        assert!(all_hot.restore_node_full(0, &snaps[0]).is_err());
+        let hot_snap = all_hot.snapshot_node_full(0).unwrap();
+        assert!(ps.restore_node_full(0, &hot_snap).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! One PS shard: a lock + an [`LruStore`] + the row optimizer.
+//! One PS shard: a lock + an [`EmbeddingStore`] + the row optimizer.
 //!
 //! Paper §4.2.2: "we utilize multiple threads in the LRU implementation.
 //! Each thread manages a subset of the local hash-map and the corresponding
 //! array-list; when there is a request of get or put, the corresponding
 //! thread will lock its hash-map and array-list until the execution is
 //! completed." — i.e. lock striping at shard granularity, which is exactly
-//! the `Mutex<LruStore>` here.
+//! the `Mutex<Box<dyn EmbeddingStore>>` here. The store behind the lock is
+//! pluggable ([`StoreConfig`](super::StoreConfig)): the all-hot array-list
+//! LRU by default, or a hot-over-cold [`TieredStore`](super::TieredStore)
+//! when a `--cold-dir` is configured.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +17,7 @@ use crate::util::Rng;
 
 use super::lru::LruStore;
 use super::optimizer::RowOptimizer;
+use super::store::{EmbeddingStore, StoreCounters};
 
 #[inline]
 fn splitmix64(mut x: u64) -> u64 {
@@ -25,7 +29,7 @@ fn splitmix64(mut x: u64) -> u64 {
 
 /// A locked shard of embedding rows.
 pub struct Shard {
-    lru: Mutex<LruStore>,
+    store: Mutex<Box<dyn EmbeddingStore>>,
     opt: RowOptimizer,
     seed: u64,
     gets: AtomicU64,
@@ -33,11 +37,22 @@ pub struct Shard {
 }
 
 impl Shard {
-    /// One locked LRU of `capacity` rows under `opt`, materializing rows
-    /// deterministically from `seed`.
+    /// One locked all-hot LRU of `capacity` rows under `opt`, materializing
+    /// rows deterministically from `seed`.
     pub fn new(capacity: usize, opt: RowOptimizer, seed: u64) -> Self {
+        Self::with_store(Box::new(LruStore::new(capacity, opt.row_width())), opt, seed)
+    }
+
+    /// A shard over an explicit storage engine (built via
+    /// [`StoreConfig::build`](super::StoreConfig::build)).
+    pub fn with_store(store: Box<dyn EmbeddingStore>, opt: RowOptimizer, seed: u64) -> Self {
+        assert_eq!(
+            store.row_width(),
+            opt.row_width(),
+            "store row width must match optimizer row width"
+        );
         Self {
-            lru: Mutex::new(LruStore::new(capacity, opt.row_width())),
+            store: Mutex::new(store),
             opt,
             seed,
             gets: AtomicU64::new(0),
@@ -51,39 +66,42 @@ impl Shard {
     }
 
     /// Fetch the embedding vector for `key`, materializing deterministically
-    /// on first touch (same key ⇒ same init, so an evicted row re-enters in
-    /// its initial state rather than a random one).
-    pub fn get(&self, key: u64, out: &mut [f32]) {
+    /// on first touch (same key ⇒ same init, so a dropped row re-enters in
+    /// its initial state rather than a random one). Errs only on cold-tier
+    /// I/O failure; the all-hot store is infallible.
+    pub fn get(&self, key: u64, out: &mut [f32]) -> anyhow::Result<()> {
         debug_assert_eq!(out.len(), self.opt.dim);
         self.gets.fetch_add(1, Ordering::Relaxed);
-        let mut lru = self.lru.lock().unwrap();
+        let mut store = self.store.lock().unwrap();
         let opt = self.opt;
         let seed = self.seed;
-        let (row, _evicted) = lru.get_or_insert_with(key, |row| {
+        let row = store.get_or_insert_with(key, &mut |row| {
             let mut rng = Rng::new(splitmix64(key ^ seed));
             opt.init_row(row, &mut rng);
-        });
+        })?;
         out.copy_from_slice(&row[..opt.dim]);
+        Ok(())
     }
 
     /// Apply a gradient to `key`'s row (Alg. 1 backward task, lock-free
     /// across shards, locked within).
-    pub fn put_grad(&self, key: u64, grad: &[f32]) {
+    pub fn put_grad(&self, key: u64, grad: &[f32]) -> anyhow::Result<()> {
         debug_assert_eq!(grad.len(), self.opt.dim);
         self.puts.fetch_add(1, Ordering::Relaxed);
-        let mut lru = self.lru.lock().unwrap();
+        let mut store = self.store.lock().unwrap();
         let opt = self.opt;
         let seed = self.seed;
-        let (row, _evicted) = lru.get_or_insert_with(key, |row| {
+        let row = store.get_or_insert_with(key, &mut |row| {
             let mut rng = Rng::new(splitmix64(key ^ seed));
             opt.init_row(row, &mut rng);
-        });
+        })?;
         opt.apply(row, grad);
+        Ok(())
     }
 
-    /// Number of materialized rows.
+    /// Number of materialized rows across all tiers.
     pub fn len(&self) -> usize {
-        self.lru.lock().unwrap().len()
+        self.store.lock().unwrap().len()
     }
 
     /// True when no rows have materialized yet.
@@ -91,9 +109,29 @@ impl Shard {
         self.len() == 0
     }
 
-    /// LRU evictions since construction.
+    /// Rows resident in the hot tier.
+    pub fn hot_len(&self) -> usize {
+        self.store.lock().unwrap().hot_len()
+    }
+
+    /// Rows resident in the cold tier (0 for all-hot stores).
+    pub fn cold_len(&self) -> usize {
+        self.store.lock().unwrap().cold_len()
+    }
+
+    /// Hot-tier evictions since construction (= demotions when tiered).
     pub fn evictions(&self) -> u64 {
-        self.lru.lock().unwrap().evictions()
+        self.store.lock().unwrap().counters().evictions
+    }
+
+    /// Hit/movement counters of the underlying store.
+    pub fn counters(&self) -> StoreCounters {
+        self.store.lock().unwrap().counters()
+    }
+
+    /// Whether the shard's store has a cold tier.
+    pub fn has_cold(&self) -> bool {
+        self.store.lock().unwrap().has_cold()
     }
 
     /// (gets, puts) served by this shard — the load-balance metric.
@@ -101,31 +139,30 @@ impl Shard {
         (self.gets.load(Ordering::Relaxed), self.puts.load(Ordering::Relaxed))
     }
 
-    /// Flat snapshot of the shard (paper: checkpointing is a memory copy).
-    pub fn snapshot(&self) -> Vec<u8> {
-        self.lru.lock().unwrap().to_bytes()
+    /// Flat snapshot of the shard's hot tier (paper: checkpointing is a
+    /// memory copy).
+    pub fn snapshot(&self) -> anyhow::Result<Vec<u8>> {
+        self.store.lock().unwrap().snapshot_hot()
     }
 
-    /// Restore from a snapshot; replaces current contents.
+    /// Snapshot of the shard's cold tier, `None` for all-hot stores.
+    pub fn snapshot_cold(&self) -> anyhow::Result<Option<Vec<u8>>> {
+        self.store.lock().unwrap().snapshot_cold()
+    }
+
+    /// Restore the hot tier from a snapshot; replaces current contents.
     pub fn restore(&self, bytes: &[u8]) -> anyhow::Result<()> {
-        let store = LruStore::from_bytes(bytes)?;
-        anyhow::ensure!(
-            store.row_width() == self.opt.row_width(),
-            "snapshot row width {} != shard row width {}",
-            store.row_width(),
-            self.opt.row_width()
-        );
-        *self.lru.lock().unwrap() = store;
-        Ok(())
+        self.store.lock().unwrap().restore_hot(bytes)
+    }
+
+    /// Restore the cold tier from a [`Self::snapshot_cold`] blob.
+    pub fn restore_cold(&self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.store.lock().unwrap().restore_cold(bytes)
     }
 
     /// Drop all rows (process-level failure without shared-memory rescue).
-    pub fn wipe(&self) {
-        let cap = {
-            let lru = self.lru.lock().unwrap();
-            lru.capacity()
-        };
-        *self.lru.lock().unwrap() = LruStore::new(cap, self.opt.row_width());
+    pub fn wipe(&self) -> anyhow::Result<()> {
+        self.store.lock().unwrap().wipe()
     }
 }
 
@@ -133,9 +170,21 @@ impl Shard {
 mod tests {
     use super::*;
     use crate::config::OptimizerKind;
+    use crate::embedding::cold::ColdStore;
+    use crate::embedding::tiered::TieredStore;
 
     fn shard(cap: usize) -> Shard {
         Shard::new(cap, RowOptimizer::new(OptimizerKind::Sgd, 0.5, 4), 7)
+    }
+
+    fn tiered_shard(hot_cap: usize, tag: &str) -> (Shard, std::path::PathBuf) {
+        let opt = RowOptimizer::new(OptimizerKind::Sgd, 0.5, 4);
+        let dir = std::env::temp_dir().join(format!("persia_shard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold = ColdStore::open(&dir.join("cold.bin"), opt.row_width()).unwrap();
+        // Threshold 1: admit everything, pure capacity spill.
+        let store = Box::new(TieredStore::new(hot_cap, cold, 1).unwrap());
+        (Shard::with_store(store, opt, 7), dir)
     }
 
     #[test]
@@ -143,12 +192,12 @@ mod tests {
         let s = shard(16);
         let mut a = vec![0.0; 4];
         let mut b = vec![0.0; 4];
-        s.get(42, &mut a);
-        s.get(42, &mut b);
+        s.get(42, &mut a).unwrap();
+        s.get(42, &mut b).unwrap();
         assert_eq!(a, b);
         // A different shard with the same seed materializes identically.
         let s2 = shard(16);
-        s2.get(42, &mut b);
+        s2.get(42, &mut b).unwrap();
         assert_eq!(a, b);
     }
 
@@ -156,10 +205,10 @@ mod tests {
     fn grads_update_rows() {
         let s = shard(16);
         let mut before = vec![0.0; 4];
-        s.get(1, &mut before);
-        s.put_grad(1, &[1.0, 0.0, -1.0, 2.0]);
+        s.get(1, &mut before).unwrap();
+        s.put_grad(1, &[1.0, 0.0, -1.0, 2.0]).unwrap();
         let mut after = vec![0.0; 4];
-        s.get(1, &mut after);
+        s.get(1, &mut after).unwrap();
         assert!((before[0] - 0.5 - after[0]).abs() < 1e-6);
         assert!((before[2] + 0.5 - after[2]).abs() < 1e-6);
     }
@@ -168,39 +217,85 @@ mod tests {
     fn eviction_resets_to_initial_state() {
         let s = shard(2);
         let mut init = vec![0.0; 4];
-        s.get(1, &mut init);
-        s.put_grad(1, &[1.0; 4]);
+        s.get(1, &mut init).unwrap();
+        s.put_grad(1, &[1.0; 4]).unwrap();
         // Evict key 1 by touching 2 fresh keys.
-        s.get(2, &mut [0.0; 4]);
-        s.get(3, &mut [0.0; 4]);
+        s.get(2, &mut [0.0; 4]).unwrap();
+        s.get(3, &mut [0.0; 4]).unwrap();
         let mut again = vec![0.0; 4];
-        s.get(1, &mut again);
+        s.get(1, &mut again).unwrap();
         assert_eq!(init, again, "re-materialized row must equal original init");
         assert!(s.evictions() >= 1);
     }
 
     #[test]
+    fn tiered_shard_keeps_updates_across_demotion() {
+        // Same scenario as eviction_resets_to_initial_state, but with a
+        // cold tier: the updated row must come back *updated*.
+        let (s, dir) = tiered_shard(2, "demote");
+        let mut init = vec![0.0; 4];
+        s.get(1, &mut init).unwrap();
+        s.put_grad(1, &[1.0; 4]).unwrap();
+        let mut updated = vec![0.0; 4];
+        s.get(1, &mut updated).unwrap();
+        assert_ne!(init, updated);
+        s.get(2, &mut [0.0; 4]).unwrap();
+        s.get(3, &mut [0.0; 4]).unwrap();
+        assert!(s.counters().demotions >= 1);
+        let mut again = vec![0.0; 4];
+        s.get(1, &mut again).unwrap();
+        assert_eq!(updated, again, "demotion must preserve exact row bytes");
+        assert!(s.has_cold());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tiered_shard_snapshot_restores_both_tiers() {
+        let (s, dir) = tiered_shard(2, "snap");
+        for k in 0..6u64 {
+            s.get(k, &mut [0.0; 4]).unwrap();
+            s.put_grad(k, &[k as f32; 4]).unwrap();
+        }
+        let mut want = vec![vec![0.0; 4]; 6];
+        for k in 0..6u64 {
+            s.get(k, &mut want[k as usize]).unwrap();
+        }
+        let hot = s.snapshot().unwrap();
+        let cold = s.snapshot_cold().unwrap().expect("tiered shard has a cold tier");
+        s.wipe().unwrap();
+        assert_eq!(s.len(), 0);
+        s.restore_cold(&cold).unwrap();
+        s.restore(&hot).unwrap();
+        for k in 0..6u64 {
+            let mut got = vec![0.0; 4];
+            s.get(k, &mut got).unwrap();
+            assert_eq!(got, want[k as usize], "key {k}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn snapshot_restore_roundtrip() {
         let s = shard(8);
-        s.get(1, &mut [0.0; 4]);
-        s.put_grad(1, &[1.0; 4]);
+        s.get(1, &mut [0.0; 4]).unwrap();
+        s.put_grad(1, &[1.0; 4]).unwrap();
         let mut want = vec![0.0; 4];
-        s.get(1, &mut want);
-        let snap = s.snapshot();
-        s.wipe();
+        s.get(1, &mut want).unwrap();
+        let snap = s.snapshot().unwrap();
+        s.wipe().unwrap();
         assert_eq!(s.len(), 0);
         s.restore(&snap).unwrap();
         let mut got = vec![0.0; 4];
-        s.get(1, &mut got);
+        s.get(1, &mut got).unwrap();
         assert_eq!(got, want);
     }
 
     #[test]
     fn traffic_counters() {
         let s = shard(8);
-        s.get(1, &mut [0.0; 4]);
-        s.get(2, &mut [0.0; 4]);
-        s.put_grad(1, &[0.0; 4]);
+        s.get(1, &mut [0.0; 4]).unwrap();
+        s.get(2, &mut [0.0; 4]).unwrap();
+        s.put_grad(1, &[0.0; 4]).unwrap();
         assert_eq!(s.traffic(), (2, 1));
     }
 
@@ -214,8 +309,8 @@ mod tests {
                     let mut buf = vec![0.0; 4];
                     for i in 0..500u64 {
                         let k = (i * 7 + t) % 100;
-                        s.get(k, &mut buf);
-                        s.put_grad(k, &[0.1; 4]);
+                        s.get(k, &mut buf).unwrap();
+                        s.put_grad(k, &[0.1; 4]).unwrap();
                     }
                 })
             })

@@ -1,0 +1,344 @@
+//! The pluggable embedding storage engine behind every PS shard.
+//!
+//! The paper's capacity story (100-trillion-parameter tables, §4.2.2) only
+//! works if the storage layer is *not* welded to one in-RAM structure. This
+//! module defines the seam: [`EmbeddingStore`] is what a
+//! [`Shard`](super::Shard) talks to, and two engines implement it today:
+//!
+//! * [`LruStore`](super::LruStore) — the paper's array-list LRU, all-RAM.
+//!   An evicted row is *lost* (it re-materializes from the deterministic
+//!   init on the next touch), so training quality silently degrades once
+//!   the working set outgrows `shard_capacity`.
+//! * [`TieredStore`](super::TieredStore) — ScaleFreeCTR's MixCache design:
+//!   a small hot LRU over a disk-backed [`ColdStore`](super::ColdStore).
+//!   Eviction *demotes* the exact row bytes (embedding ⊕ optimizer state)
+//!   to disk and a cold hit *promotes* them back, so the table can be many
+//!   times the hot-tier budget with **bitwise identical** numerics to an
+//!   all-hot run — placement moves rows, never changes them.
+//!
+//! Snapshots are split per tier: [`EmbeddingStore::snapshot_hot`] is the
+//! flat LRU memory copy that has always ridden in checkpoint node files and
+//! SNAPSHOT/RESTORE wire frames, while [`EmbeddingStore::snapshot_cold`]
+//! serializes the cold rows into their own per-shard blob (a separate
+//! `ps_node_N.cold` file in each checkpoint epoch — cold data can dwarf hot
+//! data, and keeping it out of the hot file preserves the "checkpointing is
+//! a memory copy" property for the tier that changes every step).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::cold::ColdStore;
+use super::lru::LruStore;
+use super::tiered::TieredStore;
+
+/// Hit/movement counters of one store (summed across shards for the STATS
+/// wire response and [`PsStats`](crate::service::PsStats)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Lookups served by the hot (in-RAM) tier.
+    pub hot_hits: u64,
+    /// Lookups served by the cold (disk) tier, including the bypass row.
+    pub cold_hits: u64,
+    /// Rows moved hot → cold on eviction (exact bytes preserved).
+    pub demotions: u64,
+    /// Rows moved cold → hot after passing the admission gate.
+    pub promotions: u64,
+    /// Hot-tier evictions. For a pure LRU these are *lost* rows; for a
+    /// tiered store every eviction is a demotion, so this equals
+    /// `demotions`.
+    pub evictions: u64,
+}
+
+impl StoreCounters {
+    /// Element-wise accumulate (shard → node → deployment rollups).
+    pub fn add(&mut self, other: &StoreCounters) {
+        self.hot_hits += other.hot_hits;
+        self.cold_hits += other.cold_hits;
+        self.demotions += other.demotions;
+        self.promotions += other.promotions;
+        self.evictions += other.evictions;
+    }
+}
+
+/// One node's snapshot, split by tier: `hot` always holds one flat LRU blob
+/// per lock-striped shard; `cold` is `Some` iff the node's stores are
+/// tiered, with one cold blob per shard. This is what SNAPSHOT/RESTORE move
+/// over the wire and what checkpoint epochs persist (`ps_node_N.ckpt` +
+/// `ps_node_N.cold`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSnapshot {
+    /// Per-shard hot-tier blobs ([`LruStore::to_bytes`] output).
+    pub hot: Vec<Vec<u8>>,
+    /// Per-shard cold-tier blobs, `None` for all-hot stores.
+    pub cold: Option<Vec<Vec<u8>>>,
+}
+
+/// How a [`Shard`](super::Shard) stores its rows — the construction-time
+/// selection threaded from `serve-ps --cold-dir D --hot-capacity N` (and
+/// `train --cold-dir/--hot-capacity`) down to every shard.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum StoreConfig {
+    /// All-hot array-list LRU at `shard_capacity` rows (the default; the
+    /// pre-tiering behavior, bit for bit).
+    #[default]
+    Hot,
+    /// Hot LRU of `hot_capacity` rows over a disk-backed cold store under
+    /// `cold_dir` (one slotted, CRC-framed file per shard).
+    Tiered {
+        /// Hot-tier rows per shard (the RAM budget).
+        hot_capacity: usize,
+        /// Directory holding each shard's cold file.
+        cold_dir: PathBuf,
+        /// Touches before a key may enter the hot tier (≥1). With the
+        /// default of 2, a one-touch tail key lands in the cold tier via
+        /// the bypass row and never evicts a hot row.
+        admit_threshold: u8,
+    },
+}
+
+/// The default hot-tier admission threshold (touch count).
+pub const DEFAULT_ADMIT_THRESHOLD: u8 = 2;
+
+impl StoreConfig {
+    /// Build one shard's store. `node`/`shard` are *global* indices — they
+    /// name the cold file, so a restarted process reopens exactly the files
+    /// its predecessor wrote.
+    pub fn build(
+        &self,
+        shard_capacity: usize,
+        row_width: usize,
+        node: usize,
+        shard: usize,
+    ) -> Result<Box<dyn EmbeddingStore>> {
+        Ok(match self {
+            StoreConfig::Hot => Box::new(LruStore::new(shard_capacity, row_width)),
+            StoreConfig::Tiered { hot_capacity, cold_dir, admit_threshold } => {
+                let path = cold_dir.join(format!("cold_node{node}_shard{shard}.bin"));
+                let cold = ColdStore::open(&path, row_width)?;
+                Box::new(TieredStore::new(*hot_capacity, cold, *admit_threshold)?)
+            }
+        })
+    }
+
+    /// Whether stores built from this config have a cold tier.
+    pub fn has_cold(&self) -> bool {
+        matches!(self, StoreConfig::Tiered { .. })
+    }
+}
+
+/// Row storage behind one PS shard. Implementations are free to place rows
+/// wherever they like (RAM, disk, tiers) but must preserve the contract
+/// that a row's bytes — embedding vector ⊕ optimizer state — survive any
+/// internal movement exactly: the trainer's numerics may never depend on
+/// *where* a row currently lives.
+///
+/// All methods take `&mut self`; a shard serializes access through its lock
+/// (the paper's lock-striping), so stores need no internal synchronization.
+pub trait EmbeddingStore: Send {
+    /// Floats per row (embedding dim ⊕ optimizer state).
+    fn row_width(&self) -> usize;
+
+    /// Maximum rows resident in the hot tier.
+    fn hot_capacity(&self) -> usize;
+
+    /// Total rows this store can serve without re-materializing (hot +
+    /// cold + bypass).
+    fn len(&self) -> usize;
+
+    /// True when no rows are resident anywhere.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rows currently in the hot tier.
+    fn hot_len(&self) -> usize;
+
+    /// Rows currently in the cold tier (0 for all-hot stores).
+    fn cold_len(&self) -> usize {
+        0
+    }
+
+    /// Whether this store has a cold tier (drives checkpoint layout and
+    /// the SNAPSHOT/RESTORE wire flags).
+    fn has_cold(&self) -> bool {
+        false
+    }
+
+    /// Get `key`'s row, materializing it via `init` on a true miss. The
+    /// returned row is writable in place (the optimizer applies gradients
+    /// through it); implementations must persist such writes across any
+    /// subsequent tier movement.
+    fn get_or_insert_with(
+        &mut self,
+        key: u64,
+        init: &mut dyn FnMut(&mut [f32]),
+    ) -> Result<&mut [f32]>;
+
+    /// Hit/movement counters since construction (or the last wipe).
+    fn counters(&self) -> StoreCounters;
+
+    /// Serialize the hot tier (flat memory copy). Flushes any internal
+    /// bypass state first so hot ∪ cold is the complete row set.
+    fn snapshot_hot(&mut self) -> Result<Vec<u8>>;
+
+    /// Serialize the cold tier, `None` for all-hot stores. Deterministic:
+    /// equal logical contents yield equal bytes regardless of placement
+    /// history.
+    fn snapshot_cold(&mut self) -> Result<Option<Vec<u8>>>;
+
+    /// Replace the hot tier from [`EmbeddingStore::snapshot_hot`] bytes.
+    fn restore_hot(&mut self, bytes: &[u8]) -> Result<()>;
+
+    /// Replace the cold tier from [`EmbeddingStore::snapshot_cold`] bytes.
+    /// Errors on all-hot stores.
+    fn restore_cold(&mut self, bytes: &[u8]) -> Result<()>;
+
+    /// Drop all rows in every tier (crash simulation / pre-restore reset).
+    fn wipe(&mut self) -> Result<()>;
+
+    /// Verify structural invariants (tests + post-restore validation),
+    /// including that no key is resident in two tiers at once.
+    fn check_invariants(&mut self) -> Result<()>;
+}
+
+impl EmbeddingStore for LruStore {
+    fn row_width(&self) -> usize {
+        LruStore::row_width(self)
+    }
+
+    fn hot_capacity(&self) -> usize {
+        self.capacity()
+    }
+
+    fn len(&self) -> usize {
+        LruStore::len(self)
+    }
+
+    fn hot_len(&self) -> usize {
+        LruStore::len(self)
+    }
+
+    fn get_or_insert_with(
+        &mut self,
+        key: u64,
+        init: &mut dyn FnMut(&mut [f32]),
+    ) -> Result<&mut [f32]> {
+        let (row, _evicted) = LruStore::get_or_insert_with(self, key, |row| init(row));
+        Ok(row)
+    }
+
+    fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            hot_hits: self.hits(),
+            evictions: self.evictions(),
+            ..StoreCounters::default()
+        }
+    }
+
+    fn snapshot_hot(&mut self) -> Result<Vec<u8>> {
+        Ok(self.to_bytes())
+    }
+
+    fn snapshot_cold(&mut self) -> Result<Option<Vec<u8>>> {
+        Ok(None)
+    }
+
+    fn restore_hot(&mut self, bytes: &[u8]) -> Result<()> {
+        let store = LruStore::from_bytes(bytes)?;
+        anyhow::ensure!(
+            store.row_width() == self.row_width(),
+            "snapshot row width {} != store row width {}",
+            store.row_width(),
+            self.row_width()
+        );
+        *self = store;
+        Ok(())
+    }
+
+    fn restore_cold(&mut self, _bytes: &[u8]) -> Result<()> {
+        anyhow::bail!("all-hot LRU store has no cold tier to restore")
+    }
+
+    fn wipe(&mut self) -> Result<()> {
+        *self = LruStore::new(self.capacity(), self.row_width());
+        Ok(())
+    }
+
+    fn check_invariants(&mut self) -> Result<()> {
+        LruStore::check_invariants(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("persia_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn hot_config_builds_plain_lru() {
+        let store = StoreConfig::Hot.build(8, 3, 0, 0).unwrap();
+        assert!(!store.has_cold());
+        assert_eq!(store.hot_capacity(), 8);
+        assert_eq!(store.row_width(), 3);
+        assert!(!StoreConfig::Hot.has_cold());
+    }
+
+    #[test]
+    fn tiered_config_builds_cold_backed_store() {
+        let dir = tmp("build");
+        let cfg = StoreConfig::Tiered {
+            hot_capacity: 4,
+            cold_dir: dir.clone(),
+            admit_threshold: DEFAULT_ADMIT_THRESHOLD,
+        };
+        assert!(cfg.has_cold());
+        let store = cfg.build(64, 3, 1, 2).unwrap();
+        assert!(store.has_cold());
+        // Hot capacity comes from the tier config, not shard_capacity.
+        assert_eq!(store.hot_capacity(), 4);
+        assert!(dir.join("cold_node1_shard2.bin").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_store_through_trait_roundtrips() {
+        let mut store: Box<dyn EmbeddingStore> = Box::new(LruStore::new(4, 2));
+        store.get_or_insert_with(7, &mut |row| row.fill(1.5)).unwrap();
+        let snap = store.snapshot_hot().unwrap();
+        assert_eq!(store.snapshot_cold().unwrap(), None);
+        assert!(store.restore_cold(&[]).is_err());
+        store.wipe().unwrap();
+        assert_eq!(store.len(), 0);
+        store.restore_hot(&snap).unwrap();
+        assert_eq!(store.len(), 1);
+        let mut touched = false;
+        let row = store
+            .get_or_insert_with(7, &mut |_| {
+                touched = true;
+            })
+            .unwrap();
+        assert_eq!(row, &[1.5, 1.5]);
+        assert!(!touched, "restored row must not re-materialize");
+        assert!(store.counters().hot_hits >= 1);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut a = StoreCounters { hot_hits: 1, cold_hits: 2, ..Default::default() };
+        let b = StoreCounters { hot_hits: 10, demotions: 3, promotions: 4, evictions: 3 };
+        a.add(&b);
+        assert_eq!(a.hot_hits, 11);
+        assert_eq!(a.cold_hits, 2);
+        assert_eq!(a.demotions, 3);
+        assert_eq!(a.promotions, 4);
+        assert_eq!(a.evictions, 3);
+    }
+}

@@ -1,0 +1,387 @@
+//! Tiered store: a hot in-RAM LRU over a disk-backed cold tier.
+//!
+//! This is ScaleFreeCTR's MixCache shape grafted onto the paper's
+//! array-list LRU (§4.2.2). Movement between tiers is *lossless*:
+//!
+//! * **demotion** — when the hot tier is full, the LRU victim's exact row
+//!   bytes (embedding ⊕ optimizer state) are written to the cold tier
+//!   before its slot is reused;
+//! * **promotion** — a cold hit whose key has passed the admission gate
+//!   moves back into the hot tier, bytes unchanged.
+//!
+//! Because placement never changes a row's contents, a tiered run is
+//! bitwise identical to an all-hot run in deterministic FullSync — the only
+//! difference is *where* a row waits between touches.
+//!
+//! ## Admission: the Zipf gate
+//!
+//! The PS already counts per-node traffic because the workload is Zipf
+//! (PR 2's imbalance stats); this store extends that idea to per-key
+//! admission, the way TinyLFU/MixCache gate their hot tiers. A compact
+//! frequency sketch (power-of-two array of saturating byte counters,
+//! splitmix64-indexed) counts touches; a key enters the hot tier only once
+//! its counter reaches `admit_threshold`. One-touch tail keys — the long
+//! Zipf tail that would otherwise cycle the LRU — are served through a
+//! one-row *bypass* buffer and written straight to cold, so they never
+//! evict a warm row. The sketch is deterministic (pure function of the key
+//! sequence), which keeps replays and parity tests exact.
+
+use anyhow::{ensure, Result};
+
+use super::cold::ColdStore;
+use super::lru::LruStore;
+use super::store::{EmbeddingStore, StoreCounters};
+
+/// Minimum sketch size; below this aliasing would defeat the gate.
+const MIN_SKETCH: usize = 1024;
+/// Maximum sketch size (1 MiB of counters is plenty at reproduction scale).
+const MAX_SKETCH: usize = 1 << 20;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Hot LRU + cold disk store + admission sketch. See the module docs for
+/// the movement rules.
+pub struct TieredStore {
+    hot: LruStore,
+    cold: ColdStore,
+    /// Saturating per-key touch counters (aliased; power-of-two length).
+    freq: Vec<u8>,
+    freq_mask: u64,
+    admit_threshold: u8,
+    /// One-row bypass: the most recent below-threshold row, served writable
+    /// without entering the hot tier. Flushed to cold before any other key
+    /// is served, so at most one row is ever in flight outside the tiers.
+    bypass_key: Option<u64>,
+    bypass_row: Vec<f32>,
+    c: StoreCounters,
+}
+
+impl TieredStore {
+    /// Compose a fresh hot LRU of `hot_capacity` rows over `cold`.
+    /// `admit_threshold` is the touch count at which a key may enter the
+    /// hot tier (≥1; 1 admits everything, i.e. no gate).
+    pub fn new(hot_capacity: usize, cold: ColdStore, admit_threshold: u8) -> Result<Self> {
+        ensure!(hot_capacity > 0, "tiered store needs hot_capacity > 0");
+        ensure!(admit_threshold >= 1, "admit_threshold must be >= 1");
+        let row_width = cold.row_width();
+        let sketch = hot_capacity
+            .saturating_mul(8)
+            .next_power_of_two()
+            .clamp(MIN_SKETCH, MAX_SKETCH);
+        Ok(Self {
+            hot: LruStore::new(hot_capacity, row_width),
+            cold,
+            freq: vec![0; sketch],
+            freq_mask: (sketch - 1) as u64,
+            admit_threshold,
+            bypass_key: None,
+            bypass_row: vec![0.0; row_width],
+            c: StoreCounters::default(),
+        })
+    }
+
+    fn touch(&mut self, key: u64) -> u8 {
+        let idx = (splitmix64(key) & self.freq_mask) as usize;
+        self.freq[idx] = self.freq[idx].saturating_add(1);
+        self.freq[idx]
+    }
+
+    /// Write the bypass row (if any) back to the cold tier.
+    fn flush_bypass(&mut self) -> Result<()> {
+        if let Some(key) = self.bypass_key.take() {
+            let row = std::mem::take(&mut self.bypass_row);
+            self.cold.put(key, &row)?;
+            self.bypass_row = row;
+        }
+        Ok(())
+    }
+
+    /// Insert `key` with `row` bytes into the hot tier, demoting the LRU
+    /// victim to cold first if the hot tier is full.
+    fn insert_hot(&mut self, key: u64, row: &[f32]) -> Result<()> {
+        if self.hot.len() == self.hot.capacity() {
+            let (victim_key, victim_row) =
+                self.hot.evict_lru().expect("full hot tier has an LRU tail");
+            self.cold.put(victim_key, &victim_row)?;
+            self.c.demotions += 1;
+            self.c.evictions += 1;
+        }
+        let (slot, evicted) = self.hot.get_or_insert_with(key, |dst| dst.copy_from_slice(row));
+        debug_assert!(evicted.is_none(), "insert after explicit demotion cannot evict");
+        debug_assert_eq!(slot.len(), row.len());
+        Ok(())
+    }
+
+    /// Borrow of the cold tier (tests/diagnostics).
+    pub fn cold(&self) -> &ColdStore {
+        &self.cold
+    }
+}
+
+impl EmbeddingStore for TieredStore {
+    fn row_width(&self) -> usize {
+        self.hot.row_width()
+    }
+
+    fn hot_capacity(&self) -> usize {
+        self.hot.capacity()
+    }
+
+    fn len(&self) -> usize {
+        self.hot.len() + self.cold_len()
+    }
+
+    fn hot_len(&self) -> usize {
+        self.hot.len()
+    }
+
+    fn cold_len(&self) -> usize {
+        // The bypass row counts unless it merely shadows a (stale) cold
+        // copy awaiting write-back.
+        let bypass_only = self.bypass_key.is_some_and(|k| !self.cold.contains(k));
+        self.cold.len() + usize::from(bypass_only)
+    }
+
+    fn has_cold(&self) -> bool {
+        true
+    }
+
+    fn get_or_insert_with(
+        &mut self,
+        key: u64,
+        init: &mut dyn FnMut(&mut [f32]),
+    ) -> Result<&mut [f32]> {
+        // At most one row lives outside the tiers; park it back first.
+        if self.bypass_key.is_some() && self.bypass_key != Some(key) {
+            self.flush_bypass()?;
+        }
+        if self.hot.contains(key) {
+            self.c.hot_hits += 1;
+            self.touch(key);
+            return Ok(self.hot.get(key).expect("checked contains"));
+        }
+        let count = self.touch(key);
+        let admit = count >= self.admit_threshold;
+        if self.bypass_key == Some(key) {
+            self.c.cold_hits += 1;
+            if admit {
+                self.bypass_key = None;
+                let row = std::mem::take(&mut self.bypass_row);
+                self.insert_hot(key, &row)?;
+                self.bypass_row = row;
+                self.c.promotions += 1;
+                return Ok(self.hot.get(key).expect("just inserted"));
+            }
+            return Ok(&mut self.bypass_row);
+        }
+        if self.cold.contains(key) {
+            let mut row = vec![0.0f32; self.hot.row_width()];
+            if self.cold.get_into(key, &mut row)? {
+                self.c.cold_hits += 1;
+                if admit {
+                    self.cold.remove(key)?;
+                    self.insert_hot(key, &row)?;
+                    self.c.promotions += 1;
+                    return Ok(self.hot.get(key).expect("just inserted"));
+                }
+                // Below threshold: serve from the bypass row; the cold copy
+                // is refreshed when the bypass flushes.
+                self.bypass_row.copy_from_slice(&row);
+                self.bypass_key = Some(key);
+                return Ok(&mut self.bypass_row);
+            }
+            // CRC failure dropped the row; fall through to a true miss.
+        }
+        if admit {
+            let mut row = vec![0.0f32; self.hot.row_width()];
+            init(&mut row);
+            self.insert_hot(key, &row)?;
+            return Ok(self.hot.get(key).expect("just inserted"));
+        }
+        init(&mut self.bypass_row);
+        self.bypass_key = Some(key);
+        Ok(&mut self.bypass_row)
+    }
+
+    fn counters(&self) -> StoreCounters {
+        self.c
+    }
+
+    fn snapshot_hot(&mut self) -> Result<Vec<u8>> {
+        self.flush_bypass()?;
+        Ok(self.hot.to_bytes())
+    }
+
+    fn snapshot_cold(&mut self) -> Result<Option<Vec<u8>>> {
+        self.flush_bypass()?;
+        Ok(Some(self.cold.snapshot_bytes()?))
+    }
+
+    fn restore_hot(&mut self, bytes: &[u8]) -> Result<()> {
+        let store = LruStore::from_bytes(bytes)?;
+        ensure!(
+            store.row_width() == self.hot.row_width(),
+            "hot snapshot row width {} != store row width {}",
+            store.row_width(),
+            self.hot.row_width()
+        );
+        self.bypass_key = None;
+        self.hot = store;
+        Ok(())
+    }
+
+    fn restore_cold(&mut self, bytes: &[u8]) -> Result<()> {
+        self.bypass_key = None;
+        self.cold.restore_bytes(bytes)
+    }
+
+    fn wipe(&mut self) -> Result<()> {
+        self.hot = LruStore::new(self.hot.capacity(), self.hot.row_width());
+        self.cold.wipe()?;
+        self.freq.fill(0);
+        self.bypass_key = None;
+        self.c = StoreCounters::default();
+        Ok(())
+    }
+
+    fn check_invariants(&mut self) -> Result<()> {
+        self.hot.check_invariants()?;
+        // A key lives in at most one tier. (The bypass row may shadow a
+        // stale cold copy of the same key until write-back; that is the one
+        // sanctioned overlap.)
+        for key in self.hot.keys_mru_order() {
+            ensure!(!self.cold.contains(key), "key {key:#x} resident in both tiers");
+            ensure!(self.bypass_key != Some(key), "key {key:#x} in hot tier and bypass");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiered(tag: &str, hot_cap: usize, row_width: usize, threshold: u8) -> (TieredStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("persia_tiered_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold = ColdStore::open(&dir.join("cold.bin"), row_width).unwrap();
+        (TieredStore::new(hot_cap, cold, threshold).unwrap(), dir)
+    }
+
+    fn get(ts: &mut TieredStore, key: u64, fill: f32) -> Vec<f32> {
+        ts.get_or_insert_with(key, &mut |row| row.fill(fill)).unwrap().to_vec()
+    }
+
+    #[test]
+    fn demotion_preserves_exact_bytes() {
+        // threshold 1 = admit everything: pure capacity spill.
+        let (mut ts, dir) = tiered("demote", 2, 2, 1);
+        for k in 0..5u64 {
+            let row = get(&mut ts, k, k as f32);
+            assert_eq!(row, vec![k as f32; 2]);
+        }
+        assert_eq!(ts.hot_len(), 2);
+        assert_eq!(ts.counters().demotions, 3);
+        assert_eq!(ts.len(), 5, "demoted rows are kept, not dropped");
+        // Demoted keys come back with their exact bytes (init must not run).
+        for k in 0..5u64 {
+            let row = ts
+                .get_or_insert_with(k, &mut |_| panic!("resident key re-materialized"))
+                .unwrap();
+            assert_eq!(row, &[k as f32; 2][..]);
+        }
+        ts.check_invariants().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn updates_survive_demotion_and_promotion() {
+        let (mut ts, dir) = tiered("update", 1, 2, 1);
+        ts.get_or_insert_with(10, &mut |r| r.fill(1.0)).unwrap()[0] = 42.0;
+        get(&mut ts, 20, 2.0); // demotes 10
+        assert_eq!(ts.counters().demotions, 1);
+        let row = ts.get_or_insert_with(10, &mut |_| panic!("lost row")).unwrap();
+        assert_eq!(row, &[42.0, 1.0][..]);
+        assert!(ts.counters().promotions >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn one_touch_tail_keys_never_evict_hot_rows() {
+        let (mut ts, dir) = tiered("gate", 2, 1, 2);
+        // Warm two keys past the gate: touch twice each.
+        for _ in 0..2 {
+            get(&mut ts, 100, 1.0);
+            get(&mut ts, 200, 2.0);
+        }
+        assert_eq!(ts.hot_len(), 2);
+        let demotions_before = ts.counters().demotions;
+        // A storm of one-touch tail keys (all distinct → all below gate).
+        for k in 0..50u64 {
+            get(&mut ts, 1000 + k, k as f32);
+        }
+        assert_eq!(ts.counters().demotions, demotions_before, "tail keys thrashed the hot tier");
+        assert!(ts.hot.contains(100) && ts.hot.contains(200));
+        // Tail keys are still resident — in the cold tier.
+        let row = ts.get_or_insert_with(1000, &mut |_| panic!("tail row dropped")).unwrap();
+        assert_eq!(row, &[0.0][..]);
+        ts.check_invariants().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bypass_row_is_writable_and_flushes_to_cold() {
+        let (mut ts, dir) = tiered("bypass", 2, 2, 2);
+        // First touch of a key: below gate, served via bypass.
+        ts.get_or_insert_with(5, &mut |r| r.fill(0.0)).unwrap()[1] = 7.0;
+        assert_eq!(ts.cold_len(), 1); // counts the parked bypass row
+        // Serving another key flushes the write-back.
+        get(&mut ts, 6, 1.0);
+        let row = ts.get_or_insert_with(5, &mut |_| panic!("bypass write lost")).unwrap();
+        assert_eq!(row, &[0.0, 7.0][..]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_both_tiers() {
+        let (mut ts, dir) = tiered("snap", 2, 2, 1);
+        for k in 0..6u64 {
+            ts.get_or_insert_with(k, &mut |r| r.fill(k as f32)).unwrap()[1] = -(k as f32);
+        }
+        let hot = ts.snapshot_hot().unwrap();
+        let cold = ts.snapshot_cold().unwrap().expect("tiered store has a cold tier");
+        ts.wipe().unwrap();
+        assert_eq!(ts.len(), 0);
+        ts.restore_cold(&cold).unwrap();
+        ts.restore_hot(&hot).unwrap();
+        assert_eq!(ts.len(), 6);
+        for k in 0..6u64 {
+            let row = ts.get_or_insert_with(k, &mut |_| panic!("row lost")).unwrap();
+            assert_eq!(row, &[k as f32, -(k as f32)][..], "key {k}");
+        }
+        ts.check_invariants().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn counters_split_hot_and_cold_hits() {
+        let (mut ts, dir) = tiered("counters", 1, 1, 1);
+        get(&mut ts, 1, 1.0); // miss
+        get(&mut ts, 1, 1.0); // hot hit
+        get(&mut ts, 2, 2.0); // miss, demotes 1
+        get(&mut ts, 1, 1.0); // cold hit + promotion (demotes 2)
+        let c = ts.counters();
+        assert_eq!(c.hot_hits, 1);
+        assert_eq!(c.cold_hits, 1);
+        assert_eq!(c.demotions, 2);
+        assert_eq!(c.promotions, 1);
+        assert_eq!(c.evictions, c.demotions);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -59,18 +59,20 @@ impl PsBackup {
 
     /// Periodic checkpoint of every node (paper: "periodically save the
     /// in-memory copy of the embedding parameter shard").
-    pub fn checkpoint(&self, ps: &EmbeddingPs) {
+    pub fn checkpoint(&self, ps: &EmbeddingPs) -> anyhow::Result<()> {
         let mut cks = self.checkpoints.lock().unwrap();
         for node in 0..ps.n_nodes() {
-            cks[node] = Some(ps.snapshot_node(node));
+            cks[node] = Some(ps.snapshot_node(node)?);
         }
+        Ok(())
     }
 
     /// Continuously mirror a node into "shared memory" (called right before
     /// a failure is injected — in a real deployment the LRU lives in shm at
     /// all times, so the mirror is implicit).
-    pub fn mirror_shared(&self, ps: &EmbeddingPs, node: usize) {
-        self.shared.lock().unwrap()[node] = Some(ps.snapshot_node(node));
+    pub fn mirror_shared(&self, ps: &EmbeddingPs, node: usize) -> anyhow::Result<()> {
+        self.shared.lock().unwrap()[node] = Some(ps.snapshot_node(node)?);
+        Ok(())
     }
 
     /// Recover a failed node: re-attach shared memory if available, else
@@ -144,10 +146,10 @@ mod tests {
         let ps = ps();
         let backup = PsBackup::new(2);
         let want = touch(&ps, 40);
-        backup.mirror_shared(&ps, 0);
-        backup.mirror_shared(&ps, 1);
-        ps.wipe_node(0);
-        ps.wipe_node(1);
+        backup.mirror_shared(&ps, 0).unwrap();
+        backup.mirror_shared(&ps, 1).unwrap();
+        ps.wipe_node(0).unwrap();
+        ps.wipe_node(1).unwrap();
         assert_eq!(backup.recover(&ps, 0, true).unwrap(), "shared-memory");
         assert_eq!(backup.recover(&ps, 1, true).unwrap(), "shared-memory");
         let keys: Vec<(u32, u64)> = (0..40).map(|i| (0, i)).collect();
@@ -161,10 +163,10 @@ mod tests {
         let ps = ps();
         let backup = PsBackup::new(2);
         let at_ckpt = touch(&ps, 20);
-        backup.checkpoint(&ps);
+        backup.checkpoint(&ps).unwrap();
         let _later = touch(&ps, 20); // extra updates after the checkpoint
-        ps.wipe_node(0);
-        ps.wipe_node(1);
+        ps.wipe_node(0).unwrap();
+        ps.wipe_node(1).unwrap();
         assert_eq!(backup.recover(&ps, 0, false).unwrap(), "checkpoint");
         assert_eq!(backup.recover(&ps, 1, false).unwrap(), "checkpoint");
         let keys: Vec<(u32, u64)> = (0..20).map(|i| (0, i)).collect();

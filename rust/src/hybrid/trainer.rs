@@ -46,7 +46,7 @@ use crate::config::{ClusterConfig, EmbeddingConfig, ModelConfig, Pooling, TrainC
 use crate::data::sample::SampleId;
 use crate::data::SyntheticDataset;
 use crate::dense::{DenseModel, DenseOptimizer, DenseOptimizerKind};
-use crate::embedding::{CheckpointManager, EmbeddingPs};
+use crate::embedding::{CheckpointManager, EmbeddingPs, StoreConfig};
 use crate::metrics::{auc, RunReport, Tracker};
 use crate::recovery::{run_epoch, EpochConfig, GlobalManifest, RetryPolicy};
 use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
@@ -257,6 +257,13 @@ pub struct Trainer {
     /// Dense/optimizer state restored before the first step (a resumed
     /// run); `None` starts from the seed-derived init.
     pub resume: Option<ResumeState>,
+    /// Storage engine for the in-process PS (`--cold-dir`/`--hot-capacity`):
+    /// the default all-hot LRU, or a tiered hot-over-disk store. Deliberately
+    /// NOT part of [`Trainer::config_fingerprint`] — with a cold tier,
+    /// placement never changes row bytes, so this is a serving knob, not
+    /// deployment identity. Ignored when `ps_backend`/`emb_comm` is set (the
+    /// remote processes pick their own engines via `serve-ps` flags).
+    pub store: StoreConfig,
 }
 
 impl Trainer {
@@ -283,6 +290,7 @@ impl Trainer {
             checkpoint: None,
             start_step: 0,
             resume: None,
+            store: StoreConfig::default(),
         }
     }
 
@@ -437,11 +445,15 @@ impl Trainer {
                 let backend: Arc<dyn PsBackend> = match &self.ps_backend {
                     Some(backend) => backend.clone(),
                     None => {
-                        let local = Arc::new(EmbeddingPs::new(
-                            &self.emb_cfg,
-                            self.model.emb_dim_per_group,
-                            self.train.seed,
-                        ));
+                        let local = Arc::new(
+                            EmbeddingPs::new_with_store(
+                                &self.emb_cfg,
+                                self.model.emb_dim_per_group,
+                                self.train.seed,
+                                &self.store,
+                            )
+                            .context("building the in-process embedding PS")?,
+                        );
                         // A resumed in-process run restores its PS from the
                         // committed epoch it is resuming at (remote shards
                         // restore themselves at process start instead).

@@ -35,7 +35,7 @@ use persia::config::{
 };
 use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
-use persia::embedding::{CheckpointManager, EmbeddingPs};
+use persia::embedding::{CheckpointManager, EmbeddingPs, StoreConfig};
 use persia::hybrid::{DenseComm, PjrtEngineFactory, ResumeState, Trainer};
 use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
 use persia::runtime::ArtifactManifest;
@@ -85,6 +85,41 @@ fn preset_setup(flags: &HashMap<String, String>) -> Result<PresetSetup> {
     Ok(PresetSetup { preset, model, emb_cfg, seed })
 }
 
+/// Parse the storage-engine flags into a [`StoreConfig`]. `--cold-dir DIR`
+/// selects the tiered engine; `--hot-capacity N` (default: the full
+/// `shard_capacity`, i.e. the cold tier only absorbs overflow) and
+/// `--admit-threshold T` tune it. The tuning flags without `--cold-dir` are
+/// rejected — silently ignoring them would look like a working cold tier.
+fn store_config(
+    flags: &HashMap<String, String>,
+    shard_capacity: usize,
+) -> Result<StoreConfig> {
+    let Some(dir) = flags.get("cold-dir") else {
+        anyhow::ensure!(
+            !flags.contains_key("hot-capacity") && !flags.contains_key("admit-threshold"),
+            "--hot-capacity/--admit-threshold require --cold-dir (they tune the \
+             tiered storage engine; without a cold tier the hot capacity IS \
+             --shard-capacity)"
+        );
+        return Ok(StoreConfig::Hot);
+    };
+    let hot_capacity: usize = match flags.get("hot-capacity") {
+        Some(s) => s.parse().context("--hot-capacity")?,
+        None => shard_capacity,
+    };
+    anyhow::ensure!(hot_capacity >= 1, "--hot-capacity must be at least 1");
+    let admit_threshold: u8 = match flags.get("admit-threshold") {
+        Some(s) => s.parse().context("--admit-threshold")?,
+        None => persia::embedding::store::DEFAULT_ADMIT_THRESHOLD,
+    };
+    anyhow::ensure!(admit_threshold >= 1, "--admit-threshold must be at least 1");
+    Ok(StoreConfig::Tiered {
+        hot_capacity,
+        cold_dir: std::path::PathBuf::from(dir),
+        admit_threshold,
+    })
+}
+
 fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
     let PresetSetup { preset, model, emb_cfg, seed } = preset_setup(flags)?;
     let dense = flag(flags, "dense", "small");
@@ -129,6 +164,7 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         train.seed,
     );
     let mut trainer = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    trainer.store = store_config(flags, trainer.emb_cfg.shard_capacity)?;
     trainer.deterministic = flag(flags, "deterministic", "false") == "true";
     trainer.gossip_period =
         flag(flags, "gossip-period", "64").parse().context("--gossip-period")?;
@@ -303,8 +339,17 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
         None => 0..emb_cfg.n_nodes,
     };
 
-    let ps =
-        Arc::new(EmbeddingPs::new_range(&emb_cfg, model.emb_dim_per_group, seed, range.clone()));
+    let store = store_config(&flags, emb_cfg.shard_capacity)?;
+    let ps = Arc::new(
+        EmbeddingPs::new_range_with_store(
+            &emb_cfg,
+            model.emb_dim_per_group,
+            seed,
+            range.clone(),
+            &store,
+        )
+        .context("building the embedding PS storage engine")?,
+    );
     let mut restored_step = 0u64;
     let ckpt = match flags.get("checkpoint-dir") {
         Some(dir) => {
@@ -349,16 +394,22 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
     };
     let server =
         PsServer::bind_with_epochs(ps.clone(), &svc.addr, &emb_cfg, seed, ckpt.clone(), restored_step)?;
+    let storage_desc = match &store {
+        StoreConfig::Hot => format!("all-hot capacity={}/shard", emb_cfg.shard_capacity),
+        StoreConfig::Tiered { hot_capacity, cold_dir, admit_threshold } => format!(
+            "tiered hot={hot_capacity}/shard cold-dir={} admit-threshold={admit_threshold}",
+            cold_dir.display()
+        ),
+    };
     println!(
         "persia serve-ps: preset={} dim={} nodes={} (serving {}..{}) shards/node={} \
-         capacity={}/shard seed={}",
+         {storage_desc} seed={}",
         preset.name,
         model.emb_dim_per_group,
         emb_cfg.n_nodes,
         range.start,
         range.end,
         emb_cfg.shards_per_node,
-        emb_cfg.shard_capacity,
         seed,
     );
     println!("listening on {} (stop with a SHUTDOWN RPC)", server.local_addr()?);
@@ -706,7 +757,13 @@ fn usage() -> ! {
          --start-step N); train/serve-embedding-worker --ps-replay true \
          [--ps-replay-cap N] keeps a gradient replay log so a SIGKILLed shard \
          rejoins mid-run with exact state; serve-embedding-worker [--replay-depth D] \
-         sizes the NEXT_BATCH/PUSH_GRADS response replay rings"
+         sizes the NEXT_BATCH/PUSH_GRADS response replay rings\n\
+         tiered storage (bigger-than-RAM tables): serve-ps/train --cold-dir DIR \
+         [--hot-capacity N] [--admit-threshold T] keeps a hot LRU of N rows per \
+         shard (default: --shard-capacity) over a disk-backed cold tier under DIR; \
+         eviction demotes the exact row bytes and a cold hit promotes them back, so \
+         numerics are bitwise identical to an all-hot run of the same \
+         --shard-capacity; checkpoint epochs persist both tiers (ps_node_N.cold)"
     );
     std::process::exit(2)
 }

@@ -24,12 +24,22 @@ use crate::embedding::{CheckpointManager, EmbeddingPs};
 /// Aggregate PS statistics surfaced through either backend.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PsStats {
-    /// Materialized rows across all nodes/shards.
+    /// Materialized rows across all nodes/shards, every tier counted.
     pub total_rows: usize,
-    /// LRU evictions since start.
+    /// Hot-tier evictions since start (= demotions on a tiered PS).
     pub total_evictions: u64,
     /// Max/mean per-node traffic ratio (1.0 = perfectly balanced).
     pub imbalance: f64,
+    /// Lookups served by hot tiers.
+    pub hot_hits: u64,
+    /// Lookups served by cold tiers (0 on an all-hot PS).
+    pub cold_hits: u64,
+    /// Rows demoted hot → cold.
+    pub demotions: u64,
+    /// Rows promoted cold → hot.
+    pub promotions: u64,
+    /// Rows currently resident in cold tiers.
+    pub cold_rows: usize,
 }
 
 /// Batched get/put access to a (possibly remote) embedding PS.
@@ -80,20 +90,30 @@ impl PsBackend for EmbeddingPs {
     }
 
     fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
-        EmbeddingPs::get_many(self, keys, out);
-        Ok(())
+        // Through the packed entry point so cold-tier I/O failure is an
+        // `Err` to the worker, not a PS panic.
+        let packed: Vec<u64> =
+            keys.iter().map(|&(g, id)| crate::embedding::ps::pack_key(g, id)).collect();
+        self.get_packed_into(&packed, out)
     }
 
     fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
-        EmbeddingPs::put_grads(self, keys, grads);
-        Ok(())
+        let packed: Vec<u64> =
+            keys.iter().map(|&(g, id)| crate::embedding::ps::pack_key(g, id)).collect();
+        self.put_grads_packed(&packed, grads)
     }
 
     fn stats(&self) -> Result<PsStats> {
+        let tc = self.tier_counters();
         Ok(PsStats {
             total_rows: self.total_rows(),
             total_evictions: self.total_evictions(),
             imbalance: self.imbalance(),
+            hot_hits: tc.hot_hits,
+            cold_hits: tc.cold_hits,
+            demotions: tc.demotions,
+            promotions: tc.promotions,
+            cold_rows: self.cold_rows(),
         })
     }
 

@@ -31,6 +31,7 @@ use crate::comm::rpc::{PipelinedClient, RpcClient};
 use crate::comm::transport::TcpTransport;
 use crate::config::{EmbeddingConfig, ServiceConfig};
 use crate::embedding::ps::pack_key;
+use crate::embedding::NodeSnapshot;
 use crate::recovery::{
     PoolAsyncCall, PooledConn, PutReplayLog, ReconnectPool, Redial, RetryPolicy,
 };
@@ -270,22 +271,25 @@ impl RemotePs {
         protocol::decode_stats_full(&resp)
     }
 
-    /// Fetch the flat per-shard snapshots of one (server-owned, globally
+    /// Fetch the full snapshot (per-shard hot blobs, plus cold blobs when
+    /// the server runs a tiered store) of one (server-owned, globally
     /// indexed) node over the wire — §4.2.4 checkpointing, cross-process.
-    pub fn snapshot_node(&self, node: usize) -> Result<Vec<Vec<u8>>> {
+    pub fn snapshot_node(&self, node: usize) -> Result<NodeSnapshot> {
         let resp = self
             .call(&protocol::encode_snapshot_request(node))
             .with_context(|| format!("SNAPSHOT of node {node}"))?;
         protocol::decode_snapshot_response(&resp)
     }
 
-    /// Replace one node's shards from snapshots over the wire.
-    pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> Result<()> {
+    /// Replace one node's tiers from a snapshot over the wire. The server
+    /// rejects tier-shape mismatches (cold snapshot → all-hot PS or vice
+    /// versa) loudly.
+    pub fn restore_node(&self, node: usize, snap: &NodeSnapshot) -> Result<()> {
         let resp = self
-            .call(&protocol::encode_restore_request(node, shards))
+            .call(&protocol::encode_restore_request(node, snap))
             .with_context(|| format!("RESTORE of node {node}"))?;
         let restored = protocol::decode_restore_response(&resp)?;
-        ensure!(restored == shards.len(), "PS restored {restored} of {} shards", shards.len());
+        ensure!(restored == snap.hot.len(), "PS restored {restored} of {} shards", snap.hot.len());
         Ok(())
     }
 

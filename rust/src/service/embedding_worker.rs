@@ -428,7 +428,16 @@ pub fn encode_ew_stats_response(buffered: usize, w: &WorkerStats, ps: &PsStats) 
         w.put_failures,
         w.rebuffered_samples,
     ]);
-    msg.put_u64(&[ps.total_rows as u64, ps.total_evictions, ps.imbalance.to_bits()]);
+    msg.put_u64(&[
+        ps.total_rows as u64,
+        ps.total_evictions,
+        ps.imbalance.to_bits(),
+        ps.hot_hits,
+        ps.cold_hits,
+        ps.demotions,
+        ps.promotions,
+        ps.cold_rows as u64,
+    ]);
     msg.finish()
 }
 
@@ -439,7 +448,7 @@ pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsSta
     let xs = r.u64(0)?;
     ensure!(xs.len() == 11, "malformed EW STATS response");
     let ps = r.u64(1)?;
-    ensure!(ps.len() == 3, "malformed EW STATS PS section");
+    ensure!(ps.len() == 8, "malformed EW STATS PS section");
     Ok((
         xs[0] as usize,
         WorkerStats {
@@ -458,6 +467,11 @@ pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsSta
             total_rows: ps[0] as usize,
             total_evictions: ps[1],
             imbalance: f64::from_bits(ps[2]),
+            hot_hits: ps[3],
+            cold_hits: ps[4],
+            demotions: ps[5],
+            promotions: ps[6],
+            cold_rows: ps[7] as usize,
         },
     ))
 }
@@ -1335,13 +1349,22 @@ mod tests {
             put_failures: 9,
             rebuffered_samples: 10,
         };
-        let ps = PsStats { total_rows: 11, total_evictions: 12, imbalance: 1.5 };
+        let ps = PsStats {
+            total_rows: 11,
+            total_evictions: 12,
+            imbalance: 1.5,
+            cold_hits: 21,
+            cold_rows: 6,
+            ..Default::default()
+        };
         let (buffered, w2, ps2) =
             decode_ew_stats_response(&encode_ew_stats_response(13, &w, &ps)).unwrap();
         assert_eq!(buffered, 13);
         assert_eq!(w2, w);
         assert_eq!(ps2.total_rows, 11);
         assert!((ps2.imbalance - 1.5).abs() < 1e-12);
+        assert_eq!(ps2.cold_hits, 21);
+        assert_eq!(ps2.cold_rows, 6);
     }
 
     #[test]

@@ -7,10 +7,10 @@
 //! | `INFO`     | –                             | u64 fingerprint + node range   |
 //! | `GET`      | u64 keys, u8 flags            | u8 flags, values               |
 //! | `PUT`      | u64 keys, u8 flags, values    | u64 `[rows applied]`           |
-//! | `STATS`    | –                             | u64 `[rows, evic, imb bits]`, u64 per-node traffic |
+//! | `STATS`    | –                             | u64 `[rows, evic, imb bits, hot hits, cold hits, demo, promo, cold rows]`, u64 per-node traffic |
 //! | `SHUTDOWN` | –                             | – (ack)                        |
-//! | `SNAPSHOT` | u64 `[node]`                  | u64 shard lens, u8 shard bytes |
-//! | `RESTORE`  | u64 `[node]`, u64 lens, u8 bytes | u64 `[shards restored]`     |
+//! | `SNAPSHOT` | u64 `[node]`                  | u8 flags, u64 hot lens, u8 hot bytes, u64 cold lens, u8 cold bytes |
+//! | `RESTORE`  | u64 `[node]`, u8 flags, u64/u8 hot, u64/u8 cold | u64 `[shards restored]` |
 //!
 //! Keys are `pack_key(group, id)` u64s, already deduplicated by the sender —
 //! the paper's lossless index compression. `values` is either one raw f32
@@ -18,9 +18,11 @@
 //! plus per-row scales — the paper's lossy value compression
 //! ([`CompressedValues`]), halving wire bytes at ~2^-10 relative error.
 //!
-//! `SNAPSHOT`/`RESTORE` move whole-node LRU snapshots (flat byte blobs, one
-//! per shard) over the wire, so the §4.2.4 recovery drill — kill a PS
-//! process, restart it, restore its slice — works across process boundaries.
+//! `SNAPSHOT`/`RESTORE` move whole-node [`NodeSnapshot`]s (flat byte blobs,
+//! one per shard; on a tiered PS a second blob set for the cold tier, the
+//! flags byte says which) over the wire, so the §4.2.4 recovery drill — kill
+//! a PS process, restart it, restore its slice — works across process
+//! boundaries for both storage engines.
 //! The STATS per-node traffic vector is global-length (unowned nodes report
 //! 0), letting a sharded client sum vectors across shard processes and
 //! compute the *correct* global imbalance instead of averaging per-process
@@ -31,6 +33,7 @@ use anyhow::{ensure, Result};
 use crate::comm::compress::CompressedValues;
 use crate::comm::wire::{WireReader, WireWriter};
 use crate::config::EmbeddingConfig;
+use crate::embedding::NodeSnapshot;
 
 use super::backend::PsStats;
 
@@ -382,7 +385,16 @@ pub fn encode_stats_request() -> Vec<u8> {
 /// `stats.imbalance`.
 pub fn encode_stats_response(stats: &PsStats, node_traffic: &[u64]) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_STATS);
-    w.put_u64(&[stats.total_rows as u64, stats.total_evictions, stats.imbalance.to_bits()]);
+    w.put_u64(&[
+        stats.total_rows as u64,
+        stats.total_evictions,
+        stats.imbalance.to_bits(),
+        stats.hot_hits,
+        stats.cold_hits,
+        stats.demotions,
+        stats.promotions,
+        stats.cold_rows as u64,
+    ]);
     w.put_u64(node_traffic);
     w.finish()
 }
@@ -397,13 +409,18 @@ pub fn decode_stats_full(msg: &[u8]) -> Result<(PsStats, Vec<u64>)> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_STATS, "expected STATS response, got kind {}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 3, "malformed STATS response");
+    ensure!(xs.len() == 8, "malformed STATS response");
     let traffic = r.u64(1)?;
     Ok((
         PsStats {
             total_rows: xs[0] as usize,
             total_evictions: xs[1],
             imbalance: f64::from_bits(xs[2]),
+            hot_hits: xs[3],
+            cold_hits: xs[4],
+            demotions: xs[5],
+            promotions: xs[6],
+            cold_rows: xs[7] as usize,
         },
         traffic,
     ))
@@ -411,10 +428,18 @@ pub fn decode_stats_full(msg: &[u8]) -> Result<(PsStats, Vec<u64>)> {
 
 // --- SNAPSHOT / RESTORE ---
 //
-// Shard snapshots are opaque byte blobs ([`LruStore::to_bytes`] output), one
-// per lock-striped shard of the node. They ride as one concatenated u8
+// Shard snapshots are opaque byte blobs (hot-tier `LruStore` bytes, and on
+// a tiered PS a second set of cold-tier `ColdStore` snapshot bytes), one
+// per lock-striped shard of the node. Each set rides as one concatenated u8
 // section plus a u64 length-per-shard section; the split is reconstructed on
-// the other side with an overflow-checked prefix sum.
+// the other side with an overflow-checked prefix sum. A flags byte says
+// whether the cold sections are meaningful (`FLAG_HAS_COLD`) — they are
+// always present on the wire so section indices stay fixed.
+
+/// Flag bit in the SNAPSHOT/RESTORE flags section: the snapshot carries a
+/// cold tier (the PS on the other side must have been started with
+/// `--cold-dir`).
+const FLAG_HAS_COLD: u8 = 1;
 
 /// Encode a SNAPSHOT request for one global node.
 pub fn encode_snapshot_request(node: usize) -> Vec<u8> {
@@ -458,35 +483,67 @@ fn read_shard_blobs(r: &WireReader, section: usize) -> Result<Vec<Vec<u8>>> {
     Ok(out)
 }
 
-/// Encode a node's per-shard snapshot blobs.
-pub fn encode_snapshot_response(shards: &[Vec<u8>]) -> Vec<u8> {
+/// Write a [`NodeSnapshot`] as flags + hot sections + cold sections. The
+/// cold sections are always emitted (empty when all-hot) so the reader's
+/// section numbering never shifts.
+fn put_node_snapshot(w: &mut WireWriter, snap: &NodeSnapshot) {
+    w.put_u8(&[if snap.cold.is_some() { FLAG_HAS_COLD } else { 0 }]);
+    put_shard_blobs(w, &snap.hot);
+    match &snap.cold {
+        Some(cold) => put_shard_blobs(w, cold),
+        None => put_shard_blobs(w, &[]),
+    }
+}
+
+fn read_node_snapshot(r: &WireReader, section: usize) -> Result<NodeSnapshot> {
+    let flags = r.u8(section)?;
+    ensure!(flags.len() == 1, "malformed snapshot flags");
+    let hot = read_shard_blobs(r, section + 1)?;
+    let cold_blobs = read_shard_blobs(r, section + 3)?;
+    let cold = if flags[0] & FLAG_HAS_COLD != 0 {
+        ensure!(
+            cold_blobs.len() == hot.len(),
+            "cold snapshot has {} shards, hot has {}",
+            cold_blobs.len(),
+            hot.len()
+        );
+        Some(cold_blobs)
+    } else {
+        ensure!(cold_blobs.is_empty(), "all-hot snapshot carries cold payload");
+        None
+    };
+    Ok(NodeSnapshot { hot, cold })
+}
+
+/// Encode a node's snapshot (per-shard hot blobs + optional cold blobs).
+pub fn encode_snapshot_response(snap: &NodeSnapshot) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_SNAPSHOT);
-    put_shard_blobs(&mut w, shards);
+    put_node_snapshot(&mut w, snap);
     w.finish()
 }
 
-/// Decode a node's per-shard snapshot blobs.
-pub fn decode_snapshot_response(msg: &[u8]) -> Result<Vec<Vec<u8>>> {
+/// Decode a node's snapshot (per-shard hot blobs + optional cold blobs).
+pub fn decode_snapshot_response(msg: &[u8]) -> Result<NodeSnapshot> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_SNAPSHOT, "expected SNAPSHOT response, got kind {}", r.kind());
-    read_shard_blobs(&r, 0)
+    read_node_snapshot(&r, 0)
 }
 
-/// Encode a RESTORE of one node from its snapshot blobs.
-pub fn encode_restore_request(node: usize, shards: &[Vec<u8>]) -> Vec<u8> {
+/// Encode a RESTORE of one node from its snapshot.
+pub fn encode_restore_request(node: usize, snap: &NodeSnapshot) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_RESTORE);
     w.put_u64(&[node as u64]);
-    put_shard_blobs(&mut w, shards);
+    put_node_snapshot(&mut w, snap);
     w.finish()
 }
 
-/// Returns `(node, shard snapshots)`.
-pub fn decode_restore_request(msg: &[u8]) -> Result<(usize, Vec<Vec<u8>>)> {
+/// Returns `(node, node snapshot)`.
+pub fn decode_restore_request(msg: &[u8]) -> Result<(usize, NodeSnapshot)> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_RESTORE, "expected RESTORE, got kind {}", r.kind());
     let xs = r.u64(0)?;
     ensure!(xs.len() == 1, "malformed RESTORE request");
-    Ok((xs[0] as usize, read_shard_blobs(&r, 1)?))
+    Ok((xs[0] as usize, read_node_snapshot(&r, 1)?))
 }
 
 /// Encode the RESTORE ack (shards restored).
@@ -662,13 +719,27 @@ mod tests {
         assert_eq!(back, info);
         assert_eq!(f32::from_bits(back.lr_bits), 0.1);
 
-        let stats = PsStats { total_rows: 123, total_evictions: 7, imbalance: 1.25 };
+        let stats = PsStats {
+            total_rows: 123,
+            total_evictions: 7,
+            imbalance: 1.25,
+            hot_hits: 900,
+            cold_hits: 33,
+            demotions: 7,
+            promotions: 5,
+            cold_rows: 64,
+        };
         let traffic = vec![10u64, 0, 5, 0];
         let msg = encode_stats_response(&stats, &traffic);
         let back = decode_stats_response(&msg).unwrap();
         assert_eq!(back.total_rows, 123);
         assert_eq!(back.total_evictions, 7);
         assert!((back.imbalance - 1.25).abs() < 1e-12);
+        assert_eq!(back.hot_hits, 900);
+        assert_eq!(back.cold_hits, 33);
+        assert_eq!(back.demotions, 7);
+        assert_eq!(back.promotions, 5);
+        assert_eq!(back.cold_rows, 64);
         let (full, t2) = decode_stats_full(&msg).unwrap();
         assert_eq!(full.total_rows, 123);
         assert_eq!(t2, traffic);
@@ -722,16 +793,44 @@ mod tests {
     #[test]
     fn snapshot_restore_codec_roundtrip() {
         let shards = vec![vec![1u8, 2, 3], vec![], vec![0xff; 70]];
+        let all_hot = NodeSnapshot { hot: shards.clone(), cold: None };
         assert_eq!(decode_snapshot_request(&encode_snapshot_request(3)).unwrap(), 3);
-        let back = decode_snapshot_response(&encode_snapshot_response(&shards)).unwrap();
-        assert_eq!(back, shards);
-        let (node, back) = decode_restore_request(&encode_restore_request(2, &shards)).unwrap();
+        let back = decode_snapshot_response(&encode_snapshot_response(&all_hot)).unwrap();
+        assert_eq!(back, all_hot);
+        let (node, back) = decode_restore_request(&encode_restore_request(2, &all_hot)).unwrap();
         assert_eq!(node, 2);
-        assert_eq!(back, shards);
+        assert_eq!(back, all_hot);
         assert_eq!(decode_restore_response(&encode_restore_response(4)).unwrap(), 4);
         // Lens that overflow the payload are rejected.
         let mut w = crate::comm::wire::WireWriter::new(KIND_SNAPSHOT);
-        w.put_u64(&[100]).put_u8(&[1, 2, 3]);
+        w.put_u8(&[0]).put_u64(&[100]).put_u8(&[1, 2, 3]);
+        w.put_u64(&[]).put_u8(&[]);
+        assert!(decode_snapshot_response(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn tiered_snapshot_codec_roundtrip_and_shape_checks() {
+        let hot = vec![vec![1u8, 2], vec![3u8; 5]];
+        let cold = vec![vec![9u8; 4], vec![]];
+        let snap = NodeSnapshot { hot: hot.clone(), cold: Some(cold.clone()) };
+        let back = decode_snapshot_response(&encode_snapshot_response(&snap)).unwrap();
+        assert_eq!(back, snap);
+        let (node, back) = decode_restore_request(&encode_restore_request(1, &snap)).unwrap();
+        assert_eq!(node, 1);
+        assert_eq!(back, snap);
+
+        // Cold shard count must match hot shard count.
+        let mut w = crate::comm::wire::WireWriter::new(KIND_SNAPSHOT);
+        w.put_u8(&[1]);
+        w.put_u64(&[2, 2]).put_u8(&[1, 2, 3, 4]);
+        w.put_u64(&[1]).put_u8(&[5]); // one cold shard for two hot shards
+        assert!(decode_snapshot_response(&w.finish()).is_err());
+
+        // An all-hot flag with a non-empty cold payload is malformed.
+        let mut w = crate::comm::wire::WireWriter::new(KIND_SNAPSHOT);
+        w.put_u8(&[0]);
+        w.put_u64(&[1]).put_u8(&[7]);
+        w.put_u64(&[1]).put_u8(&[8]);
         assert!(decode_snapshot_response(&w.finish()).is_err());
     }
 

@@ -170,7 +170,10 @@ impl PsServer {
                         "SNAPSHOT of node {node} outside this server's range {:?}",
                         ps.node_range()
                     );
-                    Ok(protocol::encode_snapshot_response(&ps.snapshot_node(node)))
+                    // snapshot_node_full is fallible (cold-tier I/O, node
+                    // ownership): failures become wire errors to the client,
+                    // never a server panic.
+                    Ok(protocol::encode_snapshot_response(&ps.snapshot_node_full(node)?))
                 }),
             );
         }
@@ -179,13 +182,14 @@ impl PsServer {
             rpc.register(
                 protocol::KIND_RESTORE,
                 Box::new(move |msg| {
-                    let (node, shards) = protocol::decode_restore_request(msg)?;
-                    // restore_node re-checks ownership and shard count, and
-                    // the hardened LruStore::from_bytes rejects corrupt blobs
-                    // without panicking — a bad RESTORE leaves state intact
-                    // up to the first failing shard.
-                    ps.restore_node(node, &shards)?;
-                    Ok(protocol::encode_restore_response(shards.len()))
+                    let (node, snap) = protocol::decode_restore_request(msg)?;
+                    // restore_node_full re-checks ownership, shard count,
+                    // and tier shape (a cold snapshot against an all-hot PS
+                    // is a loud error), and the hardened snapshot decoders
+                    // reject corrupt blobs without panicking — a bad RESTORE
+                    // leaves state intact up to the first failing shard.
+                    ps.restore_node_full(node, &snap)?;
+                    Ok(protocol::encode_restore_response(snap.hot.len()))
                 }),
             );
         }

@@ -33,6 +33,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{EmbeddingConfig, PartitionPolicy, ServiceConfig};
 use crate::embedding::ps::{imbalance_of, pack_key, route};
+use crate::embedding::NodeSnapshot;
 
 use super::backend::{PsBackend, PsStats};
 use super::client::RemotePs;
@@ -181,16 +182,17 @@ impl ShardedRemotePs {
         })
     }
 
-    /// Snapshot one global node via the shard process that owns it.
-    pub fn snapshot_node(&self, node: usize) -> Result<Vec<Vec<u8>>> {
+    /// Snapshot one global node (both tiers, when the owning process runs a
+    /// tiered store) via the shard process that owns it.
+    pub fn snapshot_node(&self, node: usize) -> Result<NodeSnapshot> {
         ensure!(node < self.n_nodes, "node {node} out of range");
         self.shard_for_node(node).snapshot_node(node)
     }
 
     /// Restore one global node via the shard process that owns it.
-    pub fn restore_node(&self, node: usize, shards: &[Vec<u8>]) -> Result<()> {
+    pub fn restore_node(&self, node: usize, snap: &NodeSnapshot) -> Result<()> {
         ensure!(node < self.n_nodes, "node {node} out of range");
-        self.shard_for_node(node).restore_node(node, shards)
+        self.shard_for_node(node).restore_node(node, snap)
     }
 
     /// The checkpoint-epoch step each shard process restored at startup
@@ -292,13 +294,17 @@ impl PsBackend for ShardedRemotePs {
     fn stats(&self) -> Result<PsStats> {
         let all: Vec<usize> = (0..self.shards.len()).collect();
         let results = self.scatter(&all, |si| self.shards[si].stats_full());
-        let mut total_rows = 0usize;
-        let mut total_evictions = 0u64;
+        let mut merged = PsStats::default();
         let mut traffic = vec![0u64; self.n_nodes];
         for r in results {
             let (stats, node_traffic) = r?;
-            total_rows += stats.total_rows;
-            total_evictions += stats.total_evictions;
+            merged.total_rows += stats.total_rows;
+            merged.total_evictions += stats.total_evictions;
+            merged.hot_hits += stats.hot_hits;
+            merged.cold_hits += stats.cold_hits;
+            merged.demotions += stats.demotions;
+            merged.promotions += stats.promotions;
+            merged.cold_rows += stats.cold_rows;
             ensure!(
                 node_traffic.len() == self.n_nodes,
                 "shard reported {} traffic entries, want {}",
@@ -311,7 +317,8 @@ impl PsBackend for ShardedRemotePs {
         }
         // Global imbalance from the summed per-node traffic — the same
         // shared formula the in-process EmbeddingPs uses.
-        Ok(PsStats { total_rows, total_evictions, imbalance: imbalance_of(&traffic) })
+        merged.imbalance = imbalance_of(&traffic);
+        Ok(merged)
     }
 
     /// The coordinated two-phase epoch (recovery::coordinator): PREPARE on

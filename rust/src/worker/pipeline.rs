@@ -23,6 +23,24 @@
 //! changes *when* the PS reads happen relative to gradient writes. Bitwise
 //! parity with the inline path therefore requires depth 1 (lookups happen on
 //! demand, after all earlier puts), which is what deterministic mode forces.
+//!
+//! Cold-tier latency: when the PS shards run the tiered storage engine
+//! (`serve-ps --cold-dir`), a batch whose working set spills past the hot
+//! LRU pays disk reads (cold hits) and writes (demotions) inside stage 2's
+//! scatter-gather — orders of magnitude slower than the all-hot path. No
+//! code here knows or cares: that latency lands in exactly the same place
+//! as PS network latency, so the same `--pipeline-depth` lookahead that
+//! hides round-trips hides cold I/O. Stage 2 runs up to `depth` batches
+//! ahead of the consuming NN rank, so as long as the *average* prepare time
+//! (including cold misses) stays under the dense step time times depth, the
+//! NN ring never stalls — Zipf-distributed key streams concentrate hot keys
+//! in RAM, so cold hits cluster on the first touches of tail keys and the
+//! steady state approaches all-hot throughput (see
+//! `benches/fig9_capacity.rs`'s across-the-boundary sweep). Sizing rule of
+//! thumb: raise `--pipeline-depth` until throughput plateaus; each extra
+//! unit buys one more batch of cold I/O overlapped with dense compute, at
+//! the cost of one batch of extra staleness (deterministic mode still
+//! forces depth 1 and simply eats the cold latency inline).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver};

@@ -89,10 +89,10 @@ fn ps_crash_with_shared_memory_recovers_losslessly_mid_training() {
     let auc_before = eval(&ds, &ew, &engine, &params);
 
     // Process-level PS failure on both nodes; shared memory survives.
-    backup.mirror_shared(&ps, 0);
-    backup.mirror_shared(&ps, 1);
-    ps.wipe_node(0);
-    ps.wipe_node(1);
+    backup.mirror_shared(&ps, 0).unwrap();
+    backup.mirror_shared(&ps, 1).unwrap();
+    ps.wipe_node(0).unwrap();
+    ps.wipe_node(1).unwrap();
     assert_eq!(backup.recover(&ps, 0, true).unwrap(), "shared-memory");
     assert_eq!(backup.recover(&ps, 1, true).unwrap(), "shared-memory");
 
@@ -133,8 +133,8 @@ fn ps_crash_without_shared_memory_falls_back_to_disk_checkpoint() {
         train_step(&ds, &mut rng, &ew, &engine, &mut params, &mut opt, 64).unwrap();
     }
     // Crash losing RAM; restore from disk (rolls back post-ckpt puts only).
-    ps.wipe_node(0);
-    ps.wipe_node(1);
+    ps.wipe_node(0).unwrap();
+    ps.wipe_node(1).unwrap();
     mgr.restore(&ps).unwrap();
     let auc_restored = eval(&ds, &ew, &engine, &params);
     assert!(

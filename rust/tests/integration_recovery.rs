@@ -9,6 +9,9 @@
 //!   cursors + PS state all restored);
 //! * a two-tier deployment (train × serve-ps ×2) SIGKILLed wholesale
 //!   resumes from its last committed epoch to ≤1e-6 parity;
+//! * the same wholesale kill with COLD-BACKED shards (`--cold-dir`, a hot
+//!   budget far below the working set): the committed epoch carries both
+//!   tiers, and the resumed run matches an unkilled all-hot reference;
 //! * the tentpole drill: in a 2 PS × 1 EW × 2 NN-rank three-tier run,
 //!   SIGKILL of a single PS shard mid-run is *survived* — the recovery
 //!   layer re-handshakes the restarted shard (restored from its committed
@@ -297,6 +300,20 @@ mod multiprocess {
         ckpt_dir: &std::path::Path,
         restore_epoch: Option<u64>,
     ) -> (Proc, String) {
+        spawn_ps_with(addr, node_range, steps, nn_workers, ckpt_dir, restore_epoch, &[])
+    }
+
+    /// [`spawn_ps`] with extra flags appended — the tiered-storage drills
+    /// pass the `--cold-dir`/`--hot-capacity` pair through here.
+    fn spawn_ps_with(
+        addr: &str,
+        node_range: &str,
+        steps: usize,
+        nn_workers: usize,
+        ckpt_dir: &std::path::Path,
+        restore_epoch: Option<u64>,
+        extra: &[String],
+    ) -> (Proc, String) {
         for attempt in 0..40u64 {
             let mut args = strs(&["serve-ps", "--addr"]);
             args.push(addr.to_string());
@@ -309,6 +326,7 @@ mod multiprocess {
                 args.push("--restore-epoch".to_string());
                 args.push(step.to_string());
             }
+            args.extend(extra.iter().cloned());
             let mut p = Proc::spawn(&args);
             if let Some(line) = p.wait_for_line("listening on ", Duration::from_secs(30)) {
                 let got = line
@@ -463,6 +481,128 @@ mod multiprocess {
         let got = parse_losses(&resumed_out);
         assert!(got.iter().all(|(s, _)| *s >= epoch), "resumed losses predate the epoch");
         assert_losses_match(&got, &parse_losses(&reference_out), "resume drill");
+        let (loss, auc) = parse_parity(&resumed_out);
+        let (ref_loss, ref_auc) = parse_parity(&reference_out);
+        assert!((loss - ref_loss).abs() <= 1e-6, "final loss {loss} vs {ref_loss}");
+        assert!((auc - ref_auc).abs() <= 1e-6, "final AUC {auc} vs {ref_auc}");
+
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir_ref).ok();
+    }
+
+    /// The tiered-storage variant of the wholesale kill drill: both PS
+    /// shards run with a disk-backed cold tier and a hot budget far below
+    /// the working set, the committed epoch carries BOTH tiers on disk, and
+    /// the restarted cold-backed deployment resumes to ≤1e-6 parity with an
+    /// unkilled ALL-HOT reference — row placement stays invisible to the
+    /// numerics even across a SIGKILL + epoch restore.
+    #[test]
+    fn kill_cold_backed_deployment_then_resume_restores_both_tiers() {
+        let steps = 40;
+        let dir = tmp_dir("drill_cold");
+        let cold_dir = dir.join("cold");
+        let tiered = vec![
+            "--cold-dir".to_string(),
+            cold_dir.display().to_string(),
+            "--hot-capacity".to_string(),
+            "128".to_string(),
+        ];
+
+        let train_args = |remote: &str, extra: &[String]| -> Vec<String> {
+            let mut args = strs(&["train", "--parity-lines", "true", "--remote-ps"]);
+            args.push(remote.to_string());
+            args.extend(shared_flags(steps, 1));
+            args.extend(extra.to_vec());
+            args
+        };
+
+        // --- the cold-backed run that dies ---
+        let (ps_a, addr_a) =
+            spawn_ps_with("127.0.0.1:0", "0..2", steps, 1, &dir, None, &tiered);
+        let (ps_b, addr_b) =
+            spawn_ps_with("127.0.0.1:0", "2..4", steps, 1, &dir, None, &tiered);
+        for ps in [&ps_a, &ps_b] {
+            assert!(
+                ps.output_snapshot().contains("tiered hot=128/shard"),
+                "shard did not report the tiered engine:\n{}",
+                ps.output_snapshot()
+            );
+        }
+        let mut doomed = Proc::spawn(&train_args(
+            &format!("{addr_a},{addr_b}"),
+            &[
+                "--checkpoint-dir".to_string(),
+                dir.display().to_string(),
+                "--checkpoint-every".to_string(),
+                "8".to_string(),
+            ],
+        ));
+        doomed
+            .wait_for_line("CKPT epoch ", Duration::from_secs(120))
+            .unwrap_or_else(|| panic!("no epoch committed:\n{}", doomed.output_snapshot()));
+        doomed.kill();
+        let (mut ps_a, mut ps_b) = (ps_a, ps_b);
+        ps_a.kill();
+        ps_b.kill();
+
+        // --- the committed epoch must carry the cold tier for every node ---
+        let epoch: u64 = std::fs::read_to_string(dir.join("LATEST"))
+            .expect("LATEST pointer written")
+            .trim()
+            .parse()
+            .expect("LATEST holds a step");
+        assert!(epoch >= 8 && epoch < steps as u64, "implausible epoch {epoch}");
+        for node in 0..4 {
+            let cold_file =
+                dir.join(format!("step-{epoch}")).join(format!("ps_node_{node}.cold"));
+            assert!(
+                cold_file.exists(),
+                "committed epoch is missing its cold tier: {}",
+                cold_file.display()
+            );
+        }
+
+        // --- restart both shards cold-backed, pinned to the epoch ---
+        let (ps_a2, addr_a2) =
+            spawn_ps_with("127.0.0.1:0", "0..2", steps, 1, &dir, Some(epoch), &tiered);
+        let (ps_b2, addr_b2) =
+            spawn_ps_with("127.0.0.1:0", "2..4", steps, 1, &dir, Some(epoch), &tiered);
+        for ps in [&ps_a2, &ps_b2] {
+            let out = ps.output_snapshot();
+            assert!(
+                out.contains("from committed epoch step-"),
+                "restarted shard did not restore an epoch:\n{out}"
+            );
+        }
+        let mut resumed = Proc::spawn(&train_args(
+            &format!("{addr_a2},{addr_b2}"),
+            &["--resume-from".to_string(), dir.display().to_string()],
+        ));
+        let status = resumed
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("resumed run hung:\n{}", resumed.output_snapshot()));
+        assert!(status.success(), "resumed run failed:\n{}", resumed.output_snapshot());
+        let resumed_out = resumed.output_snapshot();
+        drop(ps_a2);
+        drop(ps_b2);
+
+        // --- the unkilled ALL-HOT reference (fresh dir, default engine):
+        // both the kill and the tiering must be invisible to the numerics ---
+        let dir_ref = tmp_dir("drill_cold_ref");
+        let (ps_a3, addr_a3) = spawn_ps("127.0.0.1:0", "0..2", steps, 1, &dir_ref, None);
+        let (ps_b3, addr_b3) = spawn_ps("127.0.0.1:0", "2..4", steps, 1, &dir_ref, None);
+        let mut reference = Proc::spawn(&train_args(&format!("{addr_a3},{addr_b3}"), &[]));
+        let status = reference
+            .wait_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|| panic!("reference run hung:\n{}", reference.output_snapshot()));
+        assert!(status.success(), "reference failed:\n{}", reference.output_snapshot());
+        let reference_out = reference.output_snapshot();
+        drop(ps_a3);
+        drop(ps_b3);
+
+        let got = parse_losses(&resumed_out);
+        assert!(got.iter().all(|(s, _)| *s >= epoch), "resumed losses predate the epoch");
+        assert_losses_match(&got, &parse_losses(&reference_out), "cold-backed resume drill");
         let (loss, auc) = parse_parity(&resumed_out);
         let (ref_loss, ref_auc) = parse_parity(&reference_out);
         assert!((loss - ref_loss).abs() <= 1e-6, "final loss {loss} vs {ref_loss}");

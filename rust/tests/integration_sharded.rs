@@ -255,7 +255,8 @@ fn kill_one_shard_restore_from_snapshot_training_continues() {
     // Snapshot the victim shard's node over the wire, then kill the shard.
     let victim_node = 2; // RANGES[1] owns exactly node 2
     let snap = backend.snapshot_node(victim_node).unwrap();
-    assert_eq!(snap.len(), template.emb_cfg.shards_per_node);
+    assert_eq!(snap.hot.len(), template.emb_cfg.shards_per_node);
+    assert!(snap.cold.is_none(), "all-hot shard must not report a cold tier");
     handles.remove(1).shutdown().unwrap();
 
     // Restart it on the same port — fresh process, empty state — and

@@ -1,0 +1,163 @@
+//! The tiered-storage acceptance test: a training run whose embedding table
+//! lives mostly on disk is **bitwise identical** to the all-hot run.
+//!
+//! Demotion and promotion move exact row bytes (embedding ⊕ optimizer
+//! state) between tiers and never re-materialize a resident row, so in
+//! deterministic FullSync the only observable difference between an all-hot
+//! PS and a tiered PS with a tiny hot budget is *where* rows wait between
+//! touches. These tests pin that equivalence end to end through the real
+//! trainer — loss curve, final AUC, and final dense parameters — while the
+//! tiered run's table is required to overflow its hot budget many times
+//! over.
+
+use std::sync::Arc;
+
+use persia::config::{
+    ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
+    Pooling, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::embedding::{EmbeddingPs, StoreConfig};
+use persia::hybrid::Trainer;
+
+fn trainer(seed: u64) -> Trainer {
+    let model = ModelConfig {
+        artifact_preset: "tiny".into(),
+        n_groups: 4,
+        emb_dim_per_group: 8,
+        nid_dim: 8,
+        hidden: vec![32, 16],
+        ids_per_group: 4,
+        pooling: Pooling::Sum,
+    };
+    let emb_cfg = EmbeddingConfig {
+        rows_per_group: 2000,
+        shard_capacity: 8192,
+        n_nodes: 2,
+        shards_per_node: 2,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    };
+    let cluster =
+        ClusterConfig { n_nn_workers: 1, n_emb_workers: 2, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: 32,
+        lr: 0.1,
+        staleness_bound: 4,
+        steps: 120,
+        eval_every: 120,
+        seed,
+        use_pjrt: false,
+        compress: true,
+    };
+    let dataset = SyntheticDataset::new(&model, 2000, 1.05, seed);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    t.eval_rows = 1024;
+    t
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("persia_it_tiered_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn tiered_run_is_bitwise_identical_to_all_hot() {
+    let seed = 21;
+
+    // Baseline determinism guard: two all-hot runs must agree exactly, or
+    // any tiered mismatch below would be unattributable.
+    let hot_a = trainer(seed).run_rust().unwrap();
+    let hot_b = trainer(seed).run_rust().unwrap();
+    assert_eq!(hot_a.tracker.losses, hot_b.tracker.losses, "FullSync baseline not deterministic");
+    assert_eq!(hot_a.final_params, hot_b.final_params);
+
+    // Tiered run against an explicit PS backend so the tiers are
+    // inspectable afterwards: 64 hot rows per shard over 4 shards = 256
+    // rows of hot budget, against a working set in the thousands.
+    let dir = tmp_dir("parity");
+    let t = trainer(seed);
+    let store = StoreConfig::Tiered {
+        hot_capacity: 64,
+        cold_dir: dir.clone(),
+        admit_threshold: 2,
+    };
+    let ps = Arc::new(
+        EmbeddingPs::new_with_store(&t.emb_cfg, t.model.emb_dim_per_group, t.train.seed, &store)
+            .unwrap(),
+    );
+    let mut t = t;
+    t.ps_backend = Some(ps.clone());
+    let tiered = t.run_rust().unwrap();
+
+    // Bitwise parity: same losses at every step, same final AUC, same
+    // final dense parameters. Placement changed; numerics did not.
+    assert_eq!(
+        hot_a.tracker.losses, tiered.tracker.losses,
+        "tiered loss curve diverged from all-hot"
+    );
+    assert_eq!(hot_a.final_params, tiered.final_params, "final dense params diverged");
+    let (auc_hot, auc_tiered) =
+        (hot_a.report.final_auc.unwrap(), tiered.report.final_auc.unwrap());
+    assert!(
+        (auc_hot - auc_tiered).abs() <= 1e-6,
+        "AUC diverged: all-hot {auc_hot} vs tiered {auc_tiered}"
+    );
+
+    // The equivalence must have been earned: the table overflowed the hot
+    // budget many times over, with real demotion/promotion traffic.
+    let hot_budget = 4 * 64; // shards × hot_capacity
+    let total = ps.total_rows();
+    assert!(
+        total >= 8 * hot_budget,
+        "working set did not stress the tiers: {total} rows vs {hot_budget} hot budget"
+    );
+    assert!(ps.cold_rows() > 0, "no rows resident in the cold tier");
+    let tc = ps.tier_counters();
+    assert!(tc.demotions > 0, "no demotions — hot tier never overflowed");
+    assert!(tc.promotions > 0, "no promotions — cold rows never came back");
+    assert!(tc.cold_hits > 0, "no cold hits recorded");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trainer_store_config_builds_the_tiered_ps() {
+    // Same parity claim through the `Trainer::store` field (the
+    // `--cold-dir`/`--hot-capacity` CLI path) instead of an explicit
+    // backend: the trainer constructs the tiered in-process PS itself.
+    let seed = 23;
+    let hot = trainer(seed).run_rust().unwrap();
+
+    let dir = tmp_dir("storecfg");
+    let mut t = trainer(seed);
+    t.store = StoreConfig::Tiered {
+        hot_capacity: 64,
+        cold_dir: dir.clone(),
+        admit_threshold: 2,
+    };
+    let tiered = t.run_rust().unwrap();
+    assert_eq!(hot.tracker.losses, tiered.tracker.losses);
+    assert_eq!(hot.final_params, tiered.final_params);
+
+    // The run really went through the cold files: one per (node, shard),
+    // each grown past its 24-byte header by demoted rows.
+    let mut cold_files = 0;
+    for node in 0..2 {
+        for shard in 0..2 {
+            let path = dir.join(format!("cold_node{node}_shard{shard}.bin"));
+            assert!(path.exists(), "missing cold file {}", path.display());
+            assert!(
+                std::fs::metadata(&path).unwrap().len() > 24,
+                "cold file {} never received a row",
+                path.display()
+            );
+            cold_files += 1;
+        }
+    }
+    assert_eq!(cold_files, 4);
+    std::fs::remove_dir_all(&dir).ok();
+}

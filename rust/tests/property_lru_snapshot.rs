@@ -100,6 +100,44 @@ fn bit_flipped_snapshots_never_panic() {
 }
 
 #[test]
+fn header_region_corruption_never_panics() {
+    // Target the 40-byte header specifically (magic, capacity, row_width,
+    // head, tail): these are the fields `from_bytes` derives every
+    // allocation size and slot index from, so an unchecked read here was
+    // the original panic vector. Bit-flips and whole-field rewrites with
+    // adversarial values must both come back as a clean `Err` (or, for a
+    // no-op rewrite, the original store).
+    forall(
+        75,
+        300,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let lru = build_store(&mut rng);
+            let mut bytes = lru.to_bytes();
+            if rng.below(2) == 0 {
+                // Single bit flip somewhere in the header.
+                let at = rng.below(40) as usize;
+                bytes[at] ^= 1 << rng.below(8);
+            } else {
+                // Rewrite one whole u64 header field with a hostile value:
+                // 0, capacity, huge, NIL-adjacent, or overflow-inducing.
+                let field = 8 + 8 * rng.below(4) as usize; // 8, 16, 24, 32
+                let v = match rng.below(5) {
+                    0 => 0u64,
+                    1 => lru.capacity() as u64,
+                    2 => u64::MAX,
+                    3 => (u32::MAX as u64) - 1,
+                    _ => u64::MAX / 8,
+                };
+                bytes[field..field + 8].copy_from_slice(&v.to_le_bytes());
+            }
+            usable_or_err(&bytes)
+        },
+    )
+}
+
+#[test]
 fn truncated_snapshots_error_cleanly() {
     // Every strict prefix of a valid snapshot is rejected (the total length
     // can only match the header's own accounting).

@@ -141,7 +141,7 @@ fn manifest_roundtrip_is_exact() {
 
 #[test]
 fn shard_manifest_codec_is_total() {
-    let valid = encode_shard_manifest(24, &(1..3));
+    let valid = encode_shard_manifest(24, &(1..3), true);
     forall(
         19,
         300,
@@ -164,7 +164,7 @@ fn shard_manifest_codec_is_total() {
                 // practically impossible but allowed) a sane range.
                 match decode_shard_manifest(bytes) {
                     Err(_) => true,
-                    Ok((_, range)) => range.start < range.end,
+                    Ok((_, range, _)) => range.start < range.end,
                 }
             }
         },
@@ -239,7 +239,7 @@ fn shard_restore_never_mixes_epochs() {
 
     // Epoch 4: fully committed.
     ps.put_grads(&keys, &vec![0.5; 96]);
-    let state_at_4: Vec<Vec<u8>> = (0..2).map(|n| ps.snapshot_node(n)).collect();
+    let state_at_4: Vec<Vec<Vec<u8>>> = (0..2).map(|n| ps.snapshot_node(n).unwrap()).collect();
     mgr.prepare_epoch(&ps, 4).unwrap();
     mgr.commit_epoch(&ps, 4).unwrap();
 
@@ -250,11 +250,11 @@ fn shard_restore_never_mixes_epochs() {
     // The staged epoch is invisible; restore lands on 4 exactly.
     assert_eq!(mgr.latest_committed_epoch(&(0..2)), Some(4));
     assert!(mgr.restore_epoch(&ps, 8).is_err(), "uncommitted epoch restored");
-    ps.wipe_node(0);
-    ps.wipe_node(1);
+    ps.wipe_node(0).unwrap();
+    ps.wipe_node(1).unwrap();
     mgr.restore_epoch(&ps, 4).unwrap();
     for n in 0..2 {
-        assert_eq!(ps.snapshot_node(n), state_at_4[n], "node {n} not at epoch 4");
+        assert_eq!(ps.snapshot_node(n).unwrap(), state_at_4[n], "node {n} not at epoch 4");
     }
 
     // Now commit 8, then corrupt ITS shard manifest: 8 un-commits, 4 stays.
