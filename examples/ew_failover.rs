@@ -1,0 +1,334 @@
+//! Elastic embedding-worker failover (ISSUE 8), every role its own OS
+//! process on loopback: 2 `persia serve-ps` shards × 2
+//! `persia serve-embedding-worker` processes × 2 `persia train-worker` NN
+//! ranks with `--ew-failover true`. Mid-run, the worker serving rank 1 is
+//! SIGKILLed: the survivor adopts rank 1 (ADOPT_RANK fast-forwards its
+//! deterministic loader stream, the in-flight gradient push is re-drawn
+//! and re-pushed), both ranks complete, and the final loss/AUC match the
+//! unkilled in-process threaded run within 1e-6.
+//!
+//! ```bash
+//! cargo build --release            # builds the `persia` binary it spawns
+//! cargo run --release --example ew_failover
+//! ```
+//!
+//! Both ranks are SIGSTOPped around the SIGKILL so the kill provably lands
+//! mid-run — a loopback run this small could otherwise finish first.
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: &str = "2048";
+const SEED: &str = "42";
+const STEPS: usize = 40;
+const BATCH: usize = 32;
+
+/// The `persia` binary next to this example's executable
+/// (`target/<profile>/examples/ew_failover` → `target/<profile>/persia`).
+fn persia_bin() -> Result<PathBuf> {
+    let exe = std::env::current_exe().context("current_exe")?;
+    let dir = exe
+        .parent()
+        .and_then(|p| p.parent())
+        .context("example executable has no target dir")?;
+    let bin = dir.join(format!("persia{}", std::env::consts::EXE_SUFFIX));
+    anyhow::ensure!(
+        bin.exists(),
+        "persia binary not found at {} — run `cargo build --release` first",
+        bin.display()
+    );
+    Ok(bin)
+}
+
+/// A child with stdout AND stderr streamed to our stdout (prefixed) while
+/// scanning for marker lines — stderr matters here because the failover
+/// notices (`ew-failover: ...`) are printed there. Killed on drop.
+struct Proc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Proc {
+    /// Spawn and return a channel yielding every output line as it arrives.
+    fn spawn(
+        tag: &'static str,
+        args: &[String],
+    ) -> Result<(Proc, std::sync::mpsc::Receiver<String>)> {
+        let mut child = Command::new(persia_bin()?)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning {tag}"))?;
+        let stdout = child.stdout.take().context("stdout piped")?;
+        let stderr = child.stderr.take().context("stderr piped")?;
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel();
+        let mut readers = Vec::new();
+        for reader in [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)] {
+            let lines = lines.clone();
+            let tx = tx.clone();
+            readers.push(std::thread::spawn(move || {
+                for line in std::io::BufReader::new(reader).lines() {
+                    let Ok(line) = line else { break };
+                    println!("[{tag}] {line}");
+                    lines.lock().unwrap().push(line.clone());
+                    let _ = tx.send(line);
+                }
+            }));
+        }
+        Ok((Proc { child, lines, readers }, rx))
+    }
+
+    fn wait_success(&mut self, tag: &str) -> Result<Vec<String>> {
+        let status = self.child.wait().with_context(|| format!("waiting for {tag}"))?;
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        let lines = self.lines.lock().unwrap().clone();
+        anyhow::ensure!(status.success(), "{tag} failed with {status}");
+        Ok(lines)
+    }
+
+    /// Send a signal name (`-STOP` / `-CONT`) to the child.
+    fn signal(&self, sig: &str) -> Result<()> {
+        let ok = Command::new("kill")
+            .args([sig, &self.child.id().to_string()])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        anyhow::ensure!(ok, "kill {sig} {} failed", self.child.id());
+        Ok(())
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Wait (bounded) for the first line containing `pat`; returns the suffix
+/// after `pat`'s first whitespace-delimited token.
+fn await_addr(rx: &std::sync::mpsc::Receiver<String>, pat: &str, what: &str) -> Result<String> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        anyhow::ensure!(!remaining.is_zero(), "timed out waiting for {what}");
+        match rx.recv_timeout(remaining) {
+            Ok(line) if line.contains(pat) => {
+                return line
+                    .split(pat)
+                    .nth(1)
+                    .and_then(|r| r.split_whitespace().next())
+                    .map(|s| s.to_string())
+                    .with_context(|| format!("no address in {what} line"));
+            }
+            Ok(_) => continue,
+            Err(_) => anyhow::bail!("stream ended before {what}"),
+        }
+    }
+}
+
+/// The train-loop flags every process of the deployment shares verbatim.
+fn shared_flags() -> Vec<String> {
+    [
+        "--preset", PRESET, "--dense", DENSE, "--engine", "rust", "--mode", "sync",
+        "--deterministic", "true", "--shard-capacity", CAPACITY, "--seed", SEED, "--lr",
+        "0.05", "--tau", "4", "--emb-workers", "2", "--netsim", "false", "--compress",
+        "false",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--batch".to_string(),
+        BATCH.to_string(),
+        "--steps".to_string(),
+        STEPS.to_string(),
+        "--eval-every".to_string(),
+        STEPS.to_string(),
+    ])
+    .collect()
+}
+
+fn serve_ps_args(node_range: &str) -> Vec<String> {
+    let mut args = vec!["serve-ps".to_string()];
+    args.extend(shared_flags());
+    args.extend([
+        "--addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--node-range".to_string(),
+        node_range.to_string(),
+    ]);
+    args
+}
+
+fn serve_ew_args(ew_rank: usize, remote_ps: &str) -> Vec<String> {
+    let mut args = vec!["serve-embedding-worker".to_string()];
+    args.extend(shared_flags());
+    args.extend([
+        "--addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--ew-rank".to_string(),
+        ew_rank.to_string(),
+        "--world".to_string(),
+        "2".to_string(),
+        "--remote-ps".to_string(),
+        remote_ps.to_string(),
+    ]);
+    args
+}
+
+fn worker_args(rank: usize, rendezvous: &str, embedding_workers: &str) -> Vec<String> {
+    let mut args = vec![
+        "train-worker".to_string(),
+        "--rank".to_string(),
+        rank.to_string(),
+        "--world".to_string(),
+        "2".to_string(),
+        "--rendezvous".to_string(),
+        rendezvous.to_string(),
+        // Headroom above the failover stall (--ew-retries × --ew-retry-ms
+        // of redials + the adoption fast-forward) rank 1 rides out while
+        // rank 0 waits at the AllReduce barrier.
+        "--ring-timeout-ms".to_string(),
+        "15000".to_string(),
+    ];
+    args.extend(shared_flags());
+    args.extend([
+        "--embedding-workers".to_string(),
+        embedding_workers.to_string(),
+        "--ew-failover".to_string(),
+        "true".to_string(),
+    ]);
+    args
+}
+
+/// The threaded single-process reference with the exact same preset knobs.
+fn threaded_reference() -> Result<(f32, f64)> {
+    let preset = BenchPreset::by_name(PRESET).context("preset")?;
+    let model = preset.model(DENSE);
+    let emb_cfg = preset.embedding(&model, CAPACITY.parse()?);
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster =
+        ClusterConfig { n_nn_workers: 2, n_emb_workers: 2, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: BATCH,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps: STEPS,
+        eval_every: STEPS,
+        seed: SEED.parse()?,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED.parse()?);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    let out = t.run_rust()?;
+    Ok((out.report.final_loss, out.report.final_auc.context("reference AUC")?))
+}
+
+fn main() -> Result<()> {
+    // 1. Two PS shard processes, each owning half the PS nodes.
+    let (ps0, ps0_rx) = Proc::spawn("ps0", &serve_ps_args("0..2"))?;
+    let (ps1, ps1_rx) = Proc::spawn("ps1", &serve_ps_args("2..4"))?;
+    let addr0 = await_addr(&ps0_rx, "listening on ", "ps0 address")?;
+    let addr1 = await_addr(&ps1_rx, "listening on ", "ps1 address")?;
+    let remote_ps = format!("{addr0},{addr1}");
+    println!("== tier 1 up: 2 PS shard processes at {remote_ps}");
+
+    // 2. TWO embedding workers: rank r is served by worker r % 2 until the
+    //    tier reassigns.
+    let (ew0, ew0_rx) = Proc::spawn("ew0", &serve_ew_args(0, &remote_ps))?;
+    let (mut ew1, ew1_rx) = Proc::spawn("ew1", &serve_ew_args(1, &remote_ps))?;
+    let ew0_addr = await_addr(&ew0_rx, "embedding worker listening on ", "ew0")?;
+    let ew1_addr = await_addr(&ew1_rx, "embedding worker listening on ", "ew1")?;
+    let ew_list = format!("{ew0_addr},{ew1_addr}");
+    println!("== tier 2 up: embedding workers at {ew_list}");
+
+    // 3. Two NN-worker ranks with --ew-failover true; rank 0 hosts the
+    //    ring rendezvous.
+    let (mut w0, w0_rx) = Proc::spawn("rank0", &worker_args(0, "127.0.0.1:0", &ew_list))?;
+    let rendezvous = await_addr(&w0_rx, "rendezvous listening on ", "rendezvous address")?;
+    let (mut w1, _w1_rx) = Proc::spawn("rank1", &worker_args(1, &rendezvous, &ew_list))?;
+    await_addr(&w0_rx, "ring connected: rank ", "ring formation")?;
+    println!("== tier 3 up: 2 train-worker ranks, elastic failover on");
+
+    // 4. Freeze both ranks so the SIGKILL provably lands mid-run, kill the
+    //    worker serving rank 1, resume.
+    w0.signal("-STOP")?;
+    w1.signal("-STOP")?;
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let _ = ew1.child.kill();
+    let _ = ew1.child.wait();
+    println!("== SIGKILLed ew1 ({ew1_addr}) — rank 1's batches must fail over to ew0");
+    w0.signal("-CONT")?;
+    w1.signal("-CONT")?;
+
+    // 5. Both ranks still finish; rank 1 reports the reassignment.
+    let w0_lines = w0.wait_success("rank 0")?;
+    let w1_lines = w1.wait_success("rank 1")?;
+    anyhow::ensure!(
+        w1_lines.iter().any(|l| l.contains("ew-failover")),
+        "rank 1 never reported a failover"
+    );
+    let parity = w0_lines
+        .iter()
+        .find(|l| l.starts_with("PARITY "))
+        .context("rank 0 printed no PARITY line")?;
+    let mut final_loss = f32::NAN;
+    let mut final_auc = f64::NAN;
+    for field in parity["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            final_loss = v.parse()?;
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            final_auc = v.parse()?;
+        }
+    }
+
+    // 6. Cross-check against the UNKILLED single-process threaded run: the
+    //    adopter re-drew the dead worker's streams, so nothing was lost.
+    let (ref_loss, ref_auc) = threaded_reference()?;
+    let loss_gap = (ref_loss - final_loss).abs();
+    let auc_gap = (ref_auc - final_auc).abs();
+    println!(
+        "== parity: loss {final_loss:.6} vs unkilled {ref_loss:.6} (gap {loss_gap:.2e}), \
+         AUC {final_auc:.6} vs {ref_auc:.6} (gap {auc_gap:.2e})"
+    );
+    anyhow::ensure!(loss_gap <= 1e-6, "loss diverged across the failover");
+    anyhow::ensure!(auc_gap <= 1e-6, "AUC diverged across the failover");
+
+    // 7. Teardown: the remaining tiers are killed by Drop.
+    drop(ps0_rx);
+    drop(ps1_rx);
+    drop(ew0_rx);
+    drop(ew1_rx);
+    drop(ew0);
+    drop(ew1);
+    drop(ps0);
+    drop(ps1);
+    println!(
+        "== elastic failover OK: one of two embedding workers SIGKILLed mid-run, \
+         survivor adopted its rank, parity ≤ 1e-6"
+    );
+    Ok(())
+}

@@ -19,7 +19,7 @@ use persia::fault::{DenseBackup, PsBackup};
 use persia::metrics::auc;
 use persia::runtime::DenseEngine;
 use persia::util::Rng;
-use persia::worker::EmbeddingWorker;
+use persia::worker::{elastic_assign, EmbeddingWorker};
 
 fn main() -> anyhow::Result<()> {
     let preset = BenchPreset::by_name("taobao").unwrap();
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let emb_cfg = preset.embedding(&model, 65536);
     let ps = Arc::new(EmbeddingPs::new(&emb_cfg, model.emb_dim_per_group, 9));
     let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
-    let ew = Arc::new(EmbeddingWorker::new(0, ps.clone(), &model, net, true));
+    let ew = Arc::new(EmbeddingWorker::new(0, ps.clone(), &model, net.clone(), true));
     let ds = SyntheticDataset::new(&model, emb_cfg.rows_per_group, preset.zipf_exponent, 9);
 
     let mut rng_model = Rng::new(1);
@@ -87,12 +87,28 @@ fn main() -> anyhow::Result<()> {
         eval(&params, &engine, &ew)
     );
 
-    println!("\n== fault C: embedding worker crash (buffer abandoned, no recovery) ==");
+    println!("\n== fault C: embedding worker crash (ranks reassigned to a survivor) ==");
+    // A second worker over the SAME PS: embedding workers are
+    // parameter-stateless, so a survivor can adopt a dead worker's ranks
+    // and lose nothing — it re-registers the in-flight batch (the loader
+    // streams are deterministic, so the re-draw is identical) and the
+    // gradients land as if the crash never happened. This is the in-process
+    // shape of `train --ew-failover` (see examples/ew_failover.rs for the
+    // real three-tier drill).
+    let survivor = Arc::new(EmbeddingWorker::new(1, ps.clone(), &model, net.clone(), true));
     let b = ds.batch(&mut rng, 64);
-    let sids = ew.register(b.ids);
-    println!("  {} samples in flight", ew.buffered());
+    let sids = ew.register(b.ids.clone());
+    let (emb, _) = ew.pull(&sids).unwrap();
+    let out = engine.train_step(&mut params, &emb, &b.nid, &b.labels).unwrap();
+    opt.step(&mut params, &out.grad_flat);
+    println!("  {} samples in flight on the dying worker", ew.buffered());
     ew.abandon_buffer();
-    println!("  buffer abandoned; pulling those samples now fails: {}", ew.pull(&sids).is_err());
+    println!("  buffer abandoned; pulling those samples there fails: {}", ew.pull(&sids).is_err());
+    let adopter = elastic_assign(0, 2, &[true, false]).expect("a survivor exists");
+    println!("  elastic_assign moves rank 0 to surviving worker {adopter}");
+    let sids2 = survivor.register(b.ids);
+    survivor.push_grads(&sids2, &out.grad_emb).unwrap();
+    println!("  batch re-registered on the adopter; gradient update NOT lost");
 
     println!("\n== fault D: NN worker crash (all replicas reload dense checkpoint) ==");
     let (ckpt_step, ckpt_params) = dense_backup.load().unwrap();

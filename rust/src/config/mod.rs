@@ -7,7 +7,7 @@ pub mod types;
 
 pub use parse::IniDoc;
 pub use presets::{BenchPreset, PRESET_NAMES};
-pub use service::{EmbWorkerConfig, RecoveryConfig, RingConfig, ServiceConfig};
+pub use service::{EmbWorkerConfig, EwFailoverConfig, RecoveryConfig, RingConfig, ServiceConfig};
 pub use types::{
     ClusterConfig, EmbeddingConfig, ModelConfig, NetModelConfig, OptimizerKind, PartitionPolicy,
     Pooling, TrainConfig, TrainMode,

@@ -41,14 +41,20 @@ pub struct RecoveryConfig {
     /// last committed checkpoint epoch, and replay it into a shard that
     /// comes back restored from that epoch (detected via the INFO boot
     /// nonce). Off by default: the log costs memory proportional to the
-    /// checkpoint cadence, and exact-replay semantics assume a single
-    /// process owns all puts to the PS (an embedding-worker process, or a
-    /// one-rank trainer). See `recovery::PutReplayLog`.
+    /// checkpoint cadence. Entries are scoped by `replay_owner` and the PS
+    /// boot nonce, so a multi-owner replay (a dead embedding worker's delta
+    /// adopted by a survivor) stays exact instead of silently assuming one
+    /// process owns all puts. See `recovery::PutReplayLog`.
     pub replay_puts: bool,
     /// Maximum put batches retained in the replay log. When the cap is
     /// exceeded the oldest entries are dropped and a later replay is
     /// best-effort (it warns about the lost prefix instead of failing).
     pub replay_cap: usize,
+    /// Identity stamped on this process's replay-log entries (`--ew-rank`
+    /// for an embedding worker, the NN rank for a direct-`--remote-ps`
+    /// trainer). Purely a tag for multi-owner replay bookkeeping — it never
+    /// affects what gets replayed, only how hand-offs are attributed.
+    pub replay_owner: u64,
 }
 
 impl Default for RecoveryConfig {
@@ -59,6 +65,7 @@ impl Default for RecoveryConfig {
             io_timeout_ms: 30_000,
             replay_puts: false,
             replay_cap: 4096,
+            replay_owner: 0,
         }
     }
 }
@@ -218,6 +225,42 @@ impl EmbWorkerConfig {
         }
         if self.replay_depth == 0 {
             bail!("--replay-depth must be >= 1 (1 = the PR-4 one-deep cache)");
+        }
+        Ok(())
+    }
+}
+
+/// Elastic-membership policy of a trainer's remote embedding tier
+/// (`--ew-failover` and friends): what happens when one
+/// `serve-embedding-worker` process stops answering within its retry
+/// budget, and whether a restarted process may take its ranks back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EwFailoverConfig {
+    /// Reassign a dead worker's NN ranks to survivors (`--ew-failover`).
+    /// Off by default: the pre-PR-8 behavior — an exhausted retry budget
+    /// against any embedding worker is fatal — is preserved bit-for-bit.
+    pub enabled: bool,
+    /// Probe dead workers' addresses in the background and, when a
+    /// restarted process comes back with a matching deployment, return its
+    /// home ranks to it at the next step boundary (`--ew-rejoin`, on by
+    /// default when failover is enabled).
+    pub rejoin: bool,
+    /// Minimum milliseconds between rejoin probes of dead addresses
+    /// (`--ew-rejoin-ms`). Keeps the probe off the training hot path.
+    pub rejoin_ms: u64,
+}
+
+impl Default for EwFailoverConfig {
+    fn default() -> Self {
+        Self { enabled: false, rejoin: true, rejoin_ms: 500 }
+    }
+}
+
+impl EwFailoverConfig {
+    /// Error on a configuration that cannot work.
+    pub fn validate(&self) -> Result<()> {
+        if self.rejoin && self.rejoin_ms == 0 {
+            bail!("--ew-rejoin-ms must be >= 1 when rejoin is on");
         }
         Ok(())
     }
@@ -407,6 +450,19 @@ mod tests {
             ..ServiceConfig::default()
         };
         assert!(svc.validate().is_err());
+    }
+
+    #[test]
+    fn ew_failover_config_validation() {
+        let def = EwFailoverConfig::default();
+        assert!(!def.enabled, "failover must be opt-in");
+        def.validate().unwrap();
+        EwFailoverConfig { enabled: true, ..Default::default() }.validate().unwrap();
+        // Rejoin with no probe interval cannot work.
+        let bad = EwFailoverConfig { enabled: true, rejoin: true, rejoin_ms: 0 };
+        assert!(bad.validate().is_err());
+        // ...but rejoin off tolerates any interval.
+        EwFailoverConfig { enabled: true, rejoin: false, rejoin_ms: 0 }.validate().unwrap();
     }
 
     #[test]

@@ -14,9 +14,15 @@
 //! * **embedding PS** — process-level failure re-attaches the shared-memory
 //!   LRU (modeled as an in-RAM snapshot) or reloads the periodic checkpoint;
 //!   a few lost `put`s are tolerated.
-//! * **embedding worker** — buffer abandoned, no recovery; the affected
-//!   in-flight samples are dropped (their gradient updates are lost, which
-//!   Theorem 1's bounded-staleness analysis tolerates).
+//! * **embedding worker** — *reassignment*: workers are parameter-stateless
+//!   (the parameters live in the PS; the loader streams are deterministic),
+//!   so a dead worker's NN ranks move to a survivor chosen by
+//!   [`crate::worker::elastic_assign`], which re-registers the in-flight
+//!   samples by re-drawing the identical batches — no update is lost. The
+//!   cross-process version is the trainer's `--ew-failover` elastic tier
+//!   ([`crate::service::RemoteEmbTier`]); a worker that abandons its buffer
+//!   without an adopter only loses the in-flight updates, which Theorem 1's
+//!   bounded-staleness analysis tolerates.
 //! * **NN worker** — any drop of dense synchronization is fatal for
 //!   convergence, so all replicas reload the latest dense checkpoint.
 
@@ -32,7 +38,10 @@ pub struct FaultPlan {
     /// If true the PS failure also loses shared memory (forces checkpoint
     /// restore instead of shared-memory re-attach).
     pub lose_shared_memory: bool,
-    /// (step, worker idx) — embedding worker failure (buffer abandoned).
+    /// (step, worker idx) — embedding worker failure. The dead worker's
+    /// ranks are reassigned to a survivor, which re-draws the in-flight
+    /// batches from its deterministic streams (elastic membership); with no
+    /// survivor the buffer is abandoned and those updates are lost.
     pub kill_emb_worker: Option<(usize, usize)>,
     /// step — NN worker failure (dense params reload from checkpoint).
     pub kill_nn_worker: Option<usize>,
@@ -180,6 +189,61 @@ mod tests {
         let ps = ps();
         let backup = PsBackup::new(2);
         assert!(backup.recover(&ps, 0, true).is_err());
+    }
+
+    #[test]
+    fn dead_workers_ranks_are_adopted_without_losing_updates() {
+        use crate::comm::NetSim;
+        use crate::config::{ModelConfig, NetModelConfig, Pooling};
+        use crate::data::SyntheticDataset;
+        use crate::worker::{elastic_assign, EmbeddingWorker};
+
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let dataset = SyntheticDataset::new(&model, 200, 1.05, 7);
+        let mut rng = dataset.train_rng(0);
+        let batch = dataset.batch(&mut rng, 8);
+        let grads = vec![0.5f32; 8 * model.emb_dim()];
+
+        // Reference: one healthy worker registers the batch and applies its
+        // gradients.
+        let ps_ref = Arc::new(ps());
+        let healthy =
+            EmbeddingWorker::new(0, ps_ref.clone(), &model, net.clone(), false);
+        let sids = healthy.register(batch.ids.clone());
+        healthy.pull(&sids).unwrap();
+        healthy.push_grads(&sids, &grads).unwrap();
+        let (want, _) = healthy.lookup_direct(&batch).unwrap();
+
+        // Elastic run: two workers share one PS (same cfg + seed as the
+        // reference, so initialization matches). Worker 0 registers the
+        // batch and dies before its gradients land.
+        let ps_shared = Arc::new(ps());
+        let w0 = EmbeddingWorker::new(0, ps_shared.clone(), &model, net.clone(), false);
+        let w1 = EmbeddingWorker::new(1, ps_shared.clone(), &model, net, false);
+        let sids0 = w0.register(batch.ids.clone());
+        w0.pull(&sids0).unwrap();
+        w0.abandon_buffer();
+        assert_eq!(w0.buffered(), 0, "the dead worker's buffer is gone");
+
+        // Reassignment: the survivor adopts rank 0's stream. Workers are
+        // parameter-stateless, so re-registering the same (deterministic)
+        // batch and re-pushing the held gradients loses nothing.
+        let adopter = elastic_assign(0, 2, &[true, false]).unwrap();
+        assert_eq!(adopter, 1, "linear probing past dead worker 0 lands on 1");
+        let sids1 = w1.register(batch.ids.clone());
+        w1.push_grads(&sids1, &grads).unwrap();
+
+        let (got, _) = w1.lookup_direct(&batch).unwrap();
+        assert_eq!(got, want, "adoption must reproduce the unkilled run exactly");
     }
 
     #[test]

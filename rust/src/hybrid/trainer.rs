@@ -855,8 +855,11 @@ impl Trainer {
         let prefetch = |step: usize| -> Result<Prefetched> {
             let ew_idx = tier.assign(rank, step);
             let staleness = inflight[ew_idx].load(Ordering::Relaxed).max(0) as u64;
+            // `pb.ew` may differ from `ew_idx` under --ew-failover: an
+            // elastic tier can reroute the rank mid-call when its assigned
+            // worker dies, and the batch reports the worker that actually
+            // served it — which is where the gradients must go back to.
             let pb = tier.next_batch(rank, step)?;
-            debug_assert_eq!(pb.ew, ew_idx, "tier served a batch from an unassigned worker");
             Ok(Prefetched {
                 ew: pb.ew,
                 sids: pb.sids,

@@ -30,8 +30,8 @@ use anyhow::{Context, Result};
 
 use persia::allreduce::RingRendezvous;
 use persia::config::{
-    BenchPreset, ClusterConfig, EmbWorkerConfig, NetModelConfig, RecoveryConfig, RingConfig,
-    ServiceConfig, TrainConfig, TrainMode,
+    BenchPreset, ClusterConfig, EmbWorkerConfig, EwFailoverConfig, NetModelConfig,
+    RecoveryConfig, RingConfig, ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
@@ -183,6 +183,8 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
                 io_timeout_ms: flag(flags, "io-timeout-ms", "30000").parse()?,
                 replay_puts: flag(flags, "ps-replay", "false") == "true",
                 replay_cap: flag(flags, "ps-replay-cap", "4096").parse()?,
+                // NN ranks put directly, so the ring rank is the put owner.
+                replay_owner: flag(flags, "rank", "0").parse()?,
             },
         };
         // One client regardless of shard count: a single full-range
@@ -222,6 +224,11 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
             },
         };
         svc.validate()?;
+        let failover = EwFailoverConfig {
+            enabled: flag(flags, "ew-failover", "false") == "true",
+            rejoin: flag(flags, "ew-rejoin", "true") == "true",
+            rejoin_ms: flag(flags, "ew-rejoin-ms", "500").parse()?,
+        };
         // The tier IS the embedding-worker cluster: its process count
         // replaces --emb-workers (and rides in the fingerprint, so every
         // process must agree on it).
@@ -233,12 +240,14 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
             batch_size: trainer.train.batch_size,
         };
         let net = Arc::new(NetSim::new(trainer.cluster.net));
-        let tier = RemoteEmbTier::connect(&svc, expect, trainer.train.compress, net)
-            .with_context(|| format!("connecting to embedding worker(s) at {addrs}"))?;
+        let tier =
+            RemoteEmbTier::connect_elastic(&svc, expect, trainer.train.compress, net, failover)
+                .with_context(|| format!("connecting to embedding worker(s) at {addrs}"))?;
         println!(
-            "embedding-worker tier: {} process(es), pipeline depth {}",
+            "embedding-worker tier: {} process(es), pipeline depth {}{}",
             tier.n_processes(),
-            tier.pipeline_depth()
+            tier.pipeline_depth(),
+            if failover.enabled { ", elastic failover on" } else { "" }
         );
         trainer.emb_comm = Some(Arc::new(tier));
     }
@@ -482,6 +491,14 @@ fn cmd_serve_embedding_worker(flags: HashMap<String, String>) -> Result<()> {
     let mut flags = flags;
     if let Some(world) = flags.get("world").cloned() {
         flags.insert("nn-workers".to_string(), world);
+    }
+    // This process's gradient puts are owned by its EW rank: the trainer
+    // builder stamps --rank into the PS put-replay log's owner tag, and on
+    // this tier the embedding worker (not an NN rank) is the putter.
+    if !flags.contains_key("rank") {
+        if let Some(ew_rank) = flags.get("ew-rank").cloned() {
+            flags.insert("rank".to_string(), ew_rank);
+        }
     }
     let trainer = build_trainer(&flags)?;
     let ew_cfg = EmbWorkerConfig {
@@ -743,7 +760,10 @@ fn usage() -> ! {
          --nn-workers/--world = NN world size) — then \
          persia train --embedding-workers addr1[,addr2,...] [--ew-conns N] [--ew-retries N] \
          [--ew-retry-ms MS] [--inflight-window N] [--io-timeout-ms MS] (NN ranks are \
-         assigned round-robin, rank mod M)\n\
+         assigned round-robin, rank mod M); --ew-failover true makes the tier elastic — \
+         a dead worker's ranks are adopted by survivors (linear probing from rank mod M) \
+         and a restarted worker takes them back ([--ew-rejoin true] [--ew-rejoin-ms MS] \
+         throttle the rejoin probe)\n\
          multi-process NN workers: persia train-worker --rank R --world N \
          [--rendezvous 127.0.0.1:7800] [--listen-host HOST] [--ring-timeout-ms MS] \
          [--ring-compress true] --remote-ps|--embedding-workers addr1[,addr2,...] — one \

@@ -39,6 +39,6 @@ pub use coordinator::{
     atomic_write, epoch_dir, latest_epoch, load_manifest, parse_epoch_dir_name, run_epoch,
     EpochConfig, GlobalManifest,
 };
-pub use pool::{PoolAsyncCall, PooledConn, ReconnectPool, Redial};
-pub use replay::{PutReplayLog, ReplayRing};
+pub use pool::{PoolAsyncCall, PooledConn, ReconnectPool, Redial, Unreachable};
+pub use replay::{LogEntry, PutReplayLog, ReplayRing};
 pub use retry::{dial_retry, remaining, RetryPolicy};

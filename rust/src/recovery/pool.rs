@@ -38,6 +38,36 @@ use super::retry::RetryPolicy;
 /// its slot (clones share the connection, window, and completion map).
 pub type PooledConn = PipelinedClient;
 
+/// The terminal error of [`ReconnectPool::call`]: every attempt of the
+/// retry budget failed, so the endpoint is considered *down*, not flaky.
+/// Callers that react to dead endpoints (e.g. the embedding tier's rank
+/// failover) detect it with [`Unreachable::in_chain`] — this struct is the
+/// single source of the message, so detection and rendering cannot drift
+/// apart.
+#[derive(Clone, Debug)]
+pub struct Unreachable {
+    /// [`Redial::describe`] of the endpoint that stayed down.
+    pub what: String,
+    /// Reconnect attempts that were exhausted.
+    pub attempts: u32,
+}
+
+impl Unreachable {
+    /// Whether `err` carries a pool's exhausted-retries terminal context at
+    /// any chain layer (the layer is rendered by [`Unreachable`]'s
+    /// `Display`, so the patterns here match by construction).
+    pub fn in_chain(err: &anyhow::Error) -> bool {
+        err.chain()
+            .any(|layer| layer.contains(" unreachable after ") && layer.contains("reconnect attempt"))
+    }
+}
+
+impl std::fmt::Display for Unreachable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} unreachable after {} reconnect attempt(s)", self.what, self.attempts)
+    }
+}
+
 /// Dial + handshake policy of one pooled endpoint.
 ///
 /// `redial` is called both to fill the pool initially and to replace every
@@ -147,12 +177,9 @@ impl<R: Redial> ReconnectPool<R> {
                 }
             }
         }
-        Err(last_err.expect("at least one attempt ran")).with_context(|| {
-            format!(
-                "{} unreachable after {} reconnect attempt(s)",
-                self.redial.describe(),
-                self.policy.attempts
-            )
+        Err(last_err.expect("at least one attempt ran")).context(Unreachable {
+            what: self.redial.describe(),
+            attempts: self.policy.attempts,
         })
     }
 
@@ -385,6 +412,34 @@ mod tests {
         let redial = EchoRedial { addr: "127.0.0.1:1".into(), handshakes: AtomicU32::new(0) };
         let err = ReconnectPool::connect(redial, 1, RetryPolicy::new(0, 0)).unwrap_err();
         assert!(format!("{err:#}").contains("echo at"), "{err:#}");
+    }
+
+    #[test]
+    fn exhausted_retries_yield_a_typed_unreachable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(listener); // refuse all redials: the endpoint is now down
+            let mut rpc = RpcServer::new();
+            rpc.register(KIND, Box::new(|msg| Ok(msg.to_vec())));
+            let _ = rpc.serve(&TcpTransport::new(stream));
+        });
+        let pool = ReconnectPool::connect(
+            EchoRedial { addr, handshakes: AtomicU32::new(0) },
+            1,
+            RetryPolicy::new(1, 1),
+        )
+        .unwrap();
+        pool.call(&msg(1)).unwrap();
+        // Kill the pooled connection so the next call must redial into the
+        // closed listener and exhaust its budget.
+        *pool.clients[0].lock().unwrap() = None;
+        let err = pool.call(&msg(2)).unwrap_err();
+        assert!(Unreachable::in_chain(&err), "{err:#}");
+        assert!(format!("{err:#}").contains("unreachable after"), "{err:#}");
+        // Ordinary errors are not misclassified.
+        assert!(!Unreachable::in_chain(&anyhow::anyhow!("connection reset by peer")));
     }
 
     #[test]

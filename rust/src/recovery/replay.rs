@@ -24,24 +24,53 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+/// One recorded gradient-put batch, tagged with who applied it and against
+/// which server boot. The tags exist for *multi-owner* replay: when an
+/// embedding worker dies and a survivor adopts its ranks, the dead worker's
+/// retained delta can be handed to the adopter
+/// ([`PutReplayLog::export_entries`] / [`PutReplayLog::adopt_entries`])
+/// without forgetting whose completion order each entry belongs to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogEntry {
+    /// Identity of the process that applied this put (`--ew-rank` for an
+    /// embedding worker, the NN rank for a direct-`--remote-ps` trainer).
+    pub owner: u64,
+    /// Boot nonce of the PS instance the put was applied to.
+    pub boot: u64,
+    /// Packed row keys of the batch.
+    pub keys: Vec<u64>,
+    /// Gradient rows, `keys.len() * dim` floats.
+    pub grads: Vec<f32>,
+}
+
 /// Per-shard log of applied gradient-put batches since the last committed
 /// checkpoint epoch (client side of the §4.2.4 exact-recovery path).
 ///
-/// Correct exact replay assumes a single process owns all puts to the shard
-/// — an embedding-worker process, or a one-rank trainer — because entries
-/// are recorded in *this client's* completion order. That is also the
-/// topology the paper's middle tier gives every shard.
+/// Exact replay needs the entries in *apply order*. Within one owner that
+/// order is this client's completion order, which the log records directly.
+/// Across owners (a dead embedding worker's delta adopted by a survivor)
+/// no total order existed in the first place — the owners were separate
+/// processes racing on the wire — so an adopted delta is appended after the
+/// adopter's own entries and each entry keeps its `(owner, boot)` tag: the
+/// replayed state is one of the interleavings that could have happened
+/// live, which is exactly as strong a guarantee as the original run gave.
+/// What is **not** supported is dropping an owner's delta on the floor: a
+/// replay that silently omits a dead owner's puts reconstructs a state no
+/// run ever produced, which is why the embedding tier refuses failover away
+/// from a worker that advertised an active replay log (its log died with
+/// the process and cannot be handed over).
 pub struct PutReplayLog {
     /// Maximum retained entries; 0 disables the log entirely (record and
     /// replay become no-ops).
     cap: usize,
+    /// Owner tag stamped on entries this process records.
+    owner: u64,
     inner: Mutex<LogInner>,
 }
 
 struct LogInner {
-    /// Applied put batches `(packed keys, gradient rows)` since the oldest
-    /// retained commit, in apply order.
-    entries: VecDeque<(Vec<u64>, Vec<f32>)>,
+    /// Applied put batches since the oldest retained commit, in apply order.
+    entries: VecDeque<LogEntry>,
     /// Absolute index of `entries[0]` in the all-time record sequence.
     base: u64,
     /// Committed checkpoint epochs as `(epoch step, absolute log index at
@@ -59,10 +88,17 @@ struct LogInner {
 }
 
 impl PutReplayLog {
-    /// A log retaining at most `cap` put batches.
+    /// A log retaining at most `cap` put batches, owned by process 0.
     pub fn new(cap: usize) -> Self {
+        Self::with_owner(cap, 0)
+    }
+
+    /// A log retaining at most `cap` put batches, stamping `owner` on every
+    /// entry it records (`RecoveryConfig::replay_owner`).
+    pub fn with_owner(cap: usize, owner: u64) -> Self {
         Self {
             cap,
+            owner,
             inner: Mutex::new(LogInner {
                 entries: VecDeque::new(),
                 base: 0,
@@ -98,10 +134,43 @@ impl PutReplayLog {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
-        inner.entries.push_back((keys.to_vec(), grads.to_vec()));
+        let boot = inner.synced_boot;
+        inner.entries.push_back(LogEntry {
+            owner: self.owner,
+            boot,
+            keys: keys.to_vec(),
+            grads: grads.to_vec(),
+        });
         while inner.entries.len() > self.cap {
             inner.entries.pop_front();
             inner.base += 1;
+        }
+    }
+
+    /// Snapshot every retained entry, tags included, for hand-off to an
+    /// adopting process's log. The entries stay in this log too — export is
+    /// a copy, not a drain — because the exporting side may still need them
+    /// for its own reconnect replay.
+    pub fn export_entries(&self) -> Vec<LogEntry> {
+        self.inner.lock().unwrap().entries.iter().cloned().collect()
+    }
+
+    /// Append another owner's exported delta to this log, preserving each
+    /// entry's original `(owner, boot)` tag. Appending counts against the
+    /// cap exactly like locally recorded entries; a later replay re-sends
+    /// adopted entries interleaved after this owner's own retained window
+    /// (see the type-level doc for why that ordering is sound).
+    pub fn adopt_entries(&self, entries: Vec<LogEntry>) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for e in entries {
+            inner.entries.push_back(e);
+            while inner.entries.len() > self.cap {
+                inner.entries.pop_front();
+                inner.base += 1;
+            }
         }
     }
 
@@ -217,8 +286,8 @@ impl PutReplayLog {
         let mut n = 0usize;
         while idx < inner.entries.len() {
             {
-                let (keys, grads) = &inner.entries[idx];
-                send(keys, grads)?;
+                let e = &inner.entries[idx];
+                send(&e.keys, &e.grads)?;
             }
             idx += 1;
             n += 1;
@@ -389,6 +458,60 @@ mod tests {
         // A *different* boot (the server died again, restored from the
         // epoch) starts over from the epoch position.
         assert_eq!(collect_replay(&log, 6, 0), vec![vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn entries_are_stamped_with_owner_and_boot() {
+        let log = PutReplayLog::with_owner(8, 3);
+        log.sync_boot(77);
+        log.record(&[1], &[0.5]);
+        let exported = log.export_entries();
+        assert_eq!(exported.len(), 1);
+        assert_eq!(exported[0].owner, 3);
+        assert_eq!(exported[0].boot, 77);
+        assert_eq!(exported[0].keys, vec![1]);
+        assert_eq!(exported[0].grads, vec![0.5]);
+    }
+
+    #[test]
+    fn adopted_delta_replays_after_own_entries_with_tags_preserved() {
+        // A dead owner-7 log hands its delta to a surviving owner-3 log.
+        let dead = PutReplayLog::with_owner(8, 7);
+        dead.sync_boot(50);
+        dead.record(&[10], &[0.0]);
+        dead.record(&[11], &[0.0]);
+
+        let survivor = PutReplayLog::with_owner(8, 3);
+        survivor.sync_boot(50);
+        survivor.record(&[1], &[0.0]);
+        survivor.adopt_entries(dead.export_entries());
+        assert_eq!(survivor.len(), 3);
+        // Tags survive adoption untouched.
+        let all = survivor.export_entries();
+        assert_eq!(all.iter().map(|e| e.owner).collect::<Vec<_>>(), vec![3, 7, 7]);
+        // A restarted shard gets BOTH owners' windows, own entries first.
+        assert_eq!(collect_replay(&survivor, 51, 0), vec![vec![1], vec![10], vec![11]]);
+    }
+
+    #[test]
+    fn adopted_entries_count_against_the_cap() {
+        let survivor = PutReplayLog::with_owner(2, 0);
+        survivor.record(&[1], &[0.0]);
+        let dead = PutReplayLog::with_owner(2, 1);
+        dead.record(&[2], &[0.0]);
+        dead.record(&[3], &[0.0]);
+        survivor.adopt_entries(dead.export_entries());
+        assert_eq!(survivor.len(), 2);
+        // Oldest (own entry 1) was evicted; replay is best-effort.
+        assert_eq!(collect_replay(&survivor, 9, 0), vec![vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn disabled_log_ignores_adoption() {
+        let log = PutReplayLog::disabled();
+        log.adopt_entries(vec![LogEntry { owner: 1, boot: 2, keys: vec![3], grads: vec![0.0] }]);
+        assert!(log.is_empty());
+        assert!(log.export_entries().is_empty());
     }
 
     #[test]

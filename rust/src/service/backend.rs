@@ -81,6 +81,16 @@ pub trait PsBackend: Send + Sync {
     /// Notify this backend that epoch `step` is globally committed, so any
     /// client-side put replay log can truncate. Default: nothing to mark.
     fn mark_epoch_committed(&self, _step: u64) {}
+
+    /// Whether this backend keeps a client-side gradient-put replay log
+    /// (`--ps-replay`). An embedding worker advertises this in its INFO
+    /// handshake: a trainer must refuse to fail over *away* from a worker
+    /// whose replay log died with it — the dead log's delta cannot be handed
+    /// to the adopter across processes, so a later shard replay would
+    /// silently drop those puts. Default: no log.
+    fn replay_puts(&self) -> bool {
+        false
+    }
 }
 
 /// In-process backend: direct calls into the sharded PS.

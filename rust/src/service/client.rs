@@ -140,7 +140,7 @@ impl RemotePs {
         drop(probe);
 
         let replay = Arc::new(if cfg.recovery.replay_puts {
-            PutReplayLog::new(cfg.recovery.replay_cap)
+            PutReplayLog::with_owner(cfg.recovery.replay_cap, cfg.recovery.replay_owner)
         } else {
             PutReplayLog::disabled()
         });
@@ -360,5 +360,9 @@ impl PsBackend for RemotePs {
 
     fn mark_epoch_committed(&self, step: u64) {
         self.mark_committed(step);
+    }
+
+    fn replay_puts(&self) -> bool {
+        self.pool.redialer().replay.is_enabled()
     }
 }

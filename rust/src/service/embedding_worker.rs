@@ -20,12 +20,13 @@
 //!
 //! | kind         | request sections                  | response sections                        |
 //! |--------------|-----------------------------------|------------------------------------------|
-//! | `INFO`       | –                                 | u64 fingerprint/geometry/PS deployment   |
+//! | `INFO`       | –                                 | u64 fingerprint/geometry/PS deployment/boot nonce |
 //! | `NEXT_BATCH` | u64 `[rank, step]`                | u64 `[step, sim]`, u64 sids, f32 nid, f32 labels, u8 flags, activations |
 //! | `PUSH_GRADS` | u64 sids, u8 flags, gradients     | u64 `[sim]`                              |
 //! | `EVAL`       | u64 `[rows]`                      | u64 `[sim]`, f32 activations             |
 //! | `STATS`      | –                                 | u64 worker counters, u64 PS stats        |
 //! | `SHUTDOWN`   | –                                 | – (ack)                                  |
+//! | `ADOPT_RANK` | u64 `[rank, next_step]`           | u64 `[1]` (ack)                          |
 //!
 //! `activations`/`gradients` are one raw f32 section, or — when the flags
 //! byte carries the compress bit — an fp16 section plus per-sample scales
@@ -64,19 +65,19 @@ use crate::comm::rpc::{PipelinedClient, RpcClient, RpcServer};
 use crate::comm::transport::TcpTransport;
 use crate::comm::wire::{WireReader, WireWriter};
 use crate::comm::NetSim;
-use crate::config::{EmbWorkerConfig, ServiceConfig};
+use crate::config::{EmbWorkerConfig, EwFailoverConfig, ServiceConfig};
 use crate::data::sample::SampleId;
 use crate::embedding::EmbeddingPs;
 use crate::hybrid::Trainer;
-use crate::recovery::{PooledConn, ReconnectPool, Redial, ReplayRing, RetryPolicy};
+use crate::recovery::{PooledConn, ReconnectPool, Redial, ReplayRing, RetryPolicy, Unreachable};
 use crate::util::lock_unpoisoned;
 use crate::worker::{
-    AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline, PreparedBatch,
-    WorkerStats,
+    elastic_assign, AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline,
+    PreparedBatch, WorkerStats,
 };
 
 use super::backend::{PsBackend, PsStats};
-use super::server::{accept_loop, wake_addr};
+use super::server::{accept_loop, boot_nonce, wake_addr};
 
 /// INFO handshake of the embedding-worker service.
 pub const KIND_EW_INFO: u32 = 0x7001;
@@ -94,6 +95,12 @@ pub const KIND_EW_SHUTDOWN: u32 = 0x7006;
 /// drive the two-phase epoch on its PS deployment (`mode` = full) or to
 /// just truncate its put replay log at a committed epoch (`mode` = mark).
 pub const KIND_EW_CKPT: u32 = 0x7007;
+/// Elastic-membership adoption: a trainer whose previous worker died (or
+/// whose restarted home worker is taking its ranks back) asks this process
+/// to own an NN rank's stream from `next_step` on — the server fast-forwards
+/// the rank's loader stream via `BatchPrep::skip_to` and quiesces any stale
+/// prefetch pipe (`--ew-failover`).
+pub const KIND_EW_ADOPT: u32 = 0x7008;
 
 /// CKPT mode: drive PREPARE/COMMIT across the PS shards, then mark.
 pub const EW_CKPT_FULL: u64 = 0;
@@ -138,6 +145,26 @@ pub struct EwInfo {
     /// Whether the worker applies lossy fp16 compression on its own PS wire
     /// (changes numerics; parity runs keep it off).
     pub ps_wire_compress: bool,
+    /// Per-process random nonce (same policy as the PS INFO handshake): lets
+    /// a reconnecting trainer distinguish "same process, transient wire
+    /// failure" from "restarted process" — the membership signal elastic
+    /// failover and rejoin are built on.
+    pub boot_nonce: u64,
+    /// Whether this worker keeps a `--ps-replay` gradient-put log. A trainer
+    /// must refuse to fail over away from such a worker: the log died with
+    /// the process and cannot be handed to the adopter, so a later PS-shard
+    /// replay would silently drop the dead worker's puts.
+    pub ps_replay: bool,
+}
+
+impl EwInfo {
+    /// Whether `other` advertises the same logical deployment: every field
+    /// except the per-process `boot_nonce` matches. This is the rejoin bar —
+    /// a restarted process is the same *member* if its config, geometry, and
+    /// PS deployment are unchanged, even though its boot nonce is new.
+    pub fn same_deployment(&self, other: &EwInfo) -> bool {
+        EwInfo { boot_nonce: 0, ..*self } == EwInfo { boot_nonce: 0, ..*other }
+    }
 }
 
 /// Digest of a PS deployment: `(shard process count, order-independent
@@ -177,6 +204,8 @@ pub fn encode_ew_info_response(info: &EwInfo) -> Vec<u8> {
         info.ps_processes as u64,
         info.ps_sig,
         u64::from(info.ps_wire_compress),
+        info.boot_nonce,
+        u64::from(info.ps_replay),
     ]);
     w.finish()
 }
@@ -186,7 +215,7 @@ pub fn decode_ew_info_response(msg: &[u8]) -> Result<EwInfo> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_EW_INFO, "expected EW INFO response, got kind {}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 9, "malformed EW INFO response ({} fields)", xs.len());
+    ensure!(xs.len() == 11, "malformed EW INFO response ({} fields)", xs.len());
     let info = EwInfo {
         fingerprint: xs[0],
         ew_rank: xs[1] as u8,
@@ -197,6 +226,8 @@ pub fn decode_ew_info_response(msg: &[u8]) -> Result<EwInfo> {
         ps_processes: xs[6] as usize,
         ps_sig: xs[7],
         ps_wire_compress: xs[8] != 0,
+        boot_nonce: xs[9],
+        ps_replay: xs[10] != 0,
     };
     ensure!(
         info.emb_dim > 0 && info.batch_size > 0 && info.pipeline_depth > 0,
@@ -519,6 +550,43 @@ pub fn decode_ew_ckpt_response(msg: &[u8]) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// ADOPT_RANK
+// ---------------------------------------------------------------------------
+
+/// Encode an ADOPT_RANK request: this server should own `rank`'s stream and
+/// serve its next `NEXT_BATCH` at exactly `next_step`.
+pub fn encode_ew_adopt_request(rank: usize, next_step: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_ADOPT);
+    w.put_u64(&[rank as u64, next_step as u64]);
+    w.finish()
+}
+
+/// Decode an ADOPT_RANK request into `(rank, next_step)`.
+pub fn decode_ew_adopt_request(msg: &[u8]) -> Result<(usize, usize)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_ADOPT, "expected EW ADOPT, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 2, "malformed EW ADOPT request");
+    Ok((xs[0] as usize, xs[1] as usize))
+}
+
+/// Encode the ADOPT_RANK ack.
+pub fn encode_ew_adopt_response() -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_EW_ADOPT);
+    w.put_u64(&[1]);
+    w.finish()
+}
+
+/// Decode the ADOPT_RANK ack.
+pub fn decode_ew_adopt_response(msg: &[u8]) -> Result<()> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_EW_ADOPT, "expected EW ADOPT ack, got kind {}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1 && xs[0] == 1, "malformed EW ADOPT ack");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
@@ -546,6 +614,9 @@ pub struct EwServerConfig {
     /// Checkpoint root for CKPT relays when the worker fronts an in-process
     /// PS (remote shards use their own `--checkpoint-dir` and ignore it).
     pub ckpt_dir: Option<PathBuf>,
+    /// Whether the worker's PS backend keeps a `--ps-replay` put log
+    /// (advertised in INFO; see [`EwInfo::ps_replay`]).
+    pub ps_replay: bool,
 }
 
 /// A bound-but-not-yet-serving embedding-worker service.
@@ -587,11 +658,20 @@ impl EmbeddingWorkerServer {
             ps_processes: cfg.ps_processes,
             ps_sig: cfg.ps_sig,
             ps_wire_compress: cfg.ps_wire_compress,
+            boot_nonce: boot_nonce(&listener),
+            ps_replay: cfg.ps_replay,
         };
         rpc.register(
             KIND_EW_INFO,
             Box::new(move |_msg| Ok(encode_ew_info_response(&info))),
         );
+        // Per-rank NEXT_BATCH replay rings, shared between the NEXT handler
+        // (which fills them) and the ADOPT handler (which drops a rank's ring
+        // when its stream is fast-forwarded — cached responses for old steps
+        // belong to the stream position the adoption just abandoned).
+        type RankRing = Arc<Mutex<ReplayRing<usize, Vec<u8>>>>;
+        let next_replay: Arc<Mutex<HashMap<usize, RankRing>>> =
+            Arc::new(Mutex::new(HashMap::new()));
         {
             // NEXT_BATCH: serve from the pipeline, with a per-rank replay
             // ring (`--replay-depth` deep, shared `recovery::ReplayRing`)
@@ -600,9 +680,7 @@ impl EmbeddingWorkerServer {
             // ring is a desync and fails loudly inside the pipeline — the
             // PR-4 one-deep cache desynced after two lost responses in a
             // row).
-            type RankRing = Arc<Mutex<ReplayRing<usize, Vec<u8>>>>;
-            let replay: Arc<Mutex<HashMap<usize, RankRing>>> =
-                Arc::new(Mutex::new(HashMap::new()));
+            let replay = next_replay.clone();
             let pipeline = pipeline.clone();
             let compress = cfg.compress;
             let depth = cfg.replay_depth.max(1);
@@ -624,6 +702,25 @@ impl EmbeddingWorkerServer {
                     let resp = encode_next_response(&pb, emb_dim, compress);
                     ring.insert(step, resp.clone());
                     Ok(resp)
+                }),
+            );
+        }
+        {
+            // ADOPT_RANK: elastic membership. A trainer routes a rank here
+            // after its previous worker died (or when this restarted process
+            // takes its home ranks back): quiesce any stale prefetch pipe,
+            // discard its buffered samples, fast-forward the rank's loader
+            // stream to `next_step`, and forget cached NEXT responses drawn
+            // at the abandoned stream position.
+            let pipeline = pipeline.clone();
+            let replay = next_replay.clone();
+            rpc.register(
+                KIND_EW_ADOPT,
+                Box::new(move |msg| {
+                    let (rank, step) = decode_ew_adopt_request(msg)?;
+                    pipeline.adopt(rank, step)?;
+                    lock_unpoisoned(&replay).remove(&rank);
+                    Ok(encode_ew_adopt_response())
                 }),
             );
         }
@@ -815,6 +912,7 @@ impl EmbeddingWorkerServer {
             compress: trainer.train.compress,
             replay_depth: ew.replay_depth,
             ckpt_dir: ckpt_dir.map(PathBuf::from),
+            ps_replay: backend.replay_puts(),
         };
         Self::bind(pipeline, backend, cfg, &ew.addr)
     }
@@ -872,13 +970,19 @@ impl EwServerHandle {
 // ---------------------------------------------------------------------------
 
 /// Dial/handshake policy for one embedding-worker endpoint: re-run the INFO
-/// handshake and insist the server's identity is unchanged. (Unlike the PS,
-/// a *restarted* embedding worker cannot transparently rejoin — its stream
-/// positions and sample buffers died with it — so full equality, including
-/// process-agnostic fields only, is the right bar.)
+/// handshake and insist the server is the same logical deployment.
+///
+/// Without `allow_rejoin` (the pre-elastic behavior, still the default), a
+/// changed boot nonce is fatal: a *restarted* embedding worker cannot
+/// transparently resume — its stream positions and sample buffers died with
+/// it. With `allow_rejoin` (`--ew-failover`), a restart with an unchanged
+/// deployment is accepted and the stored expectation tracks the new boot:
+/// the trainer's elastic tier re-establishes every affected rank's stream
+/// position with an explicit `ADOPT_RANK` before trusting it again.
 struct EwRedial {
     addr: String,
-    expect: EwInfo,
+    expect: Mutex<EwInfo>,
+    allow_rejoin: bool,
     window: usize,
     io_timeout: Option<std::time::Duration>,
 }
@@ -891,12 +995,24 @@ impl Redial for EwRedial {
             .call(&encode_ew_info_request())
             .context("embedding-worker INFO re-handshake")?;
         let info = decode_ew_info_response(&resp)?;
+        let mut expect = lock_unpoisoned(&self.expect);
         ensure!(
-            info == self.expect,
+            info.same_deployment(&expect),
             "embedding worker at {} came back with a different config: {info:?} != {:?}",
             self.addr,
-            self.expect
+            *expect
         );
+        if info.boot_nonce != expect.boot_nonce {
+            ensure!(
+                self.allow_rejoin,
+                "embedding worker at {} was restarted (boot nonce changed): its stream \
+                 positions and sample buffers died with the old process — restart the run \
+                 from a checkpoint, or run the trainer with --ew-failover so its ranks are \
+                 adopted elsewhere and the restarted worker can rejoin",
+                self.addr
+            );
+            *expect = info;
+        }
         Ok(client)
     }
 
@@ -924,8 +1040,21 @@ pub struct RemoteEmbeddingWorker {
 
 impl RemoteEmbeddingWorker {
     /// Connect a pool to one worker address, taking pool size and recovery
-    /// policy from `cfg`.
+    /// policy from `cfg`. A restarted server process is rejected at redial
+    /// time; use [`Self::connect_addr_elastic`] to accept rejoins.
     pub fn connect_addr(cfg: &ServiceConfig, addr: &str) -> Result<RemoteEmbeddingWorker> {
+        Self::connect_addr_elastic(cfg, addr, false)
+    }
+
+    /// Like [`Self::connect_addr`], but `allow_rejoin` selects whether a
+    /// redial may accept a *restarted* server process (same deployment, new
+    /// boot nonce). Only sound under `--ew-failover`, where the elastic tier
+    /// re-establishes stream positions with `ADOPT_RANK` after a restart.
+    pub fn connect_addr_elastic(
+        cfg: &ServiceConfig,
+        addr: &str,
+        allow_rejoin: bool,
+    ) -> Result<RemoteEmbeddingWorker> {
         let probe = TcpTransport::connect(addr)
             .with_context(|| format!("connecting to embedding worker at {addr}"))?;
         probe.set_timeouts(cfg.recovery.io_timeout())?;
@@ -938,7 +1067,8 @@ impl RemoteEmbeddingWorker {
         let pool = ReconnectPool::connect(
             EwRedial {
                 addr: addr.to_string(),
-                expect: info,
+                expect: Mutex::new(info),
+                allow_rejoin,
                 window: cfg.inflight_window,
                 io_timeout: cfg.recovery.io_timeout(),
             },
@@ -1028,6 +1158,31 @@ impl RemoteEmbeddingWorker {
         self.call(&encode_ew_shutdown_request()).context("EW shutdown request")?;
         Ok(())
     }
+
+    /// Ask this worker to own `rank`'s stream and serve its next batch at
+    /// exactly `next_step` (elastic failover / rejoin take-back).
+    pub fn adopt_rank(&self, rank: usize, next_step: usize) -> Result<()> {
+        let resp = self
+            .call(&encode_ew_adopt_request(rank, next_step))
+            .with_context(|| format!("ADOPT_RANK rank {rank} at step {next_step}"))?;
+        decode_ew_adopt_response(&resp)
+    }
+
+    /// One-shot INFO probe over a *fresh* connection, bypassing the pool and
+    /// its retry budget: the rejoin poll wants "is a compatible process
+    /// listening right now?", answered in one dial, without the pool's
+    /// backoff schedule or its connection slots.
+    pub fn probe_info(&self) -> Result<EwInfo> {
+        let redialer = self.pool.redialer();
+        let probe = TcpTransport::connect(&redialer.addr)
+            .with_context(|| format!("probing embedding worker at {}", redialer.addr))?;
+        probe.set_timeouts(redialer.io_timeout)?;
+        let probe = RpcClient::new(probe);
+        let resp = probe
+            .call(&encode_ew_info_request())
+            .context("embedding-worker INFO probe")?;
+        decode_ew_info_response(&resp)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1048,32 +1203,75 @@ pub struct EwExpect {
 }
 
 /// [`EmbComm`] over M `serve-embedding-worker` processes: NN ranks are
-/// assigned round-robin (`rank % M`), so each rank's whole sample stream
-/// lives in one worker process; the worker→NN activation/gradient transfers
-/// are charged on [`Link::EW_NN`] with the frame bytes actually sent.
+/// assigned to their *home* worker round-robin (`rank % M`), so each rank's
+/// whole sample stream lives in one worker process; the worker→NN
+/// activation/gradient transfers are charged on [`Link::EW_NN`] with the
+/// frame bytes actually sent.
+///
+/// With `--ew-failover` ([`EwFailoverConfig::enabled`]) membership is
+/// *elastic*: a worker whose retry budget is exhausted is marked dead, and
+/// [`elastic_assign`] linearly probes each of its ranks to the next live
+/// worker, which adopts the rank's stream via `ADOPT_RANK` and re-draws its
+/// in-flight batches (workers are parameter-stateless — the shared remote PS
+/// plus deterministic per-rank loader streams make the adopted batches
+/// *identical*, so sync-mode numerics survive the move). A restarted worker
+/// rejoins at the next step boundary and takes its home ranks back.
 pub struct RemoteEmbTier {
     workers: Vec<RemoteEmbeddingWorker>,
     net: Arc<NetSim>,
     /// Lossy fp16 on the activation/gradient wire (`train --compress`).
     compress: bool,
     expect: EwExpect,
+    failover: EwFailoverConfig,
+    state: Mutex<TierState>,
+}
+
+/// Mutable elastic-membership state of a [`RemoteEmbTier`].
+struct TierState {
+    /// Liveness per worker index (all live at connect).
+    dead: Vec<bool>,
+    /// Bumped on every membership change; stale epochs invalidate `route`.
+    epoch: u64,
+    /// Per-rank route cache: `rank → (epoch, worker)`. An entry whose epoch
+    /// is current means `worker` has already ADOPTed the rank's stream.
+    route: HashMap<usize, (u64, usize)>,
+    /// In-flight batches awaiting their gradient push: first sample id →
+    /// `(rank, step)`, enough to re-draw the identical batch on an adopter
+    /// when the serving worker dies between NEXT and PUSH.
+    inflight: HashMap<SampleId, (usize, usize)>,
+    /// Last rejoin probe, throttling dead-address polls to `rejoin_ms`.
+    last_probe: Option<std::time::Instant>,
 }
 
 impl RemoteEmbTier {
     /// Connect to every address in `cfg.addr` (comma-separated) and verify
     /// the processes jointly form one coherent embedding-worker tier for
-    /// exactly this trainer config.
+    /// exactly this trainer config. Failover stays off (the pre-elastic
+    /// fatal behavior); use [`Self::connect_elastic`] to enable it.
     pub fn connect(
         cfg: &ServiceConfig,
         expect: EwExpect,
         compress: bool,
         net: Arc<NetSim>,
     ) -> Result<RemoteEmbTier> {
+        Self::connect_elastic(cfg, expect, compress, net, EwFailoverConfig::default())
+    }
+
+    /// [`Self::connect`] with an explicit elastic-membership policy
+    /// (`--ew-failover`, `--ew-rejoin`, `--ew-rejoin-ms`).
+    pub fn connect_elastic(
+        cfg: &ServiceConfig,
+        expect: EwExpect,
+        compress: bool,
+        net: Arc<NetSim>,
+        failover: EwFailoverConfig,
+    ) -> Result<RemoteEmbTier> {
         cfg.validate()?;
+        failover.validate()?;
         let addrs = cfg.shard_addrs();
         let workers: Vec<RemoteEmbeddingWorker> = addrs
             .iter()
-            .map(|addr| RemoteEmbeddingWorker::connect_addr(cfg, addr))
+            .map(|addr| RemoteEmbeddingWorker::connect_addr_elastic(cfg, addr, failover.enabled))
             .collect::<Result<_>>()?;
         for w in &workers {
             let info = w.info();
@@ -1119,7 +1317,21 @@ impl RemoteEmbTier {
             "multiple embedding workers need a shared --remote-ps PS deployment \
              (each process currently owns a private in-process PS)"
         );
-        Ok(RemoteEmbTier { workers, net, compress, expect })
+        let n = workers.len();
+        Ok(RemoteEmbTier {
+            workers,
+            net,
+            compress,
+            expect,
+            failover,
+            state: Mutex::new(TierState {
+                dead: vec![false; n],
+                epoch: 0,
+                route: HashMap::new(),
+                inflight: HashMap::new(),
+                last_probe: None,
+            }),
+        })
     }
 
     /// Number of worker processes behind this tier.
@@ -1137,12 +1349,195 @@ impl RemoteEmbTier {
         self.workers[0].info().pipeline_depth
     }
 
-    /// Gracefully stop every worker process.
+    /// Gracefully stop every worker process still reachable (dead members
+    /// have nothing left to stop).
     pub fn shutdown_all(&self) -> Result<()> {
-        for w in &self.workers {
+        for (i, w) in self.workers.iter().enumerate() {
+            if self.is_dead(i) {
+                continue;
+            }
             w.shutdown_server()?;
         }
         Ok(())
+    }
+
+    /// Whether worker `idx` is currently marked dead (always false with
+    /// failover off).
+    fn is_dead(&self, idx: usize) -> bool {
+        if !self.failover.enabled {
+            return false;
+        }
+        lock_unpoisoned(&self.state).dead.get(idx).copied().unwrap_or(false)
+    }
+
+    /// First live worker index — the tier's stand-in for "worker 0" on
+    /// rank-independent calls (eval, stats, checkpoint lead).
+    fn first_live(&self) -> usize {
+        if !self.failover.enabled {
+            return 0;
+        }
+        lock_unpoisoned(&self.state).dead.iter().position(|d| !d).unwrap_or(0)
+    }
+
+    /// Record worker `idx` as dead and bump the membership epoch. Errors if
+    /// losing this worker makes exact continuation impossible: every worker
+    /// is gone, or the dead worker held a `--ps-replay` put log (the log died
+    /// with the process, so a later PS-shard replay would silently drop its
+    /// puts — aborting loudly beats diverging quietly).
+    fn mark_dead(&self, idx: usize) -> Result<()> {
+        ensure!(
+            !self.workers[idx].info().ps_replay,
+            "embedding worker at {} died holding a --ps-replay put log; its logged delta \
+             cannot be handed to an adopting process, so exact shard replay is no longer \
+             guaranteed — aborting instead of failing over (restart from the last \
+             checkpoint epoch, or run the workers without --ps-replay to allow failover)",
+            self.workers[idx].addr()
+        );
+        let mut st = lock_unpoisoned(&self.state);
+        if !st.dead[idx] {
+            st.dead[idx] = true;
+            st.epoch += 1;
+            eprintln!(
+                "ew-failover: embedding worker at {} is unreachable; reassigning its \
+                 ranks to survivors",
+                self.workers[idx].addr()
+            );
+        }
+        ensure!(
+            st.dead.iter().any(|d| !d),
+            "every embedding worker is unreachable — nothing left to adopt the ranks"
+        );
+        Ok(())
+    }
+
+    /// Record worker `idx` as live again (rejoin) and bump the epoch, so the
+    /// next routed call moves its home ranks back via `ADOPT_RANK`.
+    fn mark_alive(&self, idx: usize) {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.dead[idx] {
+            st.dead[idx] = false;
+            st.epoch += 1;
+            eprintln!(
+                "ew-failover: embedding worker at {} rejoined; returning its home ranks",
+                self.workers[idx].addr()
+            );
+        }
+    }
+
+    /// Resolve which worker serves `rank`, adopting the rank's stream at
+    /// `step` on the target whenever the assignment changed since the last
+    /// call (first use, a death, or a rejoin take-back). With failover off
+    /// this is exactly the static `rank % M`.
+    fn route(&self, rank: usize, step: usize) -> Result<usize> {
+        if !self.failover.enabled {
+            return Ok(rank % self.workers.len());
+        }
+        // Each pass either returns or marks one more worker dead, so M+1
+        // passes bound the loop.
+        for _ in 0..=self.workers.len() {
+            let (cached, desired, epoch) = {
+                let st = lock_unpoisoned(&self.state);
+                let desired = elastic_assign(rank, self.workers.len(), &st.dead).context(
+                    "every embedding worker is unreachable — nothing left to adopt the ranks",
+                )?;
+                (st.route.get(&rank).copied(), desired, st.epoch)
+            };
+            if let Some((e, w)) = cached {
+                if e == epoch {
+                    return Ok(w);
+                }
+            }
+            // The assignment changed: the target must own the rank's stream
+            // from `step` before we trust it with NEXT/PUSH traffic.
+            match self.workers[desired].adopt_rank(rank, step) {
+                Ok(()) => {
+                    let mut st = lock_unpoisoned(&self.state);
+                    if st.epoch == epoch {
+                        st.route.insert(rank, (epoch, desired));
+                        return Ok(desired);
+                    }
+                    // Membership moved underneath the adoption — re-resolve.
+                }
+                Err(e) if Unreachable::in_chain(&e) => self.mark_dead(desired)?,
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "adopting rank {rank} at step {step} on embedding worker {}",
+                        self.workers[desired].addr()
+                    )))
+                }
+            }
+        }
+        anyhow::bail!("embedding-tier routing for rank {rank} did not converge")
+    }
+
+    /// Throttled poll of dead worker addresses (`--ew-rejoin` every
+    /// `--ew-rejoin-ms`): a fresh INFO probe that reports the same logical
+    /// deployment marks the worker live again. Probe failures are expected
+    /// (the process is usually still down) and stay silent.
+    fn maybe_probe_rejoin(&self) {
+        if !(self.failover.enabled && self.failover.rejoin) {
+            return;
+        }
+        let dead_idxs: Vec<usize> = {
+            let mut st = lock_unpoisoned(&self.state);
+            if !st.dead.iter().any(|d| *d) {
+                return;
+            }
+            let now = std::time::Instant::now();
+            if let Some(t) = st.last_probe {
+                if now.duration_since(t)
+                    < std::time::Duration::from_millis(self.failover.rejoin_ms)
+                {
+                    return;
+                }
+            }
+            st.last_probe = Some(now);
+            st.dead
+                .iter()
+                .enumerate()
+                .filter(|&(_, d)| *d)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        for idx in dead_idxs {
+            if let Ok(info) = self.workers[idx].probe_info() {
+                if info.same_deployment(self.workers[idx].info()) {
+                    self.mark_alive(idx);
+                }
+            }
+        }
+    }
+
+    /// Recover a batch whose serving worker died between NEXT and PUSH: the
+    /// adopter re-draws the *identical* batch (deterministic per-rank loader
+    /// streams over the same shared PS) under fresh sample ids, and the
+    /// held gradients are pushed against those. Returns the simulated
+    /// seconds of the replacement push.
+    fn rebuffer_push(&self, sids: &[SampleId], grads: &[f32]) -> Result<f64> {
+        let sid0 = sids.first().copied().context("empty gradient push")?;
+        let (rank, step) = lock_unpoisoned(&self.state)
+            .inflight
+            .get(&sid0)
+            .copied()
+            .context("no in-flight record for the failed batch — cannot re-draw it")?;
+        // The death bumped the epoch, so route() re-adopts at exactly the
+        // lost batch's step; the adopter's next serve IS that batch.
+        let idx = self.route(rank, step)?;
+        let t0 = std::time::Instant::now();
+        let (pb, wire_in) = self.workers[idx].next_batch(rank, step)?;
+        ensure!(
+            pb.step == step && pb.sids.len() == sids.len(),
+            "re-drawn batch for rank {rank} step {step} changed shape — loader streams \
+             are not deterministic across workers"
+        );
+        let (sim, wire_out) = self.workers[idx].push_grads(&pb.sids, grads, self.compress)?;
+        lock_unpoisoned(&self.state).inflight.remove(&sid0);
+        eprintln!(
+            "ew-failover: re-buffered rank {rank} step {step} on {} (batch re-drawn, \
+             gradients re-pushed)",
+            self.workers[idx].addr()
+        );
+        Ok(sim + self.net.record(Link::EW_NN, wire_in + wire_out) + t0.elapsed().as_secs_f64())
     }
 }
 
@@ -1152,38 +1547,114 @@ impl EmbComm for RemoteEmbTier {
     }
 
     fn assign(&self, rank: usize, _step: usize) -> usize {
-        rank % self.workers.len()
+        if !self.failover.enabled {
+            return rank % self.workers.len();
+        }
+        let st = lock_unpoisoned(&self.state);
+        // Prefer the established route — that worker's buffer holds the
+        // rank's in-flight samples even if membership just changed.
+        if let Some(&(e, w)) = st.route.get(&rank) {
+            if e == st.epoch {
+                return w;
+            }
+        }
+        elastic_assign(rank, self.workers.len(), &st.dead)
+            .unwrap_or(rank % self.workers.len())
     }
 
     fn next_batch(&self, rank: usize, step: usize) -> Result<PreparedBatch> {
-        let idx = self.assign(rank, step);
-        let t0 = std::time::Instant::now();
-        let (mut pb, wire_bytes) = self.workers[idx].next_batch(rank, step)?;
-        pb.ew = idx;
-        // The worker→NN leg, now real: charge the frame bytes actually sent
-        // and fold the transfer + RPC wall time into the prep cost.
-        pb.sim_prep += self.net.record(Link::EW_NN, wire_bytes);
-        pb.sim_prep += t0.elapsed().as_secs_f64();
-        Ok(pb)
+        self.maybe_probe_rejoin();
+        let mut adopted_retry = false;
+        loop {
+            let idx = self.route(rank, step)?;
+            let t0 = std::time::Instant::now();
+            match self.workers[idx].next_batch(rank, step) {
+                Ok((mut pb, wire_bytes)) => {
+                    pb.ew = idx;
+                    // The worker→NN leg, now real: charge the frame bytes
+                    // actually sent and fold the transfer + RPC wall time
+                    // into the prep cost.
+                    pb.sim_prep += self.net.record(Link::EW_NN, wire_bytes);
+                    pb.sim_prep += t0.elapsed().as_secs_f64();
+                    if self.failover.enabled {
+                        if let Some(&sid0) = pb.sids.first() {
+                            lock_unpoisoned(&self.state).inflight.insert(sid0, (rank, step));
+                        }
+                    }
+                    return Ok(pb);
+                }
+                Err(e) if self.failover.enabled && Unreachable::in_chain(&e) => {
+                    // Retry budget exhausted against this worker: mark it
+                    // dead; route() will adopt the rank on a survivor at
+                    // exactly this step.
+                    self.mark_dead(idx)?;
+                }
+                Err(e)
+                    if self.failover.enabled
+                        && !adopted_retry
+                        && format!("{e:#}").contains("out of sync") =>
+                {
+                    // The worker restarted *within* the retry window, so the
+                    // pool transparently redialed it — but its fresh streams
+                    // do not stand at `step`. One explicit adoption
+                    // re-establishes the position; a second desync is real.
+                    adopted_retry = true;
+                    self.workers[idx].adopt_rank(rank, step).with_context(|| {
+                        format!(
+                            "re-adopting rank {rank} on restarted embedding worker {}",
+                            self.workers[idx].addr()
+                        )
+                    })?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     fn push_grads(&self, ew: usize, sids: &[SampleId], grads: &[f32]) -> Result<f64> {
         let t0 = std::time::Instant::now();
-        let (sim, wire_bytes) = self.workers[ew].push_grads(sids, grads, self.compress)?;
-        Ok(sim + self.net.record(Link::EW_NN, wire_bytes) + t0.elapsed().as_secs_f64())
+        match self.workers[ew].push_grads(sids, grads, self.compress) {
+            Ok((sim, wire_bytes)) => {
+                if self.failover.enabled {
+                    if let Some(sid0) = sids.first() {
+                        lock_unpoisoned(&self.state).inflight.remove(sid0);
+                    }
+                }
+                Ok(sim + self.net.record(Link::EW_NN, wire_bytes) + t0.elapsed().as_secs_f64())
+            }
+            Err(e) if self.failover.enabled && Unreachable::in_chain(&e) => {
+                // The serving worker died holding this batch's buffer. Mark
+                // it dead and replay the batch on the adopter: re-draw the
+                // identical samples, push the same gradients. No update is
+                // lost, so sync-mode numerics are preserved.
+                self.mark_dead(ew)?;
+                self.rebuffer_push(sids, grads).with_context(|| {
+                    format!(
+                        "recovering a gradient push lost with embedding worker {}",
+                        self.workers[ew].addr()
+                    )
+                })
+            }
+            Err(e) => Err(e),
+        }
     }
 
     fn discard(&self, ew: usize, sids: &[SampleId]) {
         // Best-effort: the worker may already be gone, which also discards.
+        if self.failover.enabled {
+            if let Some(sid0) = sids.first() {
+                lock_unpoisoned(&self.state).inflight.remove(sid0);
+            }
+        }
         let _ = self.workers[ew].discard(sids);
     }
 
     fn eval_lookup(&self, rows: usize) -> Result<(Vec<f32>, f64)> {
-        self.workers[0].eval(rows)
+        self.workers[self.first_live()].eval(rows)
     }
 
     fn ps_stats(&self) -> Result<PsStats> {
-        Ok(self.workers[0].stats()?.2)
+        Ok(self.workers[self.first_live()].stats()?.2)
     }
 
     fn check_compat(&self, fingerprint: u64) -> Result<()> {
@@ -1197,15 +1668,20 @@ impl EmbComm for RemoteEmbTier {
     }
 
     fn checkpoint_epoch(&self, _dir: &Path, step: u64) -> Result<()> {
-        // Worker 0 drives the full two-phase epoch on the (shared) PS
-        // deployment; every other worker only truncates its own put replay
-        // logs at the now-committed epoch. All workers front the same PS
-        // fleet (proved at connect time), so one PREPARE/COMMIT pass is the
-        // whole tier's epoch.
-        self.workers[0]
+        // The first live worker drives the full two-phase epoch on the
+        // (shared) PS deployment; every other live worker only truncates its
+        // own put replay logs at the now-committed epoch. All workers front
+        // the same PS fleet (proved at connect time), so one PREPARE/COMMIT
+        // pass is the whole tier's epoch; dead members are skipped — they
+        // hold no replay logs worth truncating any more.
+        let lead = self.first_live();
+        self.workers[lead]
             .ckpt(step, EW_CKPT_FULL)
-            .with_context(|| format!("checkpoint epoch via {}", self.workers[0].addr()))?;
-        for w in &self.workers[1..] {
+            .with_context(|| format!("checkpoint epoch via {}", self.workers[lead].addr()))?;
+        for (i, w) in self.workers.iter().enumerate() {
+            if i == lead || self.is_dead(i) {
+                continue;
+            }
             w.ckpt(step, EW_CKPT_MARK)
                 .with_context(|| format!("epoch commit mark via {}", w.addr()))?;
         }
@@ -1284,9 +1760,27 @@ mod tests {
             ps_processes: 2,
             ps_sig: 42,
             ps_wire_compress: true,
+            boot_nonce: 0x1234_5678_9abc_def0,
+            ps_replay: true,
         };
         let back = decode_ew_info_response(&encode_ew_info_response(&info)).unwrap();
         assert_eq!(back, info);
+        // A restart (new boot nonce) is the same deployment; any other
+        // field difference is not.
+        let restarted = EwInfo { boot_nonce: 7, ..info };
+        assert!(info.same_deployment(&restarted));
+        assert_ne!(info, restarted);
+        let reconfigured = EwInfo { batch_size: 64, ..info };
+        assert!(!info.same_deployment(&reconfigured));
+    }
+
+    #[test]
+    fn adopt_codec_roundtrip() {
+        let (rank, step) = decode_ew_adopt_request(&encode_ew_adopt_request(3, 77)).unwrap();
+        assert_eq!((rank, step), (3, 77));
+        decode_ew_adopt_response(&encode_ew_adopt_response()).unwrap();
+        // Wrong kind is rejected.
+        assert!(decode_ew_adopt_request(&encode_ew_info_request()).is_err());
     }
 
     #[test]
@@ -1438,6 +1932,39 @@ mod tests {
         assert_eq!(pb1.emb, pb1_deep.emb);
         let pb2_again = tier.next_batch(0, 2).unwrap();
         assert_eq!(pb2.sids, pb2_again.sids);
+
+        tier.shutdown_all().unwrap();
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn loopback_adopt_fast_forwards_the_stream() {
+        let trainer = small_trainer(false, false);
+        let ew = EmbWorkerConfig { addr: "127.0.0.1:0".into(), ..EmbWorkerConfig::default() };
+        let server =
+            EmbeddingWorkerServer::for_trainer(&trainer, &ew, None, false, None).unwrap();
+        let handle = server.spawn().unwrap();
+        let svc = ServiceConfig::at(handle.addr().to_string());
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let tier = RemoteEmbTier::connect(&svc, expect_of(&trainer), false, net).unwrap();
+
+        // This worker never served the rank: ADOPT at step 2 fast-forwards
+        // the loader stream there, and the served batch equals the local
+        // reference draw — the determinism elastic failover's exactness
+        // rests on.
+        tier.worker(0).adopt_rank(0, 2).unwrap();
+        let pb = tier.next_batch(0, 2).unwrap();
+        let mut rng = trainer.dataset.train_rng(0);
+        let _ = trainer.dataset.batch(&mut rng, 8);
+        let _ = trainer.dataset.batch(&mut rng, 8);
+        let want = trainer.dataset.batch(&mut rng, 8);
+        assert_eq!(pb.step, 2);
+        assert_eq!(pb.labels, want.labels);
+        assert_eq!(pb.nid, want.nid);
+
+        // Adopting *behind* the stream head is a loud error, not a rewind.
+        let err = tier.worker(0).adopt_rank(0, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot fast-forward"), "{err:#}");
 
         tier.shutdown_all().unwrap();
         handle.shutdown().unwrap();

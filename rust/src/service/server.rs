@@ -43,7 +43,7 @@ use super::protocol::PsInfo;
 /// server, transient wire failure" from "new process after a kill" — the
 /// trigger for the recovery layer's put-log replay. Mixes the clock, the
 /// pid, and an address so even rapid restart loops get distinct nonces.
-fn boot_nonce(salt: &TcpListener) -> u64 {
+pub(super) fn boot_nonce(salt: &TcpListener) -> u64 {
     let nanos = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_nanos() as u64)

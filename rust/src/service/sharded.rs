@@ -350,4 +350,8 @@ impl PsBackend for ShardedRemotePs {
             s.mark_committed(step);
         }
     }
+
+    fn replay_puts(&self) -> bool {
+        self.shards.iter().any(|s| PsBackend::replay_puts(s))
+    }
 }

@@ -11,10 +11,12 @@
 //!
 //! The assignment policy is part of the seam: the in-process tier spreads a
 //! rank's batches over every worker per step, while the remote tier pins
-//! each NN rank to one worker process round-robin (`rank % M`) — the rank's
-//! whole sample stream then lives in a single process. Neither choice
-//! affects numerics (the workers share one PS and run identical dedup and
-//! pooling), which is what the remote-vs-inline parity suite proves.
+//! each NN rank to one worker process — home worker `rank % M`, linearly
+//! probed past dead members by [`elastic_assign`] when `--ew-failover` is
+//! on — so the rank's whole sample stream lives in a single process at a
+//! time. Neither choice affects numerics (the workers share one PS and run
+//! identical dedup and pooling), which is what the remote-vs-inline parity
+//! suite proves.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -29,6 +31,36 @@ use crate::service::{PsBackend, PsStats};
 
 use super::embedding_worker::EmbeddingWorker;
 use super::pipeline::{AssignMode, BatchPrep, PreparedBatch};
+
+/// The elastic rank→worker assignment of the remote embedding tier: the
+/// first *live* worker at or after the rank's home slot `rank % n_workers`,
+/// probing linearly with wraparound. `dead[i]` marks worker `i` dead;
+/// `None` iff every worker is dead (`dead` shorter than `n_workers` treats
+/// the missing tail as live).
+///
+/// The three properties failover correctness rests on, proven exhaustively
+/// by `rust/tests/property_failover.rs`:
+///
+/// * **total** — some worker is assigned whenever any worker is live;
+/// * **deterministic** — a pure function of `(rank, n_workers, dead)`, so
+///   every trainer rank independently computes the same adopter with no
+///   coordination round;
+/// * **minimal movement** — marking one worker dead moves *only* the ranks
+///   that were assigned to it; every other rank keeps its worker (a rehash
+///   over the survivor list would reshuffle unrelated ranks, forcing
+///   needless `ADOPT_RANK` stream fast-forwards).
+///
+/// With `dead` all-false this is exactly the pre-elastic pinning `rank % n`,
+/// which is why the failover-off path cannot change behavior.
+pub fn elastic_assign(rank: usize, n_workers: usize, dead: &[bool]) -> Option<usize> {
+    if n_workers == 0 {
+        return None;
+    }
+    let home = rank % n_workers;
+    (0..n_workers)
+        .map(|probe| (home + probe) % n_workers)
+        .find(|&w| !dead.get(w).copied().unwrap_or(false))
+}
 
 /// Batched access to the embedding-worker tier of one deployment.
 ///
@@ -253,5 +285,37 @@ mod tests {
         assert_eq!(t.worker(0).buffered(), pb.sids.len());
         t.discard(0, &pb.sids);
         assert_eq!(t.worker(0).buffered(), 0);
+    }
+
+    #[test]
+    fn elastic_assign_matches_modulo_when_all_live() {
+        for n in 1..5 {
+            for rank in 0..12 {
+                assert_eq!(elastic_assign(rank, n, &vec![false; n]), Some(rank % n));
+                // A short (even empty) dead slice treats the tail as live.
+                assert_eq!(elastic_assign(rank, n, &[]), Some(rank % n));
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_assign_probes_past_dead_workers() {
+        // Home 1 dead: rank 1 probes to 2; rank 5 (home 1) likewise.
+        let dead = [false, true, false, false];
+        assert_eq!(elastic_assign(1, 4, &dead), Some(2));
+        assert_eq!(elastic_assign(5, 4, &dead), Some(2));
+        // Wraparound: home 3 dead too -> rank 3 lands on 0.
+        let dead = [false, true, false, true];
+        assert_eq!(elastic_assign(3, 4, &dead), Some(0));
+        // Survivors keep their home.
+        assert_eq!(elastic_assign(0, 4, &dead), Some(0));
+        assert_eq!(elastic_assign(2, 4, &dead), Some(2));
+    }
+
+    #[test]
+    fn elastic_assign_degenerate_memberships() {
+        assert_eq!(elastic_assign(0, 0, &[]), None);
+        assert_eq!(elastic_assign(7, 3, &[true, true, true]), None);
+        assert_eq!(elastic_assign(7, 1, &[true]), None);
     }
 }

@@ -18,7 +18,7 @@ pub mod embedding_worker;
 pub mod nn_worker;
 pub mod pipeline;
 
-pub use emb_comm::{EmbComm, LocalEmbTier};
+pub use emb_comm::{elastic_assign, EmbComm, LocalEmbTier};
 pub use embedding_worker::{EmbeddingWorker, WorkerStats};
 pub use nn_worker::NnWorker;
 pub use pipeline::{AssignMode, BatchPrep, PrefetchPipeline, PreparedBatch};

@@ -43,6 +43,7 @@
 //! forces depth 1 and simply eats the cold latency inline).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -251,10 +252,14 @@ struct RankPipe {
     /// Assembled batches, in step order. `Receiver` is not `Sync`, so stage
     /// 3 consumers serialize on this inner lock (per rank, not globally).
     rx: Mutex<Receiver<Result<PreparedBatch>>>,
-    /// Kept so the stage threads carry names in debuggers; dropping the
-    /// handles detaches the threads, which exit on their own once the
-    /// channels close.
-    _stages: Vec<JoinHandle<()>>,
+    /// Tells stage 1 to stop drawing — [`PrefetchPipeline::adopt`] raises it
+    /// before quiescing, so the rank's loader stream freezes at a known
+    /// position instead of racing the fast-forward.
+    stop: Arc<AtomicBool>,
+    /// Stage thread handles, joined by [`PrefetchPipeline::adopt`] when the
+    /// pipe is torn down; simply dropped (detaching the threads, which exit
+    /// once the channels close) when the whole pipeline drops.
+    stages: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// The bounded prefetcher of one `serve-embedding-worker` process: up to
@@ -298,14 +303,19 @@ impl PrefetchPipeline {
         let (raw_tx, raw_rx) = sync_channel::<Result<(usize, Batch)>>(self.depth);
         let (out_tx, out_rx) = sync_channel::<Result<PreparedBatch>>(self.depth);
         let prep = self.prep.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop1 = stop.clone();
         let stage1 = std::thread::Builder::new()
             .name(format!("ew-draw-r{rank}"))
             .spawn(move || loop {
+                if stop1.load(Ordering::Acquire) {
+                    return;
+                }
                 let item = prep.draw(rank);
-                let stop = item.is_err();
+                let halt = item.is_err();
                 // A closed channel (pipeline dropped) or a drawn error both
                 // end the stream; the error is forwarded first.
-                if raw_tx.send(item).is_err() || stop {
+                if raw_tx.send(item).is_err() || halt {
                     return;
                 }
             })
@@ -326,10 +336,58 @@ impl PrefetchPipeline {
                 }
             })
             .context("spawning prefetch assemble stage")?;
-        let pipe =
-            Arc::new(RankPipe { rx: Mutex::new(out_rx), _stages: vec![stage1, stage2] });
+        let pipe = Arc::new(RankPipe {
+            rx: Mutex::new(out_rx),
+            stop,
+            stages: Mutex::new(vec![stage1, stage2]),
+        });
         map.insert(rank, pipe.clone());
         Ok(pipe)
+    }
+
+    /// Take ownership of `rank`'s stream at `next_step` — the `ADOPT_RANK`
+    /// path of elastic failover: a trainer whose previous embedding worker
+    /// died asks this process to serve the rank from `next_step` on.
+    ///
+    /// Any existing pipe for the rank is fully quiesced first (stop flag,
+    /// drain, join) so no stage thread races the fast-forward; its drained
+    /// batches are discarded from the worker buffer (their in-flight samples
+    /// are re-drawn by the new stream — the §4.2.4 re-buffering policy).
+    /// Errors if the rank's stream already advanced past `next_step`
+    /// (adopting *backwards* would require un-drawing batches).
+    pub fn adopt(&self, rank: usize, next_step: usize) -> Result<()> {
+        let existing = self.ranks.lock().unwrap().remove(&rank);
+        if let Some(pipe) = existing {
+            pipe.stop.store(true, Ordering::Release);
+            let mut handles = std::mem::take(&mut *pipe.stages.lock().unwrap());
+            let rx = pipe.rx.lock().unwrap();
+            // Keep draining while the stages wind down: a stage blocked on a
+            // full channel only unblocks when the consumer side empties it.
+            loop {
+                while let Ok(item) = rx.try_recv() {
+                    self.discard_drained(rank, item);
+                }
+                if handles.iter().all(|h| h.is_finished()) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+            while let Ok(item) = rx.try_recv() {
+                self.discard_drained(rank, item);
+            }
+        }
+        self.prep.skip_to(rank, next_step)
+    }
+
+    /// Release the worker-side sample buffer of a batch drained (not served)
+    /// during [`adopt`](Self::adopt), so re-buffered entries don't leak.
+    fn discard_drained(&self, rank: usize, item: Result<PreparedBatch>) {
+        if let Ok(pb) = item {
+            self.prep.worker(self.prep.assign(rank, pb.step)).discard(&pb.sids);
+        }
     }
 
     /// Stage 3: the next prepared batch of `rank`, which must be `step`.
@@ -489,5 +547,55 @@ mod tests {
     fn unknown_rank_is_an_error_not_a_panic() {
         let pipe = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 1);
         assert!(pipe.next(7, 0).is_err());
+    }
+
+    #[test]
+    fn adopt_fast_forwards_a_fresh_rank_to_the_requested_step() {
+        // The common failover shape: this server never touched the rank, a
+        // reference stream says what batch lives at the adopted step.
+        let reference = prep(1, 1, AssignMode::Fixed(0), true);
+        for _ in 0..4 {
+            reference.prepare(0).unwrap();
+        }
+        let want = reference.prepare(0).unwrap();
+
+        let pipe = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 3);
+        pipe.adopt(0, 4).unwrap();
+        let got = pipe.next(0, 4).unwrap();
+        assert_eq!(got.step, 4);
+        assert_eq!(got.labels, want.labels);
+        assert_eq!(got.nid, want.nid);
+        // The stream continues strictly sequentially from there.
+        assert_eq!(pipe.next(0, 5).unwrap().step, 5);
+    }
+
+    #[test]
+    fn adopt_quiesces_a_running_pipe_and_leaks_no_buffered_samples() {
+        let p = Arc::new(prep(1, 1, AssignMode::Fixed(0), true));
+        let pipe = PrefetchPipeline::new(p.clone(), 3);
+        // Serve a couple of steps so the prefetcher is warm and has batches
+        // in flight beyond what was served.
+        let served0 = pipe.next(0, 0).unwrap();
+        let served1 = pipe.next(0, 1).unwrap();
+        p.worker(0).discard(&served0.sids);
+        p.worker(0).discard(&served1.sids);
+        // Adopt far ahead: the old pipe must quiesce, its drained in-flight
+        // batches must be discarded from the worker buffer, and the stream
+        // must land exactly on the requested step.
+        pipe.adopt(0, 16).unwrap();
+        assert_eq!(p.worker(0).buffered(), 0, "drained in-flight samples leaked");
+        assert_eq!(pipe.next(0, 16).unwrap().step, 16);
+    }
+
+    #[test]
+    fn adopt_behind_the_stream_is_rejected() {
+        let pipe = PrefetchPipeline::new(Arc::new(prep(1, 1, AssignMode::Fixed(0), true)), 1);
+        pipe.next(0, 0).unwrap();
+        pipe.next(0, 1).unwrap();
+        let err = pipe.adopt(0, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot fast-forward"), "{err:#}");
+        // The no-op adopt at exactly the stream head is fine.
+        pipe.adopt(0, 2).unwrap();
+        assert_eq!(pipe.next(0, 2).unwrap().step, 2);
     }
 }

@@ -1,0 +1,141 @@
+//! Exhaustive property tests for [`persia::worker::elastic_assign`], the
+//! rank→worker assignment the elastic embedding tier (`--ew-failover`)
+//! rests on (ISSUE 8).
+//!
+//! The domain is small enough to enumerate completely: every worker count
+//! up to 6, every dead-set bitmask, every rank up to 2× the worker count.
+//! Properties checked:
+//!
+//! * **total** — an adopter exists whenever any worker is live;
+//! * **deterministic + coordination-free** — a pure function of the inputs,
+//!   insensitive to how the `dead` slice spells trailing live workers;
+//! * **identity when healthy** — with no dead workers it is exactly the
+//!   pre-elastic pinning `rank % n_workers`;
+//! * **minimal movement** — killing one worker moves only the ranks that
+//!   were assigned to it, and reviving one moves ranks only *onto* it.
+
+use persia::worker::elastic_assign;
+
+/// All dead-sets over `n` workers, as bool vectors (bitmask enumeration).
+fn all_dead_sets(n: usize) -> Vec<Vec<bool>> {
+    (0..1usize << n)
+        .map(|mask| (0..n).map(|w| (mask >> w) & 1 == 1).collect())
+        .collect()
+}
+
+#[test]
+fn total_whenever_any_worker_is_live() {
+    for n in 1..=6 {
+        for dead in all_dead_sets(n) {
+            let any_live = dead.iter().any(|d| !d);
+            for rank in 0..2 * n {
+                let got = elastic_assign(rank, n, &dead);
+                if any_live {
+                    let w = got.unwrap_or_else(|| {
+                        panic!("no adopter for rank {rank}, n {n}, dead {dead:?}")
+                    });
+                    assert!(!dead[w], "rank {rank} assigned to dead worker {w}");
+                } else {
+                    assert_eq!(got, None, "all workers dead must yield None");
+                }
+            }
+        }
+    }
+    assert_eq!(elastic_assign(3, 0, &[]), None, "an empty tier assigns nothing");
+}
+
+#[test]
+fn deterministic_and_insensitive_to_trailing_live_spelling() {
+    for n in 1..=6 {
+        for dead in all_dead_sets(n) {
+            for rank in 0..2 * n {
+                let a = elastic_assign(rank, n, &dead);
+                assert_eq!(a, elastic_assign(rank, n, &dead), "must be pure");
+                // A shorter slice spells its missing tail as live.
+                let trimmed: Vec<bool> = {
+                    let last_dead = dead.iter().rposition(|&d| d).map(|i| i + 1).unwrap_or(0);
+                    dead[..last_dead].to_vec()
+                };
+                assert_eq!(
+                    a,
+                    elastic_assign(rank, n, &trimmed),
+                    "trailing-live spelling changed the assignment \
+                     (rank {rank}, n {n}, dead {dead:?} vs {trimmed:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identity_when_all_workers_live() {
+    for n in 1..=6 {
+        for rank in 0..4 * n {
+            assert_eq!(
+                elastic_assign(rank, n, &vec![false; n]),
+                Some(rank % n),
+                "healthy tier must keep the pre-elastic pinning"
+            );
+        }
+    }
+}
+
+#[test]
+fn killing_one_worker_moves_only_its_ranks() {
+    for n in 1..=6 {
+        for dead in all_dead_sets(n) {
+            for victim in 0..n {
+                if dead[victim] {
+                    continue;
+                }
+                let mut after = dead.clone();
+                after[victim] = true;
+                for rank in 0..2 * n {
+                    let old = elastic_assign(rank, n, &dead).unwrap();
+                    let new = elastic_assign(rank, n, &after);
+                    if old == victim {
+                        assert_ne!(
+                            new,
+                            Some(victim),
+                            "rank {rank} left on the killed worker {victim}"
+                        );
+                    } else {
+                        assert_eq!(
+                            new,
+                            Some(old),
+                            "rank {rank} moved off live worker {old} when only \
+                             {victim} died (n {n}, dead {dead:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn reviving_one_worker_moves_ranks_only_onto_it() {
+    for n in 1..=6 {
+        for dead in all_dead_sets(n) {
+            for revived in 0..n {
+                if !dead[revived] {
+                    continue;
+                }
+                let mut after = dead.clone();
+                after[revived] = false;
+                for rank in 0..2 * n {
+                    let old = elastic_assign(rank, n, &dead);
+                    let new = elastic_assign(rank, n, &after).unwrap();
+                    if new != revived {
+                        assert_eq!(
+                            Some(new),
+                            old,
+                            "rank {rank} moved between survivors when {revived} \
+                             rejoined (n {n}, dead {dead:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
