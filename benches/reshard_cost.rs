@@ -1,0 +1,285 @@
+//! Live-resharding cost: what does a mid-run 2→3 shard split do to the
+//! serving path, and how much imbalance does it buy back?
+//!
+//! Stands up the real service stack in-process — two owner `PsServer`s
+//! (nodes 0..4 and 4..6) plus a `--join`-style spare — and drives batched
+//! GET/PUT traffic through one `ShardedRemotePs`. A prober thread keeps
+//! issuing GET batches while the coordinator runs
+//! [`PsBackend::maybe_reshard`], so the emitted rows capture:
+//!
+//! * steady-state batch latency before and after the split,
+//! * the latency of probes that overlap the migration window (dip depth),
+//! * the coordinator's wall-clock stall (dip duration), and
+//! * the process imbalance before/after, computed from the issued key
+//!   stream with the same `route()` the fleet uses (carried in the
+//!   `throughput` column — it is a ratio, not items/s).
+//!
+//! Emits `BENCH_reshard.json` when `BENCH_JSON_DIR` is set.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use persia::config::{
+    EmbeddingConfig, OptimizerKind, PartitionPolicy, RecoveryConfig, ServiceConfig,
+};
+use persia::embedding::ps::{pack_key, route};
+use persia::embedding::EmbeddingPs;
+use persia::service::reshard::{apply, plan_rebalance, process_imbalance, RoutingTable};
+use persia::service::{PsBackend, PsBindOpts, PsServer, PsServerHandle, ShardedRemotePs};
+use persia::util::bench::BenchResult;
+use persia::util::{Bench, Histogram, Rng};
+
+mod common;
+
+const N_NODES: usize = 6;
+const SHARDS_PER_NODE: usize = 2;
+const DIM: usize = 16;
+const N_GROUPS: u64 = 4;
+const ROWS_PER_GROUP: u64 = 50_000;
+const BATCH: usize = 2048;
+const SEED: u64 = 42;
+/// Deployment: two owners at 4-vs-2 nodes (process imbalance 4/3 ≈ 1.333
+/// under shuffled-uniform traffic) plus one idle spare for the split.
+const OWNER_RANGES: [std::ops::Range<usize>; 2] = [0..4, 4..6];
+
+fn emb_cfg() -> EmbeddingConfig {
+    EmbeddingConfig {
+        rows_per_group: ROWS_PER_GROUP as usize,
+        shard_capacity: 1 << 16,
+        n_nodes: N_NODES,
+        shards_per_node: SHARDS_PER_NODE,
+        optimizer: OptimizerKind::Adagrad,
+        partition: PartitionPolicy::ShuffledUniform,
+        lr: 0.1,
+    }
+}
+
+/// Bind one server on an ephemeral port, retried like the integration
+/// suites (rebinding can race a just-released socket's teardown).
+fn spawn_server(
+    cfg: &EmbeddingConfig,
+    opts_for: impl Fn() -> (Arc<EmbeddingPs>, PsBindOpts),
+) -> (PsServerHandle, String) {
+    let mut last_err = None;
+    for _ in 0..40 {
+        let (ps, opts) = opts_for();
+        match PsServer::bind_with_opts(ps, "127.0.0.1:0", cfg, SEED, opts) {
+            Ok(server) => {
+                let addr = server.local_addr().unwrap().to_string();
+                return (server.spawn().unwrap(), addr);
+            }
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    panic!("could not bind shard server: {:#}", last_err.unwrap());
+}
+
+/// A fixed pool of key batches, cycled by both the bench loops and the
+/// prober so every phase sees the same traffic distribution.
+fn key_pool(n_batches: usize) -> Vec<Vec<(u32, u64)>> {
+    let mut rng = Rng::new(SEED ^ 0xBE9C);
+    (0..n_batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| (rng.below(N_GROUPS) as u32, rng.below(ROWS_PER_GROUP)))
+                .collect()
+        })
+        .collect()
+}
+
+/// One serving round-trip: fetch a batch, push a constant gradient back.
+fn get_put(backend: &ShardedRemotePs, keys: &[(u32, u64)], out: &mut [f32], grads: &[f32]) {
+    backend.get_many(keys, out).expect("get_many");
+    backend.put_grads(keys, grads).expect("put_grads");
+}
+
+fn main() {
+    common::banner(
+        "live reshard cost: serving dip + stall of a mid-run 2->3 shard split",
+        "Persia (KDD'22) §4.2.2 (load balancing), made live over the epoch barrier",
+    );
+    // Stretch the per-node copy so the prober reliably lands samples inside
+    // the migration window (the same hook the chaos drills use).
+    std::env::set_var("PERSIA_MIGRATE_DELAY_MS", "150");
+
+    let cfg = emb_cfg();
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for range in OWNER_RANGES {
+        let (h, a) = spawn_server(&cfg, || {
+            let ps = Arc::new(EmbeddingPs::new_range(&cfg, DIM, SEED, range.clone()));
+            (ps, PsBindOpts::default())
+        });
+        handles.push(h);
+        addrs.push(a);
+    }
+    let (spare_handle, spare_addr) = spawn_server(&cfg, || {
+        let ps = Arc::new(EmbeddingPs::new(&cfg, DIM, SEED));
+        (ps, PsBindOpts { join: true, ..Default::default() })
+    });
+    handles.push(spare_handle);
+    addrs.push(spare_addr);
+
+    let backend = Arc::new(
+        ShardedRemotePs::connect(&ServiceConfig {
+            addr: addrs.join(","),
+            client_conns: 2,
+            wire_compress: false,
+            recovery: RecoveryConfig { attempts: 4, backoff_ms: 50, ..RecoveryConfig::default() },
+        })
+        .expect("connect sharded backend"),
+    );
+    assert_eq!(backend.dim(), DIM);
+
+    let pool = key_pool(64);
+    let grads = vec![0.01f32; BATCH * DIM];
+    let mut out = vec![0f32; BATCH * DIM];
+
+    // The same imbalance arithmetic the coordinator runs, from the issued
+    // key stream: tally per-node traffic with the fleet's own route().
+    let mut traffic = vec![0u64; N_NODES];
+    for batch in &pool {
+        for &(g, id) in batch {
+            let (node, _) = route(cfg.partition, N_NODES, SHARDS_PER_NODE, pack_key(g, id));
+            traffic[node] += 1;
+        }
+    }
+    let before_table =
+        RoutingTable::initial(N_NODES, &[0..4, 4..6, 0..0], &addrs).expect("initial table");
+    let imbalance_before = process_imbalance(&before_table, &traffic);
+    let after_table = plan_rebalance(&before_table, &traffic, 1.25)
+        .and_then(|plan| apply(&before_table, &plan).ok());
+    let imbalance_after = after_table
+        .as_ref()
+        .map(|t| process_imbalance(t, &traffic))
+        .unwrap_or(imbalance_before);
+
+    let bench = Bench::new(3, 20);
+    let mut rows = Vec::new();
+    let keys_per_iter = BATCH as f64;
+
+    let mut cursor = 0usize;
+    rows.push(bench.run("get_put_steady_before_split", Some(keys_per_iter), || {
+        get_put(&backend, &pool[cursor % pool.len()], &mut out, &grads);
+        cursor += 1;
+    }));
+
+    // Prober: keeps timing GET batches on its own connection slots while
+    // the main thread plays coordinator. Samples are classified against the
+    // migration window afterwards.
+    let stop = Arc::new(AtomicBool::new(false));
+    let prober = {
+        let backend = Arc::clone(&backend);
+        let pool = pool.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut out = vec![0f32; BATCH * DIM];
+            let mut samples: Vec<(Instant, u64)> = Vec::new();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                backend.get_many(&pool[i % pool.len()], &mut out).expect("probe get_many");
+                samples.push((t0, t0.elapsed().as_nanos() as u64));
+                i += 1;
+            }
+            samples
+        })
+    };
+
+    std::thread::sleep(Duration::from_millis(300));
+    let window_start = Instant::now();
+    let committed = backend.maybe_reshard(1.25).expect("maybe_reshard");
+    let window_end = Instant::now();
+    assert_eq!(committed, Some(1), "the 4-vs-2 deployment must trigger a split at 1.25");
+    assert_eq!(backend.routing_epoch(), 1);
+    std::thread::sleep(Duration::from_millis(300));
+    stop.store(true, Ordering::Relaxed);
+    let samples = prober.join().expect("prober thread");
+
+    let stall_ns = (window_end - window_start).as_nanos() as u64;
+    let mut in_window = Histogram::new();
+    let mut in_count = 0u64;
+    let mut in_total = 0u64;
+    let mut in_max = 0u64;
+    for &(t0, dur) in &samples {
+        // A probe overlaps the window if it started before COMMIT returned
+        // and ended after PREPARE began.
+        if t0 < window_end && t0 + Duration::from_nanos(dur) > window_start {
+            in_window.record(dur);
+            in_count += 1;
+            in_total += dur;
+            in_max = in_max.max(dur);
+        }
+    }
+    assert!(in_count > 0, "no probe overlapped the migration window — raise the delay hook");
+    rows.push(BenchResult {
+        name: "get_probe_during_migration".into(),
+        iters: in_count,
+        mean_ns: in_total as f64 / in_count as f64,
+        p50_ns: in_window.percentile(50.0),
+        p95_ns: in_window.percentile(95.0),
+        throughput: Some(keys_per_iter / (in_total as f64 / in_count as f64 / 1e9)),
+    });
+    rows.push(BenchResult {
+        name: "migration_stall_wallclock".into(),
+        iters: 1,
+        mean_ns: stall_ns as f64,
+        p50_ns: stall_ns,
+        p95_ns: stall_ns,
+        throughput: None,
+    });
+
+    let mut cursor = 0usize;
+    rows.push(bench.run("get_put_steady_after_split", Some(keys_per_iter), || {
+        get_put(&backend, &pool[cursor % pool.len()], &mut out, &grads);
+        cursor += 1;
+    }));
+
+    for (name, imb) in [
+        ("process_imbalance_before", imbalance_before),
+        ("process_imbalance_after", imbalance_after),
+    ] {
+        rows.push(BenchResult {
+            name: name.into(),
+            iters: 1,
+            mean_ns: 0.0,
+            p50_ns: 0,
+            p95_ns: 0,
+            throughput: Some(imb),
+        });
+    }
+
+    persia::util::bench::print_and_emit("reshard", "reshard", &rows);
+
+    let before_mean = rows[0].mean_ns;
+    let during_mean = rows[1].mean_ns;
+    let after_mean = rows[3].mean_ns;
+    println!("\nreshard cost summary:");
+    println!(
+        "  dip depth   : probes during migration ran {:.2}x the pre-split mean \
+         ({:.3} ms vs {:.3} ms, worst {:.3} ms)",
+        during_mean / before_mean,
+        during_mean / 1e6,
+        before_mean / 1e6,
+        in_max as f64 / 1e6,
+    );
+    println!(
+        "  dip duration: coordinator stall {:.1} ms (PREPARE -> COMMIT)",
+        stall_ns as f64 / 1e6
+    );
+    println!(
+        "  steady state: {:.3} ms before vs {:.3} ms after ({:+.1}%)",
+        before_mean / 1e6,
+        after_mean / 1e6,
+        (after_mean / before_mean - 1.0) * 100.0,
+    );
+    println!(
+        "  imbalance   : {imbalance_before:.3} -> {imbalance_after:.3} \
+         (max/mean over serving shards)"
+    );
+    drop(handles);
+}

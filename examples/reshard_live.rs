@@ -1,0 +1,301 @@
+//! Live resharding demo (ISSUE 9): grow a 2-shard PS deployment to 3
+//! shards mid-train, every role its own OS process on loopback.
+//!
+//! Two `persia serve-ps` shards own an intentionally lopsided split of the
+//! PS node space (4 nodes vs 2), a third starts as a `--join` spare that
+//! owns nothing, and `persia train` runs with the reshard probe armed.
+//! Under the preset's Zipf traffic the probe sees the ≈1.33 per-process
+//! imbalance at the first cadence boundary, streams the hot shard's tail
+//! nodes onto the spare behind the PREPARE/MIGRATE/COMMIT barrier, and
+//! commits routing epoch 1 — while the deterministic FullSync run keeps
+//! bitwise parity (≤ 1e-6) with an unresharded single-process reference.
+//!
+//! ```bash
+//! cargo build --release            # builds the `persia` binary it spawns
+//! cargo run --release --example reshard_live
+//! ```
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use persia::config::{BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+use persia::service::reshard::load_routing;
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: &str = "65536";
+const SEED: &str = "42";
+const STEPS: usize = 30;
+const BATCH: usize = 16;
+/// A finer node grid than the preset default so the planner has split
+/// points: ps0 serves 0..4, ps1 serves 4..6.
+const N_NODES: usize = 6;
+
+/// The `persia` binary next to this example's executable
+/// (`target/<profile>/examples/reshard_live` → `target/<profile>/persia`).
+fn persia_bin() -> Result<PathBuf> {
+    let exe = std::env::current_exe().context("current_exe")?;
+    let dir = exe
+        .parent()
+        .and_then(|p| p.parent())
+        .context("example executable has no target dir")?;
+    let bin = dir.join(format!("persia{}", std::env::consts::EXE_SUFFIX));
+    anyhow::ensure!(
+        bin.exists(),
+        "persia binary not found at {} — run `cargo build --release` first",
+        bin.display()
+    );
+    Ok(bin)
+}
+
+/// A child with stdout AND stderr streamed to our stdout (prefixed) while
+/// scanning for marker lines. Killed on drop.
+struct Proc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Proc {
+    /// Spawn and return a channel yielding every output line as it arrives.
+    fn spawn(
+        tag: &'static str,
+        args: &[String],
+    ) -> Result<(Proc, std::sync::mpsc::Receiver<String>)> {
+        let mut child = Command::new(persia_bin()?)
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning {tag}"))?;
+        let stdout = child.stdout.take().context("stdout piped")?;
+        let stderr = child.stderr.take().context("stderr piped")?;
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = channel();
+        let mut readers = Vec::new();
+        for reader in [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)] {
+            let lines = lines.clone();
+            let tx = tx.clone();
+            readers.push(std::thread::spawn(move || {
+                for line in std::io::BufReader::new(reader).lines() {
+                    let Ok(line) = line else { break };
+                    println!("[{tag}] {line}");
+                    lines.lock().unwrap().push(line.clone());
+                    let _ = tx.send(line);
+                }
+            }));
+        }
+        Ok((Proc { child, lines, readers }, rx))
+    }
+
+    fn wait_success(&mut self, tag: &str) -> Result<Vec<String>> {
+        let status = self.child.wait().with_context(|| format!("waiting for {tag}"))?;
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        let lines = self.lines.lock().unwrap().clone();
+        anyhow::ensure!(status.success(), "{tag} failed with {status}");
+        Ok(lines)
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+/// Wait (bounded) for the first line containing `pat`; returns the suffix
+/// after `pat`'s first whitespace-delimited token.
+fn await_line(
+    rx: &std::sync::mpsc::Receiver<String>,
+    pat: &str,
+    what: &str,
+) -> Result<String> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(240);
+    loop {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        anyhow::ensure!(!remaining.is_zero(), "timed out waiting for {what}");
+        match rx.recv_timeout(remaining) {
+            Ok(line) if line.contains(pat) => return Ok(line),
+            Ok(_) => continue,
+            Err(_) => anyhow::bail!("stream ended before {what}"),
+        }
+    }
+}
+
+fn await_addr(rx: &std::sync::mpsc::Receiver<String>, pat: &str, what: &str) -> Result<String> {
+    let line = await_line(rx, pat, what)?;
+    line.split(pat)
+        .nth(1)
+        .and_then(|r| r.split_whitespace().next())
+        .map(|s| s.to_string())
+        .with_context(|| format!("no address in {what} line"))
+}
+
+/// The train-loop flags every process of the deployment shares verbatim.
+fn shared_flags() -> Vec<String> {
+    [
+        "--preset", PRESET, "--dense", DENSE, "--engine", "rust", "--mode", "sync",
+        "--deterministic", "true", "--shard-capacity", CAPACITY, "--seed", SEED, "--lr",
+        "0.05", "--tau", "4", "--emb-workers", "1", "--nn-workers", "1", "--netsim",
+        "false", "--compress", "false",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([
+        "--nodes".to_string(),
+        N_NODES.to_string(),
+        "--batch".to_string(),
+        BATCH.to_string(),
+        "--steps".to_string(),
+        STEPS.to_string(),
+        "--eval-every".to_string(),
+        STEPS.to_string(),
+    ])
+    .collect()
+}
+
+fn serve_ps_args(disposition: &[&str], ckpt_dir: &str) -> Vec<String> {
+    let mut args = vec!["serve-ps".to_string()];
+    args.extend(shared_flags());
+    args.extend(["--addr".to_string(), "127.0.0.1:0".to_string()]);
+    args.extend(disposition.iter().map(|s| s.to_string()));
+    args.extend(["--checkpoint-dir".to_string(), ckpt_dir.to_string()]);
+    args
+}
+
+/// The threaded single-process reference with the exact same preset knobs
+/// and node grid — the unresharded ground truth.
+fn threaded_reference() -> Result<(f32, f64)> {
+    let preset = BenchPreset::by_name(PRESET).context("preset")?;
+    let model = preset.model(DENSE);
+    let mut emb_cfg = preset.embedding(&model, CAPACITY.parse()?);
+    emb_cfg.n_nodes = N_NODES;
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster =
+        ClusterConfig { n_nn_workers: 1, n_emb_workers: 1, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: BATCH,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps: STEPS,
+        eval_every: STEPS,
+        seed: SEED.parse()?,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED.parse()?);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    let out = t.run_rust()?;
+    Ok((out.report.final_loss, out.report.final_auc.context("reference AUC")?))
+}
+
+fn main() -> Result<()> {
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("persia_reshard_live_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    std::fs::create_dir_all(&ckpt_dir)?;
+    let ckpt = ckpt_dir.display().to_string();
+
+    // 1. Two owning shards with a lopsided 4:2 node split, plus a `--join`
+    //    spare that materializes the full range but owns nothing.
+    let (ps0, ps0_rx) =
+        Proc::spawn("ps0", &serve_ps_args(&["--node-range", "0..4"], &ckpt))?;
+    let (ps1, ps1_rx) =
+        Proc::spawn("ps1", &serve_ps_args(&["--node-range", "4..6"], &ckpt))?;
+    let (spare, spare_rx) = Proc::spawn("spare", &serve_ps_args(&["--join", "true"], &ckpt))?;
+    let addr0 = await_addr(&ps0_rx, "listening on ", "ps0 address")?;
+    let addr1 = await_addr(&ps1_rx, "listening on ", "ps1 address")?;
+    let addr2 = await_addr(&spare_rx, "listening on ", "spare address")?;
+    println!("== fleet up: owners at {addr0},{addr1}; --join spare at {addr2}");
+
+    // 2. Train against the fleet with the reshard probe armed: cadence 10,
+    //    threshold 1.1, checkpoints at every migration boundary.
+    let mut args = vec![
+        "train".to_string(),
+        "--parity-lines".to_string(),
+        "true".to_string(),
+        "--remote-ps".to_string(),
+        format!("{addr0},{addr1},{addr2}"), // spare listed LAST: epoch-0 routing is list-ordered
+    ];
+    args.extend(shared_flags());
+    args.extend(
+        ["--checkpoint-dir", &ckpt, "--checkpoint-every", "5", "--reshard-every", "10",
+         "--reshard-threshold", "1.1"]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    let (mut tr, tr_rx) = Proc::spawn("train", &args)?;
+
+    // 3. The probe fires at step 10, splits the hot shard onto the spare,
+    //    and commits epoch 1 mid-run.
+    await_line(&tr_rx, "RESHARD epoch 1 committed", "the reshard commit")?;
+    println!("== routing epoch 1 committed mid-train (2 shards -> 3)");
+
+    // 4. The run still finishes — and matches the unresharded reference.
+    let lines = tr.wait_success("train")?;
+    let parity = lines
+        .iter()
+        .find(|l| l.starts_with("PARITY "))
+        .context("train printed no PARITY line")?;
+    let mut final_loss = f32::NAN;
+    let mut final_auc = f64::NAN;
+    for field in parity["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            final_loss = v.parse()?;
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            final_auc = v.parse()?;
+        }
+    }
+
+    // 5. The committed layout survived to disk and the spare now owns the
+    //    migrated nodes.
+    let table = load_routing(&ckpt_dir)?.context("commit persisted no ROUTING table")?;
+    anyhow::ensure!(table.epoch >= 1, "ROUTING still at epoch {}", table.epoch);
+    anyhow::ensure!(table.owned_count(2) > 0, "spare owns nothing after the split");
+    println!(
+        "== persisted ROUTING epoch {}: per-shard node counts {:?}",
+        table.epoch,
+        (0..3).map(|s| table.owned_count(s)).collect::<Vec<_>>()
+    );
+
+    let (ref_loss, ref_auc) = threaded_reference()?;
+    let loss_gap = (ref_loss - final_loss).abs();
+    let auc_gap = (ref_auc - final_auc).abs();
+    println!(
+        "== parity: loss {final_loss:.6} vs unresharded {ref_loss:.6} (gap {loss_gap:.2e}), \
+         AUC {final_auc:.6} vs {ref_auc:.6} (gap {auc_gap:.2e})"
+    );
+    anyhow::ensure!(loss_gap <= 1e-6, "loss diverged across the live split");
+    anyhow::ensure!(auc_gap <= 1e-6, "AUC diverged across the live split");
+
+    // 6. Teardown: the fleet is killed by Drop.
+    drop(ps0_rx);
+    drop(ps1_rx);
+    drop(spare_rx);
+    drop(tr_rx);
+    drop(spare);
+    drop(ps1);
+    drop(ps0);
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    println!(
+        "== live resharding OK: 2 -> 3 shards mid-train behind the \
+         PREPARE/MIGRATE/COMMIT barrier, zero lost updates, parity ≤ 1e-6"
+    );
+    Ok(())
+}

@@ -24,6 +24,7 @@
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{ensure, Context, Result};
 
@@ -110,15 +111,18 @@ const SHARD_MANIFEST_MAGIC: &[u8; 8] = b"PRSASM01";
 const KIND_SHARD_MANIFEST: u32 = 0x7F02;
 
 /// Serialize a shard's epoch commit marker: the epoch step, the node range
-/// whose files this shard just committed, and whether each node also has a
-/// cold-tier file (`ps_node_N.cold`) in the epoch.
+/// whose files this shard just committed, whether each node also has a
+/// cold-tier file (`ps_node_N.cold`) in the epoch, and the routing epoch
+/// the shard served under when it committed (0 for a never-resharded
+/// deployment).
 pub fn encode_shard_manifest(
     step: u64,
     range: &std::ops::Range<usize>,
     has_cold: bool,
+    routing_epoch: u64,
 ) -> Vec<u8> {
     let mut w = WireWriter::new(KIND_SHARD_MANIFEST);
-    w.put_u64(&[step, range.start as u64, range.end as u64, has_cold as u64]);
+    w.put_u64(&[step, range.start as u64, range.end as u64, has_cold as u64, routing_epoch]);
     let body = w.finish();
     let mut out = Vec::with_capacity(12 + body.len());
     out.extend_from_slice(SHARD_MANIFEST_MAGIC);
@@ -128,10 +132,13 @@ pub fn encode_shard_manifest(
 }
 
 /// Parse + validate a shard epoch manifest into `(step, node range,
-/// has_cold)`. A 3-field manifest from before the tiered-storage era
-/// decodes with `has_cold = false`. Arbitrary, truncated, or bit-flipped
-/// bytes return `Err`, never panic.
-pub fn decode_shard_manifest(bytes: &[u8]) -> Result<(u64, std::ops::Range<usize>, bool)> {
+/// has_cold, routing_epoch)`. A 3-field manifest from before the
+/// tiered-storage era decodes with `has_cold = false`; a 4-field one from
+/// before live resharding decodes with `routing_epoch = 0`. Arbitrary,
+/// truncated, or bit-flipped bytes return `Err`, never panic.
+pub fn decode_shard_manifest(
+    bytes: &[u8],
+) -> Result<(u64, std::ops::Range<usize>, bool, u64)> {
     ensure!(bytes.len() >= 12, "shard manifest too short");
     ensure!(&bytes[..8] == SHARD_MANIFEST_MAGIC, "shard manifest magic mismatch");
     let want = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
@@ -140,7 +147,11 @@ pub fn decode_shard_manifest(bytes: &[u8]) -> Result<(u64, std::ops::Range<usize
     let r = WireReader::parse(body)?;
     ensure!(r.kind() == KIND_SHARD_MANIFEST, "shard manifest kind {:#x}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 3 || xs.len() == 4, "shard manifest has {} fields", xs.len());
+    ensure!(
+        (3..=5).contains(&xs.len()),
+        "shard manifest has {} fields",
+        xs.len()
+    );
     let (start, end) = (xs[1] as usize, xs[2] as usize);
     ensure!(start < end && end < 1 << 32, "shard manifest range {start}..{end} invalid");
     let has_cold = match xs.get(3) {
@@ -149,20 +160,37 @@ pub fn decode_shard_manifest(bytes: &[u8]) -> Result<(u64, std::ops::Range<usize
         Some(&1) => true,
         Some(&v) => anyhow::bail!("shard manifest cold flag {v} invalid"),
     };
-    Ok((xs[0], start..end, has_cold))
+    let routing_epoch = xs.get(4).copied().unwrap_or(0);
+    Ok((xs[0], start..end, has_cold, routing_epoch))
 }
 
 /// Checkpoint manager for a PS: legacy per-node files plus committed
 /// checkpoint epochs, all under `dir`.
 pub struct CheckpointManager {
     dir: PathBuf,
+    /// The routing epoch stamped into every shard manifest this manager
+    /// commits. Starts at 0 (or the persisted table's epoch on restart);
+    /// the PS server bumps it when a reshard commits.
+    routing_epoch: AtomicU64,
 }
 
 impl CheckpointManager {
     /// Create a manager rooted at `dir` (created if missing).
     pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
         std::fs::create_dir_all(&dir)?;
-        Ok(Self { dir: dir.as_ref().to_path_buf() })
+        Ok(Self { dir: dir.as_ref().to_path_buf(), routing_epoch: AtomicU64::new(0) })
+    }
+
+    /// Set the routing epoch stamped into subsequently committed shard
+    /// manifests (called at server start from the persisted table, and at
+    /// every committed reshard).
+    pub fn set_routing_epoch(&self, epoch: u64) {
+        self.routing_epoch.store(epoch, Ordering::SeqCst);
+    }
+
+    /// The routing epoch currently stamped into committed manifests.
+    pub fn routing_epoch(&self) -> u64 {
+        self.routing_epoch.load(Ordering::SeqCst)
     }
 
     fn node_path(&self, node: usize) -> PathBuf {
@@ -263,10 +291,27 @@ impl CheckpointManager {
     /// until [`CheckpointManager::commit_epoch`] renames them; an epoch that
     /// never commits leaves only ignorable `.prep` garbage.
     pub fn prepare_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<()> {
+        self.prepare_epoch_range(ps, step, ps.node_range())
+    }
+
+    /// [`CheckpointManager::prepare_epoch`] over an explicit node `range` —
+    /// the *served* range when it differs from the PS's physical one (a
+    /// resharded server checkpoints what it currently owns, not what it
+    /// materialized at boot). An empty range (a `--join` spare owning
+    /// nothing yet) stages nothing and is not an error.
+    pub fn prepare_epoch_range(
+        &self,
+        ps: &EmbeddingPs,
+        step: u64,
+        range: std::ops::Range<usize>,
+    ) -> Result<()> {
+        if range.is_empty() {
+            return Ok(());
+        }
         let edir = self.epoch_dir(step);
         std::fs::create_dir_all(&edir)
             .with_context(|| format!("creating epoch dir {}", edir.display()))?;
-        for node in ps.node_range() {
+        for node in range {
             let snap = ps.snapshot_node_full(node)?;
             let staged = self.epoch_node_path(step, node).with_extension("ckpt.prep");
             atomic_write(&staged, &encode_node_snapshot(&snap.hot))
@@ -291,7 +336,23 @@ impl CheckpointManager {
     /// renamed and just rewrites the manifest. Only a commit with *neither*
     /// a staged nor a committed file — no PREPARE ever ran — errors.
     pub fn commit_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<usize> {
-        let range = ps.node_range();
+        self.commit_epoch_range(ps, step, ps.node_range())
+    }
+
+    /// [`CheckpointManager::commit_epoch`] over an explicit node `range`
+    /// (the served range of a resharded server). An empty range commits
+    /// nothing and writes no manifest — a spare that owns nothing simply
+    /// has no epoch state. The manifest is stamped with the current
+    /// [`CheckpointManager::routing_epoch`].
+    pub fn commit_epoch_range(
+        &self,
+        ps: &EmbeddingPs,
+        step: u64,
+        range: std::ops::Range<usize>,
+    ) -> Result<usize> {
+        if range.is_empty() {
+            return Ok(0);
+        }
         let has_cold = ps.has_cold_tier();
         for node in range.clone() {
             let staged = self.epoch_node_path(step, node).with_extension("ckpt.prep");
@@ -325,7 +386,7 @@ impl CheckpointManager {
         }
         atomic_write(
             &self.shard_manifest_path(step, &range),
-            &encode_shard_manifest(step, &range, has_cold),
+            &encode_shard_manifest(step, &range, has_cold, self.routing_epoch()),
         )
         .with_context(|| format!("writing shard manifest for epoch {step}"))?;
         Ok(range.len())
@@ -354,7 +415,7 @@ impl CheckpointManager {
             let Ok(bytes) = std::fs::read(self.shard_manifest_path(step, range)) else {
                 continue;
             };
-            let Ok((mstep, mrange, mcold)) = decode_shard_manifest(&bytes) else { continue };
+            let Ok((mstep, mrange, mcold, _)) = decode_shard_manifest(&bytes) else { continue };
             if mstep != step || mrange != *range {
                 continue;
             }
@@ -382,10 +443,26 @@ impl CheckpointManager {
     /// must match this PS's tier shape — resuming a tiered run without
     /// `--cold-dir` (or vice versa) is a loud error, not silent row loss.
     pub fn restore_epoch(&self, ps: &EmbeddingPs, step: u64) -> Result<()> {
-        let range = ps.node_range();
+        self.restore_epoch_range(ps, step, ps.node_range()).map(|_| ())
+    }
+
+    /// [`CheckpointManager::restore_epoch`] over an explicit node `range`
+    /// (the served range recorded in a resharded deployment's routing
+    /// table). An empty range restores nothing. Returns the routing epoch
+    /// the manifest was committed under, so a restarting server can
+    /// cross-check it against the persisted routing table.
+    pub fn restore_epoch_range(
+        &self,
+        ps: &EmbeddingPs,
+        step: u64,
+        range: std::ops::Range<usize>,
+    ) -> Result<u64> {
+        if range.is_empty() {
+            return Ok(self.routing_epoch());
+        }
         let bytes = std::fs::read(self.shard_manifest_path(step, &range))
             .with_context(|| format!("epoch {step} was never committed by shard {range:?}"))?;
-        let (mstep, mrange, mcold) = decode_shard_manifest(&bytes)?;
+        let (mstep, mrange, mcold, mrouting) = decode_shard_manifest(&bytes)?;
         ensure!(
             mstep == step && mrange == range,
             "shard manifest records (step {mstep}, nodes {mrange:?}), expected \
@@ -417,7 +494,7 @@ impl CheckpointManager {
             )
             .with_context(|| format!("restoring node {node} from epoch {step}"))?;
         }
-        Ok(())
+        Ok(mrouting)
     }
 }
 
@@ -634,15 +711,51 @@ mod tests {
 
     #[test]
     fn shard_manifest_codec_rejects_garbage() {
-        let good = encode_shard_manifest(12, &(1..3), false);
-        assert_eq!(decode_shard_manifest(&good).unwrap(), (12, 1..3, false));
-        let cold = encode_shard_manifest(12, &(1..3), true);
-        assert_eq!(decode_shard_manifest(&cold).unwrap(), (12, 1..3, true));
+        let good = encode_shard_manifest(12, &(1..3), false, 0);
+        assert_eq!(decode_shard_manifest(&good).unwrap(), (12, 1..3, false, 0));
+        let cold = encode_shard_manifest(12, &(1..3), true, 2);
+        assert_eq!(decode_shard_manifest(&cold).unwrap(), (12, 1..3, true, 2));
         assert!(decode_shard_manifest(&[]).is_err());
         assert!(decode_shard_manifest(&good[..good.len() - 1]).is_err());
         let mut bad = good.clone();
         bad[13] ^= 0x01;
         assert!(decode_shard_manifest(&bad).is_err());
+        // A 4-field manifest from before live resharding still decodes,
+        // with routing epoch 0.
+        let mut w = WireWriter::new(KIND_SHARD_MANIFEST);
+        w.put_u64(&[12, 1, 3, 1]);
+        let body = w.finish();
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(SHARD_MANIFEST_MAGIC);
+        legacy.extend_from_slice(&crc32(&body).to_le_bytes());
+        legacy.extend_from_slice(&body);
+        assert_eq!(decode_shard_manifest(&legacy).unwrap(), (12, 1..3, true, 0));
+    }
+
+    #[test]
+    fn range_epoch_apis_stamp_routing_and_skip_empty_ranges() {
+        let dir = tmp("rangeepoch");
+        let mgr = CheckpointManager::new(&dir).unwrap();
+        let ps = ps();
+        ps.get(0, 1, &mut [0.0; 4]);
+        // An empty served range (a --join spare) stages and commits nothing.
+        mgr.prepare_epoch_range(&ps, 4, 0..0).unwrap();
+        assert_eq!(mgr.commit_epoch_range(&ps, 4, 0..0).unwrap(), 0);
+        assert_eq!(mgr.latest_committed_epoch(&(0..0)), None);
+        // A sub-range of the physical PS commits only that slice, stamped
+        // with the manager's routing epoch.
+        mgr.set_routing_epoch(3);
+        mgr.prepare_epoch_range(&ps, 4, 0..1).unwrap();
+        assert_eq!(mgr.commit_epoch_range(&ps, 4, 0..1).unwrap(), 1);
+        assert_eq!(mgr.latest_committed_epoch(&(0..1)), Some(4));
+        assert_eq!(mgr.latest_committed_epoch(&(0..2)), None);
+        let bytes = std::fs::read(dir.join("step-4").join("shard_0_1.manifest")).unwrap();
+        assert_eq!(decode_shard_manifest(&bytes).unwrap(), (4, 0..1, false, 3));
+        // Wipe and restore just the committed slice; the manifest's routing
+        // epoch rides back for the restart cross-check.
+        ps.wipe_node(0).unwrap();
+        assert_eq!(mgr.restore_epoch_range(&ps, 4, 0..1).unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     fn tiered_ps(cold_dir: &Path) -> EmbeddingPs {

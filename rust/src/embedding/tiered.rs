@@ -32,8 +32,14 @@ use super::cold::ColdStore;
 use super::lru::LruStore;
 use super::store::{EmbeddingStore, StoreCounters};
 
-/// Minimum sketch size; below this aliasing would defeat the gate.
-const MIN_SKETCH: usize = 1024;
+/// Minimum sketch size; below this aliasing would defeat the gate. Sized
+/// for the *key population*, not the hot tier: a small hot tier (say 8
+/// rows) still sees the full Zipf tail, and at the old 1024-counter floor
+/// a few hundred distinct one-touch keys alias into shared counters,
+/// falsely pass the admission gate, and thrash the LRU they were supposed
+/// to protect. 64 Ki single-byte counters is cheap and keeps the collision
+/// rate negligible at reproduction scale.
+const MIN_SKETCH: usize = 1 << 16;
 /// Maximum sketch size (1 MiB of counters is plenty at reproduction scale).
 const MAX_SKETCH: usize = 1 << 20;
 
@@ -120,6 +126,12 @@ impl TieredStore {
     /// Borrow of the cold tier (tests/diagnostics).
     pub fn cold(&self) -> &ColdStore {
         &self.cold
+    }
+
+    /// Number of counters in the admission sketch (tests/diagnostics pin
+    /// the sizing floor through this).
+    pub fn sketch_len(&self) -> usize {
+        self.freq.len()
     }
 }
 
@@ -364,6 +376,63 @@ mod tests {
         for k in 0..6u64 {
             let row = ts.get_or_insert_with(k, &mut |_| panic!("row lost")).unwrap();
             assert_eq!(row, &[k as f32, -(k as f32)][..], "key {k}");
+        }
+        ts.check_invariants().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn admission_sketch_floor_protects_small_hot_tiers_from_tail_aliasing() {
+        // Regression: the sketch used to size from the hot tier
+        // (hot_capacity * 8, floored at 1024), but the sketch's job is to
+        // count the whole key population. With an 8-row hot tier the old
+        // floor gave 1024 counters; a ~300-key one-touch tail then aliases
+        // into shared counters (dozens of collisions), falsely passes the
+        // `admit_threshold = 2` gate, and evicts every warm row.
+        let (mut ts, dir) = tiered("floor", 8, 1, 2);
+        assert!(ts.sketch_len() >= 1 << 16, "sketch floor regressed to {}", ts.sketch_len());
+        // Warm 8 keys past the gate (two touches each).
+        for _ in 0..2 {
+            for k in 0..8u64 {
+                get(&mut ts, k, k as f32);
+            }
+        }
+        assert_eq!(ts.hot_len(), 8);
+        let demotions_before = ts.counters().demotions;
+        // A calibrated 300-key one-touch tail: candidates are filtered
+        // (deterministically — the sketch hash is a pure function) so no
+        // two land in the same counter at the CURRENT sketch size, which
+        // makes "no demotions" the exact expected behavior. The same keys
+        // must provably alias under the old 1024-slot floor, or the test
+        // would not witness the bug it pins.
+        let mask = (ts.sketch_len() - 1) as u64;
+        let mut used: std::collections::HashSet<u64> =
+            (0..8u64).map(|k| splitmix64(k) & mask).collect();
+        let mut old_used: std::collections::HashSet<u64> =
+            (0..8u64).map(|k| splitmix64(k) & 1023).collect();
+        let mut tail = Vec::new();
+        let mut old_collisions = 0usize;
+        let mut cand = 1_000u64;
+        while tail.len() < 300 {
+            if used.insert(splitmix64(cand) & mask) {
+                tail.push(cand);
+                if !old_used.insert(splitmix64(cand) & 1023) {
+                    old_collisions += 1;
+                }
+            }
+            cand += 1;
+        }
+        assert!(old_collisions > 0, "tail never aliases at the old floor; test is vacuous");
+        for (i, &k) in tail.iter().enumerate() {
+            get(&mut ts, k, i as f32);
+        }
+        assert_eq!(
+            ts.counters().demotions,
+            demotions_before,
+            "one-touch tail keys thrashed the 8-row hot tier"
+        );
+        for k in 0..8u64 {
+            assert!(ts.hot.contains(k), "warm key {k} evicted by tail aliasing");
         }
         ts.check_invariants().unwrap();
         std::fs::remove_dir_all(&dir).ok();

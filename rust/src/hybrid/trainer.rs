@@ -50,6 +50,7 @@ use crate::embedding::{CheckpointManager, EmbeddingPs, StoreConfig};
 use crate::metrics::{auc, RunReport, Tracker};
 use crate::recovery::{run_epoch, EpochConfig, GlobalManifest, RetryPolicy};
 use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
+use crate::service::reshard::ReshardConfig;
 use crate::service::PsBackend;
 use crate::util::Rng;
 use crate::worker::{EmbComm, LocalEmbTier};
@@ -250,6 +251,16 @@ pub struct Trainer {
     /// ordered deterministic mode the drive is a collective ordered
     /// section, so the snapshot is the *exact* boundary state.
     pub checkpoint: Option<EpochConfig>,
+    /// Probe for live PS resharding (`--reshard-every` +
+    /// `--reshard-threshold`): rank 0 merges the fleet's per-node traffic
+    /// at every `every`-step boundary and, when the per-process imbalance
+    /// exceeds the threshold, drives a split/migrate round through
+    /// [`EmbComm::maybe_reshard`] — see [`crate::service::reshard`]. Only
+    /// meaningful against a [`crate::service::ShardedRemotePs`] backend;
+    /// other tiers ignore the probe. Pair the cadence with
+    /// `checkpoint.every` (a multiple) so every committed reshard is
+    /// immediately followed by a checkpoint of the new layout.
+    pub reshard: Option<ReshardConfig>,
     /// First step index to train (`--resume-from`): the run behaves as if
     /// steps `0..start_step` already happened — loader streams fast-forward
     /// and the loop starts here. 0 for a fresh run.
@@ -288,6 +299,7 @@ impl Trainer {
             deterministic: false,
             gossip_period: DEFAULT_GOSSIP_PERIOD,
             checkpoint: None,
+            reshard: None,
             start_step: 0,
             resume: None,
             store: StoreConfig::default(),
@@ -410,6 +422,9 @@ impl Trainer {
         );
         if let Some(ck) = &self.checkpoint {
             ck.validate()?;
+        }
+        if let Some(rs) = &self.reshard {
+            rs.validate()?;
         }
         if let Some(r) = &self.resume {
             anyhow::ensure!(
@@ -1028,6 +1043,50 @@ impl Trainer {
                 }
             }
 
+            // --- live resharding probe at the step boundary ---
+            // Runs BEFORE the checkpoint block so a boundary hitting both
+            // cadences checkpoints the POST-migration layout: the shard
+            // manifests then carry the narrowed/adopted ranges and the new
+            // routing epoch, closing the crash window between a reshard
+            // commit and its first durable snapshot. Only rank 0 talks to
+            // the fleet; in ordered deterministic mode the probe is one
+            // more collective ordered section, so the traffic merge and
+            // the migration itself happen at a quiesced boundary (no
+            // in-flight puts from any rank — the copy window is exact).
+            if let Some(rs) = &self.reshard {
+                if (step + 1) % rs.every == 0 {
+                    let drive = || -> Result<()> {
+                        if rank != 0 {
+                            return Ok(());
+                        }
+                        use std::io::Write as _;
+                        match tier.maybe_reshard(rs.threshold) {
+                            Ok(Some(epoch)) => {
+                                // Orchestrators and the chaos drills read
+                                // these lines through pipes.
+                                println!("RESHARD epoch {epoch} committed");
+                                std::io::stdout().flush().ok();
+                            }
+                            Ok(None) => {}
+                            Err(e) => {
+                                // Resharding is an optimization: a failed
+                                // round must never take training down. The
+                                // executor has already aborted the fleet
+                                // back to the old layout.
+                                println!("RESHARD aborted: {e:#}");
+                                std::io::stdout().flush().ok();
+                            }
+                        }
+                        Ok(())
+                    };
+                    if order_ps {
+                        ordered(comm, drive)?;
+                    } else if rank == 0 {
+                        drive()?;
+                    }
+                }
+            }
+
             // --- coordinated checkpoint epoch at the step boundary ---
             // Rank 0 is the coordinator (recovery::run_epoch: two-phase PS
             // snapshot, global manifest, LATEST). In ordered deterministic
@@ -1055,6 +1114,7 @@ impl Trainer {
                             params: params.clone(),
                             opt_m: opt_m.to_vec(),
                             opt_v: opt_v.to_vec(),
+                            routing_epoch: tier.routing_epoch(),
                         };
                         run_epoch(&ck.dir, boundary, tier.as_ref(), &manifest)
                             .with_context(|| {

@@ -40,7 +40,8 @@ use persia::hybrid::{DenseComm, PjrtEngineFactory, ResumeState, Trainer};
 use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
 use persia::runtime::ArtifactManifest;
 use persia::service::{
-    EmbeddingWorkerServer, EwExpect, PsBackend, PsServer, RemoteEmbTier, ShardedRemotePs,
+    reshard, EmbeddingWorkerServer, EwExpect, PsBackend, PsBindOpts, PsServer, RemoteEmbTier,
+    ShardedRemotePs,
 };
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -80,7 +81,14 @@ fn preset_setup(flags: &HashMap<String, String>) -> Result<PresetSetup> {
     let preset = BenchPreset::by_name(preset_name)
         .with_context(|| format!("unknown preset {preset_name}"))?;
     let model = preset.model(flag(flags, "dense", "small"));
-    let emb_cfg = preset.embedding(&model, flag(flags, "shard-capacity", "65536").parse()?);
+    let mut emb_cfg = preset.embedding(&model, flag(flags, "shard-capacity", "65536").parse()?);
+    // --nodes overrides the preset's PS node count (it rides in the config
+    // fingerprint, so every process of a deployment must agree). A finer
+    // node grid gives live resharding more split points to migrate.
+    if let Some(s) = flags.get("nodes") {
+        emb_cfg.n_nodes = s.parse().context("--nodes")?;
+        anyhow::ensure!(emb_cfg.n_nodes >= 1, "--nodes must be at least 1");
+    }
     let seed = flag(flags, "seed", "42").parse()?;
     Ok(PresetSetup { preset, model, emb_cfg, seed })
 }
@@ -252,6 +260,32 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
         trainer.emb_comm = Some(Arc::new(tier));
     }
 
+    // --- live resharding: rank 0 probes the fleet at this cadence ---
+    match flags.get("reshard-every") {
+        Some(s) => {
+            let every: usize = s.parse().context("--reshard-every")?;
+            if every > 0 {
+                anyhow::ensure!(
+                    remote_ps.is_some(),
+                    "--reshard-every needs --remote-ps: live resharding moves nodes \
+                     between serve-ps processes (an in-process or embedding-worker \
+                     deployment has no shard fleet to rebalance)"
+                );
+                trainer.reshard = Some(reshard::ReshardConfig {
+                    every,
+                    threshold: flag(flags, "reshard-threshold", "1.25")
+                        .parse()
+                        .context("--reshard-threshold")?,
+                });
+            }
+        }
+        None => anyhow::ensure!(
+            !flags.contains_key("reshard-threshold"),
+            "--reshard-threshold requires --reshard-every (it tunes the live \
+             resharding probe; without a cadence no probe ever runs)"
+        ),
+    }
+
     // --- the recovery layer's CLI: coordinated epochs + resume ---
     if let Some(dir) = flags.get("checkpoint-dir") {
         let every: usize =
@@ -334,7 +368,10 @@ fn parse_node_range(s: &str, n_nodes: usize) -> Result<std::ops::Range<usize>> {
 /// `--node-range` slice of it — then serve it over TCP until a SHUTDOWN RPC
 /// arrives. With `--checkpoint-dir`, owned nodes are restored from existing
 /// checkpoint files at startup (the §4.2.4 process-restart recovery path)
-/// and saved again on graceful shutdown.
+/// and saved again on graceful shutdown. `--join` starts the process as an
+/// idle spare that owns nothing until a live reshard migrates nodes onto
+/// it; a persisted `ROUTING` table under the checkpoint dir re-enters a
+/// restarted shard at the committed post-migration layout.
 fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
     let PresetSetup { preset, model, emb_cfg, seed } = preset_setup(&flags)?;
     let svc = ServiceConfig::at(flag(&flags, "addr", "127.0.0.1:7700"));
@@ -342,6 +379,12 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
     anyhow::ensure!(
         svc.shard_addrs().len() == 1,
         "serve-ps takes a single --addr; run one process per shard"
+    );
+    let join = flag(&flags, "join", "false") == "true";
+    anyhow::ensure!(
+        !(join && flags.contains_key("node-range")),
+        "--join and --node-range are mutually exclusive: a spare materializes \
+         the full node range and owns nothing until a reshard commits nodes over"
     );
     let range = match flags.get("node-range") {
         Some(s) => parse_node_range(s, emb_cfg.n_nodes)?,
@@ -359,6 +402,46 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
         )
         .context("building the embedding PS storage engine")?,
     );
+
+    // A persisted ROUTING table (written at every reshard commit) overrides
+    // the static layout: a restarted shard re-enters the deployment owning
+    // whatever the committed table assigns to its --addr.
+    let routing: Option<(reshard::RoutingTable, usize)> = match flags.get("checkpoint-dir") {
+        Some(dir) => match reshard::load_routing(std::path::Path::new(dir))? {
+            Some(table) => {
+                anyhow::ensure!(
+                    table.n_nodes == emb_cfg.n_nodes,
+                    "ROUTING table covers {} nodes, this deployment has {}",
+                    table.n_nodes,
+                    emb_cfg.n_nodes
+                );
+                let self_idx =
+                    table.addrs.iter().position(|a| a == &svc.addr).with_context(|| {
+                        format!(
+                            "ROUTING table at epoch {} does not list this shard's \
+                             --addr {} (addresses: {:?}) — restart each shard with \
+                             the exact addr the deployment knows it by",
+                            table.epoch, svc.addr, table.addrs
+                        )
+                    })?;
+                println!(
+                    "ROUTING: committed epoch {} assigns this shard nodes {:?}",
+                    table.epoch,
+                    table.owned_range(self_idx)?
+                );
+                Some((table, self_idx))
+            }
+            None => None,
+        },
+        None => None,
+    };
+    // The node range this process will actually serve — what restore targets.
+    let owned = match &routing {
+        Some((table, self_idx)) => table.owned_range(*self_idx)?,
+        None if join => 0..0,
+        None => range.clone(),
+    };
+
     let mut restored_step = 0u64;
     let ckpt = match flags.get("checkpoint-dir") {
         Some(dir) => {
@@ -371,24 +454,18 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
             // per-node files remain the fallback.
             let epoch = match flags.get("restore-epoch") {
                 Some(s) => Some(s.parse::<u64>().context("--restore-epoch")?),
-                None => mgr.latest_committed_epoch(&ps.node_range()),
+                None => mgr.latest_committed_epoch(&owned),
             };
             match epoch {
                 Some(step) => {
-                    mgr.restore_epoch(&ps, step).with_context(|| {
-                        format!(
-                            "restoring nodes {:?} from epoch {step} in {dir}",
-                            ps.node_range()
-                        )
+                    mgr.restore_epoch_range(&ps, step, owned.clone()).with_context(|| {
+                        format!("restoring nodes {owned:?} from epoch {step} in {dir}")
                     })?;
                     restored_step = step;
-                    println!(
-                        "restored nodes {:?} from committed epoch step-{step}",
-                        ps.node_range()
-                    );
+                    println!("restored nodes {owned:?} from committed epoch step-{step}");
                 }
                 None => {
-                    for node in ps.node_range() {
+                    for node in owned.clone() {
                         if mgr.exists(node) {
                             mgr.restore_node(&ps, node)
                                 .with_context(|| format!("restoring node {node} from {dir}"))?;
@@ -401,8 +478,19 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
         }
         None => None,
     };
-    let server =
-        PsServer::bind_with_epochs(ps.clone(), &svc.addr, &emb_cfg, seed, ckpt.clone(), restored_step)?;
+    let server = PsServer::bind_with_opts(
+        ps.clone(),
+        &svc.addr,
+        &emb_cfg,
+        seed,
+        PsBindOpts {
+            ckpt: ckpt.clone(),
+            restored_step,
+            join,
+            routing,
+            routing_dir: flags.get("checkpoint-dir").map(std::path::PathBuf::from),
+        },
+    )?;
     let storage_desc = match &store {
         StoreConfig::Hot => format!("all-hot capacity={}/shard", emb_cfg.shard_capacity),
         StoreConfig::Tiered { hot_capacity, cold_dir, admit_threshold } => format!(
@@ -411,13 +499,14 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
         ),
     };
     println!(
-        "persia serve-ps: preset={} dim={} nodes={} (serving {}..{}) shards/node={} \
+        "persia serve-ps: preset={} dim={} nodes={} (serving {}..{}{}) shards/node={} \
          {storage_desc} seed={}",
         preset.name,
         model.emb_dim_per_group,
         emb_cfg.n_nodes,
-        range.start,
-        range.end,
+        owned.start,
+        owned.end,
+        if join { ", --join spare" } else { "" },
         emb_cfg.shards_per_node,
         seed,
     );
@@ -428,8 +517,22 @@ fn cmd_serve_ps(flags: HashMap<String, String>) -> Result<()> {
     std::io::stdout().flush().ok();
     server.serve_forever()?;
     if let Some(mgr) = ckpt {
-        mgr.save(&ps)?;
-        println!("checkpointed nodes {:?} on shutdown", ps.node_range());
+        // The legacy flat per-node save assumes the static layout (physical
+        // range == served range). Once live resharding is in play — a
+        // spare, or a committed ROUTING table — ownership may have moved
+        // mid-run, and a full-range flat save would clobber other shards'
+        // fallback files with wiped or stale rows; committed checkpoint
+        // epochs are the durable state there.
+        let resharded = flags
+            .get("checkpoint-dir")
+            .map(|d| reshard::routing_path(std::path::Path::new(d)).exists())
+            .unwrap_or(false);
+        if join || resharded {
+            println!("skipping flat-file save on shutdown (resharding deployment)");
+        } else {
+            mgr.save(&ps)?;
+            println!("checkpointed nodes {:?} on shutdown", ps.node_range());
+        }
     }
     Ok(())
 }
@@ -644,10 +747,16 @@ fn cmd_train_worker(flags: HashMap<String, String>) -> Result<()> {
     let ps_wire_compress = flag(&flags, "ps-wire-compress", "false") == "true";
     let ckpt_every: u64 =
         trainer.checkpoint.as_ref().map(|c| c.every as u64).unwrap_or(0);
+    // The reshard cadence rides along for the same reason as the checkpoint
+    // cadence: its drive is a collective ordered section in deterministic
+    // mode, so disagreeing ranks would desynchronize the ring tokens.
+    let reshard_every: u64 =
+        trainer.reshard.as_ref().map(|r| r.every as u64).unwrap_or(0);
     let fingerprint = (trainer.config_fingerprint()
         ^ u64::from(ring_cfg.compress)
         ^ (u64::from(ps_wire_compress) << 1)
         ^ (ckpt_every << 2)
+        ^ (reshard_every << 3)
         ^ ((trainer.start_step as u64) << 20)
         ^ trainer.gossip_period.rotate_left(44))
         .wrapping_mul(0x0000_0100_0000_01b3);
@@ -783,7 +892,18 @@ fn usage() -> ! {
          shard (default: --shard-capacity) over a disk-backed cold tier under DIR; \
          eviction demotes the exact row bytes and a cold hit promotes them back, so \
          numerics are bitwise identical to an all-hot run of the same \
-         --shard-capacity; checkpoint epochs persist both tiers (ps_node_N.cold)"
+         --shard-capacity; checkpoint epochs persist both tiers (ps_node_N.cold)\n\
+         live resharding (grow a deployment mid-run): start a spare with \
+         serve-ps --join (same preset flags, no --node-range; it materializes the \
+         full node range but owns nothing), list it LAST in every process's \
+         --remote-ps, and train with --reshard-every N [--reshard-threshold T] \
+         [--nodes N]: rank 0 merges per-node traffic at each N-step boundary and, \
+         when the per-process imbalance reaches T (default 1.25), migrates the hot \
+         shard's tail nodes onto the spare behind a PREPARE/MIGRATE/COMMIT barrier \
+         (no update lost; abort on any failure keeps the old layout); commits \
+         persist a ROUTING table under --checkpoint-dir so restarted shards \
+         re-enter at the committed layout; make --reshard-every a multiple of \
+         --checkpoint-every so each migration is checkpointed at the same boundary"
     );
     std::process::exit(2)
 }

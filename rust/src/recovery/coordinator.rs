@@ -87,6 +87,10 @@ pub struct GlobalManifest {
     pub opt_m: Vec<f32>,
     /// Optimizer second-moment state (empty for SGD/momentum).
     pub opt_v: Vec<f32>,
+    /// Routing epoch of the PS fleet at the boundary (0 before any live
+    /// reshard). A resume started against a fleet that resharded since the
+    /// checkpoint can detect the skew and refresh its routing table.
+    pub routing_epoch: u64,
 }
 
 impl GlobalManifest {
@@ -99,6 +103,7 @@ impl GlobalManifest {
             self.world as u64,
             self.opt_kind,
             self.opt_t,
+            self.routing_epoch,
         ]);
         w.put_u64(&self.loader_cursors);
         w.put_f32(&self.params);
@@ -124,7 +129,13 @@ impl GlobalManifest {
         let r = WireReader::parse(body)?;
         ensure!(r.kind() == KIND_MANIFEST, "manifest body kind {:#x}", r.kind());
         let head = r.u64(0)?;
-        ensure!(head.len() == 5, "manifest header has {} fields", head.len());
+        // 5 fields = pre-resharding manifests (implicit routing epoch 0);
+        // 6 fields = current format with the routing epoch appended.
+        ensure!(
+            (5..=6).contains(&head.len()),
+            "manifest header has {} fields",
+            head.len()
+        );
         let m = GlobalManifest {
             step: head[0],
             fingerprint: head[1],
@@ -135,6 +146,7 @@ impl GlobalManifest {
             params: r.f32(2)?,
             opt_m: r.f32(3)?,
             opt_v: r.f32(4)?,
+            routing_epoch: head.get(5).copied().unwrap_or(0),
         };
         ensure!(m.opt_kind <= 2, "unknown dense optimizer code {}", m.opt_kind);
         ensure!(!m.params.is_empty(), "manifest carries no dense parameters");
@@ -295,6 +307,7 @@ mod tests {
             params: vec![1.0, -2.5, 3.25],
             opt_m: Vec::new(),
             opt_v: Vec::new(),
+            routing_epoch: 2,
         }
     }
 
@@ -322,6 +335,28 @@ mod tests {
             b[i] ^= 0xff;
             assert!(GlobalManifest::from_bytes(&b).is_err(), "flip at {i} accepted");
         }
+    }
+
+    #[test]
+    fn manifest_accepts_legacy_five_field_header() {
+        // Pre-resharding manifests carried 5 header words; they must still
+        // parse, with the routing epoch defaulting to 0.
+        let m = sample(6);
+        let mut w = WireWriter::new(KIND_MANIFEST);
+        w.put_u64(&[m.step, m.fingerprint, m.world as u64, m.opt_kind, m.opt_t]);
+        w.put_u64(&m.loader_cursors);
+        w.put_f32(&m.params);
+        w.put_f32(&m.opt_m);
+        w.put_f32(&m.opt_v);
+        let body = w.finish();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MANIFEST_MAGIC);
+        bytes.extend_from_slice(&crc32(&body).to_le_bytes());
+        bytes.extend_from_slice(&body);
+        let back = GlobalManifest::from_bytes(&bytes).unwrap();
+        assert_eq!(back.routing_epoch, 0);
+        assert_eq!(back.step, m.step);
+        assert_eq!(back.params, m.params);
     }
 
     #[test]

@@ -184,6 +184,25 @@ impl PutReplayLog {
         self.len() == 0
     }
 
+    /// Drop every retained entry without touching the commit history
+    /// (returns how many were discarded). Called when a routing reshard
+    /// commits: the retained window was recorded against the pre-migration
+    /// routing, so replaying it into a restarted shard would push migrated
+    /// keys into a process that no longer owns them. A replay attempted
+    /// before the next committed epoch reports the cleared window as
+    /// dropped-beyond-cap (best-effort), which is exactly its new status.
+    pub fn clear(&self) -> usize {
+        if self.cap == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.entries.len();
+        inner.base += n as u64;
+        inner.entries.clear();
+        inner.progress = None;
+        n
+    }
+
     /// Mark checkpoint epoch `step` committed at the current log position:
     /// entries recorded before the *previous* commit can never be needed
     /// again (a server restores its newest committed epoch; one epoch of
@@ -398,6 +417,27 @@ mod tests {
         log2.record(&[2], &[0.0]);
         log2.mark_committed(8);
         assert!(collect_replay(&log2, 9, 8).is_empty());
+    }
+
+    #[test]
+    fn clear_drops_the_window_but_later_records_still_replay() {
+        let log = PutReplayLog::new(8);
+        log.sync_boot(1);
+        log.record(&[1], &[0.0]);
+        log.record(&[2], &[0.0]);
+        assert_eq!(log.clear(), 2);
+        assert!(log.is_empty());
+        // The cleared window is gone for good (best-effort from epoch 0)…
+        assert!(collect_replay(&log, 2, 0).is_empty());
+        // …but entries recorded after the clear replay normally from the
+        // next committed epoch.
+        log.sync_boot(2);
+        log.record(&[3], &[0.0]);
+        log.mark_committed(10);
+        log.record(&[4], &[0.0]);
+        assert_eq!(collect_replay(&log, 3, 10), vec![vec![4]]);
+        // A disabled log clears nothing.
+        assert_eq!(PutReplayLog::disabled().clear(), 0);
     }
 
     #[test]

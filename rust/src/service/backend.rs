@@ -82,6 +82,23 @@ pub trait PsBackend: Send + Sync {
     /// client-side put replay log can truncate. Default: nothing to mark.
     fn mark_epoch_committed(&self, _step: u64) {}
 
+    /// Inspect the merged per-node traffic and, if the hottest shard's
+    /// load exceeds `threshold` times the mean, drive one live resharding
+    /// round (PREPARE → MIGRATE → COMMIT across the shard fleet; see
+    /// [`crate::service::reshard`]). Returns the newly committed routing
+    /// epoch, or `Ok(None)` when the deployment is balanced or the backend
+    /// cannot reshard (the default: in-process and single-shard PSes have
+    /// nothing to migrate between).
+    fn maybe_reshard(&self, _threshold: f64) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// The committed routing epoch of the deployment behind this backend
+    /// (0 = the initial static layout; bumped by each committed reshard).
+    fn routing_epoch(&self) -> u64 {
+        0
+    }
+
     /// Whether this backend keeps a client-side gradient-put replay log
     /// (`--ps-replay`). An embedding worker advertises this in its INFO
     /// handshake: a trainer must refuse to fail over *away* from a worker

@@ -39,6 +39,19 @@ use crate::recovery::{
 use super::backend::{PsBackend, PsStats};
 use super::protocol;
 use super::protocol::PsInfo;
+use super::reshard::RoutingTable;
+
+/// Outcome of a routed GET/PUT against one shard. A server that no longer
+/// (or does not yet) own some key's node answers the WHOLE batch with an
+/// in-band NOT_OWNER frame — nothing applied, nothing served — carrying its
+/// committed routing epoch so the caller can refresh and re-route.
+pub(super) enum ShardCall {
+    /// The batch was served/applied in full.
+    Applied,
+    /// The batch was refused; the shard's committed routing epoch rides
+    /// along (always a re-route signal, never a partial application).
+    NotOwner(u64),
+}
 
 /// Dial/handshake/replay policy for one PS shard endpoint.
 pub(super) struct PsRedial {
@@ -207,6 +220,13 @@ impl RemotePs {
             return Ok(());
         }
         let resp = self.call(&protocol::encode_get_request(packed, self.wire_compress))?;
+        if let Some(epoch) = protocol::decode_not_owner(&resp) {
+            anyhow::bail!(
+                "PS at {} does not own every requested key (its routing epoch is {epoch}); \
+                 single-server clients cannot re-route — use ShardedRemotePs",
+                self.addr()
+            );
+        }
         protocol::decode_get_response_into(&resp, self.info.dim, out)?;
         Ok(())
     }
@@ -221,6 +241,13 @@ impl RemotePs {
         }
         let msg = protocol::encode_put_request(packed, grads, self.info.dim, self.wire_compress);
         let resp = self.call(&msg)?;
+        if let Some(epoch) = protocol::decode_not_owner(&resp) {
+            anyhow::bail!(
+                "PS at {} refused a put: it does not own every key (routing epoch {epoch}); \
+                 single-server clients cannot re-route — use ShardedRemotePs",
+                self.addr()
+            );
+        }
         let applied = protocol::decode_put_response(&resp)?;
         ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
         self.pool.redialer().replay.record(packed, grads);
@@ -236,11 +263,20 @@ impl RemotePs {
     }
 
     /// Claim a [`Self::start_get`] response into `out` (shaped
-    /// `packed.len() * dim`, same contract as [`Self::get_packed`]).
-    pub(super) fn finish_get(&self, call: PoolAsyncCall<'_, PsRedial>, out: &mut [f32]) -> Result<()> {
+    /// `packed.len() * dim`). [`ShardCall::NotOwner`] means nothing was
+    /// served and `out` is untouched — the sharded client refreshes its
+    /// routing table and retries the sub-batch elsewhere.
+    pub(super) fn finish_get(
+        &self,
+        call: PoolAsyncCall<'_, PsRedial>,
+        out: &mut [f32],
+    ) -> Result<ShardCall> {
         let resp = call.wait()?;
+        if let Some(epoch) = protocol::decode_not_owner(&resp) {
+            return Ok(ShardCall::NotOwner(epoch));
+        }
         protocol::decode_get_response_into(&resp, self.info.dim, out)?;
-        Ok(())
+        Ok(ShardCall::Applied)
     }
 
     /// Start a pipelined gradient PUT (non-empty `packed`; `grads` shaped
@@ -250,19 +286,39 @@ impl RemotePs {
         self.pool.call_async(&msg)
     }
 
-    /// Claim a [`Self::start_put`] ack; on success the put is recorded in
-    /// the replay log exactly as the synchronous path records it.
+    /// Claim a [`Self::start_put`] ack; on [`ShardCall::Applied`] the put
+    /// is recorded in the replay log exactly as the synchronous path
+    /// records it. [`ShardCall::NotOwner`] means NO row was applied (the
+    /// server's put is all-or-nothing per batch), so the whole sub-batch is
+    /// safe to retry against the current owner.
     pub(super) fn finish_put(
         &self,
         call: PoolAsyncCall<'_, PsRedial>,
         packed: &[u64],
         grads: &[f32],
-    ) -> Result<()> {
+    ) -> Result<ShardCall> {
         let resp = call.wait()?;
+        if let Some(epoch) = protocol::decode_not_owner(&resp) {
+            return Ok(ShardCall::NotOwner(epoch));
+        }
         let applied = protocol::decode_put_response(&resp)?;
         ensure!(applied == packed.len(), "PS applied {applied} of {} rows", packed.len());
         self.pool.redialer().replay.record(packed, grads);
-        Ok(())
+        Ok(ShardCall::Applied)
+    }
+
+    /// Fetch the server's committed routing table over the pool (`None`
+    /// before the deployment's first reshard).
+    pub(super) fn fetch_routing(&self) -> Result<Option<RoutingTable>> {
+        let resp = self.call(&protocol::encode_routing_request())?;
+        protocol::decode_routing_response(&resp)
+    }
+
+    /// Drop every recorded put batch (returns how many were discarded).
+    /// Required at a reshard flip: entries recorded against the pre-flip
+    /// routing would replay keys into a shard that no longer owns them.
+    pub(super) fn clear_replay(&self) -> usize {
+        self.pool.redialer().replay.clear()
     }
 
     /// STATS including the server's global-length per-node traffic vector.

@@ -51,6 +51,7 @@ pub mod embedding_worker;
 #[cfg(unix)]
 pub mod event_loop;
 pub mod protocol;
+pub mod reshard;
 pub mod server;
 pub mod sharded;
 
@@ -60,5 +61,6 @@ pub use embedding_worker::{
     EmbeddingWorkerServer, EwExpect, EwInfo, EwServerHandle, RemoteEmbTier,
     RemoteEmbeddingWorker,
 };
-pub use server::{serve_rpc, PsServer, PsServerHandle};
+pub use reshard::{plan_rebalance, MigrationPlan, RoutingTable};
+pub use server::{serve_rpc, PsBindOpts, PsServer, PsServerHandle};
 pub use sharded::ShardedRemotePs;

@@ -59,6 +59,29 @@ pub const KIND_PREPARE_CKPT: u32 = 0x5008;
 /// Checkpoint-epoch phase 2: rename the staged snapshots into place and
 /// write the shard's commit manifest.
 pub const KIND_COMMIT_CKPT: u32 = 0x5009;
+/// Fetch the server's committed routing table (serialized
+/// [`RoutingTable`](super::reshard::RoutingTable) bytes). Clients that hit
+/// [`KIND_NOT_OWNER`] refresh through this and retry.
+pub const KIND_ROUTING: u32 = 0x500A;
+/// Reshard phase 1 (PREPARE_CKPT-style barrier): stage a migration plan +
+/// the epoch-N+1 routing table on every shard. Nothing moves yet.
+pub const KIND_PREPARE_RESHARD: u32 = 0x500B;
+/// Reshard copy phase, sent to the *source* shard only: stream every
+/// migrating node (embedding ⊕ optimizer bytes, cold rows included) to the
+/// destination via RESTORE pushes, gating concurrent puts per node.
+pub const KIND_MIGRATE_OUT: u32 = 0x500C;
+/// Reshard phase 2: atomically adopt the staged table (dest first, then
+/// source — the source drains its gated-put queue to the dest, narrows its
+/// owned range and wipes the moved nodes — then bystanders).
+pub const KIND_COMMIT_RESHARD: u32 = 0x500D;
+/// Reshard rollback: drop the staged plan/table; the dest wipes any
+/// half-copied nodes, the source keeps everything and clears its gates.
+pub const KIND_ABORT_RESHARD: u32 = 0x500E;
+/// In-band "wrong shard" response to GET/PUT, carrying the server's
+/// committed routing epoch. This MUST be a structured response, not a
+/// handler error: an `Err` tears down the whole pipelined connection,
+/// while a stale client only needs to refresh its table and re-route.
+pub const KIND_NOT_OWNER: u32 = 0x500F;
 
 /// Flag bit: value payload is fp16 + per-row scales.
 const FLAG_COMPRESS: u8 = 1;
@@ -121,19 +144,33 @@ pub struct PsInfo {
     /// start or legacy flat-file restore). The replay log re-sends exactly
     /// the puts recorded after this epoch.
     pub restored_step: u64,
+    /// Whether this server was started with `serve-ps --join`: it holds the
+    /// FULL node range physically (so unseen-key materialization is bitwise
+    /// identical to any source shard's) but owns nothing until a reshard
+    /// commits nodes to it. Only joinable shards are valid migration
+    /// destinations.
+    pub joinable: bool,
+    /// The routing epoch this server is serving (0 until a reshard commits).
+    pub routing_epoch: u64,
 }
 
 impl PsInfo {
     /// Whether `other` describes the same PS deployment: every numeric and
-    /// geometric field must match, but the per-process boot nonce and the
-    /// restored epoch are *instance* identity, not deployment identity — a
-    /// shard killed and restarted from its checkpoint must still count as
-    /// "the same PS" so the client can rejoin it (§4.2.4).
+    /// geometric field must match, but the per-process boot nonce, the
+    /// restored epoch, the owned node range, and the routing epoch are
+    /// *instance/topology* identity, not deployment identity — a shard
+    /// killed and restarted from its checkpoint, or one whose owned range
+    /// changed in a live reshard, must still count as "the same PS" so the
+    /// client can rejoin it (§4.2.4).
     pub fn same_deployment(&self, other: &PsInfo) -> bool {
         let strip = |i: &PsInfo| {
             let mut i = *i;
             i.boot_nonce = 0;
             i.restored_step = 0;
+            i.node_start = 0;
+            i.node_end = 0;
+            i.joinable = false;
+            i.routing_epoch = 0;
             i
         };
         strip(self) == strip(other)
@@ -222,16 +259,24 @@ pub fn encode_info_response(info: &PsInfo) -> Vec<u8> {
         info.node_end as u64,
         info.boot_nonce,
         info.restored_step,
+        u64::from(info.joinable),
+        info.routing_epoch,
     ]);
     w.finish()
 }
 
-/// Decode an INFO response (validating the node range).
+/// Decode an INFO response (validating the node range). Accepts both the
+/// 12-field pre-reshard layout (joinable/routing_epoch default to 0) and
+/// the 14-field layout, so mixed-version deployments still handshake.
 pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_INFO, "expected INFO response, got kind {}", r.kind());
     let xs = r.u64(0)?;
-    ensure!(xs.len() == 12, "malformed INFO response ({} fields)", xs.len());
+    ensure!(
+        xs.len() == 12 || xs.len() == 14,
+        "malformed INFO response ({} fields)",
+        xs.len()
+    );
     let info = PsInfo {
         dim: xs[0] as usize,
         n_nodes: xs[1] as usize,
@@ -245,9 +290,13 @@ pub fn decode_info_response(msg: &[u8]) -> Result<PsInfo> {
         node_end: xs[9] as usize,
         boot_nonce: xs[10],
         restored_step: xs[11],
+        joinable: xs.get(12).copied().unwrap_or(0) != 0,
+        routing_epoch: xs.get(13).copied().unwrap_or(0),
     };
+    // An EMPTY range is legal now: a `--join` spare (and a source that gave
+    // everything away) owns nothing while staying a live deployment member.
     ensure!(
-        info.node_start < info.node_end && info.node_end <= info.n_nodes,
+        info.node_start <= info.node_end && info.node_end <= info.n_nodes,
         "INFO node range {}..{} invalid for {} nodes",
         info.node_start,
         info.node_end,
@@ -618,6 +667,148 @@ pub fn encode_shutdown_response() -> Vec<u8> {
     WireWriter::new(KIND_SHUTDOWN).finish()
 }
 
+// --- ROUTING / PREPARE_RESHARD / MIGRATE_OUT / COMMIT / ABORT / NOT_OWNER ---
+//
+// Live resharding reuses the two-phase shape of the checkpoint-epoch
+// protocol: PREPARE stages the plan + next table everywhere (nothing
+// applied), MIGRATE_OUT makes the source stream the moving nodes to the
+// destination, COMMIT flips ownership (dest → source → bystanders), ABORT
+// rolls back. GET/PUT answered with an in-band NOT_OWNER frame carry the
+// server's committed epoch so stale clients can refresh and re-route
+// without tearing down their pipelined connections.
+
+use super::reshard::{MigrationPlan, RoutingTable};
+
+/// Encode a ROUTING request (empty body).
+pub fn encode_routing_request() -> Vec<u8> {
+    WireWriter::new(KIND_ROUTING).finish()
+}
+
+/// Encode a ROUTING response carrying the committed table — or an empty
+/// payload when this server has none yet (epoch 0, pre-first-reshard:
+/// servers never learn the deployment's address list until a PREPARE).
+pub fn encode_routing_response(table: Option<&RoutingTable>) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_ROUTING);
+    match table {
+        Some(t) => w.put_u8(&t.to_bytes()),
+        None => w.put_u8(&[]),
+    };
+    w.finish()
+}
+
+/// Decode a ROUTING response into the committed table (`None` = the server
+/// has not committed a reshard and knows no table).
+pub fn decode_routing_response(msg: &[u8]) -> Result<Option<RoutingTable>> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_ROUTING, "expected ROUTING response, got kind {}", r.kind());
+    let bytes = r.u8(0)?;
+    if bytes.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(RoutingTable::from_bytes(bytes)?))
+}
+
+/// Encode a PREPARE_RESHARD request staging `plan` and the epoch-N+1
+/// `table` it produces. `shard_idx` is the *recipient's* index in
+/// `table.addrs` — how each server learns its role (source / destination /
+/// bystander) without guessing from address strings.
+pub fn encode_prepare_reshard(
+    plan: &MigrationPlan,
+    table: &RoutingTable,
+    shard_idx: usize,
+) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_PREPARE_RESHARD);
+    w.put_u64(&[shard_idx as u64]);
+    w.put_u8(&plan.to_bytes());
+    w.put_u8(&table.to_bytes());
+    w.finish()
+}
+
+/// Decode a PREPARE_RESHARD request into `(plan, staged table, recipient
+/// shard index)`.
+pub fn decode_prepare_reshard(msg: &[u8]) -> Result<(MigrationPlan, RoutingTable, usize)> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == KIND_PREPARE_RESHARD, "expected PREPARE_RESHARD, got {}", r.kind());
+    let head = r.u64(0)?;
+    ensure!(head.len() == 1, "malformed PREPARE_RESHARD header");
+    let shard_idx = head[0] as usize;
+    let plan = MigrationPlan::from_bytes(r.u8(1)?)?;
+    let table = RoutingTable::from_bytes(r.u8(2)?)?;
+    ensure!(
+        table.epoch == plan.from_epoch + 1,
+        "staged table epoch {} does not follow plan epoch {}",
+        table.epoch,
+        plan.from_epoch
+    );
+    ensure!(
+        shard_idx < table.addrs.len(),
+        "PREPARE_RESHARD shard index {shard_idx} out of range for {} shards",
+        table.addrs.len()
+    );
+    Ok((plan, table, shard_idx))
+}
+
+/// Encode a MIGRATE_OUT / COMMIT_RESHARD / ABORT_RESHARD control request,
+/// pinned to the plan's `from_epoch` so a stale coordinator cannot drive a
+/// phase against the wrong staged plan.
+pub fn encode_reshard_ctl(kind: u32, from_epoch: u64) -> Vec<u8> {
+    debug_assert!(
+        kind == KIND_MIGRATE_OUT || kind == KIND_COMMIT_RESHARD || kind == KIND_ABORT_RESHARD
+    );
+    let mut w = WireWriter::new(kind);
+    w.put_u64(&[from_epoch]);
+    w.finish()
+}
+
+/// Decode a reshard control request of the expected `kind` into its epoch.
+pub fn decode_reshard_ctl(msg: &[u8], kind: u32) -> Result<u64> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == kind, "expected reshard kind {kind:#x}, got {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed reshard control request");
+    Ok(xs[0])
+}
+
+/// Encode a reshard control ack (`n` = nodes copied for MIGRATE_OUT,
+/// otherwise 1).
+pub fn encode_reshard_ack(kind: u32, n: usize) -> Vec<u8> {
+    let mut w = WireWriter::new(kind);
+    w.put_u64(&[n as u64]);
+    w.finish()
+}
+
+/// Decode a reshard control ack of the expected `kind`.
+pub fn decode_reshard_ack(msg: &[u8], kind: u32) -> Result<usize> {
+    let r = WireReader::parse(msg)?;
+    ensure!(r.kind() == kind, "expected reshard ack kind {kind:#x}, got {:#x}", r.kind());
+    let xs = r.u64(0)?;
+    ensure!(xs.len() == 1, "malformed reshard ack");
+    Ok(xs[0] as usize)
+}
+
+/// Encode the in-band NOT_OWNER response (the server's committed epoch).
+pub fn encode_not_owner(committed_epoch: u64) -> Vec<u8> {
+    let mut w = WireWriter::new(KIND_NOT_OWNER);
+    w.put_u64(&[committed_epoch]);
+    w.finish()
+}
+
+/// If `msg` is a NOT_OWNER frame, return the server's committed epoch.
+/// Callers probe this BEFORE their kind-checked decode so a re-route
+/// signal is never misreported as a protocol error.
+pub fn decode_not_owner(msg: &[u8]) -> Option<u64> {
+    let r = WireReader::parse(msg).ok()?;
+    if r.kind() != KIND_NOT_OWNER {
+        return None;
+    }
+    let xs = r.u64(0).ok()?;
+    if xs.len() == 1 {
+        Some(xs[0])
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -679,6 +870,8 @@ mod tests {
             node_end: 3,
             boot_nonce: 0x5eed_b007,
             restored_step: 12,
+            joinable: false,
+            routing_epoch: 0,
         }
     }
 
@@ -694,9 +887,13 @@ mod tests {
         let mut c = a;
         c.seed += 1;
         assert!(!a.same_deployment(&c));
+        // Since live resharding, the owned range and routing epoch are
+        // *topology*, not deployment identity: a redial after a reshard
+        // reaches the same PS with a narrower range and a newer epoch.
         let mut d = a;
         d.node_start = 0;
-        assert!(!a.same_deployment(&d), "node range IS deployment identity here");
+        d.routing_epoch = 3;
+        assert!(a.same_deployment(&d), "owned range is topology, not identity");
     }
 
     #[test]
@@ -749,11 +946,83 @@ mod tests {
     fn bad_info_node_range_rejected() {
         let mut info = sample_info();
         info.node_start = 3;
-        info.node_end = 3; // empty range
-        assert!(decode_info_response(&encode_info_response(&info)).is_err());
+        info.node_end = 3; // empty range: legal since --join spares exist
+        let back = decode_info_response(&encode_info_response(&info)).unwrap();
+        assert_eq!((back.node_start, back.node_end), (3, 3));
         info.node_start = 0;
-        info.node_end = 5; // beyond n_nodes
+        info.node_end = 5; // beyond n_nodes is still malformed
         assert!(decode_info_response(&encode_info_response(&info)).is_err());
+        info.node_end = 4;
+        info.node_start = 5; // inverted is still malformed
+        assert!(decode_info_response(&encode_info_response(&info)).is_err());
+    }
+
+    #[test]
+    fn legacy_12_field_info_still_decodes() {
+        let info = sample_info();
+        // Encode by hand with the pre-reshard 12-field header.
+        let mut w = WireWriter::new(KIND_INFO);
+        w.put_u64(&[
+            info.dim as u64,
+            info.n_nodes as u64,
+            info.shards_per_node as u64,
+            info.seed,
+            info.shard_capacity as u64,
+            info.optimizer_code,
+            info.partition_code,
+            info.lr_bits as u64,
+            info.node_start as u64,
+            info.node_end as u64,
+            info.boot_nonce,
+            info.restored_step,
+        ]);
+        let back = decode_info_response(&w.finish()).unwrap();
+        assert!(!back.joinable);
+        assert_eq!(back.routing_epoch, 0);
+        assert!(back.same_deployment(&info));
+    }
+
+    #[test]
+    fn reshard_codecs_roundtrip() {
+        let table = RoutingTable::initial(
+            4,
+            &[0..3, 3..4, 0..0],
+            &["a:1".into(), "b:2".into(), "c:3".into()],
+        )
+        .unwrap();
+        let plan = MigrationPlan { from_epoch: 0, source: 0, dest: 2, nodes: 1..3 };
+        let staged = crate::service::reshard::apply(&table, &plan).unwrap();
+
+        let back = decode_routing_response(&encode_routing_response(Some(&table))).unwrap();
+        assert_eq!(back, Some(table.clone()));
+        // A server with no committed table answers with an empty payload.
+        assert_eq!(decode_routing_response(&encode_routing_response(None)).unwrap(), None);
+
+        let (p2, t2, idx) =
+            decode_prepare_reshard(&encode_prepare_reshard(&plan, &staged, 1)).unwrap();
+        assert_eq!(p2, plan);
+        assert_eq!(t2, staged);
+        assert_eq!(idx, 1);
+        // A staged table whose epoch does not follow the plan is rejected,
+        // as is a recipient index beyond the deployment.
+        assert!(decode_prepare_reshard(&encode_prepare_reshard(&plan, &table, 1)).is_err());
+        assert!(decode_prepare_reshard(&encode_prepare_reshard(&plan, &staged, 9)).is_err());
+
+        for kind in [KIND_MIGRATE_OUT, KIND_COMMIT_RESHARD, KIND_ABORT_RESHARD] {
+            let req = encode_reshard_ctl(kind, 7);
+            assert_eq!(decode_reshard_ctl(&req, kind).unwrap(), 7);
+            let ack = encode_reshard_ack(kind, 2);
+            assert_eq!(decode_reshard_ack(&ack, kind).unwrap(), 2);
+        }
+        // Phase confusion is rejected.
+        let req = encode_reshard_ctl(KIND_MIGRATE_OUT, 1);
+        assert!(decode_reshard_ctl(&req, KIND_COMMIT_RESHARD).is_err());
+
+        // NOT_OWNER probes: a NOT_OWNER frame yields its epoch, anything
+        // else (including garbage) yields None.
+        assert_eq!(decode_not_owner(&encode_not_owner(5)), Some(5));
+        assert_eq!(decode_not_owner(&encode_put_response(1)), None);
+        assert_eq!(decode_not_owner(b"garbage"), None);
     }
 
     #[test]

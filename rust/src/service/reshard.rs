@@ -1,0 +1,567 @@
+//! Live PS resharding: versioned routing tables + migration planning.
+//!
+//! The static deployment assumption so far was that the `--node-range`
+//! slices given to each `serve-ps` at startup ARE the routing table, forever.
+//! Zipf traffic breaks that: the per-node stats from PR 2 show a few nodes
+//! absorbing most of the load, and Lui et al. (PAPERS.md) argue
+//! placement/rebalancing is *the* operative problem at this scale. This
+//! module supplies the data plane-independent half of the fix:
+//!
+//! * [`RoutingTable`] — an **epoch-versioned** map `node → shard process`,
+//!   serialized with the same magic + CRC framing as every other durable
+//!   artifact in the repo (corruption ⇒ `Err`, never a panic, never a
+//!   structurally inconsistent table).
+//! * [`MigrationPlan`] — one contiguous node range moving from a hot source
+//!   shard to an empty (freshly `--join`ed) destination shard.
+//! * [`plan_rebalance`] — the planner: merged per-node traffic in, a plan
+//!   out iff the per-process imbalance exceeds the caller's threshold AND
+//!   the move provably reduces it.
+//! * [`apply`] — pure function from `(table at epoch N, plan)` to the table
+//!   at epoch N+1; the property suite pins totality (every node owned by
+//!   exactly one shard) and minimal movement (only `plan.nodes` changes
+//!   owner).
+//!
+//! The wire/barrier machinery that *executes* a plan (PREPARE → MIGRATE →
+//! COMMIT/ABORT) lives in [`super::server`] and [`super::sharded`]; this
+//! module stays free of sockets so the planner is exhaustively testable.
+
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::embedding::checkpoint::crc32;
+
+/// Leading magic of a serialized [`RoutingTable`].
+const TABLE_MAGIC: &[u8; 8] = b"PRRT0001";
+/// Wire-message kind of the table body (file-local, not a network kind).
+const KIND_TABLE: u32 = 0x7F03;
+/// Leading magic of a serialized [`MigrationPlan`].
+const PLAN_MAGIC: &[u8; 8] = b"PRMP0001";
+/// Wire-message kind of the plan body (file-local, not a network kind).
+const KIND_PLAN: u32 = 0x7F04;
+
+/// When a trainer probes for live resharding (`--reshard-every` +
+/// `--reshard-threshold`): every `every` steps, rank 0 merges the fleet's
+/// per-node traffic and runs [`plan_rebalance`] with `threshold`.
+#[derive(Clone, Debug)]
+pub struct ReshardConfig {
+    /// Probe the fleet's imbalance every this many steps (at step
+    /// boundaries, like checkpoint epochs).
+    pub every: usize,
+    /// Migrate when the per-process imbalance (max over mean of per-shard
+    /// traffic) is at or above this. Must exceed 1.0 — the imbalance of a
+    /// perfectly balanced fleet — or every probe would trigger a migration.
+    pub threshold: f64,
+}
+
+impl ReshardConfig {
+    /// Error on a configuration that can never behave sensibly.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.every >= 1, "reshard cadence must be >= 1 step");
+        ensure!(
+            self.threshold > 1.0 && self.threshold.is_finite(),
+            "reshard threshold must be a finite value > 1.0 (got {})",
+            self.threshold
+        );
+        Ok(())
+    }
+}
+
+/// Epoch-versioned ownership map: which shard *process* serves each PS node.
+///
+/// Epoch 0 is the implicit table every deployment starts with — derived
+/// from the `--node-range` slices advertised in the INFO handshake, in
+/// `--remote-ps` list order. Every committed reshard bumps the epoch by
+/// one; clients and servers compare epochs to decide who is stale.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutingTable {
+    /// Version counter; a higher epoch always supersedes a lower one.
+    pub epoch: u64,
+    /// Total PS nodes (the global `route()` space, unchanged by resharding).
+    pub n_nodes: usize,
+    /// `owner[node]` = index into `addrs` of the shard serving that node.
+    pub owner: Vec<u32>,
+    /// Shard process addresses, in the deployment's `--remote-ps` order.
+    pub addrs: Vec<String>,
+}
+
+impl RoutingTable {
+    /// The epoch-0 table of a fresh deployment: `ranges[s]` is shard `s`'s
+    /// advertised node range (empty for a `--join` spare).
+    pub fn initial(n_nodes: usize, ranges: &[Range<usize>], addrs: &[String]) -> Result<Self> {
+        ensure!(ranges.len() == addrs.len(), "ranges/addrs length mismatch");
+        let mut owner = vec![u32::MAX; n_nodes];
+        for (s, range) in ranges.iter().enumerate() {
+            for node in range.clone() {
+                ensure!(node < n_nodes, "shard {s} advertises node {node} >= {n_nodes}");
+                ensure!(
+                    owner[node] == u32::MAX,
+                    "node {node} advertised by two shards ({} and {s})",
+                    owner[node]
+                );
+                owner[node] = s as u32;
+            }
+        }
+        for (node, &o) in owner.iter().enumerate() {
+            ensure!(o != u32::MAX, "node {node} owned by no shard");
+        }
+        let t = RoutingTable { epoch: 0, n_nodes, owner, addrs: addrs.to_vec() };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Structural invariants every table must satisfy (shared by the codec
+    /// and in-memory construction): totality, owner indices in range,
+    /// well-formed addresses.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_nodes >= 1, "routing table over zero nodes");
+        ensure!(self.owner.len() == self.n_nodes, "owner map length != n_nodes");
+        ensure!(!self.addrs.is_empty(), "routing table has no shard addresses");
+        for (node, &o) in self.owner.iter().enumerate() {
+            ensure!(
+                (o as usize) < self.addrs.len(),
+                "node {node} owned by shard {o}, only {} shards",
+                self.addrs.len()
+            );
+        }
+        for (s, a) in self.addrs.iter().enumerate() {
+            ensure!(!a.is_empty(), "shard {s} has an empty address");
+            ensure!(!a.contains('\n'), "shard {s} address contains a newline");
+        }
+        Ok(())
+    }
+
+    /// The contiguous node range shard `s` owns (`start..end`), or an empty
+    /// range if it owns nothing. Errors if its owned set is not contiguous —
+    /// the planner only ever creates contiguous ownership, and the
+    /// checkpoint file naming (`shard_A_B`) depends on it.
+    pub fn owned_range(&self, s: usize) -> Result<Range<usize>> {
+        let nodes: Vec<usize> = (0..self.n_nodes).filter(|&n| self.owner[n] == s as u32).collect();
+        let Some(&start) = nodes.first() else {
+            return Ok(0..0);
+        };
+        let end = start + nodes.len();
+        ensure!(
+            nodes.iter().enumerate().all(|(i, &n)| n == start + i),
+            "shard {s} owns a non-contiguous node set {nodes:?}"
+        );
+        Ok(start..end)
+    }
+
+    /// Nodes owned by shard `s` (count only; never errors).
+    pub fn owned_count(&self, s: usize) -> usize {
+        self.owner.iter().filter(|&&o| o == s as u32).count()
+    }
+
+    /// Serialize: magic, CRC-32 of the body, then the wire-format body.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = WireWriter::new(KIND_TABLE);
+        w.put_u64(&[self.epoch, self.n_nodes as u64]);
+        let owner64: Vec<u64> = self.owner.iter().map(|&o| o as u64).collect();
+        w.put_u64(&owner64);
+        w.put_u8(self.addrs.join("\n").as_bytes());
+        let body = w.finish();
+        let mut out = Vec::with_capacity(12 + body.len());
+        out.extend_from_slice(TABLE_MAGIC);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse + validate. Arbitrary, truncated, or bit-flipped bytes return
+    /// `Err` — never a panic, never an inconsistent table (the reshard
+    /// property suite pins this).
+    pub fn from_bytes(bytes: &[u8]) -> Result<RoutingTable> {
+        ensure!(bytes.len() >= 12, "routing table too short ({} bytes)", bytes.len());
+        ensure!(&bytes[..8] == TABLE_MAGIC, "routing table magic mismatch");
+        let want = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        let body = &bytes[12..];
+        ensure!(crc32(body) == want, "routing table CRC mismatch (torn write?)");
+        let r = WireReader::parse(body)?;
+        ensure!(r.kind() == KIND_TABLE, "routing table body kind {:#x}", r.kind());
+        let head = r.u64(0)?;
+        ensure!(head.len() == 2, "routing table header has {} fields", head.len());
+        let owner64 = r.u64(1)?;
+        let mut owner = Vec::with_capacity(owner64.len());
+        for o in owner64 {
+            ensure!(o <= u32::MAX as u64, "owner index {o} overflows");
+            owner.push(o as u32);
+        }
+        let addrs: Vec<String> = std::str::from_utf8(r.u8(2)?)
+            .context("routing table addresses are not UTF-8")?
+            .split('\n')
+            .map(|s| s.to_string())
+            .collect();
+        let t = RoutingTable {
+            epoch: head[0],
+            n_nodes: usize::try_from(head[1]).context("n_nodes overflows")?,
+            owner,
+            addrs,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+/// One contiguous node range migrating from `source` to `dest` (both
+/// indices into the table's `addrs`), planned against `from_epoch`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MigrationPlan {
+    /// The routing epoch this plan was computed against; executing it
+    /// produces epoch `from_epoch + 1`.
+    pub from_epoch: u64,
+    /// Shard index giving up `nodes`.
+    pub source: usize,
+    /// Shard index receiving `nodes` (must own nothing at `from_epoch`).
+    pub dest: usize,
+    /// The migrating node range (end-exclusive, non-empty).
+    pub nodes: Range<usize>,
+}
+
+impl MigrationPlan {
+    /// Structural invariants shared by the codec and the planner.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.nodes.start < self.nodes.end, "empty migration range");
+        ensure!(self.source != self.dest, "source and destination are the same shard");
+        Ok(())
+    }
+
+    /// Serialize: magic, CRC-32 of the body, then the wire-format body.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = WireWriter::new(KIND_PLAN);
+        w.put_u64(&[
+            self.from_epoch,
+            self.source as u64,
+            self.dest as u64,
+            self.nodes.start as u64,
+            self.nodes.end as u64,
+        ]);
+        let body = w.finish();
+        let mut out = Vec::with_capacity(12 + body.len());
+        out.extend_from_slice(PLAN_MAGIC);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse + validate (total: corruption ⇒ `Err`, never a panic).
+    pub fn from_bytes(bytes: &[u8]) -> Result<MigrationPlan> {
+        ensure!(bytes.len() >= 12, "migration plan too short ({} bytes)", bytes.len());
+        ensure!(&bytes[..8] == PLAN_MAGIC, "migration plan magic mismatch");
+        let want = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        let body = &bytes[12..];
+        ensure!(crc32(body) == want, "migration plan CRC mismatch");
+        let r = WireReader::parse(body)?;
+        ensure!(r.kind() == KIND_PLAN, "migration plan body kind {:#x}", r.kind());
+        let head = r.u64(0)?;
+        ensure!(head.len() == 5, "migration plan header has {} fields", head.len());
+        let p = MigrationPlan {
+            from_epoch: head[0],
+            source: usize::try_from(head[1]).context("source overflows")?,
+            dest: usize::try_from(head[2]).context("dest overflows")?,
+            nodes: usize::try_from(head[3]).context("range start overflows")?
+                ..usize::try_from(head[4]).context("range end overflows")?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Per-process traffic imbalance of `traffic` (one counter per node) under
+/// `table`: max over mean of the per-shard sums, counting only shards that
+/// own at least one node. `1.0` for an idle or perfectly balanced
+/// deployment — the same convention as the per-node
+/// [`imbalance_of`](crate::embedding::ps::imbalance_of).
+pub fn process_imbalance(table: &RoutingTable, traffic: &[u64]) -> f64 {
+    let sums = per_shard_traffic(table, traffic);
+    let serving: Vec<u64> = (0..table.addrs.len())
+        .filter(|&s| table.owned_count(s) > 0)
+        .map(|s| sums[s])
+        .collect();
+    let total: u64 = serving.iter().sum();
+    if serving.is_empty() || total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / serving.len() as f64;
+    serving.iter().copied().max().unwrap_or(0) as f64 / mean
+}
+
+/// Sum `traffic` per owning shard.
+fn per_shard_traffic(table: &RoutingTable, traffic: &[u64]) -> Vec<u64> {
+    let mut sums = vec![0u64; table.addrs.len()];
+    for (node, &count) in traffic.iter().enumerate().take(table.n_nodes) {
+        sums[table.owner[node] as usize] += count;
+    }
+    sums
+}
+
+/// Plan one migration against `table` given merged per-node `traffic`.
+///
+/// Returns `Some(plan)` only when ALL of the following hold — otherwise
+/// `None`, and the deployment keeps its current layout:
+///
+/// 1. the per-process imbalance is at or above `threshold`;
+/// 2. the hottest shard owns ≥ 2 contiguous nodes (a single node cannot
+///    split — key-granular splitting is out of scope);
+/// 3. some shard owns 0 nodes (a `--join` spare): only an empty shard is a
+///    valid destination, because a `--join` server materializes unseen keys
+///    over the FULL node range and therefore agrees bitwise with every
+///    possible migration — a partial-range server does not;
+/// 4. moving the chosen suffix *strictly reduces* the predicted imbalance
+///    (a move that merely reshuffles the hot spot is refused).
+///
+/// The migrated range is the contiguous **suffix** of the hot shard's range
+/// split at the traffic midpoint (the split minimizing `|kept − moved|`),
+/// which keeps every shard's ownership contiguous forever.
+pub fn plan_rebalance(
+    table: &RoutingTable,
+    traffic: &[u64],
+    threshold: f64,
+) -> Option<MigrationPlan> {
+    if traffic.len() < table.n_nodes || threshold <= 0.0 {
+        return None;
+    }
+    let current = process_imbalance(table, traffic);
+    if current < threshold {
+        return None;
+    }
+    let sums = per_shard_traffic(table, traffic);
+    // Hottest shard that can actually split (owns >= 2 nodes, contiguous).
+    let source = (0..table.addrs.len())
+        .filter(|&s| table.owned_count(s) >= 2 && table.owned_range(s).is_ok())
+        .max_by_key(|&s| sums[s])?;
+    // Destination: the first idle spare.
+    let dest = (0..table.addrs.len()).find(|&s| table.owned_count(s) == 0)?;
+    let range = table.owned_range(source).ok()?;
+    // Split the source range at its traffic midpoint: choose the suffix
+    // whose sum is closest to half, both halves non-empty.
+    let node_traffic = &traffic[range.start..range.end];
+    let total: u64 = node_traffic.iter().sum();
+    let mut best_split = None;
+    let mut moved_sum: u64 = 0;
+    for k in (1..range.len()).rev() {
+        // Suffix [k..): moving nodes range.start+k .. range.end.
+        moved_sum += node_traffic[k];
+        let kept = total - moved_sum;
+        let gap = kept.abs_diff(moved_sum);
+        match best_split {
+            Some((_, g)) if g <= gap => {}
+            _ => best_split = Some((k, gap)),
+        }
+    }
+    let (k, _) = best_split?;
+    let plan = MigrationPlan {
+        from_epoch: table.epoch,
+        source,
+        dest,
+        nodes: range.start + k..range.end,
+    };
+    // Refuse a move that does not strictly improve the imbalance.
+    let predicted = process_imbalance(&apply(table, &plan).ok()?, traffic);
+    if predicted >= current {
+        return None;
+    }
+    Some(plan)
+}
+
+/// The table at epoch N+1: `plan` applied to `table` (epoch N). Errors if
+/// the plan does not fit the table — stale epoch, out-of-range shards or
+/// nodes, or a migrating node the source does not own.
+pub fn apply(table: &RoutingTable, plan: &MigrationPlan) -> Result<RoutingTable> {
+    plan.validate()?;
+    ensure!(
+        plan.from_epoch == table.epoch,
+        "plan targets epoch {}, table is at {}",
+        plan.from_epoch,
+        table.epoch
+    );
+    ensure!(plan.source < table.addrs.len(), "plan source {} out of range", plan.source);
+    ensure!(plan.dest < table.addrs.len(), "plan dest {} out of range", plan.dest);
+    ensure!(
+        plan.nodes.end <= table.n_nodes,
+        "plan range {:?} exceeds {} nodes",
+        plan.nodes,
+        table.n_nodes
+    );
+    let mut next = table.clone();
+    for node in plan.nodes.clone() {
+        ensure!(
+            table.owner[node] == plan.source as u32,
+            "node {node} is owned by shard {}, not plan source {}",
+            table.owner[node],
+            plan.source
+        );
+        next.owner[node] = plan.dest as u32;
+    }
+    next.epoch += 1;
+    next.validate()?;
+    Ok(next)
+}
+
+/// Path of the persisted routing table under a checkpoint directory. A
+/// shard with `--checkpoint-dir` writes the committed table here at every
+/// reshard commit; a restarted `serve-ps` and a resuming trainer both read
+/// it so the post-migration layout survives process death.
+pub fn routing_path(ckpt_dir: &Path) -> PathBuf {
+    ckpt_dir.join("ROUTING")
+}
+
+/// Load the persisted routing table under `ckpt_dir`, if present. A
+/// missing file is `Ok(None)` (a never-resharded deployment); a corrupt
+/// file is an `Err` — silently ignoring it could resurrect a pre-migration
+/// layout and serve every migrated node from the wrong shard.
+pub fn load_routing(ckpt_dir: &Path) -> Result<Option<RoutingTable>> {
+    let path = routing_path(ckpt_dir);
+    match std::fs::read(&path) {
+        Ok(bytes) => {
+            let t = RoutingTable::from_bytes(&bytes)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            Ok(Some(t))
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e).with_context(|| format!("reading {}", path.display())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:77{i:02}")).collect()
+    }
+
+    /// 2 owning shards + 1 spare over 6 nodes: ps0 = 0..4, ps1 = 4..6.
+    fn sample_table() -> RoutingTable {
+        RoutingTable::initial(6, &[0..4, 4..6, 0..0], &addrs(3)).unwrap()
+    }
+
+    #[test]
+    fn initial_table_requires_exact_partition() {
+        let t = sample_table();
+        assert_eq!(t.epoch, 0);
+        assert_eq!(t.owner, vec![0, 0, 0, 0, 1, 1]);
+        assert_eq!(t.owned_range(0).unwrap(), 0..4);
+        assert_eq!(t.owned_range(2).unwrap(), 0..0);
+        // Overlap and orphan are both rejected.
+        assert!(RoutingTable::initial(4, &[0..3, 2..4], &addrs(2)).is_err());
+        assert!(RoutingTable::initial(4, &[0..1, 2..4], &addrs(2)).is_err());
+        assert!(RoutingTable::initial(4, &[0..1, 1..5], &addrs(2)).is_err());
+    }
+
+    #[test]
+    fn table_roundtrips_and_rejects_corruption() {
+        let t = sample_table();
+        let bytes = t.to_bytes();
+        assert_eq!(RoutingTable::from_bytes(&bytes).unwrap(), t);
+        assert!(RoutingTable::from_bytes(&[]).is_err());
+        assert!(RoutingTable::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        for i in [0usize, 9, 13, bytes.len() - 1] {
+            let mut b = bytes.clone();
+            b[i] ^= 0xff;
+            assert!(RoutingTable::from_bytes(&b).is_err(), "flip at {i} accepted");
+        }
+    }
+
+    #[test]
+    fn plan_roundtrips_and_rejects_corruption() {
+        let p = MigrationPlan { from_epoch: 3, source: 0, dest: 2, nodes: 2..4 };
+        let bytes = p.to_bytes();
+        assert_eq!(MigrationPlan::from_bytes(&bytes).unwrap(), p);
+        assert!(MigrationPlan::from_bytes(&bytes[..7]).is_err());
+        for i in [0usize, 9, 12, bytes.len() - 1] {
+            let mut b = bytes.clone();
+            b[i] ^= 0x10;
+            assert!(MigrationPlan::from_bytes(&b).is_err(), "flip at {i} accepted");
+        }
+        // Structurally invalid plans are rejected even with a valid CRC.
+        let empty = MigrationPlan { from_epoch: 0, source: 0, dest: 1, nodes: 2..2 };
+        assert!(MigrationPlan::from_bytes(&empty.to_bytes()).is_err());
+        let self_move = MigrationPlan { from_epoch: 0, source: 1, dest: 1, nodes: 0..1 };
+        assert!(MigrationPlan::from_bytes(&self_move.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn planner_splits_the_hot_shard_at_the_traffic_midpoint() {
+        let t = sample_table();
+        // ps0's 4 nodes carry 4x the per-node load of ps1's 2: imbalance
+        // (4/6)/(1/2) = 1.333...
+        let traffic = vec![10, 10, 10, 10, 10, 10];
+        let imb = process_imbalance(&t, &traffic);
+        assert!((imb - 4.0 / 3.0).abs() < 1e-9, "imbalance {imb}");
+        let plan = plan_rebalance(&t, &traffic, 1.25).expect("imbalance above threshold");
+        assert_eq!(plan, MigrationPlan { from_epoch: 0, source: 0, dest: 2, nodes: 2..4 });
+        let next = apply(&t, &plan).unwrap();
+        assert_eq!(next.epoch, 1);
+        assert_eq!(next.owner, vec![0, 0, 2, 2, 1, 1]);
+        assert!((process_imbalance(&next, &traffic) - 1.0).abs() < 1e-9);
+        // Below threshold: no plan.
+        assert!(plan_rebalance(&t, &traffic, 1.5).is_none());
+    }
+
+    #[test]
+    fn planner_refuses_without_a_spare_or_a_splittable_source() {
+        // No empty shard to receive the split.
+        let t = RoutingTable::initial(6, &[0..4, 4..6], &addrs(2)).unwrap();
+        assert!(plan_rebalance(&t, &[10; 6], 1.1).is_none());
+        // The hottest shard owns a single node: nothing to split.
+        let t = RoutingTable::initial(3, &[0..1, 1..3, 0..0], &addrs(3)).unwrap();
+        assert!(plan_rebalance(&t, &[100, 1, 1], 1.2).is_none());
+        // Idle deployment: imbalance is 1.0, below any sane threshold.
+        let t = sample_table();
+        assert!(plan_rebalance(&t, &[0; 6], 1.01).is_none());
+    }
+
+    #[test]
+    fn planner_requires_strict_improvement() {
+        // All of ps0's traffic is on its FIRST node: every suffix move
+        // leaves the hot node on ps0, so no split helps and the planner
+        // must refuse rather than churn state.
+        let t = sample_table();
+        let traffic = vec![100, 0, 0, 0, 10, 10];
+        assert!(plan_rebalance(&t, &traffic, 1.1).is_none());
+        // Mirrored onto the LAST node, the suffix move does help.
+        let traffic = vec![0, 0, 0, 100, 10, 10];
+        let plan = plan_rebalance(&t, &traffic, 1.1).expect("suffix move helps");
+        assert_eq!(plan.nodes, 3..4);
+        assert_eq!(plan.dest, 2);
+    }
+
+    #[test]
+    fn apply_rejects_plans_that_do_not_fit() {
+        let t = sample_table();
+        let ok = MigrationPlan { from_epoch: 0, source: 0, dest: 2, nodes: 2..4 };
+        // Stale epoch.
+        let mut stale = ok.clone();
+        stale.from_epoch = 1;
+        assert!(apply(&t, &stale).is_err());
+        // Source does not own the range.
+        let wrong = MigrationPlan { from_epoch: 0, source: 1, dest: 2, nodes: 2..4 };
+        assert!(apply(&t, &wrong).is_err());
+        // Range beyond the node space.
+        let oob = MigrationPlan { from_epoch: 0, source: 1, dest: 2, nodes: 4..7 };
+        assert!(apply(&t, &oob).is_err());
+        // Shard index beyond the deployment.
+        let bad_dest = MigrationPlan { from_epoch: 0, source: 0, dest: 9, nodes: 2..4 };
+        assert!(apply(&t, &bad_dest).is_err());
+    }
+
+    #[test]
+    fn routing_persistence_roundtrips_and_rejects_corruption() {
+        let dir =
+            std::env::temp_dir().join(format!("persia_reshard_rt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load_routing(&dir).unwrap().is_none(), "missing file is not an error");
+        let t = sample_table();
+        crate::recovery::atomic_write(&routing_path(&dir), &t.to_bytes()).unwrap();
+        assert_eq!(load_routing(&dir).unwrap(), Some(t.clone()));
+        let mut bytes = t.to_bytes();
+        bytes[16] ^= 0x01;
+        std::fs::write(routing_path(&dir), &bytes).unwrap();
+        assert!(load_routing(&dir).is_err(), "corrupt ROUTING file must not be ignored");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -22,22 +22,28 @@
 //! accepting and reading, flushes every queued response (the SHUTDOWN ack
 //! included), and joins its workers.
 
+use std::collections::HashSet;
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::comm::rpc::RpcServer;
-#[cfg(not(unix))]
+use crate::comm::rpc::{RpcClient, RpcServer};
 use crate::comm::transport::TcpTransport;
 use crate::config::EmbeddingConfig;
 use crate::embedding::{CheckpointManager, EmbeddingPs};
+use crate::util::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 
 use super::backend::PsBackend;
 use super::protocol;
 use super::protocol::PsInfo;
+use super::reshard::{self, MigrationPlan, RoutingTable};
 
 /// A per-process random nonce: lets reconnecting clients distinguish "same
 /// server, transient wire failure" from "new process after a kill" — the
@@ -50,6 +56,81 @@ pub(super) fn boot_nonce(salt: &TcpListener) -> u64 {
         .unwrap_or(0);
     let addr_entropy = salt as *const TcpListener as usize as u64;
     (nanos ^ (u64::from(std::process::id()) << 32) ^ addr_entropy.rotate_left(17)) | 1
+}
+
+/// Optional capabilities for [`PsServer::bind_with_opts`]; `Default` is the
+/// plain static server [`PsServer::bind`] creates.
+#[derive(Default)]
+pub struct PsBindOpts {
+    /// Checkpoint-epoch support: with a manager the PREPARE_CKPT /
+    /// COMMIT_CKPT RPCs stage and commit epoch snapshots of the owned nodes.
+    pub ckpt: Option<Arc<CheckpointManager>>,
+    /// The epoch this process restored at startup (0 = fresh), advertised
+    /// in INFO so reconnecting clients replay exactly the delta.
+    pub restored_step: u64,
+    /// Serve as a `--join` spare: physically materialize the FULL node
+    /// range (a spare's deterministic row materialization then agrees
+    /// bitwise with any donor for any migrated range) but own nothing until
+    /// a reshard commits nodes over.
+    pub join: bool,
+    /// Committed routing table recovered from a persisted `ROUTING` file
+    /// plus this shard's index in it — a restarted shard re-enters the
+    /// deployment at that epoch owning whatever the table assigns it.
+    pub routing: Option<(RoutingTable, usize)>,
+    /// Where to persist the committed table at every reshard commit
+    /// (normally the checkpoint dir). `None` = routing state is RAM-only.
+    pub routing_dir: Option<PathBuf>,
+}
+
+/// Server-side live-resharding state, shared by every connection worker.
+///
+/// `owned` is the SERVER-level ownership, distinct from the physical
+/// [`EmbeddingPs::node_range`]: a `--join` spare materializes the full
+/// range but owns nothing; a donor keeps migrated nodes physically
+/// allocated (wiped empty) after narrowing. GET/PUT consult `owned`;
+/// SNAPSHOT/RESTORE stay physical, which is what lets a migration push
+/// rows into a destination before it owns them. Lock order everywhere:
+/// `owned` → `forward` → `queue`; `staged`/`committed` are leaf mutexes
+/// held only inside control handlers.
+struct ReshardState {
+    /// Node range this server answers GET/PUT for.
+    owned: RwLock<Range<usize>>,
+    /// Committed routing epoch (0 = the initial static layout).
+    epoch: AtomicU64,
+    /// The committed routing table, once one exists.
+    committed: Mutex<Option<RoutingTable>>,
+    /// `(plan, staged table, this shard's index)` between PREPARE and
+    /// COMMIT/ABORT.
+    staged: Mutex<Option<(MigrationPlan, RoutingTable, usize)>>,
+    /// Nodes currently mid-copy: puts routed to them are queued as well as
+    /// applied (read source, write both).
+    forward: RwLock<HashSet<usize>>,
+    /// Copy-window put sub-batches, drained into the destination at commit.
+    queue: Mutex<Vec<(Vec<u64>, Vec<f32>)>>,
+    /// Whether this server was started with `--join`.
+    joinable: bool,
+    /// Destination of the persisted `ROUTING` file, if any.
+    routing_dir: Option<PathBuf>,
+}
+
+/// Test hook: `PERSIA_MIGRATE_DELAY_MS` stretches the per-node copy window
+/// so the chaos drills can land a SIGKILL mid-migration deterministically.
+fn migrate_delay() -> Duration {
+    let ms = std::env::var("PERSIA_MIGRATE_DELAY_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0);
+    Duration::from_millis(ms)
+}
+
+/// One-shot lock-step client to a migration destination. Deliberately NOT a
+/// reconnect pool: a failure mid-copy must surface to the coordinator (which
+/// aborts the reshard), never retry silently against a restarted process.
+fn dial_dest(addr: &str) -> Result<RpcClient<TcpTransport>> {
+    let t = TcpTransport::connect(addr)
+        .with_context(|| format!("dialing migration dest {addr}"))?;
+    t.set_timeouts(Some(Duration::from_secs(30)))?;
+    Ok(RpcClient::new(t))
 }
 
 /// A bound-but-not-yet-serving PS service.
@@ -88,10 +169,68 @@ impl PsServer {
         ckpt: Option<Arc<CheckpointManager>>,
         restored_step: u64,
     ) -> Result<PsServer> {
+        Self::bind_with_opts(
+            ps,
+            addr,
+            cfg,
+            seed,
+            PsBindOpts { ckpt, restored_step, ..PsBindOpts::default() },
+        )
+    }
+
+    /// The full constructor: [`PsServer::bind_with_epochs`] plus the live
+    /// resharding surface — `--join` spares, a recovered routing table, and
+    /// the ROUTING/PREPARE_RESHARD/MIGRATE_OUT/COMMIT/ABORT handlers.
+    pub fn bind_with_opts(
+        ps: Arc<EmbeddingPs>,
+        addr: &str,
+        cfg: &EmbeddingConfig,
+        seed: u64,
+        opts: PsBindOpts,
+    ) -> Result<PsServer> {
         anyhow::ensure!(
             cfg.n_nodes == ps.n_nodes() && cfg.shards_per_node == ps.shards_per_node(),
             "EmbeddingConfig does not describe this EmbeddingPs"
         );
+        let PsBindOpts { ckpt, restored_step, join, routing, routing_dir } = opts;
+        if join {
+            anyhow::ensure!(
+                ps.node_range() == (0..ps.n_nodes()),
+                "--join spares must materialize the full node range (got {:?})",
+                ps.node_range()
+            );
+        }
+        // Server-level ownership: the physical range by default, or whatever
+        // a recovered routing table assigns this shard (possibly empty).
+        let (owned, committed, epoch0) = match routing {
+            Some((table, self_idx)) => {
+                let owned = table.owned_range(self_idx)?;
+                anyhow::ensure!(
+                    owned.is_empty()
+                        || (ps.node_range().start <= owned.start
+                            && owned.end <= ps.node_range().end),
+                    "recovered owned range {owned:?} outside this PS's physical {:?}",
+                    ps.node_range()
+                );
+                (owned, Some(table.clone()), table.epoch)
+            }
+            None if join => (0..0, None, 0),
+            None => (ps.node_range(), None, 0),
+        };
+        if let Some(mgr) = &ckpt {
+            mgr.set_routing_epoch(epoch0);
+        }
+        let state = Arc::new(ReshardState {
+            owned: RwLock::new(owned),
+            epoch: AtomicU64::new(epoch0),
+            committed: Mutex::new(committed),
+            staged: Mutex::new(None),
+            forward: RwLock::new(HashSet::new()),
+            queue: Mutex::new(Vec::new()),
+            joinable: join,
+            routing_dir,
+        });
+
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding PS service on {addr}"))?;
         let local = listener.local_addr()?;
@@ -99,50 +238,104 @@ impl PsServer {
         let stop = rpc.stop_flag();
 
         let dim = ps.dim();
-        let range = ps.node_range();
-        let info = PsInfo {
-            dim,
-            n_nodes: ps.n_nodes(),
-            shards_per_node: ps.shards_per_node(),
-            seed,
-            shard_capacity: cfg.shard_capacity,
-            optimizer_code: protocol::optimizer_code(cfg.optimizer),
-            partition_code: protocol::partition_code(cfg.partition),
-            lr_bits: cfg.lr.to_bits(),
-            node_start: range.start,
-            node_end: range.end,
-            boot_nonce: boot_nonce(&listener),
-            restored_step,
-        };
-        rpc.register(
-            protocol::KIND_INFO,
-            Box::new(move |_msg| Ok(protocol::encode_info_response(&info))),
-        );
+        let nonce = boot_nonce(&listener);
+        {
+            // INFO is dynamic: the advertised node range and routing epoch
+            // change at every reshard commit, and reconnecting clients must
+            // see the post-flip layout.
+            let ps = ps.clone();
+            let st = state.clone();
+            let shard_capacity = cfg.shard_capacity;
+            let optimizer_code = protocol::optimizer_code(cfg.optimizer);
+            let partition_code = protocol::partition_code(cfg.partition);
+            let lr_bits = cfg.lr.to_bits();
+            rpc.register(
+                protocol::KIND_INFO,
+                Box::new(move |_msg| {
+                    let owned = read_unpoisoned(&st.owned).clone();
+                    let info = PsInfo {
+                        dim,
+                        n_nodes: ps.n_nodes(),
+                        shards_per_node: ps.shards_per_node(),
+                        seed,
+                        shard_capacity,
+                        optimizer_code,
+                        partition_code,
+                        lr_bits,
+                        node_start: owned.start,
+                        node_end: owned.end,
+                        boot_nonce: nonce,
+                        restored_step,
+                        joinable: st.joinable,
+                        routing_epoch: st.epoch.load(Ordering::SeqCst),
+                    };
+                    Ok(protocol::encode_info_response(&info))
+                }),
+            );
+        }
         // GET/PUT go through the packed-key entry points: each key is routed
-        // exactly once, and a key outside this server's node range fails the
-        // whole request loudly (all-or-nothing, before any row materializes)
-        // — a misrouted key means client and server disagree on the global
-        // hash, and silently serving it would create a row the rest of the
-        // deployment never sees.
+        // exactly once, and a key outside this server's OWNED range answers
+        // the whole batch with an in-band NOT_OWNER frame (all-or-nothing,
+        // before any row materializes) — after a reshard commit that is the
+        // re-route signal a stale client refreshes its table on; serving the
+        // key anyway would create a row the rest of the deployment never
+        // sees. The owned read-lock is held across the PS call so a commit
+        // (which takes it for writing) can never interleave with a half-done
+        // batch.
         {
             let ps = ps.clone();
+            let st = state.clone();
             rpc.register(
                 protocol::KIND_GET,
                 Box::new(move |msg| {
                     let (packed, compress) = protocol::decode_get_request(msg)?;
+                    let owned = read_unpoisoned(&st.owned);
+                    if packed.iter().any(|&k| !owned.contains(&ps.route(k).0)) {
+                        return Ok(protocol::encode_not_owner(st.epoch.load(Ordering::SeqCst)));
+                    }
                     let mut rows = vec![0.0f32; packed.len() * dim];
                     ps.get_packed_into(&packed, &mut rows)?;
+                    drop(owned);
                     Ok(protocol::encode_get_response(&rows, dim, compress))
                 }),
             );
         }
         {
+            // PUT applies locally and, during a copy window, also queues the
+            // sub-batch routed to gated (mid-migration) nodes so the commit
+            // can replay it onto the destination — the "write both" half of
+            // the copy-window rules. The forward read-lock spans apply +
+            // queue: the migrator's gate-then-snapshot (under the write
+            // lock) therefore sees each put either entirely before the
+            // snapshot (captured in it) or entirely after (queued), never
+            // half.
             let ps = ps.clone();
+            let st = state.clone();
             rpc.register(
                 protocol::KIND_PUT,
                 Box::new(move |msg| {
                     let (packed, grads) = protocol::decode_put_request(msg, dim)?;
+                    let owned = read_unpoisoned(&st.owned);
+                    if packed.iter().any(|&k| !owned.contains(&ps.route(k).0)) {
+                        return Ok(protocol::encode_not_owner(st.epoch.load(Ordering::SeqCst)));
+                    }
+                    let fwd = read_unpoisoned(&st.forward);
                     ps.put_grads_packed(&packed, &grads)?;
+                    if !fwd.is_empty() {
+                        let mut qk = Vec::new();
+                        let mut qg = Vec::new();
+                        for (i, &k) in packed.iter().enumerate() {
+                            if fwd.contains(&ps.route(k).0) {
+                                qk.push(k);
+                                qg.extend_from_slice(&grads[i * dim..(i + 1) * dim]);
+                            }
+                        }
+                        if !qk.is_empty() {
+                            lock_unpoisoned(&st.queue).push((qk, qg));
+                        }
+                    }
+                    drop(fwd);
+                    drop(owned);
                     Ok(protocol::encode_put_response(packed.len()))
                 }),
             );
@@ -194,8 +387,12 @@ impl PsServer {
             );
         }
         {
-            // PREPARE_CKPT: stage this shard's owned nodes for the epoch.
+            // PREPARE_CKPT: stage this shard's OWNED nodes for the epoch —
+            // after a reshard that is narrower than the physical range, and
+            // the shard manifest must describe what this process actually
+            // serves (restore-by-range depends on the file name).
             let ps = ps.clone();
+            let st = state.clone();
             let ckpt_prep = ckpt.clone();
             rpc.register(
                 protocol::KIND_PREPARE_CKPT,
@@ -204,11 +401,9 @@ impl PsServer {
                     let mgr = ckpt_prep.as_ref().with_context(|| {
                         "PREPARE_CKPT on a PS started without --checkpoint-dir".to_string()
                     })?;
-                    mgr.prepare_epoch(&ps, step)?;
-                    Ok(protocol::encode_ckpt_response(
-                        protocol::KIND_PREPARE_CKPT,
-                        ps.node_range().len(),
-                    ))
+                    let owned = read_unpoisoned(&st.owned).clone();
+                    mgr.prepare_epoch_range(&ps, step, owned.clone())?;
+                    Ok(protocol::encode_ckpt_response(protocol::KIND_PREPARE_CKPT, owned.len()))
                 }),
             );
         }
@@ -216,6 +411,7 @@ impl PsServer {
             // COMMIT_CKPT: rename the staged epoch into place + write the
             // shard's commit manifest.
             let ps = ps.clone();
+            let st = state.clone();
             let ckpt_commit = ckpt.clone();
             rpc.register(
                 protocol::KIND_COMMIT_CKPT,
@@ -224,8 +420,228 @@ impl PsServer {
                     let mgr = ckpt_commit.as_ref().with_context(|| {
                         "COMMIT_CKPT on a PS started without --checkpoint-dir".to_string()
                     })?;
-                    let nodes = mgr.commit_epoch(&ps, step)?;
+                    let owned = read_unpoisoned(&st.owned).clone();
+                    let nodes = mgr.commit_epoch_range(&ps, step, owned)?;
                     Ok(protocol::encode_ckpt_response(protocol::KIND_COMMIT_CKPT, nodes))
+                }),
+            );
+        }
+        {
+            // ROUTING: the committed table, or an empty payload before the
+            // first reshard (servers never learn the address list until a
+            // PREPARE_RESHARD delivers one).
+            let st = state.clone();
+            rpc.register(
+                protocol::KIND_ROUTING,
+                Box::new(move |_msg| {
+                    Ok(protocol::encode_routing_response(
+                        lock_unpoisoned(&st.committed).as_ref(),
+                    ))
+                }),
+            );
+        }
+        {
+            // PREPARE_RESHARD: validate the plan against this shard's role
+            // and stage it. Nothing moves yet; a crash here costs nothing.
+            let st = state.clone();
+            rpc.register(
+                protocol::KIND_PREPARE_RESHARD,
+                Box::new(move |msg| {
+                    let (plan, table, idx) = protocol::decode_prepare_reshard(msg)?;
+                    let cur = st.epoch.load(Ordering::SeqCst);
+                    anyhow::ensure!(
+                        plan.from_epoch == cur,
+                        "PREPARE_RESHARD against epoch {}, this shard is at {cur}",
+                        plan.from_epoch
+                    );
+                    let owned = read_unpoisoned(&st.owned).clone();
+                    if idx == plan.dest {
+                        anyhow::ensure!(
+                            st.joinable,
+                            "shard {idx} was not started with --join; only spares that \
+                             materialize the full node range can receive a migration"
+                        );
+                        anyhow::ensure!(
+                            owned.is_empty(),
+                            "migration dest already owns {owned:?}"
+                        );
+                        anyhow::ensure!(
+                            table.owned_range(idx)? == plan.nodes,
+                            "staged table does not hand the migrated range to the dest"
+                        );
+                    } else if idx == plan.source {
+                        anyhow::ensure!(
+                            owned.start < plan.nodes.start
+                                && plan.nodes.start < plan.nodes.end
+                                && plan.nodes.end == owned.end,
+                            "plan range {:?} is not a proper suffix of owned {owned:?}",
+                            plan.nodes
+                        );
+                        anyhow::ensure!(
+                            table.owned_range(idx)? == (owned.start..plan.nodes.start),
+                            "staged table does not narrow the source to the kept prefix"
+                        );
+                    } else {
+                        anyhow::ensure!(
+                            table.owned_range(idx)? == owned,
+                            "staged table reassigns a bystander shard"
+                        );
+                    }
+                    *lock_unpoisoned(&st.staged) = Some((plan, table, idx));
+                    Ok(protocol::encode_reshard_ack(protocol::KIND_PREPARE_RESHARD, 1))
+                }),
+            );
+        }
+        {
+            // MIGRATE_OUT (source only): per migrating node, atomically gate
+            // puts + snapshot (embedding ⊕ optimizer bytes, cold tier rows
+            // included), then push the snapshot into the destination over a
+            // one-shot connection. Any failure surfaces to the coordinator,
+            // which aborts; gates stay up until ABORT clears them.
+            let ps = ps.clone();
+            let st = state.clone();
+            rpc.register(
+                protocol::KIND_MIGRATE_OUT,
+                Box::new(move |msg| {
+                    let epoch = protocol::decode_reshard_ctl(msg, protocol::KIND_MIGRATE_OUT)?;
+                    let (plan, table, idx) = lock_unpoisoned(&st.staged)
+                        .clone()
+                        .context("MIGRATE_OUT with no staged plan")?;
+                    anyhow::ensure!(
+                        plan.from_epoch == epoch,
+                        "MIGRATE_OUT for epoch {epoch}, staged plan is for {}",
+                        plan.from_epoch
+                    );
+                    anyhow::ensure!(
+                        idx == plan.source,
+                        "MIGRATE_OUT sent to shard {idx}, plan source is {}",
+                        plan.source
+                    );
+                    let dest_addr = table.addrs[plan.dest].clone();
+                    let delay = migrate_delay();
+                    let dest = dial_dest(&dest_addr)?;
+                    for node in plan.nodes.clone() {
+                        println!("RESHARD: migrating node {node} -> {dest_addr}");
+                        std::io::stdout().flush().ok();
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        let snap = {
+                            let mut fwd = write_unpoisoned(&st.forward);
+                            fwd.insert(node);
+                            // Snapshot INSIDE the gate's write lock: every
+                            // put is then either in the snapshot or queued.
+                            ps.snapshot_node_full(node)?
+                        };
+                        let resp = dest
+                            .call(&protocol::encode_restore_request(node, &snap))
+                            .with_context(|| format!("pushing node {node} to {dest_addr}"))?;
+                        protocol::decode_restore_response(&resp)?;
+                    }
+                    Ok(protocol::encode_reshard_ack(
+                        protocol::KIND_MIGRATE_OUT,
+                        plan.nodes.len(),
+                    ))
+                }),
+            );
+        }
+        {
+            // COMMIT_RESHARD: flip this shard to the staged table. The
+            // coordinator commits dest → source → bystanders, so a migrated
+            // node always has an owner: the source drains its queued
+            // copy-window puts into the (already-owning) destination before
+            // narrowing itself and wiping the moved nodes.
+            let ps = ps.clone();
+            let st = state.clone();
+            let ckpt_reshard = ckpt.clone();
+            rpc.register(
+                protocol::KIND_COMMIT_RESHARD,
+                Box::new(move |msg| {
+                    let epoch = protocol::decode_reshard_ctl(msg, protocol::KIND_COMMIT_RESHARD)?;
+                    let mut staged_guard = lock_unpoisoned(&st.staged);
+                    let (plan, table, idx) =
+                        staged_guard.clone().context("COMMIT_RESHARD with no staged plan")?;
+                    anyhow::ensure!(
+                        plan.from_epoch == epoch,
+                        "COMMIT_RESHARD for epoch {epoch}, staged plan is for {}",
+                        plan.from_epoch
+                    );
+                    if idx == plan.dest {
+                        *write_unpoisoned(&st.owned) = plan.nodes.clone();
+                    } else if idx == plan.source {
+                        // Taking the owned write lock waits out every
+                        // in-flight put; the queue is final after that.
+                        let mut owned = write_unpoisoned(&st.owned);
+                        let mut fwd = write_unpoisoned(&st.forward);
+                        let drained = std::mem::take(&mut *lock_unpoisoned(&st.queue));
+                        if !drained.is_empty() {
+                            let dest = dial_dest(&table.addrs[plan.dest])?;
+                            for (keys, grads) in &drained {
+                                let resp = dest
+                                    .call(&protocol::encode_put_request(keys, grads, dim, false))
+                                    .context("draining copy-window puts to the dest")?;
+                                let applied = protocol::decode_put_response(&resp)?;
+                                anyhow::ensure!(
+                                    applied == keys.len(),
+                                    "dest applied {applied}/{} drained puts",
+                                    keys.len()
+                                );
+                            }
+                        }
+                        *owned = owned.start..plan.nodes.start;
+                        for node in plan.nodes.clone() {
+                            ps.wipe_node(node)?;
+                        }
+                        fwd.clear();
+                    }
+                    st.epoch.store(table.epoch, Ordering::SeqCst);
+                    if let Some(mgr) = &ckpt_reshard {
+                        mgr.set_routing_epoch(table.epoch);
+                    }
+                    if let Some(dir) = &st.routing_dir {
+                        // Best-effort: a failed persist must not wedge an
+                        // already-flipped deployment; the table survives in
+                        // RAM and the next commit retries.
+                        if let Err(e) = crate::recovery::atomic_write(
+                            &reshard::routing_path(dir),
+                            &table.to_bytes(),
+                        ) {
+                            eprintln!("persia serve-ps: persisting ROUTING failed: {e:#}");
+                        }
+                    }
+                    *lock_unpoisoned(&st.committed) = Some(table);
+                    *staged_guard = None;
+                    Ok(protocol::encode_reshard_ack(protocol::KIND_COMMIT_RESHARD, 1))
+                }),
+            );
+        }
+        {
+            // ABORT_RESHARD: the coordinator's panic button — idempotent,
+            // epoch-tolerant, always safe. The dest wipes half-copied nodes
+            // (it never owned them); the source drops its gates and queue
+            // (its copy is still authoritative); everyone forgets the plan.
+            let ps = ps.clone();
+            let st = state.clone();
+            rpc.register(
+                protocol::KIND_ABORT_RESHARD,
+                Box::new(move |msg| {
+                    let _epoch = protocol::decode_reshard_ctl(msg, protocol::KIND_ABORT_RESHARD)?;
+                    if let Some((plan, _table, idx)) = lock_unpoisoned(&st.staged).take() {
+                        if idx == plan.dest {
+                            for node in plan.nodes.clone() {
+                                if let Err(e) = ps.wipe_node(node) {
+                                    eprintln!(
+                                        "persia serve-ps: wiping aborted node {node}: {e:#}"
+                                    );
+                                }
+                            }
+                        }
+                        if idx == plan.source {
+                            write_unpoisoned(&st.forward).clear();
+                            lock_unpoisoned(&st.queue).clear();
+                        }
+                    }
+                    Ok(protocol::encode_reshard_ack(protocol::KIND_ABORT_RESHARD, 1))
                 }),
             );
         }

@@ -20,30 +20,74 @@
 //!   (summed element-wise), which yields the *correct* global max/mean
 //!   imbalance — averaging per-process imbalance ratios would not.
 //!
+//! **Live resharding.** Ownership is no longer fixed at connect time: the
+//! `node → shard` map lives behind an epoch-versioned routing view. A
+//! shard that answers a routed GET/PUT with an in-band NOT_OWNER frame
+//! (nothing served, nothing applied) makes the client refresh its view from
+//! the fleet's committed [`RoutingTable`] and retry *only the refused
+//! sub-batch* against the new owner — retrying the whole batch would
+//! double-apply the sub-batches other shards already accepted. One client —
+//! the trainer's rank 0, through [`PsBackend::maybe_reshard`] — acts as the
+//! reshard *coordinator*: it merges fleet traffic stats, runs
+//! [`plan_rebalance`](super::reshard::plan_rebalance), and drives the
+//! PREPARE → MIGRATE_OUT → COMMIT barrier over one-shot control
+//! connections, aborting everywhere if any step fails so the deployment
+//! falls back to its current layout.
+//!
 //! Connect-time validation: every shard must report the same config
 //! fingerprint, and the shards' node ranges must partition `0..n_nodes`
-//! exactly (full coverage, no overlap). A killed-and-restarted shard rejoins
-//! transparently via [`RemotePs`]'s reconnect-with-retry, and
+//! exactly (full coverage, no overlap; `--join` spares own nothing and are
+//! valid). A killed-and-restarted shard rejoins transparently via
+//! [`RemotePs`]'s reconnect-with-retry, and
 //! [`ShardedRemotePs::snapshot_node`]/[`ShardedRemotePs::restore_node`]
 //! drive the §4.2.4 recovery drill over the wire.
 
 use std::path::Path;
+use std::sync::RwLock;
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::comm::rpc::RpcClient;
+use crate::comm::transport::TcpTransport;
 use crate::config::{EmbeddingConfig, PartitionPolicy, ServiceConfig};
 use crate::embedding::ps::{imbalance_of, pack_key, route};
 use crate::embedding::NodeSnapshot;
+use crate::util::{read_unpoisoned, write_unpoisoned};
 
 use super::backend::{PsBackend, PsStats};
-use super::client::RemotePs;
+use super::client::{RemotePs, ShardCall};
 use super::protocol;
+use super::reshard::{self, MigrationPlan, RoutingTable};
+
+/// How many times a routed batch may chase a moving routing table before
+/// giving up. Each retry re-partitions only the refused sub-batches after a
+/// fleet-wide routing refresh; commits are serialized at the coordinator,
+/// so more than a couple of refreshes means the fleet is inconsistent.
+const MAX_ROUTE_REFRESHES: usize = 4;
+
+/// Per-call deadline of one-shot reshard control RPCs (PREPARE / COMMIT /
+/// ABORT): cheap state flips that either answer promptly or are down.
+const CTL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-call deadline of the MIGRATE_OUT control RPC, which streams every
+/// migrating node's snapshot to the destination before acking.
+const MIGRATE_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// The client's current belief about node ownership, versioned by routing
+/// epoch. Epoch 0 is derived from the INFO handshake ranges; committed
+/// reshards advance it (eagerly at the coordinator, lazily — via NOT_OWNER
+/// — everywhere else).
+struct RoutingView {
+    epoch: u64,
+    /// Global node index -> index into `shards`.
+    node_owner: Vec<usize>,
+}
 
 /// A sharded remote embedding PS: the union of N `serve-ps` processes.
 pub struct ShardedRemotePs {
     shards: Vec<RemotePs>,
-    /// Global node index -> index into `shards`.
-    node_owner: Vec<usize>,
+    view: RwLock<RoutingView>,
     policy: PartitionPolicy,
     dim: usize,
     n_nodes: usize,
@@ -63,8 +107,8 @@ impl ShardedRemotePs {
 
         // Every shard must describe the same global PS (same numerics
         // fingerprint and geometry); only the owned node range — and the
-        // per-process instance identity (boot nonce, restored epoch) — may
-        // differ.
+        // per-process instance identity (boot nonce, restored epoch,
+        // joinable role, committed routing epoch) — may differ.
         let first = *shards[0].info();
         for s in &shards[1..] {
             let info = s.info();
@@ -74,6 +118,8 @@ impl ShardedRemotePs {
                 i.node_end = i.n_nodes;
                 i.boot_nonce = 0;
                 i.restored_step = 0;
+                i.joinable = false;
+                i.routing_epoch = 0;
                 i
             };
             ensure!(
@@ -86,7 +132,9 @@ impl ShardedRemotePs {
         let policy = protocol::partition_from_code(first.partition_code)
             .ok_or_else(|| anyhow::anyhow!("unknown partition code {}", first.partition_code))?;
 
-        // The node ranges must partition 0..n_nodes exactly.
+        // The node ranges must partition 0..n_nodes exactly. A `--join`
+        // spare advertises the empty range and contributes nothing here —
+        // it becomes routable only through a committed reshard.
         let mut node_owner = vec![usize::MAX; first.n_nodes];
         for (si, s) in shards.iter().enumerate() {
             for node in s.node_range() {
@@ -107,10 +155,15 @@ impl ShardedRemotePs {
                 shards.len()
             );
         }
+        // A restarted deployment that resharded before dying advertises the
+        // post-migration ranges AND the epoch it committed; adopt the
+        // highest so this client's NOT_OWNER handling starts from the
+        // fleet's real epoch instead of re-deriving 0.
+        let epoch = shards.iter().map(|s| s.info().routing_epoch).max().unwrap_or(0);
 
         Ok(ShardedRemotePs {
             shards,
-            node_owner,
+            view: RwLock::new(RoutingView { epoch, node_owner }),
             policy,
             dim: first.dim,
             n_nodes: first.n_nodes,
@@ -123,9 +176,10 @@ impl ShardedRemotePs {
         self.shards.len()
     }
 
-    /// The shard process client serving global `node`.
+    /// The shard process client currently serving global `node`.
     pub fn shard_for_node(&self, node: usize) -> &RemotePs {
-        &self.shards[self.node_owner[node]]
+        let owner = read_unpoisoned(&self.view).node_owner[node];
+        &self.shards[owner]
     }
 
     /// Global node count.
@@ -138,22 +192,36 @@ impl ShardedRemotePs {
         self.shards_per_node
     }
 
-    /// The shard-process index a packed key routes to.
-    #[inline]
-    fn owner_of(&self, packed: u64) -> usize {
-        let (node, _) = route(self.policy, self.n_nodes, self.shards_per_node, packed);
-        self.node_owner[node]
+    /// A point-in-time copy of the `node → shard` map. Each routing round
+    /// partitions against one immutable snapshot, so a concurrent refresh
+    /// can at worst make this round's requests stale (answered NOT_OWNER
+    /// and retried) — never torn.
+    fn owner_snapshot(&self) -> Vec<usize> {
+        read_unpoisoned(&self.view).node_owner.clone()
     }
 
-    /// Split `packed` keys per owning shard process, remembering each key's
-    /// slot in the caller's batch so responses reassemble in order.
-    fn partition_keys(&self, packed: &[u64]) -> Vec<(Vec<usize>, Vec<u64>)> {
+    /// The shard-process index a packed key routes to under `owner`.
+    #[inline]
+    fn owner_of(&self, owner: &[usize], packed: u64) -> usize {
+        let (node, _) = route(self.policy, self.n_nodes, self.shards_per_node, packed);
+        owner[node]
+    }
+
+    /// Split the given `slots` of `packed` per owning shard process under
+    /// `owner`, remembering each key's slot in the caller's batch so
+    /// responses reassemble in order.
+    fn partition_slots(
+        &self,
+        owner: &[usize],
+        packed: &[u64],
+        slots: &[usize],
+    ) -> Vec<(Vec<usize>, Vec<u64>)> {
         let mut per: Vec<(Vec<usize>, Vec<u64>)> =
             (0..self.shards.len()).map(|_| (Vec::new(), Vec::new())).collect();
-        for (slot, &key) in packed.iter().enumerate() {
-            let s = self.owner_of(key);
+        for &slot in slots {
+            let s = self.owner_of(owner, packed[slot]);
             per[s].0.push(slot);
-            per[s].1.push(key);
+            per[s].1.push(packed[slot]);
         }
         per
     }
@@ -180,6 +248,256 @@ impl ShardedRemotePs {
                 })
                 .collect()
         })
+    }
+
+    /// Pull the committed [`RoutingTable`] from the fleet and adopt the
+    /// highest epoch found. Called when some shard answered NOT_OWNER: at
+    /// least one server must hold a committed table whose epoch exceeds
+    /// this client's view, or the refusal is unexplainable and surfaced as
+    /// an error. Adopting a new epoch drops every shard's put-replay log —
+    /// entries recorded against the old routing would replay migrated keys
+    /// into a shard that no longer owns them.
+    fn refresh_routing(&self) -> Result<()> {
+        let mut best: Option<RoutingTable> = None;
+        for s in &self.shards {
+            match s.fetch_routing() {
+                Ok(Some(t)) => {
+                    let newer = match &best {
+                        None => true,
+                        Some(b) => t.epoch > b.epoch,
+                    };
+                    if newer {
+                        best = Some(t);
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    eprintln!("RESHARD: routing fetch from {} failed: {e:#}", s.addr());
+                }
+            }
+        }
+        let Some(table) = best else {
+            bail!(
+                "a shard refused a routed batch (NOT_OWNER) but no shard serves a \
+                 committed routing table — fleet is inconsistent"
+            );
+        };
+        table.validate()?;
+        ensure!(
+            table.n_nodes == self.n_nodes,
+            "committed routing table spans {} nodes, deployment has {}",
+            table.n_nodes,
+            self.n_nodes
+        );
+        ensure!(
+            table.addrs.len() == self.shards.len(),
+            "committed routing table lists {} shard(s), this client dialed {}; every \
+             process must pass the same --remote-ps list in the same order",
+            table.addrs.len(),
+            self.shards.len()
+        );
+        let adopted = {
+            let mut v = write_unpoisoned(&self.view);
+            if table.epoch > v.epoch {
+                v.epoch = table.epoch;
+                v.node_owner = table.owner.iter().map(|&o| o as usize).collect();
+                true
+            } else {
+                false
+            }
+        };
+        if adopted {
+            let dropped: usize = self.shards.iter().map(|s| s.clear_replay()).sum();
+            if dropped > 0 {
+                eprintln!(
+                    "RESHARD: dropped {dropped} recorded put batch(es) made stale by \
+                     routing epoch {}; crash-replay coverage resumes at the next \
+                     committed checkpoint",
+                    table.epoch
+                );
+            }
+            eprintln!("RESHARD: adopted routing epoch {} from the fleet", table.epoch);
+        }
+        Ok(())
+    }
+
+    /// One reshard control RPC on a fresh, short-lived connection.
+    /// Deliberately NOT the recovery pool: a control step that cannot reach
+    /// its shard must fail fast into the ABORT path, not silently redial
+    /// and replay into a half-staged barrier.
+    fn ctl_call(&self, shard: usize, msg: &[u8], timeout: Duration) -> Result<Vec<u8>> {
+        let addr = self.shards[shard].addr();
+        let t = TcpTransport::connect(addr)
+            .with_context(|| format!("dialing shard {addr} for reshard control"))?;
+        t.set_timeouts(Some(timeout))?;
+        RpcClient::new(t).call(msg)
+    }
+
+    /// Best-effort ABORT_RESHARD on every shard (idempotent server-side:
+    /// shards with nothing staged ack trivially). Failures are reported but
+    /// not propagated — the caller is already on the failure path.
+    fn abort_reshard(&self, from_epoch: u64) {
+        let msg = protocol::encode_reshard_ctl(protocol::KIND_ABORT_RESHARD, from_epoch);
+        for s in 0..self.shards.len() {
+            if let Err(e) = self.ctl_call(s, &msg, CTL_TIMEOUT) {
+                eprintln!(
+                    "RESHARD: ABORT to shard {} failed: {e:#} (its stale stage clears \
+                     at its next PREPARE or restart)",
+                    self.shards[s].addr()
+                );
+            }
+        }
+    }
+
+    /// Merged fleet statistics plus the element-wise sum of every shard's
+    /// per-node traffic vector (the planner's input).
+    fn fleet_stats(&self) -> Result<(PsStats, Vec<u64>)> {
+        let all: Vec<usize> = (0..self.shards.len()).collect();
+        let results = self.scatter(&all, |si| self.shards[si].stats_full());
+        let mut merged = PsStats::default();
+        let mut traffic = vec![0u64; self.n_nodes];
+        for r in results {
+            let (stats, node_traffic) = r?;
+            merged.total_rows += stats.total_rows;
+            merged.total_evictions += stats.total_evictions;
+            merged.hot_hits += stats.hot_hits;
+            merged.cold_hits += stats.cold_hits;
+            merged.demotions += stats.demotions;
+            merged.promotions += stats.promotions;
+            merged.cold_rows += stats.cold_rows;
+            ensure!(
+                node_traffic.len() == self.n_nodes,
+                "shard reported {} traffic entries, want {}",
+                node_traffic.len(),
+                self.n_nodes
+            );
+            for (acc, t) in traffic.iter_mut().zip(&node_traffic) {
+                *acc += t;
+            }
+        }
+        // Global imbalance from the summed per-node traffic — the same
+        // shared formula the in-process EmbeddingPs uses.
+        merged.imbalance = imbalance_of(&traffic);
+        Ok((merged, traffic))
+    }
+
+    /// This client's view of the fleet as a [`RoutingTable`] (current
+    /// epoch, current ownership, `--remote-ps` address order).
+    fn current_table(&self) -> Result<RoutingTable> {
+        let (epoch, owner) = {
+            let v = read_unpoisoned(&self.view);
+            (v.epoch, v.node_owner.clone())
+        };
+        let table = RoutingTable {
+            epoch,
+            n_nodes: self.n_nodes,
+            owner: owner.iter().map(|&o| o as u32).collect(),
+            addrs: self.shards.iter().map(|s| s.addr().to_string()).collect(),
+        };
+        table.validate()?;
+        Ok(table)
+    }
+
+    /// Drive one planned migration through the fleet-wide barrier:
+    /// PREPARE on every shard, MIGRATE_OUT on the source, COMMIT in
+    /// dest → source → bystander order. Any failure before the first
+    /// COMMIT aborts everywhere and leaves the deployment on its current
+    /// layout; a failure *between* COMMITs is reported loudly (a partially
+    /// committed epoch self-heals only through the lazy NOT_OWNER path).
+    fn execute_plan(&self, plan: &MigrationPlan, next: &RoutingTable) -> Result<Option<u64>> {
+        for s in 0..self.shards.len() {
+            let msg = protocol::encode_prepare_reshard(plan, next, s);
+            let staged = self
+                .ctl_call(s, &msg, CTL_TIMEOUT)
+                .and_then(|resp| {
+                    protocol::decode_reshard_ack(&resp, protocol::KIND_PREPARE_RESHARD)
+                })
+                .with_context(|| format!("PREPARE_RESHARD on shard {}", self.shards[s].addr()));
+            if let Err(e) = staged {
+                eprintln!("RESHARD: {e:#}; aborting epoch {} everywhere", next.epoch);
+                self.abort_reshard(plan.from_epoch);
+                return Ok(None);
+            }
+        }
+
+        let migrate = protocol::encode_reshard_ctl(protocol::KIND_MIGRATE_OUT, plan.from_epoch);
+        let copied = self
+            .ctl_call(plan.source, &migrate, MIGRATE_TIMEOUT)
+            .and_then(|resp| protocol::decode_reshard_ack(&resp, protocol::KIND_MIGRATE_OUT))
+            .with_context(|| {
+                format!("MIGRATE_OUT on shard {}", self.shards[plan.source].addr())
+            });
+        match copied {
+            Ok(n) if n == plan.nodes.len() => {}
+            Ok(n) => {
+                eprintln!(
+                    "RESHARD: source copied {n} of {} node(s); aborting epoch {}",
+                    plan.nodes.len(),
+                    next.epoch
+                );
+                self.abort_reshard(plan.from_epoch);
+                return Ok(None);
+            }
+            Err(e) => {
+                eprintln!("RESHARD: {e:#}; aborting epoch {} everywhere", next.epoch);
+                self.abort_reshard(plan.from_epoch);
+                return Ok(None);
+            }
+        }
+
+        // COMMIT order is load-bearing: the destination must own the moved
+        // nodes before the source drains its queued copy-window puts into
+        // it and gives them up, and bystanders flip last so no shard ever
+        // answers for an epoch its neighbours have not reached.
+        let mut order = vec![plan.dest, plan.source];
+        order.extend((0..self.shards.len()).filter(|&s| s != plan.dest && s != plan.source));
+        let commit = protocol::encode_reshard_ctl(protocol::KIND_COMMIT_RESHARD, plan.from_epoch);
+        for (i, &s) in order.iter().enumerate() {
+            let done = self
+                .ctl_call(s, &commit, CTL_TIMEOUT)
+                .and_then(|resp| {
+                    protocol::decode_reshard_ack(&resp, protocol::KIND_COMMIT_RESHARD)
+                })
+                .with_context(|| format!("COMMIT_RESHARD on shard {}", self.shards[s].addr()));
+            if let Err(e) = done {
+                if i == 0 {
+                    // Destination never committed: full abort is clean.
+                    eprintln!("RESHARD: {e:#}; aborting epoch {} everywhere", next.epoch);
+                } else {
+                    // Some shards committed epoch N+1, some did not: the
+                    // abort clears the stragglers' stage, and the committed
+                    // shards' NOT_OWNER answers teach every client the new
+                    // table. Loud, because convergence on the new epoch now
+                    // depends on that lazy path.
+                    eprintln!(
+                        "RESHARD: {e:#} AFTER {i} of {} shard(s) committed epoch {}; \
+                         aborting stragglers — clients converge via NOT_OWNER",
+                        order.len(),
+                        next.epoch
+                    );
+                }
+                self.abort_reshard(plan.from_epoch);
+                return Ok(None);
+            }
+        }
+
+        // Fleet committed: flip this client eagerly (other clients learn
+        // lazily through NOT_OWNER → refresh_routing).
+        {
+            let mut v = write_unpoisoned(&self.view);
+            if next.epoch > v.epoch {
+                v.epoch = next.epoch;
+                v.node_owner = next.owner.iter().map(|&o| o as usize).collect();
+            }
+        }
+        let dropped: usize = self.shards.iter().map(|s| s.clear_replay()).sum();
+        if dropped > 0 {
+            eprintln!(
+                "RESHARD: dropped {dropped} recorded put batch(es) made stale by the \
+                 migration; crash-replay coverage resumes at the next committed checkpoint"
+            );
+        }
+        Ok(Some(next.epoch))
     }
 
     /// Snapshot one global node (both tiers, when the owning process runs a
@@ -237,24 +555,45 @@ impl PsBackend for ShardedRemotePs {
             return Ok(());
         }
         let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
-        let per = self.partition_keys(&packed);
-        let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
         let dim = self.dim;
-        // Every shard's GET departs before any response is claimed: the N
-        // round-trips overlap on the pipelined connections.
-        let calls: Vec<_> = active.iter().map(|&si| self.shards[si].start_get(&per[si].1)).collect();
-        // Claim and reassemble into the caller's slot order.
-        for (&si, call) in active.iter().zip(calls) {
-            let (slots, shard_keys) = &per[si];
-            let mut rows = vec![0.0f32; shard_keys.len() * dim];
-            self.shards[si]
-                .finish_get(call, &mut rows)
-                .with_context(|| format!("GET from shard {}", self.shards[si].addr()))?;
-            for (i, &slot) in slots.iter().enumerate() {
-                out[slot * dim..(slot + 1) * dim].copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+        let mut pending: Vec<usize> = (0..packed.len()).collect();
+        for _round in 0..=MAX_ROUTE_REFRESHES {
+            let owner = self.owner_snapshot();
+            let per = self.partition_slots(&owner, &packed, &pending);
+            let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
+            // Every shard's GET departs before any response is claimed: the
+            // N round-trips overlap on the pipelined connections.
+            let calls: Vec<_> =
+                active.iter().map(|&si| self.shards[si].start_get(&per[si].1)).collect();
+            let mut refused: Vec<usize> = Vec::new();
+            // Claim and reassemble into the caller's slot order; NOT_OWNER
+            // sub-batches (untouched server-side) queue for the next round.
+            for (&si, call) in active.iter().zip(calls) {
+                let (slots, shard_keys) = &per[si];
+                let mut rows = vec![0.0f32; shard_keys.len() * dim];
+                let outcome = self.shards[si]
+                    .finish_get(call, &mut rows)
+                    .with_context(|| format!("GET from shard {}", self.shards[si].addr()))?;
+                match outcome {
+                    ShardCall::Applied => {
+                        for (i, &slot) in slots.iter().enumerate() {
+                            out[slot * dim..(slot + 1) * dim]
+                                .copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+                        }
+                    }
+                    ShardCall::NotOwner(_) => refused.extend_from_slice(slots),
+                }
             }
+            if refused.is_empty() {
+                return Ok(());
+            }
+            pending = refused;
+            self.refresh_routing().context("refreshing routing after a NOT_OWNER GET")?;
         }
-        Ok(())
+        bail!(
+            "GET still refused for {} key(s) after {MAX_ROUTE_REFRESHES} routing refreshes",
+            pending.len()
+        )
     }
 
     fn put_grads(&self, keys: &[(u32, u64)], grads: &[f32]) -> Result<()> {
@@ -263,62 +602,55 @@ impl PsBackend for ShardedRemotePs {
             return Ok(());
         }
         let packed: Vec<u64> = keys.iter().map(|&(g, id)| pack_key(g, id)).collect();
-        let per = self.partition_keys(&packed);
-        let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
         let dim = self.dim;
-        // Gather each shard's gradient rows contiguously before sending
-        // (indexed by shard process; inactive shards stay empty).
-        let payloads: Vec<Vec<f32>> = per
-            .iter()
-            .map(|(slots, _)| {
-                let mut rows = Vec::with_capacity(slots.len() * dim);
-                for &slot in slots {
-                    rows.extend_from_slice(&grads[slot * dim..(slot + 1) * dim]);
+        let mut pending: Vec<usize> = (0..packed.len()).collect();
+        for _round in 0..=MAX_ROUTE_REFRESHES {
+            let owner = self.owner_snapshot();
+            let per = self.partition_slots(&owner, &packed, &pending);
+            let active: Vec<usize> = (0..per.len()).filter(|&si| !per[si].1.is_empty()).collect();
+            // Gather each shard's gradient rows contiguously before sending
+            // (indexed by shard process; inactive shards stay empty).
+            let payloads: Vec<Vec<f32>> = per
+                .iter()
+                .map(|(slots, _)| {
+                    let mut rows = Vec::with_capacity(slots.len() * dim);
+                    for &slot in slots {
+                        rows.extend_from_slice(&grads[slot * dim..(slot + 1) * dim]);
+                    }
+                    rows
+                })
+                .collect();
+            // Same overlap as get_many: all PUTs depart, then all acks
+            // claimed. A NOT_OWNER ack applied NOTHING server-side, so
+            // retrying only that sub-batch elsewhere cannot double-apply.
+            let calls: Vec<_> = active
+                .iter()
+                .map(|&si| self.shards[si].start_put(&per[si].1, &payloads[si]))
+                .collect();
+            let mut refused: Vec<usize> = Vec::new();
+            for (&si, call) in active.iter().zip(calls) {
+                let outcome = self.shards[si]
+                    .finish_put(call, &per[si].1, &payloads[si])
+                    .with_context(|| format!("PUT to shard {}", self.shards[si].addr()))?;
+                match outcome {
+                    ShardCall::Applied => {}
+                    ShardCall::NotOwner(_) => refused.extend_from_slice(&per[si].0),
                 }
-                rows
-            })
-            .collect();
-        // Same overlap as get_many: all PUTs depart, then all acks claimed.
-        let calls: Vec<_> = active
-            .iter()
-            .map(|&si| self.shards[si].start_put(&per[si].1, &payloads[si]))
-            .collect();
-        for (&si, call) in active.iter().zip(calls) {
-            self.shards[si]
-                .finish_put(call, &per[si].1, &payloads[si])
-                .with_context(|| format!("PUT to shard {}", self.shards[si].addr()))?;
+            }
+            if refused.is_empty() {
+                return Ok(());
+            }
+            pending = refused;
+            self.refresh_routing().context("refreshing routing after a NOT_OWNER PUT")?;
         }
-        Ok(())
+        bail!(
+            "PUT still refused for {} key(s) after {MAX_ROUTE_REFRESHES} routing refreshes",
+            pending.len()
+        )
     }
 
     fn stats(&self) -> Result<PsStats> {
-        let all: Vec<usize> = (0..self.shards.len()).collect();
-        let results = self.scatter(&all, |si| self.shards[si].stats_full());
-        let mut merged = PsStats::default();
-        let mut traffic = vec![0u64; self.n_nodes];
-        for r in results {
-            let (stats, node_traffic) = r?;
-            merged.total_rows += stats.total_rows;
-            merged.total_evictions += stats.total_evictions;
-            merged.hot_hits += stats.hot_hits;
-            merged.cold_hits += stats.cold_hits;
-            merged.demotions += stats.demotions;
-            merged.promotions += stats.promotions;
-            merged.cold_rows += stats.cold_rows;
-            ensure!(
-                node_traffic.len() == self.n_nodes,
-                "shard reported {} traffic entries, want {}",
-                node_traffic.len(),
-                self.n_nodes
-            );
-            for (acc, t) in traffic.iter_mut().zip(&node_traffic) {
-                *acc += t;
-            }
-        }
-        // Global imbalance from the summed per-node traffic — the same
-        // shared formula the in-process EmbeddingPs uses.
-        merged.imbalance = imbalance_of(&traffic);
-        Ok(merged)
+        Ok(self.fleet_stats()?.0)
     }
 
     /// The coordinated two-phase epoch (recovery::coordinator): PREPARE on
@@ -353,5 +685,36 @@ impl PsBackend for ShardedRemotePs {
 
     fn replay_puts(&self) -> bool {
         self.shards.iter().any(|s| PsBackend::replay_puts(s))
+    }
+
+    /// The reshard coordinator (paper §4.2.2's load balancing made live):
+    /// merge the fleet's per-node traffic, plan one hot-suffix migration if
+    /// the per-process imbalance is at or above `threshold`, and drive it
+    /// through the PREPARE → MIGRATE_OUT → COMMIT barrier. `Ok(None)`
+    /// means "no migration committed" — below threshold, no spare to
+    /// receive a split, or a failure that aborted cleanly; training always
+    /// continues on the old table in that case.
+    fn maybe_reshard(&self, threshold: f64) -> Result<Option<u64>> {
+        let (_, traffic) = self.fleet_stats().context("merging fleet stats for reshard")?;
+        let table = self.current_table()?;
+        let Some(plan) = reshard::plan_rebalance(&table, &traffic, threshold) else {
+            return Ok(None);
+        };
+        let next = reshard::apply(&table, &plan).context("applying migration plan")?;
+        eprintln!(
+            "RESHARD: imbalance {:.3} >= {threshold:.3}; moving nodes {:?} from shard {} to \
+             shard {} (epoch {} -> {})",
+            reshard::process_imbalance(&table, &traffic),
+            plan.nodes,
+            self.shards[plan.source].addr(),
+            self.shards[plan.dest].addr(),
+            table.epoch,
+            next.epoch
+        );
+        self.execute_plan(&plan, &next)
+    }
+
+    fn routing_epoch(&self) -> u64 {
+        read_unpoisoned(&self.view).epoch
     }
 }

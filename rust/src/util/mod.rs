@@ -16,5 +16,5 @@ pub mod zipf;
 pub use bench::Bench;
 pub use hist::Histogram;
 pub use rng::Rng;
-pub use sync::lock_unpoisoned;
+pub use sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 pub use zipf::Zipf;

@@ -8,7 +8,7 @@
 //! consistent at panic sites (plain `Vec`/`HashMap` writes with no
 //! multi-step invariants), so taking the inner guard is sound.
 
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Lock `m`, recovering the guard if a previous holder panicked.
 ///
@@ -17,6 +17,17 @@ use std::sync::{Mutex, MutexGuard};
 /// slots, replay caches).
 pub fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`lock_unpoisoned`] for the read side of an [`RwLock`] (the resharding
+/// ownership/gate state shared by every PS connection worker).
+pub fn read_unpoisoned<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`lock_unpoisoned`] for the write side of an [`RwLock`].
+pub fn write_unpoisoned<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 #[cfg(test)]

@@ -113,6 +113,24 @@ pub trait EmbComm: Send + Sync {
         anyhow::bail!("this embedding tier does not support coordinated checkpoint epochs")
     }
 
+    /// Drive one live resharding round on the embedding PS behind this
+    /// tier when per-node traffic imbalance exceeds `threshold` (see
+    /// [`PsBackend::maybe_reshard`]). Returns the committed routing epoch,
+    /// or `Ok(None)` when balanced or unsupported. The default is a no-op:
+    /// the *remote* embedding-worker tier cannot reshard from the trainer
+    /// side yet (the EW processes own the PS connections) — a documented
+    /// limit of this PR.
+    fn maybe_reshard(&self, _threshold: f64) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// The committed routing epoch of the PS behind this tier (0 = initial
+    /// layout), recorded into the [`crate::recovery::GlobalManifest`] so
+    /// resume restores the post-migration layout.
+    fn routing_epoch(&self) -> u64 {
+        0
+    }
+
     /// Fast-forward rank `rank`'s batch stream to `step` without touching
     /// the PS — the resume path: a run restarting from a checkpoint epoch
     /// asks for its first batch at the epoch's boundary, and the strictly
@@ -215,6 +233,14 @@ impl EmbComm for LocalEmbTier {
 
     fn checkpoint_epoch(&self, dir: &Path, step: u64) -> Result<()> {
         self.backend.checkpoint_epoch(dir, step)
+    }
+
+    fn maybe_reshard(&self, threshold: f64) -> Result<Option<u64>> {
+        self.backend.maybe_reshard(threshold)
+    }
+
+    fn routing_epoch(&self) -> u64 {
+        self.backend.routing_epoch()
     }
 
     fn fast_forward(&self, rank: usize, step: usize) -> Result<()> {

@@ -1,0 +1,509 @@
+//! The ISSUE-9 acceptance drills: live PS resharding against real `persia`
+//! child processes.
+//!
+//! * **Happy path**: a 2-shard deployment plus one `--join` spare is grown
+//!   to 3 shards mid-train — the trainer's reshard probe detects the
+//!   imbalance, streams the hot shard's tail nodes to the spare behind the
+//!   PREPARE/MIGRATE/COMMIT barrier, and the run finishes with every loss
+//!   and the final AUC within 1e-6 of an unresharded reference (the run is
+//!   deterministic FullSync, so the migration must be *bitwise* invisible:
+//!   zero lost updates).
+//! * **Source SIGKILL mid-copy**: the shard donating nodes dies while
+//!   streaming. The coordinator aborts, the old routing epoch keeps
+//!   serving, the victim restarts from its committed epoch + the put-replay
+//!   log, and training still completes to ≤1e-6 parity.
+//! * **Destination SIGKILL mid-copy**: the `--join` spare dies while
+//!   receiving. The reshard rolls back — no ROUTING commit, no orphaned
+//!   node range — and the untouched 2-shard layout carries the run to
+//!   ≤1e-6 parity.
+//!
+//! The copy window is stretched with the `PERSIA_MIGRATE_DELAY_MS` test
+//! hook so the SIGKILLs land mid-migration deterministically.
+
+use std::io::BufRead as _;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+use persia::service::reshard::load_routing;
+
+const PRESET: &str = "taobao";
+const DENSE: &str = "tiny";
+const CAPACITY: &str = "65536"; // ample: no LRU evictions, exact replay
+const SEED: &str = "42";
+const BATCH: &str = "16";
+/// A finer node grid than the preset default so the planner has split
+/// points: ps0 serves 0..4, ps1 serves 4..6 — with roughly uniform
+/// per-node traffic (ShuffledUniform) the per-process imbalance is
+/// (4/6)/(1/2) ≈ 1.33, comfortably above the 1.1 drill threshold.
+const N_NODES: usize = 6;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("persia_reshard_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Threaded in-process replica of the deployment's config — the unresharded
+/// reference. Threads ≡ processes and local PS ≡ remote PS are both
+/// already-proven bitwise properties of this configuration, so the only
+/// degree of freedom left for the drills to test is the resharding itself.
+fn baseline_trainer(steps: usize) -> Trainer {
+    let preset = BenchPreset::by_name(PRESET).unwrap();
+    let model = preset.model(DENSE);
+    let mut emb_cfg = preset.embedding(&model, CAPACITY.parse().unwrap());
+    emb_cfg.n_nodes = N_NODES;
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster = ClusterConfig {
+        n_nn_workers: 1,
+        n_emb_workers: 1,
+        net: NetModelConfig::disabled(),
+    };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: BATCH.parse().unwrap(),
+        lr: 0.05,
+        staleness_bound: 4,
+        steps,
+        eval_every: steps,
+        seed: SEED.parse().unwrap(),
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset =
+        SyntheticDataset::new(&model, rows, preset.zipf_exponent, SEED.parse().unwrap());
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = true;
+    t
+}
+
+/// A spawned `persia` child with stdout+stderr streamed into a line buffer
+/// (so pipes never fill) and kill-on-drop reaping.
+struct Proc {
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl Proc {
+    fn spawn(args: &[String]) -> Proc {
+        Self::spawn_env(args, &[])
+    }
+
+    fn spawn_env(args: &[String], env: &[(&str, &str)]) -> Proc {
+        let exe = env!("CARGO_BIN_EXE_persia");
+        let mut cmd = Command::new(exe);
+        cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::piped());
+        for (k, v) in env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd.spawn().expect("spawn persia child");
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let mut readers = Vec::new();
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stderr = child.stderr.take().expect("stderr piped");
+        for reader in [Box::new(stdout) as Box<dyn std::io::Read + Send>, Box::new(stderr)] {
+            let lines = lines.clone();
+            readers.push(std::thread::spawn(move || {
+                let buf = std::io::BufReader::new(reader);
+                for line in buf.lines() {
+                    match line {
+                        Ok(l) => lines.lock().unwrap().push(l),
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Proc { child, lines, readers }
+    }
+
+    fn has_line(&self, pat: &str) -> bool {
+        self.lines.lock().unwrap().iter().any(|l| l.contains(pat))
+    }
+
+    fn wait_for_line(&mut self, pat: &str, timeout: Duration) -> Option<String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(l) =
+                self.lines.lock().unwrap().iter().find(|l| l.contains(pat)).cloned()
+            {
+                return Some(l);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            if let Ok(Some(_)) = self.child.try_wait() {
+                std::thread::sleep(Duration::from_millis(100));
+                return self.lines.lock().unwrap().iter().find(|l| l.contains(pat)).cloned();
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    fn wait_timeout(&mut self, timeout: Duration) -> Option<ExitStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.child.try_wait().expect("try_wait") {
+                Some(status) => return Some(status),
+                None if Instant::now() >= deadline => return None,
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    fn output_snapshot(&self) -> String {
+        self.lines.lock().unwrap().join("\n")
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.kill();
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+    }
+}
+
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// The numeric flags every process of a deployment shares (they ride in the
+/// config fingerprint, so all processes must agree).
+fn shared_flags(steps: usize) -> Vec<String> {
+    strs(&[
+        "--preset", PRESET, "--dense", DENSE, "--engine", "rust", "--mode", "sync",
+        "--deterministic", "true", "--shard-capacity", CAPACITY, "--seed", SEED,
+        "--batch", BATCH, "--lr", "0.05", "--tau", "4", "--netsim", "false",
+        "--compress", "false", "--emb-workers", "1", "--nn-workers", "1",
+        "--nodes", "6",
+    ])
+    .into_iter()
+    .chain([
+        "--steps".to_string(),
+        steps.to_string(),
+        "--eval-every".to_string(),
+        steps.to_string(),
+    ])
+    .collect()
+}
+
+/// Spawn `persia serve-ps` on `addr` (a `--node-range` owner when `range`
+/// is `Some`, a `--join` spare otherwise) and wait for its listening line,
+/// retrying the spawn (rebinding a just-released port can race the old
+/// socket's teardown — the restart half of the kill drills).
+fn spawn_ps(
+    addr: &str,
+    range: Option<&str>,
+    steps: usize,
+    ckpt_dir: &Path,
+    env: &[(&str, &str)],
+) -> (Proc, String) {
+    for attempt in 0..40u64 {
+        let mut args = strs(&["serve-ps", "--addr"]);
+        args.push(addr.to_string());
+        match range {
+            Some(r) => {
+                args.push("--node-range".to_string());
+                args.push(r.to_string());
+            }
+            None => args.extend(strs(&["--join", "true"])),
+        }
+        args.extend(shared_flags(steps));
+        args.push("--checkpoint-dir".to_string());
+        args.push(ckpt_dir.display().to_string());
+        let mut p = Proc::spawn_env(&args, env);
+        if let Some(line) = p.wait_for_line("listening on ", Duration::from_secs(30)) {
+            let got = line
+                .split("listening on ")
+                .nth(1)
+                .and_then(|r| r.split_whitespace().next())
+                .expect("address in listening line")
+                .to_string();
+            return (p, got);
+        }
+        drop(p);
+        std::thread::sleep(Duration::from_millis(100 + 50 * attempt));
+    }
+    panic!("persia serve-ps would not start on {addr} ({range:?})");
+}
+
+/// `persia train` against a sharded remote PS fleet, with the reshard probe
+/// armed (cadence 10, threshold 1.1, checkpoints every 5 steps so each
+/// migration boundary is also a checkpoint boundary).
+fn train_args(remote: &str, steps: usize, dir: &Path, extra: &[&str]) -> Vec<String> {
+    let mut args = strs(&["train", "--parity-lines", "true", "--remote-ps"]);
+    args.push(remote.to_string());
+    args.extend(shared_flags(steps));
+    args.push("--checkpoint-dir".to_string());
+    args.push(dir.display().to_string());
+    args.extend(strs(&[
+        "--checkpoint-every", "5", "--reshard-every", "10", "--reshard-threshold", "1.1",
+    ]));
+    args.extend(strs(extra));
+    args
+}
+
+fn parse_losses(output: &str) -> Vec<(u64, f32)> {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("LOSSES "))
+        .unwrap_or_else(|| panic!("no LOSSES line in:\n{output}"));
+    line["LOSSES ".len()..]
+        .split(',')
+        .filter(|f| !f.is_empty())
+        .map(|f| {
+            let (s, l) = f.split_once(':').expect("step:loss");
+            (s.parse().unwrap(), l.parse().unwrap())
+        })
+        .collect()
+}
+
+fn parse_parity(output: &str) -> (f32, f64) {
+    let line = output
+        .lines()
+        .find(|l| l.starts_with("PARITY "))
+        .unwrap_or_else(|| panic!("no PARITY line in:\n{output}"));
+    let mut loss = f32::NAN;
+    let mut auc = f64::NAN;
+    for field in line["PARITY ".len()..].split_whitespace() {
+        if let Some(v) = field.strip_prefix("final_loss=") {
+            loss = v.parse().unwrap();
+        }
+        if let Some(v) = field.strip_prefix("final_auc=") {
+            auc = v.parse().unwrap_or(f64::NAN);
+        }
+    }
+    (loss, auc)
+}
+
+/// Every loss the run printed must match the unresharded reference at the
+/// same step within the 1e-6 acceptance bound.
+fn assert_run_matches_baseline(out: &str, baseline: &persia::hybrid::TrainOutput, what: &str) {
+    let got = parse_losses(out);
+    let want: Vec<(u64, f32)> = baseline.tracker.losses.clone();
+    assert_eq!(got.len(), want.len(), "{what}: loss curve lengths differ");
+    for (step, loss) in &got {
+        let (_, ref_loss) = want
+            .iter()
+            .find(|(s, _)| s == step)
+            .unwrap_or_else(|| panic!("{what}: reference has no step {step}"));
+        assert!(
+            (loss - ref_loss).abs() <= 1e-6,
+            "{what}: step {step} loss {loss} vs reference {ref_loss}"
+        );
+    }
+    let (loss, auc) = parse_parity(out);
+    let base_loss = baseline.report.final_loss;
+    let base_auc = baseline.report.final_auc.unwrap();
+    assert!((loss - base_loss).abs() <= 1e-6, "{what}: final loss {loss} vs {base_loss}");
+    assert!((auc - base_auc).abs() <= 1e-6, "{what}: final AUC {auc} vs {base_auc}");
+}
+
+/// Block until `pat` shows up on either shard's output; returns which one
+/// (the planner picks the hottest shard as the migration source, which the
+/// test must not hard-code).
+fn wait_either(a: &Proc, b: &Proc, pat: &str, timeout: Duration) -> usize {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if a.has_line(pat) {
+            return 0;
+        }
+        if b.has_line(pat) {
+            return 1;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!(
+        "neither shard printed {pat:?};\nshard 0:\n{}\nshard 1:\n{}",
+        a.output_snapshot(),
+        b.output_snapshot()
+    );
+}
+
+/// Happy path: grow a live 2-shard deployment to 3 shards mid-train. The
+/// probe at the step-10 boundary sees the ≈1.33 imbalance, migrates the hot
+/// shard's tail onto the `--join` spare, commits routing epoch 1, persists
+/// the ROUTING table — and the deterministic FullSync run still matches the
+/// unresharded reference within 1e-6 on every loss and the final AUC
+/// (i.e. the migration lost no update and corrupted no row).
+#[test]
+fn live_split_two_to_three_shards_matches_unresharded_reference() {
+    let steps = 30;
+    let dir = tmp_dir("grow");
+    let baseline = baseline_trainer(steps).run_rust().unwrap();
+
+    let (ps_a, addr_a) = spawn_ps("127.0.0.1:0", Some("0..4"), steps, &dir, &[]);
+    let (ps_b, addr_b) = spawn_ps("127.0.0.1:0", Some("4..6"), steps, &dir, &[]);
+    // The spare materializes the full node range but owns nothing; it must
+    // be listed LAST in --remote-ps (epoch-0 routing is list-ordered).
+    let (spare, addr_c) = spawn_ps("127.0.0.1:0", None, steps, &dir, &[]);
+    assert!(
+        spare.output_snapshot().contains("--join spare"),
+        "spare did not announce itself:\n{}",
+        spare.output_snapshot()
+    );
+
+    let mut tr =
+        Proc::spawn(&train_args(&format!("{addr_a},{addr_b},{addr_c}"), steps, &dir, &[]));
+    tr.wait_for_line("RESHARD epoch 1 committed", Duration::from_secs(240))
+        .unwrap_or_else(|| panic!("no reshard committed:\n{}", tr.output_snapshot()));
+    let status = tr
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("resharded run hung:\n{}", tr.output_snapshot()));
+    assert!(status.success(), "resharded run failed:\n{}", tr.output_snapshot());
+    let out = tr.output_snapshot();
+
+    // The migration really streamed node state (it was not a no-op flip).
+    assert!(
+        ps_a.has_line("RESHARD: migrating node") || ps_b.has_line("RESHARD: migrating node"),
+        "no shard streamed a node;\nshard 0:\n{}\nshard 1:\n{}",
+        ps_a.output_snapshot(),
+        ps_b.output_snapshot()
+    );
+    // The committed layout survived to disk, and the spare now owns nodes.
+    let table = load_routing(&dir)
+        .expect("ROUTING parses")
+        .expect("commit persisted a ROUTING table");
+    assert!(table.epoch >= 1, "persisted table still at epoch {}", table.epoch);
+    assert!(
+        table.owned_count(2) > 0,
+        "spare owns nothing after the split: {:?}",
+        table.owner
+    );
+
+    assert_run_matches_baseline(&out, &baseline, "live 2->3 split");
+
+    drop(ps_a);
+    drop(ps_b);
+    drop(spare);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos drill 1: SIGKILL the migration SOURCE mid-copy. The coordinator
+/// must abort (old epoch keeps serving, nothing committed), the recovery
+/// layer must carry the trainer over the shard restart (committed epoch +
+/// put-replay), and the run must still finish at ≤1e-6 parity.
+#[test]
+fn sigkill_source_mid_copy_aborts_cleanly_and_training_survives() {
+    let steps = 15; // one probe boundary (step 10), checkpoints at 5/10/15
+    let dir = tmp_dir("killsrc");
+    let baseline = baseline_trainer(steps).run_rust().unwrap();
+
+    // Stretch each node's copy window to 1.5s so the kill lands mid-copy.
+    let slow = [("PERSIA_MIGRATE_DELAY_MS", "1500")];
+    let (mut ps_a, addr_a) = spawn_ps("127.0.0.1:0", Some("0..4"), steps, &dir, &slow);
+    let (mut ps_b, addr_b) = spawn_ps("127.0.0.1:0", Some("4..6"), steps, &dir, &slow);
+    let (spare, addr_c) = spawn_ps("127.0.0.1:0", None, steps, &dir, &[]);
+
+    let mut tr = Proc::spawn(&train_args(
+        &format!("{addr_a},{addr_b},{addr_c}"),
+        steps,
+        &dir,
+        // The exact-recovery machinery: generous retries + put-replay log,
+        // so the trainer rides out the victim's restart.
+        &["--ps-replay", "true", "--ps-replay-cap", "65536", "--ps-retries", "200",
+          "--ps-retry-ms", "100"],
+    ));
+
+    // SIGKILL whichever shard the planner picked as the source, mid-node.
+    let which =
+        wait_either(&ps_a, &ps_b, "RESHARD: migrating node", Duration::from_secs(240));
+    let (victim, victim_addr, victim_range) = if which == 0 {
+        (&mut ps_a, addr_a.clone(), "0..4")
+    } else {
+        (&mut ps_b, addr_b.clone(), "4..6")
+    };
+    victim.kill();
+    // Let some traffic actually fail against the dead shard, then bring it
+    // back on its own address from its committed epoch.
+    std::thread::sleep(Duration::from_millis(400));
+    let (ps_re, addr_re) = spawn_ps(&victim_addr, Some(victim_range), steps, &dir, &[]);
+    assert_eq!(addr_re, victim_addr, "victim must come back on its own address");
+    assert!(
+        ps_re.output_snapshot().contains("from committed epoch step-"),
+        "restarted source did not restore its epoch:\n{}",
+        ps_re.output_snapshot()
+    );
+
+    tr.wait_for_line("RESHARD aborted", Duration::from_secs(120))
+        .unwrap_or_else(|| panic!("no clean abort:\n{}", tr.output_snapshot()));
+    let status = tr
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("run hung after the abort:\n{}", tr.output_snapshot()));
+    assert!(status.success(), "run failed after the abort:\n{}", tr.output_snapshot());
+    let out = tr.output_snapshot();
+
+    // Nothing was committed: no routing flip, no persisted table.
+    assert!(!out.contains("RESHARD epoch"), "a kill mid-copy must not commit:\n{out}");
+    assert!(
+        load_routing(&dir).expect("readable dir").is_none(),
+        "aborted reshard persisted a ROUTING table"
+    );
+
+    assert_run_matches_baseline(&out, &baseline, "source-kill drill");
+
+    drop(ps_re);
+    drop(spare);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos drill 2: SIGKILL the migration DESTINATION (the `--join` spare)
+/// mid-copy. The reshard must roll back — no ROUTING commit, no orphaned
+/// node range — and the untouched 2-shard layout must finish the run at
+/// ≤1e-6 parity without any restart at all.
+#[test]
+fn sigkill_destination_mid_copy_rolls_back_without_orphaned_nodes() {
+    let steps = 15;
+    let dir = tmp_dir("killdst");
+    let baseline = baseline_trainer(steps).run_rust().unwrap();
+
+    let slow = [("PERSIA_MIGRATE_DELAY_MS", "1500")];
+    let (ps_a, addr_a) = spawn_ps("127.0.0.1:0", Some("0..4"), steps, &dir, &slow);
+    let (ps_b, addr_b) = spawn_ps("127.0.0.1:0", Some("4..6"), steps, &dir, &slow);
+    let (mut spare, addr_c) = spawn_ps("127.0.0.1:0", None, steps, &dir, &[]);
+
+    let mut tr =
+        Proc::spawn(&train_args(&format!("{addr_a},{addr_b},{addr_c}"), steps, &dir, &[]));
+
+    // Once the source starts streaming, the spare has PREPAREd and is
+    // receiving rows: kill it mid-copy.
+    wait_either(&ps_a, &ps_b, "RESHARD: migrating node", Duration::from_secs(240));
+    spare.kill();
+
+    tr.wait_for_line("RESHARD aborted", Duration::from_secs(120))
+        .unwrap_or_else(|| panic!("no clean rollback:\n{}", tr.output_snapshot()));
+    let status = tr
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("run hung after the rollback:\n{}", tr.output_snapshot()));
+    assert!(status.success(), "run failed after the rollback:\n{}", tr.output_snapshot());
+    let out = tr.output_snapshot();
+
+    // No commit, no orphan: the old table still owns every node, and the
+    // deployment that ran on it matched the reference bit for bit.
+    assert!(!out.contains("RESHARD epoch"), "a dead destination must not commit:\n{out}");
+    assert!(
+        load_routing(&dir).expect("readable dir").is_none(),
+        "rolled-back reshard persisted a ROUTING table"
+    );
+
+    assert_run_matches_baseline(&out, &baseline, "destination-kill drill");
+
+    drop(ps_a);
+    drop(ps_b);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -29,6 +29,7 @@ fn sample_manifest(step: u64, n_params: usize) -> GlobalManifest {
         params: (0..n_params).map(|i| i as f32 * 0.5 - 1.0).collect(),
         opt_m: Vec::new(),
         opt_v: Vec::new(),
+        routing_epoch: 1,
     }
 }
 
@@ -133,6 +134,7 @@ fn manifest_roundtrip_is_exact() {
                 params: rng.normal_vec(n),
                 opt_m: if with_moments == 1 { rng.normal_vec(n) } else { Vec::new() },
                 opt_v: if with_moments == 1 { rng.normal_vec(n) } else { Vec::new() },
+                routing_epoch: rng.below(4),
             };
             GlobalManifest::from_bytes(&m.to_bytes()).map(|back| back == m).unwrap_or(false)
         },
@@ -141,7 +143,7 @@ fn manifest_roundtrip_is_exact() {
 
 #[test]
 fn shard_manifest_codec_is_total() {
-    let valid = encode_shard_manifest(24, &(1..3), true);
+    let valid = encode_shard_manifest(24, &(1..3), true, 5);
     forall(
         19,
         300,
@@ -164,7 +166,7 @@ fn shard_manifest_codec_is_total() {
                 // practically impossible but allowed) a sane range.
                 match decode_shard_manifest(bytes) {
                     Err(_) => true,
-                    Ok((_, range, _)) => range.start < range.end,
+                    Ok((_, range, _, _)) => range.start < range.end,
                 }
             }
         },

@@ -1,0 +1,233 @@
+//! Property tests for the live-resharding planner and its durable
+//! artifacts (`service/reshard.rs`).
+//!
+//! Two families, mirroring `property_recovery.rs`:
+//!
+//! * **Planner laws** over random deployments + traffic: any plan the
+//!   planner emits must keep the routing table TOTAL (every node owned by
+//!   exactly one shard), move ONLY the planned range (minimal movement),
+//!   bump the epoch by exactly one, and strictly reduce the measured
+//!   imbalance — and applying the plan must agree with direct lookup for
+//!   every node.
+//! * **Codec totality**: arbitrary, truncated, or bit-flipped
+//!   `RoutingTable`/`MigrationPlan` bytes must never panic the parser and
+//!   never yield a structurally inconsistent value. These bytes cross the
+//!   wire at a PREPARE barrier and live in the persisted `ROUTING` file —
+//!   a panic here takes down a shard mid-migration; silently accepting
+//!   garbage re-routes live traffic to the wrong process.
+
+use persia::service::reshard::{
+    apply, plan_rebalance, process_imbalance, MigrationPlan, RoutingTable,
+};
+use persia::util::quickcheck::forall;
+use persia::util::Rng;
+
+/// A random deployment derived deterministically from `seed`: 2..=5 shard
+/// processes of which the first 1..=s serve a contiguous slice of the node
+/// space (the rest are idle spares), plus random per-node traffic.
+fn build_case(seed: u64) -> (RoutingTable, Vec<u64>) {
+    let mut rng = Rng::new(seed ^ 0x5E5A_4D0D);
+    let s = 2 + rng.below(4) as usize;
+    let k = 1 + rng.below(s as u64) as usize;
+    let n_nodes = k + rng.below(12) as usize;
+    // Distribute the surplus nodes over the serving shards (each keeps >= 1).
+    let mut sizes = vec![1usize; k];
+    for _ in 0..(n_nodes - k) {
+        let i = rng.below(k as u64) as usize;
+        sizes[i] += 1;
+    }
+    let mut ranges = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for i in 0..s {
+        if i < k {
+            let end = start + sizes[i];
+            ranges.push(start..end);
+            start = end;
+        } else {
+            ranges.push(0..0);
+        }
+    }
+    let addrs: Vec<String> = (0..s).map(|i| format!("127.0.0.1:77{i:02}")).collect();
+    let table = RoutingTable::initial(n_nodes, &ranges, &addrs).expect("generated partition");
+    let traffic: Vec<u64> = (0..n_nodes).map(|_| rng.below(1000)).collect();
+    (table, traffic)
+}
+
+#[test]
+fn any_emitted_plan_is_total_minimal_and_strictly_improving() {
+    forall(
+        31,
+        400,
+        |rng: &mut Rng| (rng.next_u64(), 101 + rng.below(100)),
+        |&(seed, threshold_bps)| {
+            let (table, traffic) = build_case(seed);
+            let threshold = threshold_bps as f64 / 100.0; // 1.01..=2.00
+            let Some(plan) = plan_rebalance(&table, &traffic, threshold) else {
+                // Refusing is always allowed; the planner's side of the
+                // bargain only starts once it emits a plan.
+                return true;
+            };
+            // A plan may only ever be emitted at or above the threshold.
+            if process_imbalance(&table, &traffic) < threshold {
+                return false;
+            }
+            let Ok(next) = apply(&table, &plan) else {
+                return false; // the planner emitted a plan its own table rejects
+            };
+            // Totality: every node owned by exactly one shard, indices valid.
+            let total = next.validate().is_ok() && next.owner.len() == table.n_nodes;
+            // Epoch advances by exactly one.
+            let epoch_ok = next.epoch == table.epoch + 1;
+            // Epoch N+1 ∘ plan = direct lookup, and ONLY the planned range
+            // moved (minimal movement).
+            let minimal = (0..table.n_nodes).all(|n| {
+                if plan.nodes.contains(&n) {
+                    table.owner[n] == plan.source as u32 && next.owner[n] == plan.dest as u32
+                } else {
+                    next.owner[n] == table.owner[n]
+                }
+            });
+            // The move must strictly reduce the measured imbalance.
+            let improved =
+                process_imbalance(&next, &traffic) < process_imbalance(&table, &traffic);
+            // Ownership stays contiguous for every shard (checkpoint file
+            // naming and MIGRATE_OUT streaming both rely on it).
+            let contiguous = (0..next.addrs.len()).all(|s| next.owned_range(s).is_ok());
+            total && epoch_ok && minimal && improved && contiguous
+        },
+    )
+}
+
+#[test]
+fn planner_never_panics_on_degenerate_traffic() {
+    // Short traffic slices, all-zero traffic, and absurd thresholds must
+    // all refuse cleanly (the coordinator feeds the planner whatever the
+    // fleet's STATS merge produced).
+    forall(
+        37,
+        200,
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let (table, traffic) = build_case(seed);
+            let short = &traffic[..traffic.len() / 2];
+            let a = plan_rebalance(&table, short, 1.1).is_none();
+            let b = plan_rebalance(&table, &vec![0; table.n_nodes], 1.01).is_none();
+            let c = plan_rebalance(&table, &traffic, 0.0).is_none();
+            let d = plan_rebalance(&table, &traffic, f64::INFINITY).is_none();
+            a && b && c && d
+        },
+    )
+}
+
+/// Parsing must be total: `Ok` with a structurally consistent table, or a
+/// clean `Err` — never a panic, never an inconsistent value.
+fn table_parse_is_total(bytes: &[u8]) -> bool {
+    match RoutingTable::from_bytes(bytes) {
+        Err(_) => true,
+        Ok(t) => t.validate().is_ok() && t.owner.len() == t.n_nodes,
+    }
+}
+
+fn plan_parse_is_total(bytes: &[u8]) -> bool {
+    match MigrationPlan::from_bytes(bytes) {
+        Err(_) => true,
+        Ok(p) => p.validate().is_ok(),
+    }
+}
+
+#[test]
+fn arbitrary_bytes_never_panic_either_codec() {
+    forall(
+        41,
+        400,
+        |rng: &mut Rng| {
+            let n = rng.below(300) as usize;
+            let mut bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            // Half the time splice in a valid magic so the parse walks past
+            // the header check into the CRC and body validation.
+            if rng.below(2) == 0 && bytes.len() >= 8 {
+                let magic: &[u8; 8] =
+                    if rng.below(2) == 0 { b"PRRT0001" } else { b"PRMP0001" };
+                bytes[..8].copy_from_slice(magic);
+            }
+            bytes
+        },
+        |bytes| table_parse_is_total(bytes) && plan_parse_is_total(bytes),
+    )
+}
+
+#[test]
+fn truncated_or_bitflipped_tables_are_rejected_not_panicked() {
+    let valid = RoutingTable::initial(
+        6,
+        &[0..4, 4..6, 0..0],
+        &["127.0.0.1:7701".into(), "127.0.0.1:7702".into(), "127.0.0.1:7703".into()],
+    )
+    .unwrap()
+    .to_bytes();
+    forall(
+        43,
+        300,
+        |rng: &mut Rng| {
+            let mut bytes = valid.clone();
+            if rng.below(2) == 0 {
+                bytes.truncate(rng.below(bytes.len() as u64 + 1) as usize);
+            } else {
+                let i = rng.below(bytes.len() as u64) as usize;
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            bytes
+        },
+        |bytes| {
+            if *bytes == valid {
+                // Truncation to full length is the identity escape.
+                RoutingTable::from_bytes(bytes).is_ok()
+            } else {
+                table_parse_is_total(bytes) && RoutingTable::from_bytes(bytes).is_err()
+            }
+        },
+    )
+}
+
+#[test]
+fn truncated_or_bitflipped_plans_are_rejected_not_panicked() {
+    let valid =
+        MigrationPlan { from_epoch: 7, source: 0, dest: 2, nodes: 2..4 }.to_bytes();
+    forall(
+        47,
+        300,
+        |rng: &mut Rng| {
+            let mut bytes = valid.clone();
+            if rng.below(2) == 0 {
+                bytes.truncate(rng.below(bytes.len() as u64 + 1) as usize);
+            } else {
+                let i = rng.below(bytes.len() as u64) as usize;
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            bytes
+        },
+        |bytes| {
+            if *bytes == valid {
+                MigrationPlan::from_bytes(bytes).is_ok()
+            } else {
+                plan_parse_is_total(bytes) && MigrationPlan::from_bytes(bytes).is_err()
+            }
+        },
+    )
+}
+
+#[test]
+fn table_roundtrip_is_exact_at_any_epoch() {
+    forall(
+        53,
+        200,
+        |rng: &mut Rng| (rng.next_u64(), rng.below(1 << 30)),
+        |&(seed, epoch)| {
+            let (mut table, _) = build_case(seed);
+            table.epoch = epoch; // epochs beyond 0 must survive unchanged
+            RoutingTable::from_bytes(&table.to_bytes())
+                .map(|back| back == table)
+                .unwrap_or(false)
+        },
+    )
+}
