@@ -1,0 +1,230 @@
+//! ISSUE-10 bench — the embedding-worker bounded-staleness cache under
+//! Zipf traffic against a latency-injected PS.
+//!
+//! Stage-2 of the prefetch pipeline is modeled directly: each step draws a
+//! Zipf(α=1.05) batch, dedups it, fetches the unique rows (through the
+//! cache or straight from the PS) and pushes SGD gradients back. The fake
+//! PS charges a per-call round-trip plus a per-row wire cost — the shape of
+//! a real GET — and counts the rows it actually served, so the bench can
+//! report both lookup throughput and PS GET bytes saved.
+//!
+//! Self-baselined like micro_comm: the cache-off row comes from the same
+//! run on the same machine, and the acceptance gates (≥1.5× stage-2 lookup
+//! throughput, ≥50% PS GET-byte reduction at the default capacity/staleness
+//! point) are asserted on in-run ratios, never on absolute numbers.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use persia::service::{PsBackend, PsStats};
+use persia::util::{Bench, Rng, Zipf};
+use persia::worker::{EmbCache, EwCacheParams, PushPolicy};
+
+const DIM: usize = 32;
+const UNIVERSE: u64 = 20_000;
+const BATCH_DRAWS: usize = 512;
+const ZIPF_ALPHA: f64 = 1.05;
+/// Modeled PS round-trip: a fixed per-call latency plus a per-row wire
+/// cost (batched GETs amortize the former; the cache attacks the latter).
+const CALL_NS: u64 = 20_000;
+const ROW_NS: u64 = 400;
+
+/// In-process stand-in for a remote PS: deterministic rows, injected
+/// latency, and GET counters for the bytes-saved report.
+struct SlowPs {
+    gets: AtomicU64,
+    rows_served: AtomicU64,
+}
+
+impl SlowPs {
+    fn new() -> SlowPs {
+        SlowPs { gets: AtomicU64::new(0), rows_served: AtomicU64::new(0) }
+    }
+}
+
+impl PsBackend for SlowPs {
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_nanos(CALL_NS + ROW_NS * keys.len() as u64));
+        for (i, &(g, id)) in keys.iter().enumerate() {
+            let base = (g as u64 * 31 + id) as f32 * 1e-6;
+            for (j, w) in out[i * DIM..(i + 1) * DIM].iter_mut().enumerate() {
+                *w = base + j as f32 * 1e-8;
+            }
+        }
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        self.rows_served.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn put_grads(&self, _keys: &[(u32, u64)], _grads: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn stats(&self) -> anyhow::Result<PsStats> {
+        Ok(PsStats::default())
+    }
+}
+
+/// One deduped stage-2 batch: `BATCH_DRAWS` Zipf draws, unique keys out.
+fn batch(zipf: &Zipf, rng: &mut Rng) -> Vec<(u32, u64)> {
+    let mut keys: Vec<(u32, u64)> = (0..BATCH_DRAWS).map(|_| (0u32, zipf.sample(rng))).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+/// One pull/push step: fetch the unique rows (through the cache when one is
+/// given), then write-through an SGD gradient for every key.
+fn step(
+    ps: &SlowPs,
+    cache: Option<&EmbCache>,
+    zipf: &Zipf,
+    rng: &mut Rng,
+    rows: &mut Vec<f32>,
+) -> usize {
+    let keys = batch(zipf, rng);
+    rows.clear();
+    rows.resize(keys.len() * DIM, 0.0);
+    match cache {
+        Some(c) => {
+            c.fetch_through(ps, &keys, rows).unwrap();
+        }
+        None => ps.get_many(&keys, rows).unwrap(),
+    }
+    let grads = vec![0.01f32; keys.len() * DIM];
+    ps.put_grads(&keys, &grads).unwrap();
+    if let Some(c) = cache {
+        c.push_applied(&keys, &grads);
+    }
+    keys.len()
+}
+
+fn params(capacity: usize, staleness_ticks: u64) -> EwCacheParams {
+    EwCacheParams {
+        capacity,
+        staleness_ticks,
+        admit_threshold: 2, // the TieredStore default — same sketch, same gate
+        push: PushPolicy::MirrorSgd { lr: 0.05 },
+    }
+}
+
+/// (lookups asked of stage-2, rows the PS actually served) over `n` steps.
+fn account(
+    ps: &SlowPs,
+    cache: Option<&EmbCache>,
+    zipf: &Zipf,
+    rng: &mut Rng,
+    n: usize,
+) -> (u64, u64) {
+    let before = ps.rows_served.load(Ordering::Relaxed);
+    let mut rows = Vec::new();
+    let mut lookups = 0u64;
+    for _ in 0..n {
+        lookups += step(ps, cache, zipf, rng, &mut rows) as u64;
+    }
+    (lookups, ps.rows_served.load(Ordering::Relaxed) - before)
+}
+
+fn main() {
+    common::banner(
+        "ew_cache: bounded-staleness worker cache vs latency-injected PS",
+        "Persia (KDD'22) §4.2 (bounded staleness legitimizes worker-side reuse)",
+    );
+    let bench = Bench::new(3, 10);
+    let zipf = Zipf::new(UNIVERSE, ZIPF_ALPHA);
+    let mut rows_out = Vec::new();
+    const STEPS_PER_ITER: usize = 50;
+    const ACCOUNT_STEPS: usize = 100;
+
+    // --- baseline: cache off ---
+    let ps = SlowPs::new();
+    let mut rng = Rng::new(7);
+    let (base_lookups, base_rows) = account(&ps, None, &zipf, &mut rng, ACCOUNT_STEPS);
+    // Rows the PS serves per deduped lookup; 1.0 by construction when every
+    // lookup is a GET, the denominator of the bytes-saved ratio.
+    let base_rate = base_rows as f64 / base_lookups.max(1) as f64;
+    let mut buf = Vec::new();
+    let uncached = bench.run(
+        "stage-2 lookup, cache off",
+        Some((STEPS_PER_ITER * BATCH_DRAWS) as f64),
+        || {
+            for _ in 0..STEPS_PER_ITER {
+                step(&ps, None, &zipf, &mut rng, &mut buf);
+            }
+        },
+    );
+
+    // --- sweep: capacity × staleness, default point gated ---
+    let sweep: &[(usize, u64, bool)] = &[
+        (65_536, 4, true), // the defaults: --ew-cache-capacity 65536, staleness τ=4
+        (65_536, 1, false),
+        (65_536, 16, false),
+        (4_096, 4, false),
+        (64, 4, false), // degenerate small cache: the floor of the sweep
+    ];
+    let mut gated: Option<(f64, f64)> = None;
+    for &(capacity, staleness, gate) in sweep {
+        let ps = SlowPs::new();
+        let mut rng = Rng::new(7);
+        let cache = EmbCache::new(params(capacity, staleness), DIM);
+        // Warm the admission sketch and the resident set before measuring.
+        let mut buf = Vec::new();
+        for _ in 0..16 {
+            step(&ps, Some(&cache), &zipf, &mut rng, &mut buf);
+        }
+        let (lookups, ps_rows) = account(&ps, Some(&cache), &zipf, &mut rng, ACCOUNT_STEPS);
+        let cached = bench.run(
+            &format!("stage-2 lookup, cap={capacity} s={staleness}"),
+            Some((STEPS_PER_ITER * BATCH_DRAWS) as f64),
+            || {
+                for _ in 0..STEPS_PER_ITER {
+                    step(&ps, Some(&cache), &zipf, &mut rng, &mut buf);
+                }
+            },
+        );
+        let s = cache.stats();
+        let rate = ps_rows as f64 / lookups.max(1) as f64;
+        let saved = 1.0 - rate / base_rate;
+        let speedup = uncached.p50_ns as f64 / cached.p50_ns.max(1) as f64;
+        println!(
+            "  cap={capacity} s={staleness}: {speedup:.2}x lookup speedup, \
+             {:.1}% PS GET bytes saved ({ps_rows} of {lookups} rows fetched, \
+             {} GET calls), hit mix: hits={} coalesced={} misses={} \
+             stale_refreshes={} evictions={}",
+            saved * 100.0,
+            ps.gets.load(Ordering::Relaxed),
+            s.hits,
+            s.coalesced,
+            s.misses,
+            s.stale_refreshes,
+            s.evictions,
+        );
+        if gate {
+            gated = Some((speedup, saved));
+        }
+        rows_out.push(cached);
+    }
+    rows_out.insert(0, uncached);
+
+    let (speedup, saved) = gated.expect("sweep includes the default point");
+    assert!(
+        speedup >= 1.5,
+        "worker cache must speed stage-2 lookups >= 1.5x at the default point \
+         (got {speedup:.2}x)"
+    );
+    assert!(
+        saved >= 0.5,
+        "worker cache must save >= 50% of PS GET bytes at Zipf alpha=1.05 \
+         (got {:.1}%)",
+        saved * 100.0
+    );
+
+    persia::util::bench::print_and_emit("ew_cache", "ew_cache", &rows_out);
+    println!("ew_cache OK");
+}

@@ -202,6 +202,16 @@ pub struct EmbWorkerConfig {
     /// streams to the same point or the strictly-sequential NEXT_BATCH
     /// protocol rejects the first request.
     pub start_step: usize,
+    /// Run the bounded-staleness hot-embedding cache in front of the PS
+    /// (`--ew-cache`, on by default). Forced off in deterministic mode
+    /// regardless of this flag — the cache is a strict no-op there, which
+    /// is what keeps every bitwise-parity claim intact.
+    pub ew_cache: bool,
+    /// Maximum cached rows (`--ew-cache-capacity`).
+    pub ew_cache_capacity: usize,
+    /// Maximum age of a served row in steps (`--ew-cache-staleness`).
+    /// `None` = the run's own staleness bound τ.
+    pub ew_cache_staleness: Option<u64>,
 }
 
 impl Default for EmbWorkerConfig {
@@ -212,12 +222,16 @@ impl Default for EmbWorkerConfig {
             pipeline_depth: None,
             replay_depth: 4,
             start_step: 0,
+            ew_cache: true,
+            ew_cache_capacity: 65536,
+            ew_cache_staleness: None,
         }
     }
 }
 
 impl EmbWorkerConfig {
-    /// Error on malformed listen addresses or a zero pipeline/replay depth.
+    /// Error on malformed listen addresses, a zero pipeline/replay depth,
+    /// or a degenerate cache geometry.
     pub fn validate(&self) -> Result<()> {
         validate_addr(&self.addr)?;
         if self.pipeline_depth == Some(0) {
@@ -225,6 +239,14 @@ impl EmbWorkerConfig {
         }
         if self.replay_depth == 0 {
             bail!("--replay-depth must be >= 1 (1 = the PR-4 one-deep cache)");
+        }
+        if self.ew_cache {
+            if self.ew_cache_capacity == 0 {
+                bail!("--ew-cache-capacity must be >= 1 (or pass --ew-cache false)");
+            }
+            if self.ew_cache_staleness == Some(0) {
+                bail!("--ew-cache-staleness must be >= 1 step (or pass --ew-cache false)");
+            }
         }
         Ok(())
     }
@@ -422,6 +444,7 @@ mod tests {
             pipeline_depth: Some(4),
             replay_depth: 2,
             start_step: 10,
+            ..EmbWorkerConfig::default()
         };
         ok.validate().unwrap();
         assert!(EmbWorkerConfig { pipeline_depth: Some(0), ..EmbWorkerConfig::default() }
@@ -433,6 +456,16 @@ mod tests {
         assert!(EmbWorkerConfig { addr: "nocolon".into(), ..EmbWorkerConfig::default() }
             .validate()
             .is_err());
+        // Cache geometry: zero capacity/staleness only legal with the cache off.
+        assert!(EmbWorkerConfig { ew_cache_capacity: 0, ..EmbWorkerConfig::default() }
+            .validate()
+            .is_err());
+        assert!(EmbWorkerConfig { ew_cache_staleness: Some(0), ..EmbWorkerConfig::default() }
+            .validate()
+            .is_err());
+        EmbWorkerConfig { ew_cache: false, ew_cache_capacity: 0, ..EmbWorkerConfig::default() }
+            .validate()
+            .unwrap();
     }
 
     #[test]

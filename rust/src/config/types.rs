@@ -17,6 +17,25 @@ pub enum OptimizerKind {
     Adam,
 }
 
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => OptimizerKind::Sgd,
+            "adagrad" => OptimizerKind::Adagrad,
+            "adam" => OptimizerKind::Adam,
+            _ => bail!("unknown optimizer: {s} (sgd|adagrad|adam)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adagrad => "adagrad",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
 /// How embedding rows are placed across PS nodes (paper §4.2.3,
 /// "Workload balance of embedding PS").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

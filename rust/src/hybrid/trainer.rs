@@ -53,7 +53,7 @@ use crate::runtime::{ArtifactManifest, DenseEngine, PjRtRuntime};
 use crate::service::reshard::ReshardConfig;
 use crate::service::PsBackend;
 use crate::util::Rng;
-use crate::worker::{EmbComm, LocalEmbTier};
+use crate::worker::{EmbComm, EwCacheConfig, EwCacheParams, LocalEmbTier};
 
 use super::dense_comm::{ordered, DenseComm, ThreadRing};
 use super::gantt::GanttTimeline;
@@ -275,6 +275,17 @@ pub struct Trainer {
     /// deployment identity. Ignored when `ps_backend`/`emb_comm` is set (the
     /// remote processes pick their own engines via `serve-ps` flags).
     pub store: StoreConfig,
+    /// Bounded-staleness hot-embedding cache at the (in-process) embedding
+    /// workers (`--ew-cache*`), `None` = off. On by default, but **forced
+    /// off in deterministic mode** — [`Trainer::ew_cache_params`] refuses to
+    /// resolve it there, so every bitwise-parity claim holds by
+    /// construction. Like [`Trainer::store`], deliberately NOT part of
+    /// [`Trainer::config_fingerprint`]: within the mode's staleness
+    /// contract the cache changes *when* rows are read, never what a row's
+    /// bytes mean, so it is a serving knob, not deployment identity.
+    /// Ignored when `emb_comm` is set (remote workers build their own cache
+    /// from their `--ew-cache*` flags).
+    pub ew_cache: Option<EwCacheConfig>,
 }
 
 impl Trainer {
@@ -303,6 +314,7 @@ impl Trainer {
             start_step: 0,
             resume: None,
             store: StoreConfig::default(),
+            ew_cache: Some(EwCacheConfig::default()),
         }
     }
 
@@ -315,6 +327,31 @@ impl Trainer {
             TrainMode::HybridRaw | TrainMode::Hybrid => self.train.staleness_bound,
             TrainMode::FullAsync => self.train.staleness_bound * 2,
         }
+    }
+
+    /// Resolve [`Trainer::ew_cache`] into per-worker construction
+    /// parameters, or `None` when the cache must not exist: deterministic
+    /// mode (bitwise parity — never constructing it is what makes the
+    /// cache a strict no-op there) or `--ew-cache false`. The default
+    /// staleness budget is the run's own bound τ; the push policy follows
+    /// the embedding optimizer (SGD mirrors, stateful ones invalidate).
+    pub fn ew_cache_params(&self) -> Option<EwCacheParams> {
+        if self.deterministic {
+            return None;
+        }
+        let cfg = self.ew_cache.as_ref()?;
+        let tau = self.train.staleness_bound.max(1) as u64;
+        // Steps → fetch-tick conversion: a worker serves about
+        // ceil(n_ranks / n_ew) rank-batches per global step.
+        let n_ew = self.cluster.n_emb_workers.max(1);
+        let ranks_per_worker = (self.cluster.n_nn_workers + n_ew - 1) / n_ew;
+        Some(EwCacheParams::resolve(
+            cfg,
+            tau,
+            ranks_per_worker.max(1),
+            self.emb_cfg.optimizer,
+            self.emb_cfg.lr,
+        ))
     }
 
     /// The pure-Rust engine factory (deterministic template init derived
@@ -508,6 +545,7 @@ impl Trainer {
                     self.cluster.n_emb_workers,
                     self.cluster.n_nn_workers,
                     self.train.batch_size,
+                    self.ew_cache_params(),
                 ))
             }
         };
@@ -650,6 +688,26 @@ impl Trainer {
             grad_put_failures,
         };
         let ps_imbalance = tier.ps_stats().map(|s| s.imbalance).unwrap_or(f64::NAN);
+        // One merged worker-cache line per run (absent when uncached), so
+        // operators — and the integration drills — can see the hit mix
+        // without scraping per-worker stats.
+        if let Some(cs) = tier.cache_stats() {
+            if cs.any() {
+                eprintln!(
+                    "EW-CACHE: hits={} coalesced={} misses={} stale_refreshes={} \
+                     updates={} invalidations={} evictions={} flushes={} saved_bytes={}",
+                    cs.hits,
+                    cs.coalesced,
+                    cs.misses,
+                    cs.stale_refreshes,
+                    cs.updates,
+                    cs.invalidations,
+                    cs.evictions,
+                    cs.flushes,
+                    cs.bytes_saved(self.model.emb_dim_per_group)
+                );
+            }
+        }
         TrainOutput { report, tracker, gantt, ps_imbalance, final_params }
     }
 
@@ -1451,6 +1509,7 @@ mod tests {
             t.cluster.n_emb_workers,
             t.cluster.n_nn_workers,
             t.train.batch_size,
+            t.ew_cache_params(),
         ));
         t.emb_comm = Some(tier);
         let tier_run = t.run_rust().unwrap();
@@ -1478,6 +1537,7 @@ mod tests {
             1,
             t.cluster.n_nn_workers,
             t.train.batch_size,
+            None,
         ));
         t.emb_comm = Some(tier);
         let err = t.run_rust().err().expect("worker-count mismatch must fail");

@@ -31,12 +31,13 @@ use anyhow::{Context, Result};
 use persia::allreduce::RingRendezvous;
 use persia::config::{
     BenchPreset, ClusterConfig, EmbWorkerConfig, EwFailoverConfig, NetModelConfig,
-    RecoveryConfig, RingConfig, ServiceConfig, TrainConfig, TrainMode,
+    OptimizerKind, RecoveryConfig, RingConfig, ServiceConfig, TrainConfig, TrainMode,
 };
 use persia::comm::NetSim;
 use persia::data::SyntheticDataset;
 use persia::embedding::{CheckpointManager, EmbeddingPs, StoreConfig};
 use persia::hybrid::{DenseComm, PjrtEngineFactory, ResumeState, Trainer};
+use persia::worker::EwCacheConfig;
 use persia::recovery::{latest_epoch, load_manifest, EpochConfig};
 use persia::runtime::ArtifactManifest;
 use persia::service::{
@@ -89,6 +90,13 @@ fn preset_setup(flags: &HashMap<String, String>) -> Result<PresetSetup> {
         emb_cfg.n_nodes = s.parse().context("--nodes")?;
         anyhow::ensure!(emb_cfg.n_nodes >= 1, "--nodes must be at least 1");
     }
+    // --optimizer overrides the preset's row-wise embedding optimizer (it
+    // rides the fingerprint too, so every process must agree). SGD keeps no
+    // PS-side row state, which is what lets the worker-side embedding cache
+    // mirror gradient pushes locally instead of invalidating on every push.
+    if let Some(s) = flags.get("optimizer") {
+        emb_cfg.optimizer = OptimizerKind::parse(s).context("--optimizer")?;
+    }
     let seed = flag(flags, "seed", "42").parse()?;
     Ok(PresetSetup { preset, model, emb_cfg, seed })
 }
@@ -126,6 +134,32 @@ fn store_config(
         cold_dir: std::path::PathBuf::from(dir),
         admit_threshold,
     })
+}
+
+/// Parse the worker-side hot-embedding cache flags. The cache is on by
+/// default (`--ew-cache false` disables it; deterministic mode force-
+/// disables it regardless). The geometry flags without the cache are
+/// rejected — silently ignoring them would look like a tuned cache.
+fn ew_cache_config(flags: &HashMap<String, String>) -> Result<Option<EwCacheConfig>> {
+    if flag(flags, "ew-cache", "true") != "true" {
+        anyhow::ensure!(
+            !flags.contains_key("ew-cache-capacity")
+                && !flags.contains_key("ew-cache-staleness"),
+            "--ew-cache-capacity/--ew-cache-staleness require --ew-cache true (they \
+             tune the worker-side embedding cache; with --ew-cache false no cache \
+             exists)"
+        );
+        return Ok(None);
+    }
+    let mut cfg = EwCacheConfig::default();
+    if let Some(s) = flags.get("ew-cache-capacity") {
+        cfg.capacity = s.parse().context("--ew-cache-capacity")?;
+    }
+    if let Some(s) = flags.get("ew-cache-staleness") {
+        cfg.staleness = Some(s.parse().context("--ew-cache-staleness")?);
+    }
+    cfg.validate()?;
+    Ok(Some(cfg))
 }
 
 fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
@@ -176,6 +210,7 @@ fn build_trainer(flags: &HashMap<String, String>) -> Result<Trainer> {
     trainer.deterministic = flag(flags, "deterministic", "false") == "true";
     trainer.gossip_period =
         flag(flags, "gossip-period", "64").parse().context("--gossip-period")?;
+    trainer.ew_cache = ew_cache_config(flags)?;
     // Kept past the connect so --resume-from can interrogate the shards'
     // restored epochs.
     let mut remote_ps: Option<Arc<ShardedRemotePs>> = None;
@@ -619,6 +654,17 @@ fn cmd_serve_embedding_worker(flags: HashMap<String, String>) -> Result<()> {
             Some(s) => s.parse().context("--start-step")?,
             None => trainer.start_step,
         },
+        // The worker-side hot-embedding cache lives in THIS process — the
+        // same --ew-cache* flags the trainers parse configure it here
+        // (deterministic mode force-disables it inside for_trainer).
+        ew_cache: flag(&flags, "ew-cache", "true") == "true",
+        ew_cache_capacity: flag(&flags, "ew-cache-capacity", "65536")
+            .parse()
+            .context("--ew-cache-capacity")?,
+        ew_cache_staleness: match flags.get("ew-cache-staleness") {
+            Some(s) => Some(s.parse().context("--ew-cache-staleness")?),
+            None => None,
+        },
     };
     ew_cfg.validate()?;
     let ps_deployment = flags.get("remote-ps").map(|s| s.as_str());
@@ -856,7 +902,15 @@ fn usage() -> ! {
          [--preset taobao] \
          [--mode hybrid] [--engine pjrt|rust] [--dense tiny|small|paper] [--nn-workers N] \
          [--emb-workers N] [--steps N] [--batch N] [--tau N] [--seed N] [--netsim true|false] \
-         [--verbose true] [--deterministic true] [--gossip-period N]\n\
+         [--verbose true] [--deterministic true] [--gossip-period N] \
+         [--optimizer sgd|adagrad|adam]\n\
+         worker-side embedding cache (on by default): [--ew-cache true|false] \
+         [--ew-cache-capacity N] [--ew-cache-staleness S] keeps a bounded-staleness \
+         cache of hot rows at each embedding worker — cached rows serve repeat \
+         lookups for up to S steps (default: the mode's own staleness bound tau) \
+         without touching the PS; gradient pushes write through (SGD mirrors the \
+         update locally, Adagrad/Adam invalidate); flushed whole on every routing-\
+         epoch bump and rank adoption; force-disabled under --deterministic\n\
          sharded PS: persia serve-ps [--addr 127.0.0.1:7700] [--node-range A..B] \
          [--checkpoint-dir DIR] — one process per shard — then \
          persia train --remote-ps addr1[,addr2,...] [--ps-conns N] [--ps-wire-compress true] \

@@ -72,8 +72,8 @@ use crate::hybrid::Trainer;
 use crate::recovery::{PooledConn, ReconnectPool, Redial, ReplayRing, RetryPolicy, Unreachable};
 use crate::util::lock_unpoisoned;
 use crate::worker::{
-    elastic_assign, AssignMode, BatchPrep, EmbComm, EmbeddingWorker, PrefetchPipeline,
-    PreparedBatch, WorkerStats,
+    elastic_assign, AssignMode, BatchPrep, CacheStats, EmbCache, EmbComm, EmbeddingWorker,
+    EwCacheConfig, EwCacheParams, PrefetchPipeline, PreparedBatch, WorkerStats,
 };
 
 use super::backend::{PsBackend, PsStats};
@@ -443,8 +443,15 @@ pub fn encode_ew_stats_request() -> Vec<u8> {
     WireWriter::new(KIND_EW_STATS).finish()
 }
 
-/// Encode the worker's counters + its PS backend's statistics.
-pub fn encode_ew_stats_response(buffered: usize, w: &WorkerStats, ps: &PsStats) -> Vec<u8> {
+/// Encode the worker's counters + its PS backend's statistics + the
+/// worker-side hot-embedding cache counters (all zeros when the cache is
+/// off — the section is always present so the frame stays fixed-shape).
+pub fn encode_ew_stats_response(
+    buffered: usize,
+    w: &WorkerStats,
+    ps: &PsStats,
+    cache: &CacheStats,
+) -> Vec<u8> {
     let mut msg = WireWriter::new(KIND_EW_STATS);
     msg.put_u64(&[
         buffered as u64,
@@ -469,17 +476,30 @@ pub fn encode_ew_stats_response(buffered: usize, w: &WorkerStats, ps: &PsStats) 
         ps.promotions,
         ps.cold_rows as u64,
     ]);
+    msg.put_u64(&[
+        cache.hits,
+        cache.misses,
+        cache.stale_refreshes,
+        cache.invalidations,
+        cache.updates,
+        cache.flushes,
+        cache.coalesced,
+        cache.evictions,
+    ]);
     msg.finish()
 }
 
-/// Decode a STATS response into `(buffered, worker stats, PS stats)`.
-pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsStats)> {
+/// Decode a STATS response into `(buffered, worker stats, PS stats, cache
+/// stats)`.
+pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsStats, CacheStats)> {
     let r = WireReader::parse(msg)?;
     ensure!(r.kind() == KIND_EW_STATS, "expected EW STATS response, got kind {}", r.kind());
     let xs = r.u64(0)?;
     ensure!(xs.len() == 11, "malformed EW STATS response");
     let ps = r.u64(1)?;
     ensure!(ps.len() == 8, "malformed EW STATS PS section");
+    let cs = r.u64(2)?;
+    ensure!(cs.len() == 8, "malformed EW STATS cache section");
     Ok((
         xs[0] as usize,
         WorkerStats {
@@ -503,6 +523,16 @@ pub fn decode_ew_stats_response(msg: &[u8]) -> Result<(usize, WorkerStats, PsSta
             demotions: ps[5],
             promotions: ps[6],
             cold_rows: ps[7] as usize,
+        },
+        CacheStats {
+            hits: cs[0],
+            misses: cs[1],
+            stale_refreshes: cs[2],
+            invalidations: cs[3],
+            updates: cs[4],
+            flushes: cs[5],
+            coalesced: cs[6],
+            evictions: cs[7],
         },
     ))
 }
@@ -790,6 +820,7 @@ impl EmbeddingWorkerServer {
                         prep.worker(0).buffered(),
                         &prep.worker(0).stats(),
                         &backend.stats()?,
+                        &prep.worker(0).cache_stats(),
                     ))
                 }),
             );
@@ -872,13 +903,41 @@ impl EmbeddingWorkerServer {
         );
         backend.check_compat(&trainer.emb_cfg, trainer.train.seed)?;
         let net = Arc::new(NetSim::new(trainer.cluster.net));
-        let worker = Arc::new(EmbeddingWorker::new(
-            ew.ew_rank,
-            backend.clone(),
-            &trainer.model,
-            net,
-            trainer.train.compress,
-        ));
+        // Worker-side hot-embedding cache: governed by the EW deployment
+        // flags (`--ew-cache*`), but unconditionally off in deterministic
+        // mode — bitwise parity requires every lookup to read the PS.
+        let cache = if ew.ew_cache && !trainer.deterministic {
+            let cfg = EwCacheConfig {
+                capacity: ew.ew_cache_capacity,
+                staleness: ew.ew_cache_staleness,
+                ..EwCacheConfig::default()
+            };
+            let tau = trainer.train.staleness_bound.max(1) as u64;
+            let n_ew = trainer.cluster.n_emb_workers.max(1);
+            let ranks_per_worker = (trainer.cluster.n_nn_workers + n_ew - 1) / n_ew;
+            Some(Arc::new(EmbCache::new(
+                EwCacheParams::resolve(
+                    &cfg,
+                    tau,
+                    ranks_per_worker.max(1),
+                    trainer.emb_cfg.optimizer,
+                    trainer.emb_cfg.lr,
+                ),
+                trainer.model.emb_dim_per_group,
+            )))
+        } else {
+            None
+        };
+        let worker = Arc::new(
+            EmbeddingWorker::new(
+                ew.ew_rank,
+                backend.clone(),
+                &trainer.model,
+                net,
+                trainer.train.compress,
+            )
+            .with_cache(cache),
+        );
         let prep = Arc::new(BatchPrep::new(
             trainer.dataset.clone(),
             vec![worker],
@@ -1138,8 +1197,8 @@ impl RemoteEmbeddingWorker {
         Ok((emb, sim))
     }
 
-    /// Worker counters + relayed PS statistics.
-    pub fn stats(&self) -> Result<(usize, WorkerStats, PsStats)> {
+    /// Worker counters + relayed PS statistics + worker-cache counters.
+    pub fn stats(&self) -> Result<(usize, WorkerStats, PsStats, CacheStats)> {
         let resp = self.call(&encode_ew_stats_request()).context("EW STATS")?;
         decode_ew_stats_response(&resp)
     }
@@ -1657,6 +1716,26 @@ impl EmbComm for RemoteEmbTier {
         Ok(self.workers[self.first_live()].stats()?.2)
     }
 
+    fn cache_stats(&self) -> Option<CacheStats> {
+        // Each EW process owns a private cache; the tier total is the sum
+        // over live members. Dead workers are skipped (their counters died
+        // with them), and a tier running with `--ew-cache false` everywhere
+        // reports all-zero sections — surfaced as `None` so the trainer
+        // prints nothing.
+        let mut total = CacheStats::default();
+        let mut any = false;
+        for (i, w) in self.workers.iter().enumerate() {
+            if self.is_dead(i) {
+                continue;
+            }
+            if let Ok((_, _, _, cs)) = w.stats() {
+                any = any || cs.any();
+                total.merge(&cs);
+            }
+        }
+        any.then_some(total)
+    }
+
     fn check_compat(&self, fingerprint: u64) -> Result<()> {
         ensure!(
             fingerprint == self.expect.fingerprint,
@@ -1851,14 +1930,25 @@ mod tests {
             cold_rows: 6,
             ..Default::default()
         };
-        let (buffered, w2, ps2) =
-            decode_ew_stats_response(&encode_ew_stats_response(13, &w, &ps)).unwrap();
+        let cs = CacheStats {
+            hits: 31,
+            misses: 32,
+            stale_refreshes: 33,
+            invalidations: 34,
+            updates: 35,
+            flushes: 36,
+            coalesced: 37,
+            evictions: 38,
+        };
+        let (buffered, w2, ps2, cs2) =
+            decode_ew_stats_response(&encode_ew_stats_response(13, &w, &ps, &cs)).unwrap();
         assert_eq!(buffered, 13);
         assert_eq!(w2, w);
         assert_eq!(ps2.total_rows, 11);
         assert!((ps2.imbalance - 1.5).abs() < 1e-12);
         assert_eq!(ps2.cold_hits, 21);
         assert_eq!(ps2.cold_rows, 6);
+        assert_eq!(cs2, cs);
     }
 
     #[test]
@@ -1898,7 +1988,7 @@ mod tests {
         // Gradient push-back clears the remote buffer.
         let grads = vec![0.1f32; pb.sids.len() * trainer.model.emb_dim()];
         tier.push_grads(pb.ew, &pb.sids, &grads).unwrap();
-        let (buffered, wstats, pstats) = tier.worker(0).stats().unwrap();
+        let (buffered, wstats, pstats, _) = tier.worker(0).stats().unwrap();
         assert_eq!(buffered, 0);
         assert_eq!(wstats.samples_flushed, 8);
         assert!(pstats.total_rows > 0);
@@ -1908,7 +1998,7 @@ mod tests {
         // error, and the gradient is NOT applied a second time.
         tier.push_grads(pb.ew, &pb.sids, &grads)
             .expect("replayed push must be answered idempotently");
-        let (_, wstats2, _) = tier.worker(0).stats().unwrap();
+        let (_, wstats2, _, _) = tier.worker(0).stats().unwrap();
         assert_eq!(wstats2.batches_flushed, 1, "replay must not re-apply");
         assert_eq!(wstats2.samples_flushed, 8);
 

@@ -111,6 +111,39 @@ struct ReshardState {
     joinable: bool,
     /// Destination of the persisted `ROUTING` file, if any.
     routing_dir: Option<PathBuf>,
+    /// Set when persisting ROUTING at a COMMIT_RESHARD failed: the flip is
+    /// already live in RAM, so the commit cannot be failed — instead the
+    /// write is re-attempted at every checkpoint barrier until one lands
+    /// (crash recovery would otherwise restore a pre-reshard table).
+    routing_dirty: AtomicBool,
+}
+
+impl ReshardState {
+    /// Re-attempt a ROUTING persist that failed at COMMIT_RESHARD. Called
+    /// at the checkpoint barriers (PREPARE_CKPT/COMMIT_CKPT) — the next
+    /// durable point after the failed write — so a transient disk error
+    /// heals instead of silently leaving crash recovery a stale table.
+    fn retry_routing_persist(&self) {
+        if !self.routing_dirty.load(Ordering::SeqCst) {
+            return;
+        }
+        let Some(dir) = &self.routing_dir else { return };
+        let Some(table) = lock_unpoisoned(&self.committed).clone() else { return };
+        match crate::recovery::atomic_write(&reshard::routing_path(dir), &table.to_bytes()) {
+            Ok(()) => {
+                self.routing_dirty.store(false, Ordering::SeqCst);
+                eprintln!(
+                    "persia serve-ps: ROUTING (epoch {}) persisted on checkpoint-barrier retry",
+                    table.epoch
+                );
+            }
+            Err(e) => eprintln!(
+                "persia serve-ps: ROUTING persist retry failed (epoch {}), will retry at the \
+                 next checkpoint barrier: {e:#}",
+                table.epoch
+            ),
+        }
+    }
 }
 
 /// Test hook: `PERSIA_MIGRATE_DELAY_MS` stretches the per-node copy window
@@ -229,6 +262,7 @@ impl PsServer {
             queue: Mutex::new(Vec::new()),
             joinable: join,
             routing_dir,
+            routing_dirty: AtomicBool::new(false),
         });
 
         let listener =
@@ -401,6 +435,7 @@ impl PsServer {
                     let mgr = ckpt_prep.as_ref().with_context(|| {
                         "PREPARE_CKPT on a PS started without --checkpoint-dir".to_string()
                     })?;
+                    st.retry_routing_persist();
                     let owned = read_unpoisoned(&st.owned).clone();
                     mgr.prepare_epoch_range(&ps, step, owned.clone())?;
                     Ok(protocol::encode_ckpt_response(protocol::KIND_PREPARE_CKPT, owned.len()))
@@ -422,6 +457,10 @@ impl PsServer {
                     })?;
                     let owned = read_unpoisoned(&st.owned).clone();
                     let nodes = mgr.commit_epoch_range(&ps, step, owned)?;
+                    // The barrier's last durable act: if a reshard's ROUTING
+                    // persist failed, land it now so the committed checkpoint
+                    // and the routing table never disagree on disk.
+                    st.retry_routing_persist();
                     Ok(protocol::encode_ckpt_response(protocol::KIND_COMMIT_CKPT, nodes))
                 }),
             );
@@ -599,14 +638,23 @@ impl PsServer {
                         mgr.set_routing_epoch(table.epoch);
                     }
                     if let Some(dir) = &st.routing_dir {
-                        // Best-effort: a failed persist must not wedge an
-                        // already-flipped deployment; the table survives in
-                        // RAM and the next commit retries.
-                        if let Err(e) = crate::recovery::atomic_write(
+                        // A failed persist must not wedge an already-flipped
+                        // deployment — the table survives in RAM — but it is
+                        // not silently dropped either: the dirty flag makes
+                        // every checkpoint barrier retry until a write lands.
+                        match crate::recovery::atomic_write(
                             &reshard::routing_path(dir),
                             &table.to_bytes(),
                         ) {
-                            eprintln!("persia serve-ps: persisting ROUTING failed: {e:#}");
+                            Ok(()) => st.routing_dirty.store(false, Ordering::SeqCst),
+                            Err(e) => {
+                                st.routing_dirty.store(true, Ordering::SeqCst);
+                                eprintln!(
+                                    "persia serve-ps: persisting ROUTING (epoch {}) failed, \
+                                     will retry at the next checkpoint barrier: {e:#}",
+                                    table.epoch
+                                );
+                            }
                         }
                     }
                     *lock_unpoisoned(&st.committed) = Some(table);

@@ -714,6 +714,13 @@ impl PsBackend for ShardedRemotePs {
         self.execute_plan(&plan, &next)
     }
 
+    /// The committed epoch of the routing view this client is serving GETs
+    /// from. Doubles as the embedding-worker cache's flush signal: an
+    /// [`EmbCache`](crate::worker::EmbCache) snapshots this value on every
+    /// fetch and drops its whole contents when it moves — rows cached under
+    /// the old layout may have been owned by a different shard, and the
+    /// copy-window semantics only guarantee freshness for reads issued
+    /// against the new table.
     fn routing_epoch(&self) -> u64 {
         read_unpoisoned(&self.view).epoch
     }

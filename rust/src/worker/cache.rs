@@ -1,0 +1,847 @@
+//! Bounded-staleness hot-embedding cache at the embedding-worker tier.
+//!
+//! The hybrid algorithm (paper §4.2) already tolerates bounded staleness in
+//! the embedding layer — a looked-up row may lag the freshest PS state by up
+//! to τ optimization steps. Every lookup still paid a full PS round-trip,
+//! even for the Zipf-hot head that dominates traffic. This module spends
+//! that staleness budget on a per-worker cache instead: a hot row fetched
+//! once may serve repeat lookups for up to `staleness` fetch ticks before it
+//! must be refetched, absorbing the hot head's GET traffic entirely
+//! worker-side (ScaleFreeCTR's MixCache applied at the worker tier).
+//!
+//! Correctness rules, in order of precedence:
+//!
+//! * **Deterministic mode never sees this cache.** The trainer refuses to
+//!   construct one (`Trainer::ew_cache_params` returns `None`), so every
+//!   bitwise-parity claim of the deterministic suites holds by construction.
+//! * **Gradient pushes write through.** The PS is always updated first; the
+//!   cached copy is then either mirrored (SGD: `w -= lr·g` is stateless, so
+//!   the worker replays the *identical* f32 update on the cached row and the
+//!   copy stays bitwise-coherent with the PS for single-writer keys) or
+//!   invalidated (Adagrad/Adam keep optimizer state PS-side that the worker
+//!   cannot see, so the entry is dropped instead).
+//! * **Version tags gate every hit.** Entries carry
+//!   `(routing_epoch, fetch_tick)`: a routing-epoch bump (live resharding, a
+//!   NOT_OWNER-triggered refresh) flushes the whole cache before the next
+//!   fetch proceeds, and an entry older than `staleness` ticks is refetched
+//!   (counted as a stale refresh, the MixCache refresh path).
+//! * **ADOPT_RANK flushes.** A worker taking over a dead peer's ranks
+//!   splices streams mid-window; the prefetch pipeline drops the cache along
+//!   with the replay rings.
+//!
+//! Admission uses the same frequency sketch as the tiered store
+//! ([`crate::embedding::tiered`]): a power-of-two array of saturating byte
+//! counters indexed by splitmix64, so one-touch tail keys never displace a
+//! hot row.
+//!
+//! The cache also runs the cross-rank **single-flight** dedup: concurrent
+//! stage-2 scatter-gathers from different NN ranks assigned to one worker
+//! used to fetch co-hot keys once *per rank*; now the first rank to miss a
+//! key becomes its leader and every concurrent rank waits for that one
+//! fetch instead of issuing its own (`coalesced` in [`CacheStats`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::OptimizerKind;
+use crate::embedding::store::DEFAULT_ADMIT_THRESHOLD;
+use crate::service::PsBackend;
+
+/// Minimum admission-sketch size (matches the tiered store: below this,
+/// aliasing of one-touch tail keys would defeat the gate).
+const MIN_SKETCH: usize = 1 << 16;
+/// Maximum admission-sketch size (1 MiB of counters).
+const MAX_SKETCH: usize = 1 << 20;
+/// How long a coalesced rank waits for the leading rank's PS fetch before
+/// falling back to its own fetch. Generous: a leader riding out a PS shard
+/// restart can hold the flight for several retry windows, and the fallback
+/// is always correct (just an extra GET).
+const FLIGHT_WAIT: Duration = Duration::from_secs(10);
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn key_hash((g, id): (u32, u64)) -> u64 {
+    splitmix64((u64::from(g) << 48) ^ id)
+}
+
+/// User-facing cache knobs (`--ew-cache-capacity`, `--ew-cache-staleness`);
+/// `Trainer::ew_cache` holds `Some(EwCacheConfig)` when `--ew-cache` is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EwCacheConfig {
+    /// Maximum cached rows per embedding worker.
+    pub capacity: usize,
+    /// Maximum age of a served row, in *steps*. `None` picks the run's own
+    /// staleness bound τ — the hybrid algorithm's contract is the default.
+    pub staleness: Option<u64>,
+    /// Admission-sketch touch count at which a key may enter the cache
+    /// (same gate as the tiered store's hot tier).
+    pub admit_threshold: u8,
+}
+
+impl Default for EwCacheConfig {
+    fn default() -> Self {
+        Self { capacity: 65536, staleness: None, admit_threshold: DEFAULT_ADMIT_THRESHOLD }
+    }
+}
+
+impl EwCacheConfig {
+    /// Reject degenerate configurations loudly (a zero-capacity or
+    /// zero-staleness cache silently behaving as "off" would mask typos).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.capacity >= 1, "--ew-cache-capacity must be at least 1");
+        if let Some(s) = self.staleness {
+            anyhow::ensure!(s >= 1, "--ew-cache-staleness must be at least 1 step");
+        }
+        anyhow::ensure!(self.admit_threshold >= 1, "cache admit threshold must be >= 1");
+        Ok(())
+    }
+}
+
+/// What a gradient push does to a cached row (write-through to the PS
+/// happens first in every case).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PushPolicy {
+    /// SGD is stateless: replay `w -= lr·g` on the cached copy, bitwise
+    /// identical to the PS update for single-writer keys.
+    MirrorSgd {
+        /// The row-wise learning rate the PS applies.
+        lr: f32,
+    },
+    /// Stateful optimizers (Adagrad/Adam) keep per-row accumulators the
+    /// worker cannot see: drop the entry and refetch on next use.
+    Invalidate,
+}
+
+/// Fully resolved construction parameters for one worker's [`EmbCache`]:
+/// staleness converted from steps to fetch ticks, push policy derived from
+/// the run's optimizer.
+#[derive(Clone, Copy, Debug)]
+pub struct EwCacheParams {
+    /// Maximum cached rows.
+    pub capacity: usize,
+    /// Maximum entry age in fetch ticks (each batched fetch through the
+    /// cache advances the tick clock by one).
+    pub staleness_ticks: u64,
+    /// Admission-sketch threshold.
+    pub admit_threshold: u8,
+    /// Push-path behavior.
+    pub push: PushPolicy,
+}
+
+impl EwCacheParams {
+    /// Resolve user knobs against the run: `tau` is the mode's staleness
+    /// bound (the default budget), `ranks_per_worker` how many NN-rank
+    /// streams this worker serves — one global step costs the worker about
+    /// that many fetch ticks, so a staleness of `s` steps becomes
+    /// `s × ranks_per_worker` ticks (conservative: a worker serving its
+    /// ranks unevenly expires entries *early*, never late).
+    pub fn resolve(
+        cfg: &EwCacheConfig,
+        tau: u64,
+        ranks_per_worker: usize,
+        optimizer: OptimizerKind,
+        lr: f32,
+    ) -> Self {
+        let steps = cfg.staleness.unwrap_or(tau).max(1);
+        let push = match optimizer {
+            OptimizerKind::Sgd => PushPolicy::MirrorSgd { lr },
+            OptimizerKind::Adagrad | OptimizerKind::Adam => PushPolicy::Invalidate,
+        };
+        Self {
+            capacity: cfg.capacity.max(1),
+            staleness_ticks: steps.saturating_mul(ranks_per_worker.max(1) as u64).max(1),
+            admit_threshold: cfg.admit_threshold.max(1),
+            push,
+        }
+    }
+}
+
+/// Monotonic counters of one [`EmbCache`] — the third section of the EW
+/// STATS wire frame (8 × u64, merged across the tier by the trainer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a valid cached row (no PS traffic).
+    pub hits: u64,
+    /// Lookups that went to the PS (cold key, not admitted, or refused).
+    pub misses: u64,
+    /// Misses whose entry existed but aged past the staleness bound — the
+    /// refresh path, a subset of `misses`.
+    pub stale_refreshes: u64,
+    /// Entries dropped by a gradient push under [`PushPolicy::Invalidate`].
+    pub invalidations: u64,
+    /// Cached rows updated in place under [`PushPolicy::MirrorSgd`].
+    pub updates: u64,
+    /// Whole-cache flushes (routing-epoch bump, ADOPT take-over).
+    pub flushes: u64,
+    /// Lookups served by waiting on another rank's in-flight fetch of the
+    /// same key (the cross-rank single-flight dedup).
+    pub coalesced: u64,
+    /// Entries dropped by capacity eviction.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Accumulate `other` into `self` (merging a tier's workers).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.stale_refreshes += other.stale_refreshes;
+        self.invalidations += other.invalidations;
+        self.updates += other.updates;
+        self.flushes += other.flushes;
+        self.coalesced += other.coalesced;
+        self.evictions += other.evictions;
+    }
+
+    /// PS GET bytes this cache absorbed (`hits × dim × 4`).
+    pub fn bytes_saved(&self, dim: usize) -> u64 {
+        (self.hits + self.coalesced) * dim as u64 * 4
+    }
+
+    /// Any activity at all (gates the end-of-run summary line).
+    pub fn any(&self) -> bool {
+        self.hits + self.misses + self.flushes != 0
+    }
+}
+
+#[derive(Default)]
+struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stale_refreshes: AtomicU64,
+    invalidations: AtomicU64,
+    updates: AtomicU64,
+    flushes: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct Entry {
+    row: Vec<f32>,
+    /// Routing epoch the row was fetched under (entries of an older epoch
+    /// never survive — the epoch check flushes wholesale before lookup).
+    epoch: u64,
+    /// Fetch tick of the last PS read of this row — the staleness clock.
+    /// Deliberately NOT advanced by local mirror updates: writers on other
+    /// workers still drift the PS row, so age is measured from the last
+    /// time this worker actually read the PS.
+    fetched_at: u64,
+    /// Fetch tick of the last lookup (capacity eviction keys on this).
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<(u32, u64), Entry>,
+    /// Saturating per-key touch counters (aliased; power-of-two length).
+    freq: Vec<u8>,
+    freq_mask: u64,
+    /// The routing epoch the cache contents were fetched under.
+    seen_epoch: u64,
+}
+
+enum FlightState {
+    Pending,
+    /// `None`: the leading fetch failed; waiters fall back to their own GET.
+    Done(Option<Vec<f32>>),
+}
+
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+/// The per-embedding-worker bounded-staleness hot-row cache. All methods
+/// take `&self`; the row map lock is never held across a PS call.
+pub struct EmbCache {
+    dim: usize,
+    capacity: usize,
+    staleness: u64,
+    admit_threshold: u8,
+    push: PushPolicy,
+    clock: AtomicU64,
+    inner: Mutex<Inner>,
+    flights: Mutex<HashMap<(u32, u64), Arc<Flight>>>,
+    counters: CacheCounters,
+}
+
+impl EmbCache {
+    /// A cache for `dim`-wide embedding rows under `params`.
+    pub fn new(params: EwCacheParams, dim: usize) -> Self {
+        let sketch = params
+            .capacity
+            .saturating_mul(8)
+            .next_power_of_two()
+            .clamp(MIN_SKETCH, MAX_SKETCH);
+        Self {
+            dim,
+            capacity: params.capacity.max(1),
+            staleness: params.staleness_ticks.max(1),
+            admit_threshold: params.admit_threshold.max(1),
+            push: params.push,
+            clock: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                freq: vec![0; sketch],
+                freq_mask: (sketch - 1) as u64,
+                seen_epoch: 0,
+            }),
+            flights: Mutex::new(HashMap::new()),
+            counters: CacheCounters::default(),
+        }
+    }
+
+    fn lock_inner(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> CacheStats {
+        let c = &self.counters;
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        CacheStats {
+            hits: load(&c.hits),
+            misses: load(&c.misses),
+            stale_refreshes: load(&c.stale_refreshes),
+            invalidations: load(&c.invalidations),
+            updates: load(&c.updates),
+            flushes: load(&c.flushes),
+            coalesced: load(&c.coalesced),
+            evictions: load(&c.evictions),
+        }
+    }
+
+    /// Resident rows (tests and diagnostics).
+    pub fn len(&self) -> usize {
+        self.lock_inner().map.len()
+    }
+
+    /// True when no rows are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The current fetch tick (tests pin staleness arithmetic on this).
+    pub fn now(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached row (ADOPT_RANK take-over, tests). `reason` is for
+    /// the log line; epoch-bump flushes announce themselves from
+    /// [`EmbCache::fetch_through`] instead.
+    pub fn flush(&self, reason: &str) {
+        let dropped = {
+            let mut inner = self.lock_inner();
+            let n = inner.map.len();
+            inner.map.clear();
+            n
+        };
+        self.counters.flushes.fetch_add(1, Ordering::Relaxed);
+        if dropped > 0 {
+            eprintln!("EW-CACHE: flushed {dropped} rows ({reason})");
+        }
+    }
+
+    /// The batched lookup: serve every key of `keys` into `rows`
+    /// (`keys.len() × dim`), reading from the cache where a valid row is
+    /// resident and from `ps` otherwise. Returns the number of rows this
+    /// call actually fetched from the PS — the wire traffic (coalesced rows
+    /// served by another rank's in-flight fetch count as zero here; the
+    /// leading rank already paid for them).
+    ///
+    /// The routing epoch is observed first: a bump flushes the whole cache
+    /// before any key is served, so no row fetched under the old shard
+    /// layout outlives a live reshard or a NOT_OWNER routing refresh.
+    pub fn fetch_through(
+        &self,
+        ps: &dyn PsBackend,
+        keys: &[(u32, u64)],
+        rows: &mut [f32],
+    ) -> Result<usize> {
+        let d = self.dim;
+        debug_assert_eq!(rows.len(), keys.len() * d);
+        let epoch = ps.routing_epoch();
+        let now = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+
+        // Partition into hits (served under the lock) and misses.
+        let mut miss_slots: Vec<usize> = Vec::new();
+        let mut admit: Vec<bool> = Vec::new();
+        {
+            let mut inner = self.lock_inner();
+            if inner.seen_epoch != epoch {
+                let dropped = inner.map.len();
+                let old = inner.seen_epoch;
+                inner.map.clear();
+                inner.seen_epoch = epoch;
+                self.counters.flushes.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "EW-CACHE: flushed {dropped} rows (routing epoch {old} -> {epoch})"
+                );
+            }
+            for (slot, &key) in keys.iter().enumerate() {
+                let mut stale = false;
+                match inner.map.get_mut(&key) {
+                    Some(e)
+                        if e.epoch == epoch && now.saturating_sub(e.fetched_at) <= self.staleness =>
+                    {
+                        rows[slot * d..(slot + 1) * d].copy_from_slice(&e.row);
+                        e.last_used = now;
+                        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    Some(_) => stale = true,
+                    None => {}
+                }
+                if stale {
+                    inner.map.remove(&key);
+                    self.counters.stale_refreshes.fetch_add(1, Ordering::Relaxed);
+                }
+                let idx = (key_hash(key) & inner.freq_mask) as usize;
+                inner.freq[idx] = inner.freq[idx].saturating_add(1);
+                admit.push(inner.freq[idx] >= self.admit_threshold);
+                miss_slots.push(slot);
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if miss_slots.is_empty() {
+            // Cache-aware GET planning: a fully-hit batch issues NO PS call
+            // at all (the sharded client's scatter-gather never starts).
+            return Ok(0);
+        }
+
+        // Single-flight claim: the first rank to miss a key leads its fetch;
+        // concurrent ranks wait on the leader instead of re-fetching.
+        let mut lead: Vec<usize> = Vec::new(); // indexes into miss_slots
+        let mut follow: Vec<(usize, Arc<Flight>)> = Vec::new();
+        let mut claimed: Vec<(u32, u64)> = Vec::new();
+        {
+            let mut flights = self.flights.lock().unwrap_or_else(|p| p.into_inner());
+            for (mi, &slot) in miss_slots.iter().enumerate() {
+                let key = keys[slot];
+                match flights.get(&key) {
+                    Some(f) => follow.push((mi, f.clone())),
+                    None => {
+                        let f = Arc::new(Flight {
+                            state: Mutex::new(FlightState::Pending),
+                            cv: Condvar::new(),
+                        });
+                        flights.insert(key, f);
+                        claimed.push(key);
+                        lead.push(mi);
+                    }
+                }
+            }
+        }
+
+        let mut fetched = 0usize;
+        if !lead.is_empty() {
+            let lead_keys: Vec<(u32, u64)> = lead.iter().map(|&mi| keys[miss_slots[mi]]).collect();
+            let mut tmp = vec![0.0f32; lead_keys.len() * d];
+            let got = ps.get_many(&lead_keys, &mut tmp);
+            // Resolve the flights win or lose: waiters must never hang on a
+            // failed leader (they fall back to their own GET).
+            {
+                let mut flights = self.flights.lock().unwrap_or_else(|p| p.into_inner());
+                for (i, key) in claimed.iter().enumerate() {
+                    if let Some(f) = flights.remove(key) {
+                        let payload = got
+                            .as_ref()
+                            .ok()
+                            .map(|_| tmp[i * d..(i + 1) * d].to_vec());
+                        *f.state.lock().unwrap_or_else(|p| p.into_inner()) =
+                            FlightState::Done(payload);
+                        f.cv.notify_all();
+                    }
+                }
+            }
+            got?;
+            fetched += lead_keys.len();
+            let mut inner = self.lock_inner();
+            for (i, &mi) in lead.iter().enumerate() {
+                let slot = miss_slots[mi];
+                rows[slot * d..(slot + 1) * d].copy_from_slice(&tmp[i * d..(i + 1) * d]);
+                if admit[mi] {
+                    Self::evict_for_room(&mut inner, &self.counters, self.capacity, self.staleness, now);
+                    inner.map.insert(
+                        keys[slot],
+                        Entry {
+                            row: tmp[i * d..(i + 1) * d].to_vec(),
+                            epoch,
+                            fetched_at: now,
+                            last_used: now,
+                        },
+                    );
+                }
+            }
+        }
+
+        // Collect the coalesced keys; anything that timed out or rode a
+        // failed leader is fetched directly (always correct, never stalls).
+        let mut fallback: Vec<usize> = Vec::new(); // indexes into miss_slots
+        for (mi, flight) in follow {
+            let mut state = flight.state.lock().unwrap_or_else(|p| p.into_inner());
+            let mut waited = Duration::ZERO;
+            let done = loop {
+                match &*state {
+                    FlightState::Done(payload) => break payload.clone(),
+                    FlightState::Pending if waited >= FLIGHT_WAIT => break None,
+                    FlightState::Pending => {
+                        let (s, timeout) = flight
+                            .cv
+                            .wait_timeout(state, FLIGHT_WAIT - waited)
+                            .unwrap_or_else(|p| p.into_inner());
+                        state = s;
+                        if timeout.timed_out() {
+                            waited = FLIGHT_WAIT;
+                        } else {
+                            waited += Duration::from_millis(1);
+                        }
+                    }
+                }
+            };
+            drop(state);
+            let slot = miss_slots[mi];
+            match done {
+                Some(row) => {
+                    rows[slot * d..(slot + 1) * d].copy_from_slice(&row);
+                    self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                    // Already counted as a miss above; correct the split.
+                    self.counters.misses.fetch_sub(1, Ordering::Relaxed);
+                }
+                None => fallback.push(mi),
+            }
+        }
+        if !fallback.is_empty() {
+            let fb_keys: Vec<(u32, u64)> =
+                fallback.iter().map(|&mi| keys[miss_slots[mi]]).collect();
+            let mut tmp = vec![0.0f32; fb_keys.len() * d];
+            ps.get_many(&fb_keys, &mut tmp)?;
+            fetched += fb_keys.len();
+            let mut inner = self.lock_inner();
+            for (i, &mi) in fallback.iter().enumerate() {
+                let slot = miss_slots[mi];
+                rows[slot * d..(slot + 1) * d].copy_from_slice(&tmp[i * d..(i + 1) * d]);
+                if admit[mi] {
+                    Self::evict_for_room(&mut inner, &self.counters, self.capacity, self.staleness, now);
+                    inner.map.insert(
+                        keys[slot],
+                        Entry {
+                            row: tmp[i * d..(i + 1) * d].to_vec(),
+                            epoch,
+                            fetched_at: now,
+                            last_used: now,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(fetched)
+    }
+
+    /// Make room for one insertion when the map is at capacity: drop expired
+    /// entries first, then (if still full) the least-recently-used half via
+    /// a median split — O(n) amortized over the insertions that refilled it.
+    fn evict_for_room(
+        inner: &mut Inner,
+        counters: &CacheCounters,
+        capacity: usize,
+        staleness: u64,
+        now: u64,
+    ) {
+        if inner.map.len() < capacity {
+            return;
+        }
+        let before = inner.map.len();
+        inner.map.retain(|_, e| now.saturating_sub(e.fetched_at) <= staleness);
+        if inner.map.len() >= capacity {
+            let mut used: Vec<u64> = inner.map.values().map(|e| e.last_used).collect();
+            let mid = used.len() / 2;
+            let (_, median, _) = used.select_nth_unstable(mid);
+            let median = *median;
+            inner.map.retain(|_, e| e.last_used > median);
+        }
+        counters.evictions.fetch_add((before - inner.map.len()) as u64, Ordering::Relaxed);
+    }
+
+    /// The push-path hook: the PS put for `keys`/`agg_grads` (one aggregated
+    /// gradient row per unique key) has already **succeeded**; reconcile the
+    /// cached copies per the [`PushPolicy`].
+    pub fn push_applied(&self, keys: &[(u32, u64)], agg_grads: &[f32]) {
+        let d = self.dim;
+        debug_assert_eq!(agg_grads.len(), keys.len() * d);
+        let mut inner = self.lock_inner();
+        match self.push {
+            PushPolicy::MirrorSgd { lr } => {
+                for (i, key) in keys.iter().enumerate() {
+                    if let Some(e) = inner.map.get_mut(key) {
+                        for (w, &g) in e.row.iter_mut().zip(&agg_grads[i * d..(i + 1) * d]) {
+                            *w -= lr * g;
+                        }
+                        self.counters.updates.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            PushPolicy::Invalidate => {
+                for key in keys {
+                    if inner.map.remove(key).is_some() {
+                        self.counters.invalidations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::PsStats;
+    use std::sync::atomic::AtomicU64 as Au64;
+
+    /// A PS whose row for key `(g, id)` is `base + version` in every lane —
+    /// bump `version` to model writers the cache cannot see; `epoch` models
+    /// live resharding.
+    struct FakePs {
+        dim: usize,
+        version: Au64,
+        epoch: Au64,
+        gets: Au64,
+        rows_fetched: Au64,
+    }
+
+    impl FakePs {
+        fn new(dim: usize) -> Self {
+            Self {
+                dim,
+                version: Au64::new(0),
+                epoch: Au64::new(0),
+                gets: Au64::new(0),
+                rows_fetched: Au64::new(0),
+            }
+        }
+        fn value(&self, (g, id): (u32, u64)) -> f32 {
+            (u64::from(g) * 1_000_000 + id * 1_000) as f32
+                + self.version.load(Ordering::SeqCst) as f32
+        }
+    }
+
+    impl PsBackend for FakePs {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> Result<()> {
+            self.gets.fetch_add(1, Ordering::SeqCst);
+            self.rows_fetched.fetch_add(keys.len() as u64, Ordering::SeqCst);
+            for (i, &k) in keys.iter().enumerate() {
+                let v = self.value(k);
+                out[i * self.dim..(i + 1) * self.dim].fill(v);
+            }
+            Ok(())
+        }
+        fn put_grads(&self, _keys: &[(u32, u64)], _grads: &[f32]) -> Result<()> {
+            Ok(())
+        }
+        fn stats(&self) -> Result<PsStats> {
+            Ok(PsStats::default())
+        }
+        fn routing_epoch(&self) -> u64 {
+            self.epoch.load(Ordering::SeqCst)
+        }
+    }
+
+    fn params(capacity: usize, staleness: u64) -> EwCacheParams {
+        EwCacheParams {
+            capacity,
+            staleness_ticks: staleness,
+            admit_threshold: 1,
+            push: PushPolicy::Invalidate,
+        }
+    }
+
+    fn fetch(cache: &EmbCache, ps: &FakePs, keys: &[(u32, u64)]) -> (Vec<f32>, usize) {
+        let mut rows = vec![0.0f32; keys.len() * ps.dim];
+        let fetched = cache.fetch_through(ps, keys, &mut rows).unwrap();
+        (rows, fetched)
+    }
+
+    #[test]
+    fn second_lookup_hits_and_skips_the_ps() {
+        let ps = FakePs::new(4);
+        let cache = EmbCache::new(params(64, 10), 4);
+        let keys = [(0u32, 1u64), (0, 2)];
+        let (_, fetched) = fetch(&cache, &ps, &keys);
+        assert_eq!(fetched, 2);
+        let (rows, fetched) = fetch(&cache, &ps, &keys);
+        assert_eq!(fetched, 0, "warm lookup must not touch the PS");
+        assert_eq!(ps.gets.load(Ordering::SeqCst), 1, "fully-hit batch issues no GET");
+        assert_eq!(rows[0], ps.value((0, 1)));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+    }
+
+    #[test]
+    fn admission_gate_blocks_one_touch_keys() {
+        let ps = FakePs::new(2);
+        let p = EwCacheParams { admit_threshold: 2, ..params(64, 100) };
+        let cache = EmbCache::new(p, 2);
+        fetch(&cache, &ps, &[(0, 7)]);
+        assert_eq!(cache.len(), 0, "first touch must not admit");
+        fetch(&cache, &ps, &[(0, 7)]);
+        assert_eq!(cache.len(), 1, "second touch admits");
+        let (_, fetched) = fetch(&cache, &ps, &[(0, 7)]);
+        assert_eq!(fetched, 0);
+    }
+
+    #[test]
+    fn stale_rows_are_refetched_within_the_bound() {
+        let ps = FakePs::new(2);
+        let cache = EmbCache::new(params(64, 3), 2);
+        fetch(&cache, &ps, &[(0, 1)]); // tick 1, fetched_at = 1
+        ps.version.store(50, Ordering::SeqCst); // an unseen writer
+        // Ticks 2..=4: age <= 3, served stale — the bounded-staleness
+        // window at work (value still the old one).
+        for _ in 0..3 {
+            let (rows, fetched) = fetch(&cache, &ps, &[(0, 1)]);
+            assert_eq!(fetched, 0);
+            assert_eq!(rows[0], 1_000.0, "within the bound the old row serves");
+        }
+        // Tick 5: age 4 > 3 — must refetch and see the new value.
+        let (rows, fetched) = fetch(&cache, &ps, &[(0, 1)]);
+        assert_eq!(fetched, 1);
+        assert_eq!(rows[0], 1_050.0, "past the bound the fresh row serves");
+        assert_eq!(cache.stats().stale_refreshes, 1);
+    }
+
+    #[test]
+    fn routing_epoch_bump_flushes_everything() {
+        let ps = FakePs::new(2);
+        let cache = EmbCache::new(params(64, 1000), 2);
+        fetch(&cache, &ps, &[(0, 1), (0, 2), (1, 3)]);
+        assert_eq!(cache.len(), 3);
+        ps.epoch.store(1, Ordering::SeqCst);
+        ps.version.store(9, Ordering::SeqCst);
+        let (rows, fetched) = fetch(&cache, &ps, &[(0, 1)]);
+        assert_eq!(fetched, 1, "post-reshard lookup must refetch");
+        assert_eq!(rows[0], 1_009.0);
+        assert_eq!(cache.len(), 1, "old-epoch rows are gone");
+        assert_eq!(cache.stats().flushes, 1);
+    }
+
+    #[test]
+    fn explicit_flush_drops_rows() {
+        let ps = FakePs::new(2);
+        let cache = EmbCache::new(params(64, 1000), 2);
+        fetch(&cache, &ps, &[(0, 1), (0, 2)]);
+        cache.flush("adopt");
+        assert!(cache.is_empty());
+        let (_, fetched) = fetch(&cache, &ps, &[(0, 1)]);
+        assert_eq!(fetched, 1);
+    }
+
+    #[test]
+    fn capacity_is_respected() {
+        let ps = FakePs::new(2);
+        let cache = EmbCache::new(params(8, 1000), 2);
+        for id in 0..100u64 {
+            fetch(&cache, &ps, &[(0, id)]);
+        }
+        assert!(cache.len() <= 8, "resident {} > capacity 8", cache.len());
+        assert!(cache.stats().evictions > 0);
+    }
+
+    #[test]
+    fn invalidate_policy_drops_pushed_rows() {
+        let ps = FakePs::new(2);
+        let cache = EmbCache::new(params(64, 1000), 2);
+        fetch(&cache, &ps, &[(0, 1), (0, 2)]);
+        cache.push_applied(&[(0, 1)], &[1.0, 1.0]);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().invalidations, 1);
+        let (_, fetched) = fetch(&cache, &ps, &[(0, 1), (0, 2)]);
+        assert_eq!(fetched, 1, "pushed key refetches, untouched key hits");
+    }
+
+    #[test]
+    fn sgd_mirror_keeps_row_bitwise_coherent() {
+        let ps = FakePs::new(2);
+        let p = EwCacheParams { push: PushPolicy::MirrorSgd { lr: 0.5 }, ..params(64, 1000) };
+        let cache = EmbCache::new(p, 2);
+        let (rows, _) = fetch(&cache, &ps, &[(0, 1)]);
+        let want: Vec<f32> = rows.iter().map(|w| w - 0.5 * 2.0).collect();
+        cache.push_applied(&[(0, 1)], &[2.0, 2.0]);
+        let (rows, fetched) = fetch(&cache, &ps, &[(0, 1)]);
+        assert_eq!(fetched, 0, "mirrored row still serves");
+        assert_eq!(rows, want, "mirror must replay the exact SGD update");
+        assert_eq!(cache.stats().updates, 1);
+    }
+
+    #[test]
+    fn concurrent_ranks_coalesce_on_one_flight() {
+        use std::sync::Barrier;
+        // A PS that blocks inside get_many until both threads have entered
+        // fetch_through would deadlock under double-fetch; with
+        // single-flight the follower waits on the leader instead. We assert
+        // the weaker, schedule-independent property: total PS rows fetched
+        // for N concurrent identical lookups is at most N (and with any
+        // coalescing, less than 2N for the 2-thread case over many rounds).
+        let ps = Arc::new(FakePs::new(2));
+        let cache = Arc::new(EmbCache::new(params(1, 0), 2)); // nothing ever valid
+        let rounds = 50;
+        let barrier = Arc::new(Barrier::new(2));
+        let spawn = |ps: Arc<FakePs>, cache: Arc<EmbCache>, barrier: Arc<Barrier>| {
+            std::thread::spawn(move || {
+                for _ in 0..rounds {
+                    barrier.wait();
+                    let mut rows = vec![0.0f32; 2];
+                    cache.fetch_through(ps.as_ref(), &[(0, 42)], &mut rows).unwrap();
+                    assert!(rows[0] >= 42_000.0);
+                }
+            })
+        };
+        let h1 = spawn(ps.clone(), cache.clone(), barrier.clone());
+        let h2 = spawn(ps.clone(), cache.clone(), barrier);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(
+            s.coalesced + s.misses,
+            2 * rounds,
+            "every lookup is a miss or a coalesced wait"
+        );
+        assert_eq!(
+            ps.rows_fetched.load(Ordering::SeqCst),
+            s.misses,
+            "only non-coalesced misses reach the PS"
+        );
+    }
+
+    #[test]
+    fn params_resolve_staleness_and_policy() {
+        let cfg = EwCacheConfig::default();
+        let p = EwCacheParams::resolve(&cfg, 4, 2, OptimizerKind::Sgd, 0.05);
+        assert_eq!(p.staleness_ticks, 8, "tau steps x ranks-per-worker ticks");
+        assert_eq!(p.push, PushPolicy::MirrorSgd { lr: 0.05 });
+        let cfg = EwCacheConfig { staleness: Some(10), ..cfg };
+        let p = EwCacheParams::resolve(&cfg, 4, 1, OptimizerKind::Adagrad, 0.05);
+        assert_eq!(p.staleness_ticks, 10);
+        assert_eq!(p.push, PushPolicy::Invalidate);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerates() {
+        assert!(EwCacheConfig::default().validate().is_ok());
+        assert!(EwCacheConfig { capacity: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            EwCacheConfig { staleness: Some(0), ..Default::default() }.validate().is_err()
+        );
+    }
+}

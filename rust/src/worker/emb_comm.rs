@@ -29,6 +29,7 @@ use crate::data::sample::SampleId;
 use crate::data::SyntheticDataset;
 use crate::service::{PsBackend, PsStats};
 
+use super::cache::{CacheStats, EmbCache, EwCacheParams};
 use super::embedding_worker::EmbeddingWorker;
 use super::pipeline::{AssignMode, BatchPrep, PreparedBatch};
 
@@ -141,6 +142,14 @@ pub trait EmbComm: Send + Sync {
     fn fast_forward(&self, _rank: usize, _step: usize) -> Result<()> {
         Ok(())
     }
+
+    /// Merged bounded-staleness-cache counters across this tier's workers
+    /// ([`crate::worker::cache`]), or `None` when no worker runs the cache
+    /// (deterministic mode, `--ew-cache false`, or a tier that predates
+    /// it). The trainer prints the merged line at run end.
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
 }
 
 /// In-process embedding-worker tier: the simulated-cluster default, where
@@ -153,7 +162,10 @@ pub struct LocalEmbTier {
 
 impl LocalEmbTier {
     /// Build `n_emb_workers` in-process workers over `backend` and the
-    /// per-rank batch streams for `n_ranks` NN workers.
+    /// per-rank batch streams for `n_ranks` NN workers. `cache` attaches a
+    /// per-worker bounded-staleness hot-row cache (resolved by
+    /// [`crate::hybrid::Trainer::ew_cache_params`], which returns `None` in
+    /// deterministic mode so this tier stays bitwise-identical there).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         dataset: SyntheticDataset,
@@ -164,16 +176,17 @@ impl LocalEmbTier {
         n_emb_workers: usize,
         n_ranks: usize,
         batch_size: usize,
+        cache: Option<EwCacheParams>,
     ) -> Self {
         let workers = (0..n_emb_workers)
             .map(|r| {
-                Arc::new(EmbeddingWorker::new(
-                    r as u8,
-                    backend.clone(),
-                    model,
-                    net.clone(),
-                    compress,
-                ))
+                // Per-worker caches: workers never share rows, so sharing a
+                // cache would only share a lock.
+                let c = cache.map(|p| Arc::new(EmbCache::new(p, model.emb_dim_per_group)));
+                Arc::new(
+                    EmbeddingWorker::new(r as u8, backend.clone(), model, net.clone(), compress)
+                        .with_cache(c),
+                )
             })
             .collect();
         let prep = BatchPrep::new(
@@ -246,6 +259,18 @@ impl EmbComm for LocalEmbTier {
     fn fast_forward(&self, rank: usize, step: usize) -> Result<()> {
         self.prep.skip_to(rank, step)
     }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        let mut any = false;
+        let mut total = CacheStats::default();
+        for i in 0..self.prep.n_workers() {
+            if let Some(c) = self.prep.worker(i).cache() {
+                any = true;
+                total.merge(&c.stats());
+            }
+        }
+        any.then_some(total)
+    }
 }
 
 #[cfg(test)]
@@ -280,7 +305,51 @@ mod tests {
             Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 3));
         let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
         let dataset = SyntheticDataset::new(&model, 500, 1.05, 3);
-        LocalEmbTier::new(dataset, &model, ps, net, false, n_ew, n_ranks, 8)
+        LocalEmbTier::new(dataset, &model, ps, net, false, n_ew, n_ranks, 8, None)
+    }
+
+    #[test]
+    fn uncached_tier_reports_no_cache_stats() {
+        assert!(tier(2, 1).cache_stats().is_none());
+    }
+
+    #[test]
+    fn cached_tier_merges_worker_stats() {
+        use crate::worker::cache::PushPolicy;
+        let model = ModelConfig {
+            artifact_preset: "tiny".into(),
+            n_groups: 2,
+            emb_dim_per_group: 4,
+            nid_dim: 4,
+            hidden: vec![8],
+            ids_per_group: 2,
+            pooling: Pooling::Sum,
+        };
+        let cfg = EmbeddingConfig {
+            rows_per_group: 500,
+            shard_capacity: 2048,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let ps: Arc<dyn PsBackend> =
+            Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 3));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let dataset = SyntheticDataset::new(&model, 500, 1.05, 3);
+        let params = EwCacheParams {
+            capacity: 256,
+            staleness_ticks: 16,
+            admit_threshold: 1,
+            push: PushPolicy::MirrorSgd { lr: 0.1 },
+        };
+        let t =
+            LocalEmbTier::new(dataset, &model, ps, net, false, 2, 1, 8, Some(params));
+        t.next_batch(0, 0).unwrap();
+        t.next_batch(0, 1).unwrap();
+        let s = t.cache_stats().expect("cached tier must report stats");
+        assert!(s.misses > 0, "first pulls miss through to the PS");
     }
 
     #[test]

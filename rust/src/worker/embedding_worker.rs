@@ -28,6 +28,7 @@ use crate::comm::netsim::{Link, NetSim};
 use crate::config::{ModelConfig, Pooling};
 use crate::data::sample::{make_sample_id, Batch, IdFeatures, SampleId};
 use crate::service::PsBackend;
+use crate::worker::cache::{CacheStats, EmbCache};
 
 /// Monotonic traffic/dedup counters of one [`EmbeddingWorker`].
 ///
@@ -104,6 +105,10 @@ pub struct EmbeddingWorker {
     net: Arc<NetSim>,
     /// Apply the §4.2.3 lossy value compression to activation/grad traffic.
     compress: bool,
+    /// Bounded-staleness hot-row cache in front of `ps` on the training
+    /// pull path (never on eval lookups). `None` = every fetch hits the PS
+    /// (deterministic mode, `--ew-cache false`).
+    cache: Option<Arc<EmbCache>>,
 }
 
 impl EmbeddingWorker {
@@ -128,7 +133,26 @@ impl EmbeddingWorker {
             counters: WorkerCounters::default(),
             net,
             compress,
+            cache: None,
         }
+    }
+
+    /// Attach (or detach) the bounded-staleness hot-row cache. Builder
+    /// style so the deterministic construction sites stay untouched.
+    pub fn with_cache(mut self, cache: Option<Arc<EmbCache>>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// The attached cache, if any (flush hooks, stats plane).
+    pub fn cache(&self) -> Option<&Arc<EmbCache>> {
+        self.cache.as_ref()
+    }
+
+    /// Snapshot of the attached cache's counters (zeros when uncached, so
+    /// the stats wire frame stays fixed-shape).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
     /// This worker's rank (the top byte of every sample id it mints).
@@ -197,13 +221,24 @@ impl EmbeddingWorker {
 
     /// One batched PS fetch for `feats`, pooled per feature group into a
     /// `[feats.len(), emb_dim]` activation. Returns the pooled activations
-    /// and the number of unique rows fetched (the wire traffic).
-    fn fetch_pooled(&self, feats: &[IdFeatures]) -> Result<(Vec<f32>, usize)> {
+    /// and the number of unique rows fetched **from the PS** (the wire
+    /// traffic — with the cache on, rows served locally don't count).
+    /// `use_cache` is false on the eval path: evaluation must read the
+    /// freshest PS state, never a training-staleness-budget copy.
+    fn fetch_pooled(&self, feats: &[IdFeatures], use_cache: bool) -> Result<(Vec<f32>, usize)> {
         let d = self.dim_per_group;
         let emb_dim = self.emb_dim();
         let (keys, index) = self.unique_keys(feats);
         let mut rows = vec![0.0f32; keys.len() * d];
-        self.ps.get_many(&keys, &mut rows).context("embedding PS get")?;
+        let fetched = match &self.cache {
+            Some(c) if use_cache => c
+                .fetch_through(self.ps.as_ref(), &keys, &mut rows)
+                .context("embedding PS get (through worker cache)")?,
+            _ => {
+                self.ps.get_many(&keys, &mut rows).context("embedding PS get")?;
+                keys.len()
+            }
+        };
 
         let mut out = vec![0.0f32; feats.len() * emb_dim];
         for (i, f) in feats.iter().enumerate() {
@@ -226,7 +261,7 @@ impl EmbeddingWorker {
                 }
             }
         }
-        Ok((out, keys.len()))
+        Ok((out, fetched))
     }
 
     /// Steps (3)-(4) up to (but excluding) the worker→NN transfer: fetch and
@@ -251,11 +286,12 @@ impl EmbeddingWorker {
                 .collect::<Result<_>>()?
         };
         let total_ids: usize = feats.iter().map(|f| f.n_ids()).sum();
-        let (out, unique_rows) = self.fetch_pooled(&feats)?;
+        let (out, unique_rows) = self.fetch_pooled(&feats, true)?;
         self.counters.batches_fetched.fetch_add(1, Ordering::Relaxed);
         self.counters.ids_looked_up.fetch_add(total_ids as u64, Ordering::Relaxed);
         self.counters.rows_fetched.fetch_add(unique_rows as u64, Ordering::Relaxed);
-        // PS -> embedding worker: raw rows (unique keys only).
+        // PS -> embedding worker: raw rows (unique keys only; cache hits
+        // never reach this wire, so they are not charged).
         let sim = self.net.record(Link::PS_EW, unique_rows * self.dim_per_group * 4);
         Ok((out, sim))
     }
@@ -280,8 +316,10 @@ impl EmbeddingWorker {
     }
 
     /// Eval-path lookup straight from a batch (no sample-id buffering).
+    /// Always bypasses the worker cache: reported metrics must reflect the
+    /// PS's current state, not a bounded-staleness copy.
     pub fn lookup_direct(&self, batch: &Batch) -> Result<(Vec<f32>, f64)> {
-        let (out, unique_rows) = self.fetch_pooled(&batch.ids)?;
+        let (out, unique_rows) = self.fetch_pooled(&batch.ids, false)?;
         let sim = self.net.record(Link::PS_EW, unique_rows * self.dim_per_group * 4);
         Ok((out, sim))
     }
@@ -382,6 +420,14 @@ impl EmbeddingWorker {
                 buf.insert(sid, f);
             }
             return Err(e).context("embedding PS put (samples re-buffered for retry)");
+        }
+        // The PS accepted the batch — reconcile any cached copies of the
+        // pushed rows (SGD mirrors the identical update in place; stateful
+        // optimizers invalidate). Strictly after the successful put: a
+        // failed put must leave the cache untouched so the retry path sees
+        // the same world it left.
+        if let Some(c) = &self.cache {
+            c.push_applied(&keys, &acc);
         }
         // Flush statistics only count on success: a re-buffered batch will
         // come back through here, and counting it per attempt would tally
@@ -749,5 +795,67 @@ mod tests {
     fn unknown_sample_id_is_error() {
         let (_, w, _) = setup(Pooling::Sum, false);
         assert!(w.pull(&[999]).is_err());
+    }
+
+    fn cached_worker(
+        lr: f32,
+    ) -> (Arc<EmbeddingPs>, EmbeddingWorker, Arc<EmbCache>, ModelConfig) {
+        use crate::worker::cache::{EwCacheParams, PushPolicy};
+        let (ps, _, model) = setup(Pooling::Sum, false);
+        let cache = Arc::new(EmbCache::new(
+            EwCacheParams {
+                capacity: 64,
+                staleness_ticks: 100,
+                admit_threshold: 1,
+                push: PushPolicy::MirrorSgd { lr },
+            },
+            model.emb_dim_per_group,
+        ));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let w = EmbeddingWorker::new(1, ps.clone(), &model, net, false)
+            .with_cache(Some(cache.clone()));
+        (ps, w, cache, model)
+    }
+
+    #[test]
+    fn cached_worker_hits_locally_and_mirrors_pushes_exactly() {
+        // lr must match the PS's optimizer (setup uses SGD lr 0.5) for the
+        // mirror to replay the identical update.
+        let (ps, w, _cache, _) = cached_worker(0.5);
+
+        // First pull fetches and admits; the repeat is served locally and
+        // must be bitwise the same activation.
+        let sids = w.register(vec![feats(&[10, 11], &[20])]);
+        let (a, _) = w.pull(&sids).unwrap();
+        let sids2 = w.register(vec![feats(&[10, 11], &[20])]);
+        let (b, _) = w.pull(&sids2).unwrap();
+        assert_eq!(a, b, "cached pull must equal the fetched pull bitwise");
+        let s = w.stats();
+        assert_eq!(s.rows_fetched, 3, "the repeat pull reached the PS for nothing");
+        assert_eq!(w.cache_stats().hits, 3);
+
+        // Push through the worker: the PS applies SGD and the cache mirrors
+        // it, so a subsequent pull still hits AND matches the PS bitwise.
+        w.push_grads(&sids2, &vec![1.0f32; 8]).unwrap();
+        let sids3 = w.register(vec![feats(&[10], &[20])]);
+        let (c, _) = w.pull(&sids3).unwrap();
+        let mut want = vec![0.0f32; 4];
+        ps.get(0, 10, &mut want);
+        assert_eq!(&c[..4], &want[..], "mirrored row must equal the PS row bitwise");
+        assert_eq!(w.stats().rows_fetched, 3, "the mirror kept the rows servable");
+        assert!(w.cache_stats().updates >= 3);
+    }
+
+    #[test]
+    fn eval_lookup_bypasses_the_cache() {
+        let (_, w, _cache, model) = cached_worker(0.5);
+        let sids = w.register(vec![feats(&[1, 2], &[3])]);
+        w.pull(&sids).unwrap();
+        let before = w.cache_stats();
+        assert!(before.misses > 0, "warm-up went through the cache");
+        let ds = SyntheticDataset::new(&model, 1000, 1.0, 5);
+        let batch = ds.test_batch(4);
+        w.lookup_direct(&batch).unwrap();
+        assert_eq!(w.cache_stats(), before, "eval lookups never touch the cache");
     }
 }

@@ -12,12 +12,17 @@
 //!   (mirroring [`DenseComm`](crate::hybrid::dense_comm::DenseComm)), with
 //!   the in-process [`LocalEmbTier`] implementation; the remote tier lives
 //!   in [`crate::service::embedding_worker`].
+//! * [`cache`] — the bounded-staleness hot-embedding cache each worker may
+//!   run in front of the (sharded) PS, spending the hybrid algorithm's
+//!   staleness budget τ on the Zipf-hot head instead of refetching it.
 
+pub mod cache;
 pub mod emb_comm;
 pub mod embedding_worker;
 pub mod nn_worker;
 pub mod pipeline;
 
+pub use cache::{CacheStats, EmbCache, EwCacheConfig, EwCacheParams, PushPolicy};
 pub use emb_comm::{elastic_assign, EmbComm, LocalEmbTier};
 pub use embedding_worker::{EmbeddingWorker, WorkerStats};
 pub use nn_worker::NnWorker;

@@ -9,7 +9,14 @@
 //! * **Stage 2** ([`BatchPrep::assemble`]) buffers the ID features, runs the
 //!   deduplicated scatter-gather lookup against the (possibly sharded,
 //!   possibly remote) embedding PS, pools per feature group, and assembles
-//!   the activation/NID/label tensors.
+//!   the activation/NID/label tensors. When the resident worker runs the
+//!   bounded-staleness cache ([`crate::worker::cache`]), the lookup first
+//!   drains against it — and because each rank's assemble runs on its own
+//!   stage-2 thread, the cache's single-flight table dedups co-hot keys
+//!   *across* the ranks assigned to one worker: historically each rank's
+//!   scatter-gather deduplicated only within itself and N ranks fetched the
+//!   same hot row N times per window; now the first rank to miss leads one
+//!   fetch and the rest coalesce onto it.
 //! * **Stage 3** serves the assembled [`PreparedBatch`]es to NN ranks — the
 //!   in-process trainer keeps its own τ-deep lookahead and calls the fused
 //!   [`BatchPrep::prepare`] on demand, while the `serve-embedding-worker`
@@ -379,6 +386,16 @@ impl PrefetchPipeline {
                 self.discard_drained(rank, item);
             }
         }
+        // A take-over splices a foreign rank's stream into this process
+        // mid-window: the dead worker's unflushed pushes are lost and the
+        // trainer replays the window, so locally cached rows may disagree
+        // with what the replay is about to write. Drop them all — the cache
+        // is a perf artifact and refills on the first post-adopt fetches.
+        for i in 0..self.prep.n_workers() {
+            if let Some(c) = self.prep.worker(i).cache() {
+                c.flush("ADOPT_RANK take-over");
+            }
+        }
         self.prep.skip_to(rank, next_step)
     }
 
@@ -585,6 +602,52 @@ mod tests {
         pipe.adopt(0, 16).unwrap();
         assert_eq!(p.worker(0).buffered(), 0, "drained in-flight samples leaked");
         assert_eq!(pipe.next(0, 16).unwrap().step, 16);
+    }
+
+    #[test]
+    fn adopt_flushes_the_worker_cache() {
+        use crate::worker::cache::{EmbCache, EwCacheParams, PushPolicy};
+        let model = model();
+        let cfg = EmbeddingConfig {
+            rows_per_group: 1000,
+            shard_capacity: 4096,
+            n_nodes: 2,
+            shards_per_node: 2,
+            optimizer: OptimizerKind::Sgd,
+            partition: PartitionPolicy::ShuffledUniform,
+            lr: 0.1,
+        };
+        let ps = Arc::new(EmbeddingPs::new(&cfg, model.emb_dim_per_group, 7));
+        let net = Arc::new(NetSim::new(NetModelConfig::disabled()));
+        let cache = Arc::new(EmbCache::new(
+            EwCacheParams {
+                capacity: 1024,
+                staleness_ticks: 64,
+                admit_threshold: 1,
+                push: PushPolicy::MirrorSgd { lr: 0.1 },
+            },
+            model.emb_dim_per_group,
+        ));
+        let worker = Arc::new(
+            EmbeddingWorker::new(0, ps, &model, net, false).with_cache(Some(cache.clone())),
+        );
+        let dataset = SyntheticDataset::new(&model, 1000, 1.05, 7);
+        let prep = Arc::new(BatchPrep::new(
+            dataset,
+            vec![worker],
+            8,
+            model.nid_dim,
+            1,
+            AssignMode::Fixed(0),
+            true,
+        ));
+        let pipe = PrefetchPipeline::new(prep, 2);
+        pipe.next(0, 0).unwrap();
+        pipe.next(0, 1).unwrap();
+        assert!(!cache.is_empty(), "warm pulls populated the cache");
+        pipe.adopt(0, 8).unwrap();
+        assert!(cache.is_empty(), "adopt must flush the cache");
+        assert!(cache.stats().flushes >= 1);
     }
 
     #[test]

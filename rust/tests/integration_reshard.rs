@@ -213,6 +213,20 @@ fn spawn_ps(
     ckpt_dir: &Path,
     env: &[(&str, &str)],
 ) -> (Proc, String) {
+    spawn_ps_extra(addr, range, steps, ckpt_dir, env, &[])
+}
+
+/// [`spawn_ps`] with extra flags appended — the cache drill runs its fleet
+/// under `--optimizer sgd`, which rides in the embedding config every
+/// process must agree on.
+fn spawn_ps_extra(
+    addr: &str,
+    range: Option<&str>,
+    steps: usize,
+    ckpt_dir: &Path,
+    env: &[(&str, &str)],
+    extra: &[&str],
+) -> (Proc, String) {
     for attempt in 0..40u64 {
         let mut args = strs(&["serve-ps", "--addr"]);
         args.push(addr.to_string());
@@ -226,6 +240,7 @@ fn spawn_ps(
         args.extend(shared_flags(steps));
         args.push("--checkpoint-dir".to_string());
         args.push(ckpt_dir.display().to_string());
+        args.extend(strs(extra));
         let mut p = Proc::spawn_env(&args, env);
         if let Some(line) = p.wait_for_line("listening on ", Duration::from_secs(30)) {
             let got = line
@@ -506,4 +521,104 @@ fn sigkill_destination_mid_copy_rolls_back_without_orphaned_nodes() {
     drop(ps_a);
     drop(ps_b);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One full train run over a private 2-shard + spare fleet, with the
+/// reshard probe armed. Returns the trainer's combined output. `extra`
+/// rides on BOTH the shards and the trainer (flag parsing is last-wins, so
+/// appending `--deterministic false` overrides the shared default).
+fn run_fleet(tag: &str, steps: usize, extra: &[&str]) -> String {
+    let dir = tmp_dir(tag);
+    let (ps_a, addr_a) = spawn_ps_extra("127.0.0.1:0", Some("0..4"), steps, &dir, &[], extra);
+    let (ps_b, addr_b) = spawn_ps_extra("127.0.0.1:0", Some("4..6"), steps, &dir, &[], extra);
+    let (spare, addr_c) = spawn_ps_extra("127.0.0.1:0", None, steps, &dir, &[], extra);
+    let mut tr =
+        Proc::spawn(&train_args(&format!("{addr_a},{addr_b},{addr_c}"), steps, &dir, extra));
+    let status = tr
+        .wait_timeout(Duration::from_secs(300))
+        .unwrap_or_else(|| panic!("{tag}: run hung:\n{}", tr.output_snapshot()));
+    assert!(status.success(), "{tag}: run failed:\n{}", tr.output_snapshot());
+    let out = tr.output_snapshot();
+    drop(ps_a);
+    drop(ps_b);
+    drop(spare);
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+/// ISSUE-10 drill: the worker-side bounded-staleness cache rides a live
+/// 2→3-shard split. Two identical non-deterministic FullSync runs under
+/// `--optimizer sgd` (the mirror push policy), one with the cache off as
+/// the reference and one with it on: the cached run must flush the whole
+/// cache at the routing-epoch bump, actually serve hits, and stay within
+/// the 1e-6 acceptance bound of the uncached reference on every loss and
+/// the final AUC.
+#[test]
+fn worker_cache_flushes_on_epoch_bump_and_matches_uncached_reference() {
+    let steps = 30;
+    // Non-deterministic on purpose: deterministic mode force-disables the
+    // cache (bitwise parity), so the drill must run the real async path.
+    let base = ["--optimizer", "sgd", "--deterministic", "false"];
+
+    let mut off = base.to_vec();
+    off.extend(["--ew-cache", "false"]);
+    let out_off = run_fleet("cacheoff", steps, &off);
+    assert!(
+        out_off.contains("RESHARD epoch 1 committed"),
+        "uncached reference never resharded:\n{out_off}"
+    );
+    assert!(
+        !out_off.contains("EW-CACHE:"),
+        "--ew-cache false must be a strict no-op:\n{out_off}"
+    );
+
+    let out_on = run_fleet("cacheon", steps, &base);
+    assert!(
+        out_on.contains("RESHARD epoch 1 committed"),
+        "cached run never resharded:\n{out_on}"
+    );
+    // The commit bumped the routing epoch; the next fetch must have dropped
+    // the whole cache (rows cached under the old layout are unsafe).
+    let flush = out_on
+        .lines()
+        .find(|l| l.contains("EW-CACHE: flushed") && l.contains("routing epoch 0 -> 1"))
+        .unwrap_or_else(|| panic!("no epoch-bump cache flush in:\n{out_on}"));
+    assert!(flush.contains("rows"), "malformed flush line: {flush}");
+    // The cache did real work: the end-of-run stats line reports hits.
+    let stats = out_on
+        .lines()
+        .find(|l| l.starts_with("EW-CACHE: hits="))
+        .unwrap_or_else(|| panic!("no end-of-run cache stats in:\n{out_on}"));
+    let hits: u64 = stats
+        .split_whitespace()
+        .find_map(|f| f.strip_prefix("hits="))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(hits > 0, "cache never served a hit: {stats}");
+
+    // Training parity: every printed loss and the final report within the
+    // 1e-6 acceptance bound of the uncached reference. (Under SGD the
+    // mirror keeps cached rows bitwise-coherent for this single-writer
+    // deployment, so the bound is loose — but the contract is 1e-6.)
+    let got = parse_losses(&out_on);
+    let want = parse_losses(&out_off);
+    assert_eq!(got.len(), want.len(), "loss curve lengths differ");
+    for ((s_on, l_on), (s_off, l_off)) in got.iter().zip(&want) {
+        assert_eq!(s_on, s_off, "loss curves sampled different steps");
+        assert!(
+            (l_on - l_off).abs() <= 1e-6,
+            "step {s_on}: cached loss {l_on} vs uncached {l_off}"
+        );
+    }
+    let (loss_on, auc_on) = parse_parity(&out_on);
+    let (loss_off, auc_off) = parse_parity(&out_off);
+    assert!(
+        (loss_on - loss_off).abs() <= 1e-6,
+        "final loss {loss_on} vs uncached {loss_off}"
+    );
+    assert!(
+        (auc_on - auc_off).abs() <= 1e-6,
+        "final AUC {auc_on} vs uncached {auc_off}"
+    );
 }

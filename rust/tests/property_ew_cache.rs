@@ -1,0 +1,206 @@
+//! ISSUE-10 property suite for the embedding-worker bounded-staleness
+//! cache.
+//!
+//! * **Deterministic no-op**: deterministic mode never constructs a cache
+//!   (`Trainer::ew_cache_params` returns `None`), so a cache-on and a
+//!   cache-off run are the same program — asserted bitwise on the loss
+//!   curve and the final report.
+//! * **SGD mirror parity**: in non-deterministic FullSync with a single
+//!   writer, the mirror push policy keeps every cached row bitwise equal to
+//!   the PS copy — a cached run reproduces the uncached loss curve exactly.
+//! * **Staleness bound, model-checked**: a versioned fake PS stamps every
+//!   row with the tick it was read at; driving `EmbCache::fetch_through`
+//!   through hundreds of ticks (with stale refreshes and an epoch bump in
+//!   the middle) must never serve a row older than the configured bound,
+//!   and never a value the PS did not hold.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use persia::config::{
+    BenchPreset, ClusterConfig, NetModelConfig, OptimizerKind, TrainConfig, TrainMode,
+};
+use persia::data::SyntheticDataset;
+use persia::hybrid::Trainer;
+use persia::service::{PsBackend, PsStats};
+use persia::worker::{EmbCache, EwCacheConfig, EwCacheParams, PushPolicy};
+
+fn small_trainer(deterministic: bool, optimizer: OptimizerKind) -> Trainer {
+    let preset = BenchPreset::by_name("taobao").unwrap();
+    let model = preset.model("tiny");
+    let mut emb_cfg = preset.embedding(&model, 65536);
+    emb_cfg.optimizer = optimizer;
+    let rows = preset.embedding(&model, 1).rows_per_group;
+    let cluster =
+        ClusterConfig { n_nn_workers: 1, n_emb_workers: 1, net: NetModelConfig::disabled() };
+    let train = TrainConfig {
+        mode: TrainMode::FullSync,
+        batch_size: 16,
+        lr: 0.05,
+        staleness_bound: 4,
+        steps: 24,
+        eval_every: 24,
+        seed: 42,
+        use_pjrt: false,
+        compress: false,
+    };
+    let dataset = SyntheticDataset::new(&model, rows, preset.zipf_exponent, 42);
+    let mut t = Trainer::new(model, emb_cfg, cluster, train, dataset);
+    t.deterministic = deterministic;
+    t
+}
+
+fn run_losses(t: &Trainer) -> (Vec<(u64, f32)>, f32, f64) {
+    let out = t.run_rust().unwrap();
+    (out.tracker.losses.clone(), out.report.final_loss, out.report.final_auc.unwrap())
+}
+
+/// Deterministic mode force-disables the cache regardless of the knob, so
+/// cache-on ≡ cache-off bitwise — the guarantee every deterministic parity
+/// suite in this repo leans on.
+#[test]
+fn deterministic_mode_is_bitwise_cache_invariant() {
+    let mut on = small_trainer(true, OptimizerKind::Adagrad);
+    on.ew_cache = Some(EwCacheConfig::default());
+    assert!(
+        on.ew_cache_params().is_none(),
+        "deterministic mode must never construct a worker cache"
+    );
+    let mut off = small_trainer(true, OptimizerKind::Adagrad);
+    off.ew_cache = None;
+
+    let (l_on, fl_on, auc_on) = run_losses(&on);
+    let (l_off, fl_off, auc_off) = run_losses(&off);
+    assert_eq!(l_on, l_off, "deterministic loss curves must be bitwise equal");
+    assert_eq!(fl_on.to_bits(), fl_off.to_bits());
+    assert_eq!(auc_on.to_bits(), auc_off.to_bits());
+
+    // And the knob is live outside deterministic mode.
+    let live = small_trainer(false, OptimizerKind::Adagrad);
+    assert!(live.ew_cache_params().is_some(), "the cache defaults on in async modes");
+}
+
+/// Single-writer SGD: the mirror policy replays exactly the PS's own
+/// stateless update on the cached copy, so a cached non-deterministic
+/// FullSync run reproduces the uncached loss curve bitwise.
+#[test]
+fn sgd_mirror_reproduces_the_uncached_run_exactly() {
+    let mut off = small_trainer(false, OptimizerKind::Sgd);
+    off.ew_cache = None;
+    let mut on = small_trainer(false, OptimizerKind::Sgd);
+    on.ew_cache = Some(EwCacheConfig::default());
+    match on.ew_cache_params().expect("cache on").push {
+        PushPolicy::MirrorSgd { .. } => {}
+        p => panic!("SGD must resolve to the mirror policy, got {p:?}"),
+    }
+
+    let (l_off, fl_off, auc_off) = run_losses(&off);
+    let (l_on, fl_on, auc_on) = run_losses(&on);
+    assert_eq!(l_on, l_off, "SGD-mirrored cache must not perturb the loss curve");
+    assert_eq!(fl_on.to_bits(), fl_off.to_bits());
+    assert_eq!(auc_on.to_bits(), auc_off.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// Staleness bound, model-checked against a versioned PS
+// ---------------------------------------------------------------------------
+
+const DIM: usize = 4;
+
+/// A PS whose rows encode `(id, version-at-read)` — the reference model the
+/// cache is checked against. Bumping `epoch` models a committed reshard.
+struct VersionedPs {
+    version: AtomicU64,
+    epoch: AtomicU64,
+}
+
+impl PsBackend for VersionedPs {
+    fn dim(&self) -> usize {
+        DIM
+    }
+
+    fn get_many(&self, keys: &[(u32, u64)], out: &mut [f32]) -> anyhow::Result<()> {
+        let v = self.version.load(Ordering::SeqCst);
+        for (i, &(_, id)) in keys.iter().enumerate() {
+            let row = &mut out[i * DIM..(i + 1) * DIM];
+            row[0] = id as f32;
+            row[1] = v as f32;
+            row[2] = 0.0;
+            row[3] = 0.0;
+        }
+        Ok(())
+    }
+
+    fn put_grads(&self, _keys: &[(u32, u64)], _grads: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn stats(&self) -> anyhow::Result<PsStats> {
+        Ok(PsStats::default())
+    }
+
+    fn routing_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+}
+
+/// Drive 300 fetch ticks of skewed traffic through the cache and assert
+/// the bound: every served row is a value the PS held within the last `S`
+/// ticks, and an epoch bump refreshes everything at once. Capacity exceeds
+/// the key universe so entries live long enough for the bound (not the
+/// evictor — cache.rs unit tests cover that) to be what expires them.
+#[test]
+fn served_rows_never_exceed_the_staleness_bound() {
+    const S: u64 = 5;
+    const TICKS: u64 = 300;
+    const BUMP_AT: u64 = 150;
+    let ps = VersionedPs { version: AtomicU64::new(0), epoch: AtomicU64::new(0) };
+    let cache = EmbCache::new(
+        EwCacheParams {
+            capacity: 64,
+            staleness_ticks: S,
+            admit_threshold: 1,
+            push: PushPolicy::Invalidate,
+        },
+        DIM,
+    );
+
+    let mut rng: u64 = 0x9e3779b97f4a7c15;
+    let mut rows = vec![0.0f32; 8 * DIM];
+    for tick in 0..TICKS {
+        // The PS advances one version per tick; the cache clock advances one
+        // tick per fetch_through call, so versions and ticks stay aligned.
+        ps.version.store(tick, Ordering::SeqCst);
+        if tick == BUMP_AT {
+            ps.epoch.store(1, Ordering::SeqCst);
+        }
+        let keys: Vec<(u32, u64)> = (0..8)
+            .map(|_| {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                // Zipf-ish: half the draws land in an 8-key hot set.
+                let id = if rng & 1 == 0 { (rng >> 8) % 8 } else { (rng >> 8) % 32 };
+                (0u32, id)
+            })
+            .collect();
+        cache.fetch_through(&ps, &keys, &mut rows).unwrap();
+        for (slot, &(_, id)) in keys.iter().enumerate() {
+            let row = &rows[slot * DIM..(slot + 1) * DIM];
+            assert_eq!(row[0] as u64, id, "tick {tick}: row served for the wrong key");
+            let served = row[1] as u64;
+            assert!(
+                served <= tick && tick - served <= S,
+                "tick {tick}: served version {served} exceeds the staleness bound {S}"
+            );
+            if tick >= BUMP_AT {
+                assert!(
+                    served >= BUMP_AT,
+                    "tick {tick}: row from before the epoch bump survived the flush \
+                     (version {served})"
+                );
+            }
+        }
+    }
+    let s = cache.stats();
+    assert!(s.hits > 0, "the hot set never hit: {s:?}");
+    assert!(s.stale_refreshes > 0, "the bound never expired an entry: {s:?}");
+    assert!(s.flushes >= 1, "the epoch bump never flushed: {s:?}");
+}
